@@ -1,0 +1,51 @@
+//! Tiled QR decomposition (paper §4.1) end to end on the native
+//! backend: build the task graph for an N×N-tile matrix, factorize on
+//! multiple threads, verify against the Gram-matrix oracle, and print
+//! the graph statistics the paper reports (E1).
+//!
+//! Run: `cargo run --release --example qr_factorize -- [--tiles 16 --tile 64 --threads 4]`
+
+use quicksched::coordinator::{SchedConfig, Scheduler};
+use quicksched::qr;
+use quicksched::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let tiles = args.get_usize("tiles", 16);
+    let tile = args.get_usize("tile", 64);
+    let threads = args.get_usize("threads", 4);
+
+    // E1 graph statistics (paper: 11 440 tasks / 21 856 locks / 11 408
+    // uses on 1 024 resources at tiles=32).
+    let mut s = Scheduler::new(SchedConfig::new(threads))?;
+    qr::build_tasks(&mut s, tiles, tiles);
+    s.prepare()?;
+    println!("graph: {}", s.stats());
+    println!(
+        "critical path {} / total work {} => max speedup {:.1}",
+        s.critical_path(),
+        s.total_work(),
+        s.total_work() as f64 / s.critical_path() as f64
+    );
+
+    // Factorize and verify.
+    let mat = qr::TiledMatrix::random(tile, tiles, tiles, 42);
+    let a0 = mat.to_dense();
+    let t0 = std::time::Instant::now();
+    let run = qr::run_threaded(&mat, &qr::NativeBackend, SchedConfig::new(threads), threads)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let dt = t0.elapsed();
+    println!(
+        "factorized {0}x{0} doubles in {1:.1} ms on {threads} threads ({2} tasks, {3} stolen)",
+        tiles * tile,
+        dt.as_secs_f64() * 1e3,
+        run.metrics.tasks_run,
+        run.metrics.tasks_stolen,
+    );
+
+    let res = qr::verify::gram_residual(&a0, &mat);
+    println!("gram residual ‖AᵀA − RᵀR‖/‖AᵀA‖ = {res:.3e}");
+    anyhow::ensure!(res < 1e-10, "factorization incorrect");
+    println!("qr_factorize OK");
+    Ok(())
+}

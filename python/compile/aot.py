@@ -1,0 +1,71 @@
+"""AOT pipeline: lower every Layer-2 entry point to HLO **text** under
+``artifacts/`` for the rust PJRT runtime.
+
+HLO text — not ``.serialize()`` protos — is the interchange format: the
+image's xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit instruction-id
+protos, while the text parser reassigns ids (see
+/opt/xla-example/README.md). Lowered with ``return_tuple=True`` so the
+rust side always unwraps a tuple.
+
+Also writes ``manifest.txt``: one line per module,
+``name;input shapes;output count`` — the rust registry parses this to
+marshal Literals without hard-coding shapes.
+
+Usage: ``python -m compile.aot [--out ../artifacts]`` (idempotent; the
+Makefile skips it when artifacts are newer than the python sources).
+"""
+
+import argparse
+import os
+
+import jax
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+
+def to_hlo_text(fn, example_args):
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_sig(s):
+    return "f64[" + ",".join(str(d) for d in s.shape) + "]"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = []
+    for name, fn, example in model.entries():
+        if only and name not in only:
+            continue
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        text = to_hlo_text(fn, example)
+        with open(path, "w") as f:
+            f.write(text)
+        n_out = len(fn(*[jax.numpy.zeros(s.shape, s.dtype) for s in example]))
+        sig = ",".join(shape_sig(s) for s in example)
+        manifest.append(f"{name};{sig};{n_out}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    if not only:
+        with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+            f.write("\n".join(manifest) + "\n")
+        print(f"wrote {len(manifest)} modules + manifest")
+
+
+if __name__ == "__main__":
+    main()

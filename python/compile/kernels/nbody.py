@@ -1,0 +1,97 @@
+"""Layer-1 Pallas kernels for the Barnes-Hut interaction tasks.
+
+The three interaction types (paper §4.2) as dense masked kernels over
+fixed-size padded buckets: padding particles carry ``mask = 0`` and
+padding COMs carry mass 0, so they contribute nothing; the rust side
+ignores the padded output rows.
+
+Kernel shape rationale (DESIGN.md §Hardware-Adaptation): the paper's
+double for-loops become `(n, n, 3)` broadcasted difference tensors —
+batched FMA streams that map straight onto the TPU VPU; blocking for
+VMEM is by bucket size (n = 2048, f64: the self kernel peaks at
+~3 × n² × 8 B = 100 MB in interpret mode on CPU but tiles to
+`(256, 256)` blocks within VMEM budgets when lowered for real TPUs —
+the bucket granularity keeps that retiling a pure BlockSpec change).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+EPS2 = 1e-10  # softening; keep in sync with ref.py and nbody/kernels.rs
+
+
+def _self_kernel(x_ref, m_ref, mask_ref, acc_ref):
+    x = x_ref[...]
+    m = m_ref[...]
+    mask = mask_ref[...]
+    n = x.shape[0]
+    dx = x[None, :, :] - x[:, None, :]  # (i, j, 3): from i toward j
+    r2 = jnp.sum(dx * dx, axis=-1) + EPS2
+    inv_r3 = r2 ** -1.5
+    pair = mask[:, None] * mask[None, :]
+    pair = pair * (1.0 - jnp.eye(n, dtype=x.dtype))
+    w = pair * m[None, :] * inv_r3  # (i, j)
+    acc_ref[...] = jnp.einsum("ij,ijd->id", w, dx)
+
+
+def _pair_kernel(xi_ref, mi_ref, maski_ref, xj_ref, mj_ref, maskj_ref,
+                 acci_ref, accj_ref):
+    xi = xi_ref[...]
+    xj = xj_ref[...]
+    mi = mi_ref[...]
+    mj = mj_ref[...]
+    pair = maski_ref[...][:, None] * maskj_ref[...][None, :]
+    dx = xj[None, :, :] - xi[:, None, :]  # (i, j, 3)
+    r2 = jnp.sum(dx * dx, axis=-1) + EPS2
+    inv_r3 = pair * r2 ** -1.5
+    acci_ref[...] = jnp.einsum("ij,ijd->id", inv_r3 * mj[None, :], dx)
+    accj_ref[...] = -jnp.einsum("ij,ijd->jd", inv_r3 * mi[:, None], dx)
+
+
+def _pc_kernel(x_ref, mask_ref, coms_ref, acc_ref):
+    x = x_ref[...]
+    mask = mask_ref[...]
+    coms = coms_ref[...]
+    dx = coms[None, :, :3] - x[:, None, :]  # (i, c, 3)
+    r2 = jnp.sum(dx * dx, axis=-1) + EPS2
+    w = mask[:, None] * coms[None, :, 3] * r2 ** -1.5
+    acc_ref[...] = jnp.einsum("ic,icd->id", w, dx)
+
+
+@jax.jit
+def nb_self(x, m, mask):
+    """Self-interaction over one padded bucket: (n,3),(n,),(n,) → (n,3)."""
+    n = x.shape[0]
+    return pl.pallas_call(
+        _self_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, 3), x.dtype),
+        interpret=True,
+    )(x, m, mask)
+
+
+@jax.jit
+def nb_pair(xi, mi, maski, xj, mj, maskj):
+    """Pair interaction between two padded buckets → (acc_i, acc_j)."""
+    ni, nj = xi.shape[0], xj.shape[0]
+    return pl.pallas_call(
+        _pair_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((ni, 3), xi.dtype),
+            jax.ShapeDtypeStruct((nj, 3), xj.dtype),
+        ),
+        interpret=True,
+    )(xi, mi, maski, xj, mj, maskj)
+
+
+@jax.jit
+def nb_pc(x, mask, coms):
+    """Particle–cell: padded particles vs padded COM list → (n,3)."""
+    n = x.shape[0]
+    return pl.pallas_call(
+        _pc_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, 3), x.dtype),
+        interpret=True,
+    )(x, mask, coms)

@@ -1,0 +1,199 @@
+"""Layer-1 Pallas kernels for the tiled QR decomposition.
+
+Each of the four tile operations (paper §4.1 / Buttari et al. 2009) is a
+single whole-block Pallas kernel. The column-sequential Householder
+recurrences run as ``lax.fori_loop`` bodies over masked whole-tile
+vector ops — the TPU-idiomatic shape (rows × b lanes on the VPU, the
+rank-1 updates feeding the MXU for larger b); see DESIGN.md
+§Hardware-Adaptation. ``interpret=True`` everywhere: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret mode lowers to plain
+HLO that the rust runtime loads.
+
+VMEM budget (b=64, f64): ≤ 4 tiles × 32 KiB + vectors ≪ 16 MiB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _householder_column(col, k, idx):
+    """Shared per-column reflector computation.
+
+    Returns (tau_k, scale, nrm2) for the (masked) below-diagonal part of
+    ``col``; follows LAPACK dlarfg (tau = 0 when the tail is zero).
+    """
+    below = idx > k
+    nrm2 = jnp.sum(jnp.where(below, col * col, 0.0))
+    alpha = col[k]
+    norm = jnp.sqrt(alpha * alpha + nrm2)
+    beta = jnp.where(alpha >= 0, -norm, norm)
+    tau_k = jnp.where(nrm2 == 0, 0.0, (beta - alpha) / beta)
+    scale = jnp.where(nrm2 == 0, 0.0, 1.0 / (alpha - beta))
+    return tau_k, scale, beta, below
+
+
+def _geqrf_kernel(a_ref, out_ref, tau_ref):
+    a = a_ref[...]
+    b = a.shape[0]
+    idx = jnp.arange(b)
+
+    def body(k, carry):
+        a, tau = carry
+        col = jax.lax.dynamic_slice_in_dim(a, k, 1, axis=1)[:, 0]
+        tau_k, scale, beta, below = _householder_column(col, k, idx)
+        v = jnp.where(below, col * scale, 0.0)
+        v = jnp.where(idx == k, jnp.where(tau_k != 0, 1.0, 0.0), v)
+        w = tau_k * (v @ a)
+        a_upd = a - jnp.outer(v, w)
+        # Only trailing columns (> k) take the reflector; column k is
+        # overwritten with the packed (beta, v-tail) representation;
+        # earlier columns hold previous reflectors and must not move.
+        a = jnp.where(idx[None, :] > k, a_upd, a)
+        packed = jnp.where(
+            tau_k != 0,
+            jnp.where(idx == k, beta, jnp.where(below, col * scale, col)),
+            col,
+        )
+        a = jnp.where(idx[None, :] == k, packed[:, None], a)
+        tau = jnp.where(idx == k, tau_k, tau)
+        return a, tau
+
+    a, tau = jax.lax.fori_loop(0, b, body, (a, jnp.zeros(b, a.dtype)))
+    out_ref[...] = a
+    tau_ref[...] = tau
+
+
+def _larft_kernel(v_ref, tau_ref, c_ref, out_ref):
+    v = v_ref[...]
+    tau = tau_ref[...]
+    c = c_ref[...]
+    b = v.shape[0]
+    idx = jnp.arange(b)
+
+    def body(k, c):
+        col = jax.lax.dynamic_slice_in_dim(v, k, 1, axis=1)[:, 0]
+        vk = jnp.where(idx > k, col, 0.0)
+        vk = jnp.where(idx == k, 1.0, vk)
+        tau_k = tau[k]
+        w = tau_k * (vk @ c)
+        return c - jnp.outer(vk, w)
+
+    out_ref[...] = jax.lax.fori_loop(0, b, body, c)
+
+
+def _tsqrt_kernel(r_ref, a_ref, r_out_ref, v_out_ref, tau_ref):
+    r = r_ref[...]
+    a = a_ref[...]
+    b = r.shape[0]
+    idx = jnp.arange(b)
+
+    def body(k, carry):
+        r, a, tau = carry
+        acol = jax.lax.dynamic_slice_in_dim(a, k, 1, axis=1)[:, 0]
+        nrm2 = jnp.sum(acol * acol)
+        alpha = jax.lax.dynamic_slice(r, (k, k), (1, 1))[0, 0]
+        norm = jnp.sqrt(alpha * alpha + nrm2)
+        beta = jnp.where(alpha >= 0, -norm, norm)
+        tau_k = jnp.where(nrm2 == 0, 0.0, (beta - alpha) / beta)
+        scale = jnp.where(nrm2 == 0, 0.0, 1.0 / (alpha - beta))
+        v2 = acol * scale  # dense part of the reflector
+        # w_j = tau * (r[k, j] + v2 . a[:, j]) for trailing columns j > k.
+        rrow = jax.lax.dynamic_slice_in_dim(r, k, 1, axis=0)[0, :]
+        w = tau_k * (rrow + v2 @ a)
+        cols_after = idx[None, :] > k
+        r_upd = r - jnp.where(idx[:, None] == k, 1.0, 0.0) * w[None, :]
+        r = jnp.where(cols_after, r_upd, r)
+        a = jnp.where(cols_after, a - jnp.outer(v2, w), a)
+        # Pack: r[k,k] = beta (or untouched when tau = 0); a[:,k] = v2.
+        diag_val = jnp.where(tau_k != 0, beta, alpha)
+        r = jnp.where(
+            (idx[:, None] == k) & (idx[None, :] == k), diag_val, r
+        )
+        acol_packed = jnp.where(tau_k != 0, v2, acol)
+        a = jnp.where(idx[None, :] == k, acol_packed[:, None], a)
+        tau = jnp.where(idx == k, tau_k, tau)
+        return r, a, tau
+
+    r, a, tau = jax.lax.fori_loop(0, b, body, (r, a, jnp.zeros(b, r.dtype)))
+    r_out_ref[...] = r
+    v_out_ref[...] = a
+    tau_ref[...] = tau
+
+
+def _ssrft_kernel(v_ref, tau_ref, ckj_ref, cij_ref, ckj_out_ref, cij_out_ref):
+    v2 = v_ref[...]
+    tau = tau_ref[...]
+    b = v2.shape[0]
+    idx = jnp.arange(b)
+
+    def body(k, carry):
+        ckj, cij = carry
+        vk = jax.lax.dynamic_slice_in_dim(v2, k, 1, axis=1)[:, 0]
+        row = jax.lax.dynamic_slice_in_dim(ckj, k, 1, axis=0)[0, :]
+        w = tau[k] * (row + vk @ cij)
+        ckj = ckj - jnp.where(idx[:, None] == k, 1.0, 0.0) * w[None, :]
+        cij = cij - jnp.outer(vk, w)
+        return ckj, cij
+
+    ckj, cij = jax.lax.fori_loop(0, b, body, (ckj_ref[...], cij_ref[...]))
+    ckj_out_ref[...] = ckj
+    cij_out_ref[...] = cij
+
+
+@functools.partial(jax.jit, static_argnames=())
+def geqrf(a):
+    """Pallas GEQRF: returns (packed V/R tile, tau)."""
+    b = a.shape[0]
+    return pl.pallas_call(
+        _geqrf_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b, b), a.dtype),
+            jax.ShapeDtypeStruct((b,), a.dtype),
+        ),
+        interpret=True,
+    )(a)
+
+
+@jax.jit
+def larft(v, tau, c):
+    """Pallas DLARFT-apply: returns the updated tile C."""
+    b = v.shape[0]
+    return pl.pallas_call(
+        _larft_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, b), c.dtype),
+        interpret=True,
+    )(v, tau, c)
+
+
+@jax.jit
+def tsqrt(r, a):
+    """Pallas DTSQRF: returns (updated R, V2, tau)."""
+    b = r.shape[0]
+    return pl.pallas_call(
+        _tsqrt_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b, b), r.dtype),
+            jax.ShapeDtypeStruct((b, b), r.dtype),
+            jax.ShapeDtypeStruct((b,), r.dtype),
+        ),
+        interpret=True,
+    )(r, a)
+
+
+@jax.jit
+def ssrft(v2, tau, c_kj, c_ij):
+    """Pallas DSSRFT: returns (updated C_kj, updated C_ij)."""
+    b = v2.shape[0]
+    return pl.pallas_call(
+        _ssrft_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b, b), c_kj.dtype),
+            jax.ShapeDtypeStruct((b, b), c_ij.dtype),
+        ),
+        interpret=True,
+    )(v2, tau, c_kj, c_ij)

@@ -1,0 +1,168 @@
+"""Pure-numpy correctness oracles for the Pallas kernels.
+
+These mirror, loop for loop, the native rust kernels in
+``rust/src/qr/kernels.rs`` and ``rust/src/nbody/kernels.rs`` (LAPACK-style
+Householder QR tile ops; softened Newtonian gravity). pytest checks the
+Pallas kernels against these, and the rust test-suite checks the compiled
+HLO artifacts against the rust natives — closing the loop across all
+three layers.
+"""
+
+import numpy as np
+
+EPS2 = 1e-10  # gravity softening; keep in sync with nbody/kernels.rs
+
+
+# ----------------------------------------------------------------------
+# QR tile kernels (f64, b x b row-major)
+# ----------------------------------------------------------------------
+
+def geqrf(a):
+    """Householder QR of one tile. Returns (packed V/R, tau)."""
+    a = np.array(a, dtype=np.float64, copy=True)
+    b = a.shape[0]
+    assert a.shape == (b, b)
+    tau = np.zeros(b)
+    for k in range(b):
+        nrm2 = np.sum(a[k + 1:, k] ** 2)
+        alpha = a[k, k]
+        if nrm2 == 0.0:
+            tau[k] = 0.0
+            continue
+        norm = np.sqrt(alpha * alpha + nrm2)
+        beta = -norm if alpha >= 0 else norm
+        tau[k] = (beta - alpha) / beta
+        a[k + 1:, k] /= alpha - beta
+        a[k, k] = beta
+        for j in range(k + 1, b):
+            w = a[k, j] + a[k + 1:, k] @ a[k + 1:, j]
+            w *= tau[k]
+            a[k, j] -= w
+            a[k + 1:, j] -= w * a[k + 1:, k]
+    return a, tau
+
+
+def larft_apply(v, tau, c):
+    """Apply Q^T from a GEQRF'd tile ``v`` to tile ``c``."""
+    v = np.asarray(v, dtype=np.float64)
+    c = np.array(c, dtype=np.float64, copy=True)
+    b = v.shape[0]
+    for k in range(b):
+        if tau[k] == 0.0:
+            continue
+        for j in range(b):
+            w = c[k, j] + v[k + 1:, k] @ c[k + 1:, j]
+            w *= tau[k]
+            c[k, j] -= w
+            c[k + 1:, j] -= w * v[k + 1:, k]
+    return c
+
+
+def tsqrt(r, a):
+    """QR of the stack [R; A], R upper triangular.
+
+    Returns (updated R, V2 = dense Householder parts, tau).
+    """
+    r = np.array(r, dtype=np.float64, copy=True)
+    a = np.array(a, dtype=np.float64, copy=True)
+    b = r.shape[0]
+    tau = np.zeros(b)
+    for k in range(b):
+        nrm2 = np.sum(a[:, k] ** 2)
+        alpha = r[k, k]
+        if nrm2 == 0.0:
+            tau[k] = 0.0
+            continue
+        norm = np.sqrt(alpha * alpha + nrm2)
+        beta = -norm if alpha >= 0 else norm
+        tau[k] = (beta - alpha) / beta
+        a[:, k] /= alpha - beta
+        r[k, k] = beta
+        for j in range(k + 1, b):
+            w = r[k, j] + a[:, k] @ a[:, j]
+            w *= tau[k]
+            r[k, j] -= w
+            a[:, j] -= w * a[:, k]
+    return r, a, tau
+
+
+def ssrft(v2, tau, c_kj, c_ij):
+    """Apply TSQRT reflectors to the stacked pair [c_kj; c_ij]."""
+    v2 = np.asarray(v2, dtype=np.float64)
+    c_kj = np.array(c_kj, dtype=np.float64, copy=True)
+    c_ij = np.array(c_ij, dtype=np.float64, copy=True)
+    b = v2.shape[0]
+    for k in range(b):
+        if tau[k] == 0.0:
+            continue
+        for j in range(b):
+            w = c_kj[k, j] + v2[:, k] @ c_ij[:, j]
+            w *= tau[k]
+            c_kj[k, j] -= w
+            c_ij[:, j] -= w * v2[:, k]
+    return c_kj, c_ij
+
+
+# ----------------------------------------------------------------------
+# N-body kernels (f64; masked/padded fixed-size buckets)
+# ----------------------------------------------------------------------
+
+def nb_self(x, m, mask):
+    """Accelerations from all pairs within one padded particle set.
+
+    ``mask[i]`` selects real particles; padded slots contribute nothing
+    and receive values callers must ignore.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    m = np.asarray(m, dtype=np.float64)
+    n = x.shape[0]
+    acc = np.zeros((n, 3))
+    for i in range(n):
+        if not mask[i]:
+            continue
+        for j in range(n):
+            if i == j or not mask[j]:
+                continue
+            dx = x[j] - x[i]
+            r2 = dx @ dx + EPS2
+            acc[i] += m[j] * dx / r2 ** 1.5
+    return acc
+
+
+def nb_pair(xi, mi, maski, xj, mj, maskj):
+    """Mutual accelerations between two padded particle sets."""
+    xi = np.asarray(xi, dtype=np.float64)
+    xj = np.asarray(xj, dtype=np.float64)
+    acc_i = np.zeros_like(xi)
+    acc_j = np.zeros_like(xj)
+    for i in range(xi.shape[0]):
+        if not maski[i]:
+            continue
+        for j in range(xj.shape[0]):
+            if not maskj[j]:
+                continue
+            dx = xj[j] - xi[i]
+            r2 = dx @ dx + EPS2
+            w = dx / r2 ** 1.5
+            acc_i[i] += mj[j] * w
+            acc_j[j] -= mi[i] * w
+    return acc_i, acc_j
+
+
+def nb_pc(x, mask, coms):
+    """Accelerations of padded particles against a padded COM list.
+
+    ``coms`` is (k, 4): xyz + mass; padded COMs carry mass 0, which
+    zeroes their contribution without an explicit mask.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    coms = np.asarray(coms, dtype=np.float64)
+    acc = np.zeros_like(x)
+    for i in range(x.shape[0]):
+        if not mask[i]:
+            continue
+        for c in coms:
+            dx = c[:3] - x[i]
+            r2 = dx @ dx + EPS2
+            acc[i] += c[3] * dx / r2 ** 1.5
+    return acc

@@ -1,0 +1,113 @@
+"""Layer-2 JAX entry points: the computations the rust coordinator
+dispatches as tasks, expressed as jitted functions calling the Layer-1
+Pallas kernels, with the fixed shape buckets the AOT pipeline exports.
+
+This is the complete build-time model of both validation applications'
+compute: four QR tile ops (per tile size) and three N-body interaction
+ops (per bucket size). `ENTRIES` is the single source of truth that
+`aot.py` lowers and that the rust `runtime::registry` loads by name.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import nbody as nb
+from .kernels import qr
+
+jax.config.update("jax_enable_x64", True)
+
+F64 = jnp.float64
+
+# Tile sizes exported for QR: 8 is the cross-check size used by the rust
+# integration tests, 64 the paper's production tile.
+QR_TILE_SIZES = (8, 64)
+# Particle-bucket sizes for the N-body kernels; COM list chunk length.
+NB_BUCKETS = (128, 2048)
+NB_COM_CHUNK = 1024
+
+
+def _s(*shape):
+    return jax.ShapeDtypeStruct(shape, F64)
+
+
+def qr_geqrf(a):
+    """GEQRF task payload: tile → (packed V/R, tau)."""
+    return qr.geqrf(a)
+
+
+def qr_larft(v, tau, c):
+    """LARFT task payload: (V tile, tau, C tile) → C'."""
+    return (qr.larft(v, tau, c),)
+
+
+def qr_tsqrt(r, a):
+    """TSQRT task payload: (R tile, A tile) → (R', V2, tau)."""
+    return qr.tsqrt(r, a)
+
+
+def qr_ssrft(v2, tau, ckj, cij):
+    """SSRFT task payload → (C_kj', C_ij')."""
+    return qr.ssrft(v2, tau, ckj, cij)
+
+
+def nb_self(x, m, mask):
+    """Self-interaction task payload → accelerations."""
+    return (nb.nb_self(x, m, mask),)
+
+
+def nb_pair(xi, mi, maski, xj, mj, maskj):
+    """Pair-interaction task payload → (acc_i, acc_j)."""
+    return nb.nb_pair(xi, mi, maski, xj, mj, maskj)
+
+
+def nb_pc(x, mask, coms):
+    """Particle–cell task payload → accelerations."""
+    return (nb.nb_pc(x, mask, coms),)
+
+
+def entries():
+    """All (name, fn, example_args) tuples to AOT-compile.
+
+    Every entry lowers to one HLO module in ``artifacts/`` named
+    ``<name>.hlo.txt``; outputs are 1-tuples or n-tuples (lowered with
+    ``return_tuple=True`` — the rust side always unpacks a tuple).
+    """
+    out = []
+    for b in QR_TILE_SIZES:
+        out.append((f"qr_geqrf_{b}", qr_geqrf, (_s(b, b),)))
+        out.append((f"qr_larft_{b}", qr_larft, (_s(b, b), _s(b), _s(b, b))))
+        out.append((f"qr_tsqrt_{b}", qr_tsqrt, (_s(b, b), _s(b, b))))
+        out.append(
+            (f"qr_ssrft_{b}", qr_ssrft, (_s(b, b), _s(b), _s(b, b), _s(b, b)))
+        )
+    for n in NB_BUCKETS:
+        out.append((f"nb_self_{n}", nb_self, (_s(n, 3), _s(n), _s(n))))
+        out.append(
+            (
+                f"nb_pair_{n}",
+                nb_pair,
+                (_s(n, 3), _s(n), _s(n), _s(n, 3), _s(n), _s(n)),
+            )
+        )
+        out.append(
+            (f"nb_pc_{n}", nb_pc, (_s(n, 3), _s(n), _s(NB_COM_CHUNK, 4)))
+        )
+    return out
+
+
+def reference_qr_2x2(a):
+    """Composite check used by tests: factor a 2×2-tile matrix with the
+    Pallas kernels exactly the way the rust driver sequences the tasks,
+    returning the four result tiles — proving the L2 composition
+    reproduces a full (small) tiled QR, not just isolated kernels.
+    """
+    b = a.shape[0] // 2
+    a00, a01 = a[:b, :b], a[:b, b:]
+    a10, a11 = a[b:, :b], a[b:, b:]
+    v00, tau0 = qr.geqrf(a00)
+    c01 = qr.larft(v00, tau0, a01)
+    r00 = jnp.triu(v00)
+    r00b, v2, taut = qr.tsqrt(r00, a10)
+    c01b, c11 = qr.ssrft(v2, taut, c01, a11)
+    v11, tau1 = qr.geqrf(c11)
+    return r00b, c01b, v11, tau1

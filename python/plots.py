@@ -1,0 +1,145 @@
+"""Render the paper's figures from the bench CSVs in ``bench_out/``.
+
+Usage (after ``make bench`` or ``repro bench all``):
+
+    python python/plots.py [--out bench_out/plots]
+
+Produces fig8.png (QR scaling + efficiency), fig9.png / fig12.png
+(task-timeline Gantt charts), fig11.png (BH scaling vs the Gadget-2
+stand-in) and fig13.png (per-type accumulated cost) — the full set of
+evaluation figures from the paper, regenerated from this repo's runs.
+"""
+
+import argparse
+import csv
+import os
+
+import matplotlib
+
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt
+
+
+def read_csv(path):
+    with open(path) as f:
+        rows = list(csv.DictReader(f))
+    return rows
+
+
+def fig8(bench_dir, out_dir):
+    rows = read_csv(os.path.join(bench_dir, "fig8_qr_scaling.csv"))
+    cores = [int(r["cores"]) for r in rows]
+    qs = [float(r["quicksched_ms"]) for r in rows]
+    dep = [float(r["dep_only_ms"]) for r in rows]
+    fig, (ax1, ax2) = plt.subplots(1, 2, figsize=(10, 4))
+    ax1.loglog(cores, qs, "o-", label="QuickSched")
+    ax1.loglog(cores, dep, "s--", label="dep-only (OmpSs-like)")
+    ax1.loglog(cores, [qs[0] / c for c in cores], ":k", label="ideal")
+    ax1.set_xlabel("cores")
+    ax1.set_ylabel("time [ms]")
+    ax1.set_title("Tiled QR strong scaling (Fig. 8)")
+    ax1.legend()
+    ax2.semilogx(cores, [qs[0] / (c * t) for c, t in zip(cores, qs)], "o-")
+    ax2.semilogx(cores, [qs[0] / (c * t) for c, t in zip(cores, dep)], "s--")
+    ax2.set_xlabel("cores")
+    ax2.set_ylabel("parallel efficiency")
+    ax2.set_ylim(0, 1.05)
+    fig.tight_layout()
+    fig.savefig(os.path.join(out_dir, "fig8.png"), dpi=120)
+
+
+def gantt(csv_path, title, out_path, type_names):
+    rows = read_csv(csv_path)
+    fig, ax = plt.subplots(figsize=(12, 6))
+    colors = plt.cm.tab10.colors
+    for r in rows:
+        w = int(r["worker"])
+        s = int(r["start_ns"]) / 1e6
+        e = int(r["end_ns"]) / 1e6
+        ty = int(r["type"])
+        ax.barh(w, e - s, left=s, height=0.9, color=colors[ty % 10], lw=0)
+    handles = [
+        plt.Rectangle((0, 0), 1, 1, color=colors[i % 10]) for i in range(len(type_names))
+    ]
+    ax.legend(handles, type_names, loc="upper right", fontsize=8)
+    ax.set_xlabel("time [ms]")
+    ax.set_ylabel("core")
+    ax.set_title(title)
+    fig.tight_layout()
+    fig.savefig(out_path, dpi=120)
+
+
+def fig11(bench_dir, out_dir):
+    rows = read_csv(os.path.join(bench_dir, "fig11_bh_scaling.csv"))
+    cores = [int(r["cores"]) for r in rows]
+    qs = [float(r["quicksched_ms"]) for r in rows]
+    gd = [float(r["gadget_ms"]) for r in rows]
+    fig, (ax1, ax2) = plt.subplots(1, 2, figsize=(10, 4))
+    ax1.loglog(cores, qs, "o-", label="QuickSched")
+    ax1.loglog(cores, gd, "s--", label="Gadget-2-like walk")
+    ax1.loglog(cores, [qs[0] / c for c in cores], ":k", label="ideal")
+    ax1.set_xlabel("cores")
+    ax1.set_ylabel("time [ms]")
+    ax1.set_title("Barnes-Hut strong scaling (Fig. 11)")
+    ax1.legend()
+    ax2.semilogx(cores, [qs[0] / (c * t) for c, t in zip(cores, qs)], "o-")
+    ax2.semilogx(cores, [gd[0] / (c * t) for c, t in zip(cores, gd)], "s--")
+    ax2.set_xlabel("cores")
+    ax2.set_ylabel("parallel efficiency")
+    ax2.set_ylim(0, 1.05)
+    fig.tight_layout()
+    fig.savefig(os.path.join(out_dir, "fig11.png"), dpi=120)
+
+
+def fig13(bench_dir, out_dir):
+    rows = read_csv(os.path.join(bench_dir, "fig13_task_costs.csv"))
+    cores = [int(r["cores"]) for r in rows]
+    fig, ax = plt.subplots(figsize=(7, 4.5))
+    for col, label in [
+        ("self_ms", "self"),
+        ("pair_ms", "pair-pp"),
+        ("pc_ms", "pair-pc"),
+        ("com_ms", "com"),
+        ("gettask_ms", "qsched_gettask"),
+    ]:
+        ax.semilogx(cores, [float(r[col]) for r in rows], "o-", label=label)
+    ax.axvline(32, color="gray", ls=":", lw=1)
+    ax.set_xlabel("cores")
+    ax.set_ylabel("accumulated cost [ms]")
+    ax.set_title("Accumulated task-type cost (Fig. 13)")
+    ax.legend()
+    fig.tight_layout()
+    fig.savefig(os.path.join(out_dir, "fig13.png"), dpi=120)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench-dir", default="bench_out")
+    ap.add_argument("--out", default="bench_out/plots")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    made = []
+    for name, fn in [
+        ("fig8_qr_scaling.csv", lambda: fig8(args.bench_dir, args.out)),
+        ("fig11_bh_scaling.csv", lambda: fig11(args.bench_dir, args.out)),
+        ("fig13_task_costs.csv", lambda: fig13(args.bench_dir, args.out)),
+    ]:
+        if os.path.exists(os.path.join(args.bench_dir, name)):
+            fn()
+            made.append(name)
+    qr_types = ["DGEQRF", "DLARFT", "DTSQRF", "DSSRFT"]
+    bh_types = ["self", "pair-pp", "pair-pc", "com"]
+    for csv_name, title, out_name, names in [
+        ("fig9_quicksched.csv", "QR timeline, QuickSched (Fig. 9 top)", "fig9_quicksched.png", qr_types),
+        ("fig9_dep_only.csv", "QR timeline, dep-only (Fig. 9 bottom)", "fig9_dep_only.png", qr_types),
+        ("fig12_bh_timeline.csv", "Barnes-Hut timeline (Fig. 12)", "fig12.png", bh_types),
+    ]:
+        p = os.path.join(args.bench_dir, csv_name)
+        if os.path.exists(p):
+            gantt(p, title, os.path.join(args.out, out_name), names)
+            made.append(csv_name)
+    print(f"rendered {len(made)} figure(s) into {args.out}")
+
+
+if __name__ == "__main__":
+    main()

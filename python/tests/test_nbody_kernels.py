@@ -1,0 +1,135 @@
+"""Pallas N-body kernels vs the numpy oracle, including padding-mask
+correctness, swept by hypothesis."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import nbody as nb
+from compile.kernels import ref
+
+
+def cloud(n, seed):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.uniform(0, 1, (n, 3)),
+        rng.uniform(0.5, 2.0, n),
+    )
+
+
+def padded(x, m, n_pad):
+    n = x.shape[0]
+    xp = np.zeros((n_pad, 3))
+    mp = np.zeros(n_pad)
+    mask = np.zeros(n_pad)
+    xp[:n] = x
+    mp[:n] = m
+    mask[:n] = 1.0
+    return xp, mp, mask
+
+
+@pytest.mark.parametrize("n,n_pad", [(8, 8), (5, 16), (100, 128)])
+def test_self_matches_ref(n, n_pad):
+    x, m = cloud(n, n)
+    xp, mp, mask = padded(x, m, n_pad)
+    got = np.array(nb.nb_self(xp, mp, mask))
+    want = ref.nb_self(xp, mp, mask)
+    assert_allclose(got, want, rtol=1e-10, atol=1e-12)
+    # padded rows are exactly zero (mask multiplies the weight)
+    assert_allclose(got[n:], 0.0)
+
+
+@pytest.mark.parametrize("ni,nj,n_pad", [(4, 7, 8), (60, 40, 64)])
+def test_pair_matches_ref(ni, nj, n_pad):
+    xi, mi = cloud(ni, 100 + ni)
+    xj, mj = cloud(nj, 200 + nj)
+    xj = xj + 2.0  # disjoint regions, like real cell pairs
+    xip, mip, maski = padded(xi, mi, n_pad)
+    xjp, mjp, maskj = padded(xj, mj, n_pad)
+    gi, gj = nb.nb_pair(xip, mip, maski, xjp, mjp, maskj)
+    wi, wj = ref.nb_pair(xip, mip, maski, xjp, mjp, maskj)
+    assert_allclose(np.array(gi), wi, rtol=1e-10, atol=1e-12)
+    assert_allclose(np.array(gj), wj, rtol=1e-10, atol=1e-12)
+
+
+def test_pair_momentum_conservation():
+    xi, mi = cloud(20, 1)
+    xj, mj = cloud(30, 2)
+    n_pad = 32
+    xip, mip, maski = padded(xi, mi, n_pad)
+    xjp, mjp, maskj = padded(xj, mj, n_pad)
+    gi, gj = nb.nb_pair(xip, mip, maski, xjp, mjp, maskj)
+    total = (np.array(gi) * mip[:, None]).sum(0) + (np.array(gj) * mjp[:, None]).sum(0)
+    assert_allclose(total, 0.0, atol=1e-12)
+
+
+@pytest.mark.parametrize("n,k", [(8, 4), (32, 16)])
+def test_pc_matches_ref(n, k):
+    x, m = cloud(n, 300 + n)
+    rng = np.random.default_rng(400 + k)
+    coms = np.zeros((k, 4))
+    coms[: k // 2, :3] = rng.uniform(2, 3, (k // 2, 3))
+    coms[: k // 2, 3] = rng.uniform(0.1, 5.0, k // 2)  # rest are padding
+    xp, _, mask = padded(x, m, n)
+    got = np.array(nb.nb_pc(xp, mask, coms))
+    want = ref.nb_pc(xp, mask, coms)
+    assert_allclose(got, want, rtol=1e-10, atol=1e-12)
+
+
+def test_pc_zero_mass_padding_contributes_nothing():
+    x, m = cloud(6, 9)
+    xp, _, mask = padded(x, m, 8)
+    com_real = np.array([[5.0, 5.0, 5.0, 2.0]])
+    pad = np.zeros((7, 4))
+    pad[:, :3] = 0.123  # position garbage, zero mass
+    a1 = np.array(nb.nb_pc(xp, mask, np.vstack([com_real, pad])))
+    a2 = np.array(nb.nb_pc(xp, mask, np.vstack([com_real, np.zeros((7, 4))])))
+    assert_allclose(a1, a2, atol=1e-14)
+
+
+def test_self_equals_split_pair_plus_selfs():
+    """Splitting one set into two halves: self(all) ==
+    self(a) + self(b) + pair(a, b) — the exact decomposition the task
+    graph relies on."""
+    x, m = cloud(40, 77)
+    xp, mp, mask = padded(x, m, 40)
+    whole = np.array(nb.nb_self(xp, mp, mask))
+    xa, ma, maska = padded(x[:25], m[:25], 32)
+    xb, mb, maskb = padded(x[25:], m[25:], 32)
+    sa = np.array(nb.nb_self(xa, ma, maska))
+    sb = np.array(nb.nb_self(xb, mb, maskb))
+    pa, pb = nb.nb_pair(xa, ma, maska, xb, mb, maskb)
+    got = np.vstack([sa[:25] + np.array(pa)[:25], sb[:15] + np.array(pb)[:15]])
+    assert_allclose(got, whole, rtol=1e-9, atol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 24),
+    n_pad=st.sampled_from([32]),
+    seed=st.integers(0, 2**31),
+)
+def test_self_property_random(n, n_pad, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-5, 5, (n, 3))
+    m = rng.uniform(0.01, 10.0, n)
+    xp, mp, mask = padded(x, m, n_pad)
+    got = np.array(nb.nb_self(xp, mp, mask))
+    want = ref.nb_self(xp, mp, mask)
+    assert_allclose(got, want, rtol=1e-9, atol=1e-12)
+    # momentum conservation within the set
+    assert_allclose((got * mp[:, None]).sum(0), 0.0, atol=1e-10)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_pc_property_random(seed):
+    rng = np.random.default_rng(seed)
+    n, k = 16, 8
+    x = rng.uniform(0, 1, (n, 3))
+    coms = np.hstack([rng.uniform(3, 9, (k, 3)), rng.uniform(0, 2, (k, 1))])
+    mask = (rng.uniform(0, 1, n) > 0.3).astype(float)
+    got = np.array(nb.nb_pc(x, mask, coms))
+    want = ref.nb_pc(x, mask, coms)
+    assert_allclose(got, want, rtol=1e-9, atol=1e-12)

@@ -1,0 +1,128 @@
+"""Pallas QR tile kernels vs the pure-numpy oracle (ref.py) — the core
+L1 correctness signal, swept over shapes and seeds by hypothesis."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import qr, ref
+
+SIZES = [1, 2, 3, 4, 8, 16]
+
+
+def rand_tile(b, seed):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(-1.0, 1.0, (b, b))
+
+
+@pytest.mark.parametrize("b", SIZES)
+def test_geqrf_matches_ref(b):
+    a = rand_tile(b, 10 + b)
+    packed, tau = qr.geqrf(a)
+    packed_ref, tau_ref = ref.geqrf(a)
+    assert_allclose(np.array(packed), packed_ref, atol=1e-12)
+    assert_allclose(np.array(tau), tau_ref, atol=1e-12)
+
+
+@pytest.mark.parametrize("b", SIZES)
+def test_larft_matches_ref(b):
+    v, tau = ref.geqrf(rand_tile(b, 20 + b))
+    c = rand_tile(b, 40 + b)
+    got = qr.larft(v, tau, c)
+    want = ref.larft_apply(v, tau, c)
+    assert_allclose(np.array(got), want, atol=1e-12)
+
+
+@pytest.mark.parametrize("b", SIZES)
+def test_tsqrt_matches_ref(b):
+    packed, _ = ref.geqrf(rand_tile(b, 30 + b))
+    r = np.triu(packed)
+    a = rand_tile(b, 50 + b)
+    r2, v2, tau = qr.tsqrt(r, a)
+    r2_ref, v2_ref, tau_ref = ref.tsqrt(r, a)
+    assert_allclose(np.array(r2), r2_ref, atol=1e-12)
+    assert_allclose(np.array(v2), v2_ref, atol=1e-12)
+    assert_allclose(np.array(tau), tau_ref, atol=1e-12)
+
+
+@pytest.mark.parametrize("b", SIZES)
+def test_ssrft_matches_ref(b):
+    packed, _ = ref.geqrf(rand_tile(b, 60 + b))
+    r = np.triu(packed)
+    _, v2, tau = ref.tsqrt(r, rand_tile(b, 61 + b))
+    ckj = rand_tile(b, 62 + b)
+    cij = rand_tile(b, 63 + b)
+    g_kj, g_ij = qr.ssrft(v2, tau, ckj, cij)
+    w_kj, w_ij = ref.ssrft(v2, tau, ckj, cij)
+    assert_allclose(np.array(g_kj), w_kj, atol=1e-12)
+    assert_allclose(np.array(g_ij), w_ij, atol=1e-12)
+
+
+def test_geqrf_production_tile_64():
+    """The paper's 64×64 production tile."""
+    a = rand_tile(64, 99)
+    packed, tau = qr.geqrf(a)
+    r = np.triu(np.array(packed))
+    assert_allclose(r.T @ r, a.T @ a, atol=1e-10)
+    assert np.all(np.abs(tau) <= 2.0)  # Householder tau ∈ [0, 2]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([2, 3, 5, 8]),
+    seed=st.integers(0, 2**31),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_geqrf_gram_property(b, seed, scale):
+    """Property: RᵀR == AᵀA for any tile (orthogonal invariance)."""
+    a = rand_tile(b, seed) * scale
+    packed, _ = qr.geqrf(a)
+    r = np.triu(np.array(packed))
+    assert_allclose(r.T @ r, a.T @ a, rtol=1e-9, atol=1e-12 * scale * scale)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31))
+def test_tile_column_elimination_property(b, seed):
+    """Property: after geqrf+tsqrt the stacked column is upper
+    triangular with the same Gram as the input stack."""
+    rng = np.random.default_rng(seed)
+    top = rng.uniform(-1, 1, (b, b))
+    bot = rng.uniform(-1, 1, (b, b))
+    packed, _ = qr.geqrf(top)
+    r0 = np.triu(np.array(packed))
+    r1, v2, tau = qr.tsqrt(r0, bot)
+    r1 = np.array(r1)
+    stack = np.vstack([r0, bot])
+    assert_allclose(
+        np.triu(r1).T @ np.triu(r1), stack.T @ stack, rtol=1e-9, atol=1e-12
+    )
+
+
+def test_degenerate_zero_column():
+    """Zero below-diagonal columns take the tau=0 path."""
+    a = np.triu(rand_tile(6, 7))
+    packed, tau = qr.geqrf(a)
+    assert_allclose(np.array(packed), a, atol=1e-14)
+    assert_allclose(np.array(tau), 0.0, atol=0.0)
+
+
+def test_zero_matrix():
+    packed, tau = qr.geqrf(np.zeros((4, 4)))
+    assert_allclose(np.array(packed), 0.0)
+    assert_allclose(np.array(tau), 0.0)
+
+
+def test_composite_2x2_factorization():
+    """L2 composition check (model.reference_qr_2x2) against a dense QR."""
+    from compile import model
+
+    rng = np.random.default_rng(123)
+    a = rng.uniform(-1, 1, (16, 16))
+    r00, c01, v11, _ = model.reference_qr_2x2(a)
+    r_full = np.zeros((16, 16))
+    r_full[:8, :8] = np.triu(np.array(r00))
+    r_full[:8, 8:] = np.array(c01)
+    r_full[8:, 8:] = np.triu(np.array(v11))
+    assert_allclose(r_full.T @ r_full, a.T @ a, atol=1e-10)

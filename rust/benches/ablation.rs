@@ -1,0 +1,14 @@
+//! `cargo bench --bench ablation` — E9: design-choice ablations
+//! (key policy, steal policy, re-owning, lock-aware priorities).
+use quicksched::bench::ablation::{run, AblationOpts};
+
+fn main() {
+    let opts = if std::env::var_os("QS_QUICK").is_some() {
+        AblationOpts::quick()
+    } else {
+        AblationOpts::default()
+    };
+    let table = run(&opts);
+    println!("\n== E9: scheduler ablations (64 virtual cores) ==");
+    println!("{}", table.render());
+}

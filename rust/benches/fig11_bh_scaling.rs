@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig11_bh_scaling` — regenerates paper Fig. 11.
+//! QS_QUICK=1 for the reduced configuration.
+use quicksched::bench::fig11::{run, Fig11Opts};
+
+fn main() {
+    let opts = if std::env::var_os("QS_QUICK").is_some() {
+        Fig11Opts::quick()
+    } else {
+        Fig11Opts::default()
+    };
+    let (table, _) = run(&opts);
+    println!("\n== Fig 11: Barnes-Hut strong scaling (QuickSched vs Gadget-2-like) ==");
+    println!("{}", table.render());
+}

@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig12_bh_timeline` — regenerates paper Fig. 12.
+use quicksched::bench::fig12::{run, Fig12Opts};
+
+fn main() {
+    let opts = if std::env::var_os("QS_QUICK").is_some() {
+        Fig12Opts::quick()
+    } else {
+        Fig12Opts::default()
+    };
+    let (table, m) = run(&opts);
+    println!("\n== Fig 12: Barnes-Hut task timeline on {} cores ==", m.workers);
+    println!("{}", table.render());
+    println!("timeline: bench_out/fig12_bh_timeline.csv ({} records)", m.timeline.len());
+}

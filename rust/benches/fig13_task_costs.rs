@@ -1,0 +1,13 @@
+//! `cargo bench --bench fig13_task_costs` — regenerates paper Fig. 13.
+use quicksched::bench::fig13::{run, Fig13Opts};
+
+fn main() {
+    let opts = if std::env::var_os("QS_QUICK").is_some() {
+        Fig13Opts::quick()
+    } else {
+        Fig13Opts::default()
+    };
+    let (table, _) = run(&opts);
+    println!("\n== Fig 13: accumulated task-type cost + scheduler overhead ==");
+    println!("{}", table.render());
+}

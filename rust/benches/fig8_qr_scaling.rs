@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig8_qr_scaling` — regenerates paper Fig. 8.
+//! Env: QS_QUICK=1 for the reduced CI-size configuration.
+use quicksched::bench::fig8::{run, Fig8Opts};
+
+fn main() {
+    let opts = if std::env::var_os("QS_QUICK").is_some() {
+        Fig8Opts::quick()
+    } else {
+        Fig8Opts::default()
+    };
+    let (table, _) = run(&opts);
+    println!("\n== Fig 8: tiled QR strong scaling (QuickSched vs dep-only) ==");
+    println!("{}", table.render());
+}

@@ -1,0 +1,16 @@
+//! `cargo bench --bench fig9_qr_timeline` — regenerates paper Fig. 9
+//! (Gantt CSVs under bench_out/ + summary). QS_QUICK=1 for CI size.
+use quicksched::bench::fig9::{run, Fig9Opts};
+
+fn main() {
+    let opts = if std::env::var_os("QS_QUICK").is_some() {
+        Fig9Opts::quick()
+    } else {
+        Fig9Opts::default()
+    };
+    let (table, qs, dep) = run(&opts);
+    println!("\n== Fig 9: QR task timelines on {} cores ==", qs.workers);
+    println!("{}", table.render());
+    println!("timelines: bench_out/fig9_quicksched.csv ({} records), bench_out/fig9_dep_only.csv ({} records)",
+             qs.timeline.len(), dep.timeline.len());
+}

@@ -1,0 +1,118 @@
+//! `cargo bench --bench micro_scheduler` — microbenchmarks of the
+//! scheduler hot paths (the §Perf targets in EXPERIMENTS.md):
+//! queue put/get, hierarchical resource lock/unlock, enqueue scoring,
+//! and the end-to-end per-task scheduling overhead.
+
+use quicksched::bench::harness::{bench, Table};
+use quicksched::coordinator::{
+    queue::Queue, resource::ResTable, SchedConfig, Scheduler, TaskFlags, TaskId, UnitCost,
+};
+
+fn main() {
+    let mut table = Table::new(&["bench", "median_ns", "per_op_ns"]);
+    let quick = std::env::var_os("QS_QUICK").is_some();
+    let samples = if quick { 3 } else { 10 };
+
+    // --- queue put+get of 10k tasks, no conflicts ---
+    let n = 10_000usize;
+    let tasks: Vec<quicksched::coordinator::Task> = (0..n)
+        .map(|i| quicksched::coordinator::Task::new(0, TaskFlags::default(), vec![], i as i64 + 1))
+        .collect();
+    let res = ResTable::new();
+    let s = bench(
+        "queue_put_get_10k",
+        || {
+            let q = Queue::new(n);
+            for i in 0..n {
+                q.put((i * 7 % 1000) as i64, TaskId(i as u32));
+            }
+            while q.get(&tasks, &res).is_some() {}
+        },
+        2,
+        samples,
+    );
+    table.row(&[
+        "queue_put_get_10k".into(),
+        format!("{:.0}", s.median * 1e9),
+        format!("{:.1}", s.median * 1e9 / (2 * n) as f64),
+    ]);
+
+    // --- hierarchical resource lock/unlock, depth 4 ---
+    let mut rt = ResTable::new();
+    let mut parent = None;
+    let mut leaf = None;
+    for _ in 0..4 {
+        let r = rt.add(parent, -1);
+        parent = Some(r);
+        leaf = Some(r);
+    }
+    let leaf = leaf.unwrap();
+    let iters = 100_000;
+    let s = bench(
+        "res_lock_unlock_depth4_100k",
+        || {
+            for _ in 0..iters {
+                assert!(rt.try_lock(leaf));
+                rt.unlock(leaf);
+            }
+        },
+        2,
+        samples,
+    );
+    table.row(&[
+        "res_lock_unlock_depth4".into(),
+        format!("{:.0}", s.median * 1e9),
+        format!("{:.1}", s.median * 1e9 / iters as f64),
+    ]);
+
+    // --- full scheduling overhead: run a 20k-task dependency-free graph
+    //     through the real threaded executor with an empty task fn ---
+    // 20k tasks over 64 resources (realistic conflict density: a few
+    // hundred tasks per resource, like the BH cell locks).
+    let build = || {
+        let mut sched = Scheduler::new(SchedConfig::new(1)).unwrap();
+        let rs: Vec<_> = (0..64).map(|i| sched.add_resource(None, i % 4)).collect();
+        for i in 0..20_000usize {
+            let t = sched.add_task(0, TaskFlags::default(), &[], 1 + (i % 13) as i64);
+            if i % 4 == 0 {
+                sched.add_lock(t, rs[i % 64]);
+            }
+        }
+        sched.prepare().unwrap();
+        sched
+    };
+    let mut sched = build();
+    let s = bench(
+        "sched_run_20k_empty_tasks",
+        || {
+            sched.run(1, |_| {}).unwrap();
+        },
+        1,
+        samples,
+    );
+    table.row(&[
+        "per_task_overhead".into(),
+        format!("{:.0}", s.median * 1e9),
+        format!("{:.1}", s.median * 1e9 / 20_000.0),
+    ]);
+
+    // --- virtual-time sim throughput (tasks/sec of sim machinery) ---
+    let mut sched = build();
+    let s = bench(
+        "sim_20k_tasks",
+        || {
+            sched.run_sim(64, &UnitCost).unwrap();
+        },
+        1,
+        samples,
+    );
+    table.row(&[
+        "sim_per_task".into(),
+        format!("{:.0}", s.median * 1e9),
+        format!("{:.1}", s.median * 1e9 / 20_000.0),
+    ]);
+
+    println!("\n== micro: scheduler hot paths ==");
+    println!("{}", table.render());
+    let _ = table.write_csv(&quicksched::bench::harness::out_dir().join("micro_scheduler.csv"));
+}

@@ -1,0 +1,14 @@
+//! `cargo bench --bench overhead` — E8: graph-setup cost accounting
+//! (paper §4.1: 7.2 ms / ≤3%; §4.2: 51.3 ms).
+use quicksched::bench::overhead::{run, OverheadOpts};
+
+fn main() {
+    let opts = if std::env::var_os("QS_QUICK").is_some() {
+        OverheadOpts::quick()
+    } else {
+        OverheadOpts::default()
+    };
+    let table = run(&opts);
+    println!("\n== E8: scheduler setup cost ==");
+    println!("{}", table.render());
+}

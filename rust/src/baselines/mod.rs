@@ -1,0 +1,5 @@
+//! Comparator schedulers the paper benchmarks against (Fig. 8: OmpSs;
+//! Fig. 11: Gadget-2 — the latter lives in [`crate::nbody::baseline`]).
+pub mod dep_only;
+
+pub use dep_only::DepOnlyBuilder;

@@ -1,0 +1,123 @@
+//! **E9** — ablations over the scheduler's design choices, including the
+//! §5 future-work extensions implemented in this repo:
+//!
+//! * key policy: critical-path (paper) vs FIFO vs cost-only,
+//! * work stealing: random (paper) vs weight-aware (§5),
+//! * resource re-owning on/off (§3.4 / §4.2),
+//! * lock-aware priorities on/off (§5).
+//!
+//! Run over both applications' task graphs on 64 virtual cores.
+
+use crate::coordinator::{KeyPolicy, SchedConfig, Scheduler, StealPolicy};
+use crate::nbody;
+use crate::qr;
+
+use super::harness::{ms, out_dir, x2, Table};
+
+pub struct AblationOpts {
+    pub qr_tiles: usize,
+    pub nb_n: usize,
+    pub nb_n_max: usize,
+    pub nb_n_task: usize,
+    pub cores: usize,
+    pub reps: usize,
+}
+
+impl Default for AblationOpts {
+    fn default() -> Self {
+        Self { qr_tiles: 32, nb_n: 200_000, nb_n_max: 100, nb_n_task: 2000, cores: 64, reps: 3 }
+    }
+}
+
+impl AblationOpts {
+    pub fn quick() -> Self {
+        Self { qr_tiles: 12, nb_n: 30_000, nb_n_max: 100, nb_n_task: 800, cores: 16, reps: 1 }
+    }
+}
+
+#[derive(Clone, Copy)]
+pub struct Variant {
+    pub name: &'static str,
+    pub key: KeyPolicy,
+    pub steal: StealPolicy,
+    pub reown: bool,
+    pub lock_aware: bool,
+}
+
+pub const VARIANTS: [Variant; 6] = [
+    Variant { name: "paper", key: KeyPolicy::CriticalPath, steal: StealPolicy::Random, reown: true, lock_aware: false },
+    Variant { name: "fifo-keys", key: KeyPolicy::Fifo, steal: StealPolicy::Random, reown: true, lock_aware: false },
+    Variant { name: "cost-keys", key: KeyPolicy::Cost, steal: StealPolicy::Random, reown: true, lock_aware: false },
+    Variant { name: "weight-steal", key: KeyPolicy::CriticalPath, steal: StealPolicy::WeightAware, reown: true, lock_aware: false },
+    Variant { name: "no-reown", key: KeyPolicy::CriticalPath, steal: StealPolicy::Random, reown: false, lock_aware: false },
+    Variant { name: "lock-aware", key: KeyPolicy::CriticalPath, steal: StealPolicy::Random, reown: true, lock_aware: true },
+];
+
+fn config(v: &Variant, cores: usize, seed: u64) -> SchedConfig {
+    let mut cfg = SchedConfig::new(cores).with_seed(seed);
+    cfg.flags.key_policy = v.key;
+    cfg.flags.steal = v.steal;
+    cfg.flags.reown = v.reown;
+    cfg.flags.lock_aware_priority = v.lock_aware;
+    cfg
+}
+
+pub fn run(opts: &AblationOpts) -> Table {
+    let qr_model = qr::QrCostModel { ns_per_unit: 400.0 };
+    let nb_model = nbody::nb_cost_model(3.0);
+    let cloud = nbody::uniform_cloud(opts.nb_n, 77);
+
+    let mut table = Table::new(&["variant", "qr_ms", "qr_vs_paper", "bh_ms", "bh_vs_paper"]);
+    let mut qr_base = 0u64;
+    let mut bh_base = 0u64;
+    for v in &VARIANTS {
+        let mut qr_total = 0u64;
+        let mut bh_total = 0u64;
+        for rep in 0..opts.reps {
+            let mut s = Scheduler::new(config(v, opts.cores, 500 + rep as u64)).unwrap();
+            qr::build_tasks(&mut s, opts.qr_tiles, opts.qr_tiles);
+            s.prepare().unwrap();
+            qr_total += s.run_sim(opts.cores, &qr_model).unwrap().elapsed_ns;
+
+            let run = nbody::run_sim(
+                cloud.clone(),
+                opts.nb_n_max,
+                opts.nb_n_task,
+                config(v, opts.cores, 600 + rep as u64),
+                opts.cores,
+                &nb_model,
+            )
+            .unwrap();
+            bh_total += run.metrics.elapsed_ns;
+        }
+        let qr_ns = qr_total / opts.reps as u64;
+        let bh_ns = bh_total / opts.reps as u64;
+        if v.name == "paper" {
+            qr_base = qr_ns;
+            bh_base = bh_ns;
+        }
+        table.row(&[
+            v.name.into(),
+            ms(qr_ns),
+            x2(qr_ns as f64 / qr_base as f64),
+            ms(bh_ns),
+            x2(bh_ns as f64 / bh_base as f64),
+        ]);
+    }
+    let _ = table.write_csv(&out_dir().join("ablation.csv"));
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_ablation_runs_all_variants() {
+        let t = run(&AblationOpts::quick());
+        let s = t.render();
+        for v in &VARIANTS {
+            assert!(s.contains(v.name), "missing {}", v.name);
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! **Fig. 12** — task timeline of the Barnes-Hut tree-code on 64 cores:
+//! red self-interactions, green particle–particle pairs, blue
+//! particle–cell walks (plus the COM pre-pass the paper folds into
+//! startup). Emits `fig12_bh_timeline.csv` and summary occupancy stats.
+
+use crate::coordinator::{RunMetrics, SchedConfig};
+use crate::nbody::{self, NbTask};
+
+use super::harness::{ms, out_dir, x2, Table};
+
+pub struct Fig12Opts {
+    pub n: usize,
+    pub n_max: usize,
+    pub n_task: usize,
+    pub cores: usize,
+    pub calib_n: usize,
+}
+
+impl Default for Fig12Opts {
+    fn default() -> Self {
+        Self { n: 1_000_000, n_max: 100, n_task: 5000, cores: 64, calib_n: 30_000 }
+    }
+}
+
+impl Fig12Opts {
+    pub fn quick() -> Self {
+        Self { n: 50_000, n_max: 100, n_task: 1200, cores: 16, calib_n: 8_000 }
+    }
+}
+
+pub fn run(opts: &Fig12Opts) -> (Table, RunMetrics) {
+    let ns_task = super::calibrate::nb_ns_per_unit(
+        opts.calib_n,
+        opts.n_max,
+        opts.n_task.min(opts.calib_n / 8).max(64),
+    );
+    let model = nbody::nb_cost_model(ns_task);
+    let cfg = SchedConfig::new(opts.cores).with_seed(7).with_timeline(true);
+    let run = nbody::run_sim(
+        nbody::uniform_cloud(opts.n, 1234),
+        opts.n_max,
+        opts.n_task,
+        cfg,
+        opts.cores,
+        &model,
+    )
+    .unwrap();
+    let m = run.metrics;
+
+    let dir = out_dir();
+    std::fs::create_dir_all(&dir).ok();
+    let mut f = std::fs::File::create(dir.join("fig12_bh_timeline.csv")).unwrap();
+    m.write_timeline_csv(&mut f).unwrap();
+
+    let mut table = Table::new(&["task_type", "count", "total_ms", "share"]);
+    let by_type = m.cost_by_type();
+    let total: u64 = by_type.iter().map(|&(_, ns)| ns).sum();
+    for (ty, ns) in &by_type {
+        let count = m.timeline.iter().filter(|r| r.type_id == *ty).count();
+        table.row(&[
+            NbTask::from_u32(*ty).name().to_string(),
+            count.to_string(),
+            ms(*ns),
+            x2(*ns as f64 / total as f64),
+        ]);
+    }
+    table.row(&[
+        "makespan".into(),
+        m.workers.to_string(),
+        ms(m.elapsed_ns),
+        x2(m.utilization()),
+    ]);
+    let _ = table.write_csv(&dir.join("fig12_summary.csv"));
+    (table, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_fig12_timeline() {
+        let (_t, m) = run(&Fig12Opts::quick());
+        assert!(m.check_no_worker_overlap());
+        // All three interaction types present.
+        let types: std::collections::HashSet<u32> =
+            m.timeline.iter().map(|r| r.type_id).collect();
+        for ty in [NbTask::SelfInteract, NbTask::PairPP, NbTask::PairPC] {
+            assert!(types.contains(&(ty as u32)), "missing {:?}", ty.name());
+        }
+        // Interaction work dominates COM bookkeeping.
+        let by = m.cost_by_type();
+        let com = by
+            .iter()
+            .find(|(t, _)| *t == NbTask::Com as u32)
+            .map(|&(_, ns)| ns)
+            .unwrap_or(0);
+        let total: u64 = by.iter().map(|&(_, ns)| ns).sum();
+        assert!((com as f64) < 0.1 * total as f64, "COM share too high");
+    }
+}

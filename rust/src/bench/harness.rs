@@ -1,0 +1,151 @@
+//! In-repo measurement harness (no `criterion` in the offline registry):
+//! warmup + fixed-sample timing with median/MAD reporting, simple table
+//! rendering, and CSV output under `bench_out/`.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Measure `f` after `warmup` untimed runs; returns per-run seconds.
+pub fn sample<F: FnMut()>(mut f: F, warmup: usize, samples: usize) -> Vec<f64> {
+    assert!(samples > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    (0..samples)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// Measure and summarize.
+pub fn bench<F: FnMut()>(name: &str, f: F, warmup: usize, samples: usize) -> Summary {
+    let s = Summary::of(&sample(f, warmup, samples));
+    eprintln!(
+        "  {name}: median {:.3} ms (±{:.3}, n={})",
+        s.median * 1e3,
+        s.stddev * 1e3,
+        s.n
+    );
+    s
+}
+
+/// Simple fixed-width table printer for the figure/table reproductions.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len() - 1));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write as CSV.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{}", self.headers.join(","))?;
+        for r in &self.rows {
+            writeln!(f, "{}", r.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+/// Output directory for bench CSVs (`QS_BENCH_OUT` or `bench_out/`).
+pub fn out_dir() -> PathBuf {
+    std::env::var_os("QS_BENCH_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("bench_out"))
+}
+
+/// Format a nanosecond count as milliseconds with 3 digits.
+pub fn ms(ns: u64) -> String {
+    format!("{:.3}", ns as f64 / 1e6)
+}
+
+/// Format a ratio with 2 digits.
+pub fn x2(r: f64) -> String {
+    format!("{r:.2}")
+}
+
+/// Core counts used by the paper's strong-scaling figures.
+pub const CORE_COUNTS: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_counts() {
+        let mut n = 0;
+        let s = sample(|| n += 1, 2, 5);
+        assert_eq!(s.len(), 5);
+        assert_eq!(n, 7);
+        assert!(s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn table_renders_and_csvs() {
+        let mut t = Table::new(&["cores", "ms"]);
+        t.row(&["1".into(), "100.0".into()]);
+        t.row(&["64".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("cores"));
+        assert!(s.contains("64"));
+        let p = std::env::temp_dir().join(format!("qs_tbl_{}.csv", std::process::id()));
+        t.write_csv(&p).unwrap();
+        let txt = std::fs::read_to_string(&p).unwrap();
+        assert!(txt.starts_with("cores,ms"));
+        std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(ms(1_500_000), "1.500");
+        assert_eq!(x2(1.234), "1.23");
+    }
+}

@@ -1,0 +1,14 @@
+//! Bench drivers regenerating every table and figure of paper §4, plus
+//! the in-repo measurement harness (no criterion in the offline
+//! registry). Each driver has a paper-scale `Default` and a CI-scale
+//! `quick()`; the `repro bench <name>` CLI and `cargo bench` targets
+//! both route here, and each writes CSVs under `bench_out/`.
+pub mod ablation;
+pub mod calibrate;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig8;
+pub mod fig9;
+pub mod harness;
+pub mod overhead;

@@ -1,0 +1,100 @@
+//! **E8** — setup-cost accounting: the paper reports graph construction
+//! (tasks + resources + dependencies) at 7.2 ms / ≤3% of total for QR
+//! and 51.3 ms for Barnes-Hut. This driver measures our build times and
+//! their fraction of a single-core solve.
+
+use std::time::Instant;
+
+use crate::coordinator::{SchedConfig, Scheduler};
+use crate::nbody;
+use crate::qr;
+
+use super::harness::{out_dir, x2, Table};
+
+pub struct OverheadOpts {
+    pub qr_tiles: usize,
+    pub qr_tile: usize,
+    pub nb_n: usize,
+    pub nb_n_max: usize,
+    pub nb_n_task: usize,
+}
+
+impl Default for OverheadOpts {
+    fn default() -> Self {
+        Self { qr_tiles: 32, qr_tile: 64, nb_n: 1_000_000, nb_n_max: 100, nb_n_task: 5000 }
+    }
+}
+
+impl OverheadOpts {
+    pub fn quick() -> Self {
+        Self { qr_tiles: 8, qr_tile: 16, nb_n: 50_000, nb_n_max: 100, nb_n_task: 1200 }
+    }
+}
+
+pub fn run(opts: &OverheadOpts) -> Table {
+    let mut table = Table::new(&["app", "graph_build_ms", "prepare_ms", "solve_ms", "setup_frac"]);
+
+    // --- QR ---
+    let mat = qr::TiledMatrix::random(opts.qr_tile, opts.qr_tiles, opts.qr_tiles, 5);
+    let t0 = Instant::now();
+    let mut sched = Scheduler::new(SchedConfig::new(1)).unwrap();
+    qr::build_tasks(&mut sched, opts.qr_tiles, opts.qr_tiles);
+    let build = t0.elapsed();
+    let t0 = Instant::now();
+    sched.prepare().unwrap();
+    let prepare = t0.elapsed();
+    let t0 = Instant::now();
+    sched
+        .run(1, |view| qr::exec_task(&mat, &qr::NativeBackend, view))
+        .unwrap();
+    let solve = t0.elapsed();
+    let setup = build + prepare;
+    table.row(&[
+        "qr".into(),
+        format!("{:.3}", build.as_secs_f64() * 1e3),
+        format!("{:.3}", prepare.as_secs_f64() * 1e3),
+        format!("{:.3}", solve.as_secs_f64() * 1e3),
+        x2(setup.as_secs_f64() / (setup + solve).as_secs_f64()),
+    ]);
+
+    // --- Barnes-Hut (graph build only at full scale; solve measured on
+    //     the real particles — at 1M this is the long pole, so callers
+    //     may prefer `quick()`) ---
+    let cloud = nbody::uniform_cloud(opts.nb_n, 9);
+    let tree = nbody::Octree::build(cloud, opts.nb_n_max);
+    let state = nbody::NBodyState::from_tree(tree);
+    let t0 = Instant::now();
+    let mut sched = Scheduler::new(SchedConfig::new(1)).unwrap();
+    nbody::build_tasks(&mut sched, &state, opts.nb_n_task);
+    let build = t0.elapsed();
+    let t0 = Instant::now();
+    sched.prepare().unwrap();
+    let prepare = t0.elapsed();
+    let t0 = Instant::now();
+    sched.run(1, |view| nbody::exec_task(&state, view)).unwrap();
+    let solve = t0.elapsed();
+    let setup = build + prepare;
+    table.row(&[
+        "barnes-hut".into(),
+        format!("{:.3}", build.as_secs_f64() * 1e3),
+        format!("{:.3}", prepare.as_secs_f64() * 1e3),
+        format!("{:.3}", solve.as_secs_f64() * 1e3),
+        x2(setup.as_secs_f64() / (setup + solve).as_secs_f64()),
+    ]);
+
+    let _ = table.write_csv(&out_dir().join("overhead_setup.csv"));
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_overhead_small_fraction() {
+        let t = run(&OverheadOpts::quick());
+        let rendered = t.render();
+        assert!(rendered.contains("qr"));
+        assert!(rendered.contains("barnes-hut"));
+    }
+}

@@ -1,0 +1,65 @@
+//! Graph-construction abstraction: the two applications (QR, Barnes-Hut)
+//! emit their task graphs through this trait, so the same generator can
+//! target the real [`Scheduler`] or the dependency-only baseline
+//! ([`crate::baselines::DepOnlyBuilder`]) for the Fig. 8/11 comparisons.
+
+use super::resource::ResId;
+use super::scheduler::{ResHandle, Scheduler, TaskHandle};
+use super::task::TaskFlags;
+
+pub trait GraphBuilder {
+    fn add_task(&mut self, type_id: u32, data: &[u8], cost: i64) -> TaskHandle;
+    fn add_resource(&mut self, parent: Option<ResHandle>, owner: i32) -> ResHandle;
+    fn add_lock(&mut self, t: TaskHandle, r: ResId);
+    fn add_use(&mut self, t: TaskHandle, r: ResId);
+    fn add_unlock(&mut self, ta: TaskHandle, tb: TaskHandle);
+    fn nr_queues(&self) -> usize;
+}
+
+impl GraphBuilder for Scheduler {
+    fn add_task(&mut self, type_id: u32, data: &[u8], cost: i64) -> TaskHandle {
+        Scheduler::add_task(self, type_id, TaskFlags::default(), data, cost)
+    }
+
+    fn add_resource(&mut self, parent: Option<ResHandle>, owner: i32) -> ResHandle {
+        Scheduler::add_resource(self, parent, owner)
+    }
+
+    fn add_lock(&mut self, t: TaskHandle, r: ResId) {
+        Scheduler::add_lock(self, t, r)
+    }
+
+    fn add_use(&mut self, t: TaskHandle, r: ResId) {
+        Scheduler::add_use(self, t, r)
+    }
+
+    fn add_unlock(&mut self, ta: TaskHandle, tb: TaskHandle) {
+        Scheduler::add_unlock(self, ta, tb)
+    }
+
+    fn nr_queues(&self) -> usize {
+        Scheduler::nr_queues(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SchedConfig;
+
+    #[test]
+    fn scheduler_implements_builder() {
+        let mut s = Scheduler::new(SchedConfig::new(2)).unwrap();
+        let b: &mut dyn GraphBuilder = &mut s;
+        let r = b.add_resource(None, 0);
+        let t0 = b.add_task(0, &[], 1);
+        let t1 = b.add_task(1, &[], 2);
+        b.add_lock(t0, r);
+        b.add_use(t1, r);
+        b.add_unlock(t0, t1);
+        assert_eq!(b.nr_queues(), 2);
+        s.prepare().unwrap();
+        assert_eq!(s.stats().tasks, 2);
+        assert_eq!(s.stats().dependencies, 1);
+    }
+}

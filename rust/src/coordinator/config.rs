@@ -1,0 +1,132 @@
+//! Scheduler configuration: the rust equivalent of the paper's
+//! `qsched_init(s, nr_queues, flags)` plus the knobs the validation
+//! section exercises (re-owning, pthread/yield modes, steal policy).
+
+/// How idle workers wait for new tasks (paper Appendix A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// OpenMP-like: spin until a task shows up (`qsched_flag_none`).
+    Spin,
+    /// pthread-like with condition variables: relinquish the CPU while no
+    /// task is available (`qsched_flag_yield`).
+    Yield,
+}
+
+/// Work-stealing victim-selection policy. `Random` is the paper's §3.4
+/// behaviour; `WeightAware` is the §5 "Work-stealing" future-work item,
+/// implemented here as an ablation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StealPolicy {
+    /// Probe other queues in a random order (paper default).
+    Random,
+    /// Probe queues in descending order of total queued weight (§5 ext.).
+    WeightAware,
+}
+
+/// How the heap key of a ready task is derived. `CriticalPath` is the
+/// paper's scheme (§3.1); `Fifo` mimics dependency-only runtimes that
+/// execute tasks roughly in creation order (the OmpSs-like baseline);
+/// `Cost` ranks by the task's own cost only (ablation: how much of the
+/// win comes from *path* weights rather than just "big tasks first").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KeyPolicy {
+    /// weight = cost + max(dependent weights) — the paper.
+    CriticalPath,
+    /// Earlier-created tasks first (key = -task id).
+    Fifo,
+    /// Task's own cost as the key.
+    Cost,
+}
+
+/// Flag set mirroring `qsched_flag_*`.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedFlags {
+    /// Re-own resources to the acquiring queue on steal (§3.4 `s->reown`).
+    pub reown: bool,
+    /// Idle-wait mode.
+    pub mode: ExecMode,
+    /// Steal policy (§5 ablation; `Random` reproduces the paper).
+    pub steal: StealPolicy,
+    /// §5 "Priorities" extension: penalize tasks whose locks conflict with
+    /// many queued tasks when picking from a queue. Off reproduces the paper.
+    pub lock_aware_priority: bool,
+    /// Replace user-estimated task costs with measured execution times on
+    /// re-runs (§3.1: "the actual cost of the same task last time it was
+    /// executed").
+    pub relearn_costs: bool,
+    /// Heap-key derivation (paper = `CriticalPath`).
+    pub key_policy: KeyPolicy,
+}
+
+impl Default for SchedFlags {
+    fn default() -> Self {
+        Self {
+            reown: true,
+            mode: ExecMode::Spin,
+            steal: StealPolicy::Random,
+            lock_aware_priority: false,
+            relearn_costs: false,
+            key_policy: KeyPolicy::CriticalPath,
+        }
+    }
+}
+
+/// Full scheduler configuration.
+#[derive(Clone, Debug)]
+pub struct SchedConfig {
+    /// Number of task queues; the paper uses one per computational thread.
+    pub nr_queues: usize,
+    pub flags: SchedFlags,
+    /// Seed for the random steal order (deterministic experiments).
+    pub seed: u64,
+    /// Capture per-task timeline records (Figs 9/12/13). Small overhead.
+    pub record_timeline: bool,
+}
+
+impl SchedConfig {
+    pub fn new(nr_queues: usize) -> Self {
+        Self {
+            nr_queues,
+            flags: SchedFlags::default(),
+            seed: 0x5EED_0F05,
+            record_timeline: false,
+        }
+    }
+
+    pub fn with_flags(mut self, flags: SchedFlags) -> Self {
+        self.flags = flags;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_timeline(mut self, on: bool) -> Self {
+        self.record_timeline = on;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = SchedConfig::new(4);
+        assert_eq!(c.nr_queues, 4);
+        assert!(c.flags.reown);
+        assert_eq!(c.flags.mode, ExecMode::Spin);
+        assert_eq!(c.flags.steal, StealPolicy::Random);
+        assert!(!c.flags.lock_aware_priority);
+    }
+
+    #[test]
+    fn builder_chains() {
+        let c = SchedConfig::new(2).with_seed(9).with_timeline(true);
+        assert_eq!(c.seed, 9);
+        assert!(c.record_timeline);
+    }
+}

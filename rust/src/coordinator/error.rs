@@ -1,0 +1,51 @@
+//! Scheduler error types.
+
+use thiserror::Error;
+
+/// Errors surfaced while building or running a task graph.
+#[derive(Debug, Error)]
+pub enum SchedError {
+    /// A dependency cycle was found during weight computation (§3.1 computes
+    /// weights in reverse topological order, which requires a DAG).
+    #[error("dependency cycle detected involving {ntasks} task(s); first task in cycle: {example}")]
+    Cycle { ntasks: usize, example: u32 },
+
+    /// A task handle did not belong to this scheduler.
+    #[error("task handle {0} out of range ({1} tasks)")]
+    BadTask(u32, usize),
+
+    /// A resource handle did not belong to this scheduler.
+    #[error("resource handle {0} out of range ({1} resources)")]
+    BadRes(u32, usize),
+
+    /// A self-dependency (task unlocking itself) was requested.
+    #[error("task {0} cannot depend on itself")]
+    SelfDependency(u32),
+
+    /// The scheduler was run before `prepare()` / after a failed build.
+    #[error("scheduler not prepared: {0}")]
+    NotPrepared(&'static str),
+
+    /// No queues configured.
+    #[error("scheduler needs at least one queue (got {0})")]
+    NoQueues(usize),
+
+    /// A worker panicked while executing a task.
+    #[error("worker thread panicked while executing tasks")]
+    WorkerPanic,
+}
+
+pub type Result<T> = std::result::Result<T, SchedError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn errors_render() {
+        let e = SchedError::Cycle { ntasks: 3, example: 7 };
+        assert!(e.to_string().contains("cycle"));
+        assert!(SchedError::BadTask(9, 2).to_string().contains('9'));
+        assert!(SchedError::SelfDependency(1).to_string().contains("itself"));
+    }
+}

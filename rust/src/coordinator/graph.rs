@@ -1,0 +1,173 @@
+//! Task-graph statistics and structural validation.
+//!
+//! The paper reports, for each experiment, the number of tasks,
+//! dependencies, resources, locks, and uses (§4.1: "a total of 11 440
+//! tasks with 21 824 dependencies, as well as 1 024 resources with 21 856
+//! locks and 11 408 uses"). [`GraphStats`] regenerates those text tables,
+//! and [`validate`] performs the structural checks `prepare()` relies on.
+
+use std::collections::HashSet;
+
+use super::error::{Result, SchedError};
+use super::resource::ResTable;
+use super::task::Task;
+
+/// Counts matching the paper's per-experiment graph summaries.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GraphStats {
+    pub tasks: usize,
+    pub dependencies: usize,
+    pub resources: usize,
+    pub locks: usize,
+    pub uses: usize,
+    /// Tasks with no dependencies (initially runnable).
+    pub roots: usize,
+    /// Tasks unlocking nothing (sinks).
+    pub sinks: usize,
+    /// Bytes of task payload data.
+    pub payload_bytes: usize,
+}
+
+impl GraphStats {
+    pub fn of(tasks: &[Task], res: &ResTable) -> Self {
+        let mut s = Self {
+            tasks: tasks.len(),
+            resources: res.len(),
+            ..Self::default()
+        };
+        let mut wait = vec![0u32; tasks.len()];
+        for t in tasks {
+            s.dependencies += t.unlocks.len();
+            s.locks += t.locks.len();
+            s.uses += t.uses.len();
+            s.payload_bytes += t.data.len();
+            for u in &t.unlocks {
+                wait[u.idx()] += 1;
+            }
+        }
+        s.roots = wait.iter().filter(|&&w| w == 0).count();
+        s.sinks = tasks.iter().filter(|t| t.unlocks.is_empty()).count();
+        s
+    }
+
+    /// Approximate memory footprint of the task graph in bytes, for the
+    /// §4.2 "storing the tasks, resources, and dependencies required XXX
+    /// MB" style reporting.
+    pub fn memory_bytes(&self) -> usize {
+        self.tasks * std::mem::size_of::<Task>()
+            + (self.dependencies + self.locks + self.uses) * 8
+            + self.payload_bytes
+            + self.resources * 24
+    }
+}
+
+impl std::fmt::Display for GraphStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} tasks with {} dependencies, {} resources with {} locks and {} uses \
+             ({} roots, {} sinks, {:.2} MB graph)",
+            self.tasks,
+            self.dependencies,
+            self.resources,
+            self.locks,
+            self.uses,
+            self.roots,
+            self.sinks,
+            self.memory_bytes() as f64 / 1e6
+        )
+    }
+}
+
+/// Structural validation performed by `Scheduler::prepare`:
+/// * every unlock/lock/use handle is in range,
+/// * no task unlocks itself,
+/// * duplicate unlock edges are reported (they would double-decrement the
+///   wait counter: legal in the paper's C code but almost always a bug).
+pub fn validate(tasks: &[Task], res: &ResTable) -> Result<()> {
+    let nt = tasks.len();
+    let nr = res.len();
+    for (i, t) in tasks.iter().enumerate() {
+        let mut seen: HashSet<u32> = HashSet::with_capacity(t.unlocks.len());
+        for u in &t.unlocks {
+            if u.idx() >= nt {
+                return Err(SchedError::BadTask(u.0, nt));
+            }
+            if u.idx() == i {
+                return Err(SchedError::SelfDependency(i as u32));
+            }
+            seen.insert(u.0);
+        }
+        for r in t.locks.iter().chain(t.uses.iter()) {
+            if r.idx() >= nr {
+                return Err(SchedError::BadRes(r.0, nr));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::resource::OWNER_NONE;
+    use crate::coordinator::task::{payload, TaskFlags, TaskId};
+
+    #[test]
+    fn stats_counts() {
+        let mut res = ResTable::new();
+        let r0 = res.add(None, OWNER_NONE);
+        let r1 = res.add(Some(r0), OWNER_NONE);
+        let mut tasks = vec![
+            Task::new(0, TaskFlags::default(), payload::from_i32s(&[1, 2]), 1),
+            Task::new(1, TaskFlags::default(), vec![], 2),
+            Task::new(2, TaskFlags::default(), vec![], 3),
+        ];
+        tasks[0].unlocks.push(TaskId(1));
+        tasks[0].unlocks.push(TaskId(2));
+        tasks[1].unlocks.push(TaskId(2));
+        tasks[0].locks.push(r0);
+        tasks[1].locks.push(r1);
+        tasks[1].uses.push(r0);
+        let s = GraphStats::of(&tasks, &res);
+        assert_eq!(s.tasks, 3);
+        assert_eq!(s.dependencies, 3);
+        assert_eq!(s.resources, 2);
+        assert_eq!(s.locks, 2);
+        assert_eq!(s.uses, 1);
+        assert_eq!(s.roots, 1);
+        assert_eq!(s.sinks, 1);
+        assert_eq!(s.payload_bytes, 8);
+        assert!(s.memory_bytes() > 0);
+        assert!(s.to_string().contains("3 tasks"));
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_unlock() {
+        let res = ResTable::new();
+        let mut tasks = vec![Task::new(0, TaskFlags::default(), vec![], 1)];
+        tasks[0].unlocks.push(TaskId(5));
+        assert!(matches!(validate(&tasks, &res), Err(SchedError::BadTask(5, 1))));
+    }
+
+    #[test]
+    fn validate_rejects_self_dep() {
+        let res = ResTable::new();
+        let mut tasks = vec![Task::new(0, TaskFlags::default(), vec![], 1)];
+        tasks[0].unlocks.push(TaskId(0));
+        assert!(matches!(validate(&tasks, &res), Err(SchedError::SelfDependency(0))));
+    }
+
+    #[test]
+    fn validate_rejects_bad_resource() {
+        let res = ResTable::new();
+        let mut tasks = vec![Task::new(0, TaskFlags::default(), vec![], 1)];
+        tasks[0].locks.push(crate::coordinator::resource::ResId(0));
+        assert!(matches!(validate(&tasks, &res), Err(SchedError::BadRes(0, 0))));
+    }
+
+    #[test]
+    fn validate_ok_on_empty() {
+        assert!(validate(&[], &ResTable::new()).is_ok());
+    }
+}

@@ -1,0 +1,262 @@
+//! Execution metrics: per-task timeline records and aggregated accounting.
+//!
+//! Figures 9 and 12 of the paper are Gantt-style plots of (core, start,
+//! end, task type); Figure 13 is accumulated cost per task type plus the
+//! scheduler overhead (`qsched_gettask` time). Both are derived from
+//! [`TimelineRecord`]s collected per worker (lock-free: each worker owns
+//! its buffer) and merged after the run.
+
+use super::task::TaskId;
+
+/// One executed task on the timeline. Times are in nanoseconds from the
+/// start of `run` — real time for the threaded executor, virtual time for
+/// the simulator.
+#[derive(Clone, Copy, Debug)]
+pub struct TimelineRecord {
+    pub tid: TaskId,
+    pub type_id: u32,
+    pub worker: u32,
+    pub start_ns: u64,
+    pub end_ns: u64,
+    /// Time spent inside `gettask` before this task was acquired
+    /// (scheduler overhead attributable to this task).
+    pub get_ns: u64,
+    /// Whether the task was stolen from a non-preferred queue.
+    pub stolen: bool,
+}
+
+impl TimelineRecord {
+    #[inline]
+    pub fn duration_ns(&self) -> u64 {
+        self.end_ns - self.start_ns
+    }
+}
+
+/// Metrics for one completed run.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    /// Wall-clock (or virtual) duration of the whole run, ns.
+    pub elapsed_ns: u64,
+    /// Number of workers/cores.
+    pub workers: usize,
+    /// All timeline records, sorted by start time (empty unless
+    /// `record_timeline` was enabled).
+    pub timeline: Vec<TimelineRecord>,
+    /// Tasks executed.
+    pub tasks_run: usize,
+    /// Tasks acquired via work stealing.
+    pub tasks_stolen: usize,
+    /// Total ns spent inside `gettask` across all workers (overhead).
+    pub gettask_ns: u64,
+    /// Total ns workers sat idle waiting for work (starvation, not
+    /// scheduler overhead; only the virtual-time executor separates it —
+    /// the threaded executor folds idle spinning into `gettask_ns`).
+    pub idle_ns: u64,
+    /// Total ns spent executing task functions across all workers.
+    pub exec_ns: u64,
+}
+
+impl RunMetrics {
+    /// Accumulated execution time per task type, ns — the Fig. 13 series.
+    pub fn cost_by_type(&self) -> Vec<(u32, u64)> {
+        let mut acc: std::collections::BTreeMap<u32, u64> = Default::default();
+        for r in &self.timeline {
+            *acc.entry(r.type_id).or_insert(0) += r.duration_ns();
+        }
+        acc.into_iter().collect()
+    }
+
+    /// Scheduler overhead fraction: gettask time / (gettask + exec).
+    /// The paper's Fig. 13 claim is ~1% at 64 cores.
+    pub fn overhead_fraction(&self) -> f64 {
+        let denom = (self.gettask_ns + self.exec_ns) as f64;
+        if denom == 0.0 {
+            0.0
+        } else {
+            self.gettask_ns as f64 / denom
+        }
+    }
+
+    /// Parallel efficiency relative to a given single-core time:
+    /// `t1 / (n * tn)` — the right-hand panels of Figs 8 and 11.
+    pub fn parallel_efficiency(&self, t1_ns: u64) -> f64 {
+        if self.elapsed_ns == 0 || self.workers == 0 {
+            return 0.0;
+        }
+        t1_ns as f64 / (self.workers as f64 * self.elapsed_ns as f64)
+    }
+
+    /// Utilization: fraction of worker-time spent executing tasks.
+    pub fn utilization(&self) -> f64 {
+        if self.elapsed_ns == 0 || self.workers == 0 {
+            return 0.0;
+        }
+        self.exec_ns as f64 / (self.elapsed_ns as f64 * self.workers as f64)
+    }
+
+    /// Write the timeline as CSV: `worker,start_ns,end_ns,type,tid,stolen`.
+    /// The plot scripts under `python/` consume this to draw Figs 9/12.
+    pub fn write_timeline_csv<W: std::io::Write>(&self, mut w: W) -> std::io::Result<()> {
+        writeln!(w, "worker,start_ns,end_ns,type,tid,stolen")?;
+        for r in &self.timeline {
+            writeln!(
+                w,
+                "{},{},{},{},{},{}",
+                r.worker, r.start_ns, r.end_ns, r.type_id, r.tid.0, r.stolen as u8
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Verify that no two records on the same worker overlap and that no
+    /// two records anywhere overlap while locking a common resource — the
+    /// conflict-correctness oracle used by the property tests.
+    pub fn check_no_worker_overlap(&self) -> bool {
+        let mut by_worker: std::collections::BTreeMap<u32, Vec<(u64, u64)>> = Default::default();
+        for r in &self.timeline {
+            by_worker.entry(r.worker).or_default().push((r.start_ns, r.end_ns));
+        }
+        for (_, mut iv) in by_worker {
+            iv.sort_unstable();
+            for pair in iv.windows(2) {
+                if pair[1].0 < pair[0].1 {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Per-worker collector. Owned exclusively by one worker during the run.
+#[derive(Debug, Default)]
+pub struct WorkerMetrics {
+    pub records: Vec<TimelineRecord>,
+    pub tasks_run: usize,
+    pub tasks_stolen: usize,
+    pub gettask_ns: u64,
+    pub idle_ns: u64,
+    pub exec_ns: u64,
+}
+
+impl WorkerMetrics {
+    pub fn with_capacity(n: usize) -> Self {
+        Self { records: Vec::with_capacity(n), ..Self::default() }
+    }
+}
+
+/// Merge per-worker collections into one [`RunMetrics`].
+pub fn merge(
+    workers: Vec<WorkerMetrics>,
+    elapsed_ns: u64,
+    record_timeline: bool,
+) -> RunMetrics {
+    let mut m = RunMetrics {
+        elapsed_ns,
+        workers: workers.len(),
+        ..Default::default()
+    };
+    for w in workers {
+        m.tasks_run += w.tasks_run;
+        m.tasks_stolen += w.tasks_stolen;
+        m.gettask_ns += w.gettask_ns;
+        m.idle_ns += w.idle_ns;
+        m.exec_ns += w.exec_ns;
+        if record_timeline {
+            m.timeline.extend(w.records);
+        }
+    }
+    m.timeline.sort_unstable_by_key(|r| (r.start_ns, r.worker));
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(worker: u32, s: u64, e: u64, ty: u32) -> TimelineRecord {
+        TimelineRecord {
+            tid: TaskId(0),
+            type_id: ty,
+            worker,
+            start_ns: s,
+            end_ns: e,
+            get_ns: 0,
+            stolen: false,
+        }
+    }
+
+    #[test]
+    fn cost_by_type_accumulates() {
+        let m = RunMetrics {
+            timeline: vec![rec(0, 0, 10, 1), rec(0, 10, 30, 2), rec(1, 0, 5, 1)],
+            ..Default::default()
+        };
+        assert_eq!(m.cost_by_type(), vec![(1, 15), (2, 20)]);
+    }
+
+    #[test]
+    fn overhead_fraction_bounds() {
+        let m = RunMetrics { gettask_ns: 1, exec_ns: 99, ..Default::default() };
+        assert!((m.overhead_fraction() - 0.01).abs() < 1e-12);
+        let z = RunMetrics::default();
+        assert_eq!(z.overhead_fraction(), 0.0);
+    }
+
+    #[test]
+    fn efficiency_perfect_scaling() {
+        let m = RunMetrics { elapsed_ns: 250, workers: 4, ..Default::default() };
+        assert!((m.parallel_efficiency(1000) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn worker_overlap_detected() {
+        let good = RunMetrics {
+            timeline: vec![rec(0, 0, 10, 0), rec(0, 10, 20, 0), rec(1, 5, 15, 0)],
+            ..Default::default()
+        };
+        assert!(good.check_no_worker_overlap());
+        let bad = RunMetrics {
+            timeline: vec![rec(0, 0, 10, 0), rec(0, 9, 20, 0)],
+            ..Default::default()
+        };
+        assert!(!bad.check_no_worker_overlap());
+    }
+
+    #[test]
+    fn merge_aggregates_and_sorts() {
+        let w0 = WorkerMetrics {
+            records: vec![rec(0, 10, 20, 0)],
+            tasks_run: 1,
+            tasks_stolen: 0,
+            gettask_ns: 5,
+            idle_ns: 1,
+            exec_ns: 10,
+        };
+        let w1 = WorkerMetrics {
+            records: vec![rec(1, 0, 10, 0)],
+            tasks_run: 1,
+            tasks_stolen: 1,
+            gettask_ns: 7,
+            idle_ns: 2,
+            exec_ns: 10,
+        };
+        let m = merge(vec![w0, w1], 20, true);
+        assert_eq!(m.tasks_run, 2);
+        assert_eq!(m.tasks_stolen, 1);
+        assert_eq!(m.gettask_ns, 12);
+        assert_eq!(m.idle_ns, 3);
+        assert_eq!(m.timeline[0].worker, 1, "sorted by start time");
+        assert!((m.utilization() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let m = RunMetrics { timeline: vec![rec(0, 0, 10, 3)], ..Default::default() };
+        let mut buf = Vec::new();
+        m.write_timeline_csv(&mut buf).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.starts_with("worker,start_ns"));
+        assert!(s.contains("0,0,10,3,0,0"));
+    }
+}

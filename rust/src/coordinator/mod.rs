@@ -1,0 +1,29 @@
+//! The QuickSched scheduler: the paper's L3 coordination contribution.
+//!
+//! See DESIGN.md for the system inventory. Modules follow the paper's
+//! object decomposition (§3): [`task`], [`resource`], [`queue`],
+//! [`scheduler`]; plus the two executors ([`exec`] real threads,
+//! [`sim`] virtual time), weight computation ([`weights`]), graph
+//! statistics ([`graph`]) and run metrics ([`metrics`]).
+pub mod builder;
+pub mod config;
+pub mod error;
+pub mod exec;
+pub mod graph;
+pub mod metrics;
+pub mod queue;
+pub mod resource;
+pub mod scheduler;
+pub mod sim;
+pub mod task;
+pub mod weights;
+
+pub use builder::GraphBuilder;
+pub use config::{ExecMode, KeyPolicy, SchedConfig, SchedFlags, StealPolicy};
+pub use error::{Result, SchedError};
+pub use graph::GraphStats;
+pub use metrics::{RunMetrics, TimelineRecord};
+pub use resource::{ResId, Resource, OWNER_NONE};
+pub use scheduler::{ResHandle, Scheduler, TaskHandle};
+pub use sim::{ContentionCost, CostModel, ScaledCost, SimCtx, UnitCost};
+pub use task::{payload, Task, TaskFlags, TaskId, TaskState, TaskView};

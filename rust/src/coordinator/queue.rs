@@ -1,0 +1,463 @@
+//! Task queues (paper §3.3).
+//!
+//! Each queue stores ready tasks in a spin-locked array organized as a
+//! binary max-heap on the task's scheduling key (the critical-path weight
+//! by default). `get` traverses the heap array *as if sorted* — the first
+//! entry is the true maximum, the rest only loosely ordered — and returns
+//! the first task whose resources can all be locked. The paper argues (and
+//! §4 confirms) this loose order is sufficient in practice, while keeping
+//! insertion and removal at O(log n).
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use super::resource::{ResId, ResTable};
+use super::task::{Task, TaskId};
+
+/// One heap entry: scheduling key + task id. Keys are compared first; ties
+/// broken by task id for determinism.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Entry {
+    pub key: i64,
+    pub tid: TaskId,
+}
+
+impl Entry {
+    #[inline]
+    fn ge(&self, other: &Entry) -> bool {
+        (self.key, other.tid.0) >= (other.key, self.tid.0)
+    }
+}
+
+/// Contention / scan statistics, used by the Fig. 13 overhead accounting.
+#[derive(Debug, Default)]
+pub struct QueueStats {
+    /// Successful `get` calls.
+    pub gets: AtomicU64,
+    /// `get` calls that returned nothing (empty or all-conflicted).
+    pub misses: AtomicU64,
+    /// Tasks scanned across all `get` calls.
+    pub scanned: AtomicU64,
+    /// Resource lock attempts that failed during scans.
+    pub lock_failures: AtomicU64,
+    /// Spins while acquiring the queue mutex.
+    pub mutex_spins: AtomicU64,
+}
+
+impl QueueStats {
+    pub fn snapshot(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            self.gets.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+            self.scanned.load(Ordering::Relaxed),
+            self.lock_failures.load(Ordering::Relaxed),
+            self.mutex_spins.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// A spin-locked max-heap task queue (paper §3.3 `struct queue`).
+///
+/// The paper deliberately protects the whole queue with a single lock:
+/// with one queue per thread, contention arises only from work stealing,
+/// which is rare (validated in §4 and by `benches/micro_scheduler.rs`).
+pub struct Queue {
+    /// 0 = free, 1 = locked.
+    lock: AtomicUsize,
+    /// Heap storage; guarded by `lock`.
+    heap: UnsafeCell<Vec<Entry>>,
+    /// Sum of keys currently queued (for weight-aware stealing, §5 ext).
+    total_key: AtomicU64,
+    pub stats: QueueStats,
+}
+
+// SAFETY: `heap` is only touched while `lock` is held (acquire/release CAS).
+unsafe impl Sync for Queue {}
+unsafe impl Send for Queue {}
+
+impl Queue {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            lock: AtomicUsize::new(0),
+            heap: UnsafeCell::new(Vec::with_capacity(capacity)),
+            total_key: AtomicU64::new(0),
+            stats: QueueStats::default(),
+        }
+    }
+
+    #[inline]
+    fn acquire(&self) {
+        let mut spins = 0u64;
+        while self
+            .lock
+            .compare_exchange_weak(0, 1, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            spins += 1;
+            std::hint::spin_loop();
+        }
+        if spins > 0 {
+            self.stats.mutex_spins.fetch_add(spins, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    fn release(&self) {
+        self.lock.store(0, Ordering::Release);
+    }
+
+    /// Number of queued tasks (racy snapshot).
+    pub fn len(&self) -> usize {
+        self.acquire();
+        let n = unsafe { (*self.heap.get()).len() };
+        self.release();
+        n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Sum of queued keys (racy snapshot; used by weight-aware stealing).
+    #[inline]
+    pub fn total_key(&self) -> u64 {
+        self.total_key.load(Ordering::Relaxed)
+    }
+
+    /// `queue_put` (§3.3): append + bubble-up under the queue lock.
+    pub fn put(&self, key: i64, tid: TaskId) {
+        self.acquire();
+        let heap = unsafe { &mut *self.heap.get() };
+        heap.push(Entry { key, tid });
+        let last = heap.len() - 1;
+        sift_up(heap, last);
+        self.release();
+        self.total_key.fetch_add(key.max(0) as u64, Ordering::Relaxed);
+    }
+
+    /// `queue_get` (§3.3): scan the heap array in index order, try to lock
+    /// every resource of each candidate (already sorted by id at prepare
+    /// time to dodge the dining-philosophers deadlock); the first fully
+    /// lockable task is removed from the heap and returned *with its locks
+    /// held*. Returns `None` if the queue is empty or everything conflicts.
+    pub fn get(&self, tasks: &[Task], res: &ResTable) -> Option<TaskId> {
+        self.acquire();
+        let heap = unsafe { &mut *self.heap.get() };
+        let mut found: Option<usize> = None;
+        let mut scanned = 0u64;
+        let mut lock_failures = 0u64;
+        // Resources that already failed a try_lock during *this* scan.
+        // A resource locked by someone else stays locked for the whole
+        // scan (only `complete` unlocks, and that cannot release a lock
+        // we watched fail and then matter again within this pass), so
+        // skipping repeat offenders turns the pathological
+        // "many queued tasks contending one resource" scan from
+        // O(n · CAS) into O(n) reads. (§Perf opt A; see EXPERIMENTS.md.)
+        let mut failed = [ResId(u32::MAX); 8];
+        let mut n_failed = 0usize;
+        'scan: for k in 0..heap.len() {
+            scanned += 1;
+            let t = &tasks[heap[k].tid.idx()];
+            if n_failed > 0
+                && t.locks.iter().any(|r| failed[..n_failed].contains(r))
+            {
+                continue 'scan;
+            }
+            for (j, &rid) in t.locks.iter().enumerate() {
+                if !res.try_lock(rid) {
+                    lock_failures += 1;
+                    if n_failed < failed.len() {
+                        failed[n_failed] = rid;
+                        n_failed += 1;
+                    }
+                    // Roll back the prefix of locks we did get.
+                    for &r_prev in &t.locks[..j] {
+                        res.unlock(r_prev);
+                    }
+                    continue 'scan;
+                }
+            }
+            found = Some(k);
+            break;
+        }
+        let out = found.map(|k| {
+            let entry = heap[k];
+            let last = heap.pop().unwrap();
+            if k < heap.len() {
+                heap[k] = last;
+                // Replacing an arbitrary element can violate heap order in
+                // either direction; restore both ways.
+                let k2 = sift_up(heap, k);
+                sift_down(heap, k2);
+            }
+            self.total_key
+                .fetch_sub(entry.key.max(0) as u64, Ordering::Relaxed);
+            entry.tid
+        });
+        self.release();
+        self.stats.scanned.fetch_add(scanned, Ordering::Relaxed);
+        self.stats
+            .lock_failures
+            .fetch_add(lock_failures, Ordering::Relaxed);
+        match out {
+            Some(_) => self.stats.gets.fetch_add(1, Ordering::Relaxed),
+            None => self.stats.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        out
+    }
+
+    /// Pop the maximum entry unconditionally (no resource locking). Used by
+    /// the dependency-only baseline and by tests.
+    pub fn pop_max(&self) -> Option<Entry> {
+        self.acquire();
+        let heap = unsafe { &mut *self.heap.get() };
+        let out = if heap.is_empty() {
+            None
+        } else {
+            let top = heap[0];
+            let last = heap.pop().unwrap();
+            if !heap.is_empty() {
+                heap[0] = last;
+                sift_down(heap, 0);
+            }
+            self.total_key
+                .fetch_sub(top.key.max(0) as u64, Ordering::Relaxed);
+            Some(top)
+        };
+        self.release();
+        out
+    }
+
+    /// Snapshot of queued entries in heap-array order (diagnostics/tests).
+    pub fn snapshot(&self) -> Vec<Entry> {
+        self.acquire();
+        let v = unsafe { (*self.heap.get()).clone() };
+        self.release();
+        v
+    }
+
+    /// Clear all entries (scheduler reset).
+    pub fn clear(&self) {
+        self.acquire();
+        unsafe { (*self.heap.get()).clear() };
+        self.release();
+        self.total_key.store(0, Ordering::Relaxed);
+    }
+
+    /// Verify the max-heap invariant (tests only).
+    pub fn check_heap(&self) -> bool {
+        let v = self.snapshot();
+        (1..v.len()).all(|k| v[(k - 1) / 2].ge(&v[k]))
+    }
+}
+
+#[inline]
+fn sift_up(heap: &mut [Entry], mut k: usize) -> usize {
+    while k > 0 {
+        let parent = (k - 1) / 2;
+        if heap[k].ge(&heap[parent]) && heap[k] != heap[parent] {
+            heap.swap(k, parent);
+            k = parent;
+        } else {
+            break;
+        }
+    }
+    k
+}
+
+#[inline]
+fn sift_down(heap: &mut [Entry], mut k: usize) {
+    let n = heap.len();
+    loop {
+        let l = 2 * k + 1;
+        let r = 2 * k + 2;
+        let mut m = k;
+        if l < n && heap[l].ge(&heap[m]) && heap[l] != heap[m] {
+            m = l;
+        }
+        if r < n && heap[r].ge(&heap[m]) && heap[r] != heap[m] {
+            m = r;
+        }
+        if m == k {
+            break;
+        }
+        heap.swap(k, m);
+        k = m;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::resource::OWNER_NONE;
+    use crate::coordinator::task::TaskFlags;
+
+    fn mk_tasks(n: usize) -> Vec<Task> {
+        (0..n)
+            .map(|i| Task::new(i as u32, TaskFlags::default(), vec![], 1))
+            .collect()
+    }
+
+    #[test]
+    fn put_preserves_heap() {
+        let q = Queue::new(8);
+        for (i, key) in [5i64, 1, 9, 3, 9, 2, 8].iter().enumerate() {
+            q.put(*key, TaskId(i as u32));
+            assert!(q.check_heap(), "heap broken after put {i}");
+        }
+        assert_eq!(q.len(), 7);
+    }
+
+    #[test]
+    fn pop_max_is_descending() {
+        let q = Queue::new(8);
+        let keys = [3i64, 11, 7, 2, 19, 5];
+        for (i, k) in keys.iter().enumerate() {
+            q.put(*k, TaskId(i as u32));
+        }
+        let mut out = Vec::new();
+        while let Some(e) = q.pop_max() {
+            out.push(e.key);
+        }
+        let mut sorted = keys.to_vec();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(out, sorted);
+    }
+
+    #[test]
+    fn get_returns_max_when_unconflicted() {
+        let tasks = mk_tasks(3);
+        let res = ResTable::new();
+        let q = Queue::new(4);
+        q.put(10, TaskId(0));
+        q.put(30, TaskId(1));
+        q.put(20, TaskId(2));
+        assert_eq!(q.get(&tasks, &res), Some(TaskId(1)));
+        assert_eq!(q.get(&tasks, &res), Some(TaskId(2)));
+        assert_eq!(q.get(&tasks, &res), Some(TaskId(0)));
+        assert_eq!(q.get(&tasks, &res), None);
+    }
+
+    #[test]
+    fn get_skips_conflicted_tasks() {
+        let mut res = ResTable::new();
+        let shared = res.add(None, OWNER_NONE);
+        let free = res.add(None, OWNER_NONE);
+        let mut tasks = mk_tasks(2);
+        tasks[0].locks.push(shared); // heavier task, conflicted
+        tasks[1].locks.push(free);
+        let q = Queue::new(4);
+        q.put(100, TaskId(0));
+        q.put(1, TaskId(1));
+        // Pre-lock the shared resource: task 0 must be skipped.
+        assert!(res.try_lock(shared));
+        assert_eq!(q.get(&tasks, &res), Some(TaskId(1)));
+        assert!(res.get(free).is_locked(), "returned task keeps its locks");
+        res.unlock(free);
+        // Task 0 still queued and blocked.
+        assert_eq!(q.get(&tasks, &res), None);
+        assert_eq!(q.len(), 1);
+        res.unlock(shared);
+        assert_eq!(q.get(&tasks, &res), Some(TaskId(0)));
+        res.unlock(shared);
+        assert!(res.all_quiescent());
+    }
+
+    #[test]
+    fn get_rolls_back_partial_locks() {
+        let mut res = ResTable::new();
+        let a = res.add(None, OWNER_NONE);
+        let b = res.add(None, OWNER_NONE);
+        let mut tasks = mk_tasks(1);
+        tasks[0].locks.extend([a, b]);
+        let q = Queue::new(2);
+        q.put(1, TaskId(0));
+        assert!(res.try_lock(b)); // second lock will fail
+        assert_eq!(q.get(&tasks, &res), None);
+        assert!(!res.get(a).is_locked(), "partial lock on `a` leaked");
+        res.unlock(b);
+        assert_eq!(q.get(&tasks, &res), Some(TaskId(0)));
+        res.unlock(a);
+        res.unlock(b);
+        assert!(res.all_quiescent());
+    }
+
+    #[test]
+    fn total_key_tracks_contents() {
+        let tasks = mk_tasks(2);
+        let res = ResTable::new();
+        let q = Queue::new(2);
+        q.put(5, TaskId(0));
+        q.put(7, TaskId(1));
+        assert_eq!(q.total_key(), 12);
+        q.get(&tasks, &res);
+        assert_eq!(q.total_key(), 5);
+        q.clear();
+        assert_eq!(q.total_key(), 0);
+    }
+
+    #[test]
+    fn stats_count_misses() {
+        let tasks = mk_tasks(1);
+        let res = ResTable::new();
+        let q = Queue::new(1);
+        assert_eq!(q.get(&tasks, &res), None);
+        let (gets, misses, ..) = q.stats.snapshot();
+        assert_eq!((gets, misses), (0, 1));
+    }
+
+    #[test]
+    fn concurrent_put_get_loses_nothing() {
+        use std::sync::atomic::AtomicU64;
+        use std::sync::Arc;
+        let n = 4000usize;
+        let tasks: Arc<Vec<Task>> = Arc::new(mk_tasks(n));
+        let res = Arc::new(ResTable::new());
+        let q = Arc::new(Queue::new(n));
+        let got = Arc::new(AtomicU64::new(0));
+        let producers: Vec<_> = (0..2)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in (p..n).step_by(2) {
+                        q.put(i as i64, TaskId(i as u32));
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                let tasks = Arc::clone(&tasks);
+                let res = Arc::clone(&res);
+                let got = Arc::clone(&got);
+                std::thread::spawn(move || {
+                    let mut local = 0u64;
+                    let mut idle = 0;
+                    while idle < 10_000 {
+                        match q.get(&tasks, &res) {
+                            Some(_) => {
+                                local += 1;
+                                idle = 0;
+                            }
+                            None => {
+                                idle += 1;
+                                // Let the producers run (single-core CI).
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                    got.fetch_add(local, Ordering::Relaxed);
+                })
+            })
+            .collect();
+        for h in producers {
+            h.join().unwrap();
+        }
+        for h in consumers {
+            h.join().unwrap();
+        }
+        assert_eq!(got.load(Ordering::Relaxed), n as u64);
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,385 @@
+//! Hierarchical resources and the lock/hold protocol (paper §3.2).
+//!
+//! A resource is *locked* when a task holds it exclusively, and *held* when
+//! any hierarchical descendant is locked. Locking a resource requires the
+//! resource itself to be unlocked and un-held, and transitively marks every
+//! ancestor as held — so a lock on a child cell excludes a lock on any
+//! ancestor and vice versa, which is exactly the conflict semantics the
+//! Barnes-Hut example relies on.
+//!
+//! The implementation follows the paper's CAS pseudo-code, including the
+//! subtle double-check of `hold` after acquiring the short `lock` in
+//! `try_lock`, and the rollback of partially acquired ancestor holds.
+
+use std::sync::atomic::{AtomicI32, AtomicU32, Ordering};
+
+/// Handle to a resource within one scheduler (dense index).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ResId(pub u32);
+
+impl ResId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for ResId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "r{}", self.0)
+    }
+}
+
+/// Sentinel for "no owner queue" (`qsched_owner_none`).
+pub const OWNER_NONE: i32 = -1;
+
+/// A single exclusively-lockable hierarchical resource
+/// (paper §3.2 `struct resource`).
+#[derive(Debug)]
+pub struct Resource {
+    /// Hierarchical parent, or `None` for a root resource.
+    pub parent: Option<ResId>,
+    /// 0 = free, 1 = locked. CAS-only access.
+    lock: AtomicU32,
+    /// Number of locked descendants ("held" counter).
+    hold: AtomicU32,
+    /// Queue that last used this resource (cache-affinity hint, §3.4).
+    owner: AtomicI32,
+}
+
+impl Resource {
+    pub fn new(parent: Option<ResId>, owner: i32) -> Self {
+        Self {
+            parent,
+            lock: AtomicU32::new(0),
+            hold: AtomicU32::new(0),
+            owner: AtomicI32::new(owner),
+        }
+    }
+
+    #[inline]
+    pub fn owner(&self) -> i32 {
+        self.owner.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn set_owner(&self, qid: i32) {
+        self.owner.store(qid, Ordering::Relaxed);
+    }
+
+    /// Is this resource currently locked? (diagnostic only — racy by nature)
+    #[inline]
+    pub fn is_locked(&self) -> bool {
+        self.lock.load(Ordering::Acquire) == 1
+    }
+
+    /// Current hold count (diagnostic only).
+    #[inline]
+    pub fn hold_count(&self) -> u32 {
+        self.hold.load(Ordering::Acquire)
+    }
+
+    #[inline]
+    fn try_acquire_flag(&self) -> bool {
+        self.lock
+            .compare_exchange(0, 1, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    #[inline]
+    fn release_flag(&self) {
+        self.lock.store(0, Ordering::Release);
+    }
+}
+
+/// The resource table: flat arena of resources plus the hierarchical
+/// lock/hold operations, which need access to parents by id.
+#[derive(Debug, Default)]
+pub struct ResTable {
+    res: Vec<Resource>,
+}
+
+impl ResTable {
+    pub fn new() -> Self {
+        Self { res: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.res.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.res.is_empty()
+    }
+
+    pub fn add(&mut self, parent: Option<ResId>, owner: i32) -> ResId {
+        if let Some(p) = parent {
+            assert!(p.idx() < self.res.len(), "parent resource out of range");
+        }
+        let id = ResId(self.res.len() as u32);
+        self.res.push(Resource::new(parent, owner));
+        id
+    }
+
+    #[inline]
+    pub fn get(&self, id: ResId) -> &Resource {
+        &self.res[id.idx()]
+    }
+
+    /// `resource_hold` (§3.2): transiently grab the short lock, bump the
+    /// hold counter, release. Fails if the resource is currently locked.
+    pub fn try_hold(&self, id: ResId) -> bool {
+        let r = self.get(id);
+        if !r.try_acquire_flag() {
+            return false;
+        }
+        r.hold.fetch_add(1, Ordering::AcqRel);
+        r.release_flag();
+        true
+    }
+
+    /// Undo one `try_hold`.
+    pub fn unhold(&self, id: ResId) {
+        let r = self.get(id);
+        let prev = r.hold.fetch_sub(1, Ordering::AcqRel);
+        debug_assert!(prev > 0, "unhold on hold==0");
+    }
+
+    /// `resource_lock` (§3.2): exclusively lock `id` and mark every ancestor
+    /// held. Returns `false` (with full rollback) if the resource is locked,
+    /// held, or any ancestor cannot be held.
+    pub fn try_lock(&self, id: ResId) -> bool {
+        let r = self.get(id);
+        // Quick rejection + short lock acquisition.
+        if r.hold.load(Ordering::Acquire) != 0 || !r.try_acquire_flag() {
+            return false;
+        }
+        // Re-check hold under the lock: a concurrent try_hold may have
+        // slipped in between the check and the CAS (paper lines 5-8).
+        if r.hold.load(Ordering::Acquire) != 0 {
+            r.release_flag();
+            return false;
+        }
+        // Walk up the hierarchy holding each ancestor (paper lines 9-10).
+        let mut failed_at: Option<ResId> = None;
+        let mut up = r.parent;
+        while let Some(pid) = up {
+            if !self.try_hold(pid) {
+                failed_at = Some(pid);
+                break;
+            }
+            up = self.get(pid).parent;
+        }
+        if let Some(stop) = failed_at {
+            // Roll back the holds acquired so far (paper lines 11-15).
+            let mut up = r.parent;
+            while let Some(pid) = up {
+                if pid == stop {
+                    break;
+                }
+                self.unhold(pid);
+                up = self.get(pid).parent;
+            }
+            r.release_flag();
+            false
+        } else {
+            true
+        }
+    }
+
+    /// Unlock a previously locked resource: release the flag and decrement
+    /// every ancestor's hold counter.
+    pub fn unlock(&self, id: ResId) {
+        let r = self.get(id);
+        debug_assert!(r.is_locked(), "unlock on unlocked resource");
+        let mut up = r.parent;
+        while let Some(pid) = up {
+            self.unhold(pid);
+            up = self.get(pid).parent;
+        }
+        r.release_flag();
+    }
+
+    /// Depth of a resource in the hierarchy (root = 0). Test/diag helper.
+    pub fn depth(&self, id: ResId) -> usize {
+        let mut d = 0;
+        let mut up = self.get(id).parent;
+        while let Some(pid) = up {
+            d += 1;
+            up = self.get(pid).parent;
+        }
+        d
+    }
+
+    /// Check the global quiescent invariant: no locks, all holds zero.
+    /// Used by tests after a run completes.
+    pub fn all_quiescent(&self) -> bool {
+        self.res
+            .iter()
+            .all(|r| !r.is_locked() && r.hold_count() == 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain(n: usize) -> (ResTable, Vec<ResId>) {
+        // r0 <- r1 <- ... <- r(n-1), each child of the previous.
+        let mut t = ResTable::new();
+        let mut ids = Vec::new();
+        let mut parent = None;
+        for _ in 0..n {
+            let id = t.add(parent, OWNER_NONE);
+            ids.push(id);
+            parent = Some(id);
+        }
+        (t, ids)
+    }
+
+    #[test]
+    fn lock_unlock_single() {
+        let mut t = ResTable::new();
+        let r = t.add(None, OWNER_NONE);
+        assert!(t.try_lock(r));
+        assert!(t.get(r).is_locked());
+        assert!(!t.try_lock(r), "double lock must fail");
+        t.unlock(r);
+        assert!(t.all_quiescent());
+        assert!(t.try_lock(r), "relock after unlock");
+        t.unlock(r);
+    }
+
+    #[test]
+    fn child_lock_holds_ancestors() {
+        let (t, ids) = chain(3);
+        let leaf = ids[2];
+        assert!(t.try_lock(leaf));
+        assert_eq!(t.get(ids[0]).hold_count(), 1);
+        assert_eq!(t.get(ids[1]).hold_count(), 1);
+        // Ancestors cannot be locked while held.
+        assert!(!t.try_lock(ids[0]));
+        assert!(!t.try_lock(ids[1]));
+        t.unlock(leaf);
+        assert!(t.all_quiescent());
+        assert!(t.try_lock(ids[0]));
+        t.unlock(ids[0]);
+    }
+
+    #[test]
+    fn locked_ancestor_blocks_descendant() {
+        let (t, ids) = chain(3);
+        assert!(t.try_lock(ids[0]));
+        // Locking the leaf requires holding ids[0], which is locked.
+        assert!(!t.try_lock(ids[2]));
+        t.unlock(ids[0]);
+        assert!(t.try_lock(ids[2]));
+        t.unlock(ids[2]);
+        assert!(t.all_quiescent());
+    }
+
+    #[test]
+    fn siblings_do_not_conflict() {
+        let mut t = ResTable::new();
+        let root = t.add(None, OWNER_NONE);
+        let a = t.add(Some(root), OWNER_NONE);
+        let b = t.add(Some(root), OWNER_NONE);
+        assert!(t.try_lock(a));
+        assert!(t.try_lock(b), "sibling locks are independent");
+        assert_eq!(t.get(root).hold_count(), 2);
+        t.unlock(a);
+        assert_eq!(t.get(root).hold_count(), 1);
+        t.unlock(b);
+        assert!(t.all_quiescent());
+    }
+
+    #[test]
+    fn rollback_on_mid_hierarchy_conflict() {
+        // root <- mid <- leaf ; lock `mid`, then try to lock `leaf`:
+        // holding `mid` fails, and the partial hold on nothing must be
+        // rolled back leaving counts unchanged.
+        let (t, ids) = chain(3);
+        assert!(t.try_lock(ids[1]));
+        let root_holds = t.get(ids[0]).hold_count();
+        assert!(!t.try_lock(ids[2]));
+        assert_eq!(t.get(ids[0]).hold_count(), root_holds, "rollback leaked a hold");
+        t.unlock(ids[1]);
+        assert!(t.all_quiescent());
+    }
+
+    #[test]
+    fn hold_blocks_lock_and_vice_versa() {
+        let mut t = ResTable::new();
+        let r = t.add(None, OWNER_NONE);
+        assert!(t.try_hold(r));
+        assert!(!t.try_lock(r), "held resource cannot be locked");
+        t.unhold(r);
+        assert!(t.try_lock(r));
+        assert!(!t.try_hold(r), "locked resource cannot be held");
+        t.unlock(r);
+        assert!(t.all_quiescent());
+    }
+
+    #[test]
+    fn owner_roundtrip() {
+        let mut t = ResTable::new();
+        let r = t.add(None, 3);
+        assert_eq!(t.get(r).owner(), 3);
+        t.get(r).set_owner(7);
+        assert_eq!(t.get(r).owner(), 7);
+    }
+
+    #[test]
+    fn depth_computed() {
+        let (t, ids) = chain(4);
+        assert_eq!(t.depth(ids[0]), 0);
+        assert_eq!(t.depth(ids[3]), 3);
+    }
+
+    #[test]
+    fn concurrent_lock_stress() {
+        use std::sync::Arc;
+        // A binary tree of depth 3; threads lock random leaves and verify
+        // mutual exclusion via a per-resource "inside" flag.
+        let mut t = ResTable::new();
+        let root = t.add(None, OWNER_NONE);
+        let mut leaves = Vec::new();
+        for _ in 0..2 {
+            let mid = t.add(Some(root), OWNER_NONE);
+            for _ in 0..2 {
+                leaves.push(t.add(Some(mid), OWNER_NONE));
+            }
+        }
+        let n_res = t.len();
+        let table = Arc::new(t);
+        let inside: Arc<Vec<std::sync::atomic::AtomicU32>> =
+            Arc::new((0..n_res).map(|_| AtomicU32::new(0)).collect());
+        let mut handles = Vec::new();
+        for seed in 0..4u64 {
+            let table = Arc::clone(&table);
+            let inside = Arc::clone(&inside);
+            let leaves = leaves.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = crate::util::rng::Rng::new(seed);
+                for _ in 0..2000 {
+                    let target = if rng.chance(0.2) {
+                        root
+                    } else {
+                        leaves[rng.index(leaves.len())]
+                    };
+                    if table.try_lock(target) {
+                        let prev = inside[target.idx()].fetch_add(1, Ordering::AcqRel);
+                        assert_eq!(prev, 0, "two lockers inside {target}");
+                        std::hint::spin_loop();
+                        inside[target.idx()].fetch_sub(1, Ordering::AcqRel);
+                        table.unlock(target);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(table.all_quiescent());
+    }
+}

@@ -1,0 +1,721 @@
+//! The scheduler object (paper §3.4): owns tasks, resources, and queues;
+//! manages dependencies; routes ready tasks to queues by resource
+//! affinity; serves `gettask` with random-order work stealing; and
+//! processes completions (`done`), unlocking resources and dependents.
+//!
+//! Lifecycle: build (`add_*`) → [`Scheduler::prepare`] (validate, sort
+//! locks, compute critical-path weights) → run via
+//! [`Scheduler::run`](super::exec) or the virtual-time executor
+//! ([`super::sim`]), each of which calls [`Scheduler::start`] internally.
+
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use super::config::{ExecMode, SchedConfig, StealPolicy};
+use super::error::{Result, SchedError};
+use super::graph::{validate, GraphStats};
+use super::queue::Queue;
+use super::resource::{ResId, ResTable};
+use super::task::{Task, TaskFlags, TaskId, TaskView};
+use super::weights::{compute_weights, critical_path, total_work};
+use crate::util::rng::Rng;
+
+/// Public alias for task handles (the paper's `qsched_task_t`).
+pub type TaskHandle = TaskId;
+/// Public alias for resource handles (the paper's `qsched_res_t`).
+pub type ResHandle = ResId;
+
+/// The task scheduler (paper §3.4 `struct qsched`).
+pub struct Scheduler {
+    pub(crate) tasks: Vec<Task>,
+    pub(crate) res: ResTable,
+    pub(crate) queues: Vec<Queue>,
+    pub(crate) config: SchedConfig,
+    /// Tasks not yet completed in the current run (`s->waiting`).
+    pub(crate) waiting: AtomicI64,
+    /// Tasks currently sitting in some queue (ready, not yet acquired).
+    /// A cheap hint for executors to skip polling empty queues
+    /// (§Perf opt D).
+    pub(crate) queued: AtomicI64,
+    prepared: bool,
+    /// Condvar support for `ExecMode::Yield` (qsched_flag_yield).
+    pub(crate) wait_lock: Mutex<()>,
+    pub(crate) wait_cv: Condvar,
+}
+
+impl Scheduler {
+    /// `qsched_init`: create a scheduler with `config.nr_queues` queues.
+    pub fn new(config: SchedConfig) -> Result<Self> {
+        if config.nr_queues == 0 {
+            return Err(SchedError::NoQueues(0));
+        }
+        let queues = (0..config.nr_queues).map(|_| Queue::new(64)).collect();
+        Ok(Self {
+            tasks: Vec::new(),
+            res: ResTable::new(),
+            queues,
+            config,
+            waiting: AtomicI64::new(0),
+            queued: AtomicI64::new(0),
+            prepared: false,
+            wait_lock: Mutex::new(()),
+            wait_cv: Condvar::new(),
+        })
+    }
+
+    /// `qsched_reset`: drop tasks and resources, keep queues/config.
+    pub fn reset(&mut self) {
+        self.tasks.clear();
+        self.res = ResTable::new();
+        for q in &self.queues {
+            q.clear();
+        }
+        self.waiting.store(0, Ordering::Release);
+        self.queued.store(0, Ordering::Release);
+        self.prepared = false;
+    }
+
+    // ------------------------------------------------------------------
+    // Build API (single-threaded)
+    // ------------------------------------------------------------------
+
+    /// `qsched_addtask`: create a task, copying `data` in.
+    pub fn add_task(&mut self, type_id: u32, flags: TaskFlags, data: &[u8], cost: i64) -> TaskHandle {
+        self.prepared = false;
+        let id = TaskId(self.tasks.len() as u32);
+        self.tasks.push(Task::new(type_id, flags, data.to_vec(), cost));
+        id
+    }
+
+    /// `qsched_addres`: create a resource, optionally under a parent and
+    /// with an initial owner queue.
+    pub fn add_resource(&mut self, parent: Option<ResHandle>, owner: i32) -> ResHandle {
+        self.prepared = false;
+        self.res.add(parent, owner)
+    }
+
+    /// `qsched_addlock`: task `t` must exclusively lock `r` to run.
+    pub fn add_lock(&mut self, t: TaskHandle, r: ResHandle) {
+        self.prepared = false;
+        self.tasks[t.idx()].locks.push(r);
+    }
+
+    /// `qsched_adduse`: task `t` uses `r` (queue-affinity hint only).
+    pub fn add_use(&mut self, t: TaskHandle, r: ResHandle) {
+        self.prepared = false;
+        self.tasks[t.idx()].uses.push(r);
+    }
+
+    /// `qsched_addunlock(ta, tb)`: `tb` depends on `ta`.
+    pub fn add_unlock(&mut self, ta: TaskHandle, tb: TaskHandle) {
+        self.prepared = false;
+        self.tasks[ta.idx()].unlocks.push(tb);
+    }
+
+    pub fn nr_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn nr_resources(&self) -> usize {
+        self.res.len()
+    }
+
+    pub fn nr_queues(&self) -> usize {
+        self.queues.len()
+    }
+
+    pub fn config(&self) -> &SchedConfig {
+        &self.config
+    }
+
+    pub fn stats(&self) -> GraphStats {
+        GraphStats::of(&self.tasks, &self.res)
+    }
+
+    /// Critical-path length (max weight); valid after `prepare`.
+    pub fn critical_path(&self) -> i64 {
+        critical_path(&self.tasks)
+    }
+
+    /// Total serial work (sum of costs).
+    pub fn total_work(&self) -> i64 {
+        total_work(&self.tasks)
+    }
+
+    pub fn task_view(&self, tid: TaskId) -> TaskView<'_> {
+        let t = &self.tasks[tid.idx()];
+        TaskView { tid, type_id: t.type_id, data: &t.data, cost: t.cost, weight: t.weight }
+    }
+
+    pub fn resources(&self) -> &ResTable {
+        &self.res
+    }
+
+    /// Validate the graph, sort each task's locks by resource id (the
+    /// §3.3 dining-philosophers fix), and compute critical-path weights.
+    pub fn prepare(&mut self) -> Result<()> {
+        validate(&self.tasks, &self.res)?;
+        for t in &mut self.tasks {
+            // Sort by resource id (the §3.3 dining-philosophers fix) and
+            // dedup; then drop any lock whose hierarchical *ancestor* is
+            // also locked by this task — the ancestor lock already
+            // excludes the whole subtree, and attempting both would
+            // self-deadlock (the child lock holds the ancestor, so the
+            // ancestor lock could never be acquired).
+            t.locks.sort_unstable();
+            t.locks.dedup();
+            if t.locks.len() > 1 {
+                let res = &self.res;
+                let lock_set: Vec<ResId> = t.locks.clone();
+                t.locks.retain(|&r| {
+                    let mut up = res.get(r).parent;
+                    while let Some(p) = up {
+                        if lock_set.binary_search(&p).is_ok() {
+                            return false;
+                        }
+                        up = res.get(p).parent;
+                    }
+                    true
+                });
+            }
+            t.uses.sort_unstable();
+            t.uses.dedup();
+        }
+        compute_weights(&mut self.tasks)?;
+        self.prepared = true;
+        Ok(())
+    }
+
+    /// `qsched_start`: reset wait counters and the waiting count, clear the
+    /// queues, and enqueue every task with no unresolved dependencies.
+    /// Virtual ready tasks complete immediately (they have no action).
+    pub(crate) fn start(&self) -> Result<()> {
+        if !self.prepared {
+            return Err(SchedError::NotPrepared("call prepare() before running"));
+        }
+        for q in &self.queues {
+            q.clear();
+        }
+        // wait[i] = number of tasks that unlock i.
+        for t in &self.tasks {
+            t.wait.store(0, Ordering::Relaxed);
+        }
+        for t in &self.tasks {
+            for u in &t.unlocks {
+                self.tasks[u.idx()].wait.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.waiting.store(self.tasks.len() as i64, Ordering::Release);
+        self.queued.store(0, Ordering::Release);
+        for (i, t) in self.tasks.iter().enumerate() {
+            if t.wait.load(Ordering::Relaxed) == 0 {
+                if t.flags.virtual_task {
+                    self.complete(TaskId(i as u32));
+                } else {
+                    self.enqueue(TaskId(i as u32));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of tasks not yet completed in the current run.
+    #[inline]
+    pub fn waiting(&self) -> i64 {
+        self.waiting.load(Ordering::Acquire)
+    }
+
+    /// Number of ready tasks currently queued (hint; racy by nature).
+    #[inline]
+    pub fn queued_hint(&self) -> i64 {
+        self.queued.load(Ordering::Acquire)
+    }
+
+    /// Scheduling key for a task: the critical-path weight by default
+    /// (§3.1), optionally penalized by its conflict degree (§5
+    /// "Priorities" extension) or replaced per [`KeyPolicy`] for the
+    /// baseline/ablation configurations.
+    #[inline]
+    fn key_of(&self, tid: TaskId, t: &Task) -> i64 {
+        let base = match self.config.flags.key_policy {
+            super::config::KeyPolicy::CriticalPath => t.weight,
+            super::config::KeyPolicy::Fifo => -(tid.0 as i64),
+            super::config::KeyPolicy::Cost => t.cost,
+        };
+        if self.config.flags.lock_aware_priority {
+            base - t.cost * t.locks.len() as i64
+        } else {
+            base
+        }
+    }
+
+    /// `qsched_enqueue`: route a ready task to the queue owning most of
+    /// its resources (locks + uses); ties and no-owner default to queue 0,
+    /// as in the paper.
+    pub(crate) fn enqueue(&self, tid: TaskId) {
+        let t = &self.tasks[tid.idx()];
+        debug_assert!(!t.flags.virtual_task);
+        let nq = self.queues.len();
+        let mut best = 0usize;
+        if nq > 1 {
+            // §Perf opt B: fixed-size score buffer — `enqueue` runs once
+            // per task on the hot path, and a heap allocation per task
+            // showed up in profiles. 64 queues covers the paper's
+            // machine; larger configurations fall back to the heap.
+            let mut stack_score = [0u32; 64];
+            let mut heap_score;
+            let score: &mut [u32] = if nq <= 64 {
+                &mut stack_score[..nq]
+            } else {
+                heap_score = vec![0u32; nq];
+                &mut heap_score
+            };
+            let mut best_score = 0u32;
+            for &rid in t.locks.iter().chain(t.uses.iter()) {
+                let owner = self.res.get(rid).owner();
+                if owner >= 0 && (owner as usize) < nq {
+                    let q = owner as usize;
+                    score[q] += 1;
+                    if score[q] > best_score {
+                        best_score = score[q];
+                        best = q;
+                    }
+                }
+            }
+        }
+        self.queues[best].put(self.key_of(tid, t), tid);
+        self.queued.fetch_add(1, Ordering::AcqRel);
+        if self.config.flags.mode == ExecMode::Yield {
+            let _g = self.wait_lock.lock().unwrap();
+            self.wait_cv.notify_all();
+        }
+    }
+
+    /// `qsched_gettask`: try the preferred queue, then steal from the
+    /// others (random order by default; heaviest-first under the §5
+    /// weight-aware ablation). On success the task's resources are locked;
+    /// if re-owning is on, they are re-owned to `qid`.
+    /// Returns `(task, was_stolen)`.
+    pub fn gettask(&self, qid: usize, rng: &mut Rng) -> Option<(TaskId, bool)> {
+        let nq = self.queues.len();
+        let mut got: Option<(TaskId, bool)> = None;
+        if let Some(tid) = self.queues[qid].get(&self.tasks, &self.res) {
+            got = Some((tid, false));
+        } else if nq > 1 {
+            match self.config.flags.steal {
+                StealPolicy::Random => {
+                    // Random-order probe of the other queues (§3.4).
+                    // §Perf opt C: iterate a random cyclic permutation
+                    // (random start + stride coprime to nq) instead of
+                    // allocating and shuffling a Vec per steal attempt.
+                    let start = rng.index(nq);
+                    let mut step = 1 + rng.index(nq - 1);
+                    while gcd(step, nq) != 1 {
+                        step = 1 + (step % (nq - 1));
+                    }
+                    let mut k = start;
+                    for _ in 0..nq {
+                        if k != qid {
+                            if let Some(tid) = self.queues[k].get(&self.tasks, &self.res) {
+                                got = Some((tid, true));
+                                break;
+                            }
+                        }
+                        k = (k + step) % nq;
+                    }
+                }
+                StealPolicy::WeightAware => {
+                    let mut order: Vec<usize> = (0..nq).filter(|&k| k != qid).collect();
+                    order.sort_by_key(|&k| std::cmp::Reverse(self.queues[k].total_key()));
+                    for k in order {
+                        if let Some(tid) = self.queues[k].get(&self.tasks, &self.res) {
+                            got = Some((tid, true));
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        if let Some((tid, _)) = got {
+            self.queued.fetch_sub(1, Ordering::AcqRel);
+            if self.config.flags.reown {
+                let t = &self.tasks[tid.idx()];
+                for &rid in t.locks.iter().chain(t.uses.iter()) {
+                    self.res.get(rid).set_owner(qid as i32);
+                }
+            }
+        }
+        got
+    }
+
+    /// `qsched_done`: release the task's resource locks, decrement each
+    /// dependent's wait counter, enqueue any that hit zero (virtual
+    /// dependents complete in place, iteratively), and decrement the
+    /// global waiting count.
+    pub fn complete(&self, tid: TaskId) {
+        let mut stack = vec![tid];
+        while let Some(t) = stack.pop() {
+            let task = &self.tasks[t.idx()];
+            if !task.flags.virtual_task {
+                for &rid in &task.locks {
+                    self.res.unlock(rid);
+                }
+            }
+            for &u in &task.unlocks {
+                if self.tasks[u.idx()].dec_wait() == 0 {
+                    if self.tasks[u.idx()].flags.virtual_task {
+                        stack.push(u);
+                    } else {
+                        self.enqueue(u);
+                    }
+                }
+            }
+            self.waiting.fetch_sub(1, Ordering::AcqRel);
+        }
+        if self.config.flags.mode == ExecMode::Yield {
+            let _g = self.wait_lock.lock().unwrap();
+            self.wait_cv.notify_all();
+        }
+    }
+
+    /// Store a measured execution time for cost relearning (§3.1).
+    pub(crate) fn record_measured(&self, tid: TaskId, ns: u64) {
+        self.tasks[tid.idx()]
+            .measured_ns
+            .store(ns as i64, Ordering::Relaxed);
+    }
+
+    /// Fold measured times back into costs and recompute weights
+    /// (`relearn_costs`; called between runs).
+    pub fn relearn_costs(&mut self) -> Result<()> {
+        let mut any = false;
+        for t in &mut self.tasks {
+            let m = t.measured_ns.load(Ordering::Relaxed);
+            if m > 0 {
+                t.cost = m.max(1);
+                any = true;
+            }
+        }
+        if any {
+            compute_weights(&mut self.tasks)?;
+        }
+        Ok(())
+    }
+
+    /// Aggregated queue statistics (gets, misses, scanned, lock failures,
+    /// mutex spins) across all queues — Fig. 13 overhead inputs.
+    pub fn queue_stats(&self) -> (u64, u64, u64, u64, u64) {
+        let mut acc = (0, 0, 0, 0, 0);
+        for q in &self.queues {
+            let s = q.stats.snapshot();
+            acc.0 += s.0;
+            acc.1 += s.1;
+            acc.2 += s.2;
+            acc.3 += s.3;
+            acc.4 += s.4;
+        }
+        acc
+    }
+}
+
+#[inline]
+fn gcd(mut a: usize, mut b: usize) -> usize {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::resource::OWNER_NONE;
+    use crate::coordinator::task::payload;
+
+    fn sched(nq: usize) -> Scheduler {
+        Scheduler::new(SchedConfig::new(nq)).unwrap()
+    }
+
+    #[test]
+    fn rejects_zero_queues() {
+        assert!(matches!(
+            Scheduler::new(SchedConfig::new(0)),
+            Err(SchedError::NoQueues(0))
+        ));
+    }
+
+    #[test]
+    fn build_and_prepare() {
+        let mut s = sched(2);
+        let r = s.add_resource(None, 0);
+        let a = s.add_task(0, TaskFlags::default(), &payload::from_i32s(&[1]), 10);
+        let b = s.add_task(1, TaskFlags::default(), &[], 5);
+        s.add_lock(b, r);
+        s.add_unlock(a, b);
+        s.prepare().unwrap();
+        assert_eq!(s.nr_tasks(), 2);
+        assert_eq!(s.nr_resources(), 1);
+        assert_eq!(s.tasks[a.idx()].weight, 15);
+        assert_eq!(s.critical_path(), 15);
+        assert_eq!(s.total_work(), 15);
+    }
+
+    #[test]
+    fn prepare_rejects_cycles() {
+        let mut s = sched(1);
+        let a = s.add_task(0, TaskFlags::default(), &[], 1);
+        let b = s.add_task(0, TaskFlags::default(), &[], 1);
+        s.add_unlock(a, b);
+        s.add_unlock(b, a);
+        assert!(matches!(s.prepare(), Err(SchedError::Cycle { .. })));
+    }
+
+    #[test]
+    fn prepare_subsumes_descendant_locks() {
+        // Locking a resource and its ancestor in one task must collapse
+        // to the ancestor alone (else the task self-deadlocks).
+        let mut s = sched(1);
+        let root = s.add_resource(None, OWNER_NONE);
+        let mid = s.add_resource(Some(root), OWNER_NONE);
+        let leaf = s.add_resource(Some(mid), OWNER_NONE);
+        let other = s.add_resource(None, OWNER_NONE);
+        let t = s.add_task(0, TaskFlags::default(), &[], 1);
+        s.add_lock(t, leaf);
+        s.add_lock(t, root);
+        s.add_lock(t, other);
+        s.prepare().unwrap();
+        assert_eq!(s.tasks[t.idx()].locks, vec![root, other]);
+        // And the task actually runs.
+        s.start().unwrap();
+        let mut rng = Rng::new(0);
+        let (tid, _) = s.gettask(0, &mut rng).unwrap();
+        s.complete(tid);
+        assert!(s.res.all_quiescent());
+    }
+
+    #[test]
+    fn prepare_sorts_and_dedups_locks() {
+        let mut s = sched(1);
+        let r0 = s.add_resource(None, OWNER_NONE);
+        let r1 = s.add_resource(None, OWNER_NONE);
+        let t = s.add_task(0, TaskFlags::default(), &[], 1);
+        s.add_lock(t, r1);
+        s.add_lock(t, r0);
+        s.add_lock(t, r1);
+        s.prepare().unwrap();
+        assert_eq!(s.tasks[t.idx()].locks, vec![r0, r1]);
+    }
+
+    #[test]
+    fn start_enqueues_roots_only() {
+        let mut s = sched(1);
+        let a = s.add_task(0, TaskFlags::default(), &[], 1);
+        let b = s.add_task(0, TaskFlags::default(), &[], 1);
+        s.add_unlock(a, b);
+        s.prepare().unwrap();
+        s.start().unwrap();
+        assert_eq!(s.waiting(), 2);
+        assert_eq!(s.queues[0].len(), 1);
+        let mut rng = Rng::new(0);
+        let (tid, stolen) = s.gettask(0, &mut rng).unwrap();
+        assert_eq!(tid, a);
+        assert!(!stolen);
+        // b not yet available.
+        assert!(s.gettask(0, &mut rng).is_none());
+        s.complete(a);
+        let (tid, _) = s.gettask(0, &mut rng).unwrap();
+        assert_eq!(tid, b);
+        s.complete(b);
+        assert_eq!(s.waiting(), 0);
+        assert!(s.res.all_quiescent());
+    }
+
+    #[test]
+    fn run_without_prepare_fails() {
+        let s = sched(1);
+        assert!(matches!(s.start(), Err(SchedError::NotPrepared(_))));
+    }
+
+    #[test]
+    fn enqueue_prefers_owning_queue() {
+        let mut s = sched(3);
+        let r_q2 = s.add_resource(None, 2);
+        let r_q2b = s.add_resource(None, 2);
+        let r_q1 = s.add_resource(None, 1);
+        let t = s.add_task(0, TaskFlags::default(), &[], 1);
+        s.add_lock(t, r_q2);
+        s.add_use(t, r_q2b);
+        s.add_use(t, r_q1);
+        s.prepare().unwrap();
+        s.start().unwrap();
+        assert_eq!(s.queues[2].len(), 1, "two of three resources owned by q2");
+        assert_eq!(s.queues[0].len(), 0);
+        assert_eq!(s.queues[1].len(), 0);
+    }
+
+    #[test]
+    fn gettask_steals_from_other_queue() {
+        let mut s = sched(2);
+        let r = s.add_resource(None, 1); // owned by queue 1
+        let t = s.add_task(0, TaskFlags::default(), &[], 1);
+        s.add_lock(t, r);
+        s.prepare().unwrap();
+        s.start().unwrap();
+        let mut rng = Rng::new(0);
+        let (tid, stolen) = s.gettask(0, &mut rng).unwrap();
+        assert_eq!(tid, t);
+        assert!(stolen, "task was in queue 1, fetched from queue 0");
+        // reown on: the resource now belongs to queue 0.
+        assert_eq!(s.res.get(r).owner(), 0);
+        s.complete(tid);
+    }
+
+    #[test]
+    fn reown_disabled_keeps_owner() {
+        let mut cfg = SchedConfig::new(2);
+        cfg.flags.reown = false;
+        let mut s = Scheduler::new(cfg).unwrap();
+        let r = s.add_resource(None, 1);
+        let t = s.add_task(0, TaskFlags::default(), &[], 1);
+        s.add_lock(t, r);
+        s.prepare().unwrap();
+        s.start().unwrap();
+        let mut rng = Rng::new(0);
+        let (tid, _) = s.gettask(0, &mut rng).unwrap();
+        assert_eq!(s.res.get(r).owner(), 1, "reown off: owner unchanged");
+        s.complete(tid);
+    }
+
+    #[test]
+    fn virtual_tasks_complete_without_execution() {
+        // a -> V -> b where V is virtual: completing a must make b
+        // available without anyone "running" V.
+        let mut s = sched(1);
+        let a = s.add_task(0, TaskFlags::default(), &[], 1);
+        let v = s.add_task(9, TaskFlags { virtual_task: true }, &[], 1);
+        let b = s.add_task(0, TaskFlags::default(), &[], 1);
+        s.add_unlock(a, v);
+        s.add_unlock(v, b);
+        s.prepare().unwrap();
+        s.start().unwrap();
+        let mut rng = Rng::new(0);
+        let (tid, _) = s.gettask(0, &mut rng).unwrap();
+        assert_eq!(tid, a);
+        s.complete(a);
+        assert_eq!(s.waiting(), 1, "a and v completed");
+        let (tid, _) = s.gettask(0, &mut rng).unwrap();
+        assert_eq!(tid, b);
+        s.complete(b);
+        assert_eq!(s.waiting(), 0);
+    }
+
+    #[test]
+    fn virtual_root_completes_at_start() {
+        let mut s = sched(1);
+        let v = s.add_task(0, TaskFlags { virtual_task: true }, &[], 1);
+        let b = s.add_task(0, TaskFlags::default(), &[], 1);
+        s.add_unlock(v, b);
+        s.prepare().unwrap();
+        s.start().unwrap();
+        assert_eq!(s.waiting(), 1);
+        let mut rng = Rng::new(0);
+        assert_eq!(s.gettask(0, &mut rng).unwrap().0, b);
+        s.complete(b);
+        assert_eq!(s.waiting(), 0);
+    }
+
+    #[test]
+    fn conflicting_tasks_serialized_via_locks() {
+        let mut s = sched(1);
+        let r = s.add_resource(None, OWNER_NONE);
+        let a = s.add_task(0, TaskFlags::default(), &[], 1);
+        let b = s.add_task(0, TaskFlags::default(), &[], 1);
+        s.add_lock(a, r);
+        s.add_lock(b, r);
+        s.prepare().unwrap();
+        s.start().unwrap();
+        let mut rng = Rng::new(0);
+        let (first, _) = s.gettask(0, &mut rng).unwrap();
+        // Second conflicting task cannot be acquired while first holds r.
+        assert!(s.gettask(0, &mut rng).is_none());
+        s.complete(first);
+        let (second, _) = s.gettask(0, &mut rng).unwrap();
+        assert_ne!(first, second);
+        s.complete(second);
+        assert!(s.res.all_quiescent());
+    }
+
+    #[test]
+    fn hierarchical_conflict_blocks_parent_task() {
+        let mut s = sched(1);
+        let root = s.add_resource(None, OWNER_NONE);
+        let child = s.add_resource(Some(root), OWNER_NONE);
+        let t_child = s.add_task(0, TaskFlags::default(), &[], 1);
+        let t_root = s.add_task(0, TaskFlags::default(), &[], 1);
+        s.add_lock(t_child, child);
+        s.add_lock(t_root, root);
+        s.prepare().unwrap();
+        s.start().unwrap();
+        let mut rng = Rng::new(0);
+        let (first, _) = s.gettask(0, &mut rng).unwrap();
+        assert!(
+            s.gettask(0, &mut rng).is_none(),
+            "root/child locks must exclude each other"
+        );
+        s.complete(first);
+        let (second, _) = s.gettask(0, &mut rng).unwrap();
+        s.complete(second);
+        assert!(s.res.all_quiescent());
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let mut s = sched(2);
+        s.add_resource(None, 0);
+        s.add_task(0, TaskFlags::default(), &[], 1);
+        s.prepare().unwrap();
+        s.reset();
+        assert_eq!(s.nr_tasks(), 0);
+        assert_eq!(s.nr_resources(), 0);
+        assert!(matches!(s.start(), Err(SchedError::NotPrepared(_))));
+    }
+
+    #[test]
+    fn relearn_costs_updates_weights() {
+        let mut s = sched(1);
+        let a = s.add_task(0, TaskFlags::default(), &[], 1);
+        let b = s.add_task(0, TaskFlags::default(), &[], 1);
+        s.add_unlock(a, b);
+        s.prepare().unwrap();
+        s.record_measured(a, 100);
+        s.record_measured(b, 50);
+        s.relearn_costs().unwrap();
+        assert_eq!(s.tasks[a.idx()].cost, 100);
+        assert_eq!(s.tasks[a.idx()].weight, 150);
+    }
+
+    #[test]
+    fn lock_aware_priority_changes_key() {
+        let mut cfg = SchedConfig::new(1);
+        cfg.flags.lock_aware_priority = true;
+        let mut s = Scheduler::new(cfg).unwrap();
+        let r0 = s.add_resource(None, OWNER_NONE);
+        let r1 = s.add_resource(None, OWNER_NONE);
+        // heavy: weight 10 but 2 locks; light: weight 9, no locks.
+        let heavy = s.add_task(0, TaskFlags::default(), &[], 10);
+        let light = s.add_task(0, TaskFlags::default(), &[], 9);
+        s.add_lock(heavy, r0);
+        s.add_lock(heavy, r1);
+        s.prepare().unwrap();
+        s.start().unwrap();
+        let mut rng = Rng::new(0);
+        // key(heavy) = 10 - 10*2 = -10 < key(light) = 9.
+        let (first, _) = s.gettask(0, &mut rng).unwrap();
+        assert_eq!(first, light);
+        s.complete(first);
+        let (second, _) = s.gettask(0, &mut rng).unwrap();
+        s.complete(second);
+    }
+}

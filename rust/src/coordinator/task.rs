@@ -1,0 +1,206 @@
+//! Task model (paper §3.1).
+//!
+//! A task carries a user-defined `type` + opaque `data` payload, the list of
+//! tasks it *unlocks* (dependencies stored in reverse), the resources it
+//! *locks* (conflicts) and *uses* (affinity hints only), a user-estimated
+//! `cost` and the derived critical-path `weight`.
+
+use std::sync::atomic::{AtomicI32, AtomicI64, Ordering};
+
+use super::resource::ResId;
+
+/// Handle to a task within one scheduler (dense index).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub u32);
+
+impl TaskId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for TaskId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "t{}", self.0)
+    }
+}
+
+/// Lifecycle of a task during one run, used by tests and invariant checks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskState {
+    /// Dependencies unresolved; sitting in the scheduler.
+    Waiting,
+    /// All dependencies resolved; sitting in some queue.
+    Queued,
+    /// Acquired by a worker, resources locked.
+    Running,
+    /// Finished; dependents unlocked.
+    Done,
+}
+
+/// Per-task flags (`task_flag_*` in the paper's appendix).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TaskFlags {
+    /// Virtual tasks group dependencies but have no action: they are not
+    /// passed to the execution function.
+    pub virtual_task: bool,
+}
+
+/// A single task (paper §3.1 `struct task`).
+///
+/// The atomic fields (`wait`, `measured_ns`) are the only parts mutated
+/// during a parallel run; everything else is frozen by
+/// [`super::Scheduler::prepare`].
+#[derive(Debug)]
+pub struct Task {
+    /// Application-defined task type, mapped to a kernel by the exec fn.
+    pub type_id: u32,
+    pub flags: TaskFlags,
+    /// Opaque payload bytes, copied in at `addtask` (paper: `void *data`).
+    pub data: Vec<u8>,
+    /// Tasks that this task unlocks — dependencies stored in reverse.
+    pub unlocks: Vec<TaskId>,
+    /// Resources that must be exclusively locked before execution.
+    /// Sorted by id in `prepare()` to avoid the dining-philosophers
+    /// deadlock (§3.3).
+    pub locks: Vec<ResId>,
+    /// Resources used but not locked — queue-affinity hints only.
+    pub uses: Vec<ResId>,
+    /// Relative computational cost (user estimate or relearned).
+    pub cost: i64,
+    /// Cost of the critical path rooted at this task:
+    /// `weight = cost + max(weight of unlocked tasks)` (§3.1).
+    pub weight: i64,
+    /// Number of unresolved dependencies; decremented by `qsched_done`.
+    pub wait: AtomicI32,
+    /// Measured execution time (ns) of the last run, for cost relearning.
+    pub measured_ns: AtomicI64,
+}
+
+impl Task {
+    pub fn new(type_id: u32, flags: TaskFlags, data: Vec<u8>, cost: i64) -> Self {
+        Self {
+            type_id,
+            flags,
+            data,
+            unlocks: Vec::new(),
+            locks: Vec::new(),
+            uses: Vec::new(),
+            cost: cost.max(1),
+            weight: 0,
+            wait: AtomicI32::new(0),
+            measured_ns: AtomicI64::new(0),
+        }
+    }
+
+    /// Number of unresolved dependencies right now.
+    #[inline]
+    pub fn wait_count(&self) -> i32 {
+        self.wait.load(Ordering::Acquire)
+    }
+
+    /// Decrement the wait counter, returning the *new* value. The caller
+    /// (scheduler `done`) enqueues the task when this hits zero.
+    #[inline]
+    pub fn dec_wait(&self) -> i32 {
+        self.wait.fetch_sub(1, Ordering::AcqRel) - 1
+    }
+}
+
+/// Read-only view of a task handed to the user's execution function,
+/// mirroring the `fun(t->type, t->data)` call in `qsched_run` (§3.4).
+#[derive(Clone, Copy)]
+pub struct TaskView<'a> {
+    pub tid: TaskId,
+    pub type_id: u32,
+    pub data: &'a [u8],
+    pub cost: i64,
+    pub weight: i64,
+}
+
+/// Helpers for encoding small POD payloads into a task's `data` bytes, the
+/// way the paper's examples pack `int data[3]` / `struct cell *data[2]`.
+pub mod payload {
+    /// Encode a slice of i32 parameters.
+    pub fn from_i32s(xs: &[i32]) -> Vec<u8> {
+        let mut v = Vec::with_capacity(xs.len() * 4);
+        for x in xs {
+            v.extend_from_slice(&x.to_le_bytes());
+        }
+        v
+    }
+
+    /// Decode a slice of i32 parameters.
+    pub fn to_i32s(data: &[u8]) -> Vec<i32> {
+        assert!(data.len() % 4 == 0, "payload not a multiple of 4 bytes");
+        data.chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    /// Encode a slice of u64 parameters (e.g. indices standing in for the
+    /// paper's raw pointers).
+    pub fn from_u64s(xs: &[u64]) -> Vec<u8> {
+        let mut v = Vec::with_capacity(xs.len() * 8);
+        for x in xs {
+            v.extend_from_slice(&x.to_le_bytes());
+        }
+        v
+    }
+
+    /// Decode a slice of u64 parameters.
+    pub fn to_u64s(data: &[u8]) -> Vec<u64> {
+        assert!(data.len() % 8 == 0, "payload not a multiple of 8 bytes");
+        data.chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_clamped_positive() {
+        let t = Task::new(0, TaskFlags::default(), vec![], -5);
+        assert_eq!(t.cost, 1);
+        let t = Task::new(0, TaskFlags::default(), vec![], 0);
+        assert_eq!(t.cost, 1);
+    }
+
+    #[test]
+    fn wait_counter_roundtrip() {
+        let t = Task::new(1, TaskFlags::default(), vec![], 3);
+        t.wait.store(2, Ordering::Release);
+        assert_eq!(t.dec_wait(), 1);
+        assert_eq!(t.dec_wait(), 0);
+        assert_eq!(t.wait_count(), 0);
+    }
+
+    #[test]
+    fn payload_i32_roundtrip() {
+        let xs = [3, -1, 1 << 30];
+        let enc = payload::from_i32s(&xs);
+        assert_eq!(enc.len(), 12);
+        assert_eq!(payload::to_i32s(&enc), xs.to_vec());
+    }
+
+    #[test]
+    fn payload_u64_roundtrip() {
+        let xs = [0u64, u64::MAX, 42];
+        assert_eq!(payload::to_u64s(&payload::from_u64s(&xs)), xs.to_vec());
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 4")]
+    fn payload_bad_len_panics() {
+        payload::to_i32s(&[1, 2, 3]);
+    }
+
+    #[test]
+    fn task_id_display() {
+        assert_eq!(TaskId(5).to_string(), "t5");
+    }
+}

@@ -1,0 +1,23 @@
+//! QuickSched-RS: task-based parallelism with dependencies and conflicts.
+//!
+//! Reproduction of Gonnet, Chalk & Schaller (2016) as a three-layer
+//! Rust + JAX + Pallas system. The crate is organized as:
+//!
+//! * [`coordinator`] — the QuickSched scheduler itself (the paper's
+//!   contribution): tasks, hierarchical resources, max-heap queues,
+//!   critical-path weights, work stealing, threaded + virtual-time
+//!   executors.
+//! * [`runtime`] — PJRT runtime service loading AOT-compiled HLO
+//!   artifacts produced by `python/compile/aot.py`.
+//! * [`qr`] — tiled QR decomposition substrate (paper §4.1).
+//! * [`nbody`] — Barnes-Hut N-body substrate (paper §4.2).
+//! * [`baselines`] — dependency-only scheduler (OmpSs stand-in).
+//! * [`bench`] — drivers regenerating every table/figure of §4.
+//! * [`util`] — RNG, stats, mini bench harness, CLI parsing.
+pub mod util;
+pub mod coordinator;
+pub mod runtime;
+pub mod qr;
+pub mod nbody;
+pub mod baselines;
+pub mod bench;

@@ -1,0 +1,252 @@
+//! `repro` — the QuickSched-RS launcher.
+//!
+//! ```text
+//! repro qr    [--tiles 32 --tile 64 --threads 4 --backend native|xla --verify]
+//! repro chol  [--tiles 16 --tile 64 --threads 4 --verify]
+//! repro bh    [--n 100000 --n-max 100 --n-task 5000 --threads 4 --backend native|xla --verify]
+//! repro sim   <qr|bh> [--cores 64 ...workload options]
+//! repro bench <fig8|fig9|fig11|fig12|fig13|overhead|ablation|all> [--quick]
+//! repro info  [--quick]       # E1/E4 graph-statistics tables
+//! ```
+
+use std::sync::Arc;
+
+use quicksched::bench;
+use quicksched::coordinator::{SchedConfig, Scheduler};
+use quicksched::nbody;
+use quicksched::qr;
+use quicksched::runtime::{Manifest, RuntimeService, XlaNbodyExec, XlaTileBackend};
+use quicksched::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "qr" => cmd_qr(&args),
+        "chol" => cmd_chol(&args),
+        "bh" => cmd_bh(&args),
+        "sim" => cmd_sim(&args),
+        "bench" => cmd_bench(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "usage: repro <qr|bh|sim|bench|info> [options]\n\
+                 see rust/src/main.rs header or README.md"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn xla_service() -> Arc<RuntimeService> {
+    RuntimeService::start(
+        Manifest::load(Manifest::default_dir()).expect("run `make artifacts` first"),
+        1,
+    )
+    .expect("starting PJRT runtime service")
+}
+
+fn cmd_qr(args: &Args) {
+    let tiles = args.get_usize("tiles", 32);
+    let tile = args.get_usize("tile", 64);
+    let threads = args.get_usize("threads", 4);
+    let backend = args.get_str("backend", "native");
+    let mat = qr::TiledMatrix::random(tile, tiles, tiles, args.get_u64("seed", 42));
+    let a0 = if args.flag("verify") { Some(mat.to_dense()) } else { None };
+    let cfg = SchedConfig::new(threads).with_timeline(args.flag("timeline"));
+
+    let run = match backend {
+        "native" => qr::run_threaded(&mat, &qr::NativeBackend, cfg, threads).unwrap(),
+        "xla" => {
+            let b = XlaTileBackend::new(xla_service());
+            qr::run_threaded(&mat, &b, cfg, threads).unwrap()
+        }
+        other => panic!("unknown backend {other:?} (native|xla)"),
+    };
+    println!(
+        "qr: {tiles}x{tiles} tiles of {tile}x{tile} ({} tasks, {} stolen) on {threads} threads [{}]: {:.3} ms",
+        run.metrics.tasks_run,
+        run.metrics.tasks_stolen,
+        backend,
+        run.metrics.elapsed_ns as f64 / 1e6
+    );
+    if let Some(a0) = a0 {
+        let res = qr::verify::gram_residual(&a0, &mat);
+        println!("verify: gram residual {res:.3e} ({})", if res < 1e-10 { "OK" } else { "FAIL" });
+        assert!(res < 1e-10);
+    }
+}
+
+fn cmd_chol(args: &Args) {
+    let tiles = args.get_usize("tiles", 16);
+    let tile = args.get_usize("tile", 64);
+    let threads = args.get_usize("threads", 4);
+    let mat = quicksched::qr::cholesky::random_spd(tile, tiles, args.get_u64("seed", 42));
+    let a0 = if args.flag("verify") { Some(mat.to_dense()) } else { None };
+    let m = quicksched::qr::cholesky::run_threaded(&mat, SchedConfig::new(threads), threads)
+        .unwrap();
+    println!(
+        "chol: {tiles}x{tiles} tiles of {tile}x{tile} ({} tasks) on {threads} threads: {:.3} ms",
+        m.tasks_run,
+        m.elapsed_ns as f64 / 1e6
+    );
+    if let Some(a0) = a0 {
+        let res = quicksched::qr::cholesky::residual(&a0, &mat);
+        println!("verify: residual {res:.3e} ({})", if res < 1e-10 { "OK" } else { "FAIL" });
+        assert!(res < 1e-10);
+    }
+}
+
+fn cmd_bh(args: &Args) {
+    let n = args.get_usize("n", 100_000);
+    let n_max = args.get_usize("n-max", 100);
+    let n_task = args.get_usize("n-task", 5000);
+    let threads = args.get_usize("threads", 4);
+    let backend = args.get_str("backend", "native");
+    let cloud = nbody::uniform_cloud(n, args.get_u64("seed", 42));
+    let verify_n = if args.flag("verify") { Some(cloud.clone()) } else { None };
+    let cfg = SchedConfig::new(threads).with_timeline(args.flag("timeline"));
+
+    let (parts, run) = match backend {
+        "native" => nbody::run_threaded(cloud, n_max, n_task, cfg, threads).unwrap(),
+        "xla" => {
+            let tree = nbody::Octree::build(cloud, n_max);
+            let state = nbody::NBodyState::from_tree(tree);
+            let mut sched = Scheduler::new(cfg).unwrap();
+            let graph = nbody::build_tasks(&mut sched, &state, n_task);
+            sched.prepare().unwrap();
+            let exec = XlaNbodyExec::new(xla_service());
+            let metrics = sched.run(threads, |view| exec.exec_task(&state, view)).unwrap();
+            (state.into_parts(), nbody::NbRun { metrics, graph })
+        }
+        other => panic!("unknown backend {other:?} (native|xla)"),
+    };
+    println!(
+        "bh: {n} particles, tasks [self={}, pp={}, pc={}, com={}] on {threads} threads [{}]: {:.3} ms",
+        run.graph.counts[0],
+        run.graph.counts[1],
+        run.graph.counts[2],
+        run.graph.counts[3],
+        backend,
+        run.metrics.elapsed_ns as f64 / 1e6
+    );
+    if let Some(cloud) = verify_n {
+        assert!(n <= 20_000, "--verify uses the O(N^2) oracle; keep --n <= 20000");
+        let want = nbody::direct::direct_sum(&cloud);
+        let rel = nbody::direct::rms_rel_error(&parts, &want);
+        println!("verify: rms relative force error {rel:.3e} ({})",
+                 if rel < 0.02 { "OK" } else { "FAIL" });
+        assert!(rel < 0.02);
+    }
+}
+
+fn cmd_sim(args: &Args) {
+    let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("qr");
+    let cores = args.get_usize("cores", 64);
+    match what {
+        "qr" => {
+            let tiles = args.get_usize("tiles", 32);
+            let model = qr::QrCostModel { ns_per_unit: 400.0 };
+            let run =
+                qr::run_sim(tiles, tiles, SchedConfig::new(cores), cores, &model).unwrap();
+            println!(
+                "sim qr: {tiles}x{tiles} tiles on {cores} virtual cores: {:.3} ms virtual, {} tasks, util {:.2}",
+                run.metrics.elapsed_ns as f64 / 1e6,
+                run.metrics.tasks_run,
+                run.metrics.utilization()
+            );
+        }
+        "bh" => {
+            let n = args.get_usize("n", 1_000_000);
+            let model = nbody::nb_cost_model(3.0);
+            let run = nbody::run_sim(
+                nbody::uniform_cloud(n, 42),
+                args.get_usize("n-max", 100),
+                args.get_usize("n-task", 5000),
+                SchedConfig::new(cores),
+                cores,
+                &model,
+            )
+            .unwrap();
+            println!(
+                "sim bh: {n} particles on {cores} virtual cores: {:.3} ms virtual, {} tasks, util {:.2}",
+                run.metrics.elapsed_ns as f64 / 1e6,
+                run.metrics.tasks_run,
+                run.metrics.utilization()
+            );
+        }
+        other => panic!("unknown sim target {other:?} (qr|bh)"),
+    }
+}
+
+fn cmd_bench(args: &Args) {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let quick = args.flag("quick");
+    let run_one = |name: &str| match name {
+        "fig8" => {
+            let o = if quick { bench::fig8::Fig8Opts::quick() } else { Default::default() };
+            println!("\n== Fig 8 ==\n{}", bench::fig8::run(&o).0.render());
+        }
+        "fig9" => {
+            let o = if quick { bench::fig9::Fig9Opts::quick() } else { Default::default() };
+            println!("\n== Fig 9 ==\n{}", bench::fig9::run(&o).0.render());
+        }
+        "fig11" => {
+            let o = if quick { bench::fig11::Fig11Opts::quick() } else { Default::default() };
+            println!("\n== Fig 11 ==\n{}", bench::fig11::run(&o).0.render());
+        }
+        "fig12" => {
+            let o = if quick { bench::fig12::Fig12Opts::quick() } else { Default::default() };
+            println!("\n== Fig 12 ==\n{}", bench::fig12::run(&o).0.render());
+        }
+        "fig13" => {
+            let o = if quick { bench::fig13::Fig13Opts::quick() } else { Default::default() };
+            println!("\n== Fig 13 ==\n{}", bench::fig13::run(&o).0.render());
+        }
+        "overhead" => {
+            let o = if quick { bench::overhead::OverheadOpts::quick() } else { Default::default() };
+            println!("\n== E8 overhead ==\n{}", bench::overhead::run(&o).render());
+        }
+        "ablation" => {
+            let o = if quick { bench::ablation::AblationOpts::quick() } else { Default::default() };
+            println!("\n== E9 ablation ==\n{}", bench::ablation::run(&o).render());
+        }
+        other => panic!("unknown bench {other:?}"),
+    };
+    if which == "all" {
+        for name in ["fig8", "fig9", "fig11", "fig12", "fig13", "overhead", "ablation"] {
+            run_one(name);
+        }
+    } else {
+        run_one(which);
+    }
+}
+
+fn cmd_info(args: &Args) {
+    // E1: QR graph statistics at paper scale.
+    let tiles = if args.flag("quick") { 8 } else { 32 };
+    let mut s = Scheduler::new(SchedConfig::new(4)).unwrap();
+    qr::build_tasks(&mut s, tiles, tiles);
+    s.prepare().unwrap();
+    println!("E1 qr {tiles}x{tiles} tiles: {}", s.stats());
+    println!(
+        "   critical path {} units of total work {} (max speedup {:.1})",
+        s.critical_path(),
+        s.total_work(),
+        s.total_work() as f64 / s.critical_path() as f64
+    );
+
+    // E4: Barnes-Hut graph statistics.
+    let n = if args.flag("quick") { 50_000 } else { 1_000_000 };
+    let n_task = if args.flag("quick") { 1200 } else { 5000 };
+    let tree = nbody::Octree::build(nbody::uniform_cloud(n, 1234), 100);
+    let state = nbody::NBodyState::from_tree(tree);
+    let mut s = Scheduler::new(SchedConfig::new(4)).unwrap();
+    let g = nbody::build_tasks(&mut s, &state, n_task);
+    s.prepare().unwrap();
+    println!("E4 bh {n} particles: {}", s.stats());
+    println!(
+        "   per-type: self={} pair-pp={} pair-pc={} com={}",
+        g.counts[0], g.counts[1], g.counts[2], g.counts[3]
+    );
+}

@@ -1,0 +1,232 @@
+//! Gadget-2 stand-in: a *traditional* Barnes-Hut implementation — one
+//! tree walk per particle with a geometric opening criterion, statically
+//! domain-decomposed across ranks with bulk-synchronous steps (see
+//! DESIGN.md §Hardware-substitutions).
+//!
+//! Differences from the task-based solver that this baseline preserves
+//! (they are what Fig. 11 measures):
+//! * per-particle pointer-chasing walks instead of per-leaf walks over
+//!   contiguous particles → worse cache behaviour (modelled as a
+//!   per-interaction cost penalty calibrated from the paper's measured
+//!   1.9× single-core gap);
+//! * static equal-count domain decomposition instead of dynamic
+//!   work-stealing → load imbalance;
+//! * bulk-synchronous steps → stragglers dominate.
+
+use super::kernels::{interact_com, EPS2};
+use super::octree::{Cell, CellId, Octree, ROOT};
+use super::part::Part;
+
+/// Opening criterion: open a node when `h / d > theta` (Gadget's
+/// classic Barnes-Hut criterion; the paper uses θ = 0.5).
+pub struct TreeWalker<'t> {
+    pub tree: &'t Octree,
+    pub coms: Vec<[f64; 4]>,
+    pub theta: f64,
+}
+
+impl<'t> TreeWalker<'t> {
+    pub fn new(tree: &'t Octree, theta: f64) -> Self {
+        // Bottom-up COM pass (children after parents in the arena).
+        let mut coms = vec![[0.0f64; 4]; tree.cells.len()];
+        for ci in (0..tree.cells.len()).rev() {
+            let c = &tree.cells[ci];
+            let mut acc = [0.0f64; 4];
+            if let Some(pr) = c.progeny {
+                for ch in pr {
+                    let com = coms[ch];
+                    acc[3] += com[3];
+                    for d in 0..3 {
+                        acc[d] += com[d] * com[3];
+                    }
+                }
+            } else {
+                for p in &tree.parts[c.first..c.first + c.count] {
+                    acc[3] += p.mass;
+                    for d in 0..3 {
+                        acc[d] += p.x[d] * p.mass;
+                    }
+                }
+            }
+            if acc[3] > 0.0 {
+                for d in 0..3 {
+                    acc[d] /= acc[3];
+                }
+            }
+            coms[ci] = acc;
+        }
+        Self { tree, coms, theta }
+    }
+
+    /// Walk the tree for one particle, accumulating acceleration into
+    /// `p.a` and returning the number of interactions performed (the
+    /// per-particle work measure used by the decomposition model).
+    pub fn walk(&self, p: &mut Part) -> usize {
+        self.walk_node(p, ROOT)
+    }
+
+    fn walk_node(&self, p: &mut Part, node: CellId) -> usize {
+        let c: &Cell = &self.tree.cells[node];
+        if c.count == 0 {
+            return 0;
+        }
+        let com = self.coms[node];
+        let dx = [com[0] - p.x[0], com[1] - p.x[1], com[2] - p.x[2]];
+        let d2 = dx[0] * dx[0] + dx[1] * dx[1] + dx[2] * dx[2];
+        let open = c.h * c.h > self.theta * self.theta * d2;
+        if !open && !Self::contains(c, p) {
+            interact_com(p, &[com[0], com[1], com[2]], com[3]);
+            return 1;
+        }
+        if let Some(pr) = c.progeny {
+            pr.iter().map(|&ch| self.walk_node(p, ch)).sum()
+        } else {
+            // Leaf: direct interactions (skipping self).
+            let mut n = 0;
+            for q in &self.tree.parts[c.first..c.first + c.count] {
+                if q.id == p.id {
+                    continue;
+                }
+                let dx = [q.x[0] - p.x[0], q.x[1] - p.x[1], q.x[2] - p.x[2]];
+                let r2 = dx[0] * dx[0] + dx[1] * dx[1] + dx[2] * dx[2] + EPS2;
+                let inv_r = 1.0 / r2.sqrt();
+                let w = q.mass * inv_r * inv_r * inv_r;
+                for d in 0..3 {
+                    p.a[d] += w * dx[d];
+                }
+                n += 1;
+            }
+            n
+        }
+    }
+
+    fn contains(c: &Cell, p: &Part) -> bool {
+        (0..3).all(|d| p.x[d] >= c.loc[d] && p.x[d] < c.loc[d] + c.h)
+    }
+
+    /// Full serial solve: walk every particle; returns (particles with
+    /// accelerations, per-particle interaction counts).
+    pub fn solve(&self) -> (Vec<Part>, Vec<usize>) {
+        let mut out = self.tree.parts.clone();
+        let mut work = Vec::with_capacity(out.len());
+        for p in out.iter_mut() {
+            p.a = [0.0; 3];
+            work.push(self.walk(p));
+        }
+        (out, work)
+    }
+}
+
+/// Bulk-synchronous static-decomposition time model for the Fig. 11
+/// comparator. Particles are split into `ranks` contiguous equal-count
+/// domains (Gadget's space-filling-curve decomposition over an already
+/// hierarchically sorted array is approximately this); each rank walks
+/// its particles; a step ends when the slowest rank finishes, plus a
+/// per-step communication/tree-exchange term that grows with ranks.
+///
+/// `ns_per_interaction` is calibrated so that the single-rank time
+/// matches the measured serial walk; `comm_ns(ranks)` models the MPI
+/// overhead (α·N^(2/3)·ranks^(1/3) ghost-exchange scaling).
+pub fn bsp_times(work: &[usize], ranks: usize, ns_per_interaction: f64, comm_alpha: f64) -> u64 {
+    assert!(ranks > 0);
+    let n = work.len();
+    let per = n.div_ceil(ranks);
+    let mut max_domain = 0.0f64;
+    for r in 0..ranks {
+        let lo = r * per;
+        let hi = ((r + 1) * per).min(n);
+        if lo >= hi {
+            continue;
+        }
+        let w: f64 = work[lo..hi].iter().map(|&x| x as f64).sum();
+        max_domain = max_domain.max(w);
+    }
+    let compute = max_domain * ns_per_interaction;
+    let comm = if ranks > 1 {
+        comm_alpha * (n as f64).powf(2.0 / 3.0) * (ranks as f64).powf(1.0 / 3.0)
+    } else {
+        0.0
+    };
+    (compute + comm) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nbody::direct::{direct_sum, rms_rel_error};
+    use crate::nbody::part::uniform_cloud;
+
+    #[test]
+    fn walk_matches_direct_for_tiny_theta() {
+        // θ → 0 never approximates: must equal the direct sum exactly.
+        let cloud = uniform_cloud(400, 31);
+        let tree = Octree::build(cloud.clone(), 32);
+        let walker = TreeWalker::new(&tree, 1e-9);
+        let (got, _) = walker.solve();
+        let want = direct_sum(&cloud);
+        let rel = rms_rel_error(&got, &want);
+        assert!(rel < 1e-12, "θ→0 walk must be exact, got {rel}");
+    }
+
+    #[test]
+    fn walk_accuracy_at_half_theta() {
+        let cloud = uniform_cloud(2000, 32);
+        let tree = Octree::build(cloud.clone(), 64);
+        let walker = TreeWalker::new(&tree, 0.5);
+        let (got, work) = walker.solve();
+        let want = direct_sum(&cloud);
+        let rel = rms_rel_error(&got, &want);
+        assert!(rel < 0.02, "θ=0.5 error {rel}");
+        // and it must be cheaper than direct summation (N(N-1) directed
+        // interactions); at N=2000 the tree already saves >60%.
+        let total: usize = work.iter().sum();
+        assert!(total < 2000 * 1999 * 4 / 10, "walk did {total} interactions");
+    }
+
+    #[test]
+    fn theta_tradeoff_monotone() {
+        let cloud = uniform_cloud(1500, 33);
+        let tree = Octree::build(cloud.clone(), 64);
+        let want = direct_sum(&cloud);
+        let mut last_work = usize::MAX;
+        for theta in [0.3, 0.6, 0.9] {
+            let walker = TreeWalker::new(&tree, theta);
+            let (got, work) = walker.solve();
+            let total: usize = work.iter().sum();
+            assert!(total < last_work, "larger θ must do less work");
+            last_work = total;
+            let rel = rms_rel_error(&got, &want);
+            assert!(rel < 0.05, "θ={theta} error {rel}");
+        }
+    }
+
+    #[test]
+    fn bsp_single_rank_is_serial_work() {
+        let work = vec![10usize; 100];
+        let t1 = bsp_times(&work, 1, 2.0, 1000.0);
+        assert_eq!(t1, 2000);
+    }
+
+    #[test]
+    fn bsp_imbalance_and_comm_hurt() {
+        // Skewed work: first half heavy.
+        let mut work = vec![1usize; 1000];
+        for w in work.iter_mut().take(500) {
+            *w = 9;
+        }
+        let t1 = bsp_times(&work, 1, 1.0, 50.0);
+        let t2 = bsp_times(&work, 2, 1.0, 50.0);
+        // Perfect split would be t1/2 = 2500; static split gives 4500+comm.
+        assert!(t2 > t1 / 2, "imbalance must show: {t2} vs {}", t1 / 2);
+        let t2_nocomm = bsp_times(&work, 2, 1.0, 0.0);
+        assert!(t2 > t2_nocomm);
+    }
+
+    #[test]
+    fn bsp_more_ranks_never_slower_compute() {
+        let work: Vec<usize> = (0..1024).map(|i| 1 + i % 7).collect();
+        let t8 = bsp_times(&work, 8, 1.0, 0.0);
+        let t64 = bsp_times(&work, 64, 1.0, 0.0);
+        assert!(t64 <= t8);
+    }
+}

@@ -1,0 +1,106 @@
+//! O(N²) direct-summation oracle for the Barnes-Hut verification
+//! (identical force law and softening as the tree kernels).
+
+use super::kernels::EPS2;
+use super::part::Part;
+
+/// Direct sum over all pairs; returns particles ordered by `id` with
+/// accelerations filled in (input order irrelevant).
+pub fn direct_sum(parts: &[Part]) -> Vec<Part> {
+    let mut out: Vec<Part> = parts.to_vec();
+    out.sort_unstable_by_key(|p| p.id);
+    for p in out.iter_mut() {
+        p.a = [0.0; 3];
+    }
+    for i in 0..out.len() {
+        let (head, tail) = out.split_at_mut(i + 1);
+        let pi = &mut head[i];
+        for pj in tail.iter_mut() {
+            let dx = [
+                pj.x[0] - pi.x[0],
+                pj.x[1] - pi.x[1],
+                pj.x[2] - pi.x[2],
+            ];
+            let r2 = dx[0] * dx[0] + dx[1] * dx[1] + dx[2] * dx[2] + EPS2;
+            let inv_r = 1.0 / r2.sqrt();
+            let inv_r3 = inv_r * inv_r * inv_r;
+            for d in 0..3 {
+                pi.a[d] += pj.mass * inv_r3 * dx[d];
+                pj.a[d] -= pi.mass * inv_r3 * dx[d];
+            }
+        }
+    }
+    out
+}
+
+/// RMS relative error of accelerations `got` vs the oracle `want`
+/// (both keyed by particle id).
+pub fn rms_rel_error(got: &[Part], want: &[Part]) -> f64 {
+    assert_eq!(got.len(), want.len());
+    let mut by_id: Vec<&Part> = want.iter().collect();
+    by_id.sort_unstable_by_key(|p| p.id);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for g in got {
+        let w = by_id[g.id as usize];
+        for d in 0..3 {
+            num += (g.a[d] - w.a[d]).powi(2);
+            den += w.a[d].powi(2);
+        }
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nbody::part::uniform_cloud;
+
+    #[test]
+    fn two_body() {
+        let parts = vec![
+            Part::at([0.0, 0.0, 0.0], 1.0, 0),
+            Part::at([2.0, 0.0, 0.0], 4.0, 1),
+        ];
+        let out = direct_sum(&parts);
+        assert!((out[0].a[0] - 1.0).abs() < 1e-9); // 4/4
+        assert!((out[1].a[0] + 0.25).abs() < 1e-9); // -1/4
+    }
+
+    #[test]
+    fn momentum_conserved() {
+        let parts = uniform_cloud(200, 5);
+        let out = direct_sum(&parts);
+        let mut p = [0.0; 3];
+        for q in &out {
+            for d in 0..3 {
+                p[d] += q.mass * q.a[d];
+            }
+        }
+        for d in 0..3 {
+            assert!(p[d].abs() < 1e-12, "net force {p:?}");
+        }
+    }
+
+    #[test]
+    fn order_independent() {
+        let parts = uniform_cloud(50, 6);
+        let mut rev = parts.clone();
+        rev.reverse();
+        let a = direct_sum(&parts);
+        let b = direct_sum(&rev);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            for d in 0..3 {
+                assert!((x.a[d] - y.a[d]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn rms_error_zero_on_self() {
+        let parts = uniform_cloud(30, 7);
+        let out = direct_sum(&parts);
+        assert_eq!(rms_rel_error(&out, &out), 0.0);
+    }
+}

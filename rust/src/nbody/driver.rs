@@ -1,0 +1,159 @@
+//! End-to-end Barnes-Hut driver: tree build → task graph → run
+//! (threaded or virtual-time), plus the cost model used for the
+//! Fig. 11/12/13 simulations.
+
+use crate::coordinator::{
+    ContentionCost, CostModel, RunMetrics, SchedConfig, Scheduler, SimCtx, TaskView,
+};
+
+use super::kernels::NBodyState;
+use super::octree::Octree;
+use super::part::Part;
+use super::tasks::{build_tasks, exec_task, NbGraph};
+
+/// Outcome of a Barnes-Hut run.
+pub struct NbRun {
+    pub metrics: RunMetrics,
+    pub graph: NbGraph,
+}
+
+/// Build the tree and solve on real threads; returns the particles with
+/// accelerations plus run metrics.
+pub fn run_threaded(
+    parts: Vec<Part>,
+    n_max: usize,
+    n_task: usize,
+    config: SchedConfig,
+    nr_threads: usize,
+) -> crate::coordinator::Result<(Vec<Part>, NbRun)> {
+    let tree = Octree::build(parts, n_max);
+    let state = NBodyState::from_tree(tree);
+    let mut sched = Scheduler::new(config)?;
+    let graph = build_tasks(&mut sched, &state, n_task);
+    sched.prepare()?;
+    let metrics = sched.run(nr_threads, |view| exec_task(&state, view))?;
+    Ok((state.into_parts(), NbRun { metrics, graph }))
+}
+
+/// Cost model for the Barnes-Hut simulation. Task costs are interaction
+/// counts (`count²`, `ni·nj`, walk-scaled `count`); `ns_per_unit` is the
+/// calibrated time per interaction. The memory-bandwidth contention of
+/// the Opteron's shared L2 (Fig. 13: pair types +30–40% past 32 cores,
+/// particle–cell only +10%) is modelled by [`ContentionCost`] with
+/// per-type sensitivities `[self, pp, pc, com]`.
+pub fn nb_cost_model(ns_per_unit: f64) -> ContentionCost<NbScale> {
+    ContentionCost {
+        base: NbScale { ns_per_unit },
+        // §4.2/Fig 13: pair-interaction types are memory-bound (+30-40%),
+        // the compute-dense particle-cell walks only +10%.
+        sensitivity: vec![0.35, 0.40, 0.10, 0.10],
+        // Opteron 6376: 32 two-core modules sharing L2.
+        machine_modules: 32,
+    }
+}
+
+/// Plain linear scaling of interaction-count costs.
+pub struct NbScale {
+    pub ns_per_unit: f64,
+}
+
+impl CostModel for NbScale {
+    fn duration_ns(&self, view: TaskView<'_>, _ctx: &SimCtx) -> u64 {
+        ((view.cost.max(1) as f64) * self.ns_per_unit).max(1.0) as u64
+    }
+}
+
+/// Schedule the Barnes-Hut task graph for `parts` on `cores` virtual
+/// cores (no numerics — durations from `model`).
+pub fn run_sim<M: CostModel>(
+    parts: Vec<Part>,
+    n_max: usize,
+    n_task: usize,
+    config: SchedConfig,
+    cores: usize,
+    model: &M,
+) -> crate::coordinator::Result<NbRun> {
+    let tree = Octree::build(parts, n_max);
+    let state = NBodyState::from_tree(tree);
+    let mut sched = Scheduler::new(config)?;
+    let graph = build_tasks(&mut sched, &state, n_task);
+    sched.prepare()?;
+    let metrics = sched.run_sim(cores, model)?;
+    Ok(NbRun { metrics, graph })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nbody::direct::{direct_sum, rms_rel_error};
+    use crate::nbody::part::{plummer_cloud, uniform_cloud};
+
+    #[test]
+    fn threaded_solve_accurate() {
+        let cloud = uniform_cloud(2500, 51);
+        let (got, run) =
+            run_threaded(cloud.clone(), 64, 300, SchedConfig::new(2), 2).unwrap();
+        let want = direct_sum(&cloud);
+        let rel = rms_rel_error(&got, &want);
+        assert!(rel < 0.02, "force error {rel}");
+        assert!(run.metrics.tasks_run > 10);
+    }
+
+    #[test]
+    fn plummer_cloud_solves() {
+        // Non-uniform tree exercises the unbalanced recursion paths.
+        let cloud = plummer_cloud(2500, 52);
+        let (got, _) = run_threaded(cloud.clone(), 32, 200, SchedConfig::new(4), 4).unwrap();
+        let want = direct_sum(&cloud);
+        let rel = rms_rel_error(&got, &want);
+        assert!(rel < 0.03, "plummer force error {rel}");
+    }
+
+    #[test]
+    fn sim_scales() {
+        let t = |cores: usize| {
+            run_sim(
+                uniform_cloud(20_000, 53),
+                100,
+                800,
+                SchedConfig::new(cores),
+                cores,
+                &NbScale { ns_per_unit: 5.0 },
+            )
+            .unwrap()
+            .metrics
+            .elapsed_ns
+        };
+        let t1 = t(1);
+        let t8 = t(8);
+        let speedup = t1 as f64 / t8 as f64;
+        assert!(speedup > 4.0, "BH sim speedup {speedup}");
+    }
+
+    #[test]
+    fn contention_model_shows_fig13_knee() {
+        // With the contention model, 64-core efficiency must drop below
+        // 32-core efficiency scaled — the Fig 11/13 plateau.
+        let run = |cores: usize| {
+            run_sim(
+                uniform_cloud(20_000, 54),
+                100,
+                800,
+                SchedConfig::new(cores),
+                cores,
+                &nb_cost_model(5.0),
+            )
+            .unwrap()
+            .metrics
+        };
+        let m1 = run(1);
+        let m32 = run(32);
+        let m64 = run(64);
+        let eff32 = m32.parallel_efficiency(m1.elapsed_ns);
+        let eff64 = m64.parallel_efficiency(m1.elapsed_ns);
+        assert!(
+            eff64 < eff32,
+            "contention must flatten scaling: eff32={eff32:.2} eff64={eff64:.2}"
+        );
+    }
+}

@@ -1,0 +1,20 @@
+//! Task-based Barnes-Hut N-body substrate (paper §4.2).
+//!
+//! An octree with hierarchically sorted contiguous particle storage
+//! (Fig. 10), three interaction task types plus per-cell COM tasks
+//! (Fig. 16), conflicts via hierarchical cell resources, a direct-sum
+//! oracle, and a traditional per-particle treewalk baseline (the
+//! Gadget-2 stand-in of Fig. 11).
+pub mod baseline;
+pub mod direct;
+pub mod driver;
+pub mod kernels;
+pub mod octree;
+pub mod part;
+pub mod tasks;
+
+pub use driver::{nb_cost_model, run_sim, run_threaded, NbRun, NbScale};
+pub use kernels::NBodyState;
+pub use octree::{Cell, CellId, Octree, ROOT};
+pub use part::{plummer_cloud, uniform_cloud, Part};
+pub use tasks::{build_tasks, exec_task, NbGraph, NbTask};

@@ -1,0 +1,325 @@
+//! Octree with hierarchical contiguous particle storage (paper §4.2,
+//! Fig. 10): every cell, at every level, addresses its particles as a
+//! contiguous range `[first, first+count)` of the single global `parts`
+//! array. Sorting into this layout is a recursive 8-way partition
+//! (QuickSort-like, O(N log N)).
+//!
+//! Cells carry integer coordinates `(level, ix, iy, iz)` so adjacency
+//! ("are two boxes touching?") is exact integer arithmetic — the
+//! criterion both the pair tasks and the particle–cell tree-walk use.
+
+use super::part::Part;
+
+/// Index of a cell in the arena.
+pub type CellId = usize;
+
+/// One octree cell (paper Appendix C `struct cell`, minus the task/res
+/// handles which live in the task-graph builder).
+#[derive(Clone, Debug)]
+pub struct Cell {
+    /// Geometric anchor (lower corner) and edge length.
+    pub loc: [f64; 3],
+    pub h: f64,
+    /// Refinement level (root = 0) and integer coords at that level.
+    pub level: u32,
+    pub ix: [u32; 3],
+    /// First particle and particle count in the global array.
+    pub first: usize,
+    pub count: usize,
+    /// Child cells (all 8 or none).
+    pub progeny: Option<[CellId; 8]>,
+    /// Hierarchical parent (root: None).
+    pub parent: Option<CellId>,
+}
+
+impl Cell {
+    pub fn is_split(&self) -> bool {
+        self.progeny.is_some()
+    }
+
+    /// Do the boxes of `a` and `b` touch (share a face/edge/corner or
+    /// overlap)? Exact in integer coordinates: scale both to the finer
+    /// level and compare Chebyshev distance of the index ranges.
+    pub fn touches(a: &Cell, b: &Cell) -> bool {
+        // Bring both to the finer of the two levels.
+        let (fine, coarse) = if a.level >= b.level { (a, b) } else { (b, a) };
+        let shift = fine.level - coarse.level;
+        let w = 1u64 << shift; // coarse cell width in fine units
+        (0..3).all(|d| {
+            let f = fine.ix[d] as u64;
+            let c0 = (coarse.ix[d] as u64) << shift;
+            let c1 = c0 + w - 1; // inclusive fine-index range of coarse box
+            // touching iff ranges [f,f] and [c0,c1] are within distance 1
+            f + 1 >= c0 && f <= c1 + 1
+        })
+    }
+
+    /// Is `anc` an ancestor of `c` (or `c` itself)?
+    pub fn is_ancestor_of(anc: &Cell, c: &Cell) -> bool {
+        if anc.level > c.level {
+            return false;
+        }
+        let shift = c.level - anc.level;
+        (0..3).all(|d| (c.ix[d] >> shift) == anc.ix[d])
+    }
+}
+
+/// The octree: cell arena + the hierarchically sorted particle array.
+pub struct Octree {
+    pub cells: Vec<Cell>,
+    pub parts: Vec<Part>,
+    /// Leaf capacity `n_max` used to build the tree.
+    pub n_max: usize,
+}
+
+/// Root cell id (always 0).
+pub const ROOT: CellId = 0;
+
+impl Octree {
+    /// Build the octree over `parts` (assumed inside `[0,1)³`), splitting
+    /// every cell with more than `n_max` particles (paper §4.2).
+    pub fn build(mut parts: Vec<Part>, n_max: usize) -> Self {
+        assert!(n_max > 0);
+        let n = parts.len();
+        let mut cells = vec![Cell {
+            loc: [0.0; 3],
+            h: 1.0,
+            level: 0,
+            ix: [0; 3],
+            first: 0,
+            count: n,
+            progeny: None,
+            parent: None,
+        }];
+        let mut stack = vec![ROOT];
+        while let Some(ci) = stack.pop() {
+            let (first, count, level, ix, loc, h) = {
+                let c = &cells[ci];
+                (c.first, c.count, c.level, c.ix, c.loc, c.h)
+            };
+            if count <= n_max {
+                continue;
+            }
+            // 8-way partition of parts[first..first+count] by octant.
+            let mid = [loc[0] + h / 2.0, loc[1] + h / 2.0, loc[2] + h / 2.0];
+            let octant = |p: &Part| -> usize {
+                ((p.x[0] >= mid[0]) as usize) << 2
+                    | ((p.x[1] >= mid[1]) as usize) << 1
+                    | ((p.x[2] >= mid[2]) as usize)
+            };
+            let seg = &mut parts[first..first + count];
+            let mut counts = [0usize; 8];
+            for p in seg.iter() {
+                counts[octant(p)] += 1;
+            }
+            let mut offsets = [0usize; 8];
+            for o in 1..8 {
+                offsets[o] = offsets[o - 1] + counts[o - 1];
+            }
+            // Stable counting sort into a scratch buffer (simple and
+            // O(count); the recursion totals O(N log N)).
+            let mut scratch = vec![Part::default(); seg.len()];
+            let mut cursor = offsets;
+            for p in seg.iter() {
+                let o = octant(p);
+                scratch[cursor[o]] = *p;
+                cursor[o] += 1;
+            }
+            seg.copy_from_slice(&scratch);
+            // Create the 8 children (even empty ones keep the arithmetic
+            // simple; empty cells generate no tasks).
+            let mut progeny = [0usize; 8];
+            for (o, slot) in progeny.iter_mut().enumerate() {
+                let dx = (o >> 2) & 1;
+                let dy = (o >> 1) & 1;
+                let dz = o & 1;
+                let child = Cell {
+                    loc: [
+                        loc[0] + dx as f64 * h / 2.0,
+                        loc[1] + dy as f64 * h / 2.0,
+                        loc[2] + dz as f64 * h / 2.0,
+                    ],
+                    h: h / 2.0,
+                    level: level + 1,
+                    ix: [
+                        ix[0] * 2 + dx as u32,
+                        ix[1] * 2 + dy as u32,
+                        ix[2] * 2 + dz as u32,
+                    ],
+                    first: first + offsets[o],
+                    count: counts[o],
+                    progeny: None,
+                    parent: Some(ci),
+                };
+                let id = cells.len();
+                cells.push(child);
+                *slot = id;
+                if counts[o] > n_max {
+                    stack.push(id);
+                }
+            }
+            cells[ci].progeny = Some(progeny);
+        }
+        Self { cells, parts, n_max }
+    }
+
+    pub fn root(&self) -> &Cell {
+        &self.cells[ROOT]
+    }
+
+    /// All leaf (unsplit, non-empty) cell ids.
+    pub fn leaves(&self) -> Vec<CellId> {
+        (0..self.cells.len())
+            .filter(|&i| !self.cells[i].is_split() && self.cells[i].count > 0)
+            .collect()
+    }
+
+    /// Verify structural invariants (tests): every split cell's particle
+    /// range is the disjoint union of its children's; every particle is
+    /// inside its cell's box.
+    pub fn check(&self) -> Result<(), String> {
+        for (i, c) in self.cells.iter().enumerate() {
+            if let Some(pr) = c.progeny {
+                let mut covered = 0;
+                let mut cursor = c.first;
+                for &ch in &pr {
+                    let child = &self.cells[ch];
+                    if child.first != cursor {
+                        return Err(format!("cell {i}: child {ch} not contiguous"));
+                    }
+                    cursor += child.count;
+                    covered += child.count;
+                    if child.parent != Some(i) {
+                        return Err(format!("cell {i}: child {ch} parent link broken"));
+                    }
+                }
+                if covered != c.count {
+                    return Err(format!("cell {i}: children cover {covered}/{}", c.count));
+                }
+            } else if c.count > self.n_max {
+                return Err(format!("leaf {i} overfull: {} > {}", c.count, self.n_max));
+            }
+            for p in &self.parts[c.first..c.first + c.count] {
+                for d in 0..3 {
+                    if p.x[d] < c.loc[d] - 1e-12 || p.x[d] > c.loc[d] + c.h + 1e-12 {
+                        return Err(format!("particle {} outside cell {i}", p.id));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nbody::part::uniform_cloud;
+
+    #[test]
+    fn build_small() {
+        let tree = Octree::build(uniform_cloud(1000, 4), 100);
+        tree.check().unwrap();
+        assert!(tree.cells.len() > 1);
+        assert_eq!(tree.root().count, 1000);
+        // all particles present exactly once (ids are a permutation)
+        let mut ids: Vec<u32> = tree.parts.iter().map(|p| p.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn no_split_below_threshold() {
+        let tree = Octree::build(uniform_cloud(50, 5), 100);
+        assert_eq!(tree.cells.len(), 1);
+        assert!(!tree.root().is_split());
+    }
+
+    #[test]
+    fn uniform_tree_depth_matches_theory() {
+        // 4096 uniform particles, n_max=100: expect splits to depth 2
+        // (64 cells of ~64) — i.e. 1 + 8 + 64 = 73 cells.
+        let tree = Octree::build(uniform_cloud(4096, 6), 100);
+        tree.check().unwrap();
+        let max_level = tree.cells.iter().map(|c| c.level).max().unwrap();
+        assert_eq!(max_level, 2, "cells: {}", tree.cells.len());
+        assert_eq!(tree.cells.len(), 73);
+    }
+
+    #[test]
+    fn touches_same_level() {
+        let mk = |level: u32, ix: [u32; 3]| Cell {
+            loc: [0.0; 3],
+            h: 1.0 / (1 << level) as f64,
+            level,
+            ix,
+            first: 0,
+            count: 0,
+            progeny: None,
+            parent: None,
+        };
+        let a = mk(2, [1, 1, 1]);
+        assert!(Cell::touches(&a, &mk(2, [1, 1, 1])));
+        assert!(Cell::touches(&a, &mk(2, [2, 2, 2]))); // corner contact
+        assert!(Cell::touches(&a, &mk(2, [0, 1, 2])));
+        assert!(!Cell::touches(&a, &mk(2, [3, 1, 1])));
+        assert!(!Cell::touches(&a, &mk(2, [1, 3, 3])));
+    }
+
+    #[test]
+    fn touches_cross_level() {
+        let mk = |level: u32, ix: [u32; 3]| Cell {
+            loc: [0.0; 3],
+            h: 1.0 / (1 << level) as f64,
+            level,
+            ix,
+            first: 0,
+            count: 0,
+            progeny: None,
+            parent: None,
+        };
+        let coarse = mk(1, [0, 0, 0]); // covers fine ix 0..1 each dim
+        assert!(Cell::touches(&coarse, &mk(2, [2, 0, 0]))); // adjacent
+        assert!(Cell::touches(&coarse, &mk(2, [1, 1, 1]))); // inside
+        assert!(!Cell::touches(&coarse, &mk(2, [3, 0, 0])));
+        // symmetric
+        assert!(Cell::touches(&mk(2, [2, 0, 0]), &coarse));
+    }
+
+    #[test]
+    fn ancestor_check() {
+        let mk = |level: u32, ix: [u32; 3]| Cell {
+            loc: [0.0; 3],
+            h: 0.0,
+            level,
+            ix,
+            first: 0,
+            count: 0,
+            progeny: None,
+            parent: None,
+        };
+        let root = mk(0, [0, 0, 0]);
+        let deep = mk(3, [5, 2, 7]);
+        assert!(Cell::is_ancestor_of(&root, &deep));
+        assert!(Cell::is_ancestor_of(&mk(1, [1, 0, 1]), &deep)); // 5>>2=1, 2>>2=0, 7>>2=1
+        assert!(!Cell::is_ancestor_of(&mk(1, [0, 0, 1]), &deep));
+        assert!(!Cell::is_ancestor_of(&deep, &root));
+        assert!(Cell::is_ancestor_of(&deep, &deep));
+    }
+
+    #[test]
+    fn leaves_cover_all_particles() {
+        let tree = Octree::build(uniform_cloud(3000, 8), 64);
+        let total: usize = tree.leaves().iter().map(|&l| tree.cells[l].count).sum();
+        assert_eq!(total, 3000);
+    }
+
+    #[test]
+    fn plummer_tree_is_deeper() {
+        let u = Octree::build(uniform_cloud(5000, 1), 50);
+        let p = Octree::build(crate::nbody::part::plummer_cloud(5000, 1), 50);
+        p.check().unwrap();
+        let dmax = |t: &Octree| t.cells.iter().map(|c| c.level).max().unwrap();
+        assert!(dmax(&p) > dmax(&u), "clustered cloud must refine deeper");
+    }
+}

@@ -1,0 +1,105 @@
+//! Particle data (paper Appendix C `struct part`).
+
+/// One particle: position, accumulated acceleration, mass, id.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Part {
+    pub x: [f64; 3],
+    pub a: [f64; 3],
+    pub mass: f64,
+    pub id: u32,
+}
+
+impl Part {
+    pub fn at(x: [f64; 3], mass: f64, id: u32) -> Self {
+        Self { x, a: [0.0; 3], mass, id }
+    }
+}
+
+/// Generate `n` particles with iid uniform coordinates in `[0,1)³` and
+/// unit mass / n (paper §4.2: "1 000 000 particles with uniformly random
+/// coordinates in [0,1]³").
+pub fn uniform_cloud(n: usize, seed: u64) -> Vec<Part> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            Part::at(
+                [rng.f64(), rng.f64(), rng.f64()],
+                1.0 / n as f64,
+                i as u32,
+            )
+        })
+        .collect()
+}
+
+/// A centrally-concentrated Plummer-like cloud (used by the examples to
+/// exercise non-uniform trees).
+pub fn plummer_cloud(n: usize, seed: u64) -> Vec<Part> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            // Radius from the Plummer cumulative mass profile, clamped
+            // into the unit box around (0.5, 0.5, 0.5).
+            let m: f64 = rng.f64().max(1e-9);
+            let r = 0.1 / (m.powf(-2.0 / 3.0) - 1.0).max(1e-9).sqrt();
+            let r = r.min(0.45);
+            // Random direction.
+            let z = rng.range_f64(-1.0, 1.0);
+            let phi = rng.range_f64(0.0, 2.0 * std::f64::consts::PI);
+            let s = (1.0 - z * z).sqrt();
+            Part::at(
+                [
+                    0.5 + r * s * phi.cos(),
+                    0.5 + r * s * phi.sin(),
+                    0.5 + r * z,
+                ],
+                1.0 / n as f64,
+                i as u32,
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_in_unit_box() {
+        let ps = uniform_cloud(1000, 1);
+        assert_eq!(ps.len(), 1000);
+        for p in &ps {
+            for d in 0..3 {
+                assert!((0.0..1.0).contains(&p.x[d]));
+            }
+            assert!(p.a == [0.0; 3]);
+            assert!((p.mass - 1e-3).abs() < 1e-15);
+        }
+        // ids are the original order
+        assert_eq!(ps[7].id, 7);
+    }
+
+    #[test]
+    fn uniform_deterministic() {
+        assert_eq!(uniform_cloud(64, 9), uniform_cloud(64, 9));
+        assert_ne!(uniform_cloud(64, 9), uniform_cloud(64, 10));
+    }
+
+    #[test]
+    fn plummer_in_unit_box() {
+        let ps = plummer_cloud(2000, 3);
+        for p in &ps {
+            for d in 0..3 {
+                assert!((0.0..=1.0).contains(&p.x[d]), "{:?}", p.x);
+            }
+        }
+        // Concentrated: more than half within r < 0.2 of the center.
+        let close = ps
+            .iter()
+            .filter(|p| {
+                let dx = [p.x[0] - 0.5, p.x[1] - 0.5, p.x[2] - 0.5];
+                (dx[0] * dx[0] + dx[1] * dx[1] + dx[2] * dx[2]).sqrt() < 0.2
+            })
+            .count();
+        assert!(close > 1000, "only {close} particles near center");
+    }
+}

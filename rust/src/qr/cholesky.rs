@@ -1,0 +1,375 @@
+//! Tiled Cholesky factorization — the first of the three PLASMA
+//! algorithms of Buttari et al. (2009) that the paper's §4.1 builds on
+//! (the paper benchmarks QR; Cholesky exercises the scheduler with a
+//! sparser dependency structure and is included as the "more task types"
+//! extension workload).
+//!
+//! For an SPD matrix of `N × N` tiles, level k:
+//!
+//! | task  | where            | depends on                    | locks |
+//! |-------|------------------|-------------------------------|-------|
+//! | POTRF | i = j = k        | SYRK(k,k,k-1)                 | (k,k) |
+//! | TRSM  | i > k, j = k     | POTRF(k), GEMM(i,k,k-1)       | (i,k) |
+//! | SYRK  | i = j > k        | TRSM(i,k), SYRK(i,i,k-1)      | (i,i) |
+//! | GEMM  | i > j > k        | TRSM(i,k), TRSM(j,k), GEMM(i,j,k-1) | (i,j) |
+//!
+//! Kernels operate on the lower triangle; `L` ends up in the lower
+//! triangular tiles. Verification: `‖A − L·Lᵀ‖_F / ‖A‖_F`.
+
+use crate::coordinator::{payload, GraphBuilder, ResHandle, SchedConfig, TaskHandle};
+use crate::util::rng::Rng;
+
+use super::matrix::{fro_norm, TiledMatrix};
+
+/// Cholesky task types.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u32)]
+pub enum CholTask {
+    Potrf = 0,
+    Trsm = 1,
+    Syrk = 2,
+    Gemm = 3,
+}
+
+impl CholTask {
+    pub fn from_u32(x: u32) -> Self {
+        match x {
+            0 => Self::Potrf,
+            1 => Self::Trsm,
+            2 => Self::Syrk,
+            3 => Self::Gemm,
+            _ => panic!("unknown Cholesky task type {x}"),
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Native tile kernels (b × b row-major, f64)
+// ----------------------------------------------------------------------
+
+/// Unblocked Cholesky of one SPD tile: `A = L·Lᵀ`, L into the lower
+/// triangle (upper left untouched). Panics on non-positive pivots.
+pub fn potrf(a: &mut [f64], b: usize) {
+    for k in 0..b {
+        let mut d = a[k * b + k];
+        for p in 0..k {
+            d -= a[k * b + p] * a[k * b + p];
+        }
+        assert!(d > 0.0, "matrix not positive definite (pivot {k}: {d})");
+        let d = d.sqrt();
+        a[k * b + k] = d;
+        for i in k + 1..b {
+            let mut s = a[i * b + k];
+            for p in 0..k {
+                s -= a[i * b + p] * a[k * b + p];
+            }
+            a[i * b + k] = s / d;
+        }
+    }
+}
+
+/// Triangular solve: `B ← B · L⁻ᵀ` where `L` is the POTRF'd diagonal
+/// tile (lower). Applied to the sub-diagonal tiles of the panel.
+pub fn trsm(l: &[f64], b_tile: &mut [f64], b: usize) {
+    for r in 0..b {
+        for c in 0..b {
+            let mut s = b_tile[r * b + c];
+            for p in 0..c {
+                s -= b_tile[r * b + p] * l[c * b + p];
+            }
+            b_tile[r * b + c] = s / l[c * b + c];
+        }
+    }
+}
+
+/// Symmetric rank-k update of a diagonal tile: `C ← C − A·Aᵀ` (lower
+/// triangle only; upper is ignored by later kernels).
+pub fn syrk(a: &[f64], c: &mut [f64], b: usize) {
+    for r in 0..b {
+        for col in 0..=r {
+            let mut s = 0.0;
+            for p in 0..b {
+                s += a[r * b + p] * a[col * b + p];
+            }
+            c[r * b + col] -= s;
+        }
+    }
+}
+
+/// General update of an off-diagonal tile: `C ← C − A·Bᵀ`.
+pub fn gemm_nt(a: &[f64], bt: &[f64], c: &mut [f64], b: usize) {
+    for r in 0..b {
+        for col in 0..b {
+            let mut s = 0.0;
+            for p in 0..b {
+                s += a[r * b + p] * bt[col * b + p];
+            }
+            c[r * b + col] -= s;
+        }
+    }
+}
+
+/// Relative costs in b³ units.
+pub mod cost {
+    pub const POTRF: i64 = 1;
+    pub const TRSM: i64 = 3;
+    pub const SYRK: i64 = 3;
+    pub const GEMM: i64 = 6;
+}
+
+// ----------------------------------------------------------------------
+// Task graph
+// ----------------------------------------------------------------------
+
+pub struct CholGraph {
+    pub rid: Vec<ResHandle>,
+    pub n: usize,
+}
+
+pub fn decode(data: &[u8]) -> (usize, usize, usize) {
+    let v = payload::to_i32s(data);
+    (v[0] as usize, v[1] as usize, v[2] as usize)
+}
+
+fn add<B: GraphBuilder>(s: &mut B, ty: CholTask, i: usize, j: usize, k: usize, cost: i64) -> TaskHandle {
+    s.add_task(ty as u32, &payload::from_i32s(&[i as i32, j as i32, k as i32]), cost)
+}
+
+/// Build the Cholesky task graph for an `n × n` tile matrix.
+pub fn build_tasks<B: GraphBuilder>(sched: &mut B, n: usize) -> CholGraph {
+    let nq = sched.nr_queues();
+    let per_q = (n * n).div_ceil(nq);
+    let rid: Vec<ResHandle> = (0..n * n)
+        .map(|t| sched.add_resource(None, ((t / per_q).min(nq - 1)) as i32))
+        .collect();
+    let at = |i: usize, j: usize| j * n + i;
+    // last task touching tile (i, j)
+    let mut tid: Vec<Option<TaskHandle>> = vec![None; n * n];
+
+    for k in 0..n {
+        let t_potrf = add(sched, CholTask::Potrf, k, k, k, cost::POTRF);
+        sched.add_lock(t_potrf, rid[at(k, k)]);
+        if let Some(prev) = tid[at(k, k)] {
+            sched.add_unlock(prev, t_potrf);
+        }
+        tid[at(k, k)] = Some(t_potrf);
+
+        for i in k + 1..n {
+            let t_trsm = add(sched, CholTask::Trsm, i, k, k, cost::TRSM);
+            sched.add_lock(t_trsm, rid[at(i, k)]);
+            sched.add_use(t_trsm, rid[at(k, k)]);
+            sched.add_unlock(t_potrf, t_trsm);
+            if let Some(prev) = tid[at(i, k)] {
+                sched.add_unlock(prev, t_trsm);
+            }
+            tid[at(i, k)] = Some(t_trsm);
+        }
+        for i in k + 1..n {
+            let t_row_i = tid[at(i, k)].unwrap();
+            // SYRK on the diagonal tile (i, i).
+            let t_syrk = add(sched, CholTask::Syrk, i, i, k, cost::SYRK);
+            sched.add_lock(t_syrk, rid[at(i, i)]);
+            sched.add_use(t_syrk, rid[at(i, k)]);
+            sched.add_unlock(t_row_i, t_syrk);
+            if let Some(prev) = tid[at(i, i)] {
+                sched.add_unlock(prev, t_syrk);
+            }
+            tid[at(i, i)] = Some(t_syrk);
+            // GEMMs below the diagonal: tile (i, j), k < j < i.
+            for j in k + 1..i {
+                let t_gemm = add(sched, CholTask::Gemm, i, j, k, cost::GEMM);
+                sched.add_lock(t_gemm, rid[at(i, j)]);
+                sched.add_use(t_gemm, rid[at(i, k)]);
+                sched.add_use(t_gemm, rid[at(j, k)]);
+                sched.add_unlock(t_row_i, t_gemm);
+                sched.add_unlock(tid[at(j, k)].unwrap(), t_gemm);
+                if let Some(prev) = tid[at(i, j)] {
+                    sched.add_unlock(prev, t_gemm);
+                }
+                tid[at(i, j)] = Some(t_gemm);
+            }
+        }
+    }
+    CholGraph { rid, n }
+}
+
+/// Execute one Cholesky task against the tiled matrix.
+///
+/// Safety: per the graph above — writes under locks, reads of panel
+/// tiles ordered by dependencies.
+pub fn exec_task(mat: &TiledMatrix, view: crate::coordinator::TaskView<'_>) {
+    let (i, j, k) = decode(view.data);
+    let b = mat.b;
+    unsafe {
+        match CholTask::from_u32(view.type_id) {
+            CholTask::Potrf => potrf(mat.tile_mut(k, k), b),
+            CholTask::Trsm => trsm(mat.tile(k, k), mat.tile_mut(i, k), b),
+            CholTask::Syrk => syrk(mat.tile(i, k), mat.tile_mut(i, i), b),
+            CholTask::Gemm => {
+                gemm_nt(mat.tile(i, k), mat.tile(j, k), mat.tile_mut(i, j), b)
+            }
+        }
+    }
+}
+
+/// Generate a random SPD tiled matrix: `A = M·Mᵀ + n·I`.
+pub fn random_spd(b: usize, n: usize, seed: u64) -> TiledMatrix {
+    let dim = b * n;
+    let mut rng = Rng::new(seed);
+    let m: Vec<f64> = (0..dim * dim).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let mut a = vec![0.0; dim * dim];
+    for r in 0..dim {
+        for c in 0..=r {
+            let mut s = if r == c { dim as f64 } else { 0.0 };
+            for p in 0..dim {
+                s += m[r * dim + p] * m[c * dim + p];
+            }
+            a[r * dim + c] = s;
+            a[c * dim + r] = s;
+        }
+    }
+    TiledMatrix::from_dense(b, n, n, &a)
+}
+
+/// `‖A − L·Lᵀ‖_F / ‖A‖_F` using the lower-triangular tiles of the
+/// factorized matrix.
+pub fn residual(a0: &[f64], mat: &TiledMatrix) -> f64 {
+    let dim = mat.b * mat.nt;
+    let dense = mat.to_dense();
+    // Extract L (lower triangle incl. diagonal).
+    let mut l = vec![0.0; dim * dim];
+    for r in 0..dim {
+        for c in 0..=r {
+            l[r * dim + c] = dense[r * dim + c];
+        }
+    }
+    let mut diff = vec![0.0; dim * dim];
+    for r in 0..dim {
+        for c in 0..dim {
+            let mut s = 0.0;
+            for p in 0..=r.min(c) {
+                s += l[r * dim + p] * l[c * dim + p];
+            }
+            diff[r * dim + c] = a0[r * dim + c] - s;
+        }
+    }
+    fro_norm(&diff) / fro_norm(a0)
+}
+
+/// Factorize in place on `threads` workers.
+pub fn run_threaded(
+    mat: &TiledMatrix,
+    config: SchedConfig,
+    threads: usize,
+) -> crate::coordinator::Result<crate::coordinator::RunMetrics> {
+    let mut sched = crate::coordinator::Scheduler::new(config)?;
+    build_tasks(&mut sched, mat.nt);
+    sched.prepare()?;
+    sched.run(threads, |view| exec_task(mat, view))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Scheduler;
+
+    #[test]
+    fn potrf_single_tile() {
+        let mat = random_spd(6, 1, 1);
+        let a0 = mat.to_dense();
+        run_threaded(&mat, SchedConfig::new(1), 1).unwrap();
+        let res = residual(&a0, &mat);
+        assert!(res < 1e-12, "residual {res}");
+    }
+
+    #[test]
+    fn cholesky_multi_tile_multithread() {
+        for (b, n, threads) in [(4usize, 2usize, 2usize), (8, 4, 4), (4, 5, 3)] {
+            let mat = random_spd(b, n, (b + n) as u64);
+            let a0 = mat.to_dense();
+            run_threaded(&mat, SchedConfig::new(threads), threads).unwrap();
+            let res = residual(&a0, &mat);
+            assert!(res < 1e-12, "b={b} n={n}: residual {res}");
+        }
+    }
+
+    #[test]
+    fn task_counts_analytic() {
+        // N potrf + N(N-1)/2 trsm + N(N-1)/2 syrk + N(N-1)(N-2)/6 gemm.
+        let n = 6;
+        let mut s = Scheduler::new(SchedConfig::new(2)).unwrap();
+        build_tasks(&mut s, n);
+        s.prepare().unwrap();
+        let expected = n + n * (n - 1) / 2 * 2 + n * (n - 1) * (n - 2) / 6;
+        assert_eq!(s.stats().tasks, expected);
+        assert_eq!(s.stats().resources, n * n);
+        assert_eq!(s.stats().roots, 1, "only POTRF(0) ready initially");
+    }
+
+    #[test]
+    fn matches_reference_cholesky() {
+        // Compare L against a dense reference factorization.
+        let b = 4;
+        let n = 3;
+        let mat = random_spd(b, n, 9);
+        let a0 = mat.to_dense();
+        run_threaded(&mat, SchedConfig::new(2), 2).unwrap();
+        let dim = b * n;
+        let mut aref = a0.clone();
+        // dense reference potrf
+        potrf_dense(&mut aref, dim);
+        let dense = mat.to_dense();
+        for r in 0..dim {
+            for c in 0..=r {
+                assert!(
+                    (dense[r * dim + c] - aref[r * dim + c]).abs() < 1e-10,
+                    "L[{r},{c}]: {} vs {}",
+                    dense[r * dim + c],
+                    aref[r * dim + c]
+                );
+            }
+        }
+    }
+
+    fn potrf_dense(a: &mut [f64], n: usize) {
+        for k in 0..n {
+            let mut d = a[k * n + k];
+            for p in 0..k {
+                d -= a[k * n + p] * a[k * n + p];
+            }
+            let d = d.sqrt();
+            a[k * n + k] = d;
+            for i in k + 1..n {
+                let mut s = a[i * n + k];
+                for p in 0..k {
+                    s -= a[i * n + p] * a[k * n + p];
+                }
+                a[i * n + k] = s / d;
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "positive definite")]
+    fn rejects_indefinite_matrix() {
+        let b = 4;
+        let mut a = vec![0.0; b * b];
+        a[0] = -1.0;
+        potrf(&mut a, b);
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let m1 = random_spd(4, 3, 5);
+        let m2 = random_spd(4, 3, 5);
+        run_threaded(&m1, SchedConfig::new(1), 1).unwrap();
+        run_threaded(&m2, SchedConfig::new(4), 4).unwrap();
+        let (d1, d2) = (m1.to_dense(), m2.to_dense());
+        let dim = 12;
+        for r in 0..dim {
+            for c in 0..=r {
+                assert!((d1[r * dim + c] - d2[r * dim + c]).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! End-to-end tiled QR driver: builds the task graph, wires the
+//! execution function to a pluggable kernel backend (native rust or the
+//! AOT-compiled XLA artifacts), and runs it on the threaded executor or
+//! the virtual-time simulator.
+
+use crate::coordinator::{
+    CostModel, RunMetrics, SchedConfig, Scheduler, SimCtx, TaskView,
+};
+
+use super::kernels;
+use super::matrix::TiledMatrix;
+use super::tasks::{build_tasks, decode, QrGraph, QrTask};
+
+/// Pluggable tile-kernel backend. The native implementation lives in
+/// [`super::kernels`]; the XLA/PJRT-backed one in [`crate::runtime`]
+/// (see `rust/tests/xla_backend.rs` and `examples/e2e_xla.rs`).
+pub trait TileBackend: Sync {
+    fn geqrf(&self, a: &mut [f64], tau: &mut [f64], b: usize);
+    fn larft(&self, v: &[f64], tau: &[f64], c: &mut [f64], b: usize);
+    fn tsqrt(&self, r: &mut [f64], a: &mut [f64], tau: &mut [f64], b: usize);
+    fn ssrft(&self, v2: &[f64], tau: &[f64], c_kj: &mut [f64], c_ij: &mut [f64], b: usize);
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust kernels (used for calibration and the large benches).
+pub struct NativeBackend;
+
+impl TileBackend for NativeBackend {
+    fn geqrf(&self, a: &mut [f64], tau: &mut [f64], b: usize) {
+        kernels::geqrf(a, tau, b)
+    }
+    fn larft(&self, v: &[f64], tau: &[f64], c: &mut [f64], b: usize) {
+        kernels::larft_apply(v, tau, c, b)
+    }
+    fn tsqrt(&self, r: &mut [f64], a: &mut [f64], tau: &mut [f64], b: usize) {
+        kernels::tsqrt(r, a, tau, b)
+    }
+    fn ssrft(&self, v2: &[f64], tau: &[f64], c_kj: &mut [f64], c_ij: &mut [f64], b: usize) {
+        kernels::ssrft(v2, tau, c_kj, c_ij, b)
+    }
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Execute one QR task against the matrix.
+///
+/// Safety of the raw tile accesses: the task graph's locks and chains
+/// guarantee exclusivity — GEQRF/TSQRT own their V tiles via locks,
+/// LARFT/SSRFT read V tiles only after the producing task (dependency)
+/// and write their target tiles under locks; writes to the shared
+/// diagonal/row tiles are serialized by the `(i-1,j,k)` chains.
+pub fn exec_task<B: TileBackend>(mat: &TiledMatrix, backend: &B, view: TaskView<'_>) {
+    let (i, j, k) = decode(view.data);
+    let b = mat.b;
+    unsafe {
+        match QrTask::from_u32(view.type_id) {
+            QrTask::Geqrf => {
+                backend.geqrf(mat.tile_mut(k, k), mat.tau_diag_mut(k), b);
+            }
+            QrTask::Larft => {
+                backend.larft(mat.tile(k, k), mat.tau_diag(k), mat.tile_mut(k, j), b);
+            }
+            QrTask::Tsqrt => {
+                backend.tsqrt(mat.tile_mut(k, k), mat.tile_mut(i, k), mat.tau_ts_mut(i, k), b);
+            }
+            QrTask::Ssrft => {
+                backend.ssrft(
+                    mat.tile(i, k),
+                    mat.tau_ts(i, k),
+                    mat.tile_mut(k, j),
+                    mat.tile_mut(i, j),
+                    b,
+                );
+            }
+        }
+    }
+}
+
+/// Result of a full QR run.
+pub struct QrRun {
+    pub metrics: RunMetrics,
+    pub graph: QrGraph,
+}
+
+/// Factorize `mat` in place using `nr_threads` workers.
+pub fn run_threaded<B: TileBackend>(
+    mat: &TiledMatrix,
+    backend: &B,
+    config: SchedConfig,
+    nr_threads: usize,
+) -> crate::coordinator::Result<QrRun> {
+    let mut sched = Scheduler::new(config)?;
+    let graph = build_tasks(&mut sched, mat.mt, mat.nt);
+    sched.prepare()?;
+    let metrics = sched.run(nr_threads, |view| exec_task(mat, backend, view))?;
+    Ok(QrRun { metrics, graph })
+}
+
+/// Cost model for the QR simulation: task cost is in units of b³ flops;
+/// `ns_per_unit` is calibrated from a single-core native run (see
+/// `bench/fig8.rs`). QR kernels are compute-bound (each b×b tile is
+/// reused b times), so no memory-contention term is applied.
+pub struct QrCostModel {
+    pub ns_per_unit: f64,
+}
+
+impl CostModel for QrCostModel {
+    fn duration_ns(&self, view: TaskView<'_>, _ctx: &SimCtx) -> u64 {
+        ((view.cost as f64) * self.ns_per_unit).max(1.0) as u64
+    }
+}
+
+/// Schedule the QR task graph on `cores` virtual cores (no numerics:
+/// durations from `model`). Used for the Fig 8/9 strong-scaling curves.
+pub fn run_sim<M: CostModel>(
+    mt: usize,
+    nt: usize,
+    config: SchedConfig,
+    cores: usize,
+    model: &M,
+) -> crate::coordinator::Result<QrRun> {
+    let mut sched = Scheduler::new(config)?;
+    let graph = build_tasks(&mut sched, mt, nt);
+    sched.prepare()?;
+    let metrics = sched.run_sim(cores, model)?;
+    Ok(QrRun { metrics, graph })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qr::matrix::{fro_norm, gram};
+
+    /// ‖AᵀA − RᵀR‖_F / ‖AᵀA‖_F — orthogonal-invariance residual; tiny iff
+    /// the factorization is a valid QR of A.
+    pub fn qr_residual(a0: &[f64], mat: &TiledMatrix) -> f64 {
+        let rows = mat.mt * mat.b;
+        let cols = mat.nt * mat.b;
+        let r = mat.extract_r();
+        let g0 = gram(a0, rows, cols);
+        let gr = gram(&r, rows, cols);
+        let diff: Vec<f64> = g0.iter().zip(&gr).map(|(x, y)| x - y).collect();
+        fro_norm(&diff) / fro_norm(&g0)
+    }
+
+    #[test]
+    fn qr_2x2_tiles_single_thread() {
+        let mat = TiledMatrix::random(8, 2, 2, 1);
+        let a0 = mat.to_dense();
+        let run = run_threaded(&mat, &NativeBackend, SchedConfig::new(1), 1).unwrap();
+        assert_eq!(run.metrics.tasks_run, 5);
+        let res = qr_residual(&a0, &mat);
+        assert!(res < 1e-12, "residual {res}");
+    }
+
+    #[test]
+    fn qr_4x4_tiles_multithread() {
+        let mat = TiledMatrix::random(8, 4, 4, 2);
+        let a0 = mat.to_dense();
+        let run = run_threaded(&mat, &NativeBackend, SchedConfig::new(4), 4).unwrap();
+        // 4 GEQRF + 6 LARFT + 6 TSQRT + 14 SSRFT = 30 tasks for 4x4 tiles.
+        assert_eq!(run.metrics.tasks_run, 30);
+        let res = qr_residual(&a0, &mat);
+        assert!(res < 1e-12, "residual {res}");
+    }
+
+    #[test]
+    fn qr_matches_across_thread_counts() {
+        // The factorization is deterministic regardless of scheduling
+        // because every kernel's inputs are fixed by the graph.
+        let m1 = TiledMatrix::random(4, 3, 3, 3);
+        let m2 = TiledMatrix::random(4, 3, 3, 3);
+        run_threaded(&m1, &NativeBackend, SchedConfig::new(1), 1).unwrap();
+        run_threaded(&m2, &NativeBackend, SchedConfig::new(4), 4).unwrap();
+        let d1 = m1.to_dense();
+        let d2 = m2.to_dense();
+        for (x, y) in d1.iter().zip(&d2) {
+            assert!((x - y).abs() < 1e-13, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn qr_tall_matrix() {
+        let mat = TiledMatrix::random(4, 5, 2, 9);
+        let a0 = mat.to_dense();
+        run_threaded(&mat, &NativeBackend, SchedConfig::new(2), 2).unwrap();
+        let res = qr_residual(&a0, &mat);
+        assert!(res < 1e-12, "residual {res}");
+    }
+
+    #[test]
+    fn sim_runs_full_graph() {
+        let run = run_sim(8, 8, SchedConfig::new(4), 4, &QrCostModel { ns_per_unit: 100.0 })
+            .unwrap();
+        let n_tasks = 8 + 2 * (8 * 7 / 2) + 7 * 8 * 15 / 6;
+        assert_eq!(run.metrics.tasks_run, n_tasks);
+        assert!(run.metrics.check_no_worker_overlap());
+    }
+
+    #[test]
+    fn sim_scales_with_cores() {
+        let t = |cores| {
+            run_sim(
+                16,
+                16,
+                SchedConfig::new(cores),
+                cores,
+                &QrCostModel { ns_per_unit: 50.0 },
+            )
+            .unwrap()
+            .metrics
+            .elapsed_ns
+        };
+        let t1 = t(1);
+        let t8 = t(8);
+        let speedup = t1 as f64 / t8 as f64;
+        assert!(speedup > 4.0, "speedup {speedup} too low for 16x16 tiles on 8 cores");
+        assert!(speedup <= 8.001);
+    }
+}

@@ -1,0 +1,421 @@
+//! Native tile kernels for the tiled QR decomposition (paper §4.1,
+//! Buttari et al. 2009): GEQRF, LARFT-apply, TSQRT and SSRFT, operating
+//! on `b × b` row-major f64 tiles.
+//!
+//! These are the rust twins of the Pallas kernels in
+//! `python/compile/kernels/qr.py`; `python/tests/` checks the Pallas
+//! versions against the same math, and `rust/tests/xla_backend.rs`
+//! cross-checks the AOT-compiled HLO against these natives.
+//!
+//! Math: classic LAPACK-style Householder reflections,
+//! `H = I − τ v vᵀ` with `v[k] = 1` stored implicitly and the tail of
+//! `v` stored below the diagonal (GEQRF) or in the stacked tile (TSQRT).
+
+/// Householder QR of a single `b × b` tile, in place (LAPACK `dgeqr2`).
+/// On exit: R in the upper triangle, Householder vectors below the
+/// diagonal, `tau[k]` per reflector.
+pub fn geqrf(a: &mut [f64], tau: &mut [f64], b: usize) {
+    debug_assert_eq!(a.len(), b * b);
+    debug_assert_eq!(tau.len(), b);
+    for k in 0..b {
+        // Householder vector for column k, rows k..b.
+        let mut nrm2 = 0.0;
+        for i in k + 1..b {
+            nrm2 += a[i * b + k] * a[i * b + k];
+        }
+        let alpha = a[k * b + k];
+        let norm = (alpha * alpha + nrm2).sqrt();
+        if nrm2 == 0.0 {
+            // Column already zero below the diagonal: no reflection
+            // (LAPACK dlarfg convention: tau = 0, beta = alpha).
+            tau[k] = 0.0;
+            continue;
+        }
+        let beta = if alpha >= 0.0 { -norm } else { norm };
+        tau[k] = (beta - alpha) / beta;
+        let scale = 1.0 / (alpha - beta);
+        for i in k + 1..b {
+            a[i * b + k] *= scale;
+        }
+        a[k * b + k] = beta;
+        // Apply H_k to the trailing columns.
+        for j in k + 1..b {
+            let mut w = a[k * b + j];
+            for i in k + 1..b {
+                w += a[i * b + k] * a[i * b + j];
+            }
+            w *= tau[k];
+            a[k * b + j] -= w;
+            for i in k + 1..b {
+                a[i * b + j] -= w * a[i * b + k];
+            }
+        }
+    }
+}
+
+/// Apply `Qᵀ` from a GEQRF'd diagonal tile `v` (vectors below the
+/// diagonal) to another tile `c` in the same block row (the paper's
+/// DLARFT task; LAPACK `dormqr`-left-transpose, unblocked).
+pub fn larft_apply(v: &[f64], tau: &[f64], c: &mut [f64], b: usize) {
+    debug_assert_eq!(v.len(), b * b);
+    debug_assert_eq!(c.len(), b * b);
+    for k in 0..b {
+        if tau[k] == 0.0 {
+            continue;
+        }
+        for j in 0..b {
+            let mut w = c[k * b + j];
+            for i in k + 1..b {
+                w += v[i * b + k] * c[i * b + j];
+            }
+            w *= tau[k];
+            c[k * b + j] -= w;
+            for i in k + 1..b {
+                c[i * b + j] -= w * v[i * b + k];
+            }
+        }
+    }
+}
+
+/// QR of the `2b × b` stack `[R; A]` where `R` (the level-k diagonal
+/// tile) is upper triangular (the paper's DTSQRF task; PLASMA `dtsqrt`).
+/// On exit: updated `R`; `A` holds the dense part of the Householder
+/// vectors (`v = [e_k; A[:,k]]`), `tau[k]` per reflector.
+pub fn tsqrt(r: &mut [f64], a: &mut [f64], tau: &mut [f64], b: usize) {
+    debug_assert_eq!(r.len(), b * b);
+    debug_assert_eq!(a.len(), b * b);
+    debug_assert_eq!(tau.len(), b);
+    for k in 0..b {
+        // Column k spans r[k,k] (top) and a[0..b, k] (bottom); rows k+1..b
+        // of the top part are zero (R upper triangular) and stay zero.
+        let mut nrm2 = 0.0;
+        for i in 0..b {
+            nrm2 += a[i * b + k] * a[i * b + k];
+        }
+        let alpha = r[k * b + k];
+        let norm = (alpha * alpha + nrm2).sqrt();
+        if nrm2 == 0.0 {
+            tau[k] = 0.0;
+            continue;
+        }
+        let beta = if alpha >= 0.0 { -norm } else { norm };
+        tau[k] = (beta - alpha) / beta;
+        let scale = 1.0 / (alpha - beta);
+        for i in 0..b {
+            a[i * b + k] *= scale;
+        }
+        r[k * b + k] = beta;
+        // Apply to trailing columns of the stack.
+        for j in k + 1..b {
+            let mut w = r[k * b + j];
+            for i in 0..b {
+                w += a[i * b + k] * a[i * b + j];
+            }
+            w *= tau[k];
+            r[k * b + j] -= w;
+            for i in 0..b {
+                a[i * b + j] -= w * a[i * b + k];
+            }
+        }
+    }
+}
+
+/// Apply the TSQRT reflectors (dense parts in `v2`, from tile `(i,k)`)
+/// to the stacked pair `[c_kj; c_ij]` (the paper's DSSRFT task; PLASMA
+/// `dtsssrf`/`dssrfb` unblocked).
+pub fn ssrft(v2: &[f64], tau: &[f64], c_kj: &mut [f64], c_ij: &mut [f64], b: usize) {
+    debug_assert_eq!(v2.len(), b * b);
+    debug_assert_eq!(c_kj.len(), b * b);
+    debug_assert_eq!(c_ij.len(), b * b);
+    for k in 0..b {
+        if tau[k] == 0.0 {
+            continue;
+        }
+        for j in 0..b {
+            // v = [e_k; v2[:,k]] so vᵀ[c_kj; c_ij] = c_kj[k,:] + v2ᵀ c_ij.
+            let mut w = c_kj[k * b + j];
+            for i in 0..b {
+                w += v2[i * b + k] * c_ij[i * b + j];
+            }
+            w *= tau[k];
+            c_kj[k * b + j] -= w;
+            for i in 0..b {
+                c_ij[i * b + j] -= w * v2[i * b + k];
+            }
+        }
+    }
+}
+
+/// Asymptotic relative costs of the four kernels in units of `b³` flops
+/// (used as the paper's a-priori task costs; §4.1 "task costs were
+/// initialized to the asymptotic cost of the underlying operations").
+pub mod cost {
+    /// GEQRF ~ (4/3) b³.
+    pub const GEQRF: i64 = 4;
+    /// LARFT apply ~ 2 b³ per target tile... relative units ×3.
+    pub const LARFT: i64 = 6;
+    /// TSQRT ~ 2 b³ (structured stack).
+    pub const TSQRT: i64 = 6;
+    /// SSRFT ~ 4 b³ (two tiles updated per reflector).
+    pub const SSRFT: i64 = 12;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_tile(b: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..b * b).map(|_| rng.range_f64(-1.0, 1.0)).collect()
+    }
+
+    /// Dense reference QR via Householder on an `m × n` row-major matrix;
+    /// returns (v_and_r_packed, taus) exactly like geqrf but rectangular.
+    fn ref_geqrf(a: &mut [f64], m: usize, n: usize) -> Vec<f64> {
+        let mut tau = vec![0.0; n.min(m)];
+        for k in 0..n.min(m) {
+            let mut nrm2 = 0.0;
+            for i in k + 1..m {
+                nrm2 += a[i * n + k] * a[i * n + k];
+            }
+            let alpha = a[k * n + k];
+            let norm = (alpha * alpha + nrm2).sqrt();
+            if nrm2 == 0.0 {
+                continue;
+            }
+            let beta = if alpha >= 0.0 { -norm } else { norm };
+            tau[k] = (beta - alpha) / beta;
+            let scale = 1.0 / (alpha - beta);
+            for i in k + 1..m {
+                a[i * n + k] *= scale;
+            }
+            a[k * n + k] = beta;
+            for j in k + 1..n {
+                let mut w = a[k * n + j];
+                for i in k + 1..m {
+                    w += a[i * n + k] * a[i * n + j];
+                }
+                w *= tau[k];
+                a[k * n + j] -= w;
+                for i in k + 1..m {
+                    a[i * n + j] -= w * a[i * n + k];
+                }
+            }
+        }
+        tau
+    }
+
+    fn upper_abs(a: &[f64], m: usize, n: usize) -> Vec<f64> {
+        let mut r = vec![0.0; n * n];
+        for i in 0..n.min(m) {
+            for j in i..n {
+                r[i * n + j] = a[i * n + j].abs();
+            }
+        }
+        r
+    }
+
+    fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+        assert_eq!(a.len(), b.len());
+        let scale = b.iter().fold(1.0f64, |m, x| m.max(x.abs()));
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() <= tol * scale,
+                "{what}: idx {i}: {x} vs {y} (tol {tol})"
+            );
+        }
+    }
+
+    #[test]
+    fn geqrf_reproduces_r_of_reference() {
+        for b in [1usize, 2, 3, 5, 8, 16] {
+            let mut a = rand_tile(b, 100 + b as u64);
+            let a0 = a.clone();
+            let mut tau = vec![0.0; b];
+            geqrf(&mut a, &mut tau, b);
+            let mut aref = a0.clone();
+            ref_geqrf(&mut aref, b, b);
+            assert_close(
+                &upper_abs(&a, b, b),
+                &upper_abs(&aref, b, b),
+                1e-12,
+                &format!("R mismatch b={b}"),
+            );
+        }
+    }
+
+    #[test]
+    fn geqrf_preserves_gram() {
+        // AᵀA == RᵀR since Q is orthogonal.
+        let b = 8;
+        let a0 = rand_tile(b, 7);
+        let mut a = a0.clone();
+        let mut tau = vec![0.0; b];
+        geqrf(&mut a, &mut tau, b);
+        let g0 = crate::qr::matrix::gram(&a0, b, b);
+        let r = upper_of(&a, b);
+        let gr = crate::qr::matrix::gram(&r, b, b);
+        assert_close(&gr, &g0, 1e-12, "gram");
+    }
+
+    fn upper_of(a: &[f64], b: usize) -> Vec<f64> {
+        let mut r = vec![0.0; b * b];
+        for i in 0..b {
+            for j in i..b {
+                r[i * b + j] = a[i * b + j];
+            }
+        }
+        r
+    }
+
+    #[test]
+    fn geqrf_zero_matrix() {
+        let b = 4;
+        let mut a = vec![0.0; b * b];
+        let mut tau = vec![0.0; b];
+        geqrf(&mut a, &mut tau, b);
+        assert!(a.iter().all(|&x| x == 0.0));
+        assert!(tau.iter().all(|&t| t == 0.0));
+    }
+
+    #[test]
+    fn geqrf_identity_noop() {
+        let b = 4;
+        let mut a = vec![0.0; b * b];
+        for i in 0..b {
+            a[i * b + i] = 1.0;
+        }
+        let before = a.clone();
+        let mut tau = vec![0.0; b];
+        geqrf(&mut a, &mut tau, b);
+        assert_close(&a, &before, 1e-15, "identity should be a fixpoint");
+    }
+
+    #[test]
+    fn larft_apply_matches_full_factorization() {
+        // QR of [A | C] (b × 2b): factor with ref_geqrf; the right half
+        // after factoring must equal larft_apply(V from geqrf(A)) to C.
+        let b = 6;
+        let a0 = rand_tile(b, 21);
+        let c0 = rand_tile(b, 22);
+        // Full reference on b × 2b.
+        let n = 2 * b;
+        let mut full = vec![0.0; b * n];
+        for i in 0..b {
+            for j in 0..b {
+                full[i * n + j] = a0[i * b + j];
+                full[i * n + b + j] = c0[i * b + j];
+            }
+        }
+        ref_geqrf(&mut full, b, n);
+        // Tiled path.
+        let mut v = a0.clone();
+        let mut tau = vec![0.0; b];
+        geqrf(&mut v, &mut tau, b);
+        let mut c = c0.clone();
+        larft_apply(&v, &tau, &mut c, b);
+        let full_ref = &full;
+        let right_ref: Vec<f64> = (0..b)
+            .flat_map(|i| (0..b).map(move |j| full_ref[i * n + b + j]))
+            .collect();
+        assert_close(&c, &right_ref, 1e-12, "DLARFT");
+    }
+
+    #[test]
+    fn tsqrt_gram_preserved() {
+        // [R0; A] where R0 = R of geqrf(top): gram of the 2b × b stack
+        // must equal RᵀR of the tsqrt result.
+        let b = 5;
+        let mut top = rand_tile(b, 31);
+        let mut tau0 = vec![0.0; b];
+        geqrf(&mut top, &mut tau0, b);
+        let r0 = upper_of(&top, b);
+        let a0 = rand_tile(b, 32);
+        let mut stack = vec![0.0; 2 * b * b];
+        stack[..b * b].copy_from_slice(&r0);
+        stack[b * b..].copy_from_slice(&a0);
+        let g0 = crate::qr::matrix::gram(&stack, 2 * b, b);
+
+        let mut r = r0.clone();
+        let mut a = a0.clone();
+        let mut tau = vec![0.0; b];
+        tsqrt(&mut r, &mut a, &mut tau, b);
+        let r_up = upper_of(&r, b);
+        let gr = crate::qr::matrix::gram(&r_up, b, b);
+        assert_close(&gr, &g0, 1e-12, "tsqrt gram");
+        // R must match the reference QR of the stack up to row signs.
+        let mut stack_ref = stack.clone();
+        ref_geqrf(&mut stack_ref, 2 * b, b);
+        assert_close(
+            &upper_abs(&r, b, b),
+            &upper_abs(&stack_ref, 2 * b, b),
+            1e-12,
+            "tsqrt |R|",
+        );
+    }
+
+    #[test]
+    fn ssrft_matches_full_factorization() {
+        // Factor the 2b × 2b stack [[A, B], [C, D]] where the left column
+        // is eliminated via geqrf(A) then tsqrt(R, C). Applying the same
+        // transforms to [B; D] via larft_apply + ssrft must reproduce the
+        // reference QR of the full 2b × 2b matrix (up to signs on R).
+        let b = 4;
+        let a0 = rand_tile(b, 41);
+        let b0 = rand_tile(b, 42);
+        let c0 = rand_tile(b, 43);
+        let d0 = rand_tile(b, 44);
+        let n = 2 * b;
+        let mut full = vec![0.0; n * n];
+        for i in 0..b {
+            for j in 0..b {
+                full[i * n + j] = a0[i * b + j];
+                full[i * n + b + j] = b0[i * b + j];
+                full[(b + i) * n + j] = c0[i * b + j];
+                full[(b + i) * n + b + j] = d0[i * b + j];
+            }
+        }
+        let g_full = crate::qr::matrix::gram(&full, n, n);
+
+        // Tiled elimination of the first tile column.
+        let mut v = a0.clone();
+        let mut tau_g = vec![0.0; b];
+        geqrf(&mut v, &mut tau_g, b);
+        let mut bk = b0.clone();
+        larft_apply(&v, &tau_g, &mut bk, b);
+        let mut r = upper_of(&v, b);
+        let mut v2 = c0.clone();
+        let mut tau_t = vec![0.0; b];
+        tsqrt(&mut r, &mut v2, &mut tau_t, b);
+        let mut ckj = bk.clone();
+        let mut cij = d0.clone();
+        ssrft(&v2, &tau_t, &mut ckj, &mut cij, b);
+
+        // Second tile column: geqrf on the updated D block.
+        let mut v_d = cij.clone();
+        let mut tau_d = vec![0.0; b];
+        geqrf(&mut v_d, &mut tau_d, b);
+
+        // Assemble tiled R and compare grams (orthogonal invariance).
+        let mut r_tiled = vec![0.0; n * n];
+        for i in 0..b {
+            for j in 0..b {
+                if j >= i {
+                    r_tiled[i * n + j] = r[i * b + j];
+                    r_tiled[(b + i) * n + b + j] = if j >= i { v_d[i * b + j] } else { 0.0 };
+                }
+                r_tiled[i * n + b + j] = ckj[i * b + j];
+            }
+        }
+        // zero below diag within D tile handled above; compute gram.
+        let g_tiled = crate::qr::matrix::gram(&r_tiled, n, n);
+        assert_close(&g_tiled, &g_full, 1e-11, "2x2-tile gram");
+    }
+
+    #[test]
+    fn costs_are_ordered() {
+        assert!(cost::GEQRF < cost::SSRFT);
+        assert!(cost::LARFT <= cost::TSQRT);
+    }
+}

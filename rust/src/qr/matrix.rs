@@ -1,0 +1,251 @@
+//! Tiled matrix storage for the QR substrate (paper §4.1).
+//!
+//! The matrix is stored as `mt × nt` tiles of `b × b` doubles, each tile
+//! row-major and contiguous — the layout Buttari et al. (2009) use to make
+//! each kernel's working set cache-resident. Tiles are indexed
+//! column-major (`i + j*mt`), matching the paper's `rid[j*m + i]`.
+//!
+//! During a parallel run, tiles are mutated under scheduler-enforced
+//! exclusivity (locks + dependency chains), hence [`SharedGrid`].
+
+use crate::util::rng::Rng;
+use crate::util::shared::SharedGrid;
+
+/// An `mt × nt` grid of `b × b` f64 tiles.
+pub struct TiledMatrix {
+    /// Tile edge length.
+    pub b: usize,
+    /// Tile rows.
+    pub mt: usize,
+    /// Tile columns.
+    pub nt: usize,
+    tiles: SharedGrid<Vec<f64>>,
+    /// Householder tau vectors for the diagonal (GEQRF) factorizations,
+    /// one `b`-vector per level k.
+    taus_diag: SharedGrid<Vec<f64>>,
+    /// tau vectors for the TSQRT factorizations, one per (i, k) tile.
+    taus_ts: SharedGrid<Vec<f64>>,
+}
+
+impl TiledMatrix {
+    pub fn zeros(b: usize, mt: usize, nt: usize) -> Self {
+        assert!(b > 0 && mt > 0 && nt > 0);
+        Self {
+            b,
+            mt,
+            nt,
+            tiles: SharedGrid::from_vec(
+                (0..mt * nt).map(|_| vec![0.0; b * b]).collect(),
+            ),
+            taus_diag: SharedGrid::from_vec(
+                (0..mt.min(nt)).map(|_| vec![0.0; b]).collect(),
+            ),
+            taus_ts: SharedGrid::from_vec((0..mt * nt).map(|_| vec![0.0; b]).collect()),
+        }
+    }
+
+    /// Matrix with iid uniform [-1, 1) entries (the paper's random matrix).
+    pub fn random(b: usize, mt: usize, nt: usize, seed: u64) -> Self {
+        let m = Self::zeros(b, mt, nt);
+        let mut rng = Rng::new(seed);
+        for j in 0..nt {
+            for i in 0..mt {
+                // SAFETY: construction is single-threaded.
+                let t = unsafe { m.tiles.get_mut(i + j * mt) };
+                for x in t.iter_mut() {
+                    *x = rng.range_f64(-1.0, 1.0);
+                }
+            }
+        }
+        m
+    }
+
+    /// Build from a dense row-major `(mt*b) × (nt*b)` matrix.
+    pub fn from_dense(b: usize, mt: usize, nt: usize, dense: &[f64]) -> Self {
+        let cols = nt * b;
+        assert_eq!(dense.len(), mt * b * cols);
+        let m = Self::zeros(b, mt, nt);
+        for ti in 0..mt {
+            for tj in 0..nt {
+                let t = unsafe { m.tiles.get_mut(ti + tj * mt) };
+                for r in 0..b {
+                    for c in 0..b {
+                        t[r * b + c] = dense[(ti * b + r) * cols + tj * b + c];
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    /// Flatten back to a dense row-major matrix.
+    pub fn to_dense(&self) -> Vec<f64> {
+        let (b, mt, nt) = (self.b, self.mt, self.nt);
+        let cols = nt * b;
+        let mut dense = vec![0.0; mt * b * cols];
+        for ti in 0..mt {
+            for tj in 0..nt {
+                // SAFETY: caller holds &self outside any parallel run.
+                let t = unsafe { self.tiles.get(ti + tj * mt) };
+                for r in 0..b {
+                    for c in 0..b {
+                        dense[(ti * b + r) * cols + tj * b + c] = t[r * b + c];
+                    }
+                }
+            }
+        }
+        dense
+    }
+
+    #[inline]
+    pub fn tile_index(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < self.mt && j < self.nt);
+        i + j * self.mt
+    }
+
+    /// Raw tile access under scheduler-enforced exclusivity.
+    ///
+    /// # Safety
+    /// No other thread may access tile `(i, j)` concurrently (writes) —
+    /// guaranteed by the QR task graph's locks and dependency chains.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn tile_mut(&self, i: usize, j: usize) -> &mut [f64] {
+        self.tiles.get_mut(self.tile_index(i, j)).as_mut_slice()
+    }
+
+    /// # Safety
+    /// No other thread may *write* tile `(i, j)` concurrently.
+    pub unsafe fn tile(&self, i: usize, j: usize) -> &[f64] {
+        self.tiles.get(self.tile_index(i, j)).as_slice()
+    }
+
+    /// # Safety
+    /// As [`Self::tile_mut`], for the level-`k` diagonal tau vector.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn tau_diag_mut(&self, k: usize) -> &mut [f64] {
+        self.taus_diag.get_mut(k).as_mut_slice()
+    }
+
+    /// # Safety
+    /// As [`Self::tile`].
+    pub unsafe fn tau_diag(&self, k: usize) -> &[f64] {
+        self.taus_diag.get(k).as_slice()
+    }
+
+    /// # Safety
+    /// As [`Self::tile_mut`], for the (i,k) TSQRT tau vector.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn tau_ts_mut(&self, i: usize, k: usize) -> &mut [f64] {
+        self.taus_ts.get_mut(self.tile_index(i, k)).as_mut_slice()
+    }
+
+    /// # Safety
+    /// As [`Self::tile`].
+    pub unsafe fn tau_ts(&self, i: usize, k: usize) -> &[f64] {
+        self.taus_ts.get(self.tile_index(i, k)).as_slice()
+    }
+
+    /// Extract the upper-triangular factor R (dense row-major, full size).
+    /// Below-diagonal tiles hold Householder vectors, not zeros, so R is
+    /// read from the upper-triangular part only.
+    pub fn extract_r(&self) -> Vec<f64> {
+        let (b, mt, nt) = (self.b, self.mt, self.nt);
+        let rows = mt * b;
+        let cols = nt * b;
+        let dense = self.to_dense();
+        let mut r = vec![0.0; rows * cols];
+        for row in 0..rows.min(cols) {
+            for col in row..cols {
+                r[row * cols + col] = dense[row * cols + col];
+            }
+        }
+        r
+    }
+}
+
+/// Frobenius norm of a dense matrix.
+pub fn fro_norm(a: &[f64]) -> f64 {
+    a.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// `C = Aᵀ A` for a dense row-major `rows × cols` A (returns cols × cols).
+pub fn gram(a: &[f64], rows: usize, cols: usize) -> Vec<f64> {
+    assert_eq!(a.len(), rows * cols);
+    let mut g = vec![0.0; cols * cols];
+    for i in 0..cols {
+        for j in i..cols {
+            let mut s = 0.0;
+            for r in 0..rows {
+                s += a[r * cols + i] * a[r * cols + j];
+            }
+            g[i * cols + j] = s;
+            g[j * cols + i] = s;
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_roundtrip() {
+        let b = 3;
+        let (mt, nt) = (2, 2);
+        let dense: Vec<f64> = (0..(mt * b) * (nt * b)).map(|x| x as f64).collect();
+        let m = TiledMatrix::from_dense(b, mt, nt, &dense);
+        assert_eq!(m.to_dense(), dense);
+    }
+
+    #[test]
+    fn tile_indexing_column_major() {
+        let m = TiledMatrix::zeros(2, 3, 2);
+        assert_eq!(m.tile_index(0, 0), 0);
+        assert_eq!(m.tile_index(2, 0), 2);
+        assert_eq!(m.tile_index(0, 1), 3);
+    }
+
+    #[test]
+    fn random_is_deterministic_and_bounded() {
+        let a = TiledMatrix::random(4, 2, 2, 42).to_dense();
+        let b = TiledMatrix::random(4, 2, 2, 42).to_dense();
+        assert_eq!(a, b);
+        assert!(a.iter().all(|x| (-1.0..1.0).contains(x)));
+        let c = TiledMatrix::random(4, 2, 2, 43).to_dense();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn extract_r_upper_triangular() {
+        let b = 2;
+        let dense: Vec<f64> = (1..=16).map(|x| x as f64).collect();
+        let m = TiledMatrix::from_dense(b, 2, 2, &dense);
+        let r = m.extract_r();
+        for row in 0..4 {
+            for col in 0..4 {
+                if col < row {
+                    assert_eq!(r[row * 4 + col], 0.0);
+                } else {
+                    assert_eq!(r[row * 4 + col], dense[row * 4 + col]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gram_symmetric() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 3x2
+        let g = gram(&a, 3, 2);
+        assert_eq!(g.len(), 4);
+        assert!((g[0] - 35.0).abs() < 1e-12); // 1+9+25
+        assert!((g[3] - 56.0).abs() < 1e-12); // 4+16+36
+        assert_eq!(g[1], g[2]);
+        assert!((g[1] - 44.0).abs() < 1e-12); // 2+12+30
+    }
+
+    #[test]
+    fn fro_norm_basic() {
+        assert!((fro_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+}

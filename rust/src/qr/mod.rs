@@ -1,0 +1,18 @@
+//! Tiled QR decomposition substrate (paper §4.1, Buttari et al. 2009).
+//!
+//! A 2048×2048 matrix with 64×64 tiles factorized by four kernels
+//! (GEQRF/LARFT/TSQRT/SSRFT) whose task graph is scheduled by the
+//! QuickSched coordinator. Kernels run either natively ([`kernels`])
+//! or through the AOT-compiled Pallas/XLA artifacts ([`crate::runtime`]).
+//! [`cholesky`] adds the tiled Cholesky factorization (the sibling
+//! PLASMA algorithm from Buttari et al. 2009) as an extension workload.
+pub mod cholesky;
+pub mod driver;
+pub mod kernels;
+pub mod matrix;
+pub mod tasks;
+pub mod verify;
+
+pub use driver::{exec_task, run_sim, run_threaded, NativeBackend, QrCostModel, QrRun, TileBackend};
+pub use matrix::TiledMatrix;
+pub use tasks::{build_tasks, QrGraph, QrTask};

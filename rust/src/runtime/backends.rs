@@ -1,0 +1,296 @@
+//! Application backends over the PJRT runtime service: the task
+//! execution functions that run their numerics through the AOT-compiled
+//! Pallas/XLA artifacts instead of the native rust kernels.
+//!
+//! The scheduling layer is identical either way — these backends prove
+//! the three layers compose: L3 routes a task, the backend marshals the
+//! task's tiles/particles into `Tensor`s, the service executes the HLO
+//! lowered from the Layer-1 Pallas kernel, and the results land back in
+//! the shared state under the task's resource locks.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::service::{RuntimeService, Tensor};
+use crate::nbody::kernels::NBodyState;
+use crate::nbody::octree::{CellId, ROOT};
+use crate::nbody::tasks::NbTask;
+use crate::qr::driver::TileBackend;
+
+// ----------------------------------------------------------------------
+// QR
+// ----------------------------------------------------------------------
+
+/// [`TileBackend`] that dispatches every tile kernel to the AOT-compiled
+/// Pallas modules (`qr_*_<b>.hlo.txt`). Only tile sizes exported by
+/// `python/compile/model.py` (8, 64) are available.
+pub struct XlaTileBackend {
+    svc: Arc<RuntimeService>,
+}
+
+impl XlaTileBackend {
+    pub fn new(svc: Arc<RuntimeService>) -> Self {
+        Self { svc }
+    }
+
+    fn call(&self, name: &str, inputs: Vec<Tensor>) -> Vec<Tensor> {
+        // Task functions have no error channel; a failed kernel is a
+        // panic, which the executor surfaces as SchedError::WorkerPanic.
+        self.svc
+            .call(name, inputs)
+            .unwrap_or_else(|e| panic!("XLA kernel {name} failed: {e:#}"))
+    }
+}
+
+impl TileBackend for XlaTileBackend {
+    fn geqrf(&self, a: &mut [f64], tau: &mut [f64], b: usize) {
+        let out = self.call(
+            &format!("qr_geqrf_{b}"),
+            vec![Tensor::new(a.to_vec(), vec![b, b])],
+        );
+        a.copy_from_slice(&out[0].data);
+        tau.copy_from_slice(&out[1].data);
+    }
+
+    fn larft(&self, v: &[f64], tau: &[f64], c: &mut [f64], b: usize) {
+        let out = self.call(
+            &format!("qr_larft_{b}"),
+            vec![
+                Tensor::new(v.to_vec(), vec![b, b]),
+                Tensor::new(tau.to_vec(), vec![b]),
+                Tensor::new(c.to_vec(), vec![b, b]),
+            ],
+        );
+        c.copy_from_slice(&out[0].data);
+    }
+
+    fn tsqrt(&self, r: &mut [f64], a: &mut [f64], tau: &mut [f64], b: usize) {
+        let out = self.call(
+            &format!("qr_tsqrt_{b}"),
+            vec![
+                Tensor::new(r.to_vec(), vec![b, b]),
+                Tensor::new(a.to_vec(), vec![b, b]),
+            ],
+        );
+        r.copy_from_slice(&out[0].data);
+        a.copy_from_slice(&out[1].data);
+        tau.copy_from_slice(&out[2].data);
+    }
+
+    fn ssrft(&self, v2: &[f64], tau: &[f64], c_kj: &mut [f64], c_ij: &mut [f64], b: usize) {
+        let out = self.call(
+            &format!("qr_ssrft_{b}"),
+            vec![
+                Tensor::new(v2.to_vec(), vec![b, b]),
+                Tensor::new(tau.to_vec(), vec![b]),
+                Tensor::new(c_kj.to_vec(), vec![b, b]),
+                Tensor::new(c_ij.to_vec(), vec![b, b]),
+            ],
+        );
+        c_kj.copy_from_slice(&out[0].data);
+        c_ij.copy_from_slice(&out[1].data);
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+// ----------------------------------------------------------------------
+// N-body
+// ----------------------------------------------------------------------
+
+/// Particle buckets exported by `python/compile/model.py`.
+pub const NB_BUCKETS: [usize; 2] = [128, 2048];
+/// COM-list chunk length of the `nb_pc_*` modules.
+pub const NB_COM_CHUNK: usize = 1024;
+
+fn bucket_for(n: usize) -> Result<usize> {
+    NB_BUCKETS
+        .iter()
+        .copied()
+        .find(|&b| b >= n)
+        .ok_or_else(|| anyhow!("cell with {n} particles exceeds the largest bucket"))
+}
+
+/// N-body task executor backed by the AOT artifacts. Mirrors the native
+/// recursion exactly (touch-filtered descent); only the flat
+/// leaf-vs-leaf computations go through the XLA kernels, so the covered
+/// interaction set is identical to the native backend's.
+pub struct XlaNbodyExec {
+    svc: Arc<RuntimeService>,
+}
+
+impl XlaNbodyExec {
+    pub fn new(svc: Arc<RuntimeService>) -> Self {
+        Self { svc }
+    }
+
+    /// Marshal the particles of `ci` into padded tensors.
+    ///
+    /// # Safety
+    /// Caller must hold (transitively) the lock on `ci`.
+    unsafe fn gather(&self, state: &NBodyState, ci: CellId, n_pad: usize) -> (Tensor, Tensor, Tensor) {
+        let c = &state.cells[ci];
+        let ps = state.parts.slice(c.first, c.first + c.count);
+        let mut x = vec![0.0; n_pad * 3];
+        let mut m = vec![0.0; n_pad];
+        let mut mask = vec![0.0; n_pad];
+        for (i, p) in ps.iter().enumerate() {
+            x[i * 3..i * 3 + 3].copy_from_slice(&p.x);
+            m[i] = p.mass;
+            mask[i] = 1.0;
+        }
+        (
+            Tensor::new(x, vec![n_pad, 3]),
+            Tensor::vec(m),
+            Tensor::vec(mask),
+        )
+    }
+
+    /// Add a padded acceleration tensor back onto `ci`'s particles.
+    ///
+    /// # Safety
+    /// Caller must hold (transitively) the lock on `ci`.
+    unsafe fn scatter_acc(&self, state: &NBodyState, ci: CellId, acc: &Tensor) {
+        let c = &state.cells[ci];
+        let ps = state.parts.slice_mut(c.first, c.first + c.count);
+        for (i, p) in ps.iter_mut().enumerate() {
+            for d in 0..3 {
+                p.a[d] += acc.data[i * 3 + d];
+            }
+        }
+    }
+
+    unsafe fn self_leaf(&self, state: &NBodyState, ci: CellId) -> Result<()> {
+        let n = state.cells[ci].count;
+        if n < 2 {
+            return Ok(());
+        }
+        let b = bucket_for(n)?;
+        let (x, m, mask) = self.gather(state, ci, b);
+        let out = self.svc.call(&format!("nb_self_{b}"), vec![x, m, mask])?;
+        self.scatter_acc(state, ci, &out[0]);
+        Ok(())
+    }
+
+    unsafe fn pair_leaves(&self, state: &NBodyState, ci: CellId, cj: CellId) -> Result<()> {
+        let b = bucket_for(state.cells[ci].count.max(state.cells[cj].count))?;
+        let (xi, mi, maski) = self.gather(state, ci, b);
+        let (xj, mj, maskj) = self.gather(state, cj, b);
+        let out = self
+            .svc
+            .call(&format!("nb_pair_{b}"), vec![xi, mi, maski, xj, mj, maskj])?;
+        self.scatter_acc(state, ci, &out[0]);
+        self.scatter_acc(state, cj, &out[1]);
+        Ok(())
+    }
+
+    unsafe fn comp_self(&self, state: &NBodyState, ci: CellId) -> Result<()> {
+        let c = &state.cells[ci];
+        if let Some(pr) = c.progeny {
+            for j in 0..8 {
+                if state.cells[pr[j]].count == 0 {
+                    continue;
+                }
+                self.comp_self(state, pr[j])?;
+                for k in j + 1..8 {
+                    if state.cells[pr[k]].count > 0 {
+                        self.comp_pair(state, pr[j], pr[k])?;
+                    }
+                }
+            }
+            Ok(())
+        } else {
+            self.self_leaf(state, ci)
+        }
+    }
+
+    unsafe fn comp_pair(&self, state: &NBodyState, ci: CellId, cj: CellId) -> Result<()> {
+        use crate::nbody::octree::Cell;
+        let (a, b) = (&state.cells[ci], &state.cells[cj]);
+        if a.count == 0 || b.count == 0 || !Cell::touches(a, b) {
+            return Ok(());
+        }
+        match (a.progeny, b.progeny) {
+            (Some(pa), _) => {
+                for ch in pa {
+                    self.comp_pair(state, ch, cj)?;
+                }
+                Ok(())
+            }
+            (None, Some(pb)) => {
+                for ch in pb {
+                    self.comp_pair(state, ci, ch)?;
+                }
+                Ok(())
+            }
+            (None, None) => self.pair_leaves(state, ci, cj),
+        }
+    }
+
+    unsafe fn comp_pc(&self, state: &NBodyState, leaf: CellId) -> Result<()> {
+        let mut coms: Vec<[f64; 4]> = Vec::new();
+        state.collect_pc_coms(leaf, ROOT, &mut coms);
+        if coms.is_empty() {
+            return Ok(());
+        }
+        let n = state.cells[leaf].count;
+        let b = bucket_for(n)?;
+        let (x, _, mask) = self.gather(state, leaf, b);
+        // Chunk the COM list into the fixed kernel length, zero-mass padded.
+        for chunk in coms.chunks(NB_COM_CHUNK) {
+            let mut flat = vec![0.0; NB_COM_CHUNK * 4];
+            for (i, c) in chunk.iter().enumerate() {
+                flat[i * 4..i * 4 + 4].copy_from_slice(c);
+            }
+            let out = self.svc.call(
+                &format!("nb_pc_{b}"),
+                vec![
+                    x.clone(),
+                    mask.clone(),
+                    Tensor::new(flat, vec![NB_COM_CHUNK, 4]),
+                ],
+            )?;
+            self.scatter_acc(state, leaf, &out[0]);
+        }
+        Ok(())
+    }
+
+    /// The execution function: same dispatch as
+    /// [`crate::nbody::tasks::exec_task`], numerics via XLA.
+    pub fn exec_task(&self, state: &NBodyState, view: crate::coordinator::TaskView<'_>) {
+        let (ci, _) = crate::nbody::tasks::decode(view.data);
+        let r = unsafe {
+            match NbTask::from_u32(view.type_id) {
+                NbTask::SelfInteract => self.comp_self(state, ci),
+                NbTask::PairPP => {
+                    let (a, b) = crate::nbody::tasks::decode(view.data);
+                    self.comp_pair(state, a, b)
+                }
+                NbTask::PairPC => self.comp_pc(state, ci),
+                NbTask::Com => {
+                    state.compute_com(ci);
+                    Ok(())
+                }
+            }
+        };
+        if let Err(e) = r {
+            panic!("XLA N-body task failed: {e:#}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(bucket_for(1).unwrap(), 128);
+        assert_eq!(bucket_for(128).unwrap(), 128);
+        assert_eq!(bucket_for(129).unwrap(), 2048);
+        assert!(bucket_for(5000).is_err());
+    }
+}

@@ -1,0 +1,187 @@
+//! Artifact discovery: locate `artifacts/*.hlo.txt` and parse
+//! `manifest.txt` (written by `python/compile/aot.py`), which records
+//! each module's input shapes and output arity so the runtime can
+//! marshal Literals without hard-coding shapes.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Shape of one f64 input tensor.
+pub type Shape = Vec<usize>;
+
+/// One AOT-compiled module's interface.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModuleInfo {
+    pub name: String,
+    pub inputs: Vec<Shape>,
+    pub n_outputs: usize,
+    pub path: PathBuf,
+}
+
+impl ModuleInfo {
+    pub fn input_elems(&self, i: usize) -> usize {
+        self.inputs[i].iter().product()
+    }
+}
+
+/// Parsed manifest: module name → interface.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub modules: HashMap<String, ModuleInfo>,
+    pub dir: PathBuf,
+}
+
+/// Parse one `f64[a,b,...]` signature.
+fn parse_shape(sig: &str) -> Result<Shape> {
+    let sig = sig.trim();
+    let inner = sig
+        .strip_prefix("f64[")
+        .and_then(|s| s.strip_suffix(']'))
+        .with_context(|| format!("bad shape signature {sig:?}"))?;
+    if inner.is_empty() {
+        return Ok(vec![]);
+    }
+    inner
+        .split(',')
+        .map(|d| d.trim().parse::<usize>().context("bad dim"))
+        .collect()
+}
+
+/// Split a signature list on commas *outside* brackets.
+fn split_sigs(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '[' => depth += 1,
+            ']' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < s.len() {
+        out.push(&s[start..]);
+    }
+    out
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let mut modules = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut fields = line.split(';');
+            let (name, sig, n_out) = match (fields.next(), fields.next(), fields.next()) {
+                (Some(a), Some(b), Some(c)) => (a, b, c),
+                _ => bail!("manifest line {} malformed: {line:?}", lineno + 1),
+            };
+            let inputs = split_sigs(sig)
+                .into_iter()
+                .map(parse_shape)
+                .collect::<Result<Vec<_>>>()?;
+            let hlo = dir.join(format!("{name}.hlo.txt"));
+            if !hlo.exists() {
+                bail!("manifest names {name} but {hlo:?} is missing");
+            }
+            modules.insert(
+                name.to_string(),
+                ModuleInfo {
+                    name: name.to_string(),
+                    inputs,
+                    n_outputs: n_out.trim().parse().context("bad output count")?,
+                    path: hlo,
+                },
+            );
+        }
+        Ok(Self { modules, dir })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ModuleInfo> {
+        self.modules
+            .get(name)
+            .with_context(|| format!("module {name:?} not in manifest ({} known)", self.modules.len()))
+    }
+
+    /// The default artifact directory: `$QS_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("QS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_shapes() {
+        assert_eq!(parse_shape("f64[8,8]").unwrap(), vec![8, 8]);
+        assert_eq!(parse_shape("f64[128]").unwrap(), vec![128]);
+        assert_eq!(parse_shape("f64[]").unwrap(), Vec::<usize>::new());
+        assert!(parse_shape("f32[8]").is_err());
+    }
+
+    #[test]
+    fn split_respects_brackets() {
+        assert_eq!(
+            split_sigs("f64[8,8],f64[8],f64[2048,3]"),
+            vec!["f64[8,8]", "f64[8]", "f64[2048,3]"]
+        );
+    }
+
+    #[test]
+    fn load_manifest_from_fixture() {
+        let dir = std::env::temp_dir().join(format!("qs_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("foo.hlo.txt"), "HloModule foo").unwrap();
+        std::fs::write(dir.join("manifest.txt"), "foo;f64[4,4],f64[4];2\n").unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let info = m.get("foo").unwrap();
+        assert_eq!(info.inputs, vec![vec![4, 4], vec![4]]);
+        assert_eq!(info.n_outputs, 2);
+        assert_eq!(info.input_elems(0), 16);
+        assert!(m.get("bar").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_hlo_rejected() {
+        let dir = std::env::temp_dir().join(format!("qs_manifest2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "ghost;f64[2];1\n").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn real_artifacts_manifest_if_present() {
+        // When `make artifacts` has run, the real manifest must parse and
+        // cover the QR + N-body entry points.
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.txt").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        for name in ["qr_geqrf_8", "qr_larft_64", "nb_self_128", "nb_pc_2048"] {
+            assert!(m.get(name).is_ok(), "missing {name}");
+        }
+        let g = m.get("qr_geqrf_64").unwrap();
+        assert_eq!(g.inputs, vec![vec![64, 64]]);
+        assert_eq!(g.n_outputs, 2);
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT HLO artifacts (lowered from the Layer-1/2
+//! Pallas+JAX code by `python/compile/aot.py`) and execute them from the
+//! L3 hot path. `PjRtClient` is `Rc`-based (`!Send`), so all PJRT
+//! objects live on dedicated executor threads behind channels
+//! ([`service`]); [`backends`] adapts the two applications to it.
+pub mod backends;
+pub mod hlo;
+pub mod service;
+
+pub use backends::{XlaNbodyExec, XlaTileBackend};
+pub use hlo::{Manifest, ModuleInfo};
+pub use service::{RuntimeService, Tensor};

@@ -1,0 +1,237 @@
+//! PJRT runtime service: executes AOT-compiled HLO modules from the L3
+//! hot path.
+//!
+//! The published `xla` crate's `PjRtClient` is `Rc`-based (`!Send`), so
+//! all PJRT objects are confined to dedicated **executor threads**, each
+//! owning its own CPU client and lazily-compiled executable cache.
+//! Scheduler workers submit [`Request`]s over an mpsc channel shared by
+//! the executors (vLLM-router style: router threads never touch the
+//! backend runtime directly) and block on a per-call reply channel.
+//! Python is never involved: the artifacts were lowered once at build
+//! time by `python/compile/aot.py`.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::hlo::Manifest;
+
+/// A tensor crossing the service boundary: flat f64 data + shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f64>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f64>, shape: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Self { data, shape }
+    }
+
+    pub fn vec(data: Vec<f64>) -> Self {
+        let n = data.len();
+        Self::new(data, vec![n])
+    }
+}
+
+struct Request {
+    module: String,
+    inputs: Vec<Tensor>,
+    reply: mpsc::Sender<Result<Vec<Tensor>>>,
+}
+
+/// Handle to the executor pool. Cloneable and `Sync`; dropping the last
+/// clone shuts the executors down.
+pub struct RuntimeService {
+    tx: Mutex<mpsc::Sender<Request>>,
+    manifest: Manifest,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl RuntimeService {
+    /// Start `n_executors` PJRT executor threads over the artifact
+    /// directory. Each thread compiles a module the first time it is
+    /// asked to run it and caches the executable.
+    pub fn start(manifest: Manifest, n_executors: usize) -> Result<Arc<Self>> {
+        assert!(n_executors > 0);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::new();
+        for eid in 0..n_executors {
+            let rx = Arc::clone(&rx);
+            let manifest = manifest.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pjrt-exec-{eid}"))
+                    .spawn(move || executor_loop(rx, manifest))
+                    .context("spawning executor")?,
+            );
+        }
+        Ok(Arc::new(Self { tx: Mutex::new(tx), manifest, handles }))
+    }
+
+    /// Convenience: load the manifest from the default artifact dir.
+    pub fn start_default(n_executors: usize) -> Result<Arc<Self>> {
+        Self::start(Manifest::load(Manifest::default_dir())?, n_executors)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute `module` with `inputs`; blocks until the result arrives.
+    /// Thread-safe: any number of scheduler workers may call concurrently.
+    pub fn call(&self, module: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let info = self.manifest.get(module)?;
+        if inputs.len() != info.inputs.len() {
+            return Err(anyhow!(
+                "{module}: expected {} inputs, got {}",
+                info.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (i, (t, s)) in inputs.iter().zip(&info.inputs).enumerate() {
+            if &t.shape != s {
+                return Err(anyhow!(
+                    "{module}: input {i} shape {:?} != manifest {:?}",
+                    t.shape,
+                    s
+                ));
+            }
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().unwrap();
+            tx.send(Request { module: module.to_string(), inputs, reply: reply_tx })
+                .map_err(|_| anyhow!("runtime service is down"))?;
+        }
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("executor dropped the request"))?
+    }
+}
+
+impl Drop for RuntimeService {
+    fn drop(&mut self) {
+        // Closing the channel ends the executor loops.
+        {
+            let (dead_tx, _) = mpsc::channel();
+            let mut guard = self.tx.lock().unwrap();
+            *guard = dead_tx;
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn executor_loop(rx: Arc<Mutex<mpsc::Receiver<Request>>>, manifest: Manifest) {
+    // PJRT state lives and dies on this thread.
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Fail every request until the channel closes.
+            loop {
+                let req = { rx.lock().unwrap().recv() };
+                match req {
+                    Ok(r) => {
+                        let _ = r.reply.send(Err(anyhow!("PJRT client init failed: {e}")));
+                    }
+                    Err(_) => return,
+                }
+            }
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    loop {
+        // Hold the receiver lock only while waiting, not while executing.
+        let req = { rx.lock().unwrap().recv() };
+        let req = match req {
+            Ok(r) => r,
+            Err(_) => return, // all senders gone: shut down
+        };
+        let result = run_one(&client, &mut cache, &manifest, &req);
+        let _ = req.reply.send(result);
+    }
+}
+
+fn run_one(
+    client: &xla::PjRtClient,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    manifest: &Manifest,
+    req: &Request,
+) -> Result<Vec<Tensor>> {
+    let info = manifest.get(&req.module)?;
+    if !cache.contains_key(&req.module) {
+        let proto = xla::HloModuleProto::from_text_file(
+            info.path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {:?}: {e}", info.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", req.module))?;
+        cache.insert(req.module.clone(), exe);
+    }
+    let exe = cache.get(&req.module).unwrap();
+    let args: Vec<xla::Literal> = req
+        .inputs
+        .iter()
+        .map(|t| {
+            let lit = xla::Literal::vec1(&t.data);
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e}"))
+        })
+        .collect::<Result<_>>()?;
+    let result = exe
+        .execute::<xla::Literal>(&args)
+        .map_err(|e| anyhow!("executing {}: {e}", req.module))?;
+    let out_lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetching result: {e}"))?;
+    // aot.py lowers with return_tuple=True: always a tuple.
+    let parts = out_lit.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+    if parts.len() != info.n_outputs {
+        return Err(anyhow!(
+            "{}: manifest says {} outputs, got {}",
+            req.module,
+            info.n_outputs,
+            parts.len()
+        ));
+    }
+    parts
+        .into_iter()
+        .map(|lit| {
+            let shape = lit
+                .array_shape()
+                .map_err(|e| anyhow!("output shape: {e}"))?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data = lit
+                .to_vec::<f64>()
+                .map_err(|e| anyhow!("output data: {e}"))?;
+            Ok(Tensor::new(data, dims))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrip() {
+        let t = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(t.shape, vec![2, 2]);
+        let v = Tensor::vec(vec![5.0; 3]);
+        assert_eq!(v.shape, vec![3]);
+    }
+
+    // End-to-end service tests (require built artifacts) live in
+    // rust/tests/xla_backend.rs.
+}

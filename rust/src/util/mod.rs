@@ -1,0 +1,5 @@
+//! Utilities: deterministic RNG, statistics, shared-memory cells.
+pub mod cli;
+pub mod rng;
+pub mod shared;
+pub mod stats;

@@ -1,0 +1,156 @@
+//! Shared-memory containers whose exclusivity is guaranteed by the
+//! *scheduler's* constraints rather than by rust's borrow checker.
+//!
+//! The paper's applications mutate a shared matrix / particle array from
+//! many threads, relying on task dependencies and resource locks to make
+//! each access exclusive. [`SharedGrid`] encodes that contract: it hands
+//! out raw mutable access, and the *caller* promises that the scheduler's
+//! dependency + conflict constraints serialize conflicting accesses
+//! (which the property tests in `rust/tests/` verify independently).
+
+use std::cell::UnsafeCell;
+
+/// A fixed-size grid of `T` cells mutable from multiple workers under
+/// scheduler-enforced exclusivity.
+pub struct SharedGrid<T> {
+    cells: Vec<UnsafeCell<T>>,
+}
+
+// SAFETY: access discipline is delegated to the task scheduler; see the
+// module docs. All methods that touch cells are `unsafe` and spell out
+// the proof obligation.
+unsafe impl<T: Send> Sync for SharedGrid<T> {}
+unsafe impl<T: Send> Send for SharedGrid<T> {}
+
+impl<T> SharedGrid<T> {
+    pub fn from_vec(v: Vec<T>) -> Self {
+        Self { cells: v.into_iter().map(UnsafeCell::new).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Mutable access to cell `i`.
+    ///
+    /// # Safety
+    /// The caller must guarantee — via task dependencies and/or resource
+    /// locks — that no other thread accesses cell `i` concurrently.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        &mut *self.cells[i].get()
+    }
+
+    /// Shared read of cell `i`.
+    ///
+    /// # Safety
+    /// The caller must guarantee that no other thread *writes* cell `i`
+    /// concurrently (concurrent reads are fine).
+    #[inline]
+    pub unsafe fn get(&self, i: usize) -> &T {
+        &*self.cells[i].get()
+    }
+
+    /// Mutable access to the contiguous sub-slice `lo..hi` (the
+    /// Barnes-Hut cells address their particles as ranges of one global
+    /// array, Fig. 10 of the paper).
+    ///
+    /// # Safety
+    /// The caller must guarantee — via task dependencies and/or resource
+    /// locks — that no other thread accesses any cell in `lo..hi`
+    /// concurrently. `UnsafeCell<T>` is layout-identical to `T`, so the
+    /// cast below is sound once exclusivity holds.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub unsafe fn slice_mut(&self, lo: usize, hi: usize) -> &mut [T] {
+        debug_assert!(lo <= hi && hi <= self.cells.len());
+        std::slice::from_raw_parts_mut(self.cells[lo..hi].as_ptr() as *mut T, hi - lo)
+    }
+
+    /// Shared read of the contiguous sub-slice `lo..hi`.
+    ///
+    /// # Safety
+    /// No other thread may *write* any cell in `lo..hi` concurrently.
+    #[inline]
+    pub unsafe fn slice(&self, lo: usize, hi: usize) -> &[T] {
+        debug_assert!(lo <= hi && hi <= self.cells.len());
+        std::slice::from_raw_parts(self.cells[lo..hi].as_ptr() as *const T, hi - lo)
+    }
+
+    /// Exclusive access to the whole grid; safe because it borrows `self`
+    /// mutably (no scheduler involved).
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        // SAFETY: &mut self gives unique access to every cell.
+        unsafe {
+            std::slice::from_raw_parts_mut(self.cells.as_mut_ptr() as *mut T, self.cells.len())
+        }
+    }
+
+    /// Shared snapshot of the whole grid; safe because it borrows `self`
+    /// mutably forbidding concurrent task access.
+    pub fn as_slice(&mut self) -> &[T] {
+        self.as_mut_slice()
+    }
+
+    /// Consume the grid, returning the underlying values.
+    pub fn into_vec(self) -> Vec<T> {
+        self.cells.into_iter().map(UnsafeCell::into_inner).collect()
+    }
+}
+
+impl<T: Clone> SharedGrid<T> {
+    pub fn new(n: usize, init: T) -> Self {
+        Self::from_vec(vec![init; n])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut g = SharedGrid::new(4, 0i64);
+        unsafe {
+            *g.get_mut(2) = 7;
+        }
+        assert_eq!(g.as_slice(), &[0, 0, 7, 0]);
+        assert_eq!(g.into_vec(), vec![0, 0, 7, 0]);
+    }
+
+    #[test]
+    fn from_vec_preserves_order() {
+        let mut g = SharedGrid::from_vec(vec![1, 2, 3]);
+        assert_eq!(g.as_slice(), &[1, 2, 3]);
+        assert_eq!(g.len(), 3);
+        assert!(!g.is_empty());
+    }
+
+    #[test]
+    fn disjoint_parallel_writes() {
+        // Each thread writes its own stripe — the pattern the QR tiles use.
+        let g = std::sync::Arc::new(SharedGrid::new(64, 0u64));
+        let mut hs = Vec::new();
+        for t in 0..4u64 {
+            let g = std::sync::Arc::clone(&g);
+            hs.push(std::thread::spawn(move || {
+                for i in (t as usize * 16)..((t as usize + 1) * 16) {
+                    unsafe { *g.get_mut(i) = t + 1 };
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        let mut g = std::sync::Arc::try_unwrap(g).ok().unwrap();
+        let s = g.as_slice();
+        for t in 0..4 {
+            assert!(s[t * 16..(t + 1) * 16].iter().all(|&x| x == t as u64 + 1));
+        }
+    }
+}

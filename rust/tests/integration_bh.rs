@@ -1,0 +1,160 @@
+//! Integration: Barnes-Hut across distributions, tree depths, task
+//! granularities and scheduler configurations, always verified against
+//! the O(N²) direct sum; plus the accuracy/perf behaviour of the
+//! traditional-walk baseline.
+
+use quicksched::coordinator::{SchedConfig, Scheduler};
+use quicksched::nbody::{self, direct};
+
+fn solve_and_error(
+    cloud: Vec<nbody::Part>,
+    n_max: usize,
+    n_task: usize,
+    threads: usize,
+) -> f64 {
+    let want = direct::direct_sum(&cloud);
+    let (got, _) =
+        nbody::run_threaded(cloud, n_max, n_task, SchedConfig::new(threads), threads).unwrap();
+    direct::rms_rel_error(&got, &want)
+}
+
+#[test]
+fn bh_uniform_parameter_sweep() {
+    for (n, n_max, n_task, threads) in [
+        (500usize, 600usize, 10_000usize, 1usize), // single cell, no tree
+        (1000, 64, 100_000, 2),                    // tree, coarse tasks
+        (2000, 32, 128, 4),                        // deep tree, fine tasks
+        (3000, 100, 500, 2),
+    ] {
+        let err = solve_and_error(nbody::uniform_cloud(n, n as u64), n_max, n_task, threads);
+        assert!(err < 0.02, "n={n} n_max={n_max} n_task={n_task}: err {err}");
+    }
+}
+
+#[test]
+fn bh_clustered_cloud() {
+    let err = solve_and_error(nbody::plummer_cloud(3000, 8), 32, 200, 4);
+    assert!(err < 0.03, "plummer err {err}");
+}
+
+#[test]
+fn bh_forces_sum_to_zero() {
+    // Momentum conservation: self/pp parts are exactly antisymmetric;
+    // pc monopoles only approximately — net force stays small.
+    let cloud = nbody::uniform_cloud(2000, 17);
+    let (got, _) =
+        nbody::run_threaded(cloud, 64, 300, SchedConfig::new(2), 2).unwrap();
+    let mut f = [0.0f64; 3];
+    let mut scale = 0.0f64;
+    for p in &got {
+        for d in 0..3 {
+            f[d] += p.mass * p.a[d];
+            scale += (p.mass * p.a[d]).abs();
+        }
+    }
+    for d in 0..3 {
+        assert!(f[d].abs() < 1e-3 * scale, "net force {f:?} vs scale {scale}");
+    }
+}
+
+#[test]
+fn bh_hierarchical_conflicts_enforced_under_load() {
+    // Run with a per-particle-range "inside" marker: a self task on a
+    // coarse cell and a pc task on a leaf below it both write the same
+    // particles; the hierarchy must serialize them.
+    use std::sync::atomic::{AtomicU32, Ordering};
+    let cloud = nbody::uniform_cloud(4000, 23);
+    let n = cloud.len();
+    let tree = nbody::Octree::build(cloud, 64);
+    let state = nbody::NBodyState::from_tree(tree);
+    let mut sched = Scheduler::new(SchedConfig::new(4)).unwrap();
+    nbody::build_tasks(&mut sched, &state, 256);
+    sched.prepare().unwrap();
+    let marks: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+    let cells: Vec<_> = state.cells.iter().map(|c| (c.first, c.count)).collect();
+    sched
+        .run(4, |view| {
+            let (ci, _) = nbody::tasks::decode(view.data);
+            let writes = !matches!(nbody::NbTask::from_u32(view.type_id), nbody::NbTask::Com);
+            if writes {
+                let (first, count) = cells[ci];
+                for m in &marks[first..first + count] {
+                    let prev = m.fetch_add(1, Ordering::SeqCst);
+                    assert_eq!(prev, 0, "two writers on one particle");
+                }
+                nbody::exec_task(&state, view);
+                for m in &marks[first..first + count] {
+                    m.fetch_sub(1, Ordering::SeqCst);
+                }
+            } else {
+                nbody::exec_task(&state, view);
+            }
+        })
+        .unwrap();
+    assert!(sched.resources().all_quiescent());
+}
+
+#[test]
+fn bh_sim_full_graph_deterministic() {
+    let run = || {
+        let r = nbody::run_sim(
+            nbody::uniform_cloud(20_000, 3),
+            100,
+            800,
+            SchedConfig::new(8).with_seed(5).with_timeline(true),
+            8,
+            &nbody::NbScale { ns_per_unit: 4.0 },
+        )
+        .unwrap();
+        (
+            r.metrics.elapsed_ns,
+            r.metrics.tasks_stolen,
+            r.metrics.timeline.len(),
+        )
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn bh_theta_zero_walk_matches_direct_everywhere() {
+    // The baseline walker with θ→0 is exact for any distribution.
+    for cloud in [nbody::uniform_cloud(600, 1), nbody::plummer_cloud(600, 2)] {
+        let tree = nbody::Octree::build(cloud.clone(), 32);
+        let walker = nbody::baseline::TreeWalker::new(&tree, 1e-12);
+        let (got, _) = walker.solve();
+        let want = direct::direct_sum(&cloud);
+        let err = direct::rms_rel_error(&got, &want);
+        assert!(err < 1e-12, "{err}");
+    }
+}
+
+#[test]
+fn bh_single_particle_and_tiny_clouds() {
+    // Degenerate inputs must not panic and produce zero/finite forces.
+    for n in [1usize, 2, 3, 9] {
+        let cloud = nbody::uniform_cloud(n, 99);
+        let (got, _) =
+            nbody::run_threaded(cloud, 4, 2, SchedConfig::new(2), 2).unwrap();
+        assert_eq!(got.len(), n);
+        for p in &got {
+            for d in 0..3 {
+                assert!(p.a[d].is_finite());
+            }
+        }
+    }
+}
+
+#[test]
+fn bh_identical_positions_softened() {
+    // Coincident particles: softening keeps forces finite.
+    let mut cloud = nbody::uniform_cloud(64, 7);
+    let dup = cloud[0].x;
+    cloud[1].x = dup;
+    cloud[2].x = dup;
+    let (got, _) = nbody::run_threaded(cloud, 16, 32, SchedConfig::new(2), 2).unwrap();
+    for p in &got {
+        for d in 0..3 {
+            assert!(p.a[d].is_finite(), "non-finite acceleration");
+        }
+    }
+}

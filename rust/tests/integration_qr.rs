@@ -1,0 +1,135 @@
+//! Integration: full tiled QR across configurations — thread counts,
+//! tile sizes, rectangular shapes, scheduler policy variants, failure
+//! injection, and cost relearning.
+
+use quicksched::coordinator::{
+    ExecMode, KeyPolicy, SchedConfig, SchedError, StealPolicy,
+};
+use quicksched::qr::{self, NativeBackend};
+
+fn residual_after(
+    b: usize,
+    mt: usize,
+    nt: usize,
+    threads: usize,
+    cfg: SchedConfig,
+) -> f64 {
+    let mat = qr::TiledMatrix::random(b, mt, nt, 1000 + (b * mt * nt) as u64);
+    let a0 = mat.to_dense();
+    qr::run_threaded(&mat, &NativeBackend, cfg, threads).unwrap();
+    qr::verify::gram_residual(&a0, &mat)
+}
+
+#[test]
+fn qr_sweep_shapes_and_threads() {
+    for (b, mt, nt, threads) in [
+        (4usize, 1usize, 1usize, 1usize),
+        (4, 2, 2, 2),
+        (8, 3, 3, 4),
+        (8, 5, 3, 2),  // tall
+        (8, 2, 4, 3),  // wide
+        (16, 4, 4, 4),
+        (1, 6, 6, 2),  // degenerate 1x1 tiles
+    ] {
+        let res = residual_after(b, mt, nt, threads, SchedConfig::new(threads));
+        assert!(res < 1e-11, "b={b} mt={mt} nt={nt} threads={threads}: {res}");
+    }
+}
+
+#[test]
+fn qr_all_policy_variants_correct() {
+    // Scheduling policy must never affect numerics.
+    for key in [KeyPolicy::CriticalPath, KeyPolicy::Fifo, KeyPolicy::Cost] {
+        for steal in [StealPolicy::Random, StealPolicy::WeightAware] {
+            for reown in [true, false] {
+                let mut cfg = SchedConfig::new(3);
+                cfg.flags.key_policy = key;
+                cfg.flags.steal = steal;
+                cfg.flags.reown = reown;
+                let res = residual_after(8, 3, 3, 3, cfg);
+                assert!(res < 1e-11, "{key:?}/{steal:?}/reown={reown}: {res}");
+            }
+        }
+    }
+}
+
+#[test]
+fn qr_yield_mode_correct() {
+    let mut cfg = SchedConfig::new(2);
+    cfg.flags.mode = ExecMode::Yield;
+    let res = residual_after(8, 4, 4, 2, cfg);
+    assert!(res < 1e-11, "{res}");
+}
+
+#[test]
+fn qr_relearned_costs_still_correct_and_weighted() {
+    let mat = qr::TiledMatrix::random(8, 4, 4, 77);
+    let mut sched = quicksched::coordinator::Scheduler::new(SchedConfig::new(2)).unwrap();
+    qr::build_tasks(&mut sched, 4, 4);
+    sched.prepare().unwrap();
+    sched
+        .run(2, |view| qr::exec_task(&mat, &NativeBackend, view))
+        .unwrap();
+    let cp_before = sched.critical_path();
+    sched.relearn_costs().unwrap();
+    let cp_after = sched.critical_path();
+    assert!(cp_after > 0 && cp_after != cp_before, "weights must re-derive from measured ns");
+    // Re-run on a fresh matrix with relearned weights.
+    let mat2 = qr::TiledMatrix::random(8, 4, 4, 78);
+    let a0 = mat2.to_dense();
+    sched
+        .run(2, |view| qr::exec_task(&mat2, &NativeBackend, view))
+        .unwrap();
+    assert!(qr::verify::gram_residual(&a0, &mat2) < 1e-11);
+}
+
+#[test]
+fn qr_worker_panic_propagates_not_hangs() {
+    let mut sched = quicksched::coordinator::Scheduler::new(SchedConfig::new(2)).unwrap();
+    qr::build_tasks(&mut sched, 3, 3);
+    sched.prepare().unwrap();
+    let hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let r = sched.run(2, |view| {
+        if view.tid.0 == 5 {
+            panic!("injected failure");
+        }
+    });
+    std::panic::set_hook(hook);
+    assert!(matches!(r, Err(SchedError::WorkerPanic)));
+}
+
+#[test]
+fn qr_identity_and_structured_inputs() {
+    // Identity matrix: R = I (up to signs), residual exactly ~0.
+    let b = 8;
+    let n = 3;
+    let mut dense = vec![0.0; (b * n) * (b * n)];
+    for i in 0..b * n {
+        dense[i * b * n + i] = 1.0;
+    }
+    let mat = qr::TiledMatrix::from_dense(b, n, n, &dense);
+    qr::run_threaded(&mat, &NativeBackend, SchedConfig::new(2), 2).unwrap();
+    let res = qr::verify::gram_residual(&dense, &mat);
+    assert!(res < 1e-14, "{res}");
+    // Rank-deficient: duplicate columns — gram check still holds.
+    let mut dense2 = vec![0.0; (b * n) * (b * n)];
+    let mut rng = quicksched::util::rng::Rng::new(5);
+    for r in 0..b * n {
+        let v = rng.range_f64(-1.0, 1.0);
+        for c in 0..b * n {
+            dense2[r * b * n + c] = v * (1.0 + (c % 2) as f64);
+        }
+    }
+    let mat2 = qr::TiledMatrix::from_dense(b, n, n, &dense2);
+    qr::run_threaded(&mat2, &NativeBackend, SchedConfig::new(2), 2).unwrap();
+    let res2 = qr::verify::gram_residual(&dense2, &mat2);
+    assert!(res2 < 1e-11, "rank-deficient residual {res2}");
+}
+
+#[test]
+fn qr_oversubscribed_threads() {
+    // More workers than queues and than cores: still correct.
+    let res = residual_after(8, 3, 3, 8, SchedConfig::new(2));
+    assert!(res < 1e-11, "{res}");
+}

@@ -1,0 +1,49 @@
+//! Performance guard: the §Perf hot-path pathologies must stay fixed.
+//! (Generous wall-clock bounds — these catch complexity regressions,
+//! not noise; see EXPERIMENTS.md §Perf.)
+
+use quicksched::coordinator::{SchedConfig, Scheduler, TaskFlags, UnitCost};
+
+/// 5k of 20k tasks contending one resource on 64 virtual cores: before
+/// the queue-scan failure memo + single-pass dispatch this took minutes
+/// (every event re-scanned thousands of conflicted entries with a CAS
+/// each); now it is sub-second in release.
+#[test]
+fn pathological_contention_completes_quickly() {
+    // Debug builds run this ~15x slower; shrink the workload so the
+    // guard still distinguishes "quadratic blow-up" from "slow build".
+    let n: i64 = if cfg!(debug_assertions) { 6_000 } else { 20_000 };
+    let t0 = std::time::Instant::now();
+    let mut sched = Scheduler::new(SchedConfig::new(1)).unwrap();
+    let r = sched.add_resource(None, 0);
+    for i in 0..n {
+        let t = sched.add_task(0, TaskFlags::default(), &[], 1 + i % 13);
+        if i % 4 == 0 {
+            sched.add_lock(t, r);
+        }
+    }
+    sched.prepare().unwrap();
+    let m = sched.run_sim(64, &UnitCost).unwrap();
+    let dt = t0.elapsed();
+    eprintln!("pathological sim: {} tasks in {:.2}s wall", m.tasks_run, dt.as_secs_f64());
+    assert_eq!(m.tasks_run, n as usize);
+    assert!(dt.as_secs_f64() < 30.0, "contention pathology regressed: {dt:?}");
+}
+
+/// Same contention shape through the real threaded executor.
+#[test]
+fn pathological_contention_threaded() {
+    let t0 = std::time::Instant::now();
+    let mut sched = Scheduler::new(SchedConfig::new(2)).unwrap();
+    let r = sched.add_resource(None, 0);
+    for i in 0..4_000i64 {
+        let t = sched.add_task(0, TaskFlags::default(), &[], 1);
+        if i % 2 == 0 {
+            sched.add_lock(t, r);
+        }
+    }
+    sched.prepare().unwrap();
+    let m = sched.run(2, |_| {}).unwrap();
+    assert_eq!(m.tasks_run, 4_000);
+    assert!(t0.elapsed().as_secs_f64() < 30.0);
+}

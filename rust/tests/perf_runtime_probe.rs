@@ -1,0 +1,32 @@
+//! One-off measurement helper for EXPERIMENTS.md §Perf (runs as an
+//! ignored test): PJRT round-trip per task vs native kernel time, which
+//! sets the task-granularity break-even for the XLA backend.
+use quicksched::qr;
+use quicksched::runtime::{Manifest, RuntimeService, Tensor};
+use quicksched::util::rng::Rng;
+
+#[test]
+#[ignore = "measurement probe; run with -- --ignored --nocapture"]
+fn pjrt_roundtrip_overhead() {
+    let svc = RuntimeService::start(Manifest::load(Manifest::default_dir()).unwrap(), 1).unwrap();
+    for b in [8usize, 64] {
+        let mut rng = Rng::new(1);
+        let a0: Vec<f64> = (0..b * b).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        // warm (compile)
+        svc.call(&format!("qr_geqrf_{b}"), vec![Tensor::new(a0.clone(), vec![b, b])]).unwrap();
+        let n = 50;
+        let t0 = std::time::Instant::now();
+        for _ in 0..n {
+            svc.call(&format!("qr_geqrf_{b}"), vec![Tensor::new(a0.clone(), vec![b, b])]).unwrap();
+        }
+        let xla_us = t0.elapsed().as_secs_f64() * 1e6 / n as f64;
+        let t0 = std::time::Instant::now();
+        for _ in 0..n {
+            let mut a = a0.clone();
+            let mut tau = vec![0.0; b];
+            qr::kernels::geqrf(&mut a, &mut tau, b);
+        }
+        let native_us = t0.elapsed().as_secs_f64() * 1e6 / n as f64;
+        eprintln!("geqrf b={b}: xla {xla_us:.1} us/call, native {native_us:.1} us/call, ratio {:.1}x", xla_us / native_us);
+    }
+}

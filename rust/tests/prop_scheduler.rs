@@ -1,0 +1,299 @@
+//! Property tests over randomly generated task graphs (the offline
+//! registry has no `proptest`; this uses the in-repo deterministic RNG
+//! with many seeded cases — failures print the seed for replay).
+//!
+//! Invariants checked on every random graph:
+//!  1. every task executes exactly once;
+//!  2. every dependency is respected (parent completes before child
+//!     starts);
+//!  3. no two tasks whose lock sets conflict (directly or through the
+//!     resource hierarchy) ever overlap in time;
+//!  4. all resources are quiescent after the run;
+//!  5. the virtual-time executor agrees with the threaded executor on
+//!     the executed-task set;
+//!  6. graphs with a cycle are rejected at prepare().
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use quicksched::coordinator::{
+    KeyPolicy, ResId, SchedConfig, SchedFlags, Scheduler, StealPolicy, TaskFlags, TaskId,
+    UnitCost,
+};
+use quicksched::util::rng::Rng;
+
+/// A random DAG + conflicts spec, regenerable from a seed.
+struct Spec {
+    n_tasks: usize,
+    edges: Vec<(u32, u32)>,
+    /// resource -> parent
+    resources: Vec<Option<u32>>,
+    /// task -> locked resources
+    locks: Vec<Vec<u32>>,
+    costs: Vec<i64>,
+}
+
+fn gen_spec(seed: u64) -> Spec {
+    let mut rng = Rng::new(seed);
+    let n_tasks = 10 + rng.index(120);
+    let n_res = 1 + rng.index(12);
+    // Hierarchical resources: each may hang off an earlier one.
+    let resources: Vec<Option<u32>> = (0..n_res)
+        .map(|i| {
+            if i > 0 && rng.chance(0.4) {
+                Some(rng.index(i) as u32)
+            } else {
+                None
+            }
+        })
+        .collect();
+    // Forward edges only => acyclic by construction.
+    let mut edges = Vec::new();
+    for b in 1..n_tasks {
+        let n_parents = rng.index(3.min(b) + 1);
+        for _ in 0..n_parents {
+            let a = rng.index(b);
+            edges.push((a as u32, b as u32));
+        }
+    }
+    let locks: Vec<Vec<u32>> = (0..n_tasks)
+        .map(|_| {
+            let k = if rng.chance(0.5) { rng.index(3) } else { 0 };
+            let mut v: Vec<u32> = (0..k).map(|_| rng.index(n_res) as u32).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        })
+        .collect();
+    let costs = (0..n_tasks).map(|_| 1 + rng.index(50) as i64).collect();
+    Spec { n_tasks, edges, resources, locks, costs }
+}
+
+fn build(
+    spec: &Spec,
+    nq: usize,
+    seed: u64,
+    steal: StealPolicy,
+    key: KeyPolicy,
+) -> Scheduler {
+    let mut cfg = SchedConfig::new(nq).with_seed(seed).with_timeline(true);
+    cfg.flags = SchedFlags { steal, key_policy: key, ..Default::default() };
+    let mut s = Scheduler::new(cfg).unwrap();
+    let rids: Vec<ResId> = spec
+        .resources
+        .iter()
+        .map(|p| s.add_resource(p.map(ResId), -1))
+        .collect();
+    let tids: Vec<TaskId> = (0..spec.n_tasks)
+        .map(|i| s.add_task(0, TaskFlags::default(), &(i as u64).to_le_bytes(), spec.costs[i]))
+        .collect();
+    for &(a, b) in &spec.edges {
+        s.add_unlock(tids[a as usize], tids[b as usize]);
+    }
+    for (i, ls) in spec.locks.iter().enumerate() {
+        for &r in ls {
+            s.add_lock(tids[i], rids[r as usize]);
+        }
+    }
+    s.prepare().unwrap();
+    s
+}
+
+/// Do two lock sets conflict (sharing a node or an ancestor relation)?
+fn conflicts(spec: &Spec, a: usize, b: usize) -> bool {
+    let ancestors = |mut r: u32| {
+        let mut v = vec![r];
+        while let Some(p) = spec.resources[r as usize] {
+            v.push(p);
+            r = p;
+        }
+        v
+    };
+    for &ra in &spec.locks[a] {
+        let aa = ancestors(ra);
+        for &rb in &spec.locks[b] {
+            let ab = ancestors(rb);
+            if aa.contains(&rb) || ab.contains(&ra) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+fn check_timeline(spec: &Spec, m: &quicksched::coordinator::RunMetrics, seed: u64) {
+    assert_eq!(m.tasks_run, spec.n_tasks, "seed {seed}: wrong task count");
+    assert!(m.check_no_worker_overlap(), "seed {seed}: worker overlap");
+    let mut span = vec![(0u64, 0u64); spec.n_tasks];
+    let mut seen = vec![false; spec.n_tasks];
+    for r in &m.timeline {
+        let i = r.tid.0 as usize;
+        assert!(!seen[i], "seed {seed}: task {i} ran twice");
+        seen[i] = true;
+        span[i] = (r.start_ns, r.end_ns);
+    }
+    assert!(seen.iter().all(|&s| s), "seed {seed}: task missing from timeline");
+    // Dependencies respected.
+    for &(a, b) in &spec.edges {
+        assert!(
+            span[a as usize].1 <= span[b as usize].0,
+            "seed {seed}: dep {a}->{b} violated ({:?} vs {:?})",
+            span[a as usize],
+            span[b as usize]
+        );
+    }
+    // Conflicts serialized.
+    for a in 0..spec.n_tasks {
+        for b in a + 1..spec.n_tasks {
+            if conflicts(spec, a, b) {
+                let (sa, ea) = span[a];
+                let (sb, eb) = span[b];
+                assert!(
+                    ea <= sb || eb <= sa,
+                    "seed {seed}: conflict {a}/{b} overlapped ({sa}-{ea} vs {sb}-{eb})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sim_respects_all_invariants_100_seeds() {
+    for seed in 0..100 {
+        let spec = gen_spec(seed);
+        for (steal, key) in [
+            (StealPolicy::Random, KeyPolicy::CriticalPath),
+            (StealPolicy::WeightAware, KeyPolicy::CriticalPath),
+            (StealPolicy::Random, KeyPolicy::Fifo),
+        ] {
+            let mut s = build(&spec, 1 + (seed as usize % 8), seed, steal, key);
+            let m = s.run_sim(1 + (seed as usize % 16), &UnitCost).unwrap();
+            check_timeline(&spec, &m, seed);
+            assert!(s.resources().all_quiescent(), "seed {seed}: locks leaked");
+        }
+    }
+}
+
+#[test]
+fn threaded_executes_everything_exactly_once_30_seeds() {
+    for seed in 200..230 {
+        let spec = gen_spec(seed);
+        let threads = 1 + (seed as usize % 4);
+        let mut s = build(&spec, threads, seed, StealPolicy::Random, KeyPolicy::CriticalPath);
+        let count = AtomicU64::new(0);
+        let order = Mutex::new(Vec::new());
+        let m = s
+            .run(threads, |view| {
+                count.fetch_add(1, Ordering::Relaxed);
+                order.lock().unwrap().push(view.tid);
+            })
+            .unwrap();
+        assert_eq!(count.load(Ordering::Relaxed) as usize, spec.n_tasks, "seed {seed}");
+        assert_eq!(m.tasks_run, spec.n_tasks);
+        let mut tids: Vec<u32> = order.into_inner().unwrap().iter().map(|t| t.0).collect();
+        tids.sort_unstable();
+        assert_eq!(tids, (0..spec.n_tasks as u32).collect::<Vec<_>>(), "seed {seed}");
+        assert!(s.resources().all_quiescent(), "seed {seed}");
+    }
+}
+
+#[test]
+fn threaded_dependency_order_respected_20_seeds() {
+    for seed in 300..320 {
+        let spec = gen_spec(seed);
+        let threads = 2 + (seed as usize % 3);
+        let mut s = build(&spec, threads, seed, StealPolicy::Random, KeyPolicy::CriticalPath);
+        let stamp = AtomicU64::new(1);
+        let starts: Vec<AtomicU64> = (0..spec.n_tasks).map(|_| AtomicU64::new(0)).collect();
+        let ends: Vec<AtomicU64> = (0..spec.n_tasks).map(|_| AtomicU64::new(0)).collect();
+        s.run(threads, |view| {
+            let i = view.tid.0 as usize;
+            starts[i].store(stamp.fetch_add(1, Ordering::SeqCst), Ordering::SeqCst);
+            ends[i].store(stamp.fetch_add(1, Ordering::SeqCst), Ordering::SeqCst);
+        })
+        .unwrap();
+        for &(a, b) in &spec.edges {
+            let ea = ends[a as usize].load(Ordering::SeqCst);
+            let sb = starts[b as usize].load(Ordering::SeqCst);
+            assert!(ea < sb, "seed {seed}: dep {a}->{b}: end {ea} !< start {sb}");
+        }
+    }
+}
+
+#[test]
+fn threaded_conflicts_mutually_exclusive_10_seeds() {
+    for seed in 400..410 {
+        let spec = gen_spec(seed);
+        let threads = 4;
+        let mut s = build(&spec, threads, seed, StealPolicy::Random, KeyPolicy::CriticalPath);
+        let n_res = spec.resources.len();
+        let inside: Vec<AtomicU64> = (0..n_res).map(|_| AtomicU64::new(0)).collect();
+        s.run(threads, |view| {
+            let i = u64::from_le_bytes(view.data.try_into().unwrap()) as usize;
+            // Directly locked nodes must be exclusively entered.
+            for &r in &spec.locks[i] {
+                let prev = inside[r as usize].fetch_add(1, Ordering::SeqCst);
+                assert_eq!(prev, 0, "seed {seed}: resource {r} double-entered");
+            }
+            std::hint::spin_loop();
+            for &r in &spec.locks[i] {
+                inside[r as usize].fetch_sub(1, Ordering::SeqCst);
+            }
+        })
+        .unwrap();
+        assert!(s.resources().all_quiescent(), "seed {seed}");
+    }
+}
+
+#[test]
+fn sim_and_threaded_agree_on_task_set() {
+    for seed in 500..515 {
+        let spec = gen_spec(seed);
+        let mut s1 = build(&spec, 4, seed, StealPolicy::Random, KeyPolicy::CriticalPath);
+        let m_sim = s1.run_sim(4, &UnitCost).unwrap();
+        let mut s2 = build(&spec, 4, seed, StealPolicy::Random, KeyPolicy::CriticalPath);
+        let m_thr = s2.run(4, |_| {}).unwrap();
+        assert_eq!(m_sim.tasks_run, m_thr.tasks_run, "seed {seed}");
+        let set = |m: &quicksched::coordinator::RunMetrics| {
+            let mut v: Vec<u32> = m.timeline.iter().map(|r| r.tid.0).collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(set(&m_sim), set(&m_thr), "seed {seed}");
+    }
+}
+
+#[test]
+fn cyclic_graphs_rejected() {
+    let mut rng = Rng::new(999);
+    for _ in 0..20 {
+        let n = 3 + rng.index(20);
+        let mut s = Scheduler::new(SchedConfig::new(1)).unwrap();
+        let tids: Vec<TaskId> =
+            (0..n).map(|_| s.add_task(0, TaskFlags::default(), &[], 1)).collect();
+        for b in 1..n {
+            s.add_unlock(tids[rng.index(b)], tids[b]);
+        }
+        // Close a 2-cycle explicitly.
+        s.add_unlock(tids[n - 1], tids[0]);
+        s.add_unlock(tids[0], tids[n - 1]);
+        assert!(s.prepare().is_err());
+    }
+}
+
+#[test]
+fn rerun_same_scheduler_is_stable() {
+    // The scheduler is reusable (qsched_run can be called repeatedly).
+    let spec = gen_spec(4242);
+    let mut s = build(&spec, 4, 4242, StealPolicy::Random, KeyPolicy::CriticalPath);
+    for _ in 0..3 {
+        let m = s.run_sim(8, &UnitCost).unwrap();
+        check_timeline(&spec, &m, 4242);
+    }
+    let count = AtomicU64::new(0);
+    s.run(2, |_| {
+        count.fetch_add(1, Ordering::Relaxed);
+    })
+    .unwrap();
+    assert_eq!(count.load(Ordering::Relaxed) as usize, spec.n_tasks);
+}

@@ -1,0 +1,226 @@
+//! Three-layer integration: the AOT-compiled Pallas/XLA artifacts,
+//! loaded and executed by the rust PJRT runtime, must reproduce the
+//! native rust kernels bit-for-bit (same algorithm, same f64 arithmetic,
+//! modulo non-associative reduction order — tolerances below).
+//!
+//! Requires `make artifacts` (skips cleanly when artifacts are absent,
+//! e.g. in a fresh checkout).
+
+use std::sync::Arc;
+
+use quicksched::coordinator::SchedConfig;
+use quicksched::nbody;
+use quicksched::qr;
+use quicksched::runtime::{Manifest, RuntimeService, Tensor, XlaNbodyExec, XlaTileBackend};
+use quicksched::util::rng::Rng;
+
+fn service() -> Option<Arc<RuntimeService>> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(RuntimeService::start(Manifest::load(dir).unwrap(), 1).unwrap())
+}
+
+fn rand_tile(b: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..b * b).map(|_| rng.range_f64(-1.0, 1.0)).collect()
+}
+
+fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * y.abs().max(1.0),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn qr_kernels_match_native() {
+    let Some(svc) = service() else { return };
+    let xla = XlaTileBackend::new(svc);
+    use quicksched::qr::driver::TileBackend;
+    for b in [8usize, 64] {
+        // geqrf
+        let a0 = rand_tile(b, 1000 + b as u64);
+        let mut a_native = a0.clone();
+        let mut tau_native = vec![0.0; b];
+        qr::kernels::geqrf(&mut a_native, &mut tau_native, b);
+        let mut a_xla = a0.clone();
+        let mut tau_xla = vec![0.0; b];
+        xla.geqrf(&mut a_xla, &mut tau_xla, b);
+        assert_close(&a_xla, &a_native, 1e-11, &format!("geqrf b={b}"));
+        assert_close(&tau_xla, &tau_native, 1e-11, "geqrf tau");
+
+        // larft
+        let c0 = rand_tile(b, 2000 + b as u64);
+        let mut c_native = c0.clone();
+        qr::kernels::larft_apply(&a_native, &tau_native, &mut c_native, b);
+        let mut c_xla = c0.clone();
+        xla.larft(&a_native, &tau_native, &mut c_xla, b);
+        assert_close(&c_xla, &c_native, 1e-11, &format!("larft b={b}"));
+
+        // tsqrt: R = triu(geqrf result)
+        let mut r0 = vec![0.0; b * b];
+        for i in 0..b {
+            for j in i..b {
+                r0[i * b + j] = a_native[i * b + j];
+            }
+        }
+        let t0 = rand_tile(b, 3000 + b as u64);
+        let mut rn = r0.clone();
+        let mut tn = t0.clone();
+        let mut taun = vec![0.0; b];
+        qr::kernels::tsqrt(&mut rn, &mut tn, &mut taun, b);
+        let mut rx = r0.clone();
+        let mut tx = t0.clone();
+        let mut taux = vec![0.0; b];
+        xla.tsqrt(&mut rx, &mut tx, &mut taux, b);
+        assert_close(&rx, &rn, 1e-11, &format!("tsqrt R b={b}"));
+        assert_close(&tx, &tn, 1e-11, "tsqrt V2");
+        assert_close(&taux, &taun, 1e-11, "tsqrt tau");
+
+        // ssrft
+        let kj0 = rand_tile(b, 4000 + b as u64);
+        let ij0 = rand_tile(b, 5000 + b as u64);
+        let mut kjn = kj0.clone();
+        let mut ijn = ij0.clone();
+        qr::kernels::ssrft(&tn, &taun, &mut kjn, &mut ijn, b);
+        let mut kjx = kj0.clone();
+        let mut ijx = ij0.clone();
+        xla.ssrft(&tn, &taun, &mut kjx, &mut ijx, b);
+        assert_close(&kjx, &kjn, 1e-11, &format!("ssrft Ckj b={b}"));
+        assert_close(&ijx, &ijn, 1e-11, "ssrft Cij");
+    }
+}
+
+#[test]
+fn full_qr_via_xla_backend() {
+    // The headline three-layer test: a full tiled QR where every kernel
+    // runs through PJRT, verified against the Gram-matrix oracle.
+    let Some(svc) = service() else { return };
+    let xla = XlaTileBackend::new(svc);
+    let mat = qr::TiledMatrix::random(8, 3, 3, 77);
+    let a0 = mat.to_dense();
+    let run = qr::run_threaded(&mat, &xla, SchedConfig::new(2), 2).unwrap();
+    assert!(run.metrics.tasks_run > 0);
+    let res = qr::verify::gram_residual(&a0, &mat);
+    assert!(res < 1e-12, "XLA-backend QR residual {res}");
+    // And it must agree with the native backend to rounding.
+    let mat_n = qr::TiledMatrix::random(8, 3, 3, 77);
+    qr::run_threaded(&mat_n, &qr::NativeBackend, SchedConfig::new(1), 1).unwrap();
+    assert_close(&mat.to_dense(), &mat_n.to_dense(), 1e-10, "xla vs native QR");
+}
+
+#[test]
+fn nbody_kernels_match_native_service_level() {
+    let Some(svc) = service() else { return };
+    // nb_self on a small padded set vs the rust direct loops.
+    let n = 100usize;
+    let cloud = nbody::uniform_cloud(n, 42);
+    let mut x = vec![0.0; 128 * 3];
+    let mut m = vec![0.0; 128];
+    let mut mask = vec![0.0; 128];
+    for (i, p) in cloud.iter().enumerate() {
+        x[i * 3..i * 3 + 3].copy_from_slice(&p.x);
+        m[i] = p.mass;
+        mask[i] = 1.0;
+    }
+    let out = svc
+        .call(
+            "nb_self_128",
+            vec![
+                Tensor::new(x, vec![128, 3]),
+                Tensor::vec(m),
+                Tensor::vec(mask),
+            ],
+        )
+        .unwrap();
+    let want = nbody::direct::direct_sum(&cloud);
+    for (i, w) in want.iter().enumerate() {
+        for d in 0..3 {
+            let got = out[0].data[i * 3 + d];
+            assert!(
+                (got - w.a[d]).abs() < 1e-10 * w.a[d].abs().max(1.0),
+                "self acc p{i} d{d}: {got} vs {}",
+                w.a[d]
+            );
+        }
+    }
+}
+
+#[test]
+fn full_nbody_via_xla_backend() {
+    let Some(svc) = service() else { return };
+    let n = 1200usize;
+    let cloud = nbody::uniform_cloud(n, 43);
+    // Native solve.
+    let (native, _) =
+        nbody::run_threaded(cloud.clone(), 64, 256, SchedConfig::new(1), 1).unwrap();
+    // XLA solve: same tree, same graph, XLA exec function.
+    let tree = nbody::Octree::build(cloud, 64);
+    let state = nbody::NBodyState::from_tree(tree);
+    let mut sched = quicksched::coordinator::Scheduler::new(SchedConfig::new(2)).unwrap();
+    nbody::build_tasks(&mut sched, &state, 256);
+    sched.prepare().unwrap();
+    let exec = XlaNbodyExec::new(svc);
+    sched.run(2, |view| exec.exec_task(&state, view)).unwrap();
+    let mut got = state.into_parts();
+    got.sort_unstable_by_key(|p| p.id);
+    let mut want = native;
+    want.sort_unstable_by_key(|p| p.id);
+    for (g, w) in got.iter().zip(&want) {
+        for d in 0..3 {
+            let scale = w.a[d].abs().max(1.0);
+            assert!(
+                ((g.a[d] - w.a[d]) / scale).abs() < 1e-9,
+                "particle {}: {} vs {}",
+                g.id,
+                g.a[d],
+                w.a[d]
+            );
+        }
+    }
+}
+
+#[test]
+fn service_rejects_bad_shapes() {
+    let Some(svc) = service() else { return };
+    let err = svc
+        .call("qr_geqrf_8", vec![Tensor::new(vec![0.0; 4], vec![2, 2])])
+        .unwrap_err();
+    assert!(err.to_string().contains("shape"), "{err}");
+    assert!(svc.call("no_such_module", vec![]).is_err());
+}
+
+#[test]
+fn service_parallel_callers() {
+    // Many scheduler workers hammering one executor: results must stay
+    // correct and isolated per call.
+    let Some(svc) = service() else { return };
+    let svc2 = Arc::clone(&svc);
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let svc = Arc::clone(&svc2);
+            std::thread::spawn(move || {
+                for i in 0..5 {
+                    let b = 8;
+                    let a0 = rand_tile(b, 9000 + t * 100 + i);
+                    let mut a_native = a0.clone();
+                    let mut tau_native = vec![0.0; b];
+                    qr::kernels::geqrf(&mut a_native, &mut tau_native, b);
+                    let out = svc
+                        .call("qr_geqrf_8", vec![Tensor::new(a0, vec![b, b])])
+                        .unwrap();
+                    assert_close(&out[0].data, &a_native, 1e-11, "parallel geqrf");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
