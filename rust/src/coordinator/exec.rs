@@ -61,6 +61,44 @@ impl Scheduler {
     }
 }
 
+/// Execute one acquired task: run `fun` on the task's view under a panic
+/// guard and store the measured time for cost relearning. Does **not**
+/// complete the task — callers do their own accounting between execution
+/// and [`Scheduler::complete`] (the completion may immediately finalize
+/// the whole job on the server, so everything attributed to the task
+/// must be recorded first). Returns the measured execution time and
+/// whether `fun` panicked.
+///
+/// This is the execution path shared by the per-run workers below and
+/// the server's persistent pool ([`crate::server::pool`]), which draws
+/// tasks from many concurrently-active jobs instead of being spawned for
+/// one `run()`.
+pub(crate) fn exec_task_guarded<F>(s: &Scheduler, tid: super::task::TaskId, fun: &F) -> (u64, bool)
+where
+    F: Fn(TaskView<'_>) + ?Sized,
+{
+    let t0 = Instant::now();
+    let view = s.task_view(tid);
+    // Catch panics so a buggy task fn cannot deadlock the other workers
+    // waiting on `waiting > 0`.
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| fun(view)));
+    let exec_ns = t0.elapsed().as_nanos() as u64;
+    s.record_measured(tid, exec_ns);
+    (exec_ns, r.is_err())
+}
+
+/// [`exec_task_guarded`] followed by [`Scheduler::complete`] — the
+/// single-run worker path, which keeps its accounting in thread-local
+/// [`WorkerMetrics`] and so has no pre-completion ordering concerns.
+pub(crate) fn exec_and_complete<F>(s: &Scheduler, tid: super::task::TaskId, fun: &F) -> (u64, bool)
+where
+    F: Fn(TaskView<'_>) + ?Sized,
+{
+    let out = exec_task_guarded(s, tid, fun);
+    s.complete(tid);
+    out
+}
+
 #[allow(clippy::too_many_arguments)]
 fn worker_loop<F>(
     s: &Scheduler,
@@ -95,21 +133,16 @@ where
                 let acquired = Instant::now();
                 let get_ns = acquired.duration_since(get_started).as_nanos() as u64;
                 m.gettask_ns += get_ns;
-                let view = s.task_view(tid);
-                // Catch panics so a buggy task fn cannot deadlock the
-                // other workers waiting on `waiting > 0`.
-                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| fun(view)));
-                let finished = Instant::now();
-                let exec_ns = finished.duration_since(acquired).as_nanos() as u64;
+                let type_id = s.task_view(tid).type_id;
+                let (exec_ns, did_panic) = exec_and_complete(s, tid, fun);
+                let finished = acquired + Duration::from_nanos(exec_ns);
                 m.exec_ns += exec_ns;
-                s.record_measured(tid, exec_ns);
-                s.complete(tid);
                 m.tasks_run += 1;
                 m.tasks_stolen += stolen as usize;
                 if record {
                     m.records.push(TimelineRecord {
                         tid,
-                        type_id: view.type_id,
+                        type_id,
                         worker: wid as u32,
                         start_ns: acquired.duration_since(t0).as_nanos() as u64,
                         end_ns: finished.duration_since(t0).as_nanos() as u64,
@@ -117,7 +150,7 @@ where
                         stolen,
                     });
                 }
-                if r.is_err() {
+                if did_panic {
                     panicked.store(true, Ordering::Release);
                 }
                 // §Perf: reuse the post-exec timestamp instead of a third

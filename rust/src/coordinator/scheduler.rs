@@ -75,6 +75,33 @@ impl Scheduler {
         self.prepared = false;
     }
 
+    /// Rewind all *per-run* state while keeping the graph and the work
+    /// `prepare()` did (lock sorting, critical-path weights): clear the
+    /// queues and every transient counter so the same prepared graph can
+    /// be resubmitted. This is the template-reuse path of the server
+    /// (`server::registry`): per-job cost becomes dependency-counter
+    /// reinitialization instead of graph reconstruction + `prepare()`.
+    ///
+    /// Takes `&self`: every field touched is interior-mutable, so a
+    /// shared (`Arc`-held) scheduler can be recycled between jobs.
+    /// Must only be called while no run is in flight (the run either
+    /// completed — all counters already quiescent — or was abandoned).
+    pub fn reset_run(&self) -> Result<()> {
+        if !self.prepared {
+            return Err(SchedError::NotPrepared("call prepare() before reset_run()"));
+        }
+        for q in &self.queues {
+            q.clear();
+        }
+        for t in &self.tasks {
+            t.wait.store(0, Ordering::Relaxed);
+            t.measured_ns.store(0, Ordering::Relaxed);
+        }
+        self.waiting.store(0, Ordering::Release);
+        self.queued.store(0, Ordering::Release);
+        Ok(())
+    }
+
     // ------------------------------------------------------------------
     // Build API (single-threaded)
     // ------------------------------------------------------------------
@@ -680,6 +707,38 @@ mod tests {
         assert_eq!(s.nr_tasks(), 0);
         assert_eq!(s.nr_resources(), 0);
         assert!(matches!(s.start(), Err(SchedError::NotPrepared(_))));
+    }
+
+    #[test]
+    fn reset_run_keeps_graph_and_prepare() {
+        let mut s = sched(1);
+        let r = s.add_resource(None, OWNER_NONE);
+        let a = s.add_task(0, TaskFlags::default(), &[], 2);
+        let b = s.add_task(0, TaskFlags::default(), &[], 3);
+        s.add_unlock(a, b);
+        s.add_lock(b, r);
+        s.prepare().unwrap();
+        let mut rng = Rng::new(0);
+        for _ in 0..3 {
+            s.start().unwrap();
+            let (t1, _) = s.gettask(0, &mut rng).unwrap();
+            assert_eq!(t1, a);
+            s.complete(t1);
+            let (t2, _) = s.gettask(0, &mut rng).unwrap();
+            assert_eq!(t2, b);
+            s.complete(t2);
+            assert_eq!(s.waiting(), 0);
+            assert!(s.res.all_quiescent());
+            s.reset_run().unwrap();
+            assert_eq!(s.nr_tasks(), 2, "graph survives reset_run");
+            assert_eq!(s.tasks[a.idx()].weight, 5, "weights survive reset_run");
+        }
+    }
+
+    #[test]
+    fn reset_run_requires_prepare() {
+        let s = sched(1);
+        assert!(matches!(s.reset_run(), Err(SchedError::NotPrepared(_))));
     }
 
     #[test]

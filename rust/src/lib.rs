@@ -13,6 +13,10 @@
 //! * [`nbody`] — Barnes-Hut N-body substrate (paper §4.2).
 //! * [`baselines`] — dependency-only scheduler (OmpSs stand-in).
 //! * [`bench`] — drivers regenerating every table/figure of §4.
+//! * [`server`] — persistent multi-graph scheduling service: one
+//!   long-lived worker pool serving concurrent job submissions from
+//!   many tenants, with graph-template reuse and weighted-fair
+//!   admission (`repro serve` / `repro bench-server`).
 //! * [`util`] — RNG, stats, mini bench harness, CLI parsing.
 pub mod util;
 pub mod coordinator;
@@ -21,3 +25,4 @@ pub mod qr;
 pub mod nbody;
 pub mod baselines;
 pub mod bench;
+pub mod server;

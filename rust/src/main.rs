@@ -7,6 +7,9 @@
 //! repro sim   <qr|bh> [--cores 64 ...workload options]
 //! repro bench <fig8|fig9|fig11|fig12|fig13|overhead|ablation|all> [--quick]
 //! repro info  [--quick]       # E1/E4 graph-statistics tables
+//! repro serve        [--workers 4 --tenants 3 --jobs 30 --tasks 300 --work-ns 2000]
+//! repro bench-server [--workers 4 --clients 4 --jobs 64 --tasks 400 --work-ns 1000
+//!                     --json bench_out/BENCH_server.json --quick]
 //! ```
 
 use std::sync::Arc;
@@ -16,6 +19,9 @@ use quicksched::coordinator::{SchedConfig, Scheduler};
 use quicksched::nbody;
 use quicksched::qr;
 use quicksched::runtime::{Manifest, RuntimeService, XlaNbodyExec, XlaTileBackend};
+use quicksched::server::{
+    qr_template, synthetic_template, JobSpec, SchedServer, ServerConfig, TenantId,
+};
 use quicksched::util::cli::Args;
 
 fn main() {
@@ -28,9 +34,11 @@ fn main() {
         "sim" => cmd_sim(&args),
         "bench" => cmd_bench(&args),
         "info" => cmd_info(&args),
+        "serve" => cmd_serve(&args),
+        "bench-server" => cmd_bench_server(&args),
         _ => {
             eprintln!(
-                "usage: repro <qr|bh|sim|bench|info> [options]\n\
+                "usage: repro <qr|bh|sim|bench|info|serve|bench-server> [options]\n\
                  see rust/src/main.rs header or README.md"
             );
             std::process::exit(2);
@@ -219,6 +227,162 @@ fn cmd_bench(args: &Args) {
         }
     } else {
         run_one(which);
+    }
+}
+
+/// `repro serve` — demo of the persistent scheduling service: several
+/// weighted tenants submit synthetic + QR jobs concurrently over one
+/// worker pool; per-tenant statistics print at the end.
+fn cmd_serve(args: &Args) {
+    let workers = args.get_usize("workers", 4);
+    let tenants = args.get_usize("tenants", 3).max(1);
+    let jobs = args.get_usize("jobs", 30);
+    let tasks = args.get_usize("tasks", 300);
+    let work_ns = args.get_u64("work-ns", 2_000);
+
+    let server = SchedServer::start(ServerConfig::new(workers));
+    server.register_template("synthetic", synthetic_template(tasks, 8, 0xC0FFEE, work_ns));
+    server.register_template("qr", qr_template(6, 16, 0xC0FFEE));
+    // Tenant 0 carries double weight to make the fair queue visible.
+    server.set_tenant_weight(TenantId(0), 2);
+
+    println!(
+        "serve: {workers} workers, {tenants} tenants x {jobs} jobs \
+         (templates: {:?})",
+        server.registry().names()
+    );
+    std::thread::scope(|scope| {
+        for t in 0..tenants {
+            let server = &server;
+            scope.spawn(move || {
+                for j in 0..jobs {
+                    let name = if j % 4 == 3 { "qr" } else { "synthetic" };
+                    let id = server.submit(JobSpec::template(TenantId(t as u32), name));
+                    server.wait(id);
+                }
+            });
+        }
+    });
+    server.drain();
+    let snap = server.stats();
+    print!("{}", snap.render());
+    server.shutdown();
+}
+
+/// `repro bench-server` — closed-loop load generator over the service:
+/// `--clients` threads each submit jobs back-to-back, once with template
+/// reuse and once rebuilding the graph per job, so the per-job setup
+/// cost gap is measured end to end. Writes the JSON trajectory for
+/// BENCH_server.json.
+fn cmd_bench_server(args: &Args) {
+    let quick = args.flag("quick");
+    let workers = args.get_usize("workers", if quick { 2 } else { 4 });
+    let clients = args.get_usize("clients", 4);
+    let jobs = args.get_usize("jobs", if quick { 16 } else { 64 }).max(clients);
+    let tasks = args.get_usize("tasks", if quick { 120 } else { 400 });
+    let work_ns = args.get_u64("work-ns", 1_000);
+    let json_path = std::path::PathBuf::from(
+        args.get_str("json", "bench_out/BENCH_server.json").to_string(),
+    );
+
+    let run_phase = |reuse: bool| -> (f64, quicksched::server::StatsSnapshot) {
+        let server = SchedServer::start(ServerConfig::new(workers));
+        server.register_template("synthetic", synthetic_template(tasks, 8, 0xBE7C4, work_ns));
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let server = &server;
+                let n = jobs / clients + usize::from(c < jobs % clients);
+                scope.spawn(move || {
+                    for _ in 0..n {
+                        let spec = if reuse {
+                            JobSpec::template(TenantId(c as u32), "synthetic")
+                        } else {
+                            JobSpec::rebuild(TenantId(c as u32), "synthetic")
+                        };
+                        let id = server.submit(spec);
+                        server.wait(id);
+                    }
+                });
+            }
+        });
+        server.drain();
+        let wall_s = t0.elapsed().as_secs_f64();
+        let snap = server.stats();
+        server.shutdown();
+        (wall_s, snap)
+    };
+
+    println!(
+        "bench-server: {jobs} jobs from {clients} clients over {workers} workers \
+         ({tasks} tasks/job, ~{work_ns} ns/task)"
+    );
+    let (wall_reuse, snap_reuse) = run_phase(true);
+    let (wall_rebuild, snap_rebuild) = run_phase(false);
+
+    let mean_setup = |snap: &quicksched::server::StatsSnapshot, reused: bool| -> f64 {
+        let (mut sum, mut n) = (0.0f64, 0u64);
+        for t in &snap.tenants {
+            if reused {
+                sum += t.mean_setup_reuse_ns * t.reused as f64;
+                n += t.reused;
+            } else {
+                sum += t.mean_setup_build_ns * t.built as f64;
+                n += t.built;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    };
+    let setup_reuse = mean_setup(&snap_reuse, true);
+    let setup_rebuild = mean_setup(&snap_rebuild, false);
+
+    let mut table = bench::harness::Table::new(&[
+        "mode", "jobs", "wall_s", "jobs_per_s", "mean_setup_us", "reused",
+    ]);
+    let reused_jobs: u64 = snap_reuse.tenants.iter().map(|t| t.reused).sum();
+    table.row(&[
+        "template-reuse".into(),
+        snap_reuse.completed().to_string(),
+        format!("{wall_reuse:.3}"),
+        format!("{:.1}", snap_reuse.completed() as f64 / wall_reuse),
+        format!("{:.2}", setup_reuse / 1e3),
+        reused_jobs.to_string(),
+    ]);
+    table.row(&[
+        "rebuild-per-job".into(),
+        snap_rebuild.completed().to_string(),
+        format!("{wall_rebuild:.3}"),
+        format!("{:.1}", snap_rebuild.completed() as f64 / wall_rebuild),
+        format!("{:.2}", setup_rebuild / 1e3),
+        "0".into(),
+    ]);
+    println!("\n== bench-server ==\n{}", table.render());
+    let speedup = if setup_reuse > 0.0 { setup_rebuild / setup_reuse } else { f64::INFINITY };
+    println!("per-job setup cost: rebuild/reuse = {speedup:.1}x");
+
+    if let Some(dir) = json_path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    let json = format!(
+        "{{\n\"bench\": \"server\",\n\"jobs\": {jobs},\n\"clients\": {clients},\n\
+         \"workers\": {workers},\n\"tasks_per_job\": {tasks},\n\
+         \"mean_setup_reuse_ns\": {setup_reuse:.1},\n\
+         \"mean_setup_rebuild_ns\": {setup_rebuild:.1},\n\
+         \"setup_speedup\": {speedup:.2},\n\
+         \"jobs_per_sec_reuse\": {:.3},\n\"jobs_per_sec_rebuild\": {:.3},\n\
+         \"reuse\": {},\"rebuild\": {}}}\n",
+        snap_reuse.completed() as f64 / wall_reuse,
+        snap_rebuild.completed() as f64 / wall_rebuild,
+        snap_reuse.to_json(),
+        snap_rebuild.to_json(),
+    );
+    match std::fs::write(&json_path, json) {
+        Ok(()) => println!("wrote {}", json_path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", json_path.display()),
     }
 }
 

@@ -3,10 +3,28 @@
 //! L3 hot path. `PjRtClient` is `Rc`-based (`!Send`), so all PJRT
 //! objects live on dedicated executor threads behind channels
 //! ([`service`]); [`backends`] adapts the two applications to it.
-pub mod backends;
+//!
+//! The PJRT-dependent pieces are gated behind the `xla` cargo feature
+//! (the `xla` crate is not in the offline registry). Default builds get
+//! [`stub`]: the identical API surface with an error path at
+//! `RuntimeService::start`, so the CLI, examples and tests compile and
+//! degrade gracefully on machines without XLA artifacts.
 pub mod hlo;
+
+#[cfg(feature = "xla")]
+pub mod backends;
+#[cfg(feature = "xla")]
 pub mod service;
 
-pub use backends::{XlaNbodyExec, XlaTileBackend};
+#[cfg(not(feature = "xla"))]
+pub mod stub;
+
 pub use hlo::{Manifest, ModuleInfo};
+
+#[cfg(feature = "xla")]
+pub use backends::{XlaNbodyExec, XlaTileBackend};
+#[cfg(feature = "xla")]
 pub use service::{RuntimeService, Tensor};
+
+#[cfg(not(feature = "xla"))]
+pub use stub::{RuntimeService, Tensor, XlaNbodyExec, XlaTileBackend};

@@ -1,0 +1,136 @@
+//! Stub runtime used when the crate is built **without** the `xla`
+//! feature (the default — the `xla` crate and its PJRT build are not in
+//! the offline registry; see Cargo.toml).
+//!
+//! It mirrors the full [`super::service`]/[`super::backends`] API
+//! surface exactly, so the CLI `--backend xla` paths, the
+//! `examples/e2e_xla.rs` driver and the `rust/tests/xla_backend.rs`
+//! suite all *compile* unchanged; anything that actually starts the
+//! runtime gets a descriptive error at `RuntimeService::start` instead
+//! of a link failure ("stub error path", DESIGN.md §Hardware-
+//! substitutions).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::hlo::Manifest;
+use crate::coordinator::TaskView;
+use crate::nbody::kernels::NBodyState;
+use crate::qr::driver::TileBackend;
+
+const DISABLED: &str = "PJRT runtime unavailable: this build has the `xla` cargo feature \
+     disabled (the offline registry has no `xla` crate). Rebuild with \
+     `--features xla` after adding the dependency — see Cargo.toml.";
+
+/// A tensor crossing the service boundary: flat f64 data + shape.
+/// (Same layout as the real service's type.)
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f64>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f64>, shape: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Self { data, shape }
+    }
+
+    pub fn vec(data: Vec<f64>) -> Self {
+        let n = data.len();
+        Self::new(data, vec![n])
+    }
+}
+
+/// Handle to the (unavailable) executor pool.
+pub struct RuntimeService {
+    manifest: Manifest,
+}
+
+impl RuntimeService {
+    /// Always fails in stub builds; the error explains how to enable the
+    /// real runtime.
+    pub fn start(manifest: Manifest, n_executors: usize) -> Result<Arc<Self>> {
+        assert!(n_executors > 0);
+        let _ = &manifest;
+        Err(anyhow!(DISABLED))
+    }
+
+    /// Convenience: load the manifest from the default artifact dir.
+    pub fn start_default(n_executors: usize) -> Result<Arc<Self>> {
+        Self::start(Manifest::load(Manifest::default_dir())?, n_executors)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Unreachable in practice (`start` never succeeds), but kept so the
+    /// callers typecheck identically against stub and real service.
+    pub fn call(&self, _module: &str, _inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        Err(anyhow!(DISABLED))
+    }
+}
+
+/// Stub of the XLA-backed QR tile backend.
+pub struct XlaTileBackend {
+    _svc: Arc<RuntimeService>,
+}
+
+impl XlaTileBackend {
+    pub fn new(svc: Arc<RuntimeService>) -> Self {
+        Self { _svc: svc }
+    }
+}
+
+impl TileBackend for XlaTileBackend {
+    fn geqrf(&self, _a: &mut [f64], _tau: &mut [f64], _b: usize) {
+        panic!("{DISABLED}");
+    }
+    fn larft(&self, _v: &[f64], _tau: &[f64], _c: &mut [f64], _b: usize) {
+        panic!("{DISABLED}");
+    }
+    fn tsqrt(&self, _r: &mut [f64], _a: &mut [f64], _tau: &mut [f64], _b: usize) {
+        panic!("{DISABLED}");
+    }
+    fn ssrft(&self, _v2: &[f64], _tau: &[f64], _c_kj: &mut [f64], _c_ij: &mut [f64], _b: usize) {
+        panic!("{DISABLED}");
+    }
+    fn name(&self) -> &'static str {
+        "xla-stub"
+    }
+}
+
+/// Stub of the XLA-backed N-body task executor.
+pub struct XlaNbodyExec {
+    _svc: Arc<RuntimeService>,
+}
+
+impl XlaNbodyExec {
+    pub fn new(svc: Arc<RuntimeService>) -> Self {
+        Self { _svc: svc }
+    }
+
+    pub fn exec_task(&self, _state: &NBodyState, _view: TaskView<'_>) {
+        panic!("{DISABLED}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrip() {
+        let t = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(Tensor::vec(vec![5.0; 3]).shape, vec![3]);
+    }
+
+    #[test]
+    fn start_reports_disabled_feature() {
+        let err = RuntimeService::start(Manifest::default(), 1).unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
+    }
+}

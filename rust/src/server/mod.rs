@@ -1,0 +1,450 @@
+//! The persistent multi-graph scheduling service.
+//!
+//! One long-lived [`pool::WorkerPool`] serves task graphs submitted as
+//! *jobs* by many concurrent clients/tenants: submissions wait in a
+//! weighted-fair bounded admission queue ([`admission`]), graphs come
+//! from the template registry ([`registry`]) — built once and
+//! `reset_run()`-recycled per job — and every completion lands in the
+//! per-tenant statistics ([`stats`]). [`protocol`] defines the
+//! client-visible types.
+//!
+//! ```text
+//!   clients ──submit──▶ FairQueue ──admit──▶ Registry.checkout
+//!                                               │ (reuse | build)
+//!                              ┌────────────────▼───────────────┐
+//!                              │  WorkerPool (persistent)       │
+//!                              │  workers ⟳ gettask over all    │
+//!                              │  active jobs' schedulers       │
+//!                              └────────────────┬───────────────┘
+//!                                 finalize ──▶ checkin + report
+//! ```
+//!
+//! See DESIGN.md §server for the inventory and the rationale relative to
+//! the paper's one-shot `qsched_run`.
+
+pub mod admission;
+pub mod pool;
+pub mod protocol;
+pub mod registry;
+pub mod stats;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::SchedConfig;
+
+pub use admission::FairQueue;
+pub use pool::{run_virtual, ActiveJob, VirtualJob, VirtualReport, WorkerPool};
+pub use protocol::{JobId, JobReport, JobSpec, JobStatus, Submission, TenantId};
+pub use registry::{
+    panicking_template, qr_template, synthetic_template, BuildFn, ExecFn, JobGraph, Registry,
+};
+pub use stats::{ServerStats, StatsSnapshot, TenantSummary};
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Persistent worker threads.
+    pub workers: usize,
+    /// Jobs allowed on the pool concurrently; everything else waits in
+    /// the weighted-fair admission queue.
+    pub max_inflight: usize,
+    /// Idle prepared instances kept per template.
+    pub max_pool: usize,
+    /// Seed for the workers' steal order.
+    pub seed: u64,
+    /// Scheduler configuration for template instances (its `nr_queues`
+    /// should normally equal `workers`).
+    pub sched: SchedConfig,
+}
+
+impl ServerConfig {
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        Self {
+            workers,
+            max_inflight: (workers * 2).max(2),
+            max_pool: (workers * 2).max(2),
+            seed: 0x5EED_5E11,
+            sched: SchedConfig::new(workers),
+        }
+    }
+
+    pub fn with_max_inflight(mut self, n: usize) -> Self {
+        self.max_inflight = n.max(1);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+struct QueuedJob {
+    id: JobId,
+    spec: JobSpec,
+    enqueued: Instant,
+}
+
+enum Event {
+    /// New submission: try to admit.
+    Kick,
+    /// A job left the pool.
+    Finished(Arc<ActiveJob>),
+    Shutdown,
+}
+
+struct State {
+    admission: FairQueue<QueuedJob>,
+    jobs: HashMap<JobId, JobStatus>,
+}
+
+struct Inner {
+    registry: Registry,
+    state: Mutex<State>,
+    job_cv: Condvar,
+    stats: ServerStats,
+    next_job: AtomicU64,
+    tx: Mutex<mpsc::Sender<Event>>,
+}
+
+impl Inner {
+    fn send(&self, ev: Event) {
+        // A closed channel means the dispatcher is gone (shutdown);
+        // nothing left to coordinate.
+        let _ = self.tx.lock().unwrap().send(ev);
+    }
+
+    fn set_status(&self, id: JobId, status: JobStatus) {
+        let mut st = self.state.lock().unwrap();
+        st.jobs.insert(id, status);
+        drop(st);
+        self.job_cv.notify_all();
+    }
+}
+
+/// The scheduling service: submit jobs from any thread, poll or block on
+/// their status, read per-tenant statistics.
+pub struct SchedServer {
+    inner: Arc<Inner>,
+    pool: Option<Arc<WorkerPool>>,
+    dispatcher: Option<JoinHandle<()>>,
+}
+
+impl SchedServer {
+    pub fn start(config: ServerConfig) -> Self {
+        let (tx, rx) = mpsc::channel::<Event>();
+        let inner = Arc::new(Inner {
+            registry: Registry::new(config.sched.clone(), config.max_pool),
+            state: Mutex::new(State {
+                admission: FairQueue::new(config.max_inflight),
+                jobs: HashMap::new(),
+            }),
+            job_cv: Condvar::new(),
+            stats: ServerStats::new(),
+            next_job: AtomicU64::new(1),
+            tx: Mutex::new(tx),
+        });
+        // Workers report completions straight into the dispatcher queue.
+        let finish_tx = Mutex::new(inner.tx.lock().unwrap().clone());
+        let pool = Arc::new(WorkerPool::start(
+            config.workers,
+            config.seed,
+            Box::new(move |job| {
+                let _ = finish_tx.lock().unwrap().send(Event::Finished(job));
+            }),
+        ));
+        let dispatcher = {
+            let inner = Arc::clone(&inner);
+            let pool = Arc::clone(&pool);
+            std::thread::Builder::new()
+                .name("qs-dispatch".into())
+                .spawn(move || dispatcher_loop(&inner, &pool, rx))
+                .expect("spawning dispatcher")
+        };
+        Self { inner, pool: Some(pool), dispatcher: Some(dispatcher) }
+    }
+
+    /// Register a graph template (delegates to the [`Registry`]).
+    pub fn register_template(&self, name: impl Into<String>, build: BuildFn) {
+        self.inner.registry.register(name, build);
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.inner.registry
+    }
+
+    /// Set a tenant's fairness weight.
+    pub fn set_tenant_weight(&self, tenant: TenantId, weight: u64) {
+        self.inner.state.lock().unwrap().admission.set_weight(tenant, weight);
+    }
+
+    /// Submit a job; returns immediately with its handle.
+    pub fn submit(&self, spec: JobSpec) -> JobId {
+        let id = JobId(self.inner.next_job.fetch_add(1, Ordering::Relaxed));
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.jobs.insert(id, JobStatus::Queued);
+            let tenant = spec.tenant;
+            st.admission.push(tenant, QueuedJob { id, spec, enqueued: Instant::now() });
+        }
+        self.inner.send(Event::Kick);
+        id
+    }
+
+    /// Current status, or `None` for an unknown job id.
+    pub fn poll(&self, id: JobId) -> Option<JobStatus> {
+        self.inner.state.lock().unwrap().jobs.get(&id).cloned()
+    }
+
+    /// Block until `id` reaches a terminal state.
+    ///
+    /// # Panics
+    /// On an unknown job id.
+    pub fn wait(&self, id: JobId) -> JobStatus {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            // Clone the status out first: a match on `st.jobs.get(..)`
+            // would keep `st` borrowed across the `wait(st)` move.
+            let status = st.jobs.get(&id).cloned();
+            match status {
+                None => panic!("wait() on unknown {id}"),
+                Some(s) if s.is_terminal() => return s,
+                Some(_) => st = self.inner.job_cv.wait(st).unwrap(),
+            }
+        }
+    }
+
+    /// Cancel a job that is still queued. Returns `false` once it has
+    /// been admitted (running jobs drain; see DESIGN.md §server).
+    pub fn cancel(&self, id: JobId) -> bool {
+        let mut st = self.inner.state.lock().unwrap();
+        if st.admission.remove_where(|q| q.id == id).is_some() {
+            st.jobs.insert(id, JobStatus::Cancelled);
+            drop(st);
+            self.inner.job_cv.notify_all();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Block until no job is queued or in flight.
+    pub fn drain(&self) {
+        let mut st = self.inner.state.lock().unwrap();
+        while st.admission.queued() > 0 || st.admission.inflight() > 0 {
+            st = self.inner.job_cv.wait(st).unwrap();
+        }
+    }
+
+    pub fn stats(&self) -> StatsSnapshot {
+        self.inner.stats.snapshot()
+    }
+
+    /// Stop the dispatcher and the worker pool. Jobs still queued stay
+    /// unresolved; call [`SchedServer::drain`] first for a clean stop.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.inner.send(Event::Shutdown);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        // Last Arc drop joins the workers (WorkerPool::drop).
+        self.pool.take();
+    }
+}
+
+impl Drop for SchedServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn dispatcher_loop(inner: &Inner, pool: &WorkerPool, rx: mpsc::Receiver<Event>) {
+    loop {
+        match rx.recv() {
+            Err(_) => return,
+            Ok(ev) => {
+                if !handle_event(inner, ev) {
+                    return;
+                }
+            }
+        }
+        // Admit one job at a time, draining queued events between
+        // admissions: completions are cheap and must never wait behind
+        // a slow graph build (head-of-line blocking on the dispatcher).
+        loop {
+            loop {
+                match rx.try_recv() {
+                    Ok(ev) => {
+                        if !handle_event(inner, ev) {
+                            return;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+            if !admit_one(inner, pool) {
+                break;
+            }
+        }
+    }
+}
+
+/// Process one dispatcher event; `false` means shutdown.
+fn handle_event(inner: &Inner, ev: Event) -> bool {
+    match ev {
+        Event::Shutdown => false,
+        Event::Kick => true,
+        Event::Finished(job) => {
+            finish_job(inner, &job);
+            inner.state.lock().unwrap().admission.finish();
+            inner.job_cv.notify_all();
+            true
+        }
+    }
+}
+
+/// Admit at most one job: pop it from the fair queue, obtain its graph
+/// (template checkout or fresh build + `prepare` — done on the
+/// dispatcher thread, outside every lock, so client `submit()` calls
+/// never block on a build), and hand it to the pool following the
+/// submit → `start()` → `mark_ready()` contract. Returns whether a job
+/// was popped.
+fn admit_one(inner: &Inner, pool: &WorkerPool) -> bool {
+    let next = {
+        let mut st = inner.state.lock().unwrap();
+        st.admission.try_admit()
+    };
+    let Some((tenant, qjob)) = next else { return false };
+    let queue_ns = qjob.enqueued.elapsed().as_nanos() as u64;
+    let name = qjob.spec.submission.template_name().to_string();
+    let reuse = qjob.spec.submission.reuses();
+    let t_setup = Instant::now();
+    match inner.registry.checkout(&name, reuse) {
+        Err(msg) => {
+            inner.stats.record_failure(tenant);
+            inner.set_status(qjob.id, JobStatus::Failed(msg));
+            let mut st = inner.state.lock().unwrap();
+            st.admission.finish();
+            drop(st);
+            inner.job_cv.notify_all();
+        }
+        Ok((g, reused)) => {
+            let setup_ns = t_setup.elapsed().as_nanos() as u64;
+            let job = ActiveJob::new(qjob.id, tenant, g, reused, setup_ns, queue_ns);
+            inner.set_status(qjob.id, JobStatus::Running);
+            pool.submit(Arc::clone(&job));
+            if let Err(e) = job.sched.start() {
+                // Cannot happen for a prepared template instance, but
+                // keep the job's lifecycle sound: the workers will
+                // finalize it (waiting == 0) and report the failure.
+                eprintln!("job {} failed to start: {e}", job.id);
+                job.failed.store(true, Ordering::Release);
+            }
+            job.mark_ready();
+        }
+    }
+    true
+}
+
+/// Turn a finalized pool job into a report / failure, and recycle its
+/// graph instance through the registry.
+fn finish_job(inner: &Inner, job: &Arc<ActiveJob>) {
+    let service_ns = job.started.elapsed().as_nanos() as u64;
+    if job.failed.load(Ordering::Acquire) {
+        // The instance may hold leaked locks mid-graph: never pooled.
+        inner.stats.record_failure(job.tenant);
+        inner.set_status(job.id, JobStatus::Failed("job failed: task panic or startup error".into()));
+        return;
+    }
+    let report = JobReport {
+        job: job.id,
+        tenant: job.tenant,
+        tasks_run: job.tasks_run.load(Ordering::Relaxed) as usize,
+        tasks_stolen: job.tasks_stolen.load(Ordering::Relaxed) as usize,
+        exec_ns: job.exec_ns.load(Ordering::Relaxed),
+        queue_ns: job.queue_ns,
+        setup_ns: job.setup_ns,
+        service_ns,
+        reused_template: job.reused,
+    };
+    inner.stats.record(&report);
+    inner.registry.checkin(JobGraph {
+        sched: Arc::clone(&job.sched),
+        exec: Arc::clone(&job.exec),
+        template: job.template.clone(),
+    });
+    inner.set_status(job.id, JobStatus::Done(report));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::registry::synthetic_template;
+
+    fn server() -> SchedServer {
+        let s = SchedServer::start(ServerConfig::new(2).with_seed(3));
+        s.register_template("syn", synthetic_template(50, 4, 21, 0));
+        s
+    }
+
+    #[test]
+    fn submit_wait_roundtrip() {
+        let s = server();
+        let id = s.submit(JobSpec::template(TenantId(0), "syn"));
+        match s.wait(id) {
+            JobStatus::Done(r) => {
+                assert_eq!(r.tasks_run, 50);
+                assert_eq!(r.job, id);
+            }
+            other => panic!("unexpected status {other:?}"),
+        }
+        s.shutdown();
+    }
+
+    #[test]
+    fn unknown_template_fails_cleanly() {
+        let s = server();
+        let id = s.submit(JobSpec::template(TenantId(0), "ghost"));
+        assert!(matches!(s.wait(id), JobStatus::Failed(_)));
+        // The server keeps serving afterwards.
+        let ok = s.submit(JobSpec::template(TenantId(0), "syn"));
+        assert!(matches!(s.wait(ok), JobStatus::Done(_)));
+        s.shutdown();
+    }
+
+    #[test]
+    fn poll_unknown_is_none() {
+        let s = server();
+        assert!(s.poll(JobId(999)).is_none());
+        s.shutdown();
+    }
+
+    #[test]
+    fn sequential_jobs_reuse_template() {
+        let s = server();
+        for i in 0..6 {
+            let id = s.submit(JobSpec::template(TenantId(0), "syn"));
+            match s.wait(id) {
+                JobStatus::Done(r) => {
+                    if i > 0 {
+                        assert!(r.reused_template, "job {i} should reuse the pooled instance");
+                    }
+                }
+                other => panic!("job {i} -> {other:?}"),
+            }
+        }
+        let c = s.registry().counters("syn").unwrap();
+        assert_eq!(c.builds, 1);
+        assert_eq!(c.reuses, 5);
+        s.shutdown();
+    }
+}

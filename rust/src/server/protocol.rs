@@ -1,0 +1,169 @@
+//! Submission/response types of the scheduling service — the boundary
+//! between clients and the [`super::SchedServer`].
+//!
+//! The paper's `qsched_run` executes one graph per call; the service
+//! generalizes that to *jobs*: a client names a registered graph
+//! template (or asks for a fresh build of it, the no-reuse baseline),
+//! the job waits in the weighted-fair admission queue
+//! ([`super::admission`]), runs on the shared persistent pool
+//! ([`super::pool`]), and resolves to a [`JobReport`] with the setup /
+//! queue / service breakdown the `bench-server` trajectory records.
+
+use std::fmt;
+
+/// A client / tenant of the service. Fairness weights and the per-tenant
+/// statistics ([`super::stats`]) key off this.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TenantId(pub u32);
+
+impl fmt::Display for TenantId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "tenant{}", self.0)
+    }
+}
+
+/// Server-assigned job handle, unique for the lifetime of the server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl fmt::Display for JobId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "job{}", self.0)
+    }
+}
+
+/// How the job's task graph is obtained.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Submission {
+    /// Run an instance of the named template, reusing a pooled prepared
+    /// graph when one is idle (`reset_run` + resubmit — the amortized
+    /// path the paper's repeated-`qsched_run` design anticipates).
+    Template(String),
+    /// Build a fresh graph from the named template for this job alone
+    /// and discard it afterwards — the rebuild-per-job baseline that
+    /// `bench-server` compares template reuse against.
+    Rebuild(String),
+}
+
+impl Submission {
+    pub fn template_name(&self) -> &str {
+        match self {
+            Submission::Template(n) | Submission::Rebuild(n) => n,
+        }
+    }
+
+    /// Whether this submission may draw from / return to the instance pool.
+    pub fn reuses(&self) -> bool {
+        matches!(self, Submission::Template(_))
+    }
+}
+
+/// One job submission.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub tenant: TenantId,
+    pub submission: Submission,
+}
+
+impl JobSpec {
+    pub fn template(tenant: TenantId, name: impl Into<String>) -> Self {
+        Self { tenant, submission: Submission::Template(name.into()) }
+    }
+
+    pub fn rebuild(tenant: TenantId, name: impl Into<String>) -> Self {
+        Self { tenant, submission: Submission::Rebuild(name.into()) }
+    }
+}
+
+/// Lifecycle of a job as observed through `poll`.
+#[derive(Clone, Debug)]
+pub enum JobStatus {
+    /// Waiting in the admission queue.
+    Queued,
+    /// Admitted; its tasks are being drawn by the worker pool.
+    Running,
+    /// All tasks completed.
+    Done(JobReport),
+    /// A task panicked or the template could not be instantiated.
+    Failed(String),
+    /// Cancelled while still queued.
+    Cancelled,
+}
+
+impl JobStatus {
+    /// Terminal states resolve `wait()`.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobStatus::Done(_) | JobStatus::Failed(_) | JobStatus::Cancelled)
+    }
+}
+
+/// Completion report for one job.
+#[derive(Clone, Debug)]
+pub struct JobReport {
+    pub job: JobId,
+    pub tenant: TenantId,
+    /// Tasks executed (equals the graph's task count on success).
+    pub tasks_run: usize,
+    /// Tasks acquired via work stealing across the pool's queues.
+    pub tasks_stolen: usize,
+    /// Sum of task execution times, ns.
+    pub exec_ns: u64,
+    /// Time from submission to admission (queue wait), ns.
+    pub queue_ns: u64,
+    /// Time to obtain a runnable graph: build + `prepare()` on a fresh
+    /// build, pool checkout + counter reinit on template reuse, ns.
+    pub setup_ns: u64,
+    /// Time from `start()` to the last task completion, ns.
+    pub service_ns: u64,
+    /// Whether the graph came from the template instance pool.
+    pub reused_template: bool,
+}
+
+impl JobReport {
+    /// End-to-end latency as a client sees it, ns.
+    pub fn total_ns(&self) -> u64 {
+        self.queue_ns + self.setup_ns + self.service_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submission_accessors() {
+        let t = Submission::Template("qr".into());
+        let r = Submission::Rebuild("qr".into());
+        assert_eq!(t.template_name(), "qr");
+        assert_eq!(r.template_name(), "qr");
+        assert!(t.reuses());
+        assert!(!r.reuses());
+    }
+
+    #[test]
+    fn terminal_states() {
+        assert!(!JobStatus::Queued.is_terminal());
+        assert!(!JobStatus::Running.is_terminal());
+        assert!(JobStatus::Cancelled.is_terminal());
+        assert!(JobStatus::Failed("x".into()).is_terminal());
+        let rep = JobReport {
+            job: JobId(1),
+            tenant: TenantId(0),
+            tasks_run: 3,
+            tasks_stolen: 0,
+            exec_ns: 30,
+            queue_ns: 10,
+            setup_ns: 5,
+            service_ns: 20,
+            reused_template: true,
+        };
+        assert_eq!(rep.total_ns(), 35);
+        assert!(JobStatus::Done(rep).is_terminal());
+    }
+
+    #[test]
+    fn ids_display() {
+        assert_eq!(TenantId(3).to_string(), "tenant3");
+        assert_eq!(JobId(9).to_string(), "job9");
+    }
+}

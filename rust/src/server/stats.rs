@@ -1,0 +1,322 @@
+//! Per-tenant service statistics: completed/failed jobs, task counts,
+//! setup-cost split by template reuse, and latency percentiles (reusing
+//! the crate's own summary machinery, `util::stats`). The `bench-server`
+//! JSON trajectory (`BENCH_server.json`) is rendered from a
+//! [`StatsSnapshot`].
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::percentile_sorted;
+
+use super::protocol::{JobReport, TenantId};
+
+/// Bounded sample buffer: a ring over the most recent
+/// [`MAX_SAMPLES`] observations, so a long-lived server's stats stay
+/// O(1) in memory and snapshot cost while counters remain exact.
+#[derive(Clone, Debug, Default)]
+struct Samples {
+    xs: Vec<f64>,
+    cursor: usize,
+}
+
+/// Per-metric retention window (recent jobs; percentiles and means are
+/// computed over this window, counts over the full lifetime).
+const MAX_SAMPLES: usize = 4096;
+
+impl Samples {
+    fn push(&mut self, x: f64) {
+        if self.xs.len() < MAX_SAMPLES {
+            self.xs.push(x);
+        } else {
+            self.xs[self.cursor] = x;
+            self.cursor = (self.cursor + 1) % MAX_SAMPLES;
+        }
+    }
+
+    fn as_slice(&self) -> &[f64] {
+        &self.xs
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+struct TenantAcc {
+    completed: u64,
+    failed: u64,
+    tasks_run: u64,
+    tasks_stolen: u64,
+    reused: u64,
+    built: u64,
+    setup_reuse_ns: Samples,
+    setup_build_ns: Samples,
+    total_ns: Samples,
+    service_ns: Samples,
+    queue_ns: Samples,
+}
+
+/// Aggregated view of one tenant.
+#[derive(Clone, Debug)]
+pub struct TenantSummary {
+    pub tenant: TenantId,
+    pub completed: u64,
+    pub failed: u64,
+    pub tasks_run: u64,
+    pub tasks_stolen: u64,
+    /// Jobs served from the template instance pool / via fresh builds.
+    pub reused: u64,
+    pub built: u64,
+    /// Mean setup cost on the two paths, ns (0 when unobserved; means
+    /// and percentiles cover the most recent `MAX_SAMPLES` jobs).
+    pub mean_setup_reuse_ns: f64,
+    pub mean_setup_build_ns: f64,
+    /// End-to-end latency percentiles, ns.
+    pub p50_total_ns: f64,
+    pub p90_total_ns: f64,
+    pub mean_service_ns: f64,
+    pub mean_queue_ns: f64,
+}
+
+/// Snapshot of the whole server.
+#[derive(Clone, Debug)]
+pub struct StatsSnapshot {
+    pub uptime_s: f64,
+    pub tenants: Vec<TenantSummary>,
+}
+
+impl StatsSnapshot {
+    pub fn completed(&self) -> u64 {
+        self.tenants.iter().map(|t| t.completed).sum()
+    }
+
+    pub fn jobs_per_sec(&self) -> f64 {
+        if self.uptime_s <= 0.0 {
+            0.0
+        } else {
+            self.completed() as f64 / self.uptime_s
+        }
+    }
+
+    /// Render as a fixed-width text table.
+    pub fn render(&self) -> String {
+        let mut t = crate::bench::harness::Table::new(&[
+            "tenant", "done", "failed", "tasks", "reused", "built", "setup_reuse_us",
+            "setup_build_us", "p50_ms", "p90_ms",
+        ]);
+        for s in &self.tenants {
+            t.row(&[
+                s.tenant.to_string(),
+                s.completed.to_string(),
+                s.failed.to_string(),
+                s.tasks_run.to_string(),
+                s.reused.to_string(),
+                s.built.to_string(),
+                format!("{:.1}", s.mean_setup_reuse_ns / 1e3),
+                format!("{:.1}", s.mean_setup_build_ns / 1e3),
+                format!("{:.3}", s.p50_total_ns / 1e6),
+                format!("{:.3}", s.p90_total_ns / 1e6),
+            ]);
+        }
+        format!(
+            "{}\ntotal: {} jobs in {:.2}s = {:.1} jobs/s\n",
+            t.render(),
+            self.completed(),
+            self.uptime_s,
+            self.jobs_per_sec()
+        )
+    }
+
+    /// Hand-rolled JSON (no serde in the offline registry).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"uptime_s\": {:.6},\n", self.uptime_s));
+        out.push_str(&format!("  \"jobs_completed\": {},\n", self.completed()));
+        out.push_str(&format!("  \"jobs_per_sec\": {:.3},\n", self.jobs_per_sec()));
+        out.push_str("  \"tenants\": [\n");
+        for (i, s) in self.tenants.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"tenant\": {}, \"completed\": {}, \"failed\": {}, \
+                 \"tasks_run\": {}, \"tasks_stolen\": {}, \"reused\": {}, \"built\": {}, \
+                 \"mean_setup_reuse_ns\": {:.1}, \"mean_setup_build_ns\": {:.1}, \
+                 \"p50_total_ns\": {:.1}, \"p90_total_ns\": {:.1}, \
+                 \"mean_service_ns\": {:.1}, \"mean_queue_ns\": {:.1}}}{}",
+                s.tenant.0,
+                s.completed,
+                s.failed,
+                s.tasks_run,
+                s.tasks_stolen,
+                s.reused,
+                s.built,
+                s.mean_setup_reuse_ns,
+                s.mean_setup_build_ns,
+                s.p50_total_ns,
+                s.p90_total_ns,
+                s.mean_service_ns,
+                s.mean_queue_ns,
+                if i + 1 == self.tenants.len() { "\n" } else { ",\n" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+/// Thread-safe accumulator the server records every [`JobReport`] into.
+pub struct ServerStats {
+    tenants: Mutex<BTreeMap<TenantId, TenantAcc>>,
+    started: Instant,
+}
+
+impl Default for ServerStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServerStats {
+    pub fn new() -> Self {
+        Self { tenants: Mutex::new(BTreeMap::new()), started: Instant::now() }
+    }
+
+    pub fn record(&self, r: &JobReport) {
+        let mut map = self.tenants.lock().unwrap();
+        let acc = map.entry(r.tenant).or_default();
+        acc.completed += 1;
+        acc.tasks_run += r.tasks_run as u64;
+        acc.tasks_stolen += r.tasks_stolen as u64;
+        if r.reused_template {
+            acc.reused += 1;
+            acc.setup_reuse_ns.push(r.setup_ns as f64);
+        } else {
+            acc.built += 1;
+            acc.setup_build_ns.push(r.setup_ns as f64);
+        }
+        acc.total_ns.push(r.total_ns() as f64);
+        acc.service_ns.push(r.service_ns as f64);
+        acc.queue_ns.push(r.queue_ns as f64);
+    }
+
+    pub fn record_failure(&self, tenant: TenantId) {
+        let mut map = self.tenants.lock().unwrap();
+        map.entry(tenant).or_default().failed += 1;
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let map = self.tenants.lock().unwrap();
+        let mean = |xs: &[f64]| {
+            if xs.is_empty() {
+                0.0
+            } else {
+                xs.iter().sum::<f64>() / xs.len() as f64
+            }
+        };
+        let pct = |xs: &[f64], p: f64| {
+            if xs.is_empty() {
+                0.0
+            } else {
+                let mut s = xs.to_vec();
+                s.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+                percentile_sorted(&s, p)
+            }
+        };
+        let tenants = map
+            .iter()
+            .map(|(&tenant, a)| TenantSummary {
+                tenant,
+                completed: a.completed,
+                failed: a.failed,
+                tasks_run: a.tasks_run,
+                tasks_stolen: a.tasks_stolen,
+                reused: a.reused,
+                built: a.built,
+                mean_setup_reuse_ns: mean(a.setup_reuse_ns.as_slice()),
+                mean_setup_build_ns: mean(a.setup_build_ns.as_slice()),
+                p50_total_ns: pct(a.total_ns.as_slice(), 50.0),
+                p90_total_ns: pct(a.total_ns.as_slice(), 90.0),
+                mean_service_ns: mean(a.service_ns.as_slice()),
+                mean_queue_ns: mean(a.queue_ns.as_slice()),
+            })
+            .collect();
+        StatsSnapshot { uptime_s: self.started.elapsed().as_secs_f64(), tenants }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::protocol::JobId;
+
+    fn report(tenant: u32, setup: u64, reused: bool, service: u64) -> JobReport {
+        JobReport {
+            job: JobId(0),
+            tenant: TenantId(tenant),
+            tasks_run: 10,
+            tasks_stolen: 1,
+            exec_ns: 100,
+            queue_ns: 50,
+            setup_ns: setup,
+            service_ns: service,
+            reused_template: reused,
+        }
+    }
+
+    #[test]
+    fn records_split_by_reuse() {
+        let s = ServerStats::new();
+        s.record(&report(0, 1000, false, 500));
+        s.record(&report(0, 10, true, 500));
+        s.record(&report(0, 20, true, 700));
+        let snap = s.snapshot();
+        assert_eq!(snap.tenants.len(), 1);
+        let t = &snap.tenants[0];
+        assert_eq!(t.completed, 3);
+        assert_eq!((t.reused, t.built), (2, 1));
+        assert!((t.mean_setup_reuse_ns - 15.0).abs() < 1e-9);
+        assert!((t.mean_setup_build_ns - 1000.0).abs() < 1e-9);
+        assert_eq!(t.tasks_run, 30);
+    }
+
+    #[test]
+    fn sample_window_is_bounded_counts_exact() {
+        let s = ServerStats::new();
+        for i in 0..(MAX_SAMPLES + 100) {
+            s.record(&report(0, i as u64, true, 1));
+        }
+        let snap = s.snapshot();
+        let t = &snap.tenants[0];
+        // Lifetime counters stay exact...
+        assert_eq!(t.completed as usize, MAX_SAMPLES + 100);
+        // ...while means cover exactly the most recent MAX_SAMPLES jobs:
+        // setup values 100..=MAX_SAMPLES+99 -> mean (100 + 4195) / 2.
+        let want = (100.0 + (MAX_SAMPLES + 99) as f64) / 2.0;
+        assert!(
+            (t.mean_setup_reuse_ns - want).abs() < 1e-9,
+            "ring window mean {} != {want}",
+            t.mean_setup_reuse_ns
+        );
+    }
+
+    #[test]
+    fn failures_counted() {
+        let s = ServerStats::new();
+        s.record_failure(TenantId(2));
+        let snap = s.snapshot();
+        assert_eq!(snap.tenants[0].failed, 1);
+        assert_eq!(snap.completed(), 0);
+    }
+
+    #[test]
+    fn json_and_table_render() {
+        let s = ServerStats::new();
+        s.record(&report(0, 100, true, 200));
+        s.record(&report(1, 900, false, 300));
+        let snap = s.snapshot();
+        let json = snap.to_json();
+        assert!(json.contains("\"tenants\": ["));
+        assert!(json.contains("\"completed\": 1"));
+        assert!(json.trim_end().ends_with('}'));
+        let table = snap.render();
+        assert!(table.contains("tenant0"));
+        assert!(table.contains("jobs/s"));
+    }
+}

@@ -282,6 +282,39 @@ fn cyclic_graphs_rejected() {
 }
 
 #[test]
+fn reset_run_and_rerun_preserve_all_invariants_100_seeds() {
+    // The server's template-reuse path: `reset_run()` rewinds a prepared
+    // graph's run state, and a rerun must (1) execute the identical
+    // completion set, (2) respect every dependency, (3) never overlap
+    // conflicting tasks, (4) leave all resources quiescent.
+    for seed in 700..800 {
+        let spec = gen_spec(seed);
+        let cores = 1 + (seed as usize % 8);
+        let mut s = build(&spec, 4, seed, StealPolicy::Random, KeyPolicy::CriticalPath);
+        let m1 = s.run_sim(cores, &UnitCost).unwrap();
+        check_timeline(&spec, &m1, seed);
+        let set = |m: &quicksched::coordinator::RunMetrics| {
+            let mut v: Vec<u32> = m.timeline.iter().map(|r| r.tid.0).collect();
+            v.sort_unstable();
+            v
+        };
+        let first = set(&m1);
+        s.reset_run().unwrap();
+        assert_eq!(s.waiting(), 0, "seed {seed}: reset_run left waiting tasks");
+        assert_eq!(s.queued_hint(), 0, "seed {seed}: reset_run left queued tasks");
+        assert!(s.resources().all_quiescent(), "seed {seed}: reset_run leaked locks");
+        let m2 = s.run_sim(cores, &UnitCost).unwrap();
+        check_timeline(&spec, &m2, seed);
+        assert_eq!(
+            set(&m2),
+            first,
+            "seed {seed}: rerun after reset_run changed the completion set"
+        );
+        assert!(s.resources().all_quiescent(), "seed {seed}: rerun leaked locks");
+    }
+}
+
+#[test]
 fn rerun_same_scheduler_is_stable() {
     // The scheduler is reusable (qsched_run can be called repeatedly).
     let spec = gen_spec(4242);

@@ -1,0 +1,171 @@
+//! Integration tests of the persistent scheduling service: many jobs
+//! from concurrent client threads over one worker pool, template reuse
+//! vs rebuild-per-job, cancellation, and failure isolation.
+
+use quicksched::server::{
+    panicking_template, qr_template, synthetic_template, JobReport, JobSpec, JobStatus,
+    SchedServer, ServerConfig, TenantId,
+};
+
+fn start_server(workers: usize, tasks: usize) -> SchedServer {
+    let s = SchedServer::start(ServerConfig::new(workers).with_seed(0xA11CE));
+    s.register_template("syn", synthetic_template(tasks, 6, 0xFEED, 500));
+    s.register_template("qr", qr_template(4, 8, 0xFEED));
+    s
+}
+
+fn run_clients(server: &SchedServer, clients: usize, jobs_per_client: usize, reuse: bool) -> Vec<JobReport> {
+    let reports = std::sync::Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let server = &server;
+            let reports = &reports;
+            scope.spawn(move || {
+                for _ in 0..jobs_per_client {
+                    let tenant = TenantId(c as u32);
+                    let spec = if reuse {
+                        JobSpec::template(tenant, "syn")
+                    } else {
+                        JobSpec::rebuild(tenant, "syn")
+                    };
+                    let id = server.submit(spec);
+                    match server.wait(id) {
+                        JobStatus::Done(r) => reports.lock().unwrap().push(r),
+                        other => panic!("job {id} ended as {other:?}"),
+                    }
+                }
+            });
+        }
+    });
+    reports.into_inner().unwrap()
+}
+
+/// Acceptance criterion of the server subsystem: ≥64 jobs from ≥4
+/// concurrent client threads over one persistent pool, with template
+/// reuse showing measurably lower per-job setup cost than
+/// rebuild-per-job.
+#[test]
+fn sixty_four_jobs_from_four_clients_reuse_beats_rebuild() {
+    // A graph big enough that construction + prepare() visibly dominates
+    // a pool checkout.
+    let tasks = 800;
+    let server = start_server(2, tasks);
+    let reuse_reports = run_clients(&server, 4, 16, true);
+    assert_eq!(reuse_reports.len(), 64);
+    for r in &reuse_reports {
+        assert_eq!(r.tasks_run, tasks, "every task of every job ran");
+    }
+    let rebuild_reports = run_clients(&server, 4, 16, false);
+    assert_eq!(rebuild_reports.len(), 64);
+
+    // Setup cost: median over reused jobs vs median over rebuilt jobs.
+    let median = |mut xs: Vec<u64>| -> u64 {
+        xs.sort_unstable();
+        xs[xs.len() / 2]
+    };
+    let reused: Vec<u64> = reuse_reports
+        .iter()
+        .filter(|r| r.reused_template)
+        .map(|r| r.setup_ns)
+        .collect();
+    assert!(
+        reused.len() > 32,
+        "most template submissions must hit the instance pool (got {}/64)",
+        reused.len()
+    );
+    let rebuilt: Vec<u64> = rebuild_reports.iter().map(|r| r.setup_ns).collect();
+    assert!(rebuild_reports.iter().all(|r| !r.reused_template));
+    let m_reuse = median(reused);
+    let m_rebuild = median(rebuilt);
+    assert!(
+        m_reuse * 2 < m_rebuild,
+        "template reuse setup ({m_reuse} ns) must be well under \
+         rebuild-per-job setup ({m_rebuild} ns)"
+    );
+
+    // Builds are bounded by concurrency, not job count.
+    let c = server.registry().counters("syn").unwrap();
+    assert!(
+        c.builds < 64 + 16,
+        "128 jobs must not mean 128 builds on the reuse path (got {})",
+        c.builds
+    );
+    server.shutdown();
+}
+
+#[test]
+fn mixed_templates_and_tenants_complete() {
+    let server = start_server(2, 60);
+    let ids: Vec<_> = (0..24)
+        .map(|i| {
+            let name = if i % 3 == 0 { "qr" } else { "syn" };
+            server.submit(JobSpec::template(TenantId(i % 4), name))
+        })
+        .collect();
+    for id in ids {
+        assert!(matches!(server.wait(id), JobStatus::Done(_)));
+    }
+    let snap = server.stats();
+    assert_eq!(snap.completed(), 24);
+    assert_eq!(snap.tenants.len(), 4);
+    server.shutdown();
+}
+
+#[test]
+fn cancel_queued_job() {
+    // One worker + inflight 1: a burst leaves later jobs queued long
+    // enough to cancel one.
+    let server = SchedServer::start(
+        ServerConfig::new(1).with_max_inflight(1).with_seed(9),
+    );
+    server.register_template("syn", synthetic_template(400, 4, 3, 20_000));
+    let ids: Vec<_> = (0..6)
+        .map(|_| server.submit(JobSpec::template(TenantId(0), "syn")))
+        .collect();
+    // Cancel the last submission; with a 400-task x 20us backlog ahead of
+    // it, it cannot have been admitted yet.
+    let cancelled = server.cancel(ids[5]);
+    assert!(cancelled, "last of 6 queued jobs must still be cancellable");
+    assert!(matches!(server.wait(ids[5]), JobStatus::Cancelled));
+    for &id in &ids[..5] {
+        assert!(matches!(server.wait(id), JobStatus::Done(_)));
+    }
+    // Cancelling a finished job is a no-op.
+    assert!(!server.cancel(ids[0]));
+    server.drain();
+    assert_eq!(server.stats().completed(), 5);
+    server.shutdown();
+}
+
+#[test]
+fn panicking_job_fails_without_poisoning_the_server() {
+    let hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {})); // silence worker backtraces
+    let server = start_server(2, 50);
+    server.register_template("boom", panicking_template(8));
+    let bad = server.submit(JobSpec::template(TenantId(0), "boom"));
+    assert!(matches!(server.wait(bad), JobStatus::Failed(_)));
+    std::panic::set_hook(hook);
+    // The pool keeps serving healthy jobs afterwards.
+    for _ in 0..4 {
+        let id = server.submit(JobSpec::template(TenantId(1), "syn"));
+        assert!(matches!(server.wait(id), JobStatus::Done(_)));
+    }
+    let snap = server.stats();
+    let t0 = snap.tenants.iter().find(|t| t.tenant == TenantId(0)).unwrap();
+    assert_eq!(t0.failed, 1);
+    server.shutdown();
+}
+
+#[test]
+fn reports_have_consistent_accounting() {
+    let server = start_server(2, 100);
+    let id = server.submit(JobSpec::template(TenantId(7), "syn"));
+    let JobStatus::Done(r) = server.wait(id) else { panic!("job failed") };
+    assert_eq!(r.tenant, TenantId(7));
+    assert_eq!(r.tasks_run, 100);
+    assert!(r.exec_ns > 0, "synthetic tasks spin ~500ns each");
+    assert!(r.service_ns > 0);
+    assert_eq!(r.total_ns(), r.queue_ns + r.setup_ns + r.service_ns);
+    server.shutdown();
+}
