@@ -33,10 +33,11 @@ fn main() -> anyhow::Result<()> {
         g.counts[0], g.counts[1], g.counts[2], g.counts[3]
     );
 
-    // Solve.
+    // Solve: every task type executes through the application's kernel
+    // registry (one lookup per task; see `nbody::registry`).
     let t0 = std::time::Instant::now();
     let metrics = s
-        .run(threads, |view| nbody::exec_task(&state, view))
+        .run_registry(threads, &nbody::registry(&state))
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     println!(
         "solved {n} particles in {:.1} ms on {threads} threads ({} tasks, {} stolen)",

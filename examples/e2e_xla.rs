@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     let exec = XlaNbodyExec::new(Arc::clone(&svc));
     let t0 = std::time::Instant::now();
     let metrics = sched
-        .run(threads, |view| exec.exec_task(&state, view))
+        .run_registry(threads, &exec.registry(&state))
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     let got = state.into_parts();
     let want = nbody::direct::direct_sum(&cloud);

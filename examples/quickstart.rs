@@ -1,55 +1,75 @@
-//! Quickstart: the library's public API on the paper's Figure-1/2 task
-//! graph — tasks A..K with dependencies, plus the Figure-2 conflict
-//! between F, H, and I modelled as an exclusively-lockable resource.
+//! Quickstart: the typed task API on the paper's Figure-1/2 task graph —
+//! tasks A..K with dependencies, plus the Figure-2 conflict between F, H
+//! and I modelled as an exclusively-lockable resource.
+//!
+//! Three pieces to notice:
+//! * graph construction is the fluent `TaskSpec` builder
+//!   (`sched.task(ty).cost(1).lock(r).after([dep]).spawn()`), validated
+//!   at spawn time;
+//! * execution goes through a `KernelRegistry` binding each task type to
+//!   its kernel once (`sched.run_registry`), instead of a hand-written
+//!   `match` on the type id;
+//! * typed payloads (`.payload(&(i, j, k))` + `<(i32, i32, i32)>::
+//!   decode`) are shown by the application graph builders — see
+//!   `qr::build_tasks` / `qr::registry` and the `Payload`/`TaskSpec`
+//!   rustdoc examples.
 //!
 //! Run: `cargo run --example quickstart`
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use quicksched::coordinator::{SchedConfig, Scheduler, TaskFlags};
+use quicksched::coordinator::{GraphBuilder, KernelRegistry, SchedConfig, Scheduler};
+
+const NAMES: [&str; 11] = ["A", "B", "C", "D", "E", "F", "G", "H", "I", "J", "K"];
 
 fn main() -> anyhow::Result<()> {
     // One queue per worker, like the paper.
     let threads = 4;
     let mut sched = Scheduler::new(SchedConfig::new(threads))?;
 
-    // Tasks A..K (type = index into NAMES, payload = nothing, cost = 1).
-    const NAMES: [&str; 11] = ["A", "B", "C", "D", "E", "F", "G", "H", "I", "J", "K"];
-    let t: Vec<_> = (0..NAMES.len() as u32)
-        .map(|i| sched.add_task(i, TaskFlags::default(), &[], 1))
-        .collect();
-    let [a, b, c, d, e, f, g, h, i, j, k] = t[..] else { unreachable!() };
-
-    // Figure 1 dependencies (arrow X -> Y means Y depends on X).
-    for (from, to) in [
-        (a, b), (a, d), (b, c), (d, e),
-        (g, f), (g, h), (g, i), (f, e),
-        (j, k), (i, k),
-    ] {
-        sched.add_unlock(from, to);
-    }
-
     // Figure 2 conflict: F, H, I may run in any order but never overlap.
     let shared = sched.add_resource(None, 0);
-    for task in [f, h, i] {
-        sched.add_lock(task, shared);
-    }
+
+    // Tasks A..K (type = index into NAMES), built in dependency order so
+    // every edge is an `.after(..)` on the spec. Arrow X -> Y in Fig. 1
+    // means Y runs after X.
+    let a = sched.task(0).spawn();
+    let b = sched.task(1).after([a]).spawn();
+    let _c = sched.task(2).after([b]).spawn();
+    let d = sched.task(3).after([a]).spawn();
+    let g = sched.task(6).spawn();
+    let f = sched.task(5).after([g]).lock(shared).spawn();
+    let _e = sched.task(4).after([d, f]).spawn();
+    let _h = sched.task(7).after([g]).lock(shared).spawn();
+    let i = sched.task(8).after([g]).lock(shared).spawn();
+    let j = sched.task(9).spawn();
+    let _k = sched.task(10).after([j, i]).spawn();
 
     sched.prepare()?;
 
-    // Execute; record the order and check the conflict never overlaps.
+    // One kernel per task type, bound once in a registry. All eleven
+    // types share the same record-and-check kernel here; a real
+    // application binds distinct kernels (see `qr::registry`).
     let order = Mutex::new(Vec::new());
     let inside = AtomicUsize::new(0);
-    let metrics = sched.run(threads, |view| {
-        let name = NAMES[view.type_id as usize];
+    let record = |name: &'static str| {
         if "FHI".contains(name) {
             assert_eq!(inside.fetch_add(1, Ordering::SeqCst), 0, "conflict violated!");
             std::thread::sleep(std::time::Duration::from_millis(1));
             inside.fetch_sub(1, Ordering::SeqCst);
         }
         order.lock().unwrap().push(name);
-    })?;
+    };
+    let mut registry = KernelRegistry::new();
+    for (ty, &name) in NAMES.iter().enumerate() {
+        registry = registry.bind(ty as u32, move |_view| record(name));
+    }
+
+    let metrics = sched.run_registry(threads, &registry)?;
+    // The registry's kernels borrow `order`; release them before the
+    // mutex is consumed below.
+    drop(registry);
 
     let order = order.into_inner().unwrap();
     println!("executed {} tasks on {threads} threads: {:?}", metrics.tasks_run, order);

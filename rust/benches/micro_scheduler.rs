@@ -5,7 +5,8 @@
 
 use quicksched::bench::harness::{bench, Table};
 use quicksched::coordinator::{
-    queue::Queue, resource::ResTable, SchedConfig, Scheduler, TaskFlags, TaskId, UnitCost,
+    queue::Queue, resource::ResTable, GraphBuilder, SchedConfig, Scheduler, TaskFlags, TaskId,
+    UnitCost,
 };
 
 fn main() {
@@ -73,10 +74,11 @@ fn main() {
         let mut sched = Scheduler::new(SchedConfig::new(1)).unwrap();
         let rs: Vec<_> = (0..64).map(|i| sched.add_resource(None, i % 4)).collect();
         for i in 0..20_000usize {
-            let t = sched.add_task(0, TaskFlags::default(), &[], 1 + (i % 13) as i64);
+            let mut spec = sched.task(0).cost(1 + (i % 13) as i64);
             if i % 4 == 0 {
-                sched.add_lock(t, rs[i % 64]);
+                spec = spec.lock(rs[i % 64]);
             }
+            spec.spawn();
         }
         sched.prepare().unwrap();
         sched

@@ -57,9 +57,7 @@ impl DepOnlyBuilder {
     }
 
     pub fn add_task(&mut self, type_id: u32, data: &[u8], cost: i64) -> TaskHandle {
-        let t = self.sched.add_task(type_id, TaskFlags::default(), data, cost);
-        self.locks.push((t, Vec::new()));
-        t
+        self.raw_task(type_id, TaskFlags::default(), data.to_vec(), cost)
     }
 
     pub fn add_resource(&mut self, parent: Option<ResId>) -> ResId {
@@ -131,8 +129,10 @@ impl DepOnlyBuilder {
 /// real scheduler (resource owners are discarded — no affinity routing
 /// in dependency-only runtimes; `uses` pass through harmlessly).
 impl GraphBuilder for DepOnlyBuilder {
-    fn add_task(&mut self, type_id: u32, data: &[u8], cost: i64) -> TaskHandle {
-        DepOnlyBuilder::add_task(self, type_id, data, cost)
+    fn raw_task(&mut self, type_id: u32, flags: TaskFlags, data: Vec<u8>, cost: i64) -> TaskHandle {
+        let t = self.sched.push_task(type_id, flags, data, cost);
+        self.locks.push((t, Vec::new()));
+        t
     }
 
     fn add_resource(&mut self, parent: Option<ResId>, _owner: i32) -> ResId {
@@ -154,6 +154,14 @@ impl GraphBuilder for DepOnlyBuilder {
     fn nr_queues(&self) -> usize {
         self.sched.nr_queues()
     }
+
+    fn nr_tasks_built(&self) -> usize {
+        self.sched.nr_tasks()
+    }
+
+    fn nr_resources_built(&self) -> usize {
+        self.parents.len()
+    }
 }
 
 #[cfg(test)]
@@ -166,11 +174,8 @@ mod tests {
     fn conflicts_become_chains() {
         let mut b = DepOnlyBuilder::new(2, 1).unwrap();
         let r = b.add_resource(None);
-        let t0 = b.add_task(0, &[], 10);
-        let t1 = b.add_task(0, &[], 10);
-        let t2 = b.add_task(0, &[], 10);
-        for t in [t0, t1, t2] {
-            b.add_lock(t, r);
+        for _ in 0..3 {
+            b.task(0).cost(10).lock(r).spawn();
         }
         let mut s = b.finish().unwrap();
         // Chain: t0 → t1 → t2 ⇒ serial in creation order even on many
@@ -185,10 +190,8 @@ mod tests {
         let mut b = DepOnlyBuilder::new(1, 1).unwrap();
         let root = b.add_resource(None);
         let child = b.add_resource(Some(root));
-        let t_child = b.add_task(0, &[], 1);
-        let t_root = b.add_task(0, &[], 1);
-        b.add_lock(t_child, child);
-        b.add_lock(t_root, root);
+        b.task(0).lock(child).spawn();
+        b.task(0).lock(root).spawn();
         let s = b.finish().unwrap();
         // t_root must depend on t_child (both touch node `root`).
         let stats = s.stats();
@@ -200,8 +203,7 @@ mod tests {
         let mut b = DepOnlyBuilder::new(4, 1).unwrap();
         for _ in 0..8 {
             let r = b.add_resource(None);
-            let t = b.add_task(0, &[], 100);
-            b.add_lock(t, r);
+            b.task(0).cost(100).lock(r).spawn();
         }
         struct NoOverhead;
         impl crate::coordinator::CostModel for NoOverhead {
@@ -245,13 +247,10 @@ mod tests {
             .collect();
         for b_i in 0..bursts {
             for (j, &r) in rs.iter().enumerate() {
-                let t = s.add_task(
-                    0,
-                    TaskFlags::default(),
-                    &[],
-                    10 + ((b_i * 7 + j * 13) % 90) as i64,
-                );
-                s.add_lock(t, r);
+                s.task(0)
+                    .cost(10 + ((b_i * 7 + j * 13) % 90) as i64)
+                    .lock(r)
+                    .spawn();
             }
         }
         s.prepare().unwrap();
@@ -261,8 +260,7 @@ mod tests {
         let rs: Vec<ResId> = (0..k).map(|_| b.add_resource(None)).collect();
         for b_i in 0..bursts {
             for (j, &r) in rs.iter().enumerate() {
-                let t = b.add_task(0, &[], 10 + ((b_i * 7 + j * 13) % 90) as i64);
-                b.add_lock(t, r);
+                b.task(0).cost(10 + ((b_i * 7 + j * 13) % 90) as i64).lock(r).spawn();
             }
         }
         let mut s2 = b.finish().unwrap();
@@ -278,10 +276,11 @@ mod tests {
         let mut b = DepOnlyBuilder::new(2, 5).unwrap();
         let r = b.add_resource(None);
         for i in 0..20 {
-            let t = b.add_task(0, &[], 1 + i);
+            let mut spec = b.task(0).cost(1 + i);
             if i % 3 == 0 {
-                b.add_lock(t, r);
+                spec = spec.lock(r);
             }
+            spec.spawn();
         }
         let mut s = b.finish().unwrap();
         let count = AtomicU64::new(0);

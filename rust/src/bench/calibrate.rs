@@ -18,7 +18,7 @@ pub fn qr_ns_per_unit(mt: usize, b: usize) -> f64 {
     sched.prepare().unwrap();
     let total_cost = sched.total_work();
     let m = sched
-        .run(1, |view| qr::exec_task(&mat, &qr::NativeBackend, view))
+        .run_registry(1, &qr::registry(&mat, &qr::NativeBackend))
         .unwrap();
     m.exec_ns as f64 / total_cost as f64
 }
@@ -33,9 +33,7 @@ pub fn nb_ns_per_unit(n: usize, n_max: usize, n_task: usize) -> f64 {
     nbody::build_tasks(&mut sched, &state, n_task);
     sched.prepare().unwrap();
     let total_cost = sched.total_work();
-    let m = sched
-        .run(1, |view| nbody::exec_task(&state, view))
-        .unwrap();
+    let m = sched.run_registry(1, &nbody::registry(&state)).unwrap();
     m.exec_ns as f64 / total_cost as f64
 }
 

@@ -45,7 +45,7 @@ pub fn run(opts: &OverheadOpts) -> Table {
     let prepare = t0.elapsed();
     let t0 = Instant::now();
     sched
-        .run(1, |view| qr::exec_task(&mat, &qr::NativeBackend, view))
+        .run_registry(1, &qr::registry(&mat, &qr::NativeBackend))
         .unwrap();
     let solve = t0.elapsed();
     let setup = build + prepare;
@@ -71,7 +71,7 @@ pub fn run(opts: &OverheadOpts) -> Table {
     sched.prepare().unwrap();
     let prepare = t0.elapsed();
     let t0 = Instant::now();
-    sched.run(1, |view| nbody::exec_task(&state, view)).unwrap();
+    sched.run_registry(1, &nbody::registry(&state)).unwrap();
     let solve = t0.elapsed();
     let setup = build + prepare;
     table.row(&[

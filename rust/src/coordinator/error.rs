@@ -33,6 +33,21 @@ pub enum SchedError {
     /// A worker panicked while executing a task.
     #[error("worker thread panicked while executing tasks")]
     WorkerPanic,
+
+    /// A task spec locked the same resource twice (build-time check of
+    /// the typed `TaskSpec` API).
+    #[error("task spec locks resource {0} more than once")]
+    DuplicateLock(u32),
+
+    /// A task spec requested locks on a virtual task — virtual tasks
+    /// never execute, so their locks would be silently ignored.
+    #[error("virtual task cannot lock resources ({0} locks requested)")]
+    VirtualTaskLocks(usize),
+
+    /// A graph was run through a `KernelRegistry` missing a binding for
+    /// one of its task types.
+    #[error("no kernel bound for task type {0}")]
+    UnboundTaskType(u32),
 }
 
 pub type Result<T> = std::result::Result<T, SchedError>;

@@ -194,15 +194,16 @@ where
 mod tests {
     use super::*;
     use crate::coordinator::config::{SchedConfig, SchedFlags};
-    use crate::coordinator::task::{payload, TaskFlags};
+    use crate::coordinator::builder::GraphBuilder;
+    use crate::coordinator::payload::Payload;
     use std::sync::atomic::AtomicU64;
 
     fn diamond(nq: usize) -> (Scheduler, Vec<crate::coordinator::TaskId>) {
         let mut s = Scheduler::new(SchedConfig::new(nq).with_timeline(true)).unwrap();
-        let a = s.add_task(0, TaskFlags::default(), &payload::from_i32s(&[0]), 4);
-        let b = s.add_task(1, TaskFlags::default(), &payload::from_i32s(&[1]), 2);
-        let c = s.add_task(2, TaskFlags::default(), &payload::from_i32s(&[2]), 2);
-        let d = s.add_task(3, TaskFlags::default(), &payload::from_i32s(&[3]), 1);
+        let a = s.task(0).payload(&0i32).cost(4).spawn();
+        let b = s.task(1).payload(&1i32).cost(2).spawn();
+        let c = s.task(2).payload(&2i32).cost(2).spawn();
+        let d = s.task(3).payload(&3i32).cost(1).spawn();
         s.add_unlock(a, b);
         s.add_unlock(a, c);
         s.add_unlock(b, d);
@@ -248,7 +249,7 @@ mod tests {
         let counter = AtomicU64::new(1);
         s.run(2, |t| {
             let stamp = counter.fetch_add(1, Ordering::SeqCst);
-            let idx = payload::to_i32s(t.data)[0] as usize;
+            let idx = i32::decode(t.data) as usize;
             order[idx].store(stamp, Ordering::SeqCst);
         })
         .unwrap();
@@ -266,7 +267,7 @@ mod tests {
         let mut s = Scheduler::new(SchedConfig::new(4)).unwrap();
         let r = s.add_resource(None, -1);
         for _ in 0..8 {
-            let t = s.add_task(0, TaskFlags::default(), &[], 1);
+            let t = s.task(0).spawn();
             s.add_lock(t, r);
         }
         s.prepare().unwrap();
@@ -289,7 +290,7 @@ mod tests {
         let mut s = Scheduler::new(cfg).unwrap();
         let mut prev = None;
         for _ in 0..16 {
-            let t = s.add_task(0, TaskFlags::default(), &[], 1);
+            let t = s.task(0).spawn();
             if let Some(p) = prev {
                 s.add_unlock(p, t);
             }
@@ -307,7 +308,7 @@ mod tests {
     #[test]
     fn panicking_task_surfaces_error() {
         let mut s = Scheduler::new(SchedConfig::new(1)).unwrap();
-        s.add_task(0, TaskFlags::default(), &[], 1);
+        s.task(0).spawn();
         s.prepare().unwrap();
         let hook = std::panic::take_hook();
         std::panic::set_hook(Box::new(|_| {})); // silence the backtrace

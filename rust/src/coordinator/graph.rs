@@ -110,8 +110,9 @@ pub fn validate(tasks: &[Task], res: &ResTable) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::payload::Payload;
     use crate::coordinator::resource::OWNER_NONE;
-    use crate::coordinator::task::{payload, TaskFlags, TaskId};
+    use crate::coordinator::task::{TaskFlags, TaskId};
 
     #[test]
     fn stats_counts() {
@@ -119,7 +120,7 @@ mod tests {
         let r0 = res.add(None, OWNER_NONE);
         let r1 = res.add(Some(r0), OWNER_NONE);
         let mut tasks = vec![
-            Task::new(0, TaskFlags::default(), payload::from_i32s(&[1, 2]), 1),
+            Task::new(0, TaskFlags::default(), (1i32, 2i32).encode(), 1),
             Task::new(1, TaskFlags::default(), vec![], 2),
             Task::new(2, TaskFlags::default(), vec![], 3),
         ];

@@ -5,16 +5,27 @@
 //! [`scheduler`]; plus the two executors ([`exec`] real threads,
 //! [`sim`] virtual time), weight computation ([`weights`]), graph
 //! statistics ([`graph`]) and run metrics ([`metrics`]).
+//!
+//! Graphs are built through the typed API — [`GraphBuilder::task`]
+//! returning a fluent [`TaskSpec`] with [`Payload`]-typed task data —
+//! and executed through a [`KernelRegistry`] binding task types to
+//! kernels once per application ([`Scheduler::run_registry`] /
+//! [`Scheduler::run_sim_registry`]). The untyped
+//! `add_task(type_id, flags, &[u8], cost)` call and the
+//! [`task::payload`] byte-packing helpers remain as deprecated shims.
 pub mod builder;
 pub mod config;
 pub mod error;
 pub mod exec;
 pub mod graph;
 pub mod metrics;
+pub mod payload;
 pub mod queue;
+pub mod registry;
 pub mod resource;
 pub mod scheduler;
 pub mod sim;
+pub mod spec;
 pub mod task;
 pub mod weights;
 
@@ -23,7 +34,10 @@ pub use config::{ExecMode, KeyPolicy, SchedConfig, SchedFlags, StealPolicy};
 pub use error::{Result, SchedError};
 pub use graph::GraphStats;
 pub use metrics::{RunMetrics, TimelineRecord};
+pub use payload::Payload;
+pub use registry::KernelRegistry;
 pub use resource::{ResId, Resource, OWNER_NONE};
 pub use scheduler::{ResHandle, Scheduler, TaskHandle};
 pub use sim::{ContentionCost, CostModel, ScaledCost, SimCtx, UnitCost};
-pub use task::{payload, Task, TaskFlags, TaskId, TaskState, TaskView};
+pub use spec::TaskSpec;
+pub use task::{Task, TaskFlags, TaskId, TaskState, TaskType, TaskView};

@@ -1,0 +1,189 @@
+//! Typed task payloads.
+//!
+//! The paper's C API passes `void *data` and every kernel casts it back;
+//! the seed reproduction transliterated that as raw little-endian byte
+//! packing (`payload::from_i32s` / `from_u64s`). [`Payload`] replaces
+//! both with typed encode/decode for the small POD values task graphs
+//! actually carry — tile indices, cell ids, parameter tuples — so call
+//! sites write `.payload(&(i, j, k))` and kernels `<(i32, i32, i32)>::
+//! decode(view.data)` with the width checked at decode time.
+//!
+//! Implemented for the fixed-width scalars (`i32`, `u32`, `i64`, `u64`,
+//! `f32`, `f64`), `usize` (always encoded as 8 bytes for a stable wire
+//! format), `()` (empty payload) and tuples of up to four payloads.
+//! Encoding is little-endian and identical to the deprecated
+//! byte-packing helpers, so graphs built through either path carry
+//! byte-identical task data (see `rust/tests/prop_typed_api.rs`).
+
+/// A fixed-size POD value that can travel as a task's `data` bytes.
+///
+/// # Examples
+///
+/// ```
+/// use quicksched::coordinator::Payload;
+///
+/// let enc = (3i32, 7i32, 2i32).encode();
+/// assert_eq!(enc.len(), 12);
+/// assert_eq!(<(i32, i32, i32)>::decode(&enc), (3, 7, 2));
+/// ```
+pub trait Payload: Sized {
+    /// Encoded size in bytes.
+    const SIZE: usize;
+
+    /// Append the little-endian encoding of `self` to `out`.
+    fn write_to(&self, out: &mut Vec<u8>);
+
+    /// Read one value off the front of `data`, returning it and the
+    /// remaining bytes. Panics if `data` is shorter than [`Self::SIZE`].
+    fn read_from(data: &[u8]) -> (Self, &[u8]);
+
+    /// Encode into a fresh byte vector of exactly [`Self::SIZE`] bytes.
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(Self::SIZE);
+        self.write_to(&mut out);
+        debug_assert_eq!(out.len(), Self::SIZE);
+        out
+    }
+
+    /// Decode from a task's payload bytes.
+    ///
+    /// # Panics
+    /// If `data.len() != Self::SIZE` — a payload-type mismatch between
+    /// the task's producer and its kernel is a bug, not a runtime
+    /// condition.
+    fn decode(data: &[u8]) -> Self {
+        assert_eq!(
+            data.len(),
+            Self::SIZE,
+            "payload size mismatch: task carries {} bytes, decoder expects {}",
+            data.len(),
+            Self::SIZE
+        );
+        Self::read_from(data).0
+    }
+}
+
+macro_rules! scalar_payload {
+    ($ty:ty, $n:expr) => {
+        impl Payload for $ty {
+            const SIZE: usize = $n;
+
+            fn write_to(&self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+
+            fn read_from(data: &[u8]) -> (Self, &[u8]) {
+                let (head, rest) = data.split_at($n);
+                (<$ty>::from_le_bytes(head.try_into().unwrap()), rest)
+            }
+        }
+    };
+}
+
+scalar_payload!(i32, 4);
+scalar_payload!(u32, 4);
+scalar_payload!(i64, 8);
+scalar_payload!(u64, 8);
+scalar_payload!(f32, 4);
+scalar_payload!(f64, 8);
+
+/// `usize` always encodes as 8 bytes (via `u64`), matching the seed's
+/// `from_u64s` packing of indices standing in for the paper's pointers.
+impl Payload for usize {
+    const SIZE: usize = 8;
+
+    fn write_to(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(*self as u64).to_le_bytes());
+    }
+
+    fn read_from(data: &[u8]) -> (Self, &[u8]) {
+        let (v, rest) = u64::read_from(data);
+        (v as usize, rest)
+    }
+}
+
+/// The empty payload (tasks that need no parameters).
+impl Payload for () {
+    const SIZE: usize = 0;
+
+    fn write_to(&self, _out: &mut Vec<u8>) {}
+
+    fn read_from(data: &[u8]) -> (Self, &[u8]) {
+        ((), data)
+    }
+}
+
+macro_rules! tuple_payload {
+    ($($name:ident),+) => {
+        impl<$($name: Payload),+> Payload for ($($name,)+) {
+            const SIZE: usize = 0 $(+ $name::SIZE)+;
+
+            #[allow(non_snake_case)]
+            fn write_to(&self, out: &mut Vec<u8>) {
+                let ($($name,)+) = self;
+                $($name.write_to(out);)+
+            }
+
+            #[allow(non_snake_case)]
+            fn read_from(data: &[u8]) -> (Self, &[u8]) {
+                $(let ($name, data) = $name::read_from(data);)+
+                (($($name,)+), data)
+            }
+        }
+    };
+}
+
+tuple_payload!(A);
+tuple_payload!(A, B);
+tuple_payload!(A, B, C);
+tuple_payload!(A, B, C, D);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrips() {
+        assert_eq!(i32::decode(&(-7i32).encode()), -7);
+        assert_eq!(u32::decode(&(9u32).encode()), 9);
+        assert_eq!(i64::decode(&(i64::MIN).encode()), i64::MIN);
+        assert_eq!(u64::decode(&(u64::MAX).encode()), u64::MAX);
+        assert_eq!(usize::decode(&(42usize).encode()), 42);
+        assert_eq!(f64::decode(&(1.5f64).encode()), 1.5);
+        assert_eq!(f32::decode(&(0.25f32).encode()), 0.25);
+    }
+
+    #[test]
+    fn unit_is_empty() {
+        assert_eq!(().encode().len(), 0);
+        <()>::decode(&[]);
+    }
+
+    #[test]
+    fn tuples_roundtrip() {
+        let p = (3i32, 7i32, 2i32);
+        let enc = p.encode();
+        assert_eq!(enc.len(), 12);
+        assert_eq!(<(i32, i32, i32)>::decode(&enc), p);
+
+        let q = (123usize, usize::MAX);
+        assert_eq!(<(usize, usize)>::decode(&q.encode()), q);
+
+        let mixed = (1u32, -2i64, 3.5f64, 4usize);
+        assert_eq!(<(u32, i64, f64, usize)>::decode(&mixed.encode()), mixed);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn matches_legacy_byte_packing() {
+        use super::super::task::payload;
+        assert_eq!((3i32, -1i32, 1i32 << 30).encode(), payload::from_i32s(&[3, -1, 1 << 30]));
+        assert_eq!((5usize, 9usize).encode(), payload::from_u64s(&[5, 9]));
+    }
+
+    #[test]
+    #[should_panic(expected = "payload size mismatch")]
+    fn decode_checks_width() {
+        <(i32, i32)>::decode(&[0u8; 7]);
+    }
+}

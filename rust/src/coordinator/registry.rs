@@ -1,0 +1,361 @@
+//! The kernel registry: task-type → kernel binding as *data*.
+//!
+//! The seed API made every runner re-implement a `match view.type_id`
+//! closure at the call site; [`KernelRegistry`] binds each task type to
+//! its kernel once per application, so the threaded executor
+//! ([`Scheduler::run_registry`]), the virtual-time simulator
+//! ([`Scheduler::run_sim_registry`]) and the server's persistent pool
+//! (`crate::server::registry::JobGraph::from_registry`) all execute
+//! through one registry lookup. Because the binding is a value, it can
+//! be introspected (kernel names per type), validated against a graph
+//! before running ([`KernelRegistry::validate`]) and — for the server —
+//! declared by a template rather than hidden in a per-call closure.
+//!
+//! The registry also doubles as the simulation [`CostModel`]: each
+//! entry may carry a per-type contention sensitivity (the Fig. 13
+//! memory-bandwidth model) and the registry a global `ns_per_unit`
+//! scale, so one object describes both *what a task type runs* and
+//! *what it costs* on the modelled machine.
+//!
+//! # Examples
+//!
+//! ```
+//! use std::sync::atomic::{AtomicI64, Ordering};
+//! use quicksched::coordinator::{
+//!     GraphBuilder, KernelRegistry, Payload, SchedConfig, Scheduler,
+//! };
+//!
+//! let sum = AtomicI64::new(0);
+//! let reg = KernelRegistry::new().bind(0u32, |view| {
+//!     sum.fetch_add(i64::from(i32::decode(view.data)), Ordering::Relaxed);
+//! });
+//!
+//! let mut sched = Scheduler::new(SchedConfig::new(1)).unwrap();
+//! sched.task(0u32).payload(&21i32).spawn();
+//! sched.task(0u32).payload(&21i32).spawn();
+//! sched.prepare().unwrap();
+//! sched.run_registry(1, &reg).unwrap();
+//! assert_eq!(sum.load(Ordering::Relaxed), 42);
+//! ```
+
+use super::error::{Result, SchedError};
+use super::metrics::RunMetrics;
+use super::scheduler::Scheduler;
+use super::sim::{CostModel, SimCtx};
+use super::task::{TaskType, TaskView};
+
+/// One bound kernel.
+struct KernelEntry<'a> {
+    name: &'static str,
+    /// Memory-contention sensitivity of this task type (0.0 = fully
+    /// compute-bound) for the simulation cost model.
+    sensitivity: f64,
+    exec: Box<dyn Fn(TaskView<'_>) + Send + Sync + 'a>,
+}
+
+/// Task-type → kernel map, built once per application (or per server
+/// template instance) and shared by every executor. See the module docs
+/// for an example.
+///
+/// The lifetime `'a` is the lifetime of state the kernels borrow; use
+/// `KernelRegistry<'static>` (kernels capturing `Arc`s) where the
+/// registry outlives the current stack frame, e.g. on the server.
+pub struct KernelRegistry<'a> {
+    /// Dense by type id.
+    entries: Vec<Option<KernelEntry<'a>>>,
+    /// Simulation time per unit of task cost (ns); see [`CostModel`].
+    ns_per_unit: f64,
+    /// Shared-L2 module count of the simulated machine; 0 disables the
+    /// contention term.
+    machine_modules: usize,
+}
+
+impl<'a> KernelRegistry<'a> {
+    pub fn new() -> Self {
+        Self {
+            entries: Vec::new(),
+            ns_per_unit: 1.0,
+            machine_modules: 0,
+        }
+    }
+
+    /// Bind task type `ty` to `kernel`, replacing any previous binding.
+    ///
+    /// # Panics
+    /// If the type id is ≥ 65 536 — the registry is dense by type id,
+    /// so a stray sentinel id (e.g. `-1` through the `i32` impl) must
+    /// fail loudly instead of allocating billions of empty slots.
+    pub fn bind<T: TaskType>(
+        mut self,
+        ty: T,
+        kernel: impl Fn(TaskView<'_>) + Send + Sync + 'a,
+    ) -> Self {
+        let id = ty.type_id() as usize;
+        assert!(
+            id < (1 << 16),
+            "task type id {id} out of range for the dense kernel registry (max 65535)"
+        );
+        if self.entries.len() <= id {
+            self.entries.resize_with(id + 1, || None);
+        }
+        self.entries[id] = Some(KernelEntry {
+            name: ty.type_name(),
+            sensitivity: 0.0,
+            exec: Box::new(kernel),
+        });
+        self
+    }
+
+    /// Set the simulated ns per unit of task cost (default 1.0).
+    pub fn with_sim_scale(mut self, ns_per_unit: f64) -> Self {
+        self.ns_per_unit = ns_per_unit;
+        self
+    }
+
+    /// Enable the Fig. 13 memory-contention term: past `machine_modules`
+    /// active cores, per-type-sensitive task durations inflate (cf.
+    /// [`super::sim::ContentionCost`]).
+    pub fn with_contention(mut self, machine_modules: usize) -> Self {
+        self.machine_modules = machine_modules;
+        self
+    }
+
+    /// Set the contention sensitivity of an already-bound task type.
+    ///
+    /// # Panics
+    /// If `ty` has no kernel bound yet.
+    pub fn with_sensitivity<T: TaskType>(mut self, ty: T, sensitivity: f64) -> Self {
+        let id = ty.type_id() as usize;
+        match self.entries.get_mut(id).and_then(Option::as_mut) {
+            Some(e) => e.sensitivity = sensitivity,
+            None => panic!("with_sensitivity({id}): no kernel bound for that type"),
+        }
+        self
+    }
+
+    /// Whether `type_id` has a kernel bound.
+    pub fn is_bound(&self, type_id: u32) -> bool {
+        matches!(self.entries.get(type_id as usize), Some(Some(_)))
+    }
+
+    /// Kernel name bound to `type_id`, if any (introspection: the server
+    /// reports these per template).
+    pub fn name_of(&self, type_id: u32) -> Option<&'static str> {
+        self.entries
+            .get(type_id as usize)
+            .and_then(Option::as_ref)
+            .map(|e| e.name)
+    }
+
+    /// `(type_id, kernel name)` of every binding, in type-id order.
+    pub fn bindings(&self) -> Vec<(u32, &'static str)> {
+        self.entries
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| e.as_ref().map(|e| (i as u32, e.name)))
+            .collect()
+    }
+
+    /// Execute the kernel bound to `view`'s task type.
+    ///
+    /// # Panics
+    /// If the type is unbound — kernels have no error channel, and the
+    /// executors surface the panic as [`SchedError::WorkerPanic`]. Run
+    /// through [`Scheduler::run_registry`] to get this checked up front
+    /// instead.
+    pub fn dispatch(&self, view: TaskView<'_>) {
+        match self.entries.get(view.type_id as usize).and_then(Option::as_ref) {
+            Some(e) => (e.exec)(view),
+            None => panic!(
+                "no kernel bound for task type {} (task {})",
+                view.type_id, view.tid
+            ),
+        }
+    }
+
+    /// Check that every non-virtual task in `sched` has a kernel bound.
+    pub fn validate(&self, sched: &Scheduler) -> Result<()> {
+        for t in &sched.tasks {
+            if !t.flags.virtual_task && !self.is_bound(t.type_id) {
+                return Err(SchedError::UnboundTaskType(t.type_id));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for KernelRegistry<'_> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A registry is also a simulation cost model: `duration = cost ×
+/// ns_per_unit × (1 + sensitivity(type) × shared_fraction)`, with the
+/// contention ramp of [`super::sim::ContentionCost`] when
+/// `machine_modules > 0`.
+impl CostModel for KernelRegistry<'_> {
+    fn duration_ns(&self, view: TaskView<'_>, ctx: &SimCtx) -> u64 {
+        let base = (view.cost.max(1) as f64) * self.ns_per_unit;
+        let inflated = if self.machine_modules > 0 {
+            let modules = self.machine_modules as f64;
+            let shared = ((ctx.active_cores as f64 - modules) / modules).clamp(0.0, 1.0);
+            let s = self
+                .entries
+                .get(view.type_id as usize)
+                .and_then(Option::as_ref)
+                .map_or(0.0, |e| e.sensitivity);
+            base * (1.0 + s * shared)
+        } else {
+            base
+        };
+        inflated.max(1.0) as u64
+    }
+}
+
+impl Scheduler {
+    /// `qsched_run` through a [`KernelRegistry`]: validates that every
+    /// task type is bound, then executes on `nr_threads` workers via one
+    /// registry lookup per task.
+    pub fn run_registry(
+        &mut self,
+        nr_threads: usize,
+        registry: &KernelRegistry<'_>,
+    ) -> Result<RunMetrics> {
+        registry.validate(self)?;
+        self.run(nr_threads, |view| registry.dispatch(view))
+    }
+
+    /// Virtual-time execution with the registry as the [`CostModel`]
+    /// (per-type sensitivities + global scale). Validates bindings so a
+    /// sim-only misconfiguration fails the same way a real run would.
+    pub fn run_sim_registry(
+        &mut self,
+        nr_cores: usize,
+        registry: &KernelRegistry<'_>,
+    ) -> Result<RunMetrics> {
+        registry.validate(self)?;
+        self.run_sim(nr_cores, registry)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::builder::GraphBuilder;
+    use crate::coordinator::{Payload, SchedConfig};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn dispatch_routes_by_type() {
+        let a = AtomicU64::new(0);
+        let b = AtomicU64::new(0);
+        let reg = KernelRegistry::new()
+            .bind(0u32, |_| {
+                a.fetch_add(1, Ordering::Relaxed);
+            })
+            .bind(3u32, |view| {
+                b.fetch_add(u64::from(u32::decode(view.data)), Ordering::Relaxed);
+            });
+        assert!(reg.is_bound(0) && reg.is_bound(3));
+        assert!(!reg.is_bound(1));
+        let mut s = Scheduler::new(SchedConfig::new(1)).unwrap();
+        s.task(0u32).spawn();
+        s.task(3u32).payload(&5u32).spawn();
+        s.task(3u32).payload(&7u32).spawn();
+        s.prepare().unwrap();
+        let m = s.run_registry(1, &reg).unwrap();
+        assert_eq!(m.tasks_run, 3);
+        assert_eq!(a.load(Ordering::Relaxed), 1);
+        assert_eq!(b.load(Ordering::Relaxed), 12);
+    }
+
+    #[test]
+    fn unbound_type_rejected_up_front() {
+        let reg = KernelRegistry::new().bind(0u32, |_| {});
+        let mut s = Scheduler::new(SchedConfig::new(1)).unwrap();
+        s.task(9u32).spawn();
+        s.prepare().unwrap();
+        assert!(matches!(
+            s.run_registry(1, &reg),
+            Err(SchedError::UnboundTaskType(9))
+        ));
+        assert!(matches!(
+            s.run_sim_registry(1, &reg),
+            Err(SchedError::UnboundTaskType(9))
+        ));
+    }
+
+    #[test]
+    fn virtual_tasks_need_no_kernel() {
+        let reg = KernelRegistry::new().bind(0u32, |_| {});
+        let mut s = Scheduler::new(SchedConfig::new(1)).unwrap();
+        let v = s.task(7u32).virtual_task().spawn();
+        s.task(0u32).after([v]).spawn();
+        s.prepare().unwrap();
+        let m = s.run_registry(1, &reg).unwrap();
+        assert_eq!(m.tasks_run, 1);
+    }
+
+    #[test]
+    fn introspection_reports_bindings() {
+        let reg = KernelRegistry::new().bind(2u32, |_| {}).bind(0u32, |_| {});
+        assert_eq!(reg.name_of(2), Some("task"));
+        assert_eq!(reg.name_of(1), None);
+        let b = reg.bindings();
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].0, 0);
+        assert_eq!(b[1].0, 2);
+    }
+
+    #[test]
+    fn registry_as_cost_model() {
+        let reg = KernelRegistry::new()
+            .bind(0u32, |_| {})
+            .with_sim_scale(10.0);
+        let mut s = Scheduler::new(SchedConfig::new(1)).unwrap();
+        for _ in 0..4 {
+            s.task(0u32).cost(25).spawn();
+        }
+        s.prepare().unwrap();
+        let m = s.run_sim_registry(1, &reg).unwrap();
+        // 4 × 25 units × 10 ns/unit + 4 × 250 ns gettask overhead.
+        assert_eq!(m.elapsed_ns, 4 * 250 + 4 * 250);
+    }
+
+    #[test]
+    fn contention_inflates_busy_machines() {
+        let busy = KernelRegistry::new()
+            .bind(0u32, |_| {})
+            .with_contention(2)
+            .with_sensitivity(0u32, 0.5);
+        let view_cost = |active: usize| {
+            // Build a throwaway scheduler to get a TaskView.
+            let mut s = Scheduler::new(SchedConfig::new(1)).unwrap();
+            let t = s.task(0u32).cost(1000).spawn();
+            s.prepare().unwrap();
+            let ctx = SimCtx { now_ns: 0, active_cores: active, nr_cores: 4 };
+            busy.duration_ns(s.task_view(t), &ctx)
+        };
+        assert_eq!(view_cost(1), 1000, "under-subscribed: no inflation");
+        assert_eq!(view_cost(4), 1500, "fully shared: +sensitivity");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn bind_rejects_huge_type_id() {
+        // A sentinel id (e.g. -1 as u32) must fail loudly, not allocate
+        // billions of empty dense slots.
+        let _ = KernelRegistry::new().bind(u32::MAX, |_view: TaskView<'_>| {});
+    }
+
+    #[test]
+    #[should_panic(expected = "no kernel bound")]
+    fn dispatch_panics_on_unbound() {
+        let reg = KernelRegistry::new();
+        let mut s = Scheduler::new(SchedConfig::new(1)).unwrap();
+        let t = s.task(1u32).spawn();
+        s.prepare().unwrap();
+        reg.dispatch(s.task_view(t));
+    }
+}

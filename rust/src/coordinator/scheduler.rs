@@ -82,6 +82,11 @@ impl Scheduler {
     /// (`server::registry`): per-job cost becomes dependency-counter
     /// reinitialization instead of graph reconstruction + `prepare()`.
     ///
+    /// The previous run's measured task times are snapshotted into each
+    /// task's `learned_ns` before `measured_ns` is zeroed, so
+    /// [`Scheduler::relearn_costs`] can still consume them after any
+    /// number of reset cycles (template reuse must not discard timings).
+    ///
     /// Takes `&self`: every field touched is interior-mutable, so a
     /// shared (`Arc`-held) scheduler can be recycled between jobs.
     /// Must only be called while no run is in flight (the run either
@@ -95,7 +100,10 @@ impl Scheduler {
         }
         for t in &self.tasks {
             t.wait.store(0, Ordering::Relaxed);
-            t.measured_ns.store(0, Ordering::Relaxed);
+            let measured = t.measured_ns.swap(0, Ordering::Relaxed);
+            if measured > 0 {
+                t.learned_ns.store(measured, Ordering::Relaxed);
+            }
         }
         self.waiting.store(0, Ordering::Release);
         self.queued.store(0, Ordering::Release);
@@ -106,12 +114,32 @@ impl Scheduler {
     // Build API (single-threaded)
     // ------------------------------------------------------------------
 
-    /// `qsched_addtask`: create a task, copying `data` in.
-    pub fn add_task(&mut self, type_id: u32, flags: TaskFlags, data: &[u8], cost: i64) -> TaskHandle {
+    /// `qsched_addtask` with owned payload bytes — the primitive the
+    /// typed [`super::spec::TaskSpec`] API lowers to.
+    pub(crate) fn push_task(
+        &mut self,
+        type_id: u32,
+        flags: TaskFlags,
+        data: Vec<u8>,
+        cost: i64,
+    ) -> TaskHandle {
         self.prepared = false;
         let id = TaskId(self.tasks.len() as u32);
-        self.tasks.push(Task::new(type_id, flags, data.to_vec(), cost));
+        self.tasks.push(Task::new(type_id, flags, data, cost));
         id
+    }
+
+    /// `qsched_addtask`: create a task, copying `data` in.
+    ///
+    /// Deprecated shim over the typed API — build through
+    /// [`super::builder::GraphBuilder::task`] instead:
+    /// `sched.task(ty).payload(&…).cost(c).spawn()`.
+    #[deprecated(
+        since = "0.3.0",
+        note = "build through the typed TaskSpec API: `sched.task(ty).payload(&…).cost(c).spawn()`"
+    )]
+    pub fn add_task(&mut self, type_id: u32, flags: TaskFlags, data: &[u8], cost: i64) -> TaskHandle {
+        self.push_task(type_id, flags, data.to_vec(), cost)
     }
 
     /// `qsched_addres`: create a resource, optionally under a parent and
@@ -413,11 +441,14 @@ impl Scheduler {
     }
 
     /// Fold measured times back into costs and recompute weights
-    /// (`relearn_costs`; called between runs).
+    /// (`relearn_costs`; called between runs). Consumes the live
+    /// `measured_ns` of the most recent run, falling back to the
+    /// `learned_ns` snapshot a [`Scheduler::reset_run`] cycle preserved.
     pub fn relearn_costs(&mut self) -> Result<()> {
         let mut any = false;
         for t in &mut self.tasks {
             let m = t.measured_ns.load(Ordering::Relaxed);
+            let m = if m > 0 { m } else { t.learned_ns.load(Ordering::Relaxed) };
             if m > 0 {
                 t.cost = m.max(1);
                 any = true;
@@ -459,7 +490,7 @@ fn gcd(mut a: usize, mut b: usize) -> usize {
 mod tests {
     use super::*;
     use crate::coordinator::resource::OWNER_NONE;
-    use crate::coordinator::task::payload;
+    use crate::coordinator::builder::GraphBuilder;
 
     fn sched(nq: usize) -> Scheduler {
         Scheduler::new(SchedConfig::new(nq)).unwrap()
@@ -477,8 +508,8 @@ mod tests {
     fn build_and_prepare() {
         let mut s = sched(2);
         let r = s.add_resource(None, 0);
-        let a = s.add_task(0, TaskFlags::default(), &payload::from_i32s(&[1]), 10);
-        let b = s.add_task(1, TaskFlags::default(), &[], 5);
+        let a = s.task(0).payload(&1i32).cost(10).spawn();
+        let b = s.task(1).cost(5).spawn();
         s.add_lock(b, r);
         s.add_unlock(a, b);
         s.prepare().unwrap();
@@ -492,8 +523,8 @@ mod tests {
     #[test]
     fn prepare_rejects_cycles() {
         let mut s = sched(1);
-        let a = s.add_task(0, TaskFlags::default(), &[], 1);
-        let b = s.add_task(0, TaskFlags::default(), &[], 1);
+        let a = s.task(0).spawn();
+        let b = s.task(0).spawn();
         s.add_unlock(a, b);
         s.add_unlock(b, a);
         assert!(matches!(s.prepare(), Err(SchedError::Cycle { .. })));
@@ -508,7 +539,7 @@ mod tests {
         let mid = s.add_resource(Some(root), OWNER_NONE);
         let leaf = s.add_resource(Some(mid), OWNER_NONE);
         let other = s.add_resource(None, OWNER_NONE);
-        let t = s.add_task(0, TaskFlags::default(), &[], 1);
+        let t = s.task(0).spawn();
         s.add_lock(t, leaf);
         s.add_lock(t, root);
         s.add_lock(t, other);
@@ -527,7 +558,7 @@ mod tests {
         let mut s = sched(1);
         let r0 = s.add_resource(None, OWNER_NONE);
         let r1 = s.add_resource(None, OWNER_NONE);
-        let t = s.add_task(0, TaskFlags::default(), &[], 1);
+        let t = s.task(0).spawn();
         s.add_lock(t, r1);
         s.add_lock(t, r0);
         s.add_lock(t, r1);
@@ -538,8 +569,8 @@ mod tests {
     #[test]
     fn start_enqueues_roots_only() {
         let mut s = sched(1);
-        let a = s.add_task(0, TaskFlags::default(), &[], 1);
-        let b = s.add_task(0, TaskFlags::default(), &[], 1);
+        let a = s.task(0).spawn();
+        let b = s.task(0).spawn();
         s.add_unlock(a, b);
         s.prepare().unwrap();
         s.start().unwrap();
@@ -571,7 +602,7 @@ mod tests {
         let r_q2 = s.add_resource(None, 2);
         let r_q2b = s.add_resource(None, 2);
         let r_q1 = s.add_resource(None, 1);
-        let t = s.add_task(0, TaskFlags::default(), &[], 1);
+        let t = s.task(0).spawn();
         s.add_lock(t, r_q2);
         s.add_use(t, r_q2b);
         s.add_use(t, r_q1);
@@ -586,7 +617,7 @@ mod tests {
     fn gettask_steals_from_other_queue() {
         let mut s = sched(2);
         let r = s.add_resource(None, 1); // owned by queue 1
-        let t = s.add_task(0, TaskFlags::default(), &[], 1);
+        let t = s.task(0).spawn();
         s.add_lock(t, r);
         s.prepare().unwrap();
         s.start().unwrap();
@@ -605,7 +636,7 @@ mod tests {
         cfg.flags.reown = false;
         let mut s = Scheduler::new(cfg).unwrap();
         let r = s.add_resource(None, 1);
-        let t = s.add_task(0, TaskFlags::default(), &[], 1);
+        let t = s.task(0).spawn();
         s.add_lock(t, r);
         s.prepare().unwrap();
         s.start().unwrap();
@@ -620,9 +651,9 @@ mod tests {
         // a -> V -> b where V is virtual: completing a must make b
         // available without anyone "running" V.
         let mut s = sched(1);
-        let a = s.add_task(0, TaskFlags::default(), &[], 1);
-        let v = s.add_task(9, TaskFlags { virtual_task: true }, &[], 1);
-        let b = s.add_task(0, TaskFlags::default(), &[], 1);
+        let a = s.task(0).spawn();
+        let v = s.task(9).virtual_task().spawn();
+        let b = s.task(0).spawn();
         s.add_unlock(a, v);
         s.add_unlock(v, b);
         s.prepare().unwrap();
@@ -641,8 +672,8 @@ mod tests {
     #[test]
     fn virtual_root_completes_at_start() {
         let mut s = sched(1);
-        let v = s.add_task(0, TaskFlags { virtual_task: true }, &[], 1);
-        let b = s.add_task(0, TaskFlags::default(), &[], 1);
+        let v = s.task(0).virtual_task().spawn();
+        let b = s.task(0).spawn();
         s.add_unlock(v, b);
         s.prepare().unwrap();
         s.start().unwrap();
@@ -657,8 +688,8 @@ mod tests {
     fn conflicting_tasks_serialized_via_locks() {
         let mut s = sched(1);
         let r = s.add_resource(None, OWNER_NONE);
-        let a = s.add_task(0, TaskFlags::default(), &[], 1);
-        let b = s.add_task(0, TaskFlags::default(), &[], 1);
+        let a = s.task(0).spawn();
+        let b = s.task(0).spawn();
         s.add_lock(a, r);
         s.add_lock(b, r);
         s.prepare().unwrap();
@@ -679,8 +710,8 @@ mod tests {
         let mut s = sched(1);
         let root = s.add_resource(None, OWNER_NONE);
         let child = s.add_resource(Some(root), OWNER_NONE);
-        let t_child = s.add_task(0, TaskFlags::default(), &[], 1);
-        let t_root = s.add_task(0, TaskFlags::default(), &[], 1);
+        let t_child = s.task(0).spawn();
+        let t_root = s.task(0).spawn();
         s.add_lock(t_child, child);
         s.add_lock(t_root, root);
         s.prepare().unwrap();
@@ -701,7 +732,7 @@ mod tests {
     fn reset_clears_everything() {
         let mut s = sched(2);
         s.add_resource(None, 0);
-        s.add_task(0, TaskFlags::default(), &[], 1);
+        s.task(0).spawn();
         s.prepare().unwrap();
         s.reset();
         assert_eq!(s.nr_tasks(), 0);
@@ -713,8 +744,8 @@ mod tests {
     fn reset_run_keeps_graph_and_prepare() {
         let mut s = sched(1);
         let r = s.add_resource(None, OWNER_NONE);
-        let a = s.add_task(0, TaskFlags::default(), &[], 2);
-        let b = s.add_task(0, TaskFlags::default(), &[], 3);
+        let a = s.task(0).cost(2).spawn();
+        let b = s.task(0).cost(3).spawn();
         s.add_unlock(a, b);
         s.add_lock(b, r);
         s.prepare().unwrap();
@@ -744,8 +775,8 @@ mod tests {
     #[test]
     fn relearn_costs_updates_weights() {
         let mut s = sched(1);
-        let a = s.add_task(0, TaskFlags::default(), &[], 1);
-        let b = s.add_task(0, TaskFlags::default(), &[], 1);
+        let a = s.task(0).spawn();
+        let b = s.task(0).spawn();
         s.add_unlock(a, b);
         s.prepare().unwrap();
         s.record_measured(a, 100);
@@ -756,6 +787,48 @@ mod tests {
     }
 
     #[test]
+    fn measured_costs_survive_reset_run() {
+        // Template-reuse regression: reset_run used to zero measured_ns
+        // outright, discarding the run's timings before cost relearning
+        // could consume them. They must survive via the learned snapshot.
+        let mut s = sched(1);
+        let a = s.task(0).spawn();
+        let b = s.task(0).after([a]).spawn();
+        s.prepare().unwrap();
+        let mut rng = Rng::new(0);
+        s.start().unwrap();
+        let (t1, _) = s.gettask(0, &mut rng).unwrap();
+        s.record_measured(t1, 400);
+        s.complete(t1);
+        let (t2, _) = s.gettask(0, &mut rng).unwrap();
+        s.record_measured(t2, 700);
+        s.complete(t2);
+        // The reuse path rewinds before anyone relearns…
+        s.reset_run().unwrap();
+        assert_eq!(
+            s.tasks[a.idx()].measured_ns.load(Ordering::Relaxed),
+            0,
+            "reset_run clears the live measurement"
+        );
+        // …and relearning afterwards still sees the measured times.
+        s.relearn_costs().unwrap();
+        assert_eq!(s.tasks[a.idx()].cost, 400);
+        assert_eq!(s.tasks[b.idx()].cost, 700);
+        assert_eq!(s.tasks[a.idx()].weight, 1100);
+        // A later run's fresh measurements take precedence over the
+        // snapshot.
+        s.start().unwrap();
+        let (t1, _) = s.gettask(0, &mut rng).unwrap();
+        s.record_measured(t1, 900);
+        s.complete(t1);
+        let (t2, _) = s.gettask(0, &mut rng).unwrap();
+        s.complete(t2);
+        s.relearn_costs().unwrap();
+        assert_eq!(s.tasks[a.idx()].cost, 900);
+        assert_eq!(s.tasks[b.idx()].cost, 700, "unmeasured task keeps learned cost");
+    }
+
+    #[test]
     fn lock_aware_priority_changes_key() {
         let mut cfg = SchedConfig::new(1);
         cfg.flags.lock_aware_priority = true;
@@ -763,8 +836,8 @@ mod tests {
         let r0 = s.add_resource(None, OWNER_NONE);
         let r1 = s.add_resource(None, OWNER_NONE);
         // heavy: weight 10 but 2 locks; light: weight 9, no locks.
-        let heavy = s.add_task(0, TaskFlags::default(), &[], 10);
-        let light = s.add_task(0, TaskFlags::default(), &[], 9);
+        let heavy = s.task(0).cost(10).spawn();
+        let light = s.task(0).cost(9).spawn();
         s.add_lock(heavy, r0);
         s.add_lock(heavy, r1);
         s.prepare().unwrap();

@@ -216,14 +216,14 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::builder::GraphBuilder;
     use crate::coordinator::config::SchedConfig;
-    use crate::coordinator::task::TaskFlags;
 
     fn chain(n: usize, cost: i64, nq: usize) -> Scheduler {
         let mut s = Scheduler::new(SchedConfig::new(nq).with_timeline(true)).unwrap();
         let mut prev = None;
         for _ in 0..n {
-            let t = s.add_task(0, TaskFlags::default(), &[], cost);
+            let t = s.task(0).cost(cost).spawn();
             if let Some(p) = prev {
                 s.add_unlock(p, t);
             }
@@ -236,7 +236,7 @@ mod tests {
     fn independent(n: usize, cost: i64, nq: usize) -> Scheduler {
         let mut s = Scheduler::new(SchedConfig::new(nq).with_timeline(true)).unwrap();
         for _ in 0..n {
-            s.add_task(0, TaskFlags::default(), &[], cost);
+            s.task(0).cost(cost).spawn();
         }
         s.prepare().unwrap();
         s
@@ -278,7 +278,7 @@ mod tests {
         let mut s = Scheduler::new(SchedConfig::new(8).with_timeline(true)).unwrap();
         let r = s.add_resource(None, -1);
         for _ in 0..8 {
-            let t = s.add_task(0, TaskFlags::default(), &[], 50);
+            let t = s.task(0).cost(50).spawn();
             s.add_lock(t, r);
         }
         s.prepare().unwrap();
@@ -303,7 +303,7 @@ mod tests {
             .unwrap();
             let r = s.add_resource(None, -1);
             for i in 0..40 {
-                let t = s.add_task(i % 3, TaskFlags::default(), &[], 10 + i as i64);
+                let t = s.task(i % 3).cost(10 + i as i64).spawn();
                 if i % 5 == 0 {
                     s.add_lock(t, r);
                 }
@@ -327,7 +327,7 @@ mod tests {
         let mut s = chain(5, 100, 2);
         // add parallel side work
         for _ in 0..10 {
-            s.add_task(0, TaskFlags::default(), &[], 30);
+            s.task(0).cost(30).spawn();
         }
         s.prepare().unwrap();
         let cp = s.critical_path() as u64;
@@ -346,11 +346,11 @@ mod tests {
             let mut s = Scheduler::new(cfg).unwrap();
             // filler first so FIFO prefers it
             for _ in 0..32 {
-                s.add_task(1, TaskFlags::default(), &[], 100);
+                s.task(1).cost(100).spawn();
             }
             let mut prev = None;
             for _ in 0..16 {
-                let t = s.add_task(0, TaskFlags::default(), &[], 100);
+                let t = s.task(0).cost(100).spawn();
                 if let Some(p) = prev {
                     s.add_unlock(p, t);
                 }

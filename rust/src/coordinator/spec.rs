@@ -1,0 +1,260 @@
+//! The fluent task builder: [`TaskSpec`].
+//!
+//! `TaskSpec` replaces the paper-style four-call build sequence
+//! (`qsched_addtask` + N × `addlock`/`adduse`/`addunlock`) with one
+//! validated, typed expression:
+//!
+//! ```
+//! use quicksched::coordinator::{GraphBuilder, SchedConfig, Scheduler};
+//!
+//! let mut sched = Scheduler::new(SchedConfig::new(2)).unwrap();
+//! let tile = sched.add_resource(None, 0);
+//! let a = sched.task(0u32).payload(&(0i32, 0i32)).cost(4).lock(tile).spawn();
+//! let b = sched.task(1u32).payload(&(0i32, 1i32)).cost(2).after([a]).spawn();
+//! sched.prepare().unwrap();
+//! assert_eq!(sched.stats().tasks, 2);
+//! assert_eq!(sched.stats().dependencies, 1);
+//! # let _ = b;
+//! ```
+//!
+//! The spec validates at [`TaskSpec::spawn`] time — unknown resource or
+//! task handles, duplicate locks, and locks on virtual tasks (which
+//! never execute, so their locks would be silently ignored) are build
+//! errors instead of latent graph bugs. `spawn()` panics on a bad spec;
+//! [`TaskSpec::try_spawn`] returns the error for callers that prefer to
+//! handle it.
+//!
+//! Dependencies (`after`) accept any `IntoIterator<Item = TaskHandle>`,
+//! so an `Option<TaskHandle>` ("the previous task at this tile, if any")
+//! works directly — a pattern both application graph generators use.
+
+use super::builder::GraphBuilder;
+use super::error::{Result, SchedError};
+use super::payload::Payload;
+use super::scheduler::{ResHandle, TaskHandle};
+use super::task::TaskFlags;
+
+/// One task under construction against a [`GraphBuilder`]. Created by
+/// [`GraphBuilder::task`]; consumed by [`TaskSpec::spawn`] /
+/// [`TaskSpec::try_spawn`].
+#[must_use = "a TaskSpec does nothing until .spawn() is called"]
+pub struct TaskSpec<'b, B: GraphBuilder + ?Sized> {
+    builder: &'b mut B,
+    type_id: u32,
+    flags: TaskFlags,
+    data: Vec<u8>,
+    cost: i64,
+    locks: Vec<ResHandle>,
+    uses: Vec<ResHandle>,
+    after: Vec<TaskHandle>,
+}
+
+impl<'b, B: GraphBuilder + ?Sized> TaskSpec<'b, B> {
+    pub(crate) fn new(builder: &'b mut B, type_id: u32) -> Self {
+        Self {
+            builder,
+            type_id,
+            flags: TaskFlags::default(),
+            data: Vec::new(),
+            cost: 1,
+            locks: Vec::new(),
+            uses: Vec::new(),
+            after: Vec::new(),
+        }
+    }
+
+    /// Typed payload (replaces raw byte packing; see [`Payload`]).
+    pub fn payload<P: Payload>(mut self, p: &P) -> Self {
+        self.data = p.encode();
+        self
+    }
+
+    /// User-estimated relative cost (§3.1); defaults to 1, clamped ≥ 1.
+    pub fn cost(mut self, cost: i64) -> Self {
+        self.cost = cost;
+        self
+    }
+
+    /// Mark as a virtual task: groups dependencies, has no action and is
+    /// never handed to a kernel (`task_flag_virtual`).
+    pub fn virtual_task(mut self) -> Self {
+        self.flags.virtual_task = true;
+        self
+    }
+
+    /// Exclusively lock `r` for the task's execution (`qsched_addlock`).
+    pub fn lock(mut self, r: ResHandle) -> Self {
+        self.locks.push(r);
+        self
+    }
+
+    /// Lock every resource in `rs`.
+    pub fn locks<I: IntoIterator<Item = ResHandle>>(mut self, rs: I) -> Self {
+        self.locks.extend(rs);
+        self
+    }
+
+    /// Use `r` without locking — a queue-affinity hint (`qsched_adduse`).
+    pub fn use_res(mut self, r: ResHandle) -> Self {
+        self.uses.push(r);
+        self
+    }
+
+    /// Use every resource in `rs` (affinity hints).
+    pub fn uses<I: IntoIterator<Item = ResHandle>>(mut self, rs: I) -> Self {
+        self.uses.extend(rs);
+        self
+    }
+
+    /// Run only after every task in `ts` (`qsched_addunlock` edges).
+    /// Accepts arrays, iterators, or an `Option<TaskHandle>`.
+    pub fn after<I: IntoIterator<Item = TaskHandle>>(mut self, ts: I) -> Self {
+        self.after.extend(ts);
+        self
+    }
+
+    /// Validate and emit the task into the builder, returning its handle.
+    ///
+    /// Validation: every `lock`/`use` names an existing resource, every
+    /// `after` names an existing task, no resource is locked twice, and
+    /// virtual tasks lock nothing.
+    pub fn try_spawn(self) -> Result<TaskHandle> {
+        let nt = self.builder.nr_tasks_built();
+        let nr = self.builder.nr_resources_built();
+        for &r in self.locks.iter().chain(self.uses.iter()) {
+            if r.idx() >= nr {
+                return Err(SchedError::BadRes(r.0, nr));
+            }
+        }
+        for (i, &a) in self.locks.iter().enumerate() {
+            if self.locks[..i].contains(&a) {
+                return Err(SchedError::DuplicateLock(a.0));
+            }
+        }
+        for &t in &self.after {
+            if t.idx() >= nt {
+                return Err(SchedError::BadTask(t.0, nt));
+            }
+        }
+        if self.flags.virtual_task && !self.locks.is_empty() {
+            return Err(SchedError::VirtualTaskLocks(self.locks.len()));
+        }
+        let t = self
+            .builder
+            .raw_task(self.type_id, self.flags, self.data, self.cost);
+        for &dep in &self.after {
+            self.builder.add_unlock(dep, t);
+        }
+        for &r in &self.locks {
+            self.builder.add_lock(t, r);
+        }
+        for &r in &self.uses {
+            self.builder.add_use(t, r);
+        }
+        Ok(t)
+    }
+
+    /// [`TaskSpec::try_spawn`], panicking on an invalid spec. Graph
+    /// construction is single-threaded setup code, where a malformed
+    /// spec is a programming error.
+    pub fn spawn(self) -> TaskHandle {
+        let type_id = self.type_id;
+        self.try_spawn()
+            .unwrap_or_else(|e| panic!("invalid task spec (type {type_id}): {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{ResId, SchedConfig, Scheduler, TaskId};
+
+    fn sched() -> Scheduler {
+        Scheduler::new(SchedConfig::new(2)).unwrap()
+    }
+
+    #[test]
+    fn fluent_build_matches_raw_build() {
+        let mut s = sched();
+        let r0 = s.add_resource(None, 0);
+        let r1 = s.add_resource(None, 1);
+        let a = s.task(0u32).payload(&(1i32, 2i32, 3i32)).cost(10).lock(r0).spawn();
+        let b = s
+            .task(1u32)
+            .cost(5)
+            .locks([r1])
+            .use_res(r0)
+            .after([a])
+            .spawn();
+        s.prepare().unwrap();
+        let st = s.stats();
+        assert_eq!((st.tasks, st.locks, st.uses, st.dependencies), (2, 2, 1, 1));
+        assert_eq!(st.payload_bytes, 12);
+        let va = s.task_view(a);
+        assert_eq!(va.cost, 10);
+        assert_eq!(va.weight, 15, "a unlocks b: weight = 10 + 5");
+        let _ = b;
+    }
+
+    #[test]
+    fn after_accepts_option() {
+        let mut s = sched();
+        let mut prev: Option<TaskHandle> = None;
+        for i in 0..4 {
+            prev = Some(s.task(0u32).cost(1 + i).after(prev).spawn());
+        }
+        s.prepare().unwrap();
+        assert_eq!(s.stats().dependencies, 3);
+        assert_eq!(s.stats().roots, 1);
+    }
+
+    #[test]
+    fn unknown_resource_rejected() {
+        let mut s = sched();
+        let err = s.task(0u32).lock(ResId(7)).try_spawn().unwrap_err();
+        assert!(matches!(err, SchedError::BadRes(7, 0)));
+        assert_eq!(s.nr_tasks(), 0, "nothing emitted on a failed spec");
+    }
+
+    #[test]
+    fn unknown_dependency_rejected() {
+        let mut s = sched();
+        let err = s.task(0u32).after([TaskId(3)]).try_spawn().unwrap_err();
+        assert!(matches!(err, SchedError::BadTask(3, 0)));
+    }
+
+    #[test]
+    fn duplicate_lock_rejected() {
+        let mut s = sched();
+        let r = s.add_resource(None, 0);
+        let err = s.task(0u32).lock(r).lock(r).try_spawn().unwrap_err();
+        assert!(matches!(err, SchedError::DuplicateLock(0)));
+    }
+
+    #[test]
+    fn virtual_task_with_locks_rejected() {
+        let mut s = sched();
+        let r = s.add_resource(None, 0);
+        let err = s.task(0u32).virtual_task().lock(r).try_spawn().unwrap_err();
+        assert!(matches!(err, SchedError::VirtualTaskLocks(1)));
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid task spec")]
+    fn spawn_panics_on_bad_spec() {
+        let mut s = sched();
+        s.task(0u32).lock(ResId(1)).spawn();
+    }
+
+    #[test]
+    fn virtual_task_flag_propagates() {
+        let mut s = sched();
+        let v = s.task(0u32).virtual_task().spawn();
+        let b = s.task(0u32).after([v]).spawn();
+        s.prepare().unwrap();
+        s.start().unwrap();
+        // The virtual root completes in place; only b remains.
+        assert_eq!(s.waiting(), 1);
+        let _ = b;
+    }
+}

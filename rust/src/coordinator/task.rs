@@ -47,6 +47,39 @@ pub struct TaskFlags {
     pub virtual_task: bool,
 }
 
+/// An application task type: anything that names a `u32` type id (the
+/// paper's `int type`). Implemented by the application enums
+/// (`QrTask`, `NbTask`, `CholTask`) and by the raw integer types, so
+/// both `sched.task(QrTask::Geqrf)` and `sched.task(3u32)` work.
+///
+/// `type_name` feeds the [`super::registry::KernelRegistry`]
+/// introspection (kernel names per binding).
+pub trait TaskType: Copy {
+    fn type_id(self) -> u32;
+
+    fn type_name(self) -> &'static str {
+        "task"
+    }
+}
+
+impl TaskType for u32 {
+    fn type_id(self) -> u32 {
+        self
+    }
+}
+
+impl TaskType for i32 {
+    fn type_id(self) -> u32 {
+        self as u32
+    }
+}
+
+impl TaskType for usize {
+    fn type_id(self) -> u32 {
+        self as u32
+    }
+}
+
 /// A single task (paper §3.1 `struct task`).
 ///
 /// The atomic fields (`wait`, `measured_ns`) are the only parts mutated
@@ -76,6 +109,11 @@ pub struct Task {
     pub wait: AtomicI32,
     /// Measured execution time (ns) of the last run, for cost relearning.
     pub measured_ns: AtomicI64,
+    /// Measured time carried across [`super::Scheduler::reset_run`]
+    /// cycles: `reset_run` snapshots `measured_ns` here before zeroing
+    /// it, so template reuse does not discard timings before
+    /// [`super::Scheduler::relearn_costs`] can consume them.
+    pub learned_ns: AtomicI64,
 }
 
 impl Task {
@@ -91,6 +129,7 @@ impl Task {
             weight: 0,
             wait: AtomicI32::new(0),
             measured_ns: AtomicI64::new(0),
+            learned_ns: AtomicI64::new(0),
         }
     }
 
@@ -119,10 +158,17 @@ pub struct TaskView<'a> {
     pub weight: i64,
 }
 
-/// Helpers for encoding small POD payloads into a task's `data` bytes, the
-/// way the paper's examples pack `int data[3]` / `struct cell *data[2]`.
+/// Byte-packing helpers for task payloads, the way the paper's examples
+/// pack `int data[3]` / `struct cell *data[2]`.
+///
+/// Deprecated: the typed [`crate::coordinator::payload::Payload`] trait
+/// replaces raw byte packing (`.payload(&(i, j, k))` on a task spec,
+/// `<(i32, i32, i32)>::decode(view.data)` in a kernel) with the same
+/// little-endian wire format. This module remains as the compatibility shim for
+/// out-of-tree callers and the paper-fidelity tests.
 pub mod payload {
     /// Encode a slice of i32 parameters.
+    #[deprecated(since = "0.3.0", note = "use the typed Payload trait: `(a, b, c).encode()`")]
     pub fn from_i32s(xs: &[i32]) -> Vec<u8> {
         let mut v = Vec::with_capacity(xs.len() * 4);
         for x in xs {
@@ -132,6 +178,7 @@ pub mod payload {
     }
 
     /// Decode a slice of i32 parameters.
+    #[deprecated(since = "0.3.0", note = "use the typed Payload trait: `<(i32, i32)>::decode(data)`")]
     pub fn to_i32s(data: &[u8]) -> Vec<i32> {
         assert!(data.len() % 4 == 0, "payload not a multiple of 4 bytes");
         data.chunks_exact(4)
@@ -141,6 +188,7 @@ pub mod payload {
 
     /// Encode a slice of u64 parameters (e.g. indices standing in for the
     /// paper's raw pointers).
+    #[deprecated(since = "0.3.0", note = "use the typed Payload trait: `(a, b).encode()`")]
     pub fn from_u64s(xs: &[u64]) -> Vec<u8> {
         let mut v = Vec::with_capacity(xs.len() * 8);
         for x in xs {
@@ -150,6 +198,7 @@ pub mod payload {
     }
 
     /// Decode a slice of u64 parameters.
+    #[deprecated(since = "0.3.0", note = "use the typed Payload trait: `<(u64, u64)>::decode(data)`")]
     pub fn to_u64s(data: &[u8]) -> Vec<u64> {
         assert!(data.len() % 8 == 0, "payload not a multiple of 8 bytes");
         data.chunks_exact(8)
@@ -159,8 +208,17 @@ pub mod payload {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the legacy byte-packing shim keeps its own tests
 mod tests {
     use super::*;
+
+    #[test]
+    fn task_type_impls() {
+        assert_eq!(7u32.type_id(), 7);
+        assert_eq!(7i32.type_id(), 7);
+        assert_eq!(7usize.type_id(), 7);
+        assert_eq!(3u32.type_name(), "task");
+    }
 
     #[test]
     fn cost_clamped_positive() {

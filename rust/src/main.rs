@@ -124,7 +124,7 @@ fn cmd_bh(args: &Args) {
             let graph = nbody::build_tasks(&mut sched, &state, n_task);
             sched.prepare().unwrap();
             let exec = XlaNbodyExec::new(xla_service());
-            let metrics = sched.run(threads, |view| exec.exec_task(&state, view)).unwrap();
+            let metrics = sched.run_registry(threads, &exec.registry(&state)).unwrap();
             (state.into_parts(), nbody::NbRun { metrics, graph })
         }
         other => panic!("unknown backend {other:?} (native|xla)"),

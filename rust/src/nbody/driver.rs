@@ -9,7 +9,7 @@ use crate::coordinator::{
 use super::kernels::NBodyState;
 use super::octree::Octree;
 use super::part::Part;
-use super::tasks::{build_tasks, exec_task, NbGraph};
+use super::tasks::{build_tasks, registry, NbGraph};
 
 /// Outcome of a Barnes-Hut run.
 pub struct NbRun {
@@ -31,7 +31,7 @@ pub fn run_threaded(
     let mut sched = Scheduler::new(config)?;
     let graph = build_tasks(&mut sched, &state, n_task);
     sched.prepare()?;
-    let metrics = sched.run(nr_threads, |view| exec_task(&state, view))?;
+    let metrics = sched.run_registry(nr_threads, &registry(&state))?;
     Ok((state.into_parts(), NbRun { metrics, graph }))
 }
 

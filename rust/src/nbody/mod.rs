@@ -17,4 +17,4 @@ pub use driver::{nb_cost_model, run_sim, run_threaded, NbRun, NbScale};
 pub use kernels::NBodyState;
 pub use octree::{Cell, CellId, Octree, ROOT};
 pub use part::{plummer_cloud, uniform_cloud, Part};
-pub use tasks::{build_tasks, exec_task, NbGraph, NbTask};
+pub use tasks::{build_tasks, exec_task, registry, NbGraph, NbTask};

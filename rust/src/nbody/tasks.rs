@@ -22,7 +22,11 @@
 //! exactly (see `rust/tests/paper_counts.rs`; the paper's *total* of
 //! 97 553 includes unexplained extras, see EXPERIMENTS.md §E4).
 
-use crate::coordinator::{payload, GraphBuilder, ResHandle, TaskHandle};
+use std::ops::Deref;
+
+use crate::coordinator::{
+    GraphBuilder, KernelRegistry, Payload, ResHandle, TaskHandle, TaskType, TaskView,
+};
 
 use super::kernels::NBodyState;
 use super::octree::{Cell, CellId, ROOT};
@@ -58,6 +62,16 @@ impl NbTask {
     }
 }
 
+impl TaskType for NbTask {
+    fn type_id(self) -> u32 {
+        self as u32
+    }
+
+    fn type_name(self) -> &'static str {
+        self.name()
+    }
+}
+
 /// Handles produced by [`build_tasks`].
 pub struct NbGraph {
     /// Per-cell resource handles.
@@ -70,12 +84,7 @@ pub struct NbGraph {
 
 /// Decode an N-body task payload into `(cell_i, cell_j)`.
 pub fn decode(data: &[u8]) -> (CellId, CellId) {
-    let v = payload::to_u64s(data);
-    (v[0] as CellId, v[1] as CellId)
-}
-
-fn payload_of(ci: CellId, cj: CellId) -> Vec<u8> {
-    payload::from_u64s(&[ci as u64, cj as u64])
+    <(usize, usize)>::decode(data)
 }
 
 /// Exact pair-interaction count a Self task on `ci` will perform
@@ -171,20 +180,15 @@ pub fn build_tasks<B: GraphBuilder>(sched: &mut B, state: &NBodyState, n_task: u
         if c.count == 0 {
             continue;
         }
-        let t = sched.add_task(
-            NbTask::Com as u32,
-            &payload_of(ci, usize::MAX),
-            (c.count as i64).max(8),
-        );
-        sched.add_use(t, rid[ci]);
+        let mut spec = sched
+            .task(NbTask::Com)
+            .payload(&(ci, usize::MAX))
+            .cost((c.count as i64).max(8))
+            .use_res(rid[ci]);
         if let Some(pr) = c.progeny {
-            for ch in pr {
-                if let Some(child_t) = com_tid[ch] {
-                    sched.add_unlock(child_t, t);
-                }
-            }
+            spec = spec.after(pr.iter().filter_map(|&ch| com_tid[ch]));
         }
-        com_tid[ci] = Some(t);
+        com_tid[ci] = Some(spec.spawn());
     }
     let root_com = com_tid[ROOT].expect("non-empty tree has a root COM");
     let mut counts = [0usize; 4];
@@ -208,12 +212,12 @@ pub fn build_tasks<B: GraphBuilder>(sched: &mut B, state: &NBodyState, n_task: u
                         }
                     }
                 } else {
-                    let t = sched.add_task(
-                        NbTask::SelfInteract as u32,
-                        &payload_of(ci, usize::MAX),
-                        exact_self_cost(cells, ci).max(1),
-                    );
-                    sched.add_lock(t, rid[ci]);
+                    sched
+                        .task(NbTask::SelfInteract)
+                        .payload(&(ci, usize::MAX))
+                        .cost(exact_self_cost(cells, ci).max(1))
+                        .lock(rid[ci])
+                        .spawn();
                     counts[0] += 1;
                 }
             }
@@ -233,13 +237,12 @@ pub fn build_tasks<B: GraphBuilder>(sched: &mut B, state: &NBodyState, n_task: u
                         }
                     }
                 } else {
-                    let t = sched.add_task(
-                        NbTask::PairPP as u32,
-                        &payload_of(ci, cj),
-                        exact_pair_cost(cells, ci, cj).max(1),
-                    );
-                    sched.add_lock(t, rid[ci]);
-                    sched.add_lock(t, rid[cj]);
+                    sched
+                        .task(NbTask::PairPP)
+                        .payload(&(ci, cj))
+                        .cost(exact_pair_cost(cells, ci, cj).max(1))
+                        .locks([rid[ci], rid[cj]])
+                        .spawn();
                     counts[1] += 1;
                 }
             }
@@ -251,22 +254,63 @@ pub fn build_tasks<B: GraphBuilder>(sched: &mut B, state: &NBodyState, n_task: u
         if c.is_split() || c.count == 0 {
             continue;
         }
-        let t = sched.add_task(
-            NbTask::PairPC as u32,
-            &payload_of(ci, ROOT),
-            (c.count as i64 * count_pc_nodes(state, ci, ROOT)).max(1),
-        );
-        sched.add_lock(t, rid[ci]);
-        sched.add_unlock(root_com, t);
+        sched
+            .task(NbTask::PairPC)
+            .payload(&(ci, ROOT))
+            .cost((c.count as i64 * count_pc_nodes(state, ci, ROOT)).max(1))
+            .lock(rid[ci])
+            .after([root_com])
+            .spawn();
         counts[2] += 1;
     }
 
     NbGraph { rid, com_tid, counts }
 }
 
-/// Execute one N-body task (the user function for `qsched_run`).
+/// Bind the four N-body kernels against `state` into a
+/// [`KernelRegistry`], pre-configured with the Fig. 13 per-type memory
+/// contention sensitivities (pair types +35–40%, compute-dense walks and
+/// COM +10%) for registry-driven simulation.
+///
+/// `state` is any cloneable handle dereferencing to the solver state —
+/// a plain reference for a stack-scoped run, an `Arc` for a
+/// `KernelRegistry<'static>` the server can own.
 ///
 /// Safety: delegated to the task graph — see the kernel docs.
+pub fn registry<'a, S>(state: S) -> KernelRegistry<'a>
+where
+    S: Deref<Target = NBodyState> + Clone + Send + Sync + 'a,
+{
+    let s1 = state.clone();
+    let s2 = state.clone();
+    let s3 = state.clone();
+    let s4 = state;
+    KernelRegistry::new()
+        .bind(NbTask::SelfInteract, move |view: TaskView<'_>| {
+            let (ci, _) = decode(view.data);
+            unsafe { s1.comp_self(ci) }
+        })
+        .bind(NbTask::PairPP, move |view: TaskView<'_>| {
+            let (ci, cj) = decode(view.data);
+            unsafe { s2.comp_pair(ci, cj) }
+        })
+        .bind(NbTask::PairPC, move |view: TaskView<'_>| {
+            let (ci, _) = decode(view.data);
+            unsafe { s3.comp_pair_cp(ci, ROOT) }
+        })
+        .bind(NbTask::Com, move |view: TaskView<'_>| {
+            let (ci, _) = decode(view.data);
+            unsafe { s4.compute_com(ci) }
+        })
+        .with_sensitivity(NbTask::SelfInteract, 0.35)
+        .with_sensitivity(NbTask::PairPP, 0.40)
+        .with_sensitivity(NbTask::PairPC, 0.10)
+        .with_sensitivity(NbTask::Com, 0.10)
+}
+
+/// Execute one N-body task (the user function for `qsched_run`) — the
+/// legacy closure-dispatch compat shim; in-tree code executes via
+/// [`registry`].
 pub fn exec_task(state: &NBodyState, view: crate::coordinator::TaskView<'_>) {
     let (ci, cj) = decode(view.data);
     unsafe {
@@ -350,7 +394,7 @@ mod tests {
         let mut s = Scheduler::new(SchedConfig::new(4)).unwrap();
         let g = build_tasks(&mut s, &state, 256);
         s.prepare().unwrap();
-        s.run(4, |view| exec_task(&state, view)).unwrap();
+        s.run_registry(4, &registry(&state)).unwrap();
         assert!(s.resources().all_quiescent());
         let got = state.into_parts();
         let want = crate::nbody::direct::direct_sum(&cloud);
@@ -372,7 +416,7 @@ mod tests {
             let mut s = Scheduler::new(SchedConfig::new(threads)).unwrap();
             build_tasks(&mut s, &state, 200);
             s.prepare().unwrap();
-            s.run(threads, |view| exec_task(&state, view)).unwrap();
+            s.run_registry(threads, &registry(&state)).unwrap();
             let mut ps = state.into_parts();
             ps.sort_unstable_by_key(|p| p.id);
             ps
@@ -399,12 +443,12 @@ mod tests {
         // the PC walk on the root leaf does nothing (no distant cells).
         let (mut s, g, state) = build(40, 100, 5000, 1);
         assert_eq!(g.counts, [1, 0, 1, 1]);
-        s.run(1, |view| exec_task(&state, view)).unwrap();
+        s.run_registry(1, &registry(&state)).unwrap();
     }
 
     #[test]
     fn decode_roundtrip() {
-        let p = payload_of(123, usize::MAX);
+        let p = (123usize, usize::MAX).encode();
         let (a, b) = decode(&p);
         assert_eq!(a, 123);
         assert_eq!(b, usize::MAX);

@@ -16,7 +16,11 @@
 //! Kernels operate on the lower triangle; `L` ends up in the lower
 //! triangular tiles. Verification: `‖A − L·Lᵀ‖_F / ‖A‖_F`.
 
-use crate::coordinator::{payload, GraphBuilder, ResHandle, SchedConfig, TaskHandle};
+use std::ops::Deref;
+
+use crate::coordinator::{
+    GraphBuilder, KernelRegistry, Payload, ResHandle, SchedConfig, TaskHandle, TaskType, TaskView,
+};
 use crate::util::rng::Rng;
 
 use super::matrix::{fro_norm, TiledMatrix};
@@ -40,6 +44,25 @@ impl CholTask {
             3 => Self::Gemm,
             _ => panic!("unknown Cholesky task type {x}"),
         }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Potrf => "DPOTRF",
+            Self::Trsm => "DTRSM",
+            Self::Syrk => "DSYRK",
+            Self::Gemm => "DGEMM",
+        }
+    }
+}
+
+impl TaskType for CholTask {
+    fn type_id(self) -> u32 {
+        self as u32
+    }
+
+    fn type_name(self) -> &'static str {
+        self.name()
     }
 }
 
@@ -126,13 +149,13 @@ pub struct CholGraph {
     pub n: usize,
 }
 
-pub fn decode(data: &[u8]) -> (usize, usize, usize) {
-    let v = payload::to_i32s(data);
-    (v[0] as usize, v[1] as usize, v[2] as usize)
+fn enc(i: usize, j: usize, k: usize) -> (i32, i32, i32) {
+    (i as i32, j as i32, k as i32)
 }
 
-fn add<B: GraphBuilder>(s: &mut B, ty: CholTask, i: usize, j: usize, k: usize, cost: i64) -> TaskHandle {
-    s.add_task(ty as u32, &payload::from_i32s(&[i as i32, j as i32, k as i32]), cost)
+pub fn decode(data: &[u8]) -> (usize, usize, usize) {
+    let (i, j, k) = <(i32, i32, i32)>::decode(data);
+    (i as usize, j as usize, k as usize)
 }
 
 /// Build the Cholesky task graph for an `n × n` tile matrix.
@@ -147,45 +170,51 @@ pub fn build_tasks<B: GraphBuilder>(sched: &mut B, n: usize) -> CholGraph {
     let mut tid: Vec<Option<TaskHandle>> = vec![None; n * n];
 
     for k in 0..n {
-        let t_potrf = add(sched, CholTask::Potrf, k, k, k, cost::POTRF);
-        sched.add_lock(t_potrf, rid[at(k, k)]);
-        if let Some(prev) = tid[at(k, k)] {
-            sched.add_unlock(prev, t_potrf);
-        }
+        let t_potrf = sched
+            .task(CholTask::Potrf)
+            .payload(&enc(k, k, k))
+            .cost(cost::POTRF)
+            .lock(rid[at(k, k)])
+            .after(tid[at(k, k)])
+            .spawn();
         tid[at(k, k)] = Some(t_potrf);
 
         for i in k + 1..n {
-            let t_trsm = add(sched, CholTask::Trsm, i, k, k, cost::TRSM);
-            sched.add_lock(t_trsm, rid[at(i, k)]);
-            sched.add_use(t_trsm, rid[at(k, k)]);
-            sched.add_unlock(t_potrf, t_trsm);
-            if let Some(prev) = tid[at(i, k)] {
-                sched.add_unlock(prev, t_trsm);
-            }
+            let t_trsm = sched
+                .task(CholTask::Trsm)
+                .payload(&enc(i, k, k))
+                .cost(cost::TRSM)
+                .lock(rid[at(i, k)])
+                .use_res(rid[at(k, k)])
+                .after([t_potrf])
+                .after(tid[at(i, k)])
+                .spawn();
             tid[at(i, k)] = Some(t_trsm);
         }
         for i in k + 1..n {
             let t_row_i = tid[at(i, k)].unwrap();
             // SYRK on the diagonal tile (i, i).
-            let t_syrk = add(sched, CholTask::Syrk, i, i, k, cost::SYRK);
-            sched.add_lock(t_syrk, rid[at(i, i)]);
-            sched.add_use(t_syrk, rid[at(i, k)]);
-            sched.add_unlock(t_row_i, t_syrk);
-            if let Some(prev) = tid[at(i, i)] {
-                sched.add_unlock(prev, t_syrk);
-            }
+            let t_syrk = sched
+                .task(CholTask::Syrk)
+                .payload(&enc(i, i, k))
+                .cost(cost::SYRK)
+                .lock(rid[at(i, i)])
+                .use_res(rid[at(i, k)])
+                .after([t_row_i])
+                .after(tid[at(i, i)])
+                .spawn();
             tid[at(i, i)] = Some(t_syrk);
             // GEMMs below the diagonal: tile (i, j), k < j < i.
             for j in k + 1..i {
-                let t_gemm = add(sched, CholTask::Gemm, i, j, k, cost::GEMM);
-                sched.add_lock(t_gemm, rid[at(i, j)]);
-                sched.add_use(t_gemm, rid[at(i, k)]);
-                sched.add_use(t_gemm, rid[at(j, k)]);
-                sched.add_unlock(t_row_i, t_gemm);
-                sched.add_unlock(tid[at(j, k)].unwrap(), t_gemm);
-                if let Some(prev) = tid[at(i, j)] {
-                    sched.add_unlock(prev, t_gemm);
-                }
+                let t_gemm = sched
+                    .task(CholTask::Gemm)
+                    .payload(&enc(i, j, k))
+                    .cost(cost::GEMM)
+                    .lock(rid[at(i, j)])
+                    .uses([rid[at(i, k)], rid[at(j, k)]])
+                    .after([t_row_i, tid[at(j, k)].unwrap()])
+                    .after(tid[at(i, j)])
+                    .spawn();
                 tid[at(i, j)] = Some(t_gemm);
             }
         }
@@ -193,10 +222,40 @@ pub fn build_tasks<B: GraphBuilder>(sched: &mut B, n: usize) -> CholGraph {
     CholGraph { rid, n }
 }
 
-/// Execute one Cholesky task against the tiled matrix.
+/// Bind the four Cholesky kernels against `mat` into a
+/// [`KernelRegistry`] (cf. [`super::driver::registry`] for QR).
 ///
 /// Safety: per the graph above — writes under locks, reads of panel
 /// tiles ordered by dependencies.
+pub fn registry<'a, M>(mat: M) -> KernelRegistry<'a>
+where
+    M: Deref<Target = TiledMatrix> + Clone + Send + Sync + 'a,
+{
+    let m1 = mat.clone();
+    let m2 = mat.clone();
+    let m3 = mat.clone();
+    let m4 = mat;
+    KernelRegistry::new()
+        .bind(CholTask::Potrf, move |view: TaskView<'_>| {
+            let (_, _, k) = decode(view.data);
+            unsafe { potrf(m1.tile_mut(k, k), m1.b) }
+        })
+        .bind(CholTask::Trsm, move |view: TaskView<'_>| {
+            let (i, _, k) = decode(view.data);
+            unsafe { trsm(m2.tile(k, k), m2.tile_mut(i, k), m2.b) }
+        })
+        .bind(CholTask::Syrk, move |view: TaskView<'_>| {
+            let (i, _, k) = decode(view.data);
+            unsafe { syrk(m3.tile(i, k), m3.tile_mut(i, i), m3.b) }
+        })
+        .bind(CholTask::Gemm, move |view: TaskView<'_>| {
+            let (i, j, k) = decode(view.data);
+            unsafe { gemm_nt(m4.tile(i, k), m4.tile(j, k), m4.tile_mut(i, j), m4.b) }
+        })
+}
+
+/// Execute one Cholesky task against the tiled matrix — the legacy
+/// closure-dispatch compat shim; in-tree code executes via [`registry`].
 pub fn exec_task(mat: &TiledMatrix, view: crate::coordinator::TaskView<'_>) {
     let (i, j, k) = decode(view.data);
     let b = mat.b;
@@ -265,7 +324,7 @@ pub fn run_threaded(
     let mut sched = crate::coordinator::Scheduler::new(config)?;
     build_tasks(&mut sched, mat.nt);
     sched.prepare()?;
-    sched.run(threads, |view| exec_task(mat, view))
+    sched.run_registry(threads, &registry(mat))
 }
 
 #[cfg(test)]

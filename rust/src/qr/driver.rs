@@ -1,10 +1,12 @@
-//! End-to-end tiled QR driver: builds the task graph, wires the
-//! execution function to a pluggable kernel backend (native rust or the
-//! AOT-compiled XLA artifacts), and runs it on the threaded executor or
-//! the virtual-time simulator.
+//! End-to-end tiled QR driver: builds the task graph, binds the four
+//! tile kernels of a pluggable backend (native rust or the AOT-compiled
+//! XLA artifacts) into a [`KernelRegistry`] ([`registry`]), and runs it
+//! on the threaded executor or the virtual-time simulator.
+
+use std::ops::Deref;
 
 use crate::coordinator::{
-    CostModel, RunMetrics, SchedConfig, Scheduler, SimCtx, TaskView,
+    CostModel, KernelRegistry, RunMetrics, SchedConfig, Scheduler, SimCtx, TaskView,
 };
 
 use super::kernels;
@@ -43,13 +45,59 @@ impl TileBackend for NativeBackend {
     }
 }
 
-/// Execute one QR task against the matrix.
+/// Bind the four QR kernels of `backend` against `mat` into a
+/// [`KernelRegistry`] — the one task-type → kernel map every executor
+/// (threaded, virtual-time, server pool) dispatches through.
 ///
-/// Safety of the raw tile accesses: the task graph's locks and chains
-/// guarantee exclusivity — GEQRF/TSQRT own their V tiles via locks,
-/// LARFT/SSRFT read V tiles only after the producing task (dependency)
-/// and write their target tiles under locks; writes to the shared
-/// diagonal/row tiles are serialized by the `(i-1,j,k)` chains.
+/// `mat` and `backend` are any cloneable handles dereferencing to the
+/// matrix/backend: plain references for a stack-scoped run, `Arc`s for
+/// a `KernelRegistry<'static>` the server can own.
+///
+/// Safety of the raw tile accesses inside the kernels: the task graph's
+/// locks and chains guarantee exclusivity — GEQRF/TSQRT own their V
+/// tiles via locks, LARFT/SSRFT read V tiles only after the producing
+/// task (dependency) and write their target tiles under locks; writes
+/// to the shared diagonal/row tiles are serialized by the `(i-1,j,k)`
+/// chains.
+pub fn registry<'a, M, P, B>(mat: M, backend: P) -> KernelRegistry<'a>
+where
+    M: Deref<Target = TiledMatrix> + Clone + Send + Sync + 'a,
+    P: Deref<Target = B> + Clone + Send + Sync + 'a,
+    B: TileBackend + ?Sized,
+{
+    let (m1, b1) = (mat.clone(), backend.clone());
+    let (m2, b2) = (mat.clone(), backend.clone());
+    let (m3, b3) = (mat.clone(), backend.clone());
+    let (m4, b4) = (mat, backend);
+    KernelRegistry::new()
+        .bind(QrTask::Geqrf, move |view: TaskView<'_>| {
+            let (_, _, k) = decode(view.data);
+            let b = m1.b;
+            unsafe { b1.geqrf(m1.tile_mut(k, k), m1.tau_diag_mut(k), b) }
+        })
+        .bind(QrTask::Larft, move |view: TaskView<'_>| {
+            let (_, j, k) = decode(view.data);
+            let b = m2.b;
+            unsafe { b2.larft(m2.tile(k, k), m2.tau_diag(k), m2.tile_mut(k, j), b) }
+        })
+        .bind(QrTask::Tsqrt, move |view: TaskView<'_>| {
+            let (i, _, k) = decode(view.data);
+            let b = m3.b;
+            unsafe { b3.tsqrt(m3.tile_mut(k, k), m3.tile_mut(i, k), m3.tau_ts_mut(i, k), b) }
+        })
+        .bind(QrTask::Ssrft, move |view: TaskView<'_>| {
+            let (i, j, k) = decode(view.data);
+            let b = m4.b;
+            unsafe {
+                b4.ssrft(m4.tile(i, k), m4.tau_ts(i, k), m4.tile_mut(k, j), m4.tile_mut(i, j), b)
+            }
+        })
+}
+
+/// Execute one QR task against the matrix — the legacy closure-dispatch
+/// compat shim (a `match` on the type id). In-tree code executes via
+/// [`registry`]; this remains for out-of-tree callers and the
+/// paper-fidelity tests.
 pub fn exec_task<B: TileBackend>(mat: &TiledMatrix, backend: &B, view: TaskView<'_>) {
     let (i, j, k) = decode(view.data);
     let b = mat.b;
@@ -93,7 +141,7 @@ pub fn run_threaded<B: TileBackend>(
     let mut sched = Scheduler::new(config)?;
     let graph = build_tasks(&mut sched, mat.mt, mat.nt);
     sched.prepare()?;
-    let metrics = sched.run(nr_threads, |view| exec_task(mat, backend, view))?;
+    let metrics = sched.run_registry(nr_threads, &registry(mat, backend))?;
     Ok(QrRun { metrics, graph })
 }
 

@@ -13,6 +13,8 @@ pub mod matrix;
 pub mod tasks;
 pub mod verify;
 
-pub use driver::{exec_task, run_sim, run_threaded, NativeBackend, QrCostModel, QrRun, TileBackend};
+pub use driver::{
+    exec_task, registry, run_sim, run_threaded, NativeBackend, QrCostModel, QrRun, TileBackend,
+};
 pub use matrix::TiledMatrix;
 pub use tasks::{build_tasks, QrGraph, QrTask};

@@ -19,9 +19,10 @@
 //! printed edge count corresponds to its Appendix-B variant that omits
 //! one SSRFT edge class; see EXPERIMENTS.md §E1).
 
-use crate::coordinator::{payload, GraphBuilder, ResHandle, TaskHandle};
+use crate::coordinator::{GraphBuilder, Payload, ResHandle, TaskHandle, TaskType};
 
-/// QR task types, dispatched by the execution function.
+/// QR task types, bound to kernels via the
+/// [`crate::coordinator::KernelRegistry`] (see [`super::driver::registry`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u32)]
 pub enum QrTask {
@@ -52,6 +53,16 @@ impl QrTask {
     }
 }
 
+impl TaskType for QrTask {
+    fn type_id(self) -> u32 {
+        self as u32
+    }
+
+    fn type_name(self) -> &'static str {
+        self.name()
+    }
+}
+
 /// Handles produced by [`build_tasks`].
 pub struct QrGraph {
     /// Tile resources, column-major `i + j*m`.
@@ -60,10 +71,15 @@ pub struct QrGraph {
     pub n: usize,
 }
 
+/// Typed payload of a QR task: the `(i, j, k)` tile tuple.
+fn enc(i: usize, j: usize, k: usize) -> (i32, i32, i32) {
+    (i as i32, j as i32, k as i32)
+}
+
 /// Decode a QR task payload back into `(i, j, k)`.
 pub fn decode(data: &[u8]) -> (usize, usize, usize) {
-    let v = payload::to_i32s(data);
-    (v[0] as usize, v[1] as usize, v[2] as usize)
+    let (i, j, k) = <(i32, i32, i32)>::decode(data);
+    (i as usize, j as usize, k as usize)
 }
 
 /// Build the full task graph for an `m × n` tile matrix into `sched`.
@@ -84,77 +100,71 @@ pub fn build_tasks<B: GraphBuilder>(sched: &mut B, m: usize, n: usize) -> QrGrap
     // tid[j*m + i] = handle of the last task at tile (i, j), or None.
     let mut tid: Vec<Option<TaskHandle>> = vec![None; ntiles];
     let at = |i: usize, j: usize| j * m + i;
-    let costs = super::kernels::cost::GEQRF; // silence unused when n==0
-    let _ = costs;
+    use super::kernels::cost;
 
     for k in 0..m.min(n) {
-        // GEQRF at (k, k).
-        let t_kk = add(sched, QrTask::Geqrf, k, k, k, super::kernels::cost::GEQRF);
-        sched.add_lock(t_kk, rid[at(k, k)]);
-        if let Some(prev) = tid[at(k, k)] {
-            sched.add_unlock(prev, t_kk);
-        }
+        // GEQRF at (k, k); depends on the previous level at this tile.
+        let t_kk = sched
+            .task(QrTask::Geqrf)
+            .payload(&enc(k, k, k))
+            .cost(cost::GEQRF)
+            .lock(rid[at(k, k)])
+            .after(tid[at(k, k)])
+            .spawn();
         tid[at(k, k)] = Some(t_kk);
 
         // LARFT along row k.
         for j in k + 1..n {
-            let t = add(sched, QrTask::Larft, k, j, k, super::kernels::cost::LARFT);
-            sched.add_lock(t, rid[at(k, j)]);
-            sched.add_use(t, rid[at(k, k)]);
-            sched.add_unlock(t_kk, t);
-            if let Some(prev) = tid[at(k, j)] {
-                sched.add_unlock(prev, t);
-            }
+            let t = sched
+                .task(QrTask::Larft)
+                .payload(&enc(k, j, k))
+                .cost(cost::LARFT)
+                .lock(rid[at(k, j)])
+                .use_res(rid[at(k, k)])
+                .after([t_kk])
+                .after(tid[at(k, j)])
+                .spawn();
             tid[at(k, j)] = Some(t);
         }
 
         // TSQRT down column k, chained i-1 → i (serializes the (k,k)
-        // R-tile updates).
+        // R-tile updates). (i-1, k, k) is the previous TSQRT or the
+        // GEQRF itself.
         for i in k + 1..m {
-            let t = add(sched, QrTask::Tsqrt, i, k, k, super::kernels::cost::TSQRT);
-            sched.add_lock(t, rid[at(i, k)]);
-            sched.add_use(t, rid[at(k, k)]);
-            // (i-1, k, k): previous TSQRT or the GEQRF itself.
             let above = tid[at(i - 1, k)].expect("TSQRT chain predecessor");
-            sched.add_unlock(above, t);
-            if let Some(prev) = tid[at(i, k)] {
-                sched.add_unlock(prev, t);
-            }
+            let t = sched
+                .task(QrTask::Tsqrt)
+                .payload(&enc(i, k, k))
+                .cost(cost::TSQRT)
+                .lock(rid[at(i, k)])
+                .use_res(rid[at(k, k)])
+                .after([above])
+                .after(tid[at(i, k)])
+                .spawn();
             tid[at(i, k)] = Some(t);
 
-            // SSRFT along row i, for every column j > k.
+            // SSRFT along row i, for every column j > k: after
+            // (i-1, j, k) — the previous SSRFT in the column or the
+            // LARFT — plus (i, k, k) — the TSQRT that produced our V
+            // tile — plus (i, j, k-1), the previous level at this tile.
             for j in k + 1..n {
-                let ts = add(sched, QrTask::Ssrft, i, j, k, super::kernels::cost::SSRFT);
-                sched.add_lock(ts, rid[at(i, j)]);
-                sched.add_lock(ts, rid[at(k, j)]);
-                sched.add_use(ts, rid[at(i, k)]);
-                // (i-1, j, k): previous SSRFT in the column, or the LARFT.
                 let above = tid[at(i - 1, j)].expect("SSRFT chain predecessor");
-                sched.add_unlock(above, ts);
-                // (i, k, k): the TSQRT that produced our V tile.
-                sched.add_unlock(t, ts);
-                // (i, j, k-1): previous level at this tile.
-                if let Some(prev) = tid[at(i, j)] {
-                    sched.add_unlock(prev, ts);
-                }
+                let ts = sched
+                    .task(QrTask::Ssrft)
+                    .payload(&enc(i, j, k))
+                    .cost(cost::SSRFT)
+                    .locks([rid[at(i, j)], rid[at(k, j)]])
+                    .use_res(rid[at(i, k)])
+                    .after([above, t])
+                    .after(tid[at(i, j)])
+                    .spawn();
                 tid[at(i, j)] = Some(ts);
             }
         }
-        // After level k, row-k LARFT results become the chain heads for
-        // the next level's SSRFTs via tid[(k, j)]; but level k+1's chain
-        // starts at (k+1-1, j) = (k, j) — wait, level k+1 SSRFT at
-        // (k+2, j) chains from (k+1, j): tid already tracks the latest
-        // task per tile, which is exactly the table's (i-1, j, k).
+        // tid tracks the latest task per tile, which is exactly the
+        // table's (i-1, j, k) chain head for the next level.
     }
     QrGraph { rid, m, n }
-}
-
-fn add<B: GraphBuilder>(sched: &mut B, ty: QrTask, i: usize, j: usize, k: usize, cost: i64) -> TaskHandle {
-    sched.add_task(
-        ty as u32,
-        &payload::from_i32s(&[i as i32, j as i32, k as i32]),
-        cost,
-    )
 }
 
 #[cfg(test)]
@@ -244,7 +254,7 @@ mod tests {
 
     #[test]
     fn decode_roundtrip() {
-        let p = payload::from_i32s(&[3, 7, 2]);
+        let p = enc(3, 7, 2).encode();
         assert_eq!(decode(&p), (3, 7, 2));
     }
 

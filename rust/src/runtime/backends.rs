@@ -13,6 +13,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use super::service::{RuntimeService, Tensor};
+use crate::coordinator::{KernelRegistry, TaskView};
 use crate::nbody::kernels::NBodyState;
 use crate::nbody::octree::{CellId, ROOT};
 use crate::nbody::tasks::NbTask;
@@ -258,27 +259,33 @@ impl XlaNbodyExec {
         Ok(())
     }
 
-    /// The execution function: same dispatch as
-    /// [`crate::nbody::tasks::exec_task`], numerics via XLA.
-    pub fn exec_task(&self, state: &NBodyState, view: crate::coordinator::TaskView<'_>) {
-        let (ci, _) = crate::nbody::tasks::decode(view.data);
-        let r = unsafe {
-            match NbTask::from_u32(view.type_id) {
-                NbTask::SelfInteract => self.comp_self(state, ci),
-                NbTask::PairPP => {
-                    let (a, b) = crate::nbody::tasks::decode(view.data);
-                    self.comp_pair(state, a, b)
-                }
-                NbTask::PairPC => self.comp_pc(state, ci),
-                NbTask::Com => {
-                    state.compute_com(ci);
-                    Ok(())
-                }
+    /// Bind the four N-body task types to XLA-backed kernels — the same
+    /// bindings as [`crate::nbody::tasks::registry`], numerics via the
+    /// AOT artifacts. Kernel failures panic (tasks have no error
+    /// channel) and surface as `SchedError::WorkerPanic`.
+    pub fn registry<'a>(&'a self, state: &'a NBodyState) -> KernelRegistry<'a> {
+        fn ok(r: Result<()>) {
+            if let Err(e) = r {
+                panic!("XLA N-body task failed: {e:#}");
             }
-        };
-        if let Err(e) = r {
-            panic!("XLA N-body task failed: {e:#}");
         }
+        KernelRegistry::new()
+            .bind(NbTask::SelfInteract, move |view: TaskView<'_>| {
+                let (ci, _) = crate::nbody::tasks::decode(view.data);
+                ok(unsafe { self.comp_self(state, ci) });
+            })
+            .bind(NbTask::PairPP, move |view: TaskView<'_>| {
+                let (a, b) = crate::nbody::tasks::decode(view.data);
+                ok(unsafe { self.comp_pair(state, a, b) });
+            })
+            .bind(NbTask::PairPC, move |view: TaskView<'_>| {
+                let (ci, _) = crate::nbody::tasks::decode(view.data);
+                ok(unsafe { self.comp_pc(state, ci) });
+            })
+            .bind(NbTask::Com, move |view: TaskView<'_>| {
+                let (ci, _) = crate::nbody::tasks::decode(view.data);
+                unsafe { state.compute_com(ci) };
+            })
     }
 }
 

@@ -15,8 +15,9 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use super::hlo::Manifest;
-use crate::coordinator::TaskView;
+use crate::coordinator::{KernelRegistry, TaskView};
 use crate::nbody::kernels::NBodyState;
+use crate::nbody::tasks::NbTask;
 use crate::qr::driver::TileBackend;
 
 const DISABLED: &str = "PJRT runtime unavailable: this build has the `xla` cargo feature \
@@ -112,8 +113,17 @@ impl XlaNbodyExec {
         Self { _svc: svc }
     }
 
-    pub fn exec_task(&self, _state: &NBodyState, _view: TaskView<'_>) {
-        panic!("{DISABLED}");
+    /// API-equal stub of the real backend's kernel registry: all four
+    /// task types bound, every kernel reports the disabled feature.
+    /// (Unreachable in practice — `RuntimeService::start` never
+    /// succeeds in stub builds.)
+    pub fn registry<'a>(&'a self, state: &'a NBodyState) -> KernelRegistry<'a> {
+        let _ = state;
+        KernelRegistry::new()
+            .bind(NbTask::SelfInteract, |_view: TaskView<'_>| panic!("{DISABLED}"))
+            .bind(NbTask::PairPP, |_view: TaskView<'_>| panic!("{DISABLED}"))
+            .bind(NbTask::PairPC, |_view: TaskView<'_>| panic!("{DISABLED}"))
+            .bind(NbTask::Com, |_view: TaskView<'_>| panic!("{DISABLED}"))
     }
 }
 

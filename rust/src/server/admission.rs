@@ -11,13 +11,19 @@
 //! forward to the global virtual time, so sleeping does not bank credit
 //! for a later burst.
 //!
+//! Alongside the global `max_inflight` cap, each tenant may carry its
+//! own *outstanding-jobs* cap (queued + in flight): a tenant at its cap
+//! has further submissions rejected with
+//! [`SubmitError::TenantAtCapacity`] instead of queued — per-tenant
+//! backpressure so one client cannot fill the admission queue.
+//!
 //! Purely deterministic and lock-free internally (the server wraps it in
 //! a mutex); the virtual-time pool drives it directly for the
 //! reproducible fairness tests (`rust/tests/server_fairness.rs`).
 
 use std::collections::{HashMap, VecDeque};
 
-use super::protocol::TenantId;
+use super::protocol::{SubmitError, TenantId};
 
 /// Pass-space distance of one admitted job at weight 1. Large enough
 /// that integer division by any sane weight keeps precision.
@@ -30,6 +36,10 @@ struct Tenant<T> {
     weight: u64,
     pass: u64,
     queue: VecDeque<T>,
+    /// Max outstanding jobs (queued + in flight); `None` = unlimited.
+    cap: Option<usize>,
+    /// Jobs pushed and not yet finished or cancelled.
+    outstanding: usize,
 }
 
 /// Weighted-fair, bounded-in-flight admission queue.
@@ -61,26 +71,57 @@ impl<T> FairQueue<T> {
         self.tenant_mut(tenant).weight = w;
     }
 
+    /// Cap a tenant's outstanding jobs (queued + in flight, ≥ 1):
+    /// [`FairQueue::try_push`] rejects submissions past the cap.
+    pub fn set_tenant_cap(&mut self, tenant: TenantId, cap: usize) {
+        self.tenant_mut(tenant).cap = Some(cap.max(1));
+    }
+
+    /// A tenant's outstanding-job count (queued + in flight).
+    pub fn outstanding(&self, tenant: TenantId) -> usize {
+        self.tenants.get(&tenant).map_or(0, |t| t.outstanding)
+    }
+
     fn tenant_mut(&mut self, tenant: TenantId) -> &mut Tenant<T> {
         let vtime = self.vtime;
         self.tenants.entry(tenant).or_insert_with(|| Tenant {
             weight: DEFAULT_WEIGHT,
             pass: vtime,
             queue: VecDeque::new(),
+            cap: None,
+            outstanding: 0,
         })
     }
 
-    /// Enqueue a job for `tenant`.
-    pub fn push(&mut self, tenant: TenantId, item: T) {
+    /// Enqueue a job for `tenant`, rejecting it when the tenant sits at
+    /// its outstanding-jobs cap.
+    pub fn try_push(&mut self, tenant: TenantId, item: T) -> Result<(), SubmitError> {
         let vtime = self.vtime;
         let t = self.tenant_mut(tenant);
+        if let Some(cap) = t.cap {
+            if t.outstanding >= cap {
+                return Err(SubmitError::TenantAtCapacity { tenant, cap });
+            }
+        }
         if t.queue.is_empty() {
             // Idle-return clamp: no credit for time spent with an empty
             // queue.
             t.pass = t.pass.max(vtime);
         }
         t.queue.push_back(item);
+        t.outstanding += 1;
         self.queued += 1;
+        Ok(())
+    }
+
+    /// Enqueue a job for `tenant`.
+    ///
+    /// # Panics
+    /// If the tenant sits at its outstanding-jobs cap — use
+    /// [`FairQueue::try_push`] where caps are configured.
+    pub fn push(&mut self, tenant: TenantId, item: T) {
+        self.try_push(tenant, item)
+            .unwrap_or_else(|e| panic!("push: {e} (use try_push with tenant caps)"));
     }
 
     /// Number of jobs waiting (not yet admitted).
@@ -120,10 +161,15 @@ impl<T> FairQueue<T> {
         Some((best, item))
     }
 
-    /// Release one in-flight slot (a job reached a terminal state).
-    pub fn finish(&mut self) {
+    /// Release one in-flight slot (a job of `tenant` reached a terminal
+    /// state), and the tenant's outstanding slot with it.
+    pub fn finish(&mut self, tenant: TenantId) {
         debug_assert!(self.inflight > 0, "finish() without a matching admit");
         self.inflight = self.inflight.saturating_sub(1);
+        if let Some(t) = self.tenants.get_mut(&tenant) {
+            debug_assert!(t.outstanding > 0, "finish() for a tenant with no jobs");
+            t.outstanding = t.outstanding.saturating_sub(1);
+        }
     }
 
     /// Remove and return the first queued item matching `pred`
@@ -132,6 +178,7 @@ impl<T> FairQueue<T> {
         for t in self.tenants.values_mut() {
             if let Some(pos) = t.queue.iter().position(&mut pred) {
                 self.queued -= 1;
+                t.outstanding = t.outstanding.saturating_sub(1);
                 return t.queue.remove(pos);
             }
         }
@@ -148,7 +195,7 @@ mod tests {
         let mut order = Vec::new();
         for _ in 0..n {
             let (t, _) = q.try_admit().expect("queue ran dry");
-            q.finish();
+            q.finish(t);
             order.push(t.0);
         }
         order
@@ -201,9 +248,54 @@ mod tests {
         assert!(q.try_admit().is_some());
         assert!(q.try_admit().is_none(), "third admit must wait for finish");
         assert_eq!(q.inflight(), 2);
-        q.finish();
+        q.finish(TenantId(0));
         assert!(q.try_admit().is_some());
         assert_eq!(q.queued(), 2);
+    }
+
+    #[test]
+    fn per_tenant_caps_reject_distinctly() {
+        // Two tenants at different caps alongside the global cap.
+        let mut q = FairQueue::new(8);
+        q.set_tenant_cap(TenantId(0), 1);
+        q.set_tenant_cap(TenantId(1), 2);
+        assert!(q.try_push(TenantId(0), 10).is_ok());
+        assert_eq!(
+            q.try_push(TenantId(0), 11),
+            Err(SubmitError::TenantAtCapacity { tenant: TenantId(0), cap: 1 })
+        );
+        assert!(q.try_push(TenantId(1), 20).is_ok());
+        assert!(q.try_push(TenantId(1), 21).is_ok());
+        assert_eq!(
+            q.try_push(TenantId(1), 22),
+            Err(SubmitError::TenantAtCapacity { tenant: TenantId(1), cap: 2 })
+        );
+        // Uncapped tenants queue freely.
+        for i in 0..5 {
+            assert!(q.try_push(TenantId(2), 30 + i).is_ok());
+        }
+        assert_eq!(q.outstanding(TenantId(0)), 1);
+        assert_eq!(q.outstanding(TenantId(1)), 2);
+        assert_eq!(q.outstanding(TenantId(2)), 5);
+
+        // The cap covers in-flight jobs too: admitting does not free it…
+        let (t, item) = q.try_admit().unwrap();
+        assert_eq!((t, item), (TenantId(0), 10));
+        assert!(q.try_push(TenantId(0), 12).is_err(), "admitted job still counts");
+        // …finishing does.
+        q.finish(TenantId(0));
+        assert_eq!(q.outstanding(TenantId(0)), 0);
+        assert!(q.try_push(TenantId(0), 13).is_ok());
+    }
+
+    #[test]
+    fn cancellation_frees_tenant_cap() {
+        let mut q = FairQueue::new(4);
+        q.set_tenant_cap(TenantId(0), 1);
+        q.push(TenantId(0), 1u32);
+        assert!(q.try_push(TenantId(0), 2).is_err());
+        assert_eq!(q.remove_where(|&x| x == 1), Some(1));
+        assert!(q.try_push(TenantId(0), 2).is_ok());
     }
 
     #[test]

@@ -38,7 +38,7 @@ use crate::coordinator::SchedConfig;
 
 pub use admission::FairQueue;
 pub use pool::{run_virtual, ActiveJob, VirtualJob, VirtualReport, WorkerPool};
-pub use protocol::{JobId, JobReport, JobSpec, JobStatus, Submission, TenantId};
+pub use protocol::{JobId, JobReport, JobSpec, JobStatus, Submission, SubmitError, TenantId};
 pub use registry::{
     panicking_template, qr_template, synthetic_template, BuildFn, ExecFn, JobGraph, Registry,
 };
@@ -183,17 +183,36 @@ impl SchedServer {
         self.inner.state.lock().unwrap().admission.set_weight(tenant, weight);
     }
 
-    /// Submit a job; returns immediately with its handle.
-    pub fn submit(&self, spec: JobSpec) -> JobId {
+    /// Cap a tenant's outstanding jobs (queued + in flight):
+    /// [`SchedServer::try_submit`] rejects submissions past the cap
+    /// with [`SubmitError::TenantAtCapacity`].
+    pub fn set_tenant_cap(&self, tenant: TenantId, cap: usize) {
+        self.inner.state.lock().unwrap().admission.set_tenant_cap(tenant, cap);
+    }
+
+    /// Submit a job; returns immediately with its handle, or rejects it
+    /// when the tenant sits at its outstanding-jobs cap.
+    pub fn try_submit(&self, spec: JobSpec) -> Result<JobId, SubmitError> {
         let id = JobId(self.inner.next_job.fetch_add(1, Ordering::Relaxed));
         {
             let mut st = self.inner.state.lock().unwrap();
-            st.jobs.insert(id, JobStatus::Queued);
             let tenant = spec.tenant;
-            st.admission.push(tenant, QueuedJob { id, spec, enqueued: Instant::now() });
+            st.admission
+                .try_push(tenant, QueuedJob { id, spec, enqueued: Instant::now() })?;
+            st.jobs.insert(id, JobStatus::Queued);
         }
         self.inner.send(Event::Kick);
-        id
+        Ok(id)
+    }
+
+    /// Submit a job; returns immediately with its handle.
+    ///
+    /// # Panics
+    /// If the tenant sits at its outstanding-jobs cap — use
+    /// [`SchedServer::try_submit`] where caps are configured.
+    pub fn submit(&self, spec: JobSpec) -> JobId {
+        self.try_submit(spec)
+            .unwrap_or_else(|e| panic!("submit rejected: {e} (use try_submit with tenant caps)"))
     }
 
     /// Current status, or `None` for an unknown job id.
@@ -304,8 +323,13 @@ fn handle_event(inner: &Inner, ev: Event) -> bool {
         Event::Shutdown => false,
         Event::Kick => true,
         Event::Finished(job) => {
+            // Release the admission slot (global + tenant cap) *before*
+            // the terminal status is published: a client that observes
+            // Done/Failed and immediately resubmits must not be
+            // spuriously rejected on a cap slot its finished job still
+            // held.
+            inner.state.lock().unwrap().admission.finish(job.tenant);
             finish_job(inner, &job);
-            inner.state.lock().unwrap().admission.finish();
             inner.job_cv.notify_all();
             true
         }
@@ -331,10 +355,11 @@ fn admit_one(inner: &Inner, pool: &WorkerPool) -> bool {
     match inner.registry.checkout(&name, reuse) {
         Err(msg) => {
             inner.stats.record_failure(tenant);
+            // Slot release before the terminal status, as in
+            // `handle_event` (no spurious TenantAtCapacity for a
+            // client reacting to the failure).
+            inner.state.lock().unwrap().admission.finish(tenant);
             inner.set_status(qjob.id, JobStatus::Failed(msg));
-            let mut st = inner.state.lock().unwrap();
-            st.admission.finish();
-            drop(st);
             inner.job_cv.notify_all();
         }
         Ok((g, reused)) => {
@@ -381,6 +406,7 @@ fn finish_job(inner: &Inner, job: &Arc<ActiveJob>) {
         sched: Arc::clone(&job.sched),
         exec: Arc::clone(&job.exec),
         template: job.template.clone(),
+        kernels: job.kernels.clone(),
     });
     inner.set_status(job.id, JobStatus::Done(report));
 }
@@ -425,6 +451,63 @@ mod tests {
     fn poll_unknown_is_none() {
         let s = server();
         assert!(s.poll(JobId(999)).is_none());
+        s.shutdown();
+    }
+
+    #[test]
+    fn per_tenant_caps_reject_submissions() {
+        use crate::coordinator::{GraphBuilder, KernelRegistry, Scheduler};
+        use crate::server::registry::JobGraph;
+        use std::sync::atomic::AtomicBool;
+
+        let s = SchedServer::start(ServerConfig::new(2).with_seed(5));
+        // A template whose single task spins until released, so
+        // submitted jobs deterministically stay outstanding.
+        let gate = Arc::new(AtomicBool::new(false));
+        {
+            let gate = Arc::clone(&gate);
+            s.register_template(
+                "gated",
+                Arc::new(move |config: &SchedConfig| {
+                    let mut sched =
+                        Scheduler::new(config.clone()).map_err(|e| e.to_string())?;
+                    sched.task(0u32).spawn();
+                    sched.prepare().map_err(|e| e.to_string())?;
+                    let gate = Arc::clone(&gate);
+                    let kernels = KernelRegistry::new().bind(
+                        0u32,
+                        move |_view: crate::coordinator::TaskView<'_>| {
+                            while !gate.load(Ordering::Acquire) {
+                                std::thread::yield_now();
+                            }
+                        },
+                    );
+                    JobGraph::from_registry(Arc::new(sched), Arc::new(kernels))
+                }),
+            );
+        }
+        s.set_tenant_cap(TenantId(0), 1);
+        s.set_tenant_cap(TenantId(1), 2);
+
+        let a1 = s.try_submit(JobSpec::template(TenantId(0), "gated")).unwrap();
+        assert_eq!(
+            s.try_submit(JobSpec::template(TenantId(0), "gated")),
+            Err(SubmitError::TenantAtCapacity { tenant: TenantId(0), cap: 1 })
+        );
+        let b1 = s.try_submit(JobSpec::template(TenantId(1), "gated")).unwrap();
+        let b2 = s.try_submit(JobSpec::template(TenantId(1), "gated")).unwrap();
+        assert_eq!(
+            s.try_submit(JobSpec::template(TenantId(1), "gated")),
+            Err(SubmitError::TenantAtCapacity { tenant: TenantId(1), cap: 2 })
+        );
+
+        gate.store(true, Ordering::Release);
+        for id in [a1, b1, b2] {
+            assert!(matches!(s.wait(id), JobStatus::Done(_)));
+        }
+        // Completion frees the tenant's capacity.
+        let a2 = s.try_submit(JobSpec::template(TenantId(0), "gated")).unwrap();
+        assert!(matches!(s.wait(a2), JobStatus::Done(_)));
         s.shutdown();
     }
 

@@ -40,6 +40,9 @@ pub struct ActiveJob {
     pub exec: ExecFn,
     /// Template name when the instance belongs to the registry pool.
     pub template: Option<String>,
+    /// The template's declared kernel binding, when it has one
+    /// (carried so checkin can hand the full instance back).
+    pub kernels: Option<Arc<crate::coordinator::KernelRegistry<'static>>>,
     pub reused: bool,
     pub setup_ns: u64,
     pub queue_ns: u64,
@@ -75,6 +78,7 @@ impl ActiveJob {
             sched: graph.sched,
             exec: graph.exec,
             template: graph.template,
+            kernels: graph.kernels,
             reused,
             setup_ns,
             queue_ns,
@@ -415,7 +419,7 @@ pub fn run_virtual<M: CostModel>(
             if sched.waiting() == 0 {
                 // Degenerate zero-task graph: completes instantly.
                 reports[j].finished_ns = now;
-                admission.finish();
+                admission.finish(jobs[j].tenant);
                 continue;
             }
             running.push(j);
@@ -475,7 +479,7 @@ pub fn run_virtual<M: CostModel>(
                         if sched.waiting() == 0 {
                             reports[ev.job].finished_ns = now;
                             running.retain(|&j| j != ev.job);
-                            admission.finish();
+                            admission.finish(jobs[ev.job].tenant);
                             admit(&mut admission, &jobs, &mut running, &mut reports, now);
                         }
                     }
@@ -493,18 +497,14 @@ pub fn run_virtual<M: CostModel>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{SchedConfig, TaskFlags, UnitCost};
+    use crate::coordinator::{GraphBuilder, SchedConfig, UnitCost};
     use crate::server::registry::{synthetic_template, Registry};
 
     fn chain_job(tenant: u32, arrival: u64, n: usize, cost: i64) -> VirtualJob {
         let mut s = Scheduler::new(SchedConfig::new(2)).unwrap();
         let mut prev = None;
         for _ in 0..n {
-            let t = s.add_task(0, TaskFlags::default(), &[], cost);
-            if let Some(p) = prev {
-                s.add_unlock(p, t);
-            }
-            prev = Some(t);
+            prev = Some(s.task(0).cost(cost).after(prev).spawn());
         }
         s.prepare().unwrap();
         VirtualJob { tenant: TenantId(tenant), arrival_ns: arrival, sched: Arc::new(s) }
@@ -583,6 +583,7 @@ mod tests {
                 sched: Arc::clone(&done.sched),
                 exec: Arc::clone(&done.exec),
                 template: done.template.clone(),
+                kernels: done.kernels.clone(),
             });
         }
         let c = reg.counters("syn").unwrap();

@@ -75,6 +75,16 @@ impl JobSpec {
     }
 }
 
+/// A submission was rejected before it entered the admission queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum SubmitError {
+    /// The tenant already has `cap` outstanding jobs (queued + in
+    /// flight); per-tenant backpressure, distinct from the global
+    /// in-flight cap which *queues* rather than rejects.
+    #[error("{tenant} is at its outstanding-jobs cap ({cap})")]
+    TenantAtCapacity { tenant: TenantId, cap: usize },
+}
+
 /// Lifecycle of a job as observed through `poll`.
 #[derive(Clone, Debug)]
 pub enum JobStatus {
@@ -165,5 +175,12 @@ mod tests {
     fn ids_display() {
         assert_eq!(TenantId(3).to_string(), "tenant3");
         assert_eq!(JobId(9).to_string(), "job9");
+    }
+
+    #[test]
+    fn submit_error_renders() {
+        let e = SubmitError::TenantAtCapacity { tenant: TenantId(2), cap: 4 };
+        assert!(e.to_string().contains("tenant2"));
+        assert!(e.to_string().contains('4'));
     }
 }

@@ -13,7 +13,9 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::coordinator::{ResId, SchedConfig, Scheduler, TaskFlags, TaskId, TaskView};
+use crate::coordinator::{
+    GraphBuilder, KernelRegistry, ResId, SchedConfig, Scheduler, TaskId, TaskView,
+};
 use crate::qr;
 use crate::util::rng::Rng;
 
@@ -25,15 +27,45 @@ pub type ExecFn = Arc<dyn Fn(TaskView<'_>) + Send + Sync>;
 pub type BuildFn = Arc<dyn Fn(&SchedConfig) -> Result<JobGraph, String> + Send + Sync>;
 
 /// A runnable graph instance: a prepared scheduler plus the execution
-/// function over its captured state. The scheduler sits behind an `Arc`
+/// path over its captured state. The scheduler sits behind an `Arc`
 /// so the pool's workers can draw tasks from it while the registry keeps
 /// a handle for checkin (all run-state mutation is interior / `&self`).
+///
+/// Templates declare their execution declaratively as a
+/// [`KernelRegistry`] via [`JobGraph::from_registry`]; the registry is
+/// kept on the instance so the binding stays introspectable (and, for
+/// the multi-backend ROADMAP item, rebindable) instead of being sealed
+/// inside a closure.
 pub struct JobGraph {
     pub sched: Arc<Scheduler>,
     pub exec: ExecFn,
     /// Template this instance belongs to; `None` means single-use
     /// (rebuild-per-job submissions) — checkin drops it.
     pub template: Option<String>,
+    /// The declared task-type → kernel binding, when the instance was
+    /// built through [`JobGraph::from_registry`].
+    pub kernels: Option<Arc<KernelRegistry<'static>>>,
+}
+
+impl JobGraph {
+    /// Build an instance whose execution is the declared `kernels`
+    /// binding. Fails if the graph contains a task type the registry
+    /// does not bind — template bugs surface at build, not mid-run.
+    pub fn from_registry(
+        sched: Arc<Scheduler>,
+        kernels: Arc<KernelRegistry<'static>>,
+    ) -> Result<Self, String> {
+        kernels.validate(&sched).map_err(|e| e.to_string())?;
+        let k = Arc::clone(&kernels);
+        let exec: ExecFn = Arc::new(move |view| k.dispatch(view));
+        Ok(Self { sched, exec, template: None, kernels: Some(kernels) })
+    }
+
+    /// Kernel names this instance's template declared, `(type_id,
+    /// name)` pairs in type order; empty for closure-based instances.
+    pub fn kernel_bindings(&self) -> Vec<(u32, &'static str)> {
+        self.kernels.as_ref().map_or_else(Vec::new, |k| k.bindings())
+    }
 }
 
 struct TemplateEntry {
@@ -159,9 +191,7 @@ pub fn synthetic_template(n_tasks: usize, n_res: usize, seed: u64, work_ns: u64)
         let mut rng = Rng::new(seed);
         let rids: Vec<ResId> = (0..n_res.max(1)).map(|_| s.add_resource(None, -1)).collect();
         let tids: Vec<TaskId> = (0..n_tasks.max(1))
-            .map(|i| {
-                s.add_task(0, TaskFlags::default(), &[], 1 + (i % 17) as i64)
-            })
+            .map(|i| s.task(0u32).cost(1 + (i % 17) as i64).spawn())
             .collect();
         for b in 1..tids.len() {
             // 0–2 forward edges per task keeps width high enough to feed
@@ -177,7 +207,7 @@ pub fn synthetic_template(n_tasks: usize, n_res: usize, seed: u64, work_ns: u64)
             }
         }
         s.prepare().map_err(|e| e.to_string())?;
-        let exec: ExecFn = Arc::new(move |_view: TaskView<'_>| {
+        let kernels = KernelRegistry::new().bind(0u32, move |_view: TaskView<'_>| {
             if work_ns > 0 {
                 let t0 = std::time::Instant::now();
                 while (t0.elapsed().as_nanos() as u64) < work_ns {
@@ -185,7 +215,7 @@ pub fn synthetic_template(n_tasks: usize, n_res: usize, seed: u64, work_ns: u64)
                 }
             }
         });
-        Ok(JobGraph { sched: Arc::new(s), exec, template: None })
+        JobGraph::from_registry(Arc::new(s), Arc::new(kernels))
     })
 }
 
@@ -200,10 +230,10 @@ pub fn qr_template(tiles: usize, tile: usize, seed: u64) -> BuildFn {
         qr::build_tasks(&mut s, tiles, tiles);
         s.prepare().map_err(|e| e.to_string())?;
         let mat = Arc::new(qr::TiledMatrix::random(tile, tiles, tiles, seed));
-        let exec: ExecFn = Arc::new(move |view: TaskView<'_>| {
-            qr::exec_task(mat.as_ref(), &qr::NativeBackend, view);
-        });
-        Ok(JobGraph { sched: Arc::new(s), exec, template: None })
+        // The application's own declarative binding: four QR kernels on
+        // the native backend over this instance's matrix.
+        let kernels = qr::registry(mat, Arc::new(qr::NativeBackend));
+        JobGraph::from_registry(Arc::new(s), Arc::new(kernels))
     })
 }
 
@@ -212,11 +242,12 @@ pub fn panicking_template(n_tasks: usize) -> BuildFn {
     Arc::new(move |config: &SchedConfig| {
         let mut s = Scheduler::new(config.clone()).map_err(|e| e.to_string())?;
         for _ in 0..n_tasks.max(1) {
-            s.add_task(0, TaskFlags::default(), &[], 1);
+            s.task(0u32).spawn();
         }
         s.prepare().map_err(|e| e.to_string())?;
-        let exec: ExecFn = Arc::new(|_view: TaskView<'_>| panic!("intentional task failure"));
-        Ok(JobGraph { sched: Arc::new(s), exec, template: None })
+        let kernels = KernelRegistry::new()
+            .bind(0u32, |_view: TaskView<'_>| panic!("intentional task failure"));
+        JobGraph::from_registry(Arc::new(s), Arc::new(kernels))
     })
 }
 
@@ -302,5 +333,19 @@ mod tests {
         // 3x3 tiles: 3 GEQRF + 3 LARFT + 3 TSQRT + 5 SSRFT = 14 tasks
         // (k<j pairs: 3; (i,j,k) triples: 5) — just assert non-trivial.
         assert!(g.sched.nr_tasks() > 5);
+        // The template's kernel binding is declared data, not a sealed
+        // closure: all four QR kernels are introspectable by name.
+        let names: Vec<&str> = g.kernel_bindings().iter().map(|&(_, n)| n).collect();
+        assert_eq!(names, vec!["DGEQRF", "DLARFT", "DTSQRF", "DSSRFT"]);
+    }
+
+    #[test]
+    fn from_registry_rejects_unbound_types() {
+        let mut s = Scheduler::new(SchedConfig::new(1)).unwrap();
+        s.task(5u32).spawn();
+        s.prepare().unwrap();
+        let kernels = KernelRegistry::new().bind(0u32, |_view: TaskView<'_>| {});
+        let err = JobGraph::from_registry(Arc::new(s), Arc::new(kernels)).unwrap_err();
+        assert!(err.contains("no kernel bound"), "{err}");
     }
 }

@@ -72,6 +72,10 @@ fn bh_hierarchical_conflicts_enforced_under_load() {
     sched.prepare().unwrap();
     let marks: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
     let cells: Vec<_> = state.cells.iter().map(|c| (c.first, c.count)).collect();
+    // Instrumented execution: wrap the application's kernel registry in
+    // a write-tracking closure (registry dispatch composes with custom
+    // run functions).
+    let reg = nbody::registry(&state);
     sched
         .run(4, |view| {
             let (ci, _) = nbody::tasks::decode(view.data);
@@ -82,12 +86,12 @@ fn bh_hierarchical_conflicts_enforced_under_load() {
                     let prev = m.fetch_add(1, Ordering::SeqCst);
                     assert_eq!(prev, 0, "two writers on one particle");
                 }
-                nbody::exec_task(&state, view);
+                reg.dispatch(view);
                 for m in &marks[first..first + count] {
                     m.fetch_sub(1, Ordering::SeqCst);
                 }
             } else {
-                nbody::exec_task(&state, view);
+                reg.dispatch(view);
             }
         })
         .unwrap();

@@ -68,7 +68,7 @@ fn qr_relearned_costs_still_correct_and_weighted() {
     qr::build_tasks(&mut sched, 4, 4);
     sched.prepare().unwrap();
     sched
-        .run(2, |view| qr::exec_task(&mat, &NativeBackend, view))
+        .run_registry(2, &qr::registry(&mat, &NativeBackend))
         .unwrap();
     let cp_before = sched.critical_path();
     sched.relearn_costs().unwrap();
@@ -78,7 +78,7 @@ fn qr_relearned_costs_still_correct_and_weighted() {
     let mat2 = qr::TiledMatrix::random(8, 4, 4, 78);
     let a0 = mat2.to_dense();
     sched
-        .run(2, |view| qr::exec_task(&mat2, &NativeBackend, view))
+        .run_registry(2, &qr::registry(&mat2, &NativeBackend))
         .unwrap();
     assert!(qr::verify::gram_residual(&a0, &mat2) < 1e-11);
 }

@@ -2,7 +2,7 @@
 //! (Generous wall-clock bounds — these catch complexity regressions,
 //! not noise; see EXPERIMENTS.md §Perf.)
 
-use quicksched::coordinator::{SchedConfig, Scheduler, TaskFlags, UnitCost};
+use quicksched::coordinator::{GraphBuilder, SchedConfig, Scheduler, UnitCost};
 
 /// 5k of 20k tasks contending one resource on 64 virtual cores: before
 /// the queue-scan failure memo + single-pass dispatch this took minutes
@@ -17,10 +17,11 @@ fn pathological_contention_completes_quickly() {
     let mut sched = Scheduler::new(SchedConfig::new(1)).unwrap();
     let r = sched.add_resource(None, 0);
     for i in 0..n {
-        let t = sched.add_task(0, TaskFlags::default(), &[], 1 + i % 13);
+        let mut spec = sched.task(0).cost(1 + i % 13);
         if i % 4 == 0 {
-            sched.add_lock(t, r);
+            spec = spec.lock(r);
         }
+        spec.spawn();
     }
     sched.prepare().unwrap();
     let m = sched.run_sim(64, &UnitCost).unwrap();
@@ -37,10 +38,11 @@ fn pathological_contention_threaded() {
     let mut sched = Scheduler::new(SchedConfig::new(2)).unwrap();
     let r = sched.add_resource(None, 0);
     for i in 0..4_000i64 {
-        let t = sched.add_task(0, TaskFlags::default(), &[], 1);
+        let mut spec = sched.task(0);
         if i % 2 == 0 {
-            sched.add_lock(t, r);
+            spec = spec.lock(r);
         }
+        spec.spawn();
     }
     sched.prepare().unwrap();
     let m = sched.run(2, |_| {}).unwrap();

@@ -17,7 +17,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use quicksched::coordinator::{
-    KeyPolicy, ResId, SchedConfig, SchedFlags, Scheduler, StealPolicy, TaskFlags, TaskId,
+    GraphBuilder, KeyPolicy, ResId, SchedConfig, SchedFlags, Scheduler, StealPolicy, TaskId,
     UnitCost,
 };
 use quicksched::util::rng::Rng;
@@ -85,7 +85,7 @@ fn build(
         .map(|p| s.add_resource(p.map(ResId), -1))
         .collect();
     let tids: Vec<TaskId> = (0..spec.n_tasks)
-        .map(|i| s.add_task(0, TaskFlags::default(), &(i as u64).to_le_bytes(), spec.costs[i]))
+        .map(|i| s.task(0).payload(&(i as u64)).cost(spec.costs[i]).spawn())
         .collect();
     for &(a, b) in &spec.edges {
         s.add_unlock(tids[a as usize], tids[b as usize]);
@@ -269,8 +269,7 @@ fn cyclic_graphs_rejected() {
     for _ in 0..20 {
         let n = 3 + rng.index(20);
         let mut s = Scheduler::new(SchedConfig::new(1)).unwrap();
-        let tids: Vec<TaskId> =
-            (0..n).map(|_| s.add_task(0, TaskFlags::default(), &[], 1)).collect();
+        let tids: Vec<TaskId> = (0..n).map(|_| s.task(0).spawn()).collect();
         for b in 1..n {
             s.add_unlock(tids[rng.index(b)], tids[b]);
         }

@@ -5,7 +5,7 @@
 
 use std::sync::Arc;
 
-use quicksched::coordinator::{SchedConfig, Scheduler, TaskFlags, UnitCost};
+use quicksched::coordinator::{GraphBuilder, SchedConfig, Scheduler, UnitCost};
 use quicksched::server::{run_virtual, TenantId, VirtualJob, VirtualReport};
 
 /// A job whose graph is a `width`-wide batch of independent tasks over a
@@ -13,10 +13,9 @@ use quicksched::server::{run_virtual, TenantId, VirtualJob, VirtualReport};
 /// small enough that thousands of jobs simulate instantly.
 fn job(tenant: u32, arrival_ns: u64, width: usize, cost: i64) -> VirtualJob {
     let mut s = Scheduler::new(SchedConfig::new(2)).unwrap();
-    let root = s.add_task(0, TaskFlags::default(), &[], cost);
+    let root = s.task(0).cost(cost).spawn();
     for _ in 0..width {
-        let t = s.add_task(0, TaskFlags::default(), &[], cost);
-        s.add_unlock(root, t);
+        s.task(0).cost(cost).after([root]).spawn();
     }
     s.prepare().unwrap();
     VirtualJob { tenant: TenantId(tenant), arrival_ns, sched: Arc::new(s) }

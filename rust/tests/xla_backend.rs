@@ -167,7 +167,7 @@ fn full_nbody_via_xla_backend() {
     nbody::build_tasks(&mut sched, &state, 256);
     sched.prepare().unwrap();
     let exec = XlaNbodyExec::new(svc);
-    sched.run(2, |view| exec.exec_task(&state, view)).unwrap();
+    sched.run_registry(2, &exec.registry(&state)).unwrap();
     let mut got = state.into_parts();
     got.sort_unstable_by_key(|p| p.id);
     let mut want = native;
