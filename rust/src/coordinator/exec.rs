@@ -6,6 +6,19 @@
 //! `gettask → fun(task) → done` until the scheduler runs out of tasks.
 //! `ExecMode::Spin` busy-waits when no task is available;
 //! `ExecMode::Yield` blocks on a condvar like `qsched_flag_yield`.
+//!
+//! Two executors share the task-execution core defined here:
+//!
+//! * this module's per-run workers, spawned for one graph and joined
+//!   when it drains (`Scheduler::run`), acquiring through the
+//!   scheduler's own queues; and
+//! * the server's persistent pool (`server::pool`), whose long-lived
+//!   workers acquire through the shared cross-job shard layer
+//!   (`server::shard`) via `Scheduler::try_acquire`.
+//!
+//! Both funnel into `exec_task_guarded` below, so panic isolation and
+//! measured-cost recording behave identically whichever way a task was
+//! acquired.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::{Duration, Instant};
@@ -71,8 +84,9 @@ impl Scheduler {
 ///
 /// This is the execution path shared by the per-run workers below and
 /// the server's persistent pool ([`crate::server::pool`]), which draws
-/// tasks from many concurrently-active jobs instead of being spawned for
-/// one `run()`.
+/// tasks from many concurrently-active jobs through the shared shard
+/// layer ([`crate::server::shard`]) instead of being spawned for one
+/// `run()`.
 pub(crate) fn exec_task_guarded<F>(s: &Scheduler, tid: super::task::TaskId, fun: &F) -> (u64, bool)
 where
     F: Fn(TaskView<'_>) + ?Sized,

@@ -5,6 +5,14 @@
 //! scheduler overhead (`qsched_gettask` time). Both are derived from
 //! [`TimelineRecord`]s collected per worker (lock-free: each worker owns
 //! its buffer) and merged after the run.
+//!
+//! These metrics cover one `Scheduler::run` / `run_sim` invocation of a
+//! single graph. The server's per-*job* accounting is separate and
+//! layered above: `server::protocol::JobReport` carries the
+//! queue/setup/service/dispatch split of one job through the shared
+//! pool, and `server::stats` aggregates those per tenant — including
+//! the amortized per-job dispatch overhead that `repro bench-server
+//! --batch` compares fused vs unfused.
 
 use super::task::TaskId;
 

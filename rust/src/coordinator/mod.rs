@@ -13,6 +13,28 @@
 //! [`Scheduler::run_sim_registry`]). The untyped
 //! `add_task(type_id, flags, &[u8], cost)` call and the
 //! [`task::payload`] byte-packing helpers remain as deprecated shims.
+//!
+//! # Lifecycle of a task
+//!
+//! 1. **Build** — `sched.task(ty).payload(&…).cost(c).locks([r]).spawn()`
+//!    records the task; `prepare()` validates the graph, sorts lock
+//!    sets, and computes critical-path weights.
+//! 2. **Ready** — `start()` (or a dependency resolution inside
+//!    [`Scheduler::complete`]) announces the task: either into one of
+//!    the scheduler's own per-worker [`queue::Queue`]s (routed by
+//!    resource-owner affinity, paper §3.4), or — when a [`ReadySink`]
+//!    is installed — into the server's shared cross-job shard layer
+//!    (`server::shard`), tagged with its job.
+//! 3. **Acquired** — a worker claims it via [`Scheduler::gettask`]
+//!    (internal queues + random-order stealing) or
+//!    [`Scheduler::try_acquire`] (shard path); either way the task's
+//!    resources are exclusively locked.
+//! 4. **Complete** — [`Scheduler::complete`] unlocks resources,
+//!    decrements dependents' wait counters, and announces newly-ready
+//!    dependents, returning to step 2 until `waiting()` hits zero.
+//!
+//! See `ARCHITECTURE.md` at the repo root for the cross-module data-flow
+//! picture of the server's sharded dispatch built on these hooks.
 pub mod builder;
 pub mod config;
 pub mod error;
@@ -37,7 +59,8 @@ pub use metrics::{RunMetrics, TimelineRecord};
 pub use payload::Payload;
 pub use registry::KernelRegistry;
 pub use resource::{ResId, Resource, OWNER_NONE};
-pub use scheduler::{ResHandle, Scheduler, TaskHandle};
+pub use queue::{Take, TaggedQueue};
+pub use scheduler::{ReadySink, ResHandle, Scheduler, TaskHandle};
 pub use sim::{ContentionCost, CostModel, ScaledCost, SimCtx, UnitCost};
 pub use spec::TaskSpec;
 pub use task::{Task, TaskFlags, TaskId, TaskState, TaskType, TaskView};

@@ -7,6 +7,18 @@
 //! the first task whose resources can all be locked. The paper argues (and
 //! §4 confirms) this loose order is sufficient in practice, while keeping
 //! insertion and removal at O(log n).
+//!
+//! Two queue flavors share the same heap + spin-lock machinery:
+//!
+//! * [`Queue`] — the paper's per-scheduler queue. Entries are plain
+//!   `(key, task)` pairs and `get` resolves conflicts itself against the
+//!   owning scheduler's task/resource tables.
+//! * [`TaggedQueue`] — a *cross-job* shard used by the server's shared
+//!   dispatch layer (`server::shard`). Entries additionally carry an
+//!   opaque 64-bit tag naming the job they belong to; `get` delegates
+//!   the "can this entry be taken?" decision to a caller closure, since
+//!   each entry's tasks and resources live in a different scheduler.
+//!   Stale entries (their job is gone) are purged in place during scans.
 
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -42,6 +54,9 @@ pub struct QueueStats {
     pub lock_failures: AtomicU64,
     /// Spins while acquiring the queue mutex.
     pub mutex_spins: AtomicU64,
+    /// Stale entries discarded during scans ([`TaggedQueue`] only:
+    /// entries whose owning job already left the slot table).
+    pub purged: AtomicU64,
 }
 
 impl QueueStats {
@@ -252,10 +267,14 @@ impl Queue {
 }
 
 #[inline]
-fn sift_up(heap: &mut [Entry], mut k: usize) -> usize {
+fn sift_up_by<E, F>(heap: &mut [E], mut k: usize, ge: F) -> usize
+where
+    E: Copy + PartialEq,
+    F: Fn(&E, &E) -> bool,
+{
     while k > 0 {
         let parent = (k - 1) / 2;
-        if heap[k].ge(&heap[parent]) && heap[k] != heap[parent] {
+        if ge(&heap[k], &heap[parent]) && heap[k] != heap[parent] {
             heap.swap(k, parent);
             k = parent;
         } else {
@@ -266,16 +285,20 @@ fn sift_up(heap: &mut [Entry], mut k: usize) -> usize {
 }
 
 #[inline]
-fn sift_down(heap: &mut [Entry], mut k: usize) {
+fn sift_down_by<E, F>(heap: &mut [E], mut k: usize, ge: F)
+where
+    E: Copy + PartialEq,
+    F: Fn(&E, &E) -> bool,
+{
     let n = heap.len();
     loop {
         let l = 2 * k + 1;
         let r = 2 * k + 2;
         let mut m = k;
-        if l < n && heap[l].ge(&heap[m]) && heap[l] != heap[m] {
+        if l < n && ge(&heap[l], &heap[m]) && heap[l] != heap[m] {
             m = l;
         }
-        if r < n && heap[r].ge(&heap[m]) && heap[r] != heap[m] {
+        if r < n && ge(&heap[r], &heap[m]) && heap[r] != heap[m] {
             m = r;
         }
         if m == k {
@@ -283,6 +306,223 @@ fn sift_down(heap: &mut [Entry], mut k: usize) {
         }
         heap.swap(k, m);
         k = m;
+    }
+}
+
+#[inline]
+fn sift_up(heap: &mut [Entry], k: usize) -> usize {
+    sift_up_by(heap, k, Entry::ge)
+}
+
+#[inline]
+fn sift_down(heap: &mut [Entry], k: usize) {
+    sift_down_by(heap, k, Entry::ge)
+}
+
+// ----------------------------------------------------------------------
+// Cross-job tagged shard queue
+// ----------------------------------------------------------------------
+
+/// One [`TaggedQueue`] heap entry: scheduling key (the task's
+/// critical-path weight), an opaque job tag assigned by the shard layer
+/// (`server::shard` packs a slot index and a generation into it), and the
+/// task id *within that job's scheduler*.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TaggedEntry {
+    pub key: i64,
+    pub tag: u64,
+    pub tid: TaskId,
+}
+
+impl TaggedEntry {
+    /// Max-heap order: higher key first; ties broken by lower tag then
+    /// lower task id for determinism.
+    #[inline]
+    fn ge(&self, other: &TaggedEntry) -> bool {
+        (self.key, other.tag, other.tid.0) >= (other.key, self.tag, self.tid.0)
+    }
+}
+
+/// Outcome of the caller's take-decision for one scanned [`TaggedEntry`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Take {
+    /// The entry's task was acquired (its resources are locked); remove
+    /// the entry and stop the scan.
+    Taken,
+    /// The task exists but cannot run now (resource conflict); keep the
+    /// entry, keep scanning.
+    Busy,
+    /// The tag no longer resolves to a live job; discard the entry and
+    /// keep scanning.
+    Stale,
+}
+
+/// A spin-locked max-heap of [`TaggedEntry`]s — one *shard* of the
+/// server's shared cross-job ready-queue layer.
+///
+/// The structure is the paper's §3.3 queue with one twist: because its
+/// entries belong to many different jobs (each with its own task and
+/// resource tables), the conflict check in `get` is delegated to the
+/// caller through a closure instead of being performed against a single
+/// scheduler. The heap scan keeps the paper's loose
+/// highest-key-first order.
+///
+/// ```
+/// use quicksched::coordinator::queue::{TaggedQueue, Take};
+/// use quicksched::coordinator::TaskId;
+///
+/// let q = TaggedQueue::new(4);
+/// q.put(5, 7, TaskId(0));
+/// q.put(9, 7, TaskId(1));
+/// // The closure decides per entry; here everything is acquirable.
+/// assert_eq!(q.get(|_tag, _tid| Take::Taken), Some((7, TaskId(1))));
+/// assert_eq!(q.get(|_tag, _tid| Take::Taken), Some((7, TaskId(0))));
+/// assert_eq!(q.get(|_tag, _tid| Take::Taken), None);
+/// ```
+pub struct TaggedQueue {
+    /// 0 = free, 1 = locked.
+    lock: AtomicUsize,
+    /// Heap storage; guarded by `lock`.
+    heap: UnsafeCell<Vec<TaggedEntry>>,
+    pub stats: QueueStats,
+}
+
+// SAFETY: `heap` is only touched while `lock` is held (acquire/release CAS).
+unsafe impl Sync for TaggedQueue {}
+unsafe impl Send for TaggedQueue {}
+
+impl TaggedQueue {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            lock: AtomicUsize::new(0),
+            heap: UnsafeCell::new(Vec::with_capacity(capacity)),
+            stats: QueueStats::default(),
+        }
+    }
+
+    #[inline]
+    fn acquire(&self) {
+        let mut spins = 0u64;
+        while self
+            .lock
+            .compare_exchange_weak(0, 1, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            spins += 1;
+            std::hint::spin_loop();
+        }
+        if spins > 0 {
+            self.stats.mutex_spins.fetch_add(spins, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    fn release(&self) {
+        self.lock.store(0, Ordering::Release);
+    }
+
+    /// Number of queued entries (racy snapshot).
+    pub fn len(&self) -> usize {
+        self.acquire();
+        let n = unsafe { (*self.heap.get()).len() };
+        self.release();
+        n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Insert an entry (append + bubble-up under the shard lock).
+    pub fn put(&self, key: i64, tag: u64, tid: TaskId) {
+        self.acquire();
+        let heap = unsafe { &mut *self.heap.get() };
+        heap.push(TaggedEntry { key, tag, tid });
+        let last = heap.len() - 1;
+        sift_up_by(heap, last, TaggedEntry::ge);
+        self.release();
+    }
+
+    /// Remove the entry at `k`, restoring heap order both ways (the
+    /// swapped-in tail element may need to move up *or* down).
+    fn remove_at(heap: &mut Vec<TaggedEntry>, k: usize) {
+        let last = heap.pop().expect("remove_at on empty heap");
+        if k < heap.len() {
+            heap[k] = last;
+            let k2 = sift_up_by(heap, k, TaggedEntry::ge);
+            sift_down_by(heap, k2, TaggedEntry::ge);
+        }
+    }
+
+    /// Scan the heap array in index order (loose highest-key-first, as in
+    /// the paper) and offer each entry to `take`, which resolves the tag
+    /// to its job and attempts the task's resource locks. The first
+    /// [`Take::Taken`] entry is removed and returned; [`Take::Stale`]
+    /// entries are discarded in place; [`Take::Busy`] entries stay.
+    ///
+    /// `take` runs under the shard spin-lock: it must be non-blocking
+    /// (resource `try_lock` and a short slot-table mutex are fine; never
+    /// another shard's lock).
+    pub fn get<F: FnMut(u64, TaskId) -> Take>(&self, mut take: F) -> Option<(u64, TaskId)> {
+        self.acquire();
+        let heap = unsafe { &mut *self.heap.get() };
+        let mut scanned = 0u64;
+        let mut busy = 0u64;
+        let mut purged = 0u64;
+        let mut out = None;
+        let mut k = 0usize;
+        while k < heap.len() {
+            scanned += 1;
+            let e = heap[k];
+            match take(e.tag, e.tid) {
+                Take::Busy => {
+                    busy += 1;
+                    k += 1;
+                }
+                Take::Stale => {
+                    purged += 1;
+                    // The tail swaps into `k`: re-examine the same index.
+                    Self::remove_at(heap, k);
+                }
+                Take::Taken => {
+                    Self::remove_at(heap, k);
+                    out = Some((e.tag, e.tid));
+                    break;
+                }
+            }
+        }
+        self.release();
+        self.stats.scanned.fetch_add(scanned, Ordering::Relaxed);
+        if busy > 0 {
+            self.stats.lock_failures.fetch_add(busy, Ordering::Relaxed);
+        }
+        if purged > 0 {
+            self.stats.purged.fetch_add(purged, Ordering::Relaxed);
+        }
+        match out {
+            Some(_) => self.stats.gets.fetch_add(1, Ordering::Relaxed),
+            None => self.stats.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        out
+    }
+
+    /// Drop every entry, returning how many were queued. Shutdown /
+    /// test helper; live serving purges stale entries lazily in `get`.
+    pub fn clear(&self) -> usize {
+        self.acquire();
+        let heap = unsafe { &mut *self.heap.get() };
+        let n = heap.len();
+        heap.clear();
+        self.release();
+        n
+    }
+
+    /// Verify the max-heap invariant (tests only).
+    pub fn check_heap(&self) -> bool {
+        self.acquire();
+        let v = unsafe { (*self.heap.get()).clone() };
+        self.release();
+        (1..v.len()).all(|k| v[(k - 1) / 2].ge(&v[k]))
     }
 }
 
@@ -404,6 +644,54 @@ mod tests {
         assert_eq!(q.get(&tasks, &res), None);
         let (gets, misses, ..) = q.stats.snapshot();
         assert_eq!((gets, misses), (0, 1));
+    }
+
+    #[test]
+    fn tagged_queue_orders_by_key() {
+        let q = TaggedQueue::new(8);
+        for (i, key) in [4i64, 9, 1, 7].iter().enumerate() {
+            q.put(*key, 1, TaskId(i as u32));
+            assert!(q.check_heap(), "tagged heap broken after put {i}");
+        }
+        let mut keys = Vec::new();
+        while let Some((tag, tid)) = q.get(|_, _| Take::Taken) {
+            assert_eq!(tag, 1);
+            keys.push([4i64, 9, 1, 7][tid.idx()]);
+        }
+        assert_eq!(keys, vec![9, 7, 4, 1]);
+        let (gets, misses, ..) = q.stats.snapshot();
+        assert_eq!((gets, misses), (4, 1));
+    }
+
+    #[test]
+    fn tagged_queue_skips_busy_purges_stale() {
+        let q = TaggedQueue::new(8);
+        q.put(30, 100, TaskId(0)); // stale job
+        q.put(20, 200, TaskId(1)); // busy task
+        q.put(10, 300, TaskId(2)); // acquirable
+        let got = q.get(|tag, _| match tag {
+            100 => Take::Stale,
+            200 => Take::Busy,
+            _ => Take::Taken,
+        });
+        assert_eq!(got, Some((300, TaskId(2))));
+        // The stale entry is gone, the busy one survived.
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.stats.purged.load(Ordering::Relaxed), 1);
+        assert_eq!(q.get(|_, _| Take::Busy), None);
+        assert_eq!(q.clear(), 1);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn tagged_queue_all_stale_drains_to_empty() {
+        let q = TaggedQueue::new(8);
+        for i in 0..5 {
+            q.put(i as i64, 9, TaskId(i));
+        }
+        assert_eq!(q.get(|_, _| Take::Stale), None);
+        assert!(q.is_empty(), "every stale entry must be purged in one scan");
+        assert_eq!(q.stats.purged.load(Ordering::Relaxed), 5);
     }
 
     #[test]

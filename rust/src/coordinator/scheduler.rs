@@ -8,8 +8,8 @@
 //! [`Scheduler::run`](super::exec) or the virtual-time executor
 //! ([`super::sim`]), each of which calls [`Scheduler::start`] internally.
 
-use std::sync::atomic::{AtomicI64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use super::config::{ExecMode, SchedConfig, StealPolicy};
 use super::error::{Result, SchedError};
@@ -24,6 +24,29 @@ use crate::util::rng::Rng;
 pub type TaskHandle = TaskId;
 /// Public alias for resource handles (the paper's `qsched_res_t`).
 pub type ResHandle = ResId;
+
+/// Receiver for ready-task announcements when the scheduler's internal
+/// per-queue routing is bypassed.
+///
+/// Installed via [`Scheduler::set_ready_sink`], the sink intercepts
+/// every task that would otherwise be routed to one of the scheduler's
+/// own queues by `enqueue` (from `start()` roots and from dependency
+/// resolution in [`Scheduler::complete`]). The server's shared sharded
+/// dispatch layer (`server::shard`) is the intended consumer: it tags
+/// the task with its job and places it in a cross-job
+/// [`super::queue::TaggedQueue`] shard, where workers later claim it
+/// through [`Scheduler::try_acquire`] instead of
+/// [`Scheduler::gettask`].
+///
+/// `route` is the task's first locked resource (falling back to its
+/// first used resource) — the affinity signal the shard layer hashes
+/// into a shard index, standing in for the paper's owner-queue routing.
+///
+/// Implementations must be cheap and non-blocking: `ready` is called on
+/// the completion hot path, potentially from many workers at once.
+pub trait ReadySink: Send + Sync {
+    fn ready(&self, tid: TaskId, key: i64, route: Option<ResId>);
+}
 
 /// The task scheduler (paper §3.4 `struct qsched`).
 pub struct Scheduler {
@@ -41,6 +64,14 @@ pub struct Scheduler {
     /// Condvar support for `ExecMode::Yield` (qsched_flag_yield).
     pub(crate) wait_lock: Mutex<()>,
     pub(crate) wait_cv: Condvar,
+    /// When set, ready tasks bypass the internal queues and are handed
+    /// to this sink instead (shared sharded dispatch; see [`ReadySink`]).
+    ready_sink: RwLock<Option<Arc<dyn ReadySink>>>,
+    /// Fast-path mirror of `ready_sink.is_some()`: `enqueue` checks this
+    /// single atomic before ever touching the lock, so single-graph runs
+    /// that never install a sink pay one relaxed load per enqueue, not
+    /// an RwLock round-trip.
+    has_sink: AtomicBool,
 }
 
 impl Scheduler {
@@ -60,7 +91,32 @@ impl Scheduler {
             prepared: false,
             wait_lock: Mutex::new(()),
             wait_cv: Condvar::new(),
+            ready_sink: RwLock::new(None),
+            has_sink: AtomicBool::new(false),
         })
+    }
+
+    /// Install (or clear) the [`ReadySink`] that receives ready tasks in
+    /// place of the internal queues.
+    ///
+    /// Must be called while no run is in flight — the canonical sequence
+    /// on the server is `reset_run()` → `set_ready_sink(Some(…))` →
+    /// `start()`, and the sink is cleared again when the job finalizes
+    /// (both [`Scheduler::reset_run`] and explicit
+    /// `set_ready_sink(None)` clear it). Takes `&self`: the field is
+    /// interior-mutable so an `Arc`-shared template instance can be
+    /// rebound per job.
+    pub fn set_ready_sink(&self, sink: Option<Arc<dyn ReadySink>>) {
+        let installed = sink.is_some();
+        if !installed {
+            // Drop the fast-path flag first so concurrent enqueues stop
+            // consulting the lock before the sink disappears.
+            self.has_sink.store(false, Ordering::Release);
+        }
+        *self.ready_sink.write().unwrap() = sink;
+        if installed {
+            self.has_sink.store(true, Ordering::Release);
+        }
     }
 
     /// `qsched_reset`: drop tasks and resources, keep queues/config.
@@ -107,6 +163,10 @@ impl Scheduler {
         }
         self.waiting.store(0, Ordering::Release);
         self.queued.store(0, Ordering::Release);
+        // A pooled instance must never carry the previous job's sink
+        // into its next activation (the shard layer re-installs one per
+        // job, tagged with the new job's slot).
+        self.set_ready_sink(None);
         Ok(())
     }
 
@@ -280,7 +340,33 @@ impl Scheduler {
         self.waiting.load(Ordering::Acquire)
     }
 
-    /// Number of ready tasks currently queued (hint; racy by nature).
+    /// Number of ready tasks currently queued — a *hint* with the
+    /// following exact consistency contract (identical whether tasks sit
+    /// in the internal queues or in a shared shard via a [`ReadySink`]):
+    ///
+    /// * **Upper bound.** The hint never exceeds `ready + acquired`: the
+    ///   number of entries currently sitting in a queue/shard plus the
+    ///   number of tasks a worker has removed and resource-locked but
+    ///   not yet decremented for. The increment happens only *after* an
+    ///   entry is physically queued (`put`/`ready` first, `fetch_add`
+    ///   second), so the counter can never get ahead of work that does
+    ///   not exist. Equivalently: it never exceeds the number of
+    ///   uncompleted tasks of the current run.
+    /// * **Transient undercount.** Between an entry's insertion and its
+    ///   `fetch_add` (and symmetrically between a removal and its
+    ///   `fetch_sub` in [`Scheduler::gettask`] /
+    ///   [`Scheduler::try_acquire`]) the hint may briefly undercount —
+    ///   a reader may skip a probe that would have found work. Callers
+    ///   therefore use it only to *skip* polling, never to conclude a
+    ///   run is finished; drain detection always goes through
+    ///   [`Scheduler::waiting`].
+    /// * **Exact at quiescence.** Whenever no enqueue or acquisition is
+    ///   in flight (before `start()`, after the last `complete()`, after
+    ///   `reset_run()`), the hint equals the true queued count.
+    ///
+    /// The upper bound is asserted under concurrency by the
+    /// `queued_hint_never_exceeds_ready_plus_acquired` stress test in
+    /// `rust/tests/prop_scheduler.rs`.
     #[inline]
     pub fn queued_hint(&self) -> i64 {
         self.queued.load(Ordering::Acquire)
@@ -306,10 +392,28 @@ impl Scheduler {
 
     /// `qsched_enqueue`: route a ready task to the queue owning most of
     /// its resources (locks + uses); ties and no-owner default to queue 0,
-    /// as in the paper.
+    /// as in the paper. When a [`ReadySink`] is installed the task is
+    /// announced to it instead (with its key and first lock/use resource
+    /// as the routing hint) and the internal queues stay untouched.
     pub(crate) fn enqueue(&self, tid: TaskId) {
         let t = &self.tasks[tid.idx()];
         debug_assert!(!t.flags.virtual_task);
+        if self.has_sink.load(Ordering::Acquire) {
+            let sink = self.ready_sink.read().unwrap().clone();
+            // A stale flag (sink cleared concurrently) falls through to
+            // the internal queues.
+            if let Some(sink) = sink {
+                let key = self.key_of(tid, t);
+                let route = t.locks.first().or_else(|| t.uses.first()).copied();
+                sink.ready(tid, key, route);
+                self.queued.fetch_add(1, Ordering::AcqRel);
+                if self.config.flags.mode == ExecMode::Yield {
+                    let _g = self.wait_lock.lock().unwrap();
+                    self.wait_cv.notify_all();
+                }
+                return;
+            }
+        }
         let nq = self.queues.len();
         let mut best = 0usize;
         if nq > 1 {
@@ -359,24 +463,16 @@ impl Scheduler {
         } else if nq > 1 {
             match self.config.flags.steal {
                 StealPolicy::Random => {
-                    // Random-order probe of the other queues (§3.4).
-                    // §Perf opt C: iterate a random cyclic permutation
-                    // (random start + stride coprime to nq) instead of
-                    // allocating and shuffling a Vec per steal attempt.
-                    let start = rng.index(nq);
-                    let mut step = 1 + rng.index(nq - 1);
-                    while gcd(step, nq) != 1 {
-                        step = 1 + (step % (nq - 1));
-                    }
-                    let mut k = start;
-                    for _ in 0..nq {
+                    // Random-order probe of the other queues (§3.4):
+                    // a random cyclic permutation instead of allocating
+                    // and shuffling a Vec per steal attempt.
+                    for k in rng.coprime_walk(nq) {
                         if k != qid {
                             if let Some(tid) = self.queues[k].get(&self.tasks, &self.res) {
                                 got = Some((tid, true));
                                 break;
                             }
                         }
-                        k = (k + step) % nq;
                     }
                 }
                 StealPolicy::WeightAware => {
@@ -401,6 +497,33 @@ impl Scheduler {
             }
         }
         got
+    }
+
+    /// Try to lock every resource of `tid` — the acquisition half of the
+    /// shared-shard dispatch path, pairing with a [`ReadySink`] delivery
+    /// the way [`Scheduler::gettask`] pairs with the internal queues.
+    ///
+    /// Locks are attempted in the id-sorted order `prepare()` fixed (the
+    /// §3.3 dining-philosophers discipline) and rolled back on the first
+    /// failure. On success the task counts as acquired: the
+    /// [`Scheduler::queued_hint`] is decremented exactly as `gettask`
+    /// would, and the caller owes a matching [`Scheduler::complete`].
+    ///
+    /// Re-owning (`flags.reown`) is deliberately *not* applied here: the
+    /// shard layer routes by a stateless `(job, resource)` hash, so
+    /// mutating owner hints would only perturb the single-graph path.
+    pub fn try_acquire(&self, tid: TaskId) -> bool {
+        let t = &self.tasks[tid.idx()];
+        for (j, &rid) in t.locks.iter().enumerate() {
+            if !self.res.try_lock(rid) {
+                for &r_prev in &t.locks[..j] {
+                    self.res.unlock(r_prev);
+                }
+                return false;
+            }
+        }
+        self.queued.fetch_sub(1, Ordering::AcqRel);
+        true
     }
 
     /// `qsched_done`: release the task's resource locks, decrement each
@@ -474,16 +597,6 @@ impl Scheduler {
         }
         acc
     }
-}
-
-#[inline]
-fn gcd(mut a: usize, mut b: usize) -> usize {
-    while b != 0 {
-        let t = a % b;
-        a = b;
-        b = t;
-    }
-    a
 }
 
 #[cfg(test)]
@@ -826,6 +939,53 @@ mod tests {
         s.relearn_costs().unwrap();
         assert_eq!(s.tasks[a.idx()].cost, 900);
         assert_eq!(s.tasks[b.idx()].cost, 700, "unmeasured task keeps learned cost");
+    }
+
+    #[test]
+    fn ready_sink_redirects_and_try_acquire_pairs() {
+        struct Collect(Mutex<Vec<(TaskId, i64, Option<ResId>)>>);
+        impl ReadySink for Collect {
+            fn ready(&self, tid: TaskId, key: i64, route: Option<ResId>) {
+                self.0.lock().unwrap().push((tid, key, route));
+            }
+        }
+        let mut s = sched(2);
+        let r = s.add_resource(None, OWNER_NONE);
+        let a = s.task(0).cost(2).spawn();
+        let b = s.task(0).cost(3).spawn();
+        s.add_lock(b, r);
+        s.add_unlock(a, b);
+        s.prepare().unwrap();
+        let sink = Arc::new(Collect(Mutex::new(Vec::new())));
+        s.set_ready_sink(Some(Arc::clone(&sink) as Arc<dyn ReadySink>));
+        s.start().unwrap();
+        // The root went to the sink, not the internal queues.
+        assert_eq!(s.queues[0].len() + s.queues[1].len(), 0);
+        assert_eq!(s.queued_hint(), 1);
+        assert_eq!(*sink.0.lock().unwrap(), vec![(a, 5, None)]);
+        assert!(s.try_acquire(a));
+        assert_eq!(s.queued_hint(), 0, "try_acquire decrements like gettask");
+        s.complete(a);
+        // The dependent is announced with its lock as the routing hint.
+        assert_eq!(sink.0.lock().unwrap()[1], (b, 3, Some(r)));
+        assert!(s.try_acquire(b));
+        assert!(s.res.get(r).is_locked(), "acquired task holds its locks");
+        s.complete(b);
+        assert_eq!(s.waiting(), 0);
+        assert!(s.res.all_quiescent());
+        // reset_run clears the sink: the next run is internally queued.
+        s.reset_run().unwrap();
+        s.start().unwrap();
+        assert_eq!(sink.0.lock().unwrap().len(), 2, "sink detached by reset_run");
+        assert_eq!(s.queued_hint(), 1);
+        let mut rng = Rng::new(0);
+        let (t1, _) = s.gettask(0, &mut rng).unwrap();
+        assert_eq!(t1, a);
+        s.complete(t1);
+        let (t2, _) = s.gettask(0, &mut rng).unwrap();
+        assert_eq!(t2, b);
+        s.complete(t2);
+        assert!(s.res.all_quiescent());
     }
 
     #[test]

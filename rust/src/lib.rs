@@ -15,9 +15,26 @@
 //! * [`bench`] — drivers regenerating every table/figure of §4.
 //! * [`server`] — persistent multi-graph scheduling service: one
 //!   long-lived worker pool serving concurrent job submissions from
-//!   many tenants, with graph-template reuse and weighted-fair
-//!   admission (`repro serve` / `repro bench-server`).
+//!   many tenants through a *shared sharded ready-queue layer*
+//!   ([`server::shard`]), with graph-template reuse, weighted-fair
+//!   admission, and batched (fused) admission for sub-millisecond jobs
+//!   (`repro serve` / `repro bench-server [--batch]`).
 //! * [`util`] — RNG, stats, mini bench harness, CLI parsing.
+//!
+//! # Architecture at a glance
+//!
+//! A task travels: `TaskSpec` build → `prepare()` (validation, lock
+//! sorting, critical-path weights) → ready announcement — into the
+//! scheduler's own queues for single-graph runs, or into a cross-job
+//! shard (tagged `(job, task, weight)`) on the server — → acquisition
+//! (`gettask` / `try_acquire`, resources locked) → execution →
+//! `complete()` (unlock, wake dependents). The server stacks admission
+//! (fair queue + job fusion), the template registry (build-once,
+//! `reset_run()`-recycle), and per-tenant stats around that inner loop.
+//!
+//! Start with the repo-level `README.md` for the quickstart, and
+//! `ARCHITECTURE.md` for the jobs → shards → workers data-flow diagram
+//! and the routing / steal / batching policies.
 pub mod util;
 pub mod coordinator;
 pub mod runtime;

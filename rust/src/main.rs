@@ -7,9 +7,12 @@
 //! repro sim   <qr|bh> [--cores 64 ...workload options]
 //! repro bench <fig8|fig9|fig11|fig12|fig13|overhead|ablation|all> [--quick]
 //! repro info  [--quick]       # E1/E4 graph-statistics tables
-//! repro serve        [--workers 4 --tenants 3 --jobs 30 --tasks 300 --work-ns 2000]
+//! repro serve        [--workers 4 --tenants 3 --jobs 30 --tasks 300 --work-ns 2000
+//!                     --batch-max 1]
 //! repro bench-server [--workers 4 --clients 4 --jobs 64 --tasks 400 --work-ns 1000
 //!                     --json bench_out/BENCH_server.json --quick]
+//!                    [--batch --batch-max 8 --tiny-jobs 256 --tiny-tasks 48
+//!                     --tiny-work-ns 200]   # fused vs unfused dispatch overhead
 //! ```
 
 use std::sync::Arc;
@@ -232,15 +235,17 @@ fn cmd_bench(args: &Args) {
 
 /// `repro serve` — demo of the persistent scheduling service: several
 /// weighted tenants submit synthetic + QR jobs concurrently over one
-/// worker pool; per-tenant statistics print at the end.
+/// worker pool (all jobs dispatched through the shared sharded
+/// ready-queues); per-tenant statistics print at the end.
 fn cmd_serve(args: &Args) {
     let workers = args.get_usize("workers", 4);
     let tenants = args.get_usize("tenants", 3).max(1);
     let jobs = args.get_usize("jobs", 30);
     let tasks = args.get_usize("tasks", 300);
     let work_ns = args.get_u64("work-ns", 2_000);
+    let batch_max = args.get_usize("batch-max", 1);
 
-    let server = SchedServer::start(ServerConfig::new(workers));
+    let server = SchedServer::start(ServerConfig::new(workers).with_batch_max(batch_max));
     server.register_template("synthetic", synthetic_template(tasks, 8, 0xC0FFEE, work_ns));
     server.register_template("qr", qr_template(6, 16, 0xC0FFEE));
     // Tenant 0 carries double weight to make the fair queue visible.
@@ -266,16 +271,25 @@ fn cmd_serve(args: &Args) {
     server.drain();
     let snap = server.stats();
     print!("{}", snap.render());
+    let (gets, misses, scanned, busy, spins, purged) = server.shard_stats();
+    println!(
+        "shards: {gets} gets, {misses} misses, {scanned} scanned, \
+         {busy} busy, {spins} lock spins, {purged} purged"
+    );
     server.shutdown();
 }
 
 /// `repro bench-server` — closed-loop load generator over the service:
 /// `--clients` threads each submit jobs back-to-back, once with template
 /// reuse and once rebuilding the graph per job, so the per-job setup
-/// cost gap is measured end to end. Writes the JSON trajectory for
-/// BENCH_server.json.
+/// cost gap is measured end to end. With `--batch`, an additional
+/// open-loop phase pair submits a burst of sub-millisecond jobs with
+/// fused admission (`batch_max = --batch-max`) vs unfused
+/// (`batch_max = 1`) and compares the amortized per-job dispatch
+/// overhead. Writes the JSON trajectory for BENCH_server.json.
 fn cmd_bench_server(args: &Args) {
     let quick = args.flag("quick");
+    let batch = args.flag("batch");
     let workers = args.get_usize("workers", if quick { 2 } else { 4 });
     let clients = args.get_usize("clients", 4);
     let jobs = args.get_usize("jobs", if quick { 16 } else { 64 }).max(clients);
@@ -364,6 +378,96 @@ fn cmd_bench_server(args: &Args) {
     let speedup = if setup_reuse > 0.0 { setup_rebuild / setup_reuse } else { f64::INFINITY };
     println!("per-job setup cost: rebuild/reuse = {speedup:.1}x");
 
+    // --batch: fused vs unfused dispatch of sub-millisecond jobs. The
+    // burst is submitted open-loop (everything queued up front) so the
+    // fair queue holds adjacent same-template jobs for sweeps to fuse.
+    let batch_section = if batch {
+        let batch_k = args.get_usize("batch-max", 8).max(2);
+        let tiny_jobs = args.get_usize("tiny-jobs", if quick { 64 } else { 256 });
+        let tiny_tasks = args.get_usize("tiny-tasks", if quick { 32 } else { 48 });
+        let tiny_work = args.get_u64("tiny-work-ns", 200);
+        let run_batch_phase = |k: usize| -> (f64, quicksched::server::StatsSnapshot) {
+            let server = SchedServer::start(
+                ServerConfig::new(workers)
+                    .with_batch_max(k)
+                    .with_max_inflight(tiny_jobs.max(8)),
+            );
+            server.register_template("tiny", synthetic_template(tiny_tasks, 4, 0x7174, tiny_work));
+            let t0 = std::time::Instant::now();
+            let ids: Vec<_> = (0..tiny_jobs)
+                .map(|i| server.submit(JobSpec::template(TenantId((i % clients) as u32), "tiny")))
+                .collect();
+            for id in ids {
+                server.wait(id);
+            }
+            server.drain();
+            let wall_s = t0.elapsed().as_secs_f64();
+            let snap = server.stats();
+            server.shutdown();
+            (wall_s, snap)
+        };
+        let (wall_fused, snap_fused) = run_batch_phase(batch_k);
+        let (wall_unfused, snap_unfused) = run_batch_phase(1);
+        fn weighted(
+            snap: &quicksched::server::StatsSnapshot,
+            f: impl Fn(&quicksched::server::TenantSummary) -> f64,
+        ) -> f64 {
+            let (mut sum, mut n) = (0.0f64, 0u64);
+            for t in &snap.tenants {
+                sum += f(t) * t.completed as f64;
+                n += t.completed;
+            }
+            if n == 0 {
+                0.0
+            } else {
+                sum / n as f64
+            }
+        }
+        let disp_fused = weighted(&snap_fused, |t| t.mean_dispatch_ns);
+        let disp_unfused = weighted(&snap_unfused, |t| t.mean_dispatch_ns);
+        let fuse_width = weighted(&snap_fused, |t| t.mean_batched_with);
+        let mut bt = bench::harness::Table::new(&[
+            "mode", "jobs", "wall_s", "jobs_per_s", "mean_dispatch_us", "mean_batch",
+        ]);
+        bt.row(&[
+            format!("fused(k={batch_k})"),
+            snap_fused.completed().to_string(),
+            format!("{wall_fused:.3}"),
+            format!("{:.1}", snap_fused.completed() as f64 / wall_fused),
+            format!("{:.2}", disp_fused / 1e3),
+            format!("{fuse_width:.2}"),
+        ]);
+        bt.row(&[
+            "unfused".into(),
+            snap_unfused.completed().to_string(),
+            format!("{wall_unfused:.3}"),
+            format!("{:.1}", snap_unfused.completed() as f64 / wall_unfused),
+            format!("{:.2}", disp_unfused / 1e3),
+            format!("{:.2}", weighted(&snap_unfused, |t| t.mean_batched_with)),
+        ]);
+        println!("\n== bench-server --batch ({tiny_jobs} x {tiny_tasks}-task sub-ms jobs) ==");
+        println!("{}", bt.render());
+        let dispatch_speedup =
+            if disp_fused > 0.0 { disp_unfused / disp_fused } else { f64::INFINITY };
+        println!(
+            "per-job dispatch overhead: unfused/fused = {dispatch_speedup:.1}x \
+             (mean fused batch width {fuse_width:.2})"
+        );
+        format!(
+            "\"batch\": {{\"batch_max\": {batch_k}, \"jobs\": {tiny_jobs}, \
+             \"tasks_per_job\": {tiny_tasks}, \"work_ns\": {tiny_work}, \
+             \"mean_dispatch_fused_ns\": {disp_fused:.1}, \
+             \"mean_dispatch_unfused_ns\": {disp_unfused:.1}, \
+             \"dispatch_speedup\": {dispatch_speedup:.2}, \
+             \"mean_batched_with_fused\": {fuse_width:.2}, \
+             \"jobs_per_sec_fused\": {:.3}, \"jobs_per_sec_unfused\": {:.3}}},\n",
+            snap_fused.completed() as f64 / wall_fused,
+            snap_unfused.completed() as f64 / wall_unfused,
+        )
+    } else {
+        String::new()
+    };
+
     if let Some(dir) = json_path.parent() {
         let _ = std::fs::create_dir_all(dir);
     }
@@ -373,7 +477,7 @@ fn cmd_bench_server(args: &Args) {
          \"mean_setup_reuse_ns\": {setup_reuse:.1},\n\
          \"mean_setup_rebuild_ns\": {setup_rebuild:.1},\n\
          \"setup_speedup\": {speedup:.2},\n\
-         \"jobs_per_sec_reuse\": {:.3},\n\"jobs_per_sec_rebuild\": {:.3},\n\
+         \"jobs_per_sec_reuse\": {:.3},\n\"jobs_per_sec_rebuild\": {:.3},\n{batch_section}\
          \"reuse\": {},\"rebuild\": {}}}\n",
         snap_reuse.completed() as f64 / wall_reuse,
         snap_rebuild.completed() as f64 / wall_rebuild,

@@ -143,6 +143,21 @@ impl<T> FairQueue<T> {
     /// determinism). Advances that tenant's pass by its stride and the
     /// global virtual time to its new pass base.
     pub fn try_admit(&mut self) -> Option<(TenantId, T)> {
+        self.try_admit_if(|_| true)
+    }
+
+    /// [`FairQueue::try_admit`] gated on a predicate over the job that
+    /// *would* be admitted next: the stride-fair pick is made first, and
+    /// only then is `pred` consulted — so a `false` answer leaves the
+    /// queue untouched rather than skipping ahead to a different job.
+    ///
+    /// This is the batching-admission primitive: the server fuses
+    /// consecutive same-template jobs into one activation by admitting
+    /// with `pred = "same submission as the batch head"`, which by
+    /// construction can never reorder admissions around the fair-queue
+    /// policy — a batch simply ends at the first job fairness would not
+    /// have admitted next anyway.
+    pub fn try_admit_if<F: FnOnce(&T) -> bool>(&mut self, pred: F) -> Option<(TenantId, T)> {
         if self.inflight >= self.max_inflight || self.queued == 0 {
             return None;
         }
@@ -153,6 +168,9 @@ impl<T> FairQueue<T> {
             .min_by_key(|(id, t)| (t.pass, id.0))
             .map(|(id, _)| *id)?;
         let t = self.tenants.get_mut(&best).expect("tenant vanished");
+        if !pred(t.queue.front().expect("queue emptied")) {
+            return None;
+        }
         let item = t.queue.pop_front().expect("queue emptied");
         self.vtime = t.pass;
         t.pass += STRIDE_ONE / t.weight;
@@ -286,6 +304,21 @@ mod tests {
         q.finish(TenantId(0));
         assert_eq!(q.outstanding(TenantId(0)), 0);
         assert!(q.try_push(TenantId(0), 13).is_ok());
+    }
+
+    #[test]
+    fn try_admit_if_rejects_without_reordering() {
+        let mut q = FairQueue::new(4);
+        q.push(TenantId(0), 1u32);
+        q.push(TenantId(1), 2u32);
+        // The fair pick is tenant 0's job; a predicate refusing it must
+        // not skip ahead to tenant 1.
+        assert_eq!(q.try_admit_if(|&x| x == 2), None);
+        assert_eq!(q.queued(), 2, "refused admission leaves the queue untouched");
+        assert_eq!(q.inflight(), 0);
+        // The same pick is still next, and an accepting predicate takes it.
+        assert_eq!(q.try_admit_if(|&x| x == 1), Some((TenantId(0), 1)));
+        assert_eq!(q.try_admit(), Some((TenantId(1), 2)));
     }
 
     #[test]

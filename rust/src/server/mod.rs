@@ -4,28 +4,47 @@
 //! *jobs* by many concurrent clients/tenants: submissions wait in a
 //! weighted-fair bounded admission queue ([`admission`]), graphs come
 //! from the template registry ([`registry`]) — built once and
-//! `reset_run()`-recycled per job — and every completion lands in the
-//! per-tenant statistics ([`stats`]). [`protocol`] defines the
+//! `reset_run()`-recycled per job — dispatch flows through the shared
+//! sharded ready-queue layer ([`shard`]), and every completion lands in
+//! the per-tenant statistics ([`stats`]). [`protocol`] defines the
 //! client-visible types.
 //!
 //! ```text
-//!   clients ──submit──▶ FairQueue ──admit──▶ Registry.checkout
-//!                                               │ (reuse | build)
-//!                              ┌────────────────▼───────────────┐
-//!                              │  WorkerPool (persistent)       │
-//!                              │  workers ⟳ gettask over all    │
-//!                              │  active jobs' schedulers       │
-//!                              └────────────────┬───────────────┘
-//!                                 finalize ──▶ checkin + report
+//!   clients ──submit──▶ FairQueue ══admit sweep═▶ Registry.checkout_many
+//!                        (fuses ≤ K same-template jobs)  │ (reuse | build)
+//!                        ┌───────────────────────────────▼──────────┐
+//!                        │ ShardPool: slot table + per-worker shard │
+//!                        │  job ⋯ ReadySink ⋯▶ [shard0][shard1]...  │
+//!                        │  workers ⟳ probe home shard, then steal  │
+//!                        └───────────────────────┬──────────────────┘
+//!                                   finalize ──▶ checkin + report
 //! ```
 //!
-//! See DESIGN.md §server for the inventory and the rationale relative to
-//! the paper's one-shot `qsched_run`.
+//! # Lifecycle of a job
+//!
+//! `submit` assigns a [`JobId`] and queues the spec in the fair queue.
+//! The dispatcher's *admission sweep* pops it (possibly fused with up to
+//! `batch_max − 1` consecutive same-template jobs — see
+//! [`ServerConfig::with_batch_max`]), checks the batch's instances out
+//! of the registry in one lock round, and activates them on the pool:
+//! each instance gets a [`shard::ShardSink`] tagged with its slot, then
+//! `start()` announces its root tasks straight into the shards. Workers
+//! probe the shards ([`shard::ShardPool::acquire`]: home shard, then
+//! steal), execute, and `complete()` — which feeds newly-ready
+//! dependents back into the shards through the sink. Whoever completes
+//! a job's last task finalizes it: the slot is freed, the instance is
+//! checked back into the registry pool, and the terminal
+//! [`JobStatus`] is published (exactly once, individually per job even
+//! when fused).
+//!
+//! See DESIGN.md §server for the inventory and `ARCHITECTURE.md`
+//! §Sharded dispatch for the routing/steal/batching policies.
 
 pub mod admission;
 pub mod pool;
 pub mod protocol;
 pub mod registry;
+pub mod shard;
 pub mod stats;
 
 use std::collections::HashMap;
@@ -37,23 +56,30 @@ use std::time::Instant;
 use crate::coordinator::SchedConfig;
 
 pub use admission::FairQueue;
-pub use pool::{run_virtual, ActiveJob, VirtualJob, VirtualReport, WorkerPool};
+pub use pool::{
+    run_virtual, run_virtual_sharded, ActiveJob, VirtualJob, VirtualReport, WorkerPool,
+};
 pub use protocol::{JobId, JobReport, JobSpec, JobStatus, Submission, SubmitError, TenantId};
 pub use registry::{
     panicking_template, qr_template, synthetic_template, BuildFn, ExecFn, JobGraph, Registry,
 };
+pub use shard::{route_shard, ShardPool, ShardSink};
 pub use stats::{ServerStats, StatsSnapshot, TenantSummary};
 
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// Persistent worker threads.
+    /// Persistent worker threads (also the shard count: one shard per
+    /// worker, as the paper keeps one queue per thread).
     pub workers: usize,
     /// Jobs allowed on the pool concurrently; everything else waits in
     /// the weighted-fair admission queue.
     pub max_inflight: usize,
     /// Idle prepared instances kept per template.
     pub max_pool: usize,
+    /// Upper bound on jobs fused into one admission sweep (1 = no
+    /// batching). See [`ServerConfig::with_batch_max`].
+    pub batch_max: usize,
     /// Seed for the workers' steal order.
     pub seed: u64,
     /// Scheduler configuration for template instances (its `nr_queues`
@@ -68,6 +94,7 @@ impl ServerConfig {
             workers,
             max_inflight: (workers * 2).max(2),
             max_pool: (workers * 2).max(2),
+            batch_max: 1,
             seed: 0x5EED_5E11,
             sched: SchedConfig::new(workers),
         }
@@ -75,6 +102,26 @@ impl ServerConfig {
 
     pub fn with_max_inflight(mut self, n: usize) -> Self {
         self.max_inflight = n.max(1);
+        self
+    }
+
+    /// Enable batched admission: one dispatcher sweep may fuse up to `k`
+    /// *consecutive-in-fair-order, same-template* jobs into a single
+    /// activation — one fair-queue lock round, one registry
+    /// `checkout_many`, one slot-table registration, one `start()`
+    /// sweep — amortizing per-job dispatch overhead for sub-millisecond
+    /// graphs. Per-job statuses are still published individually.
+    ///
+    /// Trade-off: a fused member admitted "early" with its batch can
+    /// only run as shard capacity allows, and a large `k` lengthens the
+    /// sweep a later-queued different-template job waits behind — so
+    /// `k` buys dispatch throughput at a small head-of-line latency
+    /// cost. Fusion never reorders admissions (see
+    /// [`FairQueue::try_admit_if`]), and each member still consumes its
+    /// own in-flight slot, so `max_inflight` keeps binding. See
+    /// `ARCHITECTURE.md` §Batching for the K/latency discussion.
+    pub fn with_batch_max(mut self, k: usize) -> Self {
+        self.batch_max = k.max(1);
         self
     }
 
@@ -109,6 +156,7 @@ struct Inner {
     job_cv: Condvar,
     stats: ServerStats,
     next_job: AtomicU64,
+    batch_max: usize,
     tx: Mutex<mpsc::Sender<Event>>,
 }
 
@@ -147,6 +195,7 @@ impl SchedServer {
             job_cv: Condvar::new(),
             stats: ServerStats::new(),
             next_job: AtomicU64::new(1),
+            batch_max: config.batch_max.max(1),
             tx: Mutex::new(tx),
         });
         // Workers report completions straight into the dispatcher queue.
@@ -207,6 +256,21 @@ impl SchedServer {
 
     /// Submit a job; returns immediately with its handle.
     ///
+    /// ```
+    /// use quicksched::server::{
+    ///     synthetic_template, JobSpec, JobStatus, SchedServer, ServerConfig, TenantId,
+    /// };
+    ///
+    /// let server = SchedServer::start(ServerConfig::new(2));
+    /// server.register_template("demo", synthetic_template(20, 2, 7, 0));
+    /// let id = server.submit(JobSpec::template(TenantId(0), "demo"));
+    /// match server.wait(id) {
+    ///     JobStatus::Done(report) => assert_eq!(report.tasks_run, 20),
+    ///     other => panic!("unexpected status {other:?}"),
+    /// }
+    /// server.shutdown();
+    /// ```
+    ///
     /// # Panics
     /// If the tenant sits at its outstanding-jobs cap — use
     /// [`SchedServer::try_submit`] where caps are configured.
@@ -221,6 +285,28 @@ impl SchedServer {
     }
 
     /// Block until `id` reaches a terminal state.
+    ///
+    /// Fused admission changes nothing here: every job of a batch gets
+    /// its own terminal status, published exactly once.
+    ///
+    /// ```
+    /// use quicksched::server::{
+    ///     synthetic_template, JobSpec, JobStatus, SchedServer, ServerConfig, TenantId,
+    /// };
+    ///
+    /// // Batching on: up to 4 consecutive same-template jobs fuse into
+    /// // one activation sweep.
+    /// let server = SchedServer::start(ServerConfig::new(2).with_batch_max(4));
+    /// server.register_template("demo", synthetic_template(10, 2, 3, 0));
+    /// let ids: Vec<_> = (0..6)
+    ///     .map(|_| server.submit(JobSpec::template(TenantId(0), "demo")))
+    ///     .collect();
+    /// for id in ids {
+    ///     assert!(matches!(server.wait(id), JobStatus::Done(_)));
+    /// }
+    /// assert_eq!(server.stats().completed(), 6);
+    /// server.shutdown();
+    /// ```
     ///
     /// # Panics
     /// On an unknown job id.
@@ -262,6 +348,12 @@ impl SchedServer {
 
     pub fn stats(&self) -> StatsSnapshot {
         self.inner.stats.snapshot()
+    }
+
+    /// Aggregated shard-layer statistics `(gets, misses, scanned, busy,
+    /// spins, purged)` across the pool's cross-job ready-queues.
+    pub fn shard_stats(&self) -> (u64, u64, u64, u64, u64, u64) {
+        self.pool.as_ref().map(|p| p.shards().stats()).unwrap_or_default()
     }
 
     /// Stop the dispatcher and the worker pool. Jobs still queued stay
@@ -310,7 +402,7 @@ fn dispatcher_loop(inner: &Inner, pool: &WorkerPool, rx: mpsc::Receiver<Event>) 
                     Err(_) => break,
                 }
             }
-            if !admit_one(inner, pool) {
+            if !admit_sweep(inner, pool) {
                 break;
             }
         }
@@ -336,45 +428,75 @@ fn handle_event(inner: &Inner, ev: Event) -> bool {
     }
 }
 
-/// Admit at most one job: pop it from the fair queue, obtain its graph
-/// (template checkout or fresh build + `prepare` — done on the
-/// dispatcher thread, outside every lock, so client `submit()` calls
-/// never block on a build), and hand it to the pool following the
-/// submit → `start()` → `mark_ready()` contract. Returns whether a job
-/// was popped.
-fn admit_one(inner: &Inner, pool: &WorkerPool) -> bool {
-    let next = {
+/// One admission sweep: pop the next job in fair order and — when
+/// batching is on — fuse up to `batch_max - 1` further jobs *iff* each
+/// is both the next pick of the fair queue and carries the same
+/// submission (template + reuse mode) as the batch head, so fusion can
+/// never reorder admissions. The whole batch's graphs are then obtained
+/// in one [`Registry::checkout_many`] round (template checkout or fresh
+/// build + `prepare` — done on the dispatcher thread, outside every
+/// lock, so client `submit()` calls never block on a build) and
+/// activated on the pool in one [`WorkerPool::activate_batch`] sweep.
+///
+/// The sweep's cost up to activation (fair-queue pop, checkout,
+/// job construction) divided by the batch size becomes each member's
+/// amortized [`JobReport::dispatch_ns`]. Returns whether any job was
+/// popped.
+fn admit_sweep(inner: &Inner, pool: &WorkerPool) -> bool {
+    let t_sweep = Instant::now();
+    let mut members: Vec<(TenantId, QueuedJob)> = Vec::new();
+    {
         let mut st = inner.state.lock().unwrap();
-        st.admission.try_admit()
-    };
-    let Some((tenant, qjob)) = next else { return false };
-    let queue_ns = qjob.enqueued.elapsed().as_nanos() as u64;
-    let name = qjob.spec.submission.template_name().to_string();
-    let reuse = qjob.spec.submission.reuses();
-    let t_setup = Instant::now();
-    match inner.registry.checkout(&name, reuse) {
+        let Some(first) = st.admission.try_admit() else { return false };
+        let head = first.1.spec.submission.clone();
+        members.push(first);
+        while members.len() < inner.batch_max {
+            match st.admission.try_admit_if(|q| q.spec.submission == head) {
+                Some(m) => members.push(m),
+                None => break,
+            }
+        }
+    }
+    let k = members.len();
+    // Queue wait ends at admission: stamp it *before* the checkout so a
+    // slow template build lands in setup_ns alone, not double-counted
+    // into every member's queue_ns as well.
+    let queue_ns: Vec<u64> = members
+        .iter()
+        .map(|(_, q)| q.enqueued.elapsed().as_nanos() as u64)
+        .collect();
+    let name = members[0].1.spec.submission.template_name().to_string();
+    let reuse = members[0].1.spec.submission.reuses();
+    match inner.registry.checkout_many(&name, reuse, k) {
         Err(msg) => {
-            inner.stats.record_failure(tenant);
-            // Slot release before the terminal status, as in
-            // `handle_event` (no spurious TenantAtCapacity for a
-            // client reacting to the failure).
-            inner.state.lock().unwrap().admission.finish(tenant);
-            inner.set_status(qjob.id, JobStatus::Failed(msg));
+            for (tenant, qjob) in members {
+                inner.stats.record_failure(tenant);
+                // Slot release before the terminal status, as in
+                // `handle_event` (no spurious TenantAtCapacity for a
+                // client reacting to the failure).
+                inner.state.lock().unwrap().admission.finish(tenant);
+                inner.set_status(qjob.id, JobStatus::Failed(msg.clone()));
+            }
             inner.job_cv.notify_all();
         }
-        Ok((g, reused)) => {
-            let setup_ns = t_setup.elapsed().as_nanos() as u64;
-            let job = ActiveJob::new(qjob.id, tenant, g, reused, setup_ns, queue_ns);
-            inner.set_status(qjob.id, JobStatus::Running);
-            pool.submit(Arc::clone(&job));
-            if let Err(e) = job.sched.start() {
-                // Cannot happen for a prepared template instance, but
-                // keep the job's lifecycle sound: the workers will
-                // finalize it (waiting == 0) and report the failure.
-                eprintln!("job {} failed to start: {e}", job.id);
-                job.failed.store(true, Ordering::Release);
+        Ok(graphs) => {
+            let mut jobs = Vec::with_capacity(k);
+            // Stamp the amortized dispatch share before activation, so
+            // even a job that finishes instantly reports it. Setup cost
+            // stays *per member* (a pooled pop vs its own build time —
+            // see `Registry::checkout_many`), so a mixed batch cannot
+            // blend the reuse-vs-build setup statistics.
+            let dispatch_ns = t_sweep.elapsed().as_nanos() as u64 / k as u64;
+            for (i, ((tenant, qjob), (g, reused, setup_ns))) in
+                members.into_iter().zip(graphs).enumerate()
+            {
+                let job = ActiveJob::new(
+                    qjob.id, tenant, g, reused, setup_ns, queue_ns[i], dispatch_ns, k,
+                );
+                inner.set_status(qjob.id, JobStatus::Running);
+                jobs.push(job);
             }
-            job.mark_ready();
+            pool.activate_batch(jobs);
         }
     }
     true
@@ -399,6 +521,8 @@ fn finish_job(inner: &Inner, job: &Arc<ActiveJob>) {
         queue_ns: job.queue_ns,
         setup_ns: job.setup_ns,
         service_ns,
+        dispatch_ns: job.dispatch_ns,
+        batched_with: job.batched_with,
         reused_template: job.reused,
     };
     inner.stats.record(&report);

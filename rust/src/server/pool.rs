@@ -1,35 +1,40 @@
 //! The persistent worker pool: one set of long-lived workers serving
-//! tasks from *all* currently-active jobs, decoupled from any single
-//! `Scheduler::run` call.
+//! tasks from *all* currently-active jobs through the shared sharded
+//! ready-queue layer ([`super::shard`]).
 //!
 //! Where the paper's executor (`coordinator/exec.rs`) spawns workers for
 //! one graph and joins them when it drains, these workers live for the
-//! whole server lifetime and loop over the active-job set: pick a job
-//! (random rotation — cheap, and admission already shaped the set),
-//! `gettask` from it, execute via the shared `exec_task_guarded` path
-//! in `coordinator/exec.rs`, and finalize the job whose last task they
-//! completed. Per-run and per-server
-//! execution therefore share one code path; only worker *lifetime* and
-//! job multiplexing differ.
+//! whole server lifetime. Earlier revisions multiplexed jobs by
+//! scanning the active-job list and probing each job's *private*
+//! queues; now activation installs a per-job
+//! [`ReadySink`](crate::coordinator::ReadySink) so every job announces
+//! ready tasks straight into the server-owned [`ShardPool`], and a
+//! worker's whole serving loop is: probe the shards once
+//! ([`ShardPool::acquire`] — home shard, then steal), execute via the
+//! shared `exec_task_guarded` path in `coordinator/exec.rs`, complete,
+//! and finalize the job whose last task it completed. One probe covers
+//! every active job; per-run and per-server execution still share one
+//! task-execution code path.
 //!
-//! [`run_virtual`] is the virtual-time variant: the same multi-job
-//! serving discipline driven as a deterministic discrete-event
-//! simulation (cf. `coordinator/sim.rs`), used by the reproducible
-//! fairness tests.
+//! [`run_virtual`] and [`run_virtual_sharded`] are the virtual-time
+//! variants: the same serving disciplines (per-job queues vs shared
+//! shards) driven as deterministic discrete-event simulations
+//! (cf. `coordinator/sim.rs`), used by the reproducible fairness tests.
 
 use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::exec::exec_task_guarded;
-use crate::coordinator::{CostModel, Scheduler, SimCtx};
+use crate::coordinator::{CostModel, ReadySink, ResId, Scheduler, SimCtx, TaskId};
 use crate::util::rng::Rng;
 
 use super::admission::FairQueue;
 use super::protocol::{JobId, TenantId};
 use super::registry::{ExecFn, JobGraph};
+use super::shard::{route_shard, ShardPool, ShardSink};
 
 /// One admitted job being served by the pool. All counters are owned by
 /// the pool's workers; the server reads them at finalization.
@@ -46,6 +51,12 @@ pub struct ActiveJob {
     pub reused: bool,
     pub setup_ns: u64,
     pub queue_ns: u64,
+    /// Amortized admission-sweep cost for this job (pop + checkout +
+    /// construction, divided by the number of jobs fused into its
+    /// activation batch), ns.
+    pub dispatch_ns: u64,
+    /// Jobs fused into this job's activation batch (1 = unfused).
+    pub batched_with: usize,
     /// When the job was handed to the pool (service-time origin).
     pub started: Instant,
     pub tasks_run: AtomicU64,
@@ -54,16 +65,13 @@ pub struct ActiveJob {
     /// Set when a task function panicked (or the job failed to start).
     pub failed: AtomicBool,
     finalized: AtomicBool,
-    /// Submission order is submit → `start()` → `mark_ready()`; workers
-    /// skip (and never finalize) jobs not yet marked ready. Inserting
-    /// into the active list *before* `start()` guarantees the list
-    /// always names the current owner of a scheduler instance by the
-    /// time its tasks are acquirable — the stale-handle guard in
-    /// `worker_loop` relies on this.
-    ready: AtomicBool,
+    /// The job's `(slot, generation)` tag in the [`ShardPool`], set by
+    /// [`WorkerPool::activate_batch`] before any of its entries exist.
+    tag: AtomicU64,
 }
 
 impl ActiveJob {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: JobId,
         tenant: TenantId,
@@ -71,6 +79,8 @@ impl ActiveJob {
         reused: bool,
         setup_ns: u64,
         queue_ns: u64,
+        dispatch_ns: u64,
+        batched_with: usize,
     ) -> Arc<Self> {
         Arc::new(Self {
             id,
@@ -82,42 +92,37 @@ impl ActiveJob {
             reused,
             setup_ns,
             queue_ns,
+            dispatch_ns,
+            batched_with,
             started: Instant::now(),
             tasks_run: AtomicU64::new(0),
             tasks_stolen: AtomicU64::new(0),
             exec_ns: AtomicU64::new(0),
             failed: AtomicBool::new(false),
             finalized: AtomicBool::new(false),
-            ready: AtomicBool::new(false),
+            tag: AtomicU64::new(0),
         })
     }
 
-    /// Open the job to the workers; call after `start()` succeeded (or
-    /// after setting `failed` when it did not).
-    pub fn mark_ready(&self) {
-        self.ready.store(true, Ordering::Release);
-    }
-
-    fn is_ready(&self) -> bool {
-        self.ready.load(Ordering::Acquire)
+    /// Whether the job has been finalized (reported). Shard scans purge
+    /// entries of finalized jobs instead of executing them.
+    #[inline]
+    pub fn is_finalized(&self) -> bool {
+        self.finalized.load(Ordering::Acquire)
     }
 }
 
-/// Called exactly once per job, from the worker that finalized it.
+/// Called exactly once per job, from whoever finalized it.
 pub type OnFinish = Box<dyn Fn(Arc<ActiveJob>) + Send + Sync>;
 
 struct Shared {
-    jobs: Mutex<Vec<Arc<ActiveJob>>>,
-    /// Bumped on every insert/removal so workers can reuse their
-    /// snapshot of `jobs` instead of cloning it on every acquisition.
-    generation: AtomicU64,
-    cv: Condvar,
+    shards: Arc<ShardPool>,
     shutdown: AtomicBool,
     on_finish: OnFinish,
     seed: u64,
 }
 
-/// Long-lived worker threads multiplexing over active jobs.
+/// Long-lived worker threads drawing from the shared shard pool.
 pub struct WorkerPool {
     shared: Arc<Shared>,
     handles: Vec<JoinHandle<()>>,
@@ -125,12 +130,12 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
+    /// Start `nr_workers` workers over a fresh [`ShardPool`] with one
+    /// shard per worker.
     pub fn start(nr_workers: usize, seed: u64, on_finish: OnFinish) -> Self {
         assert!(nr_workers > 0, "need at least one worker");
         let shared = Arc::new(Shared {
-            jobs: Mutex::new(Vec::new()),
-            generation: AtomicU64::new(0),
-            cv: Condvar::new(),
+            shards: Arc::new(ShardPool::new(nr_workers)),
             shutdown: AtomicBool::new(false),
             on_finish,
             seed,
@@ -151,22 +156,44 @@ impl WorkerPool {
         self.nr_workers
     }
 
-    /// Insert an admitted job. Contract: `submit` first, then `start()`
-    /// its scheduler, then [`ActiveJob::mark_ready`] — workers ignore
-    /// the job until it is ready, and the insert-before-start order
-    /// keeps the active list authoritative for stale-handle resolution.
-    pub fn submit(&self, job: Arc<ActiveJob>) {
-        {
-            let mut jobs = self.shared.jobs.lock().unwrap();
-            jobs.push(job);
+    /// The shared shard layer (observability).
+    pub fn shards(&self) -> &ShardPool {
+        &self.shared.shards
+    }
+
+    /// Activate one admitted job (an unfused batch of one).
+    pub fn activate(&self, job: Arc<ActiveJob>) {
+        self.activate_batch(vec![job]);
+    }
+
+    /// Activate a fused batch of admitted jobs in one sweep: one
+    /// slot-table registration round for all members, then per member a
+    /// sink installation and `start()` — at which point its root tasks
+    /// are live in the shards. Degenerate members (zero-task graphs,
+    /// start failures) are finalized here; nobody else would ever see
+    /// them, since workers only meet jobs through shard entries.
+    pub fn activate_batch(&self, jobs: Vec<Arc<ActiveJob>>) {
+        let tags = self.shared.shards.register_batch(&jobs);
+        for (job, &tag) in jobs.iter().zip(&tags) {
+            job.tag.store(tag, Ordering::Release);
+            job.sched
+                .set_ready_sink(Some(Arc::new(ShardSink::new(&self.shared.shards, tag))));
+            if let Err(e) = job.sched.start() {
+                // Cannot happen for a prepared template instance, but
+                // keep the lifecycle sound: report it as failed.
+                eprintln!("job {} failed to start: {e}", job.id);
+                job.failed.store(true, Ordering::Release);
+            }
+            if job.failed.load(Ordering::Acquire) || job.sched.waiting() <= 0 {
+                try_finalize(&self.shared, job);
+            }
         }
-        self.shared.generation.fetch_add(1, Ordering::AcqRel);
-        self.shared.cv.notify_all();
+        self.shared.shards.notify_all();
     }
 
     /// Number of jobs currently being served (racy snapshot).
     pub fn active_jobs(&self) -> usize {
-        self.shared.jobs.lock().unwrap().len()
+        self.shared.shards.active_jobs()
     }
 
     fn stop(&mut self) {
@@ -174,7 +201,7 @@ impl WorkerPool {
             return;
         }
         self.shared.shutdown.store(true, Ordering::Release);
-        self.shared.cv.notify_all();
+        self.shared.shards.notify_all();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -191,135 +218,74 @@ impl Drop for WorkerPool {
     }
 }
 
+/// Finalize a job exactly once: detach its sink, free its slot (any
+/// leftover shard entries of a failed job turn stale and get purged by
+/// later scans), and report it.
 fn try_finalize(shared: &Shared, job: &Arc<ActiveJob>) {
     if job.finalized.swap(true, Ordering::AcqRel) {
         return;
     }
-    {
-        let mut jobs = shared.jobs.lock().unwrap();
-        jobs.retain(|j| !Arc::ptr_eq(j, job));
-    }
-    shared.generation.fetch_add(1, Ordering::AcqRel);
+    job.sched.set_ready_sink(None);
+    shared.shards.unregister(job.tag.load(Ordering::Acquire));
     (shared.on_finish)(Arc::clone(job));
 }
 
 fn worker_loop(shared: &Shared, wid: usize) {
     let mut rng = Rng::new(shared.seed ^ (wid as u64).wrapping_mul(0x9E3779B97F4A7C15));
-    // Cached snapshot of the active-job list, refreshed only when the
-    // generation counter moves (one Vec clone per membership change,
-    // not per task acquisition).
-    let mut jobs: Vec<Arc<ActiveJob>> = Vec::new();
-    const STALE: u64 = u64::MAX;
-    let mut seen_gen: u64 = STALE;
     let mut dry_scans: u32 = 0;
     loop {
         if shared.shutdown.load(Ordering::Acquire) {
             return;
         }
-        let gen = shared.generation.load(Ordering::Acquire);
-        if gen != seen_gen {
-            jobs = shared.jobs.lock().unwrap().clone();
-            seen_gen = gen;
-        }
-        if jobs.is_empty() {
-            let guard = shared.jobs.lock().unwrap();
-            if guard.is_empty() && !shared.shutdown.load(Ordering::Acquire) {
-                // Timeout bounds shutdown latency; submits notify.
-                let _ = shared
-                    .cv
-                    .wait_timeout(guard, Duration::from_millis(5))
-                    .unwrap();
-            }
-            seen_gen = STALE;
+        if shared.shards.queued_hint() <= 0 {
+            // Nothing announced anywhere: park until a push (or the
+            // timeout backstop) wakes us.
+            shared.shards.park(Duration::from_millis(5));
             continue;
         }
-        let n = jobs.len();
-        let start = if n > 1 { rng.index(n) } else { 0 };
-        let mut ran = false;
-        for k in 0..n {
-            let job = &jobs[(start + k) % n];
-            if !job.is_ready() || job.finalized.load(Ordering::Acquire) {
-                continue;
-            }
-            if job.sched.waiting() <= 0 {
-                // All tasks done but nobody finalized it yet (possible
-                // when the last completion raced with job turnover) —
-                // or a zero-task graph: finalize from the scan.
-                try_finalize(shared, job);
-                continue;
-            }
-            if job.sched.queued_hint() == 0 {
-                continue;
-            }
-            let qid = wid % job.sched.nr_queues();
-            if let Some((tid, stolen)) = job.sched.gettask(qid, &mut rng) {
-                ran = true;
-                // Stale-handle guard: this snapshot entry may belong to
-                // a *previous* job of a reused scheduler instance. If
-                // the job finalized (checked after gettask — finalize →
-                // checkin → start → enqueue → gettask is a happens-
-                // before chain through the queue lock), the acquired
-                // task belongs to the instance's current owner in the
-                // authoritative list; account everything there.
-                let owner: Arc<ActiveJob> = if job.finalized.load(Ordering::Acquire) {
-                    shared
-                        .jobs
-                        .lock()
-                        .unwrap()
-                        .iter()
-                        .find(|j| Arc::ptr_eq(&j.sched, &job.sched))
-                        .map(Arc::clone)
-                        // No current owner: a leftover task of a failed,
-                        // already-reported job — account to it; nothing
-                        // reads the counters again.
-                        .unwrap_or_else(|| Arc::clone(job))
-                } else {
-                    Arc::clone(job)
-                };
+        match shared.shards.acquire(wid, &mut rng) {
+            Some(a) => {
+                dry_scans = 0;
+                let job = &a.job;
                 let (exec_ns, panicked) =
-                    exec_task_guarded(&owner.sched, tid, owner.exec.as_ref());
+                    exec_task_guarded(&job.sched, a.tid, job.exec.as_ref());
                 // All per-job accounting lands *before* complete(): the
                 // completion may let another worker finalize the job,
                 // and the report must already include this task.
-                owner.tasks_run.fetch_add(1, Ordering::Relaxed);
-                if stolen {
-                    owner.tasks_stolen.fetch_add(1, Ordering::Relaxed);
+                job.tasks_run.fetch_add(1, Ordering::Relaxed);
+                if a.stolen {
+                    job.tasks_stolen.fetch_add(1, Ordering::Relaxed);
                 }
-                owner.exec_ns.fetch_add(exec_ns, Ordering::Relaxed);
+                job.exec_ns.fetch_add(exec_ns, Ordering::Relaxed);
                 if panicked {
-                    owner.failed.store(true, Ordering::Release);
+                    job.failed.store(true, Ordering::Release);
                 }
-                owner.sched.complete(tid);
-                if panicked || owner.sched.waiting() <= 0 {
-                    try_finalize(shared, &owner);
+                job.sched.complete(a.tid);
+                if panicked || job.sched.waiting() <= 0 {
+                    try_finalize(shared, job);
                 }
-                // Membership changes bump `generation`, so the cached
-                // snapshot refreshes automatically next iteration.
-                break;
             }
-        }
-        if ran {
-            dry_scans = 0;
-        } else {
-            // Active jobs exist but nothing was ready: let task holders
-            // progress (single-core testbed); after many dry scans back
-            // off to a short sleep so idle workers stop burning a core
-            // while one long task runs.
-            dry_scans += 1;
-            if dry_scans >= 256 {
-                std::thread::sleep(Duration::from_micros(200));
-            } else {
-                std::thread::yield_now();
+            None => {
+                // Entries exist but all were busy (or got purged): let
+                // the task holders progress (single-core testbed); after
+                // many dry scans back off to a short sleep so idle
+                // workers stop burning a core while one long task runs.
+                dry_scans += 1;
+                if dry_scans >= 256 {
+                    std::thread::sleep(Duration::from_micros(200));
+                } else {
+                    std::thread::yield_now();
+                }
             }
         }
     }
 }
 
 // ----------------------------------------------------------------------
-// Virtual-time pool
+// Virtual-time pools
 // ----------------------------------------------------------------------
 
-/// A job for the virtual-time pool: a prepared scheduler arriving at a
+/// A job for the virtual-time pools: a prepared scheduler arriving at a
 /// virtual instant. (No execution function — durations come from the
 /// [`CostModel`], exactly like `coordinator/sim.rs`.)
 pub struct VirtualJob {
@@ -356,8 +322,10 @@ const EV_DONE: u8 = 1;
 
 /// Serve `jobs` on `nr_cores` virtual cores with at most `max_inflight`
 /// jobs active, admission ordered by the weighted-fair queue
-/// ([`FairQueue`]) under `weights`. Deterministic for a given input +
-/// seed; returns one report per job (submission order).
+/// ([`FairQueue`]) under `weights`. Each job keeps its own private
+/// queues (the pre-sharding discipline — kept as the fairness baseline
+/// the sharded variant is compared against). Deterministic for a given
+/// input + seed; returns one report per job (submission order).
 pub fn run_virtual<M: CostModel>(
     jobs: Vec<VirtualJob>,
     weights: &[(TenantId, u64)],
@@ -400,8 +368,6 @@ pub fn run_virtual<M: CostModel>(
     let mut now = 0u64;
 
     // Admit as many queued jobs as slots allow at virtual time `now`.
-    // Defined as a macro-free helper via closure-over-state is painful in
-    // rust; use a small fn with explicit state instead.
     fn admit(
         admission: &mut FairQueue<usize>,
         jobs: &[VirtualJob],
@@ -494,6 +460,216 @@ pub fn run_virtual<M: CostModel>(
     reports
 }
 
+/// One shard of the virtual-time sharded pool: ready entries as
+/// `(key, job index, task)` triples.
+type VShard = Vec<(i64, usize, TaskId)>;
+
+/// The virtual jobs' [`ReadySink`]: announces ready tasks into the
+/// shared shard vectors using the same [`route_shard`] rule as the
+/// threaded pool.
+struct VirtualSink {
+    shards: Arc<Mutex<Vec<VShard>>>,
+    job: usize,
+}
+
+impl ReadySink for VirtualSink {
+    fn ready(&self, tid: TaskId, key: i64, route: Option<ResId>) {
+        let mut shards = self.shards.lock().unwrap();
+        let nr = shards.len();
+        shards[route_shard(self.job as u32, route, nr)].push((key, self.job, tid));
+    }
+}
+
+/// [`run_virtual`] with the *sharded* serving discipline: all admitted
+/// jobs announce ready tasks into `nr_cores` shared shards (via the
+/// same [`ReadySink`] + [`route_shard`] plumbing as the threaded pool),
+/// and each idle core probes its home shard then steals — one probe
+/// across all jobs, no per-job queue iteration. Admission, weights, and
+/// the in-flight bound are identical to [`run_virtual`], so fairness
+/// results are directly comparable between the two disciplines.
+/// Deterministic for a given input + seed.
+pub fn run_virtual_sharded<M: CostModel>(
+    jobs: Vec<VirtualJob>,
+    weights: &[(TenantId, u64)],
+    nr_cores: usize,
+    max_inflight: usize,
+    seed: u64,
+    model: &M,
+) -> Vec<VirtualReport> {
+    assert!(nr_cores > 0);
+    let mut admission: FairQueue<usize> = FairQueue::new(max_inflight);
+    for &(t, w) in weights {
+        admission.set_weight(t, w);
+    }
+    let mut rng = Rng::new(seed);
+    let shards: Arc<Mutex<Vec<VShard>>> =
+        Arc::new(Mutex::new((0..nr_cores).map(|_| Vec::new()).collect()));
+    let mut events: BinaryHeap<std::cmp::Reverse<Event>> = BinaryHeap::new();
+    for (j, job) in jobs.iter().enumerate() {
+        events.push(std::cmp::Reverse(Event {
+            ns: job.arrival_ns,
+            kind: EV_ARRIVAL,
+            core: 0,
+            job: j,
+            tid: 0,
+        }));
+    }
+    let mut busy = vec![false; nr_cores];
+    let mut active_cores = 0usize;
+    let mut inflight = 0usize; // admitted, unfinished jobs
+    let mut reports: Vec<VirtualReport> = jobs
+        .iter()
+        .enumerate()
+        .map(|(j, job)| VirtualReport {
+            job_index: j,
+            tenant: job.tenant,
+            arrival_ns: job.arrival_ns,
+            admitted_ns: u64::MAX,
+            finished_ns: u64::MAX,
+            tasks_run: 0,
+        })
+        .collect();
+    let mut now = 0u64;
+
+    // Admit as many queued jobs as slots allow: rewind, install the
+    // shard sink, start — after which the job's roots sit in the shards.
+    fn admit(
+        admission: &mut FairQueue<usize>,
+        jobs: &[VirtualJob],
+        shards: &Arc<Mutex<Vec<VShard>>>,
+        inflight: &mut usize,
+        reports: &mut [VirtualReport],
+        now: u64,
+    ) {
+        while let Some((_tenant, j)) = admission.try_admit() {
+            let sched = &jobs[j].sched;
+            sched.reset_run().expect("virtual job must be prepared");
+            sched.set_ready_sink(Some(Arc::new(VirtualSink {
+                shards: Arc::clone(shards),
+                job: j,
+            })));
+            sched.start().expect("virtual job must be prepared");
+            reports[j].admitted_ns = now;
+            if sched.waiting() == 0 {
+                // Degenerate zero-task graph: completes instantly.
+                sched.set_ready_sink(None);
+                reports[j].finished_ns = now;
+                admission.finish(jobs[j].tenant);
+                continue;
+            }
+            *inflight += 1;
+        }
+    }
+
+    // Probe one virtual shard: candidates in (highest key, lowest job,
+    // lowest task) order — the tagged-heap order, determinized — first
+    // acquirable one is removed and returned.
+    fn try_vshard(
+        shards: &Arc<Mutex<Vec<VShard>>>,
+        jobs: &[VirtualJob],
+        s: usize,
+    ) -> Option<(usize, TaskId)> {
+        let mut guard = shards.lock().unwrap();
+        let shard = &mut guard[s];
+        let mut order: Vec<usize> = (0..shard.len()).collect();
+        order.sort_unstable_by_key(|&i| {
+            let (key, j, tid) = shard[i];
+            (std::cmp::Reverse(key), j, tid.0)
+        });
+        let mut hit = None;
+        for &i in &order {
+            let (_, j, tid) = shard[i];
+            if jobs[j].sched.try_acquire(tid) {
+                hit = Some((i, j, tid));
+                break;
+            }
+        }
+        hit.map(|(i, j, tid)| {
+            shard.swap_remove(i);
+            (j, tid)
+        })
+    }
+
+    loop {
+        // Dispatch phase: each idle core probes its home shard, then
+        // steals along a random cyclic permutation covering every other
+        // shard — the threaded steal walk, determinized by the seed.
+        if inflight > 0 {
+            for core in 0..nr_cores {
+                if busy[core] {
+                    continue;
+                }
+                let mut acquired = try_vshard(&shards, &jobs, core);
+                let mut stolen = false;
+                if acquired.is_none() && nr_cores > 1 {
+                    for s in rng.coprime_walk(nr_cores) {
+                        if s != core {
+                            if let Some(hit) = try_vshard(&shards, &jobs, s) {
+                                acquired = Some(hit);
+                                stolen = true;
+                                break;
+                            }
+                        }
+                    }
+                }
+                if let Some((j, tid)) = acquired {
+                    let sched = &jobs[j].sched;
+                    let view = sched.task_view(tid);
+                    active_cores += 1;
+                    let ctx = SimCtx { now_ns: now, active_cores, nr_cores };
+                    let get_ns = model.gettask_overhead_ns(view, stolen);
+                    let dur = model.duration_ns(view, &ctx).max(1);
+                    busy[core] = true;
+                    reports[j].tasks_run += 1;
+                    events.push(std::cmp::Reverse(Event {
+                        ns: now + get_ns + dur,
+                        kind: EV_DONE,
+                        core,
+                        job: j,
+                        tid: tid.0,
+                    }));
+                }
+            }
+        }
+        match events.pop() {
+            None => break,
+            Some(std::cmp::Reverse(ev)) => {
+                now = ev.ns;
+                match ev.kind {
+                    EV_ARRIVAL => {
+                        admission.push(jobs[ev.job].tenant, ev.job);
+                        admit(&mut admission, &jobs, &shards, &mut inflight, &mut reports, now);
+                    }
+                    _ => {
+                        busy[ev.core] = false;
+                        active_cores -= 1;
+                        let sched = &jobs[ev.job].sched;
+                        // Dependents flow through the sink back into the
+                        // shared shards (the guard is not held here).
+                        sched.complete(crate::coordinator::TaskId(ev.tid));
+                        if sched.waiting() == 0 {
+                            sched.set_ready_sink(None);
+                            reports[ev.job].finished_ns = now;
+                            inflight -= 1;
+                            admission.finish(jobs[ev.job].tenant);
+                            admit(&mut admission, &jobs, &shards, &mut inflight, &mut reports, now);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    debug_assert!(
+        reports.iter().all(|r| r.finished_ns != u64::MAX),
+        "virtual sharded pool left jobs unfinished"
+    );
+    debug_assert!(
+        shards.lock().unwrap().iter().all(|s| s.is_empty()),
+        "virtual shards left entries behind"
+    );
+    reports
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -553,6 +729,50 @@ mod tests {
     }
 
     #[test]
+    fn virtual_sharded_pool_serves_single_job() {
+        let jobs = vec![chain_job(0, 0, 10, 100)];
+        let reps = run_virtual_sharded(jobs, &[], 2, 2, 1, &UnitCost);
+        assert_eq!(reps.len(), 1);
+        assert_eq!(reps[0].tasks_run, 10);
+        assert!(reps[0].finished_ns >= 1000, "chain of 10x100 is serial");
+    }
+
+    #[test]
+    fn virtual_sharded_pool_is_deterministic() {
+        let mk = || {
+            let jobs: Vec<VirtualJob> = (0..8)
+                .map(|i| chain_job(i % 4, (i as u64) * 10, 6, 30))
+                .collect();
+            run_virtual_sharded(
+                jobs,
+                &[(TenantId(0), 1), (TenantId(1), 1), (TenantId(2), 1), (TenantId(3), 1)],
+                4,
+                4,
+                42,
+                &UnitCost,
+            )
+            .iter()
+            .map(|r| (r.admitted_ns, r.finished_ns, r.tasks_run))
+            .collect::<Vec<_>>()
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn virtual_sharded_matches_task_counts() {
+        // Same workload through both disciplines: identical executed
+        // task totals, all jobs finished under both.
+        let mk_jobs = || -> Vec<VirtualJob> {
+            (0..10).map(|i| chain_job(i % 2, (i as u64) * 5, 7, 40)).collect()
+        };
+        let a = run_virtual(mk_jobs(), &[], 3, 2, 9, &UnitCost);
+        let b = run_virtual_sharded(mk_jobs(), &[], 3, 2, 9, &UnitCost);
+        let total = |r: &[VirtualReport]| r.iter().map(|x| x.tasks_run).sum::<usize>();
+        assert_eq!(total(&a), 70);
+        assert_eq!(total(&b), 70);
+    }
+
+    #[test]
     fn threaded_pool_drains_jobs() {
         use std::sync::mpsc;
         let reg = Registry::new(SchedConfig::new(2), 4);
@@ -568,10 +788,8 @@ mod tests {
         );
         for i in 0..8u64 {
             let (g, reused) = reg.checkout("syn", true).unwrap();
-            let job = ActiveJob::new(JobId(i), TenantId(0), g, reused, 0, 0);
-            pool.submit(Arc::clone(&job));
-            job.sched.start().unwrap();
-            job.mark_ready();
+            let job = ActiveJob::new(JobId(i), TenantId(0), g, reused, 0, 0, 0, 1);
+            pool.activate(Arc::clone(&job));
             // Serialize via completion so instances can be reused: wait
             // for this job before submitting the next.
             let done = rx.recv_timeout(Duration::from_secs(30)).expect("job finished");
@@ -589,6 +807,7 @@ mod tests {
         let c = reg.counters("syn").unwrap();
         assert_eq!(c.builds, 1, "all 8 jobs served by one built instance");
         assert_eq!(c.reuses, 7);
+        assert_eq!(pool.active_jobs(), 0);
         pool.shutdown();
     }
 
@@ -606,22 +825,51 @@ mod tests {
                 let _ = tx.lock().unwrap().send(job);
             }),
         );
-        // 4 distinct instances active at once over one pool.
-        for i in 0..4u64 {
-            let (g, _) = reg.checkout("syn", false).unwrap();
-            let job = ActiveJob::new(JobId(i), TenantId(i as u32 % 2), g, false, 0, 0);
-            pool.submit(Arc::clone(&job));
-            job.sched.start().unwrap();
-            job.mark_ready();
-        }
+        // 4 distinct instances active at once over one pool, activated
+        // as one fused batch (a single registration sweep).
+        let batch: Vec<Arc<ActiveJob>> = (0..4u64)
+            .map(|i| {
+                let (g, _) = reg.checkout("syn", false).unwrap();
+                ActiveJob::new(JobId(i), TenantId(i as u32 % 2), g, false, 0, 0, 0, 4)
+            })
+            .collect();
+        pool.activate_batch(batch);
         let mut seen = Vec::new();
         for _ in 0..4 {
             let done = rx.recv_timeout(Duration::from_secs(30)).expect("job finished");
             assert_eq!(done.tasks_run.load(Ordering::Relaxed), 40);
+            assert_eq!(done.batched_with, 4);
             seen.push(done.id.0);
         }
         seen.sort_unstable();
         assert_eq!(seen, vec![0, 1, 2, 3]);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn threaded_pool_finalizes_zero_task_graph() {
+        use std::sync::mpsc;
+        let (tx, rx) = mpsc::channel::<Arc<ActiveJob>>();
+        let tx = Mutex::new(tx);
+        let pool = WorkerPool::start(
+            1,
+            3,
+            Box::new(move |job| {
+                let _ = tx.lock().unwrap().send(job);
+            }),
+        );
+        // A graph whose only task is virtual completes during start():
+        // activation itself must finalize it (workers never see it).
+        let mut s = Scheduler::new(SchedConfig::new(1)).unwrap();
+        s.task(0u32).virtual_task().spawn();
+        s.prepare().unwrap();
+        let exec: ExecFn = Arc::new(|_view: crate::coordinator::TaskView<'_>| {});
+        let g = JobGraph { sched: Arc::new(s), exec, template: None, kernels: None };
+        let job = ActiveJob::new(JobId(1), TenantId(0), g, false, 0, 0, 0, 1);
+        pool.activate(job);
+        let done = rx.recv_timeout(Duration::from_secs(10)).expect("finalized");
+        assert_eq!(done.id, JobId(1));
+        assert_eq!(done.tasks_run.load(Ordering::Relaxed), 0);
         pool.shutdown();
     }
 }

@@ -120,11 +120,23 @@ pub struct JobReport {
     pub exec_ns: u64,
     /// Time from submission to admission (queue wait), ns.
     pub queue_ns: u64,
-    /// Time to obtain a runnable graph: build + `prepare()` on a fresh
-    /// build, pool checkout + counter reinit on template reuse, ns.
+    /// Time to obtain this job's runnable graph, attributed per member
+    /// even inside a fused batch: its own build + `prepare()` time on a
+    /// fresh build, or its share of the batch's single pool-pop lock
+    /// round on template reuse, ns.
     pub setup_ns: u64,
     /// Time from `start()` to the last task completion, ns.
     pub service_ns: u64,
+    /// Amortized per-job dispatch overhead: the admission sweep that
+    /// activated this job (fair-queue pop, instance checkout, job
+    /// construction) divided by [`JobReport::batched_with`], ns. This is
+    /// the quantity `repro bench-server --batch` compares fused vs
+    /// unfused.
+    pub dispatch_ns: u64,
+    /// Number of jobs fused into this job's activation batch (1 =
+    /// unfused; up to the server's `batch_max` when consecutive
+    /// fair-order submissions shared a template).
+    pub batched_with: usize,
     /// Whether the graph came from the template instance pool.
     pub reused_template: bool,
 }
@@ -165,6 +177,8 @@ mod tests {
             queue_ns: 10,
             setup_ns: 5,
             service_ns: 20,
+            dispatch_ns: 2,
+            batched_with: 1,
             reused_template: true,
         };
         assert_eq!(rep.total_ns(), 35);

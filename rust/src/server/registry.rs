@@ -12,6 +12,7 @@
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::coordinator::{
     GraphBuilder, KernelRegistry, ResId, SchedConfig, Scheduler, TaskId, TaskView,
@@ -127,25 +128,94 @@ impl Registry {
     /// pool is empty) a fresh one is built. Returns the instance and
     /// whether it was reused.
     pub fn checkout(&self, name: &str, allow_reuse: bool) -> Result<(JobGraph, bool), String> {
+        let (g, reused, _setup_ns) = self
+            .checkout_many(name, allow_reuse, 1)?
+            .pop()
+            .expect("checkout_many(1) yields one instance");
+        Ok((g, reused))
+    }
+
+    /// Obtain `n` runnable instances of `name`, popping pooled idle
+    /// instances under a *single* registry lock round — the
+    /// fused-admission path, amortizing the per-job lock traffic the
+    /// unfused path pays `n` times — and building the remainder outside
+    /// the lock.
+    ///
+    /// Each returned `(instance, reused, setup_ns)` carries its *own*
+    /// setup cost: a pooled pop's share of the single pop lock round, or
+    /// a fresh build's full build + `prepare()` time. Per-instance
+    /// attribution keeps the reuse-vs-build setup statistics honest even
+    /// when a fused batch mixes both kinds.
+    ///
+    /// On a build error the batch fails, but the healthy instances
+    /// already obtained (pooled pops and earlier successful builds) are
+    /// handed back to the pool rather than dropped, and the reuse
+    /// counter is rewound for the returned pops — a failing member must
+    /// not cost the template its warm instances or skew its stats.
+    pub fn checkout_many(
+        &self,
+        name: &str,
+        allow_reuse: bool,
+        n: usize,
+    ) -> Result<Vec<(JobGraph, bool, u64)>, String> {
+        let n = n.max(1);
+        let mut out = Vec::with_capacity(n);
+        let t_pops = Instant::now();
         let build = {
             let mut t = self.templates.lock().unwrap();
             let entry = t
                 .get_mut(name)
                 .ok_or_else(|| format!("unknown template {name:?}"))?;
             if allow_reuse {
-                if let Some(g) = entry.pool.pop() {
-                    entry.reuses += 1;
-                    return Ok((g, true));
+                while out.len() < n {
+                    match entry.pool.pop() {
+                        Some(g) => {
+                            entry.reuses += 1;
+                            out.push((g, true, 0));
+                        }
+                        None => break,
+                    }
                 }
             }
-            entry.builds += 1;
             Arc::clone(&entry.build)
         };
+        let pops = out.len();
+        if pops > 0 {
+            let pop_share = t_pops.elapsed().as_nanos() as u64 / pops as u64;
+            for member in out.iter_mut() {
+                member.2 = pop_share;
+            }
+        }
         // Build outside the lock: graph construction + prepare() can be
         // arbitrarily expensive.
-        let mut g = (build)(&self.config)?;
-        g.template = if allow_reuse { Some(name.to_string()) } else { None };
-        Ok((g, false))
+        while out.len() < n {
+            let t_build = Instant::now();
+            match (build)(&self.config) {
+                Ok(mut g) => {
+                    g.template = if allow_reuse { Some(name.to_string()) } else { None };
+                    let mut t = self.templates.lock().unwrap();
+                    if let Some(entry) = t.get_mut(name) {
+                        entry.builds += 1;
+                    }
+                    out.push((g, false, t_build.elapsed().as_nanos() as u64));
+                }
+                Err(msg) => {
+                    let mut t = self.templates.lock().unwrap();
+                    if let Some(entry) = t.get_mut(name) {
+                        for (g, reused, _setup_ns) in out.drain(..) {
+                            if reused {
+                                entry.reuses = entry.reuses.saturating_sub(1);
+                            }
+                            if g.template.is_some() && entry.pool.len() < self.max_pool {
+                                entry.pool.push(g);
+                            }
+                        }
+                    }
+                    return Err(msg);
+                }
+            }
+        }
+        Ok(out)
     }
 
     /// Return a finished instance: rewind its run state and pool it for
@@ -289,6 +359,61 @@ mod tests {
         let c = r.counters("syn").unwrap();
         assert_eq!(c.builds, 2);
         assert_eq!(c.reuses, 0);
+    }
+
+    #[test]
+    fn checkout_many_mixes_pool_and_builds() {
+        let r = registry();
+        r.register("syn", synthetic_template(30, 3, 13, 0));
+        // Seed the pool with two idle instances.
+        let (g1, _) = r.checkout("syn", true).unwrap();
+        let (g2, _) = r.checkout("syn", true).unwrap();
+        r.checkin(g1);
+        r.checkin(g2);
+        let batch = r.checkout_many("syn", true, 3).unwrap();
+        assert_eq!(batch.len(), 3);
+        let reused = batch.iter().filter(|(_, reused, _)| *reused).count();
+        assert_eq!(reused, 2, "pooled instances drained first");
+        assert!(batch.iter().all(|(g, _, _)| g.template.as_deref() == Some("syn")));
+        let c = r.counters("syn").unwrap();
+        assert_eq!((c.builds, c.reuses), (3, 2));
+    }
+
+    #[test]
+    fn checkout_many_build_error_repools_healthy_instances() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let r = registry();
+        let calls = Arc::new(AtomicUsize::new(0));
+        {
+            let calls = Arc::clone(&calls);
+            let inner = synthetic_template(10, 2, 3, 0);
+            r.register(
+                "flaky",
+                Arc::new(move |config: &SchedConfig| {
+                    if calls.fetch_add(1, Ordering::SeqCst) >= 2 {
+                        return Err("flaky build".into());
+                    }
+                    (inner)(config)
+                }),
+            );
+        }
+        // Two successful builds seed the pool.
+        let (g1, _) = r.checkout("flaky", true).unwrap();
+        let (g2, _) = r.checkout("flaky", true).unwrap();
+        r.checkin(g1);
+        r.checkin(g2);
+        // A batch of 4 pops both, then the third build fails: the pops
+        // must return to the pool and the counters rewind.
+        let err = r.checkout_many("flaky", true, 4).unwrap_err();
+        assert!(err.contains("flaky build"), "{err}");
+        let c = r.counters("flaky").unwrap();
+        assert_eq!(c.pooled, 2, "popped instances returned to the pool on error");
+        assert_eq!(c.reuses, 0, "reuse counter rewound for returned pops");
+        assert_eq!(c.builds, 2, "only successful builds counted");
+        // The template still serves once the pool is warm.
+        let (g3, reused) = r.checkout("flaky", true).unwrap();
+        assert!(reused);
+        r.checkin(g3);
     }
 
     #[test]

@@ -1,0 +1,472 @@
+//! The shared sharded ready-queue layer: one fixed pool of cross-job
+//! shards that *all* active jobs feed, replacing per-job queue ownership
+//! on the server's dispatch path.
+//!
+//! The paper gives every worker its own queue inside a single graph;
+//! the PR-1 server multiplexed many graphs by scanning the active-job
+//! list and probing each job's private queues in turn — per-job memory
+//! and mostly-cold queues dominate when the traffic is many tiny
+//! graphs. Here the queue pool belongs to the *server*: a fixed set of
+//! [`TaggedQueue`] shards (one per worker), into which every active
+//! job's scheduler announces ready tasks through its
+//! [`ReadySink`](crate::coordinator::ReadySink). Each entry carries a
+//! `(slot, generation)` tag, so a worker resolves any entry to its
+//! owning job in O(1) through the slot table and `gettask`/steal become
+//! a single probe across all jobs instead of an iteration over them.
+//! Slot generations follow the wait-free slot-reuse discipline of
+//! Álvarez et al. (arXiv:2105.07902): a reused slot bumps its
+//! generation, so entries left behind by a failed job can never be
+//! mistaken for the slot's next tenant — they are lazily purged during
+//! scans ([`Take::Stale`]).
+//!
+//! **Routing rule.** A ready task lands in shard
+//! `hash(slot, first lock-or-use resource) % nr_shards`. This preserves
+//! the paper's resource-affinity idea — all tasks of one job contending
+//! one resource serialize on one shard, so conflict skips stay local —
+//! while remaining stateless (no owner rewriting across jobs).
+//! Resource-free tasks hash on the slot alone, clustering a job's
+//! independent tasks on its home shard for locality.
+//!
+//! **Steal order.** A worker probes its own shard first, then walks the
+//! others along a random cyclic permutation (random start + coprime
+//! stride), exactly like the paper's §3.4 queue stealing.
+//!
+//! See `ARCHITECTURE.md` §Sharded dispatch for the data-flow diagram.
+
+use std::sync::atomic::{AtomicI64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::time::Duration;
+
+use crate::coordinator::queue::{TaggedQueue, Take};
+use crate::coordinator::{ReadySink, ResId, TaskId};
+use crate::util::rng::Rng;
+
+use super::pool::ActiveJob;
+
+/// Pack a slot index and its generation into one entry tag.
+#[inline]
+fn pack(slot: u32, gen: u32) -> u64 {
+    ((slot as u64) << 32) | gen as u64
+}
+
+#[inline]
+fn unpack(tag: u64) -> (u32, u32) {
+    ((tag >> 32) as u32, tag as u32)
+}
+
+/// The documented `(job, resource)` → shard routing rule: a
+/// Fibonacci-mix of the job's slot with its task's primary (first
+/// lock-or-use) resource id. Stateless and deterministic, so the
+/// virtual-time fairness executor reproduces the threaded pool's
+/// placement exactly.
+#[inline]
+pub fn route_shard(slot: u32, route: Option<ResId>, nr_shards: usize) -> usize {
+    debug_assert!(nr_shards > 0);
+    let r = route.map_or(u64::MAX, |r| r.0 as u64);
+    let mut h = (slot as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    h ^= r.wrapping_mul(0xD1B5_4A32_D192_ED03);
+    h ^= h >> 32;
+    (h % nr_shards as u64) as usize
+}
+
+struct SlotEntry {
+    gen: u32,
+    job: Option<Arc<ActiveJob>>,
+}
+
+struct SlotTable {
+    entries: Vec<SlotEntry>,
+    free: Vec<u32>,
+    active: usize,
+}
+
+/// One task acquired from the shard pool, resolved to its owning job.
+pub struct Acquired {
+    pub job: Arc<ActiveJob>,
+    pub tid: TaskId,
+    pub stolen: bool,
+}
+
+/// The server-owned pool of cross-job ready-queue shards plus the slot
+/// table resolving entry tags to live jobs.
+pub struct ShardPool {
+    shards: Vec<TaggedQueue>,
+    slots: Mutex<SlotTable>,
+    /// Global ready-entry hint (same contract as
+    /// [`Scheduler::queued_hint`](crate::coordinator::Scheduler::queued_hint),
+    /// summed over all shards): lets idle workers skip probing.
+    queued: AtomicI64,
+    /// Workers currently parked on `cv`; pushes only take the wakeup
+    /// mutex when someone is actually sleeping.
+    sleepers: AtomicUsize,
+    idle: Mutex<()>,
+    cv: Condvar,
+}
+
+impl ShardPool {
+    pub fn new(nr_shards: usize) -> Self {
+        assert!(nr_shards > 0, "need at least one shard");
+        Self {
+            shards: (0..nr_shards).map(|_| TaggedQueue::new(64)).collect(),
+            slots: Mutex::new(SlotTable { entries: Vec::new(), free: Vec::new(), active: 0 }),
+            queued: AtomicI64::new(0),
+            sleepers: AtomicUsize::new(0),
+            idle: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn nr_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Ready entries across all shards (hint; see
+    /// [`Scheduler::queued_hint`](crate::coordinator::Scheduler::queued_hint)
+    /// for the exact contract, which holds here shard-pool-wide).
+    #[inline]
+    pub fn queued_hint(&self) -> i64 {
+        self.queued.load(Ordering::SeqCst)
+    }
+
+    /// Jobs currently registered (racy snapshot).
+    pub fn active_jobs(&self) -> usize {
+        self.slots.lock().unwrap().active
+    }
+
+    /// Register a batch of jobs under one slot-table lock round — the
+    /// fused-admission path — returning one tag per job. Each tag's
+    /// generation supersedes whatever previously used its slot.
+    pub fn register_batch(&self, jobs: &[Arc<ActiveJob>]) -> Vec<u64> {
+        let mut t = self.slots.lock().unwrap();
+        jobs.iter()
+            .map(|job| {
+                let slot = match t.free.pop() {
+                    Some(s) => s,
+                    None => {
+                        t.entries.push(SlotEntry { gen: 0, job: None });
+                        (t.entries.len() - 1) as u32
+                    }
+                };
+                let e = &mut t.entries[slot as usize];
+                e.gen = e.gen.wrapping_add(1);
+                e.job = Some(Arc::clone(job));
+                let gen = e.gen;
+                t.active += 1;
+                pack(slot, gen)
+            })
+            .collect()
+    }
+
+    /// Drop a job from the slot table; its remaining shard entries (a
+    /// failed job's leftovers) become [`Take::Stale`] and are purged by
+    /// later scans.
+    pub fn unregister(&self, tag: u64) {
+        let (slot, gen) = unpack(tag);
+        let mut t = self.slots.lock().unwrap();
+        if let Some(e) = t.entries.get_mut(slot as usize) {
+            if e.gen == gen && e.job.is_some() {
+                e.job = None;
+                t.active -= 1;
+                t.free.push(slot);
+            }
+        }
+    }
+
+    /// Resolve a tag to its live job — non-blocking, because it runs
+    /// *under a shard spin-lock*: a worker must never block on the
+    /// slot-table mutex while other workers spin on its shard, so
+    /// contention is reported as `Err` instead of waited out (the scan
+    /// treats the entry as busy and a later probe resolves it).
+    /// `Ok(None)` means the tag's job is gone (stale entry).
+    fn try_resolve(&self, tag: u64) -> Result<Option<Arc<ActiveJob>>, ()> {
+        let (slot, gen) = unpack(tag);
+        match self.slots.try_lock() {
+            Err(_) => Err(()),
+            Ok(t) => Ok(t
+                .entries
+                .get(slot as usize)
+                .filter(|e| e.gen == gen)
+                .and_then(|e| e.job.clone())),
+        }
+    }
+
+    /// Insert a ready task for the job `tag` (called from that job's
+    /// [`ReadySink`](crate::coordinator::ReadySink) on the completion
+    /// hot path), waking a parked worker when one is sleeping.
+    pub fn push(&self, tag: u64, tid: TaskId, key: i64, route: Option<ResId>) {
+        let (slot, _) = unpack(tag);
+        let s = route_shard(slot, route, self.shards.len());
+        self.shards[s].put(key, tag, tid);
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            let _g = self.idle.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+
+    /// Park the calling worker until new entries may have arrived, with
+    /// `timeout` bounding shutdown latency. The SeqCst handshake with
+    /// [`ShardPool::push`] (queued-then-sleepers on the push side,
+    /// sleepers-then-queued here) makes a lost wakeup impossible; the
+    /// timeout is a belt-and-suspenders backstop.
+    pub fn park(&self, timeout: Duration) {
+        self.sleepers.fetch_add(1, Ordering::SeqCst);
+        let g = self.idle.lock().unwrap();
+        if self.queued_hint() <= 0 {
+            let _ = self.cv.wait_timeout(g, timeout).unwrap();
+        }
+        self.sleepers.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Wake every parked worker (batch activation, shutdown).
+    pub fn notify_all(&self) {
+        let _g = self.idle.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    /// One full `gettask` probe across all jobs: the worker's home shard
+    /// first, then the others along a random cyclic permutation (random
+    /// start, stride coprime to the shard count — the paper's §3.4 steal
+    /// order lifted to shards).
+    pub fn acquire(&self, wid: usize, rng: &mut Rng) -> Option<Acquired> {
+        let nq = self.shards.len();
+        let home = wid % nq;
+        if let Some(a) = self.try_shard(home, false) {
+            return Some(a);
+        }
+        if nq > 1 {
+            for k in rng.coprime_walk(nq) {
+                if k != home {
+                    if let Some(a) = self.try_shard(k, true) {
+                        return Some(a);
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Probe one shard: resolve each scanned entry's tag to its job and
+    /// try the task's resource locks via
+    /// [`Scheduler::try_acquire`](crate::coordinator::Scheduler::try_acquire).
+    ///
+    /// A fixed-size per-scan cache (cf. `Queue::get`'s failed-lock
+    /// array, §Perf opt A) keeps resolution to one slot-table probe per
+    /// distinct job per scan with no heap allocation on this hot path;
+    /// scans touching more than 8 distinct jobs simply re-probe.
+    fn try_shard(&self, s: usize, stolen: bool) -> Option<Acquired> {
+        let mut cache_tags = [u64::MAX; 8];
+        let mut cache_jobs: [Option<Arc<ActiveJob>>; 8] = Default::default();
+        let mut cached = 0usize;
+        let mut winner: Option<Arc<ActiveJob>> = None;
+        let mut removed = 0i64;
+        let got = self.shards[s].get(|tag, tid| {
+            let mut job: Option<Arc<ActiveJob>> = None;
+            let mut hit = false;
+            for i in 0..cached {
+                if cache_tags[i] == tag {
+                    job = cache_jobs[i].clone();
+                    hit = true;
+                    break;
+                }
+            }
+            if !hit {
+                match self.try_resolve(tag) {
+                    // Slot table momentarily contended: skip the entry
+                    // rather than blocking under the shard spin-lock.
+                    Err(()) => return Take::Busy,
+                    Ok(j) => {
+                        if cached < cache_tags.len() {
+                            cache_tags[cached] = tag;
+                            cache_jobs[cached] = j.clone();
+                            cached += 1;
+                        }
+                        job = j;
+                    }
+                }
+            }
+            match job {
+                // Dead slot: a failed job's leftover entry.
+                None => {
+                    removed += 1;
+                    Take::Stale
+                }
+                Some(job) => {
+                    if job.is_finalized() {
+                        // Reported (failed) but not yet unregistered, or
+                        // racing with unregistration: same fate.
+                        removed += 1;
+                        Take::Stale
+                    } else if job.sched.try_acquire(tid) {
+                        removed += 1;
+                        winner = Some(job);
+                        Take::Taken
+                    } else {
+                        Take::Busy
+                    }
+                }
+            }
+        });
+        if removed > 0 {
+            self.queued.fetch_sub(removed, Ordering::SeqCst);
+        }
+        let (_tag, tid) = got?;
+        Some(Acquired { job: winner?, tid, stolen })
+    }
+
+    /// Aggregated shard statistics `(gets, misses, scanned, busy,
+    /// spins, purged)` — observability for `repro serve`.
+    pub fn stats(&self) -> (u64, u64, u64, u64, u64, u64) {
+        let mut acc = (0, 0, 0, 0, 0, 0);
+        for q in &self.shards {
+            let (gets, misses, scanned, busy, spins) = q.stats.snapshot();
+            acc.0 += gets;
+            acc.1 += misses;
+            acc.2 += scanned;
+            acc.3 += busy;
+            acc.4 += spins;
+            acc.5 += q.stats.purged.load(Ordering::Relaxed);
+        }
+        acc
+    }
+}
+
+/// The per-job [`ReadySink`]: installed on a job's scheduler for the
+/// duration of its activation, it forwards every ready announcement into
+/// the shared shard pool tagged with the job's slot.
+///
+/// Holds the pool weakly: the scheduler owns the sink and the pool's
+/// slot table owns the job (which owns the scheduler), so a strong
+/// pool handle here would close a reference cycle and leak any job
+/// still active at shutdown. If the pool is gone the announcement is
+/// dropped — the workers that would have served it are gone too.
+pub struct ShardSink {
+    pool: Weak<ShardPool>,
+    tag: u64,
+}
+
+impl ShardSink {
+    pub fn new(pool: &Arc<ShardPool>, tag: u64) -> Self {
+        Self { pool: Arc::downgrade(pool), tag }
+    }
+}
+
+impl ReadySink for ShardSink {
+    fn ready(&self, tid: TaskId, key: i64, route: Option<ResId>) {
+        if let Some(pool) = self.pool.upgrade() {
+            pool.push(self.tag, tid, key, route);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{GraphBuilder, SchedConfig, Scheduler};
+    use crate::server::protocol::{JobId, TenantId};
+    use crate::server::registry::{synthetic_template, JobGraph, Registry};
+
+    fn active_job(id: u64, n_tasks: usize) -> Arc<ActiveJob> {
+        let reg = Registry::new(SchedConfig::new(2), 2);
+        reg.register("syn", synthetic_template(n_tasks, 2, id, 0));
+        let (g, _) = reg.checkout("syn", false).unwrap();
+        ActiveJob::new(JobId(id), TenantId(0), g, false, 0, 0, 0, 1)
+    }
+
+    #[test]
+    fn register_resolve_unregister_roundtrip() {
+        let p = ShardPool::new(2);
+        let a = active_job(1, 10);
+        let b = active_job(2, 10);
+        let tags = p.register_batch(&[Arc::clone(&a), Arc::clone(&b)]);
+        assert_eq!(tags.len(), 2);
+        assert_eq!(p.active_jobs(), 2);
+        assert!(Arc::ptr_eq(&p.try_resolve(tags[0]).unwrap().unwrap(), &a));
+        assert!(Arc::ptr_eq(&p.try_resolve(tags[1]).unwrap().unwrap(), &b));
+        p.unregister(tags[0]);
+        assert!(p.try_resolve(tags[0]).unwrap().is_none());
+        assert_eq!(p.active_jobs(), 1);
+        // Double-unregister is a no-op.
+        p.unregister(tags[0]);
+        assert_eq!(p.active_jobs(), 1);
+    }
+
+    #[test]
+    fn slot_reuse_bumps_generation() {
+        let p = ShardPool::new(1);
+        let a = active_job(1, 5);
+        let t1 = p.register_batch(&[Arc::clone(&a)])[0];
+        p.unregister(t1);
+        let b = active_job(2, 5);
+        let t2 = p.register_batch(&[Arc::clone(&b)])[0];
+        // Same slot, different generation: the stale tag must not
+        // resolve to the slot's new tenant.
+        assert_eq!(t1 >> 32, t2 >> 32, "slot is reused");
+        assert_ne!(t1, t2, "generation advanced");
+        assert!(p.try_resolve(t1).unwrap().is_none());
+        assert!(Arc::ptr_eq(&p.try_resolve(t2).unwrap().unwrap(), &b));
+    }
+
+    #[test]
+    fn stale_entries_are_purged_on_acquire() {
+        let p = ShardPool::new(1);
+        let a = active_job(1, 5);
+        let tag = p.register_batch(&[Arc::clone(&a)])[0];
+        p.push(tag, crate::coordinator::TaskId(0), 1, None);
+        p.push(tag, crate::coordinator::TaskId(1), 2, None);
+        assert_eq!(p.queued_hint(), 2);
+        p.unregister(tag);
+        let mut rng = Rng::new(0);
+        assert!(p.acquire(0, &mut rng).is_none());
+        assert_eq!(p.queued_hint(), 0, "purge restores the hint");
+    }
+
+    #[test]
+    fn acquire_runs_a_real_job_to_completion() {
+        let mut s = Scheduler::new(SchedConfig::new(2)).unwrap();
+        let t0 = s.task(0u32).cost(1).spawn();
+        s.task(0u32).cost(1).after([t0]).spawn();
+        s.prepare().unwrap();
+        let exec: crate::server::registry::ExecFn =
+            Arc::new(|_view: crate::coordinator::TaskView<'_>| {});
+        let g = JobGraph { sched: Arc::new(s), exec, template: None, kernels: None };
+        let job = ActiveJob::new(JobId(7), TenantId(0), g, false, 0, 0, 0, 1);
+        let pool = Arc::new(ShardPool::new(2));
+        let tag = pool.register_batch(&[Arc::clone(&job)])[0];
+        job.sched
+            .set_ready_sink(Some(Arc::new(ShardSink::new(&pool, tag))));
+        job.sched.start().unwrap();
+        assert_eq!(pool.queued_hint(), 1, "root announced into a shard");
+        let mut rng = Rng::new(3);
+        let mut done = 0usize;
+        while job.sched.waiting() > 0 {
+            if let Some(a) = pool.acquire(done % 2, &mut rng) {
+                assert!(Arc::ptr_eq(&a.job, &job));
+                a.job.sched.complete(a.tid);
+                done += 1;
+            }
+        }
+        assert_eq!(done, 2, "dependency chain flowed through the shards");
+        assert_eq!(pool.queued_hint(), 0);
+        job.sched.set_ready_sink(None);
+        pool.unregister(tag);
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_in_range() {
+        for nr in [1usize, 2, 3, 8] {
+            for slot in 0..16u32 {
+                for rid in [None, Some(ResId(0)), Some(ResId(5))] {
+                    let a = route_shard(slot, rid, nr);
+                    let b = route_shard(slot, rid, nr);
+                    assert_eq!(a, b);
+                    assert!(a < nr);
+                }
+            }
+        }
+        // Distinct resources of one job generally spread across shards.
+        let hits: std::collections::BTreeSet<usize> =
+            (0..64u32).map(|r| route_shard(1, Some(ResId(r)), 8)).collect();
+        assert!(hits.len() > 1, "routing must not collapse to one shard");
+    }
+}

@@ -53,6 +53,9 @@ struct TenantAcc {
     total_ns: Samples,
     service_ns: Samples,
     queue_ns: Samples,
+    dispatch_ns: Samples,
+    /// Sum over completed jobs of `batched_with` (fused batch sizes).
+    batched_with: u64,
 }
 
 /// Aggregated view of one tenant.
@@ -75,6 +78,12 @@ pub struct TenantSummary {
     pub p90_total_ns: f64,
     pub mean_service_ns: f64,
     pub mean_queue_ns: f64,
+    /// Mean amortized per-job dispatch overhead (admission sweep /
+    /// batch size), ns — the fused-vs-unfused comparison quantity.
+    pub mean_dispatch_ns: f64,
+    /// Mean activation-batch size over completed jobs (1.0 = never
+    /// fused).
+    pub mean_batched_with: f64,
 }
 
 /// Snapshot of the whole server.
@@ -139,7 +148,8 @@ impl StatsSnapshot {
                  \"tasks_run\": {}, \"tasks_stolen\": {}, \"reused\": {}, \"built\": {}, \
                  \"mean_setup_reuse_ns\": {:.1}, \"mean_setup_build_ns\": {:.1}, \
                  \"p50_total_ns\": {:.1}, \"p90_total_ns\": {:.1}, \
-                 \"mean_service_ns\": {:.1}, \"mean_queue_ns\": {:.1}}}{}",
+                 \"mean_service_ns\": {:.1}, \"mean_queue_ns\": {:.1}, \
+                 \"mean_dispatch_ns\": {:.1}, \"mean_batched_with\": {:.2}}}{}",
                 s.tenant.0,
                 s.completed,
                 s.failed,
@@ -153,6 +163,8 @@ impl StatsSnapshot {
                 s.p90_total_ns,
                 s.mean_service_ns,
                 s.mean_queue_ns,
+                s.mean_dispatch_ns,
+                s.mean_batched_with,
                 if i + 1 == self.tenants.len() { "\n" } else { ",\n" }
             ));
         }
@@ -194,6 +206,8 @@ impl ServerStats {
         acc.total_ns.push(r.total_ns() as f64);
         acc.service_ns.push(r.service_ns as f64);
         acc.queue_ns.push(r.queue_ns as f64);
+        acc.dispatch_ns.push(r.dispatch_ns as f64);
+        acc.batched_with += r.batched_with.max(1) as u64;
     }
 
     pub fn record_failure(&self, tenant: TenantId) {
@@ -235,6 +249,12 @@ impl ServerStats {
                 p90_total_ns: pct(a.total_ns.as_slice(), 90.0),
                 mean_service_ns: mean(a.service_ns.as_slice()),
                 mean_queue_ns: mean(a.queue_ns.as_slice()),
+                mean_dispatch_ns: mean(a.dispatch_ns.as_slice()),
+                mean_batched_with: if a.completed == 0 {
+                    0.0
+                } else {
+                    a.batched_with as f64 / a.completed as f64
+                },
             })
             .collect();
         StatsSnapshot { uptime_s: self.started.elapsed().as_secs_f64(), tenants }
@@ -256,6 +276,8 @@ mod tests {
             queue_ns: 50,
             setup_ns: setup,
             service_ns: service,
+            dispatch_ns: 40,
+            batched_with: 2,
             reused_template: reused,
         }
     }
@@ -274,6 +296,8 @@ mod tests {
         assert!((t.mean_setup_reuse_ns - 15.0).abs() < 1e-9);
         assert!((t.mean_setup_build_ns - 1000.0).abs() < 1e-9);
         assert_eq!(t.tasks_run, 30);
+        assert!((t.mean_dispatch_ns - 40.0).abs() < 1e-9);
+        assert!((t.mean_batched_with - 2.0).abs() < 1e-9);
     }
 
     #[test]

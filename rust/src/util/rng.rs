@@ -121,6 +121,65 @@ impl Rng {
     pub fn chance(&mut self, p: f64) -> bool {
         self.f64() < p
     }
+
+    /// Visit order of a random cyclic permutation of `0..n`: a random
+    /// start plus a stride coprime to `n`, so every index is yielded
+    /// exactly once in O(1) state and without allocating (§Perf opt C).
+    /// This is the random-order probe of the paper's §3.4 work
+    /// stealing, shared by `Scheduler::gettask`, the server's shard
+    /// pool, and the virtual-time sharded executor — one definition so
+    /// the three walks can never diverge.
+    ///
+    /// `n` must be > 0; callers skip the walk entirely when there is
+    /// only one candidate (`n == 1` would still consume two draws).
+    pub fn coprime_walk(&mut self, n: usize) -> CoprimeWalk {
+        debug_assert!(n > 0);
+        let start = self.index(n);
+        let step = if n > 1 {
+            let mut s = 1 + self.index(n - 1);
+            while gcd(s, n) != 1 {
+                s = 1 + (s % (n - 1));
+            }
+            s
+        } else {
+            1
+        };
+        CoprimeWalk { next: start, step, n, remaining: n }
+    }
+}
+
+/// Iterator over a random cyclic permutation of `0..n`; see
+/// [`Rng::coprime_walk`].
+pub struct CoprimeWalk {
+    next: usize,
+    step: usize,
+    n: usize,
+    remaining: usize,
+}
+
+impl Iterator for CoprimeWalk {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let k = self.next;
+        self.next = (self.next + self.step) % self.n;
+        self.remaining -= 1;
+        Some(k)
+    }
+}
+
+#[inline]
+fn gcd(mut a: usize, mut b: usize) -> usize {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
 }
 
 #[cfg(test)]
@@ -133,6 +192,22 @@ mod tests {
         let mut b = Rng::new(42);
         for _ in 0..100 {
             assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn coprime_walk_visits_everything_once() {
+        let mut rng = Rng::new(7);
+        for n in [1usize, 2, 3, 4, 6, 7, 12, 64] {
+            for _ in 0..8 {
+                let mut seen = vec![false; n];
+                for k in rng.coprime_walk(n) {
+                    assert!(k < n);
+                    assert!(!seen[k], "index {k} visited twice for n={n}");
+                    seen[k] = true;
+                }
+                assert!(seen.iter().all(|&s| s), "walk missed an index for n={n}");
+            }
         }
     }
 

@@ -329,3 +329,65 @@ fn rerun_same_scheduler_is_stable() {
     .unwrap();
     assert_eq!(count.load(Ordering::Relaxed) as usize, spec.n_tasks);
 }
+
+/// The documented `queued_hint` consistency contract (see
+/// `Scheduler::queued_hint`): under concurrent gettask/complete traffic
+/// the hint never exceeds `ready + acquired` — bounded here by
+/// `n_tasks - observed_completions`, a conservative over-estimate since
+/// the completion counter is bumped only *after* `complete()` returns.
+/// Loom-free: plain threads, many samples, independent tasks so the
+/// bound is exact and the hint can never legitimately go negative.
+#[test]
+fn queued_hint_never_exceeds_ready_plus_acquired() {
+    use std::sync::Arc;
+    let n = 2000usize;
+    let mut s = Scheduler::new(SchedConfig::new(4)).unwrap();
+    for i in 0..n {
+        s.task(0u32).cost(1 + (i % 7) as i64).spawn();
+    }
+    s.prepare().unwrap();
+    s.start().unwrap();
+    let s = Arc::new(s);
+    let completed = Arc::new(AtomicU64::new(0));
+    let workers: Vec<_> = (0..3)
+        .map(|w| {
+            let s = Arc::clone(&s);
+            let completed = Arc::clone(&completed);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(w as u64 + 1);
+                loop {
+                    match s.gettask(w % s.nr_queues(), &mut rng) {
+                        Some((tid, _)) => {
+                            s.complete(tid);
+                            completed.fetch_add(1, Ordering::SeqCst);
+                        }
+                        None => {
+                            if s.waiting() <= 0 {
+                                break;
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    // Sampler: interleave with the workers and check the bound.
+    while s.waiting() > 0 {
+        let done = completed.load(Ordering::SeqCst);
+        let hint = s.queued_hint();
+        let bound = (n as u64 - done) as i64;
+        assert!(
+            hint <= bound,
+            "queued_hint {hint} exceeds ready+acquired bound {bound}"
+        );
+        assert!(hint >= 0, "queued_hint went negative: {hint}");
+        std::thread::yield_now();
+    }
+    for h in workers {
+        h.join().unwrap();
+    }
+    assert_eq!(completed.load(Ordering::SeqCst), n as u64);
+    assert_eq!(s.queued_hint(), 0, "hint is exact at quiescence");
+    assert!(s.resources().all_quiescent());
+}

@@ -1,6 +1,8 @@
 //! Integration tests of the persistent scheduling service: many jobs
-//! from concurrent client threads over one worker pool, template reuse
-//! vs rebuild-per-job, cancellation, and failure isolation.
+//! from concurrent client threads over one worker pool (dispatched
+//! through the shared sharded ready-queues), template reuse vs
+//! rebuild-per-job, batched admission, cancellation, and failure
+//! isolation.
 
 use quicksched::server::{
     panicking_template, qr_template, synthetic_template, JobReport, JobSpec, JobStatus,
@@ -167,5 +169,85 @@ fn reports_have_consistent_accounting() {
     assert!(r.exec_ns > 0, "synthetic tasks spin ~500ns each");
     assert!(r.service_ns > 0);
     assert_eq!(r.total_ns(), r.queue_ns + r.setup_ns + r.service_ns);
+    assert_eq!(r.batched_with, 1, "batching is off by default");
+    server.shutdown();
+}
+
+/// Batched admission: while the dispatcher is pinned inside a slow
+/// template build, a burst of tiny same-template jobs piles up in the
+/// fair queue; the next sweeps must fuse them (batched_with > 1) and
+/// every fused job must still get its own terminal status, published
+/// exactly once (the stats counter counts publications, so a double
+/// publish would show up as completed > jobs).
+#[test]
+fn fused_batches_publish_each_status_exactly_once() {
+    use quicksched::coordinator::SchedConfig;
+    use std::sync::Arc;
+
+    let server = SchedServer::start(
+        ServerConfig::new(2).with_seed(17).with_batch_max(4).with_max_inflight(32),
+    );
+    server.register_template("tiny", synthetic_template(30, 3, 5, 0));
+    {
+        // A rebuild of "slowbuild" holds the dispatcher ~50ms in
+        // checkout — several orders of magnitude longer than the 12
+        // submissions below take — deterministically creating the
+        // backlog the fusing sweep needs.
+        let slow_inner = synthetic_template(10, 2, 9, 0);
+        server.register_template(
+            "slowbuild",
+            Arc::new(move |config: &SchedConfig| {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+                (slow_inner)(config)
+            }),
+        );
+    }
+    let blocker = server.submit(JobSpec::rebuild(TenantId(9), "slowbuild"));
+    let ids: Vec<_> = (0..12)
+        .map(|_| server.submit(JobSpec::template(TenantId(0), "tiny")))
+        .collect();
+    let mut reports: Vec<JobReport> = Vec::new();
+    for id in &ids {
+        match server.wait(*id) {
+            JobStatus::Done(r) => reports.push(r),
+            other => panic!("job {id} ended as {other:?}"),
+        }
+    }
+    assert!(matches!(server.wait(blocker), JobStatus::Done(_)));
+    server.drain();
+
+    assert_eq!(reports.len(), 12);
+    assert!(
+        reports.iter().any(|r| r.batched_with >= 2),
+        "no admission sweep fused anything: {:?}",
+        reports.iter().map(|r| r.batched_with).collect::<Vec<_>>()
+    );
+    assert!(reports.iter().all(|r| r.batched_with <= 4), "batch_max respected");
+    assert!(reports.iter().all(|r| r.tasks_run == 30), "fused jobs run all tasks");
+    // Exactly-once publication: 12 tiny + 1 blocker, each counted once.
+    let snap = server.stats();
+    assert_eq!(snap.completed(), 13);
+    // Waiting again on a settled job returns the same terminal status.
+    assert!(matches!(server.wait(ids[0]), JobStatus::Done(_)));
+    server.shutdown();
+}
+
+/// Sharded dispatch serves many concurrent tiny jobs to completion and
+/// leaves the shard layer empty (no leaked entries, hint back to zero).
+#[test]
+fn shard_layer_drains_clean_after_burst() {
+    let server = SchedServer::start(ServerConfig::new(2).with_seed(23).with_max_inflight(16));
+    server.register_template("tiny", synthetic_template(40, 4, 11, 200));
+    let ids: Vec<_> = (0..24)
+        .map(|i| server.submit(JobSpec::template(TenantId(i % 3), "tiny")))
+        .collect();
+    for id in ids {
+        assert!(matches!(server.wait(id), JobStatus::Done(_)));
+    }
+    server.drain();
+    let (gets, _misses, scanned, _busy, _spins, purged) = server.shard_stats();
+    assert_eq!(gets, 24 * 40, "every task was acquired through a shard");
+    assert!(scanned >= gets);
+    assert_eq!(purged, 0, "healthy jobs leave no stale entries");
     server.shutdown();
 }

@@ -1,12 +1,14 @@
-//! Deterministic admission-fairness tests: the virtual-time pool
-//! (`server::run_virtual`) serves two tenants' job streams over the
-//! weighted-fair admission queue, so completed-job counts per virtual
-//! time window are exactly reproducible.
+//! Deterministic admission-fairness tests: the virtual-time pools
+//! (`server::run_virtual` for the per-job-queue baseline,
+//! `server::run_virtual_sharded` for the shared sharded ready-queue
+//! discipline) serve tenants' job streams over the weighted-fair
+//! admission queue, so completed-job counts per virtual time window are
+//! exactly reproducible.
 
 use std::sync::Arc;
 
 use quicksched::coordinator::{GraphBuilder, SchedConfig, Scheduler, UnitCost};
-use quicksched::server::{run_virtual, TenantId, VirtualJob, VirtualReport};
+use quicksched::server::{run_virtual, run_virtual_sharded, TenantId, VirtualJob, VirtualReport};
 
 /// A job whose graph is a `width`-wide batch of independent tasks over a
 /// short dependency chain — enough structure to exercise the scheduler,
@@ -125,6 +127,117 @@ fn nine_to_one_weights_share_without_starvation() {
     // just at the end: at half-window it has roughly half its share.
     let half = completed_by(&reports, 1, t / 2);
     assert!(half >= 1, "light tenant made no progress in the first half-window");
+}
+
+/// Sharded-mode fairness (the ISSUE-3 acceptance workload): 64 tiny
+/// jobs from 4 equal-weight tenants, all dispatched through the shared
+/// cross-job shards. Within the saturated window every pair of tenants
+/// must stay inside the 10% equal-share envelope that the per-job-queue
+/// baseline (`run_virtual`) is held to.
+#[test]
+fn sharded_mode_keeps_equal_share_within_ten_percent() {
+    let tenants = 4u32;
+    let per_tenant = 16;
+    let mut jobs = Vec::new();
+    for _ in 0..per_tenant {
+        for t in 0..tenants {
+            jobs.push(job(t, 0, 4, 50)); // tiny: 5 tasks of cost 50
+        }
+    }
+    assert_eq!(jobs.len(), 64);
+    let weights: Vec<(TenantId, u64)> = (0..tenants).map(|t| (TenantId(t), 1)).collect();
+    let reports = run_virtual_sharded(jobs, &weights, 4, 4, 0xFA3, &UnitCost);
+    assert_eq!(reports.len(), 64);
+    assert_eq!(
+        reports.iter().map(|r| r.tasks_run).sum::<usize>(),
+        64 * 5,
+        "every task of every tiny job ran through the shards"
+    );
+    // Saturated window: until any tenant has only ~10% of its jobs left.
+    let t_end = {
+        let mut t = u64::MAX;
+        for tenant in 0..tenants {
+            let mut fin: Vec<u64> = reports
+                .iter()
+                .filter(|r| r.tenant == TenantId(tenant))
+                .map(|r| r.finished_ns)
+                .collect();
+            fin.sort_unstable();
+            t = t.min(fin[(per_tenant * 9) / 10 - 1]);
+        }
+        t
+    };
+    let counts: Vec<usize> =
+        (0..tenants).map(|t| completed_by(&reports, t, t_end)).collect();
+    let hi = *counts.iter().max().unwrap() as f64;
+    let lo = *counts.iter().min().unwrap() as f64;
+    assert!(hi >= 10.0, "window too small: {counts:?}");
+    assert!(
+        (hi - lo) / hi <= 0.10,
+        "equal-weight tenants diverged beyond 10% under sharding: {counts:?} by t={t_end}"
+    );
+}
+
+#[test]
+fn sharded_nine_to_one_weights_do_not_starve() {
+    // The weighted split must survive the shared shards too.
+    let per_tenant = 40;
+    let mut jobs = Vec::new();
+    for _ in 0..per_tenant {
+        jobs.push(job(0, 0, 5, 80)); // heavy (weight 9)
+        jobs.push(job(1, 0, 5, 80)); // light (weight 1)
+    }
+    let reports = run_virtual_sharded(
+        jobs,
+        &[(TenantId(0), 9), (TenantId(1), 1)],
+        4,
+        2,
+        0xFA4,
+        &UnitCost,
+    );
+    let mut heavy_fin: Vec<u64> = reports
+        .iter()
+        .filter(|r| r.tenant == TenantId(0))
+        .map(|r| r.finished_ns)
+        .collect();
+    heavy_fin.sort_unstable();
+    let t = heavy_fin[per_tenant - 5];
+    let heavy = completed_by(&reports, 0, t);
+    let light = completed_by(&reports, 1, t);
+    let ratio = heavy as f64 / light.max(1) as f64;
+    assert!(
+        (5.0..=13.0).contains(&ratio),
+        "9:1 weights under sharding gave ratio {ratio:.1} ({heavy} vs {light})"
+    );
+    let first_light = reports
+        .iter()
+        .filter(|r| r.tenant == TenantId(1))
+        .map(|r| r.finished_ns)
+        .min()
+        .unwrap();
+    assert!(
+        first_light <= heavy_fin[14],
+        "light tenant starved under sharding: first completion at {first_light}"
+    );
+}
+
+#[test]
+fn sharded_fairness_runs_are_deterministic() {
+    let mk = || {
+        let jobs: Vec<VirtualJob> = (0..40).map(|i| job(i % 4, 0, 5, 70)).collect();
+        run_virtual_sharded(
+            jobs,
+            &[(TenantId(0), 2), (TenantId(1), 1), (TenantId(2), 1), (TenantId(3), 1)],
+            4,
+            3,
+            7,
+            &UnitCost,
+        )
+        .iter()
+        .map(|r| (r.job_index, r.admitted_ns, r.finished_ns))
+        .collect::<Vec<_>>()
+    };
+    assert_eq!(mk(), mk());
 }
 
 #[test]
