@@ -1,0 +1,248 @@
+//! `RemoteClient` — the blocking client library for the wire protocol
+//! (`server/wire`): connect over TCP or a Unix-domain socket, submit
+//! jobs against server-registered templates, poll/wait/cancel, and read
+//! server statistics.
+//!
+//! The client carries a **per-connection tenant identity** (declared in
+//! the `Hello` handshake) and speaks [`Payload`]-typed argument bytes,
+//! so a parameterized submission reads exactly like the in-process
+//! typed API: `client.submit_args("synthetic", &(400u32, 8u32,
+//! 1000u64))`. Statuses come back as the server's own
+//! [`JobStatus`]/[`crate::server::JobReport`] types, and backpressure
+//! maps onto the same [`SubmitError`] values an in-process
+//! `try_submit` returns — a
+//! caller can switch between local and remote submission without
+//! changing its error handling.
+//!
+//! ```
+//! use quicksched::client::RemoteClient;
+//! use quicksched::server::{
+//!     synthetic_template, JobStatus, ListenAddr, SchedServer, ServerConfig, TenantId,
+//!     WireListener,
+//! };
+//! use std::sync::Arc;
+//!
+//! let server = SchedServer::start(ServerConfig::new(2));
+//! server.register_template("demo", synthetic_template(20, 2, 7, 0));
+//! let server = Arc::new(server);
+//! let listener =
+//!     WireListener::start(Arc::clone(&server), &ListenAddr::parse("127.0.0.1:0")).unwrap();
+//!
+//! let mut client = RemoteClient::connect(listener.local_addr(), TenantId(0)).unwrap();
+//! let job = client.submit("demo").unwrap();
+//! match client.wait(job).unwrap() {
+//!     JobStatus::Done(report) => assert_eq!(report.tasks_run, 20),
+//!     other => panic!("unexpected status {other:?}"),
+//! }
+//! listener.shutdown();
+//! ```
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+
+use crate::coordinator::Payload;
+use crate::server::wire::codec::{self, ErrorCode, ProtocolError, Request, Response, WIRE_VERSION};
+use crate::server::{JobId, JobStatus, SubmitError, TenantId};
+
+/// A remote operation failed.
+#[derive(Debug, thiserror::Error)]
+pub enum RemoteError {
+    /// The server rejected the submission with backpressure — the same
+    /// [`SubmitError`] an in-process `try_submit` returns; retryable.
+    #[error("submission rejected: {0}")]
+    Rejected(SubmitError),
+    /// The byte stream violated the wire protocol.
+    #[error("protocol error: {0}")]
+    Protocol(#[from] ProtocolError),
+    /// The transport failed.
+    #[error("i/o error: {0}")]
+    Io(#[from] io::Error),
+    /// A non-retryable server-side error frame.
+    #[error("server error: {0}")]
+    Server(String),
+    /// The server answered with a message this request cannot accept.
+    #[error("unexpected response: {0}")]
+    Unexpected(String),
+}
+
+/// One connected transport (TCP or Unix-domain).
+enum ClientStream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl ClientStream {
+    fn connect(addr: &str) -> io::Result<Self> {
+        #[cfg(unix)]
+        if let Some(path) = addr.strip_prefix("unix:") {
+            return Ok(ClientStream::Unix(UnixStream::connect(path)?));
+        }
+        let s = TcpStream::connect(addr)?;
+        let _ = s.set_nodelay(true);
+        Ok(ClientStream::Tcp(s))
+    }
+}
+
+impl Read for ClientStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            ClientStream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            ClientStream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for ClientStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            ClientStream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            ClientStream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            ClientStream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            ClientStream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// Blocking client of a [`crate::server::WireListener`]. One
+/// connection, one tenant, strictly request→response — clone-free and
+/// lock-free; use one client per thread for concurrent submission.
+pub struct RemoteClient {
+    stream: ClientStream,
+    tenant: TenantId,
+}
+
+impl RemoteClient {
+    /// Connect to `addr` (`host:port`, or `unix:<path>`) and perform
+    /// the `Hello` handshake as `tenant`.
+    pub fn connect(addr: &str, tenant: TenantId) -> Result<Self, RemoteError> {
+        let stream = ClientStream::connect(addr)?;
+        let mut client = Self { stream, tenant };
+        let hello = Request::Hello { version: WIRE_VERSION, tenant: tenant.0 };
+        match client.roundtrip(&hello)? {
+            Response::HelloOk { version, .. } if version == WIRE_VERSION => Ok(client),
+            Response::HelloOk { version, .. } => Err(RemoteError::Protocol(
+                ProtocolError::VersionMismatch { got: version, want: WIRE_VERSION },
+            )),
+            other => Err(client.fail(other)),
+        }
+    }
+
+    /// The tenant identity this connection submits as.
+    pub fn tenant(&self) -> TenantId {
+        self.tenant
+    }
+
+    /// Submit a job against the named template (template reuse on).
+    pub fn submit(&mut self, template: &str) -> Result<JobId, RemoteError> {
+        self.submit_spec(template, true, &())
+    }
+
+    /// Submit with a fresh graph build (the rebuild-per-job baseline).
+    pub fn submit_rebuild(&mut self, template: &str) -> Result<JobId, RemoteError> {
+        self.submit_spec(template, false, &())
+    }
+
+    /// Submit against a parameterized template with typed arguments —
+    /// any [`Payload`], e.g. `&(400u32, 8u32, 1000u64)`.
+    pub fn submit_args<P: Payload>(
+        &mut self,
+        template: &str,
+        args: &P,
+    ) -> Result<JobId, RemoteError> {
+        self.submit_spec(template, true, args)
+    }
+
+    /// The general submission call: template name, reuse mode, typed
+    /// arguments (use `&()` for argument-free templates).
+    pub fn submit_spec<P: Payload>(
+        &mut self,
+        template: &str,
+        reuse: bool,
+        args: &P,
+    ) -> Result<JobId, RemoteError> {
+        let req = Request::Submit { template: template.into(), reuse, args: args.encode() };
+        match self.roundtrip(&req)? {
+            Response::Submitted { job } => Ok(JobId(job)),
+            other => Err(self.fail(other)),
+        }
+    }
+
+    /// Non-blocking status query; `Ok(None)` for a job id the server
+    /// has never issued.
+    pub fn poll(&mut self, id: JobId) -> Result<Option<JobStatus>, RemoteError> {
+        match self.roundtrip(&Request::Poll { job: id.0 })? {
+            Response::Status { job, status } if job == id.0 => {
+                Ok(status.into_status(id, self.tenant))
+            }
+            other => Err(self.fail(other)),
+        }
+    }
+
+    /// Block until the job reaches a terminal state (the server holds
+    /// the response until then).
+    pub fn wait(&mut self, id: JobId) -> Result<JobStatus, RemoteError> {
+        match self.roundtrip(&Request::Wait { job: id.0 })? {
+            Response::Status { job, status } if job == id.0 => status
+                .into_status(id, self.tenant)
+                .ok_or_else(|| RemoteError::Server(format!("unknown {id}"))),
+            other => Err(self.fail(other)),
+        }
+    }
+
+    /// Cancel a still-queued job; `false` once admitted (or unknown).
+    pub fn cancel(&mut self, id: JobId) -> Result<bool, RemoteError> {
+        match self.roundtrip(&Request::Cancel { job: id.0 })? {
+            Response::Cancelled { job, ok } if job == id.0 => Ok(ok),
+            other => Err(self.fail(other)),
+        }
+    }
+
+    /// The server's stats snapshot, rendered server-side as JSON.
+    pub fn stats_json(&mut self) -> Result<String, RemoteError> {
+        match self.roundtrip(&Request::Stats)? {
+            Response::StatsJson { json } => Ok(json),
+            other => Err(self.fail(other)),
+        }
+    }
+
+    /// Orderly close (the server also tolerates a plain disconnect).
+    pub fn bye(mut self) -> Result<(), RemoteError> {
+        codec::write_frame(&mut self.stream, &Request::Bye.encode())?;
+        Ok(())
+    }
+
+    fn roundtrip(&mut self, req: &Request) -> Result<Response, RemoteError> {
+        codec::write_frame(&mut self.stream, &req.encode())?;
+        let body = codec::read_frame(&mut self.stream)?;
+        Ok(Response::decode(&body)?)
+    }
+
+    /// Map a non-success response onto the client error type;
+    /// backpressure codes become the in-process [`SubmitError`]s.
+    fn fail(&self, resp: Response) -> RemoteError {
+        match resp {
+            Response::Error { code: ErrorCode::TenantAtCapacity, aux, .. } => {
+                RemoteError::Rejected(SubmitError::TenantAtCapacity {
+                    tenant: self.tenant,
+                    cap: aux as usize,
+                })
+            }
+            Response::Error { code: ErrorCode::ServerSaturated, aux, .. } => {
+                RemoteError::Rejected(SubmitError::ServerSaturated { max_queued: aux as usize })
+            }
+            Response::Error { message, .. } => RemoteError::Server(message),
+            other => RemoteError::Unexpected(format!("{other:?}")),
+        }
+    }
+}

@@ -18,7 +18,11 @@
 //!   many tenants through a *shared sharded ready-queue layer*
 //!   ([`server::shard`]), with graph-template reuse, weighted-fair
 //!   admission, and batched (fused) admission for sub-millisecond jobs
-//!   (`repro serve` / `repro bench-server [--batch]`).
+//!   (`repro serve` / `repro bench-server [--batch]`). Its network
+//!   edge is [`server::wire`]: a std-only framed wire protocol served
+//!   over TCP or Unix-domain sockets (`repro serve --listen`).
+//! * [`client`] — `RemoteClient`, the blocking client library for the
+//!   wire protocol (typed payload args, in-process error types).
 //! * [`util`] — RNG, stats, mini bench harness, CLI parsing.
 //!
 //! # Architecture at a glance
@@ -43,3 +47,4 @@ pub mod nbody;
 pub mod baselines;
 pub mod bench;
 pub mod server;
+pub mod client;

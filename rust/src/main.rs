@@ -8,22 +8,28 @@
 //! repro bench <fig8|fig9|fig11|fig12|fig13|overhead|ablation|all> [--quick]
 //! repro info  [--quick]       # E1/E4 graph-statistics tables
 //! repro serve        [--workers 4 --tenants 3 --jobs 30 --tasks 300 --work-ns 2000
-//!                     --batch-max 1]
+//!                     --batch-max 1 --adaptive-batch --max-queued 0]
+//!                    [--listen 127.0.0.1:7193|unix:/tmp/qs.sock --for-secs 0]
 //! repro bench-server [--workers 4 --clients 4 --jobs 64 --tasks 400 --work-ns 1000
 //!                     --json bench_out/BENCH_server.json --quick]
 //!                    [--batch --batch-max 8 --tiny-jobs 256 --tiny-tasks 48
 //!                     --tiny-work-ns 200]   # fused vs unfused dispatch overhead
+//! repro bench-remote [--workers 4 --clients 4 --jobs 128 --tasks 200 --work-ns 1000
+//!                     --connect HOST:PORT --json bench_out/BENCH_remote.json --quick]
+//!                    # open-loop remote submission over loopback (or --connect)
 //! ```
 
 use std::sync::Arc;
 
 use quicksched::bench;
+use quicksched::client::{RemoteClient, RemoteError};
 use quicksched::coordinator::{SchedConfig, Scheduler};
 use quicksched::nbody;
 use quicksched::qr;
 use quicksched::runtime::{Manifest, RuntimeService, XlaNbodyExec, XlaTileBackend};
 use quicksched::server::{
-    qr_template, synthetic_template, JobSpec, SchedServer, ServerConfig, TenantId,
+    nbody_template, qr_template, synthetic_param_template, synthetic_template, JobSpec,
+    JobStatus, ListenAddr, SchedServer, ServerConfig, TenantId, WireListener,
 };
 use quicksched::util::cli::Args;
 
@@ -39,9 +45,10 @@ fn main() {
         "info" => cmd_info(&args),
         "serve" => cmd_serve(&args),
         "bench-server" => cmd_bench_server(&args),
+        "bench-remote" => cmd_bench_remote(&args),
         _ => {
             eprintln!(
-                "usage: repro <qr|bh|sim|bench|info|serve|bench-server> [options]\n\
+                "usage: repro <qr|bh|sim|bench|info|serve|bench-server|bench-remote> [options]\n\
                  see rust/src/main.rs header or README.md"
             );
             std::process::exit(2);
@@ -233,10 +240,14 @@ fn cmd_bench(args: &Args) {
     }
 }
 
-/// `repro serve` — demo of the persistent scheduling service: several
-/// weighted tenants submit synthetic + QR jobs concurrently over one
-/// worker pool (all jobs dispatched through the shared sharded
-/// ready-queues); per-tenant statistics print at the end.
+/// `repro serve` — the persistent scheduling service. Without
+/// `--listen`: an in-process demo where several weighted tenants submit
+/// synthetic + QR jobs concurrently over one worker pool; per-tenant
+/// statistics print at the end. With `--listen <addr>`: the wire
+/// front-end is started on a TCP `host:port` or `unix:<path>` socket
+/// and the process serves `RemoteClient`s (templates: synthetic, qr,
+/// nbody, and the parameterized synthetic-args) until killed, or for
+/// `--for-secs` seconds.
 fn cmd_serve(args: &Args) {
     let workers = args.get_usize("workers", 4);
     let tenants = args.get_usize("tenants", 3).max(1);
@@ -244,12 +255,46 @@ fn cmd_serve(args: &Args) {
     let tasks = args.get_usize("tasks", 300);
     let work_ns = args.get_u64("work-ns", 2_000);
     let batch_max = args.get_usize("batch-max", 1);
+    let max_queued = args.get_usize("max-queued", 0);
 
-    let server = SchedServer::start(ServerConfig::new(workers).with_batch_max(batch_max));
+    let mut config = ServerConfig::new(workers);
+    config = if args.flag("adaptive-batch") {
+        config.with_adaptive_batch(batch_max.max(8))
+    } else {
+        config.with_batch_max(batch_max)
+    };
+    if max_queued > 0 {
+        config = config.with_max_queued(max_queued);
+    }
+    let server = SchedServer::start(config);
     server.register_template("synthetic", synthetic_template(tasks, 8, 0xC0FFEE, work_ns));
     server.register_template("qr", qr_template(6, 16, 0xC0FFEE));
+    server.register_template("nbody", nbody_template(2_000, 60, 160, 0xC0FFEE));
+    server.register_param_template("synthetic-args", synthetic_param_template());
     // Tenant 0 carries double weight to make the fair queue visible.
     server.set_tenant_weight(TenantId(0), 2);
+
+    if let Some(listen) = args.get("listen") {
+        let for_secs = args.get_u64("for-secs", 0);
+        let server = Arc::new(server);
+        let listener = WireListener::start(Arc::clone(&server), &ListenAddr::parse(listen))
+            .expect("binding wire listener");
+        println!(
+            "serve: listening on {} ({workers} workers, templates {:?})",
+            listener.local_addr(),
+            server.registry().names()
+        );
+        if for_secs == 0 {
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_secs(for_secs));
+        listener.shutdown();
+        server.drain();
+        print!("{}", server.stats().render());
+        return;
+    }
 
     println!(
         "serve: {workers} workers, {tenants} tenants x {jobs} jobs \
@@ -262,7 +307,13 @@ fn cmd_serve(args: &Args) {
             scope.spawn(move || {
                 for j in 0..jobs {
                     let name = if j % 4 == 3 { "qr" } else { "synthetic" };
-                    let id = server.submit(JobSpec::template(TenantId(t as u32), name));
+                    // Backpressure (--max-queued) is retried, not fatal.
+                    let id = loop {
+                        match server.try_submit(JobSpec::template(TenantId(t as u32), name)) {
+                            Ok(id) => break id,
+                            Err(_) => std::thread::sleep(std::time::Duration::from_millis(1)),
+                        }
+                    };
                     server.wait(id);
                 }
             });
@@ -487,6 +538,149 @@ fn cmd_bench_server(args: &Args) {
     match std::fs::write(&json_path, json) {
         Ok(()) => println!("wrote {}", json_path.display()),
         Err(e) => eprintln!("could not write {}: {e}", json_path.display()),
+    }
+}
+
+/// `repro bench-remote` — open-loop remote submission: `--clients`
+/// connections each push their share of `--jobs` submissions up front
+/// (backpressure rejections are retried), then wait them all, measuring
+/// wall time, throughput, and client-observed sojourn percentiles. By
+/// default the server + wire listener run in-process on an ephemeral
+/// loopback TCP port; `--connect HOST:PORT` (or `unix:<path>`) targets
+/// an external `repro serve --listen` instead (which must have a
+/// "synthetic" template registered; `--tasks`/`--work-ns` then describe
+/// the *remote* template only in the JSON metadata). Writes
+/// `bench_out/BENCH_remote.json`.
+fn cmd_bench_remote(args: &Args) {
+    let quick = args.flag("quick");
+    let workers = args.get_usize("workers", if quick { 2 } else { 4 });
+    let clients = args.get_usize("clients", 4).max(1);
+    let jobs = args.get_usize("jobs", if quick { 32 } else { 128 }).max(clients);
+    let tasks = args.get_usize("tasks", if quick { 60 } else { 200 });
+    let work_ns = args.get_u64("work-ns", 1_000);
+    let json_path = std::path::PathBuf::from(
+        args.get_str("json", "bench_out/BENCH_remote.json").to_string(),
+    );
+    let connect = args.get("connect").map(|s| s.to_string());
+
+    // The loopback server, unless --connect names an external one.
+    let local = if connect.is_none() {
+        let server = SchedServer::start(
+            ServerConfig::new(workers)
+                .with_adaptive_batch(8)
+                .with_max_inflight(jobs.max(8)),
+        );
+        server.register_template("synthetic", synthetic_template(tasks, 8, 0xBE7C5, work_ns));
+        let server = Arc::new(server);
+        let listener = WireListener::start(Arc::clone(&server), &ListenAddr::parse("127.0.0.1:0"))
+            .expect("binding loopback listener");
+        Some((server, listener))
+    } else {
+        None
+    };
+    let addr: String = match (&connect, &local) {
+        (Some(a), _) => a.clone(),
+        (None, Some((_, l))) => l.local_addr().to_string(),
+        (None, None) => unreachable!(),
+    };
+    let transport = if addr.starts_with("unix:") { "unix" } else { "tcp" };
+    println!(
+        "bench-remote: {jobs} jobs from {clients} remote clients over {transport} {addr} \
+         (open-loop)"
+    );
+
+    let latencies_ms = std::sync::Mutex::new(Vec::<f64>::new());
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let addr = addr.as_str();
+            let latencies_ms = &latencies_ms;
+            let n = jobs / clients + usize::from(c < jobs % clients);
+            scope.spawn(move || {
+                let mut client =
+                    RemoteClient::connect(addr, TenantId(c as u32)).expect("connecting client");
+                let mut pending = Vec::with_capacity(n);
+                for _ in 0..n {
+                    // Open loop with retry: saturation comes back as a
+                    // retryable rejection, never a hang or a drop.
+                    loop {
+                        match client.submit("synthetic") {
+                            Ok(id) => {
+                                pending.push((id, std::time::Instant::now()));
+                                break;
+                            }
+                            Err(RemoteError::Rejected(_)) => {
+                                std::thread::sleep(std::time::Duration::from_millis(2));
+                            }
+                            Err(e) => panic!("remote submit failed: {e}"),
+                        }
+                    }
+                }
+                for (id, t_submit) in pending {
+                    match client.wait(id).expect("remote wait failed") {
+                        JobStatus::Done(_) => latencies_ms
+                            .lock()
+                            .unwrap()
+                            .push(t_submit.elapsed().as_secs_f64() * 1e3),
+                        other => panic!("remote job {id} ended as {other:?}"),
+                    }
+                }
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut lat = latencies_ms.into_inner().unwrap();
+    lat.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+    let pct = |p: f64| -> f64 {
+        if lat.is_empty() {
+            0.0
+        } else {
+            quicksched::util::stats::percentile_sorted(&lat, p)
+        }
+    };
+    let (p50, p90, p99) = (pct(50.0), pct(90.0), pct(99.0));
+    let jobs_per_sec = lat.len() as f64 / wall_s;
+    let server_stats = RemoteClient::connect(&addr, TenantId(u32::MAX))
+        .and_then(|mut c| c.stats_json())
+        .unwrap_or_else(|_| "{}".to_string());
+
+    let mut table = bench::harness::Table::new(&[
+        "transport", "jobs", "clients", "wall_s", "jobs_per_s", "p50_ms", "p90_ms", "p99_ms",
+    ]);
+    table.row(&[
+        transport.into(),
+        lat.len().to_string(),
+        clients.to_string(),
+        format!("{wall_s:.3}"),
+        format!("{jobs_per_sec:.1}"),
+        format!("{p50:.3}"),
+        format!("{p90:.3}"),
+        format!("{p99:.3}"),
+    ]);
+    println!("\n== bench-remote ==\n{}", table.render());
+
+    if let Some(dir) = json_path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    let json = format!(
+        "{{\n\"bench\": \"remote\",\n\"transport\": \"{transport}\",\n\
+         \"jobs\": {},\n\"clients\": {clients},\n\"workers\": {workers},\n\
+         \"tasks_per_job\": {tasks},\n\"work_ns\": {work_ns},\n\
+         \"wall_s\": {wall_s:.6},\n\"jobs_per_sec\": {jobs_per_sec:.3},\n\
+         \"p50_ms\": {p50:.3},\n\"p90_ms\": {p90:.3},\n\"p99_ms\": {p99:.3},\n\
+         \"server\": {server_stats}}}\n",
+        lat.len(),
+    );
+    match std::fs::write(&json_path, json) {
+        Ok(()) => println!("wrote {}", json_path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", json_path.display()),
+    }
+
+    if let Some((server, listener)) = local {
+        listener.shutdown();
+        server.drain();
+        drop(server);
     }
 }
 

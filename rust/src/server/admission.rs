@@ -48,6 +48,10 @@ pub struct FairQueue<T> {
     max_inflight: usize,
     inflight: usize,
     queued: usize,
+    /// Global bound on *waiting* jobs across all tenants; `None` =
+    /// unbounded. Pushes past the bound are rejected with
+    /// [`SubmitError::ServerSaturated`].
+    max_queued: Option<usize>,
     /// Global virtual time: the pass of the most recently admitted
     /// tenant (idle-return clamp).
     vtime: u64,
@@ -61,8 +65,17 @@ impl<T> FairQueue<T> {
             max_inflight,
             inflight: 0,
             queued: 0,
+            max_queued: None,
             vtime: 0,
         }
+    }
+
+    /// Bound the global admission-queue depth (≥ 1; `None` = unbounded,
+    /// the default). Unlike the per-tenant caps this protects the
+    /// *server*: one saturating burst — from however many tenants —
+    /// cannot grow the waiting set without limit.
+    pub fn set_max_queued(&mut self, bound: Option<usize>) {
+        self.max_queued = bound.map(|b| b.max(1));
     }
 
     /// Set a tenant's weight (≥ 1). Takes effect from its next admission.
@@ -94,13 +107,21 @@ impl<T> FairQueue<T> {
     }
 
     /// Enqueue a job for `tenant`, rejecting it when the tenant sits at
-    /// its outstanding-jobs cap.
+    /// its outstanding-jobs cap (checked first — the more specific
+    /// signal) or when the global queue depth is at its bound.
     pub fn try_push(&mut self, tenant: TenantId, item: T) -> Result<(), SubmitError> {
         let vtime = self.vtime;
+        let max_queued = self.max_queued;
+        let queued_now = self.queued;
         let t = self.tenant_mut(tenant);
         if let Some(cap) = t.cap {
             if t.outstanding >= cap {
                 return Err(SubmitError::TenantAtCapacity { tenant, cap });
+            }
+        }
+        if let Some(bound) = max_queued {
+            if queued_now >= bound {
+                return Err(SubmitError::ServerSaturated { max_queued: bound });
             }
         }
         if t.queue.is_empty() {
@@ -362,6 +383,44 @@ mod tests {
         assert_eq!(q.remove_where(|&x| x == 2), Some(2));
         assert_eq!(q.remove_where(|&x| x == 2), None);
         assert_eq!(q.queued(), 1);
+    }
+
+    #[test]
+    fn global_queue_bound_saturates() {
+        let mut q = FairQueue::new(2);
+        q.set_max_queued(Some(3));
+        // Two admitted (in flight) do not count against the queue bound.
+        q.push(TenantId(0), 0u32);
+        q.push(TenantId(0), 1u32);
+        assert!(q.try_admit().is_some());
+        assert!(q.try_admit().is_some());
+        for i in 0..3u32 {
+            assert!(q.try_push(TenantId(i), 10 + i).is_ok(), "queue has room");
+        }
+        assert_eq!(
+            q.try_push(TenantId(9), 99),
+            Err(SubmitError::ServerSaturated { max_queued: 3 })
+        );
+        // Admission frees queue depth (finish frees in-flight slots).
+        q.finish(TenantId(0));
+        assert!(q.try_admit().is_some());
+        assert!(q.try_push(TenantId(9), 99).is_ok());
+
+        // Tenant caps are reported in preference to saturation: a
+        // tenant at its cap sees TenantAtCapacity even when the global
+        // queue is also full.
+        let mut q2: FairQueue<u32> = FairQueue::new(2);
+        q2.set_max_queued(Some(1));
+        q2.set_tenant_cap(TenantId(0), 1);
+        q2.push(TenantId(0), 1);
+        assert_eq!(
+            q2.try_push(TenantId(0), 2),
+            Err(SubmitError::TenantAtCapacity { tenant: TenantId(0), cap: 1 })
+        );
+        assert_eq!(
+            q2.try_push(TenantId(1), 3),
+            Err(SubmitError::ServerSaturated { max_queued: 1 })
+        );
     }
 
     #[test]

@@ -46,12 +46,13 @@ pub mod protocol;
 pub mod registry;
 pub mod shard;
 pub mod stats;
+pub mod wire;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::SchedConfig;
 
@@ -61,10 +62,13 @@ pub use pool::{
 };
 pub use protocol::{JobId, JobReport, JobSpec, JobStatus, Submission, SubmitError, TenantId};
 pub use registry::{
-    panicking_template, qr_template, synthetic_template, BuildFn, ExecFn, JobGraph, Registry,
+    gated_template, nbody_template, panicking_template, qr_template,
+    synthetic_param_template, synthetic_template, BuildFn, ExecFn, JobGraph, ParamBuildFn,
+    Registry,
 };
 pub use shard::{route_shard, ShardPool, ShardSink};
 pub use stats::{ServerStats, StatsSnapshot, TenantSummary};
+pub use wire::{ListenAddr, WireListener};
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -78,8 +82,18 @@ pub struct ServerConfig {
     /// Idle prepared instances kept per template.
     pub max_pool: usize,
     /// Upper bound on jobs fused into one admission sweep (1 = no
-    /// batching). See [`ServerConfig::with_batch_max`].
+    /// batching). See [`ServerConfig::with_batch_max`]. With
+    /// [`ServerConfig::with_adaptive_batch`] this becomes the *ceiling*
+    /// of the per-sweep adaptive choice.
     pub batch_max: usize,
+    /// When set, the chosen K of each sweep is derived from the
+    /// observed queue depth and mean job service time instead of being
+    /// fixed at `batch_max`.
+    pub batch_adaptive: bool,
+    /// Global bound on the admission-queue depth; submissions past it
+    /// are rejected with [`SubmitError::ServerSaturated`]. `None` =
+    /// unbounded (the pre-PR-4 behaviour).
+    pub max_queued: Option<usize>,
     /// Seed for the workers' steal order.
     pub seed: u64,
     /// Scheduler configuration for template instances (its `nr_queues`
@@ -95,6 +109,8 @@ impl ServerConfig {
             max_inflight: (workers * 2).max(2),
             max_pool: (workers * 2).max(2),
             batch_max: 1,
+            batch_adaptive: false,
+            max_queued: None,
             seed: 0x5EED_5E11,
             sched: SchedConfig::new(workers),
         }
@@ -102,6 +118,30 @@ impl ServerConfig {
 
     pub fn with_max_inflight(mut self, n: usize) -> Self {
         self.max_inflight = n.max(1);
+        self
+    }
+
+    /// Bound the admission queue to `n` waiting jobs: the ROADMAP
+    /// "global bounded queue depth" item. Past the bound,
+    /// [`SchedServer::try_submit`] rejects with
+    /// [`SubmitError::ServerSaturated`] — backpressure the wire layer
+    /// forwards as a retryable error code instead of letting a remote
+    /// burst grow server memory without limit.
+    pub fn with_max_queued(mut self, n: usize) -> Self {
+        self.max_queued = Some(n.max(1));
+        self
+    }
+
+    /// Adaptive batched admission: each sweep picks its fused width
+    /// `K ≤ max_k` from the observed backlog and the EWMA of job
+    /// service times (see [`adaptive_k`]) — deep backlogs of
+    /// sub-millisecond jobs fuse wide, long jobs are admitted singly so
+    /// fusion never adds meaningful head-of-line latency. The chosen
+    /// widths are recorded in the stats histogram
+    /// ([`StatsSnapshot::batch_hist`]).
+    pub fn with_adaptive_batch(mut self, max_k: usize) -> Self {
+        self.batch_max = max_k.max(1);
+        self.batch_adaptive = true;
         self
     }
 
@@ -157,6 +197,10 @@ struct Inner {
     stats: ServerStats,
     next_job: AtomicU64,
     batch_max: usize,
+    batch_adaptive: bool,
+    /// EWMA (α = 1/8) of successful jobs' service times, ns; 0 until
+    /// the first completion. Input to [`adaptive_k`].
+    service_ewma_ns: AtomicU64,
     tx: Mutex<mpsc::Sender<Event>>,
 }
 
@@ -186,16 +230,17 @@ pub struct SchedServer {
 impl SchedServer {
     pub fn start(config: ServerConfig) -> Self {
         let (tx, rx) = mpsc::channel::<Event>();
+        let mut admission = FairQueue::new(config.max_inflight);
+        admission.set_max_queued(config.max_queued);
         let inner = Arc::new(Inner {
             registry: Registry::new(config.sched.clone(), config.max_pool),
-            state: Mutex::new(State {
-                admission: FairQueue::new(config.max_inflight),
-                jobs: HashMap::new(),
-            }),
+            state: Mutex::new(State { admission, jobs: HashMap::new() }),
             job_cv: Condvar::new(),
             stats: ServerStats::new(),
             next_job: AtomicU64::new(1),
             batch_max: config.batch_max.max(1),
+            batch_adaptive: config.batch_adaptive,
+            service_ewma_ns: AtomicU64::new(0),
             tx: Mutex::new(tx),
         });
         // Workers report completions straight into the dispatcher queue.
@@ -223,6 +268,13 @@ impl SchedServer {
         self.inner.registry.register(name, build);
     }
 
+    /// Register a parameterized template: jobs carry argument bytes
+    /// ([`JobSpec::with_args`], or a remote `Submit` frame) that the
+    /// builder decodes; instances are pooled per argument value.
+    pub fn register_param_template(&self, name: impl Into<String>, build: ParamBuildFn) {
+        self.inner.registry.register_param(name, build);
+    }
+
     pub fn registry(&self) -> &Registry {
         &self.inner.registry
     }
@@ -240,7 +292,10 @@ impl SchedServer {
     }
 
     /// Submit a job; returns immediately with its handle, or rejects it
-    /// when the tenant sits at its outstanding-jobs cap.
+    /// with backpressure: [`SubmitError::TenantAtCapacity`] when the
+    /// tenant sits at its outstanding-jobs cap,
+    /// [`SubmitError::ServerSaturated`] when the global admission queue
+    /// is at its [`ServerConfig::with_max_queued`] bound.
     pub fn try_submit(&self, spec: JobSpec) -> Result<JobId, SubmitError> {
         let id = JobId(self.inner.next_job.fetch_add(1, Ordering::Relaxed));
         {
@@ -320,6 +375,31 @@ impl SchedServer {
                 None => panic!("wait() on unknown {id}"),
                 Some(s) if s.is_terminal() => return s,
                 Some(_) => st = self.inner.job_cv.wait(st).unwrap(),
+            }
+        }
+    }
+
+    /// [`SchedServer::wait`] with a deadline, and total on job ids:
+    /// `None` for an unknown id, otherwise the job's status once it is
+    /// terminal *or* when the timeout elapses (whichever comes first) —
+    /// the returned status may then be non-terminal. The wire listener
+    /// drives its blocking `Wait` through short slices of this so reader
+    /// threads can observe shutdown.
+    pub fn wait_timeout(&self, id: JobId, timeout: Duration) -> Option<JobStatus> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            let status = st.jobs.get(&id).cloned();
+            match status {
+                None => return None,
+                Some(s) if s.is_terminal() => return Some(s),
+                Some(s) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return Some(s);
+                    }
+                    st = self.inner.job_cv.wait_timeout(st, deadline - now).unwrap().0;
+                }
             }
         }
     }
@@ -447,17 +527,33 @@ fn admit_sweep(inner: &Inner, pool: &WorkerPool) -> bool {
     let mut members: Vec<(TenantId, QueuedJob)> = Vec::new();
     {
         let mut st = inner.state.lock().unwrap();
+        // Adaptive batching picks this sweep's fused-width ceiling from
+        // the backlog it sees *before* popping anything.
+        let k_cap = if inner.batch_adaptive {
+            adaptive_k(
+                st.admission.queued(),
+                inner.service_ewma_ns.load(Ordering::Relaxed),
+                inner.batch_max,
+            )
+        } else {
+            inner.batch_max
+        };
         let Some(first) = st.admission.try_admit() else { return false };
         let head = first.1.spec.submission.clone();
+        let head_args = first.1.spec.args.clone();
         members.push(first);
-        while members.len() < inner.batch_max {
-            match st.admission.try_admit_if(|q| q.spec.submission == head) {
+        while members.len() < k_cap {
+            match st
+                .admission
+                .try_admit_if(|q| q.spec.submission == head && q.spec.args == head_args)
+            {
                 Some(m) => members.push(m),
                 None => break,
             }
         }
     }
     let k = members.len();
+    inner.stats.record_sweep(k);
     // Queue wait ends at admission: stamp it *before* the checkout so a
     // slow template build lands in setup_ns alone, not double-counted
     // into every member's queue_ns as well.
@@ -466,8 +562,9 @@ fn admit_sweep(inner: &Inner, pool: &WorkerPool) -> bool {
         .map(|(_, q)| q.enqueued.elapsed().as_nanos() as u64)
         .collect();
     let name = members[0].1.spec.submission.template_name().to_string();
+    let args = members[0].1.spec.args.clone();
     let reuse = members[0].1.spec.submission.reuses();
-    match inner.registry.checkout_many(&name, reuse, k) {
+    match inner.registry.checkout_many(&name, &args, reuse, k) {
         Err(msg) => {
             for (tenant, qjob) in members {
                 inner.stats.record_failure(tenant);
@@ -512,6 +609,11 @@ fn finish_job(inner: &Inner, job: &Arc<ActiveJob>) {
         inner.set_status(job.id, JobStatus::Failed("job failed: task panic or startup error".into()));
         return;
     }
+    // Fold the observed service time into the adaptive-batching EWMA
+    // (successful jobs only — failures say nothing about service cost).
+    let prev = inner.service_ewma_ns.load(Ordering::Relaxed);
+    let next = if prev == 0 { service_ns } else { prev - prev / 8 + service_ns / 8 };
+    inner.service_ewma_ns.store(next, Ordering::Relaxed);
     let report = JobReport {
         job: job.id,
         tenant: job.tenant,
@@ -530,9 +632,36 @@ fn finish_job(inner: &Inner, job: &Arc<ActiveJob>) {
         sched: Arc::clone(&job.sched),
         exec: Arc::clone(&job.exec),
         template: job.template.clone(),
+        args: job.args.clone(),
         kernels: job.kernels.clone(),
     });
     inner.set_status(job.id, JobStatus::Done(report));
+}
+
+/// The adaptive batching rule: how many jobs one admission sweep may
+/// fuse, given the current backlog `depth`, the EWMA of job service
+/// times, and the configured ceiling `max_k`.
+///
+/// The sweep targets roughly 1 ms of *estimated service* admitted per
+/// fused sweep: sub-millisecond jobs (where per-job
+/// dispatch overhead is the cost that batching exists to amortize) fuse
+/// up to the backlog or the ceiling, while jobs at or above a
+/// millisecond of service are admitted singly — fusing them would buy
+/// nothing and lengthen the sweep a later different-template job waits
+/// behind. With no service history yet (`ewma = 0`) the rule is
+/// optimistic, bounded by `depth` and `max_k` alone.
+pub fn adaptive_k(depth: usize, ewma_service_ns: u64, max_k: usize) -> usize {
+    const SWEEP_BUDGET_NS: u64 = 1_000_000;
+    let max_k = max_k.max(1);
+    if depth <= 1 {
+        return 1;
+    }
+    let by_time = if ewma_service_ns == 0 {
+        max_k
+    } else {
+        ((SWEEP_BUDGET_NS / ewma_service_ns).max(1) as usize).min(max_k)
+    };
+    max_k.min(depth).min(by_time)
 }
 
 #[cfg(test)]
@@ -580,36 +709,13 @@ mod tests {
 
     #[test]
     fn per_tenant_caps_reject_submissions() {
-        use crate::coordinator::{GraphBuilder, KernelRegistry, Scheduler};
-        use crate::server::registry::JobGraph;
         use std::sync::atomic::AtomicBool;
 
         let s = SchedServer::start(ServerConfig::new(2).with_seed(5));
         // A template whose single task spins until released, so
         // submitted jobs deterministically stay outstanding.
         let gate = Arc::new(AtomicBool::new(false));
-        {
-            let gate = Arc::clone(&gate);
-            s.register_template(
-                "gated",
-                Arc::new(move |config: &SchedConfig| {
-                    let mut sched =
-                        Scheduler::new(config.clone()).map_err(|e| e.to_string())?;
-                    sched.task(0u32).spawn();
-                    sched.prepare().map_err(|e| e.to_string())?;
-                    let gate = Arc::clone(&gate);
-                    let kernels = KernelRegistry::new().bind(
-                        0u32,
-                        move |_view: crate::coordinator::TaskView<'_>| {
-                            while !gate.load(Ordering::Acquire) {
-                                std::thread::yield_now();
-                            }
-                        },
-                    );
-                    JobGraph::from_registry(Arc::new(sched), Arc::new(kernels))
-                }),
-            );
-        }
+        s.register_template("gated", gated_template(Arc::clone(&gate)));
         s.set_tenant_cap(TenantId(0), 1);
         s.set_tenant_cap(TenantId(1), 2);
 
@@ -632,6 +738,72 @@ mod tests {
         // Completion frees the tenant's capacity.
         let a2 = s.try_submit(JobSpec::template(TenantId(0), "gated")).unwrap();
         assert!(matches!(s.wait(a2), JobStatus::Done(_)));
+        s.shutdown();
+    }
+
+    #[test]
+    fn adaptive_k_rule() {
+        // No backlog: no fusion regardless of history.
+        assert_eq!(adaptive_k(0, 0, 8), 1);
+        assert_eq!(adaptive_k(1, 100, 8), 1);
+        // No history: optimistic, bounded by depth and the ceiling.
+        assert_eq!(adaptive_k(5, 0, 8), 5);
+        assert_eq!(adaptive_k(50, 0, 8), 8);
+        // Tiny jobs (10 µs): the 1 ms budget allows wide fusion.
+        assert_eq!(adaptive_k(50, 10_000, 8), 8);
+        // 300 µs jobs: ~3 fit the budget.
+        assert_eq!(adaptive_k(50, 300_000, 8), 3);
+        // Millisecond-plus jobs: no fusion.
+        assert_eq!(adaptive_k(50, 2_000_000, 8), 1);
+        // Degenerate ceiling.
+        assert_eq!(adaptive_k(50, 0, 0), 1);
+    }
+
+    #[test]
+    fn global_saturation_rejects_then_recovers() {
+        use std::sync::atomic::AtomicBool;
+
+        let s = SchedServer::start(
+            ServerConfig::new(2).with_seed(29).with_max_inflight(1).with_max_queued(2),
+        );
+        let gate = Arc::new(AtomicBool::new(false));
+        s.register_template("gated", gated_template(Arc::clone(&gate)));
+        // First job is admitted (leaves the queue); wait for that so the
+        // saturation point below is deterministic.
+        let a = s.try_submit(JobSpec::template(TenantId(0), "gated")).unwrap();
+        while !matches!(s.poll(a), Some(JobStatus::Running)) {
+            std::thread::yield_now();
+        }
+        // With max_inflight=1 nothing else can be admitted: two more
+        // fill the bounded queue, the third bounces.
+        let b = s.try_submit(JobSpec::template(TenantId(1), "gated")).unwrap();
+        let c = s.try_submit(JobSpec::template(TenantId(2), "gated")).unwrap();
+        assert_eq!(
+            s.try_submit(JobSpec::template(TenantId(3), "gated")),
+            Err(SubmitError::ServerSaturated { max_queued: 2 })
+        );
+        gate.store(true, Ordering::Release);
+        for id in [a, b, c] {
+            assert!(matches!(s.wait(id), JobStatus::Done(_)));
+        }
+        // Draining the queue restores admission.
+        let d = s.try_submit(JobSpec::template(TenantId(3), "gated")).unwrap();
+        assert!(matches!(s.wait(d), JobStatus::Done(_)));
+        s.shutdown();
+    }
+
+    #[test]
+    fn wait_timeout_is_total_and_respects_deadlines() {
+        let s = server();
+        // Unknown id: None, not a panic.
+        assert!(s.wait_timeout(JobId(424242), Duration::from_millis(10)).is_none());
+        // Terminal job: returned well before any timeout.
+        let id = s.submit(JobSpec::template(TenantId(0), "syn"));
+        assert!(matches!(s.wait(id), JobStatus::Done(_)));
+        match s.wait_timeout(id, Duration::from_secs(10)) {
+            Some(JobStatus::Done(_)) => {}
+            other => panic!("unexpected {other:?}"),
+        }
         s.shutdown();
     }
 

@@ -45,6 +45,8 @@ pub struct ActiveJob {
     pub exec: ExecFn,
     /// Template name when the instance belongs to the registry pool.
     pub template: Option<String>,
+    /// Argument bytes the instance was built for (pool key at checkin).
+    pub args: Vec<u8>,
     /// The template's declared kernel binding, when it has one
     /// (carried so checkin can hand the full instance back).
     pub kernels: Option<Arc<crate::coordinator::KernelRegistry<'static>>>,
@@ -88,6 +90,7 @@ impl ActiveJob {
             sched: graph.sched,
             exec: graph.exec,
             template: graph.template,
+            args: graph.args,
             kernels: graph.kernels,
             reused,
             setup_ns,
@@ -801,6 +804,7 @@ mod tests {
                 sched: Arc::clone(&done.sched),
                 exec: Arc::clone(&done.exec),
                 template: done.template.clone(),
+                args: done.args.clone(),
                 kernels: done.kernels.clone(),
             });
         }
@@ -864,7 +868,13 @@ mod tests {
         s.task(0u32).virtual_task().spawn();
         s.prepare().unwrap();
         let exec: ExecFn = Arc::new(|_view: crate::coordinator::TaskView<'_>| {});
-        let g = JobGraph { sched: Arc::new(s), exec, template: None, kernels: None };
+        let g = JobGraph {
+            sched: Arc::new(s),
+            exec,
+            template: None,
+            args: Vec::new(),
+            kernels: None,
+        };
         let job = ActiveJob::new(JobId(1), TenantId(0), g, false, 0, 0, 0, 1);
         pool.activate(job);
         let done = rx.recv_timeout(Duration::from_secs(10)).expect("finalized");

@@ -63,19 +63,34 @@ impl Submission {
 pub struct JobSpec {
     pub tenant: TenantId,
     pub submission: Submission,
+    /// Opaque argument bytes for parameterized templates (empty for
+    /// plain ones). Typed at the edges via
+    /// [`crate::coordinator::Payload`]; instances are pooled per
+    /// distinct argument value, and batching only fuses jobs whose
+    /// arguments match.
+    pub args: Vec<u8>,
 }
 
 impl JobSpec {
     pub fn template(tenant: TenantId, name: impl Into<String>) -> Self {
-        Self { tenant, submission: Submission::Template(name.into()) }
+        Self { tenant, submission: Submission::Template(name.into()), args: Vec::new() }
     }
 
     pub fn rebuild(tenant: TenantId, name: impl Into<String>) -> Self {
-        Self { tenant, submission: Submission::Rebuild(name.into()) }
+        Self { tenant, submission: Submission::Rebuild(name.into()), args: Vec::new() }
+    }
+
+    /// Attach typed arguments for a parameterized template, e.g.
+    /// `.with_args(&(400u32, 8u32, 1000u64))`.
+    pub fn with_args<P: crate::coordinator::Payload>(mut self, args: &P) -> Self {
+        self.args = args.encode();
+        self
     }
 }
 
 /// A submission was rejected before it entered the admission queue.
+/// Both variants are *backpressure*: the client should retry later (the
+/// wire layer maps them onto retryable error codes).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
 pub enum SubmitError {
     /// The tenant already has `cap` outstanding jobs (queued + in
@@ -83,6 +98,11 @@ pub enum SubmitError {
     /// in-flight cap which *queues* rather than rejects.
     #[error("{tenant} is at its outstanding-jobs cap ({cap})")]
     TenantAtCapacity { tenant: TenantId, cap: usize },
+    /// The admission queue holds `max_queued` jobs — the global bounded
+    /// queue depth ([`super::ServerConfig::with_max_queued`]); nothing
+    /// is admitted-queue-unbounded once this is configured.
+    #[error("admission queue is full ({max_queued} jobs queued); retry later")]
+    ServerSaturated { max_queued: usize },
 }
 
 /// Lifecycle of a job as observed through `poll`.
@@ -196,5 +216,16 @@ mod tests {
         let e = SubmitError::TenantAtCapacity { tenant: TenantId(2), cap: 4 };
         assert!(e.to_string().contains("tenant2"));
         assert!(e.to_string().contains('4'));
+        let s = SubmitError::ServerSaturated { max_queued: 32 };
+        assert!(s.to_string().contains("32"));
+    }
+
+    #[test]
+    fn job_spec_args() {
+        let plain = JobSpec::template(TenantId(0), "syn");
+        assert!(plain.args.is_empty());
+        let with = JobSpec::template(TenantId(0), "syn").with_args(&(3u32, 7u64));
+        assert_eq!(with.args.len(), 12);
+        assert_eq!(JobSpec::rebuild(TenantId(1), "syn").args, Vec::<u8>::new());
     }
 }

@@ -15,7 +15,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::coordinator::{
-    GraphBuilder, KernelRegistry, ResId, SchedConfig, Scheduler, TaskId, TaskView,
+    GraphBuilder, KernelRegistry, Payload, ResId, SchedConfig, Scheduler, TaskId, TaskView,
 };
 use crate::qr;
 use crate::util::rng::Rng;
@@ -26,6 +26,14 @@ pub type ExecFn = Arc<dyn Fn(TaskView<'_>) + Send + Sync>;
 
 /// Builds one fresh prepared instance of a template.
 pub type BuildFn = Arc<dyn Fn(&SchedConfig) -> Result<JobGraph, String> + Send + Sync>;
+
+/// Builds one fresh prepared instance of a *parameterized* template
+/// from the job's opaque argument bytes (typed at the edges via
+/// [`Payload`] — this is what remote submissions carry over the wire).
+/// Builders must validate the bytes and return `Err` on a width or
+/// range mismatch; a panic here would fail the whole batch.
+pub type ParamBuildFn =
+    Arc<dyn Fn(&SchedConfig, &[u8]) -> Result<JobGraph, String> + Send + Sync>;
 
 /// A runnable graph instance: a prepared scheduler plus the execution
 /// path over its captured state. The scheduler sits behind an `Arc`
@@ -43,6 +51,10 @@ pub struct JobGraph {
     /// Template this instance belongs to; `None` means single-use
     /// (rebuild-per-job submissions) — checkin drops it.
     pub template: Option<String>,
+    /// The argument bytes this instance was built for (empty for plain
+    /// templates). Pool key alongside `template`: an instance is only
+    /// ever reused for a job carrying identical arguments.
+    pub args: Vec<u8>,
     /// The declared task-type → kernel binding, when the instance was
     /// built through [`JobGraph::from_registry`].
     pub kernels: Option<Arc<KernelRegistry<'static>>>,
@@ -59,7 +71,7 @@ impl JobGraph {
         kernels.validate(&sched).map_err(|e| e.to_string())?;
         let k = Arc::clone(&kernels);
         let exec: ExecFn = Arc::new(move |view| k.dispatch(view));
-        Ok(Self { sched, exec, template: None, kernels: Some(kernels) })
+        Ok(Self { sched, exec, template: None, args: Vec::new(), kernels: Some(kernels) })
     }
 
     /// Kernel names this instance's template declared, `(type_id,
@@ -69,12 +81,41 @@ impl JobGraph {
     }
 }
 
+/// How a template builds instances: plain (no arguments) or
+/// parameterized by the job's argument bytes.
+enum Builder {
+    Plain(BuildFn),
+    Param(ParamBuildFn),
+}
+
+/// Bound on *distinct argument values* pooled per template. Argument
+/// bytes are client-supplied (they arrive over the wire), so without
+/// this bound a remote client cycling through argument values could
+/// grow server memory one pooled instance per value; past the bound,
+/// instances for new argument values are simply dropped at checkin
+/// (rebuilt on demand) instead of retained.
+const MAX_POOL_KEYS: usize = 32;
+
 struct TemplateEntry {
-    build: BuildFn,
-    /// Idle prepared instances awaiting reuse.
-    pool: Vec<JobGraph>,
+    build: Builder,
+    /// Idle prepared instances awaiting reuse, keyed by argument bytes
+    /// (the empty key for plain templates). Each distinct argument
+    /// value pools up to `max_pool` instances; at most
+    /// [`MAX_POOL_KEYS`] distinct values are retained.
+    pool: HashMap<Vec<u8>, Vec<JobGraph>>,
     builds: u64,
     reuses: u64,
+}
+
+impl TemplateEntry {
+    /// The pool vector for `key`, unless admitting a *new* key would
+    /// exceed [`MAX_POOL_KEYS`].
+    fn pool_slot(&mut self, key: &[u8]) -> Option<&mut Vec<JobGraph>> {
+        if !self.pool.contains_key(key) && self.pool.len() >= MAX_POOL_KEYS {
+            return None;
+        }
+        Some(self.pool.entry(key.to_vec()).or_default())
+    }
 }
 
 /// Per-template build/reuse counters (observability + tests).
@@ -113,7 +154,27 @@ impl Registry {
         let mut t = self.templates.lock().unwrap();
         t.insert(
             name.into(),
-            TemplateEntry { build, pool: Vec::new(), builds: 0, reuses: 0 },
+            TemplateEntry {
+                build: Builder::Plain(build),
+                pool: HashMap::new(),
+                builds: 0,
+                reuses: 0,
+            },
+        );
+    }
+
+    /// Register (or replace) a *parameterized* template: instances are
+    /// built from — and pooled per — the submission's argument bytes.
+    pub fn register_param(&self, name: impl Into<String>, build: ParamBuildFn) {
+        let mut t = self.templates.lock().unwrap();
+        t.insert(
+            name.into(),
+            TemplateEntry {
+                build: Builder::Param(build),
+                pool: HashMap::new(),
+                builds: 0,
+                reuses: 0,
+            },
         );
     }
 
@@ -128,8 +189,19 @@ impl Registry {
     /// pool is empty) a fresh one is built. Returns the instance and
     /// whether it was reused.
     pub fn checkout(&self, name: &str, allow_reuse: bool) -> Result<(JobGraph, bool), String> {
+        self.checkout_args(name, &[], allow_reuse)
+    }
+
+    /// [`Registry::checkout`] for a parameterized template: `args` are
+    /// the submission's argument bytes (and the pool key).
+    pub fn checkout_args(
+        &self,
+        name: &str,
+        args: &[u8],
+        allow_reuse: bool,
+    ) -> Result<(JobGraph, bool), String> {
         let (g, reused, _setup_ns) = self
-            .checkout_many(name, allow_reuse, 1)?
+            .checkout_many(name, args, allow_reuse, 1)?
             .pop()
             .expect("checkout_many(1) yields one instance");
         Ok((g, reused))
@@ -155,6 +227,7 @@ impl Registry {
     pub fn checkout_many(
         &self,
         name: &str,
+        args: &[u8],
         allow_reuse: bool,
         n: usize,
     ) -> Result<Vec<(JobGraph, bool, u64)>, String> {
@@ -166,18 +239,31 @@ impl Registry {
             let entry = t
                 .get_mut(name)
                 .ok_or_else(|| format!("unknown template {name:?}"))?;
+            // Surface a client bug (arguments to an argument-free
+            // template) before touching the pool or the counters.
+            if matches!(entry.build, Builder::Plain(_)) && !args.is_empty() {
+                return Err(format!(
+                    "template {name:?} takes no arguments ({} bytes given)",
+                    args.len()
+                ));
+            }
             if allow_reuse {
-                while out.len() < n {
-                    match entry.pool.pop() {
-                        Some(g) => {
-                            entry.reuses += 1;
-                            out.push((g, true, 0));
+                if let Some(pool) = entry.pool.get_mut(args) {
+                    while out.len() < n {
+                        match pool.pop() {
+                            Some(g) => {
+                                entry.reuses += 1;
+                                out.push((g, true, 0));
+                            }
+                            None => break,
                         }
-                        None => break,
                     }
                 }
             }
-            Arc::clone(&entry.build)
+            match &entry.build {
+                Builder::Plain(b) => Builder::Plain(Arc::clone(b)),
+                Builder::Param(b) => Builder::Param(Arc::clone(b)),
+            }
         };
         let pops = out.len();
         if pops > 0 {
@@ -190,9 +276,14 @@ impl Registry {
         // arbitrarily expensive.
         while out.len() < n {
             let t_build = Instant::now();
-            match (build)(&self.config) {
+            let built = match &build {
+                Builder::Plain(b) => (b)(&self.config),
+                Builder::Param(b) => (b)(&self.config, args),
+            };
+            match built {
                 Ok(mut g) => {
                     g.template = if allow_reuse { Some(name.to_string()) } else { None };
+                    g.args = args.to_vec();
                     let mut t = self.templates.lock().unwrap();
                     if let Some(entry) = t.get_mut(name) {
                         entry.builds += 1;
@@ -202,12 +293,14 @@ impl Registry {
                 Err(msg) => {
                     let mut t = self.templates.lock().unwrap();
                     if let Some(entry) = t.get_mut(name) {
-                        for (g, reused, _setup_ns) in out.drain(..) {
-                            if reused {
-                                entry.reuses = entry.reuses.saturating_sub(1);
-                            }
-                            if g.template.is_some() && entry.pool.len() < self.max_pool {
-                                entry.pool.push(g);
+                        let rewind =
+                            out.iter().filter(|(_, reused, _)| *reused).count() as u64;
+                        entry.reuses = entry.reuses.saturating_sub(rewind);
+                        if let Some(pool) = entry.pool_slot(args) {
+                            for (g, _reused, _setup_ns) in out.drain(..) {
+                                if g.template.is_some() && pool.len() < self.max_pool {
+                                    pool.push(g);
+                                }
                             }
                         }
                     }
@@ -228,10 +321,13 @@ impl Registry {
         if g.sched.reset_run().is_err() {
             return;
         }
+        let key = g.args.clone();
         let mut t = self.templates.lock().unwrap();
         if let Some(entry) = t.get_mut(&name) {
-            if entry.pool.len() < self.max_pool {
-                entry.pool.push(g);
+            if let Some(pool) = entry.pool_slot(&key) {
+                if pool.len() < self.max_pool {
+                    pool.push(g);
+                }
             }
         }
     }
@@ -241,7 +337,7 @@ impl Registry {
         t.get(name).map(|e| TemplateCounters {
             builds: e.builds,
             reuses: e.reuses,
-            pooled: e.pool.len(),
+            pooled: e.pool.values().map(|p| p.len()).sum(),
         })
     }
 }
@@ -303,6 +399,69 @@ pub fn qr_template(tiles: usize, tile: usize, seed: u64) -> BuildFn {
         // The application's own declarative binding: four QR kernels on
         // the native backend over this instance's matrix.
         let kernels = qr::registry(mat, Arc::new(qr::NativeBackend));
+        JobGraph::from_registry(Arc::new(s), Arc::new(kernels))
+    })
+}
+
+/// Parameterized synthetic template: the argument bytes decode as
+/// `(n_tasks: u32, n_res: u32, work_ns: u64)` — see [`Payload`]. Each
+/// distinct argument tuple gets its own deterministic graph and its own
+/// instance pool; a width mismatch is a clean build error (which the
+/// server reports as a failed job), never a panic. This is the remote
+/// workload: a `RemoteClient` shapes the job it submits without any
+/// code crossing the wire.
+pub fn synthetic_param_template() -> ParamBuildFn {
+    Arc::new(move |config: &SchedConfig, args: &[u8]| {
+        const WANT: usize = <(u32, u32, u64) as Payload>::SIZE;
+        if args.len() != WANT {
+            return Err(format!(
+                "synthetic args must be (n_tasks: u32, n_res: u32, work_ns: u64) \
+                 = {WANT} bytes, got {}",
+                args.len()
+            ));
+        }
+        let (n_tasks, n_res, work_ns) = <(u32, u32, u64)>::decode(args);
+        let n_tasks = (n_tasks as usize).clamp(1, 100_000);
+        let n_res = (n_res as usize).clamp(1, 4096);
+        (synthetic_template(n_tasks, n_res, 0x5EED ^ n_tasks as u64, work_ns))(config)
+    })
+}
+
+/// Barnes–Hut N-body template (paper §4.2): each instance owns a
+/// particle cloud + octree and computes one force evaluation through
+/// the four N-body kernels. On reuse the accelerations simply
+/// accumulate again — like the QR template refactorizing, the
+/// *scheduling* structure the service exercises is identical run to
+/// run. Deterministic from `seed`.
+pub fn nbody_template(n_parts: usize, n_max: usize, n_task: usize, seed: u64) -> BuildFn {
+    Arc::new(move |config: &SchedConfig| {
+        let mut s = Scheduler::new(config.clone()).map_err(|e| e.to_string())?;
+        let tree = crate::nbody::Octree::build(
+            crate::nbody::uniform_cloud(n_parts.max(8), seed),
+            n_max.max(8),
+        );
+        let state = Arc::new(crate::nbody::NBodyState::from_tree(tree));
+        crate::nbody::build_tasks(&mut s, &state, n_task.max(1));
+        s.prepare().map_err(|e| e.to_string())?;
+        let kernels = crate::nbody::registry(state);
+        JobGraph::from_registry(Arc::new(s), Arc::new(kernels))
+    })
+}
+
+/// A template whose single task spins until `gate` is released —
+/// deterministic backpressure for tests and demos: submitted jobs stay
+/// outstanding exactly as long as the caller keeps the gate closed.
+pub fn gated_template(gate: Arc<std::sync::atomic::AtomicBool>) -> BuildFn {
+    Arc::new(move |config: &SchedConfig| {
+        let mut s = Scheduler::new(config.clone()).map_err(|e| e.to_string())?;
+        s.task(0u32).spawn();
+        s.prepare().map_err(|e| e.to_string())?;
+        let gate = Arc::clone(&gate);
+        let kernels = KernelRegistry::new().bind(0u32, move |_view: TaskView<'_>| {
+            while !gate.load(std::sync::atomic::Ordering::Acquire) {
+                std::thread::yield_now();
+            }
+        });
         JobGraph::from_registry(Arc::new(s), Arc::new(kernels))
     })
 }
@@ -370,7 +529,7 @@ mod tests {
         let (g2, _) = r.checkout("syn", true).unwrap();
         r.checkin(g1);
         r.checkin(g2);
-        let batch = r.checkout_many("syn", true, 3).unwrap();
+        let batch = r.checkout_many("syn", &[], true, 3).unwrap();
         assert_eq!(batch.len(), 3);
         let reused = batch.iter().filter(|(_, reused, _)| *reused).count();
         assert_eq!(reused, 2, "pooled instances drained first");
@@ -404,7 +563,7 @@ mod tests {
         r.checkin(g2);
         // A batch of 4 pops both, then the third build fails: the pops
         // must return to the pool and the counters rewind.
-        let err = r.checkout_many("flaky", true, 4).unwrap_err();
+        let err = r.checkout_many("flaky", &[], true, 4).unwrap_err();
         assert!(err.contains("flaky build"), "{err}");
         let c = r.counters("flaky").unwrap();
         assert_eq!(c.pooled, 2, "popped instances returned to the pool on error");
@@ -462,6 +621,85 @@ mod tests {
         // closure: all four QR kernels are introspectable by name.
         let names: Vec<&str> = g.kernel_bindings().iter().map(|&(_, n)| n).collect();
         assert_eq!(names, vec!["DGEQRF", "DLARFT", "DTSQRF", "DSSRFT"]);
+    }
+
+    #[test]
+    fn param_template_pools_per_args() {
+        use crate::coordinator::Payload;
+        let r = registry();
+        r.register_param("syn-args", synthetic_param_template());
+        let a = (30u32, 3u32, 0u64).encode();
+        let b = (12u32, 2u32, 0u64).encode();
+        let (ga, reused) = r.checkout_args("syn-args", &a, true).unwrap();
+        assert!(!reused);
+        assert_eq!(ga.sched.nr_tasks(), 30);
+        assert_eq!(ga.args, a);
+        let (gb, _) = r.checkout_args("syn-args", &b, true).unwrap();
+        assert_eq!(gb.sched.nr_tasks(), 12);
+        r.checkin(ga);
+        r.checkin(gb);
+        // Reuse is keyed by the argument bytes: `a` gets a's instance.
+        let (ga2, reused) = r.checkout_args("syn-args", &a, true).unwrap();
+        assert!(reused, "identical args must hit the pool");
+        assert_eq!(ga2.sched.nr_tasks(), 30);
+        let c = r.counters("syn-args").unwrap();
+        assert_eq!((c.builds, c.reuses, c.pooled), (2, 1, 1));
+        // Malformed argument bytes are a clean error, not a panic.
+        let err = r.checkout_args("syn-args", &[1, 2, 3], true).unwrap_err();
+        assert!(err.contains("bytes"), "{err}");
+    }
+
+    #[test]
+    fn pool_retains_boundedly_many_distinct_arg_values() {
+        use crate::coordinator::Payload;
+        let r = registry();
+        r.register_param("syn-args", synthetic_param_template());
+        // Cycle through more distinct argument values than the key
+        // bound: every checkout misses the pool, every checkin tries to
+        // retain — only MAX_POOL_KEYS keys may survive.
+        for i in 0..(MAX_POOL_KEYS as u32 + 8) {
+            let args = (2u32 + i % 7, 2u32, i as u64).encode();
+            let (g, reused) = r.checkout_args("syn-args", &args, true).unwrap();
+            assert!(!reused, "every args value is new");
+            r.checkin(g);
+        }
+        let c = r.counters("syn-args").unwrap();
+        assert!(
+            c.pooled <= MAX_POOL_KEYS,
+            "distinct-args pool footprint must stay bounded (got {})",
+            c.pooled
+        );
+        // Known argument values keep reusing normally past the bound.
+        let hot = (2u32, 2u32, 0u64).encode();
+        let (g, reused) = r.checkout_args("syn-args", &hot, true).unwrap();
+        assert!(reused, "an already-pooled args value still hits its instance");
+        r.checkin(g);
+    }
+
+    #[test]
+    fn plain_template_rejects_args() {
+        let r = registry();
+        r.register("syn", synthetic_template(10, 2, 1, 0));
+        let err = r.checkout_args("syn", &[9], true).unwrap_err();
+        assert!(err.contains("takes no arguments"), "{err}");
+        // The pool and counters are untouched by the rejection.
+        let c = r.counters("syn").unwrap();
+        assert_eq!((c.builds, c.reuses, c.pooled), (0, 0, 0));
+    }
+
+    #[test]
+    fn nbody_template_builds_and_reuses() {
+        let r = registry();
+        r.register("nbody", nbody_template(600, 40, 48, 7));
+        let (g, _) = r.checkout("nbody", true).unwrap();
+        assert!(g.sched.nr_tasks() > 4, "nbody graph is non-trivial");
+        // All four kernels are declared data.
+        assert_eq!(g.kernel_bindings().len(), 4);
+        let n_tasks = g.sched.nr_tasks();
+        r.checkin(g);
+        let (g2, reused) = r.checkout("nbody", true).unwrap();
+        assert!(reused);
+        assert_eq!(g2.sched.nr_tasks(), n_tasks);
     }
 
     #[test]

@@ -429,7 +429,13 @@ mod tests {
         s.prepare().unwrap();
         let exec: crate::server::registry::ExecFn =
             Arc::new(|_view: crate::coordinator::TaskView<'_>| {});
-        let g = JobGraph { sched: Arc::new(s), exec, template: None, kernels: None };
+        let g = JobGraph {
+            sched: Arc::new(s),
+            exec,
+            template: None,
+            args: Vec::new(),
+            kernels: None,
+        };
         let job = ActiveJob::new(JobId(7), TenantId(0), g, false, 0, 0, 0, 1);
         let pool = Arc::new(ShardPool::new(2));
         let tag = pool.register_batch(&[Arc::clone(&job)])[0];

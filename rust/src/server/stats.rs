@@ -86,10 +86,20 @@ pub struct TenantSummary {
     pub mean_batched_with: f64,
 }
 
+/// Number of buckets in the admission-sweep width histogram: bucket
+/// `i` counts sweeps that fused `i + 1` jobs, the last bucket counting
+/// `>= BATCH_BUCKETS`.
+pub const BATCH_BUCKETS: usize = 16;
+
 /// Snapshot of the whole server.
 #[derive(Clone, Debug)]
 pub struct StatsSnapshot {
     pub uptime_s: f64,
+    /// Histogram of chosen/realized admission-sweep widths (the K each
+    /// sweep actually fused — the observable of adaptive batching).
+    /// `batch_hist[i]` = sweeps of width `i + 1`; last bucket is
+    /// `>= BATCH_BUCKETS`.
+    pub batch_hist: Vec<u64>,
     pub tenants: Vec<TenantSummary>,
 }
 
@@ -126,12 +136,22 @@ impl StatsSnapshot {
                 format!("{:.3}", s.p90_total_ns / 1e6),
             ]);
         }
+        let mut widths = String::new();
+        for (i, &n) in self.batch_hist.iter().enumerate() {
+            if n > 0 {
+                widths.push_str(&format!(" {}:{}", i + 1, n));
+            }
+        }
+        if widths.is_empty() {
+            widths.push_str(" -");
+        }
         format!(
-            "{}\ntotal: {} jobs in {:.2}s = {:.1} jobs/s\n",
+            "{}\ntotal: {} jobs in {:.2}s = {:.1} jobs/s\nsweep widths (K:count):{}\n",
             t.render(),
             self.completed(),
             self.uptime_s,
-            self.jobs_per_sec()
+            self.jobs_per_sec(),
+            widths
         )
     }
 
@@ -141,6 +161,8 @@ impl StatsSnapshot {
         out.push_str(&format!("  \"uptime_s\": {:.6},\n", self.uptime_s));
         out.push_str(&format!("  \"jobs_completed\": {},\n", self.completed()));
         out.push_str(&format!("  \"jobs_per_sec\": {:.3},\n", self.jobs_per_sec()));
+        let hist: Vec<String> = self.batch_hist.iter().map(|n| n.to_string()).collect();
+        out.push_str(&format!("  \"batch_hist\": [{}],\n", hist.join(", ")));
         out.push_str("  \"tenants\": [\n");
         for (i, s) in self.tenants.iter().enumerate() {
             out.push_str(&format!(
@@ -176,6 +198,8 @@ impl StatsSnapshot {
 /// Thread-safe accumulator the server records every [`JobReport`] into.
 pub struct ServerStats {
     tenants: Mutex<BTreeMap<TenantId, TenantAcc>>,
+    /// Admission-sweep width histogram (see [`BATCH_BUCKETS`]).
+    sweeps: Mutex<[u64; BATCH_BUCKETS]>,
     started: Instant,
 }
 
@@ -187,7 +211,17 @@ impl Default for ServerStats {
 
 impl ServerStats {
     pub fn new() -> Self {
-        Self { tenants: Mutex::new(BTreeMap::new()), started: Instant::now() }
+        Self {
+            tenants: Mutex::new(BTreeMap::new()),
+            sweeps: Mutex::new([0; BATCH_BUCKETS]),
+            started: Instant::now(),
+        }
+    }
+
+    /// Record one admission sweep that fused `k` jobs (k ≥ 1).
+    pub fn record_sweep(&self, k: usize) {
+        let idx = k.clamp(1, BATCH_BUCKETS) - 1;
+        self.sweeps.lock().unwrap()[idx] += 1;
     }
 
     pub fn record(&self, r: &JobReport) {
@@ -257,7 +291,11 @@ impl ServerStats {
                 },
             })
             .collect();
-        StatsSnapshot { uptime_s: self.started.elapsed().as_secs_f64(), tenants }
+        StatsSnapshot {
+            uptime_s: self.started.elapsed().as_secs_f64(),
+            batch_hist: self.sweeps.lock().unwrap().to_vec(),
+            tenants,
+        }
     }
 }
 
@@ -334,13 +372,32 @@ mod tests {
         let s = ServerStats::new();
         s.record(&report(0, 100, true, 200));
         s.record(&report(1, 900, false, 300));
+        s.record_sweep(2);
         let snap = s.snapshot();
         let json = snap.to_json();
         assert!(json.contains("\"tenants\": ["));
         assert!(json.contains("\"completed\": 1"));
+        assert!(json.contains("\"batch_hist\": [0, 1, 0"));
         assert!(json.trim_end().ends_with('}'));
         let table = snap.render();
         assert!(table.contains("tenant0"));
         assert!(table.contains("jobs/s"));
+        assert!(table.contains("sweep widths"));
+        assert!(table.contains("2:1"));
+    }
+
+    #[test]
+    fn sweep_histogram_buckets() {
+        let s = ServerStats::new();
+        s.record_sweep(1);
+        s.record_sweep(1);
+        s.record_sweep(4);
+        s.record_sweep(0); // clamped into bucket 1
+        s.record_sweep(999); // clamped into the last bucket
+        let snap = s.snapshot();
+        assert_eq!(snap.batch_hist.len(), BATCH_BUCKETS);
+        assert_eq!(snap.batch_hist[0], 3);
+        assert_eq!(snap.batch_hist[3], 1);
+        assert_eq!(snap.batch_hist[BATCH_BUCKETS - 1], 1);
     }
 }

@@ -1,0 +1,726 @@
+//! The wire codec: framed binary messages, no external dependencies.
+//!
+//! Everything on the wire is a **frame**: a 4-byte little-endian length
+//! followed by that many body bytes, the body being one message. Frame
+//! bodies never exceed [`MAX_FRAME`]; a peer declaring a longer frame is
+//! rejected *before* any body allocation, so a hostile header cannot
+//! make the server over-allocate.
+//!
+//! ```text
+//!   ┌────────────┬──────────────────────────────────────────┐
+//!   │ len: u32LE │ body: len bytes (tag + fields)           │
+//!   └────────────┴──────────────────────────────────────────┘
+//!    body = tag:u8 · field* ;  ints are LEB128 varints,
+//!    strings/bytes are varint-length-prefixed
+//! ```
+//!
+//! Messages are a versioned enum pair: [`Request`] (client → server)
+//! and [`Response`] (server → client). Submissions reference registered
+//! templates **by name** plus opaque argument bytes (typed at the edges
+//! via [`crate::coordinator::Payload`]) — kernels never cross the wire.
+//! The protocol version travels once, in `Hello`/`HelloOk`; adding a
+//! message or a trailing field bumps [`WIRE_VERSION`], and a server
+//! refuses mismatched clients with [`ErrorCode::VersionMismatch`]
+//! rather than guessing (see ARCHITECTURE.md §Wire protocol).
+//!
+//! Decoding is total: any byte sequence returns `Ok` or a
+//! [`ProtocolError`] — never a panic, never an allocation beyond the
+//! (already length-checked) frame body. `rust/tests/prop_wire.rs`
+//! property-tests this over random, truncated, and corrupted frames.
+
+use std::io::{self, Read, Write};
+
+use crate::server::protocol::{JobId, JobReport, JobStatus, TenantId};
+
+/// Protocol revision spoken by this build. Negotiated in `Hello`.
+pub const WIRE_VERSION: u32 = 1;
+
+/// Upper bound on a frame body, enforced on both ends before any body
+/// allocation. Large enough for a stats snapshot, small enough that a
+/// hostile length header is harmless.
+pub const MAX_FRAME: usize = 1 << 20;
+
+/// A frame or message could not be decoded. Every decoder returns this
+/// instead of panicking, whatever the input bytes.
+#[derive(Debug, thiserror::Error)]
+pub enum ProtocolError {
+    /// The body ended mid-field (or a declared length exceeds it).
+    #[error("frame truncated")]
+    Truncated,
+    /// The frame header declares a body longer than [`MAX_FRAME`].
+    #[error("frame of {len} bytes exceeds the {max}-byte limit")]
+    Oversized { len: u64, max: usize },
+    /// Unknown discriminant for a message / status / bool field.
+    #[error("unknown {kind} tag {tag}")]
+    BadTag { kind: &'static str, tag: u8 },
+    /// A varint ran past 10 bytes or overflowed 64 bits.
+    #[error("varint overflows u64")]
+    BadVarint,
+    /// A varint field exceeds the width its message field allows.
+    #[error("integer field out of range")]
+    OutOfRange,
+    /// A string field holds invalid UTF-8.
+    #[error("string field is not valid UTF-8")]
+    BadUtf8,
+    /// The message decoded cleanly but bytes were left over.
+    #[error("{extra} trailing bytes after message")]
+    TrailingBytes { extra: usize },
+    /// The peer speaks a different protocol revision.
+    #[error("peer speaks wire version {got}, this build speaks {want}")]
+    VersionMismatch { got: u32, want: u32 },
+    /// The underlying transport failed mid-frame.
+    #[error("i/o: {0}")]
+    Io(#[from] io::Error),
+}
+
+// ----------------------------------------------------------------------
+// Primitive encoders / decoders
+// ----------------------------------------------------------------------
+
+/// Append `v` as an LEB128 varint (1–10 bytes).
+pub fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Append a varint length prefix followed by the raw bytes.
+pub fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    put_varint(out, b.len() as u64);
+    out.extend_from_slice(b);
+}
+
+/// Append a varint length prefix followed by the UTF-8 bytes.
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_bytes(out, s.as_bytes());
+}
+
+/// Cursor over a frame body. All reads are bounds-checked; byte/string
+/// fields are returned as sub-slices of the body (no allocation).
+pub struct Reader<'a> {
+    data: &'a [u8],
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        Self { data }
+    }
+
+    pub fn u8(&mut self) -> Result<u8, ProtocolError> {
+        let (&b, rest) = self.data.split_first().ok_or(ProtocolError::Truncated)?;
+        self.data = rest;
+        Ok(b)
+    }
+
+    pub fn bool(&mut self) -> Result<bool, ProtocolError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            t => Err(ProtocolError::BadTag { kind: "bool", tag: t }),
+        }
+    }
+
+    pub fn varint(&mut self) -> Result<u64, ProtocolError> {
+        let mut v = 0u64;
+        // 10 bytes cover 64 bits; the final byte may only carry 1 bit.
+        for shift in (0..64).step_by(7) {
+            let b = self.u8()?;
+            let bits = (b & 0x7F) as u64;
+            if shift == 63 && bits > 1 {
+                return Err(ProtocolError::BadVarint);
+            }
+            v |= bits << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+        }
+        Err(ProtocolError::BadVarint)
+    }
+
+    /// A varint that must fit a `u32` field.
+    pub fn varint_u32(&mut self) -> Result<u32, ProtocolError> {
+        u32::try_from(self.varint()?).map_err(|_| ProtocolError::OutOfRange)
+    }
+
+    /// A length-prefixed byte field. The declared length is validated
+    /// against the remaining body *before* slicing — a corrupt length
+    /// yields [`ProtocolError::Truncated`], not a huge allocation.
+    pub fn bytes(&mut self) -> Result<&'a [u8], ProtocolError> {
+        let len = self.varint()?;
+        if len > self.data.len() as u64 {
+            return Err(ProtocolError::Truncated);
+        }
+        let (head, rest) = self.data.split_at(len as usize);
+        self.data = rest;
+        Ok(head)
+    }
+
+    /// A length-prefixed UTF-8 string field.
+    pub fn text(&mut self) -> Result<&'a str, ProtocolError> {
+        std::str::from_utf8(self.bytes()?).map_err(|_| ProtocolError::BadUtf8)
+    }
+
+    /// Assert the whole body was consumed.
+    pub fn finish(&self) -> Result<(), ProtocolError> {
+        if self.data.is_empty() {
+            Ok(())
+        } else {
+            Err(ProtocolError::TrailingBytes { extra: self.data.len() })
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Frame I/O
+// ----------------------------------------------------------------------
+
+/// Write one frame (header + body) and flush. A body over [`MAX_FRAME`]
+/// is an `InvalidInput` error — writing its header anyway would make
+/// the peer's next `read_frame` fail and desynchronize the stream.
+pub fn write_frame<W: Write + ?Sized>(w: &mut W, body: &[u8]) -> io::Result<()> {
+    if body.len() > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("frame body of {} bytes exceeds MAX_FRAME ({MAX_FRAME})", body.len()),
+        ));
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Blocking read of one frame body. The length header is validated
+/// against [`MAX_FRAME`] before the body buffer is allocated.
+pub fn read_frame<R: Read + ?Sized>(r: &mut R) -> Result<Vec<u8>, ProtocolError> {
+    let mut hdr = [0u8; 4];
+    r.read_exact(&mut hdr)?;
+    let len = u32::from_le_bytes(hdr) as usize;
+    if len > MAX_FRAME {
+        return Err(ProtocolError::Oversized { len: len as u64, max: MAX_FRAME });
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(body)
+}
+
+/// Reassembly buffer for the listener's timeout-sliced reads: bytes
+/// arrive in arbitrary chunks (partial reads are normal under a read
+/// timeout) and complete frame bodies are popped as they form.
+#[derive(Default)]
+pub struct FrameBuffer {
+    buf: Vec<u8>,
+}
+
+impl FrameBuffer {
+    pub fn extend(&mut self, data: &[u8]) {
+        self.buf.extend_from_slice(data);
+    }
+
+    /// Pop one complete frame body if buffered. An oversized declared
+    /// length errors immediately — without waiting for (or buffering)
+    /// the claimed body.
+    pub fn take_frame(&mut self) -> Result<Option<Vec<u8>>, ProtocolError> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let hdr = [self.buf[0], self.buf[1], self.buf[2], self.buf[3]];
+        let len = u32::from_le_bytes(hdr) as usize;
+        if len > MAX_FRAME {
+            return Err(ProtocolError::Oversized { len: len as u64, max: MAX_FRAME });
+        }
+        if self.buf.len() < 4 + len {
+            return Ok(None);
+        }
+        let body = self.buf[4..4 + len].to_vec();
+        self.buf.drain(..4 + len);
+        Ok(Some(body))
+    }
+}
+
+// ----------------------------------------------------------------------
+// Messages
+// ----------------------------------------------------------------------
+
+const REQ_HELLO: u8 = 0;
+const REQ_SUBMIT: u8 = 1;
+const REQ_POLL: u8 = 2;
+const REQ_WAIT: u8 = 3;
+const REQ_CANCEL: u8 = 4;
+const REQ_STATS: u8 = 5;
+const REQ_BYE: u8 = 6;
+
+/// Client → server messages.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Request {
+    /// Opens the conversation: protocol version + the tenant identity
+    /// every later submission on this connection is accounted to.
+    Hello { version: u32, tenant: u32 },
+    /// Submit a job against a registered template. `reuse = false` is
+    /// the rebuild-per-job baseline; `args` are opaque argument bytes
+    /// for parameterized templates (empty for plain ones).
+    Submit { template: String, reuse: bool, args: Vec<u8> },
+    /// Non-blocking status query.
+    Poll { job: u64 },
+    /// Block until the job reaches a terminal state.
+    Wait { job: u64 },
+    /// Cancel a still-queued job.
+    Cancel { job: u64 },
+    /// Request the server's stats snapshot (JSON).
+    Stats,
+    /// Orderly close.
+    Bye,
+}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Request::Hello { version, tenant } => {
+                out.push(REQ_HELLO);
+                put_varint(&mut out, *version as u64);
+                put_varint(&mut out, *tenant as u64);
+            }
+            Request::Submit { template, reuse, args } => {
+                out.push(REQ_SUBMIT);
+                put_str(&mut out, template);
+                out.push(*reuse as u8);
+                put_bytes(&mut out, args);
+            }
+            Request::Poll { job } => {
+                out.push(REQ_POLL);
+                put_varint(&mut out, *job);
+            }
+            Request::Wait { job } => {
+                out.push(REQ_WAIT);
+                put_varint(&mut out, *job);
+            }
+            Request::Cancel { job } => {
+                out.push(REQ_CANCEL);
+                put_varint(&mut out, *job);
+            }
+            Request::Stats => out.push(REQ_STATS),
+            Request::Bye => out.push(REQ_BYE),
+        }
+        out
+    }
+
+    pub fn decode(body: &[u8]) -> Result<Self, ProtocolError> {
+        let mut r = Reader::new(body);
+        let msg = match r.u8()? {
+            REQ_HELLO => Request::Hello { version: r.varint_u32()?, tenant: r.varint_u32()? },
+            REQ_SUBMIT => Request::Submit {
+                template: r.text()?.to_string(),
+                reuse: r.bool()?,
+                args: r.bytes()?.to_vec(),
+            },
+            REQ_POLL => Request::Poll { job: r.varint()? },
+            REQ_WAIT => Request::Wait { job: r.varint()? },
+            REQ_CANCEL => Request::Cancel { job: r.varint()? },
+            REQ_STATS => Request::Stats,
+            REQ_BYE => Request::Bye,
+            t => return Err(ProtocolError::BadTag { kind: "request", tag: t }),
+        };
+        r.finish()?;
+        Ok(msg)
+    }
+}
+
+/// Error codes carried in [`Response::Error`]. The numeric `aux` field
+/// of the response carries the code's parameter (the tenant cap, the
+/// queue bound, the server's wire version).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Per-tenant backpressure (`aux` = the tenant's cap). Retryable.
+    TenantAtCapacity,
+    /// Global admission-queue backpressure (`aux` = the queue bound) —
+    /// or, on accept, the connection limit. Retryable.
+    ServerSaturated,
+    /// A request arrived before `Hello`.
+    NeedHello,
+    /// The request could not be decoded or is invalid here.
+    BadRequest,
+    /// Protocol revision mismatch (`aux` = the server's version).
+    VersionMismatch,
+    /// The listener is shutting down; in-flight waits are abandoned.
+    ShuttingDown,
+    /// Anything else; see the message text.
+    Internal,
+}
+
+impl ErrorCode {
+    /// Backpressure codes a client may simply retry after a pause.
+    pub fn retryable(self) -> bool {
+        matches!(self, ErrorCode::TenantAtCapacity | ErrorCode::ServerSaturated)
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            ErrorCode::TenantAtCapacity => 0,
+            ErrorCode::ServerSaturated => 1,
+            ErrorCode::NeedHello => 2,
+            ErrorCode::BadRequest => 3,
+            ErrorCode::VersionMismatch => 4,
+            ErrorCode::ShuttingDown => 5,
+            ErrorCode::Internal => 6,
+        }
+    }
+
+    fn from_u8(t: u8) -> Result<Self, ProtocolError> {
+        Ok(match t {
+            0 => ErrorCode::TenantAtCapacity,
+            1 => ErrorCode::ServerSaturated,
+            2 => ErrorCode::NeedHello,
+            3 => ErrorCode::BadRequest,
+            4 => ErrorCode::VersionMismatch,
+            5 => ErrorCode::ShuttingDown,
+            6 => ErrorCode::Internal,
+            t => return Err(ProtocolError::BadTag { kind: "error code", tag: t }),
+        })
+    }
+}
+
+/// The numeric core of a [`JobReport`], as it travels in a `Done`
+/// status. Job and tenant ids are omitted: the client knows both.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireReport {
+    pub tasks_run: u64,
+    pub tasks_stolen: u64,
+    pub exec_ns: u64,
+    pub queue_ns: u64,
+    pub setup_ns: u64,
+    pub service_ns: u64,
+    pub dispatch_ns: u64,
+    pub batched_with: u64,
+    pub reused_template: bool,
+}
+
+const ST_UNKNOWN: u8 = 0;
+const ST_QUEUED: u8 = 1;
+const ST_RUNNING: u8 = 2;
+const ST_DONE: u8 = 3;
+const ST_FAILED: u8 = 4;
+const ST_CANCELLED: u8 = 5;
+
+/// A [`JobStatus`] on the wire, plus `Unknown` for ids the server has
+/// never seen.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireStatus {
+    Unknown,
+    Queued,
+    Running,
+    Done(WireReport),
+    Failed(String),
+    Cancelled,
+}
+
+impl WireStatus {
+    pub fn from_status(s: &JobStatus) -> Self {
+        match s {
+            JobStatus::Queued => WireStatus::Queued,
+            JobStatus::Running => WireStatus::Running,
+            JobStatus::Done(r) => WireStatus::Done(WireReport {
+                tasks_run: r.tasks_run as u64,
+                tasks_stolen: r.tasks_stolen as u64,
+                exec_ns: r.exec_ns,
+                queue_ns: r.queue_ns,
+                setup_ns: r.setup_ns,
+                service_ns: r.service_ns,
+                dispatch_ns: r.dispatch_ns,
+                batched_with: r.batched_with as u64,
+                reused_template: r.reused_template,
+            }),
+            JobStatus::Failed(m) => WireStatus::Failed(m.clone()),
+            JobStatus::Cancelled => WireStatus::Cancelled,
+        }
+    }
+
+    /// Rebuild the client-side [`JobStatus`] (`None` for `Unknown`).
+    /// The job/tenant identity is supplied by the connection.
+    pub fn into_status(self, job: JobId, tenant: TenantId) -> Option<JobStatus> {
+        Some(match self {
+            WireStatus::Unknown => return None,
+            WireStatus::Queued => JobStatus::Queued,
+            WireStatus::Running => JobStatus::Running,
+            WireStatus::Done(w) => JobStatus::Done(JobReport {
+                job,
+                tenant,
+                tasks_run: w.tasks_run as usize,
+                tasks_stolen: w.tasks_stolen as usize,
+                exec_ns: w.exec_ns,
+                queue_ns: w.queue_ns,
+                setup_ns: w.setup_ns,
+                service_ns: w.service_ns,
+                dispatch_ns: w.dispatch_ns,
+                batched_with: w.batched_with as usize,
+                reused_template: w.reused_template,
+            }),
+            WireStatus::Failed(m) => JobStatus::Failed(m),
+            WireStatus::Cancelled => JobStatus::Cancelled,
+        })
+    }
+
+    fn put(&self, out: &mut Vec<u8>) {
+        match self {
+            WireStatus::Unknown => out.push(ST_UNKNOWN),
+            WireStatus::Queued => out.push(ST_QUEUED),
+            WireStatus::Running => out.push(ST_RUNNING),
+            WireStatus::Done(w) => {
+                out.push(ST_DONE);
+                put_varint(out, w.tasks_run);
+                put_varint(out, w.tasks_stolen);
+                put_varint(out, w.exec_ns);
+                put_varint(out, w.queue_ns);
+                put_varint(out, w.setup_ns);
+                put_varint(out, w.service_ns);
+                put_varint(out, w.dispatch_ns);
+                put_varint(out, w.batched_with);
+                out.push(w.reused_template as u8);
+            }
+            WireStatus::Failed(m) => {
+                out.push(ST_FAILED);
+                put_str(out, m);
+            }
+            WireStatus::Cancelled => out.push(ST_CANCELLED),
+        }
+    }
+
+    fn take(r: &mut Reader<'_>) -> Result<Self, ProtocolError> {
+        Ok(match r.u8()? {
+            ST_UNKNOWN => WireStatus::Unknown,
+            ST_QUEUED => WireStatus::Queued,
+            ST_RUNNING => WireStatus::Running,
+            ST_DONE => WireStatus::Done(WireReport {
+                tasks_run: r.varint()?,
+                tasks_stolen: r.varint()?,
+                exec_ns: r.varint()?,
+                queue_ns: r.varint()?,
+                setup_ns: r.varint()?,
+                service_ns: r.varint()?,
+                dispatch_ns: r.varint()?,
+                batched_with: r.varint()?,
+                reused_template: r.bool()?,
+            }),
+            ST_FAILED => WireStatus::Failed(r.text()?.to_string()),
+            ST_CANCELLED => WireStatus::Cancelled,
+            t => return Err(ProtocolError::BadTag { kind: "status", tag: t }),
+        })
+    }
+}
+
+const RSP_HELLO_OK: u8 = 0;
+const RSP_SUBMITTED: u8 = 1;
+const RSP_STATUS: u8 = 2;
+const RSP_CANCELLED: u8 = 3;
+const RSP_STATS: u8 = 4;
+const RSP_ERROR: u8 = 5;
+
+/// Server → client messages.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Response {
+    /// `Hello` accepted; echoes the negotiated version and tenant.
+    HelloOk { version: u32, tenant: u32 },
+    /// The submission was accepted with this job id.
+    Submitted { job: u64 },
+    /// Answer to `Poll`/`Wait`.
+    Status { job: u64, status: WireStatus },
+    /// Answer to `Cancel` (`ok = false`: already admitted or unknown).
+    Cancelled { job: u64, ok: bool },
+    /// The stats snapshot, rendered as JSON server-side.
+    StatsJson { json: String },
+    /// The request was rejected; `aux` carries the code's parameter
+    /// (see [`ErrorCode`]). Backpressure codes are retryable.
+    Error { code: ErrorCode, aux: u64, message: String },
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Response::HelloOk { version, tenant } => {
+                out.push(RSP_HELLO_OK);
+                put_varint(&mut out, *version as u64);
+                put_varint(&mut out, *tenant as u64);
+            }
+            Response::Submitted { job } => {
+                out.push(RSP_SUBMITTED);
+                put_varint(&mut out, *job);
+            }
+            Response::Status { job, status } => {
+                out.push(RSP_STATUS);
+                put_varint(&mut out, *job);
+                status.put(&mut out);
+            }
+            Response::Cancelled { job, ok } => {
+                out.push(RSP_CANCELLED);
+                put_varint(&mut out, *job);
+                out.push(*ok as u8);
+            }
+            Response::StatsJson { json } => {
+                out.push(RSP_STATS);
+                put_str(&mut out, json);
+            }
+            Response::Error { code, aux, message } => {
+                out.push(RSP_ERROR);
+                out.push(code.to_u8());
+                put_varint(&mut out, *aux);
+                put_str(&mut out, message);
+            }
+        }
+        out
+    }
+
+    pub fn decode(body: &[u8]) -> Result<Self, ProtocolError> {
+        let mut r = Reader::new(body);
+        let msg = match r.u8()? {
+            RSP_HELLO_OK => {
+                Response::HelloOk { version: r.varint_u32()?, tenant: r.varint_u32()? }
+            }
+            RSP_SUBMITTED => Response::Submitted { job: r.varint()? },
+            RSP_STATUS => Response::Status { job: r.varint()?, status: WireStatus::take(&mut r)? },
+            RSP_CANCELLED => Response::Cancelled { job: r.varint()?, ok: r.bool()? },
+            RSP_STATS => Response::StatsJson { json: r.text()?.to_string() },
+            RSP_ERROR => Response::Error {
+                code: ErrorCode::from_u8(r.u8()?)?,
+                aux: r.varint()?,
+                message: r.text()?.to_string(),
+            },
+            t => return Err(ProtocolError::BadTag { kind: "response", tag: t }),
+        };
+        r.finish()?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_roundtrips_edges() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            let mut out = Vec::new();
+            put_varint(&mut out, v);
+            let mut r = Reader::new(&out);
+            assert_eq!(r.varint().unwrap(), v);
+            r.finish().unwrap();
+        }
+    }
+
+    #[test]
+    fn varint_rejects_overflow() {
+        // 10 continuation bytes followed by more: overflows 64 bits.
+        let bad = [0xFFu8; 11];
+        assert!(matches!(Reader::new(&bad).varint(), Err(ProtocolError::BadVarint)));
+        // 10th byte carrying more than the last bit.
+        let mut bad2 = [0x80u8; 10];
+        bad2[9] = 0x02;
+        assert!(matches!(Reader::new(&bad2).varint(), Err(ProtocolError::BadVarint)));
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let msg = Request::Submit { template: "qr".into(), reuse: true, args: vec![1, 2, 3] };
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &msg.encode()).unwrap();
+        let body = read_frame(&mut io::Cursor::new(&wire)).unwrap();
+        assert_eq!(Request::decode(&body).unwrap(), msg);
+    }
+
+    #[test]
+    fn oversized_header_rejected_before_allocation() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(u32::MAX).to_le_bytes());
+        match read_frame(&mut io::Cursor::new(&wire)) {
+            Err(ProtocolError::Oversized { len, max }) => {
+                assert_eq!(len, u32::MAX as u64);
+                assert_eq!(max, MAX_FRAME);
+            }
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+        let mut fb = FrameBuffer::default();
+        fb.extend(&(u32::MAX).to_le_bytes());
+        assert!(matches!(fb.take_frame(), Err(ProtocolError::Oversized { .. })));
+    }
+
+    #[test]
+    fn write_frame_refuses_oversized_bodies() {
+        let mut wire = Vec::new();
+        let err = write_frame(&mut wire, &vec![0u8; MAX_FRAME + 1]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+        assert!(wire.is_empty(), "no partial header on the wire");
+    }
+
+    #[test]
+    fn frame_buffer_reassembles_split_frames() {
+        let a = Request::Poll { job: 7 };
+        let b = Request::Stats;
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &a.encode()).unwrap();
+        write_frame(&mut wire, &b.encode()).unwrap();
+        let mut fb = FrameBuffer::default();
+        // Feed one byte at a time: frames pop exactly when complete.
+        let mut got = Vec::new();
+        for &byte in &wire {
+            fb.extend(&[byte]);
+            while let Some(body) = fb.take_frame().unwrap() {
+                got.push(Request::decode(&body).unwrap());
+            }
+        }
+        assert_eq!(got, vec![a, b]);
+    }
+
+    #[test]
+    fn status_conversion_roundtrip() {
+        let report = JobReport {
+            job: JobId(9),
+            tenant: TenantId(3),
+            tasks_run: 50,
+            tasks_stolen: 4,
+            exec_ns: 1000,
+            queue_ns: 10,
+            setup_ns: 20,
+            service_ns: 900,
+            dispatch_ns: 5,
+            batched_with: 2,
+            reused_template: true,
+        };
+        let ws = WireStatus::from_status(&JobStatus::Done(report.clone()));
+        match ws.clone().into_status(JobId(9), TenantId(3)) {
+            Some(JobStatus::Done(r)) => {
+                assert_eq!(r.tasks_run, report.tasks_run);
+                assert_eq!(r.total_ns(), report.total_ns());
+                assert_eq!(r.job, report.job);
+                assert_eq!(r.tenant, report.tenant);
+            }
+            other => panic!("bad conversion: {other:?}"),
+        }
+        assert!(WireStatus::Unknown.into_status(JobId(1), TenantId(0)).is_none());
+        // Through the codec too.
+        let resp = Response::Status { job: 9, status: ws };
+        assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut body = Request::Stats.encode();
+        body.push(0);
+        assert!(matches!(
+            Request::decode(&body),
+            Err(ProtocolError::TrailingBytes { extra: 1 })
+        ));
+    }
+
+    #[test]
+    fn error_code_retryability() {
+        assert!(ErrorCode::TenantAtCapacity.retryable());
+        assert!(ErrorCode::ServerSaturated.retryable());
+        assert!(!ErrorCode::BadRequest.retryable());
+        assert!(!ErrorCode::VersionMismatch.retryable());
+    }
+}

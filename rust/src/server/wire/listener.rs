@@ -1,0 +1,426 @@
+//! The network front-end: accepts TCP or Unix-domain connections and
+//! drives the in-process [`SchedServer`] from decoded wire frames.
+//!
+//! Thread model: one non-blocking **acceptor** thread polls the socket;
+//! each accepted connection gets one **reader** thread that decodes
+//! requests, calls the server, and writes responses — a deliberately
+//! small, std-only thread set (no async runtime is available offline).
+//! Connections past the limit are refused with a retryable
+//! [`ErrorCode::ServerSaturated`] frame rather than left hanging, and
+//! all backpressure ([`SubmitError`]) is reported the same way — the
+//! wire edge never silently drops a submission.
+//!
+//! Reads run under a 100 ms timeout so reader threads observe shutdown
+//! promptly; partial reads are reassembled by [`FrameBuffer`], so a
+//! timeout mid-frame cannot desynchronize the stream. Server-side
+//! `Wait` blocks in 50 ms [`SchedServer::wait_timeout`] slices for the
+//! same reason.
+
+use std::io::{self, Read};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::codec::{
+    self, ErrorCode, FrameBuffer, Request, Response, WireStatus, MAX_FRAME, WIRE_VERSION,
+};
+use crate::server::protocol::{JobId, JobSpec, Submission, SubmitError, TenantId};
+use crate::server::SchedServer;
+
+/// Default cap on concurrent connections (each holds one reader thread).
+pub const DEFAULT_MAX_CONNS: usize = 64;
+
+/// Where the wire front-end listens.
+#[derive(Clone, Debug)]
+pub enum ListenAddr {
+    /// `host:port` — port 0 binds an ephemeral port (see
+    /// [`WireListener::local_addr`] for the resolved one).
+    Tcp(String),
+    /// A Unix-domain socket path (created on start, removed on stop).
+    #[cfg(unix)]
+    Unix(std::path::PathBuf),
+}
+
+impl ListenAddr {
+    /// `unix:<path>` selects a Unix-domain socket; anything else is a
+    /// TCP `host:port`.
+    pub fn parse(s: &str) -> Self {
+        #[cfg(unix)]
+        if let Some(path) = s.strip_prefix("unix:") {
+            return ListenAddr::Unix(path.into());
+        }
+        ListenAddr::Tcp(s.to_string())
+    }
+}
+
+/// A connected transport: both socket families behind one object.
+pub(crate) trait WireStream: Read + io::Write + Send {
+    fn set_read_timeout_opt(&self, d: Option<Duration>) -> io::Result<()>;
+}
+
+impl WireStream for TcpStream {
+    fn set_read_timeout_opt(&self, d: Option<Duration>) -> io::Result<()> {
+        self.set_read_timeout(d)
+    }
+}
+
+#[cfg(unix)]
+impl WireStream for UnixStream {
+    fn set_read_timeout_opt(&self, d: Option<Duration>) -> io::Result<()> {
+        self.set_read_timeout(d)
+    }
+}
+
+/// The bound socket, non-blocking so the acceptor can poll shutdown.
+enum Acceptor {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener, std::path::PathBuf),
+}
+
+impl Acceptor {
+    fn bind(addr: &ListenAddr) -> io::Result<(Self, String)> {
+        match addr {
+            ListenAddr::Tcp(hp) => {
+                let l = TcpListener::bind(hp.as_str())?;
+                l.set_nonblocking(true)?;
+                let local = l.local_addr()?.to_string();
+                Ok((Acceptor::Tcp(l), local))
+            }
+            #[cfg(unix)]
+            ListenAddr::Unix(path) => {
+                // A stale socket file from a dead server blocks bind.
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)?;
+                l.set_nonblocking(true)?;
+                Ok((Acceptor::Unix(l, path.clone()), format!("unix:{}", path.display())))
+            }
+        }
+    }
+
+    /// `Ok(None)` when no connection is pending.
+    fn try_accept(&self) -> io::Result<Option<Box<dyn WireStream>>> {
+        match self {
+            Acceptor::Tcp(l) => match l.accept() {
+                Ok((s, _)) => {
+                    // Accepted sockets may inherit the listener's
+                    // non-blocking mode on some platforms; reset it.
+                    s.set_nonblocking(false)?;
+                    let _ = s.set_nodelay(true);
+                    Ok(Some(Box::new(s)))
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e),
+            },
+            #[cfg(unix)]
+            Acceptor::Unix(l, _) => match l.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)?;
+                    Ok(Some(Box::new(s)))
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e),
+            },
+        }
+    }
+}
+
+impl Drop for Acceptor {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        {
+            if let Acceptor::Unix(_, path) = self {
+                let _ = std::fs::remove_file(&*path);
+            }
+        }
+    }
+}
+
+struct ListenerShared {
+    server: Arc<SchedServer>,
+    shutdown: AtomicBool,
+    active: AtomicUsize,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+    max_conns: usize,
+}
+
+/// Handle of a running wire front-end. Dropping (or
+/// [`WireListener::shutdown`]) stops accepting, joins every connection
+/// thread, and removes the Unix socket file; the [`SchedServer`] itself
+/// is left running — it belongs to the caller.
+pub struct WireListener {
+    shared: Arc<ListenerShared>,
+    acceptor: Option<JoinHandle<()>>,
+    local: String,
+}
+
+impl WireListener {
+    /// Bind `addr` and start serving `server` over it.
+    pub fn start(server: Arc<SchedServer>, addr: &ListenAddr) -> io::Result<Self> {
+        Self::start_with_limit(server, addr, DEFAULT_MAX_CONNS)
+    }
+
+    /// [`WireListener::start`] with an explicit connection limit.
+    pub fn start_with_limit(
+        server: Arc<SchedServer>,
+        addr: &ListenAddr,
+        max_conns: usize,
+    ) -> io::Result<Self> {
+        let (acceptor, local) = Acceptor::bind(addr)?;
+        let shared = Arc::new(ListenerShared {
+            server,
+            shutdown: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            conns: Mutex::new(Vec::new()),
+            max_conns: max_conns.max(1),
+        });
+        let handle = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("qs-wire-accept".into())
+                .spawn(move || accept_loop(&shared, acceptor))
+                .expect("spawning wire acceptor")
+        };
+        Ok(Self { shared, acceptor: Some(handle), local })
+    }
+
+    /// The resolved listen address: `ip:port`, or `unix:<path>`.
+    pub fn local_addr(&self) -> &str {
+        &self.local
+    }
+
+    /// Connections currently being served (racy snapshot).
+    pub fn active_connections(&self) -> usize {
+        self.shared.active.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting and join every connection thread.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        let conns: Vec<_> = std::mem::take(&mut *self.shared.conns.lock().unwrap());
+        for c in conns {
+            let _ = c.join();
+        }
+    }
+}
+
+impl Drop for WireListener {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(shared: &Arc<ListenerShared>, acceptor: Acceptor) {
+    while !shared.shutdown.load(Ordering::Acquire) {
+        match acceptor.try_accept() {
+            Ok(Some(mut stream)) => {
+                if shared.active.load(Ordering::Relaxed) >= shared.max_conns {
+                    // Refuse with a retryable error instead of hanging
+                    // the client in connect-accepted-but-silent limbo.
+                    let refusal = Response::Error {
+                        code: ErrorCode::ServerSaturated,
+                        aux: shared.max_conns as u64,
+                        message: "connection limit reached; retry later".into(),
+                    };
+                    let _ = codec::write_frame(&mut *stream, &refusal.encode());
+                    continue;
+                }
+                shared.active.fetch_add(1, Ordering::Relaxed);
+                let shared2 = Arc::clone(shared);
+                let spawned = std::thread::Builder::new().name("qs-wire-conn".into()).spawn(
+                    move || {
+                        serve_conn(&shared2, &mut *stream);
+                        shared2.active.fetch_sub(1, Ordering::Relaxed);
+                    },
+                );
+                match spawned {
+                    Ok(h) => {
+                        let mut conns = shared.conns.lock().unwrap();
+                        // Reap finished threads so a long-lived server's
+                        // handle list stays bounded by live connections.
+                        conns.retain(|c| !c.is_finished());
+                        conns.push(h);
+                    }
+                    Err(_) => {
+                        shared.active.fetch_sub(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            Ok(None) => std::thread::sleep(Duration::from_millis(5)),
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+/// Serve one connection until EOF, `Bye`, a protocol violation, or
+/// listener shutdown. Tenant identity is per-connection: fixed by the
+/// `Hello` handshake, applied to every submission after it.
+fn serve_conn(shared: &ListenerShared, stream: &mut dyn WireStream) {
+    let _ = stream.set_read_timeout_opt(Some(Duration::from_millis(100)));
+    let mut fb = FrameBuffer::default();
+    let mut tmp = [0u8; 4096];
+    let mut tenant: Option<TenantId> = None;
+    loop {
+        // Assemble one frame, observing shutdown between read slices.
+        let body = loop {
+            match fb.take_frame() {
+                Err(e) => {
+                    send_err(stream, ErrorCode::BadRequest, 0, &e.to_string());
+                    return;
+                }
+                Ok(Some(b)) => break b,
+                Ok(None) => {}
+            }
+            if shared.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            match stream.read(&mut tmp) {
+                Ok(0) => return,
+                Ok(n) => fb.extend(&tmp[..n]),
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut => {}
+                Err(_) => return,
+            }
+        };
+        let req = match Request::decode(&body) {
+            Ok(r) => r,
+            Err(e) => {
+                send_err(stream, ErrorCode::BadRequest, 0, &e.to_string());
+                return;
+            }
+        };
+        let resp = match req {
+            Request::Hello { version, tenant: t } => {
+                if tenant.is_some() {
+                    // Tenant identity is fixed per connection; a second
+                    // Hello rebinding it would let one socket spread
+                    // load across other tenants' caps and weights.
+                    send_err(
+                        stream,
+                        ErrorCode::BadRequest,
+                        0,
+                        "Hello already completed on this connection",
+                    );
+                    return;
+                }
+                if version != WIRE_VERSION {
+                    send_err(
+                        stream,
+                        ErrorCode::VersionMismatch,
+                        WIRE_VERSION as u64,
+                        &format!("server speaks wire version {WIRE_VERSION}"),
+                    );
+                    return;
+                }
+                tenant = Some(TenantId(t));
+                Response::HelloOk { version: WIRE_VERSION, tenant: t }
+            }
+            Request::Bye => return,
+            other => {
+                let Some(tenant) = tenant else {
+                    send_err(stream, ErrorCode::NeedHello, 0, "Hello must be the first message");
+                    return;
+                };
+                match other {
+                    Request::Submit { template, reuse, args } => {
+                        let submission = if reuse {
+                            Submission::Template(template)
+                        } else {
+                            Submission::Rebuild(template)
+                        };
+                        match shared.server.try_submit(JobSpec { tenant, submission, args }) {
+                            Ok(id) => Response::Submitted { job: id.0 },
+                            Err(e) => reject(&e),
+                        }
+                    }
+                    Request::Poll { job } => Response::Status {
+                        job,
+                        status: shared
+                            .server
+                            .poll(JobId(job))
+                            .map(|s| WireStatus::from_status(&s))
+                            .unwrap_or(WireStatus::Unknown),
+                    },
+                    Request::Wait { job } => {
+                        let status = loop {
+                            match shared
+                                .server
+                                .wait_timeout(JobId(job), Duration::from_millis(50))
+                            {
+                                None => break WireStatus::Unknown,
+                                Some(s) if s.is_terminal() => break WireStatus::from_status(&s),
+                                Some(_) => {
+                                    if shared.shutdown.load(Ordering::Acquire) {
+                                        send_err(
+                                            stream,
+                                            ErrorCode::ShuttingDown,
+                                            0,
+                                            "listener shutting down",
+                                        );
+                                        return;
+                                    }
+                                }
+                            }
+                        };
+                        Response::Status { job, status }
+                    }
+                    Request::Cancel { job } => {
+                        Response::Cancelled { job, ok: shared.server.cancel(JobId(job)) }
+                    }
+                    Request::Stats => {
+                        // Tenant ids are client-declared, so a snapshot
+                        // can in principle outgrow one frame; answer
+                        // with a clean error instead of desyncing.
+                        let json = shared.server.stats().to_json();
+                        if json.len() + 16 > MAX_FRAME {
+                            Response::Error {
+                                code: ErrorCode::Internal,
+                                aux: json.len() as u64,
+                                message: "stats snapshot exceeds one frame".into(),
+                            }
+                        } else {
+                            Response::StatsJson { json }
+                        }
+                    }
+                    Request::Hello { .. } | Request::Bye => unreachable!("handled above"),
+                }
+            }
+        };
+        if codec::write_frame(stream, &resp.encode()).is_err() {
+            return;
+        }
+    }
+}
+
+/// Map an admission rejection onto its wire error (all retryable).
+fn reject(e: &SubmitError) -> Response {
+    match e {
+        SubmitError::TenantAtCapacity { cap, .. } => Response::Error {
+            code: ErrorCode::TenantAtCapacity,
+            aux: *cap as u64,
+            message: e.to_string(),
+        },
+        SubmitError::ServerSaturated { max_queued } => Response::Error {
+            code: ErrorCode::ServerSaturated,
+            aux: *max_queued as u64,
+            message: e.to_string(),
+        },
+    }
+}
+
+fn send_err(stream: &mut dyn WireStream, code: ErrorCode, aux: u64, message: &str) {
+    let resp = Response::Error { code, aux, message: message.to_string() };
+    let _ = codec::write_frame(stream, &resp.encode());
+}

@@ -1,0 +1,30 @@
+//! Remote access to the scheduling service: a std-only wire protocol
+//! ([`codec`]) and the socket front-end that serves it ([`listener`]).
+//!
+//! The design constraint is that **kernels never cross the wire**: a
+//! remote submission names a template registered in-process (plus
+//! opaque [`crate::coordinator::Payload`]-typed argument bytes for
+//! parameterized templates), so the network edge moves only names,
+//! numbers, and statuses — no code, no closures, no serde.
+//!
+//! ```text
+//!   RemoteClient ──frames──▶ WireListener ──JobSpec──▶ SchedServer
+//!   (rust/src/client)        acceptor + per-conn       (in-process,
+//!    connect/submit/          reader threads             unchanged)
+//!    poll/wait/cancel/        tenant fixed by Hello
+//!    stats                    backpressure → Error frames
+//! ```
+//!
+//! Backpressure is part of the protocol: per-tenant caps
+//! (`TenantAtCapacity`) and the global bounded admission queue
+//! (`ServerSaturated`) come back as retryable [`ErrorCode`]s instead of
+//! hangs or drops. See ARCHITECTURE.md §Wire protocol for the frame
+//! layout, the message table, and the versioning rule.
+
+pub mod codec;
+pub mod listener;
+
+pub use codec::{
+    ErrorCode, ProtocolError, Request, Response, WireReport, WireStatus, MAX_FRAME, WIRE_VERSION,
+};
+pub use listener::{ListenAddr, WireListener, DEFAULT_MAX_CONNS};

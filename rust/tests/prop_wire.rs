@@ -1,0 +1,215 @@
+//! Property tests for the wire codec (100 seeds, crate-own PRNG — no
+//! proptest in the offline registry): every message type round-trips
+//! through encode → frame → decode, and truncated / corrupted /
+//! oversized frames return `ProtocolError` — never a panic, never an
+//! allocation driven by attacker-controlled lengths.
+
+use std::io::Cursor;
+
+use quicksched::server::wire::codec::{
+    read_frame, write_frame, FrameBuffer, ProtocolError, Request, Response, WireReport,
+    WireStatus, MAX_FRAME,
+};
+use quicksched::util::rng::Rng;
+
+const SEEDS: u64 = 100;
+
+fn rand_string(rng: &mut Rng, max_len: usize) -> String {
+    let n = rng.index(max_len + 1);
+    (0..n)
+        .map(|_| {
+            // Mix ASCII with multi-byte chars so UTF-8 length ≠ char count.
+            if rng.chance(0.1) {
+                'λ'
+            } else {
+                (b'a' + rng.index(26) as u8) as char
+            }
+        })
+        .collect()
+}
+
+fn rand_bytes(rng: &mut Rng, max_len: usize) -> Vec<u8> {
+    let n = rng.index(max_len + 1);
+    (0..n).map(|_| rng.below(256) as u8).collect()
+}
+
+fn rand_request(rng: &mut Rng) -> Request {
+    match rng.index(7) {
+        0 => Request::Hello {
+            version: rng.next_u64() as u32,
+            tenant: rng.next_u64() as u32,
+        },
+        1 => Request::Submit {
+            template: rand_string(rng, 40),
+            reuse: rng.chance(0.5),
+            args: rand_bytes(rng, 64),
+        },
+        2 => Request::Poll { job: rng.next_u64() },
+        3 => Request::Wait { job: rng.next_u64() },
+        4 => Request::Cancel { job: rng.next_u64() },
+        5 => Request::Stats,
+        _ => Request::Bye,
+    }
+}
+
+fn rand_status(rng: &mut Rng) -> WireStatus {
+    match rng.index(6) {
+        0 => WireStatus::Unknown,
+        1 => WireStatus::Queued,
+        2 => WireStatus::Running,
+        3 => WireStatus::Done(WireReport {
+            tasks_run: rng.next_u64(),
+            tasks_stolen: rng.next_u64(),
+            exec_ns: rng.next_u64(),
+            queue_ns: rng.next_u64(),
+            setup_ns: rng.next_u64(),
+            service_ns: rng.next_u64(),
+            dispatch_ns: rng.next_u64(),
+            batched_with: rng.next_u64(),
+            reused_template: rng.chance(0.5),
+        }),
+        4 => WireStatus::Failed(rand_string(rng, 60)),
+        _ => WireStatus::Cancelled,
+    }
+}
+
+fn rand_response(rng: &mut Rng) -> Response {
+    use quicksched::server::wire::codec::ErrorCode;
+    match rng.index(6) {
+        0 => Response::HelloOk {
+            version: rng.next_u64() as u32,
+            tenant: rng.next_u64() as u32,
+        },
+        1 => Response::Submitted { job: rng.next_u64() },
+        2 => Response::Status { job: rng.next_u64(), status: rand_status(rng) },
+        3 => Response::Cancelled { job: rng.next_u64(), ok: rng.chance(0.5) },
+        4 => Response::StatsJson { json: rand_string(rng, 200) },
+        _ => {
+            let codes = [
+                ErrorCode::TenantAtCapacity,
+                ErrorCode::ServerSaturated,
+                ErrorCode::NeedHello,
+                ErrorCode::BadRequest,
+                ErrorCode::VersionMismatch,
+                ErrorCode::ShuttingDown,
+                ErrorCode::Internal,
+            ];
+            Response::Error {
+                code: codes[rng.index(codes.len())],
+                aux: rng.next_u64(),
+                message: rand_string(rng, 80),
+            }
+        }
+    }
+}
+
+#[test]
+fn requests_roundtrip_over_frames() {
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed);
+        for _ in 0..20 {
+            let msg = rand_request(&mut rng);
+            // Body-level roundtrip.
+            assert_eq!(Request::decode(&msg.encode()).unwrap(), msg, "seed {seed}");
+            // Frame-level roundtrip.
+            let mut wire = Vec::new();
+            write_frame(&mut wire, &msg.encode()).unwrap();
+            let body = read_frame(&mut Cursor::new(&wire)).unwrap();
+            assert_eq!(Request::decode(&body).unwrap(), msg, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn responses_roundtrip_over_frames() {
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed ^ 0xA5A5);
+        for _ in 0..20 {
+            let msg = rand_response(&mut rng);
+            assert_eq!(Response::decode(&msg.encode()).unwrap(), msg, "seed {seed}");
+            let mut wire = Vec::new();
+            write_frame(&mut wire, &msg.encode()).unwrap();
+            let body = read_frame(&mut Cursor::new(&wire)).unwrap();
+            assert_eq!(Response::decode(&body).unwrap(), msg, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn every_truncation_is_a_clean_error() {
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed ^ 0x77);
+        let req = rand_request(&mut rng);
+        let body = req.encode();
+        for cut in 0..body.len() {
+            assert!(
+                Request::decode(&body[..cut]).is_err(),
+                "seed {seed}: strict prefix of {req:?} decoded"
+            );
+        }
+        let rsp = rand_response(&mut rng);
+        let body = rsp.encode();
+        for cut in 0..body.len() {
+            assert!(
+                Response::decode(&body[..cut]).is_err(),
+                "seed {seed}: strict prefix of {rsp:?} decoded"
+            );
+        }
+    }
+}
+
+#[test]
+fn corrupted_and_garbage_bodies_never_panic() {
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed ^ 0xC0C0);
+        // Single-byte corruption of valid messages: Ok-or-Err, no panic.
+        let mut body = rand_request(&mut rng).encode();
+        if !body.is_empty() {
+            let i = rng.index(body.len());
+            body[i] ^= (1 + rng.below(255)) as u8;
+            let _ = Request::decode(&body);
+            let _ = Response::decode(&body);
+        }
+        // Pure garbage of random lengths.
+        let garbage = rand_bytes(&mut rng, 96);
+        let _ = Request::decode(&garbage);
+        let _ = Response::decode(&garbage);
+    }
+}
+
+#[test]
+fn hostile_lengths_never_over_allocate() {
+    // A header declaring a body larger than MAX_FRAME is rejected from
+    // the 4 header bytes alone — read_frame returns before allocating.
+    for declared in [MAX_FRAME as u64 + 1, u32::MAX as u64] {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(declared as u32).to_le_bytes());
+        match read_frame(&mut Cursor::new(&wire)) {
+            Err(ProtocolError::Oversized { len, max }) => {
+                assert_eq!(len, declared);
+                assert_eq!(max, MAX_FRAME);
+            }
+            other => panic!("declared {declared}: expected Oversized, got {other:?}"),
+        }
+        let mut fb = FrameBuffer::default();
+        fb.extend(&(declared as u32).to_le_bytes());
+        assert!(matches!(fb.take_frame(), Err(ProtocolError::Oversized { .. })));
+    }
+    // Inside a body, a field length larger than the remaining bytes is
+    // Truncated — the Reader slices the existing buffer, it never
+    // allocates from the declared length.
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed ^ 0xF00D);
+        let mut body = vec![1u8]; // Submit tag
+        // template-string length varint claiming ~u64::MAX bytes.
+        for _ in 0..9 {
+            body.push(0xFF);
+        }
+        body.push(0x01);
+        body.extend(rand_bytes(&mut rng, 16));
+        assert!(matches!(
+            Request::decode(&body),
+            Err(ProtocolError::Truncated) | Err(ProtocolError::BadVarint)
+        ));
+    }
+}

@@ -232,6 +232,72 @@ fn fused_batches_publish_each_status_exactly_once() {
     server.shutdown();
 }
 
+/// Adaptive batching: with `with_adaptive_batch(4)` and a backlog of
+/// tiny jobs created behind a slow build (same blocker trick as the
+/// fixed-K test), sweeps choose K > 1 from the observed depth — fused
+/// widths appear in the reports and in the stats histogram, bounded by
+/// the ceiling.
+#[test]
+fn adaptive_batching_fuses_backlog_and_records_histogram() {
+    use quicksched::coordinator::SchedConfig;
+    use quicksched::server::gated_template;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let server = SchedServer::start(
+        ServerConfig::new(2).with_seed(41).with_adaptive_batch(4).with_max_inflight(32),
+    );
+    server.register_template("tiny", synthetic_template(30, 3, 5, 0));
+    // The blocker both *builds* slowly (pinning the dispatcher while
+    // the tiny backlog forms) and *executes* gated (no completion can
+    // land before the first tiny sweep, so the service EWMA is still 0
+    // and the adaptive rule is in its optimistic depth-bounded regime —
+    // the decisive first sweep fuses deterministically).
+    let gate = Arc::new(AtomicBool::new(false));
+    {
+        let inner = gated_template(Arc::clone(&gate));
+        server.register_template(
+            "slowbuild",
+            Arc::new(move |config: &SchedConfig| {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+                (inner)(config)
+            }),
+        );
+    }
+    let blocker = server.submit(JobSpec::rebuild(TenantId(9), "slowbuild"));
+    let ids: Vec<_> = (0..12)
+        .map(|_| server.submit(JobSpec::template(TenantId(0), "tiny")))
+        .collect();
+    let mut widths = Vec::new();
+    for id in &ids {
+        match server.wait(*id) {
+            JobStatus::Done(r) => widths.push(r.batched_with),
+            other => panic!("job {id} ended as {other:?}"),
+        }
+    }
+    gate.store(true, Ordering::Release);
+    assert!(matches!(server.wait(blocker), JobStatus::Done(_)));
+    server.drain();
+
+    assert!(
+        widths.iter().any(|&w| w >= 2),
+        "adaptive sweeps never fused a 12-deep backlog of ~0-cost jobs: {widths:?}"
+    );
+    assert!(widths.iter().all(|&w| w <= 4), "adaptive K exceeded its ceiling: {widths:?}");
+    let snap = server.stats();
+    assert!(snap.batch_hist.len() >= 4);
+    let sweeps: u64 = snap.batch_hist.iter().sum();
+    assert!(sweeps >= 1, "sweeps must be recorded");
+    assert!(
+        snap.batch_hist[1..].iter().sum::<u64>() >= 1,
+        "at least one fused sweep in the histogram: {:?}",
+        snap.batch_hist
+    );
+    // Every completed job appears exactly once regardless of fusion.
+    assert_eq!(snap.completed(), 13);
+    server.shutdown();
+}
+
 /// Sharded dispatch serves many concurrent tiny jobs to completion and
 /// leaves the shard layer empty (no leaked entries, hint back to zero).
 #[test]
