@@ -5,8 +5,8 @@
 
 use quicksched::bench::harness::{bench, Table};
 use quicksched::coordinator::{
-    queue::Queue, resource::ResTable, GraphBuilder, SchedConfig, Scheduler, TaskFlags, TaskId,
-    UnitCost,
+    queue::Queue, resource::ResTable, CompiledGraph, GraphBuilder, SchedConfig, Scheduler,
+    TaskFlags, TaskId, UnitCost,
 };
 
 fn main() {
@@ -20,6 +20,8 @@ fn main() {
         .map(|i| quicksched::coordinator::Task::new(0, TaskFlags::default(), vec![], i as i64 + 1))
         .collect();
     let res = ResTable::new();
+    // The queue scans the frozen CSR layout, not the builder records.
+    let g = CompiledGraph::freeze(&tasks, &res).unwrap();
     let s = bench(
         "queue_put_get_10k",
         || {
@@ -27,7 +29,7 @@ fn main() {
             for i in 0..n {
                 q.put((i * 7 % 1000) as i64, TaskId(i as u32));
             }
-            while q.get(&tasks, &res).is_some() {}
+            while q.get(&g, &res).is_some() {}
         },
         2,
         samples,

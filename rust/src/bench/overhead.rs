@@ -2,10 +2,22 @@
 //! (tasks + resources + dependencies) at 7.2 ms / ≤3% of total for QR
 //! and 51.3 ms for Barnes-Hut. This driver measures our build times and
 //! their fraction of a single-core solve.
+//!
+//! Also home of **`repro bench-core`** ([`run_core`]): the
+//! core-scheduler overhead trajectory. It drives empty-kernel runs of
+//! the synthetic, QR, and Barnes-Hut graphs through the real threaded
+//! executor and reports the ns-per-task dispatch overhead (the paper's
+//! Fig. 13 claim: per-task overhead stays in the microsecond range) and
+//! the mean `gettask` heap-scan length, writing the repo's first
+//! committed-core-path benchmark JSON to `bench_out/BENCH_core.json`.
+//! CI runs the `--quick` variant and uploads the JSON as an artifact;
+//! `rust/tests/perf_guard.rs` gates gross regressions with a ≥10×
+//! headroom ceiling.
 
+use std::io::Write as _;
 use std::time::Instant;
 
-use crate::coordinator::{SchedConfig, Scheduler};
+use crate::coordinator::{GraphBuilder, RunMetrics, SchedConfig, Scheduler};
 use crate::nbody;
 use crate::qr;
 
@@ -86,6 +98,198 @@ pub fn run(opts: &OverheadOpts) -> Table {
     table
 }
 
+// ----------------------------------------------------------------------
+// bench-core: ns-per-task dispatch overhead on the frozen CSR layout
+// ----------------------------------------------------------------------
+
+pub struct CoreOpts {
+    /// Worker threads for the empty-kernel runs (1 = the cleanest
+    /// pure-overhead number; CI uses 1).
+    pub threads: usize,
+    /// Timed repetitions per graph (after one warmup run).
+    pub iters: usize,
+    pub syn_tasks: usize,
+    pub qr_tiles: usize,
+    pub nb_n: usize,
+    pub nb_n_max: usize,
+    pub nb_n_task: usize,
+    /// Output path for the JSON trajectory (`None` = `bench_out/BENCH_core.json`).
+    pub json: Option<std::path::PathBuf>,
+}
+
+impl Default for CoreOpts {
+    fn default() -> Self {
+        Self {
+            threads: 1,
+            iters: 5,
+            syn_tasks: 20_000,
+            qr_tiles: 16,
+            nb_n: 50_000,
+            nb_n_max: 100,
+            nb_n_task: 1200,
+            json: None,
+        }
+    }
+}
+
+impl CoreOpts {
+    pub fn quick() -> Self {
+        Self {
+            iters: 3,
+            syn_tasks: 4_000,
+            qr_tiles: 8,
+            nb_n: 20_000,
+            ..Self::default()
+        }
+    }
+}
+
+/// One graph's measured core overhead.
+pub struct CoreRow {
+    pub graph: &'static str,
+    pub tasks: usize,
+    pub dependencies: usize,
+    pub threads: usize,
+    /// `gettask_ns / tasks_run` of the final empty-kernel run: what the
+    /// scheduler itself costs per dispatched task.
+    pub dispatch_ns_per_task: f64,
+    /// Heap entries scanned per `gettask` probe (hits + misses) across
+    /// the timed runs.
+    pub mean_scan_len: f64,
+    pub elapsed_ms: f64,
+}
+
+/// Synthetic core-overhead workload: `n` tasks over 64 flat resources,
+/// every 4th task locking one (a few hundred tasks per resource, like
+/// the BH cell locks) and a sparse forward dependency chain so the
+/// completion path is exercised too. Deterministic.
+fn build_synthetic(n: usize, nq: usize) -> Scheduler {
+    let mut s = Scheduler::new(SchedConfig::new(nq)).unwrap();
+    let rs: Vec<_> = (0..64).map(|i| s.add_resource(None, (i % nq.max(1)) as i32)).collect();
+    let mut prev = None;
+    for i in 0..n {
+        let mut spec = s.task(0u32).cost(1 + (i % 13) as i64);
+        if i % 4 == 0 {
+            spec = spec.lock(rs[i % 64]);
+        }
+        if i % 3 == 0 {
+            spec = spec.after(prev);
+        }
+        let t = spec.spawn();
+        prev = Some(t);
+    }
+    s.prepare().unwrap();
+    s
+}
+
+/// Time `iters` empty-kernel runs of `sched` (one untimed warmup) and
+/// fold the run metrics + queue-scan deltas into a [`CoreRow`].
+fn measure_core(graph: &'static str, mut sched: Scheduler, opts: &CoreOpts) -> CoreRow {
+    let threads = opts.threads.max(1);
+    let stats = sched.stats();
+    sched.run(threads, |_| {}).unwrap(); // warmup
+    let (g0, m0, s0, ..) = sched.queue_stats();
+    let mut last: RunMetrics = RunMetrics::default();
+    let t0 = Instant::now();
+    for _ in 0..opts.iters.max(1) {
+        last = sched.run(threads, |_| {}).unwrap();
+    }
+    let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3 / opts.iters.max(1) as f64;
+    let (g1, m1, s1, ..) = sched.queue_stats();
+    let probes = (g1 - g0) + (m1 - m0);
+    CoreRow {
+        graph,
+        tasks: stats.tasks,
+        dependencies: stats.dependencies,
+        threads,
+        dispatch_ns_per_task: last.gettask_ns as f64 / last.tasks_run.max(1) as f64,
+        mean_scan_len: (s1 - s0) as f64 / probes.max(1) as f64,
+        elapsed_ms,
+    }
+}
+
+/// `repro bench-core`: empty-kernel dispatch overhead on the synthetic,
+/// QR, and Barnes-Hut graphs. Renders a table, writes
+/// `core_overhead.csv` and the `BENCH_core.json` trajectory.
+pub fn run_core(opts: &CoreOpts) -> (Table, Vec<CoreRow>) {
+    let nq = opts.threads.max(1);
+    let mut rows = Vec::new();
+
+    rows.push(measure_core("synthetic", build_synthetic(opts.syn_tasks, nq), opts));
+
+    let mut sched = Scheduler::new(SchedConfig::new(nq)).unwrap();
+    qr::build_tasks(&mut sched, opts.qr_tiles, opts.qr_tiles);
+    sched.prepare().unwrap();
+    rows.push(measure_core("qr", sched, opts));
+
+    let tree = nbody::Octree::build(nbody::uniform_cloud(opts.nb_n, 9), opts.nb_n_max);
+    let state = nbody::NBodyState::from_tree(tree);
+    let mut sched = Scheduler::new(SchedConfig::new(nq)).unwrap();
+    nbody::build_tasks(&mut sched, &state, opts.nb_n_task);
+    sched.prepare().unwrap();
+    rows.push(measure_core("barnes-hut", sched, opts));
+
+    let mut table = Table::new(&[
+        "graph", "tasks", "deps", "threads", "dispatch_ns_per_task", "mean_scan_len", "run_ms",
+    ]);
+    for r in &rows {
+        table.row(&[
+            r.graph.into(),
+            r.tasks.to_string(),
+            r.dependencies.to_string(),
+            r.threads.to_string(),
+            format!("{:.1}", r.dispatch_ns_per_task),
+            format!("{:.2}", r.mean_scan_len),
+            format!("{:.3}", r.elapsed_ms),
+        ]);
+    }
+    let json_path = opts
+        .json
+        .clone()
+        .unwrap_or_else(|| out_dir().join("BENCH_core.json"));
+    // The CSV rides next to the JSON, so a redirected run (e.g. the
+    // unit test) never clobbers the real bench_out/ trajectory.
+    let csv_path = json_path
+        .parent()
+        .map(|d| d.join("core_overhead.csv"))
+        .unwrap_or_else(|| out_dir().join("core_overhead.csv"));
+    let _ = table.write_csv(&csv_path);
+    if let Err(e) = write_core_json(&json_path, opts, &rows) {
+        eprintln!("could not write {}: {e}", json_path.display());
+    } else {
+        println!("wrote {}", json_path.display());
+    }
+    (table, rows)
+}
+
+fn write_core_json(
+    path: &std::path::Path,
+    opts: &CoreOpts,
+    rows: &[CoreRow],
+) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{{")?;
+    writeln!(f, "\"bench\": \"core\",")?;
+    writeln!(f, "\"threads\": {}, \"iters\": {},", opts.threads.max(1), opts.iters.max(1))?;
+    writeln!(f, "\"graphs\": [")?;
+    for (i, r) in rows.iter().enumerate() {
+        let sep = if i + 1 < rows.len() { "," } else { "" };
+        writeln!(
+            f,
+            "{{\"graph\": \"{}\", \"tasks\": {}, \"dependencies\": {}, \
+             \"dispatch_ns_per_task\": {:.1}, \"mean_gettask_scan_len\": {:.3}, \
+             \"run_ms\": {:.3}}}{sep}",
+            r.graph, r.tasks, r.dependencies, r.dispatch_ns_per_task, r.mean_scan_len, r.elapsed_ms
+        )?;
+    }
+    writeln!(f, "]")?;
+    writeln!(f, "}}")?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,4 +301,33 @@ mod tests {
         assert!(rendered.contains("qr"));
         assert!(rendered.contains("barnes-hut"));
     }
+
+    #[test]
+    fn bench_core_emits_rows_and_json() {
+        let dir = std::env::temp_dir().join(format!("qs_core_{}", std::process::id()));
+        let json = dir.join("BENCH_core.json");
+        let opts = CoreOpts {
+            iters: 1,
+            syn_tasks: 400,
+            qr_tiles: 4,
+            nb_n: 4_000,
+            nb_n_task: 400,
+            json: Some(json.clone()),
+            ..CoreOpts::quick()
+        };
+        let (table, rows) = run_core(&opts);
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.tasks > 0, "{}: graph must be non-trivial", r.graph);
+            assert!(r.dispatch_ns_per_task >= 0.0);
+            assert!(r.mean_scan_len >= 0.99, "{}: every probe scans >= 1", r.graph);
+        }
+        let rendered = table.render();
+        assert!(rendered.contains("synthetic") && rendered.contains("barnes-hut"));
+        let txt = std::fs::read_to_string(&json).unwrap();
+        assert!(txt.contains("\"bench\": \"core\""));
+        assert!(txt.contains("dispatch_ns_per_task"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
 }
+

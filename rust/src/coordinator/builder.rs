@@ -1,17 +1,32 @@
-//! Graph-construction abstraction: the applications (QR, Cholesky,
-//! Barnes-Hut) emit their task graphs through this trait, so the same
-//! generator can target the real [`Scheduler`] or the dependency-only
-//! baseline ([`crate::baselines::DepOnlyBuilder`]) for the Fig. 8/11
-//! comparisons.
+//! Graph construction: the build-side abstraction and the freeze into
+//! the flat CSR/SoA layout.
 //!
-//! Graphs are built through the typed [`TaskSpec`] entry point
-//! ([`GraphBuilder::task`]); the untyped byte-payload
-//! [`GraphBuilder::add_task`] remains as a deprecated shim.
+//! Two things live here:
+//!
+//! * [`GraphBuilder`] — the trait the applications (QR, Cholesky,
+//!   Barnes-Hut) emit their task graphs through, so the same generator
+//!   can target the real [`Scheduler`] or the dependency-only baseline
+//!   ([`crate::baselines::DepOnlyBuilder`]) for the Fig. 8/11
+//!   comparisons. Graphs are built through the typed [`TaskSpec`] entry
+//!   point ([`GraphBuilder::task`]); the untyped byte-payload
+//!   [`GraphBuilder::add_task`] remains as a deprecated shim.
+//! * [`CompiledGraph::freeze`] / [`CompiledGraph::thaw`] — the boundary
+//!   between the builder's per-task `Vec`s and the frozen arena layout
+//!   the runtime consumes (see `compiled.rs`). This module is
+//!   deliberately the *only* place task adjacency `Vec`s are iterated;
+//!   every runtime consumer goes through the span accessors on
+//!   [`CompiledGraph`].
 
-use super::resource::ResId;
+use std::sync::Arc;
+
+use super::compiled::{CompiledGraph, FrozenGraph, Span, TaskRunState};
+use super::error::{Result, SchedError};
+use super::graph::GraphStats;
+use super::resource::{ResId, ResTable};
 use super::scheduler::{ResHandle, Scheduler, TaskHandle};
 use super::spec::TaskSpec;
-use super::task::{TaskFlags, TaskType};
+use super::task::{Task, TaskFlags, TaskType};
+use super::weights::compute_weights;
 
 pub trait GraphBuilder {
     /// Emit one task with explicit flags and owned payload bytes — the
@@ -87,9 +102,223 @@ impl GraphBuilder for Scheduler {
     }
 }
 
+// ----------------------------------------------------------------------
+// The freeze: builder Vec<Task> → CSR/SoA CompiledGraph
+// ----------------------------------------------------------------------
+
+impl CompiledGraph {
+    /// Compile the builder's task records into the flat layout:
+    /// validate handles, sort + dedup each task's lock set (dropping
+    /// locks subsumed by a locked hierarchical ancestor — the §3.3
+    /// discipline), lay all adjacency lists into one `u32` arena and
+    /// all payloads into one byte arena, precompute initial wait counts
+    /// and the root list, and compute critical-path weights (which also
+    /// detects cycles).
+    ///
+    /// The builder records are only *read*; on error (bad handle,
+    /// cycle) the caller's build state is untouched.
+    pub fn freeze(tasks: &[Task], res: &ResTable) -> Result<Self> {
+        let n = tasks.len();
+        let nr = res.len();
+        // Structural validation before any copying: every handle in
+        // range, no self-dependencies. (Duplicate unlock edges are
+        // legal in the paper's C code — they double-decrement — and
+        // pass through unchanged.)
+        for (i, t) in tasks.iter().enumerate() {
+            for u in &t.unlocks {
+                if u.idx() >= n {
+                    return Err(SchedError::BadTask(u.0, n));
+                }
+                if u.idx() == i {
+                    return Err(SchedError::SelfDependency(i as u32));
+                }
+            }
+            for r in t.locks.iter().chain(t.uses.iter()) {
+                if r.idx() >= nr {
+                    return Err(SchedError::BadRes(r.0, nr));
+                }
+            }
+        }
+
+        let total_adj: usize = tasks
+            .iter()
+            .map(|t| t.unlocks.len() + t.locks.len() + t.uses.len())
+            .sum();
+        let total_data: usize = tasks.iter().map(|t| t.data.len()).sum();
+        if total_adj > u32::MAX as usize || total_data > u32::MAX as usize {
+            return Err(SchedError::GraphTooLarge { adj: total_adj, payload: total_data });
+        }
+        let mut adj: Vec<u32> = Vec::with_capacity(total_adj);
+        let mut payload: Vec<u8> = Vec::with_capacity(total_data);
+        let mut unlocks = Vec::with_capacity(n);
+        let mut locks = Vec::with_capacity(n);
+        let mut uses = Vec::with_capacity(n);
+        let mut data = Vec::with_capacity(n);
+        let mut type_id = Vec::with_capacity(n);
+        let mut virtual_flag = Vec::with_capacity(n);
+        let mut cost = Vec::with_capacity(n);
+        let mut scratch: Vec<ResId> = Vec::new();
+
+        let span_from = |start: usize, end: usize| Span {
+            off: start as u32,
+            len: (end - start) as u32,
+        };
+
+        for t in tasks {
+            // Unlocks: copied verbatim (order and multiplicity are
+            // user-visible through the wait-count semantics).
+            let start = adj.len();
+            adj.extend(t.unlocks.iter().map(|u| u.0));
+            unlocks.push(span_from(start, adj.len()));
+
+            // Locks: sort by resource id (§3.3 dining-philosophers
+            // fix), dedup, then drop any lock whose hierarchical
+            // *ancestor* is also locked by this task — the ancestor
+            // lock already excludes the whole subtree, and attempting
+            // both would self-deadlock.
+            scratch.clear();
+            scratch.extend_from_slice(&t.locks);
+            scratch.sort_unstable();
+            scratch.dedup();
+            if scratch.len() > 1 {
+                let lock_set = scratch.clone();
+                scratch.retain(|&r| {
+                    let mut up = res.get(r).parent;
+                    while let Some(p) = up {
+                        if lock_set.binary_search(&p).is_ok() {
+                            return false;
+                        }
+                        up = res.get(p).parent;
+                    }
+                    true
+                });
+            }
+            let start = adj.len();
+            adj.extend(scratch.iter().map(|r| r.0));
+            locks.push(span_from(start, adj.len()));
+
+            // Uses: sorted + deduped (affinity hints; multiplicity
+            // would only skew the enqueue scoring).
+            scratch.clear();
+            scratch.extend_from_slice(&t.uses);
+            scratch.sort_unstable();
+            scratch.dedup();
+            let start = adj.len();
+            adj.extend(scratch.iter().map(|r| r.0));
+            uses.push(span_from(start, adj.len()));
+
+            let start = payload.len();
+            payload.extend_from_slice(&t.data);
+            data.push(Span { off: start as u32, len: t.data.len() as u32 });
+
+            type_id.push(t.type_id);
+            virtual_flag.push(t.flags.virtual_task);
+            cost.push(t.cost.max(1));
+        }
+
+        // Initial wait counts (in-degree) + roots, so `start()` is a
+        // plain store per task instead of an O(edges) atomic re-count.
+        let mut wait0 = vec![0i32; n];
+        for t in tasks {
+            for u in &t.unlocks {
+                wait0[u.idx()] += 1;
+            }
+        }
+        let roots: Vec<u32> = (0..n as u32).filter(|&i| wait0[i as usize] == 0).collect();
+
+        let meta = FrozenGraph {
+            n,
+            adj,
+            payload,
+            unlocks,
+            locks,
+            uses,
+            data,
+            type_id,
+            virtual_flag,
+            wait0,
+            roots,
+        };
+        let run: Box<[TaskRunState]> = tasks
+            .iter()
+            .map(|t| {
+                let r = TaskRunState::new();
+                // Seed the learned snapshot so timings survive a
+                // thaw → rebuild → re-freeze cycle (see `Task::learned_ns`).
+                if t.learned_ns > 0 {
+                    r.learned_ns
+                        .store(t.learned_ns, std::sync::atomic::Ordering::Relaxed);
+                }
+                r
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        let mut g = CompiledGraph { meta: Arc::new(meta), cost, weight: vec![0; n], run };
+        compute_weights(&mut g)?;
+        Ok(g)
+    }
+
+    /// Reconstitute builder-side task records from the frozen layout —
+    /// the reverse of [`CompiledGraph::freeze`], used when a caller
+    /// resumes *building* after a `prepare()` (the lock sets come back
+    /// sorted/subsumed, which is semantically equivalent; costs carry
+    /// any relearning that happened in between).
+    pub fn thaw(&self) -> Vec<Task> {
+        (0..self.meta.n)
+            .map(|i| {
+                let mut t = Task::new(
+                    self.type_id(i),
+                    TaskFlags { virtual_task: self.is_virtual(i) },
+                    self.data(i).to_vec(),
+                    self.cost(i),
+                );
+                t.unlocks = self.unlock_ids(i).iter().map(|&u| super::task::TaskId(u)).collect();
+                t.locks = self.lock_ids(i).iter().map(|&r| ResId(r)).collect();
+                t.uses = self.use_ids(i).iter().map(|&r| ResId(r)).collect();
+                // Preserve timings across the thaw: prefer the live
+                // measurement of the most recent run, falling back to
+                // the learned snapshot (mirrors `relearn_costs`).
+                let ord = std::sync::atomic::Ordering::Relaxed;
+                let measured = self.run[i].measured_ns.load(ord);
+                t.learned_ns =
+                    if measured > 0 { measured } else { self.run[i].learned_ns.load(ord) };
+                t
+            })
+            .collect()
+    }
+}
+
+impl GraphStats {
+    /// Stats of a graph still under construction (pre-freeze). The
+    /// frozen counterpart is [`GraphStats::of_compiled`]; counts agree
+    /// up to the lock/use dedup the freeze performs.
+    pub fn of(tasks: &[Task], res: &ResTable) -> Self {
+        let mut s = Self {
+            tasks: tasks.len(),
+            resources: res.len(),
+            ..Self::default()
+        };
+        let mut wait = vec![0u32; tasks.len()];
+        for t in tasks {
+            s.dependencies += t.unlocks.len();
+            s.locks += t.locks.len();
+            s.uses += t.uses.len();
+            s.payload_bytes += t.data.len();
+            for u in &t.unlocks {
+                wait[u.idx()] += 1;
+            }
+        }
+        s.roots = wait.iter().filter(|&&w| w == 0).count();
+        s.sinks = tasks.iter().filter(|t| t.unlocks.is_empty()).count();
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::resource::OWNER_NONE;
+    use crate::coordinator::task::TaskId;
     use crate::coordinator::SchedConfig;
 
     #[test]
@@ -135,5 +364,155 @@ mod tests {
         s.prepare().unwrap();
         assert_eq!(s.stats().tasks, 2);
         assert_eq!(s.stats().dependencies, 1);
+    }
+
+    fn build_tasks(n: usize) -> Vec<Task> {
+        (0..n)
+            .map(|i| Task::new(i as u32, TaskFlags::default(), vec![i as u8; i], 1 + i as i64))
+            .collect()
+    }
+
+    #[test]
+    fn freeze_flattens_into_arenas() {
+        let mut res = ResTable::new();
+        let r0 = res.add(None, OWNER_NONE);
+        let r1 = res.add(None, OWNER_NONE);
+        let mut ts = build_tasks(3);
+        ts[0].add_unlock(TaskId(1));
+        ts[0].add_unlock(TaskId(2));
+        ts[1].add_unlock(TaskId(2));
+        ts[0].add_lock(r1);
+        ts[0].add_lock(r0);
+        ts[0].add_lock(r1); // duplicate: deduped at freeze
+        ts[1].add_use(r0);
+        let g = CompiledGraph::freeze(&ts, &res).unwrap();
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.unlock_ids(0), &[1, 2]);
+        assert_eq!(g.lock_ids(0), &[0, 1], "locks come back sorted + deduped");
+        assert_eq!(g.use_ids(1), &[0]);
+        assert_eq!(g.data(2), &[2, 2]);
+        assert_eq!(g.first_route(0), Some(r0));
+        assert_eq!(g.first_route(1), Some(r0), "falls back to first use");
+        assert_eq!(g.first_route(2), None);
+        assert_eq!((g.wait0(0), g.wait0(1), g.wait0(2)), (0, 1, 2));
+        assert_eq!(g.roots(), &[0]);
+        // weights: cost 1,2,3 along the chain 0→{1,2},1→2.
+        assert_eq!((g.weight(2), g.weight(1), g.weight(0)), (3, 5, 6));
+        assert!(g.meta().arena_bytes() > 0);
+    }
+
+    #[test]
+    fn freeze_subsumes_descendant_locks() {
+        let mut res = ResTable::new();
+        let root = res.add(None, OWNER_NONE);
+        let mid = res.add(Some(root), OWNER_NONE);
+        let leaf = res.add(Some(mid), OWNER_NONE);
+        let other = res.add(None, OWNER_NONE);
+        let mut ts = build_tasks(1);
+        ts[0].add_lock(leaf);
+        ts[0].add_lock(root);
+        ts[0].add_lock(other);
+        let g = CompiledGraph::freeze(&ts, &res).unwrap();
+        assert_eq!(g.lock_ids(0), &[root.0, other.0]);
+    }
+
+    #[test]
+    fn freeze_rejects_bad_handles() {
+        let res = ResTable::new();
+        let mut ts = build_tasks(1);
+        ts[0].add_unlock(TaskId(5));
+        assert!(matches!(
+            CompiledGraph::freeze(&ts, &res),
+            Err(SchedError::BadTask(5, 1))
+        ));
+        let mut ts = build_tasks(1);
+        ts[0].add_unlock(TaskId(0));
+        assert!(matches!(
+            CompiledGraph::freeze(&ts, &res),
+            Err(SchedError::SelfDependency(0))
+        ));
+        let mut ts = build_tasks(1);
+        ts[0].add_lock(ResId(0));
+        assert!(matches!(
+            CompiledGraph::freeze(&ts, &res),
+            Err(SchedError::BadRes(0, 0))
+        ));
+    }
+
+    #[test]
+    fn freeze_rejects_cycles() {
+        let res = ResTable::new();
+        let mut ts = build_tasks(2);
+        ts[0].add_unlock(TaskId(1));
+        ts[1].add_unlock(TaskId(0));
+        assert!(matches!(
+            CompiledGraph::freeze(&ts, &res),
+            Err(SchedError::Cycle { .. })
+        ));
+    }
+
+    #[test]
+    fn freeze_ok_on_empty() {
+        let g = CompiledGraph::freeze(&[], &ResTable::new()).unwrap();
+        assert!(g.is_empty());
+        assert!(g.roots().is_empty());
+    }
+
+    #[test]
+    fn thaw_roundtrips() {
+        let mut res = ResTable::new();
+        let r0 = res.add(None, OWNER_NONE);
+        let mut ts = build_tasks(3);
+        ts[0].add_unlock(TaskId(2));
+        ts[1].add_lock(r0);
+        ts[2].add_use(r0);
+        let g = CompiledGraph::freeze(&ts, &res).unwrap();
+        let back = g.thaw();
+        assert_eq!(back.len(), 3);
+        for (a, b) in ts.iter().zip(&back) {
+            assert_eq!(a.type_id, b.type_id);
+            assert_eq!(a.data, b.data);
+            assert_eq!(a.unlocks, b.unlocks);
+            assert_eq!(a.locks, b.locks);
+            assert_eq!(a.uses, b.uses);
+            assert_eq!(a.cost, b.cost);
+        }
+        // Re-freezing the thawed records reproduces the same structure.
+        let g2 = CompiledGraph::freeze(&back, &res).unwrap();
+        assert_eq!(**g.meta(), **g2.meta());
+    }
+
+    #[test]
+    fn adopt_meta_shares_identical_structure() {
+        let res = ResTable::new();
+        let ts = build_tasks(4);
+        let a = CompiledGraph::freeze(&ts, &res).unwrap();
+        let mut b = CompiledGraph::freeze(&ts, &res).unwrap();
+        assert!(!Arc::ptr_eq(a.meta(), b.meta()));
+        assert!(b.adopt_meta(a.meta()));
+        assert!(Arc::ptr_eq(a.meta(), b.meta()));
+        // A different graph refuses.
+        let mut ts2 = build_tasks(4);
+        ts2[0].add_unlock(TaskId(1));
+        let mut c = CompiledGraph::freeze(&ts2, &res).unwrap();
+        assert!(!c.adopt_meta(a.meta()));
+    }
+
+    #[test]
+    fn build_stats_count() {
+        let mut res = ResTable::new();
+        let r0 = res.add(None, OWNER_NONE);
+        let mut ts = build_tasks(3);
+        ts[0].add_unlock(TaskId(1));
+        ts[0].add_lock(r0);
+        ts[1].add_use(r0);
+        let st = GraphStats::of(&ts, &res);
+        assert_eq!(st.tasks, 3);
+        assert_eq!(st.dependencies, 1);
+        assert_eq!(st.locks, 1);
+        assert_eq!(st.uses, 1);
+        assert_eq!(st.roots, 2);
+        assert_eq!(st.sinks, 2);
+        assert_eq!(st.payload_bytes, 3);
     }
 }

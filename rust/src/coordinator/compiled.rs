@@ -1,0 +1,323 @@
+//! The frozen CSR/SoA task graph — what the scheduler actually runs.
+//!
+//! The builder-side [`Task`](super::task::Task) record is a faithful C
+//! transliteration: four separately heap-allocated `Vec`s per task
+//! (payload, unlocks, locks, uses) with the hot per-run atomics
+//! interleaved between cold build-time metadata. That layout chases one
+//! pointer per adjacency list on every `gettask`/`complete`, and a
+//! completion-path `fetch_sub` on one task's wait counter drags its
+//! neighbors' metadata through the coherence protocol.
+//!
+//! [`Scheduler::prepare`](super::Scheduler::prepare) therefore
+//! *freezes* the builder's `Vec<Task>` into a [`CompiledGraph`]
+//! (see `builder.rs` for the freeze itself — the only place the
+//! per-task `Vec`s are still walked):
+//!
+//! * **One `u32` adjacency arena** (`FrozenGraph::adj`): every task's
+//!   `unlocks ++ locks ++ uses` lists laid out back to back, addressed
+//!   by per-task [`Span`]s. `Queue::get`'s conflict scan and
+//!   `complete`'s dependent walk read consecutive words of one
+//!   allocation instead of chasing per-task pointers — the PTG/CSR
+//!   flattening StarPU- and PaRSEC-style runtimes use to keep
+//!   `gettask` cache-resident.
+//! * **One payload byte arena** (`FrozenGraph::payload`): all task
+//!   data concatenated, `TaskView.data` borrowing a span of it.
+//! * **SoA scalars**: `type_id`, virtual flags, precomputed initial
+//!   wait counts ([`CompiledGraph::wait0`]) and the root list, so
+//!   `start()` is `n` plain stores instead of an `O(edges)` atomic
+//!   re-count.
+//! * **Padded per-run state** ([`TaskRunState`]): the only words
+//!   mutated during a parallel run (`wait`, `measured_ns`,
+//!   `learned_ns`) live in a dedicated array, one 64-byte line per
+//!   task, so a completion on task *i* cannot false-share with task
+//!   *i±1*'s counters.
+//!
+//! The [`FrozenGraph`] half is immutable after the freeze and sits
+//! behind an `Arc`: the server's template registry points every pooled
+//! instance of one template at a single canonical copy
+//! (`Scheduler::adopt_frozen_meta`), so read-only graph memory is
+//! O(graph), not O(instances × graph). Costs and weights stay
+//! per-instance (`relearn_costs` mutates them), as does the run-state
+//! array.
+
+use std::sync::atomic::{AtomicI32, AtomicI64, Ordering};
+use std::sync::Arc;
+
+use super::resource::ResId;
+use super::task::{TaskId, TaskView};
+
+/// A `(offset, len)` window into one of the frozen arenas.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Span {
+    pub off: u32,
+    pub len: u32,
+}
+
+impl Span {
+    #[inline]
+    pub fn range(self) -> std::ops::Range<usize> {
+        self.off as usize..(self.off + self.len) as usize
+    }
+
+    #[inline]
+    pub fn is_empty(self) -> bool {
+        self.len == 0
+    }
+}
+
+/// The immutable-after-freeze half of a compiled graph: arenas, spans,
+/// and everything derived purely from the graph's *structure*. Shared
+/// via `Arc` across template instances (content-compared by
+/// [`Scheduler::adopt_frozen_meta`](super::Scheduler::adopt_frozen_meta)).
+#[derive(Debug, PartialEq)]
+pub struct FrozenGraph {
+    pub(crate) n: usize,
+    /// The adjacency arena: per task, `unlocks ++ locks ++ uses`
+    /// contiguously. Unlock entries are task indices; lock/use entries
+    /// are resource indices (see the span accessors on
+    /// [`CompiledGraph`]).
+    pub(crate) adj: Vec<u32>,
+    /// The payload byte arena: all task data concatenated.
+    pub(crate) payload: Vec<u8>,
+    pub(crate) unlocks: Vec<Span>,
+    pub(crate) locks: Vec<Span>,
+    pub(crate) uses: Vec<Span>,
+    pub(crate) data: Vec<Span>,
+    pub(crate) type_id: Vec<u32>,
+    pub(crate) virtual_flag: Vec<bool>,
+    /// Initial dependency count per task (in-degree), precomputed at
+    /// freeze so `start()` is a plain store per task.
+    pub(crate) wait0: Vec<i32>,
+    /// Tasks with `wait0 == 0`, in index order.
+    pub(crate) roots: Vec<u32>,
+}
+
+impl FrozenGraph {
+    /// Number of tasks.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Total adjacency-arena bytes + payload bytes (memory reporting).
+    pub fn arena_bytes(&self) -> usize {
+        self.adj.len() * std::mem::size_of::<u32>() + self.payload.len()
+    }
+}
+
+/// Per-task mutable run state, one cache line per task (the 20 payload
+/// bytes are padded to 64 by the alignment) so the completion-path
+/// `fetch_sub` on one task's `wait` never false-shares with a
+/// neighbor's.
+#[derive(Debug)]
+#[repr(align(64))]
+pub struct TaskRunState {
+    /// Number of unresolved dependencies; decremented by `qsched_done`.
+    pub wait: AtomicI32,
+    /// Measured execution time (ns) of the last run, for cost
+    /// relearning.
+    pub measured_ns: AtomicI64,
+    /// Measured time carried across `reset_run` cycles (snapshotted
+    /// from `measured_ns` before zeroing, so template reuse does not
+    /// discard timings before `relearn_costs` consumes them).
+    pub learned_ns: AtomicI64,
+}
+
+impl TaskRunState {
+    pub fn new() -> Self {
+        Self {
+            wait: AtomicI32::new(0),
+            measured_ns: AtomicI64::new(0),
+            learned_ns: AtomicI64::new(0),
+        }
+    }
+
+    /// Decrement the wait counter, returning the *new* value. The
+    /// caller (scheduler `complete`) enqueues the task when this hits
+    /// zero.
+    #[inline]
+    pub fn dec_wait(&self) -> i32 {
+        self.wait.fetch_sub(1, Ordering::AcqRel) - 1
+    }
+
+    /// Current wait count.
+    #[inline]
+    pub fn wait_count(&self) -> i32 {
+        self.wait.load(Ordering::Acquire)
+    }
+}
+
+impl Default for TaskRunState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A compiled task graph: the shared frozen structure plus this
+/// instance's costs, weights, and padded per-run state. Produced by
+/// `CompiledGraph::freeze` (in `builder.rs`) from the builder's
+/// `Vec<Task>`; owned by the [`Scheduler`](super::Scheduler) after
+/// `prepare()`.
+pub struct CompiledGraph {
+    /// Frozen structure, shareable across instances of one template.
+    pub(crate) meta: Arc<FrozenGraph>,
+    /// Per-instance cost (user estimate, overwritten by
+    /// `relearn_costs`).
+    pub(crate) cost: Vec<i64>,
+    /// Per-instance critical-path weight.
+    pub(crate) weight: Vec<i64>,
+    /// Per-instance, cache-line-padded run state.
+    pub(crate) run: Box<[TaskRunState]>,
+}
+
+impl CompiledGraph {
+    /// Number of tasks.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.meta.n
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.meta.n == 0
+    }
+
+    /// The shared frozen half.
+    #[inline]
+    pub fn meta(&self) -> &Arc<FrozenGraph> {
+        &self.meta
+    }
+
+    #[inline]
+    pub fn type_id(&self, i: usize) -> u32 {
+        self.meta.type_id[i]
+    }
+
+    #[inline]
+    pub fn is_virtual(&self, i: usize) -> bool {
+        self.meta.virtual_flag[i]
+    }
+
+    #[inline]
+    pub fn cost(&self, i: usize) -> i64 {
+        self.cost[i]
+    }
+
+    #[inline]
+    pub fn weight(&self, i: usize) -> i64 {
+        self.weight[i]
+    }
+
+    /// Task indices this task unlocks (dependents), as raw `u32`s into
+    /// the task table.
+    #[inline]
+    pub fn unlock_ids(&self, i: usize) -> &[u32] {
+        &self.meta.adj[self.meta.unlocks[i].range()]
+    }
+
+    /// Resource indices this task must lock, id-sorted at freeze (the
+    /// §3.3 dining-philosophers discipline), as raw `u32`s into the
+    /// resource table.
+    #[inline]
+    pub fn lock_ids(&self, i: usize) -> &[u32] {
+        &self.meta.adj[self.meta.locks[i].range()]
+    }
+
+    /// Resource indices this task uses (affinity hints only).
+    #[inline]
+    pub fn use_ids(&self, i: usize) -> &[u32] {
+        &self.meta.adj[self.meta.uses[i].range()]
+    }
+
+    /// The task's payload bytes.
+    #[inline]
+    pub fn data(&self, i: usize) -> &[u8] {
+        &self.meta.payload[self.meta.data[i].range()]
+    }
+
+    /// First locked (else first used) resource — the affinity/routing
+    /// signal of `enqueue` and the shard layer.
+    #[inline]
+    pub fn first_route(&self, i: usize) -> Option<ResId> {
+        self.lock_ids(i)
+            .first()
+            .or_else(|| self.use_ids(i).first())
+            .map(|&r| ResId(r))
+    }
+
+    /// Initial dependency count of task `i`.
+    #[inline]
+    pub fn wait0(&self, i: usize) -> i32 {
+        self.meta.wait0[i]
+    }
+
+    /// Tasks with no dependencies, in index order.
+    #[inline]
+    pub fn roots(&self) -> &[u32] {
+        &self.meta.roots
+    }
+
+    /// The padded per-run state of task `i`.
+    #[inline]
+    pub fn run(&self, i: usize) -> &TaskRunState {
+        &self.run[i]
+    }
+
+    /// Read-only execution view of task `i` (what kernels receive).
+    #[inline]
+    pub fn view(&self, tid: TaskId) -> TaskView<'_> {
+        let i = tid.idx();
+        TaskView {
+            tid,
+            type_id: self.type_id(i),
+            data: self.data(i),
+            cost: self.cost(i),
+            weight: self.weight(i),
+        }
+    }
+
+    /// Point this instance at `canon`'s frozen structure if the two are
+    /// structurally identical, dropping this instance's duplicate
+    /// arenas. Returns whether the adoption happened. Used by the
+    /// server's template registry so every pooled instance of one
+    /// deterministic template shares a single read-only copy.
+    pub fn adopt_meta(&mut self, canon: &Arc<FrozenGraph>) -> bool {
+        if Arc::ptr_eq(&self.meta, canon) {
+            return true;
+        }
+        if *self.meta == **canon {
+            self.meta = Arc::clone(canon);
+            return true;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_ranges() {
+        let s = Span { off: 4, len: 3 };
+        assert_eq!(s.range(), 4..7);
+        assert!(!s.is_empty());
+        assert!(Span::default().is_empty());
+    }
+
+    #[test]
+    fn run_state_is_padded_and_counts() {
+        assert_eq!(std::mem::size_of::<TaskRunState>(), 64);
+        assert_eq!(std::mem::align_of::<TaskRunState>(), 64);
+        let r = TaskRunState::new();
+        r.wait.store(2, Ordering::Release);
+        assert_eq!(r.dec_wait(), 1);
+        assert_eq!(r.dec_wait(), 0);
+        assert_eq!(r.wait_count(), 0);
+    }
+}

@@ -48,6 +48,11 @@ pub enum SchedError {
     /// one of its task types.
     #[error("no kernel bound for task type {0}")]
     UnboundTaskType(u32),
+
+    /// The graph's flattened arenas would not fit the `u32` span
+    /// address space of the compiled CSR layout.
+    #[error("graph exceeds the u32 arena address space ({adj} adjacency entries, {payload} payload bytes)")]
+    GraphTooLarge { adj: usize, payload: usize },
 }
 
 pub type Result<T> = std::result::Result<T, SchedError>;

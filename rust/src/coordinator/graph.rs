@@ -1,16 +1,20 @@
-//! Task-graph statistics and structural validation.
+//! Task-graph statistics.
 //!
 //! The paper reports, for each experiment, the number of tasks,
 //! dependencies, resources, locks, and uses (§4.1: "a total of 11 440
 //! tasks with 21 824 dependencies, as well as 1 024 resources with 21 856
-//! locks and 11 408 uses"). [`GraphStats`] regenerates those text tables,
-//! and [`validate`] performs the structural checks `prepare()` relies on.
+//! locks and 11 408 uses"). [`GraphStats`] regenerates those text tables.
+//!
+//! Two constructors exist for the two graph representations:
+//! [`GraphStats::of_compiled`] reads the frozen CSR layout (the normal,
+//! post-`prepare()` path), and `GraphStats::of` (defined in
+//! `builder.rs`, beside the other build-side `Vec` walkers) covers a
+//! graph still under construction. Structural *validation* is performed
+//! by the freeze itself (`CompiledGraph::freeze`): handle ranges,
+//! self-dependencies, and — via weight computation — cycles.
 
-use std::collections::HashSet;
-
-use super::error::{Result, SchedError};
+use super::compiled::CompiledGraph;
 use super::resource::ResTable;
-use super::task::Task;
 
 /// Counts matching the paper's per-experiment graph summaries.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -29,35 +33,40 @@ pub struct GraphStats {
 }
 
 impl GraphStats {
-    pub fn of(tasks: &[Task], res: &ResTable) -> Self {
+    /// Stats of a frozen graph, read off the CSR spans.
+    pub fn of_compiled(g: &CompiledGraph, res: &ResTable) -> Self {
+        let n = g.len();
         let mut s = Self {
-            tasks: tasks.len(),
+            tasks: n,
             resources: res.len(),
+            payload_bytes: g.meta().payload.len(),
+            roots: g.roots().len(),
             ..Self::default()
         };
-        let mut wait = vec![0u32; tasks.len()];
-        for t in tasks {
-            s.dependencies += t.unlocks.len();
-            s.locks += t.locks.len();
-            s.uses += t.uses.len();
-            s.payload_bytes += t.data.len();
-            for u in &t.unlocks {
-                wait[u.idx()] += 1;
+        for i in 0..n {
+            s.dependencies += g.unlock_ids(i).len();
+            s.locks += g.lock_ids(i).len();
+            s.uses += g.use_ids(i).len();
+            if g.unlock_ids(i).is_empty() {
+                s.sinks += 1;
             }
         }
-        s.roots = wait.iter().filter(|&&w| w == 0).count();
-        s.sinks = tasks.iter().filter(|t| t.unlocks.is_empty()).count();
         s
     }
 
-    /// Approximate memory footprint of the task graph in bytes, for the
-    /// §4.2 "storing the tasks, resources, and dependencies required XXX
-    /// MB" style reporting.
+    /// Approximate memory footprint of the frozen task graph in bytes,
+    /// for the §4.2 "storing the tasks, resources, and dependencies
+    /// required XXX MB" style reporting. Reflects the flattened layout:
+    /// SoA scalars + spans per task, one padded run-state line per
+    /// task, the shared `u32` adjacency arena, the payload arena, and
+    /// one padded cache line per resource.
     pub fn memory_bytes(&self) -> usize {
-        self.tasks * std::mem::size_of::<Task>()
-            + (self.dependencies + self.locks + self.uses) * 8
+        // type_id + flags + wait0 (SoA) + cost + weight + 4 spans.
+        let per_task_soa = 4 + 1 + 4 + 8 + 8 + 4 * 8;
+        self.tasks * (per_task_soa + 64 /* padded TaskRunState */)
+            + (self.dependencies + self.locks + self.uses) * 4
             + self.payload_bytes
-            + self.resources * 24
+            + self.resources * 64 /* padded Resource */
     }
 }
 
@@ -79,43 +88,15 @@ impl std::fmt::Display for GraphStats {
     }
 }
 
-/// Structural validation performed by `Scheduler::prepare`:
-/// * every unlock/lock/use handle is in range,
-/// * no task unlocks itself,
-/// * duplicate unlock edges are reported (they would double-decrement the
-///   wait counter: legal in the paper's C code but almost always a bug).
-pub fn validate(tasks: &[Task], res: &ResTable) -> Result<()> {
-    let nt = tasks.len();
-    let nr = res.len();
-    for (i, t) in tasks.iter().enumerate() {
-        let mut seen: HashSet<u32> = HashSet::with_capacity(t.unlocks.len());
-        for u in &t.unlocks {
-            if u.idx() >= nt {
-                return Err(SchedError::BadTask(u.0, nt));
-            }
-            if u.idx() == i {
-                return Err(SchedError::SelfDependency(i as u32));
-            }
-            seen.insert(u.0);
-        }
-        for r in t.locks.iter().chain(t.uses.iter()) {
-            if r.idx() >= nr {
-                return Err(SchedError::BadRes(r.0, nr));
-            }
-        }
-    }
-    Ok(())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::payload::Payload;
     use crate::coordinator::resource::OWNER_NONE;
-    use crate::coordinator::task::{TaskFlags, TaskId};
+    use crate::coordinator::task::{Task, TaskFlags, TaskId};
 
     #[test]
-    fn stats_counts() {
+    fn stats_counts_compiled() {
         let mut res = ResTable::new();
         let r0 = res.add(None, OWNER_NONE);
         let r1 = res.add(Some(r0), OWNER_NONE);
@@ -124,13 +105,14 @@ mod tests {
             Task::new(1, TaskFlags::default(), vec![], 2),
             Task::new(2, TaskFlags::default(), vec![], 3),
         ];
-        tasks[0].unlocks.push(TaskId(1));
-        tasks[0].unlocks.push(TaskId(2));
-        tasks[1].unlocks.push(TaskId(2));
-        tasks[0].locks.push(r0);
-        tasks[1].locks.push(r1);
-        tasks[1].uses.push(r0);
-        let s = GraphStats::of(&tasks, &res);
+        tasks[0].add_unlock(TaskId(1));
+        tasks[0].add_unlock(TaskId(2));
+        tasks[1].add_unlock(TaskId(2));
+        tasks[0].add_lock(r0);
+        tasks[1].add_lock(r1);
+        tasks[1].add_use(r0);
+        let g = CompiledGraph::freeze(&tasks, &res).unwrap();
+        let s = GraphStats::of_compiled(&g, &res);
         assert_eq!(s.tasks, 3);
         assert_eq!(s.dependencies, 3);
         assert_eq!(s.resources, 2);
@@ -141,34 +123,7 @@ mod tests {
         assert_eq!(s.payload_bytes, 8);
         assert!(s.memory_bytes() > 0);
         assert!(s.to_string().contains("3 tasks"));
-    }
-
-    #[test]
-    fn validate_rejects_out_of_range_unlock() {
-        let res = ResTable::new();
-        let mut tasks = vec![Task::new(0, TaskFlags::default(), vec![], 1)];
-        tasks[0].unlocks.push(TaskId(5));
-        assert!(matches!(validate(&tasks, &res), Err(SchedError::BadTask(5, 1))));
-    }
-
-    #[test]
-    fn validate_rejects_self_dep() {
-        let res = ResTable::new();
-        let mut tasks = vec![Task::new(0, TaskFlags::default(), vec![], 1)];
-        tasks[0].unlocks.push(TaskId(0));
-        assert!(matches!(validate(&tasks, &res), Err(SchedError::SelfDependency(0))));
-    }
-
-    #[test]
-    fn validate_rejects_bad_resource() {
-        let res = ResTable::new();
-        let mut tasks = vec![Task::new(0, TaskFlags::default(), vec![], 1)];
-        tasks[0].locks.push(crate::coordinator::resource::ResId(0));
-        assert!(matches!(validate(&tasks, &res), Err(SchedError::BadRes(0, 0))));
-    }
-
-    #[test]
-    fn validate_ok_on_empty() {
-        assert!(validate(&[], &ResTable::new()).is_ok());
+        // The build-side constructor agrees on this dedup-free graph.
+        assert_eq!(GraphStats::of(&tasks, &res), s);
     }
 }

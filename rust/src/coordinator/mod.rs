@@ -17,8 +17,12 @@
 //! # Lifecycle of a task
 //!
 //! 1. **Build** — `sched.task(ty).payload(&…).cost(c).locks([r]).spawn()`
-//!    records the task; `prepare()` validates the graph, sorts lock
-//!    sets, and computes critical-path weights.
+//!    records the task; `prepare()` validates the graph and *freezes*
+//!    it into the CSR/SoA [`CompiledGraph`] ([`compiled`]): one shared
+//!    `u32` adjacency arena, one payload arena, sorted lock sets,
+//!    precomputed wait counts, critical-path weights, and a
+//!    cache-line-padded per-run state array. Every runtime path below
+//!    reads spans of that layout (see ARCHITECTURE.md §Memory layout).
 //! 2. **Ready** — `start()` (or a dependency resolution inside
 //!    [`Scheduler::complete`]) announces the task: either into one of
 //!    the scheduler's own per-worker [`queue::Queue`]s (routed by
@@ -36,6 +40,7 @@
 //! See `ARCHITECTURE.md` at the repo root for the cross-module data-flow
 //! picture of the server's sharded dispatch built on these hooks.
 pub mod builder;
+pub mod compiled;
 pub mod config;
 pub mod error;
 pub mod exec;
@@ -52,6 +57,7 @@ pub mod task;
 pub mod weights;
 
 pub use builder::GraphBuilder;
+pub use compiled::{CompiledGraph, FrozenGraph, Span, TaskRunState};
 pub use config::{ExecMode, KeyPolicy, SchedConfig, SchedFlags, StealPolicy};
 pub use error::{Result, SchedError};
 pub use graph::GraphStats;

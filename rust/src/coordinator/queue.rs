@@ -12,19 +12,31 @@
 //!
 //! * [`Queue`] — the paper's per-scheduler queue. Entries are plain
 //!   `(key, task)` pairs and `get` resolves conflicts itself against the
-//!   owning scheduler's task/resource tables.
+//!   owning scheduler's compiled graph and resource table.
 //! * [`TaggedQueue`] — a *cross-job* shard used by the server's shared
 //!   dispatch layer (`server::shard`). Entries additionally carry an
 //!   opaque 64-bit tag naming the job they belong to; `get` delegates
 //!   the "can this entry be taken?" decision to a caller closure, since
 //!   each entry's tasks and resources live in a different scheduler.
 //!   Stale entries (their job is gone) are purged in place during scans.
+//!
+//! **Layout (§Perf opt E).** The spin-lock word, the `total_key`
+//! accumulator, and every [`QueueStats`] counter sit on their own cache
+//! line ([`CachePadded`]): `mutex_spins`/`lock_failures` are bumped from
+//! every worker, and before padding a stats bump on one queue could
+//! evict the *lock word* of the same or a neighboring queue from other
+//! cores' caches. `total_key` is additionally maintained *under* the
+//! already-held queue lock as a plain load + `Release` store — only
+//! lock holders write it, so the enqueue hot path pays no atomic RMW
+//! for it.
 
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
+use super::compiled::CompiledGraph;
 use super::resource::{ResId, ResTable};
-use super::task::{Task, TaskId};
+use super::task::TaskId;
+use crate::util::pad::CachePadded;
 
 /// One heap entry: scheduling key + task id. Keys are compared first; ties
 /// broken by task id for determinism.
@@ -42,21 +54,24 @@ impl Entry {
 }
 
 /// Contention / scan statistics, used by the Fig. 13 overhead accounting.
+/// Each counter is cache-line-padded: they are bumped from every worker
+/// on every probe, and must not false-share with each other or with the
+/// queue's lock word.
 #[derive(Debug, Default)]
 pub struct QueueStats {
     /// Successful `get` calls.
-    pub gets: AtomicU64,
+    pub gets: CachePadded<AtomicU64>,
     /// `get` calls that returned nothing (empty or all-conflicted).
-    pub misses: AtomicU64,
+    pub misses: CachePadded<AtomicU64>,
     /// Tasks scanned across all `get` calls.
-    pub scanned: AtomicU64,
+    pub scanned: CachePadded<AtomicU64>,
     /// Resource lock attempts that failed during scans.
-    pub lock_failures: AtomicU64,
+    pub lock_failures: CachePadded<AtomicU64>,
     /// Spins while acquiring the queue mutex.
-    pub mutex_spins: AtomicU64,
+    pub mutex_spins: CachePadded<AtomicU64>,
     /// Stale entries discarded during scans ([`TaggedQueue`] only:
     /// entries whose owning job already left the slot table).
-    pub purged: AtomicU64,
+    pub purged: CachePadded<AtomicU64>,
 }
 
 impl QueueStats {
@@ -77,12 +92,15 @@ impl QueueStats {
 /// with one queue per thread, contention arises only from work stealing,
 /// which is rare (validated in §4 and by `benches/micro_scheduler.rs`).
 pub struct Queue {
-    /// 0 = free, 1 = locked.
-    lock: AtomicUsize,
+    /// 0 = free, 1 = locked. Padded: a stats or `total_key` write must
+    /// never bounce the line other workers are CAS-ing on.
+    lock: CachePadded<AtomicUsize>,
     /// Heap storage; guarded by `lock`.
     heap: UnsafeCell<Vec<Entry>>,
     /// Sum of keys currently queued (for weight-aware stealing, §5 ext).
-    total_key: AtomicU64,
+    /// Written only while `lock` is held (plain load + `Release` store —
+    /// no RMW on the put/get hot paths); read racily by stealers.
+    total_key: CachePadded<AtomicU64>,
     pub stats: QueueStats,
 }
 
@@ -93,9 +111,9 @@ unsafe impl Send for Queue {}
 impl Queue {
     pub fn new(capacity: usize) -> Self {
         Self {
-            lock: AtomicUsize::new(0),
+            lock: CachePadded::new(AtomicUsize::new(0)),
             heap: UnsafeCell::new(Vec::with_capacity(capacity)),
-            total_key: AtomicU64::new(0),
+            total_key: CachePadded::new(AtomicU64::new(0)),
             stats: QueueStats::default(),
         }
     }
@@ -119,6 +137,15 @@ impl Queue {
     #[inline]
     fn release(&self) {
         self.lock.store(0, Ordering::Release);
+    }
+
+    /// Adjust `total_key` by `delta`. Must be called with the queue lock
+    /// held: exclusivity is what makes the plain load/store pair sound.
+    #[inline]
+    fn total_key_add_locked(&self, delta: i64) {
+        let cur = self.total_key.load(Ordering::Relaxed);
+        self.total_key
+            .store(cur.wrapping_add(delta as u64), Ordering::Release);
     }
 
     /// Number of queued tasks (racy snapshot).
@@ -146,16 +173,20 @@ impl Queue {
         heap.push(Entry { key, tid });
         let last = heap.len() - 1;
         sift_up(heap, last);
+        self.total_key_add_locked(key.max(0));
         self.release();
-        self.total_key.fetch_add(key.max(0) as u64, Ordering::Relaxed);
     }
 
     /// `queue_get` (§3.3): scan the heap array in index order, try to lock
-    /// every resource of each candidate (already sorted by id at prepare
+    /// every resource of each candidate (already id-sorted at freeze
     /// time to dodge the dining-philosophers deadlock); the first fully
     /// lockable task is removed from the heap and returned *with its locks
     /// held*. Returns `None` if the queue is empty or everything conflicts.
-    pub fn get(&self, tasks: &[Task], res: &ResTable) -> Option<TaskId> {
+    ///
+    /// The candidate lock sets are spans of the compiled graph's shared
+    /// adjacency arena: the whole scan walks two flat arrays (heap +
+    /// arena) instead of chasing a `Vec` allocation per candidate.
+    pub fn get(&self, g: &CompiledGraph, res: &ResTable) -> Option<TaskId> {
         self.acquire();
         let heap = unsafe { &mut *self.heap.get() };
         let mut found: Option<usize> = None;
@@ -168,26 +199,24 @@ impl Queue {
         // skipping repeat offenders turns the pathological
         // "many queued tasks contending one resource" scan from
         // O(n · CAS) into O(n) reads. (§Perf opt A; see EXPERIMENTS.md.)
-        let mut failed = [ResId(u32::MAX); 8];
+        let mut failed = [u32::MAX; 8];
         let mut n_failed = 0usize;
         'scan: for k in 0..heap.len() {
             scanned += 1;
-            let t = &tasks[heap[k].tid.idx()];
-            if n_failed > 0
-                && t.locks.iter().any(|r| failed[..n_failed].contains(r))
-            {
+            let locks = g.lock_ids(heap[k].tid.idx());
+            if n_failed > 0 && locks.iter().any(|r| failed[..n_failed].contains(r)) {
                 continue 'scan;
             }
-            for (j, &rid) in t.locks.iter().enumerate() {
-                if !res.try_lock(rid) {
+            for (j, &rid) in locks.iter().enumerate() {
+                if !res.try_lock(ResId(rid)) {
                     lock_failures += 1;
                     if n_failed < failed.len() {
                         failed[n_failed] = rid;
                         n_failed += 1;
                     }
                     // Roll back the prefix of locks we did get.
-                    for &r_prev in &t.locks[..j] {
-                        res.unlock(r_prev);
+                    for &r_prev in &locks[..j] {
+                        res.unlock(ResId(r_prev));
                     }
                     continue 'scan;
                 }
@@ -205,8 +234,7 @@ impl Queue {
                 let k2 = sift_up(heap, k);
                 sift_down(heap, k2);
             }
-            self.total_key
-                .fetch_sub(entry.key.max(0) as u64, Ordering::Relaxed);
+            self.total_key_add_locked(-entry.key.max(0));
             entry.tid
         });
         self.release();
@@ -235,8 +263,7 @@ impl Queue {
                 heap[0] = last;
                 sift_down(heap, 0);
             }
-            self.total_key
-                .fetch_sub(top.key.max(0) as u64, Ordering::Relaxed);
+            self.total_key_add_locked(-top.key.max(0));
             Some(top)
         };
         self.release();
@@ -255,8 +282,8 @@ impl Queue {
     pub fn clear(&self) {
         self.acquire();
         unsafe { (*self.heap.get()).clear() };
+        self.total_key.store(0, Ordering::Release);
         self.release();
-        self.total_key.store(0, Ordering::Relaxed);
     }
 
     /// Verify the max-heap invariant (tests only).
@@ -365,7 +392,10 @@ pub enum Take {
 /// resource tables), the conflict check in `get` is delegated to the
 /// caller through a closure instead of being performed against a single
 /// scheduler. The heap scan keeps the paper's loose
-/// highest-key-first order.
+/// highest-key-first order. Like [`Queue`], the shard's spin-lock word
+/// and statistics counters are cache-line-padded — shards are probed by
+/// every worker, so a stats bump on one must not evict another core's
+/// view of the lock word.
 ///
 /// ```
 /// use quicksched::coordinator::queue::{TaggedQueue, Take};
@@ -380,8 +410,8 @@ pub enum Take {
 /// assert_eq!(q.get(|_tag, _tid| Take::Taken), None);
 /// ```
 pub struct TaggedQueue {
-    /// 0 = free, 1 = locked.
-    lock: AtomicUsize,
+    /// 0 = free, 1 = locked (padded, like `Queue`'s lock word).
+    lock: CachePadded<AtomicUsize>,
     /// Heap storage; guarded by `lock`.
     heap: UnsafeCell<Vec<TaggedEntry>>,
     pub stats: QueueStats,
@@ -394,7 +424,7 @@ unsafe impl Send for TaggedQueue {}
 impl TaggedQueue {
     pub fn new(capacity: usize) -> Self {
         Self {
-            lock: AtomicUsize::new(0),
+            lock: CachePadded::new(AtomicUsize::new(0)),
             heap: UnsafeCell::new(Vec::with_capacity(capacity)),
             stats: QueueStats::default(),
         }
@@ -530,12 +560,16 @@ impl TaggedQueue {
 mod tests {
     use super::*;
     use crate::coordinator::resource::OWNER_NONE;
-    use crate::coordinator::task::TaskFlags;
+    use crate::coordinator::task::{Task, TaskFlags};
 
     fn mk_tasks(n: usize) -> Vec<Task> {
         (0..n)
             .map(|i| Task::new(i as u32, TaskFlags::default(), vec![], 1))
             .collect()
+    }
+
+    fn freeze(tasks: &[Task], res: &ResTable) -> CompiledGraph {
+        CompiledGraph::freeze(tasks, res).unwrap()
     }
 
     #[test]
@@ -566,16 +600,16 @@ mod tests {
 
     #[test]
     fn get_returns_max_when_unconflicted() {
-        let tasks = mk_tasks(3);
         let res = ResTable::new();
+        let g = freeze(&mk_tasks(3), &res);
         let q = Queue::new(4);
         q.put(10, TaskId(0));
         q.put(30, TaskId(1));
         q.put(20, TaskId(2));
-        assert_eq!(q.get(&tasks, &res), Some(TaskId(1)));
-        assert_eq!(q.get(&tasks, &res), Some(TaskId(2)));
-        assert_eq!(q.get(&tasks, &res), Some(TaskId(0)));
-        assert_eq!(q.get(&tasks, &res), None);
+        assert_eq!(q.get(&g, &res), Some(TaskId(1)));
+        assert_eq!(q.get(&g, &res), Some(TaskId(2)));
+        assert_eq!(q.get(&g, &res), Some(TaskId(0)));
+        assert_eq!(q.get(&g, &res), None);
     }
 
     #[test]
@@ -584,21 +618,22 @@ mod tests {
         let shared = res.add(None, OWNER_NONE);
         let free = res.add(None, OWNER_NONE);
         let mut tasks = mk_tasks(2);
-        tasks[0].locks.push(shared); // heavier task, conflicted
-        tasks[1].locks.push(free);
+        tasks[0].add_lock(shared); // heavier task, conflicted
+        tasks[1].add_lock(free);
+        let g = freeze(&tasks, &res);
         let q = Queue::new(4);
         q.put(100, TaskId(0));
         q.put(1, TaskId(1));
         // Pre-lock the shared resource: task 0 must be skipped.
         assert!(res.try_lock(shared));
-        assert_eq!(q.get(&tasks, &res), Some(TaskId(1)));
+        assert_eq!(q.get(&g, &res), Some(TaskId(1)));
         assert!(res.get(free).is_locked(), "returned task keeps its locks");
         res.unlock(free);
         // Task 0 still queued and blocked.
-        assert_eq!(q.get(&tasks, &res), None);
+        assert_eq!(q.get(&g, &res), None);
         assert_eq!(q.len(), 1);
         res.unlock(shared);
-        assert_eq!(q.get(&tasks, &res), Some(TaskId(0)));
+        assert_eq!(q.get(&g, &res), Some(TaskId(0)));
         res.unlock(shared);
         assert!(res.all_quiescent());
     }
@@ -609,14 +644,16 @@ mod tests {
         let a = res.add(None, OWNER_NONE);
         let b = res.add(None, OWNER_NONE);
         let mut tasks = mk_tasks(1);
-        tasks[0].locks.extend([a, b]);
+        tasks[0].add_lock(a);
+        tasks[0].add_lock(b);
+        let g = freeze(&tasks, &res);
         let q = Queue::new(2);
         q.put(1, TaskId(0));
         assert!(res.try_lock(b)); // second lock will fail
-        assert_eq!(q.get(&tasks, &res), None);
+        assert_eq!(q.get(&g, &res), None);
         assert!(!res.get(a).is_locked(), "partial lock on `a` leaked");
         res.unlock(b);
-        assert_eq!(q.get(&tasks, &res), Some(TaskId(0)));
+        assert_eq!(q.get(&g, &res), Some(TaskId(0)));
         res.unlock(a);
         res.unlock(b);
         assert!(res.all_quiescent());
@@ -624,13 +661,13 @@ mod tests {
 
     #[test]
     fn total_key_tracks_contents() {
-        let tasks = mk_tasks(2);
         let res = ResTable::new();
+        let g = freeze(&mk_tasks(2), &res);
         let q = Queue::new(2);
         q.put(5, TaskId(0));
         q.put(7, TaskId(1));
         assert_eq!(q.total_key(), 12);
-        q.get(&tasks, &res);
+        q.get(&g, &res);
         assert_eq!(q.total_key(), 5);
         q.clear();
         assert_eq!(q.total_key(), 0);
@@ -638,10 +675,10 @@ mod tests {
 
     #[test]
     fn stats_count_misses() {
-        let tasks = mk_tasks(1);
         let res = ResTable::new();
+        let g = freeze(&mk_tasks(1), &res);
         let q = Queue::new(1);
-        assert_eq!(q.get(&tasks, &res), None);
+        assert_eq!(q.get(&g, &res), None);
         let (gets, misses, ..) = q.stats.snapshot();
         assert_eq!((gets, misses), (0, 1));
     }
@@ -699,8 +736,8 @@ mod tests {
         use std::sync::atomic::AtomicU64;
         use std::sync::Arc;
         let n = 4000usize;
-        let tasks: Arc<Vec<Task>> = Arc::new(mk_tasks(n));
         let res = Arc::new(ResTable::new());
+        let g = Arc::new(freeze(&mk_tasks(n), &res));
         let q = Arc::new(Queue::new(n));
         let got = Arc::new(AtomicU64::new(0));
         let producers: Vec<_> = (0..2)
@@ -716,14 +753,14 @@ mod tests {
         let consumers: Vec<_> = (0..2)
             .map(|_| {
                 let q = Arc::clone(&q);
-                let tasks = Arc::clone(&tasks);
+                let g = Arc::clone(&g);
                 let res = Arc::clone(&res);
                 let got = Arc::clone(&got);
                 std::thread::spawn(move || {
                     let mut local = 0u64;
                     let mut idle = 0;
                     while idle < 10_000 {
-                        match q.get(&tasks, &res) {
+                        match q.get(&g, &res) {
                             Some(_) => {
                                 local += 1;
                                 idle = 0;

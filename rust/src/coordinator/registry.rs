@@ -175,9 +175,10 @@ impl<'a> KernelRegistry<'a> {
 
     /// Check that every non-virtual task in `sched` has a kernel bound.
     pub fn validate(&self, sched: &Scheduler) -> Result<()> {
-        for t in &sched.tasks {
-            if !t.flags.virtual_task && !self.is_bound(t.type_id) {
-                return Err(SchedError::UnboundTaskType(t.type_id));
+        for i in 0..sched.nr_tasks() {
+            let (type_id, virtual_task) = sched.task_kind(super::task::TaskId(i as u32));
+            if !virtual_task && !self.is_bound(type_id) {
+                return Err(SchedError::UnboundTaskType(type_id));
             }
         }
         Ok(())

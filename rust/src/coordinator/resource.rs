@@ -35,7 +35,15 @@ pub const OWNER_NONE: i32 = -1;
 
 /// A single exclusively-lockable hierarchical resource
 /// (paper §3.2 `struct resource`).
+///
+/// Cache-line-aligned: the `lock`/`hold` words are CAS-ed and
+/// re-checked from every worker on every conflict probe, and before
+/// padding two unrelated resources shared a 64-byte line — a lock
+/// storm on one evicted its neighbors from every other core's cache
+/// (§Perf opt E; the resource table is a flat arena, so neighbors are
+/// adjacent by construction).
 #[derive(Debug)]
+#[repr(align(64))]
 pub struct Resource {
     /// Hierarchical parent, or `None` for a root resource.
     pub parent: Option<ResId>,
@@ -235,6 +243,12 @@ mod tests {
             parent = Some(id);
         }
         (t, ids)
+    }
+
+    #[test]
+    fn resource_occupies_one_cache_line() {
+        assert_eq!(std::mem::size_of::<Resource>(), 64);
+        assert_eq!(std::mem::align_of::<Resource>(), 64);
     }
 
     #[test]

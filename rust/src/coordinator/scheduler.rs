@@ -3,17 +3,24 @@
 //! affinity; serves `gettask` with random-order work stealing; and
 //! processes completions (`done`), unlocking resources and dependents.
 //!
-//! Lifecycle: build (`add_*`) → [`Scheduler::prepare`] (validate, sort
-//! locks, compute critical-path weights) → run via
+//! Lifecycle: build (`add_*` into the builder-side `Vec<Task>`) →
+//! [`Scheduler::prepare`] (validate + *freeze* the graph into the
+//! CSR/SoA [`CompiledGraph`]: one shared adjacency arena, one payload
+//! arena, padded per-run atomics, sorted lock sets, precomputed wait
+//! counts, critical-path weights) → run via
 //! [`Scheduler::run`](super::exec) or the virtual-time executor
 //! ([`super::sim`]), each of which calls [`Scheduler::start`] internally.
+//! Every hot path below `prepare()` reads the compiled spans; resuming
+//! *building* after a `prepare()` transparently thaws the compiled graph
+//! back into builder records.
 
 use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
+use super::compiled::{CompiledGraph, FrozenGraph};
 use super::config::{ExecMode, SchedConfig, StealPolicy};
 use super::error::{Result, SchedError};
-use super::graph::{validate, GraphStats};
+use super::graph::GraphStats;
 use super::queue::Queue;
 use super::resource::{ResId, ResTable};
 use super::task::{Task, TaskFlags, TaskId, TaskView};
@@ -50,7 +57,12 @@ pub trait ReadySink: Send + Sync {
 
 /// The task scheduler (paper §3.4 `struct qsched`).
 pub struct Scheduler {
+    /// Builder-side task records; drained into `compiled` by
+    /// [`Scheduler::prepare`] and reconstituted (thawed) only if the
+    /// caller resumes building afterwards.
     pub(crate) tasks: Vec<Task>,
+    /// The frozen CSR/SoA graph every runtime path reads.
+    pub(crate) compiled: Option<CompiledGraph>,
     pub(crate) res: ResTable,
     pub(crate) queues: Vec<Queue>,
     pub(crate) config: SchedConfig,
@@ -83,6 +95,7 @@ impl Scheduler {
         let queues = (0..config.nr_queues).map(|_| Queue::new(64)).collect();
         Ok(Self {
             tasks: Vec::new(),
+            compiled: None,
             res: ResTable::new(),
             queues,
             config,
@@ -122,6 +135,7 @@ impl Scheduler {
     /// `qsched_reset`: drop tasks and resources, keep queues/config.
     pub fn reset(&mut self) {
         self.tasks.clear();
+        self.compiled = None;
         self.res = ResTable::new();
         for q in &self.queues {
             q.clear();
@@ -131,12 +145,14 @@ impl Scheduler {
         self.prepared = false;
     }
 
-    /// Rewind all *per-run* state while keeping the graph and the work
-    /// `prepare()` did (lock sorting, critical-path weights): clear the
-    /// queues and every transient counter so the same prepared graph can
-    /// be resubmitted. This is the template-reuse path of the server
-    /// (`server::registry`): per-job cost becomes dependency-counter
-    /// reinitialization instead of graph reconstruction + `prepare()`.
+    /// Rewind all *per-run* state while keeping the compiled graph and
+    /// the work `prepare()` did (freeze, lock sorting, critical-path
+    /// weights): clear the queues and every transient counter so the
+    /// same prepared graph can be resubmitted. This is the
+    /// template-reuse path of the server (`server::registry`): per-job
+    /// cost becomes dependency-counter reinitialization over the padded
+    /// run-state array instead of graph reconstruction + `prepare()` —
+    /// the frozen arenas (adjacency + payload) are never touched.
     ///
     /// The previous run's measured task times are snapshotted into each
     /// task's `learned_ns` before `measured_ns` is zeroed, so
@@ -154,11 +170,12 @@ impl Scheduler {
         for q in &self.queues {
             q.clear();
         }
-        for t in &self.tasks {
-            t.wait.store(0, Ordering::Relaxed);
-            let measured = t.measured_ns.swap(0, Ordering::Relaxed);
+        let g = self.compiled.as_ref().expect("prepared implies compiled");
+        for run in g.run.iter() {
+            run.wait.store(0, Ordering::Relaxed);
+            let measured = run.measured_ns.swap(0, Ordering::Relaxed);
             if measured > 0 {
-                t.learned_ns.store(measured, Ordering::Relaxed);
+                run.learned_ns.store(measured, Ordering::Relaxed);
             }
         }
         self.waiting.store(0, Ordering::Release);
@@ -174,6 +191,17 @@ impl Scheduler {
     // Build API (single-threaded)
     // ------------------------------------------------------------------
 
+    /// Reconstitute the builder records from the compiled graph so the
+    /// caller can keep building after a `prepare()`. No-op while the
+    /// graph is unfrozen.
+    fn thaw(&mut self) {
+        if let Some(g) = self.compiled.take() {
+            debug_assert!(self.tasks.is_empty(), "frozen scheduler kept builder records");
+            self.tasks = g.thaw();
+        }
+        self.prepared = false;
+    }
+
     /// `qsched_addtask` with owned payload bytes — the primitive the
     /// typed [`super::spec::TaskSpec`] API lowers to.
     pub(crate) fn push_task(
@@ -183,7 +211,7 @@ impl Scheduler {
         data: Vec<u8>,
         cost: i64,
     ) -> TaskHandle {
-        self.prepared = false;
+        self.thaw();
         let id = TaskId(self.tasks.len() as u32);
         self.tasks.push(Task::new(type_id, flags, data, cost));
         id
@@ -205,30 +233,33 @@ impl Scheduler {
     /// `qsched_addres`: create a resource, optionally under a parent and
     /// with an initial owner queue.
     pub fn add_resource(&mut self, parent: Option<ResHandle>, owner: i32) -> ResHandle {
-        self.prepared = false;
+        self.thaw();
         self.res.add(parent, owner)
     }
 
     /// `qsched_addlock`: task `t` must exclusively lock `r` to run.
     pub fn add_lock(&mut self, t: TaskHandle, r: ResHandle) {
-        self.prepared = false;
-        self.tasks[t.idx()].locks.push(r);
+        self.thaw();
+        self.tasks[t.idx()].add_lock(r);
     }
 
     /// `qsched_adduse`: task `t` uses `r` (queue-affinity hint only).
     pub fn add_use(&mut self, t: TaskHandle, r: ResHandle) {
-        self.prepared = false;
-        self.tasks[t.idx()].uses.push(r);
+        self.thaw();
+        self.tasks[t.idx()].add_use(r);
     }
 
     /// `qsched_addunlock(ta, tb)`: `tb` depends on `ta`.
     pub fn add_unlock(&mut self, ta: TaskHandle, tb: TaskHandle) {
-        self.prepared = false;
-        self.tasks[ta.idx()].unlocks.push(tb);
+        self.thaw();
+        self.tasks[ta.idx()].add_unlock(tb);
     }
 
     pub fn nr_tasks(&self) -> usize {
-        self.tasks.len()
+        match &self.compiled {
+            Some(g) => g.len(),
+            None => self.tasks.len(),
+        }
     }
 
     pub fn nr_resources(&self) -> usize {
@@ -244,91 +275,132 @@ impl Scheduler {
     }
 
     pub fn stats(&self) -> GraphStats {
-        GraphStats::of(&self.tasks, &self.res)
+        match &self.compiled {
+            Some(g) => GraphStats::of_compiled(g, &self.res),
+            None => GraphStats::of(&self.tasks, &self.res),
+        }
     }
 
     /// Critical-path length (max weight); valid after `prepare`.
     pub fn critical_path(&self) -> i64 {
-        critical_path(&self.tasks)
+        self.compiled.as_ref().map_or(0, critical_path)
     }
 
     /// Total serial work (sum of costs).
     pub fn total_work(&self) -> i64 {
-        total_work(&self.tasks)
+        match &self.compiled {
+            Some(g) => total_work(g),
+            None => self.tasks.iter().map(|t| t.cost).sum(),
+        }
     }
 
     pub fn task_view(&self, tid: TaskId) -> TaskView<'_> {
-        let t = &self.tasks[tid.idx()];
-        TaskView { tid, type_id: t.type_id, data: &t.data, cost: t.cost, weight: t.weight }
+        match &self.compiled {
+            Some(g) => g.view(tid),
+            None => {
+                let t = &self.tasks[tid.idx()];
+                TaskView { tid, type_id: t.type_id, data: &t.data, cost: t.cost, weight: 0 }
+            }
+        }
+    }
+
+    /// `(type_id, is_virtual)` of a task, pre- or post-freeze
+    /// ([`super::registry::KernelRegistry::validate`]).
+    pub fn task_kind(&self, tid: TaskId) -> (u32, bool) {
+        match &self.compiled {
+            Some(g) => (g.type_id(tid.idx()), g.is_virtual(tid.idx())),
+            None => {
+                let t = &self.tasks[tid.idx()];
+                (t.type_id, t.flags.virtual_task)
+            }
+        }
+    }
+
+    /// The locked resources of a task in the frozen (id-sorted,
+    /// ancestor-subsumed) order; valid after `prepare`. Diagnostic.
+    pub fn locks_of(&self, tid: TaskId) -> Vec<ResId> {
+        match &self.compiled {
+            Some(g) => g.lock_ids(tid.idx()).iter().map(|&r| ResId(r)).collect(),
+            None => self.tasks[tid.idx()].locks.clone(),
+        }
+    }
+
+    /// The compiled (frozen) graph, once `prepare()` has run. Benches
+    /// and diagnostics use this to reach the span accessors directly.
+    pub fn compiled_graph(&self) -> Option<&CompiledGraph> {
+        self.compiled.as_ref()
+    }
+
+    /// The shared frozen half of the compiled graph (arenas + spans),
+    /// once `prepare()` has run.
+    pub fn frozen_meta(&self) -> Option<&Arc<FrozenGraph>> {
+        self.compiled.as_ref().map(|g| g.meta())
+    }
+
+    /// Point this instance's compiled graph at `canon`'s frozen
+    /// structure if the two are structurally identical, dropping the
+    /// duplicate arenas (see [`CompiledGraph::adopt_meta`]). The server
+    /// registry calls this after each template build so all pooled
+    /// instances of one deterministic template share a single read-only
+    /// copy. Returns whether the adoption happened.
+    pub fn adopt_frozen_meta(&mut self, canon: &Arc<FrozenGraph>) -> bool {
+        match &mut self.compiled {
+            Some(g) => g.adopt_meta(canon),
+            None => false,
+        }
     }
 
     pub fn resources(&self) -> &ResTable {
         &self.res
     }
 
-    /// Validate the graph, sort each task's locks by resource id (the
-    /// §3.3 dining-philosophers fix), and compute critical-path weights.
+    /// Freeze the graph: validate handles, sort + dedup + subsume each
+    /// task's lock set (the §3.3 dining-philosophers fix), flatten all
+    /// adjacency lists and payloads into the shared arenas, precompute
+    /// wait counts and roots, and compute critical-path weights (cycle
+    /// check). See [`CompiledGraph`] for the layout. Idempotent; on
+    /// error the builder records are left untouched.
     pub fn prepare(&mut self) -> Result<()> {
-        validate(&self.tasks, &self.res)?;
-        for t in &mut self.tasks {
-            // Sort by resource id (the §3.3 dining-philosophers fix) and
-            // dedup; then drop any lock whose hierarchical *ancestor* is
-            // also locked by this task — the ancestor lock already
-            // excludes the whole subtree, and attempting both would
-            // self-deadlock (the child lock holds the ancestor, so the
-            // ancestor lock could never be acquired).
-            t.locks.sort_unstable();
-            t.locks.dedup();
-            if t.locks.len() > 1 {
-                let res = &self.res;
-                let lock_set: Vec<ResId> = t.locks.clone();
-                t.locks.retain(|&r| {
-                    let mut up = res.get(r).parent;
-                    while let Some(p) = up {
-                        if lock_set.binary_search(&p).is_ok() {
-                            return false;
-                        }
-                        up = res.get(p).parent;
-                    }
-                    true
-                });
-            }
-            t.uses.sort_unstable();
-            t.uses.dedup();
+        if self.prepared && self.compiled.is_some() {
+            return Ok(());
         }
-        compute_weights(&mut self.tasks)?;
+        let g = CompiledGraph::freeze(&self.tasks, &self.res)?;
+        self.compiled = Some(g);
+        // The builder records are fully represented by the compiled
+        // graph now (thaw reconstitutes them on demand).
+        self.tasks = Vec::new();
         self.prepared = true;
         Ok(())
     }
 
-    /// `qsched_start`: reset wait counters and the waiting count, clear the
-    /// queues, and enqueue every task with no unresolved dependencies.
-    /// Virtual ready tasks complete immediately (they have no action).
-    pub(crate) fn start(&self) -> Result<()> {
+    /// `qsched_start`: reset wait counters and the waiting count, clear
+    /// the queues, and enqueue every task with no unresolved
+    /// dependencies. The initial counts were precomputed at freeze
+    /// ([`CompiledGraph::wait0`]), so this is one plain store per task —
+    /// no per-edge atomic re-count. Virtual ready tasks complete
+    /// immediately (they have no action).
+    ///
+    /// Public for callers driving the scheduler manually
+    /// (`start`/`gettask`/`complete` loops — the stress tests and the
+    /// server's virtual twins); `run`/`run_sim` call it internally.
+    pub fn start(&self) -> Result<()> {
         if !self.prepared {
             return Err(SchedError::NotPrepared("call prepare() before running"));
         }
+        let g = self.compiled.as_ref().expect("prepared implies compiled");
         for q in &self.queues {
             q.clear();
         }
-        // wait[i] = number of tasks that unlock i.
-        for t in &self.tasks {
-            t.wait.store(0, Ordering::Relaxed);
+        for i in 0..g.len() {
+            g.run(i).wait.store(g.wait0(i), Ordering::Relaxed);
         }
-        for t in &self.tasks {
-            for u in &t.unlocks {
-                self.tasks[u.idx()].wait.fetch_add(1, Ordering::Relaxed);
-            }
-        }
-        self.waiting.store(self.tasks.len() as i64, Ordering::Release);
+        self.waiting.store(g.len() as i64, Ordering::Release);
         self.queued.store(0, Ordering::Release);
-        for (i, t) in self.tasks.iter().enumerate() {
-            if t.wait.load(Ordering::Relaxed) == 0 {
-                if t.flags.virtual_task {
-                    self.complete(TaskId(i as u32));
-                } else {
-                    self.enqueue(TaskId(i as u32));
-                }
+        for &r in g.roots() {
+            if g.is_virtual(r as usize) {
+                self.complete(TaskId(r));
+            } else {
+                self.enqueue(TaskId(r));
             }
         }
         Ok(())
@@ -376,15 +448,18 @@ impl Scheduler {
     /// (§3.1), optionally penalized by its conflict degree (§5
     /// "Priorities" extension) or replaced per [`KeyPolicy`] for the
     /// baseline/ablation configurations.
+    ///
+    /// [`KeyPolicy`]: super::config::KeyPolicy
     #[inline]
-    fn key_of(&self, tid: TaskId, t: &Task) -> i64 {
+    fn key_of(&self, g: &CompiledGraph, tid: TaskId) -> i64 {
+        let i = tid.idx();
         let base = match self.config.flags.key_policy {
-            super::config::KeyPolicy::CriticalPath => t.weight,
+            super::config::KeyPolicy::CriticalPath => g.weight(i),
             super::config::KeyPolicy::Fifo => -(tid.0 as i64),
-            super::config::KeyPolicy::Cost => t.cost,
+            super::config::KeyPolicy::Cost => g.cost(i),
         };
         if self.config.flags.lock_aware_priority {
-            base - t.cost * t.locks.len() as i64
+            base - g.cost(i) * g.lock_ids(i).len() as i64
         } else {
             base
         }
@@ -396,16 +471,16 @@ impl Scheduler {
     /// announced to it instead (with its key and first lock/use resource
     /// as the routing hint) and the internal queues stay untouched.
     pub(crate) fn enqueue(&self, tid: TaskId) {
-        let t = &self.tasks[tid.idx()];
-        debug_assert!(!t.flags.virtual_task);
+        let g = self.compiled.as_ref().expect("enqueue before prepare()");
+        let i = tid.idx();
+        debug_assert!(!g.is_virtual(i));
         if self.has_sink.load(Ordering::Acquire) {
             let sink = self.ready_sink.read().unwrap().clone();
             // A stale flag (sink cleared concurrently) falls through to
             // the internal queues.
             if let Some(sink) = sink {
-                let key = self.key_of(tid, t);
-                let route = t.locks.first().or_else(|| t.uses.first()).copied();
-                sink.ready(tid, key, route);
+                let key = self.key_of(g, tid);
+                sink.ready(tid, key, g.first_route(i));
                 self.queued.fetch_add(1, Ordering::AcqRel);
                 if self.config.flags.mode == ExecMode::Yield {
                     let _g = self.wait_lock.lock().unwrap();
@@ -430,8 +505,8 @@ impl Scheduler {
                 &mut heap_score
             };
             let mut best_score = 0u32;
-            for &rid in t.locks.iter().chain(t.uses.iter()) {
-                let owner = self.res.get(rid).owner();
+            for &rid in g.lock_ids(i).iter().chain(g.use_ids(i).iter()) {
+                let owner = self.res.get(ResId(rid)).owner();
                 if owner >= 0 && (owner as usize) < nq {
                     let q = owner as usize;
                     score[q] += 1;
@@ -442,7 +517,7 @@ impl Scheduler {
                 }
             }
         }
-        self.queues[best].put(self.key_of(tid, t), tid);
+        self.queues[best].put(self.key_of(g, tid), tid);
         self.queued.fetch_add(1, Ordering::AcqRel);
         if self.config.flags.mode == ExecMode::Yield {
             let _g = self.wait_lock.lock().unwrap();
@@ -456,9 +531,10 @@ impl Scheduler {
     /// if re-owning is on, they are re-owned to `qid`.
     /// Returns `(task, was_stolen)`.
     pub fn gettask(&self, qid: usize, rng: &mut Rng) -> Option<(TaskId, bool)> {
+        let g = self.compiled.as_ref().expect("gettask before prepare()");
         let nq = self.queues.len();
         let mut got: Option<(TaskId, bool)> = None;
-        if let Some(tid) = self.queues[qid].get(&self.tasks, &self.res) {
+        if let Some(tid) = self.queues[qid].get(g, &self.res) {
             got = Some((tid, false));
         } else if nq > 1 {
             match self.config.flags.steal {
@@ -468,7 +544,7 @@ impl Scheduler {
                     // and shuffling a Vec per steal attempt.
                     for k in rng.coprime_walk(nq) {
                         if k != qid {
-                            if let Some(tid) = self.queues[k].get(&self.tasks, &self.res) {
+                            if let Some(tid) = self.queues[k].get(g, &self.res) {
                                 got = Some((tid, true));
                                 break;
                             }
@@ -479,7 +555,7 @@ impl Scheduler {
                     let mut order: Vec<usize> = (0..nq).filter(|&k| k != qid).collect();
                     order.sort_by_key(|&k| std::cmp::Reverse(self.queues[k].total_key()));
                     for k in order {
-                        if let Some(tid) = self.queues[k].get(&self.tasks, &self.res) {
+                        if let Some(tid) = self.queues[k].get(g, &self.res) {
                             got = Some((tid, true));
                             break;
                         }
@@ -490,9 +566,9 @@ impl Scheduler {
         if let Some((tid, _)) = got {
             self.queued.fetch_sub(1, Ordering::AcqRel);
             if self.config.flags.reown {
-                let t = &self.tasks[tid.idx()];
-                for &rid in t.locks.iter().chain(t.uses.iter()) {
-                    self.res.get(rid).set_owner(qid as i32);
+                let i = tid.idx();
+                for &rid in g.lock_ids(i).iter().chain(g.use_ids(i).iter()) {
+                    self.res.get(ResId(rid)).set_owner(qid as i32);
                 }
             }
         }
@@ -503,7 +579,7 @@ impl Scheduler {
     /// shared-shard dispatch path, pairing with a [`ReadySink`] delivery
     /// the way [`Scheduler::gettask`] pairs with the internal queues.
     ///
-    /// Locks are attempted in the id-sorted order `prepare()` fixed (the
+    /// Locks are attempted in the id-sorted order the freeze fixed (the
     /// §3.3 dining-philosophers discipline) and rolled back on the first
     /// failure. On success the task counts as acquired: the
     /// [`Scheduler::queued_hint`] is decremented exactly as `gettask`
@@ -513,11 +589,12 @@ impl Scheduler {
     /// shard layer routes by a stateless `(job, resource)` hash, so
     /// mutating owner hints would only perturb the single-graph path.
     pub fn try_acquire(&self, tid: TaskId) -> bool {
-        let t = &self.tasks[tid.idx()];
-        for (j, &rid) in t.locks.iter().enumerate() {
-            if !self.res.try_lock(rid) {
-                for &r_prev in &t.locks[..j] {
-                    self.res.unlock(r_prev);
+        let g = self.compiled.as_ref().expect("try_acquire before prepare()");
+        let locks = g.lock_ids(tid.idx());
+        for (j, &rid) in locks.iter().enumerate() {
+            if !self.res.try_lock(ResId(rid)) {
+                for &r_prev in &locks[..j] {
+                    self.res.unlock(ResId(r_prev));
                 }
                 return false;
             }
@@ -529,22 +606,25 @@ impl Scheduler {
     /// `qsched_done`: release the task's resource locks, decrement each
     /// dependent's wait counter, enqueue any that hit zero (virtual
     /// dependents complete in place, iteratively), and decrement the
-    /// global waiting count.
+    /// global waiting count. The dependent walk reads one contiguous
+    /// span of the adjacency arena, and each `dec_wait` lands on the
+    /// dependent's own padded cache line.
     pub fn complete(&self, tid: TaskId) {
+        let g = self.compiled.as_ref().expect("complete before prepare()");
         let mut stack = vec![tid];
         while let Some(t) = stack.pop() {
-            let task = &self.tasks[t.idx()];
-            if !task.flags.virtual_task {
-                for &rid in &task.locks {
-                    self.res.unlock(rid);
+            let i = t.idx();
+            if !g.is_virtual(i) {
+                for &rid in g.lock_ids(i) {
+                    self.res.unlock(ResId(rid));
                 }
             }
-            for &u in &task.unlocks {
-                if self.tasks[u.idx()].dec_wait() == 0 {
-                    if self.tasks[u.idx()].flags.virtual_task {
-                        stack.push(u);
+            for &u in g.unlock_ids(i) {
+                if g.run(u as usize).dec_wait() == 0 {
+                    if g.is_virtual(u as usize) {
+                        stack.push(TaskId(u));
                     } else {
-                        self.enqueue(u);
+                        self.enqueue(TaskId(u));
                     }
                 }
             }
@@ -558,27 +638,48 @@ impl Scheduler {
 
     /// Store a measured execution time for cost relearning (§3.1).
     pub(crate) fn record_measured(&self, tid: TaskId, ns: u64) {
-        self.tasks[tid.idx()]
+        self.compiled
+            .as_ref()
+            .expect("record_measured before prepare()")
+            .run(tid.idx())
             .measured_ns
             .store(ns as i64, Ordering::Relaxed);
+    }
+
+    /// Measured execution time (ns) of a task's most recent run, or 0.
+    /// Diagnostic.
+    pub fn measured_ns(&self, tid: TaskId) -> i64 {
+        self.compiled
+            .as_ref()
+            .map_or(0, |g| g.run(tid.idx()).measured_ns.load(Ordering::Relaxed))
     }
 
     /// Fold measured times back into costs and recompute weights
     /// (`relearn_costs`; called between runs). Consumes the live
     /// `measured_ns` of the most recent run, falling back to the
     /// `learned_ns` snapshot a [`Scheduler::reset_run`] cycle preserved.
+    /// Costs and weights are per-instance arrays: relearning on one
+    /// template instance never disturbs another sharing the frozen
+    /// arenas.
     pub fn relearn_costs(&mut self) -> Result<()> {
+        let Some(g) = self.compiled.as_mut() else {
+            // Unfrozen (still building): nothing has run since the last
+            // thaw, and any earlier timings were snapshotted into the
+            // builder records' `learned_ns`, which the next freeze
+            // re-seeds — so there is nothing to fold here.
+            return Ok(());
+        };
         let mut any = false;
-        for t in &mut self.tasks {
-            let m = t.measured_ns.load(Ordering::Relaxed);
-            let m = if m > 0 { m } else { t.learned_ns.load(Ordering::Relaxed) };
+        for i in 0..g.meta.n {
+            let m = g.run[i].measured_ns.load(Ordering::Relaxed);
+            let m = if m > 0 { m } else { g.run[i].learned_ns.load(Ordering::Relaxed) };
             if m > 0 {
-                t.cost = m.max(1);
+                g.cost[i] = m.max(1);
                 any = true;
             }
         }
         if any {
-            compute_weights(&mut self.tasks)?;
+            compute_weights(g)?;
         }
         Ok(())
     }
@@ -602,8 +703,8 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::resource::OWNER_NONE;
     use crate::coordinator::builder::GraphBuilder;
+    use crate::coordinator::resource::OWNER_NONE;
 
     fn sched(nq: usize) -> Scheduler {
         Scheduler::new(SchedConfig::new(nq)).unwrap()
@@ -628,9 +729,10 @@ mod tests {
         s.prepare().unwrap();
         assert_eq!(s.nr_tasks(), 2);
         assert_eq!(s.nr_resources(), 1);
-        assert_eq!(s.tasks[a.idx()].weight, 15);
+        assert_eq!(s.task_view(a).weight, 15);
         assert_eq!(s.critical_path(), 15);
         assert_eq!(s.total_work(), 15);
+        assert!(s.compiled_graph().is_some(), "prepare freezes the graph");
     }
 
     #[test]
@@ -641,6 +743,8 @@ mod tests {
         s.add_unlock(a, b);
         s.add_unlock(b, a);
         assert!(matches!(s.prepare(), Err(SchedError::Cycle { .. })));
+        // The builder records survive the failed freeze.
+        assert_eq!(s.nr_tasks(), 2);
     }
 
     #[test]
@@ -657,7 +761,7 @@ mod tests {
         s.add_lock(t, root);
         s.add_lock(t, other);
         s.prepare().unwrap();
-        assert_eq!(s.tasks[t.idx()].locks, vec![root, other]);
+        assert_eq!(s.locks_of(t), vec![root, other]);
         // And the task actually runs.
         s.start().unwrap();
         let mut rng = Rng::new(0);
@@ -676,7 +780,24 @@ mod tests {
         s.add_lock(t, r0);
         s.add_lock(t, r1);
         s.prepare().unwrap();
-        assert_eq!(s.tasks[t.idx()].locks, vec![r0, r1]);
+        assert_eq!(s.locks_of(t), vec![r0, r1]);
+    }
+
+    #[test]
+    fn build_after_prepare_thaws_and_refreezes() {
+        // Resuming construction after a freeze must transparently thaw
+        // the compiled graph back into builder records.
+        let mut s = sched(1);
+        let a = s.task(0).cost(2).spawn();
+        s.prepare().unwrap();
+        assert!(s.compiled_graph().is_some());
+        let b = s.task(0).cost(3).after([a]).spawn();
+        assert!(s.compiled_graph().is_none(), "mutation thawed the graph");
+        assert_eq!(s.nr_tasks(), 2);
+        s.prepare().unwrap();
+        assert_eq!(s.task_view(a).weight, 5);
+        assert_eq!(s.stats().dependencies, 1);
+        let _ = b;
     }
 
     #[test]
@@ -850,6 +971,7 @@ mod tests {
         s.reset();
         assert_eq!(s.nr_tasks(), 0);
         assert_eq!(s.nr_resources(), 0);
+        assert!(s.compiled_graph().is_none());
         assert!(matches!(s.start(), Err(SchedError::NotPrepared(_))));
     }
 
@@ -875,7 +997,7 @@ mod tests {
             assert!(s.res.all_quiescent());
             s.reset_run().unwrap();
             assert_eq!(s.nr_tasks(), 2, "graph survives reset_run");
-            assert_eq!(s.tasks[a.idx()].weight, 5, "weights survive reset_run");
+            assert_eq!(s.task_view(a).weight, 5, "weights survive reset_run");
         }
     }
 
@@ -895,8 +1017,8 @@ mod tests {
         s.record_measured(a, 100);
         s.record_measured(b, 50);
         s.relearn_costs().unwrap();
-        assert_eq!(s.tasks[a.idx()].cost, 100);
-        assert_eq!(s.tasks[a.idx()].weight, 150);
+        assert_eq!(s.task_view(a).cost, 100);
+        assert_eq!(s.task_view(a).weight, 150);
     }
 
     #[test]
@@ -918,16 +1040,12 @@ mod tests {
         s.complete(t2);
         // The reuse path rewinds before anyone relearns…
         s.reset_run().unwrap();
-        assert_eq!(
-            s.tasks[a.idx()].measured_ns.load(Ordering::Relaxed),
-            0,
-            "reset_run clears the live measurement"
-        );
+        assert_eq!(s.measured_ns(a), 0, "reset_run clears the live measurement");
         // …and relearning afterwards still sees the measured times.
         s.relearn_costs().unwrap();
-        assert_eq!(s.tasks[a.idx()].cost, 400);
-        assert_eq!(s.tasks[b.idx()].cost, 700);
-        assert_eq!(s.tasks[a.idx()].weight, 1100);
+        assert_eq!(s.task_view(a).cost, 400);
+        assert_eq!(s.task_view(b).cost, 700);
+        assert_eq!(s.task_view(a).weight, 1100);
         // A later run's fresh measurements take precedence over the
         // snapshot.
         s.start().unwrap();
@@ -937,8 +1055,31 @@ mod tests {
         let (t2, _) = s.gettask(0, &mut rng).unwrap();
         s.complete(t2);
         s.relearn_costs().unwrap();
-        assert_eq!(s.tasks[a.idx()].cost, 900);
-        assert_eq!(s.tasks[b.idx()].cost, 700, "unmeasured task keeps learned cost");
+        assert_eq!(s.task_view(a).cost, 900);
+        assert_eq!(s.task_view(b).cost, 700, "unmeasured task keeps learned cost");
+    }
+
+    #[test]
+    fn measurements_survive_thaw_refreeze() {
+        // Regression: a run's measured times must survive a
+        // post-run build mutation (which thaws the compiled graph and
+        // its run-state atomics) so a later relearn still sees them —
+        // the old Task-atomic layout got this for free.
+        let mut s = sched(1);
+        let a = s.task(0).spawn();
+        s.prepare().unwrap();
+        s.start().unwrap();
+        let mut rng = Rng::new(0);
+        let (t1, _) = s.gettask(0, &mut rng).unwrap();
+        s.record_measured(t1, 500);
+        s.complete(t1);
+        // Mutate (thaw: compiled graph dropped), then re-freeze.
+        let b = s.task(0).cost(3).after([a]).spawn();
+        s.prepare().unwrap();
+        s.relearn_costs().unwrap();
+        assert_eq!(s.task_view(a).cost, 500, "timing survived the thaw");
+        assert_eq!(s.task_view(b).cost, 3, "new task keeps its estimate");
+        assert_eq!(s.task_view(a).weight, 503);
     }
 
     #[test]
@@ -1009,5 +1150,40 @@ mod tests {
         s.complete(first);
         let (second, _) = s.gettask(0, &mut rng).unwrap();
         s.complete(second);
+    }
+
+    #[test]
+    fn frozen_meta_adoption_across_instances() {
+        let build = || {
+            let mut s = sched(1);
+            let r = s.add_resource(None, OWNER_NONE);
+            let a = s.task(0).payload(&7i32).cost(2).spawn();
+            let b = s.task(1).cost(3).after([a]).spawn();
+            s.add_lock(b, r);
+            s.prepare().unwrap();
+            s
+        };
+        let a = build();
+        let mut b = build();
+        assert!(!Arc::ptr_eq(a.frozen_meta().unwrap(), b.frozen_meta().unwrap()));
+        let canon = Arc::clone(a.frozen_meta().unwrap());
+        assert!(b.adopt_frozen_meta(&canon));
+        assert!(Arc::ptr_eq(a.frozen_meta().unwrap(), b.frozen_meta().unwrap()));
+        // Run state stays per-instance despite the shared arenas.
+        b.start().unwrap();
+        let mut rng = Rng::new(0);
+        let (t1, _) = b.gettask(0, &mut rng).unwrap();
+        b.record_measured(t1, 123);
+        b.complete(t1);
+        assert_eq!(b.measured_ns(t1), 123);
+        assert_eq!(a.measured_ns(t1), 0, "instance A untouched by B's run");
+        let (t2, _) = b.gettask(0, &mut rng).unwrap();
+        b.complete(t2);
+        assert_eq!(b.waiting(), 0);
+        // A structurally different graph refuses adoption.
+        let mut c = sched(1);
+        c.task(0).spawn();
+        c.prepare().unwrap();
+        assert!(!c.adopt_frozen_meta(&canon));
     }
 }

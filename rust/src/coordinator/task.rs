@@ -1,11 +1,18 @@
-//! Task model (paper §3.1).
+//! Task model (paper §3.1) — the *builder-side* record.
 //!
 //! A task carries a user-defined `type` + opaque `data` payload, the list of
 //! tasks it *unlocks* (dependencies stored in reverse), the resources it
-//! *locks* (conflicts) and *uses* (affinity hints only), a user-estimated
-//! `cost` and the derived critical-path `weight`.
-
-use std::sync::atomic::{AtomicI32, AtomicI64, Ordering};
+//! *locks* (conflicts) and *uses* (affinity hints only), and a
+//! user-estimated `cost`.
+//!
+//! [`Task`] only exists while a graph is being *built*. At
+//! [`super::Scheduler::prepare`] the whole `Vec<Task>` is frozen into a
+//! [`super::compiled::CompiledGraph`] — a CSR/SoA layout with one shared
+//! adjacency arena, one payload arena, and cache-line-padded per-run
+//! atomics — and every runtime consumer (queues, `gettask`, `complete`,
+//! the executors) reads spans of that, never these `Vec`s. The derived
+//! critical-path `weight` and the per-run counters (`wait`,
+//! `measured_ns`, `learned_ns`) live on the compiled graph only.
 
 use super::resource::ResId;
 
@@ -40,7 +47,7 @@ pub enum TaskState {
 }
 
 /// Per-task flags (`task_flag_*` in the paper's appendix).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct TaskFlags {
     /// Virtual tasks group dependencies but have no action: they are not
     /// passed to the execution function.
@@ -80,11 +87,9 @@ impl TaskType for usize {
     }
 }
 
-/// A single task (paper §3.1 `struct task`).
-///
-/// The atomic fields (`wait`, `measured_ns`) are the only parts mutated
-/// during a parallel run; everything else is frozen by
-/// [`super::Scheduler::prepare`].
+/// A single task under construction (paper §3.1 `struct task`, build
+/// phase only — see the module docs; frozen into the CSR layout by
+/// `prepare()`).
 #[derive(Debug)]
 pub struct Task {
     /// Application-defined task type, mapped to a kernel by the exec fn.
@@ -95,25 +100,19 @@ pub struct Task {
     /// Tasks that this task unlocks — dependencies stored in reverse.
     pub unlocks: Vec<TaskId>,
     /// Resources that must be exclusively locked before execution.
-    /// Sorted by id in `prepare()` to avoid the dining-philosophers
-    /// deadlock (§3.3).
+    /// Sorted by id (and ancestor-subsumed) while freezing, to avoid
+    /// the dining-philosophers deadlock (§3.3).
     pub locks: Vec<ResId>,
     /// Resources used but not locked — queue-affinity hints only.
     pub uses: Vec<ResId>,
     /// Relative computational cost (user estimate or relearned).
     pub cost: i64,
-    /// Cost of the critical path rooted at this task:
-    /// `weight = cost + max(weight of unlocked tasks)` (§3.1).
-    pub weight: i64,
-    /// Number of unresolved dependencies; decremented by `qsched_done`.
-    pub wait: AtomicI32,
-    /// Measured execution time (ns) of the last run, for cost relearning.
-    pub measured_ns: AtomicI64,
-    /// Measured time carried across [`super::Scheduler::reset_run`]
-    /// cycles: `reset_run` snapshots `measured_ns` here before zeroing
-    /// it, so template reuse does not discard timings before
-    /// [`super::Scheduler::relearn_costs`] can consume them.
-    pub learned_ns: AtomicI64,
+    /// Learned execution time (ns) carried across a thaw: when a frozen
+    /// graph with recorded measurements is thawed for further building,
+    /// the snapshot lands here and the next freeze seeds the compiled
+    /// run state with it, so `relearn_costs` still sees timings after a
+    /// run → mutate → re-`prepare()` cycle. 0 = nothing learned.
+    pub learned_ns: i64,
 }
 
 impl Task {
@@ -126,29 +125,32 @@ impl Task {
             locks: Vec::new(),
             uses: Vec::new(),
             cost: cost.max(1),
-            weight: 0,
-            wait: AtomicI32::new(0),
-            measured_ns: AtomicI64::new(0),
-            learned_ns: AtomicI64::new(0),
+            learned_ns: 0,
         }
     }
 
-    /// Number of unresolved dependencies right now.
+    /// Record an exclusive-lock requirement (`qsched_addlock`).
     #[inline]
-    pub fn wait_count(&self) -> i32 {
-        self.wait.load(Ordering::Acquire)
+    pub fn add_lock(&mut self, r: ResId) {
+        self.locks.push(r);
     }
 
-    /// Decrement the wait counter, returning the *new* value. The caller
-    /// (scheduler `done`) enqueues the task when this hits zero.
+    /// Record a use / affinity hint (`qsched_adduse`).
     #[inline]
-    pub fn dec_wait(&self) -> i32 {
-        self.wait.fetch_sub(1, Ordering::AcqRel) - 1
+    pub fn add_use(&mut self, r: ResId) {
+        self.uses.push(r);
+    }
+
+    /// Record that this task unlocks `t` (`qsched_addunlock`).
+    #[inline]
+    pub fn add_unlock(&mut self, t: TaskId) {
+        self.unlocks.push(t);
     }
 }
 
 /// Read-only view of a task handed to the user's execution function,
 /// mirroring the `fun(t->type, t->data)` call in `qsched_run` (§3.4).
+/// `data` borrows the compiled graph's shared payload arena.
 #[derive(Clone, Copy)]
 pub struct TaskView<'a> {
     pub tid: TaskId,
@@ -229,12 +231,14 @@ mod tests {
     }
 
     #[test]
-    fn wait_counter_roundtrip() {
-        let t = Task::new(1, TaskFlags::default(), vec![], 3);
-        t.wait.store(2, Ordering::Release);
-        assert_eq!(t.dec_wait(), 1);
-        assert_eq!(t.dec_wait(), 0);
-        assert_eq!(t.wait_count(), 0);
+    fn build_record_accumulates() {
+        let mut t = Task::new(1, TaskFlags::default(), vec![1, 2], 3);
+        t.add_lock(ResId(0));
+        t.add_use(ResId(1));
+        t.add_unlock(TaskId(4));
+        assert_eq!(t.locks, vec![ResId(0)]);
+        assert_eq!(t.uses, vec![ResId(1)]);
+        assert_eq!(t.unlocks, vec![TaskId(4)]);
     }
 
     #[test]

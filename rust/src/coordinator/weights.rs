@@ -1,28 +1,35 @@
-//! Critical-path task weights (paper §3.1).
+//! Critical-path task weights (paper §3.1), over the frozen CSR layout.
 //!
 //! `weight_i = cost_i + max_{j in unlocks_i} weight_j`, computed by
 //! traversing the task DAG in *reverse* topological order (Kahn 1962),
 //! in O(tasks + dependencies). A side product is cycle detection: if the
 //! traversal cannot consume every task, the "graph" was not a DAG.
+//!
+//! The traversal reads the compiled graph's unlock spans (one shared
+//! `u32` arena — see `compiled.rs`) and writes the per-instance weight
+//! array; it runs both at freeze time (`CompiledGraph::freeze`) and on
+//! cost relearning (`Scheduler::relearn_costs`).
 
+use super::compiled::CompiledGraph;
 use super::error::{Result, SchedError};
-use super::task::Task;
 
-/// Compute every task's weight in place. Returns the number of tasks on
-/// the longest critical path's root set (diagnostic) or a cycle error.
-pub fn compute_weights(tasks: &mut [Task]) -> Result<()> {
-    let n = tasks.len();
+/// Compute every task's weight in place on the compiled graph.
+pub(crate) fn compute_weights(g: &mut CompiledGraph) -> Result<()> {
+    let n = g.len();
+    let meta = std::sync::Arc::clone(&g.meta);
     // out_degree[i] = number of tasks i unlocks that are still unprocessed.
-    let mut out_degree: Vec<u32> = tasks.iter().map(|t| t.unlocks.len() as u32).collect();
+    let mut out_degree: Vec<u32> = (0..n)
+        .map(|i| meta.unlocks[i].len)
+        .collect();
     // Seed: sinks (tasks that unlock nothing) have weight = cost.
     let mut stack: Vec<u32> = (0..n as u32).filter(|&i| out_degree[i as usize] == 0).collect();
-    // Reverse adjacency: who unlocks me? Built on the fly would be O(E);
-    // we need predecessors to decrement out-degrees, so build it once.
+    // Reverse adjacency: who unlocks me? We need predecessors to
+    // decrement out-degrees, so build the linked heads once (O(E)).
     let mut pred_heads: Vec<i64> = vec![-1; n];
     let mut pred_links: Vec<(u32, i64)> = Vec::new(); // (pred, next)
-    for (i, t) in tasks.iter().enumerate() {
-        for &succ in &t.unlocks {
-            let s = succ.idx();
+    for i in 0..n {
+        for &succ in &meta.adj[meta.unlocks[i].range()] {
+            let s = succ as usize;
             pred_links.push((i as u32, pred_heads[s]));
             pred_heads[s] = (pred_links.len() - 1) as i64;
         }
@@ -30,15 +37,12 @@ pub fn compute_weights(tasks: &mut [Task]) -> Result<()> {
     let mut processed = 0usize;
     while let Some(i) = stack.pop() {
         processed += 1;
-        let t = &tasks[i as usize];
-        let best_child = t
-            .unlocks
+        let best_child = meta.adj[meta.unlocks[i as usize].range()]
             .iter()
-            .map(|u| tasks[u.idx()].weight)
+            .map(|&u| g.weight[u as usize])
             .max()
             .unwrap_or(0);
-        let w = tasks[i as usize].cost + best_child;
-        tasks[i as usize].weight = w;
+        g.weight[i as usize] = g.cost[i as usize] + best_child;
         // Decrement each predecessor's remaining out-degree.
         let mut link = pred_heads[i as usize];
         while link >= 0 {
@@ -62,107 +66,99 @@ pub fn compute_weights(tasks: &mut [Task]) -> Result<()> {
 }
 
 /// Length (total cost) of the critical path = max task weight.
-pub fn critical_path(tasks: &[Task]) -> i64 {
-    tasks.iter().map(|t| t.weight).max().unwrap_or(0)
+pub fn critical_path(g: &CompiledGraph) -> i64 {
+    g.weight.iter().copied().max().unwrap_or(0)
 }
 
 /// Sum of all task costs = total serial work. `work / critical_path` bounds
 /// the achievable speedup (used to sanity-check the Fig 8 / Fig 11 curves).
-pub fn total_work(tasks: &[Task]) -> i64 {
-    tasks.iter().map(|t| t.cost).sum()
+pub fn total_work(g: &CompiledGraph) -> i64 {
+    g.cost.iter().sum()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::task::{TaskFlags, TaskId};
+    use crate::coordinator::resource::ResTable;
+    use crate::coordinator::task::{Task, TaskFlags, TaskId};
 
-    fn mk(costs: &[i64], deps: &[(usize, usize)]) -> Vec<Task> {
+    fn mk(costs: &[i64], deps: &[(usize, usize)]) -> Result<CompiledGraph> {
         // deps: (a, b) means b depends on a, i.e. a unlocks b.
         let mut ts: Vec<Task> = costs
             .iter()
             .map(|&c| Task::new(0, TaskFlags::default(), vec![], c))
             .collect();
         for &(a, b) in deps {
-            ts[a].unlocks.push(TaskId(b as u32));
+            ts[a].add_unlock(TaskId(b as u32));
         }
-        ts
+        CompiledGraph::freeze(&ts, &ResTable::new())
     }
 
     #[test]
     fn single_task() {
-        let mut ts = mk(&[7], &[]);
-        compute_weights(&mut ts).unwrap();
-        assert_eq!(ts[0].weight, 7);
-        assert_eq!(critical_path(&ts), 7);
+        let g = mk(&[7], &[]).unwrap();
+        assert_eq!(g.weight(0), 7);
+        assert_eq!(critical_path(&g), 7);
     }
 
     #[test]
     fn chain_accumulates() {
-        let mut ts = mk(&[1, 2, 3], &[(0, 1), (1, 2)]);
-        compute_weights(&mut ts).unwrap();
-        assert_eq!(ts[2].weight, 3);
-        assert_eq!(ts[1].weight, 5);
-        assert_eq!(ts[0].weight, 6);
+        let g = mk(&[1, 2, 3], &[(0, 1), (1, 2)]).unwrap();
+        assert_eq!(g.weight(2), 3);
+        assert_eq!(g.weight(1), 5);
+        assert_eq!(g.weight(0), 6);
     }
 
     #[test]
     fn diamond_takes_max_branch() {
         //   0 -> 1 -> 3 ; 0 -> 2 -> 3, costs below
-        let mut ts = mk(&[1, 10, 2, 4], &[(0, 1), (0, 2), (1, 3), (2, 3)]);
-        compute_weights(&mut ts).unwrap();
-        assert_eq!(ts[3].weight, 4);
-        assert_eq!(ts[1].weight, 14);
-        assert_eq!(ts[2].weight, 6);
-        assert_eq!(ts[0].weight, 15, "must follow the heavier branch");
-        assert_eq!(total_work(&ts), 17);
+        let g = mk(&[1, 10, 2, 4], &[(0, 1), (0, 2), (1, 3), (2, 3)]).unwrap();
+        assert_eq!(g.weight(3), 4);
+        assert_eq!(g.weight(1), 14);
+        assert_eq!(g.weight(2), 6);
+        assert_eq!(g.weight(0), 15, "must follow the heavier branch");
+        assert_eq!(total_work(&g), 17);
     }
 
     #[test]
     fn figure5_style_graph() {
         // Mirrors the paper's Fig. 5: weight = cost of critical path below.
-        let mut ts = mk(
-            &[2, 3, 1, 5, 2],
-            &[(0, 2), (1, 2), (2, 3), (2, 4)],
-        );
-        compute_weights(&mut ts).unwrap();
-        assert_eq!(ts[3].weight, 5);
-        assert_eq!(ts[4].weight, 2);
-        assert_eq!(ts[2].weight, 1 + 5);
-        assert_eq!(ts[0].weight, 2 + 6);
-        assert_eq!(ts[1].weight, 3 + 6);
+        let g = mk(&[2, 3, 1, 5, 2], &[(0, 2), (1, 2), (2, 3), (2, 4)]).unwrap();
+        assert_eq!(g.weight(3), 5);
+        assert_eq!(g.weight(4), 2);
+        assert_eq!(g.weight(2), 1 + 5);
+        assert_eq!(g.weight(0), 2 + 6);
+        assert_eq!(g.weight(1), 3 + 6);
     }
 
     #[test]
     fn cycle_detected() {
-        let mut ts = mk(&[1, 1, 1], &[(0, 1), (1, 2), (2, 0)]);
-        match compute_weights(&mut ts) {
+        match mk(&[1, 1, 1], &[(0, 1), (1, 2), (2, 0)]) {
             Err(SchedError::Cycle { ntasks, .. }) => assert_eq!(ntasks, 3),
-            other => panic!("expected cycle, got {other:?}"),
+            other => panic!("expected cycle, got {:?}", other.map(|g| g.len())),
         }
     }
 
     #[test]
-    fn self_loop_is_cycle() {
-        let mut ts = mk(&[1], &[(0, 0)]);
-        assert!(compute_weights(&mut ts).is_err());
+    fn self_loop_rejected() {
+        // A self-dependency is caught by freeze validation before the
+        // weight pass even runs.
+        assert!(mk(&[1], &[(0, 0)]).is_err());
     }
 
     #[test]
     fn disconnected_components() {
-        let mut ts = mk(&[4, 1, 2], &[(1, 2)]);
-        compute_weights(&mut ts).unwrap();
-        assert_eq!(ts[0].weight, 4);
-        assert_eq!(ts[1].weight, 3);
-        assert_eq!(critical_path(&ts), 4);
+        let g = mk(&[4, 1, 2], &[(1, 2)]).unwrap();
+        assert_eq!(g.weight(0), 4);
+        assert_eq!(g.weight(1), 3);
+        assert_eq!(critical_path(&g), 4);
     }
 
     #[test]
     fn empty_graph() {
-        let mut ts = mk(&[], &[]);
-        compute_weights(&mut ts).unwrap();
-        assert_eq!(critical_path(&ts), 0);
-        assert_eq!(total_work(&ts), 0);
+        let g = mk(&[], &[]).unwrap();
+        assert_eq!(critical_path(&g), 0);
+        assert_eq!(total_work(&g), 0);
     }
 
     #[test]
@@ -170,8 +166,7 @@ mod tests {
         // One root unlocking 100 sinks of increasing cost.
         let costs: Vec<i64> = std::iter::once(1).chain(1..=100).collect();
         let deps: Vec<(usize, usize)> = (1..=100).map(|i| (0, i)).collect();
-        let mut ts = mk(&costs, &deps);
-        compute_weights(&mut ts).unwrap();
-        assert_eq!(ts[0].weight, 101);
+        let g = mk(&costs, &deps).unwrap();
+        assert_eq!(g.weight(0), 101);
     }
 }

@@ -27,8 +27,10 @@
 //!
 //! # Architecture at a glance
 //!
-//! A task travels: `TaskSpec` build → `prepare()` (validation, lock
-//! sorting, critical-path weights) → ready announcement — into the
+//! A task travels: `TaskSpec` build → `prepare()` (validation + freeze
+//! into the CSR/SoA `CompiledGraph`: shared adjacency/payload arenas,
+//! sorted lock sets, critical-path weights, padded per-run atomics —
+//! see ARCHITECTURE.md §Memory layout) → ready announcement — into the
 //! scheduler's own queues for single-graph runs, or into a cross-job
 //! shard (tagged `(job, task, weight)`) on the server — → acquisition
 //! (`gettask` / `try_acquire`, resources locked) → execution →

@@ -6,6 +6,9 @@
 //! repro bh    [--n 100000 --n-max 100 --n-task 5000 --threads 4 --backend native|xla --verify]
 //! repro sim   <qr|bh> [--cores 64 ...workload options]
 //! repro bench <fig8|fig9|fig11|fig12|fig13|overhead|ablation|all> [--quick]
+//! repro bench-core [--threads 1 --iters 5 --quick --json bench_out/BENCH_core.json]
+//!                    # ns-per-task dispatch overhead + gettask scan length
+//!                    # (synthetic, QR, BH graphs; empty kernels)
 //! repro info  [--quick]       # E1/E4 graph-statistics tables
 //! repro serve        [--workers 4 --tenants 3 --jobs 30 --tasks 300 --work-ns 2000
 //!                     --batch-max 1 --adaptive-batch --max-queued 0]
@@ -42,13 +45,15 @@ fn main() {
         "bh" => cmd_bh(&args),
         "sim" => cmd_sim(&args),
         "bench" => cmd_bench(&args),
+        "bench-core" => cmd_bench_core(&args),
         "info" => cmd_info(&args),
         "serve" => cmd_serve(&args),
         "bench-server" => cmd_bench_server(&args),
         "bench-remote" => cmd_bench_remote(&args),
         _ => {
             eprintln!(
-                "usage: repro <qr|bh|sim|bench|info|serve|bench-server|bench-remote> [options]\n\
+                "usage: repro <qr|bh|sim|bench|bench-core|info|serve|bench-server|bench-remote> \
+                 [options]\n\
                  see rust/src/main.rs header or README.md"
             );
             std::process::exit(2);
@@ -237,6 +242,32 @@ fn cmd_bench(args: &Args) {
         }
     } else {
         run_one(which);
+    }
+}
+
+/// `repro bench-core` — the core-scheduler overhead trajectory:
+/// empty-kernel runs of the synthetic, QR, and Barnes-Hut graphs
+/// through the real threaded executor, reporting ns-per-task dispatch
+/// overhead and mean `gettask` scan length per graph. Writes
+/// `bench_out/BENCH_core.json` (CI uploads it as an artifact) — the
+/// trajectory that tracks the CSR/SoA graph flattening.
+fn cmd_bench_core(args: &Args) {
+    let quick = args.flag("quick");
+    let mut opts =
+        if quick { bench::overhead::CoreOpts::quick() } else { Default::default() };
+    opts.threads = args.get_usize("threads", opts.threads);
+    opts.iters = args.get_usize("iters", opts.iters);
+    if let Some(p) = args.get("json") {
+        opts.json = Some(std::path::PathBuf::from(p));
+    }
+    let (table, rows) = bench::overhead::run_core(&opts);
+    println!("\n== bench-core (empty kernels, {} thread(s)) ==", opts.threads.max(1));
+    println!("{}", table.render());
+    for r in &rows {
+        println!(
+            "{}: {:.1} ns/task dispatch overhead, {:.2} entries scanned per gettask",
+            r.graph, r.dispatch_ns_per_task, r.mean_scan_len
+        );
     }
 }
 

@@ -15,7 +15,8 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::coordinator::{
-    GraphBuilder, KernelRegistry, Payload, ResId, SchedConfig, Scheduler, TaskId, TaskView,
+    FrozenGraph, GraphBuilder, KernelRegistry, Payload, ResId, SchedConfig, Scheduler, TaskId,
+    TaskView,
 };
 use crate::qr;
 use crate::util::rng::Rng;
@@ -103,8 +104,19 @@ struct TemplateEntry {
     /// value pools up to `max_pool` instances; at most
     /// [`MAX_POOL_KEYS`] distinct values are retained.
     pool: HashMap<Vec<u8>, Vec<JobGraph>>,
+    /// Canonical frozen graph per argument value: the first successful
+    /// build's read-only arenas (adjacency + payload spans). Every
+    /// later build of the same `(template, args)` adopts this `Arc`
+    /// (`Scheduler::adopt_frozen_meta`, content-checked), dropping its
+    /// duplicate copy — read-only graph memory is O(graph) per
+    /// template, not O(pooled instances × graph). Bounded like the
+    /// pool: at most [`MAX_POOL_KEYS`] distinct argument values.
+    canon: HashMap<Vec<u8>, Arc<FrozenGraph>>,
     builds: u64,
     reuses: u64,
+    /// Builds whose frozen arenas were deduplicated onto the canonical
+    /// copy.
+    shared: u64,
 }
 
 impl TemplateEntry {
@@ -124,6 +136,9 @@ pub struct TemplateCounters {
     pub builds: u64,
     pub reuses: u64,
     pub pooled: usize,
+    /// Builds whose frozen read-only arenas were deduplicated onto the
+    /// template's canonical copy (see `Registry::checkout_many`).
+    pub shared: u64,
 }
 
 /// The template registry: name → builder + bounded idle-instance pool.
@@ -157,8 +172,10 @@ impl Registry {
             TemplateEntry {
                 build: Builder::Plain(build),
                 pool: HashMap::new(),
+                canon: HashMap::new(),
                 builds: 0,
                 reuses: 0,
+                shared: 0,
             },
         );
     }
@@ -172,8 +189,10 @@ impl Registry {
             TemplateEntry {
                 build: Builder::Param(build),
                 pool: HashMap::new(),
+                canon: HashMap::new(),
                 builds: 0,
                 reuses: 0,
+                shared: 0,
             },
         );
     }
@@ -287,6 +306,31 @@ impl Registry {
                     let mut t = self.templates.lock().unwrap();
                     if let Some(entry) = t.get_mut(name) {
                         entry.builds += 1;
+                        // Deduplicate the frozen read-only arenas onto
+                        // the template's canonical copy: templates are
+                        // deterministic, so every instance of one
+                        // `(template, args)` freezes to an identical
+                        // structure (content-checked by adopt). The
+                        // instance's scheduler Arc is still unique here
+                        // — nothing else has seen it.
+                        if let Some(sched) = Arc::get_mut(&mut g.sched) {
+                            match entry.canon.get(args) {
+                                Some(canon) => {
+                                    if sched.adopt_frozen_meta(canon) {
+                                        entry.shared += 1;
+                                    }
+                                }
+                                None => {
+                                    if entry.canon.len() < MAX_POOL_KEYS {
+                                        if let Some(meta) = sched.frozen_meta() {
+                                            entry
+                                                .canon
+                                                .insert(args.to_vec(), Arc::clone(meta));
+                                        }
+                                    }
+                                }
+                            }
+                        }
                     }
                     out.push((g, false, t_build.elapsed().as_nanos() as u64));
                 }
@@ -338,6 +382,7 @@ impl Registry {
             builds: e.builds,
             reuses: e.reuses,
             pooled: e.pool.values().map(|p| p.len()).sum(),
+            shared: e.shared,
         })
     }
 }
@@ -573,6 +618,62 @@ mod tests {
         let (g3, reused) = r.checkout("flaky", true).unwrap();
         assert!(reused);
         r.checkin(g3);
+    }
+
+    #[test]
+    fn instances_share_frozen_arenas() {
+        // Satellite of the CSR-flattening PR: the second and third
+        // builds of one deterministic template must adopt the first
+        // build's frozen arenas (payload + adjacency) instead of
+        // keeping duplicate copies — O(graph) read-only bytes for the
+        // whole pool.
+        let r = registry();
+        r.register("syn", synthetic_template(60, 4, 21, 0));
+        let (g1, _) = r.checkout("syn", true).unwrap();
+        let (g2, _) = r.checkout("syn", true).unwrap();
+        let (g3, _) = r.checkout("syn", true).unwrap();
+        let m1 = Arc::clone(g1.sched.frozen_meta().expect("prepared instance"));
+        assert!(
+            Arc::ptr_eq(&m1, g2.sched.frozen_meta().unwrap()),
+            "second build must share the canonical frozen graph"
+        );
+        assert!(Arc::ptr_eq(&m1, g3.sched.frozen_meta().unwrap()));
+        let c = r.counters("syn").unwrap();
+        assert_eq!(c.builds, 3);
+        assert_eq!(c.shared, 2, "two of three builds deduplicated");
+        // Run state stays per-instance: rewinding one does not disturb
+        // another (exercised further by rust/tests/prop_layout.rs).
+        g1.sched.reset_run().unwrap();
+        assert_eq!(g2.sched.waiting(), 0);
+        r.checkin(g1);
+        r.checkin(g2);
+        r.checkin(g3);
+        // Pooled instances keep sharing after checkin/checkout cycles.
+        let (g4, reused) = r.checkout("syn", true).unwrap();
+        assert!(reused);
+        assert!(Arc::ptr_eq(&m1, g4.sched.frozen_meta().unwrap()));
+    }
+
+    #[test]
+    fn param_instances_share_per_args() {
+        use crate::coordinator::Payload;
+        let r = registry();
+        r.register_param("syn-args", synthetic_param_template());
+        let a = (24u32, 3u32, 0u64).encode();
+        let b = (11u32, 2u32, 0u64).encode();
+        let (ga1, _) = r.checkout_args("syn-args", &a, true).unwrap();
+        let (ga2, _) = r.checkout_args("syn-args", &a, true).unwrap();
+        let (gb1, _) = r.checkout_args("syn-args", &b, true).unwrap();
+        assert!(Arc::ptr_eq(
+            ga1.sched.frozen_meta().unwrap(),
+            ga2.sched.frozen_meta().unwrap()
+        ));
+        assert!(
+            !Arc::ptr_eq(ga1.sched.frozen_meta().unwrap(), gb1.sched.frozen_meta().unwrap()),
+            "different argument values freeze different graphs"
+        );
+        let c = r.counters("syn-args").unwrap();
+        assert_eq!((c.builds, c.shared), (3, 1));
     }
 
     #[test]

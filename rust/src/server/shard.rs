@@ -39,6 +39,7 @@ use std::time::Duration;
 
 use crate::coordinator::queue::{TaggedQueue, Take};
 use crate::coordinator::{ReadySink, ResId, TaskId};
+use crate::util::pad::CachePadded;
 use crate::util::rng::Rng;
 
 use super::pool::ActiveJob;
@@ -95,10 +96,13 @@ pub struct ShardPool {
     /// Global ready-entry hint (same contract as
     /// [`Scheduler::queued_hint`](crate::coordinator::Scheduler::queued_hint),
     /// summed over all shards): lets idle workers skip probing.
-    queued: AtomicI64,
+    /// Cache-line-padded: bumped (SeqCst) on every push/acquire from
+    /// every worker, so it must not share a line with `sleepers` or the
+    /// slot-table mutex.
+    queued: CachePadded<AtomicI64>,
     /// Workers currently parked on `cv`; pushes only take the wakeup
-    /// mutex when someone is actually sleeping.
-    sleepers: AtomicUsize,
+    /// mutex when someone is actually sleeping. Padded like `queued`.
+    sleepers: CachePadded<AtomicUsize>,
     idle: Mutex<()>,
     cv: Condvar,
 }
@@ -109,8 +113,8 @@ impl ShardPool {
         Self {
             shards: (0..nr_shards).map(|_| TaggedQueue::new(64)).collect(),
             slots: Mutex::new(SlotTable { entries: Vec::new(), free: Vec::new(), active: 0 }),
-            queued: AtomicI64::new(0),
-            sleepers: AtomicUsize::new(0),
+            queued: CachePadded::new(AtomicI64::new(0)),
+            sleepers: CachePadded::new(AtomicUsize::new(0)),
             idle: Mutex::new(()),
             cv: Condvar::new(),
         }

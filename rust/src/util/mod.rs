@@ -1,5 +1,7 @@
-//! Utilities: deterministic RNG, statistics, shared-memory cells.
+//! Utilities: deterministic RNG, statistics, shared-memory cells,
+//! cache-line padding.
 pub mod cli;
+pub mod pad;
 pub mod rng;
 pub mod shared;
 pub mod stats;

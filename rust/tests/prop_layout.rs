@@ -1,0 +1,357 @@
+//! Layout-equivalence property tests for the frozen CSR/SoA graph
+//! (100 seeds): the compiled layout `prepare()` produces must be
+//! observationally identical to a straightforward Vec-based reference.
+//!
+//! For each random graph spec we check, against reference values
+//! computed directly from the spec (an independent reimplementation of
+//! stats, lock-set normalization, and critical-path weights):
+//!
+//! * `GraphStats` (tasks, dependencies, deduped/subsumed locks, uses,
+//!   roots, sinks, payload bytes),
+//! * per-task weights, `critical_path`, `total_work`,
+//! * payload byte round-trips through the shared arena,
+//! * identical virtual-time execution traces between a typed-API build
+//!   and a legacy-shim build (mirror of `prop_typed_api.rs` — the two
+//!   build paths freeze to *structurally equal* `FrozenGraph`s),
+//! * thaw/refreeze: resuming construction after a `prepare()` and
+//!   re-preparing yields the same graph as building in one go.
+//!
+//! Plus the template-sharing invariant: two instances sharing one
+//! frozen arena (`adopt_frozen_meta`) run and `reset_run()` repeatedly
+//! without leaking any per-run state between each other.
+
+use std::sync::Arc;
+
+use quicksched::coordinator::{
+    GraphBuilder, Payload, ResId, SchedConfig, Scheduler, TaskId, UnitCost,
+};
+use quicksched::util::rng::Rng;
+
+/// A random graph spec: tasks with typed `(u64, i32)` payloads, forward
+/// dependency edges, flat + hierarchical resources, locks and uses.
+struct Spec {
+    n_tasks: usize,
+    /// task -> parents (creation-ordered, may repeat across tasks)
+    parents: Vec<Vec<u32>>,
+    /// resource -> parent
+    resources: Vec<Option<u32>>,
+    /// task -> locked resources (deduped: the typed spec rejects dups)
+    locks: Vec<Vec<u32>>,
+    /// task -> used resources (sorted + deduped)
+    uses: Vec<Vec<u32>>,
+    costs: Vec<i64>,
+    type_ids: Vec<u32>,
+}
+
+fn gen_spec(seed: u64) -> Spec {
+    let mut rng = Rng::new(seed);
+    let n_tasks = 5 + rng.index(80);
+    let n_res = 1 + rng.index(10);
+    let resources: Vec<Option<u32>> = (0..n_res)
+        .map(|i| {
+            if i > 0 && rng.chance(0.4) {
+                Some(rng.index(i) as u32)
+            } else {
+                None
+            }
+        })
+        .collect();
+    let mut parents = vec![Vec::new(); n_tasks];
+    for (b, ps) in parents.iter_mut().enumerate().skip(1) {
+        for _ in 0..rng.index(3.min(b) + 1) {
+            ps.push(rng.index(b) as u32);
+        }
+    }
+    let mut pick_res = |rng: &mut Rng| {
+        let k = if rng.chance(0.5) { rng.index(3) } else { 0 };
+        let mut v: Vec<u32> = (0..k).map(|_| rng.index(n_res) as u32).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    let locks: Vec<Vec<u32>> = (0..n_tasks).map(|_| pick_res(&mut rng)).collect();
+    let uses: Vec<Vec<u32>> = (0..n_tasks).map(|_| pick_res(&mut rng)).collect();
+    let costs = (0..n_tasks).map(|_| 1 + rng.index(40) as i64).collect();
+    let type_ids = (0..n_tasks).map(|_| rng.index(4) as u32).collect();
+    Spec { n_tasks, parents, resources, locks, uses, costs, type_ids }
+}
+
+fn config(seed: u64) -> SchedConfig {
+    SchedConfig::new(1 + (seed as usize % 4))
+        .with_seed(seed)
+        .with_timeline(true)
+}
+
+/// Build through the typed API, emitting tasks `range` of the spec.
+fn build_typed_range(spec: &Spec, seed: u64, upto: usize) -> Scheduler {
+    let mut s = Scheduler::new(config(seed)).unwrap();
+    let rids: Vec<ResId> = spec
+        .resources
+        .iter()
+        .map(|p| s.add_resource(p.map(ResId), -1))
+        .collect();
+    let mut tids: Vec<TaskId> = Vec::with_capacity(upto);
+    for i in 0..upto {
+        let t = s
+            .task(spec.type_ids[i])
+            .payload(&(i as u64, -(i as i32)))
+            .cost(spec.costs[i])
+            .after(spec.parents[i].iter().map(|&p| tids[p as usize]))
+            .locks(spec.locks[i].iter().map(|&r| rids[r as usize]))
+            .uses(spec.uses[i].iter().map(|&r| rids[r as usize]))
+            .spawn();
+        tids.push(t);
+    }
+    s
+}
+
+fn build_typed(spec: &Spec, seed: u64) -> Scheduler {
+    let mut s = build_typed_range(spec, seed, spec.n_tasks);
+    s.prepare().unwrap();
+    s
+}
+
+/// Build the same graph through the legacy shim, byte-packing payloads
+/// by hand.
+#[allow(deprecated)]
+fn build_legacy(spec: &Spec, seed: u64) -> Scheduler {
+    use quicksched::coordinator::task::payload;
+    use quicksched::coordinator::TaskFlags;
+    let mut s = Scheduler::new(config(seed)).unwrap();
+    let rids: Vec<ResId> = spec
+        .resources
+        .iter()
+        .map(|p| s.add_resource(p.map(ResId), -1))
+        .collect();
+    let mut tids: Vec<TaskId> = Vec::with_capacity(spec.n_tasks);
+    for i in 0..spec.n_tasks {
+        let mut data = payload::from_u64s(&[i as u64]);
+        data.extend_from_slice(&payload::from_i32s(&[-(i as i32)]));
+        let t = s.add_task(spec.type_ids[i], TaskFlags::default(), &data, spec.costs[i]);
+        for &p in &spec.parents[i] {
+            s.add_unlock(tids[p as usize], t);
+        }
+        for &r in &spec.locks[i] {
+            s.add_lock(t, rids[r as usize]);
+        }
+        for &r in &spec.uses[i] {
+            s.add_use(t, rids[r as usize]);
+        }
+        tids.push(t);
+    }
+    s.prepare().unwrap();
+    s
+}
+
+/// Reference lock set of task `i`: the spec's (already deduped) locks
+/// minus any lock whose hierarchical ancestor is also locked — the
+/// §3.3 subsumption the freeze performs.
+fn ref_locks(spec: &Spec, i: usize) -> Vec<u32> {
+    let set = &spec.locks[i];
+    let mut out: Vec<u32> = set
+        .iter()
+        .copied()
+        .filter(|&r| {
+            let mut up = spec.resources[r as usize];
+            while let Some(p) = up {
+                if set.contains(&p) {
+                    return false;
+                }
+                up = spec.resources[p as usize];
+            }
+            true
+        })
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+/// Reference critical-path weights computed directly from the spec:
+/// edges go parent (lower index) → child (higher index), so one
+/// descending pass suffices.
+fn ref_weights(spec: &Spec) -> Vec<i64> {
+    let n = spec.n_tasks;
+    let mut weight = vec![0i64; n];
+    for i in (0..n).rev() {
+        let mut best_child = 0i64;
+        for (b, ps) in spec.parents.iter().enumerate().skip(i + 1) {
+            if ps.contains(&(i as u32)) {
+                best_child = best_child.max(weight[b]);
+            }
+        }
+        weight[i] = spec.costs[i] + best_child;
+    }
+    weight
+}
+
+fn trace(s: &mut Scheduler, cores: usize) -> Vec<(u32, u32, u64, u64)> {
+    let m = s.run_sim(cores, &UnitCost).unwrap();
+    m.timeline
+        .iter()
+        .map(|r| (r.tid.0, r.worker, r.start_ns, r.end_ns))
+        .collect()
+}
+
+#[test]
+fn frozen_layout_matches_vec_reference_100_seeds() {
+    for seed in 0..100 {
+        let spec = gen_spec(seed);
+        let mut typed = build_typed(&spec, seed);
+        let mut legacy = build_legacy(&spec, seed);
+
+        // --- GraphStats vs the reference computed from the spec ---
+        let st = typed.stats();
+        assert_eq!(st.tasks, spec.n_tasks, "seed {seed}");
+        let ref_deps: usize = spec.parents.iter().map(|p| p.len()).sum();
+        assert_eq!(st.dependencies, ref_deps, "seed {seed}: dependency count");
+        let ref_lock_count: usize = (0..spec.n_tasks).map(|i| ref_locks(&spec, i).len()).sum();
+        assert_eq!(st.locks, ref_lock_count, "seed {seed}: subsumed lock count");
+        let ref_uses: usize = spec.uses.iter().map(|u| u.len()).sum();
+        assert_eq!(st.uses, ref_uses, "seed {seed}: use count");
+        assert_eq!(st.payload_bytes, spec.n_tasks * 12, "seed {seed}: payload bytes");
+        let ref_roots = spec.parents.iter().filter(|p| p.is_empty()).count();
+        assert_eq!(st.roots, ref_roots, "seed {seed}: roots");
+        let ref_sinks = (0..spec.n_tasks as u32)
+            .filter(|&i| !spec.parents.iter().any(|ps| ps.contains(&i)))
+            .count();
+        assert_eq!(st.sinks, ref_sinks, "seed {seed}: sinks");
+        assert_eq!(st, legacy.stats(), "seed {seed}: typed vs legacy stats");
+
+        // --- weights, payloads, per-task normalized lock sets ---
+        let want_w = ref_weights(&spec);
+        for i in 0..spec.n_tasks {
+            let v = typed.task_view(TaskId(i as u32));
+            assert_eq!(v.weight, want_w[i], "seed {seed}: weight of task {i}");
+            assert_eq!(v.cost, spec.costs[i], "seed {seed}: cost of task {i}");
+            assert_eq!(v.type_id, spec.type_ids[i], "seed {seed}: type of task {i}");
+            let (x, y) = <(u64, i32)>::decode(v.data);
+            assert_eq!((x, y), (i as u64, -(i as i32)), "seed {seed}: payload arena");
+            let got_locks: Vec<u32> =
+                typed.locks_of(TaskId(i as u32)).iter().map(|r| r.0).collect();
+            assert_eq!(got_locks, ref_locks(&spec, i), "seed {seed}: lock set of {i}");
+        }
+        assert_eq!(
+            typed.critical_path(),
+            *want_w.iter().max().unwrap(),
+            "seed {seed}: critical path"
+        );
+        assert_eq!(
+            typed.total_work(),
+            spec.costs.iter().sum::<i64>(),
+            "seed {seed}: total work"
+        );
+
+        // --- the two build paths freeze to equal structures ---
+        assert_eq!(
+            **typed.frozen_meta().unwrap(),
+            **legacy.frozen_meta().unwrap(),
+            "seed {seed}: frozen graphs diverge"
+        );
+
+        // --- identical execution traces under the deterministic sim ---
+        let cores = 1 + (seed as usize % 8);
+        assert_eq!(
+            trace(&mut typed, cores),
+            trace(&mut legacy, cores),
+            "seed {seed}: sim execution traces diverge"
+        );
+    }
+}
+
+#[test]
+fn thaw_and_refreeze_matches_single_freeze_20_seeds() {
+    // Freezing a prefix, resuming construction (which thaws), and
+    // re-freezing must be indistinguishable from building in one go.
+    for seed in 0..20 {
+        let spec = gen_spec(1000 + seed);
+        let cut = spec.n_tasks / 2;
+        let mut split = build_typed_range(&spec, seed, cut);
+        split.prepare().unwrap(); // freeze the prefix…
+        {
+            // …then keep building: the scheduler thaws transparently.
+            let rids: Vec<ResId> = (0..spec.resources.len() as u32).map(ResId).collect();
+            let mut tids: Vec<TaskId> = (0..cut as u32).map(TaskId).collect();
+            for i in cut..spec.n_tasks {
+                let t = split
+                    .task(spec.type_ids[i])
+                    .payload(&(i as u64, -(i as i32)))
+                    .cost(spec.costs[i])
+                    .after(spec.parents[i].iter().map(|&p| tids[p as usize]))
+                    .locks(spec.locks[i].iter().map(|&r| rids[r as usize]))
+                    .uses(spec.uses[i].iter().map(|&r| rids[r as usize]))
+                    .spawn();
+                tids.push(t);
+            }
+        }
+        split.prepare().unwrap();
+        let mut whole = build_typed(&spec, seed);
+        assert_eq!(split.stats(), whole.stats(), "seed {seed}: stats after thaw");
+        assert_eq!(
+            **split.frozen_meta().unwrap(),
+            **whole.frozen_meta().unwrap(),
+            "seed {seed}: thaw+refreeze diverged structurally"
+        );
+        let cores = 1 + (seed as usize % 4);
+        assert_eq!(
+            trace(&mut split, cores),
+            trace(&mut whole, cores),
+            "seed {seed}: traces diverge after thaw"
+        );
+    }
+}
+
+#[test]
+fn reset_run_twice_under_arena_sharing_leaks_nothing() {
+    // Two instances of one "template" share the frozen arenas via
+    // adopt_frozen_meta (exactly what server/registry.rs does per
+    // build). Running, rewinding, and relearning on one must never
+    // disturb the other, and every rerun must reproduce the first
+    // trace bit-for-bit.
+    let spec = gen_spec(77_777);
+    let mut a = build_typed(&spec, 7);
+    let mut b = build_typed(&spec, 7);
+    let canon = Arc::clone(a.frozen_meta().unwrap());
+    assert!(b.adopt_frozen_meta(&canon), "identical builds must share");
+    assert!(Arc::ptr_eq(a.frozen_meta().unwrap(), b.frozen_meta().unwrap()));
+
+    let first = trace(&mut a, 4);
+    a.reset_run().unwrap();
+    for i in 0..spec.n_tasks {
+        assert_eq!(
+            a.measured_ns(TaskId(i as u32)),
+            0,
+            "reset_run cleared instance A's live measurements"
+        );
+        assert_eq!(b.measured_ns(TaskId(i as u32)), 0, "B untouched by A's run");
+    }
+    // Rerun A twice under reset_run cycles: identical traces.
+    assert_eq!(trace(&mut a, 4), first, "first rerun diverged");
+    a.reset_run().unwrap();
+    assert_eq!(trace(&mut a, 4), first, "second rerun diverged");
+    // B's first run over the *shared* arenas reproduces the same trace.
+    assert_eq!(trace(&mut b, 4), first, "shared-arena instance diverged");
+    b.reset_run().unwrap();
+    assert_eq!(trace(&mut b, 4), first, "shared-arena rerun diverged");
+
+    // Relearning costs on A (per-instance arrays) must not leak into B.
+    a.reset_run().unwrap();
+    b.reset_run().unwrap();
+    let t0 = TaskId(0);
+    let before_b_weight = b.task_view(t0).weight;
+    let before_b_cost = b.task_view(t0).cost;
+    // A real threaded run records measured times; relearning folds them
+    // into A's *own* cost/weight arrays only.
+    a.run(1, |_| {}).unwrap();
+    a.relearn_costs().unwrap();
+    assert_eq!(
+        b.task_view(t0).weight,
+        before_b_weight,
+        "A's relearned costs leaked into B's weights"
+    );
+    assert_eq!(
+        b.task_view(t0).cost,
+        before_b_cost,
+        "A's relearned costs leaked into B's costs"
+    );
+    assert!(Arc::ptr_eq(a.frozen_meta().unwrap(), b.frozen_meta().unwrap()));
+}
