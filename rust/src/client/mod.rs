@@ -209,9 +209,22 @@ impl RemoteClient {
     }
 
     /// The server's stats snapshot, rendered server-side as JSON.
+    /// Snapshots larger than one wire frame arrive chunked and are
+    /// reassembled transparently (see `codec::read_response`).
     pub fn stats_json(&mut self) -> Result<String, RemoteError> {
         match self.roundtrip(&Request::Stats)? {
             Response::StatsJson { json } => Ok(json),
+            other => Err(self.fail(other)),
+        }
+    }
+
+    /// The server's Prometheus text exposition (scheduler, shard,
+    /// admission, tenant and wire families) — the remote face of
+    /// `SchedServer::metrics_text`. Parse it back with
+    /// [`crate::obs::parse_exposition`].
+    pub fn metrics_text(&mut self) -> Result<String, RemoteError> {
+        match self.roundtrip(&Request::Metrics)? {
+            Response::MetricsText { text } => Ok(text),
             other => Err(self.fail(other)),
         }
     }
@@ -224,8 +237,9 @@ impl RemoteClient {
 
     fn roundtrip(&mut self, req: &Request) -> Result<Response, RemoteError> {
         codec::write_frame(&mut self.stream, &req.encode())?;
-        let body = codec::read_frame(&mut self.stream)?;
-        Ok(Response::decode(&body)?)
+        // read_response reassembles chunked (multi-frame) responses;
+        // single-frame responses pass straight through.
+        Ok(codec::read_response(&mut self.stream)?)
     }
 
     /// Map a non-success response onto the client error type;

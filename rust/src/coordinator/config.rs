@@ -56,6 +56,13 @@ pub struct SchedFlags {
     pub relearn_costs: bool,
     /// Heap-key derivation (paper = `CriticalPath`).
     pub key_policy: KeyPolicy,
+    /// Always-on observability counters on the acquisition hot paths
+    /// (`gettask` calls/hits/steals, `try_acquire` attempts/failures;
+    /// see `Scheduler::obs_counters`). On by default — the cost is a
+    /// couple of relaxed increments on padded lines per task, guarded
+    /// to <5% of dispatch overhead by `rust/tests/perf_guard.rs`. Off
+    /// is the "compiled out" baseline that guard measures against.
+    pub obs_counters: bool,
 }
 
 impl Default for SchedFlags {
@@ -67,6 +74,7 @@ impl Default for SchedFlags {
             lock_aware_priority: false,
             relearn_costs: false,
             key_policy: KeyPolicy::CriticalPath,
+            obs_counters: true,
         }
     }
 }

@@ -14,7 +14,7 @@
 //! *building* after a `prepare()` transparently thaws the compiled graph
 //! back into builder records.
 
-use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use super::compiled::{CompiledGraph, FrozenGraph};
@@ -25,6 +25,7 @@ use super::queue::Queue;
 use super::resource::{ResId, ResTable};
 use super::task::{Task, TaskFlags, TaskId, TaskView};
 use super::weights::{compute_weights, critical_path, total_work};
+use crate::util::pad::CachePadded;
 use crate::util::rng::Rng;
 
 /// Public alias for task handles (the paper's `qsched_task_t`).
@@ -53,6 +54,21 @@ pub type ResHandle = ResId;
 /// the completion hot path, potentially from many workers at once.
 pub trait ReadySink: Send + Sync {
     fn ready(&self, tid: TaskId, key: i64, route: Option<ResId>);
+}
+
+/// Always-on acquisition counters (cache-line-padded, relaxed bumps):
+/// the scheduler-level slice of the crate's observability layer. Every
+/// `gettask` call/hit/steal and every `try_acquire` attempt/failure is
+/// counted here when `SchedFlags::obs_counters` is set (the default),
+/// cumulatively over the scheduler's lifetime — `reset_run` does not
+/// rewind them, mirroring `QueueStats`.
+#[derive(Debug, Default)]
+pub(crate) struct SchedObs {
+    pub(crate) gettask_calls: CachePadded<AtomicU64>,
+    pub(crate) gettask_hits: CachePadded<AtomicU64>,
+    pub(crate) gettask_steals: CachePadded<AtomicU64>,
+    pub(crate) acquire_attempts: CachePadded<AtomicU64>,
+    pub(crate) acquire_failures: CachePadded<AtomicU64>,
 }
 
 /// The task scheduler (paper §3.4 `struct qsched`).
@@ -84,6 +100,8 @@ pub struct Scheduler {
     /// that never install a sink pay one relaxed load per enqueue, not
     /// an RwLock round-trip.
     has_sink: AtomicBool,
+    /// Always-on acquisition counters (see [`Scheduler::obs_counters`]).
+    obs: SchedObs,
 }
 
 impl Scheduler {
@@ -106,6 +124,7 @@ impl Scheduler {
             wait_cv: Condvar::new(),
             ready_sink: RwLock::new(None),
             has_sink: AtomicBool::new(false),
+            obs: SchedObs::default(),
         })
     }
 
@@ -532,6 +551,10 @@ impl Scheduler {
     /// Returns `(task, was_stolen)`.
     pub fn gettask(&self, qid: usize, rng: &mut Rng) -> Option<(TaskId, bool)> {
         let g = self.compiled.as_ref().expect("gettask before prepare()");
+        let obs = self.config.flags.obs_counters;
+        if obs {
+            self.obs.gettask_calls.fetch_add(1, Ordering::Relaxed);
+        }
         let nq = self.queues.len();
         let mut got: Option<(TaskId, bool)> = None;
         if let Some(tid) = self.queues[qid].get(g, &self.res) {
@@ -563,7 +586,13 @@ impl Scheduler {
                 }
             }
         }
-        if let Some((tid, _)) = got {
+        if let Some((tid, stolen)) = got {
+            if obs {
+                self.obs.gettask_hits.fetch_add(1, Ordering::Relaxed);
+                if stolen {
+                    self.obs.gettask_steals.fetch_add(1, Ordering::Relaxed);
+                }
+            }
             self.queued.fetch_sub(1, Ordering::AcqRel);
             if self.config.flags.reown {
                 let i = tid.idx();
@@ -590,11 +619,18 @@ impl Scheduler {
     /// mutating owner hints would only perturb the single-graph path.
     pub fn try_acquire(&self, tid: TaskId) -> bool {
         let g = self.compiled.as_ref().expect("try_acquire before prepare()");
+        let obs = self.config.flags.obs_counters;
+        if obs {
+            self.obs.acquire_attempts.fetch_add(1, Ordering::Relaxed);
+        }
         let locks = g.lock_ids(tid.idx());
         for (j, &rid) in locks.iter().enumerate() {
             if !self.res.try_lock(ResId(rid)) {
                 for &r_prev in &locks[..j] {
                     self.res.unlock(ResId(r_prev));
+                }
+                if obs {
+                    self.obs.acquire_failures.fetch_add(1, Ordering::Relaxed);
                 }
                 return false;
             }
@@ -682,6 +718,23 @@ impl Scheduler {
             compute_weights(g)?;
         }
         Ok(())
+    }
+
+    /// Always-on acquisition counters: `(gettask calls, gettask hits,
+    /// gettask steals, try_acquire attempts, try_acquire failures)`,
+    /// cumulative over the scheduler's lifetime. Zeros when
+    /// `SchedFlags::obs_counters` is off. Complements
+    /// [`Scheduler::queue_stats`] (scan lengths, spin counts) — together
+    /// they are the Fig. 13 `qsched_gettask` overhead decomposition the
+    /// observability layer exports.
+    pub fn obs_counters(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            self.obs.gettask_calls.load(Ordering::Relaxed),
+            self.obs.gettask_hits.load(Ordering::Relaxed),
+            self.obs.gettask_steals.load(Ordering::Relaxed),
+            self.obs.acquire_attempts.load(Ordering::Relaxed),
+            self.obs.acquire_failures.load(Ordering::Relaxed),
+        )
     }
 
     /// Aggregated queue statistics (gets, misses, scanned, lock failures,

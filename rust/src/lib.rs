@@ -23,6 +23,12 @@
 //!   over TCP or Unix-domain sockets (`repro serve --listen`).
 //! * [`client`] — `RemoteClient`, the blocking client library for the
 //!   wire protocol (typed payload args, in-process error types).
+//! * [`obs`] — observability: the `MetricsRegistry` (Prometheus
+//!   text-format exposition of the always-on scheduler/queue/shard/
+//!   admission/wire counters, served end-to-end via the `Metrics` wire
+//!   request and `repro serve --metrics`) and the `TraceSink` (Chrome
+//!   `trace_event` timelines — the Fig 9/12 Gantt view — written by
+//!   `repro trace`).
 //! * [`util`] — RNG, stats, mini bench harness, CLI parsing.
 //!
 //! # Architecture at a glance
@@ -50,3 +56,4 @@ pub mod baselines;
 pub mod bench;
 pub mod server;
 pub mod client;
+pub mod obs;

@@ -12,7 +12,14 @@
 //! repro info  [--quick]       # E1/E4 graph-statistics tables
 //! repro serve        [--workers 4 --tenants 3 --jobs 30 --tasks 300 --work-ns 2000
 //!                     --batch-max 1 --adaptive-batch --max-queued 0]
-//!                    [--listen 127.0.0.1:7193|unix:/tmp/qs.sock --for-secs 0]
+//!                    [--listen 127.0.0.1:7193|unix:/tmp/qs.sock --for-secs 0
+//!                     --metrics --metrics-every-secs 10]
+//! repro trace <qr|bh> [--out trace.json --threads 4 ...workload options]
+//!                    # worker Gantt timeline as Chrome trace_event JSON
+//!                    # (open in chrome://tracing or ui.perfetto.dev)
+//! repro metrics --connect HOST:PORT|unix:/tmp/qs.sock [--out FILE]
+//!                    # scrape a serve --listen instance's Prometheus text
+//!                    # exposition; exits nonzero if it fails to parse
 //! repro bench-server [--workers 4 --clients 4 --jobs 64 --tasks 400 --work-ns 1000
 //!                     --json bench_out/BENCH_server.json --quick]
 //!                    [--batch --batch-max 8 --tiny-jobs 256 --tiny-tasks 48
@@ -28,6 +35,7 @@ use quicksched::bench;
 use quicksched::client::{RemoteClient, RemoteError};
 use quicksched::coordinator::{SchedConfig, Scheduler};
 use quicksched::nbody;
+use quicksched::obs::TraceSink;
 use quicksched::qr;
 use quicksched::runtime::{Manifest, RuntimeService, XlaNbodyExec, XlaTileBackend};
 use quicksched::server::{
@@ -48,12 +56,14 @@ fn main() {
         "bench-core" => cmd_bench_core(&args),
         "info" => cmd_info(&args),
         "serve" => cmd_serve(&args),
+        "trace" => cmd_trace(&args),
+        "metrics" => cmd_metrics(&args),
         "bench-server" => cmd_bench_server(&args),
         "bench-remote" => cmd_bench_remote(&args),
         _ => {
             eprintln!(
-                "usage: repro <qr|bh|sim|bench|bench-core|info|serve|bench-server|bench-remote> \
-                 [options]\n\
+                "usage: repro <qr|bh|sim|bench|bench-core|info|serve|trace|metrics|\
+                 bench-server|bench-remote> [options]\n\
                  see rust/src/main.rs header or README.md"
             );
             std::process::exit(2);
@@ -307,6 +317,11 @@ fn cmd_serve(args: &Args) {
 
     if let Some(listen) = args.get("listen") {
         let for_secs = args.get_u64("for-secs", 0);
+        // --metrics: periodically dump the Prometheus text exposition
+        // (scheduler + shard + admission + tenant + wire families) to
+        // stdout, every --metrics-every-secs seconds.
+        let metrics_every = (args.flag("metrics") || args.get("metrics-every-secs").is_some())
+            .then(|| args.get_u64("metrics-every-secs", 10).max(1));
         let server = Arc::new(server);
         let listener = WireListener::start(Arc::clone(&server), &ListenAddr::parse(listen))
             .expect("binding wire listener");
@@ -315,14 +330,28 @@ fn cmd_serve(args: &Args) {
             listener.local_addr(),
             server.registry().names()
         );
-        if for_secs == 0 {
-            loop {
-                std::thread::sleep(std::time::Duration::from_secs(3600));
+        let deadline = (for_secs > 0)
+            .then(|| std::time::Instant::now() + std::time::Duration::from_secs(for_secs));
+        let mut next_dump = metrics_every
+            .map(|every| std::time::Instant::now() + std::time::Duration::from_secs(every));
+        loop {
+            std::thread::sleep(std::time::Duration::from_millis(200));
+            let now = std::time::Instant::now();
+            if let (Some(every), Some(at)) = (metrics_every, next_dump) {
+                if now >= at {
+                    print!("{}", listener.metrics_text());
+                    next_dump = Some(at + std::time::Duration::from_secs(every));
+                }
+            }
+            if deadline.is_some_and(|d| now >= d) {
+                break;
             }
         }
-        std::thread::sleep(std::time::Duration::from_secs(for_secs));
         listener.shutdown();
         server.drain();
+        if metrics_every.is_some() {
+            print!("{}", listener.metrics_text());
+        }
         print!("{}", server.stats().render());
         return;
     }
@@ -359,6 +388,95 @@ fn cmd_serve(args: &Args) {
          {busy} busy, {spins} lock spins, {purged} purged"
     );
     server.shutdown();
+}
+
+/// `repro trace <qr|bh>` — run a driver with the timeline recorder on
+/// and write the per-worker Gantt chart (the paper's Fig 9/12 view) as
+/// Chrome `trace_event` JSON, loadable in chrome://tracing or
+/// ui.perfetto.dev. Task spans carry the workload's own type names
+/// (DGEQRF/DLARFT/DTSQRF/DSSRFT for QR; self/pair-pp/pair-pc/com for
+/// Barnes-Hut) plus per-task `gettask` overhead and steal flags.
+fn cmd_trace(args: &Args) {
+    let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("qr");
+    let threads = args.get_usize("threads", 4);
+    let out = std::path::PathBuf::from(args.get_str("out", "trace.json").to_string());
+    let cfg = SchedConfig::new(threads).with_timeline(true);
+    let mut sink = TraceSink::new();
+    match what {
+        "qr" => {
+            let tiles = args.get_usize("tiles", 16);
+            let tile = args.get_usize("tile", 32);
+            let mat = qr::TiledMatrix::random(tile, tiles, tiles, args.get_u64("seed", 42));
+            let run = qr::run_threaded(&mat, &qr::NativeBackend, cfg, threads).unwrap();
+            println!(
+                "trace qr: {tiles}x{tiles} tiles on {threads} threads, {} tasks in {:.3} ms",
+                run.metrics.tasks_run,
+                run.metrics.elapsed_ns as f64 / 1e6
+            );
+            sink.add_run_named(&run.metrics, 1, |ty| qr::QrTask::from_u32(ty).name().to_string());
+        }
+        "bh" => {
+            let n = args.get_usize("n", 20_000);
+            let n_max = args.get_usize("n-max", 100);
+            let n_task = args.get_usize("n-task", 2000);
+            let cloud = nbody::uniform_cloud(n, args.get_u64("seed", 42));
+            let (_, run) = nbody::run_threaded(cloud, n_max, n_task, cfg, threads).unwrap();
+            println!(
+                "trace bh: {n} particles on {threads} threads, {} tasks in {:.3} ms",
+                run.metrics.tasks_run,
+                run.metrics.elapsed_ns as f64 / 1e6
+            );
+            sink.add_run_named(&run.metrics, 1, |ty| {
+                nbody::NbTask::from_u32(ty).name().to_string()
+            });
+        }
+        other => panic!("unknown trace target {other:?} (qr|bh)"),
+    }
+    // Gate on the crate's own schema validator before writing: a file
+    // that exists is a file Perfetto/chrome://tracing will load.
+    let events = quicksched::obs::validate_chrome_trace(&sink.to_json())
+        .expect("generated trace failed schema validation");
+    sink.write_to(&out).expect("writing trace file");
+    println!(
+        "trace: {events} events -> {} (open in chrome://tracing or ui.perfetto.dev)",
+        out.display()
+    );
+}
+
+/// `repro metrics --connect ADDR` — scrape a running `serve --listen`
+/// instance over the wire (`Request::Metrics`), validate the returned
+/// Prometheus text exposition with the strict parser, and print it (or
+/// write it with `--out`). Exits nonzero on an unparseable exposition —
+/// CI's loopback smoke uses this as its scrape gate.
+fn cmd_metrics(args: &Args) {
+    let addr = match args.get("connect") {
+        Some(a) => a,
+        None => {
+            eprintln!("usage: repro metrics --connect HOST:PORT|unix:/path [--out FILE]");
+            std::process::exit(2);
+        }
+    };
+    let mut client =
+        RemoteClient::connect(addr, TenantId(u32::MAX)).expect("connecting for metrics scrape");
+    let text = client.metrics_text().expect("fetching metrics exposition");
+    match quicksched::obs::parse_exposition(&text) {
+        Ok(parsed) => eprintln!(
+            "metrics: {} families, {} samples from {addr}",
+            parsed.types.len(),
+            parsed.samples.len()
+        ),
+        Err(e) => {
+            eprintln!("metrics: unparseable exposition from {addr}: {e}");
+            std::process::exit(1);
+        }
+    }
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text).expect("writing metrics file");
+            println!("wrote {path}");
+        }
+        None => print!("{text}"),
+    }
 }
 
 /// `repro bench-server` — closed-loop load generator over the service:

@@ -1,0 +1,32 @@
+//! Observability: unified metrics and exportable timelines.
+//!
+//! The paper's evaluation *is* observability — Figs 9/12 are per-core
+//! Gantt charts and Fig 13 is accumulated cost per task type plus
+//! `qsched_gettask` overhead. This module makes those signals (and the
+//! service-level ones the server grew on top) first-class and cheap
+//! enough to leave on:
+//!
+//! - [`registry`] — [`MetricsRegistry`]: counters, gauges and
+//!   fixed-bucket histograms behind padded-atomic handles, rendered as
+//!   Prometheus text-format 0.0.4 ([`MetricsRegistry::render`]) and
+//!   parsed back by [`parse_exposition`] (the scrape gate).
+//! - [`trace`] — [`TraceSink`]: `TimelineRecord`s and job lifecycle
+//!   phases serialized as Chrome `trace_event` JSON, loadable in
+//!   `chrome://tracing`/Perfetto; [`validate_chrome_trace`] checks the
+//!   schema and per-lane span exclusivity.
+//!
+//! Consumers: the scheduler's always-on `gettask` counters
+//! (`Scheduler::obs_counters`), the server's registry wired up in
+//! `SchedServer::start` (`SchedServer::metrics_text`), the wire
+//! listener's per-connection frame/byte/error counters, the `Metrics`
+//! wire request behind `RemoteClient::metrics_text`, and the CLI's
+//! `repro trace` / `repro metrics` / `repro serve --metrics`.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{
+    parse_exposition, Counter, ExpositionWriter, Gauge, Histogram, Kind, MetricsRegistry,
+    ParsedExposition, Sample,
+};
+pub use trace::{validate_chrome_trace, TraceSink};

@@ -1,0 +1,821 @@
+//! Lock-cheap metrics registry with Prometheus text-format 0.0.4
+//! exposition.
+//!
+//! Hot paths hold a [`Counter`]/[`Gauge`]/[`Histogram`] *handle* — an
+//! `Arc` around a cache-line-padded atomic — and bump it with one
+//! relaxed RMW; the registry's mutex is taken only at registration
+//! (once, at startup) and at render time (an operator scrape, seconds
+//! apart). Derived values that already live elsewhere (the scheduler's
+//! `QueueStats`, the shard pool's counters, the per-tenant stats table)
+//! are pulled in at render time through sampling closures
+//! ([`MetricsRegistry::counter_fn`]/[`gauge_fn`]) or whole-family
+//! [`MetricsRegistry::collector`]s, so the existing padded atomics are
+//! never duplicated or double-counted.
+//!
+//! The exposition is the Prometheus *text* format, version 0.0.4: for
+//! every family one `# HELP`, one `# TYPE`, then one sample line per
+//! label set, with histogram families expanded into cumulative
+//! `_bucket{le="…"}` lines plus `_sum`/`_count`. [`parse_exposition`]
+//! is the matching strict parser — the golden/round-trip tests and the
+//! `repro metrics` scrape gate both use it, so an exposition the crate
+//! emits is one the crate can read back.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::pad::CachePadded;
+
+/// Metric family kind, mirroring the `# TYPE` line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    /// The kind's `# TYPE` token (`"counter"`, `"gauge"`,
+    /// `"histogram"`) — comparable against [`ParsedExposition::kind_of`].
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+/// Monotone counter handle: one padded atomic, cloned freely.
+#[derive(Clone, Debug)]
+pub struct Counter(Arc<CachePadded<AtomicU64>>);
+
+impl Counter {
+    fn alloc() -> Self {
+        Counter(Arc::new(CachePadded::new(AtomicU64::new(0))))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Gauge handle: a settable signed value.
+#[derive(Clone, Debug)]
+pub struct Gauge(Arc<CachePadded<AtomicI64>>);
+
+impl Gauge {
+    fn alloc() -> Self {
+        Gauge(Arc::new(CachePadded::new(AtomicI64::new(0))))
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Debug)]
+struct HistogramCore {
+    /// Ascending inclusive upper bounds; the implicit `+Inf` bucket is
+    /// `counts[bounds.len()]`.
+    bounds: Vec<u64>,
+    counts: Vec<CachePadded<AtomicU64>>,
+    sum: CachePadded<AtomicU64>,
+}
+
+/// Fixed-bucket histogram handle over integer-valued observations
+/// (nanoseconds, bytes, widths — everything this crate measures).
+#[derive(Clone, Debug)]
+pub struct Histogram(Arc<HistogramCore>);
+
+impl Histogram {
+    fn alloc(bounds: &[u64]) -> Self {
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "histogram bounds must ascend");
+        let counts = (0..=bounds.len()).map(|_| CachePadded::new(AtomicU64::new(0))).collect();
+        Histogram(Arc::new(HistogramCore {
+            bounds: bounds.to_vec(),
+            counts,
+            sum: CachePadded::new(AtomicU64::new(0)),
+        }))
+    }
+
+    /// Record one observation: two relaxed RMWs plus a short bound scan.
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        let c = &self.0;
+        let idx = c.bounds.iter().position(|&b| v <= b).unwrap_or(c.bounds.len());
+        c.counts[idx].fetch_add(1, Ordering::Relaxed);
+        c.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Total observation count.
+    pub fn count(&self) -> u64 {
+        self.0.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    fn snapshot(&self) -> (Vec<u64>, u64) {
+        let counts: Vec<u64> = self.0.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        (counts, self.0.sum.load(Ordering::Relaxed))
+    }
+}
+
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+    CounterFn(Box<dyn Fn() -> u64 + Send + Sync>),
+    GaugeFn(Box<dyn Fn() -> f64 + Send + Sync>),
+}
+
+struct Series {
+    labels: Vec<(String, String)>,
+    metric: Metric,
+}
+
+struct Family {
+    name: String,
+    help: String,
+    kind: Kind,
+    series: Vec<Series>,
+}
+
+type CollectFn = Box<dyn Fn(&mut ExpositionWriter) + Send + Sync>;
+
+/// The registry: families registered once at startup, rendered on
+/// demand. Registration mismatches (same name, different kind or help)
+/// are programmer errors and panic.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    families: Mutex<Vec<Family>>,
+    collectors: Mutex<Vec<CollectFn>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or re-obtain) an unlabelled counter.
+    pub fn counter(&self, name: &str, help: &str) -> Counter {
+        self.counter_with(name, help, &[])
+    }
+
+    /// Register (or re-obtain) a labelled counter series.
+    pub fn counter_with(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Counter {
+        let m = self.register(name, help, Kind::Counter, labels, || {
+            Metric::Counter(Counter::alloc())
+        });
+        match m {
+            Metric::Counter(c) => c,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Register (or re-obtain) an unlabelled gauge.
+    pub fn gauge(&self, name: &str, help: &str) -> Gauge {
+        self.gauge_with(name, help, &[])
+    }
+
+    /// Register (or re-obtain) a labelled gauge series.
+    pub fn gauge_with(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Gauge {
+        let m = self.register(name, help, Kind::Gauge, labels, || Metric::Gauge(Gauge::alloc()));
+        match m {
+            Metric::Gauge(g) => g,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Register (or re-obtain) a fixed-bucket histogram series.
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        bounds: &[u64],
+    ) -> Histogram {
+        let m = self.register(name, help, Kind::Histogram, labels, || {
+            Metric::Histogram(Histogram::alloc(bounds))
+        });
+        match m {
+            Metric::Histogram(h) => h,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Register a counter sampled from `f` at render time — the bridge
+    /// to monotone atomics that already live elsewhere.
+    pub fn counter_fn(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        f: impl Fn() -> u64 + Send + Sync + 'static,
+    ) {
+        self.register(name, help, Kind::Counter, labels, || Metric::CounterFn(Box::new(f)));
+    }
+
+    /// Register a gauge sampled from `f` at render time.
+    pub fn gauge_fn(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        f: impl Fn() -> f64 + Send + Sync + 'static,
+    ) {
+        self.register(name, help, Kind::Gauge, labels, || Metric::GaugeFn(Box::new(f)));
+    }
+
+    /// Register a whole-family render hook: called with the writer on
+    /// every [`MetricsRegistry::render`], after the owned families.
+    /// Used where one lock round samples many related series (the
+    /// per-tenant stats table, the shard pool).
+    pub fn collector(&self, f: impl Fn(&mut ExpositionWriter) + Send + Sync + 'static) {
+        self.collectors.lock().unwrap().push(Box::new(f));
+    }
+
+    fn register(
+        &self,
+        name: &str,
+        help: &str,
+        kind: Kind,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Metric,
+    ) -> Metric {
+        assert!(valid_metric_name(name), "invalid metric name {name:?}");
+        for (k, _) in labels {
+            assert!(valid_label_name(k), "invalid label name {k:?}");
+        }
+        let labels: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        let mut fams = self.families.lock().unwrap();
+        let fam = match fams.iter_mut().find(|f| f.name == name) {
+            Some(f) => {
+                assert_eq!(f.kind, kind, "metric {name} re-registered with a different kind");
+                assert_eq!(f.help, help, "metric {name} re-registered with different help");
+                f
+            }
+            None => {
+                fams.push(Family {
+                    name: name.to_string(),
+                    help: help.to_string(),
+                    kind,
+                    series: Vec::new(),
+                });
+                fams.last_mut().unwrap()
+            }
+        };
+        if let Some(s) = fam.series.iter().find(|s| s.labels == labels) {
+            // Idempotent re-registration hands back the same handle;
+            // render-time closures cannot be compared, so re-adding one
+            // is refused instead of silently duplicating the series.
+            match &s.metric {
+                Metric::Counter(c) => return Metric::Counter(c.clone()),
+                Metric::Gauge(g) => return Metric::Gauge(g.clone()),
+                Metric::Histogram(h) => return Metric::Histogram(h.clone()),
+                Metric::CounterFn(_) | Metric::GaugeFn(_) => {
+                    panic!("sampled series {name}{labels:?} registered twice")
+                }
+            }
+        }
+        fam.series.push(Series { labels, metric: make() });
+        match &fam.series.last().unwrap().metric {
+            Metric::Counter(c) => Metric::Counter(c.clone()),
+            Metric::Gauge(g) => Metric::Gauge(g.clone()),
+            Metric::Histogram(h) => Metric::Histogram(h.clone()),
+            // Render-time closures are registered, not handed back.
+            Metric::CounterFn(_) => Metric::CounterFn(Box::new(|| 0)),
+            Metric::GaugeFn(_) => Metric::GaugeFn(Box::new(|| 0.0)),
+        }
+    }
+
+    /// Render the full exposition (owned families, then collectors).
+    pub fn render(&self) -> String {
+        let mut w = ExpositionWriter::new();
+        {
+            let fams = self.families.lock().unwrap();
+            for fam in fams.iter() {
+                w.family(&fam.name, fam.kind, &fam.help);
+                for s in &fam.series {
+                    let labels: Vec<(&str, &str)> =
+                        s.labels.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+                    match &s.metric {
+                        Metric::Counter(c) => w.sample_u64(&labels, c.get()),
+                        Metric::Gauge(g) => w.sample(&labels, g.get() as f64),
+                        Metric::CounterFn(f) => w.sample_u64(&labels, f()),
+                        Metric::GaugeFn(f) => w.sample(&labels, f()),
+                        Metric::Histogram(h) => {
+                            let (counts, sum) = h.snapshot();
+                            w.histogram_counts(&labels, &h.0.bounds, &counts, sum);
+                        }
+                    }
+                }
+            }
+        }
+        let collectors = self.collectors.lock().unwrap();
+        for c in collectors.iter() {
+            c(&mut w);
+        }
+        w.finish()
+    }
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn escape_label_value(v: &str, out: &mut String) {
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+}
+
+fn escape_help(v: &str, out: &mut String) {
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+}
+
+fn format_value(v: f64, out: &mut String) {
+    if v.is_nan() {
+        out.push_str("NaN");
+    } else if v == f64::INFINITY {
+        out.push_str("+Inf");
+    } else if v == f64::NEG_INFINITY {
+        out.push_str("-Inf");
+    } else {
+        out.push_str(&format!("{v}"));
+    }
+}
+
+/// Streaming writer for the text exposition: `family()` opens a family
+/// (`# HELP` + `# TYPE`), then `sample*()` append its series lines.
+/// Collectors receive one of these, so sampled families render through
+/// the exact same escaping and formatting as owned ones.
+#[derive(Default)]
+pub struct ExpositionWriter {
+    out: String,
+    current: Option<(String, Kind)>,
+}
+
+impl ExpositionWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Open a family. Panics on an invalid metric name — registration
+    /// and collectors are both author-controlled.
+    pub fn family(&mut self, name: &str, kind: Kind, help: &str) {
+        assert!(valid_metric_name(name), "invalid metric name {name:?}");
+        self.out.push_str("# HELP ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        escape_help(help, &mut self.out);
+        self.out.push_str("\n# TYPE ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(kind.as_str());
+        self.out.push('\n');
+        self.current = Some((name.to_string(), kind));
+    }
+
+    /// Append one sample line for the open family.
+    pub fn sample(&mut self, labels: &[(&str, &str)], value: f64) {
+        self.sample_suffixed("", labels, value);
+    }
+
+    /// Append one integer sample line for the open family.
+    pub fn sample_u64(&mut self, labels: &[(&str, &str)], value: u64) {
+        let (name, _) = self.current.clone().expect("sample before family()");
+        self.line(&name, labels, None, |out| out.push_str(&value.to_string()));
+    }
+
+    fn sample_suffixed(&mut self, suffix: &str, labels: &[(&str, &str)], value: f64) {
+        let (name, _) = self.current.clone().expect("sample before family()");
+        let full = format!("{name}{suffix}");
+        self.line(&full, labels, None, |out| format_value(value, out));
+    }
+
+    /// Render a whole histogram series from per-bucket (non-cumulative)
+    /// counts: `counts.len() == bounds.len() + 1`, the last entry being
+    /// the `+Inf` overflow bucket.
+    pub fn histogram_counts(
+        &mut self,
+        labels: &[(&str, &str)],
+        bounds: &[u64],
+        counts: &[u64],
+        sum: u64,
+    ) {
+        assert_eq!(counts.len(), bounds.len() + 1, "histogram counts/bounds mismatch");
+        let (name, kind) = self.current.clone().expect("sample before family()");
+        assert_eq!(kind, Kind::Histogram, "histogram_counts on a non-histogram family");
+        let mut cum = 0u64;
+        for (i, &b) in bounds.iter().enumerate() {
+            cum += counts[i];
+            let le = b.to_string();
+            self.line(&format!("{name}_bucket"), labels, Some(("le", &le)), |out| {
+                out.push_str(&cum.to_string())
+            });
+        }
+        cum += counts[bounds.len()];
+        self.line(&format!("{name}_bucket"), labels, Some(("le", "+Inf")), |out| {
+            out.push_str(&cum.to_string())
+        });
+        self.line(&format!("{name}_sum"), labels, None, |out| out.push_str(&sum.to_string()));
+        self.line(&format!("{name}_count"), labels, None, |out| out.push_str(&cum.to_string()));
+    }
+
+    fn line(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        extra: Option<(&str, &str)>,
+        write_value: impl FnOnce(&mut String),
+    ) {
+        self.out.push_str(name);
+        let n_labels = labels.len() + usize::from(extra.is_some());
+        if n_labels > 0 {
+            self.out.push('{');
+            let mut first = true;
+            for (k, v) in labels.iter().chain(extra.iter()) {
+                assert!(valid_label_name(k), "invalid label name {k:?}");
+                if !first {
+                    self.out.push(',');
+                }
+                first = false;
+                self.out.push_str(k);
+                self.out.push_str("=\"");
+                escape_label_value(v, &mut self.out);
+                self.out.push('"');
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        write_value(&mut self.out);
+        self.out.push('\n');
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// One parsed sample line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+/// A parsed exposition: `# TYPE` declarations plus every sample, in
+/// document order.
+#[derive(Clone, Debug, Default)]
+pub struct ParsedExposition {
+    /// `(family name, kind string)` in declaration order.
+    pub types: Vec<(String, String)>,
+    /// `(family name, help text)` in declaration order.
+    pub helps: Vec<(String, String)>,
+    pub samples: Vec<Sample>,
+}
+
+impl ParsedExposition {
+    /// Declared kind of a family, if any.
+    pub fn kind_of(&self, name: &str) -> Option<&str> {
+        self.types.iter().find(|(n, _)| n == name).map(|(_, k)| k.as_str())
+    }
+
+    /// Value of the sample with exactly these labels (order-insensitive).
+    pub fn value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.samples
+            .iter()
+            .find(|s| {
+                s.name == name
+                    && s.labels.len() == labels.len()
+                    && labels
+                        .iter()
+                        .all(|(k, v)| s.labels.iter().any(|(sk, sv)| sk == k && sv == v))
+            })
+            .map(|s| s.value)
+    }
+
+    /// Sum over every sample of `name`, any labels.
+    pub fn sum(&self, name: &str) -> f64 {
+        self.samples.iter().filter(|s| s.name == name).map(|s| s.value).sum()
+    }
+}
+
+/// Strict parser for the Prometheus text format 0.0.4 subset this crate
+/// emits: `# HELP`/`# TYPE` comments, sample lines with optional
+/// `{label="value"}` sets (escapes `\\`, `\"`, `\n`), decimal or
+/// `+Inf`/`-Inf`/`NaN` values, optional integer timestamp. Errors name
+/// the offending line. Also enforces the format's grouping rule: all
+/// samples of a family must be contiguous.
+pub fn parse_exposition(text: &str) -> Result<ParsedExposition, String> {
+    let mut out = ParsedExposition::default();
+    let mut closed: Vec<String> = Vec::new();
+    let mut open: Option<String> = None;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| format!("line {}: {msg}: {line:?}", lineno + 1);
+        if let Some(rest) = line.strip_prefix('#') {
+            let rest = rest.trim_start();
+            if let Some(decl) = rest.strip_prefix("TYPE ") {
+                let mut it = decl.splitn(2, ' ');
+                let name = it.next().unwrap_or("");
+                let kind = it.next().ok_or_else(|| err("TYPE missing kind"))?;
+                if !valid_metric_name(name) {
+                    return Err(err("invalid family name in TYPE"));
+                }
+                if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                    return Err(err("unknown kind in TYPE"));
+                }
+                if out.types.iter().any(|(n, _)| n == name) {
+                    return Err(err("duplicate TYPE for family"));
+                }
+                if closed.iter().any(|n| n == name) || open.as_deref() == Some(name) {
+                    return Err(err("TYPE after the family's samples"));
+                }
+                out.types.push((name.to_string(), kind.to_string()));
+            } else if let Some(decl) = rest.strip_prefix("HELP ") {
+                let mut it = decl.splitn(2, ' ');
+                let name = it.next().unwrap_or("");
+                if !valid_metric_name(name) {
+                    return Err(err("invalid family name in HELP"));
+                }
+                out.helps.push((name.to_string(), it.next().unwrap_or("").to_string()));
+            }
+            // Other comments are legal and ignored.
+            continue;
+        }
+        let sample = parse_sample(line).map_err(|m| err(&m))?;
+        let base = base_family(&sample.name, &out.types);
+        match &open {
+            Some(cur) if *cur == base => {}
+            _ => {
+                if closed.iter().any(|n| *n == base) {
+                    return Err(err("family samples are not contiguous"));
+                }
+                if let Some(prev) = open.take() {
+                    closed.push(prev);
+                }
+                open = Some(base);
+            }
+        }
+        out.samples.push(sample);
+    }
+    Ok(out)
+}
+
+/// Histogram sample names (`x_bucket`, `x_sum`, `x_count`) group under
+/// their declared base family `x`.
+fn base_family(sample_name: &str, types: &[(String, String)]) -> String {
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = sample_name.strip_suffix(suffix) {
+            if types.iter().any(|(n, k)| n == base && k == "histogram") {
+                return base.to_string();
+            }
+        }
+    }
+    sample_name.to_string()
+}
+
+fn parse_sample(line: &str) -> Result<Sample, String> {
+    let bytes = line.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() && bytes[i] != b'{' && bytes[i] != b' ' {
+        i += 1;
+    }
+    let name = &line[..i];
+    if !valid_metric_name(name) {
+        return Err("invalid metric name".into());
+    }
+    let mut labels = Vec::new();
+    if i < bytes.len() && bytes[i] == b'{' {
+        i += 1;
+        loop {
+            while i < bytes.len() && bytes[i] == b' ' {
+                i += 1;
+            }
+            if i < bytes.len() && bytes[i] == b'}' {
+                i += 1;
+                break;
+            }
+            let start = i;
+            while i < bytes.len() && bytes[i] != b'=' {
+                i += 1;
+            }
+            let key = &line[start..i];
+            if !valid_label_name(key) {
+                return Err(format!("invalid label name {key:?}"));
+            }
+            if i + 1 >= bytes.len() || bytes[i] != b'=' || bytes[i + 1] != b'"' {
+                return Err("expected =\" after label name".into());
+            }
+            i += 2;
+            let mut value = String::new();
+            loop {
+                if i >= bytes.len() {
+                    return Err("unterminated label value".into());
+                }
+                match bytes[i] {
+                    b'"' => {
+                        i += 1;
+                        break;
+                    }
+                    b'\\' => {
+                        if i + 1 >= bytes.len() {
+                            return Err("dangling escape".into());
+                        }
+                        match bytes[i + 1] {
+                            b'\\' => value.push('\\'),
+                            b'"' => value.push('"'),
+                            b'n' => value.push('\n'),
+                            c => return Err(format!("unknown escape \\{}", c as char)),
+                        }
+                        i += 2;
+                    }
+                    _ => {
+                        // Advance one full UTF-8 character.
+                        let s = &line[i..];
+                        let c = s.chars().next().unwrap();
+                        value.push(c);
+                        i += c.len_utf8();
+                    }
+                }
+            }
+            labels.push((key.to_string(), value));
+            if i < bytes.len() && bytes[i] == b',' {
+                i += 1;
+                continue;
+            }
+        }
+    }
+    let rest = line[i..].trim();
+    let mut toks = rest.split_whitespace();
+    let value_tok = toks.next().ok_or("missing value")?;
+    let value = match value_tok {
+        "+Inf" | "Inf" => f64::INFINITY,
+        "-Inf" => f64::NEG_INFINITY,
+        "NaN" => f64::NAN,
+        t => t.parse::<f64>().map_err(|_| format!("bad value {t:?}"))?,
+    };
+    if let Some(ts) = toks.next() {
+        ts.parse::<i64>().map_err(|_| format!("bad timestamp {ts:?}"))?;
+    }
+    if toks.next().is_some() {
+        return Err("trailing tokens after sample".into());
+    }
+    Ok(Sample { name: name.to_string(), labels, value })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_render_and_parse() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("quicksched_test_total", "A test counter.");
+        let g = reg.gauge_with("quicksched_depth", "A depth.", &[("lane", "a")]);
+        c.add(3);
+        g.set(-2);
+        let text = reg.render();
+        let parsed = parse_exposition(&text).unwrap();
+        assert_eq!(parsed.kind_of("quicksched_test_total"), Some("counter"));
+        assert_eq!(parsed.value("quicksched_test_total", &[]), Some(3.0));
+        assert_eq!(parsed.value("quicksched_depth", &[("lane", "a")]), Some(-2.0));
+    }
+
+    #[test]
+    fn re_registration_returns_the_same_handle() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter_with("quicksched_x_total", "X.", &[("k", "1")]);
+        let b = reg.counter_with("quicksched_x_total", "X.", &[("k", "1")]);
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2);
+        // A different label set is a distinct series in the same family.
+        let c = reg.counter_with("quicksched_x_total", "X.", &[("k", "2")]);
+        c.inc();
+        let parsed = parse_exposition(&reg.render()).unwrap();
+        assert_eq!(parsed.value("quicksched_x_total", &[("k", "1")]), Some(2.0));
+        assert_eq!(parsed.value("quicksched_x_total", &[("k", "2")]), Some(1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn kind_mismatch_panics() {
+        let reg = MetricsRegistry::new();
+        reg.counter("quicksched_y", "Y.");
+        reg.gauge("quicksched_y", "Y.");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("quicksched_ns", "Latency.", &[], &[10, 100, 1000]);
+        for v in [5, 7, 50, 500, 5000] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        let parsed = parse_exposition(&reg.render()).unwrap();
+        assert_eq!(parsed.value("quicksched_ns_bucket", &[("le", "10")]), Some(2.0));
+        assert_eq!(parsed.value("quicksched_ns_bucket", &[("le", "100")]), Some(3.0));
+        assert_eq!(parsed.value("quicksched_ns_bucket", &[("le", "1000")]), Some(4.0));
+        assert_eq!(parsed.value("quicksched_ns_bucket", &[("le", "+Inf")]), Some(5.0));
+        assert_eq!(parsed.value("quicksched_ns_sum", &[]), Some(5562.0));
+        assert_eq!(parsed.value("quicksched_ns_count", &[]), Some(5.0));
+    }
+
+    #[test]
+    fn label_values_escape_and_roundtrip() {
+        let reg = MetricsRegistry::new();
+        let weird = "a\\b\"c\nd";
+        reg.counter_with("quicksched_esc_total", "Escapes.", &[("path", weird)]).inc();
+        let text = reg.render();
+        let parsed = parse_exposition(&text).unwrap();
+        assert_eq!(parsed.value("quicksched_esc_total", &[("path", weird)]), Some(1.0));
+    }
+
+    #[test]
+    fn collectors_render_after_owned_families() {
+        let reg = MetricsRegistry::new();
+        reg.counter("quicksched_a_total", "A.").inc();
+        reg.collector(|w| {
+            w.family("quicksched_b", Kind::Gauge, "B.");
+            w.sample(&[("src", "collector")], 7.5);
+        });
+        let parsed = parse_exposition(&reg.render()).unwrap();
+        assert_eq!(parsed.value("quicksched_b", &[("src", "collector")]), Some(7.5));
+    }
+
+    #[test]
+    fn sampled_series_read_external_atomics() {
+        use std::sync::atomic::AtomicU64;
+        let reg = MetricsRegistry::new();
+        let ext = Arc::new(AtomicU64::new(41));
+        let e2 = Arc::clone(&ext);
+        reg.counter_fn("quicksched_ext_total", "External.", &[], move || {
+            e2.load(Ordering::Relaxed)
+        });
+        ext.fetch_add(1, Ordering::Relaxed);
+        let parsed = parse_exposition(&reg.render()).unwrap();
+        assert_eq!(parsed.value("quicksched_ext_total", &[]), Some(42.0));
+    }
+
+    #[test]
+    fn parser_rejects_malformed_lines() {
+        assert!(parse_exposition("1bad_name 3\n").is_err());
+        assert!(parse_exposition("x{l=\"unterminated} 3\n").is_err());
+        assert!(parse_exposition("x 3 4 5\n").is_err());
+        assert!(parse_exposition("x notanumber\n").is_err());
+        // Non-contiguous family samples violate the grouping rule.
+        assert!(parse_exposition("a 1\nb 2\na 3\n").is_err());
+        // TYPE after samples of the family.
+        assert!(parse_exposition("a 1\n# TYPE a counter\n").is_err());
+    }
+}

@@ -1,0 +1,568 @@
+//! Chrome `trace_event` timelines: the paper's Fig 9/12 Gantt view,
+//! exportable from any run.
+//!
+//! [`TraceSink`] collects spans — per-task [`TimelineRecord`]s from a
+//! run's [`RunMetrics`], or per-job lifecycle phases reconstructed from
+//! a `JobReport`'s queue/setup/service breakdown — and serializes them
+//! as the Trace Event JSON format (`"X"` complete events plus `"M"`
+//! metadata events naming processes and worker lanes). The output
+//! loads directly in `chrome://tracing` and Perfetto.
+//!
+//! Timestamps are microseconds (the format's unit); the crate records
+//! nanoseconds, so every span is emitted with fractional-µs precision
+//! (`ns / 1000` with three decimals — exact at ns resolution).
+//!
+//! [`validate_chrome_trace`] is the matching schema checker used by the
+//! tier-1 trace tests: it parses the JSON (a small total parser — no
+//! serde offline), verifies every event carries the required fields,
+//! and asserts per-`(pid, tid)` complete-event spans do not overlap —
+//! a worker lane executes one task at a time, and so must its Gantt row.
+
+use std::io;
+use std::path::Path;
+
+use crate::coordinator::RunMetrics;
+
+#[derive(Clone, Debug)]
+enum Arg {
+    Str(String),
+    U64(u64),
+    Bool(bool),
+}
+
+#[derive(Clone, Debug)]
+struct TraceEvent {
+    name: String,
+    cat: &'static str,
+    ph: char,
+    ts_us: f64,
+    dur_us: Option<f64>,
+    pid: u32,
+    tid: u32,
+    args: Vec<(&'static str, Arg)>,
+}
+
+/// Collects trace events and renders them as Chrome `trace_event` JSON.
+#[derive(Default)]
+pub struct TraceSink {
+    events: Vec<TraceEvent>,
+}
+
+fn us(ns: u64) -> f64 {
+    ns as f64 / 1000.0
+}
+
+impl TraceSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Name a process row (`"M"` metadata event).
+    pub fn name_process(&mut self, pid: u32, name: &str) {
+        self.metadata("process_name", pid, 0, name);
+    }
+
+    /// Name a thread (worker) lane within a process.
+    pub fn name_thread(&mut self, pid: u32, tid: u32, name: &str) {
+        self.metadata("thread_name", pid, tid, name);
+    }
+
+    fn metadata(&mut self, kind: &str, pid: u32, tid: u32, name: &str) {
+        self.events.push(TraceEvent {
+            name: kind.to_string(),
+            cat: "__metadata",
+            ph: 'M',
+            ts_us: 0.0,
+            dur_us: None,
+            pid,
+            tid,
+            args: vec![("name", Arg::Str(name.to_string()))],
+        });
+    }
+
+    /// Append one complete (`"X"`) span on lane `(pid, tid)`.
+    pub fn add_span(&mut self, name: &str, pid: u32, tid: u32, start_ns: u64, dur_ns: u64) {
+        self.events.push(TraceEvent {
+            name: name.to_string(),
+            cat: "span",
+            ph: 'X',
+            ts_us: us(start_ns),
+            dur_us: Some(us(dur_ns)),
+            pid,
+            tid,
+            args: Vec::new(),
+        });
+    }
+
+    /// Convert a whole run's timeline (one span per executed task, one
+    /// lane per worker) into the sink. Requires the run to have been
+    /// recorded with `SchedConfig::with_timeline(true)`; a timeline-less
+    /// run contributes only the process/worker metadata.
+    pub fn add_run(&mut self, m: &RunMetrics, pid: u32) {
+        self.add_run_named(m, pid, |ty| format!("type{ty}"));
+    }
+
+    /// [`TraceSink::add_run`] with task-type names supplied by the
+    /// caller (e.g. the QR driver's DGEQRF/DLARFT/DTSQRF/DSSRFT).
+    pub fn add_run_named(&mut self, m: &RunMetrics, pid: u32, name_of: impl Fn(u32) -> String) {
+        self.name_process(pid, "quicksched run");
+        for w in 0..m.workers.max(1) {
+            self.name_thread(pid, w as u32, &format!("worker {w}"));
+        }
+        for r in &m.timeline {
+            self.events.push(TraceEvent {
+                name: name_of(r.type_id),
+                cat: "task",
+                ph: 'X',
+                ts_us: us(r.start_ns),
+                dur_us: Some(us(r.duration_ns())),
+                pid,
+                tid: r.worker,
+                args: vec![
+                    ("task", Arg::U64(r.tid.0 as u64)),
+                    ("stolen", Arg::Bool(r.stolen)),
+                    ("gettask_ns", Arg::U64(r.get_ns)),
+                ],
+            });
+        }
+    }
+
+    /// Reconstruct a job's lifecycle (queued → setup → service phases,
+    /// back-to-back and ending at `end_ns`) as three spans on lane
+    /// `(pid, lane)` — the server-side Gantt row a `JobReport`'s
+    /// breakdown describes.
+    pub fn add_job(
+        &mut self,
+        job: u64,
+        pid: u32,
+        lane: u32,
+        end_ns: u64,
+        queue_ns: u64,
+        setup_ns: u64,
+        service_ns: u64,
+    ) {
+        let total = queue_ns + setup_ns + service_ns;
+        let start = end_ns.saturating_sub(total);
+        let phases = [("queued", queue_ns), ("setup", setup_ns), ("service", service_ns)];
+        let mut t = start;
+        for (phase, dur) in phases {
+            if dur > 0 {
+                self.events.push(TraceEvent {
+                    name: format!("job{job}:{phase}"),
+                    cat: "job",
+                    ph: 'X',
+                    ts_us: us(t),
+                    dur_us: Some(us(dur)),
+                    pid,
+                    tid: lane,
+                    args: vec![("job", Arg::U64(job))],
+                });
+            }
+            t += dur;
+        }
+    }
+
+    /// Render the Trace Event JSON document (object form, so Perfetto
+    /// and `chrome://tracing` both load it).
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(64 + self.events.len() * 96);
+        out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("{\"name\":");
+            json_string(&e.name, &mut out);
+            out.push_str(",\"cat\":");
+            json_string(e.cat, &mut out);
+            out.push_str(&format!(
+                ",\"ph\":\"{}\",\"ts\":{:.3},\"pid\":{},\"tid\":{}",
+                e.ph, e.ts_us, e.pid, e.tid
+            ));
+            if let Some(d) = e.dur_us {
+                out.push_str(&format!(",\"dur\":{d:.3}"));
+            }
+            if !e.args.is_empty() {
+                out.push_str(",\"args\":{");
+                for (j, (k, v)) in e.args.iter().enumerate() {
+                    if j > 0 {
+                        out.push(',');
+                    }
+                    json_string(k, &mut out);
+                    out.push(':');
+                    match v {
+                        Arg::Str(s) => json_string(s, &mut out),
+                        Arg::U64(n) => out.push_str(&n.to_string()),
+                        Arg::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+                    }
+                }
+                out.push('}');
+            }
+            out.push('}');
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Write the JSON document to `path`.
+    pub fn write_to(&self, path: &Path) -> io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+fn json_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+// ---------------------------------------------------------------------
+// Schema validation (test + CI gate side).
+
+#[derive(Clone, Debug, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get<'a>(&'a self, key: &str) -> Option<&'a Json> {
+        match self {
+            Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_num(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+struct JsonParser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    fn new(s: &'a str) -> Self {
+        Self { b: s.as_bytes(), i: 0 }
+    }
+
+    fn err<T>(&self, msg: &str) -> Result<T, String> {
+        Err(format!("json byte {}: {msg}", self.i))
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        self.skip_ws();
+        if self.i < self.b.len() && self.b[self.i] == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            self.err(&format!("expected {:?}", c as char))
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.b.get(self.i).copied()
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => self.err("expected a value"),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        self.skip_ws();
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            self.err(&format!("expected {word}"))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        s.parse::<f64>().map(Json::Num).map_err(|_| format!("json byte {start}: bad number {s:?}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            if self.i >= self.b.len() {
+                return self.err("unterminated string");
+            }
+            match self.b[self.i] {
+                b'"' => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    self.i += 1;
+                    let c = *self.b.get(self.i).ok_or("dangling escape")?;
+                    self.i += 1;
+                    match c {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                return self.err("short \\u escape");
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .map_err(|_| "bad \\u escape".to_string())?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| "bad \\u escape".to_string())?;
+                            self.i += 4;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        _ => return self.err("unknown escape"),
+                    }
+                }
+                _ => {
+                    let rest = std::str::from_utf8(&self.b[self.i..])
+                        .map_err(|_| "invalid utf-8".to_string())?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.i += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return self.err("expected , or ]"),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut kv = Vec::new();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(kv));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.eat(b':')?;
+            kv.push((key, self.value()?));
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(kv));
+                }
+                _ => return self.err("expected , or }"),
+            }
+        }
+    }
+}
+
+fn parse_json(text: &str) -> Result<Json, String> {
+    let mut p = JsonParser::new(text);
+    let v = p.value()?;
+    p.skip_ws();
+    if p.i != p.b.len() {
+        return Err(format!("json byte {}: trailing data", p.i));
+    }
+    Ok(v)
+}
+
+/// Validate a Chrome `trace_event` document: parses the JSON, accepts
+/// either the bare-array or the `{"traceEvents": […]}` object form,
+/// checks every event is an object with `ph`/`pid`/`tid` (and
+/// `name`/`ts`/`dur` for `"X"` complete events), and verifies complete
+/// events on one `(pid, tid)` lane never overlap (1 ns tolerance for
+/// the µs float conversion). Returns the event count.
+pub fn validate_chrome_trace(text: &str) -> Result<usize, String> {
+    let doc = parse_json(text)?;
+    let events = match &doc {
+        Json::Arr(items) => items,
+        Json::Obj(_) => match doc.get("traceEvents") {
+            Some(Json::Arr(items)) => items,
+            _ => return Err("traceEvents missing or not an array".into()),
+        },
+        _ => return Err("top level is neither array nor object".into()),
+    };
+    let mut lanes: Vec<((f64, f64), Vec<(f64, f64)>)> = Vec::new();
+    for (i, ev) in events.iter().enumerate() {
+        if !matches!(ev, Json::Obj(_)) {
+            return Err(format!("event {i} is not an object"));
+        }
+        let ph = ev
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("event {i}: missing ph"))?;
+        let pid = ev
+            .get("pid")
+            .and_then(Json::as_num)
+            .ok_or_else(|| format!("event {i}: missing pid"))?;
+        let tid = ev
+            .get("tid")
+            .and_then(Json::as_num)
+            .ok_or_else(|| format!("event {i}: missing tid"))?;
+        if ph == "X" {
+            ev.get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("event {i}: X without name"))?;
+            let ts = ev
+                .get("ts")
+                .and_then(Json::as_num)
+                .ok_or_else(|| format!("event {i}: X without ts"))?;
+            let dur = ev
+                .get("dur")
+                .and_then(Json::as_num)
+                .ok_or_else(|| format!("event {i}: X without dur"))?;
+            let key = (pid, tid);
+            match lanes.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, spans)) => spans.push((ts, dur)),
+                None => lanes.push((key, vec![(ts, dur)])),
+            }
+        }
+    }
+    for ((pid, tid), spans) in lanes.iter_mut() {
+        spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in spans.windows(2) {
+            let (t0, d0) = w[0];
+            let (t1, _) = w[1];
+            // 1 ns in µs — tolerance for the fractional-µs conversion.
+            if t0 + d0 > t1 + 0.001 {
+                return Err(format!(
+                    "lane pid={pid} tid={tid}: spans overlap ({t0}+{d0} > {t1})"
+                ));
+            }
+        }
+    }
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_and_metadata_validate() {
+        let mut sink = TraceSink::new();
+        sink.name_process(1, "proc");
+        sink.name_thread(1, 0, "worker 0");
+        sink.add_span("a", 1, 0, 0, 1_000);
+        sink.add_span("b", 1, 0, 1_000, 2_500);
+        sink.add_span("c", 1, 1, 500, 10_000);
+        let json = sink.to_json();
+        assert_eq!(validate_chrome_trace(&json).unwrap(), 5);
+    }
+
+    #[test]
+    fn overlapping_spans_on_one_lane_fail() {
+        let mut sink = TraceSink::new();
+        sink.add_span("a", 0, 0, 0, 2_000);
+        sink.add_span("b", 0, 0, 1_000, 2_000);
+        let err = validate_chrome_trace(&sink.to_json()).unwrap_err();
+        assert!(err.contains("overlap"), "{err}");
+    }
+
+    #[test]
+    fn job_lifecycle_spans_are_contiguous() {
+        let mut sink = TraceSink::new();
+        sink.add_job(7, 0, 3, 10_000, 2_000, 1_000, 4_000);
+        let json = sink.to_json();
+        assert_eq!(validate_chrome_trace(&json).unwrap(), 3);
+        assert!(json.contains("job7:queued"));
+        assert!(json.contains("job7:service"));
+    }
+
+    #[test]
+    fn names_escape_into_valid_json() {
+        let mut sink = TraceSink::new();
+        sink.add_span("we\"ird\\name\n", 0, 0, 0, 10);
+        assert_eq!(validate_chrome_trace(&sink.to_json()).unwrap(), 1);
+    }
+
+    #[test]
+    fn validator_rejects_malformed_documents() {
+        assert!(validate_chrome_trace("not json").is_err());
+        assert!(validate_chrome_trace("{\"traceEvents\": 3}").is_err());
+        assert!(validate_chrome_trace("[{\"ph\":\"X\",\"pid\":0,\"tid\":0}]").is_err());
+        assert!(validate_chrome_trace("[1,2]").is_err());
+    }
+}

@@ -55,6 +55,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::SchedConfig;
+use crate::obs::{Counter, Kind, MetricsRegistry};
 
 pub use admission::FairQueue;
 pub use pool::{
@@ -202,6 +203,13 @@ struct Inner {
     /// the first completion. Input to [`adaptive_k`].
     service_ewma_ns: AtomicU64,
     tx: Mutex<mpsc::Sender<Event>>,
+    /// The server's metrics registry (see [`SchedServer::metrics_text`]).
+    obs: Arc<MetricsRegistry>,
+    /// Owned hot-path counters (everything else is sampled at render
+    /// time from the structures that already hold it).
+    jobs_submitted: Counter,
+    rejected_saturated: Counter,
+    rejected_tenant_cap: Counter,
 }
 
 impl Inner {
@@ -232,6 +240,21 @@ impl SchedServer {
         let (tx, rx) = mpsc::channel::<Event>();
         let mut admission = FairQueue::new(config.max_inflight);
         admission.set_max_queued(config.max_queued);
+        let obs = Arc::new(MetricsRegistry::new());
+        let jobs_submitted = obs.counter(
+            "quicksched_jobs_submitted_total",
+            "Jobs accepted into the admission queue.",
+        );
+        let rejected_saturated = obs.counter_with(
+            "quicksched_jobs_rejected_total",
+            "Submissions rejected with backpressure, by reason.",
+            &[("reason", "server_saturated")],
+        );
+        let rejected_tenant_cap = obs.counter_with(
+            "quicksched_jobs_rejected_total",
+            "Submissions rejected with backpressure, by reason.",
+            &[("reason", "tenant_at_capacity")],
+        );
         let inner = Arc::new(Inner {
             registry: Registry::new(config.sched.clone(), config.max_pool),
             state: Mutex::new(State { admission, jobs: HashMap::new() }),
@@ -242,6 +265,10 @@ impl SchedServer {
             batch_adaptive: config.batch_adaptive,
             service_ewma_ns: AtomicU64::new(0),
             tx: Mutex::new(tx),
+            obs,
+            jobs_submitted,
+            rejected_saturated,
+            rejected_tenant_cap,
         });
         // Workers report completions straight into the dispatcher queue.
         let finish_tx = Mutex::new(inner.tx.lock().unwrap().clone());
@@ -260,6 +287,7 @@ impl SchedServer {
                 .spawn(move || dispatcher_loop(&inner, &pool, rx))
                 .expect("spawning dispatcher")
         };
+        register_server_collector(&inner, &pool);
         Self { inner, pool: Some(pool), dispatcher: Some(dispatcher) }
     }
 
@@ -301,10 +329,18 @@ impl SchedServer {
         {
             let mut st = self.inner.state.lock().unwrap();
             let tenant = spec.tenant;
-            st.admission
-                .try_push(tenant, QueuedJob { id, spec, enqueued: Instant::now() })?;
+            if let Err(e) =
+                st.admission.try_push(tenant, QueuedJob { id, spec, enqueued: Instant::now() })
+            {
+                match e {
+                    SubmitError::ServerSaturated { .. } => self.inner.rejected_saturated.inc(),
+                    SubmitError::TenantAtCapacity { .. } => self.inner.rejected_tenant_cap.inc(),
+                }
+                return Err(e);
+            }
             st.jobs.insert(id, JobStatus::Queued);
         }
+        self.inner.jobs_submitted.inc();
         self.inner.send(Event::Kick);
         Ok(id)
     }
@@ -436,6 +472,15 @@ impl SchedServer {
         self.pool.as_ref().map(|p| p.shards().stats()).unwrap_or_default()
     }
 
+    /// Render the server's full Prometheus text exposition: owned
+    /// submission/rejection counters plus render-time samples of the
+    /// admission queue, the shard layer, the worker pool and the
+    /// per-tenant stats table. The wire listener appends its own
+    /// connection/frame families to this for the `Metrics` request.
+    pub fn metrics_text(&self) -> String {
+        self.inner.obs.render()
+    }
+
     /// Stop the dispatcher and the worker pool. Jobs still queued stay
     /// unresolved; call [`SchedServer::drain`] first for a clean stop.
     pub fn shutdown(mut self) {
@@ -456,6 +501,164 @@ impl Drop for SchedServer {
     fn drop(&mut self) {
         self.stop();
     }
+}
+
+/// Hook the render-time samples into the server registry: admission
+/// depth, pool/shard counters and the per-tenant stats table, all read
+/// through `Weak` references so the registry (which outlives `stop()`
+/// inside `Inner`) never keeps the worker pool or its threads alive.
+fn register_server_collector(inner: &Arc<Inner>, pool: &Arc<WorkerPool>) {
+    let weak_inner = Arc::downgrade(inner);
+    let weak_pool = Arc::downgrade(pool);
+    inner.obs.collector(move |w| {
+        let Some(inner) = weak_inner.upgrade() else { return };
+        {
+            let st = inner.state.lock().unwrap();
+            w.family(
+                "quicksched_admission_queued",
+                Kind::Gauge,
+                "Jobs waiting in the weighted-fair admission queue.",
+            );
+            w.sample_u64(&[], st.admission.queued() as u64);
+            w.family(
+                "quicksched_admission_inflight",
+                Kind::Gauge,
+                "Jobs admitted and not yet finalized.",
+            );
+            w.sample_u64(&[], st.admission.inflight() as u64);
+        }
+        if let Some(pool) = weak_pool.upgrade() {
+            w.family(
+                "quicksched_active_jobs",
+                Kind::Gauge,
+                "Jobs with live slots on the worker pool.",
+            );
+            w.sample_u64(&[], pool.active_jobs() as u64);
+            let (gets, misses, scanned, busy, spins, purged) = pool.shards().stats();
+            let shard_counters: [(&str, &str, u64); 6] = [
+                ("quicksched_shard_gets_total", "Successful shard acquisitions.", gets),
+                ("quicksched_shard_misses_total", "Empty-handed shard probe rounds.", misses),
+                ("quicksched_shard_scanned_total", "Candidate slots scanned during probes.", scanned),
+                (
+                    "quicksched_shard_busy_total",
+                    "Candidates skipped because resources were locked.",
+                    busy,
+                ),
+                ("quicksched_shard_lock_spins_total", "Shard queue lock spin retries.", spins),
+                ("quicksched_shard_purged_total", "Dead entries purged from shards.", purged),
+            ];
+            for (name, help, v) in shard_counters {
+                w.family(name, Kind::Counter, help);
+                w.sample_u64(&[], v);
+            }
+            let (parks, wakes, steals) = pool.shards().obs_stats();
+            w.family(
+                "quicksched_worker_parks_total",
+                Kind::Counter,
+                "Worker idle-park events (yield mode).",
+            );
+            w.sample_u64(&[], parks);
+            w.family(
+                "quicksched_worker_wakes_total",
+                Kind::Counter,
+                "Sleeper wake-ups triggered by ready-task pushes.",
+            );
+            w.sample_u64(&[], wakes);
+            w.family(
+                "quicksched_shard_steals_total",
+                Kind::Counter,
+                "Acquisitions served from a non-home shard.",
+            );
+            w.sample_u64(&[], steals);
+        }
+        let sobs = inner.stats.sched_obs();
+        let sched_counters: [(&str, &str, u64); 5] = [
+            (
+                "quicksched_sched_gettask_calls_total",
+                "Scheduler gettask probes over finished jobs.",
+                sobs[0],
+            ),
+            (
+                "quicksched_sched_gettask_hits_total",
+                "gettask probes that yielded a task.",
+                sobs[1],
+            ),
+            (
+                "quicksched_sched_gettask_steals_total",
+                "gettask hits served from another queue.",
+                sobs[2],
+            ),
+            (
+                "quicksched_sched_acquire_attempts_total",
+                "Resource-lock acquisition attempts (try_acquire).",
+                sobs[3],
+            ),
+            (
+                "quicksched_sched_acquire_failures_total",
+                "try_acquire attempts that lost a resource conflict.",
+                sobs[4],
+            ),
+        ];
+        for (name, help, v) in sched_counters {
+            w.family(name, Kind::Counter, help);
+            w.sample_u64(&[], v);
+        }
+        let snap = inner.stats.snapshot();
+        w.family(
+            "quicksched_uptime_seconds",
+            Kind::Gauge,
+            "Seconds since the server stats epoch.",
+        );
+        w.sample(&[], snap.uptime_s);
+        w.family(
+            "quicksched_admission_sweeps_total",
+            Kind::Counter,
+            "Admission sweeps by fused width (last bucket clamps wider sweeps).",
+        );
+        for (i, &n) in snap.batch_hist.iter().enumerate() {
+            let width = (i + 1).to_string();
+            w.sample_u64(&[("width", &width)], n);
+        }
+        w.family(
+            "quicksched_tenants_evicted_total",
+            Kind::Counter,
+            "Per-tenant stats rows evicted by the LRU cap.",
+        );
+        w.sample_u64(&[], snap.evicted_tenants);
+        let tenant_counters: [(&str, &str, fn(&TenantSummary) -> u64); 6] = [
+            (
+                "quicksched_tenant_jobs_completed_total",
+                "Jobs completed, per tenant.",
+                |t| t.completed,
+            ),
+            ("quicksched_tenant_jobs_failed_total", "Jobs failed, per tenant.", |t| t.failed),
+            ("quicksched_tenant_tasks_run_total", "Tasks executed, per tenant.", |t| {
+                t.tasks_run
+            }),
+            (
+                "quicksched_tenant_tasks_stolen_total",
+                "Tasks acquired from a non-home shard, per tenant.",
+                |t| t.tasks_stolen,
+            ),
+            (
+                "quicksched_tenant_template_reuses_total",
+                "Jobs served from the template instance pool, per tenant.",
+                |t| t.reused,
+            ),
+            (
+                "quicksched_tenant_template_builds_total",
+                "Jobs that built a fresh graph instance, per tenant.",
+                |t| t.built,
+            ),
+        ];
+        for (name, help, get) in tenant_counters {
+            w.family(name, Kind::Counter, help);
+            for t in &snap.tenants {
+                let tenant = t.tenant.0.to_string();
+                w.sample_u64(&[("tenant", &tenant)], get(t));
+            }
+        }
+    });
 }
 
 fn dispatcher_loop(inner: &Inner, pool: &WorkerPool, rx: mpsc::Receiver<Event>) {
@@ -603,6 +806,18 @@ fn admit_sweep(inner: &Inner, pool: &WorkerPool) -> bool {
 /// graph instance through the registry.
 fn finish_job(inner: &Inner, job: &Arc<ActiveJob>) {
     let service_ns = job.started.elapsed().as_nanos() as u64;
+    // Fold the job's core-scheduler hot-path counter deltas into the
+    // server-wide aggregate (base-relative: pooled template instances
+    // carry their counters across jobs).
+    let (c, h, s, a, f) = job.sched.obs_counters();
+    let b = job.obs_base;
+    inner.stats.add_sched_obs([
+        c.saturating_sub(b.0),
+        h.saturating_sub(b.1),
+        s.saturating_sub(b.2),
+        a.saturating_sub(b.3),
+        f.saturating_sub(b.4),
+    ]);
     if job.failed.load(Ordering::Acquire) {
         // The instance may hold leaked locks mid-graph: never pooled.
         inner.stats.record_failure(job.tenant);

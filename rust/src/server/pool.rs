@@ -61,6 +61,10 @@ pub struct ActiveJob {
     pub batched_with: usize,
     /// When the job was handed to the pool (service-time origin).
     pub started: Instant,
+    /// `Scheduler::obs_counters` at checkout: subtracting it at
+    /// finalization yields this job's own hot-path counter deltas even
+    /// on a pooled template instance whose counters span many jobs.
+    pub obs_base: (u64, u64, u64, u64, u64),
     pub tasks_run: AtomicU64,
     pub tasks_stolen: AtomicU64,
     pub exec_ns: AtomicU64,
@@ -84,6 +88,7 @@ impl ActiveJob {
         dispatch_ns: u64,
         batched_with: usize,
     ) -> Arc<Self> {
+        let obs_base = graph.sched.obs_counters();
         Arc::new(Self {
             id,
             tenant,
@@ -98,6 +103,7 @@ impl ActiveJob {
             dispatch_ns,
             batched_with,
             started: Instant::now(),
+            obs_base,
             tasks_run: AtomicU64::new(0),
             tasks_stolen: AtomicU64::new(0),
             exec_ns: AtomicU64::new(0),

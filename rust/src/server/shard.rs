@@ -33,7 +33,7 @@
 //!
 //! See `ARCHITECTURE.md` §Sharded dispatch for the data-flow diagram.
 
-use std::sync::atomic::{AtomicI64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::Duration;
 
@@ -105,6 +105,12 @@ pub struct ShardPool {
     sleepers: CachePadded<AtomicUsize>,
     idle: Mutex<()>,
     cv: Condvar,
+    /// Always-on park/wake/steal counters (observability; relaxed, off
+    /// the per-entry hot path — parks and wakeups are idle-edge events,
+    /// steals at most one bump per successful cross-shard acquire).
+    parks: CachePadded<AtomicU64>,
+    wakes: CachePadded<AtomicU64>,
+    steals: CachePadded<AtomicU64>,
 }
 
 impl ShardPool {
@@ -117,6 +123,9 @@ impl ShardPool {
             sleepers: CachePadded::new(AtomicUsize::new(0)),
             idle: Mutex::new(()),
             cv: Condvar::new(),
+            parks: CachePadded::new(AtomicU64::new(0)),
+            wakes: CachePadded::new(AtomicU64::new(0)),
+            steals: CachePadded::new(AtomicU64::new(0)),
         }
     }
 
@@ -203,6 +212,7 @@ impl ShardPool {
         self.shards[s].put(key, tag, tid);
         self.queued.fetch_add(1, Ordering::SeqCst);
         if self.sleepers.load(Ordering::SeqCst) > 0 {
+            self.wakes.fetch_add(1, Ordering::Relaxed);
             let _g = self.idle.lock().unwrap();
             self.cv.notify_all();
         }
@@ -214,6 +224,7 @@ impl ShardPool {
     /// sleepers-then-queued here) makes a lost wakeup impossible; the
     /// timeout is a belt-and-suspenders backstop.
     pub fn park(&self, timeout: Duration) {
+        self.parks.fetch_add(1, Ordering::Relaxed);
         self.sleepers.fetch_add(1, Ordering::SeqCst);
         let g = self.idle.lock().unwrap();
         if self.queued_hint() <= 0 {
@@ -224,6 +235,7 @@ impl ShardPool {
 
     /// Wake every parked worker (batch activation, shutdown).
     pub fn notify_all(&self) {
+        self.wakes.fetch_add(1, Ordering::Relaxed);
         let _g = self.idle.lock().unwrap();
         self.cv.notify_all();
     }
@@ -315,6 +327,9 @@ impl ShardPool {
             self.queued.fetch_sub(removed, Ordering::SeqCst);
         }
         let (_tag, tid) = got?;
+        if stolen {
+            self.steals.fetch_add(1, Ordering::Relaxed);
+        }
         Some(Acquired { job: winner?, tid, stolen })
     }
 
@@ -332,6 +347,17 @@ impl ShardPool {
             acc.5 += q.stats.purged.load(Ordering::Relaxed);
         }
         acc
+    }
+
+    /// Idle-edge and steal counters `(parks, wakes, steals)` —
+    /// observability for the pool's park/wake handshake and the
+    /// cross-shard steal rate.
+    pub fn obs_stats(&self) -> (u64, u64, u64) {
+        (
+            self.parks.load(Ordering::Relaxed),
+            self.wakes.load(Ordering::Relaxed),
+            self.steals.load(Ordering::Relaxed),
+        )
     }
 }
 

@@ -5,6 +5,7 @@
 //! [`StatsSnapshot`].
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -42,6 +43,9 @@ impl Samples {
 
 #[derive(Clone, Debug, Default)]
 struct TenantAcc {
+    /// Global tick of the most recent `record`/`record_failure` touch;
+    /// the LRU key for row eviction (see [`MAX_TENANT_ROWS`]).
+    touch: u64,
     completed: u64,
     failed: u64,
     tasks_run: u64,
@@ -91,6 +95,14 @@ pub struct TenantSummary {
 /// `>= BATCH_BUCKETS`.
 pub const BATCH_BUCKETS: usize = 16;
 
+/// Default cap on live per-tenant rows. A long-lived listener sees a
+/// `TenantAcc` allocated for every tenant id any Hello ever declared;
+/// without a bound a hostile (or merely churny) client population grows
+/// the table — and every `snapshot()` — without limit. Past the cap the
+/// least-recently-touched row is evicted and counted in
+/// [`StatsSnapshot::evicted_tenants`].
+pub const MAX_TENANT_ROWS: usize = 256;
+
 /// Snapshot of the whole server.
 #[derive(Clone, Debug)]
 pub struct StatsSnapshot {
@@ -100,6 +112,10 @@ pub struct StatsSnapshot {
     /// `batch_hist[i]` = sweeps of width `i + 1`; last bucket is
     /// `>= BATCH_BUCKETS`.
     pub batch_hist: Vec<u64>,
+    /// Tenant rows evicted by the LRU cap ([`MAX_TENANT_ROWS`]) over the
+    /// server's lifetime. Non-zero means per-tenant counters below are
+    /// an undercount for the evicted tenants.
+    pub evicted_tenants: u64,
     pub tenants: Vec<TenantSummary>,
 }
 
@@ -163,6 +179,10 @@ impl StatsSnapshot {
         out.push_str(&format!("  \"jobs_per_sec\": {:.3},\n", self.jobs_per_sec()));
         let hist: Vec<String> = self.batch_hist.iter().map(|n| n.to_string()).collect();
         out.push_str(&format!("  \"batch_hist\": [{}],\n", hist.join(", ")));
+        out.push_str(&format!(
+            "  \"evicted_tenants\": {},\n",
+            self.evicted_tenants
+        ));
         out.push_str("  \"tenants\": [\n");
         for (i, s) in self.tenants.iter().enumerate() {
             out.push_str(&format!(
@@ -195,11 +215,59 @@ impl StatsSnapshot {
     }
 }
 
+/// The mutex-guarded tenant table: the rows plus the LRU bookkeeping
+/// that bounds them.
+#[derive(Debug, Default)]
+struct TenantTable {
+    map: BTreeMap<TenantId, TenantAcc>,
+    /// Monotone touch clock; every row access stamps `TenantAcc::touch`.
+    tick: u64,
+    /// Live-row cap (default [`MAX_TENANT_ROWS`]).
+    cap: usize,
+    /// Lifetime count of rows evicted at the cap.
+    evicted: u64,
+}
+
+impl TenantTable {
+    /// Fetch-or-insert the row for `tenant`, stamping its touch tick and
+    /// evicting the least-recently-touched row first if the insert would
+    /// exceed the cap.
+    fn acc(&mut self, tenant: TenantId) -> &mut TenantAcc {
+        self.tick += 1;
+        let tick = self.tick;
+        if !self.map.contains_key(&tenant) {
+            while self.map.len() >= self.cap.max(1) {
+                let victim = self
+                    .map
+                    .iter()
+                    .min_by_key(|(_, a)| a.touch)
+                    .map(|(&id, _)| id);
+                match victim {
+                    Some(id) => {
+                        self.map.remove(&id);
+                        self.evicted += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+        let acc = self.map.entry(tenant).or_default();
+        acc.touch = tick;
+        acc
+    }
+}
+
 /// Thread-safe accumulator the server records every [`JobReport`] into.
 pub struct ServerStats {
-    tenants: Mutex<BTreeMap<TenantId, TenantAcc>>,
+    tenants: Mutex<TenantTable>,
     /// Admission-sweep width histogram (see [`BATCH_BUCKETS`]).
     sweeps: Mutex<[u64; BATCH_BUCKETS]>,
+    /// Core-scheduler hot-path counters `[gettask_calls, gettask_hits,
+    /// gettask_steals, acquire_attempts, acquire_failures]`: per-job
+    /// deltas of `Scheduler::obs_counters`, folded in at finalization
+    /// (deltas, because pooled template instances carry their counters
+    /// across jobs).
+    sched_obs: [AtomicU64; 5],
     started: Instant,
 }
 
@@ -212,10 +280,41 @@ impl Default for ServerStats {
 impl ServerStats {
     pub fn new() -> Self {
         Self {
-            tenants: Mutex::new(BTreeMap::new()),
+            tenants: Mutex::new(TenantTable {
+                cap: MAX_TENANT_ROWS,
+                ..TenantTable::default()
+            }),
             sweeps: Mutex::new([0; BATCH_BUCKETS]),
+            sched_obs: Default::default(),
             started: Instant::now(),
         }
+    }
+
+    /// Fold one finished job's core-scheduler counter deltas in (same
+    /// order as [`ServerStats::sched_obs`]).
+    pub fn add_sched_obs(&self, delta: [u64; 5]) {
+        for (slot, d) in self.sched_obs.iter().zip(delta) {
+            slot.fetch_add(d, Ordering::Relaxed);
+        }
+    }
+
+    /// Aggregated core-scheduler counters over finished jobs:
+    /// `[gettask_calls, gettask_hits, gettask_steals, acquire_attempts,
+    /// acquire_failures]`.
+    pub fn sched_obs(&self) -> [u64; 5] {
+        std::array::from_fn(|i| self.sched_obs[i].load(Ordering::Relaxed))
+    }
+
+    /// Override the live-row cap (tests and memory-constrained deploys;
+    /// clamped to >= 1). Existing rows above the new cap are evicted
+    /// lazily as new tenants arrive.
+    pub fn set_row_cap(&self, cap: usize) {
+        self.tenants.lock().unwrap().cap = cap.max(1);
+    }
+
+    /// Lifetime count of tenant rows evicted by the LRU cap.
+    pub fn evicted_tenants(&self) -> u64 {
+        self.tenants.lock().unwrap().evicted
     }
 
     /// Record one admission sweep that fused `k` jobs (k ≥ 1).
@@ -225,8 +324,8 @@ impl ServerStats {
     }
 
     pub fn record(&self, r: &JobReport) {
-        let mut map = self.tenants.lock().unwrap();
-        let acc = map.entry(r.tenant).or_default();
+        let mut table = self.tenants.lock().unwrap();
+        let acc = table.acc(r.tenant);
         acc.completed += 1;
         acc.tasks_run += r.tasks_run as u64;
         acc.tasks_stolen += r.tasks_stolen as u64;
@@ -245,12 +344,12 @@ impl ServerStats {
     }
 
     pub fn record_failure(&self, tenant: TenantId) {
-        let mut map = self.tenants.lock().unwrap();
-        map.entry(tenant).or_default().failed += 1;
+        let mut table = self.tenants.lock().unwrap();
+        table.acc(tenant).failed += 1;
     }
 
     pub fn snapshot(&self) -> StatsSnapshot {
-        let map = self.tenants.lock().unwrap();
+        let table = self.tenants.lock().unwrap();
         let mean = |xs: &[f64]| {
             if xs.is_empty() {
                 0.0
@@ -267,7 +366,8 @@ impl ServerStats {
                 percentile_sorted(&s, p)
             }
         };
-        let tenants = map
+        let tenants = table
+            .map
             .iter()
             .map(|(&tenant, a)| TenantSummary {
                 tenant,
@@ -294,6 +394,7 @@ impl ServerStats {
         StatsSnapshot {
             uptime_s: self.started.elapsed().as_secs_f64(),
             batch_hist: self.sweeps.lock().unwrap().to_vec(),
+            evicted_tenants: table.evicted,
             tenants,
         }
     }
@@ -384,6 +485,43 @@ mod tests {
         assert!(table.contains("jobs/s"));
         assert!(table.contains("sweep widths"));
         assert!(table.contains("2:1"));
+    }
+
+    #[test]
+    fn tenant_rows_are_lru_capped() {
+        let s = ServerStats::new();
+        s.set_row_cap(3);
+        for t in 0..3 {
+            s.record(&report(t, 1, true, 1));
+        }
+        // Touch tenant 0 again so tenant 1 becomes the LRU victim.
+        s.record(&report(0, 1, true, 1));
+        s.record(&report(3, 1, true, 1));
+        let snap = s.snapshot();
+        assert_eq!(snap.evicted_tenants, 1);
+        assert_eq!(s.evicted_tenants(), 1);
+        let ids: Vec<u32> = snap.tenants.iter().map(|t| t.tenant.0).collect();
+        assert_eq!(ids, vec![0, 2, 3], "LRU row (tenant 1) evicted");
+        // Re-arrival after eviction starts a fresh row (undercount is
+        // reported via evicted_tenants, not hidden).
+        s.record(&report(1, 1, true, 1));
+        let snap = s.snapshot();
+        assert_eq!(snap.evicted_tenants, 2);
+        let one = snap.tenants.iter().find(|t| t.tenant.0 == 1).unwrap();
+        assert_eq!(one.completed, 1);
+        assert!(snap.to_json().contains("\"evicted_tenants\": 2"));
+    }
+
+    #[test]
+    fn failures_touch_lru_order_too() {
+        let s = ServerStats::new();
+        s.set_row_cap(2);
+        s.record(&report(0, 1, true, 1));
+        s.record(&report(1, 1, true, 1));
+        s.record_failure(TenantId(0)); // tenant 1 is now LRU
+        s.record(&report(2, 1, true, 1));
+        let ids: Vec<u32> = s.snapshot().tenants.iter().map(|t| t.tenant.0).collect();
+        assert_eq!(ids, vec![0, 2]);
     }
 
     #[test]

@@ -4,7 +4,11 @@
 //! followed by that many body bytes, the body being one message. Frame
 //! bodies never exceed [`MAX_FRAME`]; a peer declaring a longer frame is
 //! rejected *before* any body allocation, so a hostile header cannot
-//! make the server over-allocate.
+//! make the server over-allocate. A *response* larger than one frame
+//! (a wide stats snapshot, a full metrics exposition) is split by
+//! [`write_response`] into [`Response::Chunk`] continuation frames and
+//! reassembled — bounded by [`MAX_MESSAGE`] — by [`read_response`];
+//! individual frames still never exceed [`MAX_FRAME`].
 //!
 //! ```text
 //!   ┌────────────┬──────────────────────────────────────────┐
@@ -33,12 +37,21 @@ use std::io::{self, Read, Write};
 use crate::server::protocol::{JobId, JobReport, JobStatus, TenantId};
 
 /// Protocol revision spoken by this build. Negotiated in `Hello`.
-pub const WIRE_VERSION: u32 = 1;
+/// Version 2 added the `Metrics` request, the `MetricsText` response,
+/// and chunked continuation frames ([`Response::Chunk`]) for responses
+/// larger than one frame.
+pub const WIRE_VERSION: u32 = 2;
 
 /// Upper bound on a frame body, enforced on both ends before any body
 /// allocation. Large enough for a stats snapshot, small enough that a
 /// hostile length header is harmless.
 pub const MAX_FRAME: usize = 1 << 20;
+
+/// Upper bound on a *reassembled* chunked response
+/// ([`read_response`]): the claim a sequence of continuation frames
+/// may make on client memory. Far above any real exposition or stats
+/// snapshot, far below a hostile unbounded stream.
+pub const MAX_MESSAGE: usize = 64 << 20;
 
 /// A frame or message could not be decoded. Every decoder returns this
 /// instead of panicking, whatever the input bytes.
@@ -254,6 +267,7 @@ const REQ_WAIT: u8 = 3;
 const REQ_CANCEL: u8 = 4;
 const REQ_STATS: u8 = 5;
 const REQ_BYE: u8 = 6;
+const REQ_METRICS: u8 = 7;
 
 /// Client → server messages.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -273,6 +287,9 @@ pub enum Request {
     Cancel { job: u64 },
     /// Request the server's stats snapshot (JSON).
     Stats,
+    /// Request the Prometheus text exposition (server + listener
+    /// metrics; see `SchedServer::metrics_text`). Wire version ≥ 2.
+    Metrics,
     /// Orderly close.
     Bye,
 }
@@ -305,6 +322,7 @@ impl Request {
                 put_varint(&mut out, *job);
             }
             Request::Stats => out.push(REQ_STATS),
+            Request::Metrics => out.push(REQ_METRICS),
             Request::Bye => out.push(REQ_BYE),
         }
         out
@@ -323,6 +341,7 @@ impl Request {
             REQ_WAIT => Request::Wait { job: r.varint()? },
             REQ_CANCEL => Request::Cancel { job: r.varint()? },
             REQ_STATS => Request::Stats,
+            REQ_METRICS => Request::Metrics,
             REQ_BYE => Request::Bye,
             t => return Err(ProtocolError::BadTag { kind: "request", tag: t }),
         };
@@ -519,6 +538,8 @@ const RSP_STATUS: u8 = 2;
 const RSP_CANCELLED: u8 = 3;
 const RSP_STATS: u8 = 4;
 const RSP_ERROR: u8 = 5;
+const RSP_METRICS: u8 = 6;
+const RSP_CHUNK: u8 = 7;
 
 /// Server → client messages.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -533,6 +554,14 @@ pub enum Response {
     Cancelled { job: u64, ok: bool },
     /// The stats snapshot, rendered as JSON server-side.
     StatsJson { json: String },
+    /// The Prometheus text exposition (answer to [`Request::Metrics`]).
+    MetricsText { text: String },
+    /// One continuation frame of a response too large for a single
+    /// frame ([`MAX_FRAME`]): `data` is a slice of the *encoded* inner
+    /// response, `last` marks the final piece. Emitted by
+    /// [`write_response`], reassembled transparently by
+    /// [`read_response`] — a chunk never reaches application code.
+    Chunk { last: bool, data: Vec<u8> },
     /// The request was rejected; `aux` carries the code's parameter
     /// (see [`ErrorCode`]). Backpressure codes are retryable.
     Error { code: ErrorCode, aux: u64, message: String },
@@ -565,6 +594,15 @@ impl Response {
                 out.push(RSP_STATS);
                 put_str(&mut out, json);
             }
+            Response::MetricsText { text } => {
+                out.push(RSP_METRICS);
+                put_str(&mut out, text);
+            }
+            Response::Chunk { last, data } => {
+                out.push(RSP_CHUNK);
+                out.push(*last as u8);
+                put_bytes(&mut out, data);
+            }
             Response::Error { code, aux, message } => {
                 out.push(RSP_ERROR);
                 out.push(code.to_u8());
@@ -585,6 +623,8 @@ impl Response {
             RSP_STATUS => Response::Status { job: r.varint()?, status: WireStatus::take(&mut r)? },
             RSP_CANCELLED => Response::Cancelled { job: r.varint()?, ok: r.bool()? },
             RSP_STATS => Response::StatsJson { json: r.text()?.to_string() },
+            RSP_METRICS => Response::MetricsText { text: r.text()?.to_string() },
+            RSP_CHUNK => Response::Chunk { last: r.bool()?, data: r.bytes()?.to_vec() },
             RSP_ERROR => Response::Error {
                 code: ErrorCode::from_u8(r.u8()?)?,
                 aux: r.varint()?,
@@ -594,6 +634,89 @@ impl Response {
         };
         r.finish()?;
         Ok(msg)
+    }
+}
+
+// ----------------------------------------------------------------------
+// Chunk-safe response I/O
+// ----------------------------------------------------------------------
+
+/// Per-chunk payload: [`MAX_FRAME`] minus slack for the chunk's own
+/// tag, flag and length prefix, so every continuation frame stays a
+/// legal frame.
+const CHUNK_PAYLOAD: usize = MAX_FRAME - 16;
+
+/// Write one response, splitting bodies larger than [`MAX_FRAME`] into
+/// [`Response::Chunk`] continuation frames. Returns `(frames, bytes)`
+/// actually written (headers included) — the listener's wire counters.
+///
+/// This is how a `StatsJson` for hundreds of tenants or a full metrics
+/// exposition leaves the server; pre-chunking, such responses were
+/// bounced as `Internal` errors because their body outgrew one frame.
+pub fn write_response<W: Write + ?Sized>(
+    w: &mut W,
+    resp: &Response,
+) -> io::Result<(u64, u64)> {
+    let body = resp.encode();
+    if body.len() <= MAX_FRAME {
+        write_frame(w, &body)?;
+        return Ok((1, 4 + body.len() as u64));
+    }
+    let mut frames = 0u64;
+    let mut bytes = 0u64;
+    let mut rest = body.as_slice();
+    while !rest.is_empty() {
+        let take = rest.len().min(CHUNK_PAYLOAD);
+        let (piece, tail) = rest.split_at(take);
+        let chunk =
+            Response::Chunk { last: tail.is_empty(), data: piece.to_vec() }.encode();
+        write_frame(w, &chunk)?;
+        frames += 1;
+        bytes += 4 + chunk.len() as u64;
+        rest = tail;
+    }
+    Ok((frames, bytes))
+}
+
+/// Blocking read of one *logical* response: a plain frame is decoded
+/// directly, a [`Response::Chunk`] sequence is reassembled (bounded by
+/// [`MAX_MESSAGE`]) and the inner response decoded from the joined
+/// bytes. The inverse of [`write_response`].
+pub fn read_response<R: Read + ?Sized>(r: &mut R) -> Result<Response, ProtocolError> {
+    read_response_with_cap(r, MAX_MESSAGE)
+}
+
+/// [`read_response`] with an explicit reassembly cap (tests exercise
+/// the bound without allocating 64 MiB).
+pub fn read_response_with_cap<R: Read + ?Sized>(
+    r: &mut R,
+    cap: usize,
+) -> Result<Response, ProtocolError> {
+    let first = Response::decode(&read_frame(r)?)?;
+    let Response::Chunk { mut last, data } = first else { return Ok(first) };
+    let mut body = data;
+    while !last {
+        if body.len() > cap {
+            return Err(ProtocolError::Oversized { len: body.len() as u64, max: cap });
+        }
+        match Response::decode(&read_frame(r)?)? {
+            Response::Chunk { last: l, data } => {
+                body.extend_from_slice(&data);
+                last = l;
+            }
+            _ => return Err(ProtocolError::BadTag { kind: "continuation", tag: 0 }),
+        }
+    }
+    if body.len() > cap {
+        return Err(ProtocolError::Oversized { len: body.len() as u64, max: cap });
+    }
+    match Response::decode(&body)? {
+        // A chunk inside a reassembled body would recurse forever on a
+        // hostile stream; refuse it.
+        Response::Chunk { .. } => {
+            Err(ProtocolError::BadTag { kind: "reassembled response", tag: RSP_CHUNK })
+        }
+        inner => Ok(inner),
     }
 }
 
@@ -714,6 +837,77 @@ mod tests {
             Request::decode(&body),
             Err(ProtocolError::TrailingBytes { extra: 1 })
         ));
+    }
+
+    #[test]
+    fn small_responses_stay_single_frame() {
+        let resp = Response::Submitted { job: 42 };
+        let mut wire = Vec::new();
+        let (frames, bytes) = write_response(&mut wire, &resp).unwrap();
+        assert_eq!(frames, 1);
+        assert_eq!(bytes as usize, wire.len());
+        assert_eq!(read_response(&mut io::Cursor::new(&wire)).unwrap(), resp);
+    }
+
+    #[test]
+    fn oversized_responses_chunk_and_reassemble() {
+        // 3.5 MiB of JSON: would previously have been unsendable.
+        let resp = Response::StatsJson { json: "x".repeat(3 * MAX_FRAME + MAX_FRAME / 2) };
+        let mut wire = Vec::new();
+        let (frames, bytes) = write_response(&mut wire, &resp).unwrap();
+        assert!(frames > 3, "expected several continuation frames, got {frames}");
+        assert_eq!(bytes as usize, wire.len());
+        // Every individual frame on the wire is still legal.
+        let mut cur = io::Cursor::new(&wire);
+        for _ in 0..frames {
+            let body = read_frame(&mut cur).unwrap();
+            assert!(matches!(Response::decode(&body).unwrap(), Response::Chunk { .. }));
+        }
+        assert_eq!(read_response(&mut io::Cursor::new(&wire)).unwrap(), resp);
+    }
+
+    #[test]
+    fn chunk_reassembly_respects_the_cap() {
+        let resp = Response::StatsJson { json: "y".repeat(2 * MAX_FRAME) };
+        let mut wire = Vec::new();
+        write_response(&mut wire, &resp).unwrap();
+        match read_response_with_cap(&mut io::Cursor::new(&wire), MAX_FRAME) {
+            Err(ProtocolError::Oversized { max, .. }) => assert_eq!(max, MAX_FRAME),
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn interleaved_non_chunk_frame_is_an_error() {
+        let mut wire = Vec::new();
+        let c = Response::Chunk { last: false, data: vec![1, 2, 3] };
+        write_frame(&mut wire, &c.encode()).unwrap();
+        write_frame(&mut wire, &Response::Submitted { job: 1 }.encode()).unwrap();
+        assert!(matches!(
+            read_response(&mut io::Cursor::new(&wire)),
+            Err(ProtocolError::BadTag { kind: "continuation", .. })
+        ));
+    }
+
+    #[test]
+    fn nested_chunk_in_reassembled_body_is_refused() {
+        // A single last=true chunk whose payload is itself a chunk.
+        let inner = Response::Chunk { last: true, data: vec![9] }.encode();
+        let outer = Response::Chunk { last: true, data: inner };
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &outer.encode()).unwrap();
+        assert!(matches!(
+            read_response(&mut io::Cursor::new(&wire)),
+            Err(ProtocolError::BadTag { kind: "reassembled response", .. })
+        ));
+    }
+
+    #[test]
+    fn metrics_messages_roundtrip() {
+        let req = Request::Metrics;
+        assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+        let resp = Response::MetricsText { text: "# TYPE a counter\na 1\n".into() };
+        assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
     }
 
     #[test]

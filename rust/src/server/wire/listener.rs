@@ -26,8 +26,9 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use super::codec::{
-    self, ErrorCode, FrameBuffer, Request, Response, WireStatus, MAX_FRAME, WIRE_VERSION,
+    self, ErrorCode, FrameBuffer, Request, Response, WireStatus, WIRE_VERSION,
 };
+use crate::obs::{Counter, Histogram, MetricsRegistry};
 use crate::server::protocol::{JobId, JobSpec, Submission, SubmitError, TenantId};
 use crate::server::SchedServer;
 
@@ -140,12 +141,73 @@ impl Drop for Acceptor {
     }
 }
 
+/// The listener's own metric handles: wire-edge traffic the in-process
+/// [`SchedServer`] registry cannot see. Rendered *after* the server's
+/// exposition by [`WireListener::metrics_text`] / `Request::Metrics`.
+struct WireObs {
+    obs: MetricsRegistry,
+    conns_opened: Counter,
+    conns_refused: Counter,
+    frames_rx: Counter,
+    frames_tx: Counter,
+    bytes_rx: Counter,
+    bytes_tx: Counter,
+    decode_errors: Counter,
+    frame_bytes: Histogram,
+}
+
+impl WireObs {
+    fn new() -> Self {
+        let obs = MetricsRegistry::new();
+        let conns_opened = obs.counter(
+            "quicksched_wire_connections_opened_total",
+            "Connections accepted and served.",
+        );
+        let conns_refused = obs.counter(
+            "quicksched_wire_connections_refused_total",
+            "Connections refused at the concurrent-connection limit.",
+        );
+        let frames_help = "Wire frames by direction (rx = requests in, tx = responses out).";
+        let frames_rx =
+            obs.counter_with("quicksched_wire_frames_total", frames_help, &[("dir", "rx")]);
+        let frames_tx =
+            obs.counter_with("quicksched_wire_frames_total", frames_help, &[("dir", "tx")]);
+        let bytes_help = "Wire bytes by direction, frame headers included.";
+        let bytes_rx =
+            obs.counter_with("quicksched_wire_bytes_total", bytes_help, &[("dir", "rx")]);
+        let bytes_tx =
+            obs.counter_with("quicksched_wire_bytes_total", bytes_help, &[("dir", "tx")]);
+        let decode_errors = obs.counter(
+            "quicksched_wire_decode_errors_total",
+            "Frames or requests that failed to decode (connection dropped).",
+        );
+        let frame_bytes = obs.histogram(
+            "quicksched_wire_request_frame_bytes",
+            "Size of received request frame bodies, bytes.",
+            &[],
+            &[64, 256, 1024, 4096, 16384, 65536, 262144, 1048576],
+        );
+        Self {
+            obs,
+            conns_opened,
+            conns_refused,
+            frames_rx,
+            frames_tx,
+            bytes_rx,
+            bytes_tx,
+            decode_errors,
+            frame_bytes,
+        }
+    }
+}
+
 struct ListenerShared {
     server: Arc<SchedServer>,
     shutdown: AtomicBool,
     active: AtomicUsize,
     conns: Mutex<Vec<JoinHandle<()>>>,
     max_conns: usize,
+    wire: WireObs,
 }
 
 /// Handle of a running wire front-end. Dropping (or
@@ -177,7 +239,23 @@ impl WireListener {
             active: AtomicUsize::new(0),
             conns: Mutex::new(Vec::new()),
             max_conns: max_conns.max(1),
+            wire: WireObs::new(),
         });
+        {
+            // Sampled at render time through a Weak so the registry
+            // inside `shared` never keeps the listener alive.
+            let weak = Arc::downgrade(&shared);
+            shared.wire.obs.gauge_fn(
+                "quicksched_wire_active_connections",
+                "Connections currently being served.",
+                &[],
+                move || {
+                    weak.upgrade()
+                        .map(|s| s.active.load(Ordering::Relaxed) as f64)
+                        .unwrap_or(0.0)
+                },
+            );
+        }
         let handle = {
             let shared = Arc::clone(&shared);
             std::thread::Builder::new()
@@ -196,6 +274,16 @@ impl WireListener {
     /// Connections currently being served (racy snapshot).
     pub fn active_connections(&self) -> usize {
         self.shared.active.load(Ordering::Relaxed)
+    }
+
+    /// The full Prometheus exposition served to `Request::Metrics`: the
+    /// server's families (scheduler, shards, admission, tenants)
+    /// followed by the listener's own wire families. Family names are
+    /// disjoint, so the concatenation is itself a valid exposition.
+    pub fn metrics_text(&self) -> String {
+        let mut text = self.shared.server.metrics_text();
+        text.push_str(&self.shared.wire.obs.render());
+        text
     }
 
     /// Stop accepting and join every connection thread.
@@ -228,14 +316,16 @@ fn accept_loop(shared: &Arc<ListenerShared>, acceptor: Acceptor) {
                 if shared.active.load(Ordering::Relaxed) >= shared.max_conns {
                     // Refuse with a retryable error instead of hanging
                     // the client in connect-accepted-but-silent limbo.
+                    shared.wire.conns_refused.inc();
                     let refusal = Response::Error {
                         code: ErrorCode::ServerSaturated,
                         aux: shared.max_conns as u64,
                         message: "connection limit reached; retry later".into(),
                     };
-                    let _ = codec::write_frame(&mut *stream, &refusal.encode());
+                    send(shared, &mut *stream, &refusal);
                     continue;
                 }
+                shared.wire.conns_opened.inc();
                 shared.active.fetch_add(1, Ordering::Relaxed);
                 let shared2 = Arc::clone(shared);
                 let spawned = std::thread::Builder::new().name("qs-wire-conn".into()).spawn(
@@ -276,7 +366,8 @@ fn serve_conn(shared: &ListenerShared, stream: &mut dyn WireStream) {
         let body = loop {
             match fb.take_frame() {
                 Err(e) => {
-                    send_err(stream, ErrorCode::BadRequest, 0, &e.to_string());
+                    shared.wire.decode_errors.inc();
+                    send_err(shared, stream, ErrorCode::BadRequest, 0, &e.to_string());
                     return;
                 }
                 Ok(Some(b)) => break b,
@@ -287,17 +378,23 @@ fn serve_conn(shared: &ListenerShared, stream: &mut dyn WireStream) {
             }
             match stream.read(&mut tmp) {
                 Ok(0) => return,
-                Ok(n) => fb.extend(&tmp[..n]),
+                Ok(n) => {
+                    shared.wire.bytes_rx.add(n as u64);
+                    fb.extend(&tmp[..n]);
+                }
                 Err(e)
                     if e.kind() == io::ErrorKind::WouldBlock
                         || e.kind() == io::ErrorKind::TimedOut => {}
                 Err(_) => return,
             }
         };
+        shared.wire.frames_rx.inc();
+        shared.wire.frame_bytes.observe(body.len() as u64);
         let req = match Request::decode(&body) {
             Ok(r) => r,
             Err(e) => {
-                send_err(stream, ErrorCode::BadRequest, 0, &e.to_string());
+                shared.wire.decode_errors.inc();
+                send_err(shared, stream, ErrorCode::BadRequest, 0, &e.to_string());
                 return;
             }
         };
@@ -308,6 +405,7 @@ fn serve_conn(shared: &ListenerShared, stream: &mut dyn WireStream) {
                     // Hello rebinding it would let one socket spread
                     // load across other tenants' caps and weights.
                     send_err(
+                        shared,
                         stream,
                         ErrorCode::BadRequest,
                         0,
@@ -317,6 +415,7 @@ fn serve_conn(shared: &ListenerShared, stream: &mut dyn WireStream) {
                 }
                 if version != WIRE_VERSION {
                     send_err(
+                        shared,
                         stream,
                         ErrorCode::VersionMismatch,
                         WIRE_VERSION as u64,
@@ -330,7 +429,13 @@ fn serve_conn(shared: &ListenerShared, stream: &mut dyn WireStream) {
             Request::Bye => return,
             other => {
                 let Some(tenant) = tenant else {
-                    send_err(stream, ErrorCode::NeedHello, 0, "Hello must be the first message");
+                    send_err(
+                        shared,
+                        stream,
+                        ErrorCode::NeedHello,
+                        0,
+                        "Hello must be the first message",
+                    );
                     return;
                 };
                 match other {
@@ -364,6 +469,7 @@ fn serve_conn(shared: &ListenerShared, stream: &mut dyn WireStream) {
                                 Some(_) => {
                                     if shared.shutdown.load(Ordering::Acquire) {
                                         send_err(
+                                            shared,
                                             stream,
                                             ErrorCode::ShuttingDown,
                                             0,
@@ -381,26 +487,35 @@ fn serve_conn(shared: &ListenerShared, stream: &mut dyn WireStream) {
                     }
                     Request::Stats => {
                         // Tenant ids are client-declared, so a snapshot
-                        // can in principle outgrow one frame; answer
-                        // with a clean error instead of desyncing.
-                        let json = shared.server.stats().to_json();
-                        if json.len() + 16 > MAX_FRAME {
-                            Response::Error {
-                                code: ErrorCode::Internal,
-                                aux: json.len() as u64,
-                                message: "stats snapshot exceeds one frame".into(),
-                            }
-                        } else {
-                            Response::StatsJson { json }
-                        }
+                        // can outgrow one frame; `send` chunks it.
+                        Response::StatsJson { json: shared.server.stats().to_json() }
+                    }
+                    Request::Metrics => {
+                        let mut text = shared.server.metrics_text();
+                        text.push_str(&shared.wire.obs.render());
+                        Response::MetricsText { text }
                     }
                     Request::Hello { .. } | Request::Bye => unreachable!("handled above"),
                 }
             }
         };
-        if codec::write_frame(stream, &resp.encode()).is_err() {
+        if !send(shared, stream, &resp) {
             return;
         }
+    }
+}
+
+/// Write one response through the chunk-safe encoder, folding the
+/// frames/bytes written into the wire counters. `false` = I/O failure
+/// (the caller drops the connection).
+fn send(shared: &ListenerShared, stream: &mut dyn WireStream, resp: &Response) -> bool {
+    match codec::write_response(stream, resp) {
+        Ok((frames, bytes)) => {
+            shared.wire.frames_tx.add(frames);
+            shared.wire.bytes_tx.add(bytes);
+            true
+        }
+        Err(_) => false,
     }
 }
 
@@ -420,7 +535,13 @@ fn reject(e: &SubmitError) -> Response {
     }
 }
 
-fn send_err(stream: &mut dyn WireStream, code: ErrorCode, aux: u64, message: &str) {
+fn send_err(
+    shared: &ListenerShared,
+    stream: &mut dyn WireStream,
+    code: ErrorCode,
+    aux: u64,
+    message: &str,
+) {
     let resp = Response::Error { code, aux, message: message.to_string() };
-    let _ = codec::write_frame(stream, &resp.encode());
+    send(shared, stream, &resp);
 }

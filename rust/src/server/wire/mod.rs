@@ -25,6 +25,7 @@ pub mod codec;
 pub mod listener;
 
 pub use codec::{
-    ErrorCode, ProtocolError, Request, Response, WireReport, WireStatus, MAX_FRAME, WIRE_VERSION,
+    read_response, write_response, ErrorCode, ProtocolError, Request, Response, WireReport,
+    WireStatus, MAX_FRAME, MAX_MESSAGE, WIRE_VERSION,
 };
 pub use listener::{ListenAddr, WireListener, DEFAULT_MAX_CONNS};

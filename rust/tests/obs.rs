@@ -1,0 +1,210 @@
+//! Observability integration tests: the golden Prometheus exposition,
+//! concurrent counter monotonicity under render load, the Chrome-trace
+//! schema over a real timeline run, and the end-to-end wire scrape
+//! (server + listener + client) covering every subsystem's families.
+
+use std::sync::Arc;
+
+use quicksched::client::RemoteClient;
+use quicksched::coordinator::SchedConfig;
+use quicksched::obs::{parse_exposition, validate_chrome_trace, Kind, MetricsRegistry, TraceSink};
+use quicksched::qr;
+use quicksched::server::{
+    synthetic_template, JobStatus, ListenAddr, SchedServer, ServerConfig, TenantId, WireListener,
+};
+use quicksched::util::rng::Rng;
+
+/// Exact text-format 0.0.4 output for one family of each kind: HELP and
+/// TYPE lines, label rendering, cumulative histogram buckets with the
+/// implicit `+Inf`, `_sum`/`_count`. Byte-for-byte — scrapers parse
+/// this, so drift is a wire-format break, not a cosmetic change.
+#[test]
+fn golden_exposition() {
+    let reg = MetricsRegistry::new();
+    let rx = reg.counter_with(
+        "quicksched_demo_requests_total",
+        "Remote requests served, by direction.",
+        &[("dir", "rx")],
+    );
+    let tx = reg.counter_with(
+        "quicksched_demo_requests_total",
+        "Remote requests served, by direction.",
+        &[("dir", "tx")],
+    );
+    let depth = reg.gauge("quicksched_demo_depth", "Current queue depth.");
+    let lat = reg.histogram("quicksched_demo_latency_ns", "Request latency, ns.", &[], &[8, 64]);
+    rx.add(2);
+    tx.inc();
+    depth.set(-3);
+    for v in [4, 9, 100] {
+        lat.observe(v);
+    }
+
+    let want = "\
+# HELP quicksched_demo_requests_total Remote requests served, by direction.
+# TYPE quicksched_demo_requests_total counter
+quicksched_demo_requests_total{dir=\"rx\"} 2
+quicksched_demo_requests_total{dir=\"tx\"} 1
+# HELP quicksched_demo_depth Current queue depth.
+# TYPE quicksched_demo_depth gauge
+quicksched_demo_depth -3
+# HELP quicksched_demo_latency_ns Request latency, ns.
+# TYPE quicksched_demo_latency_ns histogram
+quicksched_demo_latency_ns_bucket{le=\"8\"} 1
+quicksched_demo_latency_ns_bucket{le=\"64\"} 2
+quicksched_demo_latency_ns_bucket{le=\"+Inf\"} 3
+quicksched_demo_latency_ns_sum 113
+quicksched_demo_latency_ns_count 3
+";
+    let got = reg.render();
+    assert_eq!(got, want);
+
+    // And the strict parser round-trips its own renderer's output.
+    let parsed = parse_exposition(&got).expect("golden exposition must parse");
+    assert_eq!(parsed.kind_of("quicksched_demo_requests_total"), Some("counter"));
+    assert_eq!(parsed.kind_of("quicksched_demo_latency_ns"), Some("histogram"));
+    assert_eq!(parsed.value("quicksched_demo_requests_total", &[("dir", "rx")]), Some(2.0));
+    assert_eq!(parsed.value("quicksched_demo_depth", &[]), Some(-3.0));
+    assert_eq!(parsed.value("quicksched_demo_latency_ns_count", &[]), Some(3.0));
+    assert_eq!(parsed.value("quicksched_demo_latency_ns_bucket", &[("le", "+Inf")]), Some(3.0));
+}
+
+/// 100-seed property test: counters bumped from several threads while
+/// the registry renders concurrently must never show a non-monotone
+/// value across successive scrapes, every scrape must parse, and the
+/// final render must equal the exact total of increments.
+#[test]
+fn concurrent_counters_stay_monotone() {
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15) + 1);
+        let per_thread: Vec<u64> = (0..4).map(|_| rng.below(600) + 1).collect();
+        let total: u64 = per_thread.iter().sum();
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("quicksched_prop_events_total", "Property-test events.");
+        let mut last = 0.0f64;
+        std::thread::scope(|scope| {
+            for &n in &per_thread {
+                let c = c.clone();
+                scope.spawn(move || {
+                    for _ in 0..n {
+                        c.inc();
+                    }
+                });
+            }
+            // Scrape while the writers run: parseable and monotone.
+            for _ in 0..6 {
+                let parsed = parse_exposition(&reg.render())
+                    .unwrap_or_else(|e| panic!("seed {seed}: mid-run exposition broke: {e}"));
+                let v = parsed
+                    .value("quicksched_prop_events_total", &[])
+                    .expect("counter series present");
+                assert!(v >= last, "seed {seed}: counter went backwards: {last} -> {v}");
+                assert!(v <= total as f64, "seed {seed}: counter overshot: {v} > {total}");
+                last = v;
+            }
+        });
+        let parsed = parse_exposition(&reg.render()).expect("final exposition parses");
+        assert_eq!(
+            parsed.value("quicksched_prop_events_total", &[]),
+            Some(total as f64),
+            "seed {seed}: lost increments"
+        );
+    }
+}
+
+/// A real QR timeline run through [`TraceSink`] must produce
+/// schema-valid Chrome trace JSON: validated structurally (complete
+/// events, no same-lane overlap) and carrying the QR kernel names.
+#[test]
+fn qr_timeline_renders_valid_chrome_trace() {
+    let threads = 2;
+    let cfg = SchedConfig::new(threads).with_timeline(true);
+    let mat = qr::TiledMatrix::random(8, 6, 6, 99);
+    let run = qr::run_threaded(&mat, &qr::NativeBackend, cfg, threads).unwrap();
+    assert!(run.metrics.tasks_run > 0);
+
+    let mut sink = TraceSink::new();
+    sink.add_run_named(&run.metrics, 1, |ty| qr::QrTask::from_u32(ty).name().to_string());
+    let json = sink.to_json();
+    let events = validate_chrome_trace(&json)
+        .unwrap_or_else(|e| panic!("trace failed schema validation: {e}"));
+    // One complete event per executed task (metadata events are extra).
+    assert!(
+        events >= run.metrics.tasks_run,
+        "expected >= {} events, validated {events}",
+        run.metrics.tasks_run
+    );
+    for name in ["DGEQRF", "DLARFT", "DTSQRF", "DSSRFT"] {
+        assert!(json.contains(name), "trace lost task-type name {name}");
+    }
+}
+
+/// End to end over the wire: run jobs through a listener, scrape with
+/// `RemoteClient::metrics_text`, and check the exposition parses and
+/// carries families from every subsystem — core scheduler, shard/queue
+/// layer, admission, server lifecycle, wire codec, and per-tenant rows.
+#[test]
+fn wire_scrape_covers_every_subsystem() {
+    let server = SchedServer::start(ServerConfig::new(2));
+    server.register_template("demo", synthetic_template(50, 4, 7, 0));
+    let server = Arc::new(server);
+    let listener =
+        WireListener::start(Arc::clone(&server), &ListenAddr::parse("127.0.0.1:0")).unwrap();
+
+    let mut client = RemoteClient::connect(listener.local_addr(), TenantId(3)).unwrap();
+    for _ in 0..5 {
+        let id = client.submit("demo").unwrap();
+        match client.wait(id).unwrap() {
+            JobStatus::Done(report) => assert_eq!(report.tasks_run, 50),
+            other => panic!("job ended as {other:?}"),
+        }
+    }
+
+    let text = client.metrics_text().unwrap();
+    let parsed = parse_exposition(&text).expect("wire exposition must parse");
+    let must_have = [
+        ("quicksched_sched_acquire_attempts_total", "counter"), // core scheduler
+        ("quicksched_sched_gettask_calls_total", "counter"),
+        ("quicksched_shard_gets_total", "counter"),        // shared ready-queue layer
+        ("quicksched_worker_parks_total", "counter"),      // pool park/wake
+        ("quicksched_admission_queued", "gauge"),          // admission
+        ("quicksched_admission_inflight", "gauge"),
+        ("quicksched_jobs_submitted_total", "counter"),    // server lifecycle
+        ("quicksched_jobs_rejected_total", "counter"),
+        ("quicksched_tenants_evicted_total", "counter"),
+        ("quicksched_wire_frames_total", "counter"),       // wire codec
+        ("quicksched_wire_bytes_total", "counter"),
+        ("quicksched_wire_request_frame_bytes", "histogram"),
+        ("quicksched_tenant_jobs_completed_total", "counter"), // per-tenant rows
+    ];
+    for (fam, kind) in must_have {
+        assert_eq!(parsed.kind_of(fam), Some(kind), "family {fam} missing or mistyped");
+    }
+
+    assert_eq!(parsed.value("quicksched_jobs_submitted_total", &[]), Some(5.0));
+    let completed = parsed
+        .value("quicksched_tenant_jobs_completed_total", &[("tenant", "3")])
+        .expect("tenant 3 row present");
+    assert_eq!(completed, 5.0);
+    // Every executed task went through try_acquire on the shard path,
+    // and the per-job deltas folded in at finalization.
+    let attempts = parsed.value("quicksched_sched_acquire_attempts_total", &[]).unwrap();
+    assert!(attempts >= 250.0, "5 jobs x 50 tasks should attempt >= 250 acquires: {attempts}");
+    assert!(parsed.value("quicksched_wire_frames_total", &[("dir", "rx")]).unwrap() > 0.0);
+    assert!(parsed.value("quicksched_wire_request_frame_bytes_count", &[]).unwrap() > 0.0);
+
+    // A second scrape stays parseable and monotone on the counters.
+    let again = parse_exposition(&client.metrics_text().unwrap()).unwrap();
+    assert!(again.value("quicksched_jobs_submitted_total", &[]).unwrap() >= 5.0);
+    assert!(
+        again.value("quicksched_wire_frames_total", &[("dir", "rx")]).unwrap()
+            > parsed.value("quicksched_wire_frames_total", &[("dir", "rx")]).unwrap(),
+        "second scrape must have received more frames than the first"
+    );
+
+    // Kind import is exercised against the parser's declared kinds.
+    assert_eq!(Kind::Counter.as_str(), "counter");
+
+    listener.shutdown();
+    server.drain();
+}

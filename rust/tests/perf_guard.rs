@@ -2,7 +2,7 @@
 //! (Generous wall-clock bounds — these catch complexity regressions,
 //! not noise; see EXPERIMENTS.md §Perf.)
 
-use quicksched::coordinator::{GraphBuilder, SchedConfig, Scheduler, UnitCost};
+use quicksched::coordinator::{GraphBuilder, SchedConfig, SchedFlags, Scheduler, UnitCost};
 
 /// 5k of 20k tasks contending one resource on 64 virtual cores: before
 /// the queue-scan failure memo + single-pass dispatch this took minutes
@@ -66,6 +66,60 @@ fn dispatch_overhead_per_task_bounded() {
     assert!(
         ns_per_task < 50_000.0,
         "per-task dispatch overhead regressed: {ns_per_task:.0} ns/task"
+    );
+}
+
+/// The always-on observability counters must stay within 5% of the
+/// "compiled out" baseline on the bench-core dispatch-overhead shape.
+/// `SchedFlags::obs_counters = false` skips every counter increment on
+/// the `gettask`/`try_acquire` hot paths — that run is the baseline;
+/// the default (counters on) run must finish within `1.05x + 200
+/// ns/task` of it (the additive slack absorbs timer noise on the
+/// sub-microsecond per-task figures; min-of-5 suppresses scheduler
+/// jitter on loaded CI boxes).
+#[test]
+fn obs_counter_overhead_within_bounds() {
+    let n: usize = if cfg!(debug_assertions) { 4_000 } else { 20_000 };
+    let build = |obs: bool| -> Scheduler {
+        let flags = SchedFlags { obs_counters: obs, ..Default::default() };
+        let mut sched = Scheduler::new(SchedConfig::new(1).with_flags(flags)).unwrap();
+        let rs: Vec<_> = (0..64).map(|_| sched.add_resource(None, 0)).collect();
+        let mut prev = None;
+        for i in 0..n {
+            let mut spec = sched.task(0).cost(1 + (i % 13) as i64);
+            if i % 4 == 0 {
+                spec = spec.lock(rs[i % 64]);
+            }
+            if i % 3 == 0 {
+                spec = spec.after(prev);
+            }
+            prev = Some(spec.spawn());
+        }
+        sched.prepare().unwrap();
+        sched.run(1, |_| {}).unwrap(); // warmup
+        sched
+    };
+    let min_of_5 = |sched: &mut Scheduler| -> f64 {
+        (0..5)
+            .map(|_| {
+                let m = sched.run(1, |_| {}).unwrap();
+                assert_eq!(m.tasks_run, n);
+                m.elapsed_ns as f64 / n as f64
+            })
+            .fold(f64::INFINITY, f64::min)
+    };
+    let (mut off, mut on) = (build(false), build(true));
+    let off_min = min_of_5(&mut off);
+    let on_min = min_of_5(&mut on);
+    eprintln!(
+        "obs counter overhead: {off_min:.0} ns/task off, {on_min:.0} ns/task on \
+         ({:+.1}%)",
+        (on_min / off_min - 1.0) * 100.0
+    );
+    assert!(
+        on_min <= off_min * 1.05 + 200.0,
+        "always-on counters exceed the 5% dispatch-overhead budget: \
+         {off_min:.0} ns/task off vs {on_min:.0} ns/task on"
     );
 }
 

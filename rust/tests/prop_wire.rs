@@ -7,8 +7,8 @@
 use std::io::Cursor;
 
 use quicksched::server::wire::codec::{
-    read_frame, write_frame, FrameBuffer, ProtocolError, Request, Response, WireReport,
-    WireStatus, MAX_FRAME,
+    read_frame, read_response, write_frame, write_response, FrameBuffer, ProtocolError, Request,
+    Response, WireReport, WireStatus, MAX_FRAME,
 };
 use quicksched::util::rng::Rng;
 
@@ -34,7 +34,7 @@ fn rand_bytes(rng: &mut Rng, max_len: usize) -> Vec<u8> {
 }
 
 fn rand_request(rng: &mut Rng) -> Request {
-    match rng.index(7) {
+    match rng.index(8) {
         0 => Request::Hello {
             version: rng.next_u64() as u32,
             tenant: rng.next_u64() as u32,
@@ -48,6 +48,7 @@ fn rand_request(rng: &mut Rng) -> Request {
         3 => Request::Wait { job: rng.next_u64() },
         4 => Request::Cancel { job: rng.next_u64() },
         5 => Request::Stats,
+        6 => Request::Metrics,
         _ => Request::Bye,
     }
 }
@@ -75,7 +76,7 @@ fn rand_status(rng: &mut Rng) -> WireStatus {
 
 fn rand_response(rng: &mut Rng) -> Response {
     use quicksched::server::wire::codec::ErrorCode;
-    match rng.index(6) {
+    match rng.index(8) {
         0 => Response::HelloOk {
             version: rng.next_u64() as u32,
             tenant: rng.next_u64() as u32,
@@ -84,6 +85,8 @@ fn rand_response(rng: &mut Rng) -> Response {
         2 => Response::Status { job: rng.next_u64(), status: rand_status(rng) },
         3 => Response::Cancelled { job: rng.next_u64(), ok: rng.chance(0.5) },
         4 => Response::StatsJson { json: rand_string(rng, 200) },
+        5 => Response::MetricsText { text: rand_string(rng, 300) },
+        6 => Response::Chunk { last: rng.chance(0.5), data: rand_bytes(rng, 120) },
         _ => {
             let codes = [
                 ErrorCode::TenantAtCapacity,
@@ -174,6 +177,49 @@ fn corrupted_and_garbage_bodies_never_panic() {
         let garbage = rand_bytes(&mut rng, 96);
         let _ = Request::decode(&garbage);
         let _ = Response::decode(&garbage);
+    }
+}
+
+/// A pseudo-random ASCII blob of exactly `n` bytes (built from a
+/// repeated random block — cheap enough for multi-MiB bodies in debug).
+fn blob(rng: &mut Rng, n: usize) -> String {
+    let block: String = (0..64).map(|_| (b'a' + rng.index(26) as u8) as char).collect();
+    let mut s = block.repeat(n / 64 + 1);
+    s.truncate(n);
+    s
+}
+
+/// Chunked framing property: text-bearing responses of sizes straddling
+/// the frame boundary survive `write_response` → `read_response`
+/// byte-for-byte, single-frame bodies stay single-frame, every frame on
+/// the wire is individually legal, and the reported byte count matches
+/// what was written.
+#[test]
+fn chunked_responses_reassemble_across_sizes() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed ^ 0xC4A2);
+        for base in [0usize, MAX_FRAME - 4096, MAX_FRAME + 1, 2 * MAX_FRAME + 11] {
+            let n = base + rng.index(2048);
+            let msg = if rng.chance(0.5) {
+                Response::StatsJson { json: blob(&mut rng, n) }
+            } else {
+                Response::MetricsText { text: blob(&mut rng, n) }
+            };
+            let mut wire = Vec::new();
+            let (frames, bytes) = write_response(&mut wire, &msg).unwrap();
+            assert_eq!(bytes as usize, wire.len(), "seed {seed} n {n}");
+            if msg.encode().len() <= MAX_FRAME {
+                assert_eq!(frames, 1, "seed {seed} n {n}: small body should not chunk");
+            } else {
+                assert!(frames > 1, "seed {seed} n {n}: oversized body must chunk");
+            }
+            let mut cur = Cursor::new(&wire);
+            for _ in 0..frames {
+                read_frame(&mut cur).expect("each wire frame is individually legal");
+            }
+            let got = read_response(&mut Cursor::new(&wire)).unwrap();
+            assert_eq!(got, msg, "seed {seed} n {n}");
+        }
     }
 }
 
