@@ -128,7 +128,7 @@ where
     F: Fn(TaskView<'_>) + Sync,
 {
     let qid = wid % s.nr_queues();
-    let mut rng = Rng::new(seed ^ (wid as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    let mut rng = Rng::new(Rng::split(seed, wid as u64));
     let mut m = WorkerMetrics::with_capacity(if record { 1024 } else { 0 });
     let mut get_started = Instant::now();
     while s.waiting() > 0 {

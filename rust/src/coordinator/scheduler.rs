@@ -549,6 +549,12 @@ impl Scheduler {
     /// weight-aware ablation). On success the task's resources are locked;
     /// if re-owning is on, they are re-owned to `qid`.
     /// Returns `(task, was_stolen)`.
+    ///
+    /// The steal order is entirely the caller's `rng`: callers that
+    /// want reproducible runs must derive it from a configured root
+    /// seed (see `Rng::split`; both executors and the server pool do),
+    /// never from entropy. This is what lets the simulator replay any
+    /// steal schedule from one `u64`.
     pub fn gettask(&self, qid: usize, rng: &mut Rng) -> Option<(TaskId, bool)> {
         let g = self.compiled.as_ref().expect("gettask before prepare()");
         let obs = self.config.flags.obs_counters;

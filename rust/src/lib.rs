@@ -29,6 +29,13 @@
 //!   request and `repro serve --metrics`) and the `TraceSink` (Chrome
 //!   `trace_event` timelines — the Fig 9/12 Gantt view — written by
 //!   `repro trace`).
+//! * [`sim`] — deterministic simulation testing (DST): a whole-server
+//!   simulator on a virtual clock that drives the real admission /
+//!   registry / scheduler / codec stack through simulated connections
+//!   with seeded fault injection (drops, dups, reorders, slow reads,
+//!   resets, partitions), checks four end-to-end invariants every run,
+//!   and replays any schedule from a single `u64` seed
+//!   (`repro sim --seeds A..B`).
 //! * [`util`] — RNG, stats, mini bench harness, CLI parsing.
 //!
 //! # Architecture at a glance
@@ -57,3 +64,4 @@ pub mod bench;
 pub mod server;
 pub mod client;
 pub mod obs;
+pub mod sim;

@@ -5,6 +5,12 @@
 //! repro chol  [--tiles 16 --tile 64 --threads 4 --verify]
 //! repro bh    [--n 100000 --n-max 100 --n-task 5000 --threads 4 --backend native|xla --verify]
 //! repro sim   <qr|bh> [--cores 64 ...workload options]
+//! repro sim   --seeds A..B [--faults drop|dup|reorder|slow|reset|partition|chaos|all]
+//!                    [--scenario small|remote --workers N --clients N --jobs N
+//!                     --log-dir bench_out]
+//!                    # deterministic simulation sweep (DST): whole-server
+//!                    # sim under fault injection; failing seeds write
+//!                    # bench_out/dst_<profile>_seed_<N>.log and exit 1
 //! repro bench <fig8|fig9|fig11|fig12|fig13|overhead|ablation|all> [--quick]
 //! repro bench-core [--threads 1 --iters 5 --quick --json bench_out/BENCH_core.json]
 //!                    # ns-per-task dispatch overhead + gettask scan length
@@ -174,6 +180,11 @@ fn cmd_bh(args: &Args) {
 }
 
 fn cmd_sim(args: &Args) {
+    // `--seeds A..B` selects the DST sweep; the virtual-time workload
+    // estimators keep their original `repro sim <qr|bh>` spelling.
+    if args.get("seeds").is_some() {
+        return cmd_sim_dst(args);
+    }
     let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("qr");
     let cores = args.get_usize("cores", 64);
     match what {
@@ -209,6 +220,102 @@ fn cmd_sim(args: &Args) {
             );
         }
         other => panic!("unknown sim target {other:?} (qr|bh)"),
+    }
+}
+
+/// `repro sim --seeds A..B` — the DST sweep: for each fault profile,
+/// simulate every seed in the window against the whole server (virtual
+/// time, simulated network, real admission/scheduler/codec) and check
+/// the four oracle invariants. Any failing seed writes its full event
+/// log to `--log-dir` and the command exits nonzero; re-running with
+/// `--seeds N..N+1 --faults <profile>` replays that schedule exactly.
+fn cmd_sim_dst(args: &Args) {
+    use quicksched::sim::{run_sweep, FaultProfile, SimConfig, ALL_PROFILES};
+
+    let seeds = args.get("seeds").unwrap();
+    let (lo, hi) = match seeds.split_once("..") {
+        Some((a, b)) => {
+            let lo: u64 = a.trim().parse().expect("--seeds expects A..B");
+            let hi: u64 = b.trim().parse().expect("--seeds expects A..B");
+            (lo, hi)
+        }
+        // A bare `--seeds N` replays the single seed N.
+        None => {
+            let n: u64 = seeds.trim().parse().expect("--seeds expects A..B or N");
+            (n, n + 1)
+        }
+    };
+    assert!(hi > lo, "--seeds window {seeds:?} is empty");
+
+    let scenario = args.get_str("scenario", "small");
+    let mut cfg = SimConfig::by_name(scenario)
+        .unwrap_or_else(|| panic!("unknown scenario {scenario:?} (small|remote)"));
+    cfg.workers = args.get_usize("workers", cfg.workers);
+    cfg.clients = args.get_usize("clients", cfg.clients);
+    cfg.jobs_per_client = args.get_usize("jobs", cfg.jobs_per_client);
+
+    let faults = args.get_str("faults", "chaos");
+    let profiles: Vec<FaultProfile> = if faults == "all" {
+        ALL_PROFILES.to_vec()
+    } else {
+        vec![FaultProfile::parse(faults)
+            .unwrap_or_else(|| panic!("unknown fault profile {faults:?} (or \"all\")"))]
+    };
+    let log_dir = std::path::PathBuf::from(args.get_str("log-dir", "bench_out").to_string());
+
+    println!(
+        "sim: sweeping seeds {lo}..{hi} on scenario {scenario} \
+         ({} clients x {} jobs, {} workers)",
+        cfg.clients, cfg.jobs_per_client, cfg.workers
+    );
+    let mut failed = false;
+    for profile in profiles {
+        let report = run_sweep(&cfg, lo, hi, profile);
+        let injected: Vec<String> = report
+            .faults
+            .classes()
+            .iter()
+            .filter(|(_, n)| *n > 0)
+            .map(|(name, n)| format!("{name} {n}"))
+            .collect();
+        println!(
+            "  {:<9} {}/{} seeds passed, {} fault(s) injected [{}]",
+            report.profile.name(),
+            report.passed,
+            report.seeds,
+            report.faults.total(),
+            injected.join(", ")
+        );
+        if report.ok() {
+            continue;
+        }
+        failed = true;
+        let _ = std::fs::create_dir_all(&log_dir);
+        for outcome in &report.failures {
+            println!(
+                "  FAIL seed {} ({}): {}",
+                outcome.seed,
+                report.profile.name(),
+                outcome.violations.first().map(String::as_str).unwrap_or("?")
+            );
+            if outcome.log.is_empty() {
+                continue; // log truncated past MAX_FAILURE_LOGS
+            }
+            let path =
+                log_dir.join(format!("dst_{}_seed_{}.log", report.profile.name(), outcome.seed));
+            match std::fs::write(&path, outcome.log_text()) {
+                Ok(()) => println!("       event log -> {}", path.display()),
+                Err(e) => eprintln!("       could not write {}: {e}", path.display()),
+            }
+        }
+        let first = report.failing_seeds()[0];
+        println!(
+            "  replay: repro sim --seeds {first} --faults {} --scenario {scenario}",
+            report.profile.name()
+        );
+    }
+    if failed {
+        std::process::exit(1);
     }
 }
 

@@ -97,6 +97,10 @@ pub struct ServerConfig {
     pub max_queued: Option<usize>,
     /// Seed for the workers' steal order.
     pub seed: u64,
+    /// How long a blocking `Wait` (wire or in-process) sleeps between
+    /// status re-checks while it holds a connection thread. See
+    /// [`ServerConfig::with_wait_slice`].
+    pub wait_slice: Duration,
     /// Scheduler configuration for template instances (its `nr_queues`
     /// should normally equal `workers`).
     pub sched: SchedConfig,
@@ -113,6 +117,7 @@ impl ServerConfig {
             batch_adaptive: false,
             max_queued: None,
             seed: 0x5EED_5E11,
+            wait_slice: Duration::from_millis(50),
             sched: SchedConfig::new(workers),
         }
     }
@@ -166,8 +171,29 @@ impl ServerConfig {
         self
     }
 
+    /// Set the root seed every server-side RNG stream is derived from
+    /// (per-worker steal walks via [`Rng::split`](crate::util::rng::Rng::split)).
+    ///
+    /// **Determinism boundary:** with a fixed seed the *decisions* each
+    /// worker makes are reproducible, but a live server still runs real
+    /// OS threads — the interleaving of workers, connection handlers,
+    /// and the dispatcher stays nondeterministic. Full determinism
+    /// (byte-identical event logs from one seed) holds only under the
+    /// single-threaded simulator: see [`crate::sim`] and `repro sim`.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Set the blocking-`Wait` re-check slice (default 50 ms): the
+    /// upper bound on how stale a `Wait`'s shutdown check may be, and —
+    /// on the wire path — how often a waiting connection thread wakes
+    /// to notice listener shutdown. Shrinking it tightens loopback test
+    /// latency; the simulator replaces the sleep entirely with
+    /// event-driven waiter wakeups (virtual time never busy-waits).
+    /// Clamped to ≥ 1 ms so a zero slice cannot spin a thread.
+    pub fn with_wait_slice(mut self, slice: Duration) -> Self {
+        self.wait_slice = slice.max(Duration::from_millis(1));
         self
     }
 }
@@ -203,6 +229,8 @@ struct Inner {
     /// the first completion. Input to [`adaptive_k`].
     service_ewma_ns: AtomicU64,
     tx: Mutex<mpsc::Sender<Event>>,
+    /// Blocking-`Wait` re-check slice (see [`ServerConfig::with_wait_slice`]).
+    wait_slice: Duration,
     /// The server's metrics registry (see [`SchedServer::metrics_text`]).
     obs: Arc<MetricsRegistry>,
     /// Owned hot-path counters (everything else is sampled at render
@@ -265,6 +293,7 @@ impl SchedServer {
             batch_adaptive: config.batch_adaptive,
             service_ewma_ns: AtomicU64::new(0),
             tx: Mutex::new(tx),
+            wait_slice: config.wait_slice.max(Duration::from_millis(1)),
             obs,
             jobs_submitted,
             rejected_saturated,
@@ -438,6 +467,13 @@ impl SchedServer {
                 }
             }
         }
+    }
+
+    /// The configured blocking-`Wait` re-check slice (the wire layer's
+    /// `Wait` loop polls [`SchedServer::wait_timeout`] at this period so
+    /// it can notice listener shutdown between checks).
+    pub fn wait_slice(&self) -> Duration {
+        self.inner.wait_slice
     }
 
     /// Cancel a job that is still queued. Returns `false` once it has

@@ -240,7 +240,11 @@ fn try_finalize(shared: &Shared, job: &Arc<ActiveJob>) {
 }
 
 fn worker_loop(shared: &Shared, wid: usize) {
-    let mut rng = Rng::new(shared.seed ^ (wid as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    // Per-worker stream derived from the one root seed (`ServerConfig::
+    // with_seed`) so a live run's steal walks are reproducible up to OS
+    // thread interleaving; see `Rng::split` and `repro sim` for the
+    // fully deterministic variant.
+    let mut rng = Rng::new(Rng::split(shared.seed, wid as u64));
     let mut dry_scans: u32 = 0;
     loop {
         if shared.shutdown.load(Ordering::Acquire) {

@@ -459,11 +459,15 @@ fn serve_conn(shared: &ListenerShared, stream: &mut dyn WireStream) {
                             .unwrap_or(WireStatus::Unknown),
                     },
                     Request::Wait { job } => {
+                        // Sliced wait: each slice (`ServerConfig::
+                        // with_wait_slice`, default 50 ms) bounds how
+                        // long shutdown can go unnoticed. The simulator
+                        // (`crate::sim`) replaces this sleep with an
+                        // event-driven waiter wakeup — virtual time
+                        // never polls.
+                        let slice = shared.server.wait_slice();
                         let status = loop {
-                            match shared
-                                .server
-                                .wait_timeout(JobId(job), Duration::from_millis(50))
-                            {
+                            match shared.server.wait_timeout(JobId(job), slice) {
                                 None => break WireStatus::Unknown,
                                 Some(s) if s.is_terminal() => break WireStatus::from_status(&s),
                                 Some(_) => {

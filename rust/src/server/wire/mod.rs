@@ -29,3 +29,6 @@ pub use codec::{
     WireStatus, MAX_FRAME, MAX_MESSAGE, WIRE_VERSION,
 };
 pub use listener::{ListenAddr, WireListener, DEFAULT_MAX_CONNS};
+// The simulator's `SimStream` implements the listener's transport trait
+// so simulated connections exercise the same seam as real sockets.
+pub(crate) use listener::WireStream;

@@ -1,0 +1,418 @@
+//! Simulated clients: each runs the blocking remote-client script
+//! (hello, submit everything, wait for everything, stats, bye) as a
+//! serial request/response actor, with the recovery behavior a real
+//! client needs against a faulty network — per-op response timeouts,
+//! connection teardown, exponential backoff, and an idempotent replay
+//! script rebuilt from what it knows (unacknowledged submits are
+//! resubmitted; acknowledged jobs are re-waited by id).
+//!
+//! Duplicate-tolerant by construction: a duplicated `Submitted` ack
+//! whose job id is already bound is ignored, and responses arriving
+//! while nothing is awaited are dropped as stale. One consequence of
+//! at-least-once submission is worth naming: a client that times out
+//! waiting for a lost `Submitted` ack resubmits, so the server may run
+//! the job twice. The invariants are phrased server-side (every
+//! *accepted* job terminates; stats match the job table), so the sweep
+//! verifies exactly what the protocol actually guarantees.
+
+use std::collections::VecDeque;
+use std::io::Read;
+
+use super::engine::{req_name, resp_name, ActorId, EvKind, Sim};
+use super::net::CLIENT;
+use super::SimConfig;
+use crate::server::protocol::TenantId;
+use crate::server::wire::codec::FrameBuffer;
+use crate::server::wire::{
+    codec, ErrorCode, Request, Response, WireReport, WireStatus, WIRE_VERSION,
+};
+
+/// Response deadline for request/response ops (virtual ns).
+const OP_TIMEOUT_NS: u64 = 50_000_000;
+/// Response deadline for `Wait` — must exceed any job's service time.
+const WAIT_TIMEOUT_NS: u64 = 10_000_000_000;
+/// Reconnect backoff: start and cap (doubles per retry).
+const BACKOFF_START_NS: u64 = 1_000_000;
+const BACKOFF_CAP_NS: u64 = 32_000_000;
+
+/// One step of the client script. `Submit`/`Wait` index into the
+/// client's job slots.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum Op {
+    Hello,
+    Submit(usize),
+    Wait(usize),
+    Stats,
+    Bye,
+}
+
+/// How a client saw one of its jobs end.
+pub(crate) enum JobEnd {
+    Done(WireReport),
+    Failed,
+    Cancelled,
+}
+
+pub(crate) struct ClientJob {
+    pub template: &'static str,
+    /// Server-assigned id, once a `Submitted` ack bound it.
+    pub id: Option<u64>,
+    pub end: Option<JobEnd>,
+}
+
+pub(crate) struct Client {
+    pub idx: usize,
+    pub tenant: TenantId,
+    pub conn: Option<usize>,
+    pub fb: FrameBuffer,
+    pub ops: VecDeque<Op>,
+    /// The op whose response is outstanding (front of `ops`).
+    pub awaiting: Option<Op>,
+    /// Bumped per send; lets stale `Timeout` events be recognized.
+    pub op_seq: u64,
+    pub jobs: Vec<ClientJob>,
+    pub stats_seen: bool,
+    pub backoff: u64,
+    /// Do nothing before this tick (reconnect backoff).
+    pub hold_until: u64,
+    pub done: bool,
+    /// Chunked-response reassembly buffer.
+    pub chunks: Vec<u8>,
+}
+
+impl Client {
+    pub fn new(idx: usize, cfg: &SimConfig) -> Self {
+        let mut ops = VecDeque::new();
+        ops.push_back(Op::Hello);
+        for j in 0..cfg.jobs_per_client {
+            ops.push_back(Op::Submit(j));
+        }
+        for j in 0..cfg.jobs_per_client {
+            ops.push_back(Op::Wait(j));
+        }
+        ops.push_back(Op::Stats);
+        ops.push_back(Op::Bye);
+        let jobs = (0..cfg.jobs_per_client)
+            .map(|j| ClientJob { template: (cfg.template_for)(idx, j), id: None, end: None })
+            .collect();
+        Self {
+            idx,
+            tenant: TenantId(idx as u32),
+            conn: None,
+            fb: FrameBuffer::default(),
+            ops,
+            awaiting: None,
+            op_seq: 0,
+            jobs,
+            stats_seen: false,
+            backoff: BACKOFF_START_NS,
+            hold_until: 0,
+            done: false,
+            chunks: Vec::new(),
+        }
+    }
+}
+
+fn timeout_ns(op: Op) -> u64 {
+    match op {
+        Op::Wait(_) => WAIT_TIMEOUT_NS,
+        _ => OP_TIMEOUT_NS,
+    }
+}
+
+impl Sim {
+    /// Client actor step: connect if needed, drain the inbox, handle
+    /// responses, then push the script forward.
+    pub(crate) fn step_client(&mut self, c: usize) {
+        if self.clients[c].done || self.clients[c].hold_until > self.now {
+            return;
+        }
+        if self.clients[c].conn.is_none() {
+            let conn = self.net.open(c);
+            self.clients[c].conn = Some(conn);
+            self.trace(format!("client {c}: connect (conn {conn})"));
+        }
+        let conn = self.clients[c].conn.expect("just connected");
+        let mut buf = [0u8; 4096];
+        let mut server_closed = false;
+        loop {
+            let r = {
+                let mut ws = self.net.stream(conn, CLIENT);
+                ws.read(&mut buf)
+            };
+            match r {
+                Ok(0) => {
+                    // Handle already-buffered frames before reacting to
+                    // the close.
+                    server_closed = true;
+                    break;
+                }
+                Ok(n) => self.clients[c].fb.extend(&buf[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => {
+                    self.client_disconnect(c, "connection reset");
+                    return;
+                }
+            }
+        }
+        loop {
+            let frame = match self.clients[c].fb.take_frame() {
+                Err(_) => {
+                    self.client_disconnect(c, "garbled frame");
+                    return;
+                }
+                Ok(None) => break,
+                Ok(Some(b)) => b,
+            };
+            let resp = match Response::decode(&frame) {
+                Err(_) => {
+                    self.client_disconnect(c, "undecodable response");
+                    return;
+                }
+                Ok(r) => r,
+            };
+            self.client_response(c, resp);
+            if self.clients[c].done || self.clients[c].conn != Some(conn) {
+                return;
+            }
+        }
+        if server_closed {
+            self.client_disconnect(c, "server closed");
+            return;
+        }
+        self.client_pump_send(c);
+    }
+
+    /// Handle one decoded response against the awaited op.
+    fn client_response(&mut self, c: usize, resp: Response) {
+        if let Response::Chunk { last, data } = resp {
+            self.clients[c].chunks.extend_from_slice(&data);
+            if !last {
+                return;
+            }
+            let whole = std::mem::take(&mut self.clients[c].chunks);
+            match Response::decode(&whole) {
+                Ok(Response::Chunk { .. }) | Err(_) => {
+                    self.client_disconnect(c, "bad chunked response");
+                }
+                Ok(inner) => self.client_response(c, inner),
+            }
+            return;
+        }
+        self.trace(format!("client {c}: <- {}", resp_name(&resp)));
+        let Some(await_op) = self.clients[c].awaiting else {
+            // Nothing outstanding: a duplicated or reordered leftover.
+            return;
+        };
+        match resp {
+            Response::HelloOk { .. } => {
+                if await_op == Op::Hello {
+                    self.client_complete_op(c);
+                }
+            }
+            Response::Submitted { job } => {
+                if let Op::Submit(j) = await_op {
+                    if self.clients[c].jobs.iter().any(|jb| jb.id == Some(job)) {
+                        // A duplicated ack for an already-bound job must
+                        // not complete the op we are actually awaiting.
+                        self.trace(format!("client {c}: duplicate ack for job {job} ignored"));
+                    } else {
+                        self.clients[c].jobs[j].id = Some(job);
+                        self.trace(format!("client {c}: job slot {j} bound to server job {job}"));
+                        self.client_complete_op(c);
+                    }
+                }
+            }
+            Response::Status { job, status } => {
+                if let Op::Wait(j) = await_op {
+                    if self.clients[c].jobs[j].id == Some(job) {
+                        self.client_wait_status(c, j, job, status);
+                    }
+                }
+            }
+            Response::StatsJson { .. } => {
+                if await_op == Op::Stats {
+                    self.clients[c].stats_seen = true;
+                    self.client_complete_op(c);
+                }
+            }
+            Response::Cancelled { .. } | Response::MetricsText { .. } => {}
+            Response::Error { code, aux: _, message } => {
+                if code.retryable() {
+                    self.trace(format!("client {c}: retryable error, backing off"));
+                    self.client_backoff(c);
+                } else if code == ErrorCode::NeedHello {
+                    // The server lost our handshake (e.g. a reconnect
+                    // raced a dropped Hello); redo it.
+                    self.client_disconnect(c, "handshake lost");
+                } else {
+                    self.oracle
+                        .violation(format!("client {c}: fatal wire error: {message}"));
+                    self.client_disconnect(c, "fatal error");
+                }
+            }
+            Response::Chunk { .. } => unreachable!("handled above"),
+        }
+    }
+
+    /// Resolve an awaited `Wait` from a terminal status.
+    fn client_wait_status(&mut self, c: usize, j: usize, job: u64, status: WireStatus) {
+        match status {
+            WireStatus::Done(r) => {
+                self.clients[c].jobs[j].end = Some(JobEnd::Done(r));
+                self.client_complete_op(c);
+            }
+            WireStatus::Failed(_) => {
+                self.clients[c].jobs[j].end = Some(JobEnd::Failed);
+                self.client_complete_op(c);
+            }
+            WireStatus::Cancelled => {
+                self.clients[c].jobs[j].end = Some(JobEnd::Cancelled);
+                self.client_complete_op(c);
+            }
+            WireStatus::Unknown => {
+                // The server handed out this id; forgetting it is a bug.
+                self.oracle
+                    .violation(format!("client {c}: wait on job {job} returned Unknown"));
+                self.clients[c].jobs[j].end = Some(JobEnd::Failed);
+                self.client_complete_op(c);
+            }
+            // Wait only answers terminal statuses; a non-terminal one
+            // here is a stale duplicate of an old Poll — ignore.
+            WireStatus::Queued | WireStatus::Running => {}
+        }
+    }
+
+    fn client_complete_op(&mut self, c: usize) {
+        let cl = &mut self.clients[c];
+        cl.awaiting = None;
+        cl.backoff = BACKOFF_START_NS;
+        cl.ops.pop_front();
+    }
+
+    /// Retryable rejection: clear the outstanding op (it stays at the
+    /// front of the script) and retry after the backoff.
+    fn client_backoff(&mut self, c: usize) {
+        let hold = self.now + self.clients[c].backoff;
+        let cl = &mut self.clients[c];
+        cl.awaiting = None;
+        cl.hold_until = hold;
+        cl.backoff = (cl.backoff * 2).min(BACKOFF_CAP_NS);
+        self.push(hold, EvKind::Wake(ActorId::Client(c)));
+    }
+
+    /// Send the next op of the script, if nothing is outstanding.
+    fn client_pump_send(&mut self, c: usize) {
+        if self.clients[c].awaiting.is_some()
+            || self.clients[c].done
+            || self.clients[c].hold_until > self.now
+        {
+            return;
+        }
+        let Some(conn) = self.clients[c].conn else {
+            return;
+        };
+        loop {
+            let Some(&op) = self.clients[c].ops.front() else {
+                self.clients[c].done = true;
+                return;
+            };
+            // Skip ops made moot by reconnect bookkeeping.
+            if let Op::Wait(j) = op {
+                if self.clients[c].jobs[j].end.is_some() {
+                    self.clients[c].ops.pop_front();
+                    continue;
+                }
+                if self.clients[c].jobs[j].id.is_none() {
+                    self.oracle
+                        .violation(format!("client {c}: wait scheduled for unsubmitted job {j}"));
+                    self.clients[c].ops.pop_front();
+                    continue;
+                }
+            }
+            let req = match op {
+                Op::Hello => {
+                    Request::Hello { version: WIRE_VERSION, tenant: self.clients[c].tenant.0 }
+                }
+                Op::Submit(j) => Request::Submit {
+                    template: self.clients[c].jobs[j].template.to_string(),
+                    reuse: true,
+                    args: Vec::new(),
+                },
+                Op::Wait(j) => Request::Wait { job: self.clients[c].jobs[j].id.expect("checked") },
+                Op::Stats => Request::Stats,
+                Op::Bye => Request::Bye,
+            };
+            self.trace(format!("client {c}: -> {}", req_name(&req)));
+            let sent = {
+                let mut ws = self.net.stream(conn, CLIENT);
+                codec::write_frame(&mut ws, &req.encode()).is_ok()
+            };
+            if !sent {
+                self.client_disconnect(c, "send failed");
+                return;
+            }
+            if op == Op::Bye {
+                // Fire-and-forget, then orderly close of our side.
+                self.clients[c].ops.pop_front();
+                self.clients[c].done = true;
+                self.net.conns[conn].lock().unwrap().closed[CLIENT] = true;
+                self.trace(format!("client {c}: done"));
+                return;
+            }
+            self.clients[c].awaiting = Some(op);
+            self.clients[c].op_seq += 1;
+            let op_seq = self.clients[c].op_seq;
+            self.push(self.now + timeout_ns(op), EvKind::Timeout { client: c, op_seq });
+            return;
+        }
+    }
+
+    /// Per-op response deadline expired: the request or its response is
+    /// presumed lost. Tear the connection down and replay.
+    pub(crate) fn on_timeout(&mut self, c: usize, op_seq: u64) {
+        let cl = &self.clients[c];
+        if cl.done || cl.awaiting.is_none() || cl.op_seq != op_seq {
+            return; // resolved in the meantime; stale timer
+        }
+        self.trace(format!("client {c}: response timed out"));
+        self.client_disconnect(c, "timeout");
+    }
+
+    /// Drop the connection (if any) and rebuild the script from known
+    /// state: resubmit unacknowledged jobs, re-wait bound ones, redo
+    /// stats if never seen, then leave. Backoff doubles per retry.
+    fn client_disconnect(&mut self, c: usize, why: &str) {
+        self.trace(format!("client {c}: disconnect ({why})"));
+        if let Some(conn) = self.clients[c].conn.take() {
+            self.reset_conn(conn);
+        }
+        self.reconnects += 1;
+        let now = self.now;
+        let cl = &mut self.clients[c];
+        cl.fb = FrameBuffer::default();
+        cl.chunks.clear();
+        cl.awaiting = None;
+        let mut ops: VecDeque<Op> = VecDeque::new();
+        ops.push_back(Op::Hello);
+        for (j, job) in cl.jobs.iter().enumerate() {
+            if job.id.is_none() && job.end.is_none() {
+                ops.push_back(Op::Submit(j));
+            }
+        }
+        for (j, job) in cl.jobs.iter().enumerate() {
+            if job.id.is_some() && job.end.is_none() {
+                ops.push_back(Op::Wait(j));
+            }
+        }
+        if !cl.stats_seen {
+            ops.push_back(Op::Stats);
+        }
+        ops.push_back(Op::Bye);
+        cl.ops = ops;
+        cl.hold_until = now + cl.backoff;
+        cl.backoff = (cl.backoff * 2).min(BACKOFF_CAP_NS);
+        let hold = cl.hold_until;
+        self.push(hold, EvKind::Wake(ActorId::Client(c)));
+    }
+}

@@ -1,0 +1,539 @@
+//! The discrete-event core: one min-heap of `(tick, priority, seq)`
+//! events drives every actor in the simulated deployment.
+//!
+//! `tick` is virtual nanoseconds. `priority` is drawn from a dedicated
+//! RNG stream of the root seed at push time — when several events are
+//! runnable at the same virtual instant, the seed (not insertion order)
+//! decides who goes first, which is what turns a seed sweep into an
+//! interleaving fuzzer. `seq` is a monotonic tie-break that makes the
+//! order total, so a `BinaryHeap` pop sequence is a pure function of the
+//! seed and the heap is never asked to compare equal keys.
+//!
+//! After every event the engine runs the server pumps (admission +
+//! virtual workers — the inline equivalent of the real pool's threads)
+//! and then flushes the network: bytes written by any actor during the
+//! event are sliced into frames, pushed through the fault plan, and
+//! scheduled as future `Deliver` events.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+
+use super::client::Client;
+use super::faults::{Decision, FaultCounts, FaultPlan, FaultProfile, DUP_NS, SLOW_CHUNK_NS};
+use super::net::{Net, Segment, CLIENT, SERVER};
+use super::oracle::Oracle;
+use super::server::{ConnHandler, SimServer};
+use super::SimConfig;
+use crate::coordinator::TaskId;
+use crate::server::protocol::JobStatus;
+use crate::server::wire::{Request, Response};
+use crate::util::rng::Rng;
+
+/// Base one-way network latency, virtual ns.
+pub(crate) const NET_NS: u64 = 5_000;
+
+/// `Rng::split` stream ids: every consumer of randomness gets its own
+/// child stream of the one root seed, so e.g. a fault decision can never
+/// shift a steal walk.
+pub(crate) const STREAM_STEAL: u64 = 1;
+pub(crate) const STREAM_FAULT: u64 = 2;
+pub(crate) const STREAM_INTERLEAVE: u64 = 3;
+pub(crate) const STREAM_SCHED: u64 = 4;
+
+/// Cooperatively-scheduled actors a `Wake` can target.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum ActorId {
+    /// A simulated client, by index.
+    Client(usize),
+    /// The server-side handler of a connection, by conn id.
+    Conn(usize),
+}
+
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum EvKind {
+    /// Run an actor step.
+    Wake(ActorId),
+    /// Move an in-flight segment into its destination inbox.
+    Deliver(usize),
+    /// A virtual worker finished a task.
+    TaskDone { worker: usize, slot: usize, tid: TaskId, dur: u64 },
+    /// A client's per-op response timer expired.
+    Timeout { client: usize, op_seq: u64 },
+}
+
+/// Heap entry. Ordered by `(tick, prio, seq)` only — `seq` is unique,
+/// so the order is total and consistent with equality.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Ev {
+    pub tick: u64,
+    pub prio: u64,
+    pub seq: u64,
+    pub kind: EvKind,
+}
+
+impl Ev {
+    fn key(&self) -> (u64, u64, u64) {
+        (self.tick, self.prio, self.seq)
+    }
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+
+impl Eq for Ev {}
+
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key().cmp(&other.key())
+    }
+}
+
+/// The whole simulated deployment for one seed.
+pub(crate) struct Sim {
+    pub cfg: SimConfig,
+    pub seed: u64,
+    pub now: u64,
+    seq: u64,
+    events: BinaryHeap<Reverse<Ev>>,
+    /// The interleaving fuzzer: same-tick event order comes from here.
+    fuzz: Rng,
+    pub net: Net,
+    pub plan: FaultPlan,
+    pub server: SimServer,
+    pub clients: Vec<Client>,
+    /// Server-side per-connection state, created on first delivery.
+    pub handlers: BTreeMap<usize, ConnHandler>,
+    pub oracle: Oracle,
+    pub log: Vec<String>,
+    pub events_run: u64,
+    pub reconnects: u64,
+}
+
+impl Sim {
+    pub fn new(
+        cfg: &SimConfig,
+        seed: u64,
+        profile: FaultProfile,
+        reference: Option<&BTreeMap<String, usize>>,
+    ) -> Self {
+        Self {
+            cfg: *cfg,
+            seed,
+            now: 0,
+            seq: 0,
+            events: BinaryHeap::new(),
+            fuzz: Rng::new(Rng::split(seed, STREAM_INTERLEAVE)),
+            net: Net::default(),
+            plan: FaultPlan::new(profile, Rng::split(seed, STREAM_FAULT)),
+            server: SimServer::new(cfg, seed),
+            clients: (0..cfg.clients).map(|c| Client::new(c, cfg)).collect(),
+            handlers: BTreeMap::new(),
+            oracle: Oracle::new(reference),
+            log: Vec::new(),
+            events_run: 0,
+            reconnects: 0,
+        }
+    }
+
+    pub fn trace(&mut self, msg: String) {
+        self.log.push(format!("[{:>12}] {}", self.now, msg));
+    }
+
+    /// Schedule `kind` at `tick` (clamped to the present), with its
+    /// interleaving priority drawn from the fuzz stream.
+    pub fn push(&mut self, tick: u64, kind: EvKind) {
+        let prio = self.fuzz.below(1 << 20);
+        self.seq += 1;
+        self.events.push(Reverse(Ev { tick: tick.max(self.now), prio, seq: self.seq, kind }));
+    }
+
+    /// Run to quiescence (empty heap) or the event budget.
+    pub fn run(&mut self) {
+        for c in 0..self.cfg.clients {
+            // Staggered arrivals, so seed 0 is not a fully synchronized
+            // special case.
+            self.push(c as u64 * 1_000, EvKind::Wake(ActorId::Client(c)));
+        }
+        while let Some(Reverse(ev)) = self.events.pop() {
+            self.events_run += 1;
+            if self.events_run > self.cfg.max_events {
+                self.oracle.violation(format!(
+                    "invariant 1: event budget {} exhausted at tick {} — livelock",
+                    self.cfg.max_events, self.now
+                ));
+                break;
+            }
+            self.now = self.now.max(ev.tick);
+            match ev.kind {
+                EvKind::Wake(ActorId::Client(c)) => self.step_client(c),
+                EvKind::Wake(ActorId::Conn(conn)) => self.step_conn(conn),
+                EvKind::Deliver(id) => {
+                    if let Some(seg) = self.net.take_seg(id) {
+                        let (conn, to) = (seg.conn, seg.to);
+                        self.net.deliver(seg);
+                        if to == SERVER {
+                            self.step_conn(conn);
+                        } else {
+                            let owner = self.net.owner[conn];
+                            self.step_client(owner);
+                        }
+                    }
+                }
+                EvKind::TaskDone { worker, slot, tid, dur } => {
+                    self.on_task_done(worker, slot, tid, dur)
+                }
+                EvKind::Timeout { client, op_seq } => self.on_timeout(client, op_seq),
+            }
+            self.pump();
+            self.flush_net();
+        }
+        self.finalize();
+    }
+
+    // ---- network plumbing ------------------------------------------------
+
+    /// Pull one complete length-prefixed frame (prefix included) out of
+    /// `conn`'s side-`side` outbox, or `None` if a whole frame is not
+    /// there yet. A reset connection's outbox is discarded.
+    fn take_frame_from_out(&mut self, conn: usize, side: usize) -> Option<Vec<u8>> {
+        let mut io_ = self.net.conns[conn].lock().unwrap();
+        if io_.reset {
+            io_.out[side].clear();
+            return None;
+        }
+        let buf = &mut io_.out[side];
+        if buf.len() < 4 {
+            return None;
+        }
+        let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+        if buf.len() < 4 + len {
+            return None;
+        }
+        Some(buf.drain(..4 + len).collect())
+    }
+
+    /// Slice every outbox into frames and hand each to the fault plan.
+    fn flush_net(&mut self) {
+        for conn in 0..self.net.conns.len() {
+            for side in [CLIENT, SERVER] {
+                while let Some(frame) = self.take_frame_from_out(conn, side) {
+                    self.route(conn, side, frame);
+                }
+            }
+        }
+    }
+
+    /// Decide one frame's fate and schedule its delivery events.
+    fn route(&mut self, conn: usize, from: usize, frame: Vec<u8>) {
+        let to = 1 - from;
+        let dir = if from == CLIENT { "c→s" } else { "s→c" };
+        let partitions_before = self.plan.counts.partitions;
+        let decision = self.plan.decide(self.now);
+        if self.plan.counts.partitions > partitions_before {
+            let until = self.plan.partition_until;
+            self.trace(format!("net: partition trips, heals at tick {until}"));
+        }
+        // Frames sent into a partition sit in it until the heal tick.
+        let base = if self.plan.partitioned(self.now) {
+            self.plan.partition_until + NET_NS
+        } else {
+            self.now + NET_NS
+        };
+        match decision {
+            Decision::Drop => {
+                self.trace(format!("net: conn {conn} {dir} frame dropped"));
+            }
+            Decision::Reset => {
+                self.trace(format!("net: conn {conn} reset injected"));
+                self.reset_conn(conn);
+            }
+            Decision::Deliver { extra_ns, chunks, dup, fifo, tag } => {
+                if tag != "ok" {
+                    self.trace(format!("net: conn {conn} {dir} frame {tag}"));
+                }
+                let t0 = if fifo {
+                    (base + extra_ns).max(self.net.last[conn][to] + 1)
+                } else {
+                    base + extra_ns
+                };
+                let parts = split_chunks(&frame, chunks);
+                let mut t_last = t0;
+                for (i, part) in parts.into_iter().enumerate() {
+                    let t = t0 + i as u64 * SLOW_CHUNK_NS;
+                    t_last = t;
+                    let id = self.net.push_seg(Segment { conn, to, bytes: part });
+                    self.push(t, EvKind::Deliver(id));
+                }
+                if fifo {
+                    self.net.last[conn][to] = t_last;
+                }
+                if dup {
+                    // The duplicate takes the non-FIFO path, so it can
+                    // land before or after frames sent later.
+                    let id = self.net.push_seg(Segment { conn, to, bytes: frame });
+                    self.push(base + DUP_NS, EvKind::Deliver(id));
+                }
+            }
+        }
+    }
+
+    /// Hard-kill a connection (fault-injected RST or a client giving up
+    /// on a timed-out op). Both endpoints get woken to observe it.
+    pub fn reset_conn(&mut self, conn: usize) {
+        {
+            let mut io_ = self.net.conns[conn].lock().unwrap();
+            io_.reset = true;
+            io_.out = [Vec::new(), Vec::new()];
+            io_.inbox = [Vec::new(), Vec::new()];
+        }
+        let owner = self.net.owner[conn];
+        self.push(self.now + 1, EvKind::Wake(ActorId::Conn(conn)));
+        self.push(self.now + 1, EvKind::Wake(ActorId::Client(owner)));
+    }
+
+    // ---- end-of-run checks ----------------------------------------------
+
+    /// The quiescence half of the oracle: everything the run touched
+    /// must be drained, terminal, and internally consistent.
+    fn finalize(&mut self) {
+        // Invariant 1: all server-side jobs terminal.
+        for (id, status) in &self.server.jobs {
+            if !status.is_terminal() {
+                self.oracle
+                    .violations
+                    .push(format!("invariant 1: job {id} ended non-terminal ({status:?})"));
+            }
+        }
+        // Invariant 1: all clients ran their scripts to completion and
+        // saw a terminal status for every job they own.
+        for c in &self.clients {
+            if !c.done {
+                self.oracle.violations.push(format!(
+                    "invariant 1: client {} stalled with {} op(s) left",
+                    c.idx,
+                    c.ops.len()
+                ));
+            }
+            for (j, job) in c.jobs.iter().enumerate() {
+                if job.id.is_none() {
+                    self.oracle.violations.push(format!(
+                        "invariant 1: client {} job {j} was never acknowledged",
+                        c.idx
+                    ));
+                }
+                if job.end.is_none() {
+                    self.oracle.violations.push(format!(
+                        "invariant 1: client {} job {j} never reached a terminal status",
+                        c.idx
+                    ));
+                }
+            }
+        }
+        // Invariant 3: no leaked resource holds.
+        self.oracle.check_drained();
+        // Quiescence: no live slot, busy worker, queued work, parked
+        // waiter, or in-flight bytes may survive the heap draining.
+        if let Some(slot) = self.server.slots.iter().position(Option::is_some) {
+            self.oracle.violations.push(format!("quiescence: slot {slot} still active"));
+        }
+        if let Some(w) = self.server.busy.iter().position(|b| *b) {
+            self.oracle.violations.push(format!("quiescence: worker {w} still busy"));
+        }
+        let stranded: usize = self.server.shards.lock().unwrap().iter().map(Vec::len).sum();
+        if stranded > 0 {
+            self.oracle
+                .violations
+                .push(format!("quiescence: {stranded} ready task(s) stranded in shards"));
+        }
+        let (queued, inflight) = (self.server.admission.queued(), self.server.admission.inflight());
+        if queued > 0 || inflight > 0 {
+            self.oracle.violations.push(format!(
+                "quiescence: admission not drained (queued {queued}, inflight {inflight})"
+            ));
+        }
+        if !self.server.waiters.is_empty() {
+            self.oracle
+                .violations
+                .push(format!("quiescence: {} waiter entry(ies) left", self.server.waiters.len()));
+        }
+        let in_flight = self.net.in_flight();
+        if in_flight > 0 {
+            self.oracle
+                .violations
+                .push(format!("quiescence: {in_flight} network segment(s) in flight"));
+        }
+        // Invariant 4: the stats snapshot must agree with the job table.
+        let snap = self.server.stats.snapshot();
+        let mut want: BTreeMap<u32, (u64, u64, u64)> = BTreeMap::new();
+        for (id, status) in &self.server.jobs {
+            let t = self.server.tenant_of.get(id).map(|t| t.0).unwrap_or(u32::MAX);
+            let e = want.entry(t).or_default();
+            match status {
+                JobStatus::Done(r) => {
+                    e.0 += 1;
+                    e.2 += r.tasks_run as u64;
+                }
+                JobStatus::Failed(_) => e.1 += 1,
+                _ => {}
+            }
+        }
+        for row in &snap.tenants {
+            let (completed, failed, tasks) = want.remove(&row.tenant.0).unwrap_or((0, 0, 0));
+            if row.completed != completed || row.failed != failed || row.tasks_run != tasks {
+                self.oracle.violations.push(format!(
+                    "invariant 4: tenant {} stats (completed {}, failed {}, tasks {}) != \
+                     job table (completed {completed}, failed {failed}, tasks {tasks})",
+                    row.tenant.0, row.completed, row.failed, row.tasks_run
+                ));
+            }
+        }
+        for (tenant, (completed, failed, _)) in want {
+            if completed + failed > 0 {
+                self.oracle.violations.push(format!(
+                    "invariant 4: tenant {tenant} has terminal jobs but no stats row"
+                ));
+            }
+        }
+    }
+}
+
+/// Split a frame into up to `n` non-empty contiguous chunks.
+fn split_chunks(frame: &[u8], n: u32) -> Vec<Vec<u8>> {
+    let n = (n as usize).clamp(1, frame.len().max(1));
+    let size = frame.len().div_ceil(n).max(1);
+    frame.chunks(size).map(<[u8]>::to_vec).collect()
+}
+
+/// Short deterministic names for the event log: variants only, never
+/// payloads (payload bytes could smuggle nondeterminism into the log).
+pub(crate) fn req_name(r: &Request) -> &'static str {
+    match r {
+        Request::Hello { .. } => "Hello",
+        Request::Submit { .. } => "Submit",
+        Request::Poll { .. } => "Poll",
+        Request::Wait { .. } => "Wait",
+        Request::Cancel { .. } => "Cancel",
+        Request::Stats => "Stats",
+        Request::Metrics => "Metrics",
+        Request::Bye => "Bye",
+    }
+}
+
+pub(crate) fn resp_name(r: &Response) -> &'static str {
+    match r {
+        Response::HelloOk { .. } => "HelloOk",
+        Response::Submitted { .. } => "Submitted",
+        Response::Status { .. } => "Status",
+        Response::Cancelled { .. } => "Cancelled",
+        Response::StatsJson { .. } => "StatsJson",
+        Response::MetricsText { .. } => "MetricsText",
+        Response::Chunk { .. } => "Chunk",
+        Response::Error { .. } => "Error",
+    }
+}
+
+/// Everything one seed produced. `log` is byte-identical across runs of
+/// the same `(scenario, seed, profile)` — that is the determinism
+/// contract `repro sim` and the CI sweep rely on.
+pub struct SimOutcome {
+    pub seed: u64,
+    pub profile: FaultProfile,
+    /// Oracle violations; empty = the seed passed.
+    pub violations: Vec<String>,
+    /// The deterministic event log.
+    pub log: Vec<String>,
+    pub faults: FaultCounts,
+    /// Events executed.
+    pub events: u64,
+    /// Virtual time at quiescence, ns.
+    pub end_ns: u64,
+    /// Client reconnects (timeout / reset recoveries).
+    pub reconnects: u64,
+    /// Per-tenant `(tenant, completed, failed, tasks_run)` from the
+    /// server's stats snapshot.
+    pub tenants: Vec<(u32, u64, u64, u64)>,
+    /// Template → tasks per job, as observed by the oracle.
+    pub observed: BTreeMap<String, usize>,
+    /// Sorted `(tenant, tasks_run)` of every client job that completed —
+    /// directly comparable with a real loopback run of the same
+    /// scenario.
+    pub statuses: Vec<(u32, usize)>,
+}
+
+impl SimOutcome {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// The event log plus any violations, as one artifact string.
+    pub fn log_text(&self) -> String {
+        let mut s = String::new();
+        for line in &self.log {
+            s.push_str(line);
+            s.push('\n');
+        }
+        for v in &self.violations {
+            s.push_str("VIOLATION: ");
+            s.push_str(v);
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Simulate one seed of `cfg` under `profile`. `reference` supplies the
+/// fault-free per-template task counts for invariant 2 (pass `None`
+/// when running the reference itself).
+pub fn run_seed(
+    cfg: &SimConfig,
+    seed: u64,
+    profile: FaultProfile,
+    reference: Option<&BTreeMap<String, usize>>,
+) -> SimOutcome {
+    let mut sim = Sim::new(cfg, seed, profile, reference);
+    sim.trace(format!(
+        "sim: seed {seed} profile {} ({} clients x {} jobs, {} workers)",
+        profile.name(),
+        cfg.clients,
+        cfg.jobs_per_client,
+        cfg.workers
+    ));
+    sim.run();
+    let snap = sim.server.stats.snapshot();
+    let tenants: Vec<(u32, u64, u64, u64)> = snap
+        .tenants
+        .iter()
+        .map(|t| (t.tenant.0, t.completed, t.failed, t.tasks_run))
+        .collect();
+    let mut statuses: Vec<(u32, usize)> = Vec::new();
+    for c in &sim.clients {
+        for job in &c.jobs {
+            if let Some(super::client::JobEnd::Done(r)) = &job.end {
+                statuses.push((c.tenant.0, r.tasks_run as usize));
+            }
+        }
+    }
+    statuses.sort_unstable();
+    SimOutcome {
+        seed,
+        profile,
+        violations: std::mem::take(&mut sim.oracle.violations),
+        log: std::mem::take(&mut sim.log),
+        faults: sim.plan.counts,
+        events: sim.events_run,
+        end_ns: sim.now,
+        reconnects: sim.reconnects,
+        tenants,
+        observed: sim.oracle.observed.clone(),
+        statuses,
+    }
+}

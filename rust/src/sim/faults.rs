@@ -1,0 +1,356 @@
+//! Fault plans: seeded, budgeted network-fault injection.
+//!
+//! Every complete frame the simulated network extracts is routed through
+//! a [`FaultPlan`], which decides — from its own RNG stream of the root
+//! seed — whether the frame is dropped, duplicated, reordered, delivered
+//! in slow staggered chunks (exercising short reads), turned into a
+//! connection reset, or deferred behind a partition. Two properties make
+//! sweeps useful rather than flaky:
+//!
+//! * **Forced coverage**: each profile guarantees its fault class fires
+//!   at least once within the first few segments, so a pinned seed test
+//!   covers its class by construction, not by luck.
+//! * **Bounded chaos**: injections stop after a per-run budget and
+//!   partitions always heal, so every run terminates — a hang is a real
+//!   bug, never an artifact of infinite fault pressure.
+
+use crate::util::rng::Rng;
+
+/// Extra latency of a reordered frame beyond the base network delay.
+pub(crate) const REORDER_NS: u64 = 15_000;
+/// Stagger between the chunks of a slow delivery.
+pub(crate) const SLOW_CHUNK_NS: u64 = 2_000;
+/// Chunks a slow delivery is split into (forces short reads).
+pub(crate) const SLOW_CHUNKS: u32 = 4;
+/// Extra latency of a duplicated copy (delivered out of FIFO order).
+pub(crate) const DUP_NS: u64 = 9_000;
+/// How long a partition lasts before it heals.
+pub(crate) const PARTITION_NS: u64 = 400_000;
+
+/// Which fault class a sweep injects. `Chaos` mixes all of them.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum FaultProfile {
+    /// No faults: the reference profile.
+    None,
+    /// Frames vanish.
+    Drop,
+    /// Frames arrive twice (the copy out of order).
+    Dup,
+    /// Frames overtake each other.
+    Reorder,
+    /// Frames arrive in staggered chunks (short reads).
+    Slow,
+    /// Connections die with a reset.
+    Reset,
+    /// The network splits, then heals.
+    Partition,
+    /// Everything above, mixed.
+    Chaos,
+}
+
+/// Every non-`None` profile, in the order CI sweeps them.
+pub const ALL_PROFILES: [FaultProfile; 7] = [
+    FaultProfile::Drop,
+    FaultProfile::Dup,
+    FaultProfile::Reorder,
+    FaultProfile::Slow,
+    FaultProfile::Reset,
+    FaultProfile::Partition,
+    FaultProfile::Chaos,
+];
+
+impl FaultProfile {
+    /// Parse a CLI/CI profile name.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "none" => Self::None,
+            "drop" => Self::Drop,
+            "dup" => Self::Dup,
+            "reorder" => Self::Reorder,
+            "slow" => Self::Slow,
+            "reset" => Self::Reset,
+            "partition" => Self::Partition,
+            "chaos" => Self::Chaos,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::Drop => "drop",
+            Self::Dup => "dup",
+            Self::Reorder => "reorder",
+            Self::Slow => "slow",
+            Self::Reset => "reset",
+            Self::Partition => "partition",
+            Self::Chaos => "chaos",
+        }
+    }
+}
+
+/// Injection tally, per class. Summed across a sweep to prove coverage.
+#[derive(Clone, Copy, Default, Debug)]
+pub struct FaultCounts {
+    pub drops: u64,
+    pub dups: u64,
+    pub reorders: u64,
+    pub slows: u64,
+    pub resets: u64,
+    pub partitions: u64,
+}
+
+impl FaultCounts {
+    pub fn total(&self) -> u64 {
+        self.drops + self.dups + self.reorders + self.slows + self.resets + self.partitions
+    }
+
+    pub fn merge(&mut self, o: &FaultCounts) {
+        self.drops += o.drops;
+        self.dups += o.dups;
+        self.reorders += o.reorders;
+        self.slows += o.slows;
+        self.resets += o.resets;
+        self.partitions += o.partitions;
+    }
+
+    /// `(class name, count)` pairs, for reporting.
+    pub fn classes(&self) -> [(&'static str, u64); 6] {
+        [
+            ("drop", self.drops),
+            ("dup", self.dups),
+            ("reorder", self.reorders),
+            ("slow", self.slows),
+            ("reset", self.resets),
+            ("partition", self.partitions),
+        ]
+    }
+
+    /// Count for one class, by profile (used by pinned-seed tests).
+    pub fn for_profile(&self, p: FaultProfile) -> u64 {
+        match p {
+            FaultProfile::None => 0,
+            FaultProfile::Drop => self.drops,
+            FaultProfile::Dup => self.dups,
+            FaultProfile::Reorder => self.reorders,
+            FaultProfile::Slow => self.slows,
+            FaultProfile::Reset => self.resets,
+            FaultProfile::Partition => self.partitions,
+            FaultProfile::Chaos => self.total(),
+        }
+    }
+}
+
+/// What the plan decided for one frame.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Decision {
+    /// Frame vanishes.
+    Drop,
+    /// Connection is reset; the frame dies with it.
+    Reset,
+    /// Frame is delivered.
+    Deliver {
+        /// Latency beyond the base network delay.
+        extra_ns: u64,
+        /// Number of staggered chunks (1 = whole frame at once).
+        chunks: u32,
+        /// Also deliver a duplicate copy (out of FIFO order).
+        dup: bool,
+        /// FIFO-clamped behind earlier deliveries on the same
+        /// connection/side; reordered frames opt out.
+        fifo: bool,
+        /// Class name for the event log (`"ok"` when clean).
+        tag: &'static str,
+    },
+}
+
+pub(crate) const CLEAN: Decision =
+    Decision::Deliver { extra_ns: 0, chunks: 1, dup: false, fifo: true, tag: "ok" };
+
+/// Classes eligible for probabilistic/forced injection, in forced order.
+const CLASSES: [FaultProfile; 5] = [
+    FaultProfile::Reset,
+    FaultProfile::Drop,
+    FaultProfile::Dup,
+    FaultProfile::Reorder,
+    FaultProfile::Slow,
+];
+
+/// Per-seed fault schedule. One plan per run; it owns its RNG stream so
+/// fault choices never perturb the interleaving stream (and vice versa).
+pub(crate) struct FaultPlan {
+    profile: FaultProfile,
+    rng: Rng,
+    pub counts: FaultCounts,
+    /// Segments seen so far (drives forced injection and partition start).
+    segs: u64,
+    /// Injections remaining (partitions are not budgeted).
+    budget: u64,
+    /// Segment index at which the partition trips (`u64::MAX` = never).
+    partition_at: u64,
+    /// Virtual tick at which a tripped partition heals.
+    pub partition_until: u64,
+}
+
+impl FaultPlan {
+    pub fn new(profile: FaultProfile, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let budget = match profile {
+            FaultProfile::None | FaultProfile::Partition => 0,
+            FaultProfile::Chaos => 48,
+            _ => 24,
+        };
+        let partition_at = match profile {
+            FaultProfile::Partition => 6 + rng.below(8),
+            FaultProfile::Chaos => 10 + rng.below(24),
+            _ => u64::MAX,
+        };
+        Self {
+            profile,
+            rng,
+            counts: FaultCounts::default(),
+            segs: 0,
+            budget,
+            partition_at,
+            partition_until: 0,
+        }
+    }
+
+    /// True while the partition is tripped at `now`.
+    pub fn partitioned(&self, now: u64) -> bool {
+        now < self.partition_until
+    }
+
+    /// Per-mille injection probability for `class` under this profile.
+    fn permille(&self, class: FaultProfile) -> u64 {
+        match self.profile {
+            FaultProfile::Chaos => match class {
+                FaultProfile::Reset => 20,
+                FaultProfile::Drop => 80,
+                FaultProfile::Dup => 60,
+                FaultProfile::Reorder => 80,
+                FaultProfile::Slow => 100,
+                _ => 0,
+            },
+            p if p == class => {
+                if class == FaultProfile::Reset {
+                    80
+                } else {
+                    250
+                }
+            }
+            _ => 0,
+        }
+    }
+
+    /// Segment index by which `class` must have fired at least once.
+    fn force_at(&self, idx: usize, class: FaultProfile) -> u64 {
+        if self.profile == FaultProfile::Chaos {
+            3 + 2 * idx as u64
+        } else if self.profile == class {
+            2
+        } else {
+            u64::MAX
+        }
+    }
+
+    fn count_for(&self, class: FaultProfile) -> u64 {
+        match class {
+            FaultProfile::Reset => self.counts.resets,
+            FaultProfile::Drop => self.counts.drops,
+            FaultProfile::Dup => self.counts.dups,
+            FaultProfile::Reorder => self.counts.reorders,
+            FaultProfile::Slow => self.counts.slows,
+            _ => 0,
+        }
+    }
+
+    fn bump(&mut self, class: FaultProfile) {
+        match class {
+            FaultProfile::Reset => self.counts.resets += 1,
+            FaultProfile::Drop => self.counts.drops += 1,
+            FaultProfile::Dup => self.counts.dups += 1,
+            FaultProfile::Reorder => self.counts.reorders += 1,
+            FaultProfile::Slow => self.counts.slows += 1,
+            _ => {}
+        }
+    }
+
+    fn inject(&mut self, class: FaultProfile) -> Decision {
+        self.bump(class);
+        self.budget = self.budget.saturating_sub(1);
+        match class {
+            FaultProfile::Reset => Decision::Reset,
+            FaultProfile::Drop => Decision::Drop,
+            FaultProfile::Dup => Decision::Deliver {
+                extra_ns: 0,
+                chunks: 1,
+                dup: true,
+                fifo: true,
+                tag: "dup",
+            },
+            FaultProfile::Reorder => Decision::Deliver {
+                extra_ns: REORDER_NS + self.rng.below(REORDER_NS),
+                chunks: 1,
+                dup: false,
+                fifo: false,
+                tag: "reorder",
+            },
+            _ => Decision::Deliver {
+                extra_ns: 0,
+                chunks: SLOW_CHUNKS,
+                dup: false,
+                fifo: true,
+                tag: "slow",
+            },
+        }
+    }
+
+    /// Decide the fate of the next frame at virtual time `now`.
+    ///
+    /// At most one class fires per frame. Partition trips on segment
+    /// count and defers everything (callers check [`Self::partitioned`]
+    /// and [`Self::partition_until`]); after the budget runs dry every
+    /// frame is delivered cleanly, which guarantees termination.
+    pub fn decide(&mut self, now: u64) -> Decision {
+        let seg = self.segs;
+        self.segs += 1;
+        if self.profile == FaultProfile::None {
+            return CLEAN;
+        }
+        // Trip the partition once its segment threshold passes.
+        if seg >= self.partition_at {
+            self.partition_at = u64::MAX;
+            self.partition_until = now + PARTITION_NS;
+            self.counts.partitions += 1;
+        }
+        if self.partitioned(now) {
+            // The frame itself survives; the network layer holds it (and
+            // everything behind it) until the heal tick.
+            return CLEAN;
+        }
+        // Forced coverage first: any class still at zero past its
+        // deadline fires now, deterministically.
+        for (idx, class) in CLASSES.iter().enumerate() {
+            if self.permille(*class) > 0
+                && self.count_for(*class) == 0
+                && seg >= self.force_at(idx, *class)
+            {
+                return self.inject(*class);
+            }
+        }
+        if self.budget == 0 {
+            return CLEAN;
+        }
+        // Probabilistic injection: one dice roll per class in fixed
+        // order, first hit wins. The plan owns its RNG stream, so the
+        // same seed always replays the same schedule.
+        for class in CLASSES {
+            let p = self.permille(class);
+            if p > 0 && self.rng.below(1_000) < p {
+                return self.inject(class);
+            }
+        }
+        CLEAN
+    }
+}

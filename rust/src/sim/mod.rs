@@ -1,0 +1,217 @@
+//! Deterministic simulation testing (DST): the whole server — admission,
+//! registry, scheduler, shard dispatch, wire protocol, clients — run as a
+//! single-threaded discrete-event simulation under virtual time, with
+//! network faults injected from a seeded PRNG.
+//!
+//! This grows the `run_virtual`/`run_virtual_sharded` twins
+//! (`server/pool.rs`) into a FoundationDB-style simulator: every thread
+//! of the real system becomes a cooperatively-scheduled *actor* (clients,
+//! per-connection handlers, virtual workers) driven by one min-heap of
+//! `(tick, priority, seq)` events. The priority of every scheduled event
+//! is drawn from a seeded RNG — that is the *interleaving fuzzer*: one
+//! `u64` seed fully determines which actor runs first whenever several
+//! are runnable at the same virtual instant, so any schedule the sweep
+//! finds is replayable byte-for-byte from its seed.
+//!
+//! The pieces that matter are **real**: the simulation drives the actual
+//! [`FairQueue`](crate::server::FairQueue) admission policy, the actual
+//! [`Registry`] template pool, the actual
+//! [`Scheduler`](crate::coordinator::Scheduler)
+//! (`reset_run`/`start`/`try_acquire`/`complete` — the paper's conflict
+//! protocol), and the actual wire codec. Only the *substrates* are
+//! simulated: time (a virtual clock), the network
+//! (`SimStream` implements the listener's `WireStream` seam, with
+//! frame-granular fault injection: drops, duplicates, reorders,
+//! slow/short reads, connection resets, partition-then-heal), and task
+//! execution (durations from a [`CostModel`](crate::coordinator::CostModel);
+//! kernels are not run — the oracle's task-count invariants are
+//! structural, so they hold regardless).
+//!
+//! Per seed, the oracle asserts the four DST invariants:
+//! 1. every job the server accepted reaches a terminal status
+//!    (no lost jobs, no stuck clients, no livelock past the event budget);
+//! 2. per-job task counts match a fault-free reference run of the same
+//!    scenario (and are internally consistent per template);
+//! 3. no resource is ever held by two tasks at once — the paper's
+//!    conflict guarantee, re-checked from an independent shadow ledger of
+//!    `locks_of` sets;
+//! 4. stats/invoice invariants: per-tenant `completed`/`failed`/
+//!    `tasks_run` in the [`ServerStats`](crate::server::ServerStats)
+//!    snapshot equal the same quantities recomputed from the job table,
+//!    and every slot, shard, worker and admission counter is quiescent at
+//!    the end.
+//!
+//! Entry points: [`run_seed`] (one seed), [`run_sweep`] (a seed window —
+//! what the CI `dst-sweep` gate runs via `repro sim --seeds A..B`). See
+//! ARCHITECTURE.md §Simulation for the actor model and the fault-plan
+//! grammar, and README.md for replaying a CI-reported seed.
+
+mod client;
+mod engine;
+mod faults;
+mod net;
+mod oracle;
+mod server;
+
+use std::collections::BTreeMap;
+
+use crate::server::{nbody_template, qr_template, synthetic_template, Registry};
+
+pub use engine::{run_seed, SimOutcome};
+pub use faults::{FaultCounts, FaultProfile, ALL_PROFILES};
+
+/// Scenario description: how many actors, which templates, and how much
+/// work. Function pointers (not closures) keep the config `Copy` and the
+/// scenario nameable from the CLI.
+#[derive(Clone, Copy)]
+pub struct SimConfig {
+    /// Virtual workers (also the shard count, as in the real pool).
+    pub workers: usize,
+    /// Admission in-flight cap (`ServerConfig::max_inflight`).
+    pub max_inflight: usize,
+    /// Registry instance-pool depth (`ServerConfig::max_pool`).
+    pub max_pool: usize,
+    /// Simulated clients (one tenant each).
+    pub clients: usize,
+    /// Jobs each client submits.
+    pub jobs_per_client: usize,
+    /// Registers the scenario's templates on a fresh registry.
+    pub setup: fn(&Registry),
+    /// Template for job `j` of client `c`.
+    pub template_for: fn(c: usize, j: usize) -> &'static str,
+    /// Hard event budget per seed; exceeding it is an invariant-1
+    /// violation (livelock detector).
+    pub max_events: u64,
+}
+
+fn small_setup(r: &Registry) {
+    r.register("syn", synthetic_template(28, 4, 0xFEED, 500));
+    r.register("qr", qr_template(3, 4, 0xFEED));
+}
+
+fn small_template_for(_c: usize, j: usize) -> &'static str {
+    if j % 2 == 0 {
+        "syn"
+    } else {
+        "qr"
+    }
+}
+
+fn remote_setup(r: &Registry) {
+    r.register("qr", qr_template(4, 8, 0xFEED));
+    r.register("nbody", nbody_template(1_500, 60, 96, 0xFEED));
+}
+
+fn remote_template_for(_c: usize, j: usize) -> &'static str {
+    if j % 2 == 0 {
+        "qr"
+    } else {
+        "nbody"
+    }
+}
+
+impl SimConfig {
+    /// The sweep scenario: small graphs, 3 clients × 4 jobs — fast
+    /// enough to run hundreds of seeds per CI job.
+    pub fn small() -> Self {
+        Self {
+            workers: 2,
+            max_inflight: 4,
+            max_pool: 4,
+            clients: 3,
+            jobs_per_client: 4,
+            setup: small_setup,
+            template_for: small_template_for,
+            max_events: 300_000,
+        }
+    }
+
+    /// The PR-4 `remote.rs` acceptance scenario: 4 clients × 16 jobs
+    /// over the qr + nbody templates — the zero-fault equivalence
+    /// baseline against the real loopback run.
+    pub fn remote_scenario() -> Self {
+        Self {
+            workers: 2,
+            max_inflight: 4,
+            max_pool: 4,
+            clients: 4,
+            jobs_per_client: 16,
+            setup: remote_setup,
+            template_for: remote_template_for,
+            max_events: 2_000_000,
+        }
+    }
+
+    /// Parse a scenario name (`small` | `remote`).
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "small" => Some(Self::small()),
+            "remote" => Some(Self::remote_scenario()),
+            _ => None,
+        }
+    }
+}
+
+/// Result of sweeping a seed window under one fault profile.
+pub struct SweepReport {
+    pub profile: FaultProfile,
+    /// Seeds run (the `lo..hi` window size).
+    pub seeds: u64,
+    pub passed: u64,
+    /// Fault injections aggregated across the window.
+    pub faults: FaultCounts,
+    /// Outcomes of failing seeds, in seed order. Event logs are kept for
+    /// the first few (see [`MAX_FAILURE_LOGS`]) and truncated after.
+    pub failures: Vec<SimOutcome>,
+    /// Per-template per-job task counts of the fault-free reference run.
+    pub reference: BTreeMap<String, usize>,
+}
+
+/// Failing seeds whose full event log is retained in a [`SweepReport`].
+pub const MAX_FAILURE_LOGS: usize = 4;
+
+impl SweepReport {
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// Seeds of the failing runs.
+    pub fn failing_seeds(&self) -> Vec<u64> {
+        self.failures.iter().map(|o| o.seed).collect()
+    }
+}
+
+/// Sweep seeds `lo..hi` under `profile`. A fault-free reference run
+/// (seed `lo`, [`FaultProfile::None`]) is executed first to pin the
+/// per-template task counts every faulted run must reproduce; if the
+/// reference itself violates an invariant, the sweep reports that single
+/// failure and stops.
+pub fn run_sweep(cfg: &SimConfig, lo: u64, hi: u64, profile: FaultProfile) -> SweepReport {
+    let reference = run_seed(cfg, lo, FaultProfile::None, None);
+    let ref_counts = reference.observed.clone();
+    let mut report = SweepReport {
+        profile,
+        seeds: hi.saturating_sub(lo),
+        passed: 0,
+        faults: FaultCounts::default(),
+        failures: Vec::new(),
+        reference: ref_counts,
+    };
+    if !reference.ok() {
+        report.failures.push(reference);
+        return report;
+    }
+    for seed in lo..hi {
+        let mut outcome = run_seed(cfg, seed, profile, Some(&report.reference));
+        report.faults.merge(&outcome.faults);
+        if outcome.ok() {
+            report.passed += 1;
+        } else {
+            if report.failures.len() >= MAX_FAILURE_LOGS {
+                outcome.log.clear();
+            }
+            report.failures.push(outcome);
+        }
+    }
+    report
+}

@@ -1,0 +1,149 @@
+//! The simulated network: in-memory duplex connections whose endpoints
+//! implement the listener's `WireStream` seam.
+//!
+//! A connection is a pair of byte pipes. Each side writes into its
+//! *outbox*; the engine scans outboxes after every event, slices them
+//! into complete length-prefixed frames, routes each frame through the
+//! fault plan, and schedules `Deliver` events that move the (possibly
+//! chunked) bytes into the peer's *inbox*. Reads drain the inbox and
+//! surface exactly the errors real sockets produce: `WouldBlock` when
+//! nothing has arrived, `Ok(0)` when the peer closed cleanly, and
+//! `ConnectionReset` after a fault-injected RST. Nothing here knows
+//! about frames beyond the 4-byte length prefix — reassembly is the
+//! receiver's `FrameBuffer`, same as over TCP.
+
+use std::io::{self, Read, Write};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::server::wire::WireStream;
+
+/// Side index of the client endpoint.
+pub(crate) const CLIENT: usize = 0;
+/// Side index of the server endpoint.
+pub(crate) const SERVER: usize = 1;
+
+/// Shared state of one duplex connection.
+#[derive(Default)]
+pub(crate) struct ConnIo {
+    /// Bytes written by each side, not yet sliced into frames.
+    pub out: [Vec<u8>; 2],
+    /// Bytes delivered to each side, not yet read.
+    pub inbox: [Vec<u8>; 2],
+    /// A reset tears both directions down at once.
+    pub reset: bool,
+    /// Orderly close, per side (half-close semantics).
+    pub closed: [bool; 2],
+}
+
+/// One endpoint of a simulated connection. Implements the `WireStream`
+/// transport trait, so the codec and dispatch code paths it exercises
+/// are byte-for-byte the ones real sockets run.
+pub(crate) struct SimStream {
+    io: Arc<Mutex<ConnIo>>,
+    side: usize,
+}
+
+impl Read for SimStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let mut io_ = self.io.lock().unwrap();
+        if io_.reset {
+            return Err(io::Error::new(io::ErrorKind::ConnectionReset, "sim: connection reset"));
+        }
+        if io_.inbox[self.side].is_empty() {
+            if io_.closed[1 - self.side] {
+                return Ok(0);
+            }
+            return Err(io::Error::new(io::ErrorKind::WouldBlock, "sim: no bytes yet"));
+        }
+        let n = buf.len().min(io_.inbox[self.side].len());
+        buf[..n].copy_from_slice(&io_.inbox[self.side][..n]);
+        io_.inbox[self.side].drain(..n);
+        Ok(n)
+    }
+}
+
+impl Write for SimStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let mut io_ = self.io.lock().unwrap();
+        if io_.reset || io_.closed[self.side] {
+            return Err(io::Error::new(io::ErrorKind::BrokenPipe, "sim: connection gone"));
+        }
+        io_.out[self.side].extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+impl WireStream for SimStream {
+    fn set_read_timeout_opt(&self, _d: Option<Duration>) -> io::Result<()> {
+        // Virtual time has no blocking reads; timeouts are events.
+        Ok(())
+    }
+}
+
+/// A frame (or chunk of one) in flight: scheduled for delivery into
+/// `conn`'s side-`to` inbox. Payloads live here, indexed by segment id,
+/// so heap events stay `Copy`-sized and totally ordered.
+pub(crate) struct Segment {
+    pub conn: usize,
+    pub to: usize,
+    pub bytes: Vec<u8>,
+}
+
+/// All simulated connections plus the in-flight segment table.
+#[derive(Default)]
+pub(crate) struct Net {
+    pub conns: Vec<Arc<Mutex<ConnIo>>>,
+    /// Which client actor owns each connection.
+    pub owner: Vec<usize>,
+    /// In-flight segments; slots are freed on delivery.
+    segs: Vec<Option<Segment>>,
+    /// Latest scheduled FIFO delivery tick per `[conn][to]` — later
+    /// FIFO frames are clamped behind it so ordinary traffic stays
+    /// ordered while reordered/duplicated copies may overtake.
+    pub last: Vec<[u64; 2]>,
+}
+
+impl Net {
+    /// Open a connection for client `owner`; returns its conn id.
+    pub fn open(&mut self, owner: usize) -> usize {
+        self.conns.push(Arc::new(Mutex::new(ConnIo::default())));
+        self.owner.push(owner);
+        self.last.push([0, 0]);
+        self.conns.len() - 1
+    }
+
+    /// Endpoint handle for `side` of connection `conn`.
+    pub fn stream(&self, conn: usize, side: usize) -> SimStream {
+        SimStream { io: Arc::clone(&self.conns[conn]), side }
+    }
+
+    /// Park a segment; returns the id a `Deliver` event will carry.
+    pub fn push_seg(&mut self, seg: Segment) -> usize {
+        self.segs.push(Some(seg));
+        self.segs.len() - 1
+    }
+
+    pub fn take_seg(&mut self, id: usize) -> Option<Segment> {
+        self.segs.get_mut(id).and_then(Option::take)
+    }
+
+    /// True if any segment is still in flight (quiescence check).
+    pub fn in_flight(&self) -> usize {
+        self.segs.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Move a segment's bytes into the destination inbox. Bytes sent to
+    /// a reset connection vanish, exactly as on a real RST.
+    pub fn deliver(&mut self, seg: Segment) {
+        let mut io_ = self.conns[seg.conn].lock().unwrap();
+        if io_.reset {
+            return;
+        }
+        io_.inbox[seg.to].extend_from_slice(&seg.bytes);
+    }
+}

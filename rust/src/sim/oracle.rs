@@ -1,0 +1,110 @@
+//! The invariant oracle: an independent shadow ledger checked during and
+//! after every simulated run.
+//!
+//! The oracle never trusts the scheduler's own bookkeeping. It records
+//! resource holds from `locks_of` at acquire/release time and re-derives
+//! every end-of-run quantity (job counts, per-tenant stats) from first
+//! principles, so a bug in the component under test cannot also hide the
+//! evidence. Violations are strings — each one carries enough context to
+//! debug from the event log alone.
+
+use std::collections::BTreeMap;
+
+/// Shadow ledger + violation sink for one simulated run.
+pub(crate) struct Oracle {
+    /// `(slot, resource)` → task currently holding it. Invariant 3: an
+    /// insert that finds the key occupied is a conflict-exclusion bug.
+    held: BTreeMap<(usize, u32), u32>,
+    /// `(slot, task)` → resources it holds, so release needs no
+    /// scheduler query.
+    locks: BTreeMap<(usize, u32), Vec<u32>>,
+    /// Template → tasks per completed job. Invariant 2: constant within
+    /// a run and equal to the fault-free reference.
+    pub observed: BTreeMap<String, usize>,
+    /// Reference counts from the fault-free run, when sweeping.
+    reference: Option<BTreeMap<String, usize>>,
+    pub violations: Vec<String>,
+}
+
+impl Oracle {
+    pub fn new(reference: Option<&BTreeMap<String, usize>>) -> Self {
+        Self {
+            held: BTreeMap::new(),
+            locks: BTreeMap::new(),
+            observed: BTreeMap::new(),
+            reference: reference.cloned(),
+            violations: Vec::new(),
+        }
+    }
+
+    pub fn violation(&mut self, msg: String) {
+        self.violations.push(msg);
+    }
+
+    /// Task `tid` in slot `slot` acquired `rids` (from `locks_of`).
+    pub fn on_start(&mut self, slot: usize, tid: u32, rids: &[u32]) {
+        for &rid in rids {
+            if let Some(prev) = self.held.insert((slot, rid), tid) {
+                self.violation(format!(
+                    "invariant 3: slot {slot} resource {rid} held by task {prev} \
+                     while task {tid} acquired it"
+                ));
+            }
+        }
+        self.locks.insert((slot, tid), rids.to_vec());
+    }
+
+    /// Task `tid` in slot `slot` completed; release its holds.
+    pub fn on_end(&mut self, slot: usize, tid: u32) {
+        let rids = self.locks.remove(&(slot, tid)).unwrap_or_default();
+        for rid in rids {
+            if self.held.remove(&(slot, rid)).is_none() {
+                self.violation(format!(
+                    "invariant 3: slot {slot} task {tid} released resource {rid} it never held"
+                ));
+            }
+        }
+    }
+
+    /// A job of `template` finished having run `tasks_run` tasks.
+    pub fn on_job_done(&mut self, template: &str, tasks_run: usize) {
+        match self.observed.get(template) {
+            Some(&prev) if prev != tasks_run => self.violation(format!(
+                "invariant 2: template {template} ran {tasks_run} tasks, \
+                 earlier job in this run ran {prev}"
+            )),
+            Some(_) => {}
+            None => {
+                self.observed.insert(template.to_string(), tasks_run);
+                if let Some(reference) = &self.reference {
+                    match reference.get(template) {
+                        Some(&want) if want != tasks_run => self.violation(format!(
+                            "invariant 2: template {template} ran {tasks_run} tasks, \
+                             fault-free reference ran {want}"
+                        )),
+                        Some(_) => {}
+                        None => self.violation(format!(
+                            "invariant 2: template {template} absent from reference run"
+                        )),
+                    }
+                }
+            }
+        }
+    }
+
+    /// End of run: no resource may still be held.
+    pub fn check_drained(&mut self) {
+        if !self.held.is_empty() {
+            let leftover: Vec<String> = self
+                .held
+                .iter()
+                .map(|((slot, rid), tid)| format!("slot {slot} res {rid} by task {tid}"))
+                .collect();
+            self.violation(format!(
+                "invariant 3: {} resource hold(s) leaked at end of run: {}",
+                leftover.len(),
+                leftover.join(", ")
+            ));
+        }
+    }
+}

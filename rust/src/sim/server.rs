@@ -1,0 +1,641 @@
+//! The simulated server: the real admission queue, template registry,
+//! scheduler, and wire dispatch — with the pool's threads replaced by
+//! virtual workers pumped inline after every event.
+//!
+//! `drive_conn` mirrors the listener's `serve_conn` frame loop
+//! statement-for-statement (same error codes, same close conditions),
+//! reading and writing strictly through the `WireStream` trait object so
+//! the simulated transport exercises the same seam as sockets. The one
+//! deliberate divergence: a repeated `Hello` binding the *same* tenant
+//! is answered idempotently instead of rejected, because the fault plan
+//! can legitimately duplicate a handshake frame; rebinding to a
+//! different tenant is still a `BadRequest` + close, as on the real
+//! path. Blocking `Wait` becomes a parked waiter: the connection stops
+//! consuming frames until the job's terminal transition wakes it —
+//! virtual time never polls (satellite of `ServerConfig::
+//! with_wait_slice`, which bounds the real path's polling slice).
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::sync::{Arc, Mutex};
+
+use super::engine::{req_name, resp_name, ActorId, EvKind, Sim, STREAM_SCHED, STREAM_STEAL};
+use super::net::SERVER;
+use super::SimConfig;
+use crate::coordinator::{
+    CostModel, ReadySink, ResId, SchedConfig, SimCtx, TaskId, TaskView,
+};
+use crate::server::admission::FairQueue;
+use crate::server::protocol::{JobId, JobReport, JobStatus, SubmitError, TenantId};
+use crate::server::registry::{JobGraph, Registry};
+use crate::server::shard::route_shard;
+use crate::server::stats::ServerStats;
+use crate::server::wire::codec::FrameBuffer;
+use crate::server::wire::{
+    codec, ErrorCode, Request, Response, WireStatus, WireStream, WIRE_VERSION,
+};
+use crate::util::rng::Rng;
+
+/// Task durations come from the task's declared cost, clamped so a
+/// pathological template cannot stretch virtual time past the clients'
+/// `Wait` deadline. Kernels are never executed.
+struct CappedCost;
+
+impl CostModel for CappedCost {
+    fn duration_ns(&self, view: TaskView<'_>, _ctx: &SimCtx) -> u64 {
+        (view.cost.max(1) as u64).min(200_000)
+    }
+}
+
+const COST: CappedCost = CappedCost;
+
+/// A submission parked in the admission queue.
+pub(crate) struct SimQueued {
+    pub id: u64,
+    pub template: String,
+    pub reuse: bool,
+    pub args: Vec<u8>,
+    pub enqueued: u64,
+}
+
+/// An admitted job occupying a slot.
+pub(crate) struct SimActive {
+    pub id: u64,
+    pub tenant: TenantId,
+    pub graph: JobGraph,
+    pub template: String,
+    pub reused: bool,
+    pub tasks_run: usize,
+    pub tasks_stolen: usize,
+    pub exec_ns: u64,
+    pub enqueued: u64,
+    pub admitted: u64,
+}
+
+/// Ready-task sink of one slot: routes into the shared shard vectors by
+/// the same `route_shard` hash the threaded pool uses (slot id as the
+/// stable salt).
+struct SlotSink {
+    shards: Arc<Mutex<Vec<Vec<(i64, usize, TaskId)>>>>,
+    slot: usize,
+}
+
+impl ReadySink for SlotSink {
+    fn ready(&self, tid: TaskId, key: i64, route: Option<ResId>) {
+        let mut shards = self.shards.lock().unwrap();
+        let nr = shards.len();
+        shards[route_shard(self.slot as u32, route, nr)].push((key, self.slot, tid));
+    }
+}
+
+/// Server-side state of one connection.
+#[derive(Default)]
+pub(crate) struct ConnHandler {
+    pub fb: FrameBuffer,
+    pub tenant: Option<TenantId>,
+    /// Job id a `Wait` is parked on; while set, no further frames are
+    /// consumed (mirrors the real path's blocking Wait).
+    pub pending_wait: Option<u64>,
+}
+
+/// What one dispatched frame decided about the connection.
+enum Flow {
+    Keep,
+    Close,
+    /// A `Wait` parked; stop consuming frames until woken.
+    Waiting,
+}
+
+/// Everything server-side that is not per-connection.
+pub(crate) struct SimServer {
+    pub registry: Registry,
+    pub admission: FairQueue<SimQueued>,
+    pub jobs: BTreeMap<u64, JobStatus>,
+    pub tenant_of: BTreeMap<u64, TenantId>,
+    pub next_job: u64,
+    pub slots: Vec<Option<SimActive>>,
+    /// Shared ready shards, one per virtual worker (as in the pool).
+    pub shards: Arc<Mutex<Vec<Vec<(i64, usize, TaskId)>>>>,
+    pub busy: Vec<bool>,
+    pub active_cores: usize,
+    /// Per-worker steal-walk RNG, each on its own child stream of the
+    /// root seed (the coordinator's gettask steal-order hook).
+    pub steal: Vec<Rng>,
+    /// job id → conn ids parked in `Wait` on it.
+    pub waiters: BTreeMap<u64, Vec<usize>>,
+    pub stats: ServerStats,
+}
+
+impl SimServer {
+    pub fn new(cfg: &SimConfig, seed: u64) -> Self {
+        let sched_cfg =
+            SchedConfig::new(cfg.workers).with_seed(Rng::split(seed, STREAM_SCHED));
+        let registry = Registry::new(sched_cfg, cfg.max_pool);
+        (cfg.setup)(&registry);
+        let steal_root = Rng::split(seed, STREAM_STEAL);
+        Self {
+            registry,
+            admission: FairQueue::new(cfg.max_inflight),
+            jobs: BTreeMap::new(),
+            tenant_of: BTreeMap::new(),
+            next_job: 1,
+            slots: Vec::new(),
+            shards: Arc::new(Mutex::new(vec![Vec::new(); cfg.workers])),
+            busy: vec![false; cfg.workers],
+            active_cores: 0,
+            steal: (0..cfg.workers)
+                .map(|w| Rng::new(Rng::split(steal_root, w as u64)))
+                .collect(),
+            waiters: BTreeMap::new(),
+            stats: ServerStats::new(),
+        }
+    }
+}
+
+impl Sim {
+    // ---- job lifecycle ---------------------------------------------------
+
+    /// The simulated `try_submit`: allocate an id, enqueue under the
+    /// tenant's admission accounting.
+    fn server_submit(
+        &mut self,
+        tenant: TenantId,
+        template: String,
+        reuse: bool,
+        args: Vec<u8>,
+    ) -> Result<u64, SubmitError> {
+        let id = self.server.next_job;
+        let q = SimQueued { id, template, reuse, args, enqueued: self.now };
+        self.server.admission.try_push(tenant, q)?;
+        self.server.next_job += 1;
+        self.server.jobs.insert(id, JobStatus::Queued);
+        self.server.tenant_of.insert(id, tenant);
+        Ok(id)
+    }
+
+    fn server_cancel(&mut self, job: u64) -> bool {
+        if matches!(self.server.jobs.get(&job), Some(JobStatus::Queued))
+            && self.server.admission.remove_where(|q| q.id == job).is_some()
+        {
+            self.server.jobs.insert(job, JobStatus::Cancelled);
+            self.trace(format!("job {job} cancelled while queued"));
+            self.wake_waiters(job);
+            return true;
+        }
+        false
+    }
+
+    /// Both server pumps; run after every event.
+    pub fn pump(&mut self) {
+        self.pump_admission();
+        self.pump_workers();
+    }
+
+    /// Admit queued jobs while slots allow: checkout, rewind, install
+    /// the slot sink, start — after which the job's roots sit in the
+    /// shards. (The real server may fuse same-template neighbors into a
+    /// batch; the simulation admits one at a time, so `batched_with` is
+    /// always 1 here.)
+    fn pump_admission(&mut self) {
+        while let Some((tenant, q)) = self.server.admission.try_admit() {
+            let out = self.server.registry.checkout_many(&q.template, &q.args, q.reuse, 1);
+            let (graph, reused, _wall_setup_ns) = match out {
+                // Wall-clock setup time is discarded: it must never
+                // reach the virtual clock or the log.
+                Ok(mut v) => v.pop().expect("checkout_many returns >= 1"),
+                Err(e) => {
+                    self.fail_job(q.id, tenant, e);
+                    continue;
+                }
+            };
+            let sched = Arc::clone(&graph.sched);
+            if let Err(e) = sched.reset_run() {
+                self.fail_job(q.id, tenant, e.to_string());
+                continue;
+            }
+            let slot = match self.server.slots.iter().position(Option::is_none) {
+                Some(s) => s,
+                None => {
+                    self.server.slots.push(None);
+                    self.server.slots.len() - 1
+                }
+            };
+            sched.set_ready_sink(Some(Arc::new(SlotSink {
+                shards: Arc::clone(&self.server.shards),
+                slot,
+            })));
+            if let Err(e) = sched.start() {
+                sched.set_ready_sink(None);
+                self.fail_job(q.id, tenant, e.to_string());
+                continue;
+            }
+            self.server.jobs.insert(q.id, JobStatus::Running);
+            self.trace(format!("job {} admitted: template {} slot {slot}", q.id, q.template));
+            self.server.slots[slot] = Some(SimActive {
+                id: q.id,
+                tenant,
+                graph,
+                template: q.template,
+                reused,
+                tasks_run: 0,
+                tasks_stolen: 0,
+                exec_ns: 0,
+                enqueued: q.enqueued,
+                admitted: self.now,
+            });
+            if sched.waiting() == 0 {
+                // Degenerate zero-task graph completes instantly.
+                self.finish_slot(slot);
+            }
+        }
+    }
+
+    fn fail_job(&mut self, id: u64, tenant: TenantId, err: String) {
+        self.trace(format!("job {id} failed at admission: {err}"));
+        self.server.jobs.insert(id, JobStatus::Failed(err));
+        self.server.stats.record_failure(tenant);
+        self.server.admission.finish(tenant);
+        self.wake_waiters(id);
+    }
+
+    /// Probe shard `s`: candidates in (highest key, lowest slot, lowest
+    /// task) order — the tagged-heap order, determinized — the first
+    /// acquirable one is removed and returned.
+    fn try_shard(&mut self, s: usize) -> Option<(usize, TaskId)> {
+        let shards = Arc::clone(&self.server.shards);
+        let mut guard = shards.lock().unwrap();
+        let shard = &mut guard[s];
+        let mut order: Vec<usize> = (0..shard.len()).collect();
+        order.sort_unstable_by_key(|&i| {
+            let (key, slot, tid) = shard[i];
+            (std::cmp::Reverse(key), slot, tid.0)
+        });
+        for &i in &order {
+            let (_, slot, tid) = shard[i];
+            let Some(active) = self.server.slots[slot].as_ref() else {
+                continue;
+            };
+            if active.graph.sched.try_acquire(tid) {
+                shard.swap_remove(i);
+                return Some((slot, tid));
+            }
+        }
+        None
+    }
+
+    /// One dispatch pass: every idle virtual worker probes its home
+    /// shard, then steals along its seeded coprime walk — the threaded
+    /// pool's discipline, determinized per worker stream.
+    fn pump_workers(&mut self) {
+        let nr = self.server.busy.len();
+        for w in 0..nr {
+            if self.server.busy[w] {
+                continue;
+            }
+            let mut acquired = self.try_shard(w);
+            let mut stolen = false;
+            if acquired.is_none() && nr > 1 {
+                let walk: Vec<usize> = self.server.steal[w].coprime_walk(nr).collect();
+                for s in walk {
+                    if s == w {
+                        continue;
+                    }
+                    if let Some(hit) = self.try_shard(s) {
+                        acquired = Some(hit);
+                        stolen = true;
+                        break;
+                    }
+                }
+            }
+            let Some((slot, tid)) = acquired else {
+                continue;
+            };
+            self.server.active_cores += 1;
+            let ctx = SimCtx {
+                now_ns: self.now,
+                active_cores: self.server.active_cores,
+                nr_cores: nr,
+            };
+            let (get_ns, dur, rids) = {
+                let active = self.server.slots[slot].as_ref().expect("acquired from live slot");
+                let sched = &active.graph.sched;
+                let view = sched.task_view(tid);
+                let get_ns = COST.gettask_overhead_ns(view, stolen);
+                let dur = COST.duration_ns(view, &ctx).max(1);
+                let rids: Vec<u32> = sched.locks_of(tid).iter().map(|r| r.0).collect();
+                (get_ns, dur, rids)
+            };
+            if stolen {
+                self.server.slots[slot].as_mut().expect("live slot").tasks_stolen += 1;
+            }
+            self.oracle.on_start(slot, tid.0, &rids);
+            self.server.busy[w] = true;
+            self.push(self.now + get_ns + dur, EvKind::TaskDone { worker: w, slot, tid, dur });
+        }
+    }
+
+    /// A virtual worker's task finished: complete it in the scheduler
+    /// (dependents flow through the sink back into the shards) and
+    /// retire the job when its last task is done.
+    pub(crate) fn on_task_done(&mut self, worker: usize, slot: usize, tid: TaskId, dur: u64) {
+        self.server.busy[worker] = false;
+        self.server.active_cores -= 1;
+        self.oracle.on_end(slot, tid.0);
+        let waiting = {
+            let Some(active) = self.server.slots[slot].as_mut() else {
+                self.oracle
+                    .violations
+                    .push(format!("task {} completed for a dead slot {slot}", tid.0));
+                return;
+            };
+            active.graph.sched.complete(tid);
+            active.tasks_run += 1;
+            active.exec_ns += dur;
+            active.graph.sched.waiting()
+        };
+        if waiting == 0 {
+            self.finish_slot(slot);
+        }
+    }
+
+    /// Retire a finished slot: report, stats, pool checkin, waiter
+    /// wakeups — and the invariant-3 quiescence check on its resources.
+    fn finish_slot(&mut self, slot: usize) {
+        let active = self.server.slots[slot].take().expect("finishing a live slot");
+        active.graph.sched.set_ready_sink(None);
+        if !active.graph.sched.resources().all_quiescent() {
+            self.oracle.violations.push(format!(
+                "invariant 3: job {} finished with non-quiescent resources",
+                active.id
+            ));
+        }
+        let report = JobReport {
+            job: JobId(active.id),
+            tenant: active.tenant,
+            tasks_run: active.tasks_run,
+            tasks_stolen: active.tasks_stolen,
+            exec_ns: active.exec_ns,
+            queue_ns: active.admitted.saturating_sub(active.enqueued),
+            // Virtual reports never carry wall-clock quantities.
+            setup_ns: 0,
+            service_ns: self.now.saturating_sub(active.admitted),
+            dispatch_ns: 0,
+            batched_with: 1,
+            reused_template: active.reused,
+        };
+        self.server.stats.record(&report);
+        self.server.stats.record_sweep(1);
+        self.oracle.on_job_done(&active.template, active.tasks_run);
+        self.trace(format!(
+            "job {} done: template {} tasks {} stolen {}",
+            active.id, active.template, active.tasks_run, active.tasks_stolen
+        ));
+        self.server.jobs.insert(active.id, JobStatus::Done(report));
+        self.server.registry.checkin(active.graph);
+        self.server.admission.finish(active.tenant);
+        self.wake_waiters(active.id);
+    }
+
+    /// Wake every connection parked in `Wait` on `job`.
+    fn wake_waiters(&mut self, job: u64) {
+        if let Some(conns) = self.server.waiters.remove(&job) {
+            for conn in conns {
+                self.push(self.now + 1, EvKind::Wake(ActorId::Conn(conn)));
+            }
+        }
+    }
+
+    // ---- connection handling --------------------------------------------
+
+    /// Server-side actor step for one connection: accept lazily on first
+    /// bytes, resolve a parked `Wait` if its job went terminal, then
+    /// read + dispatch frames until the inbox runs dry.
+    pub(crate) fn step_conn(&mut self, conn: usize) {
+        let reset = self.net.conns[conn].lock().unwrap().reset;
+        if reset {
+            if self.handlers.remove(&conn).is_some() {
+                self.trace(format!("conn {conn}: dropped (reset)"));
+            }
+            self.purge_waiters(conn);
+            return;
+        }
+        if !self.handlers.contains_key(&conn) {
+            let has_bytes = !self.net.conns[conn].lock().unwrap().inbox[SERVER].is_empty();
+            if !has_bytes {
+                return;
+            }
+            self.handlers.insert(conn, ConnHandler::default());
+            self.trace(format!("conn {conn}: accepted"));
+        }
+        let mut h = self.handlers.remove(&conn).expect("handler present");
+        let close = self.drive_conn(conn, &mut h);
+        if close {
+            self.trace(format!("conn {conn}: closed"));
+            self.net.conns[conn].lock().unwrap().closed[SERVER] = true;
+            self.purge_waiters(conn);
+        } else {
+            self.handlers.insert(conn, h);
+        }
+    }
+
+    fn purge_waiters(&mut self, conn: usize) {
+        for list in self.server.waiters.values_mut() {
+            list.retain(|&c| c != conn);
+        }
+        self.server.waiters.retain(|_, list| !list.is_empty());
+    }
+
+    /// The `serve_conn` frame loop, event-shaped. `true` = close.
+    fn drive_conn(&mut self, conn: usize, h: &mut ConnHandler) -> bool {
+        // A parked Wait gates everything: no frames are consumed until
+        // the job it watches goes terminal.
+        if let Some(job) = h.pending_wait {
+            match self.server.jobs.get(&job) {
+                Some(s) if s.is_terminal() => {
+                    h.pending_wait = None;
+                    let status = WireStatus::from_status(s);
+                    if !self.send_conn(conn, &Response::Status { job, status }) {
+                        return true;
+                    }
+                }
+                Some(_) => return false,
+                None => {
+                    h.pending_wait = None;
+                    let resp = Response::Status { job, status: WireStatus::Unknown };
+                    if !self.send_conn(conn, &resp) {
+                        return true;
+                    }
+                }
+            }
+        }
+        // Drain everything the network has delivered so far.
+        let mut peer_closed = false;
+        {
+            let mut ws = self.net.stream(conn, SERVER);
+            let stream: &mut dyn WireStream = &mut ws;
+            let mut tmp = [0u8; 4096];
+            loop {
+                match stream.read(&mut tmp) {
+                    Ok(0) => {
+                        peer_closed = true;
+                        break;
+                    }
+                    Ok(n) => h.fb.extend(&tmp[..n]),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(_) => return true,
+                }
+            }
+        }
+        loop {
+            let body = match h.fb.take_frame() {
+                Err(e) => {
+                    self.send_err(conn, ErrorCode::BadRequest, 0, &e.to_string());
+                    return true;
+                }
+                Ok(Some(b)) => b,
+                Ok(None) => return peer_closed,
+            };
+            match self.dispatch_frame(conn, h, &body) {
+                Flow::Keep => {}
+                Flow::Close => return true,
+                Flow::Waiting => return false,
+            }
+        }
+    }
+
+    /// Dispatch one decoded request — the listener's match, inline.
+    fn dispatch_frame(&mut self, conn: usize, h: &mut ConnHandler, body: &[u8]) -> Flow {
+        let req = match Request::decode(body) {
+            Ok(r) => r,
+            Err(e) => {
+                self.send_err(conn, ErrorCode::BadRequest, 0, &e.to_string());
+                return Flow::Close;
+            }
+        };
+        self.trace(format!("conn {conn}: <- {}", req_name(&req)));
+        match req {
+            Request::Hello { version, tenant } => {
+                if version != WIRE_VERSION {
+                    self.send_err(
+                        conn,
+                        ErrorCode::VersionMismatch,
+                        WIRE_VERSION as u64,
+                        &format!("server speaks wire version {WIRE_VERSION}"),
+                    );
+                    return Flow::Close;
+                }
+                match h.tenant {
+                    Some(t) if t.0 != tenant => {
+                        self.send_err(
+                            conn,
+                            ErrorCode::BadRequest,
+                            0,
+                            "Hello already completed on this connection",
+                        );
+                        Flow::Close
+                    }
+                    // Idempotent for the same tenant: the network may
+                    // have duplicated the handshake frame.
+                    _ => {
+                        h.tenant = Some(TenantId(tenant));
+                        let ok = Response::HelloOk { version: WIRE_VERSION, tenant };
+                        if self.send_conn(conn, &ok) {
+                            Flow::Keep
+                        } else {
+                            Flow::Close
+                        }
+                    }
+                }
+            }
+            Request::Bye => Flow::Close,
+            other => {
+                let Some(tenant) = h.tenant else {
+                    self.send_err(conn, ErrorCode::NeedHello, 0, "Hello must be the first message");
+                    return Flow::Close;
+                };
+                let resp = match other {
+                    Request::Submit { template, reuse, args } => {
+                        match self.server_submit(tenant, template, reuse, args) {
+                            Ok(id) => {
+                                self.trace(format!("conn {conn}: job {id} submitted"));
+                                Response::Submitted { job: id }
+                            }
+                            Err(e) => reject(&e),
+                        }
+                    }
+                    Request::Poll { job } => Response::Status {
+                        job,
+                        status: self
+                            .server
+                            .jobs
+                            .get(&job)
+                            .map(WireStatus::from_status)
+                            .unwrap_or(WireStatus::Unknown),
+                    },
+                    Request::Wait { job } => match self.server.jobs.get(&job) {
+                        None => Response::Status { job, status: WireStatus::Unknown },
+                        Some(s) if s.is_terminal() => {
+                            Response::Status { job, status: WireStatus::from_status(s) }
+                        }
+                        Some(_) => {
+                            // Park: the job's terminal transition wakes
+                            // this connection (no polling under virtual
+                            // time).
+                            self.server.waiters.entry(job).or_default().push(conn);
+                            h.pending_wait = Some(job);
+                            return Flow::Waiting;
+                        }
+                    },
+                    Request::Cancel { job } => {
+                        Response::Cancelled { job, ok: self.server_cancel(job) }
+                    }
+                    Request::Stats => {
+                        Response::StatsJson { json: self.server.stats.snapshot().to_json() }
+                    }
+                    Request::Metrics => {
+                        // The obs registry samples wall-clock gauges;
+                        // the simulation answers with a stub instead of
+                        // letting real time leak into the run.
+                        Response::MetricsText { text: "# sim: metrics not modeled\n".into() }
+                    }
+                    Request::Hello { .. } | Request::Bye => unreachable!("handled above"),
+                };
+                if self.send_conn(conn, &resp) {
+                    Flow::Keep
+                } else {
+                    Flow::Close
+                }
+            }
+        }
+    }
+
+    /// Write one response through the chunk-safe encoder. `false` = the
+    /// connection is gone.
+    fn send_conn(&mut self, conn: usize, resp: &Response) -> bool {
+        self.trace(format!("conn {conn}: -> {}", resp_name(resp)));
+        let mut ws = self.net.stream(conn, SERVER);
+        codec::write_response(&mut ws, resp).is_ok()
+    }
+
+    fn send_err(&mut self, conn: usize, code: ErrorCode, aux: u64, message: &str) {
+        let resp = Response::Error { code, aux, message: message.to_string() };
+        let _ = self.send_conn(conn, &resp);
+    }
+}
+
+/// Map an admission rejection onto its wire error (all retryable) —
+/// the listener's mapping, verbatim.
+fn reject(e: &SubmitError) -> Response {
+    match e {
+        SubmitError::TenantAtCapacity { cap, .. } => Response::Error {
+            code: ErrorCode::TenantAtCapacity,
+            aux: *cap as u64,
+            message: e.to_string(),
+        },
+        SubmitError::ServerSaturated { max_queued } => Response::Error {
+            code: ErrorCode::ServerSaturated,
+            aux: *max_queued as u64,
+            message: e.to_string(),
+        },
+    }
+}

@@ -39,6 +39,19 @@ impl Rng {
         Self { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()] }
     }
 
+    /// Derive an independent child seed from a root seed and a stream
+    /// id. This is the single derivation rule for every server-side RNG
+    /// (worker steal walks, the simulator's fault/interleave streams):
+    /// one root `u64` fans out into decorrelated streams, so a whole
+    /// run is reproducible from the root alone. Two SplitMix64 steps
+    /// keep adjacent stream ids (0, 1, 2, …) from yielding correlated
+    /// xoshiro states.
+    #[inline]
+    pub fn split(root: u64, stream: u64) -> u64 {
+        let mut sm = SplitMix64::new(root ^ stream.wrapping_mul(0x9E3779B97F4A7C15));
+        sm.next_u64().wrapping_add(sm.next_u64().rotate_left(17))
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);

@@ -1,0 +1,197 @@
+//! Deterministic simulation testing: the acceptance gates of the DST
+//! subsystem.
+//!
+//! * Determinism: the same `(scenario, seed, profile)` produces a
+//!   byte-identical event log, run to run.
+//! * Equivalence: a zero-fault simulation of the PR-4 `remote.rs`
+//!   acceptance scenario matches a *real* loopback run of the same
+//!   workload — same per-job task counts, same per-tenant stats.
+//! * Coverage: pinned hostile seeds inject every fault class at least
+//!   once (forced injection makes this hold by construction, so these
+//!   are regression pins, not flaky probes), and the seeds pass the
+//!   four oracle invariants.
+//! * The `wait_slice` satellite: the config knob replaces the
+//!   hardcoded wait-loop slice and clamps to a sane floor.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use quicksched::client::RemoteClient;
+use quicksched::server::{
+    nbody_template, qr_template, JobStatus, ListenAddr, SchedServer, ServerConfig, TenantId,
+    WireListener,
+};
+use quicksched::sim::{run_seed, run_sweep, FaultProfile, SimConfig, ALL_PROFILES};
+
+/// Same seed, same schedule: the event log — every connect, frame,
+/// fault, admission, completion, with virtual timestamps — is
+/// byte-identical across runs. This is the property that makes a CI
+/// failure replayable from its seed alone.
+#[test]
+fn same_seed_produces_byte_identical_event_log() {
+    let cfg = SimConfig::small();
+    let a = run_seed(&cfg, 42, FaultProfile::Chaos, None);
+    let b = run_seed(&cfg, 42, FaultProfile::Chaos, None);
+    assert_eq!(a.log, b.log, "event logs diverged for the same seed");
+    assert_eq!(a.log_text(), b.log_text());
+    assert_eq!(a.statuses, b.statuses);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.end_ns, b.end_ns);
+    assert_eq!(a.faults.total(), b.faults.total());
+    // Different seeds must actually explore different schedules.
+    let c = run_seed(&cfg, 43, FaultProfile::Chaos, None);
+    assert_ne!(a.log, c.log, "distinct seeds replayed the same schedule");
+}
+
+/// The fault-free simulation of the `remote.rs` acceptance scenario (4
+/// clients x 16 jobs over the qr + nbody templates) must agree with a
+/// real loopback run of the same workload: identical sorted
+/// `(tenant, tasks_run)` outcomes and identical per-tenant statistics.
+/// Task counts are structural, so virtual and wall-clock execution see
+/// the same numbers.
+#[test]
+fn zero_fault_sim_matches_real_loopback_run() {
+    let cfg = SimConfig::remote_scenario();
+    let sim = run_seed(&cfg, 0, FaultProfile::None, None);
+    assert!(sim.ok(), "reference sim violated invariants: {:?}", sim.violations);
+    assert_eq!(sim.statuses.len(), 4 * 16);
+    assert_eq!(sim.faults.total(), 0);
+
+    // The real thing: threads, sockets, wall clock.
+    let server = SchedServer::start(ServerConfig::new(2).with_seed(0xA11CE));
+    server.register_template("qr", qr_template(4, 8, 0xFEED));
+    server.register_template("nbody", nbody_template(1_500, 60, 96, 0xFEED));
+    let server = Arc::new(server);
+    let listener = WireListener::start(Arc::clone(&server), &ListenAddr::parse("127.0.0.1:0"))
+        .expect("binding loopback listener");
+    let results = std::sync::Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for c in 0..4u32 {
+            let addr = listener.local_addr();
+            let results = &results;
+            scope.spawn(move || {
+                let mut client = RemoteClient::connect(addr, TenantId(c)).expect("connect");
+                let ids: Vec<_> = (0..16)
+                    .map(|j| {
+                        let t = if j % 2 == 0 { "qr" } else { "nbody" };
+                        client.submit(t).expect("submit")
+                    })
+                    .collect();
+                for id in ids {
+                    match client.wait(id).expect("wait") {
+                        JobStatus::Done(r) => results.lock().unwrap().push((c, r.tasks_run)),
+                        other => panic!("remote job {id} ended as {other:?}"),
+                    }
+                }
+            });
+        }
+    });
+    let mut real: Vec<(u32, usize)> = results.into_inner().unwrap();
+    real.sort_unstable();
+    assert_eq!(sim.statuses, real, "sim and loopback disagree on job outcomes");
+
+    // Per-tenant stats agree too: 16 completions, zero failures, same
+    // task totals on both paths.
+    let snap = server.stats();
+    assert_eq!(sim.tenants.len(), snap.tenants.len());
+    for ((t, completed, failed, tasks), row) in sim.tenants.iter().zip(&snap.tenants) {
+        assert_eq!(*t, row.tenant.0);
+        assert_eq!(*completed, 16);
+        assert_eq!(row.completed, 16);
+        assert_eq!(*failed, 0);
+        assert_eq!(row.failed, 0);
+        assert_eq!(*tasks, row.tasks_run);
+    }
+    listener.shutdown();
+    drop(server);
+}
+
+/// Pinned hostile seeds, one per fault class. Forced injection
+/// guarantees the class fires within the first few frames, so each pin
+/// asserts both coverage (the class was actually exercised) and
+/// survival (the four invariants held under it). These seeds are
+/// regression anchors: a behavior change under any of them shows up as
+/// a deterministic diff, not a flake.
+#[test]
+fn pinned_hostile_seeds_per_fault_class() {
+    let cfg = SimConfig::small();
+    for (profile, seed) in [
+        (FaultProfile::Drop, 7),
+        (FaultProfile::Dup, 19),
+        (FaultProfile::Reorder, 11),
+        (FaultProfile::Slow, 13),
+        (FaultProfile::Reset, 3),
+        (FaultProfile::Partition, 5),
+        (FaultProfile::Chaos, 17),
+    ] {
+        let outcome = run_seed(&cfg, seed, profile, None);
+        assert!(
+            outcome.ok(),
+            "seed {seed} under {} violated invariants: {:?}\n--- log ---\n{}",
+            profile.name(),
+            outcome.violations,
+            outcome.log_text()
+        );
+        assert!(
+            outcome.faults.for_profile(profile) > 0,
+            "seed {seed} under {} injected no fault of its class ({:?})",
+            profile.name(),
+            outcome.faults
+        );
+    }
+}
+
+/// A small chaos sweep: every seed passes and, across the window, every
+/// fault class was injected at least once — the same assertion the CI
+/// `dst-sweep` job makes over 512 seeds per profile.
+#[test]
+fn chaos_sweep_covers_every_fault_class() {
+    let report = run_sweep(&SimConfig::small(), 0, 24, FaultProfile::Chaos);
+    assert!(
+        report.ok(),
+        "failing seeds {:?}; first log:\n{}",
+        report.failing_seeds(),
+        report.failures.first().map(|o| o.log_text()).unwrap_or_default()
+    );
+    assert_eq!(report.passed, 24);
+    for (class, n) in report.faults.classes() {
+        assert!(n > 0, "class {class} never injected across the chaos window");
+    }
+    // The reference run pinned per-template task counts for invariant 2.
+    assert!(report.reference.contains_key("syn"));
+    assert!(report.reference.contains_key("qr"));
+}
+
+/// Every single-class profile holds its invariants over a short window.
+#[test]
+fn every_profile_passes_a_short_sweep() {
+    for profile in ALL_PROFILES {
+        let report = run_sweep(&SimConfig::small(), 0, 6, profile);
+        assert!(
+            report.ok(),
+            "profile {} failing seeds {:?}; first log:\n{}",
+            profile.name(),
+            report.failing_seeds(),
+            report.failures.first().map(|o| o.log_text()).unwrap_or_default()
+        );
+        assert!(
+            report.faults.for_profile(profile) > 0,
+            "profile {} injected nothing over the window",
+            profile.name()
+        );
+    }
+}
+
+/// Satellite: the blocking-`Wait` re-check slice is a config knob with
+/// a 1 ms floor, not a hardcoded constant.
+#[test]
+fn wait_slice_is_configurable_and_clamped() {
+    assert_eq!(ServerConfig::new(1).wait_slice, Duration::from_millis(50), "default");
+    let cfg = ServerConfig::new(1).with_wait_slice(Duration::ZERO);
+    assert_eq!(cfg.wait_slice, Duration::from_millis(1), "clamped to the floor");
+    let cfg = ServerConfig::new(1).with_wait_slice(Duration::from_millis(5));
+    assert_eq!(cfg.wait_slice, Duration::from_millis(5));
+    let server = SchedServer::start(cfg);
+    assert_eq!(server.wait_slice(), Duration::from_millis(5), "reaches the server");
+    server.shutdown();
+}
