@@ -37,13 +37,17 @@
 //! listener.shutdown();
 //! ```
 
+use std::collections::VecDeque;
 use std::io::{self, Read, Write};
 use std::net::TcpStream;
 #[cfg(unix)]
 use std::os::unix::net::UnixStream;
 
 use crate::coordinator::Payload;
-use crate::server::wire::codec::{self, ErrorCode, ProtocolError, Request, Response, WIRE_VERSION};
+use crate::server::wire::codec::{
+    self, BatchItem, BatchResult, ErrorCode, ProtocolError, Request, Response, WireStatus,
+    WIRE_VERSION,
+};
 use crate::server::{JobId, JobStatus, SubmitError, TenantId};
 
 /// A remote operation failed.
@@ -115,11 +119,23 @@ impl Write for ClientStream {
 }
 
 /// Blocking client of a [`crate::server::WireListener`]. One
-/// connection, one tenant, strictly request→response — clone-free and
-/// lock-free; use one client per thread for concurrent submission.
+/// connection, one tenant — clone-free and lock-free; use one client
+/// per thread for concurrent submission.
+///
+/// Ordinary calls are strictly request→response, but the connection
+/// also supports **pipelining** ([`RemoteClient::submit_pipelined`],
+/// [`RemoteClient::submit_batch`] — many requests in flight, responses
+/// in request order) and **streaming subscriptions**
+/// ([`RemoteClient::subscribe`]): after subscribing, the server pushes
+/// a status frame on every transition of the watched job. Pushed
+/// events that arrive interleaved with an ordinary response are
+/// buffered and drained via [`RemoteClient::next_event`] /
+/// [`RemoteClient::wait_event`].
 pub struct RemoteClient {
     stream: ClientStream,
     tenant: TenantId,
+    /// Server-pushed `Event` frames not yet handed to the caller.
+    events: VecDeque<(u64, WireStatus)>,
 }
 
 impl RemoteClient {
@@ -127,7 +143,7 @@ impl RemoteClient {
     /// the `Hello` handshake as `tenant`.
     pub fn connect(addr: &str, tenant: TenantId) -> Result<Self, RemoteError> {
         let stream = ClientStream::connect(addr)?;
-        let mut client = Self { stream, tenant };
+        let mut client = Self { stream, tenant, events: VecDeque::new() };
         let hello = Request::Hello { version: WIRE_VERSION, tenant: tenant.0 };
         match client.roundtrip(&hello)? {
             Response::HelloOk { version, .. } if version == WIRE_VERSION => Ok(client),
@@ -175,6 +191,97 @@ impl RemoteClient {
         match self.roundtrip(&req)? {
             Response::Submitted { job } => Ok(JobId(job)),
             other => Err(self.fail(other)),
+        }
+    }
+
+    /// Submit many jobs in one frame. The whole batch rides the
+    /// server's fused admission path (one lock round; same-template
+    /// neighbors admit together), and the per-item results come back
+    /// positionally: backpressure on one item does not fail the rest.
+    pub fn submit_batch(
+        &mut self,
+        items: Vec<BatchItem>,
+    ) -> Result<Vec<Result<JobId, RemoteError>>, RemoteError> {
+        let n = items.len();
+        match self.roundtrip(&Request::SubmitBatch { items })? {
+            Response::SubmittedBatch { results } if results.len() == n => Ok(results
+                .into_iter()
+                .map(|r| match r {
+                    BatchResult::Accepted { job } => Ok(JobId(job)),
+                    BatchResult::Rejected { code, aux } => Err(self.item_error(code, aux)),
+                })
+                .collect()),
+            Response::SubmittedBatch { results } => Err(RemoteError::Unexpected(format!(
+                "batch of {n} answered with {} results",
+                results.len()
+            ))),
+            other => Err(self.fail(other)),
+        }
+    }
+
+    /// Pipeline one `Submit` per template without waiting in between,
+    /// then collect the acknowledgements (responses arrive in request
+    /// order — the protocol guarantees it). Unlike
+    /// [`RemoteClient::submit_batch`] the requests are independent
+    /// frames, so this measures pipelining rather than batched
+    /// admission.
+    pub fn submit_pipelined(
+        &mut self,
+        templates: &[&str],
+    ) -> Result<Vec<Result<JobId, RemoteError>>, RemoteError> {
+        for t in templates {
+            let req =
+                Request::Submit { template: (*t).into(), reuse: true, args: Vec::new() };
+            codec::write_frame(&mut self.stream, &req.encode())?;
+        }
+        let mut out = Vec::with_capacity(templates.len());
+        for _ in templates {
+            out.push(match self.read_non_event()? {
+                Response::Submitted { job } => Ok(JobId(job)),
+                other => Err(self.fail(other)),
+            });
+        }
+        Ok(out)
+    }
+
+    /// Subscribe to `id`: the server acknowledges with a status
+    /// snapshot (`Ok(None)` for an unknown id) and then pushes a frame
+    /// on every subsequent transition until the job settles. Drain the
+    /// pushed frames with [`RemoteClient::next_event`] (non-blocking)
+    /// or [`RemoteClient::wait_event`] (blocking).
+    pub fn subscribe(&mut self, id: JobId) -> Result<Option<JobStatus>, RemoteError> {
+        match self.roundtrip(&Request::Subscribe { job: id.0 })? {
+            Response::Status { job, status } if job == id.0 => {
+                Ok(status.into_status(id, self.tenant))
+            }
+            other => Err(self.fail(other)),
+        }
+    }
+
+    /// Pop a buffered subscription event, if any arrived interleaved
+    /// with earlier responses. Never touches the socket.
+    pub fn next_event(&mut self) -> Option<(JobId, JobStatus)> {
+        while let Some((job, status)) = self.events.pop_front() {
+            let id = JobId(job);
+            if let Some(s) = status.into_status(id, self.tenant) {
+                return Some((id, s));
+            }
+        }
+        None
+    }
+
+    /// Block until a subscription event arrives (buffered events are
+    /// drained first). Errors if the server pushes anything other than
+    /// an event while nothing else is outstanding.
+    pub fn wait_event(&mut self) -> Result<(JobId, JobStatus), RemoteError> {
+        loop {
+            if let Some(ev) = self.next_event() {
+                return Ok(ev);
+            }
+            match codec::read_response(&mut self.stream)? {
+                Response::Event { job, status } => self.events.push_back((job, status)),
+                other => return Err(self.fail(other)),
+            }
         }
     }
 
@@ -237,9 +344,33 @@ impl RemoteClient {
 
     fn roundtrip(&mut self, req: &Request) -> Result<Response, RemoteError> {
         codec::write_frame(&mut self.stream, &req.encode())?;
-        // read_response reassembles chunked (multi-frame) responses;
-        // single-frame responses pass straight through.
-        Ok(codec::read_response(&mut self.stream)?)
+        self.read_non_event()
+    }
+
+    /// Read the next non-push response, buffering any subscription
+    /// events that arrive interleaved. `read_response` reassembles
+    /// chunked (multi-frame) responses transparently.
+    fn read_non_event(&mut self) -> Result<Response, RemoteError> {
+        loop {
+            match codec::read_response(&mut self.stream)? {
+                Response::Event { job, status } => self.events.push_back((job, status)),
+                other => return Ok(other),
+            }
+        }
+    }
+
+    /// Map one rejected batch item onto the client error type.
+    fn item_error(&self, code: ErrorCode, aux: u64) -> RemoteError {
+        match code {
+            ErrorCode::TenantAtCapacity => RemoteError::Rejected(SubmitError::TenantAtCapacity {
+                tenant: self.tenant,
+                cap: aux as usize,
+            }),
+            ErrorCode::ServerSaturated => {
+                RemoteError::Rejected(SubmitError::ServerSaturated { max_queued: aux as usize })
+            }
+            other => RemoteError::Server(format!("batch item rejected: {other:?}")),
+        }
     }
 
     /// Map a non-success response onto the client error type;

@@ -5,9 +5,10 @@
 //! repro chol  [--tiles 16 --tile 64 --threads 4 --verify]
 //! repro bh    [--n 100000 --n-max 100 --n-task 5000 --threads 4 --backend native|xla --verify]
 //! repro sim   <qr|bh> [--cores 64 ...workload options]
-//! repro sim   --seeds A..B [--faults drop|dup|reorder|slow|reset|partition|chaos|all]
-//!                    [--scenario small|remote --workers N --clients N --jobs N
-//!                     --log-dir bench_out]
+//! repro sim   --seeds A..B [--faults drop|dup|reorder|slow|reset|partition|
+//!                              partial-frame|chaos|all]
+//!                    [--scenario small|remote|reactor --workers N --clients N
+//!                     --jobs N --log-dir bench_out]
 //!                    # deterministic simulation sweep (DST): whole-server
 //!                    # sim under fault injection; failing seeds write
 //!                    # bench_out/dst_<profile>_seed_<N>.log and exit 1
@@ -19,6 +20,7 @@
 //! repro serve        [--workers 4 --tenants 3 --jobs 30 --tasks 300 --work-ns 2000
 //!                     --batch-max 1 --adaptive-batch --max-queued 0]
 //!                    [--listen 127.0.0.1:7193|unix:/tmp/qs.sock --for-secs 0
+//!                     --reactor|--threaded --max-conns 64
 //!                     --metrics --metrics-every-secs 10]
 //! repro trace <qr|bh> [--out trace.json --threads 4 ...workload options]
 //!                    # worker Gantt timeline as Chrome trace_event JSON
@@ -32,7 +34,10 @@
 //!                     --tiny-work-ns 200]   # fused vs unfused dispatch overhead
 //! repro bench-remote [--workers 4 --clients 4 --jobs 128 --tasks 200 --work-ns 1000
 //!                     --connect HOST:PORT --json bench_out/BENCH_remote.json --quick]
-//!                    # open-loop remote submission over loopback (or --connect)
+//!                    [--connections 10000]
+//!                    # open-loop remote submission over loopback (or --connect);
+//!                    # --connections N holds N reactor connections open and
+//!                    # round-robins pipelined SubmitBatch rounds across them
 //! ```
 
 use std::sync::Arc;
@@ -46,8 +51,9 @@ use quicksched::qr;
 use quicksched::runtime::{Manifest, RuntimeService, XlaNbodyExec, XlaTileBackend};
 use quicksched::server::{
     nbody_template, qr_template, synthetic_param_template, synthetic_template, JobSpec,
-    JobStatus, ListenAddr, SchedServer, ServerConfig, TenantId, WireListener,
+    JobStatus, ListenAddr, SchedServer, ServerConfig, TenantId, WireListener, WireMode,
 };
+use quicksched::server::wire::{raise_nofile_limit, BatchItem, DEFAULT_MAX_CONNS};
 use quicksched::util::cli::Args;
 
 fn main() {
@@ -249,7 +255,7 @@ fn cmd_sim_dst(args: &Args) {
 
     let scenario = args.get_str("scenario", "small");
     let mut cfg = SimConfig::by_name(scenario)
-        .unwrap_or_else(|| panic!("unknown scenario {scenario:?} (small|remote)"));
+        .unwrap_or_else(|| panic!("unknown scenario {scenario:?} (small|remote|reactor)"));
     cfg.workers = args.get_usize("workers", cfg.workers);
     cfg.clients = args.get_usize("clients", cfg.clients);
     cfg.jobs_per_client = args.get_usize("jobs", cfg.jobs_per_client);
@@ -395,7 +401,11 @@ fn cmd_bench_core(args: &Args) {
 /// front-end is started on a TCP `host:port` or `unix:<path>` socket
 /// and the process serves `RemoteClient`s (templates: synthetic, qr,
 /// nbody, and the parameterized synthetic-args) until killed, or for
-/// `--for-secs` seconds.
+/// `--for-secs` seconds. `--reactor` forces the epoll reactor
+/// front-end (`--threaded` the thread-per-connection fallback; the
+/// default picks the reactor on Linux), and `--max-conns` sets the
+/// concurrent-connection cap — raising it past the default also
+/// attempts to raise `RLIMIT_NOFILE`.
 fn cmd_serve(args: &Args) {
     let workers = args.get_usize("workers", 4);
     let tenants = args.get_usize("tenants", 3).max(1);
@@ -429,11 +439,30 @@ fn cmd_serve(args: &Args) {
         // stdout, every --metrics-every-secs seconds.
         let metrics_every = (args.flag("metrics") || args.get("metrics-every-secs").is_some())
             .then(|| args.get_u64("metrics-every-secs", 10).max(1));
+        let mode = if args.flag("reactor") {
+            WireMode::Reactor
+        } else if args.flag("threaded") {
+            WireMode::Threaded
+        } else {
+            WireMode::Auto
+        };
+        let max_conns = args.get_usize("max-conns", DEFAULT_MAX_CONNS).max(1);
+        if max_conns > DEFAULT_MAX_CONNS {
+            if let Some(n) = raise_nofile_limit() {
+                println!("serve: raised RLIMIT_NOFILE to {n}");
+            }
+        }
         let server = Arc::new(server);
-        let listener = WireListener::start(Arc::clone(&server), &ListenAddr::parse(listen))
-            .expect("binding wire listener");
+        let listener = WireListener::start_with(
+            Arc::clone(&server),
+            &ListenAddr::parse(listen),
+            max_conns,
+            mode,
+        )
+        .expect("binding wire listener");
         println!(
-            "serve: listening on {} ({workers} workers, templates {:?})",
+            "serve: listening on {} ({mode:?} front-end, {workers} workers, \
+             {max_conns} conns max, templates {:?})",
             listener.local_addr(),
             server.registry().names()
         );
@@ -805,8 +834,12 @@ fn cmd_bench_server(args: &Args) {
 /// loopback TCP port; `--connect HOST:PORT` (or `unix:<path>`) targets
 /// an external `repro serve --listen` instead (which must have a
 /// "synthetic" template registered; `--tasks`/`--work-ns` then describe
-/// the *remote* template only in the JSON metadata). Writes
-/// `bench_out/BENCH_remote.json`.
+/// the *remote* template only in the JSON metadata). With
+/// `--connections N` the benchmark instead holds N persistent
+/// connections open for its whole duration (`--clients` becomes the
+/// driving-thread count) and submits pipelined `SubmitBatch` rounds
+/// round-robin across them — the reactor-concurrency acceptance mode.
+/// Writes `bench_out/BENCH_remote.json`.
 fn cmd_bench_remote(args: &Args) {
     let quick = args.flag("quick");
     let workers = args.get_usize("workers", if quick { 2 } else { 4 });
@@ -814,12 +847,15 @@ fn cmd_bench_remote(args: &Args) {
     let jobs = args.get_usize("jobs", if quick { 32 } else { 128 }).max(clients);
     let tasks = args.get_usize("tasks", if quick { 60 } else { 200 });
     let work_ns = args.get_u64("work-ns", 1_000);
+    let connections = args.get_usize("connections", 0);
     let json_path = std::path::PathBuf::from(
         args.get_str("json", "bench_out/BENCH_remote.json").to_string(),
     );
     let connect = args.get("connect").map(|s| s.to_string());
 
-    // The loopback server, unless --connect names an external one.
+    // The loopback server, unless --connect names an external one. The
+    // held-connection mode sizes the accept cap to the held set (plus
+    // headroom for the stats scrape) and bumps RLIMIT_NOFILE first.
     let local = if connect.is_none() {
         let server = SchedServer::start(
             ServerConfig::new(workers)
@@ -828,8 +864,19 @@ fn cmd_bench_remote(args: &Args) {
         );
         server.register_template("synthetic", synthetic_template(tasks, 8, 0xBE7C5, work_ns));
         let server = Arc::new(server);
-        let listener = WireListener::start(Arc::clone(&server), &ListenAddr::parse("127.0.0.1:0"))
-            .expect("binding loopback listener");
+        let max_conns = DEFAULT_MAX_CONNS.max(connections + 16);
+        if max_conns > DEFAULT_MAX_CONNS {
+            if let Some(n) = raise_nofile_limit() {
+                println!("bench-remote: raised RLIMIT_NOFILE to {n}");
+            }
+        }
+        let listener = WireListener::start_with(
+            Arc::clone(&server),
+            &ListenAddr::parse("127.0.0.1:0"),
+            max_conns,
+            WireMode::Auto,
+        )
+        .expect("binding loopback listener");
         Some((server, listener))
     } else {
         None
@@ -840,53 +887,59 @@ fn cmd_bench_remote(args: &Args) {
         (None, None) => unreachable!(),
     };
     let transport = if addr.starts_with("unix:") { "unix" } else { "tcp" };
-    println!(
-        "bench-remote: {jobs} jobs from {clients} remote clients over {transport} {addr} \
-         (open-loop)"
-    );
-
-    let latencies_ms = std::sync::Mutex::new(Vec::<f64>::new());
-    let t0 = std::time::Instant::now();
-    std::thread::scope(|scope| {
-        for c in 0..clients {
-            let addr = addr.as_str();
-            let latencies_ms = &latencies_ms;
-            let n = jobs / clients + usize::from(c < jobs % clients);
-            scope.spawn(move || {
-                let mut client =
-                    RemoteClient::connect(addr, TenantId(c as u32)).expect("connecting client");
-                let mut pending = Vec::with_capacity(n);
-                for _ in 0..n {
-                    // Open loop with retry: saturation comes back as a
-                    // retryable rejection, never a hang or a drop.
-                    loop {
-                        match client.submit("synthetic") {
-                            Ok(id) => {
-                                pending.push((id, std::time::Instant::now()));
-                                break;
+    let (mut lat, connect_s, wall_s) = if connections > 0 {
+        println!(
+            "bench-remote: {jobs} jobs over {connections} held connections \
+             ({clients} driving threads) via {transport} {addr}"
+        );
+        bench_held_conns(&addr, connections, clients, jobs)
+    } else {
+        println!(
+            "bench-remote: {jobs} jobs from {clients} remote clients over {transport} {addr} \
+             (open-loop)"
+        );
+        let latencies_ms = std::sync::Mutex::new(Vec::<f64>::new());
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let addr = addr.as_str();
+                let latencies_ms = &latencies_ms;
+                let n = jobs / clients + usize::from(c < jobs % clients);
+                scope.spawn(move || {
+                    let mut client = RemoteClient::connect(addr, TenantId(c as u32))
+                        .expect("connecting client");
+                    let mut pending = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        // Open loop with retry: saturation comes back as a
+                        // retryable rejection, never a hang or a drop.
+                        loop {
+                            match client.submit("synthetic") {
+                                Ok(id) => {
+                                    pending.push((id, std::time::Instant::now()));
+                                    break;
+                                }
+                                Err(RemoteError::Rejected(_)) => {
+                                    std::thread::sleep(std::time::Duration::from_millis(2));
+                                }
+                                Err(e) => panic!("remote submit failed: {e}"),
                             }
-                            Err(RemoteError::Rejected(_)) => {
-                                std::thread::sleep(std::time::Duration::from_millis(2));
-                            }
-                            Err(e) => panic!("remote submit failed: {e}"),
                         }
                     }
-                }
-                for (id, t_submit) in pending {
-                    match client.wait(id).expect("remote wait failed") {
-                        JobStatus::Done(_) => latencies_ms
-                            .lock()
-                            .unwrap()
-                            .push(t_submit.elapsed().as_secs_f64() * 1e3),
-                        other => panic!("remote job {id} ended as {other:?}"),
+                    for (id, t_submit) in pending {
+                        match client.wait(id).expect("remote wait failed") {
+                            JobStatus::Done(_) => latencies_ms
+                                .lock()
+                                .unwrap()
+                                .push(t_submit.elapsed().as_secs_f64() * 1e3),
+                            other => panic!("remote job {id} ended as {other:?}"),
+                        }
                     }
-                }
-            });
-        }
-    });
-    let wall_s = t0.elapsed().as_secs_f64();
-
-    let mut lat = latencies_ms.into_inner().unwrap();
+                });
+            }
+        });
+        let wall_s = t0.elapsed().as_secs_f64();
+        (latencies_ms.into_inner().unwrap(), 0.0, wall_s)
+    };
     lat.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
     let pct = |p: f64| -> f64 {
         if lat.is_empty() {
@@ -901,13 +954,16 @@ fn cmd_bench_remote(args: &Args) {
         .and_then(|mut c| c.stats_json())
         .unwrap_or_else(|_| "{}".to_string());
 
+    let held = if connections > 0 { connections } else { clients };
     let mut table = bench::harness::Table::new(&[
-        "transport", "jobs", "clients", "wall_s", "jobs_per_s", "p50_ms", "p90_ms", "p99_ms",
+        "transport", "jobs", "clients", "conns", "wall_s", "jobs_per_s", "p50_ms", "p90_ms",
+        "p99_ms",
     ]);
     table.row(&[
         transport.into(),
         lat.len().to_string(),
         clients.to_string(),
+        held.to_string(),
         format!("{wall_s:.3}"),
         format!("{jobs_per_sec:.1}"),
         format!("{p50:.3}"),
@@ -921,8 +977,10 @@ fn cmd_bench_remote(args: &Args) {
     }
     let json = format!(
         "{{\n\"bench\": \"remote\",\n\"transport\": \"{transport}\",\n\
-         \"jobs\": {},\n\"clients\": {clients},\n\"workers\": {workers},\n\
+         \"jobs\": {},\n\"clients\": {clients},\n\"connections\": {held},\n\
+         \"workers\": {workers},\n\
          \"tasks_per_job\": {tasks},\n\"work_ns\": {work_ns},\n\
+         \"connect_s\": {connect_s:.6},\n\
          \"wall_s\": {wall_s:.6},\n\"jobs_per_sec\": {jobs_per_sec:.3},\n\
          \"p50_ms\": {p50:.3},\n\"p90_ms\": {p90:.3},\n\"p99_ms\": {p99:.3},\n\
          \"server\": {server_stats}}}\n",
@@ -938,6 +996,108 @@ fn cmd_bench_remote(args: &Args) {
         server.drain();
         drop(server);
     }
+}
+
+/// The `--connections N` body of [`cmd_bench_remote`]: `threads`
+/// driving threads open `connections` persistent connections between
+/// them and keep every one open until the measured run ends, so the
+/// server multiplexes the full set for the benchmark's whole duration.
+/// Jobs are submitted as pipelined `SubmitBatch` frames (up to
+/// [`PIPELINE_CHUNK`] submissions in flight per frame), round-robin
+/// across each thread's connections; rejected items fall back to the
+/// retried serial path. Returns `(latencies_ms, connect_s, wall_s)`
+/// where `wall_s` excludes the connection-establishment phase.
+fn bench_held_conns(
+    addr: &str,
+    connections: usize,
+    threads: usize,
+    jobs: usize,
+) -> (Vec<f64>, f64, f64) {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Submissions carried per pipelined `SubmitBatch` frame.
+    const PIPELINE_CHUNK: usize = 16;
+
+    let threads = threads.clamp(1, connections.max(1));
+    let connected = AtomicUsize::new(0);
+    // Three rendezvous: all-connected (main starts the run clock),
+    // run-start, all-done (main stops the clock; connections are only
+    // closed after it, so the whole run holds the full set open).
+    let barrier = std::sync::Barrier::new(threads + 1);
+    let latencies = std::sync::Mutex::new(Vec::<f64>::with_capacity(jobs));
+    let (mut connect_s, mut wall_s) = (0.0f64, 0.0f64);
+    let t_connect = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..threads {
+            let my_conns = connections / threads + usize::from(c < connections % threads);
+            let my_jobs = jobs / threads + usize::from(c < jobs % threads);
+            let (connected, barrier, latencies) = (&connected, &barrier, &latencies);
+            scope.spawn(move || {
+                let mut conns: Vec<RemoteClient> = (0..my_conns)
+                    .map(|_| {
+                        RemoteClient::connect(addr, TenantId(c as u32))
+                            .expect("connecting held client")
+                    })
+                    .collect();
+                connected.fetch_add(conns.len(), Ordering::Relaxed);
+                barrier.wait(); // all threads connected
+                barrier.wait(); // run clock started
+                let mut pending = Vec::with_capacity(my_jobs);
+                let mut next = 0usize;
+                let mut left = my_jobs;
+                while left > 0 {
+                    let k = left.min(PIPELINE_CHUNK);
+                    let items: Vec<BatchItem> =
+                        (0..k).map(|_| BatchItem::template("synthetic")).collect();
+                    let t_submit = std::time::Instant::now();
+                    let acks =
+                        conns[next].submit_batch(items).expect("pipelined batch submit failed");
+                    let mut accepted = 0usize;
+                    for ack in acks {
+                        match ack {
+                            Ok(id) => {
+                                pending.push((next, id, t_submit));
+                                accepted += 1;
+                            }
+                            // Saturation rejections roll into a later
+                            // round (open loop with retry, as above).
+                            Err(RemoteError::Rejected(_)) => {}
+                            Err(e) => panic!("remote batch submit failed: {e}"),
+                        }
+                    }
+                    if accepted == 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    left -= accepted;
+                    next = (next + 1) % conns.len();
+                }
+                for (ci, id, t_submit) in pending {
+                    match conns[ci].wait(id).expect("remote wait failed") {
+                        JobStatus::Done(_) => latencies
+                            .lock()
+                            .unwrap()
+                            .push(t_submit.elapsed().as_secs_f64() * 1e3),
+                        other => panic!("remote job {id} ended as {other:?}"),
+                    }
+                }
+                barrier.wait(); // run clock stopped; now release the set
+                for mut conn in conns {
+                    let _ = conn.bye();
+                }
+            });
+        }
+        barrier.wait();
+        connect_s = t_connect.elapsed().as_secs_f64();
+        println!(
+            "bench-remote: {} connections held open",
+            connected.load(Ordering::Relaxed)
+        );
+        let t_run = std::time::Instant::now();
+        barrier.wait();
+        barrier.wait();
+        wall_s = t_run.elapsed().as_secs_f64();
+    });
+    (latencies.into_inner().unwrap(), connect_s, wall_s)
 }
 
 fn cmd_info(args: &Args) {

@@ -49,7 +49,7 @@ pub mod stats;
 pub mod wire;
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -69,7 +69,7 @@ pub use registry::{
 };
 pub use shard::{route_shard, ShardPool, ShardSink};
 pub use stats::{ServerStats, StatsSnapshot, TenantSummary};
-pub use wire::{ListenAddr, WireListener};
+pub use wire::{ListenAddr, WireListener, WireMode};
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -217,6 +217,10 @@ struct State {
     jobs: HashMap<JobId, JobStatus>,
 }
 
+/// A hook observing job status transitions (see
+/// [`SchedServer::add_status_listener`]).
+type StatusListener = Box<dyn Fn(JobId, &JobStatus) + Send + Sync>;
+
 struct Inner {
     registry: Registry,
     state: Mutex<State>,
@@ -238,6 +242,14 @@ struct Inner {
     jobs_submitted: Counter,
     rejected_saturated: Counter,
     rejected_tenant_cap: Counter,
+    /// Blocking-`Wait` slices that expired with the job still running —
+    /// the polled fallback path. The reactor's push path keeps this 0.
+    wait_polls: Counter,
+    /// Status-transition hooks, invoked under the state lock so they
+    /// observe transitions in true order. Guarded by `has_listeners`
+    /// so the hot path pays one relaxed load when nobody subscribed.
+    listeners: Mutex<Vec<StatusListener>>,
+    has_listeners: AtomicBool,
 }
 
 impl Inner {
@@ -249,9 +261,22 @@ impl Inner {
 
     fn set_status(&self, id: JobId, status: JobStatus) {
         let mut st = self.state.lock().unwrap();
+        self.publish_locked(id, &status);
         st.jobs.insert(id, status);
         drop(st);
         self.job_cv.notify_all();
+    }
+
+    /// Run the status listeners. Must be called with the state lock
+    /// held — that is what serializes listener invocations into the
+    /// true transition order.
+    fn publish_locked(&self, id: JobId, status: &JobStatus) {
+        if !self.has_listeners.load(Ordering::Acquire) {
+            return;
+        }
+        for l in self.listeners.lock().unwrap().iter() {
+            l(id, status);
+        }
     }
 }
 
@@ -283,6 +308,10 @@ impl SchedServer {
             "Submissions rejected with backpressure, by reason.",
             &[("reason", "tenant_at_capacity")],
         );
+        let wait_polls = obs.counter(
+            "quicksched_wait_slice_polls_total",
+            "Blocking-Wait slices that expired with the job unsettled (polled fallback path).",
+        );
         let inner = Arc::new(Inner {
             registry: Registry::new(config.sched.clone(), config.max_pool),
             state: Mutex::new(State { admission, jobs: HashMap::new() }),
@@ -298,6 +327,9 @@ impl SchedServer {
             jobs_submitted,
             rejected_saturated,
             rejected_tenant_cap,
+            wait_polls,
+            listeners: Mutex::new(Vec::new()),
+            has_listeners: AtomicBool::new(false),
         });
         // Workers report completions straight into the dispatcher queue.
         let finish_tx = Mutex::new(inner.tx.lock().unwrap().clone());
@@ -368,10 +400,70 @@ impl SchedServer {
                 return Err(e);
             }
             st.jobs.insert(id, JobStatus::Queued);
+            self.inner.publish_locked(id, &JobStatus::Queued);
         }
         self.inner.jobs_submitted.inc();
         self.inner.send(Event::Kick);
         Ok(id)
+    }
+
+    /// Submit several jobs under one admission-lock acquisition — the
+    /// wire layer's `SubmitBatch` path. Accepted items land adjacent in
+    /// the fair queue, so consecutive same-template submissions fuse in
+    /// a single admission sweep ([`ServerConfig::with_batch_max`])
+    /// exactly like a burst of [`SchedServer::try_submit`] calls would,
+    /// minus the per-item lock round-trips. Per-item results preserve
+    /// submission order; one dispatcher kick covers the whole batch.
+    pub fn try_submit_batch(&self, specs: Vec<JobSpec>) -> Vec<Result<JobId, SubmitError>> {
+        let mut out = Vec::with_capacity(specs.len());
+        let mut accepted = 0u64;
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            for spec in specs {
+                let id = JobId(self.inner.next_job.fetch_add(1, Ordering::Relaxed));
+                let tenant = spec.tenant;
+                let queued = QueuedJob { id, spec, enqueued: Instant::now() };
+                match st.admission.try_push(tenant, queued) {
+                    Ok(()) => {
+                        st.jobs.insert(id, JobStatus::Queued);
+                        self.inner.publish_locked(id, &JobStatus::Queued);
+                        accepted += 1;
+                        out.push(Ok(id));
+                    }
+                    Err(e) => {
+                        match e {
+                            SubmitError::ServerSaturated { .. } => {
+                                self.inner.rejected_saturated.inc()
+                            }
+                            SubmitError::TenantAtCapacity { .. } => {
+                                self.inner.rejected_tenant_cap.inc()
+                            }
+                        }
+                        out.push(Err(e));
+                    }
+                }
+            }
+        }
+        if accepted > 0 {
+            self.inner.jobs_submitted.add(accepted);
+            self.inner.send(Event::Kick);
+        }
+        out
+    }
+
+    /// Register a hook observing **every** job status transition:
+    /// `Queued` at submission, `Running` at admission, and the terminal
+    /// state at completion or cancellation. Hooks run under the
+    /// server's state lock, so they see transitions in their true order
+    /// and never miss or duplicate one — which is what lets the wire
+    /// reactor push subscription events instead of polling. Hooks must
+    /// be cheap and must not call back into the server.
+    pub fn add_status_listener(
+        &self,
+        listener: impl Fn(JobId, &JobStatus) + Send + Sync + 'static,
+    ) {
+        self.inner.listeners.lock().unwrap().push(Box::new(listener));
+        self.inner.has_listeners.store(true, Ordering::Release);
     }
 
     /// Submit a job; returns immediately with its handle.
@@ -461,6 +553,7 @@ impl SchedServer {
                 Some(s) => {
                     let now = Instant::now();
                     if now >= deadline {
+                        self.inner.wait_polls.inc();
                         return Some(s);
                     }
                     st = self.inner.job_cv.wait_timeout(st, deadline - now).unwrap().0;
@@ -482,6 +575,7 @@ impl SchedServer {
         let mut st = self.inner.state.lock().unwrap();
         if st.admission.remove_where(|q| q.id == id).is_some() {
             st.jobs.insert(id, JobStatus::Cancelled);
+            self.inner.publish_locked(id, &JobStatus::Cancelled);
             drop(st);
             self.inner.job_cv.notify_all();
             true

@@ -39,8 +39,11 @@ use crate::server::protocol::{JobId, JobReport, JobStatus, TenantId};
 /// Protocol revision spoken by this build. Negotiated in `Hello`.
 /// Version 2 added the `Metrics` request, the `MetricsText` response,
 /// and chunked continuation frames ([`Response::Chunk`]) for responses
-/// larger than one frame.
-pub const WIRE_VERSION: u32 = 2;
+/// larger than one frame. Version 3 added pipelining-era messages:
+/// [`Request::Subscribe`] / [`Response::Event`] for server-push status
+/// streams and [`Request::SubmitBatch`] / [`Response::SubmittedBatch`]
+/// for batched submissions feeding the fused admission path.
+pub const WIRE_VERSION: u32 = 3;
 
 /// Upper bound on a frame body, enforced on both ends before any body
 /// allocation. Large enough for a stats snapshot, small enough that a
@@ -235,6 +238,22 @@ impl FrameBuffer {
         self.buf.extend_from_slice(data);
     }
 
+    /// No bytes buffered (not even a partial frame).
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Heap capacity currently held, whatever is buffered.
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    /// Release capacity above `cap` (used to bound the steady-state
+    /// footprint of long-lived idle connections).
+    pub fn shrink_to(&mut self, cap: usize) {
+        self.buf.shrink_to(cap);
+    }
+
     /// Pop one complete frame body if buffered. An oversized declared
     /// length errors immediately — without waiting for (or buffering)
     /// the claimed body.
@@ -268,6 +287,30 @@ const REQ_CANCEL: u8 = 4;
 const REQ_STATS: u8 = 5;
 const REQ_BYE: u8 = 6;
 const REQ_METRICS: u8 = 7;
+const REQ_SUBSCRIBE: u8 = 8;
+const REQ_SUBMIT_BATCH: u8 = 9;
+
+/// One submission inside a [`Request::SubmitBatch`] frame — the same
+/// fields as [`Request::Submit`], minus the tag.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchItem {
+    pub template: String,
+    pub reuse: bool,
+    pub args: Vec<u8>,
+}
+
+impl BatchItem {
+    /// A template-reusing submission with no arguments.
+    pub fn template(name: impl Into<String>) -> Self {
+        BatchItem { template: name.into(), reuse: true, args: Vec::new() }
+    }
+
+    /// Attach opaque argument bytes (parameterized templates).
+    pub fn with_args(mut self, args: Vec<u8>) -> Self {
+        self.args = args;
+        self
+    }
+}
 
 /// Client → server messages.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -290,6 +333,19 @@ pub enum Request {
     /// Request the Prometheus text exposition (server + listener
     /// metrics; see `SchedServer::metrics_text`). Wire version ≥ 2.
     Metrics,
+    /// Subscribe to server-push status events for one job: the server
+    /// answers with an in-order [`Response::Status`] snapshot, then
+    /// pushes a [`Response::Event`] frame for every later transition
+    /// (ranks are monotone — each state is delivered at most once) and
+    /// drops the subscription after the terminal event. Wire ≥ 3.
+    Subscribe { job: u64 },
+    /// Several submissions in one frame. The server admits them under
+    /// a single admission-lock acquisition, so consecutive
+    /// same-template items land adjacent in the fair queue and fuse in
+    /// one batched sweep (`ServerConfig::with_batch_max`). Answered by
+    /// one [`Response::SubmittedBatch`] with per-item results, in
+    /// order. Wire ≥ 3.
+    SubmitBatch { items: Vec<BatchItem> },
     /// Orderly close.
     Bye,
 }
@@ -323,6 +379,19 @@ impl Request {
             }
             Request::Stats => out.push(REQ_STATS),
             Request::Metrics => out.push(REQ_METRICS),
+            Request::Subscribe { job } => {
+                out.push(REQ_SUBSCRIBE);
+                put_varint(&mut out, *job);
+            }
+            Request::SubmitBatch { items } => {
+                out.push(REQ_SUBMIT_BATCH);
+                put_varint(&mut out, items.len() as u64);
+                for it in items {
+                    put_str(&mut out, &it.template);
+                    out.push(it.reuse as u8);
+                    put_bytes(&mut out, &it.args);
+                }
+            }
             Request::Bye => out.push(REQ_BYE),
         }
         out
@@ -342,6 +411,23 @@ impl Request {
             REQ_CANCEL => Request::Cancel { job: r.varint()? },
             REQ_STATS => Request::Stats,
             REQ_METRICS => Request::Metrics,
+            REQ_SUBSCRIBE => Request::Subscribe { job: r.varint()? },
+            REQ_SUBMIT_BATCH => {
+                let n = r.varint()?;
+                // No `with_capacity` from the wire-declared count: a
+                // hostile `n` costs nothing until items actually decode,
+                // and each iteration consumes ≥ 3 body bytes, so work is
+                // bounded by the (length-checked) frame size.
+                let mut items = Vec::new();
+                for _ in 0..n {
+                    items.push(BatchItem {
+                        template: r.text()?.to_string(),
+                        reuse: r.bool()?,
+                        args: r.bytes()?.to_vec(),
+                    });
+                }
+                Request::SubmitBatch { items }
+            }
             REQ_BYE => Request::Bye,
             t => return Err(ProtocolError::BadTag { kind: "request", tag: t }),
         };
@@ -439,6 +525,28 @@ pub enum WireStatus {
 }
 
 impl WireStatus {
+    /// `true` for states that settle a blocking `Wait`: the terminal
+    /// states, plus `Unknown` (the server will never learn more about
+    /// an id it has never seen).
+    pub fn is_settled(&self) -> bool {
+        !matches!(self, WireStatus::Queued | WireStatus::Running)
+    }
+
+    /// Monotone delivery rank for subscription streams: a job only
+    /// ever moves `Queued (0) → Running (1) → terminal (2)`, and
+    /// `Unknown` ranks above everything (a vanished job ends the
+    /// stream). Subscriptions deliver each rank at most once, in
+    /// order, by dropping events whose rank is not strictly greater
+    /// than the last one delivered.
+    pub fn rank(&self) -> u8 {
+        match self {
+            WireStatus::Queued => 0,
+            WireStatus::Running => 1,
+            WireStatus::Done(_) | WireStatus::Failed(_) | WireStatus::Cancelled => 2,
+            WireStatus::Unknown => 3,
+        }
+    }
+
     pub fn from_status(s: &JobStatus) -> Self {
         match s {
             JobStatus::Queued => WireStatus::Queued,
@@ -540,6 +648,18 @@ const RSP_STATS: u8 = 4;
 const RSP_ERROR: u8 = 5;
 const RSP_METRICS: u8 = 6;
 const RSP_CHUNK: u8 = 7;
+const RSP_EVENT: u8 = 8;
+const RSP_SUBMITTED_BATCH: u8 = 9;
+
+/// Per-item outcome inside a [`Response::SubmittedBatch`]. Rejections
+/// carry the same `(code, aux)` pair a standalone [`Response::Error`]
+/// would — `aux` is the backpressure parameter (tenant cap or queue
+/// bound) — so batch members stay individually retryable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchResult {
+    Accepted { job: u64 },
+    Rejected { code: ErrorCode, aux: u64 },
+}
 
 /// Server → client messages.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -562,6 +682,14 @@ pub enum Response {
     /// [`write_response`], reassembled transparently by
     /// [`read_response`] — a chunk never reaches application code.
     Chunk { last: bool, data: Vec<u8> },
+    /// A server-push status transition for a job the connection
+    /// [`Request::Subscribe`]d to. Unsolicited: it may arrive between
+    /// any two request/response pairs, never inside a chunk sequence.
+    /// Wire ≥ 3.
+    Event { job: u64, status: WireStatus },
+    /// Per-item results for a [`Request::SubmitBatch`], in submission
+    /// order. Wire ≥ 3.
+    SubmittedBatch { results: Vec<BatchResult> },
     /// The request was rejected; `aux` carries the code's parameter
     /// (see [`ErrorCode`]). Backpressure codes are retryable.
     Error { code: ErrorCode, aux: u64, message: String },
@@ -603,6 +731,28 @@ impl Response {
                 out.push(*last as u8);
                 put_bytes(&mut out, data);
             }
+            Response::Event { job, status } => {
+                out.push(RSP_EVENT);
+                put_varint(&mut out, *job);
+                status.put(&mut out);
+            }
+            Response::SubmittedBatch { results } => {
+                out.push(RSP_SUBMITTED_BATCH);
+                put_varint(&mut out, results.len() as u64);
+                for res in results {
+                    match res {
+                        BatchResult::Accepted { job } => {
+                            out.push(1);
+                            put_varint(&mut out, *job);
+                        }
+                        BatchResult::Rejected { code, aux } => {
+                            out.push(0);
+                            out.push(code.to_u8());
+                            put_varint(&mut out, *aux);
+                        }
+                    }
+                }
+            }
             Response::Error { code, aux, message } => {
                 out.push(RSP_ERROR);
                 out.push(code.to_u8());
@@ -625,6 +775,22 @@ impl Response {
             RSP_STATS => Response::StatsJson { json: r.text()?.to_string() },
             RSP_METRICS => Response::MetricsText { text: r.text()?.to_string() },
             RSP_CHUNK => Response::Chunk { last: r.bool()?, data: r.bytes()?.to_vec() },
+            RSP_EVENT => Response::Event { job: r.varint()?, status: WireStatus::take(&mut r)? },
+            RSP_SUBMITTED_BATCH => {
+                let n = r.varint()?;
+                // Same discipline as `SubmitBatch` decoding: no
+                // count-driven pre-allocation, every item must decode.
+                let mut results = Vec::new();
+                for _ in 0..n {
+                    results.push(if r.bool()? {
+                        BatchResult::Accepted { job: r.varint()? }
+                    } else {
+                        let code = ErrorCode::from_u8(r.u8()?)?;
+                        BatchResult::Rejected { code, aux: r.varint()? }
+                    });
+                }
+                Response::SubmittedBatch { results }
+            }
             RSP_ERROR => Response::Error {
                 code: ErrorCode::from_u8(r.u8()?)?,
                 aux: r.varint()?,
@@ -908,6 +1074,70 @@ mod tests {
         assert_eq!(Request::decode(&req.encode()).unwrap(), req);
         let resp = Response::MetricsText { text: "# TYPE a counter\na 1\n".into() };
         assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
+    }
+
+    #[test]
+    fn subscribe_and_event_roundtrip() {
+        let req = Request::Subscribe { job: 77 };
+        assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+        let resp = Response::Event { job: 77, status: WireStatus::Running };
+        assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
+        let terminal = Response::Event { job: 77, status: WireStatus::Failed("boom".into()) };
+        assert_eq!(Response::decode(&terminal.encode()).unwrap(), terminal);
+    }
+
+    #[test]
+    fn submit_batch_roundtrips_including_empty() {
+        let req = Request::SubmitBatch {
+            items: vec![
+                BatchItem::template("qr"),
+                BatchItem { template: "syn".into(), reuse: false, args: vec![7, 8] },
+                BatchItem::template("qr").with_args(vec![1]),
+            ],
+        };
+        assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+        let empty = Request::SubmitBatch { items: Vec::new() };
+        assert_eq!(Request::decode(&empty.encode()).unwrap(), empty);
+        let resp = Response::SubmittedBatch {
+            results: vec![
+                BatchResult::Accepted { job: 4 },
+                BatchResult::Rejected { code: ErrorCode::TenantAtCapacity, aux: 2 },
+                BatchResult::Rejected { code: ErrorCode::ServerSaturated, aux: 128 },
+            ],
+        };
+        assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
+        let none = Response::SubmittedBatch { results: Vec::new() };
+        assert_eq!(Response::decode(&none.encode()).unwrap(), none);
+    }
+
+    #[test]
+    fn batch_prefixes_and_hostile_counts_error_cleanly() {
+        let body = Request::SubmitBatch {
+            items: vec![BatchItem::template("a"), BatchItem::template("b")],
+        }
+        .encode();
+        for cut in 1..body.len() {
+            assert!(Request::decode(&body[..cut]).is_err(), "prefix {cut} decoded");
+        }
+        // A count far beyond the body must fail on the first missing
+        // item, without any count-sized allocation.
+        let mut hostile = vec![REQ_SUBMIT_BATCH];
+        put_varint(&mut hostile, u64::MAX);
+        assert!(matches!(Request::decode(&hostile), Err(ProtocolError::Truncated)));
+        let mut hostile_rsp = vec![RSP_SUBMITTED_BATCH];
+        put_varint(&mut hostile_rsp, u64::MAX / 2);
+        assert!(Response::decode(&hostile_rsp).is_err());
+    }
+
+    #[test]
+    fn status_ranks_are_monotone_along_the_lifecycle() {
+        assert!(WireStatus::Queued.rank() < WireStatus::Running.rank());
+        assert!(WireStatus::Running.rank() < WireStatus::Cancelled.rank());
+        assert!(WireStatus::Done(WireReport::default()).rank() == WireStatus::Cancelled.rank());
+        assert!(!WireStatus::Queued.is_settled());
+        assert!(!WireStatus::Running.is_settled());
+        assert!(WireStatus::Unknown.is_settled());
+        assert!(WireStatus::Failed("x".into()).is_settled());
     }
 
     #[test]

@@ -1,0 +1,839 @@
+//! The per-connection protocol state machine shared by every wire
+//! front-end: the epoll reactor, the threaded fallback listener, and
+//! the deterministic simulator's connection actors all drive exactly
+//! this code — so a DST sweep over the simulator exercises the same
+//! decode/dispatch/ordering logic a production reactor runs.
+//!
+//! A connection is a pipeline: bytes accumulate in a [`FrameBuffer`],
+//! complete frames decode into [`Request`]s and dispatch immediately
+//! (no head-of-line blocking on reads), and responses queue in an
+//! ordered [`VecDeque`] so the client observes **responses in request
+//! order** no matter how requests interleave. A blocking `Wait` whose
+//! job is still running becomes a *hole* in that queue: later requests
+//! keep executing, but their responses stay parked behind the hole
+//! until the job settles ([`ConnSm::on_job_update`]) — in-order
+//! pipelining by construction.
+//!
+//! Subscriptions ([`Request::Subscribe`]) are the one exception to
+//! strict ordering: [`Response::Event`] frames are pushed out-of-band
+//! (whole frames, never interleaved inside another frame) as soon as a
+//! watched job advances. Delivery is exactly-once and in-order per job
+//! via [`WireStatus::rank`] monotonicity: an event is emitted only if
+//! its rank strictly exceeds the last rank delivered for that job.
+//!
+//! The state machine owns no sockets and no clocks. Environment access
+//! goes through [`ConnService`] — the real listener backs it with
+//! [`crate::server::SchedServer`], the simulator with its virtual-time
+//! server model.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::codec::{
+    self, BatchItem, BatchResult, ErrorCode, FrameBuffer, Request, Response, WireStatus,
+    WIRE_VERSION,
+};
+use crate::server::protocol::{SubmitError, TenantId};
+
+/// What the state machine needs from its environment. One implementor
+/// per front-end; observability hooks default to no-ops so the
+/// simulator only overrides what it traces.
+pub(crate) trait ConnService {
+    /// Submit one job for `tenant`; `Ok` carries the job id.
+    fn submit(
+        &mut self,
+        tenant: TenantId,
+        template: String,
+        reuse: bool,
+        args: Vec<u8>,
+    ) -> Result<u64, SubmitError>;
+
+    /// Submit a whole batch. The default loops [`ConnService::submit`];
+    /// the real server overrides it with a single-lock admission burst
+    /// so same-template items land adjacent and fuse in one sweep.
+    fn submit_batch(
+        &mut self,
+        tenant: TenantId,
+        items: Vec<BatchItem>,
+    ) -> Vec<Result<u64, SubmitError>> {
+        items.into_iter().map(|it| self.submit(tenant, it.template, it.reuse, it.args)).collect()
+    }
+
+    /// Non-blocking status lookup (`Unknown` for ids never seen).
+    fn poll(&mut self, job: u64) -> WireStatus;
+
+    fn cancel(&mut self, job: u64) -> bool;
+    fn stats_json(&mut self) -> String;
+    fn metrics_text(&mut self) -> String;
+
+    /// A `Wait` parked on `job`: arrange for
+    /// [`ConnSm::on_job_update`] to be called when it settles. The
+    /// state machine polls again *after* registering, so a transition
+    /// racing the registration is never lost.
+    fn register_wait(&mut self, job: u64);
+
+    /// The parked `Wait` resolved immediately after registration; the
+    /// registration may be dropped (no wakeup will be consumed).
+    fn unregister_wait(&mut self, _job: u64) {}
+
+    /// A `Subscribe` opened a watch on `job`: arrange for
+    /// [`ConnSm::on_job_update`] on every status transition.
+    fn register_watch(&mut self, job: u64);
+
+    /// The watch ended (terminal snapshot or terminal event delivered).
+    fn unregister_watch(&mut self, _job: u64) {}
+
+    /// Duplicate `Hello` policy: the simulator answers a *same-tenant,
+    /// same-version* repeat idempotently (network dup of the handshake
+    /// frame), the real listener rejects any second `Hello`.
+    fn idempotent_hello(&mut self) -> bool {
+        false
+    }
+
+    // --- observability hooks -------------------------------------------
+    fn on_request(&mut self, _req: &Request) {}
+    fn on_response(&mut self, _resp: &Response) {}
+    /// A complete frame body of `len` bytes was consumed.
+    fn on_frame_rx(&mut self, _len: usize) {}
+    /// `frames` response frames totalling `bytes` (headers included)
+    /// were encoded into the outgoing buffer.
+    fn on_frames_tx(&mut self, _frames: u64, _bytes: u64) {}
+    /// A frame or request failed to decode (the connection will close).
+    fn on_decode_error(&mut self) {}
+}
+
+/// Map an admission rejection onto its wire `(code, aux)` pair.
+pub(crate) fn reject_parts(e: &SubmitError) -> (ErrorCode, u64) {
+    match e {
+        SubmitError::TenantAtCapacity { cap, .. } => (ErrorCode::TenantAtCapacity, *cap as u64),
+        SubmitError::ServerSaturated { max_queued } => {
+            (ErrorCode::ServerSaturated, *max_queued as u64)
+        }
+    }
+}
+
+/// Map an admission rejection onto its wire error (all retryable).
+pub(crate) fn reject(e: &SubmitError) -> Response {
+    let (code, aux) = reject_parts(e);
+    Response::Error { code, aux, message: e.to_string() }
+}
+
+/// One slot in the ordered response queue: either a response ready to
+/// encode, or a hole left by a `Wait` whose job has not settled.
+enum Slot {
+    Ready(Response),
+    Wait(u64),
+}
+
+/// Protocol state for one connection. See the module docs for the
+/// pipeline shape; drivers feed [`ConnSm::on_bytes`] /
+/// [`ConnSm::on_job_update`] and drain [`ConnSm::out`].
+#[derive(Default)]
+pub struct ConnSm {
+    fb: FrameBuffer,
+    tenant: Option<TenantId>,
+    /// Responses in request order; `Wait` holes block later slots.
+    pending: VecDeque<Slot>,
+    /// job → last delivered [`WireStatus::rank`] for open subscriptions.
+    watches: BTreeMap<u64, u8>,
+    /// Encoded frames awaiting transport write.
+    out: Vec<u8>,
+    /// `Bye`, EOF, or a protocol violation: stop dispatching, close
+    /// once everything owed (including parked `Wait` answers) is out.
+    closing: bool,
+    /// Unrecoverable: drop the connection without draining.
+    dead: bool,
+}
+
+impl ConnSm {
+    /// Feed transport bytes: assemble frames, dispatch each request,
+    /// and flush ready responses into the outgoing buffer.
+    pub(crate) fn on_bytes<S: ConnService>(&mut self, data: &[u8], svc: &mut S) {
+        if self.dead {
+            return;
+        }
+        self.fb.extend(data);
+        while !self.closing {
+            match self.fb.take_frame() {
+                Ok(Some(body)) => {
+                    svc.on_frame_rx(body.len());
+                    self.dispatch(&body, svc);
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    svc.on_decode_error();
+                    self.fail_close(ErrorCode::BadRequest, 0, &e.to_string());
+                    break;
+                }
+            }
+        }
+        self.flush_ready(svc);
+    }
+
+    /// A job some slot of this connection cares about changed status.
+    /// Settled statuses fill `Wait` holes; watched jobs get an
+    /// out-of-band [`Response::Event`] if the rank advanced.
+    pub(crate) fn on_job_update<S: ConnService>(
+        &mut self,
+        job: u64,
+        status: &WireStatus,
+        svc: &mut S,
+    ) {
+        if self.dead {
+            return;
+        }
+        if status.is_settled() {
+            for slot in self.pending.iter_mut() {
+                if matches!(slot, Slot::Wait(j) if *j == job) {
+                    *slot = Slot::Ready(Response::Status { job, status: status.clone() });
+                }
+            }
+        }
+        if let Some(&last) = self.watches.get(&job) {
+            let rank = status.rank();
+            if rank > last {
+                if rank >= 2 {
+                    self.watches.remove(&job);
+                    svc.unregister_watch(job);
+                } else {
+                    self.watches.insert(job, rank);
+                }
+                self.emit(&Response::Event { job, status: status.clone() }, svc);
+            }
+        }
+        self.flush_ready(svc);
+    }
+
+    /// Poll every parked job once and apply whatever advanced — the
+    /// threaded fallback's per-`wait_slice` scan. The reactor never
+    /// calls this; it gets push notifications instead.
+    pub(crate) fn poll_parked<S: ConnService>(&mut self, svc: &mut S) {
+        for job in self.parked_jobs() {
+            let status = svc.poll(job);
+            self.on_job_update(job, &status, svc);
+        }
+    }
+
+    /// Shutdown: answer every parked `Wait` with a retryable
+    /// `ShuttingDown` error (the blocking listener's historical
+    /// behavior) and refuse further requests.
+    pub(crate) fn abort_waits<S: ConnService>(&mut self, svc: &mut S) {
+        for slot in self.pending.iter_mut() {
+            if matches!(slot, Slot::Wait(_)) {
+                *slot = Slot::Ready(Response::Error {
+                    code: ErrorCode::ShuttingDown,
+                    aux: 0,
+                    message: "listener shutting down".into(),
+                });
+            }
+        }
+        self.closing = true;
+        self.flush_ready(svc);
+    }
+
+    /// The peer closed its write side: drain what is buffered, answer
+    /// what is owed, then close.
+    pub(crate) fn on_peer_closed(&mut self) {
+        self.closing = true;
+    }
+
+    /// Encoded bytes awaiting transport write.
+    pub(crate) fn out(&self) -> &[u8] {
+        &self.out
+    }
+
+    /// The transport accepted the first `n` bytes of [`ConnSm::out`].
+    pub(crate) fn consume_out(&mut self, n: usize) {
+        self.out.drain(..n);
+    }
+
+    /// The transport accepted all of [`ConnSm::out`].
+    pub(crate) fn clear_out(&mut self) {
+        self.out.clear();
+    }
+
+    /// Any parked `Wait` holes or open watches?
+    pub(crate) fn has_parked_work(&self) -> bool {
+        !self.watches.is_empty()
+            || self.pending.iter().any(|s| matches!(s, Slot::Wait(_)))
+    }
+
+    /// Jobs with a parked `Wait` or an open watch, deduplicated.
+    pub(crate) fn parked_jobs(&self) -> Vec<u64> {
+        let mut jobs: Vec<u64> = self
+            .pending
+            .iter()
+            .filter_map(|s| match s {
+                Slot::Wait(j) => Some(*j),
+                Slot::Ready(_) => None,
+            })
+            .collect();
+        jobs.extend(self.watches.keys().copied());
+        jobs.sort_unstable();
+        jobs.dedup();
+        jobs
+    }
+
+    /// `true` once the connection owes the peer nothing more: either
+    /// it is unrecoverable, or it is closing with every response
+    /// flushed and no `Wait` holes outstanding.
+    pub(crate) fn should_close(&self) -> bool {
+        self.dead || (self.closing && self.out.is_empty() && self.pending.is_empty())
+    }
+
+    /// Release burst capacity once buffers are idle, bounding the
+    /// steady-state footprint of a parked connection: 10k idle
+    /// connections cost 10k × a few KiB, not 10k × the largest burst
+    /// each ever carried.
+    pub(crate) fn maybe_shrink(&mut self) {
+        const KEEP: usize = 4096;
+        if self.out.is_empty() && self.out.capacity() > KEEP {
+            self.out.shrink_to(KEEP);
+        }
+        if self.fb.is_empty() && self.fb.capacity() > KEEP {
+            self.fb.shrink_to(KEEP);
+        }
+    }
+
+    /// Bytes of heap this connection's state currently holds (the
+    /// `perf_guard` per-connection memory ceiling reads this).
+    pub fn heap_bytes(&self) -> usize {
+        self.fb.capacity()
+            + self.out.capacity()
+            + self.pending.capacity() * std::mem::size_of::<Slot>()
+            + self.watches.len() * (std::mem::size_of::<(u64, u8)>() + 32)
+    }
+
+    fn dispatch<S: ConnService>(&mut self, body: &[u8], svc: &mut S) {
+        let req = match Request::decode(body) {
+            Ok(r) => r,
+            Err(e) => {
+                svc.on_decode_error();
+                self.fail_close(ErrorCode::BadRequest, 0, &e.to_string());
+                return;
+            }
+        };
+        svc.on_request(&req);
+        let resp = match req {
+            Request::Hello { version, tenant } => match self.tenant {
+                Some(t) if svc.idempotent_hello() && t.0 == tenant && version == WIRE_VERSION => {
+                    Some(Response::HelloOk { version: WIRE_VERSION, tenant })
+                }
+                Some(_) => {
+                    // Tenant identity is fixed per connection; a second
+                    // Hello rebinding it would let one socket spread
+                    // load across other tenants' caps and weights.
+                    self.fail_close(
+                        ErrorCode::BadRequest,
+                        0,
+                        "Hello already completed on this connection",
+                    );
+                    None
+                }
+                None if version != WIRE_VERSION => {
+                    self.fail_close(
+                        ErrorCode::VersionMismatch,
+                        WIRE_VERSION as u64,
+                        &format!("server speaks wire version {WIRE_VERSION}"),
+                    );
+                    None
+                }
+                None => {
+                    self.tenant = Some(TenantId(tenant));
+                    Some(Response::HelloOk { version: WIRE_VERSION, tenant })
+                }
+            },
+            Request::Bye => {
+                self.closing = true;
+                None
+            }
+            other => {
+                let Some(tenant) = self.tenant else {
+                    self.fail_close(ErrorCode::NeedHello, 0, "Hello must be the first message");
+                    return;
+                };
+                match other {
+                    Request::Submit { template, reuse, args } => {
+                        Some(match svc.submit(tenant, template, reuse, args) {
+                            Ok(job) => Response::Submitted { job },
+                            Err(e) => reject(&e),
+                        })
+                    }
+                    Request::SubmitBatch { items } => {
+                        let results = svc
+                            .submit_batch(tenant, items)
+                            .into_iter()
+                            .map(|r| match r {
+                                Ok(job) => BatchResult::Accepted { job },
+                                Err(e) => {
+                                    let (code, aux) = reject_parts(&e);
+                                    BatchResult::Rejected { code, aux }
+                                }
+                            })
+                            .collect();
+                        Some(Response::SubmittedBatch { results })
+                    }
+                    Request::Poll { job } => {
+                        Some(Response::Status { job, status: svc.poll(job) })
+                    }
+                    Request::Wait { job } => {
+                        let status = svc.poll(job);
+                        if status.is_settled() {
+                            Some(Response::Status { job, status })
+                        } else {
+                            self.pending.push_back(Slot::Wait(job));
+                            svc.register_wait(job);
+                            // Poll again *after* registering: a job that
+                            // settled between the first poll and the
+                            // registration would otherwise never wake us.
+                            let status = svc.poll(job);
+                            if status.is_settled() {
+                                svc.unregister_wait(job);
+                                self.on_job_update(job, &status, svc);
+                            }
+                            None
+                        }
+                    }
+                    Request::Subscribe { job } => {
+                        // Register before snapshotting: a transition after
+                        // the snapshot becomes an event, one before it is
+                        // absorbed by the snapshot's rank — nothing lost,
+                        // nothing duplicated.
+                        svc.register_watch(job);
+                        let snap = svc.poll(job);
+                        if snap.rank() >= 2 {
+                            svc.unregister_watch(job);
+                        } else {
+                            self.watches.insert(job, snap.rank());
+                        }
+                        Some(Response::Status { job, status: snap })
+                    }
+                    Request::Cancel { job } => {
+                        Some(Response::Cancelled { job, ok: svc.cancel(job) })
+                    }
+                    Request::Stats => Some(Response::StatsJson { json: svc.stats_json() }),
+                    Request::Metrics => {
+                        Some(Response::MetricsText { text: svc.metrics_text() })
+                    }
+                    Request::Hello { .. } | Request::Bye => unreachable!("handled above"),
+                }
+            }
+        };
+        if let Some(resp) = resp {
+            self.pending.push_back(Slot::Ready(resp));
+        }
+    }
+
+    /// Queue an error response and close after it drains.
+    fn fail_close(&mut self, code: ErrorCode, aux: u64, message: &str) {
+        self.pending
+            .push_back(Slot::Ready(Response::Error { code, aux, message: message.to_string() }));
+        self.closing = true;
+    }
+
+    /// Encode the ready prefix of the response queue — everything up
+    /// to the first unresolved `Wait` hole.
+    fn flush_ready<S: ConnService>(&mut self, svc: &mut S) {
+        while matches!(self.pending.front(), Some(Slot::Ready(_))) {
+            let Some(Slot::Ready(resp)) = self.pending.pop_front() else { break };
+            self.emit(&resp, svc);
+            if self.dead {
+                return;
+            }
+        }
+    }
+
+    /// Encode one response (chunking oversized bodies) into `out`.
+    fn emit<S: ConnService>(&mut self, resp: &Response, svc: &mut S) {
+        svc.on_response(resp);
+        match codec::write_response(&mut self.out, resp) {
+            Ok((frames, bytes)) => svc.on_frames_tx(frames, bytes),
+            // A Vec sink cannot fail at the I/O layer; the only error is
+            // an unchunkable oversized frame — drop the connection
+            // rather than desynchronize the stream.
+            Err(_) => self.dead = true,
+        }
+    }
+}
+
+/// Heap + inline footprint of one freshly accepted connection — the
+/// baseline the `perf_guard` per-connection memory ceiling ratchets.
+pub fn idle_conn_footprint() -> usize {
+    let sm = ConnSm::default();
+    std::mem::size_of::<ConnSm>() + sm.heap_bytes()
+}
+
+/// Footprint after a submit burst has been served, drained, and the
+/// buffers allowed to shrink — the steady-state cost of one of 10k
+/// parked connections.
+pub fn post_burst_conn_footprint() -> usize {
+    struct NullSvc {
+        next: u64,
+    }
+    impl ConnService for NullSvc {
+        fn submit(
+            &mut self,
+            _tenant: TenantId,
+            _template: String,
+            _reuse: bool,
+            _args: Vec<u8>,
+        ) -> Result<u64, SubmitError> {
+            self.next += 1;
+            Ok(self.next)
+        }
+        fn poll(&mut self, _job: u64) -> WireStatus {
+            WireStatus::Cancelled
+        }
+        fn cancel(&mut self, _job: u64) -> bool {
+            false
+        }
+        fn stats_json(&mut self) -> String {
+            String::new()
+        }
+        fn metrics_text(&mut self) -> String {
+            String::new()
+        }
+        fn register_wait(&mut self, _job: u64) {}
+        fn register_watch(&mut self, _job: u64) {}
+    }
+
+    let mut sm = ConnSm::default();
+    let mut svc = NullSvc { next: 0 };
+    let mut wire = Vec::new();
+    let hello = Request::Hello { version: WIRE_VERSION, tenant: 0 }.encode();
+    codec::write_frame(&mut wire, &hello).expect("hello frame");
+    for i in 0..256u32 {
+        let body = Request::Submit {
+            template: "synthetic-args".into(),
+            reuse: true,
+            args: i.to_le_bytes().repeat(50),
+        }
+        .encode();
+        codec::write_frame(&mut wire, &body).expect("submit frame");
+    }
+    sm.on_bytes(&wire, &mut svc);
+    sm.clear_out();
+    sm.maybe_shrink();
+    std::mem::size_of::<ConnSm>() + sm.heap_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::io::Cursor;
+
+    use super::*;
+    use crate::server::wire::codec::read_response;
+
+    #[derive(Default)]
+    struct MockSvc {
+        jobs: BTreeMap<u64, WireStatus>,
+        next: u64,
+        accept: bool,
+        waits: Vec<u64>,
+        watches: Vec<u64>,
+        idempotent: bool,
+    }
+
+    impl ConnService for MockSvc {
+        fn submit(
+            &mut self,
+            _tenant: TenantId,
+            _template: String,
+            _reuse: bool,
+            _args: Vec<u8>,
+        ) -> Result<u64, SubmitError> {
+            if !self.accept {
+                return Err(SubmitError::ServerSaturated { max_queued: 4 });
+            }
+            let id = self.next;
+            self.next += 1;
+            self.jobs.insert(id, WireStatus::Queued);
+            Ok(id)
+        }
+        fn poll(&mut self, job: u64) -> WireStatus {
+            self.jobs.get(&job).cloned().unwrap_or(WireStatus::Unknown)
+        }
+        fn cancel(&mut self, job: u64) -> bool {
+            self.jobs.insert(job, WireStatus::Cancelled) == Some(WireStatus::Queued)
+        }
+        fn stats_json(&mut self) -> String {
+            "{}".into()
+        }
+        fn metrics_text(&mut self) -> String {
+            "# metrics\n".into()
+        }
+        fn register_wait(&mut self, job: u64) {
+            self.waits.push(job);
+        }
+        fn register_watch(&mut self, job: u64) {
+            self.watches.push(job);
+        }
+        fn idempotent_hello(&mut self) -> bool {
+            self.idempotent
+        }
+    }
+
+    fn frames(reqs: &[Request]) -> Vec<u8> {
+        let mut wire = Vec::new();
+        for r in reqs {
+            codec::write_frame(&mut wire, &r.encode()).unwrap();
+        }
+        wire
+    }
+
+    fn drain(sm: &mut ConnSm) -> Vec<Response> {
+        let mut cur = Cursor::new(sm.out().to_vec());
+        sm.clear_out();
+        let mut got = Vec::new();
+        while (cur.position() as usize) < cur.get_ref().len() {
+            got.push(read_response(&mut cur).unwrap());
+        }
+        got
+    }
+
+    fn hello() -> Request {
+        Request::Hello { version: WIRE_VERSION, tenant: 3 }
+    }
+
+    #[test]
+    fn pipelined_requests_answer_in_request_order() {
+        let mut sm = ConnSm::default();
+        let mut svc = MockSvc { accept: true, ..MockSvc::default() };
+        let wire = frames(&[
+            hello(),
+            Request::Submit { template: "a".into(), reuse: true, args: vec![] },
+            Request::Submit { template: "b".into(), reuse: true, args: vec![] },
+            Request::Poll { job: 0 },
+            Request::Stats,
+        ]);
+        // Feed byte-by-byte: torn frames must not disturb ordering.
+        for b in wire {
+            sm.on_bytes(&[b], &mut svc);
+        }
+        let got = drain(&mut sm);
+        assert!(matches!(got[0], Response::HelloOk { tenant: 3, .. }));
+        assert!(matches!(got[1], Response::Submitted { job: 0 }));
+        assert!(matches!(got[2], Response::Submitted { job: 1 }));
+        assert!(matches!(got[3], Response::Status { job: 0, status: WireStatus::Queued }));
+        assert!(matches!(got[4], Response::StatsJson { .. }));
+        assert!(!sm.should_close());
+    }
+
+    #[test]
+    fn wait_hole_blocks_later_responses_until_the_job_settles() {
+        let mut sm = ConnSm::default();
+        let mut svc = MockSvc { accept: true, ..MockSvc::default() };
+        sm.on_bytes(
+            &frames(&[
+                hello(),
+                Request::Submit { template: "a".into(), reuse: true, args: vec![] },
+                Request::Wait { job: 0 },
+                Request::Poll { job: 0 },
+            ]),
+            &mut svc,
+        );
+        let got = drain(&mut sm);
+        // HelloOk + Submitted flush; Wait parks; Poll's answer is held
+        // behind the hole even though it already executed.
+        assert_eq!(got.len(), 2);
+        assert_eq!(svc.waits, vec![0]);
+        assert!(sm.has_parked_work());
+        // The job settles: the hole fills and everything drains in order.
+        svc.jobs.insert(0, WireStatus::Cancelled);
+        sm.on_job_update(0, &WireStatus::Cancelled, &mut svc);
+        let got = drain(&mut sm);
+        assert!(matches!(
+            got[0],
+            Response::Status { job: 0, status: WireStatus::Cancelled }
+        ));
+        assert!(matches!(got[1], Response::Status { job: 0, status: WireStatus::Cancelled }));
+        assert!(!sm.has_parked_work());
+    }
+
+    #[test]
+    fn wait_on_settled_job_answers_immediately_without_registering() {
+        let mut sm = ConnSm::default();
+        let mut svc = MockSvc { accept: true, ..MockSvc::default() };
+        svc.jobs.insert(9, WireStatus::Cancelled);
+        sm.on_bytes(&frames(&[hello(), Request::Wait { job: 9 }]), &mut svc);
+        let got = drain(&mut sm);
+        assert!(matches!(got[1], Response::Status { job: 9, .. }));
+        assert!(svc.waits.is_empty(), "no registration for a settled job");
+        // Unknown ids settle a Wait too.
+        sm.on_bytes(&frames(&[Request::Wait { job: 777 }]), &mut svc);
+        let got = drain(&mut sm);
+        assert!(matches!(got[0], Response::Status { job: 777, status: WireStatus::Unknown }));
+    }
+
+    #[test]
+    fn subscription_streams_each_transition_once_in_order() {
+        let mut sm = ConnSm::default();
+        let mut svc = MockSvc { accept: true, ..MockSvc::default() };
+        sm.on_bytes(
+            &frames(&[
+                hello(),
+                Request::Submit { template: "a".into(), reuse: true, args: vec![] },
+                Request::Subscribe { job: 0 },
+            ]),
+            &mut svc,
+        );
+        let got = drain(&mut sm);
+        assert!(matches!(got[2], Response::Status { job: 0, status: WireStatus::Queued }));
+        assert_eq!(svc.watches, vec![0]);
+        // Duplicate notification of the snapshot rank: filtered.
+        sm.on_job_update(0, &WireStatus::Queued, &mut svc);
+        assert!(drain(&mut sm).is_empty());
+        // Running, a duplicate Running, then Done: exactly two events.
+        sm.on_job_update(0, &WireStatus::Running, &mut svc);
+        sm.on_job_update(0, &WireStatus::Running, &mut svc);
+        let done = WireStatus::Done(Default::default());
+        sm.on_job_update(0, &done, &mut svc);
+        let got = drain(&mut sm);
+        assert_eq!(got.len(), 2);
+        assert!(matches!(got[0], Response::Event { job: 0, status: WireStatus::Running }));
+        assert!(matches!(got[1], Response::Event { job: 0, status: WireStatus::Done(_) }));
+        // The watch ended with the terminal event.
+        assert!(!sm.has_parked_work());
+        sm.on_job_update(0, &done, &mut svc);
+        assert!(drain(&mut sm).is_empty());
+    }
+
+    #[test]
+    fn subscribing_to_a_terminal_job_yields_snapshot_only() {
+        let mut sm = ConnSm::default();
+        let mut svc = MockSvc { accept: true, ..MockSvc::default() };
+        svc.jobs.insert(5, WireStatus::Cancelled);
+        sm.on_bytes(&frames(&[hello(), Request::Subscribe { job: 5 }]), &mut svc);
+        let got = drain(&mut sm);
+        assert!(matches!(got[1], Response::Status { job: 5, status: WireStatus::Cancelled }));
+        assert!(!sm.has_parked_work());
+    }
+
+    #[test]
+    fn batch_submit_reports_per_item_results() {
+        let mut sm = ConnSm::default();
+        let mut svc = MockSvc { accept: true, ..MockSvc::default() };
+        sm.on_bytes(
+            &frames(&[
+                hello(),
+                Request::SubmitBatch {
+                    items: vec![BatchItem::template("a"), BatchItem::template("b")],
+                },
+            ]),
+            &mut svc,
+        );
+        let got = drain(&mut sm);
+        let Response::SubmittedBatch { results } = &got[1] else {
+            panic!("expected SubmittedBatch, got {:?}", got[1]);
+        };
+        assert_eq!(
+            results,
+            &vec![BatchResult::Accepted { job: 0 }, BatchResult::Accepted { job: 1 }]
+        );
+        // A saturated service rejects per item, retryably.
+        svc.accept = false;
+        sm.on_bytes(
+            &frames(&[Request::SubmitBatch { items: vec![BatchItem::template("c")] }]),
+            &mut svc,
+        );
+        let got = drain(&mut sm);
+        let Response::SubmittedBatch { results } = &got[0] else {
+            panic!("expected SubmittedBatch, got {:?}", got[0]);
+        };
+        assert_eq!(
+            results,
+            &vec![BatchResult::Rejected { code: ErrorCode::ServerSaturated, aux: 4 }]
+        );
+    }
+
+    #[test]
+    fn protocol_violations_answer_and_close() {
+        // Request before Hello.
+        let mut sm = ConnSm::default();
+        let mut svc = MockSvc::default();
+        sm.on_bytes(&frames(&[Request::Stats]), &mut svc);
+        let got = drain(&mut sm);
+        assert!(matches!(
+            got[0],
+            Response::Error { code: ErrorCode::NeedHello, .. }
+        ));
+        assert!(sm.should_close());
+
+        // Version mismatch.
+        let mut sm = ConnSm::default();
+        sm.on_bytes(&frames(&[Request::Hello { version: 999, tenant: 0 }]), &mut svc);
+        let got = drain(&mut sm);
+        assert!(matches!(
+            got[0],
+            Response::Error { code: ErrorCode::VersionMismatch, aux, .. }
+                if aux == WIRE_VERSION as u64
+        ));
+        assert!(sm.should_close());
+
+        // Second Hello (non-idempotent service).
+        let mut sm = ConnSm::default();
+        sm.on_bytes(&frames(&[hello(), hello()]), &mut svc);
+        let got = drain(&mut sm);
+        assert!(matches!(got[1], Response::Error { code: ErrorCode::BadRequest, .. }));
+        assert!(sm.should_close());
+
+        // Second same-tenant Hello with an idempotent service (the
+        // simulator's dup-tolerant handshake): answered, not fatal.
+        let mut sm = ConnSm::default();
+        let mut svc = MockSvc { idempotent: true, ..MockSvc::default() };
+        sm.on_bytes(&frames(&[hello(), hello()]), &mut svc);
+        let got = drain(&mut sm);
+        assert!(matches!(got[1], Response::HelloOk { .. }));
+        assert!(!sm.should_close());
+
+        // Garbage frame body.
+        let mut sm = ConnSm::default();
+        let mut wire = Vec::new();
+        codec::write_frame(&mut wire, &[200, 1, 2, 3]).unwrap();
+        sm.on_bytes(&wire, &mut svc);
+        let got = drain(&mut sm);
+        assert!(matches!(got[0], Response::Error { code: ErrorCode::BadRequest, .. }));
+        assert!(sm.should_close());
+    }
+
+    #[test]
+    fn bye_closes_after_flush_and_shutdown_aborts_waits() {
+        let mut sm = ConnSm::default();
+        let mut svc = MockSvc { accept: true, ..MockSvc::default() };
+        sm.on_bytes(&frames(&[hello(), Request::Bye]), &mut svc);
+        assert!(!sm.out().is_empty(), "HelloOk still owed");
+        assert!(!sm.should_close());
+        sm.clear_out();
+        assert!(sm.should_close());
+
+        // A Bye behind a parked Wait keeps the connection open until
+        // the answer is delivered — or shutdown aborts it.
+        let mut sm = ConnSm::default();
+        sm.on_bytes(
+            &frames(&[
+                hello(),
+                Request::Submit { template: "a".into(), reuse: true, args: vec![] },
+                Request::Wait { job: 0 },
+            ]),
+            &mut svc,
+        );
+        sm.clear_out();
+        assert!(!sm.should_close());
+        sm.abort_waits(&mut svc);
+        let got = drain(&mut sm);
+        assert!(matches!(
+            got[0],
+            Response::Error { code: ErrorCode::ShuttingDown, .. }
+        ));
+        assert!(sm.should_close());
+    }
+
+    #[test]
+    fn footprints_are_bounded() {
+        assert!(idle_conn_footprint() < 4096, "idle: {}", idle_conn_footprint());
+        assert!(
+            post_burst_conn_footprint() < 16 * 1024,
+            "post-burst: {}",
+            post_burst_conn_footprint()
+        );
+    }
+}

@@ -1,22 +1,30 @@
 //! The network front-end: accepts TCP or Unix-domain connections and
 //! drives the in-process [`SchedServer`] from decoded wire frames.
 //!
-//! Thread model: one non-blocking **acceptor** thread polls the socket;
-//! each accepted connection gets one **reader** thread that decodes
-//! requests, calls the server, and writes responses — a deliberately
-//! small, std-only thread set (no async runtime is available offline).
+//! Two modes share one acceptor thread and one per-connection state
+//! machine ([`ConnSm`]):
+//!
+//! - **Reactor** ([`WireMode::Reactor`], the default on Linux): a
+//!   small fixed shard set multiplexes all connections over
+//!   nonblocking sockets and epoll — see [`super::reactor`]. Parked
+//!   `Wait`s and subscriptions get pushed wakeups from the server's
+//!   status listeners; nothing polls.
+//! - **Threaded** ([`WireMode::Threaded`], the portable fallback): one
+//!   blocking reader thread per connection. Reads run under a timeout
+//!   so threads observe shutdown promptly; a connection with parked
+//!   work shortens that timeout to [`SchedServer::wait_slice`]
+//!   (`ServerConfig::with_wait_slice`, floored at 1 ms) and re-polls
+//!   its parked jobs each slice — the classic polled Wait, now honored
+//!   end-to-end.
+//!
 //! Connections past the limit are refused with a retryable
 //! [`ErrorCode::ServerSaturated`] frame rather than left hanging, and
 //! all backpressure ([`SubmitError`]) is reported the same way — the
-//! wire edge never silently drops a submission.
-//!
-//! Reads run under a 100 ms timeout so reader threads observe shutdown
-//! promptly; partial reads are reassembled by [`FrameBuffer`], so a
-//! timeout mid-frame cannot desynchronize the stream. Server-side
-//! `Wait` blocks in 50 ms [`SchedServer::wait_timeout`] slices for the
-//! same reason.
+//! wire edge never silently drops a submission. Partial reads are
+//! reassembled by the state machine's frame buffer, so a timeout or
+//! readiness edge mid-frame cannot desynchronize the stream.
 
-use std::io::{self, Read};
+use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream};
 #[cfg(unix)]
 use std::os::unix::net::{UnixListener, UnixStream};
@@ -25,14 +33,17 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use super::codec::{
-    self, ErrorCode, FrameBuffer, Request, Response, WireStatus, WIRE_VERSION,
-};
+use super::codec::{self, BatchItem, ErrorCode, Response, WireStatus};
+use super::conn::{ConnService, ConnSm};
+#[cfg(target_os = "linux")]
+use super::reactor;
 use crate::obs::{Counter, Histogram, MetricsRegistry};
 use crate::server::protocol::{JobId, JobSpec, Submission, SubmitError, TenantId};
 use crate::server::SchedServer;
 
-/// Default cap on concurrent connections (each holds one reader thread).
+/// Default cap on concurrent connections. The threaded fallback holds
+/// one reader thread per connection, so callers raising this far
+/// should prefer the reactor ([`WireMode::Auto`] picks it on Linux).
 pub const DEFAULT_MAX_CONNS: usize = 64;
 
 /// Where the wire front-end listens.
@@ -58,6 +69,19 @@ impl ListenAddr {
     }
 }
 
+/// Which front-end drives accepted connections.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireMode {
+    /// The epoll reactor on Linux, the threaded fallback elsewhere.
+    Auto,
+    /// The epoll reactor: a fixed shard set multiplexes all
+    /// connections. Linux only — `start` fails with
+    /// [`io::ErrorKind::Unsupported`] elsewhere.
+    Reactor,
+    /// One blocking reader thread per connection.
+    Threaded,
+}
+
 /// A connected transport: both socket families behind one object.
 pub(crate) trait WireStream: Read + io::Write + Send {
     fn set_read_timeout_opt(&self, d: Option<Duration>) -> io::Result<()>;
@@ -73,6 +97,25 @@ impl WireStream for TcpStream {
 impl WireStream for UnixStream {
     fn set_read_timeout_opt(&self, d: Option<Duration>) -> io::Result<()> {
         self.set_read_timeout(d)
+    }
+}
+
+/// A freshly accepted socket, still in blocking mode: the threaded
+/// path boxes it as a [`WireStream`], the reactor flips it nonblocking
+/// and keeps the concrete type (it needs the raw fd).
+pub(crate) enum Accepted {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Accepted {
+    fn into_stream(self) -> Box<dyn WireStream> {
+        match self {
+            Accepted::Tcp(s) => Box::new(s),
+            #[cfg(unix)]
+            Accepted::Unix(s) => Box::new(s),
+        }
     }
 }
 
@@ -104,7 +147,7 @@ impl Acceptor {
     }
 
     /// `Ok(None)` when no connection is pending.
-    fn try_accept(&self) -> io::Result<Option<Box<dyn WireStream>>> {
+    fn try_accept(&self) -> io::Result<Option<Accepted>> {
         match self {
             Acceptor::Tcp(l) => match l.accept() {
                 Ok((s, _)) => {
@@ -112,7 +155,7 @@ impl Acceptor {
                     // non-blocking mode on some platforms; reset it.
                     s.set_nonblocking(false)?;
                     let _ = s.set_nodelay(true);
-                    Ok(Some(Box::new(s)))
+                    Ok(Some(Accepted::Tcp(s)))
                 }
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => Ok(None),
                 Err(e) => Err(e),
@@ -121,7 +164,7 @@ impl Acceptor {
             Acceptor::Unix(l, _) => match l.accept() {
                 Ok((s, _)) => {
                     s.set_nonblocking(false)?;
-                    Ok(Some(Box::new(s)))
+                    Ok(Some(Accepted::Unix(s)))
                 }
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => Ok(None),
                 Err(e) => Err(e),
@@ -144,16 +187,21 @@ impl Drop for Acceptor {
 /// The listener's own metric handles: wire-edge traffic the in-process
 /// [`SchedServer`] registry cannot see. Rendered *after* the server's
 /// exposition by [`WireListener::metrics_text`] / `Request::Metrics`.
-struct WireObs {
-    obs: MetricsRegistry,
-    conns_opened: Counter,
-    conns_refused: Counter,
-    frames_rx: Counter,
-    frames_tx: Counter,
-    bytes_rx: Counter,
-    bytes_tx: Counter,
-    decode_errors: Counter,
-    frame_bytes: Histogram,
+pub(crate) struct WireObs {
+    pub(crate) obs: MetricsRegistry,
+    pub(crate) conns_opened: Counter,
+    pub(crate) conns_refused: Counter,
+    pub(crate) frames_rx: Counter,
+    pub(crate) frames_tx: Counter,
+    pub(crate) bytes_rx: Counter,
+    pub(crate) bytes_tx: Counter,
+    pub(crate) decode_errors: Counter,
+    pub(crate) frame_bytes: Histogram,
+    /// Reactor writes that hit `WouldBlock` and armed `EPOLLOUT`.
+    pub(crate) write_stalls: Counter,
+    /// Threaded-fallback wait slices that expired with parked work and
+    /// triggered a re-poll; the reactor's push path keeps this at 0.
+    pub(crate) wait_polls: Counter,
 }
 
 impl WireObs {
@@ -187,6 +235,14 @@ impl WireObs {
             &[],
             &[64, 256, 1024, 4096, 16384, 65536, 262144, 1048576],
         );
+        let write_stalls = obs.counter(
+            "quicksched_reactor_write_stalls_total",
+            "Reactor writes that hit WouldBlock and armed write-readiness interest.",
+        );
+        let wait_polls = obs.counter(
+            "quicksched_wire_wait_slice_polls_total",
+            "Threaded-fallback wait slices that expired and re-polled parked jobs.",
+        );
         Self {
             obs,
             conns_opened,
@@ -197,33 +253,137 @@ impl WireObs {
             bytes_tx,
             decode_errors,
             frame_bytes,
+            write_stalls,
+            wait_polls,
         }
     }
 }
 
-struct ListenerShared {
-    server: Arc<SchedServer>,
-    shutdown: AtomicBool,
-    active: AtomicUsize,
-    conns: Mutex<Vec<JoinHandle<()>>>,
-    max_conns: usize,
-    wire: WireObs,
+pub(crate) struct ListenerShared {
+    pub(crate) server: Arc<SchedServer>,
+    pub(crate) shutdown: AtomicBool,
+    pub(crate) active: AtomicUsize,
+    pub(crate) conns: Mutex<Vec<JoinHandle<()>>>,
+    pub(crate) max_conns: usize,
+    pub(crate) wire: WireObs,
+}
+
+/// [`ConnService`] backed by the in-process [`SchedServer`]: the
+/// threaded fallback uses it directly (registration hooks are no-ops —
+/// it polls parked jobs each wait slice), the reactor wraps it to add
+/// hub registration for pushed wakeups.
+pub(crate) struct ServerSvc<'a> {
+    pub(crate) shared: &'a ListenerShared,
+}
+
+impl ConnService for ServerSvc<'_> {
+    fn submit(
+        &mut self,
+        tenant: TenantId,
+        template: String,
+        reuse: bool,
+        args: Vec<u8>,
+    ) -> Result<u64, SubmitError> {
+        let submission =
+            if reuse { Submission::Template(template) } else { Submission::Rebuild(template) };
+        self.shared.server.try_submit(JobSpec { tenant, submission, args }).map(|id| id.0)
+    }
+
+    fn submit_batch(
+        &mut self,
+        tenant: TenantId,
+        items: Vec<BatchItem>,
+    ) -> Vec<Result<u64, SubmitError>> {
+        // One admission-lock round for the whole batch: accepted items
+        // land adjacent in the fair queue and fuse in one sweep.
+        let specs = items
+            .into_iter()
+            .map(|it| {
+                let submission = if it.reuse {
+                    Submission::Template(it.template)
+                } else {
+                    Submission::Rebuild(it.template)
+                };
+                JobSpec { tenant, submission, args: it.args }
+            })
+            .collect();
+        self.shared
+            .server
+            .try_submit_batch(specs)
+            .into_iter()
+            .map(|r| r.map(|id| id.0))
+            .collect()
+    }
+
+    fn poll(&mut self, job: u64) -> WireStatus {
+        self.shared
+            .server
+            .poll(JobId(job))
+            .map(|s| WireStatus::from_status(&s))
+            .unwrap_or(WireStatus::Unknown)
+    }
+
+    fn cancel(&mut self, job: u64) -> bool {
+        self.shared.server.cancel(JobId(job))
+    }
+
+    fn stats_json(&mut self) -> String {
+        // Tenant ids are client-declared, so a snapshot can outgrow
+        // one frame; the response encoder chunks it.
+        self.shared.server.stats().to_json()
+    }
+
+    fn metrics_text(&mut self) -> String {
+        let mut text = self.shared.server.metrics_text();
+        text.push_str(&self.shared.wire.obs.render());
+        text
+    }
+
+    fn register_wait(&mut self, _job: u64) {}
+
+    fn register_watch(&mut self, _job: u64) {}
+
+    fn on_frame_rx(&mut self, len: usize) {
+        self.shared.wire.frames_rx.inc();
+        self.shared.wire.frame_bytes.observe(len as u64);
+    }
+
+    fn on_frames_tx(&mut self, frames: u64, bytes: u64) {
+        self.shared.wire.frames_tx.add(frames);
+        self.shared.wire.bytes_tx.add(bytes);
+    }
+
+    fn on_decode_error(&mut self) {
+        self.shared.wire.decode_errors.inc();
+    }
+}
+
+/// Where the acceptor hands a connection once admitted.
+enum ConnSink {
+    /// Spawn a blocking reader thread.
+    Threaded,
+    /// Adopt into a reactor shard's epoll set.
+    #[cfg(target_os = "linux")]
+    Reactor(Arc<reactor::Hub>),
 }
 
 /// Handle of a running wire front-end. Dropping (or
 /// [`WireListener::shutdown`]) stops accepting, joins every connection
-/// thread, and removes the Unix socket file; the [`SchedServer`] itself
-/// is left running — it belongs to the caller.
+/// and shard thread, and removes the Unix socket file; the
+/// [`SchedServer`] itself is left running — it belongs to the caller.
 pub struct WireListener {
     shared: Arc<ListenerShared>,
     acceptor: Option<JoinHandle<()>>,
+    #[cfg(target_os = "linux")]
+    hub: Option<Arc<reactor::Hub>>,
     local: String,
 }
 
 impl WireListener {
-    /// Bind `addr` and start serving `server` over it.
+    /// Bind `addr` and start serving `server` over it
+    /// ([`WireMode::Auto`]: the reactor on Linux).
     pub fn start(server: Arc<SchedServer>, addr: &ListenAddr) -> io::Result<Self> {
-        Self::start_with_limit(server, addr, DEFAULT_MAX_CONNS)
+        Self::start_with(server, addr, DEFAULT_MAX_CONNS, WireMode::Auto)
     }
 
     /// [`WireListener::start`] with an explicit connection limit.
@@ -232,6 +392,29 @@ impl WireListener {
         addr: &ListenAddr,
         max_conns: usize,
     ) -> io::Result<Self> {
+        Self::start_with(server, addr, max_conns, WireMode::Auto)
+    }
+
+    /// [`WireListener::start`] with an explicit connection limit and
+    /// front-end mode.
+    pub fn start_with(
+        server: Arc<SchedServer>,
+        addr: &ListenAddr,
+        max_conns: usize,
+        mode: WireMode,
+    ) -> io::Result<Self> {
+        let reactor_wanted = match mode {
+            WireMode::Auto => cfg!(target_os = "linux"),
+            WireMode::Reactor => true,
+            WireMode::Threaded => false,
+        };
+        #[cfg(not(target_os = "linux"))]
+        if reactor_wanted {
+            return Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "reactor mode needs epoll (Linux); use WireMode::Threaded",
+            ));
+        }
         let (acceptor, local) = Acceptor::bind(addr)?;
         let shared = Arc::new(ListenerShared {
             server,
@@ -256,14 +439,33 @@ impl WireListener {
                 },
             );
         }
+        #[cfg(target_os = "linux")]
+        let hub = if reactor_wanted {
+            Some(reactor::Hub::start(Arc::clone(&shared))?)
+        } else {
+            None
+        };
+        #[cfg(target_os = "linux")]
+        let sink = match &hub {
+            Some(h) => ConnSink::Reactor(Arc::clone(h)),
+            None => ConnSink::Threaded,
+        };
+        #[cfg(not(target_os = "linux"))]
+        let sink = ConnSink::Threaded;
         let handle = {
             let shared = Arc::clone(&shared);
             std::thread::Builder::new()
                 .name("qs-wire-accept".into())
-                .spawn(move || accept_loop(&shared, acceptor))
+                .spawn(move || accept_loop(&shared, acceptor, sink))
                 .expect("spawning wire acceptor")
         };
-        Ok(Self { shared, acceptor: Some(handle), local })
+        Ok(Self {
+            shared,
+            acceptor: Some(handle),
+            #[cfg(target_os = "linux")]
+            hub,
+            local,
+        })
     }
 
     /// The resolved listen address: `ip:port`, or `unix:<path>`.
@@ -286,13 +488,17 @@ impl WireListener {
         text
     }
 
-    /// Stop accepting and join every connection thread.
+    /// Stop accepting and join every connection and shard thread.
     pub fn shutdown(mut self) {
         self.stop();
     }
 
     fn stop(&mut self) {
         self.shared.shutdown.store(true, Ordering::Release);
+        #[cfg(target_os = "linux")]
+        if let Some(hub) = &self.hub {
+            hub.wake_all();
+        }
         if let Some(h) = self.acceptor.take() {
             let _ = h.join();
         }
@@ -309,10 +515,10 @@ impl Drop for WireListener {
     }
 }
 
-fn accept_loop(shared: &Arc<ListenerShared>, acceptor: Acceptor) {
+fn accept_loop(shared: &Arc<ListenerShared>, acceptor: Acceptor, sink: ConnSink) {
     while !shared.shutdown.load(Ordering::Acquire) {
         match acceptor.try_accept() {
-            Ok(Some(mut stream)) => {
+            Ok(Some(accepted)) => {
                 if shared.active.load(Ordering::Relaxed) >= shared.max_conns {
                     // Refuse with a retryable error instead of hanging
                     // the client in connect-accepted-but-silent limbo.
@@ -322,29 +528,43 @@ fn accept_loop(shared: &Arc<ListenerShared>, acceptor: Acceptor) {
                         aux: shared.max_conns as u64,
                         message: "connection limit reached; retry later".into(),
                     };
-                    send(shared, &mut *stream, &refusal);
+                    send(shared, &mut *accepted.into_stream(), &refusal);
                     continue;
                 }
                 shared.wire.conns_opened.inc();
                 shared.active.fetch_add(1, Ordering::Relaxed);
-                let shared2 = Arc::clone(shared);
-                let spawned = std::thread::Builder::new().name("qs-wire-conn".into()).spawn(
-                    move || {
-                        serve_conn(&shared2, &mut *stream);
-                        shared2.active.fetch_sub(1, Ordering::Relaxed);
+                match &sink {
+                    ConnSink::Threaded => {
+                        let mut stream = accepted.into_stream();
+                        let shared2 = Arc::clone(shared);
+                        let spawned =
+                            std::thread::Builder::new().name("qs-wire-conn".into()).spawn(
+                                move || {
+                                    serve_conn(&shared2, &mut *stream);
+                                    shared2.active.fetch_sub(1, Ordering::Relaxed);
+                                },
+                            );
+                        match spawned {
+                            Ok(h) => {
+                                let mut conns = shared.conns.lock().unwrap();
+                                // Reap finished threads so a long-lived
+                                // server's handle list stays bounded by
+                                // live connections.
+                                conns.retain(|c| !c.is_finished());
+                                conns.push(h);
+                            }
+                            Err(_) => {
+                                shared.active.fetch_sub(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    #[cfg(target_os = "linux")]
+                    ConnSink::Reactor(hub) => match reactor::NetStream::from_accepted(accepted) {
+                        Ok(stream) => hub.assign(stream),
+                        Err(_) => {
+                            shared.active.fetch_sub(1, Ordering::Relaxed);
+                        }
                     },
-                );
-                match spawned {
-                    Ok(h) => {
-                        let mut conns = shared.conns.lock().unwrap();
-                        // Reap finished threads so a long-lived server's
-                        // handle list stays bounded by live connections.
-                        conns.retain(|c| !c.is_finished());
-                        conns.push(h);
-                    }
-                    Err(_) => {
-                        shared.active.fetch_sub(1, Ordering::Relaxed);
-                    }
                 }
             }
             Ok(None) => std::thread::sleep(Duration::from_millis(5)),
@@ -353,158 +573,68 @@ fn accept_loop(shared: &Arc<ListenerShared>, acceptor: Acceptor) {
     }
 }
 
-/// Serve one connection until EOF, `Bye`, a protocol violation, or
-/// listener shutdown. Tenant identity is per-connection: fixed by the
-/// `Hello` handshake, applied to every submission after it.
+/// Serve one connection on its own thread until EOF, `Bye`, a protocol
+/// violation, or listener shutdown — the portable fallback. All
+/// protocol logic lives in [`ConnSm`]; this loop only moves bytes and
+/// paces the parked-work re-poll at the server's wait slice.
 fn serve_conn(shared: &ListenerShared, stream: &mut dyn WireStream) {
-    let _ = stream.set_read_timeout_opt(Some(Duration::from_millis(100)));
-    let mut fb = FrameBuffer::default();
+    let mut sm = ConnSm::default();
+    let mut svc = ServerSvc { shared };
     let mut tmp = [0u8; 4096];
-    let mut tenant: Option<TenantId> = None;
+    let mut peer_gone = false;
     loop {
-        // Assemble one frame, observing shutdown between read slices.
-        let body = loop {
-            match fb.take_frame() {
-                Err(e) => {
-                    shared.wire.decode_errors.inc();
-                    send_err(shared, stream, ErrorCode::BadRequest, 0, &e.to_string());
-                    return;
-                }
-                Ok(Some(b)) => break b,
-                Ok(None) => {}
-            }
-            if shared.shutdown.load(Ordering::Acquire) {
-                return;
-            }
-            match stream.read(&mut tmp) {
-                Ok(0) => return,
-                Ok(n) => {
-                    shared.wire.bytes_rx.add(n as u64);
-                    fb.extend(&tmp[..n]);
-                }
-                Err(e)
-                    if e.kind() == io::ErrorKind::WouldBlock
-                        || e.kind() == io::ErrorKind::TimedOut => {}
-                Err(_) => return,
-            }
-        };
-        shared.wire.frames_rx.inc();
-        shared.wire.frame_bytes.observe(body.len() as u64);
-        let req = match Request::decode(&body) {
-            Ok(r) => r,
-            Err(e) => {
-                shared.wire.decode_errors.inc();
-                send_err(shared, stream, ErrorCode::BadRequest, 0, &e.to_string());
-                return;
-            }
-        };
-        let resp = match req {
-            Request::Hello { version, tenant: t } => {
-                if tenant.is_some() {
-                    // Tenant identity is fixed per connection; a second
-                    // Hello rebinding it would let one socket spread
-                    // load across other tenants' caps and weights.
-                    send_err(
-                        shared,
-                        stream,
-                        ErrorCode::BadRequest,
-                        0,
-                        "Hello already completed on this connection",
-                    );
-                    return;
-                }
-                if version != WIRE_VERSION {
-                    send_err(
-                        shared,
-                        stream,
-                        ErrorCode::VersionMismatch,
-                        WIRE_VERSION as u64,
-                        &format!("server speaks wire version {WIRE_VERSION}"),
-                    );
-                    return;
-                }
-                tenant = Some(TenantId(t));
-                Response::HelloOk { version: WIRE_VERSION, tenant: t }
-            }
-            Request::Bye => return,
-            other => {
-                let Some(tenant) = tenant else {
-                    send_err(
-                        shared,
-                        stream,
-                        ErrorCode::NeedHello,
-                        0,
-                        "Hello must be the first message",
-                    );
-                    return;
-                };
-                match other {
-                    Request::Submit { template, reuse, args } => {
-                        let submission = if reuse {
-                            Submission::Template(template)
-                        } else {
-                            Submission::Rebuild(template)
-                        };
-                        match shared.server.try_submit(JobSpec { tenant, submission, args }) {
-                            Ok(id) => Response::Submitted { job: id.0 },
-                            Err(e) => reject(&e),
-                        }
-                    }
-                    Request::Poll { job } => Response::Status {
-                        job,
-                        status: shared
-                            .server
-                            .poll(JobId(job))
-                            .map(|s| WireStatus::from_status(&s))
-                            .unwrap_or(WireStatus::Unknown),
-                    },
-                    Request::Wait { job } => {
-                        // Sliced wait: each slice (`ServerConfig::
-                        // with_wait_slice`, default 50 ms) bounds how
-                        // long shutdown can go unnoticed. The simulator
-                        // (`crate::sim`) replaces this sleep with an
-                        // event-driven waiter wakeup — virtual time
-                        // never polls.
-                        let slice = shared.server.wait_slice();
-                        let status = loop {
-                            match shared.server.wait_timeout(JobId(job), slice) {
-                                None => break WireStatus::Unknown,
-                                Some(s) if s.is_terminal() => break WireStatus::from_status(&s),
-                                Some(_) => {
-                                    if shared.shutdown.load(Ordering::Acquire) {
-                                        send_err(
-                                            shared,
-                                            stream,
-                                            ErrorCode::ShuttingDown,
-                                            0,
-                                            "listener shutting down",
-                                        );
-                                        return;
-                                    }
-                                }
-                            }
-                        };
-                        Response::Status { job, status }
-                    }
-                    Request::Cancel { job } => {
-                        Response::Cancelled { job, ok: shared.server.cancel(JobId(job)) }
-                    }
-                    Request::Stats => {
-                        // Tenant ids are client-declared, so a snapshot
-                        // can outgrow one frame; `send` chunks it.
-                        Response::StatsJson { json: shared.server.stats().to_json() }
-                    }
-                    Request::Metrics => {
-                        let mut text = shared.server.metrics_text();
-                        text.push_str(&shared.wire.obs.render());
-                        Response::MetricsText { text }
-                    }
-                    Request::Hello { .. } | Request::Bye => unreachable!("handled above"),
-                }
-            }
-        };
-        if !send(shared, stream, &resp) {
+        if shared.shutdown.load(Ordering::Acquire) {
+            sm.abort_waits(&mut svc);
+            let _ = stream.write_all(sm.out());
             return;
+        }
+        if !sm.out().is_empty() {
+            if stream.write_all(sm.out()).is_err() {
+                return;
+            }
+            sm.clear_out();
+            sm.maybe_shrink();
+        }
+        if sm.should_close() {
+            return;
+        }
+        // With parked work (a blocked Wait, an open subscription), wake
+        // at the configured wait slice to re-poll; otherwise only often
+        // enough to observe shutdown.
+        let slice = if sm.has_parked_work() {
+            shared.server.wait_slice().min(Duration::from_millis(100))
+        } else {
+            Duration::from_millis(100)
+        };
+        if peer_gone {
+            if !sm.has_parked_work() {
+                return;
+            }
+            std::thread::sleep(slice);
+            shared.wire.wait_polls.inc();
+            sm.poll_parked(&mut svc);
+            continue;
+        }
+        let _ = stream.set_read_timeout_opt(Some(slice));
+        match stream.read(&mut tmp) {
+            Ok(0) => {
+                sm.on_peer_closed();
+                peer_gone = true;
+            }
+            Ok(n) => {
+                shared.wire.bytes_rx.add(n as u64);
+                sm.on_bytes(&tmp[..n], &mut svc);
+            }
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                if sm.has_parked_work() {
+                    shared.wire.wait_polls.inc();
+                    sm.poll_parked(&mut svc);
+                }
+            }
+            Err(_) => return,
         }
     }
 }
@@ -521,31 +651,4 @@ fn send(shared: &ListenerShared, stream: &mut dyn WireStream, resp: &Response) -
         }
         Err(_) => false,
     }
-}
-
-/// Map an admission rejection onto its wire error (all retryable).
-fn reject(e: &SubmitError) -> Response {
-    match e {
-        SubmitError::TenantAtCapacity { cap, .. } => Response::Error {
-            code: ErrorCode::TenantAtCapacity,
-            aux: *cap as u64,
-            message: e.to_string(),
-        },
-        SubmitError::ServerSaturated { max_queued } => Response::Error {
-            code: ErrorCode::ServerSaturated,
-            aux: *max_queued as u64,
-            message: e.to_string(),
-        },
-    }
-}
-
-fn send_err(
-    shared: &ListenerShared,
-    stream: &mut dyn WireStream,
-    code: ErrorCode,
-    aux: u64,
-    message: &str,
-) {
-    let resp = Response::Error { code, aux, message: message.to_string() };
-    send(shared, stream, &resp);
 }

@@ -1,5 +1,8 @@
 //! Remote access to the scheduling service: a std-only wire protocol
-//! ([`codec`]) and the socket front-end that serves it ([`listener`]).
+//! ([`codec`]), a transport-agnostic per-connection state machine
+//! ([`conn`]), and the socket front-ends that serve it ([`listener`]
+//! for the thread-per-connection fallback, [`reactor`] for the
+//! epoll-driven default on Linux).
 //!
 //! The design constraint is that **kernels never cross the wire**: a
 //! remote submission names a template registered in-process (plus
@@ -9,26 +12,46 @@
 //!
 //! ```text
 //!   RemoteClient ──frames──▶ WireListener ──JobSpec──▶ SchedServer
-//!   (rust/src/client)        acceptor + per-conn       (in-process,
-//!    connect/submit/          reader threads             unchanged)
-//!    poll/wait/cancel/        tenant fixed by Hello
-//!    stats                    backpressure → Error frames
+//!   (rust/src/client)        reactor shards drive      (in-process,
+//!    connect/submit/          one ConnSm per socket      unchanged)
+//!    subscribe/batch/         tenant fixed by Hello
+//!    poll/wait/cancel         backpressure → Error frames
 //! ```
 //!
 //! Backpressure is part of the protocol: per-tenant caps
 //! (`TenantAtCapacity`) and the global bounded admission queue
 //! (`ServerSaturated`) come back as retryable [`ErrorCode`]s instead of
 //! hangs or drops. See ARCHITECTURE.md §Wire protocol for the frame
-//! layout, the message table, and the versioning rule.
+//! layout, the message table, and the versioning rule, and §Reactor for
+//! the readiness loop.
 
 pub mod codec;
+pub mod conn;
 pub mod listener;
+#[cfg(target_os = "linux")]
+pub mod reactor;
 
 pub use codec::{
-    read_response, write_response, ErrorCode, ProtocolError, Request, Response, WireReport,
-    WireStatus, MAX_FRAME, MAX_MESSAGE, WIRE_VERSION,
+    read_response, write_response, BatchItem, BatchResult, ErrorCode, ProtocolError, Request,
+    Response, WireReport, WireStatus, MAX_FRAME, MAX_MESSAGE, WIRE_VERSION,
 };
-pub use listener::{ListenAddr, WireListener, DEFAULT_MAX_CONNS};
+pub use listener::{ListenAddr, WireListener, WireMode, DEFAULT_MAX_CONNS};
 // The simulator's `SimStream` implements the listener's transport trait
 // so simulated connections exercise the same seam as real sockets.
 pub(crate) use listener::WireStream;
+
+/// Best-effort raise of the process's open-file-descriptor soft limit
+/// to its hard limit, returning the resulting soft limit. A reactor
+/// holding 10k+ sockets outgrows the common 1024-fd default; callers
+/// (`serve`, `bench-remote --connections`) invoke this before binding.
+/// No-op returning `None` off Linux.
+pub fn raise_nofile_limit() -> Option<u64> {
+    #[cfg(target_os = "linux")]
+    {
+        reactor::raise_nofile_limit()
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
+    }
+}

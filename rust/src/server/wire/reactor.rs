@@ -1,0 +1,749 @@
+//! The epoll-driven wire front-end (Linux): a small fixed set of
+//! **shard** threads multiplexes every connection, each connection
+//! owned by one shard and driven through the same
+//! [`ConnSm`](super::conn::ConnSm) state machine the threaded fallback
+//! and the deterministic simulator use. The shard loop is the classic
+//! readiness cycle — read-accumulate → decode → dispatch → write-drain
+//! — over nonblocking sockets and level-triggered epoll.
+//!
+//! Cross-thread wakeups flow through the [`Hub`]: the acceptor hands
+//! new sockets to a shard's mailbox, and a [`SchedServer`] status
+//! listener (installed at start, running under the server's state
+//! lock) routes job transitions to whichever shards hold a parked
+//! `Wait` or an open subscription on that job — so blocked waits and
+//! streaming subscriptions are **pushed**, never polled. Each mailbox
+//! is paired with an eventfd registered in the shard's epoll set.
+//!
+//! Lock order is strictly `server state → hub interest → shard queue`;
+//! shard threads take hub locks only while *not* holding any server
+//! lock, so the push path cannot deadlock.
+//!
+//! The epoll/eventfd shim below is a thin `extern "C"` declaration
+//! set (the crate deliberately has no libc dependency); everything
+//! above it is std. `epoll_event` is packed on x86-64 — fields are
+//! always copied out by value, never borrowed.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::os::raw::c_int;
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::codec::WireStatus;
+use super::conn::{ConnService, ConnSm};
+use super::listener::{Accepted, ListenerShared, ServerSvc, WireObs};
+use crate::server::protocol::JobStatus;
+
+#[allow(non_camel_case_types)]
+mod sys {
+    use std::os::raw::{c_int, c_uint, c_void};
+
+    /// Mirror of the kernel's `struct epoll_event`. The x86-64 ABI
+    /// packs it (alignment 1); other architectures use natural layout.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    pub struct epoll_event {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    #[repr(C)]
+    pub struct rlimit {
+        pub rlim_cur: u64,
+        pub rlim_max: u64,
+    }
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+    pub const EFD_CLOEXEC: c_int = 0o2000000;
+    pub const EFD_NONBLOCK: c_int = 0o4000;
+    pub const RLIMIT_NOFILE: c_int = 7;
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut epoll_event) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut epoll_event,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        pub fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+        pub fn close(fd: c_int) -> c_int;
+        pub fn getrlimit(resource: c_int, rlim: *mut rlimit) -> c_int;
+        pub fn setrlimit(resource: c_int, rlim: *const rlimit) -> c_int;
+    }
+}
+
+/// Best-effort raise of `RLIMIT_NOFILE`'s soft limit to its hard
+/// limit; returns the resulting soft limit. 10k+ sockets outgrow the
+/// common 1024-fd default.
+pub fn raise_nofile_limit() -> Option<u64> {
+    let mut rl = sys::rlimit { rlim_cur: 0, rlim_max: 0 };
+    unsafe {
+        if sys::getrlimit(sys::RLIMIT_NOFILE, &mut rl) != 0 {
+            return None;
+        }
+        if rl.rlim_cur < rl.rlim_max {
+            let want = sys::rlimit { rlim_cur: rl.rlim_max, rlim_max: rl.rlim_max };
+            if sys::setrlimit(sys::RLIMIT_NOFILE, &want) == 0 {
+                rl.rlim_cur = rl.rlim_max;
+            }
+        }
+    }
+    Some(rl.rlim_cur)
+}
+
+/// An epoll instance (closed on drop).
+struct Epoll {
+    fd: c_int,
+}
+
+impl Epoll {
+    fn new() -> io::Result<Self> {
+        let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Self { fd })
+    }
+
+    fn ctl(&self, op: c_int, fd: RawFd, events: u32, data: u64) -> io::Result<()> {
+        let mut ev = sys::epoll_event { events, data };
+        if unsafe { sys::epoll_ctl(self.fd, op, fd, &mut ev) } != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    fn add(&self, fd: RawFd, events: u32, data: u64) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, events, data)
+    }
+
+    fn modify(&self, fd: RawFd, events: u32, data: u64) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, events, data)
+    }
+
+    fn del(&self, fd: RawFd) -> io::Result<()> {
+        // A null event is accepted for DEL on every kernel ≥ 2.6.9.
+        if unsafe { sys::epoll_ctl(self.fd, sys::EPOLL_CTL_DEL, fd, std::ptr::null_mut()) } != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    fn wait(&self, events: &mut [sys::epoll_event], timeout_ms: i32) -> io::Result<usize> {
+        let rc = unsafe {
+            sys::epoll_wait(self.fd, events.as_mut_ptr(), events.len() as c_int, timeout_ms)
+        };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(rc as usize)
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe {
+            sys::close(self.fd);
+        }
+    }
+}
+
+/// A nonblocking eventfd: the cross-thread doorbell each shard
+/// registers alongside its sockets.
+struct EventFd {
+    fd: c_int,
+}
+
+impl EventFd {
+    fn new() -> io::Result<Self> {
+        let fd = unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Self { fd })
+    }
+
+    fn raw(&self) -> RawFd {
+        self.fd
+    }
+
+    /// Ring the doorbell. A full counter (`EAGAIN`) already means the
+    /// shard has a wakeup pending, so errors are ignorable.
+    fn signal(&self) {
+        let one: u64 = 1;
+        let _ = unsafe { sys::write(self.fd, (&one as *const u64).cast(), 8) };
+    }
+
+    /// Reset the counter (one read zeroes it in non-semaphore mode).
+    fn drain(&self) {
+        let mut v: u64 = 0;
+        let _ = unsafe { sys::read(self.fd, (&mut v as *mut u64).cast(), 8) };
+    }
+}
+
+impl Drop for EventFd {
+    fn drop(&mut self) {
+        unsafe {
+            sys::close(self.fd);
+        }
+    }
+}
+
+/// The epoll data word reserved for a shard's own mailbox eventfd;
+/// connection tokens are slab indices and never reach this value.
+const EFD_TOKEN: u64 = u64::MAX;
+
+/// A connected socket under reactor management: the concrete enum
+/// keeps the raw fd reachable (a boxed trait object would hide it).
+pub(crate) enum NetStream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl NetStream {
+    /// Convert a freshly accepted (blocking) socket for reactor use.
+    pub(crate) fn from_accepted(a: Accepted) -> io::Result<Self> {
+        Ok(match a {
+            Accepted::Tcp(s) => {
+                s.set_nonblocking(true)?;
+                NetStream::Tcp(s)
+            }
+            Accepted::Unix(s) => {
+                s.set_nonblocking(true)?;
+                NetStream::Unix(s)
+            }
+        })
+    }
+
+    fn raw_fd(&self) -> RawFd {
+        match self {
+            NetStream::Tcp(s) => s.as_raw_fd(),
+            NetStream::Unix(s) => s.as_raw_fd(),
+        }
+    }
+}
+
+impl Read for NetStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.read(buf),
+            NetStream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for NetStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.write(buf),
+            NetStream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.flush(),
+            NetStream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A message routed to one shard's mailbox.
+enum Msg {
+    /// A freshly accepted connection to adopt.
+    Conn(NetStream),
+    /// A job some connection on this shard waits on or watches changed
+    /// status. A stale token (connection already closed, slot reused)
+    /// is harmless: the status is genuine for that job id, so a reused
+    /// slot either ignores it or applies a true update.
+    Job { token: usize, job: u64, status: WireStatus },
+}
+
+struct Mailbox {
+    queue: Mutex<Vec<Msg>>,
+    efd: EventFd,
+}
+
+/// Shared routing state: which `(shard, token)` pairs care about which
+/// job, plus the per-shard mailboxes. Installed into the server as a
+/// status listener at start.
+pub(crate) struct Hub {
+    pub(crate) shared: Arc<ListenerShared>,
+    shards: Vec<Mailbox>,
+    next: AtomicUsize,
+    /// job id → connections holding a parked `Wait` or open watch.
+    interest: Mutex<HashMap<u64, Vec<(usize, usize)>>>,
+    /// Sockets currently registered across all shard epoll sets.
+    registered: AtomicUsize,
+}
+
+impl Hub {
+    /// Build the hub, spawn one thread per shard (handles join the
+    /// listener's pool), install the push listener on the server, and
+    /// register the reactor gauges.
+    pub(crate) fn start(shared: Arc<ListenerShared>) -> io::Result<Arc<Self>> {
+        let nshards = shard_count();
+        let mut shards = Vec::with_capacity(nshards);
+        let mut epolls = Vec::with_capacity(nshards);
+        for _ in 0..nshards {
+            let ep = Epoll::new()?;
+            let efd = EventFd::new()?;
+            ep.add(efd.raw(), sys::EPOLLIN, EFD_TOKEN)?;
+            shards.push(Mailbox { queue: Mutex::new(Vec::new()), efd });
+            epolls.push(ep);
+        }
+        let hub = Arc::new(Hub {
+            shared,
+            shards,
+            next: AtomicUsize::new(0),
+            interest: Mutex::new(HashMap::new()),
+            registered: AtomicUsize::new(0),
+        });
+        {
+            let weak = Arc::downgrade(&hub);
+            hub.shared.wire.obs.gauge_fn(
+                "quicksched_reactor_registered_fds",
+                "Sockets registered across all reactor shard epoll sets.",
+                &[],
+                move || match weak.upgrade() {
+                    Some(h) => h.registered.load(Ordering::Relaxed) as f64,
+                    None => 0.0,
+                },
+            );
+        }
+        {
+            let weak = Arc::downgrade(&hub);
+            hub.shared.wire.obs.gauge_fn(
+                "quicksched_reactor_mailbox_depth",
+                "Cross-thread messages queued and not yet drained by a shard.",
+                &[],
+                move || {
+                    weak.upgrade()
+                        .map(|h| {
+                            h.shards.iter().map(|m| m.queue.lock().unwrap().len()).sum::<usize>()
+                                as f64
+                        })
+                        .unwrap_or(0.0)
+                },
+            );
+        }
+        {
+            // The push path: runs under the server's state lock, so
+            // transitions reach the hub in true order. Weak: a dead
+            // listener must not be kept alive by the server.
+            let weak = Arc::downgrade(&hub);
+            hub.shared.server.add_status_listener(move |id, status| {
+                if let Some(hub) = weak.upgrade() {
+                    hub.notify(id.0, status);
+                }
+            });
+        }
+        for (idx, ep) in epolls.into_iter().enumerate() {
+            let hub2 = Arc::clone(&hub);
+            let handle = std::thread::Builder::new()
+                .name(format!("qs-reactor-{idx}"))
+                .spawn(move || Shard::new(idx, ep, hub2).run())?;
+            hub.shared.conns.lock().unwrap().push(handle);
+        }
+        Ok(hub)
+    }
+
+    /// Adopt a freshly accepted connection (round-robin shard choice).
+    pub(crate) fn assign(&self, stream: NetStream) {
+        let idx = self.next.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        let m = &self.shards[idx];
+        m.queue.lock().unwrap().push(Msg::Conn(stream));
+        m.efd.signal();
+    }
+
+    /// Wake every shard (shutdown: each will observe the flag).
+    pub(crate) fn wake_all(&self) {
+        for m in &self.shards {
+            m.efd.signal();
+        }
+    }
+
+    /// Route a job transition to the interested connections. Called
+    /// under the server's state lock — takes only hub locks.
+    fn notify(&self, job: u64, status: &JobStatus) {
+        let targets = {
+            let mut interest = self.interest.lock().unwrap();
+            let Some(v) = interest.get(&job) else { return };
+            let targets = v.clone();
+            if status.is_terminal() {
+                // A settled job transitions no further; drop the entry
+                // here so immediate-resolve races cannot leak it.
+                interest.remove(&job);
+            }
+            targets
+        };
+        let ws = WireStatus::from_status(status);
+        for (shard, token) in targets {
+            let m = &self.shards[shard];
+            m.queue.lock().unwrap().push(Msg::Job { token, job, status: ws.clone() });
+            m.efd.signal();
+        }
+    }
+
+    fn register(&self, job: u64, shard: usize, token: usize) {
+        let mut interest = self.interest.lock().unwrap();
+        let v = interest.entry(job).or_default();
+        if !v.contains(&(shard, token)) {
+            v.push((shard, token));
+        }
+    }
+
+    fn unregister(&self, job: u64, shard: usize, token: usize) {
+        let mut interest = self.interest.lock().unwrap();
+        if let Some(v) = interest.get_mut(&job) {
+            v.retain(|&p| p != (shard, token));
+            if v.is_empty() {
+                interest.remove(&job);
+            }
+        }
+    }
+
+    /// A connection closed: sweep all of its interest entries.
+    fn drop_conn(&self, shard: usize, token: usize) {
+        let mut interest = self.interest.lock().unwrap();
+        interest.retain(|_, v| {
+            v.retain(|&p| p != (shard, token));
+            !v.is_empty()
+        });
+    }
+}
+
+/// Shards per listener: half the cores, clamped to [2, 8] — network
+/// dispatch is cheap relative to job execution, which owns the rest.
+fn shard_count() -> usize {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    (cores / 2).clamp(2, 8)
+}
+
+/// [`ConnService`] for reactor connections: the server-backed base
+/// plus hub registration, so parked waits and watches get pushed
+/// wakeups routed back to this shard and token.
+struct ShardSvc<'a> {
+    hub: &'a Hub,
+    shard: usize,
+    token: usize,
+}
+
+impl ShardSvc<'_> {
+    fn base(&self) -> ServerSvc<'_> {
+        ServerSvc { shared: &*self.hub.shared }
+    }
+}
+
+impl ConnService for ShardSvc<'_> {
+    fn submit(
+        &mut self,
+        tenant: crate::server::protocol::TenantId,
+        template: String,
+        reuse: bool,
+        args: Vec<u8>,
+    ) -> Result<u64, crate::server::protocol::SubmitError> {
+        self.base().submit(tenant, template, reuse, args)
+    }
+
+    fn submit_batch(
+        &mut self,
+        tenant: crate::server::protocol::TenantId,
+        items: Vec<super::codec::BatchItem>,
+    ) -> Vec<Result<u64, crate::server::protocol::SubmitError>> {
+        self.base().submit_batch(tenant, items)
+    }
+
+    fn poll(&mut self, job: u64) -> WireStatus {
+        self.base().poll(job)
+    }
+
+    fn cancel(&mut self, job: u64) -> bool {
+        self.base().cancel(job)
+    }
+
+    fn stats_json(&mut self) -> String {
+        self.base().stats_json()
+    }
+
+    fn metrics_text(&mut self) -> String {
+        self.base().metrics_text()
+    }
+
+    fn register_wait(&mut self, job: u64) {
+        self.hub.register(job, self.shard, self.token);
+    }
+
+    fn unregister_wait(&mut self, job: u64) {
+        self.hub.unregister(job, self.shard, self.token);
+    }
+
+    fn register_watch(&mut self, job: u64) {
+        self.hub.register(job, self.shard, self.token);
+    }
+
+    fn unregister_watch(&mut self, job: u64) {
+        self.hub.unregister(job, self.shard, self.token);
+    }
+
+    fn on_frame_rx(&mut self, len: usize) {
+        self.base().on_frame_rx(len);
+    }
+
+    fn on_frames_tx(&mut self, frames: u64, bytes: u64) {
+        self.base().on_frames_tx(frames, bytes);
+    }
+
+    fn on_decode_error(&mut self) {
+        self.base().on_decode_error();
+    }
+}
+
+/// One connection as a shard sees it.
+struct ConnState {
+    stream: NetStream,
+    sm: ConnSm,
+    /// The epoll mask currently installed for this socket.
+    interest: u32,
+    /// Read side done (EOF or read error): stop arming read interest,
+    /// or level-triggered RDHUP would spin the shard.
+    peer_gone: bool,
+}
+
+/// One reactor thread: an epoll set, a connection slab, and the loop.
+struct Shard {
+    idx: usize,
+    ep: Epoll,
+    hub: Arc<Hub>,
+    conns: Vec<Option<ConnState>>,
+    free: Vec<usize>,
+    /// Shared read buffer — per-shard, not per-connection, so 10k idle
+    /// connections do not each pin a read buffer.
+    buf: Vec<u8>,
+}
+
+impl Shard {
+    fn new(idx: usize, ep: Epoll, hub: Arc<Hub>) -> Self {
+        Self { idx, ep, hub, conns: Vec::new(), free: Vec::new(), buf: vec![0u8; 64 * 1024] }
+    }
+
+    fn run(mut self) {
+        let mut events = vec![sys::epoll_event { events: 0, data: 0 }; 128];
+        loop {
+            if self.hub.shared.shutdown.load(Ordering::Acquire) {
+                self.abort_all();
+                return;
+            }
+            // The 100 ms timeout is a shutdown backstop only; real work
+            // arrives as readiness or a mailbox doorbell.
+            let n = self.ep.wait(&mut events, 100).unwrap_or(0);
+            for ev in &events[..n] {
+                // Copy fields out of the (packed on x86-64) event.
+                let data = ev.data;
+                let ready = ev.events;
+                if data == EFD_TOKEN {
+                    self.drain_mailbox();
+                } else {
+                    self.on_socket(data as usize, ready);
+                }
+            }
+        }
+    }
+
+    fn drain_mailbox(&mut self) {
+        let msgs = {
+            let m = &self.hub.shards[self.idx];
+            m.efd.drain();
+            std::mem::take(&mut *m.queue.lock().unwrap())
+        };
+        for msg in msgs {
+            match msg {
+                Msg::Conn(stream) => self.add_conn(stream),
+                Msg::Job { token, job, status } => self.on_job_msg(token, job, &status),
+            }
+        }
+    }
+
+    fn add_conn(&mut self, stream: NetStream) {
+        let token = self.free.pop().unwrap_or_else(|| {
+            self.conns.push(None);
+            self.conns.len() - 1
+        });
+        let interest = sys::EPOLLIN | sys::EPOLLRDHUP;
+        if self.ep.add(stream.raw_fd(), interest, token as u64).is_err() {
+            self.hub.shared.active.fetch_sub(1, Ordering::Relaxed);
+            self.free.push(token);
+            return;
+        }
+        self.hub.registered.fetch_add(1, Ordering::Relaxed);
+        self.conns[token] =
+            Some(ConnState { stream, sm: ConnSm::default(), interest, peer_gone: false });
+    }
+
+    fn on_job_msg(&mut self, token: usize, job: u64, status: &WireStatus) {
+        let close = {
+            let Some(conn) = self.conns.get_mut(token).and_then(|c| c.as_mut()) else { return };
+            let mut svc = ShardSvc { hub: &self.hub, shard: self.idx, token };
+            conn.sm.on_job_update(job, status, &mut svc);
+            drive_io(&self.ep, &self.hub.shared.wire, conn, token)
+        };
+        if close {
+            self.close(token);
+        }
+    }
+
+    fn on_socket(&mut self, token: usize, ready: u32) {
+        let close = {
+            let Some(conn) = self.conns.get_mut(token).and_then(|c| c.as_mut()) else { return };
+            if ready & (sys::EPOLLERR | sys::EPOLLHUP) != 0 {
+                true
+            } else {
+                let mut svc = ShardSvc { hub: &self.hub, shard: self.idx, token };
+                let fatal = if ready & (sys::EPOLLIN | sys::EPOLLRDHUP) != 0 {
+                    read_conn(conn, &mut self.buf, &mut svc, &self.hub.shared.wire)
+                } else {
+                    false
+                };
+                fatal || drive_io(&self.ep, &self.hub.shared.wire, conn, token)
+            }
+        };
+        if close {
+            self.close(token);
+        }
+    }
+
+    fn close(&mut self, token: usize) {
+        let Some(conn) = self.conns.get_mut(token).and_then(|c| c.take()) else { return };
+        let _ = self.ep.del(conn.stream.raw_fd());
+        drop(conn);
+        self.hub.drop_conn(self.idx, token);
+        self.hub.registered.fetch_sub(1, Ordering::Relaxed);
+        self.hub.shared.active.fetch_sub(1, Ordering::Relaxed);
+        self.free.push(token);
+    }
+
+    /// Listener shutdown: answer every parked `Wait` with a retryable
+    /// `ShuttingDown` error, best-effort flush, then drop everything.
+    fn abort_all(&mut self) {
+        for token in 0..self.conns.len() {
+            let Some(conn) = self.conns[token].as_mut() else { continue };
+            let mut svc = ShardSvc { hub: &self.hub, shard: self.idx, token };
+            conn.sm.abort_waits(&mut svc);
+            while !conn.sm.out().is_empty() {
+                match conn.stream.write(conn.sm.out()) {
+                    Ok(n) if n > 0 => conn.sm.consume_out(n),
+                    _ => break,
+                }
+            }
+        }
+        for token in 0..self.conns.len() {
+            if self.conns[token].is_some() {
+                self.close(token);
+            }
+        }
+    }
+}
+
+/// Drain the socket into the state machine until it would block.
+/// Returns `true` on a fatal transport error (tear the connection
+/// down without draining).
+fn read_conn(conn: &mut ConnState, buf: &mut [u8], svc: &mut ShardSvc, wire: &WireObs) -> bool {
+    loop {
+        match conn.stream.read(buf) {
+            Ok(0) => {
+                conn.peer_gone = true;
+                conn.sm.on_peer_closed();
+                return false;
+            }
+            Ok(n) => {
+                wire.bytes_rx.add(n as u64);
+                conn.sm.on_bytes(&buf[..n], svc);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return false,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => return true,
+        }
+    }
+}
+
+/// Write-drain, interest refresh, close decision — the tail of every
+/// connection touch. Returns `true` when the connection should close.
+fn drive_io(ep: &Epoll, wire: &WireObs, conn: &mut ConnState, token: usize) -> bool {
+    while !conn.sm.out().is_empty() {
+        match conn.stream.write(conn.sm.out()) {
+            Ok(0) => return true,
+            Ok(n) => conn.sm.consume_out(n),
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                wire.write_stalls.inc();
+                break;
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => return true,
+        }
+    }
+    if conn.sm.should_close() {
+        return true;
+    }
+    conn.sm.maybe_shrink();
+    // Level-triggered interest hygiene: read while the peer can still
+    // send, write only while bytes are stuck — a standing EPOLLOUT on
+    // an idle socket would wake the shard forever.
+    let mut want = 0u32;
+    if !conn.peer_gone {
+        want |= sys::EPOLLIN | sys::EPOLLRDHUP;
+    }
+    if !conn.sm.out().is_empty() {
+        want |= sys::EPOLLOUT;
+    }
+    if want != conn.interest {
+        conn.interest = want;
+        if ep.modify(conn.stream.raw_fd(), want, token as u64).is_err() {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eventfd_signal_wakes_epoll() {
+        let ep = Epoll::new().unwrap();
+        let efd = EventFd::new().unwrap();
+        ep.add(efd.raw(), sys::EPOLLIN, 7).unwrap();
+        let mut events = vec![sys::epoll_event { events: 0, data: 0 }; 4];
+        // Nothing signalled: a zero-timeout wait returns no events.
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+        efd.signal();
+        assert_eq!(ep.wait(&mut events, 1000).unwrap(), 1);
+        let data = events[0].data;
+        assert_eq!(data, 7);
+        // Drained, the level-triggered readiness clears.
+        efd.drain();
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn nofile_limit_is_queryable() {
+        let lim = raise_nofile_limit().expect("getrlimit works on Linux");
+        assert!(lim > 0);
+    }
+}

@@ -24,7 +24,8 @@ use super::SimConfig;
 use crate::server::protocol::TenantId;
 use crate::server::wire::codec::FrameBuffer;
 use crate::server::wire::{
-    codec, ErrorCode, Request, Response, WireReport, WireStatus, WIRE_VERSION,
+    codec, BatchItem, BatchResult, ErrorCode, Request, Response, WireReport, WireStatus,
+    WIRE_VERSION,
 };
 
 /// Response deadline for request/response ops (virtual ns).
@@ -41,6 +42,9 @@ const BACKOFF_CAP_NS: u64 = 32_000_000;
 pub(crate) enum Op {
     Hello,
     Submit(usize),
+    /// Submit every still-unbound job slot in one pipelined frame
+    /// (batching scenarios only).
+    SubmitBatch,
     Wait(usize),
     Stats,
     Bye,
@@ -78,14 +82,23 @@ pub(crate) struct Client {
     pub done: bool,
     /// Chunked-response reassembly buffer.
     pub chunks: Vec<u8>,
+    /// Use `SubmitBatch` instead of serial `Submit`s (scenario flag).
+    pub batch: bool,
+    /// Job slots covered by the outstanding `SubmitBatch`, in item
+    /// order — the response's positional results bind through this.
+    pub batch_slots: Vec<usize>,
 }
 
 impl Client {
     pub fn new(idx: usize, cfg: &SimConfig) -> Self {
         let mut ops = VecDeque::new();
         ops.push_back(Op::Hello);
-        for j in 0..cfg.jobs_per_client {
-            ops.push_back(Op::Submit(j));
+        if cfg.batch {
+            ops.push_back(Op::SubmitBatch);
+        } else {
+            for j in 0..cfg.jobs_per_client {
+                ops.push_back(Op::Submit(j));
+            }
         }
         for j in 0..cfg.jobs_per_client {
             ops.push_back(Op::Wait(j));
@@ -109,6 +122,8 @@ impl Client {
             hold_until: 0,
             done: false,
             chunks: Vec::new(),
+            batch: cfg.batch,
+            batch_slots: Vec::new(),
         }
     }
 }
@@ -236,7 +251,14 @@ impl Sim {
                     self.client_complete_op(c);
                 }
             }
-            Response::Cancelled { .. } | Response::MetricsText { .. } => {}
+            Response::SubmittedBatch { results } => {
+                if await_op == Op::SubmitBatch {
+                    self.client_batch_results(c, results);
+                }
+            }
+            // Push events only matter to subscribers; the scripted
+            // client never subscribes, so any Event here is stale.
+            Response::Cancelled { .. } | Response::MetricsText { .. } | Response::Event { .. } => {}
             Response::Error { code, aux: _, message } => {
                 if code.retryable() {
                     self.trace(format!("client {c}: retryable error, backing off"));
@@ -280,6 +302,42 @@ impl Sim {
             // Wait only answers terminal statuses; a non-terminal one
             // here is a stale duplicate of an old Poll — ignore.
             WireStatus::Queued | WireStatus::Running => {}
+        }
+    }
+
+    /// Bind the positional results of an awaited `SubmitBatch`. Any
+    /// retryable rejection leaves its slot unbound and re-sends the
+    /// (shrunken) batch after the backoff.
+    fn client_batch_results(&mut self, c: usize, results: Vec<BatchResult>) {
+        if results.len() != self.clients[c].batch_slots.len() {
+            self.client_disconnect(c, "batch result arity mismatch");
+            return;
+        }
+        let slots = std::mem::take(&mut self.clients[c].batch_slots);
+        let mut retry = false;
+        for (k, res) in results.into_iter().enumerate() {
+            let j = slots[k];
+            match res {
+                BatchResult::Accepted { job } => {
+                    if self.clients[c].jobs.iter().any(|jb| jb.id == Some(job)) {
+                        self.trace(format!("client {c}: duplicate ack for job {job} ignored"));
+                    } else {
+                        self.clients[c].jobs[j].id = Some(job);
+                        self.trace(format!("client {c}: job slot {j} bound to server job {job}"));
+                    }
+                }
+                BatchResult::Rejected { code, .. } if code.retryable() => retry = true,
+                BatchResult::Rejected { .. } => {
+                    self.oracle.violation(format!("client {c}: batch item {k} fatally rejected"));
+                    self.clients[c].jobs[j].end = Some(JobEnd::Failed);
+                }
+            }
+        }
+        if retry {
+            self.trace(format!("client {c}: batch partially rejected, backing off"));
+            self.client_backoff(c);
+        } else {
+            self.client_complete_op(c);
         }
     }
 
@@ -339,6 +397,25 @@ impl Sim {
                     reuse: true,
                     args: Vec::new(),
                 },
+                Op::SubmitBatch => {
+                    let slots: Vec<usize> = self.clients[c]
+                        .jobs
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, jb)| jb.id.is_none() && jb.end.is_none())
+                        .map(|(j, _)| j)
+                        .collect();
+                    if slots.is_empty() {
+                        self.clients[c].ops.pop_front();
+                        continue;
+                    }
+                    let items: Vec<BatchItem> = slots
+                        .iter()
+                        .map(|&j| BatchItem::template(self.clients[c].jobs[j].template))
+                        .collect();
+                    self.clients[c].batch_slots = slots;
+                    Request::SubmitBatch { items }
+                }
                 Op::Wait(j) => Request::Wait { job: self.clients[c].jobs[j].id.expect("checked") },
                 Op::Stats => Request::Stats,
                 Op::Bye => Request::Bye,
@@ -393,11 +470,18 @@ impl Sim {
         cl.fb = FrameBuffer::default();
         cl.chunks.clear();
         cl.awaiting = None;
+        cl.batch_slots.clear();
         let mut ops: VecDeque<Op> = VecDeque::new();
         ops.push_back(Op::Hello);
-        for (j, job) in cl.jobs.iter().enumerate() {
-            if job.id.is_none() && job.end.is_none() {
-                ops.push_back(Op::Submit(j));
+        if cl.batch {
+            if cl.jobs.iter().any(|job| job.id.is_none() && job.end.is_none()) {
+                ops.push_back(Op::SubmitBatch);
+            }
+        } else {
+            for (j, job) in cl.jobs.iter().enumerate() {
+                if job.id.is_none() && job.end.is_none() {
+                    ops.push_back(Op::Submit(j));
+                }
             }
         }
         for (j, job) in cl.jobs.iter().enumerate() {

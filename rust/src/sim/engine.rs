@@ -424,6 +424,8 @@ pub(crate) fn req_name(r: &Request) -> &'static str {
         Request::Cancel { .. } => "Cancel",
         Request::Stats => "Stats",
         Request::Metrics => "Metrics",
+        Request::Subscribe { .. } => "Subscribe",
+        Request::SubmitBatch { .. } => "SubmitBatch",
         Request::Bye => "Bye",
     }
 }
@@ -437,6 +439,8 @@ pub(crate) fn resp_name(r: &Response) -> &'static str {
         Response::StatsJson { .. } => "StatsJson",
         Response::MetricsText { .. } => "MetricsText",
         Response::Chunk { .. } => "Chunk",
+        Response::Event { .. } => "Event",
+        Response::SubmittedBatch { .. } => "SubmittedBatch",
         Response::Error { .. } => "Error",
     }
 }

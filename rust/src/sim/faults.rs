@@ -3,8 +3,9 @@
 //! Every complete frame the simulated network extracts is routed through
 //! a [`FaultPlan`], which decides — from its own RNG stream of the root
 //! seed — whether the frame is dropped, duplicated, reordered, delivered
-//! in slow staggered chunks (exercising short reads), turned into a
-//! connection reset, or deferred behind a partition. Two properties make
+//! in slow staggered chunks (exercising short reads), torn into
+//! one-byte deliveries (`partial-frame`), turned into a connection
+//! reset, or deferred behind a partition. Two properties make
 //! sweeps useful rather than flaky:
 //!
 //! * **Forced coverage**: each profile guarantees its fault class fires
@@ -44,18 +45,23 @@ pub enum FaultProfile {
     Reset,
     /// The network splits, then heals.
     Partition,
+    /// Frames arrive one byte at a time: every length prefix, header,
+    /// and payload is torn at every boundary (worst-case short reads
+    /// for the reactor's read-accumulate path).
+    PartialFrame,
     /// Everything above, mixed.
     Chaos,
 }
 
 /// Every non-`None` profile, in the order CI sweeps them.
-pub const ALL_PROFILES: [FaultProfile; 7] = [
+pub const ALL_PROFILES: [FaultProfile; 8] = [
     FaultProfile::Drop,
     FaultProfile::Dup,
     FaultProfile::Reorder,
     FaultProfile::Slow,
     FaultProfile::Reset,
     FaultProfile::Partition,
+    FaultProfile::PartialFrame,
     FaultProfile::Chaos,
 ];
 
@@ -70,6 +76,7 @@ impl FaultProfile {
             "slow" => Self::Slow,
             "reset" => Self::Reset,
             "partition" => Self::Partition,
+            "partial-frame" => Self::PartialFrame,
             "chaos" => Self::Chaos,
             _ => return None,
         })
@@ -84,6 +91,7 @@ impl FaultProfile {
             Self::Slow => "slow",
             Self::Reset => "reset",
             Self::Partition => "partition",
+            Self::PartialFrame => "partial-frame",
             Self::Chaos => "chaos",
         }
     }
@@ -98,11 +106,18 @@ pub struct FaultCounts {
     pub slows: u64,
     pub resets: u64,
     pub partitions: u64,
+    pub partials: u64,
 }
 
 impl FaultCounts {
     pub fn total(&self) -> u64 {
-        self.drops + self.dups + self.reorders + self.slows + self.resets + self.partitions
+        self.drops
+            + self.dups
+            + self.reorders
+            + self.slows
+            + self.resets
+            + self.partitions
+            + self.partials
     }
 
     pub fn merge(&mut self, o: &FaultCounts) {
@@ -112,10 +127,11 @@ impl FaultCounts {
         self.slows += o.slows;
         self.resets += o.resets;
         self.partitions += o.partitions;
+        self.partials += o.partials;
     }
 
     /// `(class name, count)` pairs, for reporting.
-    pub fn classes(&self) -> [(&'static str, u64); 6] {
+    pub fn classes(&self) -> [(&'static str, u64); 7] {
         [
             ("drop", self.drops),
             ("dup", self.dups),
@@ -123,6 +139,7 @@ impl FaultCounts {
             ("slow", self.slows),
             ("reset", self.resets),
             ("partition", self.partitions),
+            ("partial", self.partials),
         ]
     }
 
@@ -136,6 +153,7 @@ impl FaultCounts {
             FaultProfile::Slow => self.slows,
             FaultProfile::Reset => self.resets,
             FaultProfile::Partition => self.partitions,
+            FaultProfile::PartialFrame => self.partials,
             FaultProfile::Chaos => self.total(),
         }
     }
@@ -168,12 +186,15 @@ pub(crate) const CLEAN: Decision =
     Decision::Deliver { extra_ns: 0, chunks: 1, dup: false, fifo: true, tag: "ok" };
 
 /// Classes eligible for probabilistic/forced injection, in forced order.
-const CLASSES: [FaultProfile; 5] = [
+/// `PartialFrame` is appended last so the chaos force-at schedule of the
+/// pre-existing classes (and their pinned seeds) is unchanged.
+const CLASSES: [FaultProfile; 6] = [
     FaultProfile::Reset,
     FaultProfile::Drop,
     FaultProfile::Dup,
     FaultProfile::Reorder,
     FaultProfile::Slow,
+    FaultProfile::PartialFrame,
 ];
 
 /// Per-seed fault schedule. One plan per run; it owns its RNG stream so
@@ -230,6 +251,7 @@ impl FaultPlan {
                 FaultProfile::Dup => 60,
                 FaultProfile::Reorder => 80,
                 FaultProfile::Slow => 100,
+                FaultProfile::PartialFrame => 60,
                 _ => 0,
             },
             p if p == class => {
@@ -261,6 +283,7 @@ impl FaultPlan {
             FaultProfile::Dup => self.counts.dups,
             FaultProfile::Reorder => self.counts.reorders,
             FaultProfile::Slow => self.counts.slows,
+            FaultProfile::PartialFrame => self.counts.partials,
             _ => 0,
         }
     }
@@ -272,6 +295,7 @@ impl FaultPlan {
             FaultProfile::Dup => self.counts.dups += 1,
             FaultProfile::Reorder => self.counts.reorders += 1,
             FaultProfile::Slow => self.counts.slows += 1,
+            FaultProfile::PartialFrame => self.counts.partials += 1,
             _ => {}
         }
     }
@@ -295,6 +319,15 @@ impl FaultPlan {
                 dup: false,
                 fifo: false,
                 tag: "reorder",
+            },
+            // Byte-granular tearing: `u32::MAX` clamps to one chunk per
+            // byte, so every prefix/header/payload boundary is split.
+            FaultProfile::PartialFrame => Decision::Deliver {
+                extra_ns: 0,
+                chunks: u32::MAX,
+                dup: false,
+                fifo: true,
+                tag: "partial",
             },
             _ => Decision::Deliver {
                 extra_ns: 0,

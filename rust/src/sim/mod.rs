@@ -22,7 +22,8 @@
 //! simulated: time (a virtual clock), the network
 //! (`SimStream` implements the listener's `WireStream` seam, with
 //! frame-granular fault injection: drops, duplicates, reorders,
-//! slow/short reads, connection resets, partition-then-heal), and task
+//! slow/short reads, byte-granular torn frames, connection resets,
+//! partition-then-heal), and task
 //! execution (durations from a [`CostModel`](crate::coordinator::CostModel);
 //! kernels are not run — the oracle's task-count invariants are
 //! structural, so they hold regardless).
@@ -82,6 +83,9 @@ pub struct SimConfig {
     /// Hard event budget per seed; exceeding it is an invariant-1
     /// violation (livelock detector).
     pub max_events: u64,
+    /// Clients submit via one pipelined `SubmitBatch` frame instead of
+    /// serial `Submit`s (exercises the reactor's batched admission path).
+    pub batch: bool,
 }
 
 fn small_setup(r: &Registry) {
@@ -123,6 +127,7 @@ impl SimConfig {
             setup: small_setup,
             template_for: small_template_for,
             max_events: 300_000,
+            batch: false,
         }
     }
 
@@ -139,14 +144,35 @@ impl SimConfig {
             setup: remote_setup,
             template_for: remote_template_for,
             max_events: 2_000_000,
+            batch: false,
         }
     }
 
-    /// Parse a scenario name (`small` | `remote`).
+    /// The reactor scenario: clients submit through one pipelined
+    /// `SubmitBatch` frame each (multiple in-flight requests per
+    /// connection), so a sweep drives the state machine's ordered
+    /// response queue, `Wait` holes, and the batched admission path
+    /// under every fault class.
+    pub fn reactor_scenario() -> Self {
+        Self {
+            workers: 3,
+            max_inflight: 4,
+            max_pool: 4,
+            clients: 4,
+            jobs_per_client: 8,
+            setup: small_setup,
+            template_for: small_template_for,
+            max_events: 600_000,
+            batch: true,
+        }
+    }
+
+    /// Parse a scenario name (`small` | `remote` | `reactor`).
     pub fn by_name(name: &str) -> Option<Self> {
         match name {
             "small" => Some(Self::small()),
             "remote" => Some(Self::remote_scenario()),
+            "reactor" => Some(Self::reactor_scenario()),
             _ => None,
         }
     }

@@ -2,21 +2,21 @@
 //! scheduler, and wire dispatch — with the pool's threads replaced by
 //! virtual workers pumped inline after every event.
 //!
-//! `drive_conn` mirrors the listener's `serve_conn` frame loop
-//! statement-for-statement (same error codes, same close conditions),
-//! reading and writing strictly through the `WireStream` trait object so
-//! the simulated transport exercises the same seam as sockets. The one
-//! deliberate divergence: a repeated `Hello` binding the *same* tenant
-//! is answered idempotently instead of rejected, because the fault plan
-//! can legitimately duplicate a handshake frame; rebinding to a
-//! different tenant is still a `BadRequest` + close, as on the real
-//! path. Blocking `Wait` becomes a parked waiter: the connection stops
-//! consuming frames until the job's terminal transition wakes it —
-//! virtual time never polls (satellite of `ServerConfig::
-//! with_wait_slice`, which bounds the real path's polling slice).
+//! `drive_conn` runs the **same** [`ConnSm`] state machine the epoll
+//! reactor and the threaded fallback drive (decode, pipelined dispatch,
+//! `Wait` holes, subscription events), reading and writing strictly
+//! through the `WireStream` trait object so the simulated transport
+//! exercises the same seam as sockets. Environment access goes through
+//! [`SimSvc`], the [`ConnService`] bound to the virtual server: a
+//! repeated `Hello` binding the *same* tenant is answered idempotently
+//! (the fault plan can legitimately duplicate a handshake frame), and a
+//! blocking `Wait` becomes a parked waiter — the job's transition wakes
+//! the connection actor, which re-polls its parked jobs. Virtual time
+//! never slices or polls on a timer (satellite of `ServerConfig::
+//! with_wait_slice`, which bounds the real threaded path's slice).
 
 use std::collections::BTreeMap;
-use std::io::Read;
+use std::io::{Read, Write};
 use std::sync::{Arc, Mutex};
 
 use super::engine::{req_name, resp_name, ActorId, EvKind, Sim, STREAM_SCHED, STREAM_STEAL};
@@ -30,10 +30,8 @@ use crate::server::protocol::{JobId, JobReport, JobStatus, SubmitError, TenantId
 use crate::server::registry::{JobGraph, Registry};
 use crate::server::shard::route_shard;
 use crate::server::stats::ServerStats;
-use crate::server::wire::codec::FrameBuffer;
-use crate::server::wire::{
-    codec, ErrorCode, Request, Response, WireStatus, WireStream, WIRE_VERSION,
-};
+use crate::server::wire::conn::{ConnService, ConnSm};
+use crate::server::wire::{Request, Response, WireStatus, WireStream};
 use crate::util::rng::Rng;
 
 /// Task durations come from the task's declared cost, clamped so a
@@ -88,22 +86,11 @@ impl ReadySink for SlotSink {
     }
 }
 
-/// Server-side state of one connection.
+/// Server-side state of one connection: exactly the state machine the
+/// reactor and the threaded listener drive, nothing else.
 #[derive(Default)]
 pub(crate) struct ConnHandler {
-    pub fb: FrameBuffer,
-    pub tenant: Option<TenantId>,
-    /// Job id a `Wait` is parked on; while set, no further frames are
-    /// consumed (mirrors the real path's blocking Wait).
-    pub pending_wait: Option<u64>,
-}
-
-/// What one dispatched frame decided about the connection.
-enum Flow {
-    Keep,
-    Close,
-    /// A `Wait` parked; stop consuming frames until woken.
-    Waiting,
+    pub sm: ConnSm,
 }
 
 /// Everything server-side that is not per-connection.
@@ -149,6 +136,101 @@ impl SimServer {
             waiters: BTreeMap::new(),
             stats: ServerStats::new(),
         }
+    }
+}
+
+/// [`ConnService`] binding one simulated connection to the virtual
+/// server. Submissions and cancels land in the simulated admission
+/// queue; wait/watch registrations park the connection in the waiter
+/// table so the job's transitions re-schedule its actor (push wakeups,
+/// no virtual-time polling); the observability hooks feed the trace log
+/// the pinned DST seeds are read against.
+struct SimSvc<'a> {
+    sim: &'a mut Sim,
+    conn: usize,
+}
+
+impl ConnService for SimSvc<'_> {
+    fn submit(
+        &mut self,
+        tenant: TenantId,
+        template: String,
+        reuse: bool,
+        args: Vec<u8>,
+    ) -> Result<u64, SubmitError> {
+        let out = self.sim.server_submit(tenant, template, reuse, args);
+        if let Ok(id) = out {
+            let conn = self.conn;
+            self.sim.trace(format!("conn {conn}: job {id} submitted"));
+        }
+        out
+    }
+
+    fn poll(&mut self, job: u64) -> WireStatus {
+        self.sim
+            .server
+            .jobs
+            .get(&job)
+            .map(WireStatus::from_status)
+            .unwrap_or(WireStatus::Unknown)
+    }
+
+    fn cancel(&mut self, job: u64) -> bool {
+        self.sim.server_cancel(job)
+    }
+
+    fn stats_json(&mut self) -> String {
+        self.sim.server.stats.snapshot().to_json()
+    }
+
+    fn metrics_text(&mut self) -> String {
+        // The obs registry samples wall-clock gauges; the simulation
+        // answers with a stub instead of letting real time leak in.
+        "# sim: metrics not modeled\n".into()
+    }
+
+    fn register_wait(&mut self, job: u64) {
+        let list = self.sim.server.waiters.entry(job).or_default();
+        if !list.contains(&self.conn) {
+            list.push(self.conn);
+        }
+    }
+
+    fn unregister_wait(&mut self, job: u64) {
+        if let Some(list) = self.sim.server.waiters.get_mut(&job) {
+            list.retain(|&c| c != self.conn);
+            if list.is_empty() {
+                self.sim.server.waiters.remove(&job);
+            }
+        }
+    }
+
+    // Watches ride the same waiter table: every transition of a watched
+    // job wakes the connection actor, which re-polls its parked jobs
+    // and lets the state machine's rank filter decide what to emit.
+    fn register_watch(&mut self, job: u64) {
+        self.register_wait(job);
+    }
+
+    fn unregister_watch(&mut self, job: u64) {
+        self.unregister_wait(job);
+    }
+
+    fn idempotent_hello(&mut self) -> bool {
+        // The fault plan can duplicate the handshake frame.
+        true
+    }
+
+    fn on_request(&mut self, req: &Request) {
+        let conn = self.conn;
+        let name = req_name(req);
+        self.sim.trace(format!("conn {conn}: <- {name}"));
+    }
+
+    fn on_response(&mut self, resp: &Response) {
+        let conn = self.conn;
+        let name = resp_name(resp);
+        self.sim.trace(format!("conn {conn}: -> {name}"));
     }
 }
 
@@ -231,6 +313,9 @@ impl Sim {
             }
             self.server.jobs.insert(q.id, JobStatus::Running);
             self.trace(format!("job {} admitted: template {} slot {slot}", q.id, q.template));
+            // Non-terminal transition: nudge watchers (subscriptions)
+            // without consuming the waiter registrations.
+            self.nudge_waiters(q.id);
             self.server.slots[slot] = Some(SimActive {
                 id: q.id,
                 tenant,
@@ -396,7 +481,8 @@ impl Sim {
         self.wake_waiters(active.id);
     }
 
-    /// Wake every connection parked in `Wait` on `job`.
+    /// Wake every connection parked on `job` and drop the registrations
+    /// — the job settled, nothing more will happen to it.
     fn wake_waiters(&mut self, job: u64) {
         if let Some(conns) = self.server.waiters.remove(&job) {
             for conn in conns {
@@ -405,11 +491,22 @@ impl Sim {
         }
     }
 
+    /// Wake every connection parked on `job` but keep the registrations
+    /// — a non-terminal transition (Queued → Running) that watchers
+    /// must observe while waiters keep waiting.
+    fn nudge_waiters(&mut self, job: u64) {
+        if let Some(conns) = self.server.waiters.get(&job) {
+            for conn in conns.clone() {
+                self.push(self.now + 1, EvKind::Wake(ActorId::Conn(conn)));
+            }
+        }
+    }
+
     // ---- connection handling --------------------------------------------
 
     /// Server-side actor step for one connection: accept lazily on first
-    /// bytes, resolve a parked `Wait` if its job went terminal, then
-    /// read + dispatch frames until the inbox runs dry.
+    /// bytes, re-poll parked jobs (`Wait` holes and watches), then read
+    /// + dispatch frames until the inbox runs dry.
     pub(crate) fn step_conn(&mut self, conn: usize) {
         let reset = self.net.conns[conn].lock().unwrap().reset;
         if reset {
@@ -445,31 +542,18 @@ impl Sim {
         self.server.waiters.retain(|_, list| !list.is_empty());
     }
 
-    /// The `serve_conn` frame loop, event-shaped. `true` = close.
+    /// One event-shaped turn of the connection state machine: re-poll
+    /// parked jobs (a wakeup means one of them transitioned), drain
+    /// whatever bytes the network has delivered into [`ConnSm`], then
+    /// flush its outgoing buffer. `true` = close.
     fn drive_conn(&mut self, conn: usize, h: &mut ConnHandler) -> bool {
-        // A parked Wait gates everything: no frames are consumed until
-        // the job it watches goes terminal.
-        if let Some(job) = h.pending_wait {
-            match self.server.jobs.get(&job) {
-                Some(s) if s.is_terminal() => {
-                    h.pending_wait = None;
-                    let status = WireStatus::from_status(s);
-                    if !self.send_conn(conn, &Response::Status { job, status }) {
-                        return true;
-                    }
-                }
-                Some(_) => return false,
-                None => {
-                    h.pending_wait = None;
-                    let resp = Response::Status { job, status: WireStatus::Unknown };
-                    if !self.send_conn(conn, &resp) {
-                        return true;
-                    }
-                }
-            }
+        if h.sm.has_parked_work() {
+            let mut svc = SimSvc { sim: self, conn };
+            h.sm.poll_parked(&mut svc);
         }
         // Drain everything the network has delivered so far.
         let mut peer_closed = false;
+        let mut data = Vec::new();
         {
             let mut ws = self.net.stream(conn, SERVER);
             let stream: &mut dyn WireStream = &mut ws;
@@ -480,162 +564,30 @@ impl Sim {
                         peer_closed = true;
                         break;
                     }
-                    Ok(n) => h.fb.extend(&tmp[..n]),
+                    Ok(n) => data.extend_from_slice(&tmp[..n]),
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
                     Err(_) => return true,
                 }
             }
         }
-        loop {
-            let body = match h.fb.take_frame() {
-                Err(e) => {
-                    self.send_err(conn, ErrorCode::BadRequest, 0, &e.to_string());
-                    return true;
-                }
-                Ok(Some(b)) => b,
-                Ok(None) => return peer_closed,
-            };
-            match self.dispatch_frame(conn, h, &body) {
-                Flow::Keep => {}
-                Flow::Close => return true,
-                Flow::Waiting => return false,
+        {
+            let mut svc = SimSvc { sim: self, conn };
+            if !data.is_empty() {
+                h.sm.on_bytes(&data, &mut svc);
+            }
+            if peer_closed {
+                h.sm.on_peer_closed();
             }
         }
-    }
-
-    /// Dispatch one decoded request — the listener's match, inline.
-    fn dispatch_frame(&mut self, conn: usize, h: &mut ConnHandler, body: &[u8]) -> Flow {
-        let req = match Request::decode(body) {
-            Ok(r) => r,
-            Err(e) => {
-                self.send_err(conn, ErrorCode::BadRequest, 0, &e.to_string());
-                return Flow::Close;
+        if !h.sm.out().is_empty() {
+            let mut ws = self.net.stream(conn, SERVER);
+            let stream: &mut dyn WireStream = &mut ws;
+            if stream.write_all(h.sm.out()).is_err() {
+                return true;
             }
-        };
-        self.trace(format!("conn {conn}: <- {}", req_name(&req)));
-        match req {
-            Request::Hello { version, tenant } => {
-                if version != WIRE_VERSION {
-                    self.send_err(
-                        conn,
-                        ErrorCode::VersionMismatch,
-                        WIRE_VERSION as u64,
-                        &format!("server speaks wire version {WIRE_VERSION}"),
-                    );
-                    return Flow::Close;
-                }
-                match h.tenant {
-                    Some(t) if t.0 != tenant => {
-                        self.send_err(
-                            conn,
-                            ErrorCode::BadRequest,
-                            0,
-                            "Hello already completed on this connection",
-                        );
-                        Flow::Close
-                    }
-                    // Idempotent for the same tenant: the network may
-                    // have duplicated the handshake frame.
-                    _ => {
-                        h.tenant = Some(TenantId(tenant));
-                        let ok = Response::HelloOk { version: WIRE_VERSION, tenant };
-                        if self.send_conn(conn, &ok) {
-                            Flow::Keep
-                        } else {
-                            Flow::Close
-                        }
-                    }
-                }
-            }
-            Request::Bye => Flow::Close,
-            other => {
-                let Some(tenant) = h.tenant else {
-                    self.send_err(conn, ErrorCode::NeedHello, 0, "Hello must be the first message");
-                    return Flow::Close;
-                };
-                let resp = match other {
-                    Request::Submit { template, reuse, args } => {
-                        match self.server_submit(tenant, template, reuse, args) {
-                            Ok(id) => {
-                                self.trace(format!("conn {conn}: job {id} submitted"));
-                                Response::Submitted { job: id }
-                            }
-                            Err(e) => reject(&e),
-                        }
-                    }
-                    Request::Poll { job } => Response::Status {
-                        job,
-                        status: self
-                            .server
-                            .jobs
-                            .get(&job)
-                            .map(WireStatus::from_status)
-                            .unwrap_or(WireStatus::Unknown),
-                    },
-                    Request::Wait { job } => match self.server.jobs.get(&job) {
-                        None => Response::Status { job, status: WireStatus::Unknown },
-                        Some(s) if s.is_terminal() => {
-                            Response::Status { job, status: WireStatus::from_status(s) }
-                        }
-                        Some(_) => {
-                            // Park: the job's terminal transition wakes
-                            // this connection (no polling under virtual
-                            // time).
-                            self.server.waiters.entry(job).or_default().push(conn);
-                            h.pending_wait = Some(job);
-                            return Flow::Waiting;
-                        }
-                    },
-                    Request::Cancel { job } => {
-                        Response::Cancelled { job, ok: self.server_cancel(job) }
-                    }
-                    Request::Stats => {
-                        Response::StatsJson { json: self.server.stats.snapshot().to_json() }
-                    }
-                    Request::Metrics => {
-                        // The obs registry samples wall-clock gauges;
-                        // the simulation answers with a stub instead of
-                        // letting real time leak into the run.
-                        Response::MetricsText { text: "# sim: metrics not modeled\n".into() }
-                    }
-                    Request::Hello { .. } | Request::Bye => unreachable!("handled above"),
-                };
-                if self.send_conn(conn, &resp) {
-                    Flow::Keep
-                } else {
-                    Flow::Close
-                }
-            }
+            h.sm.clear_out();
         }
-    }
-
-    /// Write one response through the chunk-safe encoder. `false` = the
-    /// connection is gone.
-    fn send_conn(&mut self, conn: usize, resp: &Response) -> bool {
-        self.trace(format!("conn {conn}: -> {}", resp_name(resp)));
-        let mut ws = self.net.stream(conn, SERVER);
-        codec::write_response(&mut ws, resp).is_ok()
-    }
-
-    fn send_err(&mut self, conn: usize, code: ErrorCode, aux: u64, message: &str) {
-        let resp = Response::Error { code, aux, message: message.to_string() };
-        let _ = self.send_conn(conn, &resp);
-    }
-}
-
-/// Map an admission rejection onto its wire error (all retryable) —
-/// the listener's mapping, verbatim.
-fn reject(e: &SubmitError) -> Response {
-    match e {
-        SubmitError::TenantAtCapacity { cap, .. } => Response::Error {
-            code: ErrorCode::TenantAtCapacity,
-            aux: *cap as u64,
-            message: e.to_string(),
-        },
-        SubmitError::ServerSaturated { max_queued } => Response::Error {
-            code: ErrorCode::ServerSaturated,
-            aux: *max_queued as u64,
-            message: e.to_string(),
-        },
+        h.sm.maybe_shrink();
+        h.sm.should_close()
     }
 }

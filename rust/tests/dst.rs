@@ -122,6 +122,7 @@ fn pinned_hostile_seeds_per_fault_class() {
         (FaultProfile::Slow, 13),
         (FaultProfile::Reset, 3),
         (FaultProfile::Partition, 5),
+        (FaultProfile::PartialFrame, 23),
         (FaultProfile::Chaos, 17),
     ] {
         let outcome = run_seed(&cfg, seed, profile, None);
@@ -180,6 +181,48 @@ fn every_profile_passes_a_short_sweep() {
             profile.name()
         );
     }
+}
+
+/// Satellite: the reactor scenario — every client submits through one
+/// pipelined `SubmitBatch` frame, so the sweep drives the connection
+/// state machine's ordered response queue, its `Wait` holes, and the
+/// batched admission path — holds the four invariants under the
+/// byte-granular partial-frame profile and under chaos.
+#[test]
+fn reactor_scenario_survives_partial_frames_and_chaos() {
+    for profile in [FaultProfile::PartialFrame, FaultProfile::Chaos] {
+        let report = run_sweep(&SimConfig::reactor_scenario(), 0, 12, profile);
+        assert!(
+            report.ok(),
+            "reactor scenario under {}: failing seeds {:?}; first log:\n{}",
+            profile.name(),
+            report.failing_seeds(),
+            report.failures.first().map(|o| o.log_text()).unwrap_or_default()
+        );
+        assert_eq!(report.passed, 12);
+        assert!(
+            report.faults.for_profile(profile) > 0,
+            "reactor scenario under {} injected nothing",
+            profile.name()
+        );
+    }
+}
+
+/// Satellite: torn frames specifically — the partial-frame profile
+/// splits wire messages at byte granularity, so a pinned window proves
+/// the `FrameBuffer` reassembly path (header split across reads, bodies
+/// dribbling in one byte at a time) never corrupts a conversation.
+#[test]
+fn partial_frame_sweep_reassembles_torn_frames() {
+    let report = run_sweep(&SimConfig::small(), 0, 16, FaultProfile::PartialFrame);
+    assert!(
+        report.ok(),
+        "failing seeds {:?}; first log:\n{}",
+        report.failing_seeds(),
+        report.failures.first().map(|o| o.log_text()).unwrap_or_default()
+    );
+    assert_eq!(report.passed, 16);
+    assert!(report.faults.for_profile(FaultProfile::PartialFrame) > 0);
 }
 
 /// Satellite: the blocking-`Wait` re-check slice is a config knob with

@@ -123,6 +123,23 @@ fn obs_counter_overhead_within_bounds() {
     );
 }
 
+/// Satellite: the reactor's per-connection memory ceiling. A freshly
+/// accepted connection's state machine costs well under 1 KiB, and a
+/// connection that served a 256-submission pipelined burst must shrink
+/// back to a bounded steady state once drained — so 10k held
+/// connections cost ~10k × a few KiB, not 10k × the largest burst any
+/// of them ever carried.
+#[test]
+fn per_connection_memory_stays_bounded() {
+    use quicksched::server::wire::conn::{idle_conn_footprint, post_burst_conn_footprint};
+    let idle = idle_conn_footprint();
+    let post = post_burst_conn_footprint();
+    eprintln!("conn footprint: idle {idle} B, post-burst {post} B");
+    assert!(idle <= 1024, "idle connection footprint regressed: {idle} B");
+    assert!(post <= 16 * 1024, "post-burst connection footprint regressed: {post} B");
+    assert!(post >= idle, "post-burst footprint below idle baseline?");
+}
+
 /// Same contention shape through the real threaded executor.
 #[test]
 fn pathological_contention_threaded() {

@@ -1,18 +1,34 @@
 //! Property tests for the wire codec (100 seeds, crate-own PRNG — no
 //! proptest in the offline registry): every message type round-trips
-//! through encode → frame → decode, and truncated / corrupted /
-//! oversized frames return `ProtocolError` — never a panic, never an
-//! allocation driven by attacker-controlled lengths.
+//! through encode → frame → decode, truncated / corrupted / oversized
+//! frames return `ProtocolError` — never a panic, never an allocation
+//! driven by attacker-controlled lengths — and a pipelined conversation
+//! chopped at arbitrary byte boundaries still answers every request in
+//! order against a live listener.
 
 use std::io::Cursor;
 
 use quicksched::server::wire::codec::{
-    read_frame, read_response, write_frame, write_response, FrameBuffer, ProtocolError, Request,
-    Response, WireReport, WireStatus, MAX_FRAME,
+    read_frame, read_response, write_frame, write_response, BatchItem, BatchResult, ErrorCode,
+    FrameBuffer, ProtocolError, Request, Response, WireReport, WireStatus, MAX_FRAME,
+    WIRE_VERSION,
 };
 use quicksched::util::rng::Rng;
 
 const SEEDS: u64 = 100;
+
+fn rand_code(rng: &mut Rng) -> ErrorCode {
+    let codes = [
+        ErrorCode::TenantAtCapacity,
+        ErrorCode::ServerSaturated,
+        ErrorCode::NeedHello,
+        ErrorCode::BadRequest,
+        ErrorCode::VersionMismatch,
+        ErrorCode::ShuttingDown,
+        ErrorCode::Internal,
+    ];
+    codes[rng.index(codes.len())]
+}
 
 fn rand_string(rng: &mut Rng, max_len: usize) -> String {
     let n = rng.index(max_len + 1);
@@ -34,7 +50,7 @@ fn rand_bytes(rng: &mut Rng, max_len: usize) -> Vec<u8> {
 }
 
 fn rand_request(rng: &mut Rng) -> Request {
-    match rng.index(8) {
+    match rng.index(10) {
         0 => Request::Hello {
             version: rng.next_u64() as u32,
             tenant: rng.next_u64() as u32,
@@ -49,7 +65,17 @@ fn rand_request(rng: &mut Rng) -> Request {
         4 => Request::Cancel { job: rng.next_u64() },
         5 => Request::Stats,
         6 => Request::Metrics,
-        _ => Request::Bye,
+        7 => Request::Bye,
+        8 => Request::Subscribe { job: rng.next_u64() },
+        _ => Request::SubmitBatch {
+            items: (0..rng.index(5))
+                .map(|_| BatchItem {
+                    template: rand_string(rng, 24),
+                    reuse: rng.chance(0.5),
+                    args: rand_bytes(rng, 32),
+                })
+                .collect(),
+        },
     }
 }
 
@@ -75,8 +101,7 @@ fn rand_status(rng: &mut Rng) -> WireStatus {
 }
 
 fn rand_response(rng: &mut Rng) -> Response {
-    use quicksched::server::wire::codec::ErrorCode;
-    match rng.index(8) {
+    match rng.index(10) {
         0 => Response::HelloOk {
             version: rng.next_u64() as u32,
             tenant: rng.next_u64() as u32,
@@ -87,22 +112,23 @@ fn rand_response(rng: &mut Rng) -> Response {
         4 => Response::StatsJson { json: rand_string(rng, 200) },
         5 => Response::MetricsText { text: rand_string(rng, 300) },
         6 => Response::Chunk { last: rng.chance(0.5), data: rand_bytes(rng, 120) },
-        _ => {
-            let codes = [
-                ErrorCode::TenantAtCapacity,
-                ErrorCode::ServerSaturated,
-                ErrorCode::NeedHello,
-                ErrorCode::BadRequest,
-                ErrorCode::VersionMismatch,
-                ErrorCode::ShuttingDown,
-                ErrorCode::Internal,
-            ];
-            Response::Error {
-                code: codes[rng.index(codes.len())],
-                aux: rng.next_u64(),
-                message: rand_string(rng, 80),
-            }
-        }
+        7 => Response::Error {
+            code: rand_code(rng),
+            aux: rng.next_u64(),
+            message: rand_string(rng, 80),
+        },
+        8 => Response::Event { job: rng.next_u64(), status: rand_status(rng) },
+        _ => Response::SubmittedBatch {
+            results: (0..rng.index(5))
+                .map(|_| {
+                    if rng.chance(0.6) {
+                        BatchResult::Accepted { job: rng.next_u64() }
+                    } else {
+                        BatchResult::Rejected { code: rand_code(rng), aux: rng.next_u64() }
+                    }
+                })
+                .collect(),
+        },
     }
 }
 
@@ -258,4 +284,134 @@ fn hostile_lengths_never_over_allocate() {
             Err(ProtocolError::Truncated) | Err(ProtocolError::BadVarint)
         ));
     }
+}
+
+/// Satellite: the pipelining property, against a *live* listener. Each
+/// seed composes one pipelined conversation — Hello, then a random mix
+/// of Submit / SubmitBatch / Poll / Wait / Stats / Metrics / Cancel
+/// written back-to-back without reading — encodes it, and dribbles the
+/// byte stream over TCP chopped at arbitrary 1..=7-byte boundaries from
+/// the seeded PRNG (with occasional yields so the server really sees
+/// torn frames). The server must answer every request exactly once, in
+/// request order, with the matching response tag — `Submitted` ids
+/// strictly sequential, `Status`/`Cancelled` echoing the requested job —
+/// no matter where the frame boundaries fell.
+#[test]
+fn pipelined_requests_answer_in_order_under_arbitrary_chopping() {
+    use std::io::Write;
+    use std::sync::Arc;
+
+    use quicksched::server::{
+        synthetic_template, ListenAddr, SchedServer, ServerConfig, WireListener,
+    };
+
+    let server = SchedServer::start(ServerConfig::new(2).with_seed(0x9E0));
+    server.register_template("syn", synthetic_template(6, 2, 0xFEED, 0));
+    let server = Arc::new(server);
+    let listener = WireListener::start(Arc::clone(&server), &ListenAddr::parse("127.0.0.1:0"))
+        .expect("binding loopback listener");
+    let addr = listener.local_addr().to_string();
+
+    // Job ids are allocated from one server-wide sequential counter and
+    // the connections run strictly one at a time, so every accepted
+    // submission's id is predictable across the whole test.
+    let mut next_job = 1u64;
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed ^ 0x5EED);
+        let mut reqs =
+            vec![Request::Hello { version: WIRE_VERSION, tenant: (seed % 5) as u32 }];
+        let mut submitted: Vec<u64> = Vec::new();
+        let pick = |rng: &mut Rng, submitted: &[u64]| -> u64 {
+            if submitted.is_empty() || rng.chance(0.25) {
+                (1 << 60) + rng.below(1 << 20) // unknown: settled immediately
+            } else {
+                submitted[rng.index(submitted.len())]
+            }
+        };
+        for _ in 0..8 + rng.index(9) {
+            let req = match rng.index(8) {
+                0 | 1 => {
+                    submitted.push(next_job);
+                    next_job += 1;
+                    Request::Submit { template: "syn".into(), reuse: true, args: Vec::new() }
+                }
+                2 => {
+                    let k = 1 + rng.index(3);
+                    let items = (0..k).map(|_| BatchItem::template("syn")).collect();
+                    for _ in 0..k {
+                        submitted.push(next_job);
+                        next_job += 1;
+                    }
+                    Request::SubmitBatch { items }
+                }
+                3 => Request::Poll { job: pick(&mut rng, &submitted) },
+                4 => Request::Wait { job: pick(&mut rng, &submitted) },
+                5 => Request::Stats,
+                6 => Request::Metrics,
+                _ => Request::Cancel { job: (1 << 61) + rng.below(1 << 20) },
+            };
+            reqs.push(req);
+        }
+
+        let mut wire = Vec::new();
+        for r in &reqs {
+            write_frame(&mut wire, &r.encode()).unwrap();
+        }
+
+        let mut sock = std::net::TcpStream::connect(&addr).expect("connecting chopper");
+        sock.set_nodelay(true).ok();
+        let mut off = 0usize;
+        while off < wire.len() {
+            let k = (1 + rng.index(7)).min(wire.len() - off);
+            sock.write_all(&wire[off..off + k]).expect("writing chopped bytes");
+            off += k;
+            if rng.chance(0.05) {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+        }
+        sock.flush().expect("flushing chopped bytes");
+
+        let mut expect_submit = submitted.iter().copied();
+        for (i, req) in reqs.iter().enumerate() {
+            let resp = read_response(&mut sock)
+                .unwrap_or_else(|e| panic!("seed {seed} req {i} ({req:?}): {e:?}"));
+            match (req, &resp) {
+                (Request::Hello { version, .. }, Response::HelloOk { version: v, .. }) => {
+                    assert_eq!(v, version, "seed {seed}")
+                }
+                (Request::Submit { .. }, Response::Submitted { job }) => {
+                    assert_eq!(Some(*job), expect_submit.next(), "seed {seed} req {i}")
+                }
+                (Request::SubmitBatch { items }, Response::SubmittedBatch { results }) => {
+                    assert_eq!(results.len(), items.len(), "seed {seed} req {i}");
+                    for r in results {
+                        match r {
+                            BatchResult::Accepted { job } => assert_eq!(
+                                Some(*job),
+                                expect_submit.next(),
+                                "seed {seed} req {i}"
+                            ),
+                            BatchResult::Rejected { code, aux } => {
+                                panic!("seed {seed} req {i}: rejected {code:?} aux {aux}")
+                            }
+                        }
+                    }
+                }
+                (
+                    Request::Poll { job } | Request::Wait { job },
+                    Response::Status { job: j, .. },
+                ) => assert_eq!(j, job, "seed {seed} req {i}"),
+                (Request::Cancel { job }, Response::Cancelled { job: j, ok }) => {
+                    assert_eq!(j, job, "seed {seed} req {i}");
+                    assert!(!ok, "seed {seed} req {i}: unknown job cancelled");
+                }
+                (Request::Stats, Response::StatsJson { .. }) => {}
+                (Request::Metrics, Response::MetricsText { .. }) => {}
+                (req, resp) => {
+                    panic!("seed {seed} req {i}: {req:?} answered out of order by {resp:?}")
+                }
+            }
+        }
+    }
+    listener.shutdown();
 }

@@ -11,11 +11,13 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use quicksched::client::{RemoteClient, RemoteError};
 use quicksched::server::{
     gated_template, nbody_template, qr_template, synthetic_param_template, JobId, JobSpec,
     JobStatus, ListenAddr, SchedServer, ServerConfig, SubmitError, TenantId, WireListener,
+    WireMode,
 };
 
 const CLIENTS: u32 = 4;
@@ -224,6 +226,178 @@ fn saturated_server_rejects_over_the_wire_instead_of_hanging() {
 
     listener.shutdown();
     drop(server);
+}
+
+/// Extract an unlabelled counter's value from a Prometheus exposition.
+fn counter_value(text: &str, name: &str) -> u64 {
+    let prefix = format!("{name} ");
+    text.lines()
+        .find_map(|l| l.strip_prefix(prefix.as_str()))
+        .unwrap_or_else(|| panic!("counter {name} not exported"))
+        .trim()
+        .parse()
+        .unwrap_or_else(|e| panic!("counter {name} unparseable: {e}"))
+}
+
+/// Satellite: streaming subscriptions. A client subscribed to a job
+/// observes its remaining transitions as server-pushed `Event` frames —
+/// exactly once each, in order, terminal last — without issuing a
+/// single blocking `Wait`. The inflight cap plus a gated blocker make
+/// the snapshot (`Queued`) and the subsequent stream (`Running`,
+/// `Done`) fully deterministic.
+#[test]
+fn subscription_streams_transitions_in_order_without_polling() {
+    let server = SchedServer::start(
+        ServerConfig::new(2)
+            .with_seed(11)
+            .with_max_inflight(1)
+            .with_wait_slice(Duration::from_secs(30)),
+    );
+    let gate = Arc::new(AtomicBool::new(false));
+    server.register_template("gated", gated_template(Arc::clone(&gate)));
+    let server = Arc::new(server);
+    let listener =
+        WireListener::start(Arc::clone(&server), &ListenAddr::parse("127.0.0.1:0")).unwrap();
+    let mut client = RemoteClient::connect(listener.local_addr(), TenantId(0)).unwrap();
+
+    // The blocker occupies the single in-flight slot…
+    let blocker = client.submit("gated").unwrap();
+    while !matches!(client.poll(blocker).unwrap(), Some(JobStatus::Running)) {
+        std::thread::yield_now();
+    }
+    // …so this job is deterministically still Queued when subscribed.
+    let observed = client.submit("gated").unwrap();
+    let snap = client.subscribe(observed).unwrap();
+    assert!(matches!(snap, Some(JobStatus::Queued)), "snapshot was {snap:?}");
+
+    gate.store(true, Ordering::Release);
+    let (id1, st1) = client.wait_event().unwrap();
+    assert_eq!(id1, observed);
+    assert!(matches!(st1, JobStatus::Running), "first event was {st1:?}");
+    let (id2, st2) = client.wait_event().unwrap();
+    assert_eq!(id2, observed);
+    assert!(matches!(st2, JobStatus::Done(_)), "second event was {st2:?}");
+    assert!(client.next_event().is_none(), "no events after the terminal one");
+
+    // The push path kept both polled fallbacks cold. (The threaded
+    // front-end produces events *by* slice-polling, so this half of the
+    // assertion is reactor-specific.)
+    let text = listener.metrics_text();
+    assert_eq!(counter_value(&text, "quicksched_wait_slice_polls_total"), 0);
+    if cfg!(target_os = "linux") {
+        assert_eq!(counter_value(&text, "quicksched_wire_wait_slice_polls_total"), 0);
+    }
+    listener.shutdown();
+    drop(server);
+}
+
+/// Satellite fix: `ServerConfig::with_wait_slice` reaches the wire
+/// front-end end-to-end. With the slice configured to its 1 ms floor
+/// and the threaded front-end forced, a remote blocking `Wait` parked
+/// behind a gated job is re-polled every slice — the wire's slice
+/// counter records dozens of re-polls over a ~25 ms park, where the old
+/// hardcoded 50 ms loop would have recorded none.
+#[test]
+fn wire_wait_honors_the_configured_wait_slice_floor() {
+    let server =
+        SchedServer::start(ServerConfig::new(1).with_seed(19).with_wait_slice(Duration::ZERO));
+    assert_eq!(server.wait_slice(), Duration::from_millis(1), "clamped to the 1 ms floor");
+    let gate = Arc::new(AtomicBool::new(false));
+    server.register_template("gated", gated_template(Arc::clone(&gate)));
+    let server = Arc::new(server);
+    let listener = WireListener::start_with(
+        Arc::clone(&server),
+        &ListenAddr::parse("127.0.0.1:0"),
+        8,
+        WireMode::Threaded,
+    )
+    .unwrap();
+
+    let addr = listener.local_addr().to_string();
+    let (status, waited) = std::thread::scope(|scope| {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let handle = scope.spawn(move || {
+            let mut client = RemoteClient::connect(&addr, TenantId(0)).unwrap();
+            let id = client.submit("gated").unwrap();
+            tx.send(id).unwrap();
+            let t0 = std::time::Instant::now();
+            (client.wait(id).unwrap(), t0.elapsed())
+        });
+        let id = rx.recv().unwrap();
+        while !matches!(server.poll(id), Some(JobStatus::Running)) {
+            std::thread::yield_now();
+        }
+        // Hold the remote Wait parked across many 1 ms slices.
+        std::thread::sleep(Duration::from_millis(25));
+        gate.store(true, Ordering::Release);
+        handle.join().unwrap()
+    });
+    assert!(matches!(status, JobStatus::Done(_)), "gated job ended as {status:?}");
+    assert!(waited < Duration::from_secs(5), "wait did not oversleep ({waited:?})");
+
+    let polls = counter_value(&listener.metrics_text(), "quicksched_wire_wait_slice_polls_total");
+    assert!(
+        polls >= 5,
+        "a 1 ms slice must re-poll a ~25 ms park many times (got {polls}; \
+         a hardcoded 50 ms slice would give 0)"
+    );
+    listener.shutdown();
+    drop(server);
+}
+
+/// Pipelining satellites, against both front-ends: `submit_pipelined`
+/// keeps several `Submit` frames in flight on one connection with acks
+/// returning in request order, and `submit_batch` carries them in a
+/// single `SubmitBatch` frame through the fused admission path — an
+/// unknown template inside a batch is accepted and fails at build,
+/// exactly like a serial submission.
+#[test]
+fn pipelined_and_batched_submission_roundtrip() {
+    use quicksched::server::wire::BatchItem;
+    for mode in [WireMode::Auto, WireMode::Threaded] {
+        let server = SchedServer::start(
+            ServerConfig::new(2).with_seed(29).with_adaptive_batch(4).with_max_inflight(32),
+        );
+        paper_templates(&server);
+        let server = Arc::new(server);
+        let listener = WireListener::start_with(
+            Arc::clone(&server),
+            &ListenAddr::parse("127.0.0.1:0"),
+            8,
+            mode,
+        )
+        .unwrap();
+        let mut client = RemoteClient::connect(listener.local_addr(), TenantId(0)).unwrap();
+
+        let acks = client.submit_pipelined(&["qr"; 6]).unwrap();
+        let ids: Vec<JobId> =
+            acks.into_iter().map(|r| r.expect("pipelined submit accepted")).collect();
+        assert_eq!(ids.len(), 6);
+        assert!(ids.windows(2).all(|w| w[0].0 < w[1].0), "acks in request order: {ids:?}");
+        for id in &ids {
+            assert!(matches!(client.wait(*id).unwrap(), JobStatus::Done(_)));
+        }
+
+        let items = vec![
+            BatchItem::template("qr"),
+            BatchItem::template("ghost"),
+            BatchItem::template("nbody"),
+        ];
+        let results = client.submit_batch(items).unwrap();
+        assert_eq!(results.len(), 3);
+        let ids: Vec<JobId> =
+            results.into_iter().map(|r| r.expect("batch item accepted")).collect();
+        assert!(matches!(client.wait(ids[0]).unwrap(), JobStatus::Done(_)));
+        assert!(
+            matches!(client.wait(ids[1]).unwrap(), JobStatus::Failed(_)),
+            "unknown template fails at build, not at admission"
+        );
+        assert!(matches!(client.wait(ids[2]).unwrap(), JobStatus::Done(_)));
+
+        client.bye().unwrap();
+        listener.shutdown();
+        drop(server);
+    }
 }
 
 /// The same protocol over a Unix-domain socket, including socket-file

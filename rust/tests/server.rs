@@ -298,6 +298,60 @@ fn adaptive_batching_fuses_backlog_and_records_histogram() {
     server.shutdown();
 }
 
+/// Satellite: status listeners — the hook the wire's server-push
+/// `Event` subscriptions hang off — observe every transition of every
+/// job (Queued, Running, terminal) exactly once and in true order
+/// (publication happens under the state lock), and the blocking-Wait
+/// slice counter stays at zero throughout: completions are pushed,
+/// never polled.
+#[test]
+fn status_listeners_observe_every_transition_exactly_once_in_order() {
+    use quicksched::server::JobId;
+    use std::sync::{Arc, Mutex};
+
+    fn rank(s: &JobStatus) -> u8 {
+        match s {
+            JobStatus::Queued => 0,
+            JobStatus::Running => 1,
+            _ => 2,
+        }
+    }
+
+    let server = start_server(2, 40);
+    let log: Arc<Mutex<Vec<(JobId, u8)>>> = Arc::new(Mutex::new(Vec::new()));
+    {
+        let log = Arc::clone(&log);
+        server.add_status_listener(move |id, status| {
+            log.lock().unwrap().push((id, rank(status)));
+        });
+    }
+    let ids: Vec<_> = (0..8)
+        .map(|i| server.submit(JobSpec::template(TenantId(i % 2), "syn")))
+        .collect();
+    for &id in &ids {
+        assert!(matches!(server.wait(id), JobStatus::Done(_)));
+    }
+    server.drain();
+
+    let log = log.lock().unwrap();
+    for &id in &ids {
+        let seen: Vec<u8> = log.iter().filter(|(j, _)| *j == id).map(|&(_, r)| r).collect();
+        assert_eq!(seen, vec![0, 1, 2], "job {id}: every transition exactly once, in order");
+    }
+    // Zero polling wakeups: `wait` slept on the condvar and the
+    // listeners were pushed; the slice-expiry fallback never fired.
+    let text = server.metrics_text();
+    let polls: u64 = text
+        .lines()
+        .find_map(|l| l.strip_prefix("quicksched_wait_slice_polls_total "))
+        .expect("wait-slice counter exported")
+        .trim()
+        .parse()
+        .unwrap();
+    assert_eq!(polls, 0, "blocking waits must be pushed, not polled");
+    server.shutdown();
+}
+
 /// Sharded dispatch serves many concurrent tiny jobs to completion and
 /// leaves the shard layer empty (no leaked entries, hint back to zero).
 #[test]
