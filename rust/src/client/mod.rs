@@ -44,6 +44,8 @@ use std::net::TcpStream;
 use std::os::unix::net::UnixStream;
 
 use crate::coordinator::Payload;
+use crate::server::auth::crypto::entropy_fill;
+use crate::server::auth::scram::{self, ClientHandshake};
 use crate::server::wire::codec::{
     self, BatchItem, BatchResult, ErrorCode, ProtocolError, Request, Response, WireStatus,
     WIRE_VERSION,
@@ -66,6 +68,11 @@ pub enum RemoteError {
     /// A non-retryable server-side error frame.
     #[error("server error: {0}")]
     Server(String),
+    /// Authentication failed, or an authenticated-only request was
+    /// issued on an unauthenticated connection (`--require-auth`). Not
+    /// retryable without new credentials.
+    #[error("authentication error: {0}")]
+    Auth(String),
     /// The server answered with a message this request cannot accept.
     #[error("unexpected response: {0}")]
     Unexpected(String),
@@ -151,6 +158,51 @@ impl RemoteClient {
                 ProtocolError::VersionMismatch { got: version, want: WIRE_VERSION },
             )),
             other => Err(client.fail(other)),
+        }
+    }
+
+    /// [`RemoteClient::connect`] followed by a SCRAM-SHA-256 handshake
+    /// (`user`/`password` against the server's tenant registry). On
+    /// success the connection's tenant identity is the one bound to the
+    /// credential — the `Hello` tenant claim is replaced server-side —
+    /// and the server's signature has been verified (mutual
+    /// authentication). Required when the server runs `--require-auth`;
+    /// also accepted by a registry-bearing server without it.
+    pub fn connect_auth(
+        addr: &str,
+        user: &str,
+        password: &str,
+    ) -> Result<Self, RemoteError> {
+        // The Hello tenant claim is irrelevant on an authenticated
+        // connection (the credential decides); claim 0.
+        let mut client = Self::connect(addr, TenantId(0))?;
+        client.authenticate(user, password)?;
+        Ok(client)
+    }
+
+    /// Run the SCRAM-SHA-256 handshake on an already-connected client.
+    /// On success the connection's tenant becomes the credential's.
+    pub fn authenticate(&mut self, user: &str, password: &str) -> Result<(), RemoteError> {
+        let mut nonce = [0u8; scram::NONCE_LEN];
+        entropy_fill(&mut nonce);
+        let hs = ClientHandshake::new(user, scram::nonce_text(&nonce));
+        let first = Request::AuthResponse { data: hs.client_first().into_bytes() };
+        let challenge = match self.roundtrip(&first)? {
+            Response::AuthChallenge { data } => data,
+            other => return Err(self.fail(other)),
+        };
+        let (client_final, server_sig) = hs
+            .respond(&challenge, password)
+            .map_err(|e| RemoteError::Auth(format!("bad server challenge: {e}")))?;
+        let final_req = Request::AuthResponse { data: client_final.into_bytes() };
+        match self.roundtrip(&final_req)? {
+            Response::AuthOk { tenant, data } => {
+                scram::verify_server_final(&data, &server_sig)
+                    .map_err(|e| RemoteError::Auth(format!("server signature invalid: {e}")))?;
+                self.tenant = TenantId(tenant);
+                Ok(())
+            }
+            other => Err(self.fail(other)),
         }
     }
 
@@ -369,6 +421,10 @@ impl RemoteClient {
             ErrorCode::ServerSaturated => {
                 RemoteError::Rejected(SubmitError::ServerSaturated { max_queued: aux as usize })
             }
+            ErrorCode::RateLimited => RemoteError::Rejected(SubmitError::RateLimited {
+                tenant: self.tenant,
+                retry_ms: aux,
+            }),
             other => RemoteError::Server(format!("batch item rejected: {other:?}")),
         }
     }
@@ -386,6 +442,16 @@ impl RemoteClient {
             Response::Error { code: ErrorCode::ServerSaturated, aux, .. } => {
                 RemoteError::Rejected(SubmitError::ServerSaturated { max_queued: aux as usize })
             }
+            Response::Error { code: ErrorCode::RateLimited, aux, .. } => {
+                RemoteError::Rejected(SubmitError::RateLimited {
+                    tenant: self.tenant,
+                    retry_ms: aux,
+                })
+            }
+            Response::Error { code: ErrorCode::AuthRequired, message, .. } => {
+                RemoteError::Auth(message)
+            }
+            Response::AuthFail { message } => RemoteError::Auth(message),
             Response::Error { message, .. } => RemoteError::Server(message),
             other => RemoteError::Unexpected(format!("{other:?}")),
         }

@@ -22,6 +22,15 @@
 //!                    [--listen 127.0.0.1:7193|unix:/tmp/qs.sock --for-secs 0
 //!                     --reactor|--threaded --max-conns 64
 //!                     --metrics --metrics-every-secs 10]
+//!                    [--tenants tenants.conf --require-auth --idle-secs 0]
+//!                    # --tenants takes a demo tenant count OR a registry
+//!                    # file path; with a file, clients may authenticate
+//!                    # (SCRAM-SHA-256) and their quotas apply; adding
+//!                    # --require-auth refuses unauthenticated requests
+//! repro tenant hash --user NAME --password PW --tenant N
+//!                    [--iterations 4096 --rate 0 --burst 0 --max-inflight 0]
+//!                    # mint one tenants.conf line (stored keys, no
+//!                    # plaintext); append it to the file serve loads
 //! repro trace <qr|bh> [--out trace.json --threads 4 ...workload options]
 //!                    # worker Gantt timeline as Chrome trace_event JSON
 //!                    # (open in chrome://tracing or ui.perfetto.dev)
@@ -34,7 +43,9 @@
 //!                     --tiny-work-ns 200]   # fused vs unfused dispatch overhead
 //! repro bench-remote [--workers 4 --clients 4 --jobs 128 --tasks 200 --work-ns 1000
 //!                     --connect HOST:PORT --json bench_out/BENCH_remote.json --quick]
-//!                    [--connections 10000]
+//!                    [--connections 10000] [--user NAME --pass PW]
+//!                    # --user/--pass authenticate every connection first
+//!                    # (required against a serve --require-auth instance)
 //!                    # open-loop remote submission over loopback (or --connect);
 //!                    # --connections N holds N reactor connections open and
 //!                    # round-robins pipelined SubmitBatch rounds across them
@@ -50,8 +61,9 @@ use quicksched::obs::TraceSink;
 use quicksched::qr;
 use quicksched::runtime::{Manifest, RuntimeService, XlaNbodyExec, XlaTileBackend};
 use quicksched::server::{
-    nbody_template, qr_template, synthetic_param_template, synthetic_template, JobSpec,
-    JobStatus, ListenAddr, SchedServer, ServerConfig, TenantId, WireListener, WireMode,
+    nbody_template, qr_template, synthetic_param_template, synthetic_template, AuthGate,
+    JobSpec, JobStatus, ListenAddr, QuotaConfig, SchedServer, ServerConfig, TenantId,
+    TenantRecord, TenantRegistry, WireListener, WireMode,
 };
 use quicksched::server::wire::{raise_nofile_limit, BatchItem, DEFAULT_MAX_CONNS};
 use quicksched::util::cli::Args;
@@ -68,13 +80,14 @@ fn main() {
         "bench-core" => cmd_bench_core(&args),
         "info" => cmd_info(&args),
         "serve" => cmd_serve(&args),
+        "tenant" => cmd_tenant(&args),
         "trace" => cmd_trace(&args),
         "metrics" => cmd_metrics(&args),
         "bench-server" => cmd_bench_server(&args),
         "bench-remote" => cmd_bench_remote(&args),
         _ => {
             eprintln!(
-                "usage: repro <qr|bh|sim|bench|bench-core|info|serve|trace|metrics|\
+                "usage: repro <qr|bh|sim|bench|bench-core|info|serve|tenant|trace|metrics|\
                  bench-server|bench-remote> [options]\n\
                  see rust/src/main.rs header or README.md"
             );
@@ -408,7 +421,14 @@ fn cmd_bench_core(args: &Args) {
 /// attempts to raise `RLIMIT_NOFILE`.
 fn cmd_serve(args: &Args) {
     let workers = args.get_usize("workers", 4);
-    let tenants = args.get_usize("tenants", 3).max(1);
+    // --tenants is overloaded: a number is the in-process demo's tenant
+    // count, anything else is a tenants.conf registry path (auth mode).
+    let tenants_file = args.get("tenants").filter(|v| v.parse::<usize>().is_err());
+    let tenants = args
+        .get("tenants")
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(3)
+        .max(1);
     let jobs = args.get_usize("jobs", 30);
     let tasks = args.get_usize("tasks", 300);
     let work_ns = args.get_u64("work-ns", 2_000);
@@ -423,6 +443,10 @@ fn cmd_serve(args: &Args) {
     };
     if max_queued > 0 {
         config = config.with_max_queued(max_queued);
+    }
+    let idle_secs = args.get_u64("idle-secs", 0);
+    if idle_secs > 0 {
+        config = config.with_idle_timeout(std::time::Duration::from_secs(idle_secs));
     }
     let server = SchedServer::start(config);
     server.register_template("synthetic", synthetic_template(tasks, 8, 0xC0FFEE, work_ns));
@@ -452,12 +476,35 @@ fn cmd_serve(args: &Args) {
                 println!("serve: raised RLIMIT_NOFILE to {n}");
             }
         }
+        let require_auth = args.flag("require-auth");
+        let auth = if tenants_file.is_some() || require_auth {
+            let registry = match tenants_file {
+                Some(path) => TenantRegistry::load(std::path::Path::new(path))
+                    .unwrap_or_else(|e| {
+                        eprintln!("serve: {e}");
+                        std::process::exit(2);
+                    }),
+                // --require-auth without a registry: nobody can
+                // authenticate, so the server refuses everyone —
+                // explicit lockdown, not a misconfiguration trap.
+                None => TenantRegistry::new(),
+            };
+            println!(
+                "serve: {} tenant record(s) loaded{}",
+                registry.len(),
+                if require_auth { ", authentication required" } else { "" }
+            );
+            Some(AuthGate::new(registry, require_auth))
+        } else {
+            None
+        };
         let server = Arc::new(server);
-        let listener = WireListener::start_with(
+        let listener = WireListener::start_with_auth(
             Arc::clone(&server),
             &ListenAddr::parse(listen),
             max_conns,
             mode,
+            auth,
         )
         .expect("binding wire listener");
         println!(
@@ -524,6 +571,38 @@ fn cmd_serve(args: &Args) {
          {busy} busy, {spins} lock spins, {purged} purged"
     );
     server.shutdown();
+}
+
+/// `repro tenant hash` — mint one `tenants.conf` registry line from a
+/// plaintext password: a fresh random salt, PBKDF2-derived
+/// StoredKey/ServerKey (the file never holds the password), and the
+/// tenant's quota columns. Append the printed line to the file that
+/// `serve --tenants <file>` loads.
+fn cmd_tenant(args: &Args) {
+    let sub = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+    let (user, password) = (args.get("user"), args.get("password"));
+    let (sub_ok, user, password) = match (sub, user, password) {
+        ("hash", Some(u), Some(p)) => (true, u, p),
+        _ => (false, "", ""),
+    };
+    if !sub_ok {
+        eprintln!(
+            "usage: repro tenant hash --user NAME --password PW --tenant N \
+             [--iterations 4096] [--rate 0 --burst 0 --max-inflight 0]"
+        );
+        std::process::exit(2);
+    }
+    let tenant = TenantId(args.get_usize("tenant", 0) as u32);
+    let iterations = (args.get_usize("iterations", 4096) as u32).max(1);
+    let quota = QuotaConfig {
+        rate: args.get_usize("rate", 0) as u32,
+        burst: args.get_usize("burst", 0) as u32,
+        max_inflight: args.get_usize("max-inflight", 0) as u32,
+    };
+    let mut salt = [0u8; 16];
+    quicksched::server::auth::crypto::entropy_fill(&mut salt);
+    let record = TenantRecord::derive(user, tenant, password, &salt, iterations, quota);
+    println!("{}", record.to_line());
 }
 
 /// `repro trace <qr|bh>` — run a driver with the timeline recorder on
@@ -852,6 +931,10 @@ fn cmd_bench_remote(args: &Args) {
         args.get_str("json", "bench_out/BENCH_remote.json").to_string(),
     );
     let connect = args.get("connect").map(|s| s.to_string());
+    // --user/--pass: SCRAM-authenticate every connection right after it
+    // opens (mandatory against a --require-auth server).
+    let auth_user = args.get("user");
+    let auth_pass = args.get_str("pass", "");
 
     // The loopback server, unless --connect names an external one. The
     // held-connection mode sizes the accept cap to the held set (plus
@@ -892,7 +975,7 @@ fn cmd_bench_remote(args: &Args) {
             "bench-remote: {jobs} jobs over {connections} held connections \
              ({clients} driving threads) via {transport} {addr}"
         );
-        bench_held_conns(&addr, connections, clients, jobs)
+        bench_held_conns(&addr, connections, clients, jobs, auth_user, auth_pass)
     } else {
         println!(
             "bench-remote: {jobs} jobs from {clients} remote clients over {transport} {addr} \
@@ -906,8 +989,9 @@ fn cmd_bench_remote(args: &Args) {
                 let latencies_ms = &latencies_ms;
                 let n = jobs / clients + usize::from(c < jobs % clients);
                 scope.spawn(move || {
-                    let mut client = RemoteClient::connect(addr, TenantId(c as u32))
-                        .expect("connecting client");
+                    let mut client =
+                        connect_remote(addr, TenantId(c as u32), auth_user, auth_pass)
+                            .expect("connecting client");
                     let mut pending = Vec::with_capacity(n);
                     for _ in 0..n {
                         // Open loop with retry: saturation comes back as a
@@ -950,7 +1034,7 @@ fn cmd_bench_remote(args: &Args) {
     };
     let (p50, p90, p99) = (pct(50.0), pct(90.0), pct(99.0));
     let jobs_per_sec = lat.len() as f64 / wall_s;
-    let server_stats = RemoteClient::connect(&addr, TenantId(u32::MAX))
+    let server_stats = connect_remote(&addr, TenantId(u32::MAX), auth_user, auth_pass)
         .and_then(|mut c| c.stats_json())
         .unwrap_or_else(|_| "{}".to_string());
 
@@ -1007,11 +1091,27 @@ fn cmd_bench_remote(args: &Args) {
 /// across each thread's connections; rejected items fall back to the
 /// retried serial path. Returns `(latencies_ms, connect_s, wall_s)`
 /// where `wall_s` excludes the connection-establishment phase.
+/// Open a remote connection, authenticating first when credentials are
+/// given (the anonymous tenant claim is replaced by the registry's).
+fn connect_remote(
+    addr: &str,
+    tenant: TenantId,
+    user: Option<&str>,
+    pass: &str,
+) -> Result<RemoteClient, RemoteError> {
+    match user {
+        Some(u) => RemoteClient::connect_auth(addr, u, pass),
+        None => RemoteClient::connect(addr, tenant),
+    }
+}
+
 fn bench_held_conns(
     addr: &str,
     connections: usize,
     threads: usize,
     jobs: usize,
+    auth_user: Option<&str>,
+    auth_pass: &str,
 ) -> (Vec<f64>, f64, f64) {
     use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -1035,7 +1135,7 @@ fn bench_held_conns(
             scope.spawn(move || {
                 let mut conns: Vec<RemoteClient> = (0..my_conns)
                     .map(|_| {
-                        RemoteClient::connect(addr, TenantId(c as u32))
+                        connect_remote(addr, TenantId(c as u32), auth_user, auth_pass)
                             .expect("connecting held client")
                     })
                     .collect();

@@ -1,0 +1,485 @@
+//! Std-only cryptographic primitives for the SCRAM handshake: SHA-256
+//! (FIPS 180-4), HMAC-SHA-256 (RFC 2104), PBKDF2-HMAC-SHA-256
+//! (RFC 2898), constant-time comparison, and the hex/base64 codecs the
+//! tenant registry and the SCRAM text messages use.
+//!
+//! The crate deliberately has no external dependencies, so these are
+//! implemented here and pinned against the published test vectors
+//! (RFC 6234 for SHA-256, RFC 4231 for HMAC, the RFC 7914-family
+//! PBKDF2 vectors, and the full RFC 7677 SCRAM-SHA-256 exchange in
+//! [`super::scram`]). None of this is on the dispatch hot path: it
+//! runs once per connection handshake, never per task.
+
+/// SHA-256 round constants (FIPS 180-4 §4.2.2).
+const K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4,
+    0xab1c5ed5, 0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe,
+    0x9bdc06a7, 0xc19bf174, 0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f,
+    0x4a7484aa, 0x5cb0a9dc, 0x76f988da, 0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7,
+    0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967, 0x27b70a85, 0x2e1b2138, 0x4d2c6dfc,
+    0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85, 0xa2bfe8a1, 0xa81a664b,
+    0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070, 0x19a4c116,
+    0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7,
+    0xc67178f2,
+];
+
+/// Incremental SHA-256 (FIPS 180-4). One-shot callers use [`sha256`].
+#[derive(Clone)]
+pub struct Sha256 {
+    state: [u32; 8],
+    /// Total message bytes absorbed so far.
+    len: u64,
+    buf: [u8; 64],
+    buf_len: usize,
+}
+
+impl Default for Sha256 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sha256 {
+    pub fn new() -> Self {
+        Self {
+            state: [
+                0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c,
+                0x1f83d9ab, 0x5be0cd19,
+            ],
+            len: 0,
+            buf: [0u8; 64],
+            buf_len: 0,
+        }
+    }
+
+    pub fn update(&mut self, mut data: &[u8]) {
+        self.len = self.len.wrapping_add(data.len() as u64);
+        if self.buf_len > 0 {
+            let take = data.len().min(64 - self.buf_len);
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);
+            self.buf_len += take;
+            data = &data[take..];
+            if self.buf_len == 64 {
+                let block = self.buf;
+                self.compress(&block);
+                self.buf_len = 0;
+            }
+        }
+        while data.len() >= 64 {
+            let (block, rest) = data.split_at(64);
+            let mut b = [0u8; 64];
+            b.copy_from_slice(block);
+            self.compress(&b);
+            data = rest;
+        }
+        if !data.is_empty() {
+            self.buf[..data.len()].copy_from_slice(data);
+            self.buf_len = data.len();
+        }
+    }
+
+    pub fn finalize(mut self) -> [u8; 32] {
+        let bit_len = self.len.wrapping_mul(8);
+        self.update(&[0x80]);
+        while self.buf_len != 56 {
+            self.update(&[0]);
+        }
+        self.update(&bit_len.to_be_bytes());
+        debug_assert_eq!(self.buf_len, 0);
+        let mut out = [0u8; 32];
+        for (i, w) in self.state.iter().enumerate() {
+            out[4 * i..4 * i + 4].copy_from_slice(&w.to_be_bytes());
+        }
+        out
+    }
+
+    fn compress(&mut self, block: &[u8; 64]) {
+        let mut w = [0u32; 64];
+        for (i, chunk) in block.chunks_exact(4).enumerate() {
+            w[i] = u32::from_be_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[i - 7])
+                .wrapping_add(s1);
+        }
+        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut h] = self.state;
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = h
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            h = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        self.state[0] = self.state[0].wrapping_add(a);
+        self.state[1] = self.state[1].wrapping_add(b);
+        self.state[2] = self.state[2].wrapping_add(c);
+        self.state[3] = self.state[3].wrapping_add(d);
+        self.state[4] = self.state[4].wrapping_add(e);
+        self.state[5] = self.state[5].wrapping_add(f);
+        self.state[6] = self.state[6].wrapping_add(g);
+        self.state[7] = self.state[7].wrapping_add(h);
+    }
+}
+
+/// One-shot SHA-256.
+pub fn sha256(data: &[u8]) -> [u8; 32] {
+    let mut h = Sha256::new();
+    h.update(data);
+    h.finalize()
+}
+
+/// HMAC-SHA-256 (RFC 2104): keys longer than one block are hashed
+/// first, shorter ones zero-padded.
+pub fn hmac_sha256(key: &[u8], msg: &[u8]) -> [u8; 32] {
+    let mut k = [0u8; 64];
+    if key.len() > 64 {
+        k[..32].copy_from_slice(&sha256(key));
+    } else {
+        k[..key.len()].copy_from_slice(key);
+    }
+    let mut ipad = [0x36u8; 64];
+    let mut opad = [0x5cu8; 64];
+    for i in 0..64 {
+        ipad[i] ^= k[i];
+        opad[i] ^= k[i];
+    }
+    let mut inner = Sha256::new();
+    inner.update(&ipad);
+    inner.update(msg);
+    let inner = inner.finalize();
+    let mut outer = Sha256::new();
+    outer.update(&opad);
+    outer.update(&inner);
+    outer.finalize()
+}
+
+/// PBKDF2-HMAC-SHA-256 (RFC 2898 §5.2), filling `out` (any length; the
+/// SCRAM salted password needs exactly one 32-byte block).
+pub fn pbkdf2_hmac_sha256(password: &[u8], salt: &[u8], iterations: u32, out: &mut [u8]) {
+    assert!(iterations >= 1, "PBKDF2 requires at least one iteration");
+    for (block_idx, chunk) in out.chunks_mut(32).enumerate() {
+        let mut msg = Vec::with_capacity(salt.len() + 4);
+        msg.extend_from_slice(salt);
+        msg.extend_from_slice(&(block_idx as u32 + 1).to_be_bytes());
+        let mut u = hmac_sha256(password, &msg);
+        let mut acc = u;
+        for _ in 1..iterations {
+            u = hmac_sha256(password, &u);
+            for (a, b) in acc.iter_mut().zip(u.iter()) {
+                *a ^= b;
+            }
+        }
+        chunk.copy_from_slice(&acc[..chunk.len()]);
+    }
+}
+
+/// Constant-time equality: the comparison touches every byte regardless
+/// of where the first difference is, so a proof check leaks no prefix
+/// length through timing. Lengths are public (both sides are 32-byte
+/// MACs in every call site).
+pub fn ct_eq(a: &[u8], b: &[u8]) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    let mut diff = 0u8;
+    for (x, y) in a.iter().zip(b.iter()) {
+        diff |= x ^ y;
+    }
+    diff == 0
+}
+
+const HEX: &[u8; 16] = b"0123456789abcdef";
+
+/// Lowercase hex encoding (tenant registry file fields).
+pub fn to_hex(data: &[u8]) -> String {
+    let mut s = String::with_capacity(data.len() * 2);
+    for b in data {
+        s.push(HEX[(b >> 4) as usize] as char);
+        s.push(HEX[(b & 0xf) as usize] as char);
+    }
+    s
+}
+
+/// Strict hex decoding; `None` on odd length or a non-hex digit.
+pub fn from_hex(s: &str) -> Option<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return None;
+    }
+    let nib = |c: u8| -> Option<u8> {
+        match c {
+            b'0'..=b'9' => Some(c - b'0'),
+            b'a'..=b'f' => Some(c - b'a' + 10),
+            b'A'..=b'F' => Some(c - b'A' + 10),
+            _ => None,
+        }
+    };
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len() / 2);
+    for pair in bytes.chunks_exact(2) {
+        out.push((nib(pair[0])? << 4) | nib(pair[1])?);
+    }
+    Some(out)
+}
+
+const B64: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Standard base64 with padding (RFC 4648) — the encoding SCRAM's text
+/// attributes (`s=`, `p=`, `v=`) use.
+pub fn b64_encode(data: &[u8]) -> String {
+    let mut s = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b0 = chunk[0] as u32;
+        let b1 = *chunk.get(1).unwrap_or(&0) as u32;
+        let b2 = *chunk.get(2).unwrap_or(&0) as u32;
+        let n = (b0 << 16) | (b1 << 8) | b2;
+        s.push(B64[(n >> 18) as usize & 63] as char);
+        s.push(B64[(n >> 12) as usize & 63] as char);
+        s.push(if chunk.len() > 1 { B64[(n >> 6) as usize & 63] as char } else { '=' });
+        s.push(if chunk.len() > 2 { B64[n as usize & 63] as char } else { '=' });
+    }
+    s
+}
+
+/// Strict base64 decoding; `None` on bad length, bad digit, or
+/// malformed padding.
+pub fn b64_decode(s: &str) -> Option<Vec<u8>> {
+    let bytes = s.as_bytes();
+    if bytes.len() % 4 != 0 {
+        return None;
+    }
+    let val = |c: u8| -> Option<u32> {
+        match c {
+            b'A'..=b'Z' => Some((c - b'A') as u32),
+            b'a'..=b'z' => Some((c - b'a' + 26) as u32),
+            b'0'..=b'9' => Some((c - b'0' + 52) as u32),
+            b'+' => Some(62),
+            b'/' => Some(63),
+            _ => None,
+        }
+    };
+    let mut out = Vec::with_capacity(bytes.len() / 4 * 3);
+    for (i, quad) in bytes.chunks_exact(4).enumerate() {
+        let last = (i + 1) * 4 == bytes.len();
+        let pad = quad.iter().filter(|&&c| c == b'=').count();
+        if pad > 2 || (pad > 0 && !last) {
+            return None;
+        }
+        // '=' is only legal as trailing padding.
+        if quad[0] == b'=' || quad[1] == b'=' || (quad[2] == b'=' && quad[3] != b'=') {
+            return None;
+        }
+        let n = (val(quad[0])? << 18)
+            | (val(quad[1])? << 12)
+            | (if quad[2] == b'=' { 0 } else { val(quad[2])? << 6 })
+            | (if quad[3] == b'=' { 0 } else { val(quad[3])? });
+        out.push((n >> 16) as u8);
+        if pad < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(n as u8);
+        }
+    }
+    Some(out)
+}
+
+/// Best-effort OS entropy without a `rand` dependency: each
+/// `RandomState` is keyed from the OS entropy pool at construction, so
+/// hashing a counter and the wall clock through a fresh one yields an
+/// unpredictable 64-bit value. Used for *live* nonces and salts only —
+/// the simulator supplies its own seeded nonces so runs stay replayable.
+pub fn entropy64() -> u64 {
+    use std::collections::hash_map::RandomState;
+    use std::hash::{BuildHasher, Hasher};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let mut h = RandomState::new().build_hasher();
+    h.write_u64(COUNTER.fetch_add(1, Ordering::Relaxed));
+    if let Ok(t) = std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH) {
+        h.write_u128(t.as_nanos());
+    }
+    h.finish()
+}
+
+/// Fill `out` with OS-entropy bytes (see [`entropy64`]).
+pub fn entropy_fill(out: &mut [u8]) {
+    for chunk in out.chunks_mut(8) {
+        let v = entropy64().to_le_bytes();
+        chunk.copy_from_slice(&v[..chunk.len()]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// RFC 6234 (and FIPS 180-4 appendix) SHA-256 vectors.
+    #[test]
+    fn sha256_rfc6234_vectors() {
+        let cases: [(&[u8], &str); 4] = [
+            (b"", "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"),
+            (b"abc", "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"),
+            (
+                b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq",
+                "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1",
+            ),
+            (
+                b"abcdefghbcdefghicdefghijdefghijkefghijklfghijklmghijklmnhijklmno\
+                  ijklmnopjklmnopqklmnopqrlmnopqrsmnopqrstnopqrstu",
+                "cf5b16a778af8380036ce59e7b0492370b249b11e8f07a51afac45037afee9d1",
+            ),
+        ];
+        for (msg, want) in cases {
+            assert_eq!(to_hex(&sha256(msg)), want);
+        }
+        // One million 'a's, fed through the incremental interface in
+        // uneven chunks so buffering boundaries are exercised.
+        let mut h = Sha256::new();
+        let chunk = [b'a'; 977];
+        let mut fed = 0usize;
+        while fed < 1_000_000 {
+            let take = chunk.len().min(1_000_000 - fed);
+            h.update(&chunk[..take]);
+            fed += take;
+        }
+        assert_eq!(
+            to_hex(&h.finalize()),
+            "cdc76e5c9914fb9281a1c7e284d73e67f1809a48a497200e046d39ccc7112cd0"
+        );
+    }
+
+    /// RFC 4231 HMAC-SHA-256 test cases 1, 2, 3, 6 and 7 (short key,
+    /// "Jefe", 0xaa block, oversized key, oversized key + long data).
+    #[test]
+    fn hmac_rfc4231_vectors() {
+        let tc1 = hmac_sha256(&[0x0b; 20], b"Hi There");
+        assert_eq!(
+            to_hex(&tc1),
+            "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c2e32cff7"
+        );
+        let tc2 = hmac_sha256(b"Jefe", b"what do ya want for nothing?");
+        assert_eq!(
+            to_hex(&tc2),
+            "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b964ec3843"
+        );
+        let tc3 = hmac_sha256(&[0xaa; 20], &[0xdd; 50]);
+        assert_eq!(
+            to_hex(&tc3),
+            "773ea91e36800e46854db8ebd09181a72959098b3ef8c122d9635514ced565fe"
+        );
+        let tc6 = hmac_sha256(&[0xaa; 131], b"Test Using Larger Than Block-Size Key - Hash Key First");
+        assert_eq!(
+            to_hex(&tc6),
+            "60e431591ee0b67f0d8a26aacbf5b77f8e0bc6213728c5140546040f0ee37f54"
+        );
+        let tc7 = hmac_sha256(
+            &[0xaa; 131],
+            b"This is a test using a larger than block-size key and a larger than \
+              block-size data. The key needs to be hashed before being used by the \
+              HMAC algorithm.",
+        );
+        assert_eq!(
+            to_hex(&tc7),
+            "9b09ffa71b942fcb27635fbcd5b0e944bfdc63644f0713938a7f51535c3a35e2"
+        );
+    }
+
+    /// PBKDF2-HMAC-SHA-256 vectors from the RFC 7914-family test set
+    /// (also published in the scrypt draft): low iteration counts so
+    /// the test stays fast in debug builds; the 4096-iteration case is
+    /// covered end-to-end by the RFC 7677 SCRAM vector in `scram.rs`.
+    #[test]
+    fn pbkdf2_rfc7914_vectors() {
+        let mut dk = [0u8; 64];
+        pbkdf2_hmac_sha256(b"passwd", b"salt", 1, &mut dk);
+        assert_eq!(
+            to_hex(&dk),
+            "55ac046e56e3089fec1691c22544b605f94185216dde0465e68b9d57c20dacbc\
+             49ca9cccf179b645991664b39d77ef317c71b845b1e30bd509112041d3a19783"
+        );
+        // Multi-block + truncated outputs through the same path.
+        let mut short = [0u8; 20];
+        pbkdf2_hmac_sha256(b"password", b"salt", 2, &mut short);
+        assert_eq!(to_hex(&short), "ae4d0c95af6b46d32d0adff928f06dd02a303f8e");
+        let mut one = [0u8; 32];
+        pbkdf2_hmac_sha256(b"password", b"salt", 1, &mut one);
+        assert_eq!(
+            to_hex(&one),
+            "120fb6cffcf8b32c43e7225256c4f837a86548c92ccc35480805987cb70be17b"
+        );
+    }
+
+    #[test]
+    fn ct_eq_behaves() {
+        assert!(ct_eq(b"", b""));
+        assert!(ct_eq(b"abc", b"abc"));
+        assert!(!ct_eq(b"abc", b"abd"));
+        assert!(!ct_eq(b"abc", b"ab"));
+    }
+
+    #[test]
+    fn hex_roundtrip_and_rejects() {
+        let data = [0u8, 1, 0x7f, 0x80, 0xfe, 0xff];
+        assert_eq!(from_hex(&to_hex(&data)).unwrap(), data);
+        assert_eq!(from_hex("").unwrap(), Vec::<u8>::new());
+        assert!(from_hex("0").is_none());
+        assert!(from_hex("0g").is_none());
+        assert_eq!(from_hex("DEADbeef").unwrap(), vec![0xde, 0xad, 0xbe, 0xef]);
+    }
+
+    #[test]
+    fn base64_roundtrip_and_rejects() {
+        // RFC 4648 §10 vectors.
+        for (plain, enc) in [
+            ("", ""),
+            ("f", "Zg=="),
+            ("fo", "Zm8="),
+            ("foo", "Zm9v"),
+            ("foob", "Zm9vYg=="),
+            ("fooba", "Zm9vYmE="),
+            ("foobar", "Zm9vYmFy"),
+        ] {
+            assert_eq!(b64_encode(plain.as_bytes()), enc);
+            assert_eq!(b64_decode(enc).unwrap(), plain.as_bytes());
+        }
+        assert!(b64_decode("Zg=").is_none(), "bad length");
+        assert!(b64_decode("Z===").is_none(), "over-padded");
+        assert!(b64_decode("Zg==Zg==").is_none(), "padding mid-stream");
+        assert!(b64_decode("Zm9!").is_none(), "bad digit");
+        // Binary roundtrip across all chunk remainders.
+        for n in 0..32usize {
+            let data: Vec<u8> = (0..n as u8).map(|i| i.wrapping_mul(37)).collect();
+            assert_eq!(b64_decode(&b64_encode(&data)).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn entropy_is_not_constant() {
+        let a = entropy64();
+        let b = entropy64();
+        // Astronomically unlikely to collide; the counter input alone
+        // guarantees distinct hasher inputs.
+        assert_ne!(a, b);
+        let mut buf = [0u8; 18];
+        entropy_fill(&mut buf);
+        assert_ne!(buf, [0u8; 18]);
+    }
+}

@@ -1,0 +1,467 @@
+//! SCRAM-SHA-256 (RFC 5802 / RFC 7677), channel-binding-free variant:
+//! the four-leg challenge-response handshake the wire protocol carries
+//! in its `AuthResponse` / `AuthChallenge` / `AuthOk` frames.
+//!
+//! ```text
+//!   client                                 server
+//!   ── client-first:  n,,n=<user>,r=<cnonce> ──▶
+//!   ◀── server-first: r=<cnonce+snonce>,s=<b64 salt>,i=<iters> ──
+//!   ── client-final:  c=biws,r=<combined>,p=<b64 proof> ──▶
+//!   ◀── server-final: v=<b64 server-signature> ──
+//! ```
+//!
+//! The server stores only `StoredKey = H(ClientKey)` and `ServerKey`
+//! (never the password, never a password-equivalent the wire exposes):
+//! the client proves possession of `ClientKey` by sending
+//! `proof = ClientKey XOR HMAC(StoredKey, AuthMessage)`, which the
+//! server inverts and re-hashes — a replayed proof is useless under a
+//! fresh server nonce, and a stolen registry file alone cannot
+//! authenticate. Proof and signature comparisons are constant-time
+//! ([`super::crypto::ct_eq`]).
+//!
+//! Nonce generation is injected by the caller (the live front-ends use
+//! [`super::crypto::entropy_fill`], the DST simulator a seeded stream),
+//! so the state machines here are fully deterministic — which is what
+//! lets the simulator replay hostile handshakes byte-for-byte.
+
+use super::crypto::{b64_decode, b64_encode, ct_eq, hmac_sha256, pbkdf2_hmac_sha256, sha256};
+
+/// Entropy bytes per nonce; encodes to 24 base64 characters.
+pub const NONCE_LEN: usize = 18;
+
+/// GS2 header of the channel-binding-free variant ("no channel
+/// binding, no authzid"), and its base64 as sent in `c=`.
+const GS2_HEADER: &str = "n,,";
+const GS2_B64: &str = "biws";
+
+/// A handshake step failed. Every variant is a clean rejection — the
+/// state machines never panic on hostile input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum ScramError {
+    /// A message violated the SCRAM grammar.
+    #[error("malformed SCRAM message: {0}")]
+    Malformed(&'static str),
+    /// The client's final nonce does not extend the server's challenge.
+    #[error("nonce mismatch")]
+    NonceMismatch,
+    /// The client proof did not verify against the stored key.
+    #[error("proof verification failed")]
+    BadProof,
+    /// The server's signature did not verify (client side).
+    #[error("server signature verification failed")]
+    BadServerSignature,
+}
+
+/// `SaltedPassword = PBKDF2-HMAC-SHA-256(password, salt, iterations)`.
+pub fn salted_password(password: &str, salt: &[u8], iterations: u32) -> [u8; 32] {
+    let mut out = [0u8; 32];
+    pbkdf2_hmac_sha256(password.as_bytes(), salt, iterations, &mut out);
+    out
+}
+
+/// `ClientKey = HMAC(SaltedPassword, "Client Key")`.
+pub fn client_key(salted: &[u8; 32]) -> [u8; 32] {
+    hmac_sha256(salted, b"Client Key")
+}
+
+/// `StoredKey = H(ClientKey)` — what the registry persists.
+pub fn stored_key(client_key: &[u8; 32]) -> [u8; 32] {
+    sha256(client_key)
+}
+
+/// `ServerKey = HMAC(SaltedPassword, "Server Key")`.
+pub fn server_key(salted: &[u8; 32]) -> [u8; 32] {
+    hmac_sha256(salted, b"Server Key")
+}
+
+/// Encode a nonce as its 24-character base64 text form (the wire
+/// carries nonces as printable attribute values, never raw bytes).
+pub fn nonce_text(bytes: &[u8; NONCE_LEN]) -> String {
+    b64_encode(bytes)
+}
+
+/// Validate nonce text: printable ASCII excluding `,` (RFC 5802).
+fn valid_nonce(s: &str) -> bool {
+    !s.is_empty() && s.bytes().all(|b| (0x21..=0x7e).contains(&b) && b != b',')
+}
+
+/// Validate a SCRAM username: RFC 5802 saslnames may escape `,`/`=` as
+/// `=2C`/`=3D`; this deployment simply rejects both characters (the
+/// registry refuses to mint them), which keeps parsing unambiguous.
+pub fn valid_username(s: &str) -> bool {
+    !s.is_empty() && !s.contains(',') && !s.contains('=') && s.chars().all(|c| !c.is_control())
+}
+
+/// Split one `k=value` attribute, checking the expected key letter.
+fn attr<'a>(part: Option<&'a str>, key: char) -> Result<&'a str, ScramError> {
+    let part = part.ok_or(ScramError::Malformed("missing attribute"))?;
+    let mut it = part.splitn(2, '=');
+    let k = it.next().unwrap_or("");
+    let v = it.next().ok_or(ScramError::Malformed("attribute without value"))?;
+    if k.len() != 1 || k.chars().next() != Some(key) {
+        return Err(ScramError::Malformed("unexpected attribute key"));
+    }
+    Ok(v)
+}
+
+/// Parsed client-first message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClientFirst {
+    pub user: String,
+    pub cnonce: String,
+    /// `client-first-message-bare` — enters the AuthMessage transcript.
+    pub bare: String,
+}
+
+/// Parse `n,,n=<user>,r=<cnonce>`. Rejects channel-binding requests
+/// (`p=...`) and authzids — the deployment is channel-free.
+pub fn parse_client_first(msg: &[u8]) -> Result<ClientFirst, ScramError> {
+    let text = std::str::from_utf8(msg).map_err(|_| ScramError::Malformed("not UTF-8"))?;
+    let bare = text
+        .strip_prefix(GS2_HEADER)
+        .ok_or(ScramError::Malformed("expected gs2 header n,,"))?;
+    let mut parts = bare.split(',');
+    let user = attr(parts.next(), 'n')?;
+    let cnonce = attr(parts.next(), 'r')?;
+    if parts.next().is_some() {
+        return Err(ScramError::Malformed("trailing attributes in client-first"));
+    }
+    if !valid_username(user) {
+        return Err(ScramError::Malformed("invalid username"));
+    }
+    if !valid_nonce(cnonce) {
+        return Err(ScramError::Malformed("invalid client nonce"));
+    }
+    Ok(ClientFirst { user: user.to_string(), cnonce: cnonce.to_string(), bare: bare.to_string() })
+}
+
+/// Server side of one handshake, created after the tenant lookup
+/// succeeded. Holds the verifier keys and the transcript pieces the
+/// final proof check needs; the password never appears.
+#[derive(Debug, Clone)]
+pub struct ServerHandshake {
+    stored_key: [u8; 32],
+    server_key: [u8; 32],
+    client_first_bare: String,
+    server_first: String,
+    combined_nonce: String,
+}
+
+impl ServerHandshake {
+    /// Build the server-first challenge: combined nonce (client's
+    /// extended by the server's), the salt, and the iteration count.
+    /// Returns the state machine and the `server-first-message` text to
+    /// put on the wire.
+    pub fn start(
+        first: &ClientFirst,
+        salt: &[u8],
+        iterations: u32,
+        stored_key: [u8; 32],
+        server_key: [u8; 32],
+        server_nonce: &str,
+    ) -> (ServerHandshake, String) {
+        debug_assert!(valid_nonce(server_nonce));
+        let combined = format!("{}{}", first.cnonce, server_nonce);
+        let server_first = format!("r={},s={},i={}", combined, b64_encode(salt), iterations);
+        (
+            ServerHandshake {
+                stored_key,
+                server_key,
+                client_first_bare: first.bare.clone(),
+                server_first: server_first.clone(),
+                combined_nonce: combined,
+            },
+            server_first,
+        )
+    }
+
+    /// Verify `client-final` (`c=biws,r=<combined>,p=<b64 proof>`).
+    /// On success returns the `server-final-message` (`v=<b64 sig>`);
+    /// any failure is a clean typed error.
+    pub fn verify_client_final(&self, msg: &[u8]) -> Result<String, ScramError> {
+        let text = std::str::from_utf8(msg).map_err(|_| ScramError::Malformed("not UTF-8"))?;
+        let mut parts = text.split(',');
+        let cbind = attr(parts.next(), 'c')?;
+        if cbind != GS2_B64 {
+            return Err(ScramError::Malformed("unexpected channel binding"));
+        }
+        let nonce = attr(parts.next(), 'r')?;
+        let proof_b64 = attr(parts.next(), 'p')?;
+        if parts.next().is_some() {
+            return Err(ScramError::Malformed("trailing attributes in client-final"));
+        }
+        // The nonce check is what defeats a replayed client-final: the
+        // server contributed fresh entropy, so yesterday's transcript
+        // cannot extend today's challenge.
+        if nonce != self.combined_nonce {
+            return Err(ScramError::NonceMismatch);
+        }
+        let proof = b64_decode(proof_b64).ok_or(ScramError::Malformed("bad proof base64"))?;
+        if proof.len() != 32 {
+            return Err(ScramError::Malformed("proof must be 32 bytes"));
+        }
+        let auth_message = self.auth_message(nonce);
+        let client_signature = hmac_sha256(&self.stored_key, auth_message.as_bytes());
+        // Invert: ClientKey = proof XOR ClientSignature, then re-hash.
+        let mut recovered = [0u8; 32];
+        for i in 0..32 {
+            recovered[i] = proof[i] ^ client_signature[i];
+        }
+        if !ct_eq(&sha256(&recovered), &self.stored_key) {
+            return Err(ScramError::BadProof);
+        }
+        let server_signature = hmac_sha256(&self.server_key, auth_message.as_bytes());
+        Ok(format!("v={}", b64_encode(&server_signature)))
+    }
+
+    /// `AuthMessage = client-first-bare , server-first , client-final-without-proof`.
+    fn auth_message(&self, nonce: &str) -> String {
+        format!(
+            "{},{},c={},r={}",
+            self.client_first_bare, self.server_first, GS2_B64, nonce
+        )
+    }
+
+    /// Heap bytes held while a handshake is in flight (footprint
+    /// accounting in `ConnSm::heap_bytes`).
+    pub fn heap_bytes(&self) -> usize {
+        self.client_first_bare.capacity()
+            + self.server_first.capacity()
+            + self.combined_nonce.capacity()
+    }
+}
+
+/// Client side of one handshake.
+#[derive(Debug, Clone)]
+pub struct ClientHandshake {
+    user: String,
+    cnonce: String,
+}
+
+impl ClientHandshake {
+    /// `cnonce` must be nonce text (see [`nonce_text`]); the caller
+    /// owns entropy so the simulator can inject seeded nonces.
+    pub fn new(user: &str, cnonce: String) -> Self {
+        debug_assert!(valid_username(user) && valid_nonce(&cnonce));
+        ClientHandshake { user: user.to_string(), cnonce }
+    }
+
+    /// The `client-first-message` to send.
+    pub fn client_first(&self) -> String {
+        format!("{}n={},r={}", GS2_HEADER, self.user, self.cnonce)
+    }
+
+    fn client_first_bare(&self) -> String {
+        format!("n={},r={}", self.user, self.cnonce)
+    }
+
+    /// Consume the server's challenge and the password; produce the
+    /// `client-final-message` and the server signature to expect in
+    /// `server-final`. Rejects a challenge whose nonce does not extend
+    /// our own (a tampered or replayed challenge).
+    pub fn respond(
+        &self,
+        server_first: &[u8],
+        password: &str,
+    ) -> Result<(String, [u8; 32]), ScramError> {
+        let text =
+            std::str::from_utf8(server_first).map_err(|_| ScramError::Malformed("not UTF-8"))?;
+        let mut parts = text.split(',');
+        let nonce = attr(parts.next(), 'r')?;
+        let salt_b64 = attr(parts.next(), 's')?;
+        let iter_text = attr(parts.next(), 'i')?;
+        if parts.next().is_some() {
+            return Err(ScramError::Malformed("trailing attributes in server-first"));
+        }
+        if !nonce.starts_with(&self.cnonce) || nonce.len() <= self.cnonce.len() {
+            return Err(ScramError::NonceMismatch);
+        }
+        if !valid_nonce(nonce) {
+            return Err(ScramError::Malformed("invalid combined nonce"));
+        }
+        let salt = b64_decode(salt_b64).ok_or(ScramError::Malformed("bad salt base64"))?;
+        let iterations: u32 =
+            iter_text.parse().map_err(|_| ScramError::Malformed("bad iteration count"))?;
+        if iterations == 0 {
+            return Err(ScramError::Malformed("zero iterations"));
+        }
+        let salted = salted_password(password, &salt, iterations);
+        let ckey = client_key(&salted);
+        let skey = stored_key(&ckey);
+        let auth_message = format!(
+            "{},{},c={},r={}",
+            self.client_first_bare(),
+            text,
+            GS2_B64,
+            nonce
+        );
+        let client_signature = hmac_sha256(&skey, auth_message.as_bytes());
+        let mut proof = [0u8; 32];
+        for i in 0..32 {
+            proof[i] = ckey[i] ^ client_signature[i];
+        }
+        let client_final = format!("c={},r={},p={}", GS2_B64, nonce, b64_encode(&proof));
+        let expect = hmac_sha256(&server_key(&salted), auth_message.as_bytes());
+        Ok((client_final, expect))
+    }
+}
+
+/// Verify the `server-final-message` against the signature computed in
+/// [`ClientHandshake::respond`] — mutual authentication: a server that
+/// never knew `ServerKey` cannot produce it.
+pub fn verify_server_final(msg: &[u8], expect: &[u8; 32]) -> Result<(), ScramError> {
+    let text = std::str::from_utf8(msg).map_err(|_| ScramError::Malformed("not UTF-8"))?;
+    let sig_b64 = attr(Some(text), 'v')?;
+    let sig = b64_decode(sig_b64).ok_or(ScramError::Malformed("bad signature base64"))?;
+    if ct_eq(&sig, expect) {
+        Ok(())
+    } else {
+        Err(ScramError::BadServerSignature)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::auth::crypto::to_hex;
+
+    /// The full RFC 7677 §3 example exchange, driven through both state
+    /// machines with the RFC's fixed nonces — pins PBKDF2 (4096
+    /// iterations), HMAC, SHA-256, the transcript grammar, and both
+    /// signatures at once.
+    #[test]
+    fn rfc7677_example_exchange() {
+        let user = "user";
+        let password = "pencil";
+        let salt = b64_decode("W22ZaJ0SNY7soEsUEjb6gQ==").unwrap();
+        let iterations = 4096;
+        let cnonce = "rOprNGfwEbeRWgbNEkqO";
+        let snonce = "%hvYDpWUa2RaTCAfuxFIlj)hNlF$k0";
+
+        let salted = salted_password(password, &salt, iterations);
+        let skey = stored_key(&client_key(&salted));
+        let srv_key = server_key(&salted);
+
+        let client = ClientHandshake::new(user, cnonce.to_string());
+        let first_msg = client.client_first();
+        assert_eq!(first_msg, "n,,n=user,r=rOprNGfwEbeRWgbNEkqO");
+
+        let parsed = parse_client_first(first_msg.as_bytes()).unwrap();
+        assert_eq!(parsed.user, "user");
+        let (server, server_first) =
+            ServerHandshake::start(&parsed, &salt, iterations, skey, srv_key, snonce);
+        assert_eq!(
+            server_first,
+            "r=rOprNGfwEbeRWgbNEkqO%hvYDpWUa2RaTCAfuxFIlj)hNlF$k0,\
+             s=W22ZaJ0SNY7soEsUEjb6gQ==,i=4096"
+        );
+
+        let (client_final, expect) = client.respond(server_first.as_bytes(), password).unwrap();
+        assert_eq!(
+            client_final,
+            "c=biws,r=rOprNGfwEbeRWgbNEkqO%hvYDpWUa2RaTCAfuxFIlj)hNlF$k0,\
+             p=dHzbZapWIk4jUhN+Ute9ytag9zjfMHgsqmmiz7AndVQ="
+        );
+
+        let server_final = server.verify_client_final(client_final.as_bytes()).unwrap();
+        assert_eq!(server_final, "v=6rriTRBi23WpRR/wtup+mMhUZUn/dB5nLTJRsjl95G4=");
+        verify_server_final(server_final.as_bytes(), &expect).unwrap();
+    }
+
+    /// RFC 7677 also publishes the derived keys for the example — pin
+    /// them so a key-derivation regression is directly visible.
+    #[test]
+    fn rfc7677_derived_keys() {
+        let salt = b64_decode("W22ZaJ0SNY7soEsUEjb6gQ==").unwrap();
+        let salted = salted_password("pencil", &salt, 4096);
+        let ckey = client_key(&salted);
+        assert_eq!(
+            to_hex(&stored_key(&ckey)),
+            "c4a49510323ab4f952cac1fa99441939e78ea74d6be81ddf7096e87513dc615d"
+        );
+    }
+
+    #[test]
+    fn wrong_password_fails_cleanly() {
+        let salt = b"saltsalt";
+        let salted = salted_password("right", salt, 64);
+        let skey = stored_key(&client_key(&salted));
+        let srv = server_key(&salted);
+        let client = ClientHandshake::new("alice", "cnoncecnonce".to_string());
+        let parsed = parse_client_first(client.client_first().as_bytes()).unwrap();
+        let (server, server_first) =
+            ServerHandshake::start(&parsed, salt, 64, skey, srv, "snoncesnonce");
+        let (client_final, _) = client.respond(server_first.as_bytes(), "wrong").unwrap();
+        assert_eq!(
+            server.verify_client_final(client_final.as_bytes()),
+            Err(ScramError::BadProof)
+        );
+    }
+
+    #[test]
+    fn tampered_nonce_is_rejected_on_both_sides() {
+        let salt = b"saltsalt";
+        let salted = salted_password("pw", salt, 64);
+        let skey = stored_key(&client_key(&salted));
+        let srv = server_key(&salted);
+        let client = ClientHandshake::new("bob", "AAAA".to_string());
+        let parsed = parse_client_first(client.client_first().as_bytes()).unwrap();
+        let (server, server_first) =
+            ServerHandshake::start(&parsed, salt, 64, skey, srv, "BBBB");
+        // Client rejects a challenge that does not extend its nonce.
+        let tampered = server_first.replacen("r=AAAA", "r=XXXX", 1);
+        assert_eq!(
+            client.respond(tampered.as_bytes(), "pw").unwrap_err(),
+            ScramError::NonceMismatch
+        );
+        // Server rejects a final whose nonce is not its challenge.
+        let (client_final, _) = client.respond(server_first.as_bytes(), "pw").unwrap();
+        let forged = client_final.replacen("r=AAAABBBB", "r=AAAACCCC", 1);
+        assert_eq!(
+            server.verify_client_final(forged.as_bytes()),
+            Err(ScramError::NonceMismatch)
+        );
+    }
+
+    #[test]
+    fn garbage_inputs_error_never_panic() {
+        let salt = b"saltsalt";
+        let salted = salted_password("pw", salt, 16);
+        let skey = stored_key(&client_key(&salted));
+        let srv = server_key(&salted);
+        let cases: &[&[u8]] = &[
+            b"",
+            b"n,,",
+            b"n,,n=only",
+            b"y,,n=u,r=abc",
+            b"n,,n=u,r=",
+            b"n,,n=u,r=a,extra=1",
+            b"n,,n=a,b,r=abc",
+            b"\xff\xfe\xfd",
+            b"c=biws",
+            b"c=biws,r=abc",
+            b"c=biws,r=abc,p=!!!",
+            b"v=",
+            b"v=notb64!",
+        ];
+        for case in cases {
+            let _ = parse_client_first(case);
+            let client = ClientHandshake::new("u", "abc".to_string());
+            let _ = client.respond(case, "pw");
+            let parsed = parse_client_first(b"n,,n=u,r=abc").unwrap();
+            let (server, _) = ServerHandshake::start(&parsed, salt, 16, skey, srv, "def");
+            let _ = server.verify_client_final(case);
+            let _ = verify_server_final(case, &[0u8; 32]);
+        }
+    }
+
+    #[test]
+    fn username_validation() {
+        assert!(valid_username("alice"));
+        assert!(valid_username("tenant-7_x.y"));
+        assert!(!valid_username(""));
+        assert!(!valid_username("a,b"));
+        assert!(!valid_username("a=b"));
+        assert!(!valid_username("a\nb"));
+    }
+}

@@ -1,0 +1,267 @@
+//! Tenant registry: the server-side credential and quota store, loaded
+//! from a `tenants.conf` file minted by `repro tenant hash`.
+//!
+//! One line per tenant, colon-separated (hex/ints only, so the format
+//! needs no quoting):
+//!
+//! ```text
+//! # user:tenant:iterations:salt_hex:stored_key_hex:server_key_hex:enabled:rate:burst:max_inflight
+//! alice:0:4096:9aa3…:1f42…:77be…:1:500:100:0
+//! ```
+//!
+//! The file holds `StoredKey`/`ServerKey`, never the password — a
+//! leaked registry lets an attacker *verify* guesses (as any password
+//! database does) but not authenticate. `rate`/`burst` meter
+//! submissions per second (0 = unmetered); `max_inflight` caps
+//! concurrently outstanding jobs on top of the admission layer's own
+//! cap (0 = uncapped).
+
+use super::crypto::{from_hex, to_hex};
+use super::scram::{client_key, salted_password, server_key, stored_key, valid_username};
+use crate::server::protocol::TenantId;
+use std::collections::BTreeMap;
+
+/// Per-tenant quota knobs; zero means "unlimited" for each field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct QuotaConfig {
+    /// Steady-state submissions per second.
+    pub rate: u32,
+    /// Burst allowance in submissions (bucket capacity).
+    pub burst: u32,
+    /// Max concurrently in-flight (admitted, not yet settled) jobs.
+    pub max_inflight: u32,
+}
+
+/// One registry entry: everything the server needs to challenge and
+/// verify a client, plus its quota configuration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantRecord {
+    pub user: String,
+    pub tenant: TenantId,
+    pub iterations: u32,
+    pub salt: Vec<u8>,
+    pub stored_key: [u8; 32],
+    pub server_key: [u8; 32],
+    pub enabled: bool,
+    pub quota: QuotaConfig,
+}
+
+impl TenantRecord {
+    /// Derive a record from a plaintext password (used by the CLI
+    /// minting path and by tests/sim; the server never calls this).
+    pub fn derive(
+        user: &str,
+        tenant: TenantId,
+        password: &str,
+        salt: &[u8],
+        iterations: u32,
+        quota: QuotaConfig,
+    ) -> TenantRecord {
+        let salted = salted_password(password, salt, iterations);
+        TenantRecord {
+            user: user.to_string(),
+            tenant,
+            iterations,
+            salt: salt.to_vec(),
+            stored_key: stored_key(&client_key(&salted)),
+            server_key: server_key(&salted),
+            enabled: true,
+            quota,
+        }
+    }
+
+    /// Serialize as one `tenants.conf` line.
+    pub fn to_line(&self) -> String {
+        format!(
+            "{}:{}:{}:{}:{}:{}:{}:{}:{}:{}",
+            self.user,
+            self.tenant.0,
+            self.iterations,
+            to_hex(&self.salt),
+            to_hex(&self.stored_key),
+            to_hex(&self.server_key),
+            if self.enabled { 1 } else { 0 },
+            self.quota.rate,
+            self.quota.burst,
+            self.quota.max_inflight,
+        )
+    }
+}
+
+/// Registry file parse failure, with the 1-based line it came from.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("tenants.conf line {line}: {what}")]
+pub struct TenantsError {
+    pub line: usize,
+    pub what: String,
+}
+
+/// In-memory registry, keyed by username.
+#[derive(Debug, Clone, Default)]
+pub struct TenantRegistry {
+    by_user: BTreeMap<String, TenantRecord>,
+}
+
+impl TenantRegistry {
+    pub fn new() -> TenantRegistry {
+        TenantRegistry::default()
+    }
+
+    /// Parse the `tenants.conf` text format. Blank lines and `#`
+    /// comments are skipped; any malformed line is a hard error (a
+    /// silently-dropped credential line would be a lockout mystery).
+    pub fn parse(text: &str) -> Result<TenantRegistry, TenantsError> {
+        let mut reg = TenantRegistry::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line = idx + 1;
+            let fail = |what: &str| TenantsError { line, what: what.to_string() };
+            let trimmed = raw.trim();
+            if trimmed.is_empty() || trimmed.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = trimmed.split(':').collect();
+            if parts.len() != 10 {
+                return Err(fail("expected 10 colon-separated fields"));
+            }
+            let user = parts[0];
+            if !valid_username(user) {
+                return Err(fail("invalid username"));
+            }
+            let tenant: u32 = parts[1].parse().map_err(|_| fail("bad tenant id"))?;
+            let iterations: u32 = parts[2].parse().map_err(|_| fail("bad iteration count"))?;
+            if iterations == 0 {
+                return Err(fail("iteration count must be >= 1"));
+            }
+            let salt = from_hex(parts[3]).ok_or_else(|| fail("bad salt hex"))?;
+            if salt.is_empty() {
+                return Err(fail("empty salt"));
+            }
+            let skey = from_hex(parts[4]).ok_or_else(|| fail("bad stored-key hex"))?;
+            let srvkey = from_hex(parts[5]).ok_or_else(|| fail("bad server-key hex"))?;
+            let stored_key: [u8; 32] =
+                skey.try_into().map_err(|_| fail("stored key must be 32 bytes"))?;
+            let server_key: [u8; 32] =
+                srvkey.try_into().map_err(|_| fail("server key must be 32 bytes"))?;
+            let enabled = match parts[6] {
+                "0" => false,
+                "1" => true,
+                _ => return Err(fail("enabled flag must be 0 or 1")),
+            };
+            let rate: u32 = parts[7].parse().map_err(|_| fail("bad rate"))?;
+            let burst: u32 = parts[8].parse().map_err(|_| fail("bad burst"))?;
+            let max_inflight: u32 =
+                parts[9].parse().map_err(|_| fail("bad max-inflight"))?;
+            if rate > 0 && burst == 0 {
+                return Err(fail("rate-limited tenants need burst >= 1"));
+            }
+            let record = TenantRecord {
+                user: user.to_string(),
+                tenant: TenantId(tenant),
+                iterations,
+                salt,
+                stored_key,
+                server_key,
+                enabled,
+                quota: QuotaConfig { rate, burst, max_inflight },
+            };
+            if reg.by_user.insert(user.to_string(), record).is_some() {
+                return Err(fail("duplicate username"));
+            }
+        }
+        Ok(reg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &std::path::Path) -> Result<TenantRegistry, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        TenantRegistry::parse(&text).map_err(|e| e.to_string())
+    }
+
+    /// Insert or replace one record (used by the simulator, which
+    /// builds its registry programmatically from seeded credentials).
+    pub fn insert(&mut self, record: TenantRecord) {
+        self.by_user.insert(record.user.clone(), record);
+    }
+
+    /// Credential lookup for the handshake. Disabled tenants resolve to
+    /// `None` — indistinguishable from an unknown user on the wire.
+    pub fn lookup(&self, user: &str) -> Option<&TenantRecord> {
+        self.by_user.get(user).filter(|r| r.enabled)
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_user.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_user.is_empty()
+    }
+
+    /// Iterate all records (enabled or not), for quota installation.
+    pub fn records(&self) -> impl Iterator<Item = &TenantRecord> {
+        self.by_user.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TenantRecord {
+        TenantRecord::derive(
+            "alice",
+            TenantId(3),
+            "hunter2",
+            b"pepper99",
+            64,
+            QuotaConfig { rate: 500, burst: 100, max_inflight: 32 },
+        )
+    }
+
+    #[test]
+    fn line_roundtrip() {
+        let rec = sample();
+        let text = format!("# comment\n\n{}\n", rec.to_line());
+        let reg = TenantRegistry::parse(&text).unwrap();
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.lookup("alice"), Some(&rec));
+        assert_eq!(reg.lookup("mallory"), None);
+    }
+
+    #[test]
+    fn disabled_tenant_does_not_resolve() {
+        let mut rec = sample();
+        rec.enabled = false;
+        let reg = TenantRegistry::parse(&rec.to_line()).unwrap();
+        assert_eq!(reg.lookup("alice"), None);
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn malformed_lines_are_hard_errors() {
+        let good = sample().to_line();
+        let cases = [
+            ("alice:0:64:aa:bb:cc:1:0:0", "field count"),
+            (&good.replacen("alice", "al,ice", 1), "username"),
+            (&good.replacen(":64:", ":0:", 1), "iterations"),
+            (&good.replacen(":1:500:", ":7:500:", 1), "enabled flag"),
+            (&good.replacen(":500:100:", ":500:0:", 1), "burst"),
+            (&format!("{good}\n{good}"), "duplicate"),
+        ];
+        for (text, what) in cases {
+            assert!(TenantRegistry::parse(text).is_err(), "should reject: {what}");
+        }
+        // Stored-key truncation is length-checked, not just hex-checked.
+        let short = good.replace(&crate::server::auth::crypto::to_hex(&sample().stored_key), "aabb");
+        assert!(TenantRegistry::parse(&short).is_err());
+    }
+
+    #[test]
+    fn derive_matches_scram_verifiers() {
+        use crate::server::auth::scram::{client_key, salted_password, stored_key};
+        let rec = sample();
+        let salted = salted_password("hunter2", &rec.salt, rec.iterations);
+        assert_eq!(rec.stored_key, stored_key(&client_key(&salted)));
+    }
+}

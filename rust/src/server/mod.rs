@@ -41,6 +41,7 @@
 //! §Sharded dispatch for the routing/steal/batching policies.
 
 pub mod admission;
+pub mod auth;
 pub mod pool;
 pub mod protocol;
 pub mod registry;
@@ -58,6 +59,7 @@ use crate::coordinator::SchedConfig;
 use crate::obs::{Counter, Kind, MetricsRegistry};
 
 pub use admission::FairQueue;
+pub use auth::{AuthGate, AuthMode, QuotaConfig, TenantRecord, TenantRegistry};
 pub use pool::{
     run_virtual, run_virtual_sharded, ActiveJob, VirtualJob, VirtualReport, WorkerPool,
 };
@@ -101,6 +103,10 @@ pub struct ServerConfig {
     /// status re-checks while it holds a connection thread. See
     /// [`ServerConfig::with_wait_slice`].
     pub wait_slice: Duration,
+    /// Close wire connections idle (no bytes received, nothing parked)
+    /// longer than this. `None` = never (the pre-v4 behaviour). See
+    /// [`ServerConfig::with_idle_timeout`].
+    pub idle_timeout: Option<Duration>,
     /// Scheduler configuration for template instances (its `nr_queues`
     /// should normally equal `workers`).
     pub sched: SchedConfig,
@@ -118,6 +124,7 @@ impl ServerConfig {
             max_queued: None,
             seed: 0x5EED_5E11,
             wait_slice: Duration::from_millis(50),
+            idle_timeout: None,
             sched: SchedConfig::new(workers),
         }
     }
@@ -196,6 +203,19 @@ impl ServerConfig {
         self.wait_slice = slice.max(Duration::from_millis(1));
         self
     }
+
+    /// Close wire connections that have received no bytes for `t` and
+    /// hold no parked work (no pending `Wait`, no open subscription) —
+    /// enforced by both the epoll reactor (swept off its timer tick)
+    /// and the threaded fallback (checked between read-timeout slices).
+    /// Idle-closed connections release their subscription interests and
+    /// count in `quicksched_conns_idle_closed_total`. Clamped to
+    /// ≥ 100 ms so a zero timeout cannot close connections between a
+    /// request and its response.
+    pub fn with_idle_timeout(mut self, t: Duration) -> Self {
+        self.idle_timeout = Some(t.max(Duration::from_millis(100)));
+        self
+    }
 }
 
 struct QueuedJob {
@@ -235,6 +255,8 @@ struct Inner {
     tx: Mutex<mpsc::Sender<Event>>,
     /// Blocking-`Wait` re-check slice (see [`ServerConfig::with_wait_slice`]).
     wait_slice: Duration,
+    /// Wire-connection idle timeout (see [`ServerConfig::with_idle_timeout`]).
+    idle_timeout: Option<Duration>,
     /// The server's metrics registry (see [`SchedServer::metrics_text`]).
     obs: Arc<MetricsRegistry>,
     /// Owned hot-path counters (everything else is sampled at render
@@ -323,6 +345,7 @@ impl SchedServer {
             service_ewma_ns: AtomicU64::new(0),
             tx: Mutex::new(tx),
             wait_slice: config.wait_slice.max(Duration::from_millis(1)),
+            idle_timeout: config.idle_timeout,
             obs,
             jobs_submitted,
             rejected_saturated,
@@ -396,6 +419,10 @@ impl SchedServer {
                 match e {
                     SubmitError::ServerSaturated { .. } => self.inner.rejected_saturated.inc(),
                     SubmitError::TenantAtCapacity { .. } => self.inner.rejected_tenant_cap.inc(),
+                    // Quota rejections happen at the wire edge (the
+                    // admission queue never produces them); counted
+                    // there in quicksched_rate_limited_total.
+                    SubmitError::RateLimited { .. } => {}
                 }
                 return Err(e);
             }
@@ -438,6 +465,7 @@ impl SchedServer {
                             SubmitError::TenantAtCapacity { .. } => {
                                 self.inner.rejected_tenant_cap.inc()
                             }
+                            SubmitError::RateLimited { .. } => {}
                         }
                         out.push(Err(e));
                     }
@@ -567,6 +595,13 @@ impl SchedServer {
     /// it can notice listener shutdown between checks).
     pub fn wait_slice(&self) -> Duration {
         self.inner.wait_slice
+    }
+
+    /// The configured wire-connection idle timeout, if any (see
+    /// [`ServerConfig::with_idle_timeout`]). Enforced by the wire
+    /// front-ends, not by the server core.
+    pub fn idle_timeout(&self) -> Option<Duration> {
+        self.inner.idle_timeout
     }
 
     /// Cancel a job that is still queued. Returns `false` once it has

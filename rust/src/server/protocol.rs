@@ -89,7 +89,7 @@ impl JobSpec {
 }
 
 /// A submission was rejected before it entered the admission queue.
-/// Both variants are *backpressure*: the client should retry later (the
+/// Every variant is *backpressure*: the client should retry later (the
 /// wire layer maps them onto retryable error codes).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
 pub enum SubmitError {
@@ -103,6 +103,11 @@ pub enum SubmitError {
     /// is admitted-queue-unbounded once this is configured.
     #[error("admission queue is full ({max_queued} jobs queued); retry later")]
     ServerSaturated { max_queued: usize },
+    /// The tenant exceeded its configured submission rate or in-flight
+    /// quota ([`super::auth::QuotaConfig`], enforced at the wire edge);
+    /// `retry_ms` hints when the token bucket will next admit.
+    #[error("{tenant} is rate-limited; retry in {retry_ms}ms")]
+    RateLimited { tenant: TenantId, retry_ms: u64 },
 }
 
 /// Lifecycle of a job as observed through `poll`.
@@ -218,6 +223,9 @@ mod tests {
         assert!(e.to_string().contains('4'));
         let s = SubmitError::ServerSaturated { max_queued: 32 };
         assert!(s.to_string().contains("32"));
+        let r = SubmitError::RateLimited { tenant: TenantId(5), retry_ms: 40 };
+        assert!(r.to_string().contains("tenant5"));
+        assert!(r.to_string().contains("40ms"));
     }
 
     #[test]

@@ -42,8 +42,12 @@ use crate::server::protocol::{JobId, JobReport, JobStatus, TenantId};
 /// larger than one frame. Version 3 added pipelining-era messages:
 /// [`Request::Subscribe`] / [`Response::Event`] for server-push status
 /// streams and [`Request::SubmitBatch`] / [`Response::SubmittedBatch`]
-/// for batched submissions feeding the fused admission path.
-pub const WIRE_VERSION: u32 = 3;
+/// for batched submissions feeding the fused admission path. Version 4
+/// added the SCRAM-SHA-256 handshake frames ([`Request::AuthResponse`],
+/// [`Response::AuthChallenge`] / [`Response::AuthOk`] /
+/// [`Response::AuthFail`]) and the [`ErrorCode::RateLimited`] /
+/// [`ErrorCode::AuthRequired`] codes for per-tenant quota enforcement.
+pub const WIRE_VERSION: u32 = 4;
 
 /// Upper bound on a frame body, enforced on both ends before any body
 /// allocation. Large enough for a stats snapshot, small enough that a
@@ -289,6 +293,7 @@ const REQ_BYE: u8 = 6;
 const REQ_METRICS: u8 = 7;
 const REQ_SUBSCRIBE: u8 = 8;
 const REQ_SUBMIT_BATCH: u8 = 9;
+const REQ_AUTH_RESPONSE: u8 = 10;
 
 /// One submission inside a [`Request::SubmitBatch`] frame — the same
 /// fields as [`Request::Submit`], minus the tag.
@@ -346,6 +351,14 @@ pub enum Request {
     /// one [`Response::SubmittedBatch`] with per-item results, in
     /// order. Wire ≥ 3.
     SubmitBatch { items: Vec<BatchItem> },
+    /// One client leg of the SCRAM-SHA-256 handshake: the
+    /// `client-first-message` right after `HelloOk`, then the
+    /// `client-final-message` answering [`Response::AuthChallenge`].
+    /// The SCRAM text is opaque to the codec (`server::auth::scram`
+    /// parses it); under `--require-auth` every other request except
+    /// `Hello`/`Bye` answers [`ErrorCode::AuthRequired`] until the
+    /// handshake completes. Wire ≥ 4.
+    AuthResponse { data: Vec<u8> },
     /// Orderly close.
     Bye,
 }
@@ -392,6 +405,10 @@ impl Request {
                     put_bytes(&mut out, &it.args);
                 }
             }
+            Request::AuthResponse { data } => {
+                out.push(REQ_AUTH_RESPONSE);
+                put_bytes(&mut out, data);
+            }
             Request::Bye => out.push(REQ_BYE),
         }
         out
@@ -428,6 +445,7 @@ impl Request {
                 }
                 Request::SubmitBatch { items }
             }
+            REQ_AUTH_RESPONSE => Request::AuthResponse { data: r.bytes()?.to_vec() },
             REQ_BYE => Request::Bye,
             t => return Err(ProtocolError::BadTag { kind: "request", tag: t }),
         };
@@ -456,12 +474,22 @@ pub enum ErrorCode {
     ShuttingDown,
     /// Anything else; see the message text.
     Internal,
+    /// The tenant exceeded its submission rate or in-flight quota
+    /// (`aux` = suggested retry delay in ms). Retryable. Wire ≥ 4.
+    RateLimited,
+    /// The connection must complete the SCRAM handshake before this
+    /// request (`serve --require-auth`). Not retryable on the same
+    /// connection state — authenticate first. Wire ≥ 4.
+    AuthRequired,
 }
 
 impl ErrorCode {
     /// Backpressure codes a client may simply retry after a pause.
     pub fn retryable(self) -> bool {
-        matches!(self, ErrorCode::TenantAtCapacity | ErrorCode::ServerSaturated)
+        matches!(
+            self,
+            ErrorCode::TenantAtCapacity | ErrorCode::ServerSaturated | ErrorCode::RateLimited
+        )
     }
 
     fn to_u8(self) -> u8 {
@@ -473,6 +501,8 @@ impl ErrorCode {
             ErrorCode::VersionMismatch => 4,
             ErrorCode::ShuttingDown => 5,
             ErrorCode::Internal => 6,
+            ErrorCode::RateLimited => 7,
+            ErrorCode::AuthRequired => 8,
         }
     }
 
@@ -485,6 +515,8 @@ impl ErrorCode {
             4 => ErrorCode::VersionMismatch,
             5 => ErrorCode::ShuttingDown,
             6 => ErrorCode::Internal,
+            7 => ErrorCode::RateLimited,
+            8 => ErrorCode::AuthRequired,
             t => return Err(ProtocolError::BadTag { kind: "error code", tag: t }),
         })
     }
@@ -650,6 +682,9 @@ const RSP_METRICS: u8 = 6;
 const RSP_CHUNK: u8 = 7;
 const RSP_EVENT: u8 = 8;
 const RSP_SUBMITTED_BATCH: u8 = 9;
+const RSP_AUTH_CHALLENGE: u8 = 10;
+const RSP_AUTH_OK: u8 = 11;
+const RSP_AUTH_FAIL: u8 = 12;
 
 /// Per-item outcome inside a [`Response::SubmittedBatch`]. Rejections
 /// carry the same `(code, aux)` pair a standalone [`Response::Error`]
@@ -690,6 +725,18 @@ pub enum Response {
     /// Per-item results for a [`Request::SubmitBatch`], in submission
     /// order. Wire ≥ 3.
     SubmittedBatch { results: Vec<BatchResult> },
+    /// The SCRAM `server-first-message` answering the client's opening
+    /// [`Request::AuthResponse`]: combined nonce, salt, iteration
+    /// count. Wire ≥ 4.
+    AuthChallenge { data: Vec<u8> },
+    /// Handshake complete: carries the `server-final-message` (the
+    /// server signature, proving the server also knows the credential)
+    /// and the tenant id the connection is now bound to. Wire ≥ 4.
+    AuthOk { tenant: u32, data: Vec<u8> },
+    /// Handshake failed; the connection closes after this frame. The
+    /// message is deliberately uniform for unknown users, disabled
+    /// tenants, and bad proofs — no account probing. Wire ≥ 4.
+    AuthFail { message: String },
     /// The request was rejected; `aux` carries the code's parameter
     /// (see [`ErrorCode`]). Backpressure codes are retryable.
     Error { code: ErrorCode, aux: u64, message: String },
@@ -753,6 +800,19 @@ impl Response {
                     }
                 }
             }
+            Response::AuthChallenge { data } => {
+                out.push(RSP_AUTH_CHALLENGE);
+                put_bytes(&mut out, data);
+            }
+            Response::AuthOk { tenant, data } => {
+                out.push(RSP_AUTH_OK);
+                put_varint(&mut out, *tenant as u64);
+                put_bytes(&mut out, data);
+            }
+            Response::AuthFail { message } => {
+                out.push(RSP_AUTH_FAIL);
+                put_str(&mut out, message);
+            }
             Response::Error { code, aux, message } => {
                 out.push(RSP_ERROR);
                 out.push(code.to_u8());
@@ -791,6 +851,11 @@ impl Response {
                 }
                 Response::SubmittedBatch { results }
             }
+            RSP_AUTH_CHALLENGE => Response::AuthChallenge { data: r.bytes()?.to_vec() },
+            RSP_AUTH_OK => {
+                Response::AuthOk { tenant: r.varint_u32()?, data: r.bytes()?.to_vec() }
+            }
+            RSP_AUTH_FAIL => Response::AuthFail { message: r.text()?.to_string() },
             RSP_ERROR => Response::Error {
                 code: ErrorCode::from_u8(r.u8()?)?,
                 aux: r.varint()?,
@@ -1144,7 +1209,28 @@ mod tests {
     fn error_code_retryability() {
         assert!(ErrorCode::TenantAtCapacity.retryable());
         assert!(ErrorCode::ServerSaturated.retryable());
+        assert!(ErrorCode::RateLimited.retryable());
         assert!(!ErrorCode::BadRequest.retryable());
         assert!(!ErrorCode::VersionMismatch.retryable());
+        assert!(!ErrorCode::AuthRequired.retryable());
+    }
+
+    #[test]
+    fn auth_frames_roundtrip() {
+        let req = Request::AuthResponse { data: b"n,,n=alice,r=abc".to_vec() };
+        assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+        let empty = Request::AuthResponse { data: Vec::new() };
+        assert_eq!(Request::decode(&empty.encode()).unwrap(), empty);
+        let chal = Response::AuthChallenge { data: b"r=abcdef,s=c2FsdA==,i=4096".to_vec() };
+        assert_eq!(Response::decode(&chal.encode()).unwrap(), chal);
+        let ok = Response::AuthOk { tenant: 7, data: b"v=c2ln".to_vec() };
+        assert_eq!(Response::decode(&ok.encode()).unwrap(), ok);
+        let fail = Response::AuthFail { message: "authentication failed".into() };
+        assert_eq!(Response::decode(&fail.encode()).unwrap(), fail);
+        // New error codes survive the wire.
+        for code in [ErrorCode::RateLimited, ErrorCode::AuthRequired] {
+            let resp = Response::Error { code, aux: 25, message: "m".into() };
+            assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
+        }
     }
 }

@@ -32,6 +32,8 @@ use super::codec::{
     self, BatchItem, BatchResult, ErrorCode, FrameBuffer, Request, Response, WireStatus,
     WIRE_VERSION,
 };
+use crate::server::auth::scram::{self, ServerHandshake};
+use crate::server::auth::{AuthMode, TenantRecord};
 use crate::server::protocol::{SubmitError, TenantId};
 
 /// What the state machine needs from its environment. One implementor
@@ -89,6 +91,38 @@ pub(crate) trait ConnService {
         false
     }
 
+    // --- authentication hooks ------------------------------------------
+    // Defaults keep auth entirely off: front-ends without a tenant
+    // registry compile (and behave) exactly as before wire v4.
+
+    /// What this front-end demands of fresh connections.
+    fn auth_mode(&mut self) -> AuthMode {
+        AuthMode::Off
+    }
+
+    /// Resolve a SCRAM username to its credential record. `None` for
+    /// unknown users *and* disabled tenants — the wire answer is the
+    /// same uniform `AuthFail` either way.
+    fn auth_lookup(&mut self, _user: &str) -> Option<TenantRecord> {
+        None
+    }
+
+    /// Mint the server's nonce contribution. The live front-ends use
+    /// OS entropy; the simulator overrides with a seeded stream so
+    /// hostile handshakes replay deterministically.
+    fn auth_nonce(&mut self) -> String {
+        let mut bytes = [0u8; scram::NONCE_LEN];
+        crate::server::auth::crypto::entropy_fill(&mut bytes);
+        scram::nonce_text(&bytes)
+    }
+
+    /// The handshake completed; the connection is now bound to `tenant`.
+    fn on_auth_ok(&mut self, _tenant: TenantId) {}
+
+    /// A handshake leg failed (unknown user, disabled tenant, bad
+    /// proof, malformed message) — the auth-failure counter hook.
+    fn on_auth_failure(&mut self) {}
+
     // --- observability hooks -------------------------------------------
     fn on_request(&mut self, _req: &Request) {}
     fn on_response(&mut self, _resp: &Response) {}
@@ -108,6 +142,7 @@ pub(crate) fn reject_parts(e: &SubmitError) -> (ErrorCode, u64) {
         SubmitError::ServerSaturated { max_queued } => {
             (ErrorCode::ServerSaturated, *max_queued as u64)
         }
+        SubmitError::RateLimited { retry_ms, .. } => (ErrorCode::RateLimited, *retry_ms),
     }
 }
 
@@ -124,6 +159,25 @@ enum Slot {
     Wait(u64),
 }
 
+/// Where the connection stands in the SCRAM handshake.
+#[derive(Default)]
+enum AuthPhase {
+    /// Anonymous operation is allowed (auth off, or optional and the
+    /// client never opted in). The pre-v4 state of the world.
+    #[default]
+    Open,
+    /// `--require-auth`: Hello answered, waiting for the client-first
+    /// message; everything but `AuthResponse`/`Bye` answers
+    /// [`ErrorCode::AuthRequired`].
+    AwaitFirst,
+    /// Challenge sent; waiting for the client-final proof. Boxed: only
+    /// in-flight handshakes pay for the transcript state.
+    Challenged(Box<ServerHandshake>, TenantId),
+    /// Authenticated. Re-entering the handshake (another Hello or
+    /// AuthResponse) is a `BadRequest` protocol violation.
+    Done,
+}
+
 /// Protocol state for one connection. See the module docs for the
 /// pipeline shape; drivers feed [`ConnSm::on_bytes`] /
 /// [`ConnSm::on_job_update`] and drain [`ConnSm::out`].
@@ -131,6 +185,9 @@ enum Slot {
 pub struct ConnSm {
     fb: FrameBuffer,
     tenant: Option<TenantId>,
+    /// SCRAM handshake progress; [`AuthPhase::Open`] on anonymous
+    /// connections, where it costs one discriminant byte.
+    auth: AuthPhase,
     /// Responses in request order; `Wait` holes block later slots.
     pending: VecDeque<Slot>,
     /// job → last delivered [`WireStatus::rank`] for open subscriptions.
@@ -297,10 +354,17 @@ impl ConnSm {
     /// Bytes of heap this connection's state currently holds (the
     /// `perf_guard` per-connection memory ceiling reads this).
     pub fn heap_bytes(&self) -> usize {
+        let auth = match &self.auth {
+            AuthPhase::Challenged(hs, _) => {
+                std::mem::size_of::<ServerHandshake>() + hs.heap_bytes()
+            }
+            _ => 0,
+        };
         self.fb.capacity()
             + self.out.capacity()
             + self.pending.capacity() * std::mem::size_of::<Slot>()
             + self.watches.len() * (std::mem::size_of::<(u64, u8)>() + 32)
+            + auth
     }
 
     fn dispatch<S: ConnService>(&mut self, body: &[u8], svc: &mut S) {
@@ -315,6 +379,19 @@ impl ConnSm {
         svc.on_request(&req);
         let resp = match req {
             Request::Hello { version, tenant } => match self.tenant {
+                // Satellite of the auth work: once *authenticated*, a
+                // repeated Hello is a violation even for dup-tolerant
+                // services — rebinding identity after AuthOk would
+                // launder one tenant's traffic through another's
+                // credential.
+                Some(_) if matches!(self.auth, AuthPhase::Done) => {
+                    self.fail_close(
+                        ErrorCode::BadRequest,
+                        0,
+                        "Hello after authentication completed",
+                    );
+                    None
+                }
                 Some(t) if svc.idempotent_hello() && t.0 == tenant && version == WIRE_VERSION => {
                     Some(Response::HelloOk { version: WIRE_VERSION, tenant })
                 }
@@ -339,9 +416,20 @@ impl ConnSm {
                 }
                 None => {
                     self.tenant = Some(TenantId(tenant));
+                    if svc.auth_mode() == AuthMode::Required {
+                        self.auth = AuthPhase::AwaitFirst;
+                    }
                     Some(Response::HelloOk { version: WIRE_VERSION, tenant })
                 }
             },
+            Request::AuthResponse { data } => {
+                if self.tenant.is_none() {
+                    self.fail_close(ErrorCode::NeedHello, 0, "Hello must be the first message");
+                    return;
+                }
+                self.on_auth_response(&data, svc);
+                return;
+            }
             Request::Bye => {
                 self.closing = true;
                 None
@@ -351,6 +439,18 @@ impl ConnSm {
                     self.fail_close(ErrorCode::NeedHello, 0, "Hello must be the first message");
                     return;
                 };
+                // Under --require-auth nothing but the handshake (and
+                // Bye) passes until AuthOk: an unauthenticated client
+                // can neither submit, poll, wait, cancel, subscribe,
+                // nor read stats/metrics.
+                if matches!(self.auth, AuthPhase::AwaitFirst | AuthPhase::Challenged(..)) {
+                    self.fail_close(
+                        ErrorCode::AuthRequired,
+                        0,
+                        "authentication required before this request",
+                    );
+                    return;
+                }
                 match other {
                     Request::Submit { template, reuse, args } => {
                         Some(match svc.submit(tenant, template, reuse, args) {
@@ -414,13 +514,87 @@ impl ConnSm {
                     Request::Metrics => {
                         Some(Response::MetricsText { text: svc.metrics_text() })
                     }
-                    Request::Hello { .. } | Request::Bye => unreachable!("handled above"),
+                    Request::Hello { .. } | Request::AuthResponse { .. } | Request::Bye => {
+                        unreachable!("handled above")
+                    }
                 }
             }
         };
         if let Some(resp) = resp {
             self.pending.push_back(Slot::Ready(resp));
         }
+    }
+
+    /// One SCRAM leg from the client. `data` is either the
+    /// client-first message (phase `Open`/`AwaitFirst`) or the
+    /// client-final proof (phase `Challenged`); the phase, not the
+    /// bytes, decides — exactly like the RFC's fixed message order.
+    fn on_auth_response<S: ConnService>(&mut self, data: &[u8], svc: &mut S) {
+        match std::mem::take(&mut self.auth) {
+            AuthPhase::Open | AuthPhase::AwaitFirst => {
+                if svc.auth_mode() == AuthMode::Off {
+                    self.fail_close(
+                        ErrorCode::BadRequest,
+                        0,
+                        "authentication is not enabled on this server",
+                    );
+                    return;
+                }
+                let Ok(first) = scram::parse_client_first(data) else {
+                    self.auth_fail_close(svc);
+                    return;
+                };
+                // Unknown user and disabled tenant take the same path
+                // as a (later) bad proof: one uniform failure answer,
+                // no account probing.
+                let Some(rec) = svc.auth_lookup(&first.user) else {
+                    self.auth_fail_close(svc);
+                    return;
+                };
+                let snonce = svc.auth_nonce();
+                let (hs, server_first) = ServerHandshake::start(
+                    &first,
+                    &rec.salt,
+                    rec.iterations,
+                    rec.stored_key,
+                    rec.server_key,
+                    &snonce,
+                );
+                self.auth = AuthPhase::Challenged(Box::new(hs), rec.tenant);
+                self.pending.push_back(Slot::Ready(Response::AuthChallenge {
+                    data: server_first.into_bytes(),
+                }));
+            }
+            AuthPhase::Challenged(hs, tenant) => match hs.verify_client_final(data) {
+                Ok(server_final) => {
+                    self.auth = AuthPhase::Done;
+                    // The authenticated identity *replaces* whatever
+                    // tenant the (unauthenticated) Hello claimed.
+                    self.tenant = Some(tenant);
+                    svc.on_auth_ok(tenant);
+                    self.pending.push_back(Slot::Ready(Response::AuthOk {
+                        tenant: tenant.0,
+                        data: server_final.into_bytes(),
+                    }));
+                }
+                Err(_) => self.auth_fail_close(svc),
+            },
+            AuthPhase::Done => {
+                // Satellite fix: a replayed AuthResponse after AuthOk
+                // must not re-open the handshake.
+                self.auth = AuthPhase::Done;
+                self.fail_close(ErrorCode::BadRequest, 0, "AuthResponse after AuthOk");
+            }
+        }
+    }
+
+    /// Uniform handshake failure: count it, answer `AuthFail`, close.
+    fn auth_fail_close<S: ConnService>(&mut self, svc: &mut S) {
+        svc.on_auth_failure();
+        self.pending.push_back(Slot::Ready(Response::AuthFail {
+            message: "authentication failed".into(),
+        }));
+        self.closing = true;
     }
 
     /// Queue an error response and close after it drains.
@@ -531,6 +705,10 @@ mod tests {
         waits: Vec<u64>,
         watches: Vec<u64>,
         idempotent: bool,
+        mode: Option<AuthMode>,
+        record: Option<TenantRecord>,
+        authed: Vec<TenantId>,
+        auth_failures: usize,
     }
 
     impl ConnService for MockSvc {
@@ -569,6 +747,21 @@ mod tests {
         }
         fn idempotent_hello(&mut self) -> bool {
             self.idempotent
+        }
+        fn auth_mode(&mut self) -> AuthMode {
+            self.mode.unwrap_or(AuthMode::Off)
+        }
+        fn auth_lookup(&mut self, user: &str) -> Option<TenantRecord> {
+            self.record.clone().filter(|r| r.user == user && r.enabled)
+        }
+        fn auth_nonce(&mut self) -> String {
+            "SRVNONCE".into()
+        }
+        fn on_auth_ok(&mut self, tenant: TenantId) {
+            self.authed.push(tenant);
+        }
+        fn on_auth_failure(&mut self) {
+            self.auth_failures += 1;
         }
     }
 
@@ -825,6 +1018,260 @@ mod tests {
             Response::Error { code: ErrorCode::ShuttingDown, .. }
         ));
         assert!(sm.should_close());
+    }
+
+    fn auth_record() -> TenantRecord {
+        TenantRecord::derive(
+            "alice",
+            TenantId(42),
+            "sesame",
+            b"pepper",
+            16,
+            crate::server::auth::QuotaConfig::default(),
+        )
+    }
+
+    /// Drive the SCRAM client side against `sm` up to (and including)
+    /// the client-final message; returns the expected server signature.
+    fn client_auth(
+        sm: &mut ConnSm,
+        svc: &mut MockSvc,
+        user: &str,
+        password: &str,
+    ) -> ([u8; 32], Vec<Response>) {
+        use crate::server::auth::scram::ClientHandshake;
+        let client = ClientHandshake::new(user, "CLINONCE".into());
+        sm.on_bytes(
+            &frames(&[Request::AuthResponse { data: client.client_first().into_bytes() }]),
+            svc,
+        );
+        let got = drain(sm);
+        let Some(Response::AuthChallenge { data }) = got.first() else {
+            return ([0u8; 32], got);
+        };
+        let (client_final, expect) = client.respond(data, password).unwrap();
+        sm.on_bytes(
+            &frames(&[Request::AuthResponse { data: client_final.into_bytes() }]),
+            svc,
+        );
+        (expect, drain(sm))
+    }
+
+    #[test]
+    fn require_auth_gates_everything_but_the_handshake() {
+        let gated = [
+            Request::Submit { template: "a".into(), reuse: true, args: vec![] },
+            Request::SubmitBatch { items: vec![BatchItem::template("a")] },
+            Request::Poll { job: 0 },
+            Request::Wait { job: 0 },
+            Request::Cancel { job: 0 },
+            Request::Subscribe { job: 0 },
+            Request::Stats,
+            Request::Metrics,
+        ];
+        for req in gated {
+            let mut sm = ConnSm::default();
+            let mut svc = MockSvc {
+                accept: true,
+                mode: Some(AuthMode::Required),
+                record: Some(auth_record()),
+                ..MockSvc::default()
+            };
+            sm.on_bytes(&frames(&[hello(), req.clone()]), &mut svc);
+            let got = drain(&mut sm);
+            assert!(matches!(got[0], Response::HelloOk { .. }));
+            assert!(
+                matches!(got[1], Response::Error { code: ErrorCode::AuthRequired, .. }),
+                "{req:?} passed the auth gate: {:?}",
+                got[1]
+            );
+            assert!(sm.should_close());
+        }
+    }
+
+    #[test]
+    fn scram_handshake_binds_the_authenticated_tenant() {
+        use crate::server::auth::scram::verify_server_final;
+        let mut sm = ConnSm::default();
+        let mut svc = MockSvc {
+            accept: true,
+            mode: Some(AuthMode::Required),
+            record: Some(auth_record()),
+            ..MockSvc::default()
+        };
+        // The Hello claims tenant 3; the credential says 42 — the
+        // credential wins.
+        sm.on_bytes(&frames(&[hello()]), &mut svc);
+        drain(&mut sm);
+        let (expect, got) = client_auth(&mut sm, &mut svc, "alice", "sesame");
+        match &got[0] {
+            Response::AuthOk { tenant, data } => {
+                assert_eq!(*tenant, 42);
+                verify_server_final(data, &expect).unwrap();
+            }
+            other => panic!("expected AuthOk, got {other:?}"),
+        }
+        assert_eq!(svc.authed, vec![TenantId(42)]);
+        assert_eq!(svc.auth_failures, 0);
+        assert!(!sm.should_close());
+        // Post-handshake the connection works normally.
+        sm.on_bytes(
+            &frames(&[Request::Submit { template: "a".into(), reuse: true, args: vec![] }]),
+            &mut svc,
+        );
+        let got = drain(&mut sm);
+        assert!(matches!(got[0], Response::Submitted { job: 0 }));
+    }
+
+    #[test]
+    fn bad_credentials_get_one_uniform_authfail() {
+        // Wrong password: fails on the proof.
+        let mut sm = ConnSm::default();
+        let mut svc = MockSvc {
+            mode: Some(AuthMode::Required),
+            record: Some(auth_record()),
+            ..MockSvc::default()
+        };
+        sm.on_bytes(&frames(&[hello()]), &mut svc);
+        drain(&mut sm);
+        let (_, got) = client_auth(&mut sm, &mut svc, "alice", "wrong");
+        let Response::AuthFail { message: wrong_pw } = &got[0] else {
+            panic!("expected AuthFail, got {:?}", got[0]);
+        };
+        assert!(sm.should_close());
+
+        // Unknown user: fails on the lookup — the *same* answer.
+        let mut sm = ConnSm::default();
+        let mut svc = MockSvc {
+            mode: Some(AuthMode::Required),
+            record: Some(auth_record()),
+            ..MockSvc::default()
+        };
+        sm.on_bytes(&frames(&[hello()]), &mut svc);
+        drain(&mut sm);
+        let (_, got) = client_auth(&mut sm, &mut svc, "mallory", "sesame");
+        let Response::AuthFail { message: unknown } = &got[0] else {
+            panic!("expected AuthFail, got {:?}", got[0]);
+        };
+        assert_eq!(wrong_pw, unknown, "failure answers must not distinguish causes");
+        assert_eq!(svc.auth_failures, 1);
+        assert!(sm.should_close());
+
+        // Disabled tenant: same again.
+        let mut rec = auth_record();
+        rec.enabled = false;
+        let mut sm = ConnSm::default();
+        let mut svc = MockSvc {
+            mode: Some(AuthMode::Required),
+            record: Some(rec),
+            ..MockSvc::default()
+        };
+        sm.on_bytes(&frames(&[hello()]), &mut svc);
+        drain(&mut sm);
+        let (_, got) = client_auth(&mut sm, &mut svc, "alice", "sesame");
+        assert!(matches!(&got[0], Response::AuthFail { message } if message == wrong_pw));
+
+        // Garbage handshake bytes: also AuthFail, never a panic.
+        let mut sm = ConnSm::default();
+        let mut svc = MockSvc {
+            mode: Some(AuthMode::Required),
+            record: Some(auth_record()),
+            ..MockSvc::default()
+        };
+        sm.on_bytes(
+            &frames(&[hello(), Request::AuthResponse { data: vec![0xff, 0x00, 0x41] }]),
+            &mut svc,
+        );
+        let got = drain(&mut sm);
+        assert!(matches!(got[1], Response::AuthFail { .. }));
+        assert!(sm.should_close());
+    }
+
+    #[test]
+    fn replayed_auth_and_post_auth_hello_are_bad_requests() {
+        // Complete a handshake, then replay the final AuthResponse:
+        // the handshake must not re-open (satellite regression test).
+        let mut sm = ConnSm::default();
+        let mut svc = MockSvc {
+            accept: true,
+            idempotent: true,
+            mode: Some(AuthMode::Required),
+            record: Some(auth_record()),
+            ..MockSvc::default()
+        };
+        sm.on_bytes(&frames(&[hello()]), &mut svc);
+        drain(&mut sm);
+        let (_, got) = client_auth(&mut sm, &mut svc, "alice", "sesame");
+        assert!(matches!(got[0], Response::AuthOk { .. }));
+        sm.on_bytes(
+            &frames(&[Request::AuthResponse { data: b"c=biws,r=x,p=AAAA".to_vec() }]),
+            &mut svc,
+        );
+        let got = drain(&mut sm);
+        assert!(matches!(got[0], Response::Error { code: ErrorCode::BadRequest, .. }));
+        assert!(sm.should_close());
+
+        // A second Hello *after* AuthOk is rejected even though the
+        // service is dup-tolerant (PR 4's double-Hello rule tightens
+        // once a connection is authenticated).
+        let mut sm = ConnSm::default();
+        let mut svc = MockSvc {
+            accept: true,
+            idempotent: true,
+            mode: Some(AuthMode::Required),
+            record: Some(auth_record()),
+            ..MockSvc::default()
+        };
+        sm.on_bytes(&frames(&[hello()]), &mut svc);
+        drain(&mut sm);
+        let (_, got) = client_auth(&mut sm, &mut svc, "alice", "sesame");
+        assert!(matches!(got[0], Response::AuthOk { .. }));
+        sm.on_bytes(&frames(&[hello()]), &mut svc);
+        let got = drain(&mut sm);
+        assert!(matches!(got[0], Response::Error { code: ErrorCode::BadRequest, .. }));
+        assert!(sm.should_close());
+    }
+
+    #[test]
+    fn auth_modes_off_and_optional() {
+        // Off: an AuthResponse is a protocol error, anonymity works.
+        let mut sm = ConnSm::default();
+        let mut svc = MockSvc { accept: true, ..MockSvc::default() };
+        sm.on_bytes(
+            &frames(&[hello(), Request::AuthResponse { data: b"n,,n=a,r=b".to_vec() }]),
+            &mut svc,
+        );
+        let got = drain(&mut sm);
+        assert!(matches!(got[1], Response::Error { code: ErrorCode::BadRequest, .. }));
+
+        // Optional: anonymous submissions pass untouched…
+        let mut sm = ConnSm::default();
+        let mut svc = MockSvc {
+            accept: true,
+            mode: Some(AuthMode::Optional),
+            record: Some(auth_record()),
+            ..MockSvc::default()
+        };
+        sm.on_bytes(
+            &frames(&[hello(), Request::Submit { template: "a".into(), reuse: true, args: vec![] }]),
+            &mut svc,
+        );
+        let got = drain(&mut sm);
+        assert!(matches!(got[1], Response::Submitted { .. }));
+        // …and a client may still opt in to authenticate.
+        let (_, got) = client_auth(&mut sm, &mut svc, "alice", "sesame");
+        assert!(matches!(got[0], Response::AuthOk { tenant: 42, .. }));
+
+        // Pre-Hello AuthResponse is still NeedHello.
+        let mut sm = ConnSm::default();
+        let mut svc = MockSvc {
+            mode: Some(AuthMode::Required),
+            record: Some(auth_record()),
+            ..MockSvc::default()
+        };
+        sm.on_bytes(&frames(&[Request::AuthResponse { data: vec![] }]), &mut svc);
+        let got = drain(&mut sm);
+        assert!(matches!(got[0], Response::Error { code: ErrorCode::NeedHello, .. }));
     }
 
     #[test]

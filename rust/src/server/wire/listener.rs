@@ -31,13 +31,14 @@ use std::os::unix::net::{UnixListener, UnixStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::codec::{self, BatchItem, ErrorCode, Response, WireStatus};
 use super::conn::{ConnService, ConnSm};
 #[cfg(target_os = "linux")]
 use super::reactor;
 use crate::obs::{Counter, Histogram, MetricsRegistry};
+use crate::server::auth::{AuthGate, AuthMode, TenantRecord};
 use crate::server::protocol::{JobId, JobSpec, Submission, SubmitError, TenantId};
 use crate::server::SchedServer;
 
@@ -202,6 +203,14 @@ pub(crate) struct WireObs {
     /// Threaded-fallback wait slices that expired with parked work and
     /// triggered a re-poll; the reactor's push path keeps this at 0.
     pub(crate) wait_polls: Counter,
+    /// SCRAM handshakes that ended in `AuthFail` (bad credentials,
+    /// malformed or replayed handshake messages).
+    pub(crate) auth_failures: Counter,
+    /// Submissions rejected at the wire edge by per-tenant quotas.
+    pub(crate) rate_limited: Counter,
+    /// Connections closed by the idle timeout
+    /// (`ServerConfig::with_idle_timeout`).
+    pub(crate) idle_closed: Counter,
 }
 
 impl WireObs {
@@ -243,6 +252,18 @@ impl WireObs {
             "quicksched_wire_wait_slice_polls_total",
             "Threaded-fallback wait slices that expired and re-polled parked jobs.",
         );
+        let auth_failures = obs.counter(
+            "quicksched_auth_failures_total",
+            "SCRAM handshakes rejected: bad credentials, malformed or replayed messages.",
+        );
+        let rate_limited = obs.counter(
+            "quicksched_rate_limited_total",
+            "Submissions rejected at the wire edge by per-tenant rate or in-flight quotas.",
+        );
+        let idle_closed = obs.counter(
+            "quicksched_conns_idle_closed_total",
+            "Connections closed by the idle timeout.",
+        );
         Self {
             obs,
             conns_opened,
@@ -255,6 +276,9 @@ impl WireObs {
             frame_bytes,
             write_stalls,
             wait_polls,
+            auth_failures,
+            rate_limited,
+            idle_closed,
         }
     }
 }
@@ -266,6 +290,8 @@ pub(crate) struct ListenerShared {
     pub(crate) conns: Mutex<Vec<JoinHandle<()>>>,
     pub(crate) max_conns: usize,
     pub(crate) wire: WireObs,
+    /// Auth context (`None` = anonymous service, the pre-v4 behavior).
+    pub(crate) auth: Option<Arc<AuthGate>>,
 }
 
 /// [`ConnService`] backed by the in-process [`SchedServer`]: the
@@ -276,6 +302,24 @@ pub(crate) struct ServerSvc<'a> {
     pub(crate) shared: &'a ListenerShared,
 }
 
+impl ServerSvc<'_> {
+    /// Per-tenant quota check ahead of admission; counts rejections.
+    fn quota_gate(&self, tenant: TenantId) -> Result<(), SubmitError> {
+        let Some(gate) = &self.shared.auth else { return Ok(()) };
+        gate.quotas().check_submit(tenant, gate.now_ns()).inspect_err(|_| {
+            self.shared.wire.rate_limited.inc();
+        })
+    }
+
+    /// In-flight accounting for an accepted submission (released by the
+    /// status listener `start_with_auth` installs).
+    fn quota_admit(&self, tenant: TenantId, job: u64) {
+        if let Some(gate) = &self.shared.auth {
+            gate.quotas().note_admitted(tenant, job);
+        }
+    }
+}
+
 impl ConnService for ServerSvc<'_> {
     fn submit(
         &mut self,
@@ -284,9 +328,12 @@ impl ConnService for ServerSvc<'_> {
         reuse: bool,
         args: Vec<u8>,
     ) -> Result<u64, SubmitError> {
+        self.quota_gate(tenant)?;
         let submission =
             if reuse { Submission::Template(template) } else { Submission::Rebuild(template) };
-        self.shared.server.try_submit(JobSpec { tenant, submission, args }).map(|id| id.0)
+        let id = self.shared.server.try_submit(JobSpec { tenant, submission, args })?.0;
+        self.quota_admit(tenant, id);
+        Ok(id)
     }
 
     fn submit_batch(
@@ -294,24 +341,37 @@ impl ConnService for ServerSvc<'_> {
         tenant: TenantId,
         items: Vec<BatchItem>,
     ) -> Vec<Result<u64, SubmitError>> {
-        // One admission-lock round for the whole batch: accepted items
-        // land adjacent in the fair queue and fuse in one sweep.
-        let specs = items
+        // Quota-check each item first (every item is one submission
+        // against the token bucket), then run the survivors through one
+        // admission-lock round so accepted items land adjacent in the
+        // fair queue and fuse in one sweep.
+        let mut results: Vec<Option<Result<u64, SubmitError>>> = Vec::new();
+        let mut specs = Vec::new();
+        for it in items {
+            if let Err(e) = self.quota_gate(tenant) {
+                results.push(Some(Err(e)));
+                continue;
+            }
+            results.push(None);
+            let submission = if it.reuse {
+                Submission::Template(it.template)
+            } else {
+                Submission::Rebuild(it.template)
+            };
+            specs.push(JobSpec { tenant, submission, args: it.args });
+        }
+        let mut admitted = self.shared.server.try_submit_batch(specs).into_iter();
+        results
             .into_iter()
-            .map(|it| {
-                let submission = if it.reuse {
-                    Submission::Template(it.template)
-                } else {
-                    Submission::Rebuild(it.template)
-                };
-                JobSpec { tenant, submission, args: it.args }
+            .map(|slot| {
+                slot.unwrap_or_else(|| {
+                    let r = admitted.next().expect("batch result per spec").map(|id| id.0);
+                    if let Ok(id) = r {
+                        self.quota_admit(tenant, id);
+                    }
+                    r
+                })
             })
-            .collect();
-        self.shared
-            .server
-            .try_submit_batch(specs)
-            .into_iter()
-            .map(|r| r.map(|id| id.0))
             .collect()
     }
 
@@ -355,6 +415,18 @@ impl ConnService for ServerSvc<'_> {
 
     fn on_decode_error(&mut self) {
         self.shared.wire.decode_errors.inc();
+    }
+
+    fn auth_mode(&mut self) -> AuthMode {
+        self.shared.auth.as_ref().map(|g| g.mode()).unwrap_or(AuthMode::Off)
+    }
+
+    fn auth_lookup(&mut self, user: &str) -> Option<TenantRecord> {
+        self.shared.auth.as_ref().and_then(|g| g.registry().lookup(user).cloned())
+    }
+
+    fn on_auth_failure(&mut self) {
+        self.shared.wire.auth_failures.inc();
     }
 }
 
@@ -403,6 +475,21 @@ impl WireListener {
         max_conns: usize,
         mode: WireMode,
     ) -> io::Result<Self> {
+        Self::start_with_auth(server, addr, max_conns, mode, None)
+    }
+
+    /// [`WireListener::start_with`] plus an [`AuthGate`]: connections
+    /// may (gate in [`AuthMode::Optional`]) or must (`--require-auth`,
+    /// [`AuthMode::Required`]) complete a SCRAM-SHA-256 handshake, and
+    /// authenticated tenants are metered against their configured
+    /// quotas. `None` is the anonymous pre-v4 service.
+    pub fn start_with_auth(
+        server: Arc<SchedServer>,
+        addr: &ListenAddr,
+        max_conns: usize,
+        mode: WireMode,
+        auth: Option<Arc<AuthGate>>,
+    ) -> io::Result<Self> {
         let reactor_wanted = match mode {
             WireMode::Auto => cfg!(target_os = "linux"),
             WireMode::Reactor => true,
@@ -416,6 +503,17 @@ impl WireListener {
             ));
         }
         let (acceptor, local) = Acceptor::bind(addr)?;
+        if let Some(gate) = &auth {
+            // Release in-flight quota the moment a job settles; the
+            // listener observes transitions in true order, so a tenant's
+            // in-flight count can never leak or go negative.
+            let gate = Arc::clone(gate);
+            server.add_status_listener(move |job, status| {
+                if status.is_terminal() {
+                    gate.quotas().note_settled(job.0);
+                }
+            });
+        }
         let shared = Arc::new(ListenerShared {
             server,
             shutdown: AtomicBool::new(false),
@@ -423,6 +521,7 @@ impl WireListener {
             conns: Mutex::new(Vec::new()),
             max_conns: max_conns.max(1),
             wire: WireObs::new(),
+            auth,
         });
         {
             // Sampled at render time through a Weak so the registry
@@ -582,6 +681,8 @@ fn serve_conn(shared: &ListenerShared, stream: &mut dyn WireStream) {
     let mut svc = ServerSvc { shared };
     let mut tmp = [0u8; 4096];
     let mut peer_gone = false;
+    let idle_limit = shared.server.idle_timeout();
+    let mut last_rx = Instant::now();
     loop {
         if shared.shutdown.load(Ordering::Acquire) {
             sm.abort_waits(&mut svc);
@@ -597,6 +698,16 @@ fn serve_conn(shared: &ListenerShared, stream: &mut dyn WireStream) {
         }
         if sm.should_close() {
             return;
+        }
+        // Idle timeout: a connection that has sent no bytes for the
+        // configured window is dropped. Parked work (a blocked Wait, an
+        // open subscription) is byte-silent by design, so it exempts
+        // the connection.
+        if let Some(limit) = idle_limit {
+            if !sm.has_parked_work() && last_rx.elapsed() >= limit {
+                shared.wire.idle_closed.inc();
+                return;
+            }
         }
         // With parked work (a blocked Wait, an open subscription), wake
         // at the configured wait slice to re-poll; otherwise only often
@@ -623,6 +734,7 @@ fn serve_conn(shared: &ListenerShared, stream: &mut dyn WireStream) {
             }
             Ok(n) => {
                 shared.wire.bytes_rx.add(n as u64);
+                last_rx = Instant::now();
                 sm.on_bytes(&tmp[..n], &mut svc);
             }
             Err(e)

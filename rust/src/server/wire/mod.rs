@@ -19,11 +19,17 @@
 //! ```
 //!
 //! Backpressure is part of the protocol: per-tenant caps
-//! (`TenantAtCapacity`) and the global bounded admission queue
-//! (`ServerSaturated`) come back as retryable [`ErrorCode`]s instead of
-//! hangs or drops. See ARCHITECTURE.md §Wire protocol for the frame
-//! layout, the message table, and the versioning rule, and §Reactor for
-//! the readiness loop.
+//! (`TenantAtCapacity`), the global bounded admission queue
+//! (`ServerSaturated`), and per-tenant auth quotas (`RateLimited`) come
+//! back as retryable [`ErrorCode`]s instead of hangs or drops. Wire v4
+//! adds the SCRAM-SHA-256 handshake frames
+//! (`AuthResponse`/`AuthChallenge`/`AuthOk`/`AuthFail`, see
+//! [`crate::server::auth`]); under `--require-auth` every
+//! tenant-touching request answers `AuthRequired` until the handshake
+//! completes. See ARCHITECTURE.md §Wire protocol for the frame layout,
+//! the message table, and the versioning rule, §Reactor for the
+//! readiness loop, and §Authentication & quotas for the handshake
+//! ladder.
 
 pub mod codec;
 pub mod conn;

@@ -31,10 +31,12 @@ use std::os::unix::io::{AsRawFd, RawFd};
 use std::os::unix::net::UnixStream;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use super::codec::WireStatus;
 use super::conn::{ConnService, ConnSm};
 use super::listener::{Accepted, ListenerShared, ServerSvc, WireObs};
+use crate::server::auth::{AuthMode, TenantRecord};
 use crate::server::protocol::JobStatus;
 
 #[allow(non_camel_case_types)]
@@ -513,6 +515,18 @@ impl ConnService for ShardSvc<'_> {
     fn on_decode_error(&mut self) {
         self.base().on_decode_error();
     }
+
+    fn auth_mode(&mut self) -> AuthMode {
+        self.base().auth_mode()
+    }
+
+    fn auth_lookup(&mut self, user: &str) -> Option<TenantRecord> {
+        self.base().auth_lookup(user)
+    }
+
+    fn on_auth_failure(&mut self) {
+        self.base().on_auth_failure();
+    }
 }
 
 /// One connection as a shard sees it.
@@ -524,6 +538,8 @@ struct ConnState {
     /// Read side done (EOF or read error): stop arming read interest,
     /// or level-triggered RDHUP would spin the shard.
     peer_gone: bool,
+    /// Last time the peer sent bytes — the idle-timeout clock.
+    last_rx: Instant,
 }
 
 /// One reactor thread: an epoll set, a connection slab, and the loop.
@@ -536,11 +552,25 @@ struct Shard {
     /// Shared read buffer — per-shard, not per-connection, so 10k idle
     /// connections do not each pin a read buffer.
     buf: Vec<u8>,
+    /// Idle timeout (`ServerConfig::with_idle_timeout`), checked off
+    /// the epoll-wait backstop rather than a per-connection timer.
+    idle: Option<Duration>,
+    last_sweep: Instant,
 }
 
 impl Shard {
     fn new(idx: usize, ep: Epoll, hub: Arc<Hub>) -> Self {
-        Self { idx, ep, hub, conns: Vec::new(), free: Vec::new(), buf: vec![0u8; 64 * 1024] }
+        let idle = hub.shared.server.idle_timeout();
+        Self {
+            idx,
+            ep,
+            hub,
+            conns: Vec::new(),
+            free: Vec::new(),
+            buf: vec![0u8; 64 * 1024],
+            idle,
+            last_sweep: Instant::now(),
+        }
     }
 
     fn run(mut self) {
@@ -550,8 +580,9 @@ impl Shard {
                 self.abort_all();
                 return;
             }
-            // The 100 ms timeout is a shutdown backstop only; real work
-            // arrives as readiness or a mailbox doorbell.
+            // The 100 ms timeout is a shutdown (and idle-sweep)
+            // backstop only; real work arrives as readiness or a
+            // mailbox doorbell.
             let n = self.ep.wait(&mut events, 100).unwrap_or(0);
             for ev in &events[..n] {
                 // Copy fields out of the (packed on x86-64) event.
@@ -562,6 +593,30 @@ impl Shard {
                 } else {
                     self.on_socket(data as usize, ready);
                 }
+            }
+            self.sweep_idle();
+        }
+    }
+
+    /// Close connections silent past the idle timeout. Runs at most
+    /// every 100 ms (the epoll backstop pace); parked work (a blocked
+    /// `Wait`, an open subscription) is byte-silent by design and
+    /// exempts the connection. `close` releases the connection's hub
+    /// interest entries, so a timed-out subscriber leaks nothing.
+    fn sweep_idle(&mut self) {
+        let Some(limit) = self.idle else { return };
+        if self.last_sweep.elapsed() < Duration::from_millis(100) {
+            return;
+        }
+        self.last_sweep = Instant::now();
+        for token in 0..self.conns.len() {
+            let expired = match &self.conns[token] {
+                Some(c) => !c.sm.has_parked_work() && c.last_rx.elapsed() >= limit,
+                None => false,
+            };
+            if expired {
+                self.hub.shared.wire.idle_closed.inc();
+                self.close(token);
             }
         }
     }
@@ -592,8 +647,13 @@ impl Shard {
             return;
         }
         self.hub.registered.fetch_add(1, Ordering::Relaxed);
-        self.conns[token] =
-            Some(ConnState { stream, sm: ConnSm::default(), interest, peer_gone: false });
+        self.conns[token] = Some(ConnState {
+            stream,
+            sm: ConnSm::default(),
+            interest,
+            peer_gone: false,
+            last_rx: Instant::now(),
+        });
     }
 
     fn on_job_msg(&mut self, token: usize, job: u64, status: &WireStatus) {
@@ -673,6 +733,7 @@ fn read_conn(conn: &mut ConnState, buf: &mut [u8], svc: &mut ShardSvc, wire: &Wi
             }
             Ok(n) => {
                 wire.bytes_rx.add(n as u64);
+                conn.last_rx = Instant::now();
                 conn.sm.on_bytes(&buf[..n], svc);
             }
             Err(e) if e.kind() == io::ErrorKind::WouldBlock => return false,

@@ -19,9 +19,12 @@ use std::collections::VecDeque;
 use std::io::Read;
 
 use super::engine::{req_name, resp_name, ActorId, EvKind, Sim};
+use super::faults::AuthHostility;
 use super::net::CLIENT;
 use super::SimConfig;
+use crate::server::auth::scram::{self, ClientHandshake};
 use crate::server::protocol::TenantId;
+use crate::util::rng::Rng;
 use crate::server::wire::codec::FrameBuffer;
 use crate::server::wire::{
     codec, BatchItem, BatchResult, ErrorCode, Request, Response, WireReport, WireStatus,
@@ -41,6 +44,10 @@ const BACKOFF_CAP_NS: u64 = 32_000_000;
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub(crate) enum Op {
     Hello,
+    /// Send SCRAM client-first, await the server challenge.
+    AuthFirst,
+    /// Send the client-final (honest or hostile), await `AuthOk`.
+    AuthFinal,
     Submit(usize),
     /// Submit every still-unbound job slot in one pipelined frame
     /// (batching scenarios only).
@@ -87,12 +94,28 @@ pub(crate) struct Client {
     /// Job slots covered by the outstanding `SubmitBatch`, in item
     /// order — the response's positional results bind through this.
     pub batch_slots: Vec<usize>,
+    /// Authenticate after Hello (scenario flag or `auth` profile).
+    pub auth: bool,
+    /// SCRAM credentials (must match the sim server's registry row).
+    pub user: String,
+    pub password: String,
+    /// Client-nonce stream: deterministic, distinct per client.
+    pub nonce_rng: Rng,
+    /// In-flight handshake state between AuthFirst and AuthFinal.
+    pub hs: Option<ClientHandshake>,
+    pub challenge: Option<Vec<u8>>,
+    /// Expected server signature of an honest client-final.
+    pub expect_sig: Option<[u8; 32]>,
 }
 
 impl Client {
-    pub fn new(idx: usize, cfg: &SimConfig) -> Self {
+    pub fn new(idx: usize, cfg: &SimConfig, seed: u64, auth: bool) -> Self {
         let mut ops = VecDeque::new();
         ops.push_back(Op::Hello);
+        if auth {
+            ops.push_back(Op::AuthFirst);
+            ops.push_back(Op::AuthFinal);
+        }
         if cfg.batch {
             ops.push_back(Op::SubmitBatch);
         } else {
@@ -124,6 +147,13 @@ impl Client {
             chunks: Vec::new(),
             batch: cfg.batch,
             batch_slots: Vec::new(),
+            auth,
+            user: format!("t{idx}"),
+            password: format!("pw{idx}"),
+            nonce_rng: Rng::new(Rng::split(seed, 1000 + idx as u64)),
+            hs: None,
+            challenge: None,
+            expect_sig: None,
         }
     }
 }
@@ -256,6 +286,35 @@ impl Sim {
                     self.client_batch_results(c, results);
                 }
             }
+            Response::AuthChallenge { data } => {
+                if await_op == Op::AuthFirst {
+                    self.clients[c].challenge = Some(data);
+                    self.client_complete_op(c);
+                }
+            }
+            Response::AuthOk { tenant, data } => {
+                if await_op == Op::AuthFinal {
+                    // An AuthOk is only legitimate for an honest final
+                    // whose expected server signature we recorded; a
+                    // hostile leg that authenticates is a server bug.
+                    let ok = match &self.clients[c].expect_sig {
+                        Some(sig) => scram::verify_server_final(&data, sig).is_ok(),
+                        None => false,
+                    };
+                    if !ok {
+                        self.oracle.violation(format!(
+                            "client {c}: AuthOk with invalid server signature"
+                        ));
+                    }
+                    self.trace(format!("client {c}: authenticated (tenant {tenant})"));
+                    self.client_complete_op(c);
+                }
+            }
+            Response::AuthFail { .. } => {
+                // Hostile legs — and honest handshakes mangled by frame
+                // faults — legitimately end here; reconnect and redo.
+                self.client_disconnect(c, "auth rejected");
+            }
             // Push events only matter to subscribers; the scripted
             // client never subscribes, so any Event here is stale.
             Response::Cancelled { .. } | Response::MetricsText { .. } | Response::Event { .. } => {}
@@ -267,6 +326,10 @@ impl Sim {
                     // The server lost our handshake (e.g. a reconnect
                     // raced a dropped Hello); redo it.
                     self.client_disconnect(c, "handshake lost");
+                } else if code == ErrorCode::AuthRequired {
+                    // A request got ahead of the handshake (reordering,
+                    // or the truncate hostility's pre-auth probe).
+                    self.client_disconnect(c, "auth required");
                 } else {
                     self.oracle
                         .violation(format!("client {c}: fatal wire error: {message}"));
@@ -392,6 +455,74 @@ impl Sim {
                 Op::Hello => {
                     Request::Hello { version: WIRE_VERSION, tenant: self.clients[c].tenant.0 }
                 }
+                Op::AuthFirst => {
+                    let cl = &mut self.clients[c];
+                    let mut nonce = [0u8; scram::NONCE_LEN];
+                    for b in nonce.iter_mut() {
+                        *b = (cl.nonce_rng.next_u64() & 0xff) as u8;
+                    }
+                    let hs = ClientHandshake::new(&cl.user, scram::nonce_text(&nonce));
+                    let data = hs.client_first().into_bytes();
+                    cl.hs = Some(hs);
+                    cl.challenge = None;
+                    cl.expect_sig = None;
+                    Request::AuthResponse { data }
+                }
+                Op::AuthFinal => {
+                    let hostility = self.plan.auth_hostility();
+                    if hostility == Some(AuthHostility::Truncate) {
+                        // Abandon the handshake mid-way: probe with a
+                        // pre-auth Stats; the server must refuse it
+                        // with AuthRequired (handled above).
+                        self.trace(format!("client {c}: hostile auth (truncated handshake)"));
+                        Request::Stats
+                    } else {
+                        let (hs, challenge) = {
+                            let cl = &self.clients[c];
+                            (cl.hs.clone(), cl.challenge.clone())
+                        };
+                        let (Some(hs), Some(challenge)) = (hs, challenge) else {
+                            self.client_disconnect(c, "auth state lost");
+                            return;
+                        };
+                        let data = match hostility {
+                            Some(AuthHostility::Replay) if self.last_client_final.is_some() => {
+                                // A stale final from an earlier honest
+                                // handshake, against a fresh nonce.
+                                self.trace(format!("client {c}: hostile auth (replayed final)"));
+                                self.last_client_final.clone().expect("checked")
+                            }
+                            Some(_) => {
+                                // WrongProof — also the fallback for a
+                                // Replay with nothing to replay yet.
+                                self.trace(format!("client {c}: hostile auth (wrong proof)"));
+                                match hs.respond(&challenge, "not-the-password") {
+                                    Ok((msg, _)) => msg.into_bytes(),
+                                    Err(_) => {
+                                        self.client_disconnect(c, "bad server challenge");
+                                        return;
+                                    }
+                                }
+                            }
+                            None => {
+                                let password = self.clients[c].password.clone();
+                                match hs.respond(&challenge, &password) {
+                                    Ok((msg, sig)) => {
+                                        self.clients[c].expect_sig = Some(sig);
+                                        let bytes = msg.into_bytes();
+                                        self.last_client_final = Some(bytes.clone());
+                                        bytes
+                                    }
+                                    Err(_) => {
+                                        self.client_disconnect(c, "bad server challenge");
+                                        return;
+                                    }
+                                }
+                            }
+                        };
+                        Request::AuthResponse { data }
+                    }
+                }
                 Op::Submit(j) => Request::Submit {
                     template: self.clients[c].jobs[j].template.to_string(),
                     reuse: true,
@@ -471,8 +602,15 @@ impl Sim {
         cl.chunks.clear();
         cl.awaiting = None;
         cl.batch_slots.clear();
+        cl.hs = None;
+        cl.challenge = None;
+        cl.expect_sig = None;
         let mut ops: VecDeque<Op> = VecDeque::new();
         ops.push_back(Op::Hello);
+        if cl.auth {
+            ops.push_back(Op::AuthFirst);
+            ops.push_back(Op::AuthFinal);
+        }
         if cl.batch {
             if cl.jobs.iter().any(|job| job.id.is_none() && job.end.is_none()) {
                 ops.push_back(Op::SubmitBatch);

@@ -16,7 +16,7 @@
 //! scheduled as future `Deliver` events.
 
 use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap};
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 
 use super::client::Client;
 use super::faults::{Decision, FaultCounts, FaultPlan, FaultProfile, DUP_NS, SLOW_CHUNK_NS};
@@ -39,6 +39,8 @@ pub(crate) const STREAM_STEAL: u64 = 1;
 pub(crate) const STREAM_FAULT: u64 = 2;
 pub(crate) const STREAM_INTERLEAVE: u64 = 3;
 pub(crate) const STREAM_SCHED: u64 = 4;
+/// Server-side SCRAM nonces. Client nonces use streams `1000 + idx`.
+pub(crate) const STREAM_AUTH: u64 = 5;
 
 /// Cooperatively-scheduled actors a `Wake` can target.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -116,6 +118,14 @@ pub(crate) struct Sim {
     pub log: Vec<String>,
     pub events_run: u64,
     pub reconnects: u64,
+    /// Authentication enabled for this run (`cfg.auth` or the `auth`
+    /// fault profile).
+    pub auth: bool,
+    /// Tenants that completed a SCRAM handshake — invariant 5's ledger.
+    pub authed: BTreeSet<u32>,
+    /// The last honest client-final sent by any client; the `Replay`
+    /// hostility resends it verbatim against a fresh server nonce.
+    pub last_client_final: Option<Vec<u8>>,
 }
 
 impl Sim {
@@ -125,6 +135,7 @@ impl Sim {
         profile: FaultProfile,
         reference: Option<&BTreeMap<String, usize>>,
     ) -> Self {
+        let auth = cfg.auth || profile == FaultProfile::Auth;
         Self {
             cfg: *cfg,
             seed,
@@ -134,13 +145,16 @@ impl Sim {
             fuzz: Rng::new(Rng::split(seed, STREAM_INTERLEAVE)),
             net: Net::default(),
             plan: FaultPlan::new(profile, Rng::split(seed, STREAM_FAULT)),
-            server: SimServer::new(cfg, seed),
-            clients: (0..cfg.clients).map(|c| Client::new(c, cfg)).collect(),
+            server: SimServer::new(cfg, seed, auth),
+            clients: (0..cfg.clients).map(|c| Client::new(c, cfg, seed, auth)).collect(),
             handlers: BTreeMap::new(),
             oracle: Oracle::new(reference),
             log: Vec::new(),
             events_run: 0,
             reconnects: 0,
+            auth,
+            authed: BTreeSet::new(),
+            last_client_final: None,
         }
     }
 
@@ -403,6 +417,19 @@ impl Sim {
                 ));
             }
         }
+        // Invariant 5: with authentication on, every accepted job must
+        // belong to a tenant that completed a SCRAM handshake — hostile
+        // clients must never smuggle work past the gate.
+        if self.auth {
+            for id in self.server.jobs.keys() {
+                let t = self.server.tenant_of.get(id).map(|t| t.0).unwrap_or(u32::MAX);
+                if !self.authed.contains(&t) {
+                    self.oracle.violations.push(format!(
+                        "invariant 5: job {id} belongs to tenant {t}, which never authenticated"
+                    ));
+                }
+            }
+        }
     }
 }
 
@@ -426,6 +453,7 @@ pub(crate) fn req_name(r: &Request) -> &'static str {
         Request::Metrics => "Metrics",
         Request::Subscribe { .. } => "Subscribe",
         Request::SubmitBatch { .. } => "SubmitBatch",
+        Request::AuthResponse { .. } => "AuthResponse",
         Request::Bye => "Bye",
     }
 }
@@ -441,6 +469,9 @@ pub(crate) fn resp_name(r: &Response) -> &'static str {
         Response::Chunk { .. } => "Chunk",
         Response::Event { .. } => "Event",
         Response::SubmittedBatch { .. } => "SubmittedBatch",
+        Response::AuthChallenge { .. } => "AuthChallenge",
+        Response::AuthOk { .. } => "AuthOk",
+        Response::AuthFail { .. } => "AuthFail",
         Response::Error { .. } => "Error",
     }
 }

@@ -51,10 +51,17 @@ pub enum FaultProfile {
     PartialFrame,
     /// Everything above, mixed.
     Chaos,
+    /// Hostile authentication: clients send wrong proofs, truncate the
+    /// handshake mid-exchange, or replay a stale client-final. The
+    /// network itself stays clean — the adversary is the peer, not the
+    /// wire — so frame-fault classes never fire under this profile.
+    Auth,
 }
 
-/// Every non-`None` profile, in the order CI sweeps them.
-pub const ALL_PROFILES: [FaultProfile; 8] = [
+/// Every non-`None` profile, in the order CI sweeps them. `Auth` is
+/// appended last so the pre-existing profiles' pinned seeds replay
+/// byte-identically.
+pub const ALL_PROFILES: [FaultProfile; 9] = [
     FaultProfile::Drop,
     FaultProfile::Dup,
     FaultProfile::Reorder,
@@ -63,6 +70,7 @@ pub const ALL_PROFILES: [FaultProfile; 8] = [
     FaultProfile::Partition,
     FaultProfile::PartialFrame,
     FaultProfile::Chaos,
+    FaultProfile::Auth,
 ];
 
 impl FaultProfile {
@@ -78,6 +86,7 @@ impl FaultProfile {
             "partition" => Self::Partition,
             "partial-frame" => Self::PartialFrame,
             "chaos" => Self::Chaos,
+            "auth" => Self::Auth,
             _ => return None,
         })
     }
@@ -93,6 +102,7 @@ impl FaultProfile {
             Self::Partition => "partition",
             Self::PartialFrame => "partial-frame",
             Self::Chaos => "chaos",
+            Self::Auth => "auth",
         }
     }
 }
@@ -107,6 +117,10 @@ pub struct FaultCounts {
     pub resets: u64,
     pub partitions: u64,
     pub partials: u64,
+    /// Hostile-auth acts (wrong proof, truncated handshake, replayed
+    /// client-final). Not a frame class: excluded from [`Self::classes`]
+    /// so chaos coverage accounting is unchanged.
+    pub auths: u64,
 }
 
 impl FaultCounts {
@@ -118,6 +132,7 @@ impl FaultCounts {
             + self.resets
             + self.partitions
             + self.partials
+            + self.auths
     }
 
     pub fn merge(&mut self, o: &FaultCounts) {
@@ -128,6 +143,7 @@ impl FaultCounts {
         self.resets += o.resets;
         self.partitions += o.partitions;
         self.partials += o.partials;
+        self.auths += o.auths;
     }
 
     /// `(class name, count)` pairs, for reporting.
@@ -155,6 +171,7 @@ impl FaultCounts {
             FaultProfile::Partition => self.partitions,
             FaultProfile::PartialFrame => self.partials,
             FaultProfile::Chaos => self.total(),
+            FaultProfile::Auth => self.auths,
         }
     }
 }
@@ -184,6 +201,23 @@ pub(crate) enum Decision {
 
 pub(crate) const CLEAN: Decision =
     Decision::Deliver { extra_ns: 0, chunks: 1, dup: false, fifo: true, tag: "ok" };
+
+/// A hostile act a simulated client commits during its SCRAM handshake
+/// (the [`FaultProfile::Auth`] profile). Every act must end with the
+/// server refusing: a `BadProof` that authenticates is an oracle
+/// violation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum AuthHostility {
+    /// Send a client-final whose proof was computed from a wrong
+    /// password.
+    WrongProof,
+    /// Abandon the handshake after client-first and issue a request
+    /// anyway (must answer `AuthRequired` under `--require-auth`).
+    Truncate,
+    /// Replay the previous successful client-final verbatim (the
+    /// server's fresh nonce must make it stale).
+    Replay,
+}
 
 /// Classes eligible for probabilistic/forced injection, in forced order.
 /// `PartialFrame` is appended last so the chaos force-at schedule of the
@@ -385,5 +419,32 @@ impl FaultPlan {
             }
         }
         CLEAN
+    }
+
+    /// Decide whether the next simulated handshake turns hostile, and
+    /// how. `None` outside the [`FaultProfile::Auth`] profile — and the
+    /// plan RNG is untouched then, so every other profile's pinned
+    /// seeds replay unchanged. Forced coverage: the first three acts
+    /// walk every hostility class in declaration order.
+    pub fn auth_hostility(&mut self) -> Option<AuthHostility> {
+        if self.profile != FaultProfile::Auth || self.budget == 0 {
+            return None;
+        }
+        let pick = match self.counts.auths {
+            0 => Some(AuthHostility::WrongProof),
+            1 => Some(AuthHostility::Truncate),
+            2 => Some(AuthHostility::Replay),
+            _ => match self.rng.below(1_000) {
+                x if x < 120 => Some(AuthHostility::WrongProof),
+                x if x < 200 => Some(AuthHostility::Truncate),
+                x if x < 280 => Some(AuthHostility::Replay),
+                _ => None,
+            },
+        };
+        if pick.is_some() {
+            self.counts.auths += 1;
+            self.budget = self.budget.saturating_sub(1);
+        }
+        pick
     }
 }

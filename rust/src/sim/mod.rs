@@ -28,7 +28,7 @@
 //! kernels are not run — the oracle's task-count invariants are
 //! structural, so they hold regardless).
 //!
-//! Per seed, the oracle asserts the four DST invariants:
+//! Per seed, the oracle asserts the five DST invariants:
 //! 1. every job the server accepted reaches a terminal status
 //!    (no lost jobs, no stuck clients, no livelock past the event budget);
 //! 2. per-job task counts match a fault-free reference run of the same
@@ -40,7 +40,11 @@
 //!    `tasks_run` in the [`ServerStats`](crate::server::ServerStats)
 //!    snapshot equal the same quantities recomputed from the job table,
 //!    and every slot, shard, worker and admission counter is quiescent at
-//!    the end.
+//!    the end;
+//! 5. when authentication is enabled, no accepted job belongs to a
+//!    tenant that never completed a SCRAM handshake — hostile clients
+//!    (wrong proofs, truncated handshakes, replayed finals: the `auth`
+//!    fault profile) must never smuggle work past the gate.
 //!
 //! Entry points: [`run_seed`] (one seed), [`run_sweep`] (a seed window —
 //! what the CI `dst-sweep` gate runs via `repro sim --seeds A..B`). See
@@ -86,6 +90,11 @@ pub struct SimConfig {
     /// Clients submit via one pipelined `SubmitBatch` frame instead of
     /// serial `Submit`s (exercises the reactor's batched admission path).
     pub batch: bool,
+    /// Serve with a tenant registry and `--require-auth`: every client
+    /// runs the real SCRAM-SHA-256 handshake (seeded nonces) before
+    /// submitting, and the oracle enforces invariant 5. The `auth`
+    /// fault profile forces this on regardless.
+    pub auth: bool,
 }
 
 fn small_setup(r: &Registry) {
@@ -128,6 +137,7 @@ impl SimConfig {
             template_for: small_template_for,
             max_events: 300_000,
             batch: false,
+            auth: false,
         }
     }
 
@@ -145,6 +155,7 @@ impl SimConfig {
             template_for: remote_template_for,
             max_events: 2_000_000,
             batch: false,
+            auth: true,
         }
     }
 
@@ -164,6 +175,7 @@ impl SimConfig {
             template_for: small_template_for,
             max_events: 600_000,
             batch: true,
+            auth: true,
         }
     }
 

@@ -19,13 +19,16 @@ use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::sync::{Arc, Mutex};
 
-use super::engine::{req_name, resp_name, ActorId, EvKind, Sim, STREAM_SCHED, STREAM_STEAL};
+use super::engine::{
+    req_name, resp_name, ActorId, EvKind, Sim, STREAM_AUTH, STREAM_SCHED, STREAM_STEAL,
+};
 use super::net::SERVER;
 use super::SimConfig;
 use crate::coordinator::{
     CostModel, ReadySink, ResId, SchedConfig, SimCtx, TaskId, TaskView,
 };
 use crate::server::admission::FairQueue;
+use crate::server::auth::{scram, AuthMode, QuotaConfig, TenantRecord, TenantRegistry};
 use crate::server::protocol::{JobId, JobReport, JobStatus, SubmitError, TenantId};
 use crate::server::registry::{JobGraph, Registry};
 use crate::server::shard::route_shard;
@@ -111,15 +114,35 @@ pub(crate) struct SimServer {
     /// job id → conn ids parked in `Wait` on it.
     pub waiters: BTreeMap<u64, Vec<usize>>,
     pub stats: ServerStats,
+    /// Tenant registry when the scenario authenticates: one record per
+    /// client (`t{c}`/`pw{c}`), derived with a deliberately low
+    /// iteration count — the sim exercises the protocol, not PBKDF2.
+    pub auth_registry: Option<TenantRegistry>,
+    /// Server-side SCRAM nonces, on their own child stream of the seed.
+    pub auth_rng: Rng,
 }
 
 impl SimServer {
-    pub fn new(cfg: &SimConfig, seed: u64) -> Self {
+    pub fn new(cfg: &SimConfig, seed: u64, auth: bool) -> Self {
         let sched_cfg =
             SchedConfig::new(cfg.workers).with_seed(Rng::split(seed, STREAM_SCHED));
         let registry = Registry::new(sched_cfg, cfg.max_pool);
         (cfg.setup)(&registry);
         let steal_root = Rng::split(seed, STREAM_STEAL);
+        let auth_registry = auth.then(|| {
+            let mut reg = TenantRegistry::new();
+            for c in 0..cfg.clients {
+                reg.insert(TenantRecord::derive(
+                    &format!("t{c}"),
+                    TenantId(c as u32),
+                    &format!("pw{c}"),
+                    format!("sim-salt-{c}").as_bytes(),
+                    16,
+                    QuotaConfig::default(),
+                ));
+            }
+            reg
+        });
         Self {
             registry,
             admission: FairQueue::new(cfg.max_inflight),
@@ -135,6 +158,8 @@ impl SimServer {
                 .collect(),
             waiters: BTreeMap::new(),
             stats: ServerStats::new(),
+            auth_registry,
+            auth_rng: Rng::new(Rng::split(seed, STREAM_AUTH)),
         }
     }
 }
@@ -219,6 +244,43 @@ impl ConnService for SimSvc<'_> {
     fn idempotent_hello(&mut self) -> bool {
         // The fault plan can duplicate the handshake frame.
         true
+    }
+
+    fn auth_mode(&mut self) -> AuthMode {
+        if self.sim.auth {
+            AuthMode::Required
+        } else {
+            AuthMode::Off
+        }
+    }
+
+    fn auth_lookup(&mut self, user: &str) -> Option<TenantRecord> {
+        self.sim
+            .server
+            .auth_registry
+            .as_ref()
+            .and_then(|reg| reg.lookup(user).cloned())
+    }
+
+    fn auth_nonce(&mut self) -> String {
+        // Deterministic nonce bytes from the auth stream — never the OS
+        // entropy pool, which would break seed replay.
+        let mut bytes = [0u8; scram::NONCE_LEN];
+        for b in bytes.iter_mut() {
+            *b = (self.sim.server.auth_rng.next_u64() & 0xff) as u8;
+        }
+        scram::nonce_text(&bytes)
+    }
+
+    fn on_auth_ok(&mut self, tenant: TenantId) {
+        let conn = self.conn;
+        self.sim.authed.insert(tenant.0);
+        self.sim.trace(format!("conn {conn}: authenticated tenant {}", tenant.0));
+    }
+
+    fn on_auth_failure(&mut self) {
+        let conn = self.conn;
+        self.sim.trace(format!("conn {conn}: auth failure"));
     }
 
     fn on_request(&mut self, req: &Request) {

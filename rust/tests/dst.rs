@@ -9,7 +9,8 @@
 //! * Coverage: pinned hostile seeds inject every fault class at least
 //!   once (forced injection makes this hold by construction, so these
 //!   are regression pins, not flaky probes), and the seeds pass the
-//!   four oracle invariants.
+//!   five oracle invariants — including invariant 5, that no job ever
+//!   belongs to a tenant that did not complete a SCRAM handshake.
 //! * The `wait_slice` satellite: the config knob replaces the
 //!   hardcoded wait-loop slice and clamps to a sane floor.
 
@@ -124,6 +125,7 @@ fn pinned_hostile_seeds_per_fault_class() {
         (FaultProfile::Partition, 5),
         (FaultProfile::PartialFrame, 23),
         (FaultProfile::Chaos, 17),
+        (FaultProfile::Auth, 29),
     ] {
         let outcome = run_seed(&cfg, seed, profile, None);
         assert!(
@@ -223,6 +225,36 @@ fn partial_frame_sweep_reassembles_torn_frames() {
     );
     assert_eq!(report.passed, 16);
     assert!(report.faults.for_profile(FaultProfile::PartialFrame) > 0);
+}
+
+/// Satellite: the auth fault profile. Sim clients run real
+/// SCRAM-SHA-256 handshakes against the sim server (seeded nonce
+/// streams on both sides), while the plan injects wrong proofs,
+/// truncated handshakes (a pre-auth request probe), and replayed
+/// client-finals. Every seed must hold invariant 5 — no job belongs to
+/// a tenant that never authenticated, and every `AuthOk` carried a
+/// valid server signature. The remote scenario drives serial
+/// authenticated submitters; the reactor scenario authenticates before
+/// its pipelined `SubmitBatch` path.
+#[test]
+fn auth_profile_survives_hostile_handshakes() {
+    for (name, cfg) in [
+        ("remote", SimConfig::remote_scenario()),
+        ("reactor", SimConfig::reactor_scenario()),
+    ] {
+        let report = run_sweep(&cfg, 0, 12, FaultProfile::Auth);
+        assert!(
+            report.ok(),
+            "{name} scenario under auth: failing seeds {:?}; first log:\n{}",
+            report.failing_seeds(),
+            report.failures.first().map(|o| o.log_text()).unwrap_or_default()
+        );
+        assert_eq!(report.passed, 12);
+        assert!(
+            report.faults.for_profile(FaultProfile::Auth) > 0,
+            "{name} scenario injected no hostile auth act over the window"
+        );
+    }
 }
 
 /// Satellite: the blocking-`Wait` re-check slice is a config knob with

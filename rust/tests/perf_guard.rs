@@ -140,6 +140,38 @@ fn per_connection_memory_stays_bounded() {
     assert!(post >= idle, "post-burst footprint below idle baseline?");
 }
 
+/// Tentpole guard: per-tenant quota accounting sits on the submit hot
+/// path, so one `check_submit` + `note_admitted` + `note_settled`
+/// round trip must stay at hash-map-lookup cost — nanoseconds to low
+/// microseconds, not milliseconds — even with 64 installed tenants.
+/// The generous ceiling only trips on a complexity bug (e.g. a scan
+/// over all tenants or all in-flight jobs per admission).
+#[test]
+fn quota_book_admission_cost_bounded() {
+    use quicksched::server::auth::{QuotaBook, QuotaConfig};
+    use quicksched::server::TenantId;
+    let book = QuotaBook::new();
+    for t in 0..64 {
+        let cfg = QuotaConfig { rate: 1_000_000, burst: 1_000, max_inflight: 1_000 };
+        book.install(TenantId(t), cfg, 0);
+    }
+    let iters: u64 = if cfg!(debug_assertions) { 50_000 } else { 200_000 };
+    let t0 = std::time::Instant::now();
+    let mut now_ns = 0u64;
+    for i in 0..iters {
+        // 10 µs virtual ticks: at 1M tokens/s every tenant's bucket
+        // refills far faster than this loop drains it.
+        now_ns += 10_000;
+        let tenant = TenantId((i % 64) as u32);
+        book.check_submit(tenant, now_ns).expect("bucket stays topped up");
+        book.note_admitted(tenant, i);
+        book.note_settled(i);
+    }
+    let ns_per_op = t0.elapsed().as_nanos() as f64 / iters as f64;
+    eprintln!("quota book: {ns_per_op:.0} ns per admit/settle round trip");
+    assert!(ns_per_op < 50_000.0, "quota accounting regressed: {ns_per_op:.0} ns/op");
+}
+
 /// Same contention shape through the real threaded executor.
 #[test]
 fn pathological_contention_threaded() {

@@ -1,0 +1,251 @@
+//! Property tests for the auth subsystem (100 seeds, crate-own PRNG —
+//! no proptest in the offline registry): the full SCRAM-SHA-256
+//! client/server handshake authenticates exactly when the credentials
+//! match; wrong passwords, tampered nonces, and garbage messages fail
+//! cleanly (never a panic, never an authentication); minted
+//! `tenants.conf` lines round-trip through the registry parser; and the
+//! token bucket never admits above rate x time + burst under an
+//! adversarial clock, nor past the in-flight cap under any
+//! admit/settle interleaving.
+
+use quicksched::server::auth::scram::{
+    self, parse_client_first, ClientHandshake, ScramError, ServerHandshake,
+};
+use quicksched::server::auth::{QuotaBook, QuotaConfig, TenantRecord, TenantRegistry};
+use quicksched::server::TenantId;
+use quicksched::util::rng::Rng;
+
+const SEEDS: u64 = 100;
+
+fn rand_user(rng: &mut Rng) -> String {
+    (0..1 + rng.index(12)).map(|_| (b'a' + rng.index(26) as u8) as char).collect()
+}
+
+/// Printable ASCII password, `!`..`z` (passwords are free-form; only
+/// usernames and nonces carry SCRAM character restrictions).
+fn rand_password(rng: &mut Rng) -> String {
+    (0..1 + rng.index(24)).map(|_| (b'!' + rng.index(90) as u8) as char).collect()
+}
+
+fn rand_nonce(rng: &mut Rng) -> String {
+    let mut bytes = [0u8; scram::NONCE_LEN];
+    for b in bytes.iter_mut() {
+        *b = rng.below(256) as u8;
+    }
+    scram::nonce_text(&bytes)
+}
+
+fn rand_salt(rng: &mut Rng) -> Vec<u8> {
+    (0..8 + rng.index(17)).map(|_| rng.below(256) as u8).collect()
+}
+
+/// Low PBKDF2 iteration counts keep 100 seeds fast in debug builds;
+/// the RFC vectors in `auth::crypto` pin the real iterated path.
+fn rand_record(rng: &mut Rng, user: &str, password: &str) -> TenantRecord {
+    TenantRecord::derive(
+        user,
+        TenantId(rng.next_u64() as u32),
+        password,
+        &rand_salt(rng),
+        1 + rng.below(32) as u32,
+        QuotaConfig::default(),
+    )
+}
+
+/// Drive one complete four-leg handshake (client-first → server-first →
+/// client-final → server-final) with fresh nonces on both sides.
+fn handshake(
+    record: &TenantRecord,
+    user: &str,
+    password: &str,
+    rng: &mut Rng,
+) -> Result<(), ScramError> {
+    let client = ClientHandshake::new(user, rand_nonce(rng));
+    let first = parse_client_first(client.client_first().as_bytes())?;
+    let (server, server_first) = ServerHandshake::start(
+        &first,
+        &record.salt,
+        record.iterations,
+        record.stored_key,
+        record.server_key,
+        &rand_nonce(rng),
+    );
+    let (client_final, expect_sig) = client.respond(server_first.as_bytes(), password)?;
+    let server_final = server.verify_client_final(client_final.as_bytes())?;
+    scram::verify_server_final(server_final.as_bytes(), &expect_sig)
+}
+
+#[test]
+fn matching_credentials_always_authenticate() {
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed ^ 0xA07);
+        let user = rand_user(&mut rng);
+        let password = rand_password(&mut rng);
+        let record = rand_record(&mut rng, &user, &password);
+        assert_eq!(handshake(&record, &user, &password, &mut rng), Ok(()), "seed {seed}");
+    }
+}
+
+#[test]
+fn wrong_password_never_authenticates() {
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed ^ 0xBAD);
+        let user = rand_user(&mut rng);
+        let password = rand_password(&mut rng);
+        let record = rand_record(&mut rng, &user, &password);
+        // Suffixing guarantees inequality even against a random guess.
+        let wrong = format!("{password}x");
+        assert!(
+            handshake(&record, &user, &wrong, &mut rng).is_err(),
+            "seed {seed}: wrong password authenticated"
+        );
+    }
+}
+
+#[test]
+fn tampered_nonces_and_garbage_always_fail_without_panic() {
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed ^ 0x7A3);
+        let user = rand_user(&mut rng);
+        let password = rand_password(&mut rng);
+        let record = rand_record(&mut rng, &user, &password);
+        let client = ClientHandshake::new(&user, rand_nonce(&mut rng));
+        let first = parse_client_first(client.client_first().as_bytes()).unwrap();
+        let (server, server_first) = ServerHandshake::start(
+            &first,
+            &record.salt,
+            record.iterations,
+            record.stored_key,
+            record.server_key,
+            &rand_nonce(&mut rng),
+        );
+
+        // (a) A challenge whose combined nonce does not extend the
+        // client's own must be rejected by the client.
+        let tampered = server_first.replacen("r=", "r=!", 1);
+        assert!(
+            client.respond(tampered.as_bytes(), &password).is_err(),
+            "seed {seed}: tampered challenge nonce accepted"
+        );
+
+        // (b) A client-final with one corrupted byte must never verify.
+        // (The corruption lands before the base64 tail, where a flipped
+        // bit is guaranteed to change the decoded proof or the nonce.)
+        let (client_final, _) = client.respond(server_first.as_bytes(), &password).unwrap();
+        let mut bytes = client_final.into_bytes();
+        let i = rng.index(bytes.len() - 4);
+        bytes[i] ^= (1 + rng.below(255)) as u8;
+        assert!(
+            server.verify_client_final(&bytes).is_err(),
+            "seed {seed}: corrupted client-final verified"
+        );
+
+        // (c) Pure garbage into every entry point: clean errors only.
+        let garbage: Vec<u8> = (0..rng.index(80)).map(|_| rng.below(256) as u8).collect();
+        let _ = parse_client_first(&garbage);
+        assert!(server.verify_client_final(&garbage).is_err(), "seed {seed}");
+        assert!(client.respond(&garbage, &password).is_err(), "seed {seed}");
+        assert!(scram::verify_server_final(&garbage, &[0u8; 32]).is_err(), "seed {seed}");
+    }
+}
+
+#[test]
+fn minted_registry_lines_roundtrip() {
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed ^ 0x11E);
+        let mut text = String::from("# comment\n\n");
+        let mut records = Vec::new();
+        for i in 0..1 + rng.index(4) {
+            let user = format!("{}{i}", rand_user(&mut rng)); // unique per line
+            let rec = TenantRecord::derive(
+                &user,
+                TenantId(rng.next_u64() as u32),
+                &rand_password(&mut rng),
+                &rand_salt(&mut rng),
+                1 + rng.below(64) as u32,
+                QuotaConfig {
+                    rate: rng.below(1_000) as u32,
+                    burst: rng.below(100) as u32,
+                    max_inflight: rng.below(50) as u32,
+                },
+            );
+            text.push_str(&rec.to_line());
+            text.push('\n');
+            records.push(rec);
+        }
+        let reg = TenantRegistry::parse(&text).expect("minted lines parse");
+        for rec in &records {
+            assert_eq!(reg.lookup(&rec.user), Some(rec), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn token_bucket_never_admits_above_rate_plus_burst() {
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed ^ 0x7B);
+        let rate = 1 + rng.below(50) as u32;
+        let burst = 1 + rng.below(20) as u32;
+        let book = QuotaBook::new();
+        let tenant = TenantId(1);
+        book.install(tenant, QuotaConfig { rate, burst, max_inflight: 0 }, 0);
+        let mut now_ns = 0u64;
+        let mut admitted = 0u64;
+        for _ in 0..400 {
+            // Adversarial clock: zero-delta retry storms mixed with
+            // jumps from sub-millisecond to seconds.
+            now_ns += match rng.index(4) {
+                0 => 0,
+                1 => rng.below(1_000_000),
+                2 => rng.below(100_000_000),
+                _ => rng.below(3_000_000_000),
+            };
+            if book.check_submit(tenant, now_ns).is_ok() {
+                admitted += 1;
+            }
+        }
+        // Initial burst capacity plus the refill credit for the full
+        // elapsed window (+1 for the partially refilled token).
+        let ceiling = burst as u64 + (rate as u64 * now_ns) / 1_000_000_000 + 1;
+        assert!(
+            admitted <= ceiling,
+            "seed {seed}: admitted {admitted} > ceiling {ceiling} (rate {rate} burst {burst})"
+        );
+    }
+}
+
+#[test]
+fn inflight_cap_never_exceeded() {
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed ^ 0x1F);
+        let cap = 1 + rng.below(8) as u32;
+        let book = QuotaBook::new();
+        let tenant = TenantId(2);
+        book.install(tenant, QuotaConfig { rate: 0, burst: 0, max_inflight: cap }, 0);
+        let mut inflight: Vec<u64> = Vec::new();
+        let mut next_job = 1u64;
+        for _ in 0..300 {
+            if rng.chance(0.6) {
+                match book.check_submit(tenant, 0) {
+                    Ok(()) => {
+                        book.note_admitted(tenant, next_job);
+                        inflight.push(next_job);
+                        next_job += 1;
+                        assert!(
+                            inflight.len() as u32 <= cap,
+                            "seed {seed}: {} in flight past cap {cap}",
+                            inflight.len()
+                        );
+                    }
+                    Err(_) => assert!(
+                        inflight.len() as u32 >= cap,
+                        "seed {seed}: rejected below the cap"
+                    ),
+                }
+            } else if !inflight.is_empty() {
+                let i = rng.index(inflight.len());
+                book.note_settled(inflight.swap_remove(i));
+            }
+        }
+    }
+}

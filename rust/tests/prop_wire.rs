@@ -26,6 +26,8 @@ fn rand_code(rng: &mut Rng) -> ErrorCode {
         ErrorCode::VersionMismatch,
         ErrorCode::ShuttingDown,
         ErrorCode::Internal,
+        ErrorCode::RateLimited,
+        ErrorCode::AuthRequired,
     ];
     codes[rng.index(codes.len())]
 }
@@ -50,7 +52,7 @@ fn rand_bytes(rng: &mut Rng, max_len: usize) -> Vec<u8> {
 }
 
 fn rand_request(rng: &mut Rng) -> Request {
-    match rng.index(10) {
+    match rng.index(11) {
         0 => Request::Hello {
             version: rng.next_u64() as u32,
             tenant: rng.next_u64() as u32,
@@ -67,6 +69,7 @@ fn rand_request(rng: &mut Rng) -> Request {
         6 => Request::Metrics,
         7 => Request::Bye,
         8 => Request::Subscribe { job: rng.next_u64() },
+        9 => Request::AuthResponse { data: rand_bytes(rng, 96) },
         _ => Request::SubmitBatch {
             items: (0..rng.index(5))
                 .map(|_| BatchItem {
@@ -101,7 +104,7 @@ fn rand_status(rng: &mut Rng) -> WireStatus {
 }
 
 fn rand_response(rng: &mut Rng) -> Response {
-    match rng.index(10) {
+    match rng.index(13) {
         0 => Response::HelloOk {
             version: rng.next_u64() as u32,
             tenant: rng.next_u64() as u32,
@@ -118,6 +121,9 @@ fn rand_response(rng: &mut Rng) -> Response {
             message: rand_string(rng, 80),
         },
         8 => Response::Event { job: rng.next_u64(), status: rand_status(rng) },
+        9 => Response::AuthChallenge { data: rand_bytes(rng, 96) },
+        10 => Response::AuthOk { tenant: rng.next_u64() as u32, data: rand_bytes(rng, 64) },
+        11 => Response::AuthFail { message: rand_string(rng, 60) },
         _ => Response::SubmittedBatch {
             results: (0..rng.index(5))
                 .map(|_| {

@@ -14,6 +14,9 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use quicksched::client::{RemoteClient, RemoteError};
+use quicksched::server::auth::crypto::entropy_fill;
+use quicksched::server::auth::scram::{self, ClientHandshake};
+use quicksched::server::auth::{AuthGate, QuotaConfig, TenantRecord, TenantRegistry};
 use quicksched::server::{
     gated_template, nbody_template, qr_template, synthetic_param_template, JobId, JobSpec,
     JobStatus, ListenAddr, SchedServer, ServerConfig, SubmitError, TenantId, WireListener,
@@ -424,6 +427,265 @@ fn unix_domain_socket_roundtrip() {
     assert!(!path.exists(), "socket file removed on shutdown");
     drop(server);
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Start a listener whose connections must authenticate: the given
+/// records form the whole tenant registry, `require_auth` is on.
+fn start_auth_listening(
+    config: ServerConfig,
+    records: Vec<TenantRecord>,
+) -> (Arc<SchedServer>, WireListener) {
+    let server = SchedServer::start(config);
+    paper_templates(&server);
+    let server = Arc::new(server);
+    let mut registry = TenantRegistry::new();
+    for r in records {
+        registry.insert(r);
+    }
+    let listener = WireListener::start_with_auth(
+        Arc::clone(&server),
+        &ListenAddr::parse("127.0.0.1:0"),
+        8,
+        WireMode::Auto,
+        Some(AuthGate::new(registry, true)),
+    )
+    .expect("binding authenticated listener");
+    (server, listener)
+}
+
+/// Low PBKDF2 iteration counts keep the handshakes fast in debug
+/// builds; the RFC vectors in `auth::crypto` pin the iterated path.
+fn record(user: &str, tenant: u32, password: &str, quota: QuotaConfig) -> TenantRecord {
+    TenantRecord::derive(user, TenantId(tenant), password, b"remote-test-salt", 32, quota)
+}
+
+/// Tentpole acceptance: with `--require-auth`, a connection without
+/// credentials can say Hello but nothing else — submit, poll, and
+/// subscribe all bounce with an auth error — and a wrong password or
+/// unknown user gets the same uniform rejection. The right credential
+/// authenticates, and the session runs under the *registry* tenant,
+/// regardless of the tenant claimed in Hello.
+#[test]
+fn require_auth_blocks_anonymous_and_wrong_credential_requests() {
+    let (server, listener) = start_auth_listening(
+        ServerConfig::new(2).with_seed(41),
+        vec![record("alice", 7, "open-sesame", QuotaConfig::default())],
+    );
+    let addr = listener.local_addr();
+
+    // Anonymous Hello succeeds (version negotiation needs no secret),
+    // but every subsequent request is refused and the conn closed — so
+    // each probe gets its own connection.
+    let mut anon = RemoteClient::connect(addr, TenantId(7)).unwrap();
+    assert!(matches!(anon.submit("qr"), Err(RemoteError::Auth(_))));
+    let mut anon = RemoteClient::connect(addr, TenantId(7)).unwrap();
+    assert!(matches!(anon.poll(JobId(1)), Err(RemoteError::Auth(_))));
+    let mut anon = RemoteClient::connect(addr, TenantId(7)).unwrap();
+    assert!(matches!(anon.subscribe(JobId(1)), Err(RemoteError::Auth(_))));
+
+    // Wrong password and unknown user: one uniform failure.
+    match RemoteClient::connect_auth(addr, "alice", "wrong-password") {
+        Err(RemoteError::Auth(_)) => {}
+        Err(other) => panic!("expected Auth error, got {other:?}"),
+        Ok(_) => panic!("wrong password authenticated"),
+    }
+    match RemoteClient::connect_auth(addr, "mallory", "open-sesame") {
+        Err(RemoteError::Auth(_)) => {}
+        Err(other) => panic!("expected Auth error, got {other:?}"),
+        Ok(_) => panic!("unknown user authenticated"),
+    }
+
+    // The real credential works, and the job is attributed to the
+    // registry's tenant 7 — the Hello claim (0) is ignored.
+    let mut client = RemoteClient::connect_auth(addr, "alice", "open-sesame").unwrap();
+    let id = client.submit("qr").unwrap();
+    match client.wait(id).unwrap() {
+        JobStatus::Done(r) => assert_eq!(r.tenant, TenantId(7), "registry tenant wins"),
+        other => panic!("authenticated job ended as {other:?}"),
+    }
+    client.bye().unwrap();
+    listener.shutdown();
+    drop(server);
+}
+
+/// Tentpole acceptance: a tenant that exhausts its token bucket gets a
+/// *retryable* `RateLimited` with a positive retry hint — on the same
+/// still-open connection — while an unthrottled tenant on the same
+/// server is completely unaffected.
+#[test]
+fn rate_limited_tenant_gets_retryable_error_while_others_run() {
+    let (server, listener) = start_auth_listening(
+        ServerConfig::new(2).with_seed(43),
+        vec![
+            record("slow", 1, "pw-slow", QuotaConfig { rate: 1, burst: 1, max_inflight: 0 }),
+            record("fast", 2, "pw-fast", QuotaConfig::default()),
+        ],
+    );
+    let addr = listener.local_addr();
+    let mut slow = RemoteClient::connect_auth(addr, "slow", "pw-slow").unwrap();
+    let mut fast = RemoteClient::connect_auth(addr, "fast", "pw-fast").unwrap();
+
+    // The burst token admits one job; at 1 token/s, rapid follow-ups
+    // must hit the empty bucket (5 tries tolerate a scheduler stall
+    // refilling a token mid-loop).
+    let mut admitted = vec![slow.submit("qr").unwrap()];
+    let mut limited = None;
+    for _ in 0..5 {
+        match slow.submit("qr") {
+            Ok(id) => admitted.push(id),
+            Err(RemoteError::Rejected(SubmitError::RateLimited { retry_ms, tenant })) => {
+                assert_eq!(tenant, TenantId(1));
+                limited = Some(retry_ms);
+                break;
+            }
+            Err(other) => panic!("expected RateLimited, got {other:?}"),
+        }
+    }
+    let retry_ms = limited.expect("an empty bucket never rejected");
+    assert!(retry_ms > 0, "retry hint must tell the client how long to back off");
+
+    // The unthrottled tenant is unaffected by its neighbour's limit.
+    for _ in 0..4 {
+        let id = fast.submit("qr").unwrap();
+        assert!(matches!(fast.wait(id).unwrap(), JobStatus::Done(_)));
+    }
+    // Retryable means the throttled connection stayed open and its
+    // admitted work completes normally.
+    for id in admitted {
+        assert!(matches!(slow.wait(id).unwrap(), JobStatus::Done(_)));
+    }
+    listener.shutdown();
+    drop(server);
+}
+
+/// Complete the SCRAM handshake over a raw socket; returns the bound
+/// tenant and the verbatim client-final bytes (for replay probes).
+fn raw_authenticate(s: &mut std::net::TcpStream, user: &str, password: &str) -> (u32, Vec<u8>) {
+    use quicksched::server::wire::codec::{read_frame, write_frame, Request, Response};
+    let mut nonce = [0u8; scram::NONCE_LEN];
+    entropy_fill(&mut nonce);
+    let hs = ClientHandshake::new(user, scram::nonce_text(&nonce));
+    write_frame(s, &Request::AuthResponse { data: hs.client_first().into_bytes() }.encode())
+        .unwrap();
+    let challenge = match Response::decode(&read_frame(s).unwrap()).unwrap() {
+        Response::AuthChallenge { data } => data,
+        other => panic!("expected AuthChallenge, got {other:?}"),
+    };
+    let (client_final, expect_sig) = hs.respond(&challenge, password).unwrap();
+    let final_bytes = client_final.into_bytes();
+    write_frame(s, &Request::AuthResponse { data: final_bytes.clone() }.encode()).unwrap();
+    match Response::decode(&read_frame(s).unwrap()).unwrap() {
+        Response::AuthOk { tenant, data } => {
+            scram::verify_server_final(&data, &expect_sig).expect("server signature");
+            (tenant, final_bytes)
+        }
+        other => panic!("expected AuthOk, got {other:?}"),
+    }
+}
+
+/// Satellite fix, over the wire: replaying the (verbatim, once-valid)
+/// client-final after AuthOk, or sending a second Hello on an
+/// authenticated connection, is a `BadRequest` — never a second
+/// authentication or a tenant rebind.
+#[test]
+fn auth_replay_and_post_auth_hello_are_rejected() {
+    use quicksched::server::wire::codec::{
+        read_frame, write_frame, ErrorCode, Request, Response, WIRE_VERSION,
+    };
+    let (server, listener) = start_auth_listening(
+        ServerConfig::new(1).with_seed(47),
+        vec![record("alice", 7, "open-sesame", QuotaConfig::default())],
+    );
+    let hello = Request::Hello { version: WIRE_VERSION, tenant: 0 };
+
+    // Replayed AuthResponse after AuthOk.
+    let mut s = std::net::TcpStream::connect(listener.local_addr()).unwrap();
+    write_frame(&mut s, &hello.encode()).unwrap();
+    assert!(matches!(
+        Response::decode(&read_frame(&mut s).unwrap()).unwrap(),
+        Response::HelloOk { .. }
+    ));
+    let (tenant, final_bytes) = raw_authenticate(&mut s, "alice", "open-sesame");
+    assert_eq!(tenant, 7);
+    write_frame(&mut s, &Request::AuthResponse { data: final_bytes }.encode()).unwrap();
+    match Response::decode(&read_frame(&mut s).unwrap()).unwrap() {
+        Response::Error { code: ErrorCode::BadRequest, .. } => {}
+        other => panic!("expected BadRequest on replayed AuthResponse, got {other:?}"),
+    }
+
+    // Second Hello after the handshake completed.
+    let mut s = std::net::TcpStream::connect(listener.local_addr()).unwrap();
+    write_frame(&mut s, &hello.encode()).unwrap();
+    assert!(matches!(
+        Response::decode(&read_frame(&mut s).unwrap()).unwrap(),
+        Response::HelloOk { .. }
+    ));
+    raw_authenticate(&mut s, "alice", "open-sesame");
+    write_frame(&mut s, &hello.encode()).unwrap();
+    match Response::decode(&read_frame(&mut s).unwrap()).unwrap() {
+        Response::Error { code: ErrorCode::BadRequest, .. } => {}
+        other => panic!("expected BadRequest on post-auth Hello, got {other:?}"),
+    }
+
+    listener.shutdown();
+    drop(server);
+}
+
+/// Satellite: the idle timeout reaps a byte-silent connection on both
+/// front-ends and counts it in `quicksched_conns_idle_closed_total` —
+/// but a connection with parked work (a blocked `Wait`), byte-silent
+/// far longer than the window, survives untouched.
+#[test]
+fn idle_timeout_reaps_silent_connections_but_not_parked_waits() {
+    for mode in [WireMode::Auto, WireMode::Threaded] {
+        let server = SchedServer::start(
+            ServerConfig::new(1)
+                .with_seed(53)
+                .with_idle_timeout(Duration::from_millis(300)),
+        );
+        let gate = Arc::new(AtomicBool::new(false));
+        server.register_template("gated", gated_template(Arc::clone(&gate)));
+        let server = Arc::new(server);
+        let listener = WireListener::start_with(
+            Arc::clone(&server),
+            &ListenAddr::parse("127.0.0.1:0"),
+            8,
+            mode,
+        )
+        .unwrap();
+        let addr = listener.local_addr().to_string();
+
+        let status = std::thread::scope(|scope| {
+            // One connection parks a Wait behind the gated job and goes
+            // byte-silent for well over the idle window.
+            let parked = scope.spawn(|| {
+                let mut client = RemoteClient::connect(&addr, TenantId(0)).unwrap();
+                let id = client.submit("gated").unwrap();
+                client.wait(id).unwrap()
+            });
+
+            // Another connection just sits there; it must be reaped
+            // within a few idle windows and counted.
+            let mut idle = RemoteClient::connect(&addr, TenantId(1)).unwrap();
+            let deadline = std::time::Instant::now() + Duration::from_secs(10);
+            while counter_value(&listener.metrics_text(), "quicksched_conns_idle_closed_total")
+                == 0
+            {
+                assert!(std::time::Instant::now() < deadline, "idle conn never reaped");
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            assert!(idle.stats_json().is_err(), "reaped socket still answered");
+
+            // Hold the parked Wait silent past several more windows,
+            // then release: it must still complete.
+            std::thread::sleep(Duration::from_millis(700));
+            gate.store(true, Ordering::Release);
+            parked.join().unwrap()
+        });
+        assert!(matches!(status, JobStatus::Done(_)), "parked wait ended as {status:?}");
+        listener.shutdown();
+        drop(server);
+    }
 }
 
 /// Protocol-level rejections: wrong version and submit-before-Hello
