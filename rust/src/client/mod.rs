@@ -14,6 +14,15 @@
 //! caller can switch between local and remote submission without
 //! changing its error handling.
 //!
+//! **Reliability:** the `_reliable` calls ([`RemoteClient::submit_reliable`],
+//! [`RemoteClient::wait_reliable`]) survive connection resets and
+//! retryable rejections transparently: capped exponential backoff with
+//! deterministic seeded jitter ([`RetryPolicy`]), reconnect + re-auth
+//! with the stored credentials, and replay under an **idempotency key**
+//! so a retried submission that already landed returns the original
+//! job's id instead of admitting a duplicate — observable exactly-once
+//! on top of an at-least-once transport.
+//!
 //! ```
 //! use quicksched::client::RemoteClient;
 //! use quicksched::server::{
@@ -42,8 +51,10 @@ use std::io::{self, Read, Write};
 use std::net::TcpStream;
 #[cfg(unix)]
 use std::os::unix::net::UnixStream;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::Payload;
+use crate::util::rng::Rng;
 use crate::server::auth::crypto::entropy_fill;
 use crate::server::auth::scram::{self, ClientHandshake};
 use crate::server::wire::codec::{
@@ -125,6 +136,54 @@ impl Write for ClientStream {
     }
 }
 
+/// Backoff/retry parameters for the `_reliable` client calls.
+///
+/// Delays follow a capped exponential ladder with **full jitter**: the
+/// attempt-`n` delay is drawn uniformly from `[base, min(base·2ⁿ,
+/// cap)]` on a deterministic [`Rng`] stream derived from `seed` via
+/// [`Rng::split`] — two clients with the same seed back off
+/// identically, which is what lets the property tests (and the DST
+/// harness) assert the ladder instead of sampling it. `budget` bounds
+/// the total time spent retrying one operation; once the next delay
+/// would overrun it, the last error is returned as-is.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Floor of every delay and the attempt-0 ceiling.
+    pub base: Duration,
+    /// Ceiling the exponential ladder saturates at.
+    pub cap: Duration,
+    /// Total retry budget per operation (elapsed + next delay ≤ budget).
+    pub budget: Duration,
+    /// Root seed for the jitter stream (split per tenant).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            base: Duration::from_millis(10),
+            cap: Duration::from_secs(2),
+            budget: Duration::from_secs(30),
+            seed: 0xC11E_57AB,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The delay before retry number `attempt` (0-based), jittered on
+    /// `rng`. Always within `[base, cap]`.
+    pub fn delay(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let base = (self.base.as_nanos() as u64).max(1);
+        let cap = (self.cap.as_nanos() as u64).max(base);
+        let ceil = base
+            .saturating_mul(1u64.checked_shl(attempt.min(63)).unwrap_or(u64::MAX))
+            .min(cap);
+        let span = ceil - base;
+        let jitter = if span == 0 { 0 } else { rng.below(span + 1) };
+        Duration::from_nanos(base + jitter)
+    }
+}
+
 /// Blocking client of a [`crate::server::WireListener`]. One
 /// connection, one tenant — clone-free and lock-free; use one client
 /// per thread for concurrent submission.
@@ -143,6 +202,20 @@ pub struct RemoteClient {
     tenant: TenantId,
     /// Server-pushed `Event` frames not yet handed to the caller.
     events: VecDeque<(u64, WireStatus)>,
+    /// The address connected to — kept so `_reliable` calls can
+    /// transparently reconnect after a reset.
+    addr: String,
+    /// Credentials from a successful [`RemoteClient::authenticate`],
+    /// replayed on reconnect so the healed connection keeps its tenant.
+    creds: Option<(String, String)>,
+    retry: RetryPolicy,
+    /// Jitter stream, split from `retry.seed` per tenant.
+    rng: Rng,
+    /// Random per-client prefix for generated idempotency keys, so two
+    /// client instances can never mint colliding keys.
+    key_nonce: u64,
+    /// Counter suffix for generated idempotency keys.
+    next_key: u64,
 }
 
 impl RemoteClient {
@@ -150,7 +223,20 @@ impl RemoteClient {
     /// the `Hello` handshake as `tenant`.
     pub fn connect(addr: &str, tenant: TenantId) -> Result<Self, RemoteError> {
         let stream = ClientStream::connect(addr)?;
-        let mut client = Self { stream, tenant, events: VecDeque::new() };
+        let retry = RetryPolicy::default();
+        let mut nonce = [0u8; 8];
+        entropy_fill(&mut nonce);
+        let mut client = Self {
+            stream,
+            tenant,
+            events: VecDeque::new(),
+            addr: addr.to_string(),
+            creds: None,
+            retry,
+            rng: Rng::new(Rng::split(retry.seed, tenant.0 as u64)),
+            key_nonce: u64::from_le_bytes(nonce),
+            next_key: 0,
+        };
         let hello = Request::Hello { version: WIRE_VERSION, tenant: tenant.0 };
         match client.roundtrip(&hello)? {
             Response::HelloOk { version, .. } if version == WIRE_VERSION => Ok(client),
@@ -159,6 +245,14 @@ impl RemoteClient {
             )),
             other => Err(client.fail(other)),
         }
+    }
+
+    /// Replace the retry policy (and reseed the jitter stream) for the
+    /// `_reliable` calls.
+    pub fn with_retry(mut self, policy: RetryPolicy) -> Self {
+        self.rng = Rng::new(Rng::split(policy.seed, self.tenant.0 as u64));
+        self.retry = policy;
+        self
     }
 
     /// [`RemoteClient::connect`] followed by a SCRAM-SHA-256 handshake
@@ -200,6 +294,9 @@ impl RemoteClient {
                 scram::verify_server_final(&data, &server_sig)
                     .map_err(|e| RemoteError::Auth(format!("server signature invalid: {e}")))?;
                 self.tenant = TenantId(tenant);
+                // Keep the credentials so a reliable-call reconnect can
+                // re-authenticate and recover the same tenant identity.
+                self.creds = Some((user.to_string(), password.to_string()));
                 Ok(())
             }
             other => Err(self.fail(other)),
@@ -239,11 +336,141 @@ impl RemoteClient {
         reuse: bool,
         args: &P,
     ) -> Result<JobId, RemoteError> {
-        let req = Request::Submit { template: template.into(), reuse, args: args.encode() };
+        self.submit_with(template, reuse, args, Vec::new(), None)
+    }
+
+    /// The fully general submission call: everything `submit_spec`
+    /// takes plus an idempotency key (empty = none; a replay carrying
+    /// the same key within the server's dedup TTL answers the original
+    /// job's id) and a relative deadline (`None` = run whenever).
+    pub fn submit_with<P: Payload>(
+        &mut self,
+        template: &str,
+        reuse: bool,
+        args: &P,
+        key: Vec<u8>,
+        deadline: Option<Duration>,
+    ) -> Result<JobId, RemoteError> {
+        let req = Request::Submit {
+            template: template.into(),
+            reuse,
+            args: args.encode(),
+            key,
+            deadline_ms: deadline.map(|d| d.as_millis() as u64).unwrap_or(0),
+        };
         match self.roundtrip(&req)? {
             Response::Submitted { job } => Ok(JobId(job)),
             other => Err(self.fail(other)),
         }
+    }
+
+    /// [`RemoteClient::submit`] that survives faults: the submission
+    /// carries a generated idempotency key and is retried under the
+    /// client's [`RetryPolicy`] across connection resets (transparent
+    /// reconnect + re-auth) and retryable rejections. The key makes the
+    /// retry safe: if the original submission landed before the
+    /// connection died, the replay returns that job's id — exactly-once
+    /// as observed by the caller.
+    pub fn submit_reliable(&mut self, template: &str) -> Result<JobId, RemoteError> {
+        self.submit_reliable_spec(template, &(), None)
+    }
+
+    /// [`RemoteClient::submit_reliable`] with typed arguments and an
+    /// optional relative deadline.
+    pub fn submit_reliable_spec<P: Payload>(
+        &mut self,
+        template: &str,
+        args: &P,
+        deadline: Option<Duration>,
+    ) -> Result<JobId, RemoteError> {
+        let key = self.fresh_key();
+        let args = args.encode();
+        let template = template.to_string();
+        self.run_reliable(|c| {
+            c.submit_with(&template, true, &args, key.clone(), deadline)
+        })
+    }
+
+    /// [`RemoteClient::wait`] that survives faults: retried under the
+    /// [`RetryPolicy`] with transparent reconnect. Safe to retry
+    /// unconditionally — `Wait` is a read.
+    pub fn wait_reliable(&mut self, id: JobId) -> Result<JobStatus, RemoteError> {
+        self.run_reliable(|c| c.wait(id))
+    }
+
+    /// Mint a fresh idempotency key: `<client nonce>-<counter>`, unique
+    /// per client instance and never reused.
+    fn fresh_key(&mut self) -> Vec<u8> {
+        let n = self.next_key;
+        self.next_key += 1;
+        format!("qs-{:016x}-{n}", self.key_nonce).into_bytes()
+    }
+
+    /// Drive one operation to completion under the retry policy.
+    /// Transport and protocol failures heal the connection first
+    /// (reconnect, `Hello`, re-auth with stored credentials); retryable
+    /// rejections just back off. The ladder stops when the budget
+    /// cannot cover the next delay, returning the last error.
+    fn run_reliable<T>(
+        &mut self,
+        mut op: impl FnMut(&mut Self) -> Result<T, RemoteError>,
+    ) -> Result<T, RemoteError> {
+        let started = Instant::now();
+        let mut attempt = 0u32;
+        loop {
+            let err = match op(self) {
+                Ok(v) => return Ok(v),
+                Err(e) => e,
+            };
+            // A torn connection can surface as either an I/O error or a
+            // protocol decode error (the reset cut a frame short); both
+            // heal with a reconnect. Backpressure retries in place.
+            let reconnect = match &err {
+                RemoteError::Io(_) | RemoteError::Protocol(_) => true,
+                RemoteError::Rejected(_) => false,
+                _ => return Err(err),
+            };
+            let delay = self.retry.delay(attempt, &mut self.rng);
+            if started.elapsed() + delay > self.retry.budget {
+                return Err(err);
+            }
+            std::thread::sleep(delay);
+            attempt += 1;
+            if reconnect {
+                match self.reconnect() {
+                    // An unreachable server stays retryable (the next
+                    // loop turn fails fast and backs off again) …
+                    Ok(()) | Err(RemoteError::Io(_)) | Err(RemoteError::Protocol(_)) => {}
+                    // … but a rejected credential or handshake is final.
+                    Err(fatal) => return Err(fatal),
+                }
+            }
+        }
+    }
+
+    /// Re-establish the transport after a reset: fresh socket, `Hello`
+    /// as the original tenant, and a re-run of the SCRAM handshake when
+    /// the connection had authenticated.
+    fn reconnect(&mut self) -> Result<(), RemoteError> {
+        self.stream = ClientStream::connect(&self.addr)?;
+        // Buffered push events belong to the dead connection; the
+        // server re-snapshots on resubscribe.
+        self.events.clear();
+        let hello = Request::Hello { version: WIRE_VERSION, tenant: self.tenant.0 };
+        match self.roundtrip(&hello)? {
+            Response::HelloOk { version, .. } if version == WIRE_VERSION => {}
+            Response::HelloOk { version, .. } => {
+                return Err(RemoteError::Protocol(ProtocolError::VersionMismatch {
+                    got: version,
+                    want: WIRE_VERSION,
+                }))
+            }
+            other => return Err(self.fail(other)),
+        }
+        if let Some((user, password)) = self.creds.clone() {
+            self.authenticate(&user, &password)?;
+        }
+        Ok(())
     }
 
     /// Submit many jobs in one frame. The whole batch rides the
@@ -282,8 +509,13 @@ impl RemoteClient {
         templates: &[&str],
     ) -> Result<Vec<Result<JobId, RemoteError>>, RemoteError> {
         for t in templates {
-            let req =
-                Request::Submit { template: (*t).into(), reuse: true, args: Vec::new() };
+            let req = Request::Submit {
+                template: (*t).into(),
+                reuse: true,
+                args: Vec::new(),
+                key: Vec::new(),
+                deadline_ms: 0,
+            };
             codec::write_frame(&mut self.stream, &req.encode())?;
         }
         let mut out = Vec::with_capacity(templates.len());
@@ -425,6 +657,15 @@ impl RemoteClient {
                 tenant: self.tenant,
                 retry_ms: aux,
             }),
+            ErrorCode::DeadlineUnmeetable => {
+                RemoteError::Rejected(SubmitError::DeadlineUnmeetable {
+                    tenant: self.tenant,
+                    est_wait_ms: aux,
+                })
+            }
+            ErrorCode::Draining => {
+                RemoteError::Rejected(SubmitError::Draining { retry_ms: aux })
+            }
             other => RemoteError::Server(format!("batch item rejected: {other:?}")),
         }
     }
@@ -447,6 +688,15 @@ impl RemoteClient {
                     tenant: self.tenant,
                     retry_ms: aux,
                 })
+            }
+            Response::Error { code: ErrorCode::DeadlineUnmeetable, aux, .. } => {
+                RemoteError::Rejected(SubmitError::DeadlineUnmeetable {
+                    tenant: self.tenant,
+                    est_wait_ms: aux,
+                })
+            }
+            Response::Error { code: ErrorCode::Draining, aux, .. } => {
+                RemoteError::Rejected(SubmitError::Draining { retry_ms: aux })
             }
             Response::Error { code: ErrorCode::AuthRequired, message, .. } => {
                 RemoteError::Auth(message)

@@ -33,9 +33,10 @@
 //!   simulator on a virtual clock that drives the real admission /
 //!   registry / scheduler / codec stack through simulated connections
 //!   with seeded fault injection (drops, dups, reorders, slow reads,
-//!   resets, partitions), checks four end-to-end invariants every run,
-//!   and replays any schedule from a single `u64` seed
-//!   (`repro sim --seeds A..B`).
+//!   resets, partitions, reconnect/replay/drain hostilities), checks six
+//!   end-to-end invariants every run — including exactly-once execution
+//!   per idempotency key — and replays any schedule from a single `u64`
+//!   seed (`repro sim --seeds A..B`).
 //! * [`util`] — RNG, stats, mini bench harness, CLI parsing.
 //!
 //! # Architecture at a glance

@@ -6,7 +6,7 @@
 //! repro bh    [--n 100000 --n-max 100 --n-task 5000 --threads 4 --backend native|xla --verify]
 //! repro sim   <qr|bh> [--cores 64 ...workload options]
 //! repro sim   --seeds A..B [--faults drop|dup|reorder|slow|reset|partition|
-//!                              partial-frame|chaos|all]
+//!                              partial-frame|chaos|auth|reconnect|all]
 //!                    [--scenario small|remote|reactor --workers N --clients N
 //!                     --jobs N --log-dir bench_out]
 //!                    # deterministic simulation sweep (DST): whole-server
@@ -23,6 +23,11 @@
 //!                     --reactor|--threaded --max-conns 64
 //!                     --metrics --metrics-every-secs 10]
 //!                    [--tenants tenants.conf --require-auth --idle-secs 0]
+//!                    [--drain-on term|usr1|PATH]
+//!                    # graceful drain: on SIGTERM/SIGUSR1 (or when PATH
+//!                    # appears) stop admitting (submitters get the
+//!                    # retryable Draining rejection), let accepted jobs
+//!                    # finish and parked waits resolve, then exit clean
 //!                    # --tenants takes a demo tenant count OR a registry
 //!                    # file path; with a file, clients may authenticate
 //!                    # (SCRAM-SHA-256) and their quotas apply; adding
@@ -44,6 +49,14 @@
 //! repro bench-remote [--workers 4 --clients 4 --jobs 128 --tasks 200 --work-ns 1000
 //!                     --connect HOST:PORT --json bench_out/BENCH_remote.json --quick]
 //!                    [--connections 10000] [--user NAME --pass PW]
+//!                    [--restart] [--expect-draining]
+//!                    # --restart (loopback mode): drain + relaunch the
+//!                    # server mid-run; clients ride it out via keyed
+//!                    # submit_reliable/wait_reliable — zero duplicated,
+//!                    # zero lost acknowledged jobs
+//!                    # --expect-draining (with --connect): submit one
+//!                    # probe job and exit 0 iff it is answered with the
+//!                    # retryable Draining rejection
 //!                    # --user/--pass authenticate every connection first
 //!                    # (required against a serve --require-auth instance)
 //!                    # open-loop remote submission over loopback (or --connect);
@@ -62,8 +75,8 @@ use quicksched::qr;
 use quicksched::runtime::{Manifest, RuntimeService, XlaNbodyExec, XlaTileBackend};
 use quicksched::server::{
     nbody_template, qr_template, synthetic_param_template, synthetic_template, AuthGate,
-    JobSpec, JobStatus, ListenAddr, QuotaConfig, SchedServer, ServerConfig, TenantId,
-    TenantRecord, TenantRegistry, WireListener, WireMode,
+    JobSpec, JobStatus, ListenAddr, QuotaConfig, SchedServer, ServerConfig, SubmitError,
+    TenantId, TenantRecord, TenantRegistry, WireListener, WireMode,
 };
 use quicksched::server::wire::{raise_nofile_limit, BatchItem, DEFAULT_MAX_CONNS};
 use quicksched::util::cli::Args;
@@ -245,7 +258,7 @@ fn cmd_sim(args: &Args) {
 /// `repro sim --seeds A..B` — the DST sweep: for each fault profile,
 /// simulate every seed in the window against the whole server (virtual
 /// time, simulated network, real admission/scheduler/codec) and check
-/// the four oracle invariants. Any failing seed writes its full event
+/// the six oracle invariants. Any failing seed writes its full event
 /// log to `--log-dir` and the command exits nonzero; re-running with
 /// `--seeds N..N+1 --faults <profile>` replays that schedule exactly.
 fn cmd_sim_dst(args: &Args) {
@@ -419,6 +432,54 @@ fn cmd_bench_core(args: &Args) {
 /// default picks the reactor on Linux), and `--max-conns` sets the
 /// concurrent-connection cap — raising it past the default also
 /// attempts to raise `RLIMIT_NOFILE`.
+/// Set by the `--drain-on term|usr1` signal handler. An atomic store is
+/// the only async-signal-safe thing the handler does.
+static DRAIN_SIGNALED: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_drain_signal(_sig: i32) {
+    DRAIN_SIGNALED.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+/// What `--drain-on` watches for: a POSIX signal or a trigger file.
+enum DrainTrigger {
+    Signal,
+    File(std::path::PathBuf),
+}
+
+impl DrainTrigger {
+    /// Parse and arm: `term`/`usr1` install a signal handler (via the
+    /// libc `signal` symbol std already links), anything else is a path
+    /// whose appearance requests the drain.
+    fn install(spec: &str) -> Self {
+        #[cfg(unix)]
+        {
+            let signum = match spec {
+                "term" => Some(15i32), // SIGTERM
+                "usr1" => Some(10i32), // SIGUSR1
+                _ => None,
+            };
+            if let Some(n) = signum {
+                extern "C" {
+                    fn signal(signum: i32, handler: usize) -> usize;
+                }
+                unsafe {
+                    signal(n, on_drain_signal as usize);
+                }
+                return DrainTrigger::Signal;
+            }
+        }
+        DrainTrigger::File(std::path::PathBuf::from(spec))
+    }
+
+    fn fired(&self) -> bool {
+        match self {
+            DrainTrigger::Signal => DRAIN_SIGNALED.load(std::sync::atomic::Ordering::SeqCst),
+            DrainTrigger::File(p) => p.exists(),
+        }
+    }
+}
+
 fn cmd_serve(args: &Args) {
     let workers = args.get_usize("workers", 4);
     // --tenants is overloaded: a number is the in-process demo's tenant
@@ -513,10 +574,22 @@ fn cmd_serve(args: &Args) {
             listener.local_addr(),
             server.registry().names()
         );
+        let drain_trigger = args.get("drain-on").map(|spec| {
+            let t = DrainTrigger::install(spec);
+            println!(
+                "serve: will drain on {}",
+                match &t {
+                    DrainTrigger::Signal => format!("signal ({spec})"),
+                    DrainTrigger::File(p) => format!("file {}", p.display()),
+                }
+            );
+            t
+        });
         let deadline = (for_secs > 0)
             .then(|| std::time::Instant::now() + std::time::Duration::from_secs(for_secs));
         let mut next_dump = metrics_every
             .map(|every| std::time::Instant::now() + std::time::Duration::from_secs(every));
+        let mut drained = false;
         loop {
             std::thread::sleep(std::time::Duration::from_millis(200));
             let now = std::time::Instant::now();
@@ -526,12 +599,32 @@ fn cmd_serve(args: &Args) {
                     next_dump = Some(at + std::time::Duration::from_secs(every));
                 }
             }
+            if drain_trigger.as_ref().is_some_and(DrainTrigger::fired) {
+                // Graceful drain: stop admitting (submitters get the
+                // retryable Draining rejection), finish every accepted
+                // job while parked waits and subscriptions resolve over
+                // the still-open connections, then exit at quiescence.
+                println!("serve: drain requested — shedding new submissions");
+                server.begin_drain();
+                server.drain();
+                // Linger with the listener up after quiescence: late
+                // submitters (and the CI drain smoke's probe) observe
+                // the retryable Draining rejection instead of a
+                // connection refusal — the rolling-restart window a
+                // replacement process needs to start binding.
+                std::thread::sleep(std::time::Duration::from_millis(3_000));
+                println!("serve: quiescent, exiting");
+                drained = true;
+                break;
+            }
             if deadline.is_some_and(|d| now >= d) {
                 break;
             }
         }
         listener.shutdown();
-        server.drain();
+        if !drained {
+            server.drain();
+        }
         if metrics_every.is_some() {
             print!("{}", listener.metrics_text());
         }
@@ -936,6 +1029,33 @@ fn cmd_bench_remote(args: &Args) {
     let auth_user = args.get("user");
     let auth_pass = args.get_str("pass", "");
 
+    // --expect-draining: one probe submission against --connect; exit 0
+    // iff the server answers with the retryable Draining rejection (the
+    // CI drain smoke's assertion).
+    if args.flag("expect-draining") {
+        let addr = connect.clone().unwrap_or_else(|| {
+            eprintln!("bench-remote: --expect-draining requires --connect");
+            std::process::exit(2);
+        });
+        let mut client = connect_remote(&addr, TenantId(0), auth_user, auth_pass)
+            .expect("connecting drain probe");
+        match client.submit("synthetic") {
+            Err(RemoteError::Rejected(SubmitError::Draining { retry_ms })) => {
+                println!("bench-remote: server draining (retry in {retry_ms} ms) — as expected");
+                return;
+            }
+            other => {
+                eprintln!("bench-remote: expected a Draining rejection, got {other:?}");
+                std::process::exit(1);
+            }
+        }
+    }
+    let restart = args.flag("restart");
+    if restart && (connect.is_some() || connections > 0) {
+        eprintln!("bench-remote: --restart needs the loopback server (no --connect/--connections)");
+        std::process::exit(2);
+    }
+
     // The loopback server, unless --connect names an external one. The
     // held-connection mode sizes the accept cap to the held set (plus
     // headroom for the stats scrape) and bumps RLIMIT_NOFILE first.
@@ -970,7 +1090,25 @@ fn cmd_bench_remote(args: &Args) {
         (None, None) => unreachable!(),
     };
     let transport = if addr.starts_with("unix:") { "unix" } else { "tcp" };
-    let (mut lat, connect_s, wall_s) = if connections > 0 {
+    // The restart controller swaps the loopback server out from under
+    // the running clients, so it lives in a shared slot from here on.
+    let local_slot = std::sync::Mutex::new(local);
+    let mk_server = || -> Arc<SchedServer> {
+        let server = SchedServer::start(
+            ServerConfig::new(workers)
+                .with_adaptive_batch(8)
+                .with_max_inflight(jobs.max(8)),
+        );
+        server.register_template("synthetic", synthetic_template(tasks, 8, 0xBE7C5, work_ns));
+        Arc::new(server)
+    };
+    let (mut lat, connect_s, wall_s) = if restart {
+        println!(
+            "bench-remote: {jobs} jobs from {clients} reliable clients over {transport} {addr} \
+             (one mid-run drain + relaunch)"
+        );
+        bench_restart(&addr, clients, jobs, auth_user, auth_pass, &local_slot, &mk_server)
+    } else if connections > 0 {
         println!(
             "bench-remote: {jobs} jobs over {connections} held connections \
              ({clients} driving threads) via {transport} {addr}"
@@ -1075,11 +1213,88 @@ fn cmd_bench_remote(args: &Args) {
         Err(e) => eprintln!("could not write {}: {e}", json_path.display()),
     }
 
-    if let Some((server, listener)) = local {
+    if let Some((server, listener)) = local_slot.into_inner().unwrap() {
         listener.shutdown();
         server.drain();
         drop(server);
     }
+}
+
+/// The `--restart` body of [`cmd_bench_remote`]: clients run a closed
+/// loop of keyed `submit_reliable` + `wait_reliable`, while a controller
+/// drains the loopback server once a quarter of the jobs are
+/// acknowledged and relaunches it on the same address. The drain
+/// completes every accepted job (waits resolve over the still-open
+/// listener) before the old process state is dropped, so acknowledged
+/// jobs are neither lost nor — thanks to the idempotency keys — ever
+/// duplicated by the clients' replays.
+fn bench_restart(
+    addr: &str,
+    clients: usize,
+    jobs: usize,
+    auth_user: Option<&str>,
+    auth_pass: &str,
+    slot: &std::sync::Mutex<Option<(Arc<SchedServer>, WireListener)>>,
+    relaunch: &(dyn Fn() -> Arc<SchedServer> + Sync),
+) -> (Vec<f64>, f64, f64) {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    let acked = AtomicUsize::new(0);
+    let latencies = std::sync::Mutex::new(Vec::<f64>::with_capacity(jobs));
+    let restart_after = (jobs / 4).max(1);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        scope.spawn(|| {
+            while acked.load(Ordering::Relaxed) < restart_after {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            let (server, listener) = slot.lock().unwrap().take().expect("loopback server live");
+            println!("bench-remote: draining server mid-run (--restart)");
+            server.begin_drain();
+            server.drain();
+            // Grace: let resolved waits flush before the sockets die.
+            std::thread::sleep(std::time::Duration::from_millis(250));
+            listener.shutdown();
+            drop(server);
+            let server = relaunch();
+            let listener = loop {
+                // The freed port can linger briefly; retry the bind.
+                match WireListener::start_with(
+                    Arc::clone(&server),
+                    &ListenAddr::parse(addr),
+                    DEFAULT_MAX_CONNS,
+                    WireMode::Auto,
+                ) {
+                    Ok(l) => break l,
+                    Err(_) => std::thread::sleep(std::time::Duration::from_millis(50)),
+                }
+            };
+            println!("bench-remote: server relaunched on {addr}");
+            *slot.lock().unwrap() = Some((server, listener));
+        });
+        for c in 0..clients {
+            let n = jobs / clients + usize::from(c < jobs % clients);
+            let (acked, latencies) = (&acked, &latencies);
+            scope.spawn(move || {
+                let mut client = connect_remote(addr, TenantId(c as u32), auth_user, auth_pass)
+                    .expect("connecting reliable client");
+                for _ in 0..n {
+                    let t_submit = std::time::Instant::now();
+                    let id = client.submit_reliable("synthetic").expect("reliable submit failed");
+                    acked.fetch_add(1, Ordering::Relaxed);
+                    match client.wait_reliable(id).expect("reliable wait failed") {
+                        JobStatus::Done(_) => latencies
+                            .lock()
+                            .unwrap()
+                            .push(t_submit.elapsed().as_secs_f64() * 1e3),
+                        other => panic!("remote job {id} ended as {other:?}"),
+                    }
+                }
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    (latencies.into_inner().unwrap(), 0.0, wall_s)
 }
 
 /// The `--connections N` body of [`cmd_bench_remote`]: `threads`

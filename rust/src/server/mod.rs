@@ -107,6 +107,16 @@ pub struct ServerConfig {
     /// longer than this. `None` = never (the pre-v4 behaviour). See
     /// [`ServerConfig::with_idle_timeout`].
     pub idle_timeout: Option<Duration>,
+    /// Idempotency-key dedup table bound (entries across all tenants).
+    /// See [`ServerConfig::with_dedup_cap`].
+    pub dedup_cap: usize,
+    /// How long a remembered idempotency key suppresses duplicates.
+    /// See [`ServerConfig::with_dedup_ttl`].
+    pub dedup_ttl: Duration,
+    /// Floor for the stuck-task watchdog: a kernel is reported as stuck
+    /// once it runs longer than max(10× its learned cost, this floor).
+    /// See [`ServerConfig::with_stuck_threshold`].
+    pub stuck_threshold: Duration,
     /// Scheduler configuration for template instances (its `nr_queues`
     /// should normally equal `workers`).
     pub sched: SchedConfig,
@@ -125,6 +135,9 @@ impl ServerConfig {
             seed: 0x5EED_5E11,
             wait_slice: Duration::from_millis(50),
             idle_timeout: None,
+            dedup_cap: DEDUP_DEFAULT_CAP,
+            dedup_ttl: DEDUP_DEFAULT_TTL,
+            stuck_threshold: STUCK_DEFAULT_FLOOR,
             sched: SchedConfig::new(workers),
         }
     }
@@ -216,12 +229,165 @@ impl ServerConfig {
         self.idle_timeout = Some(t.max(Duration::from_millis(100)));
         self
     }
+
+    /// Bound the idempotency dedup table to `n` remembered keys across
+    /// all tenants. At the bound the least-recently-touched key is
+    /// evicted (the same LRU discipline as the tenant-stats cap), so a
+    /// hostile flood of unique keys costs memory `O(n)`, never
+    /// unbounded. Clamped to ≥ 1.
+    pub fn with_dedup_cap(mut self, n: usize) -> Self {
+        self.dedup_cap = n.max(1);
+        self
+    }
+
+    /// How long a remembered idempotency key keeps suppressing
+    /// duplicates (default 10 minutes — comfortably past any client
+    /// retry ladder). An expired key readmits: exactly-once is
+    /// guaranteed within the TTL window, which is the window retries
+    /// actually happen in. Clamped to ≥ 1 s.
+    pub fn with_dedup_ttl(mut self, ttl: Duration) -> Self {
+        self.dedup_ttl = ttl.max(Duration::from_secs(1));
+        self
+    }
+
+    /// Floor for the stuck-task watchdog (default 1 s): a worker
+    /// executing one kernel for longer than max(10× the task type's
+    /// learned cost, this floor) is reported via the
+    /// `quicksched_tasks_stuck_total` counter and a rate-limited stderr
+    /// line. Detection only — a wedged thread cannot be killed safely.
+    /// Clamped to ≥ 10 ms so tests can exercise the watchdog quickly
+    /// without it tripping on scheduling jitter in real deployments.
+    pub fn with_stuck_threshold(mut self, t: Duration) -> Self {
+        self.stuck_threshold = t.max(Duration::from_millis(10));
+        self
+    }
+}
+
+/// Default bound on the dedup table (entries across all tenants). Large
+/// enough that the perf-guard's 10k-key table never evicts; small
+/// enough that worst-case memory stays a few MiB.
+pub const DEDUP_DEFAULT_CAP: usize = 16_384;
+
+/// Default idempotency-key TTL.
+pub const DEDUP_DEFAULT_TTL: Duration = Duration::from_secs(600);
+
+/// Default stuck-task watchdog floor.
+pub const STUCK_DEFAULT_FLOOR: Duration = Duration::from_secs(1);
+
+/// Suggested client retry delay carried by [`SubmitError::Draining`]
+/// rejections (ms) — long enough for a rolling restart's replacement
+/// process to start listening.
+pub const DRAIN_RETRY_MS: u64 = 200;
+
+/// The idempotency-key dedup table: `(tenant, key) → JobId`, TTL'd and
+/// LRU-bounded (the PR-6 tenant-stats discipline). A replayed
+/// submission that hits a live entry gets the original job's id back
+/// instead of admitting a duplicate — the server half of exactly-once.
+///
+/// Time is passed in explicitly as nanoseconds from an arbitrary epoch,
+/// so the live server can feed wall-clock and the simulator / tests can
+/// feed virtual time.
+pub struct DedupTable {
+    cap: usize,
+    ttl_ns: u64,
+    tick: u64,
+    map: HashMap<(u32, Vec<u8>), DedupEntry>,
+}
+
+struct DedupEntry {
+    job: JobId,
+    touched: u64,
+    inserted_ns: u64,
+}
+
+impl DedupTable {
+    pub fn new(cap: usize, ttl: Duration) -> Self {
+        Self {
+            cap: cap.max(1),
+            ttl_ns: ttl.as_nanos().min(u64::MAX as u128) as u64,
+            tick: 0,
+            map: HashMap::new(),
+        }
+    }
+
+    /// Look up a key, touching it for LRU purposes. An expired entry is
+    /// removed and reported as absent — the key readmits.
+    pub fn lookup(&mut self, tenant: TenantId, key: &[u8], now_ns: u64) -> Option<JobId> {
+        self.tick += 1;
+        let tick = self.tick;
+        let ttl = self.ttl_ns;
+        // Borrow-split: decide expiry inside the entry API so a hit
+        // costs exactly one hash lookup.
+        match self.map.entry((tenant.0, key.to_vec())) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                if now_ns.saturating_sub(e.get().inserted_ns) >= ttl {
+                    e.remove();
+                    None
+                } else {
+                    e.get_mut().touched = tick;
+                    Some(e.get().job)
+                }
+            }
+            std::collections::hash_map::Entry::Vacant(_) => None,
+        }
+    }
+
+    /// Remember `key → job`. At the bound, an expired entry (any) is
+    /// evicted first; otherwise the least-recently-touched one.
+    pub fn insert(&mut self, tenant: TenantId, key: Vec<u8>, job: JobId, now_ns: u64) {
+        self.tick += 1;
+        if self.map.len() >= self.cap && !self.map.contains_key(&(tenant.0, key.clone())) {
+            let victim = self
+                .map
+                .iter()
+                .find(|(_, e)| now_ns.saturating_sub(e.inserted_ns) >= self.ttl_ns)
+                .map(|(k, _)| k.clone())
+                .or_else(|| {
+                    self.map
+                        .iter()
+                        .min_by_key(|(_, e)| e.touched)
+                        .map(|(k, _)| k.clone())
+                });
+            if let Some(k) = victim {
+                self.map.remove(&k);
+            }
+        }
+        self.map.insert(
+            (tenant.0, key),
+            DedupEntry { job, touched: self.tick, inserted_ns: now_ns },
+        );
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
 }
 
 struct QueuedJob {
     id: JobId,
     spec: JobSpec,
     enqueued: Instant,
+    /// Absolute deadline (`enqueued + spec.deadline`); a queued job past
+    /// it is shed by the admission sweep instead of dispatched.
+    deadline: Option<Instant>,
+}
+
+/// Outcome of one admission decision (see
+/// `SchedServer::admit_one_locked`). `Deduped` is success from the
+/// client's point of view — the id of the job its earlier attempt
+/// created — but bumps no submission counters and kicks no sweep.
+enum Admit {
+    Accepted(JobId),
+    Deduped(JobId),
+    Rejected(SubmitError),
 }
 
 enum Event {
@@ -235,6 +401,10 @@ enum Event {
 struct State {
     admission: FairQueue<QueuedJob>,
     jobs: HashMap<JobId, JobStatus>,
+    /// Idempotency keys remembered for replay suppression, guarded by
+    /// the same lock the admission queue lives under so a lookup and
+    /// the subsequent push are one atomic admission decision.
+    dedup: DedupTable,
 }
 
 /// A hook observing job status transitions (see
@@ -264,6 +434,18 @@ struct Inner {
     jobs_submitted: Counter,
     rejected_saturated: Counter,
     rejected_tenant_cap: Counter,
+    rejected_deadline: Counter,
+    rejected_draining: Counter,
+    /// Replayed submissions answered from the dedup table.
+    dedup_hits: Counter,
+    /// Queued jobs shed at the admission sweep because their deadline
+    /// had already passed.
+    deadline_shed: Counter,
+    /// Set by [`SchedServer::begin_drain`]: admit nothing new, finish
+    /// everything held, resolve parked waits normally.
+    draining: AtomicBool,
+    /// Epoch for the dedup table's nanosecond timestamps.
+    epoch: Instant,
     /// Blocking-`Wait` slices that expired with the job still running —
     /// the polled fallback path. The reactor's push path keeps this 0.
     wait_polls: Counter,
@@ -330,13 +512,35 @@ impl SchedServer {
             "Submissions rejected with backpressure, by reason.",
             &[("reason", "tenant_at_capacity")],
         );
+        let rejected_deadline = obs.counter_with(
+            "quicksched_jobs_rejected_total",
+            "Submissions rejected with backpressure, by reason.",
+            &[("reason", "deadline_unmeetable")],
+        );
+        let rejected_draining = obs.counter_with(
+            "quicksched_jobs_rejected_total",
+            "Submissions rejected with backpressure, by reason.",
+            &[("reason", "draining")],
+        );
+        let dedup_hits = obs.counter(
+            "quicksched_dedup_hits_total",
+            "Replayed submissions answered with the original job id.",
+        );
+        let deadline_shed = obs.counter(
+            "quicksched_deadline_shed_total",
+            "Queued jobs shed at admission because their deadline had passed.",
+        );
         let wait_polls = obs.counter(
             "quicksched_wait_slice_polls_total",
             "Blocking-Wait slices that expired with the job unsettled (polled fallback path).",
         );
         let inner = Arc::new(Inner {
             registry: Registry::new(config.sched.clone(), config.max_pool),
-            state: Mutex::new(State { admission, jobs: HashMap::new() }),
+            state: Mutex::new(State {
+                admission,
+                jobs: HashMap::new(),
+                dedup: DedupTable::new(config.dedup_cap, config.dedup_ttl),
+            }),
             job_cv: Condvar::new(),
             stats: ServerStats::new(),
             next_job: AtomicU64::new(1),
@@ -350,6 +554,12 @@ impl SchedServer {
             jobs_submitted,
             rejected_saturated,
             rejected_tenant_cap,
+            rejected_deadline,
+            rejected_draining,
+            dedup_hits,
+            deadline_shed,
+            draining: AtomicBool::new(false),
+            epoch: Instant::now(),
             wait_polls,
             listeners: Mutex::new(Vec::new()),
             has_listeners: AtomicBool::new(false),
@@ -363,6 +573,7 @@ impl SchedServer {
                 let _ = finish_tx.lock().unwrap().send(Event::Finished(job));
             }),
         ));
+        pool.set_stuck_threshold(config.stuck_threshold);
         let dispatcher = {
             let inner = Arc::clone(&inner);
             let pool = Arc::clone(&pool);
@@ -409,29 +620,81 @@ impl SchedServer {
     /// [`SubmitError::ServerSaturated`] when the global admission queue
     /// is at its [`ServerConfig::with_max_queued`] bound.
     pub fn try_submit(&self, spec: JobSpec) -> Result<JobId, SubmitError> {
-        let id = JobId(self.inner.next_job.fetch_add(1, Ordering::Relaxed));
-        {
+        let res = {
             let mut st = self.inner.state.lock().unwrap();
-            let tenant = spec.tenant;
-            if let Err(e) =
-                st.admission.try_push(tenant, QueuedJob { id, spec, enqueued: Instant::now() })
-            {
-                match e {
-                    SubmitError::ServerSaturated { .. } => self.inner.rejected_saturated.inc(),
-                    SubmitError::TenantAtCapacity { .. } => self.inner.rejected_tenant_cap.inc(),
-                    // Quota rejections happen at the wire edge (the
-                    // admission queue never produces them); counted
-                    // there in quicksched_rate_limited_total.
-                    SubmitError::RateLimited { .. } => {}
-                }
-                return Err(e);
+            self.admit_one_locked(&mut st, spec)
+        };
+        match res {
+            Admit::Accepted(id) => {
+                self.inner.jobs_submitted.inc();
+                self.inner.send(Event::Kick);
+                Ok(id)
             }
-            st.jobs.insert(id, JobStatus::Queued);
-            self.inner.publish_locked(id, &JobStatus::Queued);
+            Admit::Deduped(id) => Ok(id),
+            Admit::Rejected(e) => Err(e),
         }
-        self.inner.jobs_submitted.inc();
-        self.inner.send(Event::Kick);
-        Ok(id)
+    }
+
+    /// One admission decision under the state lock: drain gate, dedup
+    /// lookup, deadline feasibility, fair-queue push, dedup insert —
+    /// shared verbatim by [`SchedServer::try_submit`] and
+    /// [`SchedServer::try_submit_batch`] so the two paths cannot drift.
+    fn admit_one_locked(&self, st: &mut State, spec: JobSpec) -> Admit {
+        let inner = &self.inner;
+        if inner.draining.load(Ordering::Acquire) {
+            inner.rejected_draining.inc();
+            return Admit::Rejected(SubmitError::Draining { retry_ms: DRAIN_RETRY_MS });
+        }
+        let now_ns = inner.epoch.elapsed().as_nanos() as u64;
+        if !spec.key.is_empty() {
+            if let Some(orig) = st.dedup.lookup(spec.tenant, &spec.key, now_ns) {
+                inner.dedup_hits.inc();
+                return Admit::Deduped(orig);
+            }
+        }
+        if let Some(budget) = spec.deadline {
+            // Estimated wait = EWMA of job service times × current
+            // backlog: crude, but it errs toward admitting (the sweep
+            // sheds anything that does run late) and costs two loads.
+            let est_ns = inner
+                .service_ewma_ns
+                .load(Ordering::Relaxed)
+                .saturating_mul(st.admission.queued() as u64);
+            if est_ns > budget.as_nanos().min(u64::MAX as u128) as u64 {
+                inner.rejected_deadline.inc();
+                return Admit::Rejected(SubmitError::DeadlineUnmeetable {
+                    tenant: spec.tenant,
+                    est_wait_ms: est_ns / 1_000_000,
+                });
+            }
+        }
+        let id = JobId(inner.next_job.fetch_add(1, Ordering::Relaxed));
+        let tenant = spec.tenant;
+        let key = spec.key.clone();
+        let enqueued = Instant::now();
+        let deadline = spec.deadline.map(|d| enqueued + d);
+        if let Err(e) =
+            st.admission.try_push(tenant, QueuedJob { id, spec, enqueued, deadline })
+        {
+            match e {
+                SubmitError::ServerSaturated { .. } => inner.rejected_saturated.inc(),
+                SubmitError::TenantAtCapacity { .. } => inner.rejected_tenant_cap.inc(),
+                // The queue never produces the remaining variants: quota
+                // rejections happen at the wire edge (counted there in
+                // quicksched_rate_limited_total), drain/deadline
+                // rejections above.
+                SubmitError::RateLimited { .. }
+                | SubmitError::DeadlineUnmeetable { .. }
+                | SubmitError::Draining { .. } => {}
+            }
+            return Admit::Rejected(e);
+        }
+        if !key.is_empty() {
+            st.dedup.insert(tenant, key, id, now_ns);
+        }
+        st.jobs.insert(id, JobStatus::Queued);
+        inner.publish_locked(id, &JobStatus::Queued);
+        Admit::Accepted(id)
     }
 
     /// Submit several jobs under one admission-lock acquisition — the
@@ -447,28 +710,13 @@ impl SchedServer {
         {
             let mut st = self.inner.state.lock().unwrap();
             for spec in specs {
-                let id = JobId(self.inner.next_job.fetch_add(1, Ordering::Relaxed));
-                let tenant = spec.tenant;
-                let queued = QueuedJob { id, spec, enqueued: Instant::now() };
-                match st.admission.try_push(tenant, queued) {
-                    Ok(()) => {
-                        st.jobs.insert(id, JobStatus::Queued);
-                        self.inner.publish_locked(id, &JobStatus::Queued);
+                match self.admit_one_locked(&mut st, spec) {
+                    Admit::Accepted(id) => {
                         accepted += 1;
                         out.push(Ok(id));
                     }
-                    Err(e) => {
-                        match e {
-                            SubmitError::ServerSaturated { .. } => {
-                                self.inner.rejected_saturated.inc()
-                            }
-                            SubmitError::TenantAtCapacity { .. } => {
-                                self.inner.rejected_tenant_cap.inc()
-                            }
-                            SubmitError::RateLimited { .. } => {}
-                        }
-                        out.push(Err(e));
-                    }
+                    Admit::Deduped(id) => out.push(Ok(id)),
+                    Admit::Rejected(e) => out.push(Err(e)),
                 }
             }
         }
@@ -477,6 +725,27 @@ impl SchedServer {
             self.inner.send(Event::Kick);
         }
         out
+    }
+
+    /// Enter drain mode: every new submission (wire or in-process) is
+    /// rejected with the retryable [`SubmitError::Draining`], while
+    /// queued and running jobs complete and parked waits/subscriptions
+    /// resolve normally. Follow with [`SchedServer::drain`] to block
+    /// until quiescence — the rolling-restart primitive behind
+    /// `serve --drain-on`. Idempotent.
+    pub fn begin_drain(&self) {
+        self.inner.draining.store(true, Ordering::Release);
+    }
+
+    /// Whether [`SchedServer::begin_drain`] has been called.
+    pub fn is_draining(&self) -> bool {
+        self.inner.draining.load(Ordering::Acquire)
+    }
+
+    /// Tasks currently reported stuck by the worker watchdog, total
+    /// since start (see [`ServerConfig::with_stuck_threshold`]).
+    pub fn tasks_stuck_total(&self) -> u64 {
+        self.pool.as_ref().map(|p| p.tasks_stuck_total()).unwrap_or(0)
     }
 
     /// Register a hook observing **every** job status transition:
@@ -691,7 +960,19 @@ fn register_server_collector(inner: &Arc<Inner>, pool: &Arc<WorkerPool>) {
                 "Jobs admitted and not yet finalized.",
             );
             w.sample_u64(&[], st.admission.inflight() as u64);
+            w.family(
+                "quicksched_dedup_keys",
+                Kind::Gauge,
+                "Idempotency keys currently remembered for replay suppression.",
+            );
+            w.sample_u64(&[], st.dedup.len() as u64);
         }
+        w.family(
+            "quicksched_draining",
+            Kind::Gauge,
+            "1 while the server drains for a rolling restart, else 0.",
+        );
+        w.sample_u64(&[], inner.draining.load(Ordering::Acquire) as u64);
         if let Some(pool) = weak_pool.upgrade() {
             w.family(
                 "quicksched_active_jobs",
@@ -699,6 +980,12 @@ fn register_server_collector(inner: &Arc<Inner>, pool: &Arc<WorkerPool>) {
                 "Jobs with live slots on the worker pool.",
             );
             w.sample_u64(&[], pool.active_jobs() as u64);
+            w.family(
+                "quicksched_tasks_stuck_total",
+                Kind::Counter,
+                "Kernels observed running past the stuck-task watchdog threshold.",
+            );
+            w.sample_u64(&[], pool.tasks_stuck_total());
             let (gets, misses, scanned, busy, spins, purged) = pool.shards().stats();
             let shard_counters: [(&str, &str, u64); 6] = [
                 ("quicksched_shard_gets_total", "Successful shard acquisitions.", gets),
@@ -893,6 +1180,11 @@ fn handle_event(inner: &Inner, ev: Event) -> bool {
 fn admit_sweep(inner: &Inner, pool: &WorkerPool) -> bool {
     let t_sweep = Instant::now();
     let mut members: Vec<(TenantId, QueuedJob)> = Vec::new();
+    // Jobs popped with their deadline already passed: shed, not
+    // dispatched. Their slots are released inside the lock; the
+    // terminal status is published after it (the usual
+    // release-before-publish order).
+    let mut shed: Vec<(TenantId, JobId)> = Vec::new();
     {
         let mut st = inner.state.lock().unwrap();
         // Adaptive batching picks this sweep's fused-width ceiling from
@@ -906,20 +1198,39 @@ fn admit_sweep(inner: &Inner, pool: &WorkerPool) -> bool {
         } else {
             inner.batch_max
         };
-        let Some(first) = st.admission.try_admit() else { return false };
+        let now = Instant::now();
+        let expired = |q: &QueuedJob| q.deadline.is_some_and(|d| now >= d);
+        // Pop heads until one is still worth running.
+        let first = loop {
+            match st.admission.try_admit() {
+                None => break None,
+                Some((tenant, q)) if expired(&q) => {
+                    st.admission.finish(tenant);
+                    shed.push((tenant, q.id));
+                }
+                Some(live) => break Some(live),
+            }
+        };
+        let Some(first) = first else {
+            drop(st);
+            return publish_shed(inner, shed);
+        };
         let head = first.1.spec.submission.clone();
         let head_args = first.1.spec.args.clone();
         members.push(first);
         while members.len() < k_cap {
-            match st
-                .admission
-                .try_admit_if(|q| q.spec.submission == head && q.spec.args == head_args)
-            {
+            // An expired same-template job fails the predicate and
+            // stays queued (try_admit_if never skips): it ends the
+            // fusion run here and is shed when it reaches the head.
+            match st.admission.try_admit_if(|q| {
+                q.spec.submission == head && q.spec.args == head_args && !expired(q)
+            }) {
                 Some(m) => members.push(m),
                 None => break,
             }
         }
     }
+    publish_shed(inner, shed);
     let k = members.len();
     inner.stats.record_sweep(k);
     // Queue wait ends at admission: stamp it *before* the checkout so a
@@ -964,6 +1275,22 @@ fn admit_sweep(inner: &Inner, pool: &WorkerPool) -> bool {
             pool.activate_batch(jobs);
         }
     }
+    true
+}
+
+/// Publish the terminal status of deadline-shed jobs (slots already
+/// released by the caller, inside the state lock). Returns whether
+/// anything was shed — the sweep made progress and should run again.
+fn publish_shed(inner: &Inner, shed: Vec<(TenantId, JobId)>) -> bool {
+    if shed.is_empty() {
+        return false;
+    }
+    for (tenant, id) in shed {
+        inner.deadline_shed.inc();
+        inner.stats.record_failure(tenant);
+        inner.set_status(id, JobStatus::Failed("deadline exceeded".into()));
+    }
+    inner.job_cv.notify_all();
     true
 }
 
@@ -1184,6 +1511,83 @@ mod tests {
             Some(JobStatus::Done(_)) => {}
             other => panic!("unexpected {other:?}"),
         }
+        s.shutdown();
+    }
+
+    #[test]
+    fn keyed_resubmission_returns_original_id() {
+        let s = server();
+        let spec = || JobSpec::template(TenantId(0), "syn").with_key(b"op-1".to_vec());
+        let first = s.try_submit(spec()).unwrap();
+        // A replay — before or after completion — answers the same id.
+        assert_eq!(s.try_submit(spec()).unwrap(), first);
+        assert!(matches!(s.wait(first), JobStatus::Done(_)));
+        assert_eq!(s.try_submit(spec()).unwrap(), first);
+        // A different key (or tenant) is a fresh job.
+        let other = s
+            .try_submit(JobSpec::template(TenantId(0), "syn").with_key(b"op-2".to_vec()))
+            .unwrap();
+        assert_ne!(other, first);
+        let cross = s
+            .try_submit(JobSpec::template(TenantId(1), "syn").with_key(b"op-1".to_vec()))
+            .unwrap();
+        assert_ne!(cross, first);
+        assert!(matches!(s.wait(other), JobStatus::Done(_)));
+        assert!(matches!(s.wait(cross), JobStatus::Done(_)));
+        // Replays admitted nothing: exactly three jobs ever ran.
+        assert_eq!(s.stats().completed(), 3);
+        s.shutdown();
+    }
+
+    #[test]
+    fn dedup_table_bound_and_ttl() {
+        let mut t = DedupTable::new(3, Duration::from_secs(1));
+        let sec = 1_000_000_000u64;
+        for i in 0..5u64 {
+            t.insert(TenantId(0), vec![i as u8], JobId(i), 0);
+            assert!(t.len() <= 3, "bound exceeded at insert {i}");
+        }
+        // The freshest keys survived the LRU evictions.
+        assert_eq!(t.lookup(TenantId(0), &[4], 0), Some(JobId(4)));
+        assert_eq!(t.lookup(TenantId(0), &[0], 0), None);
+        // Past the TTL every survivor expires and readmits.
+        assert_eq!(t.lookup(TenantId(0), &[4], 2 * sec), None);
+        t.insert(TenantId(0), vec![4], JobId(40), 2 * sec);
+        assert_eq!(t.lookup(TenantId(0), &[4], 2 * sec), Some(JobId(40)));
+    }
+
+    #[test]
+    fn draining_rejects_new_work_and_finishes_held_work() {
+        let s = server();
+        let id = s.submit(JobSpec::template(TenantId(0), "syn"));
+        s.begin_drain();
+        assert!(s.is_draining());
+        assert_eq!(
+            s.try_submit(JobSpec::template(TenantId(0), "syn")),
+            Err(SubmitError::Draining { retry_ms: DRAIN_RETRY_MS })
+        );
+        // Work accepted before the drain still completes and is
+        // waitable; then the server is quiescent.
+        assert!(matches!(s.wait(id), JobStatus::Done(_)));
+        s.drain();
+        s.shutdown();
+    }
+
+    #[test]
+    fn deadline_zero_is_never_dispatched() {
+        let s = server();
+        let id = s
+            .try_submit(
+                JobSpec::template(TenantId(0), "syn").with_deadline(Duration::ZERO),
+            )
+            .unwrap();
+        match s.wait(id) {
+            JobStatus::Failed(m) => assert_eq!(m, "deadline exceeded"),
+            other => panic!("deadline-0 job reached {other:?}"),
+        }
+        // The shed released its slot: the server keeps serving.
+        let ok = s.submit(JobSpec::template(TenantId(0), "syn"));
+        assert!(matches!(s.wait(ok), JobStatus::Done(_)));
         s.shutdown();
     }
 

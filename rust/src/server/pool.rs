@@ -20,6 +20,15 @@
 //! variants: the same serving disciplines (per-job queues vs shared
 //! shards) driven as deterministic discrete-event simulations
 //! (cf. `coordinator/sim.rs`), used by the reproducible fairness tests.
+//!
+//! **Stuck-task watchdog:** every worker publishes what it is executing
+//! (job, task, type, start time, per-task threshold) into a lock-free
+//! slot before entering the kernel; a sweeper thread flags any worker
+//! whose kernel has run past max(10× the task's learned cost, the
+//! configured floor) — once per execution into the
+//! `quicksched_tasks_stuck_total` counter, plus a rate-limited stderr
+//! line. Detection only: a wedged thread cannot be killed safely, but
+//! the operator learns *which* job/task/type wedged it.
 
 use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -124,11 +133,60 @@ impl ActiveJob {
 /// Called exactly once per job, from whoever finalized it.
 pub type OnFinish = Box<dyn Fn(Arc<ActiveJob>) + Send + Sync>;
 
+/// What one worker is executing right now, published for the watchdog.
+/// `seq` is a seqlock epoch: even = idle, odd = a kernel is running; a
+/// sweep that sees the epoch change mid-read discards the sample. All
+/// loads are advisory — a torn read costs at most one missed or
+/// spurious report, never a wrong decision.
+struct ExecSlot {
+    seq: AtomicU64,
+    job: AtomicU64,
+    task: AtomicU64,
+    type_id: AtomicU64,
+    /// Kernel entry time, ns since the pool epoch.
+    start_ns: AtomicU64,
+    /// Stuck threshold for this execution, ns.
+    expect_ns: AtomicU64,
+    /// `seq` value already reported, so each execution is counted once.
+    flagged: AtomicU64,
+}
+
+impl ExecSlot {
+    fn new() -> Self {
+        Self {
+            seq: AtomicU64::new(0),
+            job: AtomicU64::new(0),
+            task: AtomicU64::new(0),
+            type_id: AtomicU64::new(0),
+            start_ns: AtomicU64::new(0),
+            expect_ns: AtomicU64::new(0),
+            flagged: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Minimum gap between stderr stuck-task lines (the counter still
+/// increments for every stuck execution).
+const STUCK_REPORT_GAP_NS: u64 = 1_000_000_000;
+/// Watchdog sweep cadence. Cheap (a few atomic loads per worker), and
+/// short enough that pool shutdown never waits noticeably for the join.
+const WATCHDOG_SWEEP: Duration = Duration::from_millis(25);
+
 struct Shared {
     shards: Arc<ShardPool>,
     shutdown: AtomicBool,
     on_finish: OnFinish,
     seed: u64,
+    /// Time origin for the watchdog's `start_ns`/`now` arithmetic.
+    epoch: Instant,
+    /// Stuck-task floor (ns): a kernel is stuck after
+    /// max(10× learned cost, this floor). See `set_stuck_threshold`.
+    stuck_floor_ns: AtomicU64,
+    stuck_total: AtomicU64,
+    /// One published slot per worker, indexed by worker id.
+    exec_slots: Vec<ExecSlot>,
+    /// Last stderr report time (ns since epoch), for rate limiting.
+    last_report_ns: AtomicU64,
 }
 
 /// Long-lived worker threads drawing from the shared shard pool.
@@ -148,8 +206,13 @@ impl WorkerPool {
             shutdown: AtomicBool::new(false),
             on_finish,
             seed,
+            epoch: Instant::now(),
+            stuck_floor_ns: AtomicU64::new(1_000_000_000),
+            stuck_total: AtomicU64::new(0),
+            exec_slots: (0..nr_workers).map(|_| ExecSlot::new()).collect(),
+            last_report_ns: AtomicU64::new(0),
         });
-        let handles = (0..nr_workers)
+        let mut handles: Vec<JoinHandle<()>> = (0..nr_workers)
             .map(|wid| {
                 let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
@@ -158,7 +221,29 @@ impl WorkerPool {
                     .expect("spawning pool worker")
             })
             .collect();
+        handles.push({
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("qs-watchdog".into())
+                .spawn(move || watchdog_loop(&shared))
+                .expect("spawning pool watchdog")
+        });
         Self { shared, handles, nr_workers }
+    }
+
+    /// Set the stuck-task floor: a worker executing one kernel for
+    /// longer than max(10× the task's learned cost, this floor) is
+    /// reported (counter + rate-limited stderr line). Applies to
+    /// kernels entered after the call.
+    pub fn set_stuck_threshold(&self, t: Duration) {
+        let ns = t.as_nanos().min(u64::MAX as u128) as u64;
+        self.shared.stuck_floor_ns.store(ns.max(1), Ordering::Relaxed);
+    }
+
+    /// Stuck-task reports since the pool started (each execution counts
+    /// at most once).
+    pub fn tasks_stuck_total(&self) -> u64 {
+        self.shared.stuck_total.load(Ordering::Relaxed)
     }
 
     pub fn nr_workers(&self) -> usize {
@@ -260,8 +345,26 @@ fn worker_loop(shared: &Shared, wid: usize) {
             Some(a) => {
                 dry_scans = 0;
                 let job = &a.job;
+                // Publish what we are about to execute, then bump the
+                // seqlock to odd: the watchdog can now see us.
+                let slot = &shared.exec_slots[wid];
+                {
+                    let view = job.sched.task_view(a.tid);
+                    let cost_ns = view.cost.max(0) as u64;
+                    let floor = shared.stuck_floor_ns.load(Ordering::Relaxed);
+                    slot.job.store(job.id.0, Ordering::Relaxed);
+                    slot.task.store(a.tid.0 as u64, Ordering::Relaxed);
+                    slot.type_id.store(view.type_id as u64, Ordering::Relaxed);
+                    slot.expect_ns
+                        .store(cost_ns.saturating_mul(10).max(floor), Ordering::Relaxed);
+                    slot.start_ns
+                        .store(shared.epoch.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
+                slot.seq.fetch_add(1, Ordering::Release);
                 let (exec_ns, panicked) =
                     exec_task_guarded(&job.sched, a.tid, job.exec.as_ref());
+                // Back to even: idle, the published sample is stale.
+                slot.seq.fetch_add(1, Ordering::Release);
                 // All per-job accounting lands *before* complete(): the
                 // completion may let another worker finalize the job,
                 // and the report must already include this task.
@@ -289,6 +392,52 @@ fn worker_loop(shared: &Shared, wid: usize) {
                 } else {
                     std::thread::yield_now();
                 }
+            }
+        }
+    }
+}
+
+/// The watchdog: sweep every worker's published slot and flag kernels
+/// running past their threshold. Each execution is reported once (the
+/// `flagged` epoch), stderr lines at most one per second.
+fn watchdog_loop(shared: &Shared) {
+    while !shared.shutdown.load(Ordering::Acquire) {
+        std::thread::sleep(WATCHDOG_SWEEP);
+        let now = shared.epoch.elapsed().as_nanos() as u64;
+        for (wid, slot) in shared.exec_slots.iter().enumerate() {
+            let seq = slot.seq.load(Ordering::Acquire);
+            if seq % 2 == 0 {
+                continue; // idle
+            }
+            let start = slot.start_ns.load(Ordering::Relaxed);
+            let expect = slot.expect_ns.load(Ordering::Relaxed);
+            let job = slot.job.load(Ordering::Relaxed);
+            let task = slot.task.load(Ordering::Relaxed);
+            let type_id = slot.type_id.load(Ordering::Relaxed);
+            if slot.seq.load(Ordering::Acquire) != seq {
+                continue; // torn read: the worker moved on mid-sample
+            }
+            let ran = now.saturating_sub(start);
+            if ran < expect {
+                continue;
+            }
+            if slot.flagged.swap(seq, Ordering::Relaxed) == seq {
+                continue; // this execution was already reported
+            }
+            shared.stuck_total.fetch_add(1, Ordering::Relaxed);
+            let prev = shared.last_report_ns.load(Ordering::Relaxed);
+            if now.saturating_sub(prev) >= STUCK_REPORT_GAP_NS
+                && shared
+                    .last_report_ns
+                    .compare_exchange(prev, now, Ordering::Relaxed, Ordering::Relaxed)
+                    .is_ok()
+            {
+                eprintln!(
+                    "quicksched: stuck task: worker {wid} job {job} task {task} \
+                     type {type_id} running {} ms (threshold {} ms) — detection only",
+                    ran / 1_000_000,
+                    expect / 1_000_000
+                );
             }
         }
     }
@@ -857,6 +1006,68 @@ mod tests {
         }
         seen.sort_unstable();
         assert_eq!(seen, vec![0, 1, 2, 3]);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn watchdog_reports_wedged_kernel() {
+        use std::sync::mpsc;
+        let (tx, rx) = mpsc::channel::<Arc<ActiveJob>>();
+        let tx = Mutex::new(tx);
+        let pool = WorkerPool::start(
+            1,
+            5,
+            Box::new(move |job| {
+                let _ = tx.lock().unwrap().send(job);
+            }),
+        );
+        // Tight floor so the wedged kernel trips quickly; the declared
+        // cost is tiny, so the floor dominates the threshold.
+        pool.set_stuck_threshold(Duration::from_millis(10));
+        let mut s = Scheduler::new(SchedConfig::new(1)).unwrap();
+        s.task(0u32).cost(1).spawn();
+        s.prepare().unwrap();
+        let exec: ExecFn =
+            Arc::new(|_view: crate::coordinator::TaskView<'_>| {
+                std::thread::sleep(Duration::from_millis(250));
+            });
+        let g = JobGraph {
+            sched: Arc::new(s),
+            exec,
+            template: None,
+            args: Vec::new(),
+            kernels: None,
+        };
+        let job = ActiveJob::new(JobId(1), TenantId(0), g, false, 0, 0, 0, 1);
+        pool.activate(job);
+        let done = rx.recv_timeout(Duration::from_secs(10)).expect("finalized");
+        assert!(!done.failed.load(Ordering::Acquire), "wedged != failed");
+        assert!(
+            pool.tasks_stuck_total() >= 1,
+            "watchdog missed a kernel 25x past its threshold"
+        );
+        pool.shutdown();
+    }
+
+    #[test]
+    fn watchdog_quiet_for_fast_kernels() {
+        use std::sync::mpsc;
+        let reg = Registry::new(SchedConfig::new(2), 4);
+        reg.register("syn", synthetic_template(40, 3, 9, 0));
+        let (tx, rx) = mpsc::channel::<Arc<ActiveJob>>();
+        let tx = Mutex::new(tx);
+        let pool = WorkerPool::start(
+            2,
+            11,
+            Box::new(move |job| {
+                let _ = tx.lock().unwrap().send(job);
+            }),
+        );
+        let (g, _) = reg.checkout("syn", false).unwrap();
+        let job = ActiveJob::new(JobId(1), TenantId(0), g, false, 0, 0, 0, 1);
+        pool.activate(job);
+        rx.recv_timeout(Duration::from_secs(30)).expect("job finished");
+        assert_eq!(pool.tasks_stuck_total(), 0, "fast kernels reported stuck");
         pool.shutdown();
     }
 

@@ -69,21 +69,56 @@ pub struct JobSpec {
     /// distinct argument value, and batching only fuses jobs whose
     /// arguments match.
     pub args: Vec<u8>,
+    /// Idempotency key, empty = none. A resubmission carrying the same
+    /// key within the server's dedup TTL returns the original job's id
+    /// instead of admitting a duplicate — the exactly-once handle a
+    /// retrying client holds across reconnects.
+    pub key: Vec<u8>,
+    /// Relative deadline from submission, `None` = run whenever. A
+    /// queued job whose deadline passes is shed
+    /// (`JobStatus::Failed("deadline exceeded")`), and a submission
+    /// whose deadline the queue's estimated wait already exceeds is
+    /// rejected with [`SubmitError::DeadlineUnmeetable`].
+    pub deadline: Option<std::time::Duration>,
 }
 
 impl JobSpec {
     pub fn template(tenant: TenantId, name: impl Into<String>) -> Self {
-        Self { tenant, submission: Submission::Template(name.into()), args: Vec::new() }
+        Self {
+            tenant,
+            submission: Submission::Template(name.into()),
+            args: Vec::new(),
+            key: Vec::new(),
+            deadline: None,
+        }
     }
 
     pub fn rebuild(tenant: TenantId, name: impl Into<String>) -> Self {
-        Self { tenant, submission: Submission::Rebuild(name.into()), args: Vec::new() }
+        Self {
+            tenant,
+            submission: Submission::Rebuild(name.into()),
+            args: Vec::new(),
+            key: Vec::new(),
+            deadline: None,
+        }
     }
 
     /// Attach typed arguments for a parameterized template, e.g.
     /// `.with_args(&(400u32, 8u32, 1000u64))`.
     pub fn with_args<P: crate::coordinator::Payload>(mut self, args: &P) -> Self {
         self.args = args.encode();
+        self
+    }
+
+    /// Attach an idempotency key (empty = none).
+    pub fn with_key(mut self, key: Vec<u8>) -> Self {
+        self.key = key;
+        self
+    }
+
+    /// Attach a relative deadline.
+    pub fn with_deadline(mut self, deadline: std::time::Duration) -> Self {
+        self.deadline = Some(deadline);
         self
     }
 }
@@ -108,6 +143,17 @@ pub enum SubmitError {
     /// `retry_ms` hints when the token bucket will next admit.
     #[error("{tenant} is rate-limited; retry in {retry_ms}ms")]
     RateLimited { tenant: TenantId, retry_ms: u64 },
+    /// The submission carried a deadline the queue cannot meet: the
+    /// EWMA'd estimated wait (`est_wait_ms`) already exceeds the budget.
+    /// Shedding at admission beats queuing work that will be dead on
+    /// dispatch.
+    #[error("{tenant} deadline unmeetable (estimated wait {est_wait_ms}ms)")]
+    DeadlineUnmeetable { tenant: TenantId, est_wait_ms: u64 },
+    /// The server is draining for a rolling restart: in-flight and
+    /// queued work completes, nothing new is admitted. `retry_ms` hints
+    /// when to try again (by then a replacement should be listening).
+    #[error("server is draining; retry in {retry_ms}ms")]
+    Draining { retry_ms: u64 },
 }
 
 /// Lifecycle of a job as observed through `poll`.
@@ -226,6 +272,23 @@ mod tests {
         let r = SubmitError::RateLimited { tenant: TenantId(5), retry_ms: 40 };
         assert!(r.to_string().contains("tenant5"));
         assert!(r.to_string().contains("40ms"));
+        let d = SubmitError::DeadlineUnmeetable { tenant: TenantId(1), est_wait_ms: 800 };
+        assert!(d.to_string().contains("tenant1"));
+        assert!(d.to_string().contains("800ms"));
+        let dr = SubmitError::Draining { retry_ms: 200 };
+        assert!(dr.to_string().contains("200ms"));
+    }
+
+    #[test]
+    fn job_spec_reliability_fields_default_off() {
+        let plain = JobSpec::template(TenantId(0), "syn");
+        assert!(plain.key.is_empty());
+        assert!(plain.deadline.is_none());
+        let keyed = JobSpec::template(TenantId(0), "syn")
+            .with_key(b"k1".to_vec())
+            .with_deadline(std::time::Duration::from_millis(250));
+        assert_eq!(keyed.key, b"k1");
+        assert_eq!(keyed.deadline, Some(std::time::Duration::from_millis(250)));
     }
 
     #[test]

@@ -47,7 +47,12 @@ use crate::server::protocol::{JobId, JobReport, JobStatus, TenantId};
 /// [`Response::AuthChallenge`] / [`Response::AuthOk`] /
 /// [`Response::AuthFail`]) and the [`ErrorCode::RateLimited`] /
 /// [`ErrorCode::AuthRequired`] codes for per-tenant quota enforcement.
-pub const WIRE_VERSION: u32 = 4;
+/// Version 5 added the reliability fields — an idempotency `key` and a
+/// relative `deadline_ms` on [`Request::Submit`] / [`BatchItem`]
+/// (empty key / zero deadline mean "none"; fields are positional, so
+/// they are always encoded) — plus the retryable
+/// [`ErrorCode::DeadlineUnmeetable`] and [`ErrorCode::Draining`] codes.
+pub const WIRE_VERSION: u32 = 5;
 
 /// Upper bound on a frame body, enforced on both ends before any body
 /// allocation. Large enough for a stats snapshot, small enough that a
@@ -302,17 +307,42 @@ pub struct BatchItem {
     pub template: String,
     pub reuse: bool,
     pub args: Vec<u8>,
+    /// Idempotency key (empty = none). A replayed submission carrying
+    /// the same key returns the original job id instead of admitting a
+    /// duplicate. Wire ≥ 5.
+    pub key: Vec<u8>,
+    /// Relative deadline in milliseconds (0 = none). Queued jobs whose
+    /// deadline passes are shed instead of dispatched. Wire ≥ 5.
+    pub deadline_ms: u64,
 }
 
 impl BatchItem {
     /// A template-reusing submission with no arguments.
     pub fn template(name: impl Into<String>) -> Self {
-        BatchItem { template: name.into(), reuse: true, args: Vec::new() }
+        BatchItem {
+            template: name.into(),
+            reuse: true,
+            args: Vec::new(),
+            key: Vec::new(),
+            deadline_ms: 0,
+        }
     }
 
     /// Attach opaque argument bytes (parameterized templates).
     pub fn with_args(mut self, args: Vec<u8>) -> Self {
         self.args = args;
+        self
+    }
+
+    /// Attach an idempotency key.
+    pub fn with_key(mut self, key: Vec<u8>) -> Self {
+        self.key = key;
+        self
+    }
+
+    /// Attach a relative deadline in milliseconds.
+    pub fn with_deadline_ms(mut self, deadline_ms: u64) -> Self {
+        self.deadline_ms = deadline_ms;
         self
     }
 }
@@ -325,8 +355,14 @@ pub enum Request {
     Hello { version: u32, tenant: u32 },
     /// Submit a job against a registered template. `reuse = false` is
     /// the rebuild-per-job baseline; `args` are opaque argument bytes
-    /// for parameterized templates (empty for plain ones).
-    Submit { template: String, reuse: bool, args: Vec<u8> },
+    /// for parameterized templates (empty for plain ones). `key` is an
+    /// optional idempotency key (empty = none): resubmitting the same
+    /// key within the server's dedup TTL returns the original job id
+    /// instead of admitting a duplicate. `deadline_ms` is an optional
+    /// relative deadline (0 = none): the job is shed — rejected with
+    /// [`ErrorCode::DeadlineUnmeetable`] or failed as
+    /// `"deadline exceeded"` — rather than dispatched late. Wire ≥ 5.
+    Submit { template: String, reuse: bool, args: Vec<u8>, key: Vec<u8>, deadline_ms: u64 },
     /// Non-blocking status query.
     Poll { job: u64 },
     /// Block until the job reaches a terminal state.
@@ -372,11 +408,13 @@ impl Request {
                 put_varint(&mut out, *version as u64);
                 put_varint(&mut out, *tenant as u64);
             }
-            Request::Submit { template, reuse, args } => {
+            Request::Submit { template, reuse, args, key, deadline_ms } => {
                 out.push(REQ_SUBMIT);
                 put_str(&mut out, template);
                 out.push(*reuse as u8);
                 put_bytes(&mut out, args);
+                put_bytes(&mut out, key);
+                put_varint(&mut out, *deadline_ms);
             }
             Request::Poll { job } => {
                 out.push(REQ_POLL);
@@ -403,6 +441,8 @@ impl Request {
                     put_str(&mut out, &it.template);
                     out.push(it.reuse as u8);
                     put_bytes(&mut out, &it.args);
+                    put_bytes(&mut out, &it.key);
+                    put_varint(&mut out, it.deadline_ms);
                 }
             }
             Request::AuthResponse { data } => {
@@ -422,6 +462,8 @@ impl Request {
                 template: r.text()?.to_string(),
                 reuse: r.bool()?,
                 args: r.bytes()?.to_vec(),
+                key: r.bytes()?.to_vec(),
+                deadline_ms: r.varint()?,
             },
             REQ_POLL => Request::Poll { job: r.varint()? },
             REQ_WAIT => Request::Wait { job: r.varint()? },
@@ -433,7 +475,7 @@ impl Request {
                 let n = r.varint()?;
                 // No `with_capacity` from the wire-declared count: a
                 // hostile `n` costs nothing until items actually decode,
-                // and each iteration consumes ≥ 3 body bytes, so work is
+                // and each iteration consumes ≥ 5 body bytes, so work is
                 // bounded by the (length-checked) frame size.
                 let mut items = Vec::new();
                 for _ in 0..n {
@@ -441,6 +483,8 @@ impl Request {
                         template: r.text()?.to_string(),
                         reuse: r.bool()?,
                         args: r.bytes()?.to_vec(),
+                        key: r.bytes()?.to_vec(),
+                        deadline_ms: r.varint()?,
                     });
                 }
                 Request::SubmitBatch { items }
@@ -481,6 +525,15 @@ pub enum ErrorCode {
     /// request (`serve --require-auth`). Not retryable on the same
     /// connection state — authenticate first. Wire ≥ 4.
     AuthRequired,
+    /// The submission carried a relative deadline the queue cannot meet:
+    /// the EWMA'd estimated wait already exceeds the budget (`aux` = the
+    /// estimated wait in ms). Retryable — against another replica, or
+    /// once the queue drains. Wire ≥ 5.
+    DeadlineUnmeetable,
+    /// The server is draining for a rolling restart: it finishes what it
+    /// has but admits nothing new (`aux` = suggested retry delay in ms).
+    /// Retryable. Wire ≥ 5.
+    Draining,
 }
 
 impl ErrorCode {
@@ -488,7 +541,11 @@ impl ErrorCode {
     pub fn retryable(self) -> bool {
         matches!(
             self,
-            ErrorCode::TenantAtCapacity | ErrorCode::ServerSaturated | ErrorCode::RateLimited
+            ErrorCode::TenantAtCapacity
+                | ErrorCode::ServerSaturated
+                | ErrorCode::RateLimited
+                | ErrorCode::DeadlineUnmeetable
+                | ErrorCode::Draining
         )
     }
 
@@ -503,6 +560,8 @@ impl ErrorCode {
             ErrorCode::Internal => 6,
             ErrorCode::RateLimited => 7,
             ErrorCode::AuthRequired => 8,
+            ErrorCode::DeadlineUnmeetable => 9,
+            ErrorCode::Draining => 10,
         }
     }
 
@@ -517,6 +576,8 @@ impl ErrorCode {
             6 => ErrorCode::Internal,
             7 => ErrorCode::RateLimited,
             8 => ErrorCode::AuthRequired,
+            9 => ErrorCode::DeadlineUnmeetable,
+            10 => ErrorCode::Draining,
             t => return Err(ProtocolError::BadTag { kind: "error code", tag: t }),
         })
     }
@@ -979,11 +1040,43 @@ mod tests {
 
     #[test]
     fn frame_roundtrip() {
-        let msg = Request::Submit { template: "qr".into(), reuse: true, args: vec![1, 2, 3] };
+        let msg = Request::Submit {
+            template: "qr".into(),
+            reuse: true,
+            args: vec![1, 2, 3],
+            key: Vec::new(),
+            deadline_ms: 0,
+        };
         let mut wire = Vec::new();
         write_frame(&mut wire, &msg.encode()).unwrap();
         let body = read_frame(&mut io::Cursor::new(&wire)).unwrap();
         assert_eq!(Request::decode(&body).unwrap(), msg);
+    }
+
+    #[test]
+    fn reliability_fields_roundtrip() {
+        // A keyed, deadline-carrying Submit survives the wire intact.
+        let msg = Request::Submit {
+            template: "qr".into(),
+            reuse: true,
+            args: vec![1],
+            key: b"client-7:42".to_vec(),
+            deadline_ms: 1500,
+        };
+        assert_eq!(Request::decode(&msg.encode()).unwrap(), msg);
+        // And so do keyed batch items, mixed with plain ones.
+        let batch = Request::SubmitBatch {
+            items: vec![
+                BatchItem::template("qr").with_key(b"k1".to_vec()).with_deadline_ms(250),
+                BatchItem::template("qr"),
+            ],
+        };
+        assert_eq!(Request::decode(&batch.encode()).unwrap(), batch);
+        // The new error codes survive the wire with their aux payloads.
+        for (code, aux) in [(ErrorCode::DeadlineUnmeetable, 800), (ErrorCode::Draining, 200)] {
+            let resp = Response::Error { code, aux, message: "m".into() };
+            assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
+        }
     }
 
     #[test]
@@ -1156,7 +1249,13 @@ mod tests {
         let req = Request::SubmitBatch {
             items: vec![
                 BatchItem::template("qr"),
-                BatchItem { template: "syn".into(), reuse: false, args: vec![7, 8] },
+                BatchItem {
+                    template: "syn".into(),
+                    reuse: false,
+                    args: vec![7, 8],
+                    key: b"k".to_vec(),
+                    deadline_ms: 30,
+                },
                 BatchItem::template("qr").with_args(vec![1]),
             ],
         };
@@ -1210,6 +1309,8 @@ mod tests {
         assert!(ErrorCode::TenantAtCapacity.retryable());
         assert!(ErrorCode::ServerSaturated.retryable());
         assert!(ErrorCode::RateLimited.retryable());
+        assert!(ErrorCode::DeadlineUnmeetable.retryable());
+        assert!(ErrorCode::Draining.retryable());
         assert!(!ErrorCode::BadRequest.retryable());
         assert!(!ErrorCode::VersionMismatch.retryable());
         assert!(!ErrorCode::AuthRequired.retryable());

@@ -40,13 +40,18 @@ use crate::server::protocol::{SubmitError, TenantId};
 /// per front-end; observability hooks default to no-ops so the
 /// simulator only overrides what it traces.
 pub(crate) trait ConnService {
-    /// Submit one job for `tenant`; `Ok` carries the job id.
+    /// Submit one job for `tenant`; `Ok` carries the job id. `key` is
+    /// the wire idempotency key (empty = none) and `deadline_ms` the
+    /// relative deadline (0 = none) — wire v5 reliability fields the
+    /// service maps into its `JobSpec`.
     fn submit(
         &mut self,
         tenant: TenantId,
         template: String,
         reuse: bool,
         args: Vec<u8>,
+        key: Vec<u8>,
+        deadline_ms: u64,
     ) -> Result<u64, SubmitError>;
 
     /// Submit a whole batch. The default loops [`ConnService::submit`];
@@ -57,7 +62,10 @@ pub(crate) trait ConnService {
         tenant: TenantId,
         items: Vec<BatchItem>,
     ) -> Vec<Result<u64, SubmitError>> {
-        items.into_iter().map(|it| self.submit(tenant, it.template, it.reuse, it.args)).collect()
+        items
+            .into_iter()
+            .map(|it| self.submit(tenant, it.template, it.reuse, it.args, it.key, it.deadline_ms))
+            .collect()
     }
 
     /// Non-blocking status lookup (`Unknown` for ids never seen).
@@ -143,6 +151,10 @@ pub(crate) fn reject_parts(e: &SubmitError) -> (ErrorCode, u64) {
             (ErrorCode::ServerSaturated, *max_queued as u64)
         }
         SubmitError::RateLimited { retry_ms, .. } => (ErrorCode::RateLimited, *retry_ms),
+        SubmitError::DeadlineUnmeetable { est_wait_ms, .. } => {
+            (ErrorCode::DeadlineUnmeetable, *est_wait_ms)
+        }
+        SubmitError::Draining { retry_ms } => (ErrorCode::Draining, *retry_ms),
     }
 }
 
@@ -452,8 +464,8 @@ impl ConnSm {
                     return;
                 }
                 match other {
-                    Request::Submit { template, reuse, args } => {
-                        Some(match svc.submit(tenant, template, reuse, args) {
+                    Request::Submit { template, reuse, args, key, deadline_ms } => {
+                        Some(match svc.submit(tenant, template, reuse, args, key, deadline_ms) {
                             Ok(job) => Response::Submitted { job },
                             Err(e) => reject(&e),
                         })
@@ -650,6 +662,8 @@ pub fn post_burst_conn_footprint() -> usize {
             _template: String,
             _reuse: bool,
             _args: Vec<u8>,
+            _key: Vec<u8>,
+            _deadline_ms: u64,
         ) -> Result<u64, SubmitError> {
             self.next += 1;
             Ok(self.next)
@@ -680,6 +694,8 @@ pub fn post_burst_conn_footprint() -> usize {
             template: "synthetic-args".into(),
             reuse: true,
             args: i.to_le_bytes().repeat(50),
+            key: Vec::new(),
+            deadline_ms: 0,
         }
         .encode();
         codec::write_frame(&mut wire, &body).expect("submit frame");
@@ -700,6 +716,7 @@ mod tests {
     #[derive(Default)]
     struct MockSvc {
         jobs: BTreeMap<u64, WireStatus>,
+        dedup: BTreeMap<Vec<u8>, u64>,
         next: u64,
         accept: bool,
         waits: Vec<u64>,
@@ -718,13 +735,23 @@ mod tests {
             _template: String,
             _reuse: bool,
             _args: Vec<u8>,
+            key: Vec<u8>,
+            _deadline_ms: u64,
         ) -> Result<u64, SubmitError> {
             if !self.accept {
                 return Err(SubmitError::ServerSaturated { max_queued: 4 });
             }
+            if !key.is_empty() {
+                if let Some(&orig) = self.dedup.get(&key) {
+                    return Ok(orig);
+                }
+            }
             let id = self.next;
             self.next += 1;
             self.jobs.insert(id, WireStatus::Queued);
+            if !key.is_empty() {
+                self.dedup.insert(key, id);
+            }
             Ok(id)
         }
         fn poll(&mut self, job: u64) -> WireStatus {
@@ -787,14 +814,24 @@ mod tests {
         Request::Hello { version: WIRE_VERSION, tenant: 3 }
     }
 
+    fn submit_req(name: &str) -> Request {
+        Request::Submit {
+            template: name.into(),
+            reuse: true,
+            args: vec![],
+            key: vec![],
+            deadline_ms: 0,
+        }
+    }
+
     #[test]
     fn pipelined_requests_answer_in_request_order() {
         let mut sm = ConnSm::default();
         let mut svc = MockSvc { accept: true, ..MockSvc::default() };
         let wire = frames(&[
             hello(),
-            Request::Submit { template: "a".into(), reuse: true, args: vec![] },
-            Request::Submit { template: "b".into(), reuse: true, args: vec![] },
+            submit_req("a"),
+            submit_req("b"),
             Request::Poll { job: 0 },
             Request::Stats,
         ]);
@@ -818,7 +855,7 @@ mod tests {
         sm.on_bytes(
             &frames(&[
                 hello(),
-                Request::Submit { template: "a".into(), reuse: true, args: vec![] },
+                submit_req("a"),
                 Request::Wait { job: 0 },
                 Request::Poll { job: 0 },
             ]),
@@ -864,7 +901,7 @@ mod tests {
         sm.on_bytes(
             &frames(&[
                 hello(),
-                Request::Submit { template: "a".into(), reuse: true, args: vec![] },
+                submit_req("a"),
                 Request::Subscribe { job: 0 },
             ]),
             &mut svc,
@@ -939,6 +976,28 @@ mod tests {
     }
 
     #[test]
+    fn keyed_submit_replay_answers_the_original_job_id() {
+        let mut sm = ConnSm::default();
+        let mut svc = MockSvc { accept: true, ..MockSvc::default() };
+        let keyed = Request::Submit {
+            template: "a".into(),
+            reuse: true,
+            args: vec![],
+            key: b"op-1".to_vec(),
+            deadline_ms: 0,
+        };
+        sm.on_bytes(&frames(&[hello(), keyed.clone(), keyed]), &mut svc);
+        let got = drain(&mut sm);
+        assert!(matches!(got[1], Response::Submitted { job: 0 }));
+        assert!(
+            matches!(got[2], Response::Submitted { job: 0 }),
+            "replay must answer the original id, got {:?}",
+            got[2]
+        );
+        assert_eq!(svc.jobs.len(), 1, "the replay admitted a duplicate job");
+    }
+
+    #[test]
     fn protocol_violations_answer_and_close() {
         // Request before Hello.
         let mut sm = ConnSm::default();
@@ -1004,7 +1063,7 @@ mod tests {
         sm.on_bytes(
             &frames(&[
                 hello(),
-                Request::Submit { template: "a".into(), reuse: true, args: vec![] },
+                submit_req("a"),
                 Request::Wait { job: 0 },
             ]),
             &mut svc,
@@ -1060,7 +1119,7 @@ mod tests {
     #[test]
     fn require_auth_gates_everything_but_the_handshake() {
         let gated = [
-            Request::Submit { template: "a".into(), reuse: true, args: vec![] },
+            submit_req("a"),
             Request::SubmitBatch { items: vec![BatchItem::template("a")] },
             Request::Poll { job: 0 },
             Request::Wait { job: 0 },
@@ -1116,7 +1175,7 @@ mod tests {
         assert!(!sm.should_close());
         // Post-handshake the connection works normally.
         sm.on_bytes(
-            &frames(&[Request::Submit { template: "a".into(), reuse: true, args: vec![] }]),
+            &frames(&[submit_req("a")]),
             &mut svc,
         );
         let got = drain(&mut sm);
@@ -1253,7 +1312,7 @@ mod tests {
             ..MockSvc::default()
         };
         sm.on_bytes(
-            &frames(&[hello(), Request::Submit { template: "a".into(), reuse: true, args: vec![] }]),
+            &frames(&[hello(), submit_req("a")]),
             &mut svc,
         );
         let got = drain(&mut sm);

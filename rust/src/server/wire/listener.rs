@@ -327,11 +327,18 @@ impl ConnService for ServerSvc<'_> {
         template: String,
         reuse: bool,
         args: Vec<u8>,
+        key: Vec<u8>,
+        deadline_ms: u64,
     ) -> Result<u64, SubmitError> {
         self.quota_gate(tenant)?;
         let submission =
             if reuse { Submission::Template(template) } else { Submission::Rebuild(template) };
-        let id = self.shared.server.try_submit(JobSpec { tenant, submission, args })?.0;
+        let deadline = (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms));
+        let id = self
+            .shared
+            .server
+            .try_submit(JobSpec { tenant, submission, args, key, deadline })?
+            .0;
         self.quota_admit(tenant, id);
         Ok(id)
     }
@@ -358,7 +365,8 @@ impl ConnService for ServerSvc<'_> {
             } else {
                 Submission::Rebuild(it.template)
             };
-            specs.push(JobSpec { tenant, submission, args: it.args });
+            let deadline = (it.deadline_ms > 0).then(|| Duration::from_millis(it.deadline_ms));
+            specs.push(JobSpec { tenant, submission, args: it.args, key: it.key, deadline });
         }
         let mut admitted = self.shared.server.try_submit_batch(specs).into_iter();
         results

@@ -460,8 +460,10 @@ impl ConnService for ShardSvc<'_> {
         template: String,
         reuse: bool,
         args: Vec<u8>,
+        key: Vec<u8>,
+        deadline_ms: u64,
     ) -> Result<u64, crate::server::protocol::SubmitError> {
-        self.base().submit(tenant, template, reuse, args)
+        self.base().submit(tenant, template, reuse, args, key, deadline_ms)
     }
 
     fn submit_batch(

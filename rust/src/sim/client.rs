@@ -8,18 +8,23 @@
 //!
 //! Duplicate-tolerant by construction: a duplicated `Submitted` ack
 //! whose job id is already bound is ignored, and responses arriving
-//! while nothing is awaited are dropped as stale. One consequence of
-//! at-least-once submission is worth naming: a client that times out
-//! waiting for a lost `Submitted` ack resubmits, so the server may run
-//! the job twice. The invariants are phrased server-side (every
-//! *accepted* job terminates; stats match the job table), so the sweep
-//! verifies exactly what the protocol actually guarantees.
+//! while nothing is awaited are dropped as stale.
+//!
+//! **Exactly-once submission:** every submit carries a deterministic
+//! idempotency key (stable per client/slot across resubmissions), so a
+//! client that times out waiting for a lost `Submitted` ack and replays
+//! gets the *original* job's id back from the server's dedup table —
+//! the job never runs twice. Invariant 6 enforces this end to end: the
+//! oracle records every keyed job that reaches a slot and flags any key
+//! with more than one execution. The `reconnect` fault profile attacks
+//! precisely this seam (acks withheld before binding, duplicated keyed
+//! frames, drain windows mid-submission).
 
 use std::collections::VecDeque;
 use std::io::Read;
 
 use super::engine::{req_name, resp_name, ActorId, EvKind, Sim};
-use super::faults::AuthHostility;
+use super::faults::{AuthHostility, ReconnectHostility};
 use super::net::CLIENT;
 use super::SimConfig;
 use crate::server::auth::scram::{self, ClientHandshake};
@@ -38,6 +43,13 @@ const WAIT_TIMEOUT_NS: u64 = 10_000_000_000;
 /// Reconnect backoff: start and cap (doubles per retry).
 const BACKOFF_START_NS: u64 = 1_000_000;
 const BACKOFF_CAP_NS: u64 = 32_000_000;
+
+/// Idempotency key of client `c`'s job slot `j` — deterministic and
+/// stable across resubmissions, which is the whole point: a replay
+/// after a lost ack must present the same key to dedup to the original.
+fn submit_key(c: usize, j: usize) -> Vec<u8> {
+    format!("c{c}-s{j}").into_bytes()
+}
 
 /// One step of the client script. `Submit`/`Wait` index into the
 /// client's job slots.
@@ -106,6 +118,11 @@ pub(crate) struct Client {
     pub challenge: Option<Vec<u8>>,
     /// Expected server signature of an honest client-final.
     pub expect_sig: Option<[u8; 32]>,
+    /// Reconnect hostility: when set, the next `Submitted` ack is
+    /// discarded and the connection torn down *without binding the id*
+    /// — modeling an ack lost after the server already processed the
+    /// submit. The keyed replay must then dedup, not duplicate.
+    pub sabotage_ack: bool,
 }
 
 impl Client {
@@ -154,6 +171,7 @@ impl Client {
             hs: None,
             challenge: None,
             expect_sig: None,
+            sabotage_ack: false,
         }
     }
 }
@@ -257,7 +275,17 @@ impl Sim {
             }
             Response::Submitted { job } => {
                 if let Op::Submit(j) = await_op {
-                    if self.clients[c].jobs.iter().any(|jb| jb.id == Some(job)) {
+                    if self.clients[c].sabotage_ack {
+                        // Hostile reset: the server processed the submit
+                        // but the ack "never arrived" — drop it, keep the
+                        // slot unbound, and let the keyed replay prove
+                        // exactly-once.
+                        self.clients[c].sabotage_ack = false;
+                        self.trace(format!(
+                            "client {c}: ack for job {job} sabotaged (reset before bind)"
+                        ));
+                        self.client_disconnect(c, "hostile reset before ack");
+                    } else if self.clients[c].jobs.iter().any(|jb| jb.id == Some(job)) {
                         // A duplicated ack for an already-bound job must
                         // not complete the op we are actually awaiting.
                         self.trace(format!("client {c}: duplicate ack for job {job} ignored"));
@@ -451,6 +479,7 @@ impl Sim {
                     continue;
                 }
             }
+            let mut dup_send = false;
             let req = match op {
                 Op::Hello => {
                     Request::Hello { version: WIRE_VERSION, tenant: self.clients[c].tenant.0 }
@@ -523,11 +552,39 @@ impl Sim {
                         Request::AuthResponse { data }
                     }
                 }
-                Op::Submit(j) => Request::Submit {
-                    template: self.clients[c].jobs[j].template.to_string(),
-                    reuse: true,
-                    args: Vec::new(),
-                },
+                Op::Submit(j) => {
+                    match self.plan.reconnect_hostility() {
+                        Some(ReconnectHostility::ResetMidSubmit) => {
+                            // Let the frame through; withhold the ack.
+                            self.trace(format!(
+                                "client {c}: hostile submit (ack will be sabotaged)"
+                            ));
+                            self.clients[c].sabotage_ack = true;
+                        }
+                        Some(ReconnectHostility::ReplayDuplicate) => {
+                            // The same keyed frame twice, back to back —
+                            // without dedup the second ack carries a
+                            // fresh id and invariant 6 fires.
+                            self.trace(format!("client {c}: hostile submit (duplicated frame)"));
+                            dup_send = true;
+                        }
+                        Some(ReconnectHostility::DrainWhileSubmitting) => {
+                            // The server drains as the frame is sent;
+                            // the retryable `Draining` answer must back
+                            // off and replay after the window closes.
+                            self.trace(format!("client {c}: hostile submit (drain window)"));
+                            self.begin_drain_window();
+                        }
+                        None => {}
+                    }
+                    Request::Submit {
+                        template: self.clients[c].jobs[j].template.to_string(),
+                        reuse: true,
+                        args: Vec::new(),
+                        key: submit_key(c, j),
+                        deadline_ms: 0,
+                    }
+                }
                 Op::SubmitBatch => {
                     let slots: Vec<usize> = self.clients[c]
                         .jobs
@@ -542,7 +599,10 @@ impl Sim {
                     }
                     let items: Vec<BatchItem> = slots
                         .iter()
-                        .map(|&j| BatchItem::template(self.clients[c].jobs[j].template))
+                        .map(|&j| {
+                            BatchItem::template(self.clients[c].jobs[j].template)
+                                .with_key(submit_key(c, j))
+                        })
                         .collect();
                     self.clients[c].batch_slots = slots;
                     Request::SubmitBatch { items }
@@ -554,7 +614,9 @@ impl Sim {
             self.trace(format!("client {c}: -> {}", req_name(&req)));
             let sent = {
                 let mut ws = self.net.stream(conn, CLIENT);
-                codec::write_frame(&mut ws, &req.encode()).is_ok()
+                let bytes = req.encode();
+                codec::write_frame(&mut ws, &bytes).is_ok()
+                    && (!dup_send || codec::write_frame(&mut ws, &bytes).is_ok())
             };
             if !sent {
                 self.client_disconnect(c, "send failed");
@@ -605,6 +667,7 @@ impl Sim {
         cl.hs = None;
         cl.challenge = None;
         cl.expect_sig = None;
+        cl.sabotage_ack = false;
         let mut ops: VecDeque<Op> = VecDeque::new();
         ops.push_back(Op::Hello);
         if cl.auth {

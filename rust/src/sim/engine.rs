@@ -19,7 +19,9 @@ use std::cmp::Reverse;
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 
 use super::client::Client;
-use super::faults::{Decision, FaultCounts, FaultPlan, FaultProfile, DUP_NS, SLOW_CHUNK_NS};
+use super::faults::{
+    Decision, FaultCounts, FaultPlan, FaultProfile, DRAIN_NS, DUP_NS, SLOW_CHUNK_NS,
+};
 use super::net::{Net, Segment, CLIENT, SERVER};
 use super::oracle::Oracle;
 use super::server::{ConnHandler, SimServer};
@@ -61,6 +63,8 @@ pub(crate) enum EvKind {
     TaskDone { worker: usize, slot: usize, tid: TaskId, dur: u64 },
     /// A client's per-op response timer expired.
     Timeout { client: usize, op_seq: u64 },
+    /// A hostile drain window closes; the server admits again.
+    DrainEnd,
 }
 
 /// Heap entry. Ordered by `(tick, prio, seq)` only — `seq` is unique,
@@ -206,6 +210,7 @@ impl Sim {
                     self.on_task_done(worker, slot, tid, dur)
                 }
                 EvKind::Timeout { client, op_seq } => self.on_timeout(client, op_seq),
+                EvKind::DrainEnd => self.end_drain(),
             }
             self.pump();
             self.flush_net();
@@ -312,6 +317,27 @@ impl Sim {
         let owner = self.net.owner[conn];
         self.push(self.now + 1, EvKind::Wake(ActorId::Conn(conn)));
         self.push(self.now + 1, EvKind::Wake(ActorId::Client(owner)));
+    }
+
+    /// Open a hostile drain window: submissions answer the retryable
+    /// `Draining` rejection until the scheduled `DrainEnd` fires, so
+    /// every window provably closes and termination holds.
+    pub(crate) fn begin_drain_window(&mut self) {
+        if self.server.draining {
+            return;
+        }
+        self.server.draining = true;
+        self.trace("server: drain begins (hostility)".into());
+        self.push(self.now + DRAIN_NS, EvKind::DrainEnd);
+    }
+
+    fn end_drain(&mut self) {
+        if self.server.draining {
+            self.server.draining = false;
+            self.trace("server: drain ends".into());
+            // Clients parked in backoff re-probe on their own timers;
+            // nothing to wake here.
+        }
     }
 
     // ---- end-of-run checks ----------------------------------------------

@@ -27,6 +27,9 @@ pub(crate) const SLOW_CHUNKS: u32 = 4;
 pub(crate) const DUP_NS: u64 = 9_000;
 /// How long a partition lasts before it heals.
 pub(crate) const PARTITION_NS: u64 = 400_000;
+/// How long a hostile drain window stays open before the server
+/// resumes admitting (reconnect profile: `DrainWhileSubmitting`).
+pub(crate) const DRAIN_NS: u64 = 300_000;
 
 /// Which fault class a sweep injects. `Chaos` mixes all of them.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -56,12 +59,19 @@ pub enum FaultProfile {
     /// network itself stays clean — the adversary is the peer, not the
     /// wire — so frame-fault classes never fire under this profile.
     Auth,
+    /// Reliability hostility: connections reset mid-submit (the client
+    /// must reconnect and replay under its idempotency key), already
+    /// acknowledged submissions are replayed verbatim, and the server
+    /// begins a drain in the middle of a submit burst. Exercises the
+    /// exactly-once dedup path end to end; oracle invariant 6 (at most
+    /// one executed job per key) is the teeth.
+    Reconnect,
 }
 
-/// Every non-`None` profile, in the order CI sweeps them. `Auth` is
-/// appended last so the pre-existing profiles' pinned seeds replay
+/// Every non-`None` profile, in the order CI sweeps them. New profiles
+/// are appended last so the pre-existing profiles' pinned seeds replay
 /// byte-identically.
-pub const ALL_PROFILES: [FaultProfile; 9] = [
+pub const ALL_PROFILES: [FaultProfile; 10] = [
     FaultProfile::Drop,
     FaultProfile::Dup,
     FaultProfile::Reorder,
@@ -71,6 +81,7 @@ pub const ALL_PROFILES: [FaultProfile; 9] = [
     FaultProfile::PartialFrame,
     FaultProfile::Chaos,
     FaultProfile::Auth,
+    FaultProfile::Reconnect,
 ];
 
 impl FaultProfile {
@@ -87,6 +98,7 @@ impl FaultProfile {
             "partial-frame" => Self::PartialFrame,
             "chaos" => Self::Chaos,
             "auth" => Self::Auth,
+            "reconnect" => Self::Reconnect,
             _ => return None,
         })
     }
@@ -103,6 +115,7 @@ impl FaultProfile {
             Self::PartialFrame => "partial-frame",
             Self::Chaos => "chaos",
             Self::Auth => "auth",
+            Self::Reconnect => "reconnect",
         }
     }
 }
@@ -121,6 +134,10 @@ pub struct FaultCounts {
     /// client-final). Not a frame class: excluded from [`Self::classes`]
     /// so chaos coverage accounting is unchanged.
     pub auths: u64,
+    /// Reliability-hostility acts (deliberate reset-mid-submit,
+    /// duplicate replay of an acked submission, drain-while-submitting).
+    /// Like `auths`, not a frame class — excluded from [`Self::classes`].
+    pub reconnects: u64,
 }
 
 impl FaultCounts {
@@ -133,6 +150,7 @@ impl FaultCounts {
             + self.partitions
             + self.partials
             + self.auths
+            + self.reconnects
     }
 
     pub fn merge(&mut self, o: &FaultCounts) {
@@ -144,6 +162,7 @@ impl FaultCounts {
         self.partitions += o.partitions;
         self.partials += o.partials;
         self.auths += o.auths;
+        self.reconnects += o.reconnects;
     }
 
     /// `(class name, count)` pairs, for reporting.
@@ -172,6 +191,7 @@ impl FaultCounts {
             FaultProfile::PartialFrame => self.partials,
             FaultProfile::Chaos => self.total(),
             FaultProfile::Auth => self.auths,
+            FaultProfile::Reconnect => self.reconnects + self.resets,
         }
     }
 }
@@ -217,6 +237,24 @@ pub(crate) enum AuthHostility {
     /// Replay the previous successful client-final verbatim (the
     /// server's fresh nonce must make it stale).
     Replay,
+}
+
+/// A hostile act a simulated client (or the harness) commits under the
+/// [`FaultProfile::Reconnect`] profile. Every act must leave the
+/// exactly-once ledger intact: a duplicated execution for one
+/// idempotency key is oracle invariant 6 firing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum ReconnectHostility {
+    /// Drop the connection deliberately right after a submit is sent,
+    /// before its ack can arrive; the client reconnects and replays
+    /// under the same idempotency key.
+    ResetMidSubmit,
+    /// Replay an already-acknowledged submission verbatim — the dedup
+    /// table must answer the original job's id, not admit a twin.
+    ReplayDuplicate,
+    /// Begin a server drain in the middle of the submit burst; the
+    /// client absorbs `Draining` rejections and resumes after heal.
+    DrainWhileSubmitting,
 }
 
 /// Classes eligible for probabilistic/forced injection, in forced order.
@@ -288,6 +326,16 @@ impl FaultPlan {
                 FaultProfile::PartialFrame => 60,
                 _ => 0,
             },
+            // Reconnect keeps the wire hostile in exactly one way —
+            // connection resets — so every recovery is a reconnect +
+            // keyed replay; the other frame classes stay quiet.
+            FaultProfile::Reconnect => {
+                if class == FaultProfile::Reset {
+                    80
+                } else {
+                    0
+                }
+            }
             p if p == class => {
                 if class == FaultProfile::Reset {
                     80
@@ -303,7 +351,9 @@ impl FaultPlan {
     fn force_at(&self, idx: usize, class: FaultProfile) -> u64 {
         if self.profile == FaultProfile::Chaos {
             3 + 2 * idx as u64
-        } else if self.profile == class {
+        } else if self.profile == class
+            || (self.profile == FaultProfile::Reconnect && class == FaultProfile::Reset)
+        {
             2
         } else {
             u64::MAX
@@ -443,6 +493,35 @@ impl FaultPlan {
         };
         if pick.is_some() {
             self.counts.auths += 1;
+            self.budget = self.budget.saturating_sub(1);
+        }
+        pick
+    }
+
+    /// Decide whether the next reliability act turns hostile, and how.
+    /// `None` outside the [`FaultProfile::Reconnect`] profile — the plan
+    /// RNG is untouched then, so every other profile's pinned seeds
+    /// replay unchanged. Forced coverage: the first three acts walk
+    /// every hostility class in declaration order, so any single seed
+    /// exercises reset-mid-submit, duplicate replay, *and* a drain
+    /// window by construction.
+    pub fn reconnect_hostility(&mut self) -> Option<ReconnectHostility> {
+        if self.profile != FaultProfile::Reconnect || self.budget == 0 {
+            return None;
+        }
+        let pick = match self.counts.reconnects {
+            0 => Some(ReconnectHostility::ResetMidSubmit),
+            1 => Some(ReconnectHostility::ReplayDuplicate),
+            2 => Some(ReconnectHostility::DrainWhileSubmitting),
+            _ => match self.rng.below(1_000) {
+                x if x < 150 => Some(ReconnectHostility::ResetMidSubmit),
+                x if x < 280 => Some(ReconnectHostility::ReplayDuplicate),
+                x if x < 340 => Some(ReconnectHostility::DrainWhileSubmitting),
+                _ => None,
+            },
+        };
+        if pick.is_some() {
+            self.counts.reconnects += 1;
             self.budget = self.budget.saturating_sub(1);
         }
         pick

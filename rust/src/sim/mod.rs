@@ -28,7 +28,7 @@
 //! kernels are not run — the oracle's task-count invariants are
 //! structural, so they hold regardless).
 //!
-//! Per seed, the oracle asserts the five DST invariants:
+//! Per seed, the oracle asserts the six DST invariants:
 //! 1. every job the server accepted reaches a terminal status
 //!    (no lost jobs, no stuck clients, no livelock past the event budget);
 //! 2. per-job task counts match a fault-free reference run of the same
@@ -44,7 +44,11 @@
 //! 5. when authentication is enabled, no accepted job belongs to a
 //!    tenant that never completed a SCRAM handshake — hostile clients
 //!    (wrong proofs, truncated handshakes, replayed finals: the `auth`
-//!    fault profile) must never smuggle work past the gate.
+//!    fault profile) must never smuggle work past the gate;
+//! 6. for every `(tenant, idempotency key)`, at most one job's tasks
+//!    ever execute — a submission replayed after a lost ack, a reset,
+//!    or a drain window (the `reconnect` fault profile's hostilities)
+//!    must dedup to the original job, never admit a duplicate.
 //!
 //! Entry points: [`run_seed`] (one seed), [`run_sweep`] (a seed window —
 //! what the CI `dst-sweep` gate runs via `repro sim --seeds A..B`). See

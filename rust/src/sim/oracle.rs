@@ -23,6 +23,10 @@ pub(crate) struct Oracle {
     pub observed: BTreeMap<String, usize>,
     /// Reference counts from the fault-free run, when sweeping.
     reference: Option<BTreeMap<String, usize>>,
+    /// `(tenant, idempotency key)` → jobs that reached a slot under that
+    /// key. Invariant 6: the list never grows past one — a replayed
+    /// submission must dedup to the original job, never execute twice.
+    executed_keys: BTreeMap<(u32, Vec<u8>), Vec<u64>>,
     pub violations: Vec<String>,
 }
 
@@ -33,6 +37,7 @@ impl Oracle {
             locks: BTreeMap::new(),
             observed: BTreeMap::new(),
             reference: reference.cloned(),
+            executed_keys: BTreeMap::new(),
             violations: Vec::new(),
         }
     }
@@ -89,6 +94,23 @@ impl Oracle {
                     }
                 }
             }
+        }
+    }
+
+    /// A job carrying an idempotency key reached a slot. Invariant 6:
+    /// for every `(tenant, key)` at most one job ever executes — replays
+    /// must resolve to the original id, not admit a duplicate.
+    pub fn on_keyed_exec(&mut self, tenant: u32, key: &[u8], job: u64) {
+        let jobs = self.executed_keys.entry((tenant, key.to_vec())).or_default();
+        jobs.push(job);
+        if jobs.len() > 1 {
+            let listing: Vec<String> = jobs.iter().map(|j| format!("job {j}")).collect();
+            let shown = String::from_utf8_lossy(key).into_owned();
+            self.violation(format!(
+                "invariant 6: tenant {tenant} key {shown:?} executed {} jobs: {}",
+                jobs.len(),
+                listing.join(", ")
+            ));
         }
     }
 

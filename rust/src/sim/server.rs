@@ -32,6 +32,7 @@ use crate::server::auth::{scram, AuthMode, QuotaConfig, TenantRecord, TenantRegi
 use crate::server::protocol::{JobId, JobReport, JobStatus, SubmitError, TenantId};
 use crate::server::registry::{JobGraph, Registry};
 use crate::server::shard::route_shard;
+use crate::server::{DedupTable, DRAIN_RETRY_MS};
 use crate::server::stats::ServerStats;
 use crate::server::wire::conn::{ConnService, ConnSm};
 use crate::server::wire::{Request, Response, WireStatus, WireStream};
@@ -57,6 +58,10 @@ pub(crate) struct SimQueued {
     pub reuse: bool,
     pub args: Vec<u8>,
     pub enqueued: u64,
+    /// Idempotency key carried by the submission (empty = none).
+    pub key: Vec<u8>,
+    /// Absolute virtual-time deadline, if the submission carried one.
+    pub deadline: Option<u64>,
 }
 
 /// An admitted job occupying a slot.
@@ -120,6 +125,12 @@ pub(crate) struct SimServer {
     pub auth_registry: Option<TenantRegistry>,
     /// Server-side SCRAM nonces, on their own child stream of the seed.
     pub auth_rng: Rng,
+    /// The **real** idempotency-key dedup table, fed virtual time — a
+    /// replayed keyed submission returns the original job's id.
+    pub dedup: DedupTable,
+    /// Hostile drain window (reconnect profile): while set, new
+    /// submissions answer the retryable `Draining` rejection.
+    pub draining: bool,
 }
 
 impl SimServer {
@@ -160,6 +171,8 @@ impl SimServer {
             stats: ServerStats::new(),
             auth_registry,
             auth_rng: Rng::new(Rng::split(seed, STREAM_AUTH)),
+            dedup: DedupTable::new(16_384, std::time::Duration::from_secs(600)),
+            draining: false,
         }
     }
 }
@@ -182,8 +195,10 @@ impl ConnService for SimSvc<'_> {
         template: String,
         reuse: bool,
         args: Vec<u8>,
+        key: Vec<u8>,
+        deadline_ms: u64,
     ) -> Result<u64, SubmitError> {
-        let out = self.sim.server_submit(tenant, template, reuse, args);
+        let out = self.sim.server_submit(tenant, template, reuse, args, key, deadline_ms);
         if let Ok(id) = out {
             let conn = self.conn;
             self.sim.trace(format!("conn {conn}: job {id} submitted"));
@@ -299,21 +314,46 @@ impl ConnService for SimSvc<'_> {
 impl Sim {
     // ---- job lifecycle ---------------------------------------------------
 
-    /// The simulated `try_submit`: allocate an id, enqueue under the
-    /// tenant's admission accounting.
+    /// The simulated `try_submit`: drain gate, idempotency-key dedup,
+    /// then allocate an id and enqueue under the tenant's admission
+    /// accounting — the same admission ladder as the real server, on
+    /// virtual time.
     fn server_submit(
         &mut self,
         tenant: TenantId,
         template: String,
         reuse: bool,
         args: Vec<u8>,
+        key: Vec<u8>,
+        deadline_ms: u64,
     ) -> Result<u64, SubmitError> {
+        if self.server.draining {
+            return Err(SubmitError::Draining { retry_ms: DRAIN_RETRY_MS });
+        }
+        if !key.is_empty() {
+            if let Some(orig) = self.server.dedup.lookup(tenant, &key, self.now) {
+                self.trace(format!("job {} deduped (key replay)", orig.0));
+                return Ok(orig.0);
+            }
+        }
         let id = self.server.next_job;
-        let q = SimQueued { id, template, reuse, args, enqueued: self.now };
+        let deadline = (deadline_ms > 0).then(|| self.now + deadline_ms * 1_000_000);
+        let q = SimQueued {
+            id,
+            template,
+            reuse,
+            args,
+            enqueued: self.now,
+            key: key.clone(),
+            deadline,
+        };
         self.server.admission.try_push(tenant, q)?;
         self.server.next_job += 1;
         self.server.jobs.insert(id, JobStatus::Queued);
         self.server.tenant_of.insert(id, tenant);
+        if !key.is_empty() {
+            self.server.dedup.insert(tenant, key, JobId(id), self.now);
+        }
         Ok(id)
     }
 
@@ -342,6 +382,18 @@ impl Sim {
     /// always 1 here.)
     fn pump_admission(&mut self) {
         while let Some((tenant, q)) = self.server.admission.try_admit() {
+            // Deadline shedding: a job whose budget lapsed while queued
+            // fails terminally instead of burning worker time.
+            if q.deadline.is_some_and(|d| self.now >= d) {
+                self.trace(format!("job {} shed: deadline exceeded in queue", q.id));
+                self.fail_job(q.id, tenant, "deadline exceeded".into());
+                continue;
+            }
+            // Invariant 6 ledger: a keyed job is "executed" once it
+            // reaches a slot — at most one job per key may ever do so.
+            if !q.key.is_empty() {
+                self.oracle.on_keyed_exec(tenant.0, &q.key, q.id);
+            }
             let out = self.server.registry.checkout_many(&q.template, &q.args, q.reuse, 1);
             let (graph, reused, _wall_setup_ns) = match out {
                 // Wall-clock setup time is discarded: it must never

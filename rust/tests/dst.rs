@@ -9,8 +9,11 @@
 //! * Coverage: pinned hostile seeds inject every fault class at least
 //!   once (forced injection makes this hold by construction, so these
 //!   are regression pins, not flaky probes), and the seeds pass the
-//!   five oracle invariants — including invariant 5, that no job ever
-//!   belongs to a tenant that did not complete a SCRAM handshake.
+//!   six oracle invariants — including invariant 5, that no job ever
+//!   belongs to a tenant that did not complete a SCRAM handshake, and
+//!   invariant 6, that at most one job ever executes per
+//!   `(tenant, idempotency key)` even when the `reconnect` profile
+//!   replays submissions after sabotaged acks and drain windows.
 //! * The `wait_slice` satellite: the config knob replaces the
 //!   hardcoded wait-loop slice and clamps to a sane floor.
 
@@ -110,7 +113,7 @@ fn zero_fault_sim_matches_real_loopback_run() {
 /// Pinned hostile seeds, one per fault class. Forced injection
 /// guarantees the class fires within the first few frames, so each pin
 /// asserts both coverage (the class was actually exercised) and
-/// survival (the four invariants held under it). These seeds are
+/// survival (the six invariants held under it). These seeds are
 /// regression anchors: a behavior change under any of them shows up as
 /// a deterministic diff, not a flake.
 #[test]
@@ -126,6 +129,7 @@ fn pinned_hostile_seeds_per_fault_class() {
         (FaultProfile::PartialFrame, 23),
         (FaultProfile::Chaos, 17),
         (FaultProfile::Auth, 29),
+        (FaultProfile::Reconnect, 31),
     ] {
         let outcome = run_seed(&cfg, seed, profile, None);
         assert!(
@@ -188,7 +192,7 @@ fn every_profile_passes_a_short_sweep() {
 /// Satellite: the reactor scenario — every client submits through one
 /// pipelined `SubmitBatch` frame, so the sweep drives the connection
 /// state machine's ordered response queue, its `Wait` holes, and the
-/// batched admission path — holds the four invariants under the
+/// batched admission path — holds the six invariants under the
 /// byte-granular partial-frame profile and under chaos.
 #[test]
 fn reactor_scenario_survives_partial_frames_and_chaos() {
@@ -253,6 +257,64 @@ fn auth_profile_survives_hostile_handshakes() {
         assert!(
             report.faults.for_profile(FaultProfile::Auth) > 0,
             "{name} scenario injected no hostile auth act over the window"
+        );
+    }
+}
+
+/// Tentpole regression: the pre-PR duplicate-job behavior is now a
+/// *caught* bug, not a silent one. Seed 31 under the `reconnect`
+/// profile forces all three hostilities — a reset that swallows a
+/// Submit's ack (the client replays it), a duplicate frame of a keyed
+/// Submit, and a drain window mid-submission — so every one of those
+/// replays reaches the server. With the dedup table they all resolve
+/// to the original job and invariant 6 holds; without it (the pre-PR
+/// at-least-once client), the replayed submission admits a second job
+/// under the same key and this exact seed fails with an
+/// "invariant 6" violation. The assertions below pin both halves:
+/// hostile acts actually fired, dedup actually absorbed a replay, and
+/// the run is green.
+#[test]
+fn reconnect_regression_seed_requires_dedup() {
+    let cfg = SimConfig::small();
+    let outcome = run_seed(&cfg, 31, FaultProfile::Reconnect, None);
+    assert!(
+        outcome.ok(),
+        "seed 31 under reconnect violated invariants: {:?}\n--- log ---\n{}",
+        outcome.violations,
+        outcome.log_text()
+    );
+    assert!(
+        outcome.faults.reconnects >= 3,
+        "seed 31 must force all three reconnect hostilities, got {:?}",
+        outcome.faults
+    );
+    assert!(
+        outcome.log_text().contains("deduped (key replay)"),
+        "seed 31 must actually exercise the dedup path — without it this \
+         seed admits a duplicate job and trips invariant 6:\n{}",
+        outcome.log_text()
+    );
+}
+
+/// The `reconnect` profile holds all six invariants across sweep
+/// windows on both submission shapes: serial `Submit`s (small) and the
+/// reactor's pipelined `SubmitBatch` (reactor scenario, authenticated).
+#[test]
+fn reconnect_profile_sweeps_green_on_both_scenarios() {
+    for (name, cfg) in
+        [("small", SimConfig::small()), ("reactor", SimConfig::reactor_scenario())]
+    {
+        let report = run_sweep(&cfg, 0, 12, FaultProfile::Reconnect);
+        assert!(
+            report.ok(),
+            "{name} scenario under reconnect: failing seeds {:?}; first log:\n{}",
+            report.failing_seeds(),
+            report.failures.first().map(|o| o.log_text()).unwrap_or_default()
+        );
+        assert_eq!(report.passed, 12);
+        assert!(
+            report.faults.for_profile(FaultProfile::Reconnect) > 0,
+            "{name} scenario injected no reconnect hostility over the window"
         );
     }
 }

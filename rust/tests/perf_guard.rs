@@ -172,6 +172,51 @@ fn quota_book_admission_cost_bounded() {
     assert!(ns_per_op < 50_000.0, "quota accounting regressed: {ns_per_op:.0} ns/op");
 }
 
+/// Tentpole guard: the idempotency dedup table sits on the same
+/// admission hot path as the quota book, so one miss-lookup + insert
+/// round trip must stay at hash-map cost even at the 10k-key working
+/// set the LRU bound allows — < 5 µs/op, per the reliability layer's
+/// admission budget. A complexity bug (a scan over all keys per
+/// lookup, an eviction pass per insert) blows through this by orders
+/// of magnitude; hash lookups sit at tens-to-hundreds of ns.
+#[test]
+fn dedup_table_lookup_cost_bounded() {
+    use quicksched::server::{DedupTable, JobId, TenantId};
+    use std::time::Duration;
+    let mut table = DedupTable::new(16_384, Duration::from_secs(600));
+    // Populate a 10k-key steady state across 64 tenants.
+    for i in 0..10_000u64 {
+        let key = format!("warm-{i}").into_bytes();
+        table.insert(TenantId((i % 64) as u32), key, JobId(i), i);
+    }
+    assert!(table.len() >= 10_000, "warm set evicted below 10k keys");
+    let iters: u64 = if cfg!(debug_assertions) { 50_000 } else { 200_000 };
+    let t0 = std::time::Instant::now();
+    let mut now_ns = 10_000u64;
+    for i in 0..iters {
+        now_ns += 1_000;
+        // Alternate the admission path's two shapes: a replay hit on a
+        // warm key, and a fresh miss + insert (the common case).
+        if i % 2 == 0 {
+            let k = i % 10_000;
+            let key = format!("warm-{k}").into_bytes();
+            let hit = table.lookup(TenantId((k % 64) as u32), &key, now_ns);
+            assert!(hit.is_some(), "warm key {k} unexpectedly evicted/expired");
+        } else {
+            let tenant = TenantId((i % 64) as u32);
+            let key = format!("fresh-{}", i % 4_096).into_bytes();
+            if table.lookup(tenant, &key, now_ns).is_none() {
+                table.insert(tenant, key, JobId(i), now_ns);
+            }
+        }
+    }
+    let ns_per_op = t0.elapsed().as_nanos() as f64 / iters as f64;
+    eprintln!("dedup table: {ns_per_op:.0} ns per lookup(+insert) at 10k+ keys");
+    // < 5 µs/op release budget; debug builds get the usual ~10x slack.
+    let ceiling = if cfg!(debug_assertions) { 50_000.0 } else { 5_000.0 };
+    assert!(ns_per_op < ceiling, "dedup admission cost regressed: {ns_per_op:.0} ns/op");
+}
+
 /// Same contention shape through the real threaded executor.
 #[test]
 fn pathological_contention_threaded() {

@@ -1,0 +1,202 @@
+//! Property tests for the reliability layer (100 seeds, crate-own PRNG
+//! — no proptest in the offline registry): the client's backoff ladder
+//! stays within its documented envelope on the seeded jitter stream,
+//! the server's dedup table never exceeds its bound and readmits
+//! expired keys, a deadline-0 job is never dispatched, and a replayed
+//! `Submit` carrying the same idempotency key returns the original
+//! `JobId` over a raw socket.
+
+use std::time::Duration;
+
+use quicksched::client::RetryPolicy;
+use quicksched::server::{
+    synthetic_template, DedupTable, JobId, JobSpec, JobStatus, ListenAddr, SchedServer,
+    ServerConfig, SubmitError, TenantId, WireListener,
+};
+use quicksched::util::rng::Rng;
+
+const SEEDS: u64 = 100;
+
+/// (a) Backoff delays: for every attempt `n`, the jittered delay drawn
+/// from the [`Rng::split`] stream lies in `[base, min(base·2ⁿ, cap)]`,
+/// and the whole ladder is a deterministic function of `(seed, tenant)`
+/// — two clients configured alike back off identically.
+#[test]
+fn backoff_delays_stay_within_envelope_and_are_deterministic() {
+    for seed in 0..SEEDS {
+        let mut cfg_rng = Rng::new(seed ^ 0xBAC0FF);
+        let base_ms = 1 + cfg_rng.below(50);
+        let cap_ms = base_ms + cfg_rng.below(2_000);
+        let policy = RetryPolicy {
+            base: Duration::from_millis(base_ms),
+            cap: Duration::from_millis(cap_ms),
+            budget: Duration::from_secs(30),
+            seed,
+        };
+        let tenant = cfg_rng.below(16);
+        let mut jitter = Rng::new(Rng::split(seed, tenant));
+        let mut replay = Rng::new(Rng::split(seed, tenant));
+        for attempt in 0..10u32 {
+            let d = policy.delay(attempt, &mut jitter);
+            let base = policy.base.as_nanos() as u64;
+            let cap = (policy.cap.as_nanos() as u64).max(base);
+            let ceil = base
+                .saturating_mul(1u64.checked_shl(attempt).unwrap_or(u64::MAX))
+                .min(cap);
+            let got = d.as_nanos() as u64;
+            assert!(
+                got >= base && got <= ceil,
+                "seed {seed} attempt {attempt}: delay {got}ns outside [{base}, {ceil}]ns"
+            );
+            assert_eq!(
+                d,
+                policy.delay(attempt, &mut replay),
+                "seed {seed} attempt {attempt}: jitter stream not deterministic"
+            );
+        }
+    }
+}
+
+/// (b) The dedup table never grows past its bound, no matter the
+/// insert/lookup mix, and an entry past its TTL readmits: the lookup
+/// reports it absent and a re-insert binds the key to the new job.
+#[test]
+fn dedup_table_bounded_and_expired_keys_readmit() {
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed ^ 0xDED0_9);
+        let cap = 1 + rng.index(64);
+        let ttl = Duration::from_millis(1 + rng.below(500));
+        let mut table = DedupTable::new(cap, ttl);
+        let mut now_ns: u64 = 0;
+        for op in 0..400u64 {
+            now_ns += rng.below(ttl.as_nanos() as u64 / 4 + 1);
+            let tenant = TenantId(rng.below(3) as u32);
+            let key = format!("k{}", rng.index(cap * 2)).into_bytes();
+            if rng.chance(0.6) {
+                table.insert(tenant, key, JobId(op), now_ns);
+            } else {
+                table.lookup(tenant, &key, now_ns);
+            }
+            assert!(
+                table.len() <= cap,
+                "seed {seed} op {op}: {} entries exceed cap {cap}",
+                table.len()
+            );
+        }
+
+        // Expiry: a fresh key is a hit within the TTL, then readmits.
+        let mut table = DedupTable::new(cap, ttl);
+        let t0 = now_ns;
+        table.insert(TenantId(0), b"once".to_vec(), JobId(1), t0);
+        assert_eq!(
+            table.lookup(TenantId(0), b"once", t0 + ttl.as_nanos() as u64 / 2),
+            Some(JobId(1)),
+            "seed {seed}: live entry must hit"
+        );
+        let expired_at = t0 + ttl.as_nanos() as u64;
+        assert_eq!(
+            table.lookup(TenantId(0), b"once", expired_at),
+            None,
+            "seed {seed}: expired entry must readmit"
+        );
+        table.insert(TenantId(0), b"once".to_vec(), JobId(2), expired_at);
+        assert_eq!(
+            table.lookup(TenantId(0), b"once", expired_at + 1),
+            Some(JobId(2)),
+            "seed {seed}: readmitted key binds to the new job"
+        );
+    }
+}
+
+/// (c) A job submitted with a zero deadline is never dispatched: across
+/// 100 seeded servers (varying worker counts and seeds, with live
+/// competing jobs), every deadline-0 job either bounces at admission
+/// (`DeadlineUnmeetable`, once the wait estimate is warm) or terminates
+/// as `Failed("deadline exceeded")` — and never `Done`.
+#[test]
+fn deadline_zero_job_is_never_dispatched() {
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed ^ 0xDEAD_0);
+        let workers = 1 + rng.index(3);
+        let server = SchedServer::start(ServerConfig::new(workers).with_seed(seed));
+        server.register_template("syn", synthetic_template(8, 4, 0xFEED, 0));
+
+        // Interleave normal jobs so the deadline-0 one races real work.
+        let mut doomed = Vec::new();
+        let mut normal = Vec::new();
+        for j in 0..4 {
+            normal.push(server.submit(JobSpec::template(TenantId(j), "syn")));
+            match server
+                .try_submit(JobSpec::template(TenantId(j), "syn").with_deadline(Duration::ZERO))
+            {
+                Ok(id) => doomed.push(id),
+                // Rejected before admission: also never dispatched.
+                Err(SubmitError::DeadlineUnmeetable { .. }) => {}
+                Err(e) => panic!("seed {seed}: unexpected rejection {e}"),
+            }
+        }
+        for id in doomed {
+            match server.wait(id) {
+                JobStatus::Failed(m) => {
+                    assert_eq!(m, "deadline exceeded", "seed {seed}: wrong failure")
+                }
+                other => panic!("seed {seed}: deadline-0 job {id} reached {other:?}"),
+            }
+        }
+        for id in normal {
+            assert!(
+                matches!(server.wait(id), JobStatus::Done(_)),
+                "seed {seed}: normal job {id} must still complete"
+            );
+        }
+        server.drain();
+    }
+}
+
+/// A replayed `Submit` with the same idempotency key returns the
+/// original `JobId` — raw socket, no client-library help: the exact
+/// frame a reconnecting client resends after a lost ack.
+#[test]
+fn raw_socket_replay_returns_original_job_id() {
+    use quicksched::server::wire::codec::{
+        read_frame, write_frame, Request, Response, WIRE_VERSION,
+    };
+    use std::sync::Arc;
+
+    let server = SchedServer::start(ServerConfig::new(1).with_seed(0x1DEA));
+    server.register_template("syn", synthetic_template(8, 4, 0xFEED, 0));
+    let server = Arc::new(server);
+    let listener = WireListener::start(Arc::clone(&server), &ListenAddr::parse("127.0.0.1:0"))
+        .expect("binding loopback listener");
+
+    let mut s = std::net::TcpStream::connect(listener.local_addr()).unwrap();
+    write_frame(&mut s, &Request::Hello { version: WIRE_VERSION, tenant: 3 }.encode()).unwrap();
+    assert!(matches!(
+        Response::decode(&read_frame(&mut s).unwrap()).unwrap(),
+        Response::HelloOk { .. }
+    ));
+    let submit = Request::Submit {
+        template: "syn".into(),
+        reuse: true,
+        args: vec![],
+        key: b"prop-replay".to_vec(),
+        deadline_ms: 0,
+    };
+    write_frame(&mut s, &submit.encode()).unwrap();
+    let original = match Response::decode(&read_frame(&mut s).unwrap()).unwrap() {
+        Response::Submitted { job } => job,
+        other => panic!("expected Submitted, got {other:?}"),
+    };
+    for replay in 0..3 {
+        write_frame(&mut s, &submit.encode()).unwrap();
+        match Response::decode(&read_frame(&mut s).unwrap()).unwrap() {
+            Response::Submitted { job } => {
+                assert_eq!(job, original, "replay {replay} must dedup to the original id")
+            }
+            other => panic!("expected Submitted, got {other:?}"),
+        }
+    }
+    assert!(matches!(server.wait(JobId(original)), JobStatus::Done(_)));
+    listener.shutdown();
+    drop(server);
+}

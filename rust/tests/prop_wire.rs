@@ -61,6 +61,8 @@ fn rand_request(rng: &mut Rng) -> Request {
             template: rand_string(rng, 40),
             reuse: rng.chance(0.5),
             args: rand_bytes(rng, 64),
+            key: rand_bytes(rng, 24),
+            deadline_ms: rng.next_u64() >> rng.index(64),
         },
         2 => Request::Poll { job: rng.next_u64() },
         3 => Request::Wait { job: rng.next_u64() },
@@ -76,6 +78,8 @@ fn rand_request(rng: &mut Rng) -> Request {
                     template: rand_string(rng, 24),
                     reuse: rng.chance(0.5),
                     args: rand_bytes(rng, 32),
+                    key: rand_bytes(rng, 16),
+                    deadline_ms: rng.next_u64() >> rng.index(64),
                 })
                 .collect(),
         },
@@ -339,7 +343,13 @@ fn pipelined_requests_answer_in_order_under_arbitrary_chopping() {
                 0 | 1 => {
                     submitted.push(next_job);
                     next_job += 1;
-                    Request::Submit { template: "syn".into(), reuse: true, args: Vec::new() }
+                    Request::Submit {
+                        template: "syn".into(),
+                        reuse: true,
+                        args: Vec::new(),
+                        key: Vec::new(),
+                        deadline_ms: 0,
+                    }
                 }
                 2 => {
                     let k = 1 + rng.index(3);

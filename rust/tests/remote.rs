@@ -710,7 +710,13 @@ fn raw_protocol_violations_are_rejected() {
 
     // Submit before Hello.
     let mut s = std::net::TcpStream::connect(listener.local_addr()).unwrap();
-    let submit = Request::Submit { template: "qr".into(), reuse: true, args: vec![] };
+    let submit = Request::Submit {
+        template: "qr".into(),
+        reuse: true,
+        args: vec![],
+        key: vec![],
+        deadline_ms: 0,
+    };
     write_frame(&mut s, &submit.encode()).unwrap();
     match Response::decode(&read_frame(&mut s).unwrap()).unwrap() {
         Response::Error { code: ErrorCode::NeedHello, .. } => {}
@@ -732,6 +738,78 @@ fn raw_protocol_violations_are_rejected() {
         other => panic!("expected BadRequest on repeated Hello, got {other:?}"),
     }
 
+    listener.shutdown();
+    drop(server);
+}
+
+/// Tentpole: a `Submit` replayed with the same idempotency key — the
+/// exact frame a reconnecting client resends after a lost ack — returns
+/// the **original** `JobId` instead of admitting a duplicate, on a raw
+/// socket with no client-library help.
+#[test]
+fn raw_replayed_submit_returns_original_job_id() {
+    use quicksched::server::wire::codec::{
+        read_frame, write_frame, Request, Response, WIRE_VERSION,
+    };
+    let (server, listener) =
+        start_listening(ServerConfig::new(1).with_seed(41), &ListenAddr::parse("127.0.0.1:0"));
+
+    let mut s = std::net::TcpStream::connect(listener.local_addr()).unwrap();
+    write_frame(&mut s, &Request::Hello { version: WIRE_VERSION, tenant: 7 }.encode()).unwrap();
+    assert!(matches!(
+        Response::decode(&read_frame(&mut s).unwrap()).unwrap(),
+        Response::HelloOk { .. }
+    ));
+
+    let submit = Request::Submit {
+        template: "qr".into(),
+        reuse: true,
+        args: vec![],
+        key: b"replay-me".to_vec(),
+        deadline_ms: 0,
+    };
+    write_frame(&mut s, &submit.encode()).unwrap();
+    let original = match Response::decode(&read_frame(&mut s).unwrap()).unwrap() {
+        Response::Submitted { job } => job,
+        other => panic!("expected Submitted, got {other:?}"),
+    };
+
+    // Replay the identical frame on the same connection, then again on
+    // a brand-new connection (the post-reconnect shape).
+    write_frame(&mut s, &submit.encode()).unwrap();
+    match Response::decode(&read_frame(&mut s).unwrap()).unwrap() {
+        Response::Submitted { job } => assert_eq!(job, original, "same-conn replay deduped"),
+        other => panic!("expected Submitted, got {other:?}"),
+    }
+    let mut s2 = std::net::TcpStream::connect(listener.local_addr()).unwrap();
+    write_frame(&mut s2, &Request::Hello { version: WIRE_VERSION, tenant: 7 }.encode()).unwrap();
+    assert!(matches!(
+        Response::decode(&read_frame(&mut s2).unwrap()).unwrap(),
+        Response::HelloOk { .. }
+    ));
+    write_frame(&mut s2, &submit.encode()).unwrap();
+    match Response::decode(&read_frame(&mut s2).unwrap()).unwrap() {
+        Response::Submitted { job } => assert_eq!(job, original, "cross-conn replay deduped"),
+        other => panic!("expected Submitted, got {other:?}"),
+    }
+
+    // A *different* tenant reusing the byte-identical key gets its own
+    // job — the table is keyed per tenant.
+    let mut s3 = std::net::TcpStream::connect(listener.local_addr()).unwrap();
+    write_frame(&mut s3, &Request::Hello { version: WIRE_VERSION, tenant: 8 }.encode()).unwrap();
+    assert!(matches!(
+        Response::decode(&read_frame(&mut s3).unwrap()).unwrap(),
+        Response::HelloOk { .. }
+    ));
+    write_frame(&mut s3, &submit.encode()).unwrap();
+    match Response::decode(&read_frame(&mut s3).unwrap()).unwrap() {
+        Response::Submitted { job } => {
+            assert_ne!(job, original, "dedup table must be tenant-scoped")
+        }
+        other => panic!("expected Submitted, got {other:?}"),
+    }
+
+    assert!(matches!(server.wait(JobId(original)), JobStatus::Done(_)));
     listener.shutdown();
     drop(server);
 }
